@@ -1,0 +1,41 @@
+//! Quickstart: generate a tiny TPC-H database, run one query on PIMDB,
+//! compare with the in-memory baseline.
+//!
+//!     cargo run --release --example quickstart
+
+use pimdb::config::SystemConfig;
+use pimdb::db::dbgen::Database;
+use pimdb::exec::{baseline, pimdb as engine};
+use pimdb::query::tpch;
+
+fn main() -> Result<(), String> {
+    // 1. system configuration (paper Table 3 defaults; everything is a
+    //    `--set`-able knob, see SystemConfig)
+    let cfg = SystemConfig::default();
+
+    // 2. deterministic TPC-H data at a laptop-friendly scale factor
+    let db = Database::generate(0.002, 42);
+
+    // 3. one of the paper's 19 queries (Q6: filter + in-PIM aggregation)
+    let q = tpch::query("Q6").ok_or("query not found")?;
+
+    // 4. PIMDB: compiles the query to PIM requests, executes the
+    //    bulk-bitwise program, and models timing/energy at SF=1000
+    let pim = engine::run_query(&cfg, &db, &q, engine::EngineKind::Native)?;
+
+    // 5. the same operations on the host's column store
+    let base = baseline::run_query(&cfg, &db, &q);
+
+    println!("Q6 revenue (x100 scaling): {}", pim.output.groups[0].values[0].1);
+    println!("selected records (sim): {}", pim.output.selected[0].1);
+    assert_eq!(pim.output, base.output, "engines must agree");
+
+    println!(
+        "PIMDB {:.3} ms vs baseline {:.1} ms -> speedup {:.1}x, energy saving {:.1}x",
+        pim.metrics.exec_time_s * 1e3,
+        base.metrics.exec_time_s * 1e3,
+        base.metrics.exec_time_s / pim.metrics.exec_time_s,
+        base.metrics.total_energy_pj() / pim.metrics.total_energy_pj()
+    );
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! End-to-end driver: the full paper workload on a real (small) dataset.
+//!
+//! Generates TPC-H data, runs all 19 evaluated queries on PIMDB and on the
+//! in-memory baseline, verifies the functional outputs agree, and prints
+//! the headline table (speedup / LLC-miss reduction / energy saving) plus
+//! the paper-shape checks. This is the run recorded in EXPERIMENTS.md.
+//!
+//!     cargo run --release --example tpch_analytics [-- SF [native|pjrt]]
+
+use pimdb::config::SystemConfig;
+use pimdb::db::dbgen::Database;
+use pimdb::exec::pimdb::EngineKind;
+use pimdb::exec::{baseline, pimdb as engine};
+use pimdb::query::ast::QueryKind;
+use pimdb::query::tpch;
+use pimdb::util::stats::eng;
+
+fn main() -> Result<(), String> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let sf: f64 = args.first().map(|s| s.parse().unwrap_or(0.01)).unwrap_or(0.01);
+    let engine_kind = match args.get(1).map(|s| s.as_str()) {
+        Some("pjrt") => EngineKind::Pjrt,
+        _ => EngineKind::Native,
+    };
+
+    let mut cfg = SystemConfig::default();
+    cfg.sim_sf = sf;
+    println!("generating TPC-H data at SF={sf} ...");
+    let t0 = std::time::Instant::now();
+    let db = Database::generate(sf, 42);
+    println!("generated in {:.2?}", t0.elapsed());
+
+    println!(
+        "\n{:<8} {:>11} {:>11} {:>9} {:>9} {:>9}  {}",
+        "Query", "PIMDB", "Baseline", "Speedup", "LLC-red", "E-saving", "functional"
+    );
+    let mut mismatches = 0;
+    let mut filter_speedups = Vec::new();
+    let mut full_speedups = Vec::new();
+    let wall = std::time::Instant::now();
+    let mut session = engine::PimSession::new(&cfg, &db)?; // load PIM copy once
+    for q in tpch::all_queries() {
+        let pim = session.run_query(&q, engine_kind)?;
+        let base = baseline::run_query(&cfg, &db, &q);
+        let ok = pim.output == base.output;
+        if !ok {
+            mismatches += 1;
+        }
+        let speedup = base.metrics.exec_time_s / pim.metrics.exec_time_s;
+        match q.kind {
+            QueryKind::Full => full_speedups.push(speedup),
+            QueryKind::FilterOnly => filter_speedups.push(speedup),
+        }
+        println!(
+            "{:<8} {:>10}s {:>10}s {:>8.1}x {:>8.1}x {:>8.2}x  {}",
+            q.name,
+            eng(pim.metrics.exec_time_s),
+            eng(base.metrics.exec_time_s),
+            speedup,
+            base.metrics.llc_misses as f64 / pim.metrics.llc_misses.max(1) as f64,
+            base.metrics.total_energy_pj() / pim.metrics.total_energy_pj(),
+            if ok { "match" } else { "MISMATCH" }
+        );
+    }
+    println!("\nsimulation wall-clock: {:.2?} ({:?} engine)", wall.elapsed(), engine_kind);
+
+    // paper-shape summary
+    let fmin = filter_speedups.iter().cloned().fold(f64::MAX, f64::min);
+    let fmax = filter_speedups.iter().cloned().fold(0.0, f64::max);
+    let gmin = full_speedups.iter().cloned().fold(f64::MAX, f64::min);
+    let gmax = full_speedups.iter().cloned().fold(0.0, f64::max);
+    println!("filter-only speedups: {fmin:.1}x - {fmax:.1}x   (paper: 1.6x - 18x, Q11 lowest)");
+    println!("full-query  speedups: {gmin:.1}x - {gmax:.1}x   (paper: 62x - 787x)");
+    if mismatches > 0 {
+        return Err(format!("{mismatches} functional mismatches"));
+    }
+    println!("all functional outputs match the baseline oracle");
+    Ok(())
+}

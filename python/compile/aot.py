@@ -1,0 +1,70 @@
+"""AOT bridge: lower the Layer-2 graphs to HLO text artifacts.
+
+HLO *text* (not `.serialize()`d HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published `xla` 0.1.6 rust crate links) rejects
+(`proto.id() <= INT_MAX`). The text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+
+Writes one <name>.hlo.txt per exported graph plus manifest.txt describing
+input/output shapes, which the rust runtime checks at load time.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_str(s) -> str:
+    return "{}[{}]".format(s.dtype, ",".join(str(d) for d in s.shape))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated subset")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest_lines = []
+    for name, (fn, specs) in model.EXPORTS.items():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        outs = lowered.out_info
+        out_specs = jax.tree_util.tree_leaves(outs)
+        line = "{}|in:{}|out:{}".format(
+            name,
+            ";".join(_spec_str(s) for s in specs),
+            ";".join(_spec_str(s) for s in out_specs),
+        )
+        manifest_lines.append(line)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    if only is None:
+        with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+            f.write("\n".join(manifest_lines) + "\n")
+        print(f"wrote manifest with {len(manifest_lines)} entries")
+
+
+if __name__ == "__main__":
+    main()

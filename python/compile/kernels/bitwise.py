@@ -1,0 +1,464 @@
+"""Layer-1 Pallas kernels: bulk-bitwise crossbar operations on bit-planes.
+
+The paper's compute fabric is an RRAM crossbar executing bit-serial MAGIC
+NOR sequences in parallel across all 1024 rows of a crossbar, across all
+crossbars of a huge-page (PIMDB, Perach et al., IEEE TETC 2022).
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): a crossbar row is
+a vector-lane element. 1024 rows pack into WORDS=32 u32 words, so a bulk
+column-wise logic op over all rows of a crossbar batch becomes a single
+vectorized u32 op over a [XB, WORDS] tile. The bit-serial FSM loop over
+attribute bit positions (the paper's Table 4 sequences) becomes a
+`jax.lax.fori_loop` over bit-planes inside one Pallas kernel, so one kernel
+invocation == one PIM instruction over a whole crossbar batch.
+
+Layout convention:
+  * planes:  u32[XB, PLANES, WORDS]  -- bit i of row r of crossbar b is
+             (planes[b, i, r // 32] >> (r % 32)) & 1   (LSB-first planes)
+  * mask:    u32[XB, WORDS]          -- one bit per row (a crossbar column)
+  * immbits: u32[PLANES]             -- immediate operand, one 0/1 per bit;
+             the FSM specializes its control sequence on these (Alg. 1),
+             here they select plane vs ~plane branchlessly.
+
+All kernels use interpret=True: on this CPU image, real TPU lowering emits
+Mosaic custom-calls the CPU PJRT plugin cannot execute. The exported HLO
+(see aot.py) is the interpret-mode lowering, which the rust runtime runs
+via the PJRT CPU client.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# Crossbar geometry (paper Table 3: 1024x512 crossbars).
+ROWS = 1024
+WORDS = ROWS // 32  # u32 words per bit-plane column
+PLANES = 64  # max attribute width supported by the generic ALU ops
+MUL_PLANES = 32  # multiply is exported at 32x32 -> 64 bits
+XB_TILE = 16  # crossbars per exported executable invocation
+XB_BLOCK = 8  # crossbars per pallas grid step (VMEM tile)
+
+# numpy scalars stay literals during pallas tracing (jnp scalars would be
+# captured closure constants, which pallas_call rejects).
+_U32_ALL = np.uint32(0xFFFFFFFF)
+
+
+def _sel_by_bit(plane, bit):
+    """plane if bit==1 else ~plane, branchless: plane ^ (bit - 1) in u32."""
+    return plane ^ (bit + _U32_ALL)  # bit-1 mod 2^32: 0 -> all-ones, 1 -> 0
+
+
+def _bcast_bit(bit):
+    """All-ones u32 word if bit==1 else 0 (0 - bit in u32)."""
+    return np.uint32(0) - bit
+
+
+# ---------------------------------------------------------------------------
+# cmp_imm: compare an in-memory value (bit-planes) against an immediate.
+# Mirrors Algorithm 1 (equality) extended with the standard MSB-first
+# less-than recurrence. One pass over the planes yields both eq and lt.
+# ---------------------------------------------------------------------------
+
+
+def _cmp_imm_kernel(planes_ref, immbits_ref, eq_ref, lt_ref, *, nplanes):
+    xb = planes_ref.shape[0]
+    eq0 = jnp.full((xb, WORDS), _U32_ALL, jnp.uint32)
+    lt0 = jnp.zeros((xb, WORDS), jnp.uint32)
+
+    def body(j, carry):
+        eq, lt = carry
+        i = nplanes - 1 - j  # MSB -> LSB
+        p = pl.load(planes_ref, (slice(None), pl.ds(i, 1), slice(None)))
+        p = p[:, 0, :]
+        bit = pl.load(immbits_ref, (pl.ds(i, 1),))[0]
+        # value < imm at the first differing bit where imm has 1, value 0.
+        lt = lt | (eq & ~p & _bcast_bit(bit))
+        eq = eq & _sel_by_bit(p, bit)
+        return eq, lt
+
+    eq, lt = jax.lax.fori_loop(0, nplanes, body, (eq0, lt0))
+    eq_ref[...] = eq
+    lt_ref[...] = lt
+
+
+def cmp_imm(planes, immbits, *, nplanes=PLANES):
+    """(eq, lt) masks of value-vs-immediate unsigned comparison."""
+    xb = planes.shape[0]
+    grid = (xb // XB_BLOCK,)
+    out_shape = [
+        jax.ShapeDtypeStruct((xb, WORDS), jnp.uint32),
+        jax.ShapeDtypeStruct((xb, WORDS), jnp.uint32),
+    ]
+    return pl.pallas_call(
+        functools.partial(_cmp_imm_kernel, nplanes=nplanes),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((XB_BLOCK, nplanes, WORDS), lambda b: (b, 0, 0)),
+            pl.BlockSpec((nplanes,), lambda b: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((XB_BLOCK, WORDS), lambda b: (b, 0)),
+            pl.BlockSpec((XB_BLOCK, WORDS), lambda b: (b, 0)),
+        ],
+        out_shape=out_shape,
+        interpret=True,
+    )(planes, immbits)
+
+
+# ---------------------------------------------------------------------------
+# cmp_cols: compare two in-memory values (both bit-plane sets).
+# ---------------------------------------------------------------------------
+
+
+def _cmp_cols_kernel(a_ref, b_ref, eq_ref, lt_ref, *, nplanes):
+    xb = a_ref.shape[0]
+    eq0 = jnp.full((xb, WORDS), _U32_ALL, jnp.uint32)
+    lt0 = jnp.zeros((xb, WORDS), jnp.uint32)
+
+    def body(j, carry):
+        eq, lt = carry
+        i = nplanes - 1 - j
+        a = pl.load(a_ref, (slice(None), pl.ds(i, 1), slice(None)))[:, 0, :]
+        b = pl.load(b_ref, (slice(None), pl.ds(i, 1), slice(None)))[:, 0, :]
+        lt = lt | (eq & ~a & b)
+        eq = eq & ~(a ^ b)
+        return eq, lt
+
+    eq, lt = jax.lax.fori_loop(0, nplanes, body, (eq0, lt0))
+    eq_ref[...] = eq
+    lt_ref[...] = lt
+
+
+def cmp_cols(a, b, *, nplanes=PLANES):
+    xb = a.shape[0]
+    grid = (xb // XB_BLOCK,)
+    spec3 = pl.BlockSpec((XB_BLOCK, nplanes, WORDS), lambda g: (g, 0, 0))
+    spec2 = pl.BlockSpec((XB_BLOCK, WORDS), lambda g: (g, 0))
+    return pl.pallas_call(
+        functools.partial(_cmp_cols_kernel, nplanes=nplanes),
+        grid=grid,
+        in_specs=[spec3, spec3],
+        out_specs=[spec2, spec2],
+        out_shape=[
+            jax.ShapeDtypeStruct((xb, WORDS), jnp.uint32),
+            jax.ShapeDtypeStruct((xb, WORDS), jnp.uint32),
+        ],
+        interpret=True,
+    )(a, b)
+
+
+# ---------------------------------------------------------------------------
+# add_cols / add_imm: bit-serial ripple-carry adder (the paper's iterated
+# full-adder FSM, Table 4 "Addition": 18n+1 NOR cycles). Wraps mod 2^PLANES.
+# ---------------------------------------------------------------------------
+
+
+def _add_cols_kernel(a_ref, b_ref, o_ref, *, nplanes):
+    xb = a_ref.shape[0]
+    c0 = jnp.zeros((xb, WORDS), jnp.uint32)
+
+    def body(i, c):
+        a = pl.load(a_ref, (slice(None), pl.ds(i, 1), slice(None)))[:, 0, :]
+        b = pl.load(b_ref, (slice(None), pl.ds(i, 1), slice(None)))[:, 0, :]
+        axb = a ^ b
+        s = axb ^ c
+        c = (a & b) | (c & axb)
+        pl.store(o_ref, (slice(None), pl.ds(i, 1), slice(None)), s[:, None, :])
+        return c
+
+    jax.lax.fori_loop(0, nplanes, body, c0)
+
+
+def add_cols(a, b, *, nplanes=PLANES):
+    xb = a.shape[0]
+    spec3 = pl.BlockSpec((XB_BLOCK, nplanes, WORDS), lambda g: (g, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_add_cols_kernel, nplanes=nplanes),
+        grid=(xb // XB_BLOCK,),
+        in_specs=[spec3, spec3],
+        out_specs=spec3,
+        out_shape=jax.ShapeDtypeStruct((xb, nplanes, WORDS), jnp.uint32),
+        interpret=True,
+    )(a, b)
+
+
+def _add_imm_kernel(a_ref, immbits_ref, o_ref, *, nplanes):
+    xb = a_ref.shape[0]
+    c0 = jnp.zeros((xb, WORDS), jnp.uint32)
+
+    def body(i, c):
+        a = pl.load(a_ref, (slice(None), pl.ds(i, 1), slice(None)))[:, 0, :]
+        bit = pl.load(immbits_ref, (pl.ds(i, 1),))[0]
+        b = jnp.broadcast_to(_bcast_bit(bit), a.shape)
+        axb = a ^ b
+        s = axb ^ c
+        c = (a & b) | (c & axb)
+        pl.store(o_ref, (slice(None), pl.ds(i, 1), slice(None)), s[:, None, :])
+        return c
+
+    jax.lax.fori_loop(0, nplanes, body, c0)
+
+
+def add_imm(a, immbits, *, nplanes=PLANES):
+    xb = a.shape[0]
+    spec3 = pl.BlockSpec((XB_BLOCK, nplanes, WORDS), lambda g: (g, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_add_imm_kernel, nplanes=nplanes),
+        grid=(xb // XB_BLOCK,),
+        in_specs=[spec3, pl.BlockSpec((nplanes,), lambda g: (0,))],
+        out_specs=spec3,
+        out_shape=jax.ShapeDtypeStruct((xb, nplanes, WORDS), jnp.uint32),
+        interpret=True,
+    )(a, immbits)
+
+
+# ---------------------------------------------------------------------------
+# mul_cols: bit-serial shift-add multiply (paper Table 4 "Multiply":
+# 24nm - 19n + 2m - 1 cycles). 32x32 -> 64-bit product planes.
+# ---------------------------------------------------------------------------
+
+
+def _mul_cols_kernel(a_ref, b_ref, o_ref, *, nplanes):
+    xb = a_ref.shape[0]
+    out_planes = 2 * nplanes
+    acc0 = jnp.zeros((xb, out_planes, WORDS), jnp.uint32)
+
+    def outer(i, acc):
+        m = pl.load(b_ref, (slice(None), pl.ds(i, 1), slice(None)))[:, 0, :]
+
+        def inner(jj, carry):
+            acc, c = carry
+            j = i + jj  # target plane for a-bit jj shifted by i
+            a = pl.load(a_ref, (slice(None), pl.ds(jj, 1), slice(None)))
+            ad = a[:, 0, :] & m
+            t = jax.lax.dynamic_slice_in_dim(acc, j, 1, axis=1)[:, 0, :]
+            txa = t ^ ad
+            s = txa ^ c
+            c = (t & ad) | (c & txa)
+            acc = jax.lax.dynamic_update_slice_in_dim(
+                acc, s[:, None, :], j, axis=1
+            )
+            return acc, c
+
+        def carry_prop(k, carry):
+            # propagate the final carry into planes >= i + nplanes
+            acc, c = carry
+            j = i + nplanes + k
+            t = jax.lax.dynamic_slice_in_dim(acc, j, 1, axis=1)[:, 0, :]
+            s = t ^ c
+            c = t & c
+            acc = jax.lax.dynamic_update_slice_in_dim(
+                acc, s[:, None, :], j, axis=1
+            )
+            return acc, c
+
+        acc, c = jax.lax.fori_loop(0, nplanes, inner, (acc, jnp.zeros((xb, WORDS), jnp.uint32)))
+        acc, _ = jax.lax.fori_loop(0, nplanes - i, carry_prop, (acc, c))
+        return acc
+
+    acc = jax.lax.fori_loop(0, nplanes, outer, acc0)
+    o_ref[...] = acc
+
+
+def mul_cols(a, b, *, nplanes=MUL_PLANES):
+    xb = a.shape[0]
+    spec_in = pl.BlockSpec((XB_BLOCK, nplanes, WORDS), lambda g: (g, 0, 0))
+    spec_out = pl.BlockSpec((XB_BLOCK, 2 * nplanes, WORDS), lambda g: (g, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_mul_cols_kernel, nplanes=nplanes),
+        grid=(xb // XB_BLOCK,),
+        in_specs=[spec_in, spec_in],
+        out_specs=spec_out,
+        out_shape=jax.ShapeDtypeStruct((xb, 2 * nplanes, WORDS), jnp.uint32),
+        interpret=True,
+    )(a, b)
+
+
+# ---------------------------------------------------------------------------
+# mask logic: single-plane bulk-bitwise ops (the paper's Bitwise AND/OR/NOT,
+# Table 4) used to combine filter results.
+# ---------------------------------------------------------------------------
+
+
+def _mask2_kernel(a_ref, b_ref, o_ref, *, op):
+    a, b = a_ref[...], b_ref[...]
+    if op == "and":
+        o_ref[...] = a & b
+    elif op == "or":
+        o_ref[...] = a | b
+    elif op == "nor":
+        o_ref[...] = ~(a | b)
+    else:
+        raise ValueError(op)
+
+
+def _mask_binop(a, b, op):
+    xb = a.shape[0]
+    spec = pl.BlockSpec((XB_BLOCK, WORDS), lambda g: (g, 0))
+    return pl.pallas_call(
+        functools.partial(_mask2_kernel, op=op),
+        grid=(xb // XB_BLOCK,),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((xb, WORDS), jnp.uint32),
+        interpret=True,
+    )(a, b)
+
+
+def mask_and(a, b):
+    return _mask_binop(a, b, "and")
+
+
+def mask_or(a, b):
+    return _mask_binop(a, b, "or")
+
+
+def mask_nor(a, b):
+    return _mask_binop(a, b, "nor")
+
+
+def _mask_not_kernel(a_ref, o_ref):
+    o_ref[...] = ~a_ref[...]
+
+
+def mask_not(a):
+    xb = a.shape[0]
+    spec = pl.BlockSpec((XB_BLOCK, WORDS), lambda g: (g, 0))
+    return pl.pallas_call(
+        _mask_not_kernel,
+        grid=(xb // XB_BLOCK,),
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((xb, WORDS), jnp.uint32),
+        interpret=True,
+    )(a)
+
+
+# ---------------------------------------------------------------------------
+# reduce_sum: per-crossbar masked sum, returned as per-plane popcounts.
+# The host combines cnt[b, i] * 2^i in wide integer arithmetic, mirroring
+# the paper's host-side combine of per-crossbar partial aggregates.
+# ---------------------------------------------------------------------------
+
+
+def _reduce_sum_kernel(planes_ref, mask_ref, cnt_ref, *, nplanes):
+    mask = mask_ref[...]
+
+    def body(i, _):
+        p = pl.load(planes_ref, (slice(None), pl.ds(i, 1), slice(None)))
+        cnt = jnp.sum(
+            jax.lax.population_count(p[:, 0, :] & mask), axis=-1
+        ).astype(jnp.uint32)
+        pl.store(cnt_ref, (slice(None), pl.ds(i, 1)), cnt[:, None])
+        return 0
+
+    jax.lax.fori_loop(0, nplanes, body, 0)
+
+
+def reduce_sum(planes, mask, *, nplanes=PLANES):
+    xb = planes.shape[0]
+    return pl.pallas_call(
+        functools.partial(_reduce_sum_kernel, nplanes=nplanes),
+        grid=(xb // XB_BLOCK,),
+        in_specs=[
+            pl.BlockSpec((XB_BLOCK, nplanes, WORDS), lambda g: (g, 0, 0)),
+            pl.BlockSpec((XB_BLOCK, WORDS), lambda g: (g, 0)),
+        ],
+        out_specs=pl.BlockSpec((XB_BLOCK, nplanes), lambda g: (g, 0)),
+        out_shape=jax.ShapeDtypeStruct((xb, nplanes), jnp.uint32),
+        interpret=True,
+    )(planes, mask)
+
+
+# ---------------------------------------------------------------------------
+# reduce_min / reduce_max: bitwise candidate-narrowing MSB->LSB (the in-array
+# tree reduce of Fig. 7, but expressed over bit-planes). Returns the value as
+# (lo, hi) u32 halves plus a valid flag (0 when the mask is empty).
+# ---------------------------------------------------------------------------
+
+
+def _reduce_minmax_kernel(planes_ref, mask_ref, lo_ref, hi_ref, valid_ref, *, nplanes, is_min):
+    xb = planes_ref.shape[0]
+    mask = mask_ref[...]
+    lo0 = jnp.zeros((xb,), jnp.uint32)
+    hi0 = jnp.zeros((xb,), jnp.uint32)
+
+    def body(j, carry):
+        cand, lo, hi = carry
+        i = nplanes - 1 - j
+        p = pl.load(planes_ref, (slice(None), pl.ds(i, 1), slice(None)))[:, 0, :]
+        narrowed = cand & (~p if is_min else p)
+        have = (jnp.sum(narrowed, axis=-1, dtype=jnp.uint32) != 0)
+        cand = jnp.where(have[:, None], narrowed, cand)
+        # chosen bit: min -> 0 where narrowing succeeded; max -> 1.
+        bit = (~have if is_min else have).astype(jnp.uint32)
+        in_hi = i >= 32
+        shift = jnp.uint32(i % 32)
+        lo = jnp.where(in_hi, lo, lo | (bit << shift))
+        hi = jnp.where(in_hi, hi | (bit << shift), hi)
+        return cand, lo, hi
+
+    cand, lo, hi = jax.lax.fori_loop(0, nplanes, body, (mask, lo0, hi0))
+    valid = (jnp.sum(mask, axis=-1, dtype=jnp.uint32) != 0).astype(jnp.uint32)
+    lo_ref[...] = lo * valid
+    hi_ref[...] = hi * valid
+    valid_ref[...] = valid
+
+
+def _reduce_minmax(planes, mask, is_min, nplanes):
+    xb = planes.shape[0]
+    spec1 = pl.BlockSpec((XB_BLOCK,), lambda g: (g,))
+    return pl.pallas_call(
+        functools.partial(_reduce_minmax_kernel, nplanes=nplanes, is_min=is_min),
+        grid=(xb // XB_BLOCK,),
+        in_specs=[
+            pl.BlockSpec((XB_BLOCK, nplanes, WORDS), lambda g: (g, 0, 0)),
+            pl.BlockSpec((XB_BLOCK, WORDS), lambda g: (g, 0)),
+        ],
+        out_specs=[spec1, spec1, spec1],
+        out_shape=[
+            jax.ShapeDtypeStruct((xb,), jnp.uint32),
+            jax.ShapeDtypeStruct((xb,), jnp.uint32),
+            jax.ShapeDtypeStruct((xb,), jnp.uint32),
+        ],
+        interpret=True,
+    )(planes, mask)
+
+
+def reduce_min(planes, mask, *, nplanes=PLANES):
+    return _reduce_minmax(planes, mask, True, nplanes)
+
+
+def reduce_max(planes, mask, *, nplanes=PLANES):
+    return _reduce_minmax(planes, mask, False, nplanes)
+
+
+# ---------------------------------------------------------------------------
+# column_transform: repack one crossbar column (a result mask) into
+# row-oriented 16-bit read groups (paper Fig. 6; crossbar read = 16 bits).
+# Functionally a bit-field extraction; in hardware, 2050 NOR cycles.
+# ---------------------------------------------------------------------------
+
+
+def _column_transform_kernel(mask_ref, o_ref):
+    m = mask_ref[...]  # [XB, WORDS]
+    lo = m & jnp.uint32(0xFFFF)
+    hi = m >> jnp.uint32(16)
+    # interleave: out[:, 2w] = lo word w, out[:, 2w+1] = hi word w
+    out = jnp.stack([lo, hi], axis=-1).reshape(m.shape[0], 2 * WORDS)
+    o_ref[...] = out
+
+
+def column_transform(mask):
+    xb = mask.shape[0]
+    return pl.pallas_call(
+        _column_transform_kernel,
+        grid=(xb // XB_BLOCK,),
+        in_specs=[pl.BlockSpec((XB_BLOCK, WORDS), lambda g: (g, 0))],
+        out_specs=pl.BlockSpec((XB_BLOCK, 2 * WORDS), lambda g: (g, 0)),
+        out_shape=jax.ShapeDtypeStruct((xb, 2 * WORDS), jnp.uint32),
+        interpret=True,
+    )(mask)

@@ -1,0 +1,146 @@
+"""Pure-jnp/numpy oracle for the Pallas bit-plane kernels.
+
+The oracle works at *value level*: bit-plane tensors are unpacked into
+per-row integer values, the operation is computed with ordinary integer
+semantics, and results are repacked. Kernel == oracle is therefore a strong
+check that the bit-serial plane algorithms implement the intended integer
+semantics (the same check the paper runs between its MAGIC NOR sequences
+and the SQL-level semantics).
+"""
+
+import numpy as np
+
+ROWS = 1024
+WORDS = ROWS // 32
+PLANES = 64
+
+
+def pack_values(values, nplanes=PLANES):
+    """u64[XB, ROWS] -> u32[XB, nplanes, WORDS] LSB-first bit-planes."""
+    values = np.asarray(values, dtype=np.uint64)
+    xb, rows = values.shape
+    assert rows == ROWS
+    out = np.zeros((xb, nplanes, WORDS), dtype=np.uint32)
+    for i in range(nplanes):
+        bits = ((values >> np.uint64(i)) & np.uint64(1)).astype(np.uint32)
+        # pack 32 row-bits per word, row r -> word r//32 bit r%32
+        out[:, i, :] = (
+            bits.reshape(xb, WORDS, 32)
+            << np.arange(32, dtype=np.uint32)[None, None, :]
+        ).sum(axis=-1, dtype=np.uint32)
+    return out
+
+
+def unpack_planes(planes):
+    """u32[XB, N, WORDS] -> u64[XB, ROWS] values."""
+    planes = np.asarray(planes, dtype=np.uint32)
+    xb, nplanes, words = planes.shape
+    vals = np.zeros((xb, words * 32), dtype=np.uint64)
+    for i in range(nplanes):
+        bits = (
+            (planes[:, i, :, None] >> np.arange(32, dtype=np.uint32)) & 1
+        ).reshape(xb, words * 32)
+        vals |= bits.astype(np.uint64) << np.uint64(i)
+    return vals
+
+
+def pack_mask(mask_bool):
+    """bool[XB, ROWS] -> u32[XB, WORDS]."""
+    m = np.asarray(mask_bool, dtype=np.uint32)
+    xb, rows = m.shape
+    return (
+        m.reshape(xb, WORDS, 32) << np.arange(32, dtype=np.uint32)[None, None, :]
+    ).sum(axis=-1, dtype=np.uint32)
+
+
+def unpack_mask(mask):
+    """u32[XB, WORDS] -> bool[XB, ROWS]."""
+    mask = np.asarray(mask, dtype=np.uint32)
+    xb, words = mask.shape
+    return (
+        ((mask[:, :, None] >> np.arange(32, dtype=np.uint32)) & 1)
+        .reshape(xb, words * 32)
+        .astype(bool)
+    )
+
+
+def imm_to_bits(imm, nplanes=PLANES):
+    """Immediate int -> u32[nplanes] bit vector (LSB first)."""
+    return np.array(
+        [(int(imm) >> i) & 1 for i in range(nplanes)], dtype=np.uint32
+    )
+
+
+def _trunc(values, nplanes):
+    if nplanes >= 64:
+        return np.asarray(values, dtype=np.uint64)
+    return np.asarray(values, dtype=np.uint64) & np.uint64((1 << nplanes) - 1)
+
+
+def cmp_imm(values, imm, nplanes=PLANES):
+    v = _trunc(values, nplanes)
+    c = np.uint64(imm)
+    return (v == c), (v < c)
+
+
+def cmp_cols(a, b, nplanes=PLANES):
+    a, b = _trunc(a, nplanes), _trunc(b, nplanes)
+    return (a == b), (a < b)
+
+
+def add_cols(a, b, nplanes=PLANES):
+    return _trunc(np.asarray(a, np.uint64) + np.asarray(b, np.uint64), nplanes)
+
+
+def add_imm(a, imm, nplanes=PLANES):
+    return _trunc(np.asarray(a, np.uint64) + np.uint64(imm), nplanes)
+
+
+def mul_cols(a, b, nplanes=32):
+    a = _trunc(a, nplanes)
+    b = _trunc(b, nplanes)
+    return _trunc(a * b, 2 * nplanes)
+
+
+def reduce_sum(values, mask_bool, nplanes=PLANES):
+    """Masked per-crossbar sum as exact python ints (one per crossbar)."""
+    v = _trunc(values, nplanes)
+    out = []
+    for b in range(v.shape[0]):
+        out.append(int(sum(int(x) for x in v[b][mask_bool[b]])))
+    return out
+
+
+def reduce_sum_from_counts(counts):
+    """Recombine kernel per-plane popcounts into exact sums (host combine)."""
+    counts = np.asarray(counts)
+    return [
+        sum(int(c) << i for i, c in enumerate(counts[b]))
+        for b in range(counts.shape[0])
+    ]
+
+
+def reduce_min(values, mask_bool, nplanes=PLANES):
+    v = _trunc(values, nplanes)
+    out = []
+    for b in range(v.shape[0]):
+        sel = v[b][mask_bool[b]]
+        out.append((int(sel.min()), 1) if sel.size else (0, 0))
+    return out
+
+
+def reduce_max(values, mask_bool, nplanes=PLANES):
+    v = _trunc(values, nplanes)
+    out = []
+    for b in range(v.shape[0]):
+        sel = v[b][mask_bool[b]]
+        out.append((int(sel.max()), 1) if sel.size else (0, 0))
+    return out
+
+
+def column_transform(mask):
+    """u32[XB, WORDS] mask -> u32[XB, 2*WORDS] of 16-bit read groups."""
+    mask = np.asarray(mask, dtype=np.uint32)
+    lo = mask & np.uint32(0xFFFF)
+    hi = mask >> np.uint32(16)
+    return np.stack([lo, hi], axis=-1).reshape(mask.shape[0], -1)

@@ -1,0 +1,176 @@
+"""Layer-2: JAX compute graphs implementing the PIM module ISA.
+
+Each exported function is the functional model of one PIM instruction
+(paper Table 4) applied to a batch of XB_TILE crossbars, expressed over the
+bit-plane layout and calling the Layer-1 Pallas kernels. The rust runtime
+(rust/src/runtime/) loads the AOT-lowered HLO of these graphs and executes
+them on the PJRT CPU client — python never runs on the request path.
+
+Also exports a fused filter+aggregate showcase graph (`q6_filter_agg`) that
+evaluates a TPC-H Q6-shaped predicate and masked sums in a single HLO
+module, demonstrating XLA fusing the full instruction pipeline of a query
+phase (used by the L3 engine's fused path and the perf study).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import bitwise as k
+
+XB_TILE = k.XB_TILE
+PLANES = k.PLANES
+MUL_PLANES = k.MUL_PLANES
+WORDS = k.WORDS
+
+
+def _planes_spec(n=PLANES):
+    return jax.ShapeDtypeStruct((XB_TILE, n, WORDS), jnp.uint32)
+
+
+def _mask_spec():
+    return jax.ShapeDtypeStruct((XB_TILE, WORDS), jnp.uint32)
+
+
+def _immbits_spec(n=PLANES):
+    return jax.ShapeDtypeStruct((n,), jnp.uint32)
+
+
+# --- instruction-level graphs (one exported executable each) ---------------
+
+
+def cmp_imm(planes, immbits):
+    eq, lt = k.cmp_imm(planes, immbits)
+    return eq, lt
+
+
+def cmp_cols(a, b):
+    eq, lt = k.cmp_cols(a, b)
+    return eq, lt
+
+
+def add_cols(a, b):
+    return (k.add_cols(a, b),)
+
+
+def add_imm(a, immbits):
+    return (k.add_imm(a, immbits),)
+
+
+def mul_cols(a, b):
+    return (k.mul_cols(a, b),)
+
+
+def mask_and(a, b):
+    return (k.mask_and(a, b),)
+
+
+def mask_or(a, b):
+    return (k.mask_or(a, b),)
+
+
+def mask_not(a):
+    return (k.mask_not(a),)
+
+
+def reduce_sum(planes, mask):
+    return (k.reduce_sum(planes, mask),)
+
+
+def reduce_min(planes, mask):
+    return k.reduce_min(planes, mask)
+
+
+def reduce_max(planes, mask):
+    return k.reduce_max(planes, mask)
+
+
+def column_transform(mask):
+    return (k.column_transform(mask),)
+
+
+# --- fused showcase: TPC-H Q6-shaped filter + aggregate ---------------------
+#
+#   SELECT SUM(extendedprice * discount) FROM lineitem
+#   WHERE shipdate in [d0, d1) AND discount in [lo, hi] AND quantity < q
+#
+# Inputs are the bit-plane sets of the four attributes plus immediate bit
+# vectors; output is the per-plane popcount array of the masked product.
+
+
+def q6_filter_agg(
+    shipdate,
+    discount,
+    quantity,
+    eprice_x_disc,
+    d0_bits,
+    d1_bits,
+    dlo_bits,
+    dhi_bits,
+    q_bits,
+    valid,
+):
+    _, lt_d0 = k.cmp_imm(shipdate, d0_bits)
+    _, lt_d1 = k.cmp_imm(shipdate, d1_bits)
+    m_date = k.mask_and(k.mask_not(lt_d0), lt_d1)  # d0 <= shipdate < d1
+
+    eq_lo, lt_lo = k.cmp_imm(discount, dlo_bits)
+    eq_hi, lt_hi = k.cmp_imm(discount, dhi_bits)
+    ge_lo = k.mask_not(lt_lo)
+    le_hi = k.mask_or(lt_hi, eq_hi)
+    m_disc = k.mask_and(ge_lo, le_hi)
+
+    _, lt_q = k.cmp_imm(quantity, q_bits)
+
+    m = k.mask_and(k.mask_and(m_date, m_disc), k.mask_and(lt_q, valid))
+    counts = k.reduce_sum(eprice_x_disc, m)
+    mask_counts = k.reduce_sum(_ones_planes_like(eprice_x_disc), m)
+    return counts, mask_counts[:, :1]  # record count in plane 0
+
+
+def _ones_planes_like(planes):
+    # plane 0 all-ones, rest zero: value 1 per row, so its masked sum is the
+    # selected-record count (the paper's COUNT via SUM on the filter column)
+    one = jnp.concatenate(
+        [
+            jnp.full((planes.shape[0], 1, WORDS), 0xFFFFFFFF, jnp.uint32),
+            jnp.zeros((planes.shape[0], planes.shape[1] - 1, WORDS), jnp.uint32),
+        ],
+        axis=1,
+    )
+    return one
+
+
+# --- export registry ---------------------------------------------------------
+
+EXPORTS = {
+    "cmp_imm": (cmp_imm, [_planes_spec(), _immbits_spec()]),
+    "cmp_cols": (cmp_cols, [_planes_spec(), _planes_spec()]),
+    "add_cols": (add_cols, [_planes_spec(), _planes_spec()]),
+    "add_imm": (add_imm, [_planes_spec(), _immbits_spec()]),
+    "mul_cols": (
+        mul_cols,
+        [_planes_spec(MUL_PLANES), _planes_spec(MUL_PLANES)],
+    ),
+    "mask_and": (mask_and, [_mask_spec(), _mask_spec()]),
+    "mask_or": (mask_or, [_mask_spec(), _mask_spec()]),
+    "mask_not": (mask_not, [_mask_spec()]),
+    "reduce_sum": (reduce_sum, [_planes_spec(), _mask_spec()]),
+    "reduce_min": (reduce_min, [_planes_spec(), _mask_spec()]),
+    "reduce_max": (reduce_max, [_planes_spec(), _mask_spec()]),
+    "column_transform": (column_transform, [_mask_spec()]),
+    "q6_filter_agg": (
+        q6_filter_agg,
+        [
+            _planes_spec(),  # shipdate
+            _planes_spec(),  # discount
+            _planes_spec(),  # quantity
+            _planes_spec(),  # eprice*discount (precomputed product planes)
+            _immbits_spec(),
+            _immbits_spec(),
+            _immbits_spec(),
+            _immbits_spec(),
+            _immbits_spec(),
+            _mask_spec(),  # valid column
+        ],
+    ),
+}

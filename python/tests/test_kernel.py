@@ -1,0 +1,180 @@
+"""Kernel vs oracle tests: the core L1 correctness signal.
+
+Every Pallas bit-plane kernel is checked against the value-level numpy
+oracle (ref.py). Hypothesis sweeps values and immediates; bitwise-domain
+results must match exactly.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bitwise as k
+from compile.kernels import ref
+
+XB = k.XB_TILE
+R = ref.ROWS
+
+# interpret-mode pallas is slow; keep example counts modest and disable the
+# per-example deadline.
+HSETTINGS = dict(max_examples=6, deadline=None)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _rand_values(seed, bits=64):
+    hi = (1 << bits) - 1
+    return _rng(seed).integers(0, hi, size=(XB, R), dtype=np.uint64, endpoint=True)
+
+
+def _structured_values(seed, bits=64):
+    """Values with clustering/duplicates to exercise eq paths."""
+    rng = _rng(seed)
+    base = rng.integers(0, 1 << min(bits, 16), size=(XB, R), dtype=np.uint64)
+    mask = (1 << bits) - 1
+    return (base * np.uint64(int(rng.integers(1, 5)))) & np.uint64(mask)
+
+
+@settings(**HSETTINGS)
+@given(seed=st.integers(0, 2**31), structured=st.booleans())
+def test_cmp_imm(seed, structured):
+    vals = _structured_values(seed) if structured else _rand_values(seed)
+    imm = int(vals[0, 0])  # guarantee at least one equal row
+    eq, lt = k.cmp_imm(ref.pack_values(vals), ref.imm_to_bits(imm))
+    req, rlt = ref.cmp_imm(vals, imm)
+    np.testing.assert_array_equal(ref.unpack_mask(np.array(eq)), req)
+    np.testing.assert_array_equal(ref.unpack_mask(np.array(lt)), rlt)
+
+
+@pytest.mark.parametrize("imm", [0, 1, (1 << 64) - 1, 0xDEADBEEF])
+def test_cmp_imm_edge_immediates(imm):
+    vals = _rand_values(7)
+    vals[0, 0] = imm  # force an equality hit
+    eq, lt = k.cmp_imm(ref.pack_values(vals), ref.imm_to_bits(imm))
+    req, rlt = ref.cmp_imm(vals, imm)
+    np.testing.assert_array_equal(ref.unpack_mask(np.array(eq)), req)
+    np.testing.assert_array_equal(ref.unpack_mask(np.array(lt)), rlt)
+
+
+@settings(**HSETTINGS)
+@given(seed=st.integers(0, 2**31))
+def test_cmp_cols(seed):
+    a, b = _rand_values(seed), _rand_values(seed + 1)
+    b[:, ::3] = a[:, ::3]  # force equal rows
+    eq, lt = k.cmp_cols(ref.pack_values(a), ref.pack_values(b))
+    req, rlt = ref.cmp_cols(a, b)
+    np.testing.assert_array_equal(ref.unpack_mask(np.array(eq)), req)
+    np.testing.assert_array_equal(ref.unpack_mask(np.array(lt)), rlt)
+
+
+@settings(**HSETTINGS)
+@given(seed=st.integers(0, 2**31))
+def test_add_cols_wraps_mod_2_64(seed):
+    a, b = _rand_values(seed), _rand_values(seed + 1)
+    s = k.add_cols(ref.pack_values(a), ref.pack_values(b))
+    np.testing.assert_array_equal(
+        ref.unpack_planes(np.array(s)), ref.add_cols(a, b)
+    )
+
+
+@settings(**HSETTINGS)
+@given(seed=st.integers(0, 2**31), imm=st.integers(0, 2**63))
+def test_add_imm(seed, imm):
+    a = _rand_values(seed)
+    s = k.add_imm(ref.pack_values(a), ref.imm_to_bits(imm))
+    np.testing.assert_array_equal(
+        ref.unpack_planes(np.array(s)), ref.add_imm(a, imm)
+    )
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 2**31))
+def test_mul_cols_32x32(seed):
+    a = _rand_values(seed, bits=32)
+    b = _rand_values(seed + 1, bits=32)
+    p = k.mul_cols(ref.pack_values(a, 32), ref.pack_values(b, 32))
+    np.testing.assert_array_equal(
+        ref.unpack_planes(np.array(p)), ref.mul_cols(a, b)
+    )
+
+
+def test_mul_by_zero_and_one():
+    a = _rand_values(3, bits=32)
+    zero = np.zeros_like(a)
+    one = np.ones_like(a)
+    p0 = k.mul_cols(ref.pack_values(a, 32), ref.pack_values(zero, 32))
+    assert (ref.unpack_planes(np.array(p0)) == 0).all()
+    p1 = k.mul_cols(ref.pack_values(a, 32), ref.pack_values(one, 32))
+    np.testing.assert_array_equal(ref.unpack_planes(np.array(p1)), a)
+
+
+@settings(**HSETTINGS)
+@given(seed=st.integers(0, 2**31), density=st.floats(0.0, 1.0))
+def test_reduce_sum(seed, density):
+    vals = _rand_values(seed, bits=40)
+    mask = _rng(seed).random((XB, R)) < density
+    cnt = k.reduce_sum(ref.pack_values(vals), ref.pack_mask(mask))
+    assert ref.reduce_sum_from_counts(np.array(cnt)) == ref.reduce_sum(
+        vals, mask
+    )
+
+
+@settings(**HSETTINGS)
+@given(seed=st.integers(0, 2**31), density=st.floats(0.0, 1.0))
+def test_reduce_min_max(seed, density):
+    vals = _rand_values(seed)
+    mask = _rng(seed + 9).random((XB, R)) < density
+    pv, pm = ref.pack_values(vals), ref.pack_mask(mask)
+    for kern, oracle in ((k.reduce_min, ref.reduce_min), (k.reduce_max, ref.reduce_max)):
+        lo, hi, v = kern(pv, pm)
+        got = [
+            (int(l) | (int(h) << 32), int(vv))
+            for l, h, vv in zip(np.array(lo), np.array(hi), np.array(v))
+        ]
+        assert got == oracle(vals, mask)
+
+
+def test_reduce_empty_mask_reports_invalid():
+    vals = _rand_values(11)
+    mask = np.zeros((XB, R), dtype=bool)
+    _, _, v = k.reduce_min(ref.pack_values(vals), ref.pack_mask(mask))
+    assert (np.array(v) == 0).all()
+
+
+@settings(**HSETTINGS)
+@given(seed=st.integers(0, 2**31))
+def test_column_transform(seed):
+    mask = _rng(seed).random((XB, R)) < 0.5
+    pm = ref.pack_mask(mask)
+    np.testing.assert_array_equal(
+        np.array(k.column_transform(pm)), ref.column_transform(pm)
+    )
+
+
+@settings(**HSETTINGS)
+@given(seed=st.integers(0, 2**31))
+def test_mask_logic_identities(seed):
+    rng = _rng(seed)
+    a = ref.pack_mask(rng.random((XB, R)) < 0.5)
+    b = ref.pack_mask(rng.random((XB, R)) < 0.5)
+    m_and = np.array(k.mask_and(a, b))
+    m_or = np.array(k.mask_or(a, b))
+    m_not_a = np.array(k.mask_not(a))
+    np.testing.assert_array_equal(m_and, a & b)
+    np.testing.assert_array_equal(m_or, a | b)
+    np.testing.assert_array_equal(m_not_a, ~a)
+    # De Morgan through the kernels
+    nor = np.array(k.mask_nor(a, b))
+    np.testing.assert_array_equal(nor, ~(a | b))
+    np.testing.assert_array_equal(nor, np.array(k.mask_not(k.mask_or(a, b))))
+
+
+def test_pack_unpack_roundtrip():
+    vals = _rand_values(5)
+    np.testing.assert_array_equal(
+        ref.unpack_planes(ref.pack_values(vals)), vals
+    )
+    mask = _rng(5).random((XB, R)) < 0.4
+    np.testing.assert_array_equal(ref.unpack_mask(ref.pack_mask(mask)), mask)

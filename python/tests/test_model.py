@@ -1,0 +1,89 @@
+"""L2 model tests: fused graphs vs oracle, export lowering sanity."""
+
+import numpy as np
+import pytest
+
+import jax
+
+from compile import model
+from compile.kernels import ref
+
+XB = model.XB_TILE
+R = ref.ROWS
+
+
+def _mk_q6_inputs(seed=0):
+    rng = np.random.default_rng(seed)
+    shipdate = rng.integers(0, 3000, size=(XB, R), dtype=np.uint64)
+    discount = rng.integers(0, 11, size=(XB, R), dtype=np.uint64)
+    quantity = rng.integers(1, 51, size=(XB, R), dtype=np.uint64)
+    eprice = rng.integers(0, 10_000_00, size=(XB, R), dtype=np.uint64)
+    exd = eprice * discount
+    valid = np.ones((XB, R), dtype=bool)
+    valid[-1, 512:] = False  # emulate a partially-filled last crossbar
+    return shipdate, discount, quantity, eprice, exd, valid
+
+
+def test_q6_filter_agg_matches_oracle():
+    shipdate, discount, quantity, eprice, exd, valid = _mk_q6_inputs()
+    d0, d1, dlo, dhi, q = 1000, 1365, 5, 7, 24
+    counts, nrec = model.q6_filter_agg(
+        ref.pack_values(shipdate),
+        ref.pack_values(discount),
+        ref.pack_values(quantity),
+        ref.pack_values(exd),
+        ref.imm_to_bits(d0),
+        ref.imm_to_bits(d1),
+        ref.imm_to_bits(dlo),
+        ref.imm_to_bits(dhi),
+        ref.imm_to_bits(q),
+        ref.pack_mask(valid),
+    )
+    sel = (
+        (shipdate >= d0)
+        & (shipdate < d1)
+        & (discount >= dlo)
+        & (discount <= dhi)
+        & (quantity < q)
+        & valid
+    )
+    want_sum = int(exd[sel].sum())
+    got_sum = sum(ref.reduce_sum_from_counts(np.array(counts)))
+    assert got_sum == want_sum
+    got_n = sum(int(c) for c in np.array(nrec)[:, 0])
+    assert got_n == int(sel.sum())
+
+
+def test_q6_selects_nothing_when_range_empty():
+    shipdate, discount, quantity, eprice, exd, valid = _mk_q6_inputs(1)
+    counts, nrec = model.q6_filter_agg(
+        ref.pack_values(shipdate),
+        ref.pack_values(discount),
+        ref.pack_values(quantity),
+        ref.pack_values(exd),
+        ref.imm_to_bits(100),
+        ref.imm_to_bits(100),  # d0 == d1 -> empty range
+        ref.imm_to_bits(0),
+        ref.imm_to_bits(10),
+        ref.imm_to_bits(51),
+        ref.pack_mask(valid),
+    )
+    assert sum(ref.reduce_sum_from_counts(np.array(counts))) == 0
+    assert sum(int(c) for c in np.array(nrec)[:, 0]) == 0
+
+
+@pytest.mark.parametrize("name", sorted(model.EXPORTS))
+def test_exports_lower_to_hlo_text(name):
+    from compile.aot import to_hlo_text
+
+    fn, specs = model.EXPORTS[name]
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    assert "ENTRY" in text and len(text) > 100
+
+
+def test_manifest_spec_strings():
+    from compile.aot import _spec_str
+
+    s = jax.ShapeDtypeStruct((16, 64, 32), np.uint32)
+    assert _spec_str(s) == "uint32[16,64,32]"

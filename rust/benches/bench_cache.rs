@@ -1,0 +1,34 @@
+//! Cache-model throughput: accesses per second (the baseline executor
+//! pushes one access per attribute per record through this).
+
+#[path = "benchkit.rs"]
+mod benchkit;
+
+use benchkit::bench_throughput;
+use pimdb::config::SystemConfig;
+use pimdb::mem::cache::CacheSim;
+use pimdb::util::rng::Rng;
+
+fn main() {
+    let cfg = SystemConfig::default();
+    const N: usize = 1_000_000;
+
+    // streaming scan (the baseline's dominant pattern)
+    bench_throughput("cache/streaming-scan", 500, N as f64, "access", || {
+        let mut c = CacheSim::new(&cfg);
+        for i in 0..N as u64 {
+            c.access(0x1000_0000 + i * 4, false);
+        }
+        std::hint::black_box(c.stats.llc_misses);
+    });
+
+    // random accesses (worst case)
+    bench_throughput("cache/random", 500, N as f64, "access", || {
+        let mut c = CacheSim::new(&cfg);
+        let mut rng = Rng::new(3);
+        for _ in 0..N {
+            c.access(rng.range_u64(0, 1 << 30) & !3, false);
+        }
+        std::hint::black_box(c.stats.llc_misses);
+    });
+}

@@ -1,0 +1,87 @@
+//! L3 hot-path microbenchmarks: the native bit-plane engine's
+//! instruction throughput (the functional core of every query run).
+//!
+//! Perf target (DESIGN.md §7): >= 1 Gcell-op/s sustained on compare ops.
+
+#[path = "benchkit.rs"]
+mod benchkit;
+
+use benchkit::bench_throughput;
+use pimdb::exec::engine::{exec_instr, XbarState};
+use pimdb::pim::isa::{ColRange, Opcode, PimInstruction};
+use pimdb::util::rng::Rng;
+
+const XBARS: usize = 64;
+const ROWS: f64 = 1024.0;
+
+fn states() -> Vec<XbarState> {
+    let mut rng = Rng::new(1);
+    let mut sts = Vec::new();
+    for _ in 0..XBARS {
+        let mut st = XbarState::new(512);
+        for c in 0..128 {
+            for w in 0..32 {
+                st.planes[c][w] = rng.next_u32();
+            }
+        }
+        sts.push(st);
+    }
+    sts
+}
+
+fn run_all(sts: &mut [XbarState], instr: &PimInstruction) {
+    let mut out = Vec::new();
+    for st in sts.iter_mut() {
+        exec_instr(st, instr, &mut out);
+    }
+}
+
+fn main() {
+    let mut sts = states();
+    let a = ColRange::new(0, 32);
+    let b = ColRange::new(40, 32);
+    let d = ColRange::new(200, 1);
+    let cells = XBARS as f64 * ROWS * 32.0; // rows x bits touched
+
+    let i = PimInstruction::with_imm(Opcode::LtImm, a, d, 0x9E3779B9);
+    bench_throughput("engine/cmp_imm 32b x 64 xbars", 400, cells, "cell-op", || {
+        run_all(&mut sts, &i)
+    });
+
+    let i = PimInstruction::binary(Opcode::Lt, a, b, d);
+    bench_throughput("engine/cmp_cols 32b x 64 xbars", 400, cells, "cell-op", || {
+        run_all(&mut sts, &i)
+    });
+
+    let i = PimInstruction::binary(Opcode::Add, a, b, ColRange::new(80, 33));
+    bench_throughput("engine/add 32b x 64 xbars", 400, cells, "cell-op", || {
+        run_all(&mut sts, &i)
+    });
+
+    let i = PimInstruction::binary(Opcode::Mul, ColRange::new(0, 16), ColRange::new(40, 16), ColRange::new(80, 32));
+    bench_throughput(
+        "engine/mul 16x16 x 64 xbars",
+        400,
+        XBARS as f64 * ROWS * 256.0,
+        "cell-op",
+        || run_all(&mut sts, &i),
+    );
+
+    let i = PimInstruction::unary(Opcode::ReduceSum, ColRange::new(0, 40), ColRange::new(0, 40));
+    bench_throughput(
+        "engine/reduce_sum 40b x 64 xbars",
+        400,
+        XBARS as f64 * ROWS * 40.0,
+        "cell-op",
+        || run_all(&mut sts, &i),
+    );
+
+    let i = PimInstruction::binary(Opcode::And, a, d, ColRange::new(120, 32));
+    bench_throughput(
+        "engine/mask-broadcast-and 32b x 64 xbars",
+        400,
+        cells,
+        "cell-op",
+        || run_all(&mut sts, &i),
+    );
+}

@@ -1,0 +1,78 @@
+//! PJRT dispatch benchmarks: per-kernel invocation latency and the
+//! native-vs-PJRT functional engine comparison (L1/L2 perf signal; with
+//! interpret=True lowering on CPU, wallclock is the dispatch+emulation
+//! cost, not a TPU proxy — see DESIGN.md §Hardware-Adaptation).
+
+#[path = "benchkit.rs"]
+mod benchkit;
+
+use benchkit::bench;
+use pimdb::exec::engine::{exec_steps_native, XbarState};
+use pimdb::pim::endurance::OpCategory;
+use pimdb::pim::isa::{ColRange, Opcode, PimInstruction};
+use pimdb::query::compiler::Step;
+use pimdb::runtime;
+use pimdb::util::rng::Rng;
+
+fn main() {
+    if !runtime::runtime_available() {
+        println!("bench_pjrt: PJRT runtime/artifacts unavailable — skipping");
+        return;
+    }
+    let mut rng = Rng::new(5);
+    let mut mk_states = |n: usize| {
+        let mut sts = Vec::new();
+        for _ in 0..n {
+            let mut st = XbarState::new(256);
+            for c in 0..64 {
+                for w in 0..32 {
+                    st.planes[c][w] = rng.next_u32();
+                }
+            }
+            sts.push(st);
+        }
+        sts
+    };
+    let steps: Vec<Step> = vec![
+        Step {
+            instr: PimInstruction::with_imm(
+                Opcode::LtImm,
+                ColRange::new(0, 24),
+                ColRange::new(100, 1),
+                0xABCDE,
+            ),
+            category: OpCategory::Filter,
+        },
+        Step {
+            instr: PimInstruction::binary(
+                Opcode::And,
+                ColRange::new(0, 24),
+                ColRange::new(100, 1),
+                ColRange::new(110, 24),
+            ),
+            category: OpCategory::Arith,
+        },
+        Step {
+            instr: PimInstruction::unary(
+                Opcode::ReduceSum,
+                ColRange::new(110, 24),
+                ColRange::new(110, 24),
+            ),
+            category: OpCategory::AggCol,
+        },
+    ];
+
+    for n in [16usize, 64] {
+        let base = mk_states(n);
+        bench(&format!("pjrt/filter+mask+reduce x{n} xbars"), 1500, || {
+            let mut sts = base.clone();
+            let out = runtime::exec_steps_pjrt(&mut sts, &steps, 100).unwrap();
+            std::hint::black_box(out.mask_counts.len());
+        });
+        bench(&format!("native/filter+mask+reduce x{n} xbars"), 400, || {
+            let mut sts = base.clone();
+            let out = exec_steps_native(&mut sts, &steps, 100);
+            std::hint::black_box(out.mask_counts.len());
+        });
+    }
+}

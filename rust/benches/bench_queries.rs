@@ -1,0 +1,45 @@
+//! End-to-end per-query simulation benchmarks — the harness that backs
+//! every run-based table/figure (Tables 5–6, Figs 8–9, 11–15). Each
+//! iteration runs the complete PIMDB pipeline (compile -> functional
+//! execution -> timing/energy/power/endurance simulation) plus the
+//! baseline for the speedup pair, at a small SF.
+
+#[path = "benchkit.rs"]
+mod benchkit;
+
+use benchkit::bench;
+use pimdb::config::SystemConfig;
+use pimdb::db::dbgen::Database;
+use pimdb::exec::{baseline, pimdb as engine};
+use pimdb::query::tpch;
+
+fn main() {
+    let mut cfg = SystemConfig::default();
+    cfg.sim_sf = 0.002;
+    let db = Database::generate(cfg.sim_sf, 42);
+
+    // representative of each class: biggest full query, biggest
+    // filter-only, smallest (overhead-bound), multi-relation
+    let mut session = engine::PimSession::new(&cfg, &db).unwrap();
+    for name in ["Q1", "Q6", "Q14", "Q11", "Q3", "Q22_sub"] {
+        let q = tpch::query(name).unwrap();
+        bench(&format!("pimdb/{name} (sim SF=0.002)"), 800, || {
+            let r = session.run_query(&q, engine::EngineKind::Native).unwrap();
+            std::hint::black_box(r.metrics.exec_time_s);
+        });
+        bench(&format!("baseline/{name} (sim SF=0.002)"), 800, || {
+            let r = baseline::run_query(&cfg, &db, &q);
+            std::hint::black_box(r.metrics.exec_time_s);
+        });
+    }
+
+    // the full 19-query suite (what `pimdb report --exp all` runs)
+    bench("suite/all-19-queries pimdb+baseline", 3000, || {
+        for q in tpch::all_queries() {
+            let r = session.run_query(&q, engine::EngineKind::Native).unwrap();
+            std::hint::black_box(r.metrics.exec_time_s);
+            let b = baseline::run_query(&cfg, &db, &q);
+            std::hint::black_box(b.metrics.exec_time_s);
+        }
+    });
+}

@@ -1,0 +1,44 @@
+//! Media-controller scheduler throughput: requests scheduled per second
+//! (the timing simulation's inner loop; Q1 issues ~100k requests).
+
+#[path = "benchkit.rs"]
+mod benchkit;
+
+use benchkit::bench_throughput;
+use pimdb::config::SystemConfig;
+use pimdb::pim::module::{MediaScheduler, PageLoc, ReqKind, Request};
+
+fn main() {
+    let cfg = SystemConfig::default();
+    const N: usize = 100_000;
+
+    bench_throughput("scheduler/pim-requests", 500, N as f64, "req", || {
+        let mut s = MediaScheduler::new(&cfg);
+        for i in 0..N {
+            s.schedule(&Request {
+                loc: PageLoc {
+                    module: i % 8,
+                    bank: (i / 8) % 64,
+                    page: i % 518,
+                },
+                kind: ReqKind::Pim { cycles: 100 },
+                issue_ps: (i as u64) * 2_500,
+            });
+        }
+    });
+
+    bench_throughput("scheduler/read-bursts", 500, N as f64, "req", || {
+        let mut s = MediaScheduler::new(&cfg);
+        for i in 0..N {
+            s.schedule(&Request {
+                loc: PageLoc {
+                    module: i % 8,
+                    bank: (i / 8) % 64,
+                    page: i % 518,
+                },
+                kind: ReqKind::ReadBurst { bytes: 1 << 20 },
+                issue_ps: (i as u64) * 2_500,
+            });
+        }
+    });
+}

@@ -1,0 +1,40 @@
+//! Minimal bench harness shared by the `rust/benches/*` targets
+//! (criterion is not in the offline vendor set). Prints
+//! criterion-compatible-ish lines: name, mean time per iteration, and a
+//! derived throughput figure when given.
+
+use std::time::Instant;
+
+/// Run `f` until ~`budget_ms` of wall time is spent (after one warmup),
+/// then report mean iteration time. Returns seconds per iteration.
+pub fn bench(name: &str, budget_ms: u64, mut f: impl FnMut()) -> f64 {
+    f(); // warmup
+    let budget = std::time::Duration::from_millis(budget_ms);
+    let start = Instant::now();
+    let mut iters = 0u64;
+    while start.elapsed() < budget {
+        f();
+        iters += 1;
+    }
+    let per = start.elapsed().as_secs_f64() / iters as f64;
+    println!("{name:<44} {:>12.3} ms/iter ({iters} iters)", per * 1e3);
+    per
+}
+
+/// Like [`bench`] but also prints a throughput in `unit`s per second.
+pub fn bench_throughput(
+    name: &str,
+    budget_ms: u64,
+    units_per_iter: f64,
+    unit: &str,
+    f: impl FnMut(),
+) -> f64 {
+    let per = bench(name, budget_ms, f);
+    let rate = units_per_iter / per;
+    println!(
+        "{:<44} {:>12.3e} {unit}/s",
+        format!("{name} [throughput]"),
+        rate
+    );
+    rate
+}

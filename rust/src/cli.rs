@@ -1,0 +1,172 @@
+//! Hand-rolled CLI argument parsing (no `clap` in the offline vendor set).
+//!
+//! Grammar: `pimdb <command> [--flag value]... [--set key=value]...`
+//! Boolean flags take no value (`--baseline`). Unknown flags are errors.
+
+use std::collections::BTreeMap;
+
+use crate::config::SystemConfig;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+    sets: Vec<(String, String)>,
+}
+
+/// Flags that are boolean (present/absent, no value).
+const BOOL_FLAGS: [&str; 3] = ["baseline", "verbose", "help"];
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut it = argv.into_iter();
+        let command = it.next().unwrap_or_else(|| "help".into());
+        let mut args = Args {
+            command,
+            ..Default::default()
+        };
+        while let Some(tok) = it.next() {
+            let name = tok
+                .strip_prefix("--")
+                .ok_or_else(|| format!("expected --flag, got '{tok}'"))?
+                .to_string();
+            if name == "set" {
+                let kv = it.next().ok_or("--set needs key=value")?;
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| format!("--set expects key=value, got '{kv}'"))?;
+                args.sets.push((k.trim().into(), v.trim().into()));
+            } else if BOOL_FLAGS.contains(&name.as_str()) {
+                args.flags.insert(name, "true".into());
+            } else {
+                let v = it
+                    .next()
+                    .ok_or_else(|| format!("--{name} needs a value"))?;
+                args.flags.insert(name, v);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn parse_f64(&self, name: &str) -> Result<Option<f64>, String> {
+        self.get(name)
+            .map(|v| v.parse().map_err(|e| format!("--{name}: {e}")))
+            .transpose()
+    }
+
+    pub fn parse_u64(&self, name: &str) -> Result<Option<u64>, String> {
+        self.get(name)
+            .map(|v| v.parse().map_err(|e| format!("--{name}: {e}")))
+            .transpose()
+    }
+
+    /// Build the system config: defaults, then --config file, then --sf /
+    /// --threads conveniences, then --set overrides (highest precedence).
+    pub fn build_config(&self) -> Result<SystemConfig, String> {
+        let mut cfg = SystemConfig::default();
+        if let Some(path) = self.get("config") {
+            let body = std::fs::read_to_string(path)
+                .map_err(|e| format!("config {path}: {e}"))?;
+            cfg.apply_file(&body)?;
+        }
+        if let Some(sf) = self.parse_f64("sf")? {
+            cfg.sim_sf = sf;
+        }
+        if let Some(t) = self.parse_u64("threads")? {
+            cfg.exec_threads = t as usize;
+        }
+        for (k, v) in &self.sets {
+            cfg.set(k, v)?;
+        }
+        Ok(cfg)
+    }
+
+    pub fn engine(&self) -> Result<crate::exec::pimdb::EngineKind, String> {
+        match self.get_or("engine", "native") {
+            "native" => Ok(crate::exec::pimdb::EngineKind::Native),
+            "pjrt" => Ok(crate::exec::pimdb::EngineKind::Pjrt),
+            other => Err(format!("unknown engine '{other}' (native|pjrt)")),
+        }
+    }
+}
+
+pub const USAGE: &str = "\
+pimdb — bulk-bitwise processing-in-memory database accelerator (PIMDB reproduction)
+
+USAGE: pimdb <command> [flags]
+
+COMMANDS:
+  run        --query <Q1|Q2|...|Q22_sub> [--engine native|pjrt] [--baseline]
+             run one TPC-H query on PIMDB (and optionally the baseline)
+  report     --exp <table1..6|fig8..15|ablation-rowpar|calibration|all>
+             regenerate a paper table/figure
+  gen-data   [--sf F] [--seed N]    generate + summarize the TPC-H data
+  addrmap    print the Fig. 3 physical-address/cell mapping
+  inspect    --op <name> [--n BITS] [--imm V]   instruction cost details
+  help       this text
+
+COMMON FLAGS:
+  --sf F            simulated scale factor (default 0.01)
+  --seed N          generator seed (default 42)
+  --threads N       executor threads (default 4)
+  --engine E        functional backend: native | pjrt
+  --config FILE     key=value config file (see `report --exp table3`)
+  --set key=value   override one config key (repeatable)
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<Args, String> {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn basic_command_and_flags() {
+        let a = parse("run --query Q6 --engine pjrt --baseline").unwrap();
+        assert_eq!(a.command, "run");
+        assert_eq!(a.get("query"), Some("Q6"));
+        assert!(a.has("baseline"));
+        assert_eq!(a.engine().unwrap(), crate::exec::pimdb::EngineKind::Pjrt);
+    }
+
+    #[test]
+    fn set_overrides_apply_to_config() {
+        let a = parse("run --sf 0.5 --set exec_threads=8 --set dram_standby_w=2.5").unwrap();
+        let cfg = a.build_config().unwrap();
+        assert_eq!(cfg.sim_sf, 0.5);
+        assert_eq!(cfg.exec_threads, 8);
+        assert_eq!(cfg.dram_standby_w, 2.5);
+    }
+
+    #[test]
+    fn errors_on_malformed_input() {
+        assert!(parse("run query Q6").is_err());
+        assert!(parse("run --query").is_err());
+        assert!(parse("run --set nokv").is_err());
+        assert!(parse("run --set bogus=1").unwrap().build_config().is_err());
+        assert!(parse("run --engine warp").unwrap().engine().is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("report").unwrap();
+        assert_eq!(a.get_or("exp", "all"), "all");
+        assert_eq!(a.engine().unwrap(), crate::exec::pimdb::EngineKind::Native);
+        let cfg = a.build_config().unwrap();
+        assert_eq!(cfg.sim_sf, 0.01);
+    }
+}

@@ -1,0 +1,321 @@
+//! System configuration (paper Table 3) with file/CLI overrides.
+//!
+//! Everything the simulators consume is centralized here so experiments can
+//! sweep parameters without touching model code. The config file format is
+//! `key = value` lines (no serde in the offline vendor set); the same keys
+//! are accepted as `--set key=value` CLI overrides.
+
+use std::collections::BTreeMap;
+
+/// Full system configuration. Defaults reproduce paper Table 3.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SystemConfig {
+    // --- PIM module geometry ---
+    /// PIM modules (memory ranks) in the system; one OpenCAPI channel each.
+    pub pim_modules: usize,
+    /// Capacity of a single PIM module in bytes (128 GB).
+    pub module_capacity: u64,
+    /// Banks per PIM module.
+    pub banks_per_module: usize,
+    /// Memory chips per module (bank is distributed across chips).
+    pub chips_per_module: usize,
+    /// Subarrays controlled by one PIM controller.
+    pub subarrays_per_pim_ctrl: usize,
+    /// Crossbars per subarray.
+    pub xbars_per_subarray: usize,
+    /// Crossbar rows.
+    pub xbar_rows: usize,
+    /// Crossbar columns.
+    pub xbar_cols: usize,
+    /// Bits per crossbar read.
+    pub xbar_read_bits: usize,
+    /// Huge-page size in bytes (1 GB).
+    pub page_bytes: u64,
+
+    // --- PIM timing / energy ---
+    /// Stateful-logic (MAGIC NOR) cycle time in picoseconds (30 ns).
+    pub logic_cycle_ps: u64,
+    /// Energy of a single stateful logic op, per participating cell (fJ).
+    pub logic_energy_fj_per_bit: f64,
+    /// Crossbar write energy per bit (pJ).
+    pub write_energy_pj_per_bit: f64,
+    /// Crossbar read energy per bit (pJ).
+    pub read_energy_pj_per_bit: f64,
+    /// Single PIM controller power (uW).
+    pub pim_ctrl_power_uw: f64,
+    /// RRAM array read latency (ns), R-DDR row read [37].
+    pub rram_read_ns: u64,
+    /// RRAM array write latency (ns).
+    pub rram_write_ns: u64,
+
+    // --- OpenCAPI channel ---
+    /// Bandwidth per channel (bytes/s). 25 GB/s.
+    pub opencapi_bw_bps: f64,
+    /// Per-packet protocol header bytes.
+    pub opencapi_header_bytes: u64,
+    /// One-way channel latency (ns).
+    pub opencapi_latency_ns: u64,
+
+    // --- host ---
+    /// Host cores used by query execution threads.
+    pub exec_threads: usize,
+    /// Host core frequency (Hz).
+    pub core_freq_hz: f64,
+    /// L1 data cache: size / associativity / block.
+    pub l1_bytes: usize,
+    pub l1_ways: usize,
+    /// L2 (LLC): size / associativity.
+    pub l2_bytes: usize,
+    pub l2_ways: usize,
+    pub cache_block: usize,
+    /// L1 hit latency (cycles), L2 hit latency (cycles).
+    pub l1_hit_cycles: u64,
+    pub l2_hit_cycles: u64,
+
+    // --- DRAM main memory ---
+    /// DDR4-2400, 2 channels: peak bandwidth (bytes/s).
+    pub dram_bw_bps: f64,
+    /// Idle (row-miss) access latency (ns).
+    pub dram_latency_ns: u64,
+    /// DRAM energy per byte transferred (pJ/B), activate+IO averaged.
+    pub dram_energy_pj_per_byte: f64,
+    /// DRAM standby/background power for the whole 64 GB pool (W);
+    /// ~0.18 W/GB background at DDR4-2400 (gem5 DRAMPower-class figure).
+    pub dram_standby_w: f64,
+    /// Memory-level parallelism the OoO core sustains on streaming misses.
+    pub host_mlp: f64,
+
+    // --- host power (McPAT substitute) ---
+    /// Active power per busy core (W).
+    pub core_active_w: f64,
+    /// Host uncore + idle power (W).
+    pub host_idle_w: f64,
+
+    // --- workload ---
+    /// TPC-H scale factor actually materialized in the simulation.
+    pub sim_sf: f64,
+    /// Scale factor the timing/energy models report (paper: 1000).
+    pub report_sf: f64,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig {
+            pim_modules: 8,
+            module_capacity: 128 << 30,
+            banks_per_module: 64,
+            chips_per_module: 8,
+            subarrays_per_pim_ctrl: 64,
+            xbars_per_subarray: 4,
+            xbar_rows: 1024,
+            xbar_cols: 512,
+            xbar_read_bits: 16,
+            page_bytes: 1 << 30,
+
+            logic_cycle_ps: 30_000,
+            logic_energy_fj_per_bit: 81.6,
+            write_energy_pj_per_bit: 6.9,
+            read_energy_pj_per_bit: 0.84,
+            pim_ctrl_power_uw: 126.0,
+            rram_read_ns: 100,
+            rram_write_ns: 300,
+
+            opencapi_bw_bps: 25e9,
+            opencapi_header_bytes: 18,
+            opencapi_latency_ns: 80,
+
+            exec_threads: 4,
+            core_freq_hz: 3.6e9,
+            l1_bytes: 64 << 10,
+            l1_ways: 4,
+            l2_bytes: 8 << 20,
+            l2_ways: 16,
+            cache_block: 64,
+            l1_hit_cycles: 4,
+            l2_hit_cycles: 30,
+
+            dram_bw_bps: 2.0 * 19.2e9,
+            dram_latency_ns: 80,
+            dram_energy_pj_per_byte: 20.0,
+            dram_standby_w: 12.0,
+            host_mlp: 10.0,
+
+            core_active_w: 6.0,
+            host_idle_w: 4.0,
+
+            sim_sf: 0.01,
+            report_sf: 1000.0,
+        }
+    }
+}
+
+impl SystemConfig {
+    /// Crossbars per huge-page (16384 for the default geometry).
+    pub fn xbars_per_page(&self) -> u64 {
+        let xbar_bits = (self.xbar_rows * self.xbar_cols) as u64;
+        self.page_bytes * 8 / xbar_bits
+    }
+
+    /// Records a page can host: one record per crossbar row.
+    pub fn records_per_page(&self) -> u64 {
+        self.xbars_per_page() * self.xbar_rows as u64
+    }
+
+    /// PIM controllers per page (each controls subarrays_per_pim_ctrl *
+    /// xbars_per_subarray crossbars).
+    pub fn pim_ctrls_per_page(&self) -> u64 {
+        let per_ctrl = (self.subarrays_per_pim_ctrl * self.xbars_per_subarray) as u64;
+        self.xbars_per_page().div_ceil(per_ctrl)
+    }
+
+    /// Total PIM memory bytes.
+    pub fn pim_capacity(&self) -> u64 {
+        self.module_capacity * self.pim_modules as u64
+    }
+
+    /// Apply one `key=value` override. Unknown keys are an error.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), String> {
+        macro_rules! parse {
+            ($field:ident) => {
+                self.$field = value
+                    .parse()
+                    .map_err(|e| format!("bad value for {key}: {e}"))?
+            };
+        }
+        match key {
+            "pim_modules" => parse!(pim_modules),
+            "module_capacity" => parse!(module_capacity),
+            "banks_per_module" => parse!(banks_per_module),
+            "chips_per_module" => parse!(chips_per_module),
+            "subarrays_per_pim_ctrl" => parse!(subarrays_per_pim_ctrl),
+            "xbars_per_subarray" => parse!(xbars_per_subarray),
+            "xbar_rows" => parse!(xbar_rows),
+            "xbar_cols" => parse!(xbar_cols),
+            "xbar_read_bits" => parse!(xbar_read_bits),
+            "page_bytes" => parse!(page_bytes),
+            "logic_cycle_ps" => parse!(logic_cycle_ps),
+            "logic_energy_fj_per_bit" => parse!(logic_energy_fj_per_bit),
+            "write_energy_pj_per_bit" => parse!(write_energy_pj_per_bit),
+            "read_energy_pj_per_bit" => parse!(read_energy_pj_per_bit),
+            "pim_ctrl_power_uw" => parse!(pim_ctrl_power_uw),
+            "rram_read_ns" => parse!(rram_read_ns),
+            "rram_write_ns" => parse!(rram_write_ns),
+            "opencapi_bw_bps" => parse!(opencapi_bw_bps),
+            "opencapi_header_bytes" => parse!(opencapi_header_bytes),
+            "opencapi_latency_ns" => parse!(opencapi_latency_ns),
+            "exec_threads" => parse!(exec_threads),
+            "core_freq_hz" => parse!(core_freq_hz),
+            "l1_bytes" => parse!(l1_bytes),
+            "l1_ways" => parse!(l1_ways),
+            "l2_bytes" => parse!(l2_bytes),
+            "l2_ways" => parse!(l2_ways),
+            "cache_block" => parse!(cache_block),
+            "l1_hit_cycles" => parse!(l1_hit_cycles),
+            "l2_hit_cycles" => parse!(l2_hit_cycles),
+            "dram_bw_bps" => parse!(dram_bw_bps),
+            "dram_latency_ns" => parse!(dram_latency_ns),
+            "dram_energy_pj_per_byte" => parse!(dram_energy_pj_per_byte),
+            "dram_standby_w" => parse!(dram_standby_w),
+            "host_mlp" => parse!(host_mlp),
+            "core_active_w" => parse!(core_active_w),
+            "host_idle_w" => parse!(host_idle_w),
+            "sim_sf" => parse!(sim_sf),
+            "report_sf" => parse!(report_sf),
+            _ => return Err(format!("unknown config key: {key}")),
+        }
+        Ok(())
+    }
+
+    /// Parse a `key = value` config file body (# comments allowed).
+    pub fn apply_file(&mut self, body: &str) -> Result<(), String> {
+        for (lineno, raw) in body.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            self.set(k.trim(), v.trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        }
+        Ok(())
+    }
+
+    /// All keys and current values (for `pimdb report --exp table3`).
+    pub fn entries(&self) -> BTreeMap<&'static str, String> {
+        let mut m = BTreeMap::new();
+        m.insert("pim_modules", self.pim_modules.to_string());
+        m.insert("module_capacity", self.module_capacity.to_string());
+        m.insert("banks_per_module", self.banks_per_module.to_string());
+        m.insert("chips_per_module", self.chips_per_module.to_string());
+        m.insert(
+            "subarrays_per_pim_ctrl",
+            self.subarrays_per_pim_ctrl.to_string(),
+        );
+        m.insert("xbars_per_subarray", self.xbars_per_subarray.to_string());
+        m.insert("xbar_rows", self.xbar_rows.to_string());
+        m.insert("xbar_cols", self.xbar_cols.to_string());
+        m.insert("xbar_read_bits", self.xbar_read_bits.to_string());
+        m.insert("page_bytes", self.page_bytes.to_string());
+        m.insert("logic_cycle_ps", self.logic_cycle_ps.to_string());
+        m.insert(
+            "logic_energy_fj_per_bit",
+            self.logic_energy_fj_per_bit.to_string(),
+        );
+        m.insert(
+            "write_energy_pj_per_bit",
+            self.write_energy_pj_per_bit.to_string(),
+        );
+        m.insert(
+            "read_energy_pj_per_bit",
+            self.read_energy_pj_per_bit.to_string(),
+        );
+        m.insert("pim_ctrl_power_uw", self.pim_ctrl_power_uw.to_string());
+        m.insert("opencapi_bw_bps", self.opencapi_bw_bps.to_string());
+        m.insert("exec_threads", self.exec_threads.to_string());
+        m.insert("core_freq_hz", self.core_freq_hz.to_string());
+        m.insert("l1_bytes", self.l1_bytes.to_string());
+        m.insert("l2_bytes", self.l2_bytes.to_string());
+        m.insert("dram_bw_bps", self.dram_bw_bps.to_string());
+        m.insert("sim_sf", self.sim_sf.to_string());
+        m.insert("report_sf", self.report_sf.to_string());
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_geometry_matches_paper() {
+        let c = SystemConfig::default();
+        // 1 GB page / 64 Kb crossbar = 16384 crossbars, 16.7M records
+        assert_eq!(c.xbars_per_page(), 16384);
+        assert_eq!(c.records_per_page(), 16384 * 1024);
+        // 64 subarrays * 4 xbars = 256 xbars/ctrl -> 64 ctrls/page
+        assert_eq!(c.pim_ctrls_per_page(), 64);
+        // 8 modules x 128 GB = 1 TB
+        assert_eq!(c.pim_capacity(), 1 << 40);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut c = SystemConfig::default();
+        c.set("pim_modules", "4").unwrap();
+        assert_eq!(c.pim_modules, 4);
+        assert!(c.set("bogus", "1").is_err());
+        assert!(c.set("pim_modules", "x").is_err());
+    }
+
+    #[test]
+    fn config_file_roundtrip() {
+        let mut c = SystemConfig::default();
+        c.apply_file("# comment\n exec_threads = 8 \n sim_sf = 0.1 # inline\n")
+            .unwrap();
+        assert_eq!(c.exec_threads, 8);
+        assert_eq!(c.sim_sf, 0.1);
+        assert!(c.apply_file("exec_threads 8").is_err());
+    }
+}

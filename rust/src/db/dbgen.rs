@@ -1,0 +1,463 @@
+//! Deterministic TPC-H data generator (dbgen substitute).
+//!
+//! Generates the eight TPC-H relations with the spec's §4.2 value
+//! distributions (simplified where the paper's queries are insensitive),
+//! already in the PIM encodings of [`schema`]: dictionary ids, day
+//! offsets, offset cents. Selectivities of every predicate used by the 19
+//! evaluated queries follow the spec, which is what the performance model
+//! depends on.
+
+use std::collections::BTreeMap;
+
+use super::schema::{self, RelId};
+use crate::util::rng::Rng;
+
+/// A generated relation: encoded column store.
+#[derive(Clone, Debug)]
+pub struct Relation {
+    pub id: RelId,
+    pub records: usize,
+    columns: Vec<(&'static str, Vec<u64>)>,
+}
+
+impl Relation {
+    fn new(id: RelId, records: usize) -> Self {
+        Relation {
+            id,
+            records,
+            columns: Vec::new(),
+        }
+    }
+
+    fn push(&mut self, name: &'static str, col: Vec<u64>) {
+        debug_assert_eq!(col.len(), self.records);
+        self.columns.push((name, col));
+    }
+
+    pub fn col(&self, name: &str) -> &[u64] {
+        &self
+            .columns
+            .iter()
+            .find(|(n, _)| *n == name)
+            .unwrap_or_else(|| panic!("{:?} has no column {name}", self.id))
+            .1
+    }
+
+    pub fn has_col(&self, name: &str) -> bool {
+        self.columns.iter().any(|(n, _)| *n == name)
+    }
+
+    pub fn column_names(&self) -> Vec<&'static str> {
+        self.columns.iter().map(|(n, _)| *n).collect()
+    }
+}
+
+/// The generated database.
+pub struct Database {
+    pub sf: f64,
+    pub seed: u64,
+    relations: BTreeMap<RelId, Relation>,
+}
+
+impl Database {
+    pub fn rel(&self, id: RelId) -> &Relation {
+        &self.relations[&id]
+    }
+
+    /// Generate all relations at scale factor `sf` (sim scale; the report
+    /// scale stays SF=1000 in the timing model).
+    pub fn generate(sf: f64, seed: u64) -> Database {
+        let root = Rng::new(seed);
+        let mut relations = BTreeMap::new();
+
+        let n_part = RelId::Part.records_at_sf(sf) as usize;
+        let n_supp = RelId::Supplier.records_at_sf(sf) as usize;
+        let n_ps = RelId::Partsupp.records_at_sf(sf) as usize;
+        let n_cust = RelId::Customer.records_at_sf(sf) as usize;
+        let n_ord = RelId::Orders.records_at_sf(sf) as usize;
+
+        relations.insert(RelId::Part, gen_part(&mut root.stream(1), n_part));
+        relations.insert(RelId::Supplier, gen_supplier(&mut root.stream(2), n_supp));
+        relations.insert(
+            RelId::Partsupp,
+            gen_partsupp(&mut root.stream(3), n_ps, n_part, n_supp),
+        );
+        relations.insert(RelId::Customer, gen_customer(&mut root.stream(4), n_cust));
+        let (orders, lineitem) =
+            gen_orders_lineitem(&mut root.stream(5), n_ord, n_cust, n_part, n_supp);
+        relations.insert(RelId::Orders, orders);
+        relations.insert(RelId::Lineitem, lineitem);
+        relations.insert(RelId::Nation, gen_nation());
+        relations.insert(RelId::Region, gen_region());
+
+        Database {
+            sf,
+            seed,
+            relations,
+        }
+    }
+}
+
+/// Spec §4.2.3: p_retailprice from the part key alone (no lookup needed
+/// when deriving l_extendedprice), in cents.
+pub fn retail_price_cents(partkey: u64) -> u64 {
+    90_000 + ((partkey / 10) % 20_001) + 100 * (partkey % 1_000)
+}
+
+fn gen_part(rng: &mut Rng, n: usize) -> Relation {
+    let mut r = Relation::new(RelId::Part, n);
+    let mut partkey = Vec::with_capacity(n);
+    let mut mfgr = Vec::with_capacity(n);
+    let mut brand = Vec::with_capacity(n);
+    let mut ptype = Vec::with_capacity(n);
+    let mut size = Vec::with_capacity(n);
+    let mut container = Vec::with_capacity(n);
+    let mut price = Vec::with_capacity(n);
+    for i in 0..n as u64 {
+        let pk = i + 1;
+        partkey.push(pk);
+        let m = rng.range_u64(0, 4);
+        mfgr.push(m);
+        // brand is within the manufacturer family (spec: Brand#MN, M=mfgr)
+        brand.push(m * 5 + rng.range_u64(0, 4));
+        ptype.push(rng.range_u64(0, 149));
+        size.push(rng.range_u64(1, 50));
+        container.push(rng.range_u64(0, 39));
+        price.push(retail_price_cents(pk));
+    }
+    r.push("p_partkey", partkey);
+    r.push("p_mfgr", mfgr);
+    r.push("p_brand", brand);
+    r.push("p_type", ptype);
+    r.push("p_size", size);
+    r.push("p_container", container);
+    r.push("p_retailprice", price);
+    r
+}
+
+fn gen_supplier(rng: &mut Rng, n: usize) -> Relation {
+    let mut r = Relation::new(RelId::Supplier, n);
+    let mut suppkey = Vec::with_capacity(n);
+    let mut nation = Vec::with_capacity(n);
+    let mut phone = Vec::with_capacity(n);
+    let mut phone_rest = Vec::with_capacity(n);
+    let mut acctbal = Vec::with_capacity(n);
+    for i in 0..n as u64 {
+        suppkey.push(i + 1);
+        let nk = rng.range_u64(0, 24);
+        nation.push(nk);
+        phone.push(nk + 10);
+        phone_rest.push(rng.range_u64(0, 9_999_999_999)); // 10 local digits
+        // spec: [-999.99, 9999.99] -> offset by +1000.00
+        acctbal.push((rng.range_i64(-99_999, 999_999) + 100_000) as u64);
+    }
+    r.push("s_suppkey", suppkey);
+    r.push("s_nationkey", nation);
+    r.push("s_phone_cc", phone);
+    r.push("s_phone_rest", phone_rest);
+    r.push("s_acctbal", acctbal);
+    r
+}
+
+fn gen_partsupp(rng: &mut Rng, n: usize, n_part: usize, n_supp: usize) -> Relation {
+    let mut r = Relation::new(RelId::Partsupp, n);
+    let mut partkey = Vec::with_capacity(n);
+    let mut suppkey = Vec::with_capacity(n);
+    let mut availqty = Vec::with_capacity(n);
+    let mut cost = Vec::with_capacity(n);
+    for i in 0..n as u64 {
+        // 4 suppliers per part, spread over the supplier space (spec §4.2.3)
+        let pk = i / 4 % n_part.max(1) as u64 + 1;
+        let sk = (pk + (i % 4) * ((n_supp as u64 / 4).max(1) + 1)) % n_supp.max(1) as u64 + 1;
+        partkey.push(pk);
+        suppkey.push(sk);
+        availqty.push(rng.range_u64(1, 9_999));
+        cost.push(rng.range_u64(100, 100_000));
+    }
+    r.push("ps_partkey", partkey);
+    r.push("ps_suppkey", suppkey);
+    r.push("ps_availqty", availqty);
+    r.push("ps_supplycost", cost);
+    r
+}
+
+fn gen_customer(rng: &mut Rng, n: usize) -> Relation {
+    let mut r = Relation::new(RelId::Customer, n);
+    let mut custkey = Vec::with_capacity(n);
+    let mut nation = Vec::with_capacity(n);
+    let mut phone = Vec::with_capacity(n);
+    let mut phone_rest = Vec::with_capacity(n);
+    let mut acctbal = Vec::with_capacity(n);
+    let mut segment = Vec::with_capacity(n);
+    for i in 0..n as u64 {
+        custkey.push(i + 1);
+        let nk = rng.range_u64(0, 24);
+        nation.push(nk);
+        phone.push(nk + 10);
+        phone_rest.push(rng.range_u64(0, 9_999_999_999)); // 10 local digits
+        acctbal.push((rng.range_i64(-99_999, 999_999) + 100_000) as u64);
+        segment.push(rng.range_u64(0, 4));
+    }
+    r.push("c_custkey", custkey);
+    r.push("c_nationkey", nation);
+    r.push("c_phone_cc", phone);
+    r.push("c_phone_rest", phone_rest);
+    r.push("c_acctbal", acctbal);
+    r.push("c_mktsegment", segment);
+    r
+}
+
+fn gen_orders_lineitem(
+    rng: &mut Rng,
+    n_orders: usize,
+    n_cust: usize,
+    n_part: usize,
+    n_supp: usize,
+) -> (Relation, Relation) {
+    let cutoff = schema::date(1995, 6, 17); // spec CURRENTDATE
+    let max_od = schema::max_orderdate();
+
+    let mut o_orderkey = Vec::with_capacity(n_orders);
+    let mut o_custkey = Vec::with_capacity(n_orders);
+    let mut o_status = Vec::with_capacity(n_orders);
+    let mut o_totalprice = Vec::with_capacity(n_orders);
+    let mut o_orderdate = Vec::with_capacity(n_orders);
+    let mut o_priority = Vec::with_capacity(n_orders);
+    let mut o_shippriority = Vec::with_capacity(n_orders);
+
+    let mut l: BTreeMap<&'static str, Vec<u64>> = BTreeMap::new();
+    let cols = [
+        "l_orderkey",
+        "l_partkey",
+        "l_suppkey",
+        "l_linenumber",
+        "l_quantity",
+        "l_extendedprice",
+        "l_discount",
+        "l_tax",
+        "l_returnflag",
+        "l_linestatus",
+        "l_shipdate",
+        "l_commitdate",
+        "l_receiptdate",
+        "l_shipinstruct",
+        "l_shipmode",
+    ];
+    for c in cols {
+        l.insert(c, Vec::with_capacity(n_orders * 4));
+    }
+
+    for i in 0..n_orders as u64 {
+        let orderkey = i * 4 + 1; // sparse keys as in the spec
+        let orderdate = rng.range_u64(0, max_od);
+        o_orderkey.push(orderkey);
+        o_custkey.push(rng.range_u64(1, n_cust.max(1) as u64));
+        o_orderdate.push(orderdate);
+        o_priority.push(rng.range_u64(0, 4));
+        o_shippriority.push(0);
+
+        let lines = rng.range_u64(1, 7) as usize;
+        let mut total = 0u64;
+        let mut all_f = true;
+        let mut all_o = true;
+        for ln in 0..lines {
+            let partkey = rng.range_u64(1, n_part.max(1) as u64);
+            let quantity = rng.range_u64(1, 50);
+            let eprice = quantity * retail_price_cents(partkey) / 100;
+            let shipdate = orderdate + rng.range_u64(1, 121);
+            let commitdate = orderdate + rng.range_u64(30, 90);
+            let receiptdate = shipdate + rng.range_u64(1, 30);
+            let returnflag = if receiptdate <= cutoff {
+                rng.range_u64(0, 1) // R or A
+            } else {
+                2 // N
+            };
+            let linestatus = if shipdate > cutoff { 0 } else { 1 }; // O / F
+            all_f &= linestatus == 1;
+            all_o &= linestatus == 0;
+            total += eprice;
+
+            l.get_mut("l_orderkey").unwrap().push(orderkey);
+            l.get_mut("l_partkey").unwrap().push(partkey);
+            l.get_mut("l_suppkey")
+                .unwrap()
+                .push(rng.range_u64(1, n_supp.max(1) as u64));
+            l.get_mut("l_linenumber").unwrap().push(ln as u64 + 1);
+            l.get_mut("l_quantity").unwrap().push(quantity);
+            l.get_mut("l_extendedprice").unwrap().push(eprice);
+            l.get_mut("l_discount").unwrap().push(rng.range_u64(0, 10));
+            l.get_mut("l_tax").unwrap().push(rng.range_u64(0, 8));
+            l.get_mut("l_returnflag").unwrap().push(returnflag);
+            l.get_mut("l_linestatus").unwrap().push(linestatus);
+            l.get_mut("l_shipdate").unwrap().push(shipdate);
+            l.get_mut("l_commitdate").unwrap().push(commitdate);
+            l.get_mut("l_receiptdate").unwrap().push(receiptdate);
+            l.get_mut("l_shipinstruct").unwrap().push(rng.range_u64(0, 3));
+            l.get_mut("l_shipmode").unwrap().push(rng.range_u64(0, 6));
+        }
+        // spec: F if all lines F, O if all lines O, else P
+        o_status.push(if all_f {
+            0
+        } else if all_o {
+            1
+        } else {
+            2
+        });
+        o_totalprice.push(total);
+    }
+
+    let mut orders = Relation::new(RelId::Orders, n_orders);
+    orders.push("o_orderkey", o_orderkey);
+    orders.push("o_custkey", o_custkey);
+    orders.push("o_orderstatus", o_status);
+    orders.push("o_totalprice", o_totalprice);
+    orders.push("o_orderdate", o_orderdate);
+    orders.push("o_orderpriority", o_priority);
+    orders.push("o_shippriority", o_shippriority);
+
+    let n_li = l["l_orderkey"].len();
+    let mut lineitem = Relation::new(RelId::Lineitem, n_li);
+    for c in cols {
+        lineitem.push(c, l.remove(c).unwrap());
+    }
+    (orders, lineitem)
+}
+
+fn gen_nation() -> Relation {
+    let mut r = Relation::new(RelId::Nation, 25);
+    r.push("n_nationkey", (0..25).collect());
+    r.push(
+        "n_regionkey",
+        schema::NATIONS.iter().map(|&(_, reg)| reg as u64).collect(),
+    );
+    r
+}
+
+fn gen_region() -> Relation {
+    let mut r = Relation::new(RelId::Region, 5);
+    r.push("r_regionkey", (0..5).collect());
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Database {
+        Database::generate(0.001, 7)
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = Database::generate(0.001, 7);
+        let b = Database::generate(0.001, 7);
+        assert_eq!(
+            a.rel(RelId::Lineitem).col("l_shipdate"),
+            b.rel(RelId::Lineitem).col("l_shipdate")
+        );
+        let c = Database::generate(0.001, 8);
+        assert_ne!(
+            a.rel(RelId::Lineitem).col("l_shipdate"),
+            c.rel(RelId::Lineitem).col("l_shipdate")
+        );
+    }
+
+    #[test]
+    fn record_counts_scale() {
+        let db = tiny();
+        assert_eq!(db.rel(RelId::Part).records, 200);
+        assert_eq!(db.rel(RelId::Orders).records, 1500);
+        let li = db.rel(RelId::Lineitem).records;
+        assert!((3000..=10_500).contains(&li), "lineitem {li}");
+    }
+
+    #[test]
+    fn values_fit_declared_widths() {
+        let db = tiny();
+        for rel in schema::PIM_RELATIONS {
+            let r = db.rel(rel);
+            for a in schema::attrs(rel) {
+                let max = r.col(a.name).iter().copied().max().unwrap_or(0);
+                assert!(
+                    max < (1u64 << a.bits),
+                    "{:?}.{} max {max} exceeds {} bits",
+                    rel,
+                    a.name,
+                    a.bits
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn date_relationships_hold() {
+        let db = tiny();
+        let li = db.rel(RelId::Lineitem);
+        let ship = li.col("l_shipdate");
+        let commit = li.col("l_commitdate");
+        let receipt = li.col("l_receiptdate");
+        for i in 0..li.records {
+            assert!(receipt[i] > ship[i]);
+            assert!(commit[i] >= ship[i].saturating_sub(121) ); // same order window
+        }
+        // both orderings of commit vs receipt occur (Q4/Q12/Q21 predicates)
+        let lt = (0..li.records).filter(|&i| commit[i] < receipt[i]).count();
+        assert!(lt > 0 && lt < li.records);
+    }
+
+    #[test]
+    fn q6_style_selectivity_reasonable() {
+        // Q6 selects shipdate in 1994, discount in [5,7], qty < 24:
+        // spec selectivity ~ (1/7) * (3/11) * (23/50) ≈ 1.8%
+        let db = Database::generate(0.01, 3);
+        let li = db.rel(RelId::Lineitem);
+        let (d0, d1) = (schema::date(1994, 1, 1), schema::date(1995, 1, 1));
+        let n = li.records;
+        let sel = (0..n)
+            .filter(|&i| {
+                let sd = li.col("l_shipdate")[i];
+                let disc = li.col("l_discount")[i];
+                let q = li.col("l_quantity")[i];
+                sd >= d0 && sd < d1 && (5..=7).contains(&disc) && q < 24
+            })
+            .count() as f64
+            / n as f64;
+        assert!((0.005..0.04).contains(&sel), "selectivity {sel}");
+    }
+
+    #[test]
+    fn returnflag_linestatus_follow_cutoff() {
+        let db = tiny();
+        let li = db.rel(RelId::Lineitem);
+        let cutoff = schema::date(1995, 6, 17);
+        for i in 0..li.records {
+            let rf = li.col("l_returnflag")[i];
+            let rd = li.col("l_receiptdate")[i];
+            if rd > cutoff {
+                assert_eq!(rf, 2); // N
+            } else {
+                assert!(rf < 2); // R or A
+            }
+            let ls = li.col("l_linestatus")[i];
+            assert_eq!(ls == 0, li.col("l_shipdate")[i] > cutoff);
+        }
+    }
+
+    #[test]
+    fn orderstatus_consistent_with_lines() {
+        let db = tiny();
+        let ord = db.rel(RelId::Orders);
+        // all three statuses appear
+        let mut seen = [false; 3];
+        for &s in ord.col("o_orderstatus") {
+            seen[s as usize] = true;
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    #[should_panic(expected = "no column")]
+    fn missing_column_panics() {
+        tiny().rel(RelId::Part).col("bogus");
+    }
+}

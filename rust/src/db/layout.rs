@@ -1,0 +1,249 @@
+//! Relation → PIM memory layout (paper §4.1, §5.1, Table 1).
+//!
+//! Each record occupies one crossbar row; attributes are aligned across
+//! rows in consecutive cells; a VALID column marks occupied rows. The
+//! layout carries two views:
+//!
+//!  * **report view** (SF = `report_sf`, paper: 1000): page counts, row
+//!    bits, utilization — Table 1, and the volumes the timing model uses;
+//!  * **sim view** (SF = `sim_sf`): the crossbars actually materialized
+//!    from the generated data, distributed over the report pages the way
+//!    the paper emulates 1 GB pages with small ones (§5.4).
+
+use super::schema::{self, Attr, RelId};
+use crate::config::SystemConfig;
+use crate::mem::vm::{HugePage, PageAllocator};
+
+/// Column placement of one attribute inside the crossbar row.
+#[derive(Clone, Copy, Debug)]
+pub struct AttrSlot {
+    pub attr: Attr,
+    /// First bit column.
+    pub start: usize,
+}
+
+/// Layout of one relation.
+#[derive(Clone, Debug)]
+pub struct RelationLayout {
+    pub rel: RelId,
+    pub slots: Vec<AttrSlot>,
+    /// VALID bit column.
+    pub valid_col: usize,
+    /// Bits of data per record (incl. valid).
+    pub row_bits: usize,
+    /// First column available for intermediate results.
+    pub compute_base: usize,
+    /// Records at the report scale factor.
+    pub records_report: u64,
+    /// Huge-pages at the report scale factor (Table 1 "# of PIM Pages").
+    pub pages_report: u64,
+    /// Allocated pages (report geometry, placed on modules/banks).
+    pub pages: Vec<HugePage>,
+    /// Records materialized in the simulation.
+    pub records_sim: u64,
+    /// Crossbars materialized in the simulation.
+    pub xbars_sim: u64,
+}
+
+impl RelationLayout {
+    pub fn slot(&self, attr_name: &str) -> Option<AttrSlot> {
+        self.slots
+            .iter()
+            .find(|s| s.attr.name == attr_name)
+            .copied()
+    }
+
+    /// Free columns for intermediates (paper: most unoccupied row space is
+    /// usable for computation).
+    pub fn compute_cols(&self, cfg: &SystemConfig) -> usize {
+        cfg.xbar_cols - self.compute_base
+    }
+
+    /// Memory utilization at the report SF (Table 1): data bits over
+    /// allocated page bits.
+    pub fn utilization(&self, cfg: &SystemConfig) -> f64 {
+        let data_bits = self.records_report as f64 * self.row_bits as f64;
+        let page_bits = self.pages_report as f64 * cfg.page_bytes as f64 * 8.0;
+        data_bits / page_bits
+    }
+
+    /// Sim crossbars that live on report page `p` (the sim data is spread
+    /// over the report pages round-robin; page p gets xbars p, p+P, ...).
+    pub fn sim_xbars_on_page(&self, p: usize) -> u64 {
+        let pages = self.pages_report.max(1);
+        let full = self.xbars_sim / pages;
+        let extra = (self.xbars_sim % pages > p as u64) as u64;
+        full + extra
+    }
+
+    /// Rows occupied in sim crossbar `x` (the last crossbar is partial).
+    pub fn rows_in_xbar(&self, x: u64, cfg: &SystemConfig) -> usize {
+        let rows = cfg.xbar_rows as u64;
+        if x + 1 < self.xbars_sim {
+            rows as usize
+        } else {
+            (self.records_sim - x * rows) as usize
+        }
+    }
+}
+
+/// Compute layouts for all PIM relations and allocate their pages.
+pub struct DbLayout {
+    pub relations: Vec<RelationLayout>,
+    pub total_pages: u64,
+    pub max_pages_in_module: u64,
+}
+
+impl DbLayout {
+    pub fn build(cfg: &SystemConfig, sim_records: &dyn Fn(RelId) -> u64) -> Result<DbLayout, String> {
+        let mut alloc = PageAllocator::new(cfg);
+        let mut relations = Vec::new();
+        for rel in schema::PIM_RELATIONS {
+            let mut slots = Vec::new();
+            let mut col = 0usize;
+            for &attr in schema::attrs(rel) {
+                slots.push(AttrSlot { attr, start: col });
+                col += attr.bits;
+            }
+            let valid_col = col;
+            let row_bits = col + 1;
+            if row_bits > cfg.xbar_cols {
+                return Err(format!("{:?} row ({row_bits}b) exceeds crossbar", rel));
+            }
+            let records_report = rel.records_at_sf(cfg.report_sf);
+            let pages_report = records_report.div_ceil(cfg.records_per_page());
+            let pages = alloc.allocate(pages_report as usize)?;
+            let records_sim = sim_records(rel);
+            let xbars_sim = records_sim.div_ceil(cfg.xbar_rows as u64).max(1);
+            relations.push(RelationLayout {
+                rel,
+                slots,
+                valid_col,
+                row_bits,
+                compute_base: row_bits,
+                records_report,
+                pages_report,
+                pages,
+                records_sim,
+                xbars_sim,
+            });
+        }
+        Ok(DbLayout {
+            total_pages: alloc.pages_allocated() as u64,
+            max_pages_in_module: alloc.max_pages_in_module(),
+            relations,
+        })
+    }
+
+    pub fn rel(&self, rel: RelId) -> &RelationLayout {
+        self.relations
+            .iter()
+            .find(|r| r.rel == rel)
+            .expect("relation not in PIM layout")
+    }
+
+    /// Overall utilization (Table 1 "Total" row).
+    pub fn total_utilization(&self, cfg: &SystemConfig) -> f64 {
+        let data: f64 = self
+            .relations
+            .iter()
+            .map(|r| r.records_report as f64 * r.row_bits as f64)
+            .sum();
+        let pages: f64 = self
+            .relations
+            .iter()
+            .map(|r| r.pages_report as f64 * cfg.page_bytes as f64 * 8.0)
+            .sum();
+        data / pages
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> (SystemConfig, DbLayout) {
+        let cfg = SystemConfig::default();
+        let l = DbLayout::build(&cfg, &|rel| rel.records_at_sf(0.01)).unwrap();
+        (cfg, l)
+    }
+
+    #[test]
+    fn page_counts_match_table1() {
+        let (_, l) = layout();
+        // paper Table 1 at SF=1000: 12/1/48/9/90/358, total 518
+        assert_eq!(l.rel(RelId::Part).pages_report, 12);
+        assert_eq!(l.rel(RelId::Supplier).pages_report, 1);
+        assert_eq!(l.rel(RelId::Partsupp).pages_report, 48);
+        assert_eq!(l.rel(RelId::Customer).pages_report, 9);
+        assert_eq!(l.rel(RelId::Orders).pages_report, 90);
+        assert_eq!(l.rel(RelId::Lineitem).pages_report, 358);
+        assert_eq!(l.total_pages, 518);
+    }
+
+    #[test]
+    fn utilization_in_paper_band() {
+        let (cfg, l) = layout();
+        // paper total: 32.6% with wider encodings; ours is lower-bounded by
+        // the same page math — just assert the sane band and ordering
+        let total = l.total_utilization(&cfg);
+        assert!((0.1..0.5).contains(&total), "total {total}");
+        // LINEITEM (widest rows, fullest pages) has the highest utilization
+        let li = l.rel(RelId::Lineitem).utilization(&cfg);
+        for r in &l.relations {
+            assert!(li >= r.utilization(&cfg) - 1e-9, "{:?}", r.rel);
+        }
+    }
+
+    #[test]
+    fn slots_are_disjoint_and_ordered() {
+        let (_, l) = layout();
+        for r in &l.relations {
+            let mut prev_end = 0;
+            for s in &r.slots {
+                assert!(s.start >= prev_end);
+                prev_end = s.start + s.attr.bits;
+            }
+            assert_eq!(r.valid_col, prev_end);
+            assert_eq!(r.row_bits, prev_end + 1);
+        }
+    }
+
+    #[test]
+    fn compute_area_left_for_intermediates() {
+        let (cfg, l) = layout();
+        for r in &l.relations {
+            // the widest instruction needs ~n+15 intermediate cells; all
+            // relations must leave >= 80 columns
+            assert!(r.compute_cols(&cfg) >= 80, "{:?}", r.rel);
+        }
+    }
+
+    #[test]
+    fn sim_xbars_distribute_over_report_pages() {
+        let (_, l) = layout();
+        let li = l.rel(RelId::Lineitem);
+        let total: u64 = (0..li.pages_report as usize)
+            .map(|p| li.sim_xbars_on_page(p))
+            .sum();
+        assert_eq!(total, li.xbars_sim);
+    }
+
+    #[test]
+    fn last_crossbar_partial_rows() {
+        let (cfg, l) = layout();
+        let s = l.rel(RelId::Supplier);
+        // 100 records at SF 0.01 -> 1 crossbar with 100 rows
+        assert_eq!(s.records_sim, 100);
+        assert_eq!(s.xbars_sim, 1);
+        assert_eq!(s.rows_in_xbar(0, &cfg), 100);
+    }
+
+    #[test]
+    fn capacity_fits_paper_system() {
+        let (cfg, l) = layout();
+        // 518 pages of 1 GB fit in 8 x 128 GB modules
+        assert!(l.total_pages * cfg.page_bytes <= cfg.pim_capacity());
+        assert!(l.max_pages_in_module <= cfg.module_capacity / cfg.page_bytes);
+    }
+}

@@ -1,0 +1,6 @@
+//! TPC-H database substrate: schema + encodings, deterministic generator,
+//! and the relation → crossbar layout (paper §4, §5.1).
+
+pub mod dbgen;
+pub mod layout;
+pub mod schema;

@@ -1,0 +1,579 @@
+//! Functional execution engine: interprets PIM instructions over
+//! bit-plane crossbar states.
+//!
+//! A crossbar's functional state is one bit-plane per column (the same
+//! u32[WORDS] packing the L1 Pallas kernels use, DESIGN.md §Hardware-
+//! Adaptation), so the native path below and the PJRT path in
+//! [`crate::runtime`] operate on the identical representation and are
+//! differential-tested against each other.
+//!
+//! ISA semantics notes (paper §4.2, §5.2.2):
+//!  * And/Or with a single-column second operand broadcast the mask bit
+//!    across the first operand's width (the paper's reduce pre-masking).
+//!  * Reduce instructions cover *all* crossbar rows; the compiler masks or
+//!    adjusts non-selected rows beforehand.
+//!  * ColumnTransform is a data-movement op; functionally the mask column
+//!    is unchanged (the read path fetches it row-oriented).
+
+use crate::db::dbgen::Relation;
+use crate::db::layout::RelationLayout;
+use crate::pim::isa::{ColRange, Opcode, PimInstruction};
+use crate::query::compiler::Step;
+use crate::util::bits::{WORDS, XBAR_ROWS};
+
+/// Functional state of one crossbar: `planes[c]` holds column `c` of all
+/// 1024 rows.
+#[derive(Clone)]
+pub struct XbarState {
+    pub planes: Vec<[u32; WORDS]>,
+}
+
+impl XbarState {
+    pub fn new(cols: usize) -> Self {
+        XbarState {
+            planes: vec![[0u32; WORDS]; cols],
+        }
+    }
+
+    #[inline]
+    fn set_bit(&mut self, col: usize, row: usize, v: bool) {
+        let w = &mut self.planes[col][row / 32];
+        let m = 1u32 << (row % 32);
+        if v {
+            *w |= m;
+        } else {
+            *w &= !m;
+        }
+    }
+
+    /// Value of columns [start, start+len) in `row`.
+    pub fn value_at(&self, row: usize, r: ColRange) -> u64 {
+        let mut v = 0u64;
+        for i in 0..r.len as usize {
+            if (self.planes[r.start as usize + i][row / 32] >> (row % 32)) & 1 == 1 {
+                v |= 1 << i;
+            }
+        }
+        v
+    }
+
+    pub fn popcount_col(&self, col: usize) -> u64 {
+        self.planes[col].iter().map(|w| w.count_ones() as u64).sum()
+    }
+}
+
+/// Load a relation partition into crossbar states (records -> rows,
+/// attributes -> column slots, VALID bit set on occupied rows).
+///
+/// Word-at-a-time transpose: for each attribute, 32 consecutive records
+/// are gathered into one u32 per bit-plane, writing each plane word
+/// exactly once (this routine was 40% of the end-to-end profile when it
+/// set bits one at a time — see EXPERIMENTS.md §Perf).
+pub fn load_states(
+    rel: &Relation,
+    layout: &RelationLayout,
+    cols: usize,
+    rec_range: std::ops::Range<usize>,
+) -> Vec<XbarState> {
+    let n = rec_range.len();
+    let n_xbars = n.div_ceil(XBAR_ROWS).max(1);
+    let mut states = vec![XbarState::new(cols); n_xbars];
+    for slot in &layout.slots {
+        let col = &rel.col(slot.attr.name)[rec_range.clone()];
+        for (w, chunk) in col.chunks(32).enumerate() {
+            let (x, word) = (w / WORDS, w % WORDS);
+            let planes = &mut states[x].planes;
+            for b in 0..slot.attr.bits {
+                let mut bits = 0u32;
+                for (i, &v) in chunk.iter().enumerate() {
+                    bits |= (((v >> b) & 1) as u32) << i;
+                }
+                planes[slot.start + b][word] = bits;
+            }
+        }
+    }
+    // VALID column: whole words for full 32-record groups, tail bits last
+    for i in (0..n).step_by(32) {
+        let (x, word) = (i / XBAR_ROWS, (i % XBAR_ROWS) / 32);
+        let remaining = n - i;
+        states[x].planes[layout.valid_col][word] = if remaining >= 32 {
+            u32::MAX
+        } else {
+            (1u32 << remaining) - 1
+        };
+    }
+    states
+}
+
+/// Outputs of running a compiled program over a crossbar batch.
+#[derive(Clone, Debug, Default)]
+pub struct ExecOutputs {
+    /// reduces[reduce_idx][xbar] — per-crossbar aggregate values, combined
+    /// at the host (the paper's per-crossbar read + host combine).
+    pub reduces: Vec<Vec<u128>>,
+    /// Selected records per crossbar (popcount of the filter mask).
+    pub mask_counts: Vec<u64>,
+}
+
+impl ExecOutputs {
+    pub fn total_selected(&self) -> u64 {
+        self.mask_counts.iter().sum()
+    }
+
+    /// Host-side combine of one reduce across crossbars.
+    pub fn combined(&self, reduce_idx: usize) -> u128 {
+        self.reduces[reduce_idx].iter().sum()
+    }
+}
+
+/// Interpret one instruction on one crossbar state. Reduce ops append to
+/// `reduce_out` instead of mutating columns.
+pub fn exec_instr(st: &mut XbarState, instr: &PimInstruction, reduce_out: &mut Vec<u128>) {
+    let a = instr.src_a;
+    let d = instr.dst;
+    match instr.op {
+        Opcode::EqImm | Opcode::NeImm | Opcode::LtImm | Opcode::GtImm => {
+            let (eq, lt) = cmp_imm_planes(st, a, instr.imm);
+            let out = match instr.op {
+                Opcode::EqImm => eq,
+                Opcode::NeImm => not_words(&eq),
+                Opcode::LtImm => lt,
+                Opcode::GtImm => not_words(&or_words(&lt, &eq)),
+                _ => unreachable!(),
+            };
+            st.planes[d.start as usize] = out;
+        }
+        Opcode::Eq | Opcode::Lt => {
+            let b = instr.src_b.expect("binary cmp");
+            let (eq, lt) = cmp_cols_planes(st, a, b);
+            st.planes[d.start as usize] = if instr.op == Opcode::Eq { eq } else { lt };
+        }
+        Opcode::AddImm => {
+            let mut carry = [0u32; WORDS];
+            for i in 0..a.len as usize {
+                let pa = st.planes[a.start as usize + i];
+                let bit = (instr.imm >> i) & 1;
+                let pb = if bit == 1 { [u32::MAX; WORDS] } else { [0u32; WORDS] };
+                let (s, c) = full_add(&pa, &pb, &carry);
+                st.planes[d.start as usize + i] = s;
+                carry = c;
+            }
+        }
+        Opcode::Add => {
+            let b = instr.src_b.expect("add");
+            let n = d.len as usize;
+            let mut carry = [0u32; WORDS];
+            for i in 0..n {
+                let pa = plane_or_zero(st, a, i);
+                let pb = plane_or_zero(st, b, i);
+                let (s, c) = full_add(&pa, &pb, &carry);
+                st.planes[d.start as usize + i] = s;
+                carry = c;
+            }
+        }
+        Opcode::Mul => {
+            let b = instr.src_b.expect("mul");
+            let n = d.len as usize;
+            // fixed stack accumulator (n <= 64 planes): keeps the shift-add
+            // inner loop allocation-free — Q1 runs thousands of Muls
+            debug_assert!(n <= 64);
+            let mut acc = [[0u32; WORDS]; 64];
+            let acc = &mut acc[..n];
+            for i in 0..b.len as usize {
+                let m = st.planes[b.start as usize + i];
+                let mut carry = [0u32; WORDS];
+                for j in 0..(a.len as usize).min(n - i) {
+                    let ad = and_words(&st.planes[a.start as usize + j], &m);
+                    let (s, c) = full_add(&acc[i + j], &ad, &carry);
+                    acc[i + j] = s;
+                    carry = c;
+                }
+                let mut k = i + a.len as usize;
+                while k < n && carry != [0u32; WORDS] {
+                    let (s, c) = full_add(&acc[k], &[0u32; WORDS], &carry);
+                    acc[k] = s;
+                    carry = c;
+                    k += 1;
+                }
+            }
+            for (j, p) in acc.iter().enumerate() {
+                st.planes[d.start as usize + j] = *p;
+            }
+        }
+        Opcode::Set => {
+            for i in 0..d.len as usize {
+                st.planes[d.start as usize + i] = [u32::MAX; WORDS];
+            }
+        }
+        Opcode::Reset => {
+            for i in 0..d.len as usize {
+                st.planes[d.start as usize + i] = [0u32; WORDS];
+            }
+        }
+        Opcode::Not => {
+            for i in 0..a.len as usize {
+                st.planes[d.start as usize + i] = not_words(&st.planes[a.start as usize + i]);
+            }
+        }
+        Opcode::And | Opcode::Or => {
+            let b = instr.src_b.expect("and/or");
+            let broadcast = b.len == 1 && a.len > 1;
+            for i in 0..a.len as usize {
+                let pb = if broadcast {
+                    st.planes[b.start as usize]
+                } else {
+                    plane_or_zero(st, b, i)
+                };
+                let pa = st.planes[a.start as usize + i];
+                st.planes[d.start as usize + i] = if instr.op == Opcode::And {
+                    and_words(&pa, &pb)
+                } else {
+                    or_words(&pa, &pb)
+                };
+            }
+        }
+        Opcode::ReduceSum => {
+            let mut sum: u128 = 0;
+            for i in 0..a.len as usize {
+                let pc: u64 = st.planes[a.start as usize + i]
+                    .iter()
+                    .map(|w| w.count_ones() as u64)
+                    .sum();
+                sum += (pc as u128) << i;
+            }
+            reduce_out.push(sum);
+        }
+        Opcode::ReduceMin | Opcode::ReduceMax => {
+            let is_min = instr.op == Opcode::ReduceMin;
+            let mut cand = [u32::MAX; WORDS];
+            let mut val: u128 = 0;
+            for j in (0..a.len as usize).rev() {
+                let p = st.planes[a.start as usize + j];
+                let narrowed = if is_min {
+                    and_words(&cand, &not_words(&p))
+                } else {
+                    and_words(&cand, &p)
+                };
+                let have = narrowed.iter().any(|&w| w != 0);
+                if have {
+                    cand = narrowed;
+                    if !is_min {
+                        val |= 1 << j;
+                    }
+                } else if is_min {
+                    val |= 1 << j;
+                }
+            }
+            reduce_out.push(val);
+        }
+        Opcode::ColumnTransform => {
+            // data movement only; the mask column value is preserved
+        }
+    }
+}
+
+/// Run a program's steps over a crossbar batch (native engine).
+pub fn exec_steps_native(states: &mut [XbarState], steps: &[Step], mask_col: usize) -> ExecOutputs {
+    let n_reduces = steps
+        .iter()
+        .filter(|s| {
+            matches!(
+                s.instr.op,
+                Opcode::ReduceSum | Opcode::ReduceMin | Opcode::ReduceMax
+            )
+        })
+        .count();
+    let mut reduces = vec![Vec::with_capacity(states.len()); n_reduces];
+    let mut mask_counts = Vec::with_capacity(states.len());
+    for st in states.iter_mut() {
+        let mut out = Vec::with_capacity(n_reduces);
+        for step in steps {
+            exec_instr(st, &step.instr, &mut out);
+        }
+        for (i, v) in out.into_iter().enumerate() {
+            reduces[i].push(v);
+        }
+        mask_counts.push(st.popcount_col(mask_col));
+    }
+    ExecOutputs {
+        reduces,
+        mask_counts,
+    }
+}
+
+// --- word helpers -----------------------------------------------------------
+
+#[inline]
+fn not_words(a: &[u32; WORDS]) -> [u32; WORDS] {
+    let mut r = [0u32; WORDS];
+    for i in 0..WORDS {
+        r[i] = !a[i];
+    }
+    r
+}
+
+#[inline]
+fn and_words(a: &[u32; WORDS], b: &[u32; WORDS]) -> [u32; WORDS] {
+    let mut r = [0u32; WORDS];
+    for i in 0..WORDS {
+        r[i] = a[i] & b[i];
+    }
+    r
+}
+
+#[inline]
+fn or_words(a: &[u32; WORDS], b: &[u32; WORDS]) -> [u32; WORDS] {
+    let mut r = [0u32; WORDS];
+    for i in 0..WORDS {
+        r[i] = a[i] | b[i];
+    }
+    r
+}
+
+#[inline]
+fn full_add(
+    a: &[u32; WORDS],
+    b: &[u32; WORDS],
+    c: &[u32; WORDS],
+) -> ([u32; WORDS], [u32; WORDS]) {
+    let mut s = [0u32; WORDS];
+    let mut co = [0u32; WORDS];
+    for i in 0..WORDS {
+        let axb = a[i] ^ b[i];
+        s[i] = axb ^ c[i];
+        co[i] = (a[i] & b[i]) | (c[i] & axb);
+    }
+    (s, co)
+}
+
+#[inline]
+fn plane_or_zero(st: &XbarState, r: ColRange, i: usize) -> [u32; WORDS] {
+    if i < r.len as usize {
+        st.planes[r.start as usize + i]
+    } else {
+        [0u32; WORDS]
+    }
+}
+
+/// MSB-first compare of an attribute range against an immediate.
+fn cmp_imm_planes(st: &XbarState, a: ColRange, imm: u64) -> ([u32; WORDS], [u32; WORDS]) {
+    let mut eq = [u32::MAX; WORDS];
+    let mut lt = [0u32; WORDS];
+    for i in (0..a.len as usize).rev() {
+        let p = st.planes[a.start as usize + i];
+        let bit = (imm >> i) & 1;
+        for w in 0..WORDS {
+            if bit == 1 {
+                lt[w] |= eq[w] & !p[w];
+                eq[w] &= p[w];
+            } else {
+                eq[w] &= !p[w];
+            }
+        }
+    }
+    (eq, lt)
+}
+
+fn cmp_cols_planes(st: &XbarState, a: ColRange, b: ColRange) -> ([u32; WORDS], [u32; WORDS]) {
+    let mut eq = [u32::MAX; WORDS];
+    let mut lt = [0u32; WORDS];
+    for i in (0..a.len as usize).rev() {
+        let pa = st.planes[a.start as usize + i];
+        let pb = plane_or_zero(st, b, i);
+        for w in 0..WORDS {
+            lt[w] |= eq[w] & !pa[w] & pb[w];
+            eq[w] &= !(pa[w] ^ pb[w]);
+        }
+    }
+    (eq, lt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::endurance::OpCategory;
+    use crate::util::proptest::check;
+
+    fn step(instr: PimInstruction) -> Step {
+        Step {
+            instr,
+            category: OpCategory::Filter,
+        }
+    }
+
+    fn load_values(vals: &[u64], start: usize, bits: usize, st: &mut XbarState) {
+        for (row, &v) in vals.iter().enumerate() {
+            for b in 0..bits {
+                if (v >> b) & 1 == 1 {
+                    st.set_bit(start + b, row, true);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cmp_imm_all_ops() {
+        check("engine-cmp-imm", 40, |g| {
+            let bits = g.usize(1, 24);
+            let vals = g.vec_u64(64, 0, (1 << bits) - 1);
+            let imm = *g.pick(&vals); // guarantee eq hits
+            let mut st = XbarState::new(64);
+            load_values(&vals, 0, bits, &mut st);
+            let a = ColRange::new(0, bits);
+            for (op, oracle) in [
+                (Opcode::EqImm, Box::new(|v: u64| v == imm) as Box<dyn Fn(u64) -> bool>),
+                (Opcode::NeImm, Box::new(|v| v != imm)),
+                (Opcode::LtImm, Box::new(|v| v < imm)),
+                (Opcode::GtImm, Box::new(|v| v > imm)),
+            ] {
+                let mut out = Vec::new();
+                exec_instr(
+                    &mut st,
+                    &PimInstruction::with_imm(op, a, ColRange::new(40, 1), imm),
+                    &mut out,
+                );
+                for (row, &v) in vals.iter().enumerate() {
+                    assert_eq!(
+                        st.value_at(row, ColRange::new(40, 1)) == 1,
+                        oracle(v),
+                        "{op:?} row {row} v {v} imm {imm}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn add_mul_match_integer_semantics() {
+        check("engine-arith", 30, |g| {
+            let bits = g.usize(1, 16);
+            let a_vals = g.vec_u64(100, 0, (1 << bits) - 1);
+            let b_vals = g.vec_u64(100, 0, (1 << bits) - 1);
+            let mut st = XbarState::new(128);
+            load_values(&a_vals, 0, bits, &mut st);
+            let b_start = 20;
+            load_values(&b_vals, b_start, bits, &mut st);
+            // Add into 2n-wide dst
+            let dst = ColRange::new(44, bits + 1);
+            let mut out = Vec::new();
+            exec_instr(
+                &mut st,
+                &PimInstruction::binary(
+                    Opcode::Add,
+                    ColRange::new(0, bits),
+                    ColRange::new(b_start, bits),
+                    dst,
+                ),
+                &mut out,
+            );
+            for row in 0..100 {
+                assert_eq!(st.value_at(row, dst), a_vals[row] + b_vals[row]);
+            }
+            // Mul into (n+m)-wide dst
+            let dstm = ColRange::new(70, 2 * bits);
+            exec_instr(
+                &mut st,
+                &PimInstruction::binary(
+                    Opcode::Mul,
+                    ColRange::new(0, bits),
+                    ColRange::new(b_start, bits),
+                    dstm,
+                ),
+                &mut out,
+            );
+            for row in 0..100 {
+                assert_eq!(st.value_at(row, dstm), a_vals[row] * b_vals[row]);
+            }
+        });
+    }
+
+    #[test]
+    fn and_broadcast_masks_values() {
+        let vals: Vec<u64> = (0..64).map(|i| i * 3 + 1).collect();
+        let mut st = XbarState::new(64);
+        load_values(&vals, 0, 10, &mut st);
+        // mask column: even rows selected
+        for row in (0..64).step_by(2) {
+            st.set_bit(30, row, true);
+        }
+        let mut out = Vec::new();
+        exec_instr(
+            &mut st,
+            &PimInstruction::binary(
+                Opcode::And,
+                ColRange::new(0, 10),
+                ColRange::new(30, 1),
+                ColRange::new(40, 10),
+            ),
+            &mut out,
+        );
+        for (row, &v) in vals.iter().enumerate() {
+            let want = if row % 2 == 0 { v } else { 0 };
+            assert_eq!(st.value_at(row, ColRange::new(40, 10)), want);
+        }
+    }
+
+    #[test]
+    fn reduce_sum_counts_masked_values() {
+        let vals: Vec<u64> = (0..200).map(|i| i as u64).collect();
+        let mut st = XbarState::new(64);
+        load_values(&vals, 0, 9, &mut st);
+        let mut out = Vec::new();
+        exec_instr(
+            &mut st,
+            &PimInstruction::unary(
+                Opcode::ReduceSum,
+                ColRange::new(0, 9),
+                ColRange::new(0, 9),
+            ),
+            &mut out,
+        );
+        assert_eq!(out[0], (0..200u128).sum());
+    }
+
+    #[test]
+    fn reduce_min_max() {
+        check("engine-minmax", 20, |g| {
+            let vals = g.vec_u64(300, 1, 1 << 20);
+            let mut st = XbarState::new(64);
+            load_values(&vals, 0, 21, &mut st);
+            // unoccupied rows (300..1024) are zero -> min must see them;
+            // emulate the compiler's MIN adjustment by OR-ing all-ones into
+            // empty rows: here just check MAX (zeros are identity)
+            let mut out = Vec::new();
+            exec_instr(
+                &mut st,
+                &PimInstruction::unary(
+                    Opcode::ReduceMax,
+                    ColRange::new(0, 21),
+                    ColRange::new(0, 21),
+                ),
+                &mut out,
+            );
+            assert_eq!(out[0], *vals.iter().max().unwrap() as u128);
+        });
+    }
+
+    #[test]
+    fn exec_steps_collects_reduces_per_xbar() {
+        let mut states = vec![XbarState::new(32), XbarState::new(32)];
+        load_values(&[1, 2, 3], 0, 4, &mut states[0]);
+        load_values(&[10, 20], 0, 6, &mut states[1]);
+        let steps = vec![
+            step(PimInstruction::unary(
+                Opcode::Set,
+                ColRange::new(20, 1),
+                ColRange::new(20, 1),
+            )),
+            step(PimInstruction::unary(
+                Opcode::ReduceSum,
+                ColRange::new(0, 8),
+                ColRange::new(0, 8),
+            )),
+        ];
+        let out = exec_steps_native(&mut states, &steps, 20);
+        assert_eq!(out.reduces[0], vec![6, 30]);
+        assert_eq!(out.combined(0), 36);
+        assert_eq!(out.mask_counts, vec![1024, 1024]); // Set column
+    }
+}

@@ -1,0 +1,114 @@
+//! Execution reports: timing breakdown, memory-system counters, energy,
+//! power, endurance — everything Figures 8–15 and Tables 5–6 consume.
+
+use crate::pim::endurance::OpCategory;
+use crate::pim::energy::EnergyLedger;
+
+/// Per-category stateful-logic cycles on a single crossbar (Table 5).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CycleCounts {
+    pub filter: u64,
+    pub arith: u64,
+    pub col_transform: u64,
+    pub agg_col: u64,
+    pub agg_row: u64,
+}
+
+impl CycleCounts {
+    pub fn total(&self) -> u64 {
+        self.filter + self.arith + self.col_transform + self.agg_col + self.agg_row
+    }
+
+    pub fn add(&mut self, cat: OpCategory, cycles: u64) {
+        match cat {
+            OpCategory::Filter => self.filter += cycles,
+            OpCategory::Arith => self.arith += cycles,
+            OpCategory::ColTransform => self.col_transform += cycles,
+            OpCategory::AggCol => self.agg_col += cycles,
+            OpCategory::AggRow => self.agg_row += cycles,
+        }
+    }
+}
+
+/// Metrics of one query execution (PIMDB or baseline), at the report SF.
+#[derive(Clone, Debug, Default)]
+pub struct QueryMetrics {
+    pub exec_time_s: f64,
+    /// PIMDB breakdown (Fig. 9); zero for the baseline.
+    pub pim_time_s: f64,
+    pub read_time_s: f64,
+    pub other_time_s: f64,
+    /// LLC misses (Fig. 8's second axis).
+    pub llc_misses: u64,
+    /// Energy components (Figs. 11–12), pJ.
+    pub host_energy_pj: f64,
+    pub dram_energy_pj: f64,
+    pub pim_energy: EnergyLedger,
+    /// Per-crossbar cycle counts by category (Table 5).
+    pub cycles: CycleCounts,
+    /// Peak intermediate cells (Table 5).
+    pub inter_cells: usize,
+    /// Chip power (Fig. 14), W.
+    pub peak_chip_w: f64,
+    pub avg_chip_w: f64,
+    pub theoretical_chip_w: f64,
+    /// Endurance (Fig. 15, Table 6).
+    pub ops_per_cell: f64,
+    pub required_endurance_10yr: f64,
+    pub endurance_breakdown: [f64; 5],
+}
+
+impl QueryMetrics {
+    pub fn total_energy_pj(&self) -> f64 {
+        self.host_energy_pj + self.dram_energy_pj + self.pim_energy.total_pj()
+    }
+}
+
+/// Functional result of one query (for PIMDB-vs-baseline equivalence).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct QueryOutput {
+    /// Selected records per relation (filter results).
+    pub selected: Vec<(&'static str, u64)>,
+    /// Aggregate rows: (group label, values as (label, value)).
+    pub groups: Vec<GroupOutput>,
+}
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct GroupOutput {
+    pub key: Vec<(&'static str, u64)>,
+    pub values: Vec<(&'static str, f64)>,
+    pub count: u64,
+}
+
+/// One engine's full report.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub query: &'static str,
+    pub metrics: QueryMetrics,
+    pub output: QueryOutput,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycle_counts_accumulate_by_category() {
+        let mut c = CycleCounts::default();
+        c.add(OpCategory::Filter, 10);
+        c.add(OpCategory::AggRow, 5);
+        c.add(OpCategory::Filter, 1);
+        assert_eq!(c.filter, 11);
+        assert_eq!(c.agg_row, 5);
+        assert_eq!(c.total(), 16);
+    }
+
+    #[test]
+    fn total_energy_sums_components() {
+        let mut m = QueryMetrics::default();
+        m.host_energy_pj = 1.0;
+        m.dram_energy_pj = 2.0;
+        m.pim_energy.logic_pj = 3.0;
+        assert!((m.total_energy_pj() - 6.0).abs() < 1e-12);
+    }
+}

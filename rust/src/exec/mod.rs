@@ -1,0 +1,8 @@
+//! Execution engines: the PIMDB engine (functional crossbar interpreter +
+//! full-system timing/energy simulation) and the in-memory column-store
+//! baseline it is compared against (paper §5.4–§5.5).
+
+pub mod baseline;
+pub mod engine;
+pub mod metrics;
+pub mod pimdb;

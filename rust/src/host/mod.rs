@@ -1,0 +1,5 @@
+//! Host processor models: an analytic out-of-order core timing model and
+//! an activity-based power model (McPAT substitute).
+
+pub mod core;
+pub mod power;

@@ -1,0 +1,35 @@
+//! Activity-based host power model (McPAT substitute, paper §6.3).
+//!
+//! Host energy = busy-core energy + uncore/idle energy over the span.
+//! With PIMDB the host mostly issues memory operations (light arithmetic),
+//! so its energy share is small (paper Fig. 12) — the model only needs to
+//! preserve that ordering.
+
+use crate::config::SystemConfig;
+
+/// Host energy for a run (pJ).
+pub fn host_energy_pj(cfg: &SystemConfig, span_s: f64, core_busy_s: f64, cores: usize) -> f64 {
+    let busy = cfg.core_active_w * core_busy_s * cores.min(cfg.exec_threads.max(cores)) as f64;
+    let idle = cfg.host_idle_w * span_s;
+    (busy + idle) * 1e12
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_floor_always_present() {
+        let cfg = SystemConfig::default();
+        let e = host_energy_pj(&cfg, 1.0, 0.0, 0);
+        assert!((e - cfg.host_idle_w * 1e12).abs() < 1e-3);
+    }
+
+    #[test]
+    fn busy_cores_add_energy() {
+        let cfg = SystemConfig::default();
+        let idle = host_energy_pj(&cfg, 1.0, 0.0, 0);
+        let busy = host_energy_pj(&cfg, 1.0, 1.0, 4);
+        assert!(busy > idle);
+    }
+}

@@ -1,0 +1,39 @@
+//! # PIMDB — bulk-bitwise processing-in-memory for database analytics
+//!
+//! A full-system reproduction of *"Understanding Bulk-Bitwise Processing
+//! In-Memory Through Database Analytics"* (Perach, Ronen, Kimelfeld,
+//! Kvatinsky — IEEE TETC 2022): a memristive stateful-logic (MAGIC NOR)
+//! PIM architecture accelerating TPC-H filter and aggregation, compared
+//! against an in-memory column-store baseline on the same modelled host.
+//!
+//! The crate is the Layer-3 coordinator of a three-layer Rust + JAX +
+//! Pallas stack (see DESIGN.md): the *functional* value of every PIM
+//! instruction can be computed by AOT-compiled XLA executables (lowered
+//! from Pallas bit-plane kernels, loaded via PJRT in [`runtime`]), while
+//! the *timing/energy/endurance* behaviour comes from the hardware models
+//! in [`pim`], [`mem`] and [`host`].
+//!
+//! Modules:
+//! * [`pim`] — PIM module hardware model: crossbars, controller FSM
+//!   (Table 4), media controller + FR-FCFS, energy/endurance/area/power.
+//! * [`mem`] — host memory substrate: address mapping (Fig. 3), huge
+//!   pages, L1/L2 cache model, DDR4 DRAM model.
+//! * [`host`] — analytic out-of-order core and host power models.
+//! * [`db`] — TPC-H substrate: schema, generator, encodings, PIM layout.
+//! * [`query`] — filter/aggregate AST, the 19 evaluated TPC-H queries,
+//!   compiler to PIM request programs.
+//! * [`exec`] — the PIMDB engine and the in-memory column-store baseline.
+//! * [`runtime`] — PJRT CPU client running the AOT kernel artifacts.
+//! * [`report`] — regenerates every evaluation table and figure.
+
+pub mod cli;
+pub mod config;
+pub mod db;
+pub mod exec;
+pub mod host;
+pub mod mem;
+pub mod pim;
+pub mod query;
+pub mod report;
+pub mod runtime;
+pub mod util;

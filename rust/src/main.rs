@@ -1,0 +1,210 @@
+//! PIMDB command-line entrypoint (Layer-3 leader).
+//!
+//! `pimdb run --query Q6` executes one TPC-H query on the PIMDB engine
+//! (native or PJRT functional backend) and prints the result plus the full
+//! metric set; `pimdb report --exp figN/tableN` regenerates the paper's
+//! evaluation artifacts. See `pimdb help`.
+
+use pimdb::cli::{Args, USAGE};
+use pimdb::db::dbgen::Database;
+use pimdb::db::schema::PIM_RELATIONS;
+use pimdb::exec::{baseline, pimdb as engine};
+use pimdb::mem::addr::AddressMap;
+use pimdb::pim::controller::cost;
+use pimdb::pim::isa::{ColRange, Opcode, PimInstruction};
+use pimdb::query::tpch;
+use pimdb::report;
+use pimdb::util::stats::eng;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<(), String> {
+    match args.command.as_str() {
+        "run" => cmd_run(args),
+        "report" => cmd_report(args),
+        "gen-data" => cmd_gen_data(args),
+        "addrmap" => cmd_addrmap(),
+        "inspect" => cmd_inspect(args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'\n\n{USAGE}")),
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<(), String> {
+    let cfg = args.build_config()?;
+    let name = args.get("query").ok_or("run needs --query")?;
+    let q = tpch::query(name).ok_or_else(|| format!("unknown query '{name}'"))?;
+    let seed = args.parse_u64("seed")?.unwrap_or(42);
+    let db = Database::generate(cfg.sim_sf, seed);
+    let engine_kind = args.engine()?;
+
+    let t0 = std::time::Instant::now();
+    let r = engine::run_query(&cfg, &db, &q, engine_kind)?;
+    let wall = t0.elapsed();
+
+    println!("query {} [{:?} engine], sim SF={}, report SF={}", r.query, engine_kind, cfg.sim_sf, cfg.report_sf);
+    for (rel, n) in &r.output.selected {
+        println!("  {rel}: {n} records pass the filter (sim scale)");
+    }
+    for g in &r.output.groups {
+        let key: Vec<String> = g.key.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        println!("  group [{}] count={}", key.join(","), g.count);
+        for (label, v) in &g.values {
+            println!("    {label} = {v}");
+        }
+    }
+    let m = &r.metrics;
+    println!("-- modelled at SF={} --", cfg.report_sf);
+    println!("  exec time      {}s (pim {}s, read {}s, other {}s)",
+        eng(m.exec_time_s), eng(m.pim_time_s), eng(m.read_time_s), eng(m.other_time_s));
+    println!("  llc misses     {}", m.llc_misses);
+    println!("  energy         {}J (host {}J, dram {}J, pim {}J)",
+        eng(m.total_energy_pj() * 1e-12),
+        eng(m.host_energy_pj * 1e-12),
+        eng(m.dram_energy_pj * 1e-12),
+        eng(m.pim_energy.total_pj() * 1e-12));
+    println!("  cycles/xbar    filter {} arith {} coltrans {} agg {}/{}",
+        m.cycles.filter, m.cycles.arith, m.cycles.col_transform,
+        m.cycles.agg_col, m.cycles.agg_row);
+    println!("  chip power     peak {:.2} W, avg {:.3} W, theoretical {:.0} W",
+        m.peak_chip_w, m.avg_chip_w, m.theoretical_chip_w);
+    println!("  endurance      {:.4} ops/cell/exec, 10yr {}",
+        m.ops_per_cell, eng(m.required_endurance_10yr));
+    println!("  (host wall-clock for this simulation: {:.2?})", wall);
+
+    if args.has("baseline") {
+        let b = baseline::run_query(&cfg, &db, &q);
+        println!("-- baseline (in-memory column store) --");
+        println!("  exec time      {}s", eng(b.metrics.exec_time_s));
+        println!("  llc misses     {}", b.metrics.llc_misses);
+        println!("  energy         {}J", eng(b.metrics.total_energy_pj() * 1e-12));
+        println!("  speedup        {:.2}x", b.metrics.exec_time_s / m.exec_time_s);
+        println!("  llc reduction  {:.2}x", b.metrics.llc_misses as f64 / m.llc_misses.max(1) as f64);
+        println!("  energy saving  {:.2}x", b.metrics.total_energy_pj() / m.total_energy_pj());
+        if b.output != r.output {
+            println!("  WARNING: functional outputs differ between engines!");
+        } else {
+            println!("  functional outputs match the baseline");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<(), String> {
+    let cfg = args.build_config()?;
+    let exp = args.get_or("exp", "all").to_string();
+    let engine_kind = args.engine()?;
+    let ids: Vec<&str> = if exp == "all" {
+        report::EXPERIMENTS.to_vec()
+    } else {
+        vec![exp.as_str()]
+    };
+    let needs_runs = ids.iter().any(|e| report::needs_runs(e));
+    let exps = if needs_runs {
+        eprintln!(
+            "running all 19 queries on PIMDB + baseline (sim SF={}) ...",
+            cfg.sim_sf
+        );
+        Some(report::Experiments::run(&cfg, engine_kind)?)
+    } else {
+        None
+    };
+    for id in ids {
+        report::print_experiment(id, &cfg, exps.as_ref())?;
+        println!();
+    }
+    Ok(())
+}
+
+fn cmd_gen_data(args: &Args) -> Result<(), String> {
+    let cfg = args.build_config()?;
+    let seed = args.parse_u64("seed")?.unwrap_or(42);
+    let t0 = std::time::Instant::now();
+    let db = Database::generate(cfg.sim_sf, seed);
+    println!("TPC-H data at SF={} (seed {seed}), generated in {:.2?}:", cfg.sim_sf, t0.elapsed());
+    for rel in PIM_RELATIONS {
+        let r = db.rel(rel);
+        println!(
+            "  {:<10} {:>10} records, {:>2} columns",
+            rel.name(),
+            r.records,
+            r.column_names().len()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_addrmap() -> Result<(), String> {
+    let m = AddressMap::paper_default();
+    println!("Fig. 3 physical-address/cell mapping (1 GB pages, 1024x512 crossbars):");
+    for (name, shift, width) in m.fields() {
+        println!("  bits [{:>2}..{:>2}) {name}", shift, shift + width);
+    }
+    println!(
+        "{} crossbars/page, {} rows, {} crossbars per 64 B line access",
+        m.xbars_per_page(),
+        m.rows(),
+        m.xbars_per_line()
+    );
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<(), String> {
+    let n = args.parse_u64("n")?.unwrap_or(32) as usize;
+    let imm = args.parse_u64("imm")?.unwrap_or(0xF0F0_F0F0);
+    let op_name = args.get_or("op", "all");
+    let a = ColRange::new(0, n);
+    let b = ColRange::new(64, n);
+    let d = ColRange::new(128, 1);
+    let all: Vec<(&str, PimInstruction)> = vec![
+        ("eq_imm", PimInstruction::with_imm(Opcode::EqImm, a, d, imm)),
+        ("ne_imm", PimInstruction::with_imm(Opcode::NeImm, a, d, imm)),
+        ("lt_imm", PimInstruction::with_imm(Opcode::LtImm, a, d, imm)),
+        ("gt_imm", PimInstruction::with_imm(Opcode::GtImm, a, d, imm)),
+        ("add_imm", PimInstruction::with_imm(Opcode::AddImm, a, a, imm)),
+        ("eq", PimInstruction::binary(Opcode::Eq, a, b, d)),
+        ("lt", PimInstruction::binary(Opcode::Lt, a, b, d)),
+        ("set", PimInstruction::unary(Opcode::Set, a, a)),
+        ("not", PimInstruction::unary(Opcode::Not, a, a)),
+        ("and", PimInstruction::binary(Opcode::And, a, b, a)),
+        ("or", PimInstruction::binary(Opcode::Or, a, b, a)),
+        ("add", PimInstruction::binary(Opcode::Add, a, b, a)),
+        ("mul", PimInstruction::binary(Opcode::Mul, a, b, a)),
+        ("reduce_sum", PimInstruction::unary(Opcode::ReduceSum, a, a)),
+        ("reduce_min", PimInstruction::unary(Opcode::ReduceMin, a, a)),
+        ("column_transform", PimInstruction::unary(Opcode::ColumnTransform, d, d)),
+    ];
+    println!("instruction costs (n={n}, imm={imm:#x}, 1024-row crossbar):");
+    for (name, i) in all {
+        if op_name != "all" && op_name != name {
+            continue;
+        }
+        let c = cost(&i, 1024);
+        println!(
+            "  {:<18} {:>8} cycles ({} col + {} row), {} intermediate cells, {} us at 30ns",
+            name,
+            c.total_cycles(),
+            c.col_cycles,
+            c.row_cycles,
+            c.intermediate_cells,
+            c.total_cycles() as f64 * 0.03
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,249 @@
+//! Physical-address ↔ memory-cell mapping (paper Fig. 3).
+//!
+//! The programming model reveals which page-offset bits select the crossbar
+//! index, the crossbar row, and the crossbar column, so user software can
+//! target individual cells with loads/stores/PIM requests. The fields are
+//! not consecutive: a 64-byte cache-line access retrieves 16 bits from each
+//! of 32 crossbars (paper Table 3: crossbar read = 16 bits), which fixes
+//! the low-order interleave.
+//!
+//! Default layout for 1 GB pages and 1024x512 crossbars (LSB -> MSB):
+//!
+//! ```text
+//!   bit  0      : byte within the 16-bit crossbar read unit
+//!   bits 1..=5  : crossbar index low  (32 crossbars per line access)
+//!   bits 6..=10 : 16-bit unit within the crossbar row (512/16 = 32)
+//!   bits 11..=20: crossbar row (1024)
+//!   bits 21..=29: crossbar index high (total crossbar bits = 14 -> 16384)
+//! ```
+
+/// Location of a byte inside a huge-page, in crossbar coordinates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CellAddr {
+    pub xbar: usize,
+    pub row: usize,
+    /// Bit column of the first bit of the addressed byte (0..512).
+    pub col: usize,
+}
+
+/// Bit-field description: (name, shift, width).
+pub type Field = (&'static str, u32, u32);
+
+#[derive(Clone, Debug)]
+pub struct AddressMap {
+    page_bits: u32,
+    xbar_lo_shift: u32,
+    xbar_lo_bits: u32,
+    unit_shift: u32,
+    unit_bits: u32,
+    row_shift: u32,
+    row_bits: u32,
+    xbar_hi_shift: u32,
+    xbar_hi_bits: u32,
+    read_unit_bits: u32, // bits fetched per crossbar per access (16)
+}
+
+impl AddressMap {
+    /// The paper's configuration: 1 GB pages, 1024x512 crossbars, 16-bit
+    /// crossbar reads, 64 B cache lines touching 32 crossbars.
+    pub fn paper_default() -> Self {
+        AddressMap {
+            page_bits: 30,
+            xbar_lo_shift: 1,
+            xbar_lo_bits: 5,
+            unit_shift: 6,
+            unit_bits: 5,
+            row_shift: 11,
+            row_bits: 10,
+            xbar_hi_shift: 21,
+            xbar_hi_bits: 9,
+            read_unit_bits: 16,
+        }
+    }
+
+    /// Derive a map for arbitrary geometry (rows/cols must be powers of 2).
+    pub fn for_geometry(page_bytes: u64, rows: usize, cols: usize, read_bits: usize) -> Self {
+        assert!(rows.is_power_of_two() && cols.is_power_of_two());
+        assert!(page_bytes.is_power_of_two());
+        let page_bits = page_bytes.trailing_zeros();
+        let unit_bytes_bits = (read_bits / 8).trailing_zeros(); // bytes within unit
+        let units = cols / read_bits;
+        let unit_bits = units.trailing_zeros();
+        let row_bits = rows.trailing_zeros();
+        let xbar_bits =
+            page_bits - unit_bytes_bits - unit_bits - row_bits;
+        let xbar_lo_bits = xbar_bits.min(5);
+        let xbar_hi_bits = xbar_bits - xbar_lo_bits;
+        let xbar_lo_shift = unit_bytes_bits;
+        let unit_shift = xbar_lo_shift + xbar_lo_bits;
+        let row_shift = unit_shift + unit_bits;
+        let xbar_hi_shift = row_shift + row_bits;
+        AddressMap {
+            page_bits,
+            xbar_lo_shift,
+            xbar_lo_bits,
+            unit_shift,
+            unit_bits,
+            row_shift,
+            row_bits,
+            xbar_hi_shift,
+            xbar_hi_bits,
+            read_unit_bits: read_bits as u32,
+        }
+    }
+
+    pub fn page_bytes(&self) -> u64 {
+        1u64 << self.page_bits
+    }
+
+    pub fn xbars_per_page(&self) -> usize {
+        1usize << (self.xbar_lo_bits + self.xbar_hi_bits)
+    }
+
+    pub fn rows(&self) -> usize {
+        1usize << self.row_bits
+    }
+
+    /// Crossbars touched by one cache-line (64 B) access.
+    pub fn xbars_per_line(&self) -> usize {
+        1usize << self.xbar_lo_bits
+    }
+
+    fn mask(bits: u32) -> u64 {
+        (1u64 << bits) - 1
+    }
+
+    /// Decode a page offset into crossbar coordinates.
+    pub fn decode(&self, offset: u64) -> CellAddr {
+        debug_assert!(offset < self.page_bytes());
+        let byte = offset & Self::mask(self.xbar_lo_shift);
+        let xlo = (offset >> self.xbar_lo_shift) & Self::mask(self.xbar_lo_bits);
+        let unit = (offset >> self.unit_shift) & Self::mask(self.unit_bits);
+        let row = (offset >> self.row_shift) & Self::mask(self.row_bits);
+        let xhi = (offset >> self.xbar_hi_shift) & Self::mask(self.xbar_hi_bits);
+        CellAddr {
+            xbar: ((xhi << self.xbar_lo_bits) | xlo) as usize,
+            row: row as usize,
+            col: (unit as usize) * self.read_unit_bits as usize + (byte as usize) * 8,
+        }
+    }
+
+    /// Encode crossbar coordinates into a page offset (col in bits, must be
+    /// byte-aligned).
+    pub fn encode(&self, xbar: usize, row: usize, col: usize) -> u64 {
+        debug_assert_eq!(col % 8, 0, "addressable cells are byte-aligned");
+        let unit = (col / self.read_unit_bits as usize) as u64;
+        let byte = ((col % self.read_unit_bits as usize) / 8) as u64;
+        let xlo = (xbar as u64) & Self::mask(self.xbar_lo_bits);
+        let xhi = (xbar as u64) >> self.xbar_lo_bits;
+        byte | (xlo << self.xbar_lo_shift)
+            | (unit << self.unit_shift)
+            | ((row as u64) << self.row_shift)
+            | (xhi << self.xbar_hi_shift)
+    }
+
+    /// Offset for a (row, column) cell with crossbar index 0 — PIM requests
+    /// target all crossbars of a page, so the crossbar field is ignored
+    /// (paper §3.1 "PIM requests").
+    pub fn encode_cell_offset(&self, row: usize, col: usize) -> u64 {
+        // PIM request result columns need bit, not byte, granularity: use
+        // the unit field plus the byte bit for col/8; sub-byte position is
+        // carried redundantly in the payload.
+        self.encode(0, row, col & !7)
+    }
+
+    /// Inverse of [`encode_cell_offset`]: (row, col) with col rounded to
+    /// its byte boundary; the payload supplies the exact bit.
+    pub fn decode_cell_offset(&self, offset: u64) -> (usize, usize) {
+        let c = self.decode(offset);
+        (c.row, c.col)
+    }
+
+    /// Field layout for display (Fig. 3 reproduction).
+    pub fn fields(&self) -> Vec<Field> {
+        vec![
+            ("byte-in-unit", 0, self.xbar_lo_shift),
+            ("xbar-lo", self.xbar_lo_shift, self.xbar_lo_bits),
+            ("unit-in-row", self.unit_shift, self.unit_bits),
+            ("row", self.row_shift, self.row_bits),
+            ("xbar-hi", self.xbar_hi_shift, self.xbar_hi_bits),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn paper_default_geometry() {
+        let m = AddressMap::paper_default();
+        assert_eq!(m.page_bytes(), 1 << 30);
+        assert_eq!(m.xbars_per_page(), 16384);
+        assert_eq!(m.rows(), 1024);
+        assert_eq!(m.xbars_per_line(), 32);
+    }
+
+    #[test]
+    fn for_geometry_matches_paper_default() {
+        let m = AddressMap::for_geometry(1 << 30, 1024, 512, 16);
+        let d = AddressMap::paper_default();
+        assert_eq!(m.xbars_per_page(), d.xbars_per_page());
+        assert_eq!(m.rows(), d.rows());
+        assert_eq!(m.xbars_per_line(), d.xbars_per_line());
+    }
+
+    #[test]
+    fn encode_decode_bijective_property() {
+        let m = AddressMap::paper_default();
+        check("addr-roundtrip", 500, |g| {
+            let xbar = g.usize(0, 16383);
+            let row = g.usize(0, 1023);
+            let col = g.usize(0, 63) * 8; // byte-aligned bit column
+            let off = m.encode(xbar, row, col);
+            assert!(off < m.page_bytes());
+            let c = m.decode(off);
+            assert_eq!((c.xbar, c.row, c.col), (xbar, row, col));
+        });
+    }
+
+    #[test]
+    fn offsets_are_unique() {
+        // all (xbar, row, col) combos at coarse stride map to distinct offsets
+        let m = AddressMap::for_geometry(1 << 20, 64, 128, 16);
+        let mut seen = std::collections::HashSet::new();
+        for xbar in 0..m.xbars_per_page() {
+            for row in (0..64).step_by(7) {
+                for col in (0..128).step_by(8) {
+                    assert!(seen.insert(m.encode(xbar, row, col)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cache_line_touches_32_crossbars_16_bits_each() {
+        let m = AddressMap::paper_default();
+        let base = m.encode(0, 37, 16); // start of unit 1, row 37
+        let mut xbars = std::collections::HashSet::new();
+        for b in 0..64u64 {
+            let c = m.decode(base + b);
+            assert_eq!(c.row, 37);
+            xbars.insert(c.xbar);
+        }
+        assert_eq!(xbars.len(), 32);
+    }
+
+    #[test]
+    fn fields_cover_page_bits_disjointly() {
+        let m = AddressMap::paper_default();
+        let mut covered = 0u64;
+        for (_, shift, width) in m.fields() {
+            let mask = ((1u64 << width) - 1) << shift;
+            assert_eq!(covered & mask, 0, "field overlap");
+            covered |= mask;
+        }
+        assert_eq!(covered, (1u64 << 30) - 1);
+    }
+}

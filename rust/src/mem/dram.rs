@@ -1,0 +1,87 @@
+//! DDR4 main-memory timing/energy model (paper Table 3: 64 GB DDR4-2400,
+//! two channels; energy via the gem5 DRAM power model, which we substitute
+//! with per-byte transfer energy + standby power).
+
+use crate::config::SystemConfig;
+
+#[derive(Clone, Debug, Default)]
+pub struct DramStats {
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+}
+
+pub struct DramModel {
+    bw_bps: f64,
+    latency_ns: u64,
+    energy_pj_per_byte: f64,
+    standby_w: f64,
+    pub stats: DramStats,
+}
+
+impl DramModel {
+    pub fn new(cfg: &SystemConfig) -> Self {
+        DramModel {
+            bw_bps: cfg.dram_bw_bps,
+            latency_ns: cfg.dram_latency_ns,
+            energy_pj_per_byte: cfg.dram_energy_pj_per_byte,
+            standby_w: cfg.dram_standby_w,
+            stats: DramStats::default(),
+        }
+    }
+
+    pub fn record_read(&mut self, bytes: u64) {
+        self.stats.bytes_read += bytes;
+    }
+
+    pub fn record_write(&mut self, bytes: u64) {
+        self.stats.bytes_written += bytes;
+    }
+
+    /// Time to stream `bytes` at peak bandwidth (s).
+    pub fn stream_time_s(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.bw_bps
+    }
+
+    /// Latency of one demand miss (s).
+    pub fn miss_latency_s(&self) -> f64 {
+        self.latency_ns as f64 * 1e-9
+    }
+
+    /// Dynamic transfer energy so far (pJ).
+    pub fn dynamic_energy_pj(&self) -> f64 {
+        (self.stats.bytes_read + self.stats.bytes_written) as f64 * self.energy_pj_per_byte
+    }
+
+    /// Standby/background energy over a span (pJ).
+    pub fn standby_energy_pj(&self, span_s: f64) -> f64 {
+        self.standby_w * span_s * 1e12
+    }
+
+    /// Total energy for a run of `span_s` (pJ).
+    pub fn total_energy_pj(&self, span_s: f64) -> f64 {
+        self.dynamic_energy_pj() + self.standby_energy_pj(span_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_time_matches_bandwidth() {
+        let m = DramModel::new(&SystemConfig::default());
+        // 38.4 GB at 38.4 GB/s = 1 s
+        let t = m.stream_time_s(38_400_000_000);
+        assert!((t - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn energy_accumulates() {
+        let mut m = DramModel::new(&SystemConfig::default());
+        m.record_read(1000);
+        m.record_write(500);
+        assert!((m.dynamic_energy_pj() - 1500.0 * 20.0).abs() < 1e-9);
+        // standby dominates short transfers over long spans
+        assert!(m.standby_energy_pj(1.0) > m.dynamic_energy_pj());
+    }
+}

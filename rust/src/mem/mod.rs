@@ -1,0 +1,7 @@
+//! Host memory substrate: physical-address/cell mapping, huge-page virtual
+//! memory, cache hierarchy, and DRAM main memory models.
+
+pub mod addr;
+pub mod cache;
+pub mod dram;
+pub mod vm;

@@ -1,0 +1,131 @@
+//! Huge-page virtual memory for PIM data (paper §3.1).
+//!
+//! PIM operations are confined to a single huge-page; a data structure
+//! spanning pages receives one PIM request per page. The allocator assigns
+//! each huge-page to a single bank of a single module (paper §3.2),
+//! spreading consecutive pages across modules first (maximizing channel
+//! parallelism), then across banks.
+
+use crate::config::SystemConfig;
+use crate::pim::module::PageLoc;
+
+/// One allocated huge-page.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HugePage {
+    pub loc: PageLoc,
+    /// Virtual base address of the page.
+    pub vbase: u64,
+}
+
+/// System-wide huge-page allocator.
+pub struct PageAllocator {
+    modules: usize,
+    banks: usize,
+    pages_per_module: u64,
+    next_page: usize,
+    next_vbase: u64,
+    page_bytes: u64,
+    allocated_per_module: Vec<u64>,
+}
+
+impl PageAllocator {
+    pub fn new(cfg: &SystemConfig) -> Self {
+        PageAllocator {
+            modules: cfg.pim_modules,
+            banks: cfg.banks_per_module,
+            pages_per_module: cfg.module_capacity / cfg.page_bytes,
+            next_page: 0,
+            next_vbase: 0x4000_0000_0000, // arbitrary PIM VA region base
+            page_bytes: cfg.page_bytes,
+            allocated_per_module: vec![0; cfg.pim_modules],
+        }
+    }
+
+    /// Allocate `n` huge-pages for one data structure (relation).
+    /// Returns an error when PIM capacity is exhausted.
+    pub fn allocate(&mut self, n: usize) -> Result<Vec<HugePage>, String> {
+        let mut pages = Vec::with_capacity(n);
+        for _ in 0..n {
+            // round-robin module, then bank within module
+            let module = self.next_page % self.modules;
+            if self.allocated_per_module[module] >= self.pages_per_module {
+                return Err(format!(
+                    "PIM module {module} exhausted ({} pages)",
+                    self.pages_per_module
+                ));
+            }
+            let within = self.allocated_per_module[module];
+            let bank = (within as usize) % self.banks;
+            self.allocated_per_module[module] += 1;
+            let page = HugePage {
+                loc: PageLoc {
+                    module,
+                    bank,
+                    page: self.next_page,
+                },
+                vbase: self.next_vbase,
+            };
+            self.next_page += 1;
+            self.next_vbase += self.page_bytes;
+            pages.push(page);
+        }
+        Ok(pages)
+    }
+
+    pub fn pages_allocated(&self) -> usize {
+        self.next_page
+    }
+
+    /// Pages held by the busiest module (Fig. 14 theoretical peak input).
+    pub fn max_pages_in_module(&self) -> u64 {
+        self.allocated_per_module.iter().copied().max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pages_spread_across_modules_first() {
+        let cfg = SystemConfig::default();
+        let mut a = PageAllocator::new(&cfg);
+        let pages = a.allocate(16).unwrap();
+        let mods: std::collections::HashSet<_> =
+            pages.iter().map(|p| p.loc.module).collect();
+        assert_eq!(mods.len(), cfg.pim_modules); // all 8 modules used
+        // two pages per module land on different banks
+        assert_ne!(pages[0].loc.bank, pages[8].loc.bank);
+    }
+
+    #[test]
+    fn vbase_unique_and_page_aligned() {
+        let cfg = SystemConfig::default();
+        let mut a = PageAllocator::new(&cfg);
+        let pages = a.allocate(10).unwrap();
+        let mut seen = std::collections::HashSet::new();
+        for p in &pages {
+            assert_eq!(p.vbase % cfg.page_bytes, 0);
+            assert!(seen.insert(p.vbase));
+        }
+    }
+
+    #[test]
+    fn capacity_exhaustion_errors() {
+        let mut cfg = SystemConfig::default();
+        cfg.pim_modules = 1;
+        cfg.module_capacity = 4 << 30; // 4 pages
+        let mut a = PageAllocator::new(&cfg);
+        assert!(a.allocate(4).is_ok());
+        assert!(a.allocate(1).is_err());
+    }
+
+    #[test]
+    fn max_pages_in_module_balanced() {
+        let cfg = SystemConfig::default();
+        let mut a = PageAllocator::new(&cfg);
+        a.allocate(20).unwrap();
+        // 20 pages over 8 modules: max is ceil(20/8) = 3
+        assert_eq!(a.max_pages_in_module(), 3);
+    }
+}

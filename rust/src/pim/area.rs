@@ -1,0 +1,125 @@
+//! PIM module chip area model (paper §6.2, Fig. 10).
+//!
+//! The paper synthesized the PIM controller in TSMC 28 nm and ran a
+//! modified NVSim for the chip; we substitute a first-order analytic model
+//! calibrated to Fig. 10's reported breakdown: the memory mat (crossbars)
+//! plus crossbar peripherals (row decoders, column muxes, sense amps,
+//! write drivers) dominate, bank/chip interconnect and IO follow, and the
+//! PIM controllers consume only ~0.17% of chip area.
+
+use crate::config::SystemConfig;
+
+/// F = feature size (m). RRAM 1R crossbar cell = 4F^2.
+const FEATURE_M: f64 = 28e-9;
+const CELL_AREA_F2: f64 = 4.0;
+
+/// Chip area components in mm^2.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChipArea {
+    pub crossbars_mm2: f64,
+    pub xbar_peripherals_mm2: f64,
+    pub bank_interconnect_mm2: f64,
+    pub io_and_pads_mm2: f64,
+    pub pim_controllers_mm2: f64,
+}
+
+impl ChipArea {
+    pub fn total_mm2(&self) -> f64 {
+        self.crossbars_mm2
+            + self.xbar_peripherals_mm2
+            + self.bank_interconnect_mm2
+            + self.io_and_pads_mm2
+            + self.pim_controllers_mm2
+    }
+
+    pub fn breakdown(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("crossbar arrays", self.crossbars_mm2),
+            ("crossbar peripherals", self.xbar_peripherals_mm2),
+            ("bank interconnect", self.bank_interconnect_mm2),
+            ("io + pads", self.io_and_pads_mm2),
+            ("pim controllers", self.pim_controllers_mm2),
+        ]
+    }
+
+    /// Fraction of the chip taken by PIM controllers (paper: 0.17%).
+    pub fn pim_ctrl_fraction(&self) -> f64 {
+        self.pim_controllers_mm2 / self.total_mm2()
+    }
+}
+
+/// Synthesized PIM controller area (TSMC 28nm, paper §6.2): a small FSM +
+/// sequencer of tens of kilo-gates, ~1600 um^2 per controller, which lands
+/// the chip fraction at the reported ~0.17% for the default geometry
+/// (each 16 GB chip carries thousands of controllers, one per 256
+/// crossbars).
+pub const PIM_CTRL_MM2: f64 = 0.0016;
+
+/// Compute the chip-level area breakdown for one PIM memory chip.
+/// A module has `chips_per_module` chips sharing the capacity.
+pub fn chip_area(cfg: &SystemConfig) -> ChipArea {
+    let chip_bytes = cfg.module_capacity as f64 / cfg.chips_per_module as f64;
+    let cells = chip_bytes * 8.0;
+    let cell_mm2 = CELL_AREA_F2 * FEATURE_M * FEATURE_M * 1e6; // m^2 -> mm^2
+    let crossbars = cells * cell_mm2;
+
+    // Peripherals (decoders, muxes, SAs, drivers) per crossbar: NVSim-class
+    // overhead for small mats is comparable to the mat itself; with the
+    // paper's extra logic voltage drivers we take 95% of the array area.
+    let peripherals = crossbars * 0.95;
+
+    // Bank-level interconnect + global decoding: ~12% of mat+peripherals.
+    let interconnect = (crossbars + peripherals) * 0.12;
+
+    // IO, pads, media-controller interface share per chip: ~6 mm^2.
+    let io = 6.0;
+
+    let xbars_per_chip = cells / (cfg.xbar_rows * cfg.xbar_cols) as f64;
+    let ctrls = xbars_per_chip
+        / (cfg.subarrays_per_pim_ctrl * cfg.xbars_per_subarray) as f64;
+    let pim_ctrls = ctrls * PIM_CTRL_MM2;
+
+    ChipArea {
+        crossbars_mm2: crossbars,
+        xbar_peripherals_mm2: peripherals,
+        bank_interconnect_mm2: interconnect,
+        io_and_pads_mm2: io,
+        pim_controllers_mm2: pim_ctrls,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pim_controller_fraction_near_paper() {
+        let a = chip_area(&SystemConfig::default());
+        let f = a.pim_ctrl_fraction();
+        // paper: 0.17% — allow [0.05%, 0.5%] for the analytic substitute
+        assert!(f > 0.0005 && f < 0.005, "fraction {f}");
+    }
+
+    #[test]
+    fn crossbars_dominate() {
+        let a = chip_area(&SystemConfig::default());
+        assert!(a.crossbars_mm2 > a.bank_interconnect_mm2);
+        assert!(a.crossbars_mm2 + a.xbar_peripherals_mm2 > 0.5 * a.total_mm2());
+    }
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let a = chip_area(&SystemConfig::default());
+        let sum: f64 = a.breakdown().iter().map(|(_, v)| v).sum();
+        assert!((sum - a.total_mm2()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn area_scales_with_capacity() {
+        let mut cfg = SystemConfig::default();
+        let a1 = chip_area(&cfg).total_mm2();
+        cfg.module_capacity /= 2;
+        let a2 = chip_area(&cfg).total_mm2();
+        assert!(a2 < a1);
+    }
+}

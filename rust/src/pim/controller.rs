@@ -1,0 +1,529 @@
+//! PIM controller: instruction → MAGIC NOR micro-sequence (paper §3.3,
+//! §5.2.2) and the Table 4 cycle/cell cost model.
+//!
+//! Two layers live here:
+//!
+//!  * [`cost`] — the authoritative cycle model. Totals are the paper's
+//!    measured closed forms (Table 4, 1024x512 crossbars); the split into
+//!    column-wise vs row-wise cycles is structural (derived from the
+//!    binary-tree reduce of Fig. 7 and the bit-by-bit row moves of Fig. 6;
+//!    see DESIGN.md §4). The split is what Tables 5/6 report.
+//!
+//!  * [`fsm`] — executable micro-sequences against the cell-accurate
+//!    [`Crossbar`] reference model. For NOT/AND/OR/SET/RESET the emitted
+//!    sequences match the Table 4 counts *exactly* (tests assert this);
+//!    for the remaining ops the sequences validate semantics while the
+//!    closed forms remain authoritative for timing (the paper's gate-level
+//!    realizations from [36] use library tricks we do not re-derive).
+
+use super::crossbar::Crossbar;
+use super::isa::{Opcode, PimInstruction};
+
+/// Cycle/cell cost of one PIM instruction on one crossbar (all crossbars
+/// under a PIM controller run the sequence in lockstep, so this is also the
+/// controller-level latency).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct InstructionCost {
+    pub col_cycles: u64,
+    pub row_cycles: u64,
+    /// Cells needed for intermediate results, per crossbar row (Table 4).
+    pub intermediate_cells: u64,
+}
+
+impl InstructionCost {
+    pub fn total_cycles(&self) -> u64 {
+        self.col_cycles + self.row_cycles
+    }
+}
+
+/// How an instruction's cell writes distribute over crossbar rows
+/// (endurance accounting, paper §6.4 / Table 6).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RowWrites {
+    /// Every row receives the same number of cell writes (column-wise ops
+    /// always operate on all rows — §5.2.3 restriction).
+    AllRows(u64),
+    /// `prefix[k] = (rows_affected, writes_each)`: the first
+    /// `rows_affected` rows receive `writes_each` additional writes
+    /// (reduce moves target the surviving half; column-transform targets
+    /// the read-out rows).
+    Prefix(Vec<(usize, u64)>),
+}
+
+fn popcounts(imm: u64, n: u64) -> (u64, u64) {
+    let masked = if n >= 64 { imm } else { imm & ((1u64 << n) - 1) };
+    let ones = masked.count_ones() as u64;
+    (n - ones, ones) // (imm0, imm1)
+}
+
+/// Number of tree-reduce levels for `rows` values (Fig. 7).
+fn levels(rows: usize) -> u64 {
+    rows.trailing_zeros() as u64
+}
+
+/// Structural row-wise move cycles of a tree reduce: at level k,
+/// rows/2^(k+1) values of width w_k move between rows, 2 row-ops per bit
+/// (copy via double negation).
+fn reduce_row_cycles(rows: usize, width_at: impl Fn(u64) -> u64) -> u64 {
+    let mut total = 0u64;
+    for k in 0..levels(rows) {
+        let values_moved = (rows as u64) >> (k + 1);
+        total += 2 * values_moved * width_at(k);
+    }
+    total
+}
+
+/// Table 4 cost model. `rows` is the crossbar row count (bold-marked
+/// entries depend on it; the constants are exact at 1024).
+pub fn cost(instr: &PimInstruction, rows: usize) -> InstructionCost {
+    let n = instr.n();
+    let m = instr.m();
+    match instr.op {
+        Opcode::EqImm => {
+            let (i0, i1) = popcounts(instr.imm, n);
+            InstructionCost {
+                col_cycles: i0 + 3 * i1 + 1,
+                row_cycles: 0,
+                intermediate_cells: 1,
+            }
+        }
+        Opcode::NeImm => {
+            let (i0, i1) = popcounts(instr.imm, n);
+            InstructionCost {
+                col_cycles: i0 + 3 * i1 + 3,
+                row_cycles: 0,
+                intermediate_cells: 2,
+            }
+        }
+        Opcode::LtImm => {
+            let (i0, i1) = popcounts(instr.imm, n);
+            InstructionCost {
+                col_cycles: 11 * i0 + 3 * i1 + 4,
+                row_cycles: 0,
+                intermediate_cells: 5,
+            }
+        }
+        Opcode::GtImm => {
+            let (i0, i1) = popcounts(instr.imm, n);
+            InstructionCost {
+                col_cycles: 11 * i0 + 3 * i1 + 2,
+                row_cycles: 0,
+                intermediate_cells: 6,
+            }
+        }
+        Opcode::AddImm => InstructionCost {
+            col_cycles: 18 * n + 3,
+            row_cycles: 0,
+            intermediate_cells: 8,
+        },
+        Opcode::Eq => InstructionCost {
+            col_cycles: 11 * n + 3,
+            row_cycles: 0,
+            intermediate_cells: 5,
+        },
+        Opcode::Lt => InstructionCost {
+            col_cycles: 16 * n + 2,
+            row_cycles: 0,
+            intermediate_cells: 6,
+        },
+        Opcode::Set | Opcode::Reset => InstructionCost {
+            col_cycles: n,
+            row_cycles: 0,
+            intermediate_cells: 0,
+        },
+        Opcode::Not => InstructionCost {
+            col_cycles: 2 * n,
+            row_cycles: 0,
+            intermediate_cells: 0,
+        },
+        Opcode::And => InstructionCost {
+            col_cycles: 6 * n,
+            row_cycles: 0,
+            intermediate_cells: 2,
+        },
+        Opcode::Or => InstructionCost {
+            col_cycles: 4 * n,
+            row_cycles: 0,
+            intermediate_cells: 1,
+        },
+        Opcode::Add => InstructionCost {
+            col_cycles: 18 * n + 1,
+            row_cycles: 0,
+            intermediate_cells: 6,
+        },
+        Opcode::Mul => InstructionCost {
+            // 24nm - 19n + 2m - 1 (n = in-memory operand, m = 2nd operand)
+            col_cycles: (24 * n * m + 2 * m).saturating_sub(19 * n + 1),
+            row_cycles: 0,
+            intermediate_cells: 6,
+        },
+        Opcode::ReduceSum => {
+            // Total (Table 4, 1024 rows): 2254n + 3006.
+            // Row component (structural): sum width grows by 1/level.
+            let row = reduce_row_cycles(rows, |k| n + k); // 2046n + 2026 @1024
+            let total = scale_reduce_total(2254 * n + 3006, rows);
+            InstructionCost {
+                col_cycles: total.saturating_sub(row),
+                row_cycles: row,
+                intermediate_cells: n + 15,
+            }
+        }
+        Opcode::ReduceMin | Opcode::ReduceMax => {
+            let row = reduce_row_cycles(rows, |_| n); // 2046n @1024
+            let total = scale_reduce_total(2306 * n + 200, rows);
+            InstructionCost {
+                col_cycles: total.saturating_sub(row),
+                row_cycles: row,
+                intermediate_cells: n + 7,
+            }
+        }
+        Opcode::ColumnTransform => InstructionCost {
+            // 2050 total (Table 4): 2 x 1024 row-wise bit moves + 2 setup.
+            col_cycles: 2,
+            row_cycles: 2 * rows as u64,
+            intermediate_cells: 1,
+        },
+    }
+}
+
+/// Table 4 reduce totals are measured at 1024 rows; for other geometries
+/// scale by the ratio of tree levels (tests only rely on the 1024 case and
+/// monotonicity).
+fn scale_reduce_total(total_at_1024: u64, rows: usize) -> u64 {
+    let l = levels(rows);
+    (total_at_1024 * l) / 10
+}
+
+/// Endurance write profile of one instruction (cell writes per row).
+pub fn write_profile(instr: &PimInstruction, rows: usize) -> RowWrites {
+    let c = cost(instr, rows);
+    match instr.op {
+        Opcode::ReduceSum | Opcode::ReduceMin | Opcode::ReduceMax => {
+            // column-wise cycles hit every row (the §5.2.3 restriction:
+            // reduce steps operate on all rows, participating or not);
+            // row-wise moves write only the surviving-half target rows.
+            let n = instr.n();
+            let mut prefix = vec![(rows, c.col_cycles)];
+            for k in 0..levels(rows) {
+                let targets = rows >> (k + 1);
+                let width = match instr.op {
+                    Opcode::ReduceSum => n + k,
+                    _ => n,
+                };
+                prefix.push((targets, 2 * width));
+            }
+            RowWrites::Prefix(prefix)
+        }
+        Opcode::ColumnTransform => {
+            // 1024 result bits land in rows 0..rows/read_bits as 16-bit
+            // groups; every moved bit costs 2 writes in its target row.
+            let target_rows = rows / crate::util::bits::XBAR_READ_BITS;
+            let writes_per_target = 2 * (rows / target_rows) as u64;
+            let mut prefix = vec![(rows, c.col_cycles)];
+            prefix.push((target_rows, writes_per_target));
+            RowWrites::Prefix(prefix)
+        }
+        _ => RowWrites::AllRows(c.col_cycles),
+    }
+}
+
+/// Executable FSM micro-sequences on the cell-accurate crossbar reference.
+/// Used by unit tests and the `pimdb inspect-fsm` tool, not by the fast
+/// engine.
+pub mod fsm {
+    use super::*;
+
+    /// Bitwise AND of two column ranges, exactly 6n column ops
+    /// (set t1, not a_i, set t2, not b_i, set out, nor): Table 4 row "Bitwise
+    /// AND" with 2 intermediate cells.
+    pub fn and(xb: &mut Crossbar, instr: &PimInstruction, t1: usize, t2: usize) {
+        let b = instr.src_b.expect("and needs src_b");
+        for i in 0..instr.n() as usize {
+            let (a_i, b_i, o_i) = (
+                instr.src_a.start as usize + i,
+                b.start as usize + i,
+                instr.dst.start as usize + i,
+            );
+            xb.col_set(t1);
+            xb.col_nor(a_i, a_i, t1);
+            xb.col_set(t2);
+            xb.col_nor(b_i, b_i, t2);
+            xb.col_set(o_i);
+            xb.col_nor(t1, t2, o_i);
+        }
+    }
+
+    /// Bitwise OR, exactly 4n column ops with 1 intermediate cell.
+    pub fn or(xb: &mut Crossbar, instr: &PimInstruction, t1: usize) {
+        let b = instr.src_b.expect("or needs src_b");
+        for i in 0..instr.n() as usize {
+            let (a_i, b_i, o_i) = (
+                instr.src_a.start as usize + i,
+                b.start as usize + i,
+                instr.dst.start as usize + i,
+            );
+            xb.col_set(t1);
+            xb.col_nor(a_i, b_i, t1);
+            xb.col_set(o_i);
+            xb.col_nor(t1, t1, o_i);
+        }
+    }
+
+    /// Bitwise NOT, exactly 2n column ops, no intermediates.
+    pub fn not(xb: &mut Crossbar, instr: &PimInstruction) {
+        for i in 0..instr.n() as usize {
+            let (a_i, o_i) = (
+                instr.src_a.start as usize + i,
+                instr.dst.start as usize + i,
+            );
+            xb.col_set(o_i);
+            xb.col_nor(a_i, a_i, o_i);
+        }
+    }
+
+    /// SET/RESET of n columns, exactly n ops.
+    pub fn set_reset(xb: &mut Crossbar, instr: &PimInstruction) {
+        for i in 0..instr.n() as usize {
+            let c = instr.src_a.start as usize + i;
+            match instr.op {
+                Opcode::Set => xb.col_set(c),
+                Opcode::Reset => xb.col_reset(c),
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    /// Equality-with-immediate (Algorithm 1) — semantic reference. The
+    /// realization below uses plain NOT/NOR idioms and is *not* cycle-exact
+    /// vs Table 4 (the paper's count relies on [36]'s optimized cell
+    /// mappings); `cost()` stays authoritative for timing.
+    pub fn eq_imm(xb: &mut Crossbar, instr: &PimInstruction, t1: usize, t2: usize) {
+        let out = instr.dst.start as usize;
+        xb.col_set(out); // m_eq <- 1
+        for i in 0..instr.n() as usize {
+            let v_i = instr.src_a.start as usize + i;
+            let bit = (instr.imm >> i) & 1;
+            if bit == 1 {
+                // m_eq <- v_i AND m_eq
+                xb.col_set(t1);
+                xb.col_nor(v_i, v_i, t1); // t1 = ~v
+                xb.col_set(t2);
+                xb.col_nor(out, out, t2); // t2 = ~m_eq
+                xb.col_set(out);
+                xb.col_nor(t1, t2, out);
+            } else {
+                // m_eq <- NOT(v_i) AND m_eq
+                xb.col_set(t1);
+                xb.col_nor(out, out, t1); // t1 = ~m_eq
+                xb.col_set(out);
+                xb.col_nor(v_i, t1, out); // ~v & m_eq
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::isa::ColRange;
+    use crate::util::proptest::check;
+
+    fn instr(op: Opcode, n: usize) -> PimInstruction {
+        PimInstruction::unary(op, ColRange::new(0, n), ColRange::new(100, n))
+    }
+
+    fn instr_bin(op: Opcode, n: usize, m: usize) -> PimInstruction {
+        PimInstruction::binary(
+            op,
+            ColRange::new(0, n),
+            ColRange::new(64, m),
+            ColRange::new(128, n.max(m)),
+        )
+    }
+
+    #[test]
+    fn table4_closed_forms_at_1024() {
+        // spot values straight from Table 4 with n=32, m=16
+        let n = 32u64;
+        assert_eq!(cost(&instr(Opcode::AddImm, 32), 1024).total_cycles(), 18 * n + 3);
+        assert_eq!(cost(&instr_bin(Opcode::Eq, 32, 32), 1024).total_cycles(), 11 * n + 3);
+        assert_eq!(cost(&instr_bin(Opcode::Lt, 32, 32), 1024).total_cycles(), 16 * n + 2);
+        assert_eq!(cost(&instr(Opcode::Set, 32), 1024).total_cycles(), n);
+        assert_eq!(cost(&instr(Opcode::Not, 32), 1024).total_cycles(), 2 * n);
+        assert_eq!(cost(&instr_bin(Opcode::And, 32, 32), 1024).total_cycles(), 6 * n);
+        assert_eq!(cost(&instr_bin(Opcode::Or, 32, 32), 1024).total_cycles(), 4 * n);
+        assert_eq!(cost(&instr_bin(Opcode::Add, 32, 32), 1024).total_cycles(), 18 * n + 1);
+        let m = 16u64;
+        assert_eq!(
+            cost(&instr_bin(Opcode::Mul, 32, 16), 1024).total_cycles(),
+            24 * n * m - 19 * n + 2 * m - 1
+        );
+        assert_eq!(
+            cost(&instr(Opcode::ReduceSum, 32), 1024).total_cycles(),
+            2254 * n + 3006
+        );
+        assert_eq!(
+            cost(&instr(Opcode::ReduceMin, 32), 1024).total_cycles(),
+            2306 * n + 200
+        );
+        assert_eq!(
+            cost(&instr(Opcode::ColumnTransform, 1), 1024).total_cycles(),
+            2050
+        );
+    }
+
+    #[test]
+    fn imm_compare_costs_depend_on_popcount() {
+        check("imm-costs", 100, |g| {
+            let n = g.usize(1, 64);
+            let imm = g.skewed_u64();
+            let masked = if n >= 64 { imm } else { imm & ((1 << n) - 1) };
+            let i1 = masked.count_ones() as u64;
+            let i0 = n as u64 - i1;
+            let mk = |op| PimInstruction::with_imm(op, ColRange::new(0, n), ColRange::new(100, 1), imm);
+            assert_eq!(cost(&mk(Opcode::EqImm), 1024).total_cycles(), i0 + 3 * i1 + 1);
+            assert_eq!(cost(&mk(Opcode::NeImm), 1024).total_cycles(), i0 + 3 * i1 + 3);
+            assert_eq!(cost(&mk(Opcode::LtImm), 1024).total_cycles(), 11 * i0 + 3 * i1 + 4);
+            assert_eq!(cost(&mk(Opcode::GtImm), 1024).total_cycles(), 11 * i0 + 3 * i1 + 2);
+        });
+    }
+
+    #[test]
+    fn immediate_in_control_path_beats_in_memory_compare() {
+        // §3.3: using the immediate in the control path must never be
+        // slower than the two-operand compare of the same width.
+        check("imm-wins", 100, |g| {
+            let n = g.usize(1, 64);
+            let imm = g.skewed_u64();
+            let ci = cost(
+                &PimInstruction::with_imm(Opcode::EqImm, ColRange::new(0, n), ColRange::new(100, 1), imm),
+                1024,
+            );
+            let cc = cost(&instr_bin(Opcode::Eq, n, n), 1024);
+            assert!(ci.total_cycles() <= cc.total_cycles());
+        });
+    }
+
+    #[test]
+    fn reduce_split_matches_structural_derivation() {
+        // row component at 1024 rows: sum -> 2046n + 2026; min/max -> 2046n
+        for n in [1u64, 8, 17, 33, 64] {
+            let cs = cost(&instr(Opcode::ReduceSum, n as usize), 1024);
+            assert_eq!(cs.row_cycles, 2046 * n + 2026);
+            assert_eq!(cs.col_cycles, 2254 * n + 3006 - (2046 * n + 2026));
+            let cm = cost(&instr(Opcode::ReduceMin, n as usize), 1024);
+            assert_eq!(cm.row_cycles, 2046 * n);
+            assert_eq!(cm.col_cycles, 260 * n + 200);
+        }
+    }
+
+    #[test]
+    fn reduce_cost_monotone_in_rows() {
+        let i = instr(Opcode::ReduceSum, 32);
+        let c256 = cost(&i, 256).total_cycles();
+        let c1024 = cost(&i, 1024).total_cycles();
+        assert!(c256 < c1024);
+    }
+
+    #[test]
+    fn fsm_and_or_not_are_cycle_exact() {
+        for n in [1usize, 7, 32] {
+            let mut xb = Crossbar::new(64, 256);
+            let i = instr_bin(Opcode::And, n, n);
+            fsm::and(&mut xb, &i, 200, 201);
+            assert_eq!(xb.counts().col_ops, cost(&i, 64).col_cycles);
+
+            let mut xb = Crossbar::new(64, 256);
+            let i = instr_bin(Opcode::Or, n, n);
+            fsm::or(&mut xb, &i, 200);
+            assert_eq!(xb.counts().col_ops, cost(&i, 64).col_cycles);
+
+            let mut xb = Crossbar::new(64, 256);
+            let i = instr(Opcode::Not, n);
+            fsm::not(&mut xb, &i);
+            assert_eq!(xb.counts().col_ops, cost(&i, 64).col_cycles);
+
+            let mut xb = Crossbar::new(64, 256);
+            let i = instr(Opcode::Set, n);
+            fsm::set_reset(&mut xb, &i);
+            assert_eq!(xb.counts().col_ops, cost(&i, 64).col_cycles);
+        }
+    }
+
+    #[test]
+    fn fsm_semantics_match_integer_ops() {
+        check("fsm-semantics", 30, |g| {
+            let n = g.usize(1, 16);
+            let rows = 64;
+            let mut xb = Crossbar::new(rows, 256);
+            let mut a_vals = Vec::new();
+            let mut b_vals = Vec::new();
+            for r in 0..rows {
+                let a = g.u64(0, (1 << n) - 1);
+                let b = g.u64(0, (1 << n) - 1);
+                xb.write_bits(r, 0, n, a);
+                xb.write_bits(r, 64, n, b);
+                a_vals.push(a);
+                b_vals.push(b);
+            }
+            let i = instr_bin(Opcode::And, n, n);
+            fsm::and(&mut xb, &i, 200, 201);
+            for r in 0..rows {
+                assert_eq!(xb.read_bits(r, 128, n), a_vals[r] & b_vals[r]);
+            }
+            let i = instr_bin(Opcode::Or, n, n);
+            fsm::or(&mut xb, &i, 202);
+            for r in 0..rows {
+                assert_eq!(xb.read_bits(r, 128, n), a_vals[r] | b_vals[r]);
+            }
+        });
+    }
+
+    #[test]
+    fn fsm_eq_imm_algorithm1_semantics() {
+        check("alg1-eq", 30, |g| {
+            let n = g.usize(1, 20);
+            let rows = 64;
+            let mut xb = Crossbar::new(rows, 256);
+            let imm = g.u64(0, (1u64 << n) - 1);
+            let mut vals = Vec::new();
+            for r in 0..rows {
+                // half the rows get the immediate itself
+                let v = if g.bool() { imm } else { g.u64(0, (1 << n) - 1) };
+                xb.write_bits(r, 0, n, v);
+                vals.push(v);
+            }
+            let i = PimInstruction::with_imm(
+                Opcode::EqImm,
+                ColRange::new(0, n),
+                ColRange::new(128, 1),
+                imm,
+            );
+            fsm::eq_imm(&mut xb, &i, 200, 201);
+            for r in 0..rows {
+                assert_eq!(xb.get(r, 128), vals[r] == imm, "row {r}");
+            }
+        });
+    }
+
+    #[test]
+    fn write_profile_reduce_prefix_shape() {
+        let i = instr(Opcode::ReduceSum, 8);
+        match write_profile(&i, 1024) {
+            RowWrites::Prefix(p) => {
+                assert_eq!(p[0].0, 1024); // col ops hit all rows
+                assert_eq!(p.len(), 1 + 10); // 10 tree levels
+                // surviving halves shrink: 512, 256, ...
+                assert_eq!(p[1].0, 512);
+                assert_eq!(p[10].0, 1);
+            }
+            _ => panic!("expected prefix profile"),
+        }
+    }
+
+    #[test]
+    fn write_profile_simple_ops_uniform() {
+        let i = instr_bin(Opcode::And, 16, 16);
+        assert_eq!(write_profile(&i, 1024), RowWrites::AllRows(96));
+    }
+}

@@ -1,0 +1,227 @@
+//! Cell-accurate memristive crossbar reference model (paper §2.1, Fig. 1).
+//!
+//! Models a single 1R crossbar executing MAGIC-NOR-class stateful logic
+//! under the paper's restrictions (§5.2.3):
+//!
+//!  * column-wise ops: NOR2 / NOT / single-column SET / RESET, always on
+//!    *all* rows in parallel (row exclusion is done in software by masking);
+//!  * row-wise ops: NOT or SET of a *single column* at a time, moving a bit
+//!    between two rows of the same column.
+//!
+//! This model is the semantic ground truth the PIM-controller FSM sequences
+//! are tested against; the production engine (exec/engine.rs) computes the
+//! same functions on packed bit-planes (or via the PJRT executables).
+
+use crate::util::bits::BitMatrix;
+
+/// Operation counters, split the way the paper reports them (Table 5,
+/// Table 6): column-wise (all-row-parallel) vs row-wise (single column).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OpCounts {
+    pub col_ops: u64,
+    pub row_ops: u64,
+}
+
+impl OpCounts {
+    pub fn total(&self) -> u64 {
+        self.col_ops + self.row_ops
+    }
+}
+
+/// A cell-accurate crossbar.
+pub struct Crossbar {
+    cells: BitMatrix,
+    counts: OpCounts,
+    /// Per-row cell-write counts (endurance accounting, §6.4).
+    row_writes: Vec<u64>,
+}
+
+impl Crossbar {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Crossbar {
+            cells: BitMatrix::new(rows, cols),
+            counts: OpCounts::default(),
+            row_writes: vec![0; rows],
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.cells.rows()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cells.cols()
+    }
+
+    pub fn counts(&self) -> OpCounts {
+        self.counts
+    }
+
+    pub fn row_writes(&self) -> &[u64] {
+        &self.row_writes
+    }
+
+    // --- plain memory access (read/write path, not stateful logic) -------
+
+    pub fn read_bits(&self, row: usize, col: usize, n: usize) -> u64 {
+        self.cells.read_bits(row, col, n)
+    }
+
+    pub fn write_bits(&mut self, row: usize, col: usize, n: usize, v: u64) {
+        self.cells.write_bits(row, col, n, v);
+    }
+
+    pub fn get(&self, row: usize, col: usize) -> bool {
+        self.cells.get(row, col)
+    }
+
+    // --- column-wise stateful logic (one cycle each, all rows) -----------
+
+    /// out[r] = NOR(a[r], b[r]) for every row r. MAGIC NOR requires the
+    /// output cells to be pre-SET; the model enforces the convention by
+    /// overwriting unconditionally (the SET is counted separately by the
+    /// FSM sequences that need it).
+    pub fn col_nor(&mut self, a: usize, b: usize, out: usize) {
+        for r in 0..self.rows() {
+            let v = !(self.cells.get(r, a) | self.cells.get(r, b));
+            self.cells.set(r, out, v);
+            self.row_writes[r] += 1;
+        }
+        self.counts.col_ops += 1;
+    }
+
+    /// out[r] = NOT a[r] (NOR with itself).
+    pub fn col_not(&mut self, a: usize, out: usize) {
+        for r in 0..self.rows() {
+            let v = !self.cells.get(r, a);
+            self.cells.set(r, out, v);
+            self.row_writes[r] += 1;
+        }
+        self.counts.col_ops += 1;
+    }
+
+    /// SET an entire column to 1.
+    pub fn col_set(&mut self, out: usize) {
+        for r in 0..self.rows() {
+            self.cells.set(r, out, true);
+            self.row_writes[r] += 1;
+        }
+        self.counts.col_ops += 1;
+    }
+
+    /// RESET an entire column to 0.
+    pub fn col_reset(&mut self, out: usize) {
+        for r in 0..self.rows() {
+            self.cells.set(r, out, false);
+            self.row_writes[r] += 1;
+        }
+        self.counts.col_ops += 1;
+    }
+
+    // --- row-wise stateful logic (single column at a time, §5.2.3) -------
+
+    /// cells[dst_row][col] = NOT cells[src_row][col].
+    pub fn row_not(&mut self, col: usize, src_row: usize, dst_row: usize) {
+        let v = !self.cells.get(src_row, col);
+        self.cells.set(dst_row, col, v);
+        self.row_writes[dst_row] += 1;
+        self.counts.row_ops += 1;
+    }
+
+    /// SET a single cell (row-wise SET of one column).
+    pub fn row_set(&mut self, col: usize, row: usize) {
+        self.cells.set(row, col, true);
+        self.row_writes[row] += 1;
+        self.counts.row_ops += 1;
+    }
+
+    /// Copy a bit between rows = two row-wise NOTs through a scratch row
+    /// cell (double negation, as in the paper's Fig. 6 column-transform).
+    pub fn row_copy_via_not(
+        &mut self,
+        col: usize,
+        src_row: usize,
+        scratch_row: usize,
+        dst_row: usize,
+    ) {
+        self.row_not(col, src_row, scratch_row);
+        self.row_not(col, scratch_row, dst_row);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn nor_truth_table_all_rows() {
+        let mut xb = Crossbar::new(4, 8);
+        // rows encode the four (a,b) combinations
+        for (r, (a, b)) in [(false, false), (false, true), (true, false), (true, true)]
+            .into_iter()
+            .enumerate()
+        {
+            xb.write_bits(r, 0, 1, a as u64);
+            xb.write_bits(r, 1, 1, b as u64);
+        }
+        xb.col_nor(0, 1, 2);
+        assert!(xb.get(0, 2));
+        assert!(!xb.get(1, 2));
+        assert!(!xb.get(2, 2));
+        assert!(!xb.get(3, 2));
+        assert_eq!(xb.counts(), OpCounts { col_ops: 1, row_ops: 0 });
+    }
+
+    #[test]
+    fn not_and_set_reset() {
+        let mut xb = Crossbar::new(2, 4);
+        xb.write_bits(0, 0, 1, 1);
+        xb.col_not(0, 1);
+        assert!(!xb.get(0, 1) && xb.get(1, 1));
+        xb.col_set(2);
+        assert!(xb.get(0, 2) && xb.get(1, 2));
+        xb.col_reset(2);
+        assert!(!xb.get(0, 2) && !xb.get(1, 2));
+        assert_eq!(xb.counts().col_ops, 3);
+    }
+
+    #[test]
+    fn row_ops_move_bits_vertically() {
+        let mut xb = Crossbar::new(8, 4);
+        xb.write_bits(2, 3, 1, 1);
+        xb.row_copy_via_not(3, 2, 6, 7);
+        assert!(xb.get(7, 3));
+        assert_eq!(xb.counts().row_ops, 2);
+        // endurance: writes landed on rows 6 and 7 only
+        assert_eq!(xb.row_writes()[6], 1);
+        assert_eq!(xb.row_writes()[7], 1);
+        assert_eq!(xb.row_writes()[2], 0);
+    }
+
+    #[test]
+    fn nor_is_functionally_complete_and_via_demorgan() {
+        // AND(a,b) == NOR(NOT a, NOT b) on random row data
+        check("nor-complete", 50, |g| {
+            let mut xb = Crossbar::new(16, 8);
+            for r in 0..16 {
+                xb.write_bits(r, 0, 1, g.bool() as u64);
+                xb.write_bits(r, 1, 1, g.bool() as u64);
+            }
+            xb.col_not(0, 2);
+            xb.col_not(1, 3);
+            xb.col_nor(2, 3, 4);
+            for r in 0..16 {
+                assert_eq!(xb.get(r, 4), xb.get(r, 0) & xb.get(r, 1));
+            }
+        });
+    }
+
+    #[test]
+    fn column_writes_hit_every_row_once() {
+        let mut xb = Crossbar::new(32, 4);
+        xb.col_nor(0, 1, 2);
+        xb.col_not(0, 3);
+        assert!(xb.row_writes().iter().all(|&w| w == 2));
+    }
+}

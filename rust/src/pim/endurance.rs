@@ -1,0 +1,227 @@
+//! Cell endurance accounting (paper §6.4, Fig. 15, Table 6).
+//!
+//! Tracks cell writes per crossbar row, per operation category. Under the
+//! paper's wear-leveling assumption (writes within a row spread uniformly
+//! over the row's cells, §6.4), ops-per-cell = row-writes / columns. The
+//! ten-year requirement extrapolates back-to-back query execution at 100%
+//! duty cycle.
+
+use super::controller::RowWrites;
+
+/// Operation categories as reported in Tables 5 and 6.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpCategory {
+    Filter,
+    Arith,
+    ColTransform,
+    AggCol,
+    AggRow,
+}
+
+pub const CATEGORIES: [OpCategory; 5] = [
+    OpCategory::Filter,
+    OpCategory::Arith,
+    OpCategory::ColTransform,
+    OpCategory::AggCol,
+    OpCategory::AggRow,
+];
+
+impl OpCategory {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpCategory::Filter => "filter",
+            OpCategory::Arith => "arith",
+            OpCategory::ColTransform => "col-trans",
+            OpCategory::AggCol => "agg-col",
+            OpCategory::AggRow => "agg-row",
+        }
+    }
+
+    pub fn index(&self) -> usize {
+        match self {
+            OpCategory::Filter => 0,
+            OpCategory::Arith => 1,
+            OpCategory::ColTransform => 2,
+            OpCategory::AggCol => 3,
+            OpCategory::AggRow => 4,
+        }
+    }
+}
+
+/// Per-row write counters for the crossbars of one relation (all crossbars
+/// of a relation see the same instruction stream, so one profile serves
+/// them all).
+#[derive(Clone, Debug)]
+pub struct EnduranceTracker {
+    rows: usize,
+    cols: usize,
+    /// writes[cat][row]
+    writes: Vec<Vec<u64>>,
+}
+
+impl EnduranceTracker {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        EnduranceTracker {
+            rows,
+            cols,
+            writes: vec![vec![0; rows]; CATEGORIES.len()],
+        }
+    }
+
+    /// Record one instruction's write profile. For reduce instructions the
+    /// caller passes the profile split between [`OpCategory::AggCol`] (the
+    /// all-row column component, first prefix entry) and
+    /// [`OpCategory::AggRow`] (the move components).
+    pub fn record(&mut self, cat: OpCategory, profile: &RowWrites) {
+        let w = &mut self.writes[cat.index()];
+        match profile {
+            RowWrites::AllRows(c) => {
+                for x in w.iter_mut() {
+                    *x += c;
+                }
+            }
+            RowWrites::Prefix(prefix) => {
+                for &(rows_affected, writes_each) in prefix {
+                    for x in w.iter_mut().take(rows_affected.min(self.rows)) {
+                        *x += writes_each;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Record a reduce/column-transform with the all-rows head attributed
+    /// to `col_cat` and the prefix tail to `row_cat`.
+    pub fn record_split(
+        &mut self,
+        col_cat: OpCategory,
+        row_cat: OpCategory,
+        profile: &RowWrites,
+    ) {
+        match profile {
+            RowWrites::AllRows(c) => self.record(col_cat, &RowWrites::AllRows(*c)),
+            RowWrites::Prefix(prefix) => {
+                if let Some(head) = prefix.first() {
+                    self.record(col_cat, &RowWrites::Prefix(vec![*head]));
+                }
+                if prefix.len() > 1 {
+                    self.record(row_cat, &RowWrites::Prefix(prefix[1..].to_vec()));
+                }
+            }
+        }
+    }
+
+    /// Total writes on row `r` across categories.
+    fn row_total(&self, r: usize) -> u64 {
+        self.writes.iter().map(|w| w[r]).sum()
+    }
+
+    /// The most-written row and its per-category breakdown.
+    pub fn max_row(&self) -> (usize, [u64; 5]) {
+        let r = (0..self.rows)
+            .max_by_key(|&r| self.row_total(r))
+            .unwrap_or(0);
+        let mut out = [0u64; 5];
+        for (i, w) in self.writes.iter().enumerate() {
+            out[i] = w[r];
+        }
+        (r, out)
+    }
+
+    /// Max ops-per-cell under uniform in-row wear (writes / columns).
+    pub fn max_ops_per_cell(&self) -> f64 {
+        let (r, b) = self.max_row();
+        let _ = r;
+        b.iter().sum::<u64>() as f64 / self.cols as f64
+    }
+
+    /// Required endurance (writes/cell) for `years` of back-to-back
+    /// execution, given one execution takes `exec_time_s`.
+    pub fn required_endurance(&self, exec_time_s: f64, years: f64) -> f64 {
+        if exec_time_s <= 0.0 {
+            return 0.0;
+        }
+        let executions = years * 365.25 * 24.0 * 3600.0 / exec_time_s;
+        self.max_ops_per_cell() * executions
+    }
+
+    /// Fractional contribution of each category at the max row (Table 6).
+    pub fn breakdown_fractions(&self) -> [f64; 5] {
+        let (_, b) = self.max_row();
+        let total: u64 = b.iter().sum();
+        let mut out = [0.0; 5];
+        if total > 0 {
+            for i in 0..5 {
+                out[i] = b[i] as f64 / total as f64;
+            }
+        }
+        out
+    }
+
+    pub fn merge_max(&mut self, other: &EnduranceTracker) {
+        // relations wear independently; the module requirement is the max
+        // profile. Keep whichever tracker has the hotter row per category
+        // by summing (conservative upper bound when merging relations that
+        // share a module but not pages).
+        for (cat, w) in self.writes.iter_mut().enumerate() {
+            for (r, x) in w.iter_mut().enumerate() {
+                *x = (*x).max(other.writes[cat][r]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_rows_profile_uniform() {
+        let mut t = EnduranceTracker::new(16, 512);
+        t.record(OpCategory::Filter, &RowWrites::AllRows(7));
+        let (_, b) = t.max_row();
+        assert_eq!(b[OpCategory::Filter.index()], 7);
+        assert!((t.max_ops_per_cell() - 7.0 / 512.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prefix_profile_hits_early_rows_harder() {
+        let mut t = EnduranceTracker::new(8, 512);
+        t.record(
+            OpCategory::AggRow,
+            &RowWrites::Prefix(vec![(4, 10), (2, 10), (1, 10)]),
+        );
+        let (r, b) = t.max_row();
+        assert_eq!(r, 0);
+        assert_eq!(b[OpCategory::AggRow.index()], 30);
+    }
+
+    #[test]
+    fn split_reduce_attribution() {
+        let mut t = EnduranceTracker::new(8, 512);
+        let profile = RowWrites::Prefix(vec![(8, 100), (4, 6), (2, 6)]);
+        t.record_split(OpCategory::AggCol, OpCategory::AggRow, &profile);
+        let (_, b) = t.max_row();
+        assert_eq!(b[OpCategory::AggCol.index()], 100);
+        assert_eq!(b[OpCategory::AggRow.index()], 12);
+    }
+
+    #[test]
+    fn ten_year_extrapolation() {
+        let mut t = EnduranceTracker::new(4, 512);
+        t.record(OpCategory::Filter, &RowWrites::AllRows(512)); // 1 op/cell
+        // 1 second per execution -> ten years = 315,576,000 executions
+        let req = t.required_endurance(1.0, 10.0);
+        assert!((req - 315_576_000.0).abs() / req < 1e-9);
+    }
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let mut t = EnduranceTracker::new(4, 512);
+        t.record(OpCategory::Filter, &RowWrites::AllRows(30));
+        t.record(OpCategory::ColTransform, &RowWrites::AllRows(10));
+        let f = t.breakdown_fractions();
+        assert!((f.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((f[OpCategory::Filter.index()] - 0.75).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,126 @@
+//! PIM module energy accounting (paper §6.3, Figs. 12–13).
+//!
+//! The PIM module energy is the sum of stateful (bulk-bitwise) logic,
+//! crossbar reads/writes, PIM controller activity, and chip IO. Energy
+//! coefficients come from Table 3 ([36] for logic, [37] for read/write).
+
+use crate::config::SystemConfig;
+
+/// Energy ledger for one PIM module (or the aggregate of all modules),
+/// all values in picojoules.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct EnergyLedger {
+    pub logic_pj: f64,
+    pub read_pj: f64,
+    pub write_pj: f64,
+    pub ctrl_pj: f64,
+    pub io_pj: f64,
+}
+
+impl EnergyLedger {
+    pub fn total_pj(&self) -> f64 {
+        self.logic_pj + self.read_pj + self.write_pj + self.ctrl_pj + self.io_pj
+    }
+
+    /// One column-wise stateful logic cycle on `xbars` crossbars: every
+    /// row's output cell switches (81.6 fJ/bit).
+    pub fn add_col_logic(&mut self, cfg: &SystemConfig, cycles: u64, xbars: u64) {
+        let cells = cycles as f64 * xbars as f64 * cfg.xbar_rows as f64;
+        self.logic_pj += cells * cfg.logic_energy_fj_per_bit * 1e-3;
+    }
+
+    /// One row-wise stateful logic cycle on `xbars` crossbars: a single
+    /// column cell switches per crossbar.
+    pub fn add_row_logic(&mut self, cfg: &SystemConfig, cycles: u64, xbars: u64) {
+        let cells = cycles as f64 * xbars as f64;
+        self.logic_pj += cells * cfg.logic_energy_fj_per_bit * 1e-3;
+    }
+
+    /// Crossbar array read of `bits` total bits.
+    pub fn add_read_bits(&mut self, cfg: &SystemConfig, bits: u64) {
+        self.read_pj += bits as f64 * cfg.read_energy_pj_per_bit;
+    }
+
+    /// Crossbar array write of `bits` total bits.
+    pub fn add_write_bits(&mut self, cfg: &SystemConfig, bits: u64) {
+        self.write_pj += bits as f64 * cfg.write_energy_pj_per_bit;
+    }
+
+    /// PIM controller busy time: `ctrls` controllers active for `ps`.
+    pub fn add_ctrl_time(&mut self, cfg: &SystemConfig, ctrls: u64, ps: u64) {
+        // uW * ps = 1e-6 J/s * 1e-12 s = 1e-18 J = 1e-6 pJ
+        self.ctrl_pj += cfg.pim_ctrl_power_uw * ctrls as f64 * ps as f64 * 1e-6;
+    }
+
+    /// Chip IO energy for `bytes` moved over the module interface. Uses
+    /// the DRAM-style IO coefficient (the paper reuses the gem5 DRAM model
+    /// for IO costs).
+    pub fn add_io_bytes(&mut self, cfg: &SystemConfig, bytes: u64) {
+        // ~4 pJ/bit of IO at DDR-class signalling
+        let _ = cfg;
+        self.io_pj += bytes as f64 * 8.0 * 4.0;
+    }
+
+    pub fn merge(&mut self, other: &EnergyLedger) {
+        self.logic_pj += other.logic_pj;
+        self.read_pj += other.read_pj;
+        self.write_pj += other.write_pj;
+        self.ctrl_pj += other.ctrl_pj;
+        self.io_pj += other.io_pj;
+    }
+
+    /// Breakdown as (label, pJ) pairs for Fig. 13.
+    pub fn breakdown(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("stateful-logic", self.logic_pj),
+            ("read", self.read_pj),
+            ("write", self.write_pj),
+            ("pim-ctrl", self.ctrl_pj),
+            ("chip-io", self.io_pj),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn col_logic_counts_all_rows() {
+        let cfg = SystemConfig::default();
+        let mut e = EnergyLedger::default();
+        e.add_col_logic(&cfg, 1, 1);
+        // 1024 cells * 81.6 fJ = 83558.4 fJ = 83.5584 pJ
+        assert!((e.logic_pj - 1024.0 * 81.6e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn row_logic_counts_one_cell_per_xbar() {
+        let cfg = SystemConfig::default();
+        let mut e = EnergyLedger::default();
+        e.add_row_logic(&cfg, 10, 4);
+        assert!((e.logic_pj - 40.0 * 81.6e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ctrl_energy_unit_conversion() {
+        let cfg = SystemConfig::default();
+        let mut e = EnergyLedger::default();
+        // 1 controller busy for 1 second (1e12 ps) at 126 uW = 126 uJ = 1.26e8 pJ
+        e.add_ctrl_time(&cfg, 1, 1_000_000_000_000);
+        assert!((e.ctrl_pj - 1.26e8).abs() / 1.26e8 < 1e-9);
+    }
+
+    #[test]
+    fn merge_accumulates_all_categories() {
+        let cfg = SystemConfig::default();
+        let mut a = EnergyLedger::default();
+        let mut b = EnergyLedger::default();
+        a.add_read_bits(&cfg, 100);
+        b.add_write_bits(&cfg, 100);
+        b.add_io_bytes(&cfg, 64);
+        a.merge(&b);
+        assert!(a.read_pj > 0.0 && a.write_pj > 0.0 && a.io_pj > 0.0);
+        assert_eq!(a.breakdown().len(), 5);
+    }
+}

@@ -1,0 +1,336 @@
+//! PIM module instruction-set architecture (paper §3.1, §4.2, Table 4).
+//!
+//! A *PIM request* is an address/data pair: the address selects the target
+//! huge-page and encodes the result location (column/row index bits of the
+//! page offset); the data payload carries the opcode, operand column
+//! ranges, and immediate. The host treats requests as opaque writes; only
+//! software and the PIM module understand the payload (programming model,
+//! paper §3.1).
+
+use crate::mem::addr::AddressMap;
+
+/// A range of consecutive crossbar columns (attributes live in consecutive
+/// cells — paper §4.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ColRange {
+    pub start: u16,
+    pub len: u16,
+}
+
+impl ColRange {
+    pub fn new(start: usize, len: usize) -> Self {
+        ColRange {
+            start: start as u16,
+            len: len as u16,
+        }
+    }
+
+    pub fn end(&self) -> usize {
+        (self.start + self.len) as usize
+    }
+}
+
+/// PIM opcodes (Table 4). Immediate-operand variants keep the immediate in
+/// the request payload and specialize the control sequence on it (§3.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Opcode {
+    EqImm = 0,
+    NeImm = 1,
+    LtImm = 2,
+    GtImm = 3,
+    AddImm = 4,
+    Eq = 5,
+    Lt = 6,
+    Set = 7,
+    Reset = 8,
+    Not = 9,
+    And = 10,
+    Or = 11,
+    Add = 12,
+    Mul = 13,
+    ReduceSum = 14,
+    ReduceMin = 15,
+    ReduceMax = 16,
+    ColumnTransform = 17,
+}
+
+impl Opcode {
+    pub fn from_u8(v: u8) -> Option<Opcode> {
+        use Opcode::*;
+        Some(match v {
+            0 => EqImm,
+            1 => NeImm,
+            2 => LtImm,
+            3 => GtImm,
+            4 => AddImm,
+            5 => Eq,
+            6 => Lt,
+            7 => Set,
+            8 => Reset,
+            9 => Not,
+            10 => And,
+            11 => Or,
+            12 => Add,
+            13 => Mul,
+            14 => ReduceSum,
+            15 => ReduceMin,
+            16 => ReduceMax,
+            17 => ColumnTransform,
+            _ => return None,
+        })
+    }
+
+    pub fn has_imm(&self) -> bool {
+        matches!(
+            self,
+            Opcode::EqImm | Opcode::NeImm | Opcode::LtImm | Opcode::GtImm | Opcode::AddImm
+        )
+    }
+
+    pub fn has_src_b(&self) -> bool {
+        matches!(
+            self,
+            Opcode::Eq | Opcode::Lt | Opcode::And | Opcode::Or | Opcode::Add | Opcode::Mul
+        )
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Opcode::EqImm => "eq_imm",
+            Opcode::NeImm => "ne_imm",
+            Opcode::LtImm => "lt_imm",
+            Opcode::GtImm => "gt_imm",
+            Opcode::AddImm => "add_imm",
+            Opcode::Eq => "eq",
+            Opcode::Lt => "lt",
+            Opcode::Set => "set",
+            Opcode::Reset => "reset",
+            Opcode::Not => "not",
+            Opcode::And => "and",
+            Opcode::Or => "or",
+            Opcode::Add => "add",
+            Opcode::Mul => "mul",
+            Opcode::ReduceSum => "reduce_sum",
+            Opcode::ReduceMin => "reduce_min",
+            Opcode::ReduceMax => "reduce_max",
+            Opcode::ColumnTransform => "column_transform",
+        }
+    }
+}
+
+/// Decoded PIM instruction (what a PIM controller executes on all its
+/// crossbars in lockstep).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PimInstruction {
+    pub op: Opcode,
+    /// First input operand columns.
+    pub src_a: ColRange,
+    /// Second input operand (two-operand ALU ops).
+    pub src_b: Option<ColRange>,
+    /// Result columns (a single column for compare ops / masks).
+    pub dst: ColRange,
+    /// Immediate value (imm ops); its *control* interpretation uses only
+    /// the low `src_a.len` bits.
+    pub imm: u64,
+}
+
+impl PimInstruction {
+    pub fn unary(op: Opcode, src: ColRange, dst: ColRange) -> Self {
+        PimInstruction {
+            op,
+            src_a: src,
+            src_b: None,
+            dst,
+            imm: 0,
+        }
+    }
+
+    pub fn binary(op: Opcode, a: ColRange, b: ColRange, dst: ColRange) -> Self {
+        PimInstruction {
+            op,
+            src_a: a,
+            src_b: Some(b),
+            dst,
+            imm: 0,
+        }
+    }
+
+    pub fn with_imm(op: Opcode, src: ColRange, dst: ColRange, imm: u64) -> Self {
+        PimInstruction {
+            op,
+            src_a: src,
+            src_b: None,
+            dst,
+            imm,
+        }
+    }
+
+    /// Operand length n (bits) for the cycle model.
+    pub fn n(&self) -> u64 {
+        self.src_a.len as u64
+    }
+
+    /// Second-operand length m (multiply).
+    pub fn m(&self) -> u64 {
+        self.src_b.map(|b| b.len as u64).unwrap_or(0)
+    }
+}
+
+/// Wire format of a PIM request (paper §3.1 "PIM requests"): a virtual
+/// address plus a 32-byte data payload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PimRequest {
+    /// Virtual address: page base | result-location offset bits.
+    pub addr: u64,
+    /// Payload: opcode, operand ranges, immediate.
+    pub data: [u64; 4],
+}
+
+/// Encode an instruction for a given page virtual base address.
+///
+/// The *result column* is carried in the address offset bits (the paper's
+/// convention: the request address points at the instruction result); all
+/// other fields travel in the data payload.
+pub fn encode(instr: &PimInstruction, page_vbase: u64, map: &AddressMap) -> PimRequest {
+    let addr = page_vbase | map.encode_cell_offset(0, instr.dst.start as usize);
+    let mut d0 = instr.op as u64;
+    d0 |= (instr.src_a.start as u64) << 8;
+    d0 |= (instr.src_a.len as u64) << 24;
+    if let Some(b) = instr.src_b {
+        d0 |= 1 << 40;
+        d0 |= (b.start as u64) << 41;
+        d0 |= (b.len as u64) << 51;
+    }
+    let d1 = (instr.dst.len as u64) | ((instr.dst.start as u64) << 16);
+    PimRequest {
+        addr,
+        data: [d0, d1, instr.imm, 0],
+    }
+}
+
+/// Decode a request back to the instruction (media-controller side).
+pub fn decode(req: &PimRequest, map: &AddressMap) -> Result<PimInstruction, String> {
+    let d0 = req.data[0];
+    let op = Opcode::from_u8((d0 & 0xFF) as u8)
+        .ok_or_else(|| format!("bad opcode {}", d0 & 0xFF))?;
+    let src_a = ColRange {
+        start: ((d0 >> 8) & 0xFFFF) as u16,
+        len: ((d0 >> 24) & 0xFFFF) as u16,
+    };
+    let src_b = if (d0 >> 40) & 1 == 1 {
+        Some(ColRange {
+            start: ((d0 >> 41) & 0x3FF) as u16,
+            len: ((d0 >> 51) & 0x3FF) as u16,
+        })
+    } else {
+        None
+    };
+    let dst = ColRange {
+        start: ((req.data[1] >> 16) & 0xFFFF) as u16,
+        len: (req.data[1] & 0xFFFF) as u16,
+    };
+    // cross-check the address-carried result column (the address resolves
+    // to byte granularity; the payload carries the exact bit column)
+    let (_, col) = map.decode_cell_offset(req.addr & (map.page_bytes() - 1));
+    if col != (dst.start as usize) & !7 {
+        return Err(format!(
+            "address result column {} != payload dst {}",
+            col, dst.start
+        ));
+    }
+    Ok(PimInstruction {
+        op,
+        src_a,
+        src_b,
+        dst,
+        imm: req.data[2],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::addr::AddressMap;
+    use crate::util::proptest::check;
+
+    fn map() -> AddressMap {
+        AddressMap::paper_default()
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_simple() {
+        let m = map();
+        let i = PimInstruction::with_imm(
+            Opcode::LtImm,
+            ColRange::new(10, 24),
+            ColRange::new(400, 1),
+            123_456_789,
+        );
+        let req = encode(&i, 0x40000000, &m);
+        assert_eq!(decode(&req, &m).unwrap(), i);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_property() {
+        check("isa-roundtrip", 200, |g| {
+            let ops = [
+                Opcode::EqImm,
+                Opcode::NeImm,
+                Opcode::LtImm,
+                Opcode::GtImm,
+                Opcode::AddImm,
+                Opcode::Eq,
+                Opcode::Lt,
+                Opcode::Set,
+                Opcode::Reset,
+                Opcode::Not,
+                Opcode::And,
+                Opcode::Or,
+                Opcode::Add,
+                Opcode::Mul,
+                Opcode::ReduceSum,
+                Opcode::ReduceMin,
+                Opcode::ReduceMax,
+                Opcode::ColumnTransform,
+            ];
+            let op = *g.pick(&ops);
+            let a = ColRange::new(g.usize(0, 447), g.usize(1, 64));
+            let b = if op.has_src_b() {
+                Some(ColRange::new(g.usize(0, 447), g.usize(1, 64)))
+            } else {
+                None
+            };
+            let i = PimInstruction {
+                op,
+                src_a: a,
+                src_b: b,
+                dst: ColRange::new(g.usize(0, 511), g.usize(1, 64)),
+                imm: if op.has_imm() { g.skewed_u64() } else { 0 },
+            };
+            let req = encode(&i, 0x1_0000_0000, &map());
+            let back = decode(&req, &map()).unwrap();
+            assert_eq!(back, i);
+        });
+    }
+
+    #[test]
+    fn decode_rejects_bad_opcode() {
+        let m = map();
+        let req = PimRequest {
+            addr: 0,
+            data: [255, 0, 0, 0],
+        };
+        assert!(decode(&req, &m).is_err());
+    }
+
+    #[test]
+    fn opcode_names_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for v in 0..=17u8 {
+            let op = Opcode::from_u8(v).unwrap();
+            assert!(seen.insert(op.name()));
+        }
+        assert!(Opcode::from_u8(18).is_none());
+    }
+}

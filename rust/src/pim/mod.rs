@@ -1,0 +1,13 @@
+//! PIM module hardware model (paper §3, §5.2): crossbars with MAGIC NOR
+//! stateful logic, PIM controllers, media controller with FR-FCFS
+//! scheduling, and the energy / endurance / area / power accounting.
+
+pub mod area;
+pub mod controller;
+pub mod crossbar;
+pub mod endurance;
+pub mod energy;
+pub mod isa;
+pub mod module;
+pub mod power;
+pub mod timing;

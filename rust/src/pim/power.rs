@@ -1,0 +1,158 @@
+//! PIM module power sampling (paper §6.3, Fig. 14).
+//!
+//! Power is sampled as the average over 100 ns windows. Deposits are O(1)
+//! per event (a rate difference array, finalized once), so the tracker
+//! absorbs millions of events. Chip power = module power / chips (a bank
+//! is distributed across the module's chips in lockstep).
+
+use crate::config::SystemConfig;
+
+pub const WINDOW_PS: u64 = 100_000; // 100 ns
+
+/// Per-module power trace built from (start, end, energy) deposits.
+pub struct PowerTrace {
+    /// rate change marks per module: (window index, dPower[W])
+    marks: Vec<Vec<(usize, f64)>>,
+    total_pj: Vec<f64>,
+    end_ps: u64,
+}
+
+impl PowerTrace {
+    pub fn new(modules: usize) -> Self {
+        PowerTrace {
+            marks: vec![Vec::new(); modules],
+            total_pj: vec![0.0; modules],
+            end_ps: 0,
+        }
+    }
+
+    /// Deposit `energy_pj` uniformly over [start_ps, end_ps) on `module`.
+    pub fn deposit(&mut self, module: usize, start_ps: u64, end_ps: u64, energy_pj: f64) {
+        if energy_pj <= 0.0 {
+            return;
+        }
+        let end = end_ps.max(start_ps + 1);
+        let w0 = (start_ps / WINDOW_PS) as usize;
+        let w1 = ((end - 1) / WINDOW_PS + 1) as usize;
+        // rate in W over the covered whole windows (window-quantized)
+        let rate = energy_pj / ((w1 - w0) as f64 * WINDOW_PS as f64);
+        self.marks[module].push((w0, rate));
+        self.marks[module].push((w1, -rate));
+        self.total_pj[module] += energy_pj;
+        self.end_ps = self.end_ps.max(end);
+    }
+
+    /// (peak W, average W) per module over the observed span.
+    pub fn finalize(&self) -> Vec<(f64, f64)> {
+        let span_ps = self.end_ps.max(1) as f64;
+        self.marks
+            .iter()
+            .enumerate()
+            .map(|(m, marks)| {
+                let mut sorted = marks.clone();
+                sorted.sort_by_key(|&(w, _)| w);
+                let mut rate = 0.0f64;
+                let mut peak = 0.0f64;
+                for &(_, d) in &sorted {
+                    rate += d;
+                    peak = peak.max(rate);
+                }
+                (peak, self.total_pj[m] / span_ps)
+            })
+            .collect()
+    }
+
+    /// Peak chip power (W): max over modules / chips per module.
+    pub fn peak_chip_w(&self, cfg: &SystemConfig) -> f64 {
+        self.finalize()
+            .iter()
+            .fold(0.0f64, |a, &(p, _)| a.max(p))
+            / cfg.chips_per_module as f64
+    }
+
+    /// Average chip power (W) of the busiest module.
+    pub fn avg_chip_w(&self, cfg: &SystemConfig) -> f64 {
+        self.finalize()
+            .iter()
+            .fold(0.0f64, |a, &(_, avg)| a.max(avg))
+            / cfg.chips_per_module as f64
+    }
+
+    pub fn end_ps(&self) -> u64 {
+        self.end_ps
+    }
+}
+
+/// Theoretical peak chip power if *all crossbars* of a module execute a
+/// column-wise stateful-logic cycle simultaneously (paper: ~730 W/chip).
+pub fn theoretical_peak_all_xbars_chip_w(cfg: &SystemConfig) -> f64 {
+    let xbars = cfg.module_capacity as f64 * 8.0
+        / (cfg.xbar_rows * cfg.xbar_cols) as f64;
+    let cells_per_cycle = xbars * cfg.xbar_rows as f64;
+    let energy_j = cells_per_cycle * cfg.logic_energy_fj_per_bit * 1e-15;
+    let cycle_s = cfg.logic_cycle_ps as f64 * 1e-12;
+    energy_j / cycle_s / cfg.chips_per_module as f64
+}
+
+/// Theoretical peak chip power when all `pages_accessed` pages of the
+/// busiest module operate in parallel (paper Fig. 14 "theoretical": up to
+/// ~330 W for the largest query footprint).
+pub fn theoretical_peak_query_chip_w(cfg: &SystemConfig, pages_in_max_module: u64) -> f64 {
+    let pages_per_module = cfg.module_capacity / cfg.page_bytes;
+    theoretical_peak_all_xbars_chip_w(cfg) * pages_in_max_module as f64
+        / pages_per_module as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn theoretical_peak_matches_paper_scale() {
+        let w = theoretical_peak_all_xbars_chip_w(&SystemConfig::default());
+        // paper: ~730 W per chip
+        assert!((w - 730.0).abs() / 730.0 < 0.05, "{w}");
+    }
+
+    #[test]
+    fn query_peak_scales_with_pages() {
+        let cfg = SystemConfig::default();
+        let full = theoretical_peak_all_xbars_chip_w(&cfg);
+        let half = theoretical_peak_query_chip_w(&cfg, 64); // 64 of 128 pages
+        assert!((half - full / 2.0).abs() / full < 1e-9);
+    }
+
+    #[test]
+    fn trace_peak_and_avg() {
+        let cfg = SystemConfig::default();
+        let mut t = PowerTrace::new(1);
+        // 1 W for exactly one window: 100 ns * 1 W = 1e5 pJ
+        t.deposit(0, 0, WINDOW_PS, 1e5);
+        // quiet second window
+        t.deposit(0, WINDOW_PS, 2 * WINDOW_PS, 0.0);
+        let f = t.finalize();
+        assert!((f[0].0 - 1.0).abs() < 1e-9);
+        // average over the 100 ns span (end_ps = WINDOW_PS since the
+        // zero-energy deposit is skipped)
+        assert!((f[0].1 - 1.0).abs() < 1e-9);
+        assert!(t.peak_chip_w(&cfg) > 0.0);
+    }
+
+    #[test]
+    fn overlapping_deposits_sum() {
+        let mut t = PowerTrace::new(1);
+        t.deposit(0, 0, WINDOW_PS, 1e5);
+        t.deposit(0, 0, WINDOW_PS, 1e5);
+        let f = t.finalize();
+        assert!((f[0].0 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn modules_tracked_independently() {
+        let mut t = PowerTrace::new(2);
+        t.deposit(0, 0, WINDOW_PS, 1e5);
+        t.deposit(1, 0, WINDOW_PS, 3e5);
+        let f = t.finalize();
+        assert!(f[1].0 > f[0].0);
+    }
+}

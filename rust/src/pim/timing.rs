@@ -1,0 +1,103 @@
+//! Interface timing models: OpenCAPI channel and R-DDR array access
+//! (paper §3.2, §5.2.1, Table 3).
+
+use crate::config::SystemConfig;
+
+/// Picoseconds helper.
+pub const PS_PER_NS: u64 = 1000;
+
+#[derive(Clone, Debug)]
+pub struct Timing {
+    /// Channel byte time (ps/byte) including protocol header amortization
+    /// for streaming transfers.
+    pub channel_ps_per_byte: f64,
+    /// One-way channel latency (ps).
+    pub channel_latency_ps: u64,
+    /// Stateful logic cycle (ps).
+    pub logic_cycle_ps: u64,
+    /// Bank array read throughput (ps/byte): an R-DDR access retrieves
+    /// 16 bits from each of 32 lockstep crossbars (64 B) per array cycle.
+    pub bank_read_ps_per_byte: f64,
+    /// Fixed array access latency for the first beat (ps).
+    pub bank_access_ps: u64,
+    /// Bank array write throughput (ps/byte).
+    pub bank_write_ps_per_byte: f64,
+}
+
+impl Timing {
+    pub fn new(cfg: &SystemConfig) -> Self {
+        let line = 64.0;
+        let header = cfg.opencapi_header_bytes as f64;
+        // effective channel rate accounts for per-line header overhead
+        let eff_bw = cfg.opencapi_bw_bps * line / (line + header);
+        // R-DDR: one 64 B array beat per logic-class array cycle (30 ns).
+        let beat_ps = cfg.logic_cycle_ps as f64;
+        Timing {
+            channel_ps_per_byte: 1e12 / eff_bw,
+            channel_latency_ps: cfg.opencapi_latency_ns * PS_PER_NS,
+            logic_cycle_ps: cfg.logic_cycle_ps,
+            bank_read_ps_per_byte: beat_ps / 64.0,
+            bank_access_ps: cfg.rram_read_ns * PS_PER_NS,
+            bank_write_ps_per_byte: beat_ps / 64.0 * 3.0,
+        }
+    }
+
+    /// Time to stream `bytes` over the channel (occupancy, no latency).
+    pub fn channel_occupancy_ps(&self, bytes: u64) -> u64 {
+        (bytes as f64 * self.channel_ps_per_byte).ceil() as u64
+    }
+
+    /// Time for a bank to produce `bytes` of array reads (occupancy).
+    pub fn bank_read_ps(&self, bytes: u64) -> u64 {
+        self.bank_access_ps + (bytes as f64 * self.bank_read_ps_per_byte).ceil() as u64
+    }
+
+    /// Time for a bank to absorb `bytes` of array writes.
+    pub fn bank_write_ps(&self, bytes: u64) -> u64 {
+        self.bank_access_ps + (bytes as f64 * self.bank_write_ps_per_byte).ceil() as u64
+    }
+
+    /// PIM instruction execution time for `cycles` stateful-logic cycles.
+    pub fn pim_exec_ps(&self, cycles: u64) -> u64 {
+        cycles * self.logic_cycle_ps
+    }
+
+    /// Effective per-bank read bandwidth in bytes/s (for sanity checks).
+    pub fn bank_read_bw_bps(&self) -> f64 {
+        1e12 / self.bank_read_ps_per_byte
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn channel_slower_than_raw_bw_due_to_headers() {
+        let cfg = SystemConfig::default();
+        let t = Timing::new(&cfg);
+        let raw_ps_per_byte = 1e12 / cfg.opencapi_bw_bps;
+        assert!(t.channel_ps_per_byte > raw_ps_per_byte);
+    }
+
+    #[test]
+    fn bank_read_bw_is_ddr_class() {
+        let t = Timing::new(&SystemConfig::default());
+        let bw = t.bank_read_bw_bps();
+        // 64 B / 30 ns ≈ 2.1 GB/s per bank
+        assert!(bw > 1e9 && bw < 5e9, "bw {bw}");
+    }
+
+    #[test]
+    fn pim_exec_time_scales_with_cycles() {
+        let t = Timing::new(&SystemConfig::default());
+        assert_eq!(t.pim_exec_ps(100), 100 * 30_000);
+    }
+
+    #[test]
+    fn occupancy_monotone() {
+        let t = Timing::new(&SystemConfig::default());
+        assert!(t.channel_occupancy_ps(128) > t.channel_occupancy_ps(64));
+        assert!(t.bank_read_ps(4096) > t.bank_read_ps(64));
+    }
+}

@@ -1,0 +1,337 @@
+//! Query AST: filter predicates and aggregate expressions over one
+//! relation's PIM copy (the compiler's input; produced by `tpch.rs` or by
+//! library users building ad-hoc analytics — see examples/custom_db.rs).
+
+use crate::db::schema::RelId;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CmpOp {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+/// Filter predicate tree. Attribute references are by name; the compiler
+/// resolves them against the relation layout.
+#[derive(Clone, Debug)]
+pub enum Pred {
+    /// attr <op> constant (already in the attribute's encoding domain).
+    CmpImm {
+        attr: &'static str,
+        op: CmpOp,
+        value: u64,
+    },
+    /// attr IN {values} — dictionary-expanded LIKE and IN lists.
+    InSet {
+        attr: &'static str,
+        values: Vec<u64>,
+    },
+    /// lo <= attr <= hi (inclusive).
+    Between {
+        attr: &'static str,
+        lo: u64,
+        hi: u64,
+    },
+    /// attr_a <op> attr_b (e.g. l_commitdate < l_receiptdate).
+    CmpCols {
+        a: &'static str,
+        op: CmpOp,
+        b: &'static str,
+    },
+    And(Vec<Pred>),
+    Or(Vec<Pred>),
+    Not(Box<Pred>),
+    /// Always true (used for aggregate-only queries).
+    True,
+}
+
+impl Pred {
+    pub fn and(preds: Vec<Pred>) -> Pred {
+        Pred::And(preds)
+    }
+
+    /// Attributes referenced by this predicate (for the baseline's
+    /// access-ordering and width accounting).
+    pub fn attrs(&self) -> Vec<&'static str> {
+        let mut out = Vec::new();
+        self.collect_attrs(&mut out);
+        out.dedup();
+        out
+    }
+
+    fn collect_attrs(&self, out: &mut Vec<&'static str>) {
+        match self {
+            Pred::CmpImm { attr, .. } | Pred::InSet { attr, .. } | Pred::Between { attr, .. } => {
+                out.push(attr)
+            }
+            Pred::CmpCols { a, b, .. } => {
+                out.push(a);
+                out.push(b);
+            }
+            Pred::And(ps) | Pred::Or(ps) => {
+                for p in ps {
+                    p.collect_attrs(out);
+                }
+            }
+            Pred::Not(p) => p.collect_attrs(out),
+            Pred::True => {}
+        }
+    }
+
+    /// Evaluate on a decoded record (attr lookup closure) — the scalar
+    /// oracle used by the baseline executor and by differential tests.
+    pub fn eval(&self, get: &dyn Fn(&str) -> u64) -> bool {
+        match self {
+            Pred::CmpImm { attr, op, value } => cmp(get(attr), *op, *value),
+            Pred::InSet { attr, values } => values.contains(&get(attr)),
+            Pred::Between { attr, lo, hi } => {
+                let v = get(attr);
+                *lo <= v && v <= *hi
+            }
+            Pred::CmpCols { a, op, b } => cmp(get(a), *op, get(b)),
+            Pred::And(ps) => ps.iter().all(|p| p.eval(get)),
+            Pred::Or(ps) => ps.iter().any(|p| p.eval(get)),
+            Pred::Not(p) => !p.eval(get),
+            Pred::True => true,
+        }
+    }
+}
+
+fn cmp(a: u64, op: CmpOp, b: u64) -> bool {
+    match op {
+        CmpOp::Eq => a == b,
+        CmpOp::Ne => a != b,
+        CmpOp::Lt => a < b,
+        CmpOp::Le => a <= b,
+        CmpOp::Gt => a > b,
+        CmpOp::Ge => a >= b,
+    }
+}
+
+/// Value expression an aggregate reduces. The PIM arithmetic instructions
+/// (Not/AddImm/Mul/Add) compute these in-array before the reduce.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ValExpr {
+    /// The attribute itself.
+    Attr(&'static str),
+    /// Constant 1 per record (COUNT via SUM of the filter column).
+    One,
+    /// a * b (both attributes).
+    MulAttrs(&'static str, &'static str),
+    /// attr * (scale - other): e.g. extendedprice * (100 - discount),
+    /// the Q1/Q6 revenue terms in scaled integer arithmetic.
+    MulComplement {
+        attr: &'static str,
+        scale: u64,
+        other: &'static str,
+    },
+    /// attr * (scale + other): e.g. ... * (100 + tax).
+    MulSum {
+        attr: &'static str,
+        scale: u64,
+        other: &'static str,
+    },
+    /// attr * (s1 - o1) * (s2 + o2): the Q1 charge term
+    /// extendedprice * (100 - discount) * (100 + tax).
+    MulComplementSum {
+        attr: &'static str,
+        scale1: u64,
+        other1: &'static str,
+        scale2: u64,
+        other2: &'static str,
+    },
+}
+
+impl ValExpr {
+    pub fn attrs(&self) -> Vec<&'static str> {
+        match self {
+            ValExpr::Attr(a) => vec![a],
+            ValExpr::One => vec![],
+            ValExpr::MulAttrs(a, b) => vec![a, b],
+            ValExpr::MulComplement { attr, other, .. }
+            | ValExpr::MulSum { attr, other, .. } => vec![attr, other],
+            ValExpr::MulComplementSum {
+                attr,
+                other1,
+                other2,
+                ..
+            } => vec![attr, other1, other2],
+        }
+    }
+
+    /// Scalar oracle.
+    pub fn eval(&self, get: &dyn Fn(&str) -> u64) -> u128 {
+        match self {
+            ValExpr::Attr(a) => get(a) as u128,
+            ValExpr::One => 1,
+            ValExpr::MulAttrs(a, b) => get(a) as u128 * get(b) as u128,
+            ValExpr::MulComplement { attr, scale, other } => {
+                get(attr) as u128 * (*scale as u128 - get(other) as u128)
+            }
+            ValExpr::MulSum { attr, scale, other } => {
+                get(attr) as u128 * (*scale as u128 + get(other) as u128)
+            }
+            ValExpr::MulComplementSum {
+                attr,
+                scale1,
+                other1,
+                scale2,
+                other2,
+            } => {
+                get(attr) as u128
+                    * (*scale1 as u128 - get(other1) as u128)
+                    * (*scale2 as u128 + get(other2) as u128)
+            }
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggKind {
+    Sum,
+    Count,
+    Min,
+    Max,
+    /// Average = in-PIM SUM + COUNT, divided at the host (paper §4.2).
+    Avg,
+}
+
+#[derive(Clone, Debug)]
+pub struct Aggregate {
+    pub kind: AggKind,
+    pub expr: ValExpr,
+    pub label: &'static str,
+}
+
+/// Per-relation query spec: what PIMDB executes on one relation's pages.
+#[derive(Clone, Debug)]
+pub struct RelQuery {
+    pub rel: RelId,
+    pub filter: Pred,
+    /// Group-by attributes (dictionary-encoded, small domains); empty for
+    /// plain filters/aggregates.
+    pub group_by: Vec<&'static str>,
+    /// Aggregates (empty for filter-only relations: the filter result
+    /// column is column-transformed and read instead).
+    pub aggregates: Vec<Aggregate>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueryKind {
+    /// Entire query runs in PIMDB (single-relation filter+aggregate).
+    Full,
+    /// PIMDB performs the filters; the rest executes at the host (out of
+    /// the measured scope, as in the paper).
+    FilterOnly,
+}
+
+/// A TPC-H query as PIMDB sees it.
+#[derive(Clone, Debug)]
+pub struct Query {
+    pub name: &'static str,
+    pub kind: QueryKind,
+    pub rels: Vec<RelQuery>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pred_eval_oracle() {
+        let p = Pred::And(vec![
+            Pred::CmpImm {
+                attr: "a",
+                op: CmpOp::Ge,
+                value: 10,
+            },
+            Pred::Or(vec![
+                Pred::InSet {
+                    attr: "b",
+                    values: vec![1, 2, 3],
+                },
+                Pred::Not(Box::new(Pred::Between {
+                    attr: "c",
+                    lo: 5,
+                    hi: 9,
+                })),
+            ]),
+        ]);
+        let mk = |a: u64, b: u64, c: u64| move |n: &str| match n {
+            "a" => a,
+            "b" => b,
+            "c" => c,
+            _ => 0,
+        };
+        assert!(p.eval(&mk(10, 2, 7)));
+        assert!(p.eval(&mk(10, 9, 4))); // c outside between
+        assert!(!p.eval(&mk(9, 2, 7))); // a too small
+        assert!(!p.eval(&mk(10, 9, 7))); // both or-arms false
+    }
+
+    #[test]
+    fn cmp_cols_eval() {
+        let p = Pred::CmpCols {
+            a: "x",
+            op: CmpOp::Lt,
+            b: "y",
+        };
+        assert!(p.eval(&|n| if n == "x" { 3 } else { 4 }));
+        assert!(!p.eval(&|_| 3));
+    }
+
+    #[test]
+    fn attrs_collection_dedups() {
+        let p = Pred::And(vec![
+            Pred::CmpImm {
+                attr: "a",
+                op: CmpOp::Eq,
+                value: 1,
+            },
+            Pred::CmpImm {
+                attr: "a",
+                op: CmpOp::Ne,
+                value: 2,
+            },
+            Pred::CmpCols {
+                a: "a",
+                op: CmpOp::Lt,
+                b: "b",
+            },
+        ]);
+        assert_eq!(p.attrs(), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn val_expr_oracle() {
+        let get = |n: &str| match n {
+            "price" => 200u64,
+            "disc" => 5,
+            "tax" => 8,
+            _ => 0,
+        };
+        assert_eq!(ValExpr::Attr("price").eval(&get), 200);
+        assert_eq!(ValExpr::One.eval(&get), 1);
+        assert_eq!(
+            ValExpr::MulComplement {
+                attr: "price",
+                scale: 100,
+                other: "disc"
+            }
+            .eval(&get),
+            200 * 95
+        );
+        assert_eq!(
+            ValExpr::MulSum {
+                attr: "price",
+                scale: 100,
+                other: "tax"
+            }
+            .eval(&get),
+            200 * 108
+        );
+    }
+}

@@ -1,0 +1,6 @@
+//! Query layer: AST, the 19 evaluated TPC-H queries, and the compiler
+//! lowering them to PIM instruction programs.
+
+pub mod ast;
+pub mod compiler;
+pub mod tpch;

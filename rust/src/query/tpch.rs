@@ -1,0 +1,689 @@
+//! The 19 TPC-H queries PIMDB evaluates (paper Table 2, §5.1).
+//!
+//! Full queries (Q1, Q6, Q22_sub) run filter **and** aggregation in the
+//! PIM modules; filter-only queries run the per-relation filters of the
+//! relations listed in Table 2 (the join/rest executes at the host and is
+//! out of the measured scope, as in the paper). Q9/Q13/Q18 filter only
+//! attributes excluded from the PIM copy and are not evaluated.
+//!
+//! Predicates follow the TPC-H v3 spec with its validation parameter
+//! values; LIKE predicates are expanded over the dictionary (the paper's
+//! dictionary encoding "allows equality comparisons"), and region /
+//! nation-name predicates are folded to nation-key IN-sets via the
+//! DRAM-resident NATION/REGION tables.
+
+use crate::db::schema::{self as s, RelId};
+
+use super::ast::*;
+
+fn eq(attr: &'static str, value: u64) -> Pred {
+    Pred::CmpImm {
+        attr,
+        op: CmpOp::Eq,
+        value,
+    }
+}
+
+fn lt(attr: &'static str, value: u64) -> Pred {
+    Pred::CmpImm {
+        attr,
+        op: CmpOp::Lt,
+        value,
+    }
+}
+
+fn ge(attr: &'static str, value: u64) -> Pred {
+    Pred::CmpImm {
+        attr,
+        op: CmpOp::Ge,
+        value,
+    }
+}
+
+fn gt(attr: &'static str, value: u64) -> Pred {
+    Pred::CmpImm {
+        attr,
+        op: CmpOp::Gt,
+        value,
+    }
+}
+
+fn ne(attr: &'static str, value: u64) -> Pred {
+    Pred::CmpImm {
+        attr,
+        op: CmpOp::Ne,
+        value,
+    }
+}
+
+fn in_set(attr: &'static str, values: Vec<u64>) -> Pred {
+    Pred::InSet { attr, values }
+}
+
+fn between(attr: &'static str, lo: u64, hi: u64) -> Pred {
+    Pred::Between { attr, lo, hi }
+}
+
+/// date range [from, to): from <= attr < to.
+fn date_range(attr: &'static str, from: u64, to: u64) -> Pred {
+    Pred::And(vec![ge(attr, from), lt(attr, to)])
+}
+
+fn filter_rel(rel: RelId, filter: Pred) -> RelQuery {
+    RelQuery {
+        rel,
+        filter,
+        group_by: vec![],
+        aggregates: vec![],
+    }
+}
+
+fn sum(expr: ValExpr, label: &'static str) -> Aggregate {
+    Aggregate {
+        kind: AggKind::Sum,
+        expr,
+        label,
+    }
+}
+
+/// All evaluated queries in paper order.
+pub fn all_queries() -> Vec<Query> {
+    vec![
+        q1(),
+        q2(),
+        q3(),
+        q4(),
+        q5(),
+        q6(),
+        q7(),
+        q8(),
+        q10(),
+        q11(),
+        q12(),
+        q14(),
+        q15(),
+        q16(),
+        q17(),
+        q19(),
+        q20(),
+        q21(),
+        q22_sub(),
+    ]
+}
+
+pub fn query(name: &str) -> Option<Query> {
+    all_queries()
+        .into_iter()
+        .find(|q| q.name.eq_ignore_ascii_case(name))
+}
+
+pub fn filter_only_queries() -> Vec<Query> {
+    all_queries()
+        .into_iter()
+        .filter(|q| q.kind == QueryKind::FilterOnly)
+        .collect()
+}
+
+pub fn full_queries() -> Vec<Query> {
+    all_queries()
+        .into_iter()
+        .filter(|q| q.kind == QueryKind::Full)
+        .collect()
+}
+
+/// Q1 — pricing summary report (full): LINEITEM where
+/// shipdate <= 1998-12-01 - 90 days, grouped by returnflag/linestatus.
+/// Money is in cents; the (1-discount)/(1+tax) terms use x100 scaling,
+/// divided back at the host (paper §4.2 non-associative host step).
+fn q1() -> Query {
+    Query {
+        name: "Q1",
+        kind: QueryKind::Full,
+        rels: vec![RelQuery {
+            rel: RelId::Lineitem,
+            filter: Pred::CmpImm {
+                attr: "l_shipdate",
+                op: CmpOp::Le,
+                value: s::date(1998, 12, 1) - 90,
+            },
+            group_by: vec!["l_returnflag", "l_linestatus"],
+            aggregates: vec![
+                sum(ValExpr::Attr("l_quantity"), "sum_qty"),
+                sum(ValExpr::Attr("l_extendedprice"), "sum_base_price"),
+                sum(
+                    ValExpr::MulComplement {
+                        attr: "l_extendedprice",
+                        scale: 100,
+                        other: "l_discount",
+                    },
+                    "sum_disc_price_x100",
+                ),
+                sum(
+                    ValExpr::MulComplementSum {
+                        attr: "l_extendedprice",
+                        scale1: 100,
+                        other1: "l_discount",
+                        scale2: 100,
+                        other2: "l_tax",
+                    },
+                    "sum_charge_x10000",
+                ),
+                sum(ValExpr::Attr("l_discount"), "sum_disc"),
+                Aggregate {
+                    kind: AggKind::Count,
+                    expr: ValExpr::One,
+                    label: "count_order",
+                },
+            ],
+        }],
+    }
+}
+
+/// Q2 — minimum cost supplier (filter-only): PART (size=15, type %BRASS),
+/// SUPPLIER (in EUROPE).
+fn q2() -> Query {
+    Query {
+        name: "Q2",
+        kind: QueryKind::FilterOnly,
+        rels: vec![
+            filter_rel(
+                RelId::Part,
+                Pred::And(vec![
+                    eq("p_size", 15),
+                    in_set("p_type", s::type_ids_ending_with("BRASS")),
+                ]),
+            ),
+            filter_rel(
+                RelId::Supplier,
+                in_set("s_nationkey", s::nations_in_region("EUROPE")),
+            ),
+        ],
+    }
+}
+
+/// Q3 — shipping priority (filter-only): CUSTOMER BUILDING,
+/// ORDERS before 1995-03-15, LINEITEM after it.
+fn q3() -> Query {
+    let d = s::date(1995, 3, 15);
+    Query {
+        name: "Q3",
+        kind: QueryKind::FilterOnly,
+        rels: vec![
+            filter_rel(RelId::Customer, eq("c_mktsegment", s::segment_id("BUILDING"))),
+            filter_rel(RelId::Orders, lt("o_orderdate", d)),
+            filter_rel(RelId::Lineitem, gt("l_shipdate", d)),
+        ],
+    }
+}
+
+/// Q4 — order priority checking (filter-only): ORDERS in 1993-Q3,
+/// LINEITEM with commitdate < receiptdate (two-column compare).
+fn q4() -> Query {
+    Query {
+        name: "Q4",
+        kind: QueryKind::FilterOnly,
+        rels: vec![
+            filter_rel(
+                RelId::Orders,
+                date_range("o_orderdate", s::date(1993, 7, 1), s::date(1993, 10, 1)),
+            ),
+            filter_rel(
+                RelId::Lineitem,
+                Pred::CmpCols {
+                    a: "l_commitdate",
+                    op: CmpOp::Lt,
+                    b: "l_receiptdate",
+                },
+            ),
+        ],
+    }
+}
+
+/// Q5 — local supplier volume (filter-only): ASIA suppliers/customers,
+/// ORDERS in 1994.
+fn q5() -> Query {
+    let asia = s::nations_in_region("ASIA");
+    Query {
+        name: "Q5",
+        kind: QueryKind::FilterOnly,
+        rels: vec![
+            filter_rel(RelId::Supplier, in_set("s_nationkey", asia.clone())),
+            filter_rel(RelId::Customer, in_set("c_nationkey", asia)),
+            filter_rel(
+                RelId::Orders,
+                date_range("o_orderdate", s::date(1994, 1, 1), s::date(1995, 1, 1)),
+            ),
+        ],
+    }
+}
+
+/// Q6 — forecasting revenue change (full): LINEITEM in 1994,
+/// discount in [0.05, 0.07], quantity < 24; sum(extprice * discount).
+fn q6() -> Query {
+    Query {
+        name: "Q6",
+        kind: QueryKind::Full,
+        rels: vec![RelQuery {
+            rel: RelId::Lineitem,
+            filter: Pred::And(vec![
+                date_range("l_shipdate", s::date(1994, 1, 1), s::date(1995, 1, 1)),
+                between("l_discount", 5, 7),
+                lt("l_quantity", 24),
+            ]),
+            group_by: vec![],
+            aggregates: vec![sum(
+                ValExpr::MulAttrs("l_extendedprice", "l_discount"),
+                "revenue_x100",
+            )],
+        }],
+    }
+}
+
+/// Q7 — volume shipping (filter-only): FRANCE/GERMANY suppliers and
+/// customers, LINEITEM shipped 1995-1996.
+fn q7() -> Query {
+    let fr_de = vec![s::nation_id("FRANCE"), s::nation_id("GERMANY")];
+    Query {
+        name: "Q7",
+        kind: QueryKind::FilterOnly,
+        rels: vec![
+            filter_rel(RelId::Supplier, in_set("s_nationkey", fr_de.clone())),
+            filter_rel(RelId::Customer, in_set("c_nationkey", fr_de)),
+            filter_rel(
+                RelId::Lineitem,
+                between(
+                    "l_shipdate",
+                    s::date(1995, 1, 1),
+                    s::date(1996, 12, 31),
+                ),
+            ),
+        ],
+    }
+}
+
+/// Q8 — national market share (filter-only): PART of a given type,
+/// ORDERS 1995-1996, CUSTOMER in AMERICA.
+fn q8() -> Query {
+    Query {
+        name: "Q8",
+        kind: QueryKind::FilterOnly,
+        rels: vec![
+            filter_rel(
+                RelId::Part,
+                eq("p_type", s::type_id_of("ECONOMY ANODIZED STEEL")),
+            ),
+            filter_rel(
+                RelId::Orders,
+                between(
+                    "o_orderdate",
+                    s::date(1995, 1, 1),
+                    s::date(1996, 12, 31),
+                ),
+            ),
+            filter_rel(
+                RelId::Customer,
+                in_set("c_nationkey", s::nations_in_region("AMERICA")),
+            ),
+        ],
+    }
+}
+
+/// Q10 — returned item reporting (filter-only): ORDERS 1993-Q4,
+/// LINEITEM returnflag = 'R'.
+fn q10() -> Query {
+    Query {
+        name: "Q10",
+        kind: QueryKind::FilterOnly,
+        rels: vec![
+            filter_rel(
+                RelId::Orders,
+                date_range("o_orderdate", s::date(1993, 10, 1), s::date(1994, 1, 1)),
+            ),
+            filter_rel(
+                RelId::Lineitem,
+                eq("l_returnflag", s::returnflag_id("R")),
+            ),
+        ],
+    }
+}
+
+/// Q11 — important stock identification (filter-only): GERMANY suppliers.
+/// The paper notes this is the one slowdown case (small relation, small
+/// filter).
+fn q11() -> Query {
+    Query {
+        name: "Q11",
+        kind: QueryKind::FilterOnly,
+        rels: vec![filter_rel(
+            RelId::Supplier,
+            eq("s_nationkey", s::nation_id("GERMANY")),
+        )],
+    }
+}
+
+/// Q12 — shipping modes and order priority (filter-only): LINEITEM with
+/// shipmode in (MAIL, SHIP), commitdate < receiptdate,
+/// shipdate < commitdate, receiptdate in 1994.
+fn q12() -> Query {
+    Query {
+        name: "Q12",
+        kind: QueryKind::FilterOnly,
+        rels: vec![filter_rel(
+            RelId::Lineitem,
+            Pred::And(vec![
+                in_set(
+                    "l_shipmode",
+                    vec![s::shipmode_id("MAIL"), s::shipmode_id("SHIP")],
+                ),
+                Pred::CmpCols {
+                    a: "l_commitdate",
+                    op: CmpOp::Lt,
+                    b: "l_receiptdate",
+                },
+                Pred::CmpCols {
+                    a: "l_shipdate",
+                    op: CmpOp::Lt,
+                    b: "l_commitdate",
+                },
+                date_range("l_receiptdate", s::date(1994, 1, 1), s::date(1995, 1, 1)),
+            ]),
+        )],
+    }
+}
+
+/// Q14 — promotion effect (filter-only): LINEITEM shipped 1995-09.
+fn q14() -> Query {
+    Query {
+        name: "Q14",
+        kind: QueryKind::FilterOnly,
+        rels: vec![filter_rel(
+            RelId::Lineitem,
+            date_range("l_shipdate", s::date(1995, 9, 1), s::date(1995, 10, 1)),
+        )],
+    }
+}
+
+/// Q15 — top supplier (filter-only): LINEITEM shipped 1996-Q1.
+fn q15() -> Query {
+    Query {
+        name: "Q15",
+        kind: QueryKind::FilterOnly,
+        rels: vec![filter_rel(
+            RelId::Lineitem,
+            date_range("l_shipdate", s::date(1996, 1, 1), s::date(1996, 4, 1)),
+        )],
+    }
+}
+
+/// Q16 — parts/supplier relationship (filter-only): PART with
+/// brand <> Brand#45, type not like MEDIUM POLISHED%, size in 8 values.
+fn q16() -> Query {
+    Query {
+        name: "Q16",
+        kind: QueryKind::FilterOnly,
+        rels: vec![filter_rel(
+            RelId::Part,
+            Pred::And(vec![
+                ne("p_brand", s::brand_id("Brand#45")),
+                Pred::Not(Box::new(in_set(
+                    "p_type",
+                    s::type_ids_with_prefix2("MEDIUM", "POLISHED"),
+                ))),
+                in_set("p_size", vec![49, 14, 23, 45, 19, 3, 36, 9]),
+            ]),
+        )],
+    }
+}
+
+/// Q17 — small-quantity-order revenue (filter-only): PART Brand#23,
+/// MED BOX containers.
+fn q17() -> Query {
+    Query {
+        name: "Q17",
+        kind: QueryKind::FilterOnly,
+        rels: vec![filter_rel(
+            RelId::Part,
+            Pred::And(vec![
+                eq("p_brand", s::brand_id("Brand#23")),
+                eq("p_container", s::container_id("MED BOX")),
+            ]),
+        )],
+    }
+}
+
+/// Q19 — discounted revenue (filter-only): the three-way disjunction over
+/// PART (brand/container/size) and LINEITEM (quantity/shipmode/instruct).
+fn q19() -> Query {
+    let air = vec![s::shipmode_id("AIR"), s::shipmode_id("REG AIR")];
+    let sm_containers = vec![
+        s::container_id("SM CASE"),
+        s::container_id("SM BOX"),
+        s::container_id("SM PACK"),
+        s::container_id("SM PKG"),
+    ];
+    let med_containers = vec![
+        s::container_id("MED BAG"),
+        s::container_id("MED BOX"),
+        s::container_id("MED PKG"),
+        s::container_id("MED PACK"),
+    ];
+    let lg_containers = vec![
+        s::container_id("LG CASE"),
+        s::container_id("LG BOX"),
+        s::container_id("LG PACK"),
+        s::container_id("LG PKG"),
+    ];
+    Query {
+        name: "Q19",
+        kind: QueryKind::FilterOnly,
+        rels: vec![
+            filter_rel(
+                RelId::Part,
+                Pred::Or(vec![
+                    Pred::And(vec![
+                        eq("p_brand", s::brand_id("Brand#12")),
+                        in_set("p_container", sm_containers),
+                        between("p_size", 1, 5),
+                    ]),
+                    Pred::And(vec![
+                        eq("p_brand", s::brand_id("Brand#23")),
+                        in_set("p_container", med_containers),
+                        between("p_size", 1, 10),
+                    ]),
+                    Pred::And(vec![
+                        eq("p_brand", s::brand_id("Brand#34")),
+                        in_set("p_container", lg_containers),
+                        between("p_size", 1, 15),
+                    ]),
+                ]),
+            ),
+            filter_rel(
+                RelId::Lineitem,
+                Pred::And(vec![
+                    Pred::Or(vec![
+                        between("l_quantity", 1, 11),
+                        between("l_quantity", 10, 20),
+                        between("l_quantity", 20, 30),
+                    ]),
+                    in_set("l_shipmode", air),
+                    eq("l_shipinstruct", s::instruct_id("DELIVER IN PERSON")),
+                ]),
+            ),
+        ],
+    }
+}
+
+/// Q20 — potential part promotion (filter-only): CANADA suppliers,
+/// LINEITEM shipped in 1994.
+fn q20() -> Query {
+    Query {
+        name: "Q20",
+        kind: QueryKind::FilterOnly,
+        rels: vec![
+            filter_rel(
+                RelId::Supplier,
+                eq("s_nationkey", s::nation_id("CANADA")),
+            ),
+            filter_rel(
+                RelId::Lineitem,
+                date_range("l_shipdate", s::date(1994, 1, 1), s::date(1995, 1, 1)),
+            ),
+        ],
+    }
+}
+
+/// Q21 — suppliers who kept orders waiting (filter-only): SAUDI ARABIA
+/// suppliers, ORDERS with status F, LINEITEM receipt > commit.
+fn q21() -> Query {
+    Query {
+        name: "Q21",
+        kind: QueryKind::FilterOnly,
+        rels: vec![
+            filter_rel(
+                RelId::Supplier,
+                eq("s_nationkey", s::nation_id("SAUDI ARABIA")),
+            ),
+            filter_rel(
+                RelId::Orders,
+                eq("o_orderstatus", s::orderstatus_id("F")),
+            ),
+            filter_rel(
+                RelId::Lineitem,
+                Pred::CmpCols {
+                    a: "l_receiptdate",
+                    op: CmpOp::Gt,
+                    b: "l_commitdate",
+                },
+            ),
+        ],
+    }
+}
+
+/// Q22_sub — the inner sub-query of global sales opportunity (full):
+/// CUSTOMER with acctbal > 0.00 and phone country code in seven values;
+/// avg(acctbal) = in-PIM SUM + COUNT, host division.
+fn q22_sub() -> Query {
+    // country codes are nationkey + 10 in our generator; the spec values
+    // 13,31,23,29,30,18,17 are the same ids.
+    let codes = vec![13, 31, 23, 29, 30, 18, 17];
+    Query {
+        name: "Q22_sub",
+        kind: QueryKind::Full,
+        rels: vec![RelQuery {
+            rel: RelId::Customer,
+            filter: Pred::And(vec![
+                in_set("c_phone_cc", codes),
+                // acctbal > 0.00 with the +100000 cent offset
+                gt("c_acctbal", 100_000),
+            ]),
+            group_by: vec![],
+            aggregates: vec![Aggregate {
+                kind: AggKind::Avg,
+                expr: ValExpr::Attr("c_acctbal"),
+                label: "avg_acctbal",
+            }],
+        }],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nineteen_queries_defined() {
+        let qs = all_queries();
+        assert_eq!(qs.len(), 19);
+        assert_eq!(full_queries().len(), 3);
+        assert_eq!(filter_only_queries().len(), 16);
+        // unique names
+        let mut names: Vec<_> = qs.iter().map(|q| q.name).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 19);
+    }
+
+    #[test]
+    fn table2_relation_sets() {
+        // spot-check against paper Table 2
+        let rels = |n: &str| {
+            query(n)
+                .unwrap()
+                .rels
+                .iter()
+                .map(|r| r.rel)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(rels("Q2"), vec![RelId::Part, RelId::Supplier]);
+        assert_eq!(
+            rels("Q3"),
+            vec![RelId::Customer, RelId::Orders, RelId::Lineitem]
+        );
+        assert_eq!(rels("Q11"), vec![RelId::Supplier]);
+        assert_eq!(rels("Q1"), vec![RelId::Lineitem]);
+        assert_eq!(rels("Q22_sub"), vec![RelId::Customer]);
+        assert_eq!(
+            rels("Q21"),
+            vec![RelId::Supplier, RelId::Orders, RelId::Lineitem]
+        );
+    }
+
+    #[test]
+    fn lookup_case_insensitive() {
+        assert!(query("q6").is_some());
+        assert!(query("Q22_SUB").is_some());
+        assert!(query("q13").is_none()); // excluded by the paper
+    }
+
+    #[test]
+    fn all_filter_attrs_exist_in_schema() {
+        for q in all_queries() {
+            for rq in &q.rels {
+                for a in rq.filter.attrs() {
+                    assert!(
+                        crate::db::schema::attr(rq.rel, a).is_some(),
+                        "{} references missing {:?}.{}",
+                        q.name,
+                        rq.rel,
+                        a
+                    );
+                }
+                for agg in &rq.aggregates {
+                    for a in agg.expr.attrs() {
+                        assert!(
+                            crate::db::schema::attr(rq.rel, a).is_some(),
+                            "{} agg references missing {:?}.{}",
+                            q.name,
+                            rq.rel,
+                            a
+                        );
+                    }
+                }
+                for g in &rq.group_by {
+                    assert!(crate::db::schema::attr(rq.rel, g).is_some());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn full_queries_have_aggregates_filter_only_dont() {
+        for q in all_queries() {
+            match q.kind {
+                QueryKind::Full => {
+                    assert!(q.rels.iter().all(|r| !r.aggregates.is_empty()))
+                }
+                QueryKind::FilterOnly => {
+                    assert!(q.rels.iter().all(|r| r.aggregates.is_empty()))
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn q1_has_six_aggregates_four_groups_possible() {
+        let q = q1();
+        assert_eq!(q.rels[0].aggregates.len(), 6);
+        assert_eq!(q.rels[0].group_by.len(), 2);
+    }
+}

@@ -1,0 +1,262 @@
+//! Figures 8–15 plus the §6.1 ablation and calibration studies.
+
+use crate::config::SystemConfig;
+use crate::pim::area;
+
+use crate::util::stats::eng;
+
+use super::Experiments;
+
+/// Filter fraction of total query time for filter-only queries, used for
+/// the estimated-total-speedup series of Fig. 8(a). The paper takes
+/// per-query fractions from Kepe et al. [20]; we use their reported
+/// average (~45%) as a single substitute fraction (documented in
+/// EXPERIMENTS.md).
+const FILTER_FRACTION: f64 = 0.45;
+
+/// Fig. 8: speedup and LLC-miss reduction vs the baseline.
+pub fn fig8(exps: &Experiments) {
+    println!("== Fig 8(a): filter-only queries ==");
+    println!(
+        "{:<8} {:>10} {:>12} {:>12} {:>18}",
+        "Query", "Speedup", "LLC-reduct", "PIM time", "Est.total-speedup"
+    );
+    for p in exps.filter_only() {
+        let s = p.speedup();
+        let est = 1.0 / ((1.0 - FILTER_FRACTION) + FILTER_FRACTION / s);
+        println!(
+            "{:<8} {:>9.2}x {:>11.2}x {:>11}s {:>17.2}x",
+            p.query.name,
+            s,
+            p.llc_reduction(),
+            eng(p.pim.metrics.exec_time_s),
+            est
+        );
+    }
+    println!("== Fig 8(b): full queries ==");
+    for p in exps.full() {
+        println!(
+            "{:<8} {:>9.1}x {:>11.2}x {:>11}s",
+            p.query.name,
+            p.speedup(),
+            p.llc_reduction(),
+            eng(p.pim.metrics.exec_time_s)
+        );
+    }
+    println!("paper bands: filter 1.6x-18x (Q11 ~0.82x), full 62x-787x");
+}
+
+/// Fig. 9: PIMDB execution-time breakdown.
+pub fn fig9(exps: &Experiments) {
+    println!("== Fig 9: PIMDB execution-time breakdown ==");
+    println!(
+        "{:<8} {:>10} {:>8} {:>8} {:>8}",
+        "Query", "Total", "PIM%", "Read%", "Other%"
+    );
+    for p in &exps.pairs {
+        let m = &p.pim.metrics;
+        let tot = (m.pim_time_s + m.read_time_s + m.other_time_s).max(1e-15);
+        println!(
+            "{:<8} {:>9}s {:>7.1}% {:>7.1}% {:>7.1}%",
+            p.query.name,
+            eng(m.exec_time_s),
+            m.pim_time_s / tot * 100.0,
+            m.read_time_s / tot * 100.0,
+            m.other_time_s / tot * 100.0
+        );
+    }
+    println!("paper: read dominates filter-only (>99%); Q1/Q6 read 70%/55%");
+}
+
+/// Fig. 10: PIM module chip area breakdown.
+pub fn fig10(cfg: &SystemConfig) {
+    let a = area::chip_area(cfg);
+    println!("== Fig 10: PIM chip area breakdown ==");
+    for (label, mm2) in a.breakdown() {
+        println!(
+            "{:<22} {:>10.2} mm^2 ({:>5.2}%)",
+            label,
+            mm2,
+            mm2 / a.total_mm2() * 100.0
+        );
+    }
+    println!(
+        "total {:.1} mm^2; PIM controllers {:.3}% (paper: 0.17%)",
+        a.total_mm2(),
+        a.pim_ctrl_fraction() * 100.0
+    );
+}
+
+/// Fig. 11: energy saving over the baseline.
+pub fn fig11(exps: &Experiments) {
+    println!("== Fig 11: PIMDB energy saving over baseline ==");
+    println!("{:<8} {:>12} {:>14} {:>14}", "Query", "Saving", "PIMDB", "Baseline");
+    for p in &exps.pairs {
+        println!(
+            "{:<8} {:>11.2}x {:>13}J {:>13}J",
+            p.query.name,
+            p.energy_reduction(),
+            eng(p.pim.metrics.total_energy_pj() * 1e-12),
+            eng(p.base.metrics.total_energy_pj() * 1e-12)
+        );
+    }
+    println!("paper bands: filter-only 0.88x-15.3x, full 1.14x / 15.8x");
+}
+
+/// Fig. 12: PIMDB system energy breakdown (host / DRAM / PIM).
+pub fn fig12(exps: &Experiments) {
+    println!("== Fig 12: PIMDB system energy breakdown ==");
+    println!(
+        "{:<8} {:>8} {:>8} {:>8}",
+        "Query", "Host%", "DRAM%", "PIM%"
+    );
+    for p in &exps.pairs {
+        let m = &p.pim.metrics;
+        let tot = m.total_energy_pj().max(1e-12);
+        println!(
+            "{:<8} {:>7.1}% {:>7.1}% {:>7.1}%",
+            p.query.name,
+            m.host_energy_pj / tot * 100.0,
+            m.dram_energy_pj / tot * 100.0,
+            m.pim_energy.total_pj() / tot * 100.0
+        );
+    }
+}
+
+/// Fig. 13: PIM module energy breakdown.
+pub fn fig13(exps: &Experiments) {
+    println!("== Fig 13: PIM module energy breakdown ==");
+    println!(
+        "{:<8} {:>8} {:>8} {:>8} {:>8} {:>8}",
+        "Query", "Logic%", "Read%", "Write%", "Ctrl%", "IO%"
+    );
+    for p in &exps.pairs {
+        let e = &p.pim.metrics.pim_energy;
+        let tot = e.total_pj().max(1e-12);
+        println!(
+            "{:<8} {:>7.1}% {:>7.1}% {:>7.1}% {:>7.1}% {:>7.1}%",
+            p.query.name,
+            e.logic_pj / tot * 100.0,
+            e.read_pj / tot * 100.0,
+            e.write_pj / tot * 100.0,
+            e.ctrl_pj / tot * 100.0,
+            e.io_pj / tot * 100.0
+        );
+    }
+    println!("paper: >99% stateful logic for full queries");
+}
+
+/// Fig. 14: peak / average / theoretical chip power.
+pub fn fig14(exps: &Experiments) {
+    println!("== Fig 14: PIM chip power ==");
+    println!(
+        "{:<8} {:>10} {:>10} {:>14}",
+        "Query", "Peak(W)", "Avg(W)", "Theoretical(W)"
+    );
+    for p in &exps.pairs {
+        let m = &p.pim.metrics;
+        println!(
+            "{:<8} {:>10.2} {:>10.3} {:>14.1}",
+            p.query.name, m.peak_chip_w, m.avg_chip_w, m.theoretical_chip_w
+        );
+    }
+    println!(
+        "all-crossbars bound: {:.0} W/chip (paper: ~730 W); measured peaks ≤125 W, avg ≤10 W",
+        crate::pim::power::theoretical_peak_all_xbars_chip_w(&exps.cfg)
+    );
+}
+
+/// Fig. 15: required endurance for ten years at 100% duty cycle.
+pub fn fig15(exps: &Experiments) {
+    println!("== Fig 15: required endurance, 10-year 100% duty cycle ==");
+    println!(
+        "{:<8} {:>14} {:>16} {:>12}",
+        "Query", "ops/cell/exec", "10yr writes/cell", "vs 1e12?"
+    );
+    for p in &exps.pairs {
+        let m = &p.pim.metrics;
+        println!(
+            "{:<8} {:>14.4} {:>16} {:>12}",
+            p.query.name,
+            m.ops_per_cell,
+            eng(m.required_endurance_10yr),
+            if m.required_endurance_10yr <= 1e12 {
+                "ok"
+            } else {
+                "EXCEEDS"
+            }
+        );
+    }
+    println!("paper: all within RRAM 1e12 except Q22_sub (small relation, frequent reuse)");
+}
+
+/// §6.1 ablation: allow row-wise operations on multiple columns in any
+/// combination (increasing row-move bandwidth only). The paper reports
+/// 80–86% lower full-query bulk-bitwise latency.
+pub fn ablation_rowpar(exps: &Experiments) {
+    println!("== Ablation: unrestricted row-wise column parallelism ==");
+    println!(
+        "{:<8} {:>14} {:>14} {:>10}",
+        "Query", "logic cycles", "rowpar cycles", "reduction"
+    );
+    for p in exps.full() {
+        let c = &p.pim.metrics.cycles;
+        let restricted = c.total();
+        // row-wise moves run all bit columns of a value in parallel:
+        // agg-row and col-transform cycles shrink by the moved width
+        // (sum width ~ n+levels/2; take the per-query structural factor
+        // from the measured row/col split)
+        let width = (c.agg_row as f64 / (2046.0 * 10.0)).max(1.0); // ≈ avg n
+        let rowpar = c.filter + c.arith + c.agg_col
+            + (c.agg_row as f64 / width.max(1.0)) as u64
+            + c.col_transform / 16;
+        println!(
+            "{:<8} {:>14} {:>14} {:>9.1}%",
+            p.query.name,
+            restricted,
+            rowpar,
+            (1.0 - rowpar as f64 / restricted as f64) * 100.0
+        );
+    }
+    println!("paper: 80-86% bulk-bitwise latency reduction on full queries");
+}
+
+/// Calibration against published TPC-H SF=1000 systems (paper §6.1: Dell
+/// full-disclosure reports [9], [10]). Published per-query times are
+/// order-of-magnitude estimates from the reports' throughput runs.
+pub fn calibration(exps: &Experiments) {
+    // (query, [9] seconds, [10] seconds) — estimated from the FDRs
+    let published = [("Q1", 9.0, 8.0), ("Q6", 2.5, 1.5)];
+    println!("== Calibration vs published TPC-H systems (SF=1000) ==");
+    println!(
+        "{:<8} {:>12} {:>12} {:>12} (paper: Q1 9.3x/8.2x, Q6 19.6x/11.6x)",
+        "Query", "PIMDB(s)", "vs [9]", "vs [10]"
+    );
+    for (name, t9, t10) in published {
+        if let Some(p) = exps.pairs.iter().find(|p| p.query.name == name) {
+            let t = p.pim.metrics.exec_time_s;
+            println!(
+                "{:<8} {:>12} {:>11.1}x {:>11.1}x",
+                name,
+                eng(t),
+                t9 / t,
+                t10 / t
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig10_prints() {
+        fig10(&SystemConfig::default());
+    }
+
+    #[test]
+    fn filter_fraction_sane() {
+        assert!((0.1..0.9).contains(&FILTER_FRACTION));
+    }
+}

@@ -1,0 +1,127 @@
+//! Experiment registry: regenerates every table and figure of the paper's
+//! evaluation (§5–§6). See DESIGN.md §3 for the experiment index.
+
+pub mod figures;
+pub mod tables;
+
+use crate::config::SystemConfig;
+use crate::db::dbgen::Database;
+use crate::exec::metrics::RunReport;
+use crate::exec::{baseline, pimdb};
+use crate::query::ast::{Query, QueryKind};
+use crate::query::tpch;
+
+/// One query's PIMDB-vs-baseline pair.
+pub struct QueryPair {
+    pub query: Query,
+    pub pim: RunReport,
+    pub base: RunReport,
+}
+
+impl QueryPair {
+    pub fn speedup(&self) -> f64 {
+        self.base.metrics.exec_time_s / self.pim.metrics.exec_time_s.max(1e-15)
+    }
+
+    pub fn llc_reduction(&self) -> f64 {
+        self.base.metrics.llc_misses as f64 / self.pim.metrics.llc_misses.max(1) as f64
+    }
+
+    pub fn energy_reduction(&self) -> f64 {
+        self.base.metrics.total_energy_pj() / self.pim.metrics.total_energy_pj().max(1e-12)
+    }
+}
+
+/// All queries executed on both engines — the shared input of Figures
+/// 8–15 and Tables 5–6.
+pub struct Experiments {
+    pub cfg: SystemConfig,
+    pub pairs: Vec<QueryPair>,
+}
+
+impl Experiments {
+    pub fn run(cfg: &SystemConfig, engine: pimdb::EngineKind) -> Result<Experiments, String> {
+        let db = Database::generate(cfg.sim_sf, 42);
+        // one session: the PIM database copy loads once, as in the paper
+        let mut session = pimdb::PimSession::new(cfg, &db)?;
+        let mut pairs = Vec::new();
+        for q in tpch::all_queries() {
+            let pim = session.run_query(&q, engine)?;
+            let base = baseline::run_query(cfg, &db, &q);
+            pairs.push(QueryPair {
+                query: q,
+                pim,
+                base,
+            });
+        }
+        Ok(Experiments {
+            cfg: cfg.clone(),
+            pairs,
+        })
+    }
+
+    pub fn filter_only(&self) -> impl Iterator<Item = &QueryPair> {
+        self.pairs
+            .iter()
+            .filter(|p| p.query.kind == QueryKind::FilterOnly)
+    }
+
+    pub fn full(&self) -> impl Iterator<Item = &QueryPair> {
+        self.pairs
+            .iter()
+            .filter(|p| p.query.kind == QueryKind::Full)
+    }
+}
+
+/// Experiment ids accepted by `pimdb report --exp`.
+pub const EXPERIMENTS: [&str; 16] = [
+    "table1",
+    "table2",
+    "table3",
+    "table4",
+    "table5",
+    "table6",
+    "fig8",
+    "fig9",
+    "fig10",
+    "fig11",
+    "fig12",
+    "fig13",
+    "fig14",
+    "fig15",
+    "ablation-rowpar",
+    "calibration",
+];
+
+/// Whether an experiment needs the full query-pair runs.
+pub fn needs_runs(exp: &str) -> bool {
+    !matches!(exp, "table1" | "table2" | "table3" | "table4" | "fig10")
+}
+
+/// Print one experiment. `exps` must be Some for run-based experiments.
+pub fn print_experiment(
+    exp: &str,
+    cfg: &SystemConfig,
+    exps: Option<&Experiments>,
+) -> Result<(), String> {
+    match exp {
+        "table1" => tables::table1(cfg),
+        "table2" => tables::table2(),
+        "table3" => tables::table3(cfg),
+        "table4" => tables::table4(cfg),
+        "table5" => tables::table5(exps.ok_or("needs runs")?),
+        "table6" => tables::table6(exps.ok_or("needs runs")?),
+        "fig8" => figures::fig8(exps.ok_or("needs runs")?),
+        "fig9" => figures::fig9(exps.ok_or("needs runs")?),
+        "fig10" => figures::fig10(cfg),
+        "fig11" => figures::fig11(exps.ok_or("needs runs")?),
+        "fig12" => figures::fig12(exps.ok_or("needs runs")?),
+        "fig13" => figures::fig13(exps.ok_or("needs runs")?),
+        "fig14" => figures::fig14(exps.ok_or("needs runs")?),
+        "fig15" => figures::fig15(exps.ok_or("needs runs")?),
+        "ablation-rowpar" => figures::ablation_rowpar(exps.ok_or("needs runs")?),
+        "calibration" => figures::calibration(exps.ok_or("needs runs")?),
+        other => return Err(format!("unknown experiment '{other}'")),
+    }
+    Ok(())
+}

@@ -1,0 +1,431 @@
+//! Artifact loading and PJRT execution of PIM instruction semantics.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use crate::exec::engine::{self, ExecOutputs, XbarState};
+use crate::pim::isa::{ColRange, Opcode, PimInstruction};
+use crate::query::compiler::Step;
+use crate::util::bits::{PLANES, WORDS, XB_TILE};
+
+/// Loaded PJRT executables, keyed by kernel name.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Cached all-ones reduce mask (constant across calls; rebuilding it
+    /// per reduce showed up in the dispatch profile — EXPERIMENTS §Perf).
+    ones_mask: xla::Literal,
+}
+
+/// Kernels the instruction interpreter uses.
+const KERNELS: [&str; 8] = [
+    "cmp_imm",
+    "cmp_cols",
+    "add_imm",
+    "add_cols",
+    "mul_cols",
+    "reduce_sum",
+    "reduce_min",
+    "reduce_max",
+];
+
+impl Runtime {
+    /// Artifact directory: $PIMDB_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("PIMDB_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn load(dir: &Path) -> Result<Runtime, String> {
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("pjrt cpu client: {e}"))?;
+        let mut exes = HashMap::new();
+        for name in KERNELS {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            if !path.exists() {
+                return Err(format!("missing artifact {}", path.display()));
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or("bad path")?,
+            )
+            .map_err(|e| format!("parse {name}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| format!("compile {name}: {e}"))?;
+            exes.insert(name.to_string(), exe);
+        }
+        Ok(Runtime {
+            client,
+            exes,
+            ones_mask: ones_mask_literal(),
+        })
+    }
+
+    fn exe(&self, name: &str) -> &xla::PjRtLoadedExecutable {
+        &self.exes[name]
+    }
+}
+
+thread_local! {
+    static RUNTIME: RefCell<Option<Result<Rc<Runtime>, String>>> = const { RefCell::new(None) };
+}
+
+fn with_runtime<R>(f: impl FnOnce(&Runtime) -> Result<R, String>) -> Result<R, String> {
+    RUNTIME.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(Runtime::load(&Runtime::default_dir()).map(Rc::new));
+        }
+        match slot.as_ref().unwrap() {
+            Ok(rt) => f(rt),
+            Err(e) => Err(e.clone()),
+        }
+    })
+}
+
+/// True when the artifacts are present and the PJRT client initializes.
+pub fn runtime_available() -> bool {
+    with_runtime(|_| Ok(())).is_ok()
+}
+
+// --- literal packing ---------------------------------------------------------
+
+fn gather_planes(states: &[XbarState], tile: &[usize], r: ColRange, nplanes: usize) -> xla::Literal {
+    let mut flat = vec![0u32; XB_TILE * nplanes * WORDS];
+    for (ti, &si) in tile.iter().enumerate() {
+        let st = &states[si];
+        for i in 0..(r.len as usize).min(nplanes) {
+            let p = &st.planes[r.start as usize + i];
+            let base = (ti * nplanes + i) * WORDS;
+            flat[base..base + WORDS].copy_from_slice(p);
+        }
+    }
+    xla::Literal::vec1(&flat)
+        .reshape(&[XB_TILE as i64, nplanes as i64, WORDS as i64])
+        .expect("reshape planes")
+}
+
+fn imm_literal(imm: u64, n: usize) -> xla::Literal {
+    let masked = if n >= 64 { imm } else { imm & ((1u64 << n) - 1) };
+    let bits: Vec<u32> = (0..PLANES).map(|i| ((masked >> i) & 1) as u32).collect();
+    xla::Literal::vec1(&bits)
+}
+
+fn ones_mask_literal() -> xla::Literal {
+    let flat = vec![u32::MAX; XB_TILE * WORDS];
+    xla::Literal::vec1(&flat)
+        .reshape(&[XB_TILE as i64, WORDS as i64])
+        .expect("reshape mask")
+}
+
+fn scatter_planes(
+    out: &[u32],
+    states: &mut [XbarState],
+    tile: &[usize],
+    dst: ColRange,
+    nplanes: usize,
+) {
+    for (ti, &si) in tile.iter().enumerate() {
+        for i in 0..dst.len as usize {
+            let base = (ti * nplanes + i) * WORDS;
+            states[si].planes[dst.start as usize + i]
+                .copy_from_slice(&out[base..base + WORDS]);
+        }
+    }
+}
+
+fn scatter_mask(out: &[u32], states: &mut [XbarState], tile: &[usize], col: usize, invert: bool) {
+    for (ti, &si) in tile.iter().enumerate() {
+        for w in 0..WORDS {
+            let v = out[ti * WORDS + w];
+            states[si].planes[col][w] = if invert { !v } else { v };
+        }
+    }
+}
+
+fn run(
+    rt: &Runtime,
+    name: &str,
+    args: &[&xla::Literal],
+) -> Result<Vec<xla::Literal>, String> {
+    let bufs = rt
+        .exe(name)
+        .execute::<&xla::Literal>(args)
+        .map_err(|e| format!("execute {name}: {e}"))?;
+    let lit = bufs[0][0]
+        .to_literal_sync()
+        .map_err(|e| format!("fetch {name}: {e}"))?;
+    lit.to_tuple().map_err(|e| format!("untuple {name}: {e}"))
+}
+
+fn to_u32s(l: &xla::Literal) -> Result<Vec<u32>, String> {
+    l.to_vec::<u32>().map_err(|e| format!("literal to_vec: {e}"))
+}
+
+// --- instruction interpreter -------------------------------------------------
+
+fn exec_tile(
+    rt: &Runtime,
+    states: &mut [XbarState],
+    tile: &[usize],
+    instr: &PimInstruction,
+    reduce_out: &mut [Vec<u128>],
+) -> Result<(), String> {
+    let a = instr.src_a;
+    let d = instr.dst;
+    match instr.op {
+        Opcode::EqImm | Opcode::NeImm | Opcode::LtImm | Opcode::GtImm => {
+            let planes = gather_planes(states, tile, a, PLANES);
+            let imm = imm_literal(instr.imm, a.len as usize);
+            let outs = run(rt, "cmp_imm", &[&planes, &imm])?;
+            let eq = to_u32s(&outs[0])?;
+            let lt = to_u32s(&outs[1])?;
+            match instr.op {
+                Opcode::EqImm => scatter_mask(&eq, states, tile, d.start as usize, false),
+                Opcode::NeImm => scatter_mask(&eq, states, tile, d.start as usize, true),
+                Opcode::LtImm => scatter_mask(&lt, states, tile, d.start as usize, false),
+                Opcode::GtImm => {
+                    let ge: Vec<u32> =
+                        lt.iter().zip(&eq).map(|(l, e)| !(l | e)).collect();
+                    scatter_mask(&ge, states, tile, d.start as usize, false);
+                }
+                _ => unreachable!(),
+            }
+        }
+        Opcode::Eq | Opcode::Lt => {
+            let b = instr.src_b.expect("cmp_cols");
+            let pa = gather_planes(states, tile, a, PLANES);
+            let pb = gather_planes(states, tile, b, PLANES);
+            let outs = run(rt, "cmp_cols", &[&pa, &pb])?;
+            let idx = if instr.op == Opcode::Eq { 0 } else { 1 };
+            let m = to_u32s(&outs[idx])?;
+            scatter_mask(&m, states, tile, d.start as usize, false);
+        }
+        Opcode::AddImm => {
+            let planes = gather_planes(states, tile, a, PLANES);
+            let imm = imm_literal(instr.imm, a.len as usize);
+            let outs = run(rt, "add_imm", &[&planes, &imm])?;
+            let s = to_u32s(&outs[0])?;
+            scatter_planes(&s, states, tile, d, PLANES);
+        }
+        Opcode::Add => {
+            let b = instr.src_b.expect("add");
+            let pa = gather_planes(states, tile, a, PLANES);
+            let pb = gather_planes(states, tile, b, PLANES);
+            let outs = run(rt, "add_cols", &[&pa, &pb])?;
+            let s = to_u32s(&outs[0])?;
+            scatter_planes(&s, states, tile, d, PLANES);
+        }
+        Opcode::Mul => {
+            let b = instr.src_b.expect("mul");
+            if a.len > 32 || b.len > 32 {
+                return Err(format!(
+                    "mul operands exceed the 32x32 kernel: {}x{}",
+                    a.len, b.len
+                ));
+            }
+            let pa = gather_planes(states, tile, a, 32);
+            let pb = gather_planes(states, tile, b, 32);
+            let outs = run(rt, "mul_cols", &[&pa, &pb])?;
+            let s = to_u32s(&outs[0])?;
+            scatter_planes(&s, states, tile, d, 64);
+        }
+        Opcode::ReduceSum => {
+            let planes = gather_planes(states, tile, a, PLANES);
+            let outs = run(rt, "reduce_sum", &[&planes, &rt.ones_mask])?;
+            let counts = to_u32s(&outs[0])?; // [XB_TILE, 64]
+            for (ti, &si) in tile.iter().enumerate() {
+                let mut sum: u128 = 0;
+                for i in 0..PLANES {
+                    sum += (counts[ti * PLANES + i] as u128) << i;
+                }
+                reduce_out[si].push(sum);
+            }
+        }
+        Opcode::ReduceMin | Opcode::ReduceMax => {
+            let name = if instr.op == Opcode::ReduceMin {
+                "reduce_min"
+            } else {
+                "reduce_max"
+            };
+            let planes = gather_planes(states, tile, a, PLANES);
+            let outs = run(rt, name, &[&planes, &rt.ones_mask])?;
+            let lo = to_u32s(&outs[0])?;
+            let hi = to_u32s(&outs[1])?;
+            for (ti, &si) in tile.iter().enumerate() {
+                let v = (lo[ti] as u128) | ((hi[ti] as u128) << 32);
+                reduce_out[si].push(v);
+            }
+        }
+        // plane-local logic and data movement: host word ops (see module
+        // docs) — same semantics as the native engine.
+        Opcode::Set
+        | Opcode::Reset
+        | Opcode::Not
+        | Opcode::And
+        | Opcode::Or
+        | Opcode::ColumnTransform => {
+            for &si in tile {
+                let mut dummy = Vec::new();
+                engine::exec_instr(&mut states[si], instr, &mut dummy);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Run a compiled program over crossbar states through the PJRT kernels.
+pub fn exec_steps_pjrt(
+    states: &mut [XbarState],
+    steps: &[Step],
+    mask_col: usize,
+) -> Result<ExecOutputs, String> {
+    with_runtime(|rt| {
+        let n = states.len();
+        let mut per_state_reduces: Vec<Vec<u128>> = vec![Vec::new(); n];
+        let tiles: Vec<Vec<usize>> = (0..n)
+            .collect::<Vec<_>>()
+            .chunks(XB_TILE)
+            .map(|c| c.to_vec())
+            .collect();
+        for step in steps {
+            for tile in &tiles {
+                exec_tile(rt, states, tile, &step.instr, &mut per_state_reduces)?;
+            }
+        }
+        let n_reduces = per_state_reduces.first().map(|v| v.len()).unwrap_or(0);
+        let mut reduces = vec![Vec::with_capacity(n); n_reduces];
+        for sv in &per_state_reduces {
+            for (i, &v) in sv.iter().enumerate() {
+                reduces[i].push(v);
+            }
+        }
+        let mask_counts = states.iter().map(|s| s.popcount_col(mask_col)).collect();
+        Ok(ExecOutputs {
+            reduces,
+            mask_counts,
+        })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::endurance::OpCategory;
+
+    fn step(instr: PimInstruction) -> Step {
+        Step {
+            instr,
+            category: OpCategory::Filter,
+        }
+    }
+
+    fn load_values(vals: &[u64], start: usize, bits: usize, st: &mut XbarState) {
+        for (row, &v) in vals.iter().enumerate() {
+            for b in 0..bits {
+                if (v >> b) & 1 == 1 {
+                    let w = &mut st.planes[start + b][row / 32];
+                    *w |= 1 << (row % 32);
+                }
+            }
+        }
+    }
+
+    /// Differential: PJRT engine == native engine on a mixed program.
+    /// Skips (passes vacuously) when artifacts/PJRT are unavailable.
+    #[test]
+    fn pjrt_matches_native_differential() {
+        if !runtime_available() {
+            eprintln!("skipping: PJRT runtime/artifacts unavailable");
+            return;
+        }
+        let mut rng = crate::util::rng::Rng::new(99);
+        let mut st_a = XbarState::new(256);
+        let vals_a: Vec<u64> = (0..1024).map(|_| rng.range_u64(0, (1 << 20) - 1)).collect();
+        let vals_b: Vec<u64> = (0..1024).map(|_| rng.range_u64(0, (1 << 20) - 1)).collect();
+        load_values(&vals_a, 0, 20, &mut st_a);
+        load_values(&vals_b, 20, 20, &mut st_a);
+        let mut states_native = vec![st_a.clone(), st_a.clone()];
+        let mut states_pjrt = states_native.clone();
+
+        let imm = vals_a[17];
+        let steps = vec![
+            step(PimInstruction::with_imm(
+                Opcode::LtImm,
+                ColRange::new(0, 20),
+                ColRange::new(100, 1),
+                imm,
+            )),
+            step(PimInstruction::with_imm(
+                Opcode::EqImm,
+                ColRange::new(0, 20),
+                ColRange::new(101, 1),
+                imm,
+            )),
+            step(PimInstruction::binary(
+                Opcode::Lt,
+                ColRange::new(0, 20),
+                ColRange::new(20, 20),
+                ColRange::new(102, 1),
+            )),
+            step(PimInstruction::binary(
+                Opcode::Or,
+                ColRange::new(100, 1),
+                ColRange::new(101, 1),
+                ColRange::new(103, 1),
+            )),
+            step(PimInstruction::binary(
+                Opcode::And,
+                ColRange::new(0, 20),
+                ColRange::new(103, 1),
+                ColRange::new(110, 20),
+            )),
+            step(PimInstruction::binary(
+                Opcode::Mul,
+                ColRange::new(110, 20),
+                ColRange::new(20, 20),
+                ColRange::new(130, 40),
+            )),
+            step(PimInstruction::unary(
+                Opcode::ReduceSum,
+                ColRange::new(130, 40),
+                ColRange::new(130, 40),
+            )),
+            step(PimInstruction::unary(
+                Opcode::ReduceMax,
+                ColRange::new(130, 40),
+                ColRange::new(130, 40),
+            )),
+        ];
+        let out_n = engine::exec_steps_native(&mut states_native, &steps, 103);
+        let out_p = exec_steps_pjrt(&mut states_pjrt, &steps, 103).unwrap();
+        assert_eq!(out_n.reduces, out_p.reduces);
+        assert_eq!(out_n.mask_counts, out_p.mask_counts);
+        // full plane state must match too
+        for (a, b) in states_native.iter().zip(&states_pjrt) {
+            for c in 0..256 {
+                assert_eq!(a.planes[c], b.planes[c], "plane {c} differs");
+            }
+        }
+    }
+
+    #[test]
+    fn imm_literal_masks_to_width() {
+        let l = imm_literal(u64::MAX, 4);
+        let v = l.to_vec::<u32>().unwrap();
+        assert_eq!(&v[0..4], &[1, 1, 1, 1]);
+        assert!(v[4..].iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn default_dir_env_override() {
+        // no env set in tests: default to ./artifacts
+        if std::env::var("PIMDB_ARTIFACTS").is_err() {
+            assert_eq!(Runtime::default_dir(), PathBuf::from("artifacts"));
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts (lowered from the
+//! Layer-1 Pallas kernels by `make artifacts`) and executes PIM
+//! instruction semantics through them.
+//!
+//! The interchange format is HLO *text* — jax >= 0.5 serialized protos use
+//! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see python/compile/aot.py and
+//! /opt/xla-example/README.md).
+//!
+//! The functional state is the same bit-plane packing the kernels use, so
+//! literals cross the boundary without reshuffling: planes `u32[XB, 64,
+//! 32]`, masks `u32[XB, 32]`, immediates as `u32[64]` bit vectors.
+//!
+//! Ops not worth a PJRT round-trip (single-plane Set/Reset/Not/And/Or and
+//! result-mask post-processing) run on the host word-wise — they are not
+//! the compute hot-spot (paper Table 5: compare/arith/reduce dominate).
+
+pub mod exec;
+
+pub use exec::{exec_steps_pjrt, runtime_available, Runtime};

@@ -1,0 +1,275 @@
+//! Packed bit containers used across the functional PIM engine.
+//!
+//! The crossbar row axis (1024 rows) packs into `WORDS = 32` u32 words —
+//! the same layout the L1 Pallas kernels use (DESIGN.md §Hardware-
+//! Adaptation), so literals cross the PJRT boundary without reshuffling.
+
+/// Crossbar geometry constants (paper Table 3).
+pub const XBAR_ROWS: usize = 1024;
+pub const XBAR_COLS: usize = 512;
+/// u32 words per bit-plane column.
+pub const WORDS: usize = XBAR_ROWS / 32;
+/// Bit-planes carried by the generic ALU executables.
+pub const PLANES: usize = 64;
+/// Crossbars per exported executable invocation (must match python XB_TILE).
+pub const XB_TILE: usize = 16;
+/// Bits retrieved by one crossbar read (paper Table 3).
+pub const XBAR_READ_BITS: usize = 16;
+
+/// A dense 2-D bit matrix, `rows x cols`, row-major, bit-addressable.
+/// Used by the cell-accurate crossbar reference model.
+#[derive(Clone, PartialEq, Eq)]
+pub struct BitMatrix {
+    rows: usize,
+    cols: usize,
+    words_per_row: usize,
+    data: Vec<u64>,
+}
+
+impl BitMatrix {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        let words_per_row = cols.div_ceil(64);
+        BitMatrix {
+            rows,
+            cols,
+            words_per_row,
+            data: vec![0; rows * words_per_row],
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> bool {
+        debug_assert!(r < self.rows && c < self.cols);
+        let w = self.data[r * self.words_per_row + c / 64];
+        (w >> (c % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: bool) {
+        debug_assert!(r < self.rows && c < self.cols);
+        let w = &mut self.data[r * self.words_per_row + c / 64];
+        if v {
+            *w |= 1 << (c % 64);
+        } else {
+            *w &= !(1 << (c % 64));
+        }
+    }
+
+    /// Read `n <= 64` bits of row `r` starting at column `c` (LSB-first).
+    pub fn read_bits(&self, r: usize, c: usize, n: usize) -> u64 {
+        debug_assert!(n <= 64 && c + n <= self.cols);
+        let mut v = 0u64;
+        for i in 0..n {
+            if self.get(r, c + i) {
+                v |= 1 << i;
+            }
+        }
+        v
+    }
+
+    /// Write `n <= 64` bits of row `r` starting at column `c` (LSB-first).
+    pub fn write_bits(&mut self, r: usize, c: usize, n: usize, v: u64) {
+        debug_assert!(n <= 64 && c + n <= self.cols);
+        for i in 0..n {
+            self.set(r, c + i, (v >> i) & 1 == 1);
+        }
+    }
+}
+
+impl std::fmt::Debug for BitMatrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "BitMatrix({}x{})", self.rows, self.cols)
+    }
+}
+
+/// One bit per crossbar row, packed: a crossbar *column* (e.g. a filter
+/// result mask). Layout-compatible with the kernels' `u32[WORDS]`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RowMask(pub [u32; WORDS]);
+
+impl Default for RowMask {
+    fn default() -> Self {
+        RowMask([0; WORDS])
+    }
+}
+
+impl RowMask {
+    pub fn all_ones() -> Self {
+        RowMask([u32::MAX; WORDS])
+    }
+
+    /// Only the first `n` rows set.
+    pub fn first_n(n: usize) -> Self {
+        let mut m = RowMask::default();
+        for r in 0..n.min(XBAR_ROWS) {
+            m.set(r, true);
+        }
+        m
+    }
+
+    #[inline]
+    pub fn get(&self, row: usize) -> bool {
+        (self.0[row / 32] >> (row % 32)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, row: usize, v: bool) {
+        if v {
+            self.0[row / 32] |= 1 << (row % 32);
+        } else {
+            self.0[row / 32] &= !(1 << (row % 32));
+        }
+    }
+
+    pub fn count_ones(&self) -> u32 {
+        self.0.iter().map(|w| w.count_ones()).sum()
+    }
+
+    pub fn and(&self, o: &RowMask) -> RowMask {
+        let mut r = [0u32; WORDS];
+        for (i, x) in r.iter_mut().enumerate() {
+            *x = self.0[i] & o.0[i];
+        }
+        RowMask(r)
+    }
+
+    pub fn or(&self, o: &RowMask) -> RowMask {
+        let mut r = [0u32; WORDS];
+        for (i, x) in r.iter_mut().enumerate() {
+            *x = self.0[i] | o.0[i];
+        }
+        RowMask(r)
+    }
+
+    pub fn not(&self) -> RowMask {
+        let mut r = [0u32; WORDS];
+        for (i, x) in r.iter_mut().enumerate() {
+            *x = !self.0[i];
+        }
+        RowMask(r)
+    }
+
+    pub fn iter_rows(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..XBAR_ROWS).filter(move |&r| self.get(r))
+    }
+}
+
+/// Bit-plane set of one attribute over one crossbar: `planes[i][w]` holds
+/// bit `i` of rows `32w..32w+32`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlaneSet {
+    pub nplanes: usize,
+    pub planes: Vec<[u32; WORDS]>,
+}
+
+impl PlaneSet {
+    pub fn zero(nplanes: usize) -> Self {
+        PlaneSet {
+            nplanes,
+            planes: vec![[0; WORDS]; nplanes],
+        }
+    }
+
+    /// Pack per-row values (LSB-first planes).
+    pub fn pack(values: &[u64], nplanes: usize) -> Self {
+        debug_assert!(values.len() <= XBAR_ROWS);
+        let mut ps = PlaneSet::zero(nplanes);
+        for (r, &v) in values.iter().enumerate() {
+            for i in 0..nplanes {
+                if (v >> i) & 1 == 1 {
+                    ps.planes[i][r / 32] |= 1 << (r % 32);
+                }
+            }
+        }
+        ps
+    }
+
+    /// Unpack back to per-row values.
+    pub fn unpack(&self) -> Vec<u64> {
+        let mut vals = vec![0u64; XBAR_ROWS];
+        for i in 0..self.nplanes {
+            for w in 0..WORDS {
+                let mut bits = self.planes[i][w];
+                while bits != 0 {
+                    let b = bits.trailing_zeros() as usize;
+                    vals[w * 32 + b] |= 1 << i;
+                    bits &= bits - 1;
+                }
+            }
+        }
+        vals
+    }
+
+    pub fn value_at(&self, row: usize) -> u64 {
+        let mut v = 0u64;
+        for i in 0..self.nplanes {
+            if (self.planes[i][row / 32] >> (row % 32)) & 1 == 1 {
+                v |= 1 << i;
+            }
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bitmatrix_rw_roundtrip() {
+        let mut m = BitMatrix::new(16, 100);
+        m.write_bits(3, 37, 23, 0x5A5A5A);
+        assert_eq!(m.read_bits(3, 37, 23), 0x5A5A5A & ((1 << 23) - 1));
+        assert_eq!(m.read_bits(2, 37, 23), 0);
+    }
+
+    #[test]
+    fn bitmatrix_set_get() {
+        let mut m = BitMatrix::new(4, 65);
+        m.set(1, 64, true);
+        assert!(m.get(1, 64));
+        m.set(1, 64, false);
+        assert!(!m.get(1, 64));
+    }
+
+    #[test]
+    fn rowmask_ops() {
+        let mut a = RowMask::default();
+        a.set(0, true);
+        a.set(1023, true);
+        assert_eq!(a.count_ones(), 2);
+        let b = a.not();
+        assert_eq!(b.count_ones(), 1022);
+        assert_eq!(a.and(&b).count_ones(), 0);
+        assert_eq!(a.or(&b).count_ones(), 1024);
+        assert_eq!(a.iter_rows().collect::<Vec<_>>(), vec![0, 1023]);
+    }
+
+    #[test]
+    fn rowmask_first_n() {
+        let m = RowMask::first_n(100);
+        assert_eq!(m.count_ones(), 100);
+        assert!(m.get(99) && !m.get(100));
+    }
+
+    #[test]
+    fn planeset_roundtrip() {
+        let vals: Vec<u64> = (0..XBAR_ROWS as u64)
+            .map(|i| i.wrapping_mul(0x9E3779B97F4A7C15) >> 20)
+            .collect();
+        let ps = PlaneSet::pack(&vals, 44);
+        let got = ps.unpack();
+        for (r, &v) in vals.iter().enumerate() {
+            assert_eq!(got[r], v & ((1 << 44) - 1));
+            assert_eq!(ps.value_at(r), v & ((1 << 44) - 1));
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Small self-contained utilities: bit vectors, PRNG, statistics, and a
+//! mini property-testing harness (the offline vendor set has no `proptest`).
+
+pub mod bits;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+pub use bits::BitMatrix;
+pub use rng::Rng;

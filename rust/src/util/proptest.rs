@@ -1,0 +1,134 @@
+//! Mini property-testing harness (the offline vendor set has no `proptest`).
+//!
+//! `check(name, cases, |g| { ... })` runs a closure `cases` times with a
+//! deterministic generator; on failure it reports the case seed so the
+//! failing input can be reproduced with `replay(seed, f)`.
+
+use super::rng::Rng;
+
+pub struct Gen {
+    pub rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.range_u64(lo, hi)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_u64(lo as u64, hi as u64) as usize
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    /// A u64 whose bit-width is itself random — exercises narrow values,
+    /// wide values, and boundary patterns far more often than uniform u64.
+    pub fn skewed_u64(&mut self) -> u64 {
+        let bits = self.rng.range_u64(0, 64);
+        if bits == 0 {
+            return 0;
+        }
+        let v = self.rng.next_u64();
+        if bits == 64 {
+            v
+        } else {
+            v & ((1u64 << bits) - 1)
+        }
+    }
+
+    pub fn vec_u64(&mut self, len: usize, lo: u64, hi: u64) -> Vec<u64> {
+        (0..len).map(|_| self.u64(lo, hi)).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.pick(xs)
+    }
+}
+
+/// Run `f` on `cases` generated inputs; panic with the reproducing seed on
+/// the first failure (failure == panic inside `f`).
+pub fn check<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    name: &str,
+    cases: u64,
+    f: F,
+) {
+    let base = 0xC0FFEE ^ name.len() as u64;
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen {
+                rng: Rng::new(seed),
+                seed,
+            };
+            f(&mut g);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<panic>".into());
+            panic!(
+                "property '{name}' failed on case {case} (replay seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn replay<F: FnOnce(&mut Gen)>(seed: u64, f: F) {
+    let mut g = Gen {
+        rng: Rng::new(seed),
+        seed,
+    };
+    f(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let count = AtomicU64::new(0);
+        check("add-commutes", 64, |g| {
+            let a = g.skewed_u64();
+            let b = g.skewed_u64();
+            assert_eq!(a.wrapping_add(b), b.wrapping_add(a));
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 4, |_g| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn skewed_values_cover_widths() {
+        let mut g = Gen {
+            rng: Rng::new(123),
+            seed: 123,
+        };
+        let mut small = false;
+        let mut large = false;
+        for _ in 0..200 {
+            let v = g.skewed_u64();
+            small |= v < 16;
+            large |= v > (1 << 48);
+        }
+        assert!(small && large);
+    }
+}

@@ -1,0 +1,163 @@
+//! Lightweight statistics helpers for the simulators and the bench harness.
+
+/// Online mean/min/max/sum accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary {
+            n: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+}
+
+/// Fixed-window peak/average power sampler (paper §6.3: 100 ns windows).
+/// Energy deposits are attributed to windows by timestamp; `peak()` returns
+/// the maximum window energy / window length.
+#[derive(Clone, Debug)]
+pub struct WindowedPower {
+    window_ps: u64,
+    windows: Vec<f64>, // energy in pJ per window
+    total_pj: f64,
+    end_ps: u64,
+}
+
+impl WindowedPower {
+    pub fn new(window_ps: u64) -> Self {
+        WindowedPower {
+            window_ps,
+            windows: Vec::new(),
+            total_pj: 0.0,
+            end_ps: 0,
+        }
+    }
+
+    /// Deposit `energy_pj` uniformly over [start_ps, start_ps + dur_ps).
+    pub fn deposit(&mut self, start_ps: u64, dur_ps: u64, energy_pj: f64) {
+        let dur = dur_ps.max(1);
+        let first = (start_ps / self.window_ps) as usize;
+        let last = ((start_ps + dur - 1) / self.window_ps) as usize;
+        if self.windows.len() <= last {
+            self.windows.resize(last + 1, 0.0);
+        }
+        let per_ps = energy_pj / dur as f64;
+        for w in first..=last {
+            let ws = (w as u64) * self.window_ps;
+            let we = ws + self.window_ps;
+            let ov = (start_ps + dur).min(we).saturating_sub(start_ps.max(ws));
+            self.windows[w] += per_ps * ov as f64;
+        }
+        self.total_pj += energy_pj;
+        self.end_ps = self.end_ps.max(start_ps + dur);
+    }
+
+    /// Peak power in watts (pJ / ps == W).
+    pub fn peak_w(&self) -> f64 {
+        self.windows
+            .iter()
+            .fold(0.0f64, |a, &e| a.max(e / self.window_ps as f64))
+    }
+
+    /// Average power over the observed span, in watts.
+    pub fn avg_w(&self) -> f64 {
+        if self.end_ps == 0 {
+            0.0
+        } else {
+            self.total_pj / self.end_ps as f64
+        }
+    }
+
+    pub fn total_pj(&self) -> f64 {
+        self.total_pj
+    }
+}
+
+/// Pretty-print a float with engineering suffix.
+pub fn eng(x: f64) -> String {
+    let ax = x.abs();
+    let (val, suf) = if ax >= 1e12 {
+        (x / 1e12, "T")
+    } else if ax >= 1e9 {
+        (x / 1e9, "G")
+    } else if ax >= 1e6 {
+        (x / 1e6, "M")
+    } else if ax >= 1e3 {
+        (x / 1e3, "k")
+    } else if ax >= 1.0 || x == 0.0 {
+        (x, "")
+    } else if ax >= 1e-3 {
+        (x * 1e3, "m")
+    } else if ax >= 1e-6 {
+        (x * 1e6, "u")
+    } else if ax >= 1e-9 {
+        (x * 1e9, "n")
+    } else {
+        (x * 1e12, "p")
+    };
+    format!("{val:.3}{suf}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_tracks_extrema() {
+        let mut s = Summary::new();
+        for x in [3.0, -1.0, 7.0] {
+            s.add(x);
+        }
+        assert_eq!(s.min, -1.0);
+        assert_eq!(s.max, 7.0);
+        assert!((s.mean() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn windowed_power_peak_and_avg() {
+        let mut w = WindowedPower::new(100_000); // 100 ns in ps
+        // 1 W for one full window: 100_000 ps * 1 pJ/ps = 1e5 pJ
+        w.deposit(0, 100_000, 1e5);
+        // 0.5 W for the next window
+        w.deposit(100_000, 100_000, 5e4);
+        assert!((w.peak_w() - 1.0).abs() < 1e-9);
+        assert!((w.avg_w() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn windowed_power_split_across_windows() {
+        let mut w = WindowedPower::new(100);
+        w.deposit(50, 100, 200.0); // spans two windows, half each
+        assert!((w.windows[0] - 100.0).abs() < 1e-9);
+        assert!((w.windows[1] - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eng_format() {
+        assert_eq!(eng(1.5e9), "1.500G");
+        assert_eq!(eng(0.002), "2.000m");
+    }
+}

@@ -1,0 +1,56 @@
+//! Cross-engine functional equivalence: for every evaluated query, the
+//! PIMDB bulk-bitwise execution must produce exactly the results of the
+//! host column-store baseline (which is itself oracle-checked in unit
+//! tests). This is the repo's core correctness gate.
+
+use pimdb::config::SystemConfig;
+use pimdb::db::dbgen::Database;
+use pimdb::exec::{baseline, pimdb as engine};
+use pimdb::query::tpch;
+
+#[test]
+fn all_queries_pimdb_equals_baseline() {
+    let mut cfg = SystemConfig::default();
+    cfg.sim_sf = 0.002;
+    let db = Database::generate(cfg.sim_sf, 1234);
+    for q in tpch::all_queries() {
+        let pim = engine::run_query(&cfg, &db, &q, engine::EngineKind::Native)
+            .unwrap_or_else(|e| panic!("{}: {e}", q.name));
+        let base = baseline::run_query(&cfg, &db, &q);
+        assert_eq!(pim.output, base.output, "{} outputs differ", q.name);
+    }
+}
+
+#[test]
+fn equivalence_holds_across_seeds_and_scales() {
+    for (sf, seed) in [(0.001, 7), (0.003, 99)] {
+        let mut cfg = SystemConfig::default();
+        cfg.sim_sf = sf;
+        let db = Database::generate(sf, seed);
+        for name in ["Q1", "Q6", "Q12", "Q19", "Q22_sub"] {
+            let q = tpch::query(name).unwrap();
+            let pim = engine::run_query(&cfg, &db, &q, engine::EngineKind::Native).unwrap();
+            let base = baseline::run_query(&cfg, &db, &q);
+            assert_eq!(pim.output, base.output, "{name} sf={sf} seed={seed}");
+        }
+    }
+}
+
+/// PJRT backend equals native on a mixed query sample (vacuous skip when
+/// artifacts are absent).
+#[test]
+fn pjrt_engine_equals_native_on_queries() {
+    if !pimdb::runtime::runtime_available() {
+        eprintln!("skipping: PJRT runtime/artifacts unavailable");
+        return;
+    }
+    let mut cfg = SystemConfig::default();
+    cfg.sim_sf = 0.001;
+    let db = Database::generate(cfg.sim_sf, 5);
+    for name in ["Q6", "Q12", "Q22_sub", "Q4"] {
+        let q = tpch::query(name).unwrap();
+        let native = engine::run_query(&cfg, &db, &q, engine::EngineKind::Native).unwrap();
+        let pjrt = engine::run_query(&cfg, &db, &q, engine::EngineKind::Pjrt).unwrap();
+        assert_eq!(native.output, pjrt.output, "{name}");
+    }
+}

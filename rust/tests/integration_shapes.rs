@@ -1,0 +1,229 @@
+//! Paper-shape integration tests: the qualitative findings of the
+//! evaluation (§6) must hold in our reproduction — who wins, by roughly
+//! what factor, and where the crossovers fall (DESIGN.md §3 scale note).
+
+use pimdb::config::SystemConfig;
+use pimdb::exec::pimdb::EngineKind;
+use pimdb::query::ast::QueryKind;
+use pimdb::report::Experiments;
+
+fn experiments() -> &'static Experiments {
+    use std::sync::OnceLock;
+    static EXPS: OnceLock<Experiments> = OnceLock::new();
+    EXPS.get_or_init(|| {
+        let mut cfg = SystemConfig::default();
+        cfg.sim_sf = 0.004;
+        Experiments::run(&cfg, EngineKind::Native).unwrap()
+    })
+}
+
+#[test]
+fn fig8_full_queries_beat_filter_only() {
+    let e = experiments();
+    let max_filter = e
+        .filter_only()
+        .map(|p| p.speedup())
+        .fold(0.0f64, f64::max);
+    for p in e.full() {
+        if p.query.name == "Q22_sub" {
+            continue; // PIM-cycle-bound small relation; see EXPERIMENTS.md
+        }
+        assert!(
+            p.speedup() > max_filter,
+            "{} ({:.1}x) should beat best filter-only ({max_filter:.1}x)",
+            p.query.name,
+            p.speedup()
+        );
+    }
+}
+
+#[test]
+fn fig8_filter_only_band_and_q11_minimum() {
+    let e = experiments();
+    let mut speedups: Vec<(&str, f64)> = e
+        .filter_only()
+        .map(|p| (p.query.name, p.speedup()))
+        .collect();
+    // paper band 1.6-18x with Q11 at ~0.82x: allow a loose band
+    for &(name, s) in &speedups {
+        assert!(
+            (0.5..60.0).contains(&s),
+            "{name} speedup {s:.2} outside sanity band"
+        );
+    }
+    speedups.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    assert_eq!(speedups[0].0, "Q11", "Q11 must be the slowest case");
+    assert!(speedups[0].1 < 3.0);
+}
+
+#[test]
+fn fig8_llc_miss_reduction_everywhere() {
+    for p in &experiments().pairs {
+        assert!(
+            p.llc_reduction() > 1.0,
+            "{} must reduce LLC misses",
+            p.query.name
+        );
+    }
+    // aggregation reduces reads by ~3 orders of magnitude (paper: >99% of
+    // reads eliminated for some queries)
+    let q6 = experiments()
+        .pairs
+        .iter()
+        .find(|p| p.query.name == "Q6")
+        .unwrap();
+    assert!(q6.llc_reduction() > 100.0);
+}
+
+#[test]
+fn fig9_read_time_dominates_large_filter_only_queries() {
+    let e = experiments();
+    for p in e.filter_only() {
+        let m = &p.pim.metrics;
+        let rels: Vec<_> = p.query.rels.iter().map(|r| r.rel.name()).collect();
+        // the paper's >99% read share holds for queries on LINEITEM/ORDERS
+        if rels.contains(&"LINEITEM") || rels.contains(&"ORDERS") {
+            let tot = m.pim_time_s + m.read_time_s + m.other_time_s;
+            assert!(
+                m.read_time_s / tot > 0.8,
+                "{}: read share {:.2}",
+                p.query.name,
+                m.read_time_s / tot
+            );
+        }
+    }
+}
+
+#[test]
+fn fig9_full_queries_have_moderate_read_share() {
+    let e = experiments();
+    for p in e.full() {
+        let m = &p.pim.metrics;
+        let tot = m.pim_time_s + m.read_time_s + m.other_time_s;
+        let read = m.read_time_s / tot;
+        match p.query.name {
+            // paper: 70% (Q1), 55% (Q6) — read is the bottleneck but
+            // moderately; Q22_sub's read is NOT the bottleneck
+            "Q1" | "Q6" => assert!(
+                (0.3..0.9).contains(&read),
+                "{}: read share {read:.2}",
+                p.query.name
+            ),
+            "Q22_sub" => assert!(read < 0.5, "Q22_sub read share {read:.2}"),
+            _ => {}
+        }
+    }
+}
+
+#[test]
+fn fig11_12_13_energy_structure() {
+    let e = experiments();
+    for p in &e.pairs {
+        let m = &p.pim.metrics;
+        match p.query.kind {
+            QueryKind::FilterOnly => {
+                // paper Fig 12: DRAM standby dominates PIMDB energy for
+                // filter-only queries on the big relations
+                if p.query.rels.iter().any(|r| r.rel.name() == "LINEITEM") {
+                    assert!(
+                        m.dram_energy_pj + m.host_energy_pj > 0.2 * m.total_energy_pj(),
+                        "{}",
+                        p.query.name
+                    );
+                }
+            }
+            QueryKind::Full => {
+                // paper Fig 13: >99% of PIM-module energy is stateful logic
+                let pim = &m.pim_energy;
+                assert!(
+                    pim.logic_pj / pim.total_pj() > 0.9,
+                    "{}: logic share {:.3}",
+                    p.query.name,
+                    pim.logic_pj / pim.total_pj()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fig14_power_hierarchy() {
+    let e = experiments();
+    let all_xbars = pimdb::pim::power::theoretical_peak_all_xbars_chip_w(&e.cfg);
+    assert!((all_xbars - 730.0).abs() / 730.0 < 0.05);
+    for p in &e.pairs {
+        let m = &p.pim.metrics;
+        // measured avg <= measured peak <= ~theoretical bound x margin
+        assert!(m.avg_chip_w <= m.peak_chip_w + 1e-9, "{}", p.query.name);
+        assert!(
+            m.peak_chip_w <= all_xbars * 1.05,
+            "{}: peak {} exceeds physical bound",
+            p.query.name,
+            m.peak_chip_w
+        );
+        assert!(m.theoretical_chip_w <= all_xbars * 1.0001);
+    }
+}
+
+#[test]
+fn fig15_endurance_q22_is_the_outlier() {
+    let e = experiments();
+    let q22 = e
+        .pairs
+        .iter()
+        .find(|p| p.query.name == "Q22_sub")
+        .unwrap();
+    for p in &e.pairs {
+        if p.query.name != "Q22_sub" {
+            assert!(
+                p.pim.metrics.required_endurance_10yr
+                    <= q22.pim.metrics.required_endurance_10yr * 1.01,
+                "{} wears faster than Q22_sub",
+                p.query.name
+            );
+        }
+    }
+}
+
+#[test]
+fn table6_filter_dominates_filter_only_endurance() {
+    let e = experiments();
+    for p in e.filter_only() {
+        let b = p.pim.metrics.endurance_breakdown;
+        // paper Table 6: filter ops dominate (col-transform moves few
+        // bits per row); exceptions are tiny-filter queries like Q11/Q17
+        if !["Q11", "Q17", "Q3"].contains(&p.query.name) {
+            assert!(
+                b[0] > b[2],
+                "{}: filter {:.2} vs coltrans {:.2}",
+                p.query.name,
+                b[0],
+                b[2]
+            );
+        }
+    }
+    for p in e.full() {
+        let b = p.pim.metrics.endurance_breakdown;
+        // paper: reduce column-wise ops dominate full-query wear
+        assert!(
+            b[3] > b[4],
+            "{}: agg-col {:.2} vs agg-row {:.2}",
+            p.query.name,
+            b[3],
+            b[4]
+        );
+    }
+}
+
+#[test]
+fn energy_savings_in_loose_paper_band() {
+    let e = experiments();
+    for p in &e.pairs {
+        let s = p.energy_reduction();
+        assert!(
+            (0.2..100.0).contains(&s),
+            "{}: energy reduction {s:.2} out of band",
+            p.query.name
+        );
+    }
+}
