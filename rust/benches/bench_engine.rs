@@ -6,9 +6,13 @@
 #[path = "benchkit.rs"]
 mod benchkit;
 
-use benchkit::bench_throughput;
+use benchkit::{bench, bench_throughput};
 use pimdb::exec::engine::{exec_instr, XbarState};
+use pimdb::exec::pimdb::EngineKind;
+use pimdb::exec::plan::{exec_steps_sharded, ExecPlan};
+use pimdb::pim::endurance::OpCategory;
 use pimdb::pim::isa::{ColRange, Opcode, PimInstruction};
+use pimdb::query::compiler::Step;
 use pimdb::util::rng::Rng;
 
 const XBARS: usize = 64;
@@ -84,4 +88,59 @@ fn main() {
         "cell-op",
         || run_all(&mut sts, &i),
     );
+
+    // --- sharded parallel execution (exec/plan.rs) --------------------------
+    // A representative mixed program (filter -> mask -> arith -> reduce),
+    // serial vs sharded over host worker threads. Outputs are bit-identical
+    // at every parallelism (integration-tested); this measures wall-clock.
+    let step = |instr| Step {
+        instr,
+        category: OpCategory::Filter,
+    };
+    let steps: Vec<Step> = vec![
+        step(PimInstruction::with_imm(
+            Opcode::LtImm,
+            a,
+            ColRange::new(200, 1),
+            0x9E3779B9,
+        )),
+        step(PimInstruction::binary(
+            Opcode::And,
+            a,
+            ColRange::new(200, 1),
+            ColRange::new(210, 32),
+        )),
+        step(PimInstruction::binary(
+            Opcode::Mul,
+            ColRange::new(210, 16),
+            ColRange::new(40, 16),
+            ColRange::new(250, 32),
+        )),
+        step(PimInstruction::unary(
+            Opcode::ReduceSum,
+            ColRange::new(250, 32),
+            ColRange::new(250, 32),
+        )),
+    ];
+    let mut results: Vec<(usize, f64)> = Vec::new();
+    for p in [1usize, 2, 4, 8] {
+        let plan = ExecPlan::with_parallelism(p);
+        let per = bench(
+            &format!("engine/sharded mixed program x{XBARS} xbars, parallelism={p}"),
+            600,
+            || {
+                let out =
+                    exec_steps_sharded(&mut sts, &steps, 200, EngineKind::Native, &plan).unwrap();
+                std::hint::black_box(out.total_selected());
+            },
+        );
+        results.push((p, per));
+    }
+    let serial = results[0].1;
+    for &(p, per) in &results[1..] {
+        println!(
+            "engine/sharded speedup @{p} workers: {:.2}x over serial",
+            serial / per
+        );
+    }
 }

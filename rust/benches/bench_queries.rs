@@ -42,4 +42,24 @@ fn main() {
             std::hint::black_box(b.metrics.exec_time_s);
         }
     });
+
+    // batched multi-query serving path: the 19-query suite pipelined
+    // through PimSession::run_queries over the shard pool (results are
+    // bit-identical to the serial loop above; this measures wall-clock)
+    let queries = tpch::all_queries();
+    for p in [1usize, 4] {
+        let mut cfg_par = cfg.clone();
+        cfg_par.parallelism = p;
+        let mut batch_session = engine::PimSession::new(&cfg_par, &db).unwrap();
+        bench(
+            &format!("suite/run_queries batched x19, parallelism={p}"),
+            3000,
+            || {
+                let rs = batch_session
+                    .run_queries(&queries, engine::EngineKind::Native)
+                    .unwrap();
+                std::hint::black_box(rs.len());
+            },
+        );
+    }
 }

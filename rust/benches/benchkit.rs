@@ -7,6 +7,7 @@ use std::time::Instant;
 
 /// Run `f` until ~`budget_ms` of wall time is spent (after one warmup),
 /// then report mean iteration time. Returns seconds per iteration.
+#[allow(dead_code)] // each bench target uses its own subset of the kit
 pub fn bench(name: &str, budget_ms: u64, mut f: impl FnMut()) -> f64 {
     f(); // warmup
     let budget = std::time::Duration::from_millis(budget_ms);
@@ -22,6 +23,7 @@ pub fn bench(name: &str, budget_ms: u64, mut f: impl FnMut()) -> f64 {
 }
 
 /// Like [`bench`] but also prints a throughput in `unit`s per second.
+#[allow(dead_code)] // each bench target uses its own subset of the kit
 pub fn bench_throughput(
     name: &str,
     budget_ms: u64,

@@ -87,6 +87,9 @@ impl Args {
         if let Some(t) = self.parse_u64("threads")? {
             cfg.exec_threads = t as usize;
         }
+        if let Some(p) = self.parse_u64("parallelism")? {
+            cfg.parallelism = p as usize;
+        }
         for (k, v) in &self.sets {
             cfg.set(k, v)?;
         }
@@ -108,8 +111,9 @@ pimdb — bulk-bitwise processing-in-memory database accelerator (PIMDB reproduc
 USAGE: pimdb <command> [flags]
 
 COMMANDS:
-  run        --query <Q1|Q2|...|Q22_sub> [--engine native|pjrt] [--baseline]
-             run one TPC-H query on PIMDB (and optionally the baseline)
+  run        --query <Q1|Q2|...|Q22_sub>[,Q6,...] [--engine native|pjrt] [--baseline]
+             run TPC-H queries on PIMDB (comma list batches them through
+             the shard pool; optionally compare against the baseline)
   report     --exp <table1..6|fig8..15|ablation-rowpar|calibration|all>
              regenerate a paper table/figure
   gen-data   [--sf F] [--seed N]    generate + summarize the TPC-H data
@@ -120,7 +124,9 @@ COMMANDS:
 COMMON FLAGS:
   --sf F            simulated scale factor (default 0.01)
   --seed N          generator seed (default 42)
-  --threads N       executor threads (default 4)
+  --threads N       simulated executor threads (default 4)
+  --parallelism N   host worker threads for functional execution
+                    (0 = auto-detect cores; default 1; results identical)
   --engine E        functional backend: native | pjrt
   --config FILE     key=value config file (see `report --exp table3`)
   --set key=value   override one config key (repeatable)
@@ -150,6 +156,16 @@ mod tests {
         assert_eq!(cfg.sim_sf, 0.5);
         assert_eq!(cfg.exec_threads, 8);
         assert_eq!(cfg.dram_standby_w, 2.5);
+    }
+
+    #[test]
+    fn parallelism_flag_and_set_override() {
+        let a = parse("run --parallelism 8").unwrap();
+        assert_eq!(a.build_config().unwrap().parallelism, 8);
+        // --set has the highest precedence
+        let a = parse("run --parallelism 8 --set parallelism=2").unwrap();
+        assert_eq!(a.build_config().unwrap().parallelism, 2);
+        assert!(parse("run --parallelism x").unwrap().build_config().is_err());
     }
 
     #[test]

@@ -59,6 +59,11 @@ pub struct SystemConfig {
     // --- host ---
     /// Host cores used by query execution threads.
     pub exec_threads: usize,
+    /// Host worker threads for the *functional* execution of PIM programs
+    /// (sharded crossbar interpretation, [`crate::exec::plan`]). Changes
+    /// wall-clock only: outputs and all simulated timing/energy/endurance
+    /// metrics are bit-identical for every value. 0 = auto-detect cores.
+    pub parallelism: usize,
     /// Host core frequency (Hz).
     pub core_freq_hz: f64,
     /// L1 data cache: size / associativity / block.
@@ -125,6 +130,7 @@ impl Default for SystemConfig {
             opencapi_latency_ns: 80,
 
             exec_threads: 4,
+            parallelism: 1,
             core_freq_hz: 3.6e9,
             l1_bytes: 64 << 10,
             l1_ways: 4,
@@ -204,6 +210,7 @@ impl SystemConfig {
             "opencapi_header_bytes" => parse!(opencapi_header_bytes),
             "opencapi_latency_ns" => parse!(opencapi_latency_ns),
             "exec_threads" => parse!(exec_threads),
+            "parallelism" => parse!(parallelism),
             "core_freq_hz" => parse!(core_freq_hz),
             "l1_bytes" => parse!(l1_bytes),
             "l1_ways" => parse!(l1_ways),
@@ -274,6 +281,7 @@ impl SystemConfig {
         m.insert("pim_ctrl_power_uw", self.pim_ctrl_power_uw.to_string());
         m.insert("opencapi_bw_bps", self.opencapi_bw_bps.to_string());
         m.insert("exec_threads", self.exec_threads.to_string());
+        m.insert("parallelism", self.parallelism.to_string());
         m.insert("core_freq_hz", self.core_freq_hz.to_string());
         m.insert("l1_bytes", self.l1_bytes.to_string());
         m.insert("l2_bytes", self.l2_bytes.to_string());
@@ -307,6 +315,17 @@ mod tests {
         assert_eq!(c.pim_modules, 4);
         assert!(c.set("bogus", "1").is_err());
         assert!(c.set("pim_modules", "x").is_err());
+    }
+
+    #[test]
+    fn parallelism_knob_parses() {
+        let mut c = SystemConfig::default();
+        assert_eq!(c.parallelism, 1);
+        c.set("parallelism", "8").unwrap();
+        assert_eq!(c.parallelism, 8);
+        c.set("parallelism", "0").unwrap(); // 0 = auto
+        assert_eq!(c.parallelism, 0);
+        assert!(c.set("parallelism", "-1").is_err());
     }
 
     #[test]

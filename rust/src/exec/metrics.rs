@@ -28,6 +28,17 @@ impl CycleCounts {
             OpCategory::AggRow => self.agg_row += cycles,
         }
     }
+
+    /// Commutative merge: per-category sums are order-independent, so
+    /// per-program counts combine to the same totals regardless of the
+    /// order programs were executed or accounted in.
+    pub fn merge(&mut self, other: &CycleCounts) {
+        self.filter += other.filter;
+        self.arith += other.arith;
+        self.col_transform += other.col_transform;
+        self.agg_col += other.agg_col;
+        self.agg_row += other.agg_row;
+    }
 }
 
 /// Metrics of one query execution (PIMDB or baseline), at the report SF.
@@ -101,6 +112,22 @@ mod tests {
         assert_eq!(c.filter, 11);
         assert_eq!(c.agg_row, 5);
         assert_eq!(c.total(), 16);
+    }
+
+    #[test]
+    fn merge_is_commutative() {
+        let mut a = CycleCounts::default();
+        a.add(OpCategory::Filter, 3);
+        a.add(OpCategory::AggCol, 7);
+        let mut b = CycleCounts::default();
+        b.add(OpCategory::Arith, 5);
+        b.add(OpCategory::AggCol, 1);
+        let mut ab = a;
+        ab.merge(&b);
+        let mut ba = b;
+        ba.merge(&a);
+        assert_eq!(ab, ba);
+        assert_eq!(ab.total(), 16);
     }
 
     #[test]

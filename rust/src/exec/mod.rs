@@ -1,8 +1,11 @@
 //! Execution engines: the PIMDB engine (functional crossbar interpreter +
-//! full-system timing/energy simulation) and the in-memory column-store
-//! baseline it is compared against (paper §5.4–§5.5).
+//! full-system timing/energy simulation), the sharded parallel execution
+//! plan that fans its crossbar work out over host threads, and the
+//! in-memory column-store baseline it is compared against (paper
+//! §5.4–§5.5).
 
 pub mod baseline;
 pub mod engine;
 pub mod metrics;
 pub mod pimdb;
+pub mod plan;

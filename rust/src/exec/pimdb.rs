@@ -7,20 +7,43 @@
 //! runs a computation phase (PIM requests to each of its pages, pipelined
 //! across pages, serialized per page) followed by a read phase (result
 //! read-out), with memory fences between phases.
+//!
+//! ## Host-parallel functional execution
+//!
+//! The *functional* interpretation of the crossbar states is sharded and
+//! executed on a host worker pool ([`crate::exec::plan`], sized by
+//! `SystemConfig::parallelism`; 0 = auto). Crossbars are independent, so
+//! outputs are bit-identical to the serial interpreter for every shard
+//! and thread count. The *simulated* timing/energy/endurance metrics
+//! depend only on the paper's model (`exec_threads` et al.), never on the
+//! host parallelism: cycle accounting is derived per program from the
+//! instruction stream alone (execution-order independent) and combined
+//! with a commutative merge — totals are bit-identical too.
+//!
+//! [`PimSession::run_queries`] is the batched entry point: queries whose
+//! relation sets are disjoint execute concurrently over the same shard
+//! pool (a wave), while queries sharing a relation serialize (they share
+//! the relation's crossbar compute area). This is the serving-path shape:
+//! one resident database copy, many independent queries in flight.
+
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::config::SystemConfig;
 use crate::db::dbgen::Database;
 use crate::db::layout::{DbLayout, RelationLayout};
-use crate::exec::engine::{self, ExecOutputs};
+use crate::db::schema::RelId;
+use crate::exec::engine::{self, ExecOutputs, XbarState};
 use crate::exec::metrics::{CycleCounts, GroupOutput, QueryMetrics, QueryOutput, RunReport};
+use crate::exec::plan::{self, ExecPlan, ShardTask};
 use crate::host;
-use crate::pim::controller::{cost, write_profile};
+use crate::pim::controller::{cost, write_profile, InstructionCost};
 use crate::pim::endurance::{EnduranceTracker, OpCategory};
 use crate::pim::energy::EnergyLedger;
 use crate::pim::module::{MediaScheduler, ReqKind, Request};
 use crate::pim::power::{self, PowerTrace};
 use crate::query::ast::{AggKind, Query, QueryKind};
 use crate::query::compiler::{CompiledRelQuery, Compiler, ReadKind};
+use crate::util::bits::WORDS;
 
 /// Which functional backend computes instruction semantics.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -45,7 +68,26 @@ pub struct PimSession<'a> {
     pub cfg: &'a SystemConfig,
     db: &'a Database,
     layout: DbLayout,
-    states: std::collections::BTreeMap<crate::db::schema::RelId, Vec<engine::XbarState>>,
+    states: BTreeMap<RelId, Vec<XbarState>>,
+}
+
+/// One program of one query inside a wave (all relations of a wave are
+/// distinct, so each program owns its relation's states exclusively).
+struct WaveProg {
+    qi: usize,
+    ci: usize,
+    rel: RelId,
+    compute_base: usize,
+}
+
+/// Zero the crossbar compute area (the paper's read phase frees it; data
+/// columns are never modified by query execution).
+fn clear_compute(states: &mut [XbarState], compute_base: usize) {
+    for st in states.iter_mut() {
+        for p in &mut st.planes[compute_base..] {
+            *p = [0u32; WORDS];
+        }
+    }
 }
 
 impl<'a> PimSession<'a> {
@@ -62,10 +104,7 @@ impl<'a> PimSession<'a> {
         &self.layout
     }
 
-    fn states_for(
-        &mut self,
-        rel: crate::db::schema::RelId,
-    ) -> &mut Vec<engine::XbarState> {
+    fn states_for(&mut self, rel: RelId) -> &mut Vec<XbarState> {
         let cfg = self.cfg;
         let db = self.db;
         let rl = self.layout.rel(rel);
@@ -76,49 +115,166 @@ impl<'a> PimSession<'a> {
 
     /// Run one query against the loaded database copy.
     pub fn run_query(&mut self, q: &Query, engine_kind: EngineKind) -> Result<RunReport, String> {
-        let compiled: Vec<CompiledRelQuery> = q
-            .rels
+        let mut reports = self.run_queries(std::slice::from_ref(q), engine_kind)?;
+        Ok(reports.pop().expect("one report"))
+    }
+
+    /// Batched entry point: run several queries against the resident
+    /// database copy, pipelining them over the shard pool. Queries on
+    /// disjoint relation sets execute concurrently (a *wave*); queries
+    /// sharing a relation serialize between waves. Reports come back in
+    /// input order, bit-identical to running the queries one by one.
+    pub fn run_queries(
+        &mut self,
+        queries: &[Query],
+        engine_kind: EngineKind,
+    ) -> Result<Vec<RunReport>, String> {
+        let exec_plan = ExecPlan::for_config(self.cfg);
+
+        // --- compile everything up front (errors before any execution) ---
+        let compiled_all: Vec<Vec<CompiledRelQuery>> = queries
             .iter()
-            .map(|rq| Compiler::compile(rq, self.layout.rel(rq.rel), self.cfg.xbar_cols))
+            .map(|q| {
+                q.rels
+                    .iter()
+                    .map(|rq| Compiler::compile(rq, self.layout.rel(rq.rel), self.cfg.xbar_cols))
+                    .collect::<Result<_, _>>()
+            })
             .collect::<Result<_, _>>()?;
 
-        // --- functional execution over the sim data ----------------------
-        let mut outputs_per_rel = Vec::new();
-        for c in &compiled {
-            let compute_base = self.layout.rel(c.rel).compute_base;
-            let states = self.states_for(c.rel);
-            let out = match engine_kind {
-                EngineKind::Native => {
-                    engine::exec_steps_native(states, &c.steps, c.mask_col)
-                }
-                EngineKind::Pjrt => {
-                    crate::runtime::exec_steps_pjrt(states, &c.steps, c.mask_col)?
-                }
-            };
-            // clear the computation area for the next query (the paper's
-            // read phase frees it; data columns are never modified)
-            for st in states.iter_mut() {
-                for p in &mut st.planes[compute_base..] {
-                    *p = [0u32; 32];
-                }
+        // --- materialize every touched relation once ----------------------
+        for compiled in &compiled_all {
+            for c in compiled {
+                self.states_for(c.rel);
             }
-            outputs_per_rel.push(out);
         }
-        let output = assemble_output(q, &compiled, &outputs_per_rel);
 
-        // --- timing / energy / power simulation at the report SF ---------
-        let mut metrics = simulate(self.cfg, q, &compiled, &self.layout)?;
-        metrics.inter_cells = compiled
+        // --- wave schedule -------------------------------------------------
+        // A query with a duplicated relation (two programs on the same
+        // crossbars) runs alone and sequentially — its programs share the
+        // relation's compute area.
+        let has_dup: Vec<bool> = compiled_all
             .iter()
-            .map(|c| c.peak_inter_cells)
-            .max()
-            .unwrap_or(0);
+            .map(|compiled| {
+                let mut seen = BTreeSet::new();
+                !compiled.iter().all(|c| seen.insert(c.rel))
+            })
+            .collect();
+        let mut waves: Vec<Vec<usize>> = Vec::new();
+        let mut cur: Vec<usize> = Vec::new();
+        let mut used: BTreeSet<RelId> = BTreeSet::new();
+        for qi in 0..queries.len() {
+            let rels: Vec<RelId> = compiled_all[qi].iter().map(|c| c.rel).collect();
+            if has_dup[qi] {
+                if !cur.is_empty() {
+                    waves.push(std::mem::take(&mut cur));
+                    used.clear();
+                }
+                waves.push(vec![qi]);
+                continue;
+            }
+            if rels.iter().any(|r| used.contains(r)) {
+                waves.push(std::mem::take(&mut cur));
+                used.clear();
+            }
+            cur.push(qi);
+            used.extend(rels);
+        }
+        if !cur.is_empty() {
+            waves.push(cur);
+        }
 
-        Ok(RunReport {
-            query: q.name,
-            metrics,
-            output,
-        })
+        // --- execute wave by wave -----------------------------------------
+        let mut outputs: BTreeMap<(usize, usize), ExecOutputs> = BTreeMap::new();
+        for wave in waves {
+            if wave.len() == 1 && has_dup[wave[0]] {
+                // sequential fallback: programs reuse the compute area.
+                // States are moved out for the duration of each program so
+                // a backend error drops them (same as the wave path) —
+                // never leave a half-mutated compute area resident.
+                let qi = wave[0];
+                for (ci, c) in compiled_all[qi].iter().enumerate() {
+                    let compute_base = self.layout.rel(c.rel).compute_base;
+                    let mut states = self.states.remove(&c.rel).expect("preloaded above");
+                    let out = plan::exec_steps_sharded(
+                        &mut states,
+                        &c.steps,
+                        c.mask_col,
+                        engine_kind,
+                        &exec_plan,
+                    )?;
+                    clear_compute(&mut states, compute_base);
+                    self.states.insert(c.rel, states);
+                    outputs.insert((qi, ci), out);
+                }
+                continue;
+            }
+
+            let layout = &self.layout;
+            let progs: Vec<WaveProg> = wave
+                .iter()
+                .flat_map(|&qi| {
+                    compiled_all[qi].iter().enumerate().map(move |(ci, c)| WaveProg {
+                        qi,
+                        ci,
+                        rel: c.rel,
+                        compute_base: layout.rel(c.rel).compute_base,
+                    })
+                })
+                .collect();
+
+            // move each program's states out of the session map; on error
+            // the moved states are dropped and lazily reloaded clean later
+            let mut prog_states: Vec<Vec<XbarState>> = progs
+                .iter()
+                .map(|p| self.states.remove(&p.rel).expect("preloaded above"))
+                .collect();
+
+            let mut tasks: Vec<ShardTask<'_>> = Vec::new();
+            for (key, (p, states)) in progs.iter().zip(prog_states.iter_mut()).enumerate() {
+                let c = &compiled_all[p.qi][p.ci];
+                plan::push_shard_tasks(
+                    &mut tasks,
+                    key,
+                    states,
+                    &c.steps,
+                    c.mask_col,
+                    engine_kind,
+                    &exec_plan,
+                );
+            }
+            let merged = plan::run_tasks(tasks, progs.len(), exec_plan.parallelism)?;
+
+            for (p, states) in progs.iter().zip(prog_states.iter_mut()) {
+                clear_compute(states, p.compute_base);
+            }
+            for ((p, states), out) in progs.iter().zip(prog_states).zip(merged) {
+                self.states.insert(p.rel, states);
+                outputs.insert((p.qi, p.ci), out);
+            }
+        }
+
+        // --- assemble outputs + run the timing/energy simulation -----------
+        let mut reports = Vec::with_capacity(queries.len());
+        for (qi, q) in queries.iter().enumerate() {
+            let compiled = &compiled_all[qi];
+            let outs: Vec<ExecOutputs> = (0..compiled.len())
+                .map(|ci| outputs.remove(&(qi, ci)).expect("executed above"))
+                .collect();
+            let output = assemble_output(q, compiled, &outs);
+            let mut metrics = simulate(self.cfg, q, compiled, &self.layout)?;
+            metrics.inter_cells = compiled
+                .iter()
+                .map(|c| c.peak_inter_cells)
+                .max()
+                .unwrap_or(0);
+            reports.push(RunReport {
+                query: q.name,
+                metrics,
+                output,
+            });
+        }
+        Ok(reports)
     }
 }
 
@@ -224,6 +380,27 @@ fn page_read_bytes(c: &CompiledRelQuery, rl: &RelationLayout, cfg: &SystemConfig
     }
 }
 
+/// Table 5 per-crossbar cycle totals of one compiled program. The
+/// instruction stream is identical on every crossbar/page, so the count
+/// depends only on the program — not on how its shards were scheduled —
+/// and programs combine with a commutative merge.
+fn count_cycles(costs: &[(InstructionCost, OpCategory)]) -> CycleCounts {
+    let mut cycles = CycleCounts::default();
+    for (ic, cat) in costs {
+        match cat {
+            OpCategory::AggCol | OpCategory::AggRow => {
+                cycles.add(OpCategory::AggCol, ic.col_cycles);
+                cycles.add(OpCategory::AggRow, ic.row_cycles);
+            }
+            OpCategory::ColTransform => {
+                cycles.add(OpCategory::ColTransform, ic.total_cycles())
+            }
+            cat => cycles.add(*cat, ic.total_cycles()),
+        }
+    }
+    cycles
+}
+
 fn simulate(
     cfg: &SystemConfig,
     _q: &Query,
@@ -233,7 +410,6 @@ fn simulate(
     let mut sched = MediaScheduler::new(cfg);
     let mut power = PowerTrace::new(cfg.pim_modules);
     let mut energy = EnergyLedger::default();
-    let mut cycles = CycleCounts::default();
     let xbars_per_page = cfg.xbars_per_page();
     let ctrls_per_page = cfg.pim_ctrls_per_page();
 
@@ -248,21 +424,10 @@ fn simulate(
         })
         .collect();
 
-    // Table 5 per-crossbar cycle counts (instruction stream is identical
-    // on every crossbar/page, so count once).
+    // Table 5 cycle counts: per-program, combined commutatively.
+    let mut cycles = CycleCounts::default();
     for cs in &costs {
-        for (ic, cat) in cs {
-            match cat {
-                OpCategory::AggCol | OpCategory::AggRow => {
-                    cycles.add(OpCategory::AggCol, ic.col_cycles);
-                    cycles.add(OpCategory::AggRow, ic.row_cycles);
-                }
-                OpCategory::ColTransform => {
-                    cycles.add(OpCategory::ColTransform, ic.total_cycles())
-                }
-                cat => cycles.add(*cat, ic.total_cycles()),
-            }
-        }
+        cycles.merge(&count_cycles(cs));
     }
 
     let threads = cfg.exec_threads.max(1);
@@ -569,6 +734,66 @@ mod tests {
             run_query(&cfg, &database, &tpch::query("Q14").unwrap(), EngineKind::Native).unwrap();
         // same relation; Q6 reads aggregates only -> fewer LLC misses
         assert!(q6.metrics.llc_misses < q14.metrics.llc_misses);
+    }
+
+    #[test]
+    fn parallel_session_matches_serial_session() {
+        let cfg_serial = SystemConfig {
+            parallelism: 1,
+            ..SystemConfig::default()
+        };
+        let cfg_par = SystemConfig {
+            parallelism: 3,
+            ..SystemConfig::default()
+        };
+        let database = db();
+        let mut s_serial = PimSession::new(&cfg_serial, &database).unwrap();
+        let mut s_par = PimSession::new(&cfg_par, &database).unwrap();
+        for name in ["Q6", "Q1", "Q12"] {
+            let q = tpch::query(name).unwrap();
+            let a = s_serial.run_query(&q, EngineKind::Native).unwrap();
+            let b = s_par.run_query(&q, EngineKind::Native).unwrap();
+            assert_eq!(a.output, b.output, "{name}");
+            assert_eq!(a.metrics.cycles, b.metrics.cycles, "{name}");
+            assert_eq!(
+                a.metrics.exec_time_s.to_bits(),
+                b.metrics.exec_time_s.to_bits(),
+                "{name}"
+            );
+        }
+    }
+
+    #[test]
+    fn run_queries_batch_matches_individual() {
+        let cfg = SystemConfig {
+            parallelism: 4,
+            ..SystemConfig::default()
+        };
+        let database = db();
+        let queries: Vec<_> = ["Q6", "Q11", "Q22_sub", "Q6", "Q12"]
+            .iter()
+            .map(|n| tpch::query(n).unwrap())
+            .collect();
+        let mut batch = PimSession::new(&cfg, &database).unwrap();
+        let reports = batch.run_queries(&queries, EngineKind::Native).unwrap();
+        assert_eq!(reports.len(), queries.len());
+        let mut single = PimSession::new(&cfg, &database).unwrap();
+        for (q, r) in queries.iter().zip(&reports) {
+            let want = single.run_query(q, EngineKind::Native).unwrap();
+            assert_eq!(want.output, r.output, "{}", q.name);
+            assert_eq!(want.metrics.cycles, r.metrics.cycles, "{}", q.name);
+        }
+    }
+
+    #[test]
+    fn run_queries_empty_batch_is_ok() {
+        let cfg = SystemConfig::default();
+        let database = db();
+        let mut s = PimSession::new(&cfg, &database).unwrap();
+        assert!(s
+            .run_queries(&[], EngineKind::Native)
+            .unwrap()
+            .is_empty());
     }
 }
 

@@ -1,0 +1,353 @@
+//! Sharded, parallel execution of compiled PIM programs.
+//!
+//! The paper's performance model assumes thousands of crossbars execute
+//! each PIM request in lockstep; the functional engine interprets those
+//! crossbars on the host, where they are *embarrassingly parallel*: no
+//! instruction reads or writes state outside its own crossbar
+//! ([`XbarState`]). This module splits a program's crossbar batch into
+//! contiguous **shards** and executes shards concurrently on host worker
+//! threads, then merges the per-shard outputs back into crossbar order.
+//!
+//! Determinism: a shard's outputs depend only on its own crossbars, and
+//! the merge reassembles them in `(program, shard)` order, so the result
+//! is bit-identical to the serial interpreter for every shard count and
+//! thread count (asserted by `tests/prop_engine.rs` and the integration
+//! equivalence suite).
+//!
+//! The same plan drives both functional backends: native shards run
+//! [`engine::exec_steps_native`], PJRT shards run
+//! [`crate::runtime::exec_steps_pjrt`] (each worker thread lazily
+//! initializes its own thread-local PJRT runtime), keeping the two
+//! engines differential-testable at any parallelism.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use crate::config::SystemConfig;
+use crate::exec::engine::{self, ExecOutputs, XbarState};
+use crate::exec::pimdb::EngineKind;
+use crate::query::compiler::Step;
+
+/// Shards per worker beyond 1x: partial tail shards and relation-size
+/// imbalance smooth out when workers can steal more than one shard each.
+pub const SHARD_OVERSUB: usize = 2;
+
+/// How a query's compiled programs split into shards and onto workers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExecPlan {
+    /// Host worker threads executing shards (>= 1).
+    pub parallelism: usize,
+    /// Target shard count per program (>= 1).
+    pub shards_per_program: usize,
+}
+
+impl ExecPlan {
+    /// Serial plan: one shard, one worker — the reference path.
+    pub fn serial() -> ExecPlan {
+        ExecPlan {
+            parallelism: 1,
+            shards_per_program: 1,
+        }
+    }
+
+    /// Plan for `parallelism` workers (0 = auto-detect host cores).
+    pub fn with_parallelism(parallelism: usize) -> ExecPlan {
+        let p = resolve_parallelism(parallelism);
+        ExecPlan {
+            parallelism: p,
+            shards_per_program: if p <= 1 { 1 } else { p * SHARD_OVERSUB },
+        }
+    }
+
+    /// Plan from the config's `parallelism` knob.
+    pub fn for_config(cfg: &SystemConfig) -> ExecPlan {
+        ExecPlan::with_parallelism(cfg.parallelism)
+    }
+
+    /// Crossbars per shard for a program over `n_xbars` crossbars.
+    pub fn shard_len(&self, n_xbars: usize) -> usize {
+        n_xbars.div_ceil(self.shards_per_program.max(1)).max(1)
+    }
+}
+
+/// Resolve the config value: 0 = one worker per available host core.
+pub fn resolve_parallelism(parallelism: usize) -> usize {
+    if parallelism == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    } else {
+        parallelism
+    }
+}
+
+/// One unit of parallel work: a contiguous crossbar range of one program.
+pub struct ShardTask<'a> {
+    /// Program id (dense, `0..n_programs`).
+    pub key: usize,
+    /// Shard index within the program (merge order).
+    pub shard: usize,
+    pub states: &'a mut [XbarState],
+    pub steps: &'a [Step],
+    pub mask_col: usize,
+    pub engine: EngineKind,
+}
+
+fn run_one(t: ShardTask<'_>) -> Result<ExecOutputs, String> {
+    match t.engine {
+        EngineKind::Native => Ok(engine::exec_steps_native(t.states, t.steps, t.mask_col)),
+        EngineKind::Pjrt => crate::runtime::exec_steps_pjrt(t.states, t.steps, t.mask_col),
+    }
+}
+
+/// Execute shard tasks over `parallelism` workers and merge per program.
+///
+/// Workers pull tasks from a shared queue (relation sizes differ wildly —
+/// LINEITEM is ~60x SUPPLIER — so static assignment would idle threads).
+/// Merging concatenates shard outputs in `(key, shard)` order, restoring
+/// exactly the serial engine's per-crossbar order.
+pub fn run_tasks(
+    tasks: Vec<ShardTask<'_>>,
+    n_programs: usize,
+    parallelism: usize,
+) -> Result<Vec<ExecOutputs>, String> {
+    let workers = parallelism.min(tasks.len()).max(1);
+    let mut partials: Vec<(usize, usize, ExecOutputs)> = Vec::with_capacity(tasks.len());
+    if workers == 1 {
+        for t in tasks {
+            let (key, shard) = (t.key, t.shard);
+            partials.push((key, shard, run_one(t)?));
+        }
+    } else {
+        let queue = Mutex::new(VecDeque::from(tasks));
+        let done = Mutex::new(Vec::new());
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let next = queue.lock().unwrap().pop_front();
+                    let Some(t) = next else { break };
+                    let (key, shard) = (t.key, t.shard);
+                    let r = run_one(t);
+                    done.lock().unwrap().push((key, shard, r));
+                });
+            }
+        });
+        for (key, shard, r) in done.into_inner().unwrap() {
+            partials.push((key, shard, r?));
+        }
+    }
+    partials.sort_by_key(|&(key, shard, _)| (key, shard));
+
+    let mut merged = vec![ExecOutputs::default(); n_programs];
+    let mut seen = vec![false; n_programs];
+    for (key, _shard, part) in partials {
+        if !seen[key] {
+            merged[key] = part;
+            seen[key] = true;
+        } else {
+            let out = &mut merged[key];
+            debug_assert_eq!(out.reduces.len(), part.reduces.len());
+            for (dst, src) in out.reduces.iter_mut().zip(part.reduces) {
+                dst.extend(src);
+            }
+            out.mask_counts.extend(part.mask_counts);
+        }
+    }
+    Ok(merged)
+}
+
+/// Append one program's shard tasks to `tasks` — the single chunking
+/// rule shared by [`exec_steps_sharded`] and the batched wave path in
+/// [`crate::exec::pimdb::PimSession::run_queries`], so shard geometry
+/// cannot silently diverge between them.
+pub fn push_shard_tasks<'a>(
+    tasks: &mut Vec<ShardTask<'a>>,
+    key: usize,
+    states: &'a mut [XbarState],
+    steps: &'a [Step],
+    mask_col: usize,
+    engine: EngineKind,
+    plan: &ExecPlan,
+) {
+    let shard_len = plan.shard_len(states.len());
+    for (shard, chunk) in states.chunks_mut(shard_len).enumerate() {
+        tasks.push(ShardTask {
+            key,
+            shard,
+            states: chunk,
+            steps,
+            mask_col,
+            engine,
+        });
+    }
+}
+
+/// Run one program over a crossbar batch, sharded per `plan`.
+pub fn exec_steps_sharded(
+    states: &mut [XbarState],
+    steps: &[Step],
+    mask_col: usize,
+    engine: EngineKind,
+    plan: &ExecPlan,
+) -> Result<ExecOutputs, String> {
+    if states.is_empty() {
+        // keep the output shape identical to the serial interpreter
+        // (n_reduces empty per-crossbar vectors, not an empty `reduces`)
+        return Ok(engine::exec_steps_native(states, steps, mask_col));
+    }
+    let mut tasks = Vec::new();
+    push_shard_tasks(&mut tasks, 0, states, steps, mask_col, engine, plan);
+    let mut merged = run_tasks(tasks, 1, plan.parallelism)?;
+    Ok(merged.pop().expect("one program"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::endurance::OpCategory;
+    use crate::pim::isa::{ColRange, Opcode, PimInstruction};
+    use crate::util::bits::WORDS;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    fn step(instr: PimInstruction) -> Step {
+        Step {
+            instr,
+            category: OpCategory::Filter,
+        }
+    }
+
+    fn random_states(seed: u64, n: usize) -> Vec<XbarState> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let mut st = XbarState::new(160);
+                for c in 0..32 {
+                    for w in 0..WORDS {
+                        st.planes[c][w] = rng.next_u32();
+                    }
+                }
+                st
+            })
+            .collect()
+    }
+
+    fn program() -> Vec<Step> {
+        vec![
+            step(PimInstruction::with_imm(
+                Opcode::LtImm,
+                ColRange::new(0, 16),
+                ColRange::new(100, 1),
+                0x1234,
+            )),
+            step(PimInstruction::binary(
+                Opcode::And,
+                ColRange::new(0, 16),
+                ColRange::new(100, 1),
+                ColRange::new(110, 16),
+            )),
+            step(PimInstruction::unary(
+                Opcode::ReduceSum,
+                ColRange::new(110, 16),
+                ColRange::new(110, 16),
+            )),
+            step(PimInstruction::unary(
+                Opcode::ReduceMax,
+                ColRange::new(110, 16),
+                ColRange::new(110, 16),
+            )),
+        ]
+    }
+
+    #[test]
+    fn sharded_matches_serial_across_plans() {
+        check("plan-shard-equivalence", 12, |g| {
+            let n = g.usize(1, 11);
+            let seed = g.u64(0, 1 << 40);
+            let steps = program();
+            let mut serial = random_states(seed, n);
+            let want = engine::exec_steps_native(&mut serial, &steps, 100);
+            let plan = ExecPlan {
+                parallelism: g.usize(1, 8),
+                shards_per_program: g.usize(1, 16),
+            };
+            let mut sharded = random_states(seed, n);
+            let got =
+                exec_steps_sharded(&mut sharded, &steps, 100, EngineKind::Native, &plan).unwrap();
+            assert_eq!(want.reduces, got.reduces, "plan {plan:?}");
+            assert_eq!(want.mask_counts, got.mask_counts, "plan {plan:?}");
+            for (a, b) in serial.iter().zip(&sharded) {
+                assert_eq!(a.planes, b.planes);
+            }
+        });
+    }
+
+    #[test]
+    fn run_tasks_merges_multiple_programs() {
+        let steps_a = program();
+        let steps_b = vec![step(PimInstruction::unary(
+            Opcode::Set,
+            ColRange::new(50, 1),
+            ColRange::new(50, 1),
+        ))];
+        let mut sa = random_states(7, 5);
+        let mut sb = random_states(8, 3);
+        let mut want_a = sa.clone();
+        let mut want_b = sb.clone();
+        let wa = engine::exec_steps_native(&mut want_a, &steps_a, 100);
+        let wb = engine::exec_steps_native(&mut want_b, &steps_b, 50);
+
+        let mut tasks = Vec::new();
+        for (shard, chunk) in sa.chunks_mut(2).enumerate() {
+            tasks.push(ShardTask {
+                key: 0,
+                shard,
+                states: chunk,
+                steps: &steps_a,
+                mask_col: 100,
+                engine: EngineKind::Native,
+            });
+        }
+        for (shard, chunk) in sb.chunks_mut(1).enumerate() {
+            tasks.push(ShardTask {
+                key: 1,
+                shard,
+                states: chunk,
+                steps: &steps_b,
+                mask_col: 50,
+                engine: EngineKind::Native,
+            });
+        }
+        let merged = run_tasks(tasks, 2, 4).unwrap();
+        assert_eq!(merged[0].reduces, wa.reduces);
+        assert_eq!(merged[0].mask_counts, wa.mask_counts);
+        assert_eq!(merged[1].mask_counts, wb.mask_counts);
+        assert!(merged[1].reduces.is_empty());
+    }
+
+    #[test]
+    fn plan_geometry() {
+        let p = ExecPlan::with_parallelism(4);
+        assert_eq!(p.parallelism, 4);
+        assert_eq!(p.shards_per_program, 4 * SHARD_OVERSUB);
+        assert_eq!(p.shard_len(16), 2);
+        assert_eq!(p.shard_len(1), 1);
+        assert_eq!(ExecPlan::serial().shard_len(1000), 1000);
+        assert_eq!(ExecPlan::with_parallelism(1).shards_per_program, 1);
+        assert!(resolve_parallelism(0) >= 1);
+        assert_eq!(resolve_parallelism(6), 6);
+    }
+
+    #[test]
+    fn pjrt_tasks_error_cleanly_when_runtime_missing() {
+        if crate::runtime::runtime_available() {
+            return; // real runtime present: covered by differential tests
+        }
+        let mut sts = random_states(3, 2);
+        let steps = program();
+        let plan = ExecPlan::with_parallelism(2);
+        let err =
+            exec_steps_sharded(&mut sts, &steps, 100, EngineKind::Pjrt, &plan).unwrap_err();
+        assert!(!err.is_empty());
+    }
+}

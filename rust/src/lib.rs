@@ -22,9 +22,23 @@
 //! * [`db`] — TPC-H substrate: schema, generator, encodings, PIM layout.
 //! * [`query`] — filter/aggregate AST, the 19 evaluated TPC-H queries,
 //!   compiler to PIM request programs.
-//! * [`exec`] — the PIMDB engine and the in-memory column-store baseline.
-//! * [`runtime`] — PJRT CPU client running the AOT kernel artifacts.
+//! * [`exec`] — the PIMDB engine, the sharded parallel execution plan,
+//!   and the in-memory column-store baseline.
+//! * [`runtime`] — PJRT CPU client running the AOT kernel artifacts
+//!   (behind the `pjrt` cargo feature; a stub otherwise).
 //! * [`report`] — regenerates every evaluation table and figure.
+//!
+//! ## Host-parallel sharded execution
+//!
+//! Crossbars are functionally independent, so the engine splits every
+//! compiled program into contiguous crossbar shards ([`exec::plan`]) and
+//! executes them on a pool of host worker threads sized by
+//! `SystemConfig::parallelism` (`--parallelism`; 0 = auto-detect). Query
+//! outputs *and* all timing/energy/endurance accounting are bit-identical
+//! for every shard and thread count — the knob only changes wall-clock.
+//! [`exec::pimdb::PimSession::run_queries`] batches independent queries
+//! over the same shard pool: queries on disjoint relations execute
+//! concurrently in waves, queries sharing a relation serialize.
 
 pub mod cli;
 pub mod config;

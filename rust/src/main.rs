@@ -6,12 +6,16 @@
 //! evaluation artifacts. See `pimdb help`.
 
 use pimdb::cli::{Args, USAGE};
+use pimdb::config::SystemConfig;
 use pimdb::db::dbgen::Database;
 use pimdb::db::schema::PIM_RELATIONS;
+use pimdb::exec::metrics::RunReport;
+use pimdb::exec::plan::resolve_parallelism;
 use pimdb::exec::{baseline, pimdb as engine};
 use pimdb::mem::addr::AddressMap;
 use pimdb::pim::controller::cost;
 use pimdb::pim::isa::{ColRange, Opcode, PimInstruction};
+use pimdb::query::ast::Query;
 use pimdb::query::tpch;
 use pimdb::report;
 use pimdb::util::stats::eng;
@@ -48,16 +52,40 @@ fn dispatch(args: &Args) -> Result<(), String> {
 
 fn cmd_run(args: &Args) -> Result<(), String> {
     let cfg = args.build_config()?;
-    let name = args.get("query").ok_or("run needs --query")?;
-    let q = tpch::query(name).ok_or_else(|| format!("unknown query '{name}'"))?;
+    let spec = args.get("query").ok_or("run needs --query")?;
+    let queries: Vec<Query> = spec
+        .split(',')
+        .map(|n| {
+            let n = n.trim();
+            tpch::query(n).ok_or_else(|| format!("unknown query '{n}'"))
+        })
+        .collect::<Result<_, _>>()?;
     let seed = args.parse_u64("seed")?.unwrap_or(42);
     let db = Database::generate(cfg.sim_sf, seed);
     let engine_kind = args.engine()?;
 
     let t0 = std::time::Instant::now();
-    let r = engine::run_query(&cfg, &db, &q, engine_kind)?;
+    let mut session = engine::PimSession::new(&cfg, &db)?;
+    let reports = session.run_queries(&queries, engine_kind)?;
     let wall = t0.elapsed();
 
+    for (q, r) in queries.iter().zip(&reports) {
+        print_report(&cfg, engine_kind, r);
+        if args.has("baseline") {
+            print_baseline(&cfg, &db, q, r);
+        }
+    }
+    println!(
+        "(host wall-clock for {} simulated quer{}: {:.2?} at parallelism {})",
+        reports.len(),
+        if reports.len() == 1 { "y" } else { "ies" },
+        wall,
+        resolve_parallelism(cfg.parallelism)
+    );
+    Ok(())
+}
+
+fn print_report(cfg: &SystemConfig, engine_kind: engine::EngineKind, r: &RunReport) {
     println!("query {} [{:?} engine], sim SF={}, report SF={}", r.query, engine_kind, cfg.sim_sf, cfg.report_sf);
     for (rel, n) in &r.output.selected {
         println!("  {rel}: {n} records pass the filter (sim scale)");
@@ -86,24 +114,23 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         m.peak_chip_w, m.avg_chip_w, m.theoretical_chip_w);
     println!("  endurance      {:.4} ops/cell/exec, 10yr {}",
         m.ops_per_cell, eng(m.required_endurance_10yr));
-    println!("  (host wall-clock for this simulation: {:.2?})", wall);
+}
 
-    if args.has("baseline") {
-        let b = baseline::run_query(&cfg, &db, &q);
-        println!("-- baseline (in-memory column store) --");
-        println!("  exec time      {}s", eng(b.metrics.exec_time_s));
-        println!("  llc misses     {}", b.metrics.llc_misses);
-        println!("  energy         {}J", eng(b.metrics.total_energy_pj() * 1e-12));
-        println!("  speedup        {:.2}x", b.metrics.exec_time_s / m.exec_time_s);
-        println!("  llc reduction  {:.2}x", b.metrics.llc_misses as f64 / m.llc_misses.max(1) as f64);
-        println!("  energy saving  {:.2}x", b.metrics.total_energy_pj() / m.total_energy_pj());
-        if b.output != r.output {
-            println!("  WARNING: functional outputs differ between engines!");
-        } else {
-            println!("  functional outputs match the baseline");
-        }
+fn print_baseline(cfg: &SystemConfig, db: &Database, q: &Query, r: &RunReport) {
+    let m = &r.metrics;
+    let b = baseline::run_query(cfg, db, q);
+    println!("-- baseline (in-memory column store) --");
+    println!("  exec time      {}s", eng(b.metrics.exec_time_s));
+    println!("  llc misses     {}", b.metrics.llc_misses);
+    println!("  energy         {}J", eng(b.metrics.total_energy_pj() * 1e-12));
+    println!("  speedup        {:.2}x", b.metrics.exec_time_s / m.exec_time_s);
+    println!("  llc reduction  {:.2}x", b.metrics.llc_misses as f64 / m.llc_misses.max(1) as f64);
+    println!("  energy saving  {:.2}x", b.metrics.total_energy_pj() / m.total_energy_pj());
+    if b.output != r.output {
+        println!("  WARNING: functional outputs differ between engines!");
+    } else {
+        println!("  functional outputs match the baseline");
     }
-    Ok(())
 }
 
 fn cmd_report(args: &Args) -> Result<(), String> {

@@ -132,16 +132,23 @@ pub fn table4(cfg: &SystemConfig) {
     }
 }
 
-/// Table 5: per-crossbar bulk-bitwise cycles by type + intermediate cells.
-pub fn table5(exps: &Experiments) {
-    println!("== Table 5: PIM logic cycles by type (per crossbar) ==");
-    println!(
+/// Table 5 rendered to a string (golden-snapshot tested: the rendering is
+/// deterministic for a fixed seed/scale and independent of the host
+/// `parallelism` knob).
+pub fn table5_string(exps: &Experiments) -> String {
+    use std::fmt::Write;
+    let mut s = String::new();
+    writeln!(s, "== Table 5: PIM logic cycles by type (per crossbar) ==").unwrap();
+    writeln!(
+        s,
         "{:<8} {:>8} {:>8} {:>10} {:>12} {:>12} {:>7}",
         "Query", "Filter", "Arith", "ColTrans", "Agg-col", "Agg-row", "Inter"
-    );
+    )
+    .unwrap();
     for p in &exps.pairs {
         let c = &p.pim.metrics.cycles;
-        println!(
+        writeln!(
+            s,
             "{:<8} {:>8} {:>8} {:>10} {:>12} {:>12} {:>7}",
             p.query.name,
             c.filter,
@@ -150,20 +157,32 @@ pub fn table5(exps: &Experiments) {
             c.agg_col,
             c.agg_row,
             p.pim.metrics.inter_cells
-        );
+        )
+        .unwrap();
     }
+    s
 }
 
-/// Table 6: endurance contribution breakdown at the hottest row.
-pub fn table6(exps: &Experiments) {
-    println!("== Table 6: endurance contribution breakdown (max row) ==");
-    println!(
+/// Table 5: per-crossbar bulk-bitwise cycles by type + intermediate cells.
+pub fn table5(exps: &Experiments) {
+    print!("{}", table5_string(exps));
+}
+
+/// Table 6 rendered to a string (see [`table5_string`]).
+pub fn table6_string(exps: &Experiments) -> String {
+    use std::fmt::Write;
+    let mut s = String::new();
+    writeln!(s, "== Table 6: endurance contribution breakdown (max row) ==").unwrap();
+    writeln!(
+        s,
         "{:<8} {:>8} {:>8} {:>10} {:>9} {:>9}",
         "Query", "Filter%", "Arith%", "ColTrans%", "AggCol%", "AggRow%"
-    );
+    )
+    .unwrap();
     for p in &exps.pairs {
         let b = p.pim.metrics.endurance_breakdown;
-        println!(
+        writeln!(
+            s,
             "{:<8} {:>7.1}% {:>7.1}% {:>9.1}% {:>8.1}% {:>8.1}%",
             p.query.name,
             b[0] * 100.0,
@@ -171,8 +190,15 @@ pub fn table6(exps: &Experiments) {
             b[2] * 100.0,
             b[3] * 100.0,
             b[4] * 100.0
-        );
+        )
+        .unwrap();
     }
+    s
+}
+
+/// Table 6: endurance contribution breakdown at the hottest row.
+pub fn table6(exps: &Experiments) {
+    print!("{}", table6_string(exps));
 }
 
 #[cfg(test)]
@@ -186,6 +212,16 @@ mod tests {
         table2();
         table3(&cfg);
         table4(&cfg);
+    }
+
+    #[test]
+    fn table_strings_have_headers() {
+        let exps = Experiments {
+            cfg: SystemConfig::default(),
+            pairs: vec![],
+        };
+        assert!(table5_string(&exps).starts_with("== Table 5"));
+        assert!(table6_string(&exps).starts_with("== Table 6"));
     }
 
     #[test]

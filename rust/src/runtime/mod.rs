@@ -14,7 +14,22 @@
 //! Ops not worth a PJRT round-trip (single-plane Set/Reset/Not/And/Or and
 //! result-mask post-processing) run on the host word-wise — they are not
 //! the compute hot-spot (paper Table 5: compare/arith/reduce dominate).
+//!
+//! The whole backend sits behind the `pjrt` cargo feature: the offline
+//! build has no `xla` crate, so the default build links the stub instead,
+//! which reports the runtime as unavailable. Either way the backend is
+//! driven shard-by-shard through [`crate::exec::plan`], the same execution
+//! plan the native engine uses, so the two stay differential-testable at
+//! any parallelism.
 
+#[cfg(feature = "pjrt")]
 pub mod exec;
 
+#[cfg(feature = "pjrt")]
 pub use exec::{exec_steps_pjrt, runtime_available, Runtime};
+
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{exec_steps_pjrt, runtime_available};

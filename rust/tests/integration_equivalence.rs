@@ -5,8 +5,44 @@
 
 use pimdb::config::SystemConfig;
 use pimdb::db::dbgen::Database;
+use pimdb::exec::metrics::QueryMetrics;
 use pimdb::exec::{baseline, pimdb as engine};
 use pimdb::query::tpch;
+
+/// The simulated metrics must not depend on the host `parallelism` knob:
+/// every float compares by bit pattern, not tolerance.
+fn assert_metrics_bit_identical(a: &QueryMetrics, b: &QueryMetrics, ctx: &str) {
+    assert_eq!(a.cycles, b.cycles, "{ctx}: cycle counts");
+    assert_eq!(a.inter_cells, b.inter_cells, "{ctx}: inter cells");
+    assert_eq!(a.llc_misses, b.llc_misses, "{ctx}: llc misses");
+    assert_eq!(a.pim_energy, b.pim_energy, "{ctx}: pim energy ledger");
+    for (x, y, what) in [
+        (a.exec_time_s, b.exec_time_s, "exec_time_s"),
+        (a.pim_time_s, b.pim_time_s, "pim_time_s"),
+        (a.read_time_s, b.read_time_s, "read_time_s"),
+        (a.other_time_s, b.other_time_s, "other_time_s"),
+        (a.host_energy_pj, b.host_energy_pj, "host_energy_pj"),
+        (a.dram_energy_pj, b.dram_energy_pj, "dram_energy_pj"),
+        (a.peak_chip_w, b.peak_chip_w, "peak_chip_w"),
+        (a.avg_chip_w, b.avg_chip_w, "avg_chip_w"),
+        (a.theoretical_chip_w, b.theoretical_chip_w, "theoretical_chip_w"),
+        (a.ops_per_cell, b.ops_per_cell, "ops_per_cell"),
+        (
+            a.required_endurance_10yr,
+            b.required_endurance_10yr,
+            "required_endurance_10yr",
+        ),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: {what}");
+    }
+    for i in 0..5 {
+        assert_eq!(
+            a.endurance_breakdown[i].to_bits(),
+            b.endurance_breakdown[i].to_bits(),
+            "{ctx}: endurance_breakdown[{i}]"
+        );
+    }
+}
 
 #[test]
 fn all_queries_pimdb_equals_baseline() {
@@ -33,6 +69,66 @@ fn equivalence_holds_across_seeds_and_scales() {
             let base = baseline::run_query(&cfg, &db, &q);
             assert_eq!(pim.output, base.output, "{name} sf={sf} seed={seed}");
         }
+    }
+}
+
+/// Every TPC-H query must be bit-identical across serial native (1
+/// worker/shard), parallel native with 2 workers (4 shards) and 8 workers
+/// (16 shards) — outputs *and* cycle/energy/endurance/timing totals — and
+/// equal to the baseline's functional output.
+#[test]
+fn all_queries_bit_identical_across_parallelism() {
+    let mk_cfg = |p: usize| SystemConfig {
+        sim_sf: 0.002,
+        parallelism: p,
+        ..SystemConfig::default()
+    };
+    let (cfg1, cfg2, cfg8) = (mk_cfg(1), mk_cfg(2), mk_cfg(8));
+    let db = Database::generate(0.002, 1234);
+    let mut s1 = engine::PimSession::new(&cfg1, &db).unwrap();
+    let mut s2 = engine::PimSession::new(&cfg2, &db).unwrap();
+    let mut s8 = engine::PimSession::new(&cfg8, &db).unwrap();
+    for q in tpch::all_queries() {
+        let serial = s1
+            .run_query(&q, engine::EngineKind::Native)
+            .unwrap_or_else(|e| panic!("{}: {e}", q.name));
+        let base = baseline::run_query(&cfg1, &db, &q);
+        assert_eq!(serial.output, base.output, "{} serial vs baseline", q.name);
+        let par2 = s2.run_query(&q, engine::EngineKind::Native).unwrap();
+        let par8 = s8.run_query(&q, engine::EngineKind::Native).unwrap();
+        for (r, label) in [(&par2, "2 workers"), (&par8, "8 workers")] {
+            assert_eq!(r.output, serial.output, "{} {label}: outputs", q.name);
+            assert_metrics_bit_identical(
+                &r.metrics,
+                &serial.metrics,
+                &format!("{} {label}", q.name),
+            );
+        }
+    }
+}
+
+/// The batched entry point must equal one-by-one execution, including
+/// when consecutive queries share a relation (forcing wave splits).
+#[test]
+fn batched_run_queries_matches_individual_runs() {
+    let cfg = SystemConfig {
+        sim_sf: 0.002,
+        parallelism: 4,
+        ..SystemConfig::default()
+    };
+    let db = Database::generate(cfg.sim_sf, 1234);
+    let queries = tpch::all_queries();
+    let mut batch = engine::PimSession::new(&cfg, &db).unwrap();
+    let reports = batch
+        .run_queries(&queries, engine::EngineKind::Native)
+        .unwrap();
+    assert_eq!(reports.len(), queries.len());
+    let mut single = engine::PimSession::new(&cfg, &db).unwrap();
+    for (q, got) in queries.iter().zip(&reports) {
+        assert_eq!(got.query, q.name, "report order must match input order");
+        let want = single.run_query(q, engine::EngineKind::Native).unwrap();
+        assert_eq!(want.output, got.output, "{} batched output", q.name);
+        assert_metrics_bit_identical(&want.metrics, &got.metrics, &format!("{} batched", q.name));
     }
 }
 

@@ -1,0 +1,253 @@
+//! Property tests for the bit-plane functional core: `XbarState` ops
+//! (`exec_instr` over And/Or/Not/Reduce/ColumnTransform) are checked
+//! against a row-at-a-time scalar oracle on random plane contents, widths,
+//! and column ranges, and the sharded parallel executor is checked
+//! bit-identical to the serial interpreter at every shard/thread count.
+
+use pimdb::exec::engine::{exec_instr, exec_steps_native, XbarState};
+use pimdb::exec::pimdb::EngineKind;
+use pimdb::exec::plan::{exec_steps_sharded, ExecPlan};
+use pimdb::pim::endurance::OpCategory;
+use pimdb::pim::isa::{ColRange, Opcode, PimInstruction};
+use pimdb::query::compiler::Step;
+use pimdb::util::bits::{WORDS, XBAR_ROWS};
+use pimdb::util::proptest::{check, Gen};
+use pimdb::util::rng::Rng;
+
+/// Load per-row values (LSB-first) into the bit-planes starting at `start`.
+fn load(st: &mut XbarState, start: usize, bits: usize, vals: &[u64]) {
+    for (row, &v) in vals.iter().enumerate() {
+        for b in 0..bits {
+            if (v >> b) & 1 == 1 {
+                st.planes[start + b][row / 32] |= 1 << (row % 32);
+            }
+        }
+    }
+}
+
+fn read(st: &XbarState, start: usize, bits: usize, row: usize) -> u64 {
+    st.value_at(row, ColRange::new(start, bits))
+}
+
+fn rand_vals(g: &mut Gen, bits: usize) -> Vec<u64> {
+    let max = (1u64 << bits) - 1;
+    g.vec_u64(XBAR_ROWS, 0, max)
+}
+
+#[test]
+fn and_or_not_match_scalar_oracle() {
+    check("prop-logic-oracle", 30, |g| {
+        let bits = g.usize(1, 16);
+        let a_start = g.usize(0, 8);
+        let b_start = a_start + bits + g.usize(0, 8);
+        let d_start = b_start + bits + g.usize(0, 8);
+        let a_vals = rand_vals(g, bits);
+        let b_vals = rand_vals(g, bits);
+        let mut st = XbarState::new(d_start + 3 * bits + 4);
+        load(&mut st, a_start, bits, &a_vals);
+        load(&mut st, b_start, bits, &b_vals);
+        let a = ColRange::new(a_start, bits);
+        let b = ColRange::new(b_start, bits);
+        let mut out = Vec::new();
+        exec_instr(
+            &mut st,
+            &PimInstruction::binary(Opcode::And, a, b, ColRange::new(d_start, bits)),
+            &mut out,
+        );
+        exec_instr(
+            &mut st,
+            &PimInstruction::binary(Opcode::Or, a, b, ColRange::new(d_start + bits, bits)),
+            &mut out,
+        );
+        exec_instr(
+            &mut st,
+            &PimInstruction::unary(Opcode::Not, a, ColRange::new(d_start + 2 * bits, bits)),
+            &mut out,
+        );
+        let mask = (1u64 << bits) - 1;
+        for row in 0..XBAR_ROWS {
+            let (va, vb) = (a_vals[row], b_vals[row]);
+            assert_eq!(read(&st, d_start, bits, row), va & vb, "AND row {row}");
+            assert_eq!(
+                read(&st, d_start + bits, bits, row),
+                va | vb,
+                "OR row {row}"
+            );
+            assert_eq!(
+                read(&st, d_start + 2 * bits, bits, row),
+                !va & mask,
+                "NOT row {row}"
+            );
+        }
+        assert!(out.is_empty(), "logic ops must not emit reduce values");
+    });
+}
+
+#[test]
+fn broadcast_and_masks_per_row() {
+    check("prop-broadcast-and", 30, |g| {
+        let bits = g.usize(2, 20);
+        let a_vals = rand_vals(g, bits);
+        let mut st = XbarState::new(128);
+        load(&mut st, 0, bits, &a_vals);
+        // random 1-bit mask column at 90
+        let mask_vals: Vec<u64> = (0..XBAR_ROWS).map(|_| g.u64(0, 1)).collect();
+        load(&mut st, 90, 1, &mask_vals);
+        let mut out = Vec::new();
+        exec_instr(
+            &mut st,
+            &PimInstruction::binary(
+                Opcode::And,
+                ColRange::new(0, bits),
+                ColRange::new(90, 1),
+                ColRange::new(40, bits),
+            ),
+            &mut out,
+        );
+        for row in 0..XBAR_ROWS {
+            let want = if mask_vals[row] == 1 { a_vals[row] } else { 0 };
+            assert_eq!(read(&st, 40, bits, row), want, "row {row}");
+        }
+    });
+}
+
+#[test]
+fn reduce_sum_min_max_match_scalar_oracle() {
+    check("prop-reduce-oracle", 25, |g| {
+        let bits = g.usize(1, 24);
+        let start = g.usize(0, 12);
+        let vals = rand_vals(g, bits);
+        let mut st = XbarState::new(64);
+        load(&mut st, start, bits, &vals);
+        let a = ColRange::new(start, bits);
+        let mut out = Vec::new();
+        for op in [Opcode::ReduceSum, Opcode::ReduceMin, Opcode::ReduceMax] {
+            exec_instr(&mut st, &PimInstruction::unary(op, a, a), &mut out);
+        }
+        let want_sum: u128 = vals.iter().map(|&v| v as u128).sum();
+        let want_min = *vals.iter().min().unwrap() as u128;
+        let want_max = *vals.iter().max().unwrap() as u128;
+        assert_eq!(out, vec![want_sum, want_min, want_max], "bits {bits}");
+        // reduces must not disturb the operand planes
+        for (row, &v) in vals.iter().enumerate() {
+            assert_eq!(read(&st, start, bits, row), v);
+        }
+    });
+}
+
+#[test]
+fn column_transform_is_a_functional_noop() {
+    check("prop-coltrans-noop", 10, |g| {
+        let bits = g.usize(1, 8);
+        let vals = rand_vals(g, bits);
+        let mut st = XbarState::new(64);
+        load(&mut st, 0, bits, &vals);
+        let before = st.planes.clone();
+        let mut out = Vec::new();
+        exec_instr(
+            &mut st,
+            &PimInstruction::unary(
+                Opcode::ColumnTransform,
+                ColRange::new(0, 1),
+                ColRange::new(0, 1),
+            ),
+            &mut out,
+        );
+        assert_eq!(st.planes, before, "data movement must preserve planes");
+        assert!(out.is_empty());
+    });
+}
+
+// --- sharded executor vs the serial interpreter ------------------------------
+
+fn random_states(seed: u64, n: usize) -> Vec<XbarState> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut st = XbarState::new(192);
+            for c in 0..40 {
+                for w in 0..WORDS {
+                    st.planes[c][w] = rng.next_u32();
+                }
+            }
+            st
+        })
+        .collect()
+}
+
+fn mixed_program() -> Vec<Step> {
+    let step = |instr| Step {
+        instr,
+        category: OpCategory::Filter,
+    };
+    vec![
+        step(PimInstruction::with_imm(
+            Opcode::LtImm,
+            ColRange::new(0, 20),
+            ColRange::new(100, 1),
+            0xBEEF,
+        )),
+        step(PimInstruction::with_imm(
+            Opcode::GtImm,
+            ColRange::new(20, 20),
+            ColRange::new(101, 1),
+            0x1111,
+        )),
+        step(PimInstruction::binary(
+            Opcode::Or,
+            ColRange::new(100, 1),
+            ColRange::new(101, 1),
+            ColRange::new(102, 1),
+        )),
+        step(PimInstruction::binary(
+            Opcode::And,
+            ColRange::new(0, 20),
+            ColRange::new(102, 1),
+            ColRange::new(110, 20),
+        )),
+        step(PimInstruction::binary(
+            Opcode::Mul,
+            ColRange::new(110, 16),
+            ColRange::new(20, 16),
+            ColRange::new(140, 32),
+        )),
+        step(PimInstruction::unary(
+            Opcode::ReduceSum,
+            ColRange::new(140, 32),
+            ColRange::new(140, 32),
+        )),
+        step(PimInstruction::unary(
+            Opcode::ReduceMax,
+            ColRange::new(140, 32),
+            ColRange::new(140, 32),
+        )),
+    ]
+}
+
+#[test]
+fn sharded_exec_bit_identical_at_1_2_8_and_random_shards() {
+    let steps = mixed_program();
+    check("prop-sharded-identical", 10, |g| {
+        let n = g.usize(1, 13);
+        let seed = g.u64(0, 1 << 40);
+        let mut serial_states = random_states(seed, n);
+        let want = exec_steps_native(&mut serial_states, &steps, 102);
+        for shards in [1usize, 2, 8, g.usize(1, 24)] {
+            let plan = ExecPlan {
+                parallelism: g.usize(1, 8),
+                shards_per_program: shards,
+            };
+            let mut states = random_states(seed, n);
+            let got = exec_steps_sharded(&mut states, &steps, 102, EngineKind::Native, &plan)
+                .unwrap();
+            assert_eq!(want.reduces, got.reduces, "{n} xbars, {shards} shards");
+            assert_eq!(
+                want.mask_counts, got.mask_counts,
+                "{n} xbars, {shards} shards"
+            );
+            for (a, b) in serial_states.iter().zip(&states) {
+                assert_eq!(a.planes, b.planes, "{n} xbars, {shards} shards");
+            }
+        }
+    });
+}
