@@ -7,8 +7,10 @@ use std::collections::BTreeMap;
 
 use crate::config::SystemConfig;
 
+/// Parsed command line: the command word plus `--flag value` pairs.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
+    /// The command word (`run`, `report`, ...).
     pub command: String,
     flags: BTreeMap<String, String>,
     sets: Vec<(String, String)>,
@@ -18,6 +20,7 @@ pub struct Args {
 const BOOL_FLAGS: [&str; 3] = ["baseline", "verbose", "help"];
 
 impl Args {
+    /// Parse `argv` (without the program name) into command + flags.
     pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
         let mut it = argv.into_iter();
         let command = it.next().unwrap_or_else(|| "help".into());
@@ -48,24 +51,29 @@ impl Args {
         Ok(args)
     }
 
+    /// The value of `--name`, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.flags.get(name).map(|s| s.as_str())
     }
 
+    /// The value of `--name`, or `default` when absent.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// Whether `--name` was given.
     pub fn has(&self, name: &str) -> bool {
         self.flags.contains_key(name)
     }
 
+    /// `--name` parsed as f64 (None when absent, Err on malformed).
     pub fn parse_f64(&self, name: &str) -> Result<Option<f64>, String> {
         self.get(name)
             .map(|v| v.parse().map_err(|e| format!("--{name}: {e}")))
             .transpose()
     }
 
+    /// `--name` parsed as u64 (None when absent, Err on malformed).
     pub fn parse_u64(&self, name: &str) -> Result<Option<u64>, String> {
         self.get(name)
             .map(|v| v.parse().map_err(|e| format!("--{name}: {e}")))
@@ -96,6 +104,7 @@ impl Args {
         Ok(cfg)
     }
 
+    /// The functional backend selected by `--engine`.
     pub fn engine(&self) -> Result<crate::exec::pimdb::EngineKind, String> {
         match self.get_or("engine", "native") {
             "native" => Ok(crate::exec::pimdb::EngineKind::Native),
@@ -103,8 +112,46 @@ impl Args {
             other => Err(format!("unknown engine '{other}' (native|pjrt)")),
         }
     }
+
+    /// Resolve the `run` command's queries from exactly one of:
+    /// `--query` (comma-separated TPC-H names), `--sql` (inline PQL text),
+    /// or `--sql-file` (PQL text file, e.g. a `tests/pql/*.pql` fixture).
+    /// Parse errors come back rendered with their source line and caret.
+    pub fn queries(&self) -> Result<Vec<crate::query::ast::Query>, String> {
+        let sources =
+            [self.has("query"), self.has("sql"), self.has("sql-file")]
+                .iter()
+                .filter(|b| **b)
+                .count();
+        if sources == 0 {
+            return Err("run needs --query, --sql or --sql-file".into());
+        }
+        if sources > 1 {
+            return Err("--query, --sql and --sql-file are mutually exclusive".into());
+        }
+        if let Some(spec) = self.get("query") {
+            return spec
+                .split(',')
+                .map(|n| {
+                    let n = n.trim();
+                    crate::query::tpch::query(n)
+                        .ok_or_else(|| format!("unknown query '{n}'"))
+                })
+                .collect();
+        }
+        let src: String = match self.get("sql") {
+            Some(text) => text.to_string(),
+            None => {
+                let path = self.get("sql-file").expect("checked above");
+                std::fs::read_to_string(path)
+                    .map_err(|e| format!("--sql-file {path}: {e}"))?
+            }
+        };
+        crate::query::lang::parse_program(&src).map_err(|d| d.render(&src))
+    }
 }
 
+/// The `pimdb help` text.
 pub const USAGE: &str = "\
 pimdb — bulk-bitwise processing-in-memory database accelerator (PIMDB reproduction)
 
@@ -114,6 +161,10 @@ COMMANDS:
   run        --query <Q1|Q2|...|Q22_sub>[,Q6,...] [--engine native|pjrt] [--baseline]
              run TPC-H queries on PIMDB (comma list batches them through
              the shard pool; optionally compare against the baseline)
+             --sql \"from lineitem | filter l_quantity < 24 | aggregate count()\"
+             run an ad-hoc PQL text query instead (--sql-file FILE reads
+             the text, e.g. a .pql fixture, from disk); see README
+             \"Query language\" for the grammar
   report     --exp <table1..6|fig8..15|ablation-rowpar|calibration|all>
              regenerate a paper table/figure
   gen-data   [--sf F] [--seed N]    generate + summarize the TPC-H data
@@ -175,6 +226,53 @@ mod tests {
         assert!(parse("run --set nokv").is_err());
         assert!(parse("run --set bogus=1").unwrap().build_config().is_err());
         assert!(parse("run --engine warp").unwrap().engine().is_err());
+    }
+
+    #[test]
+    fn queries_from_names_or_sql() {
+        let a = parse("run --query Q6,Q11").unwrap();
+        let qs = a.queries().unwrap();
+        assert_eq!(qs.len(), 2);
+        assert_eq!(qs[0].name, "Q6");
+
+        // --sql needs quoting in a real shell; build Args directly here
+        let a = Args::parse(
+            ["run", "--sql", "from supplier | filter s_suppkey < 10"]
+                .into_iter()
+                .map(String::from),
+        )
+        .unwrap();
+        let qs = a.queries().unwrap();
+        assert_eq!(qs.len(), 1);
+        assert_eq!(qs[0].name, "adhoc");
+        assert_eq!(qs[0].rels[0].rel, crate::db::schema::RelId::Supplier);
+
+        // parse errors come back rendered with a caret
+        let a = Args::parse(
+            ["run", "--sql", "from supplier | filter nope < 10"]
+                .into_iter()
+                .map(String::from),
+        )
+        .unwrap();
+        let err = a.queries().unwrap_err();
+        assert!(err.contains("unknown column"), "{err}");
+        assert!(err.contains("^"), "{err}");
+    }
+
+    #[test]
+    fn query_sources_are_mutually_exclusive() {
+        let a = Args::parse(
+            ["run", "--query", "Q6", "--sql", "from part | filter true"]
+                .into_iter()
+                .map(String::from),
+        )
+        .unwrap();
+        assert!(a.queries().unwrap_err().contains("mutually exclusive"));
+        assert!(parse("run").unwrap().queries().is_err());
+        assert!(parse("run --sql-file /does/not/exist.pql")
+            .unwrap()
+            .queries()
+            .is_err());
     }
 
     #[test]

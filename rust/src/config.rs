@@ -66,15 +66,19 @@ pub struct SystemConfig {
     pub parallelism: usize,
     /// Host core frequency (Hz).
     pub core_freq_hz: f64,
-    /// L1 data cache: size / associativity / block.
+    /// L1 data cache size (bytes).
     pub l1_bytes: usize,
+    /// L1 associativity (ways).
     pub l1_ways: usize,
-    /// L2 (LLC): size / associativity.
+    /// L2 (LLC) size (bytes).
     pub l2_bytes: usize,
+    /// L2 associativity (ways).
     pub l2_ways: usize,
+    /// Cache block (line) size in bytes, shared by both levels.
     pub cache_block: usize,
-    /// L1 hit latency (cycles), L2 hit latency (cycles).
+    /// L1 hit latency (core cycles).
     pub l1_hit_cycles: u64,
+    /// L2 hit latency (core cycles).
     pub l2_hit_cycles: u64,
 
     // --- DRAM main memory ---

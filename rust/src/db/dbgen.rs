@@ -15,7 +15,9 @@ use crate::util::rng::Rng;
 /// A generated relation: encoded column store.
 #[derive(Clone, Debug)]
 pub struct Relation {
+    /// Which relation this is.
     pub id: RelId,
+    /// Number of generated records.
     pub records: usize,
     columns: Vec<(&'static str, Vec<u64>)>,
 }
@@ -34,6 +36,7 @@ impl Relation {
         self.columns.push((name, col));
     }
 
+    /// The encoded column `name` (panics when absent).
     pub fn col(&self, name: &str) -> &[u64] {
         &self
             .columns
@@ -43,10 +46,12 @@ impl Relation {
             .1
     }
 
+    /// Whether column `name` exists.
     pub fn has_col(&self, name: &str) -> bool {
         self.columns.iter().any(|(n, _)| *n == name)
     }
 
+    /// All column names in schema order.
     pub fn column_names(&self) -> Vec<&'static str> {
         self.columns.iter().map(|(n, _)| *n).collect()
     }
@@ -54,12 +59,15 @@ impl Relation {
 
 /// The generated database.
 pub struct Database {
+    /// Scale factor the data was generated at.
     pub sf: f64,
+    /// Generator seed (reproducible).
     pub seed: u64,
     relations: BTreeMap<RelId, Relation>,
 }
 
 impl Database {
+    /// One relation by id.
     pub fn rel(&self, id: RelId) -> &Relation {
         &self.relations[&id]
     }

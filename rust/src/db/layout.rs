@@ -17,6 +17,7 @@ use crate::mem::vm::{HugePage, PageAllocator};
 /// Column placement of one attribute inside the crossbar row.
 #[derive(Clone, Copy, Debug)]
 pub struct AttrSlot {
+    /// The attribute placed in this slot.
     pub attr: Attr,
     /// First bit column.
     pub start: usize,
@@ -25,7 +26,9 @@ pub struct AttrSlot {
 /// Layout of one relation.
 #[derive(Clone, Debug)]
 pub struct RelationLayout {
+    /// The relation this layout describes.
     pub rel: RelId,
+    /// Column slots in schema order.
     pub slots: Vec<AttrSlot>,
     /// VALID bit column.
     pub valid_col: usize,
@@ -46,6 +49,7 @@ pub struct RelationLayout {
 }
 
 impl RelationLayout {
+    /// Column slot of `attr_name`, if the attribute exists.
     pub fn slot(&self, attr_name: &str) -> Option<AttrSlot> {
         self.slots
             .iter()
@@ -89,12 +93,16 @@ impl RelationLayout {
 
 /// Compute layouts for all PIM relations and allocate their pages.
 pub struct DbLayout {
+    /// Per-relation layouts, in [`schema::PIM_RELATIONS`] order.
     pub relations: Vec<RelationLayout>,
+    /// Total report-view pages across all relations.
     pub total_pages: u64,
+    /// Pages in the fullest PIM module (power bound input).
     pub max_pages_in_module: u64,
 }
 
 impl DbLayout {
+    /// Lay out every PIM relation and allocate its pages.
     pub fn build(cfg: &SystemConfig, sim_records: &dyn Fn(RelId) -> u64) -> Result<DbLayout, String> {
         let mut alloc = PageAllocator::new(cfg);
         let mut relations = Vec::new();
@@ -135,6 +143,7 @@ impl DbLayout {
         })
     }
 
+    /// One relation's layout by id (panics for non-PIM relations).
     pub fn rel(&self, rel: RelId) -> &RelationLayout {
         self.relations
             .iter()

@@ -12,16 +12,25 @@
 /// DRAM-resident small relations.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum RelId {
+    /// PART (PIM-resident).
     Part,
+    /// SUPPLIER (PIM-resident).
     Supplier,
+    /// PARTSUPP (PIM-resident).
     Partsupp,
+    /// CUSTOMER (PIM-resident).
     Customer,
+    /// ORDERS (PIM-resident).
     Orders,
+    /// LINEITEM (PIM-resident).
     Lineitem,
+    /// NATION (small, DRAM-resident dimension).
     Nation,
+    /// REGION (small, DRAM-resident dimension).
     Region,
 }
 
+/// The six relations kept in the PIM modules, in layout order.
 pub const PIM_RELATIONS: [RelId; 6] = [
     RelId::Part,
     RelId::Supplier,
@@ -32,6 +41,7 @@ pub const PIM_RELATIONS: [RelId; 6] = [
 ];
 
 impl RelId {
+    /// Upper-case TPC-H relation name.
     pub fn name(&self) -> &'static str {
         match self {
             RelId::Part => "PART",
@@ -60,6 +70,7 @@ impl RelId {
         (base * sf).round().max(1.0) as u64
     }
 
+    /// Whether the relation has a PIM copy.
     pub fn in_pim(&self) -> bool {
         !matches!(self, RelId::Nation | RelId::Region)
     }
@@ -81,7 +92,9 @@ pub enum Encoding {
 /// One attribute of a PIM relation.
 #[derive(Clone, Copy, Debug)]
 pub struct Attr {
+    /// Lower-case TPC-H attribute name (e.g. `l_shipdate`).
     pub name: &'static str,
+    /// Storage encoding in the PIM copy.
     pub enc: Encoding,
     /// Encoded width in bits at the report scale factor (SF=1000).
     pub bits: usize,
@@ -199,10 +212,12 @@ pub fn row_bits(rel: RelId) -> usize {
     attrs(rel).iter().map(|a| a.bits).sum::<usize>() + 1
 }
 
+/// Look up one attribute of `rel` by name.
 pub fn attr(rel: RelId, name: &str) -> Option<Attr> {
     attrs(rel).iter().find(|a| a.name == name).copied()
 }
 
+/// Position of attribute `name` within `rel`'s schema order.
 pub fn attr_index(rel: RelId, name: &str) -> Option<usize> {
     attrs(rel).iter().position(|a| a.name == name)
 }
@@ -211,17 +226,29 @@ pub fn attr_index(rel: RelId, name: &str) -> Option<usize> {
 // dictionaries (TPC-H spec §4.2.2 seed lists)
 // ---------------------------------------------------------------------------
 
+/// p_type first words (syllable 1).
 pub const TYPE_S1: [&str; 6] = ["STANDARD", "SMALL", "MEDIUM", "LARGE", "ECONOMY", "PROMO"];
+/// p_type second words (syllable 2).
 pub const TYPE_S2: [&str; 5] = ["ANODIZED", "BURNISHED", "PLATED", "POLISHED", "BRUSHED"];
+/// p_type third words (syllable 3).
 pub const TYPE_S3: [&str; 5] = ["TIN", "NICKEL", "BRASS", "STEEL", "COPPER"];
+/// p_container first words.
 pub const CONTAINER_S1: [&str; 5] = ["SM", "MED", "LG", "JUMBO", "WRAP"];
+/// p_container second words.
 pub const CONTAINER_S2: [&str; 8] = ["CASE", "BOX", "BAG", "JAR", "PKG", "PACK", "CAN", "DRUM"];
+/// c_mktsegment dictionary.
 pub const SEGMENTS: [&str; 5] = ["AUTOMOBILE", "BUILDING", "FURNITURE", "MACHINERY", "HOUSEHOLD"];
+/// o_orderpriority dictionary.
 pub const PRIORITIES: [&str; 5] = ["1-URGENT", "2-HIGH", "3-MEDIUM", "4-NOT SPECIFIED", "5-LOW"];
+/// l_shipmode dictionary.
 pub const SHIPMODES: [&str; 7] = ["REG AIR", "AIR", "RAIL", "SHIP", "TRUCK", "MAIL", "FOB"];
+/// l_shipinstruct dictionary.
 pub const INSTRUCTIONS: [&str; 4] = ["DELIVER IN PERSON", "COLLECT COD", "NONE", "TAKE BACK RETURN"];
+/// l_returnflag dictionary.
 pub const RETURNFLAGS: [&str; 3] = ["R", "A", "N"];
+/// l_linestatus dictionary.
 pub const LINESTATUS: [&str; 2] = ["O", "F"];
+/// o_orderstatus dictionary.
 pub const ORDERSTATUS: [&str; 3] = ["F", "O", "P"];
 
 /// p_type dictionary id: s1*25 + s2*5 + s3 (150 values).
@@ -277,22 +304,27 @@ pub fn container_id(c: &str) -> u64 {
     s1 * 8 + s2
 }
 
+/// c_mktsegment dictionary id (panics on unknown segment).
 pub fn segment_id(s: &str) -> u64 {
     SEGMENTS.iter().position(|&w| w == s).expect("segment") as u64
 }
 
+/// l_shipmode dictionary id (panics on unknown mode).
 pub fn shipmode_id(s: &str) -> u64 {
     SHIPMODES.iter().position(|&w| w == s).expect("shipmode") as u64
 }
 
+/// l_shipinstruct dictionary id (panics on unknown instruction).
 pub fn instruct_id(s: &str) -> u64 {
     INSTRUCTIONS.iter().position(|&w| w == s).expect("instruct") as u64
 }
 
+/// l_returnflag dictionary id (panics on unknown flag).
 pub fn returnflag_id(s: &str) -> u64 {
     RETURNFLAGS.iter().position(|&w| w == s).expect("returnflag") as u64
 }
 
+/// o_orderstatus dictionary id (panics on unknown status).
 pub fn orderstatus_id(s: &str) -> u64 {
     ORDERSTATUS.iter().position(|&w| w == s).expect("orderstatus") as u64
 }
@@ -301,6 +333,7 @@ pub fn orderstatus_id(s: &str) -> u64 {
 // nations / regions (TPC-H spec fixed content)
 // ---------------------------------------------------------------------------
 
+/// The five TPC-H region names, in regionkey order.
 pub const REGIONS: [&str; 5] = ["AFRICA", "AMERICA", "ASIA", "EUROPE", "MIDDLE EAST"];
 
 /// (name, regionkey) in nationkey order 0..24.
@@ -332,6 +365,7 @@ pub const NATIONS: [(&str, usize); 25] = [
     ("UNITED STATES", 1),
 ];
 
+/// Nation key of `name` (panics on unknown nation).
 pub fn nation_id(name: &str) -> u64 {
     NATIONS.iter().position(|&(n, _)| n == name).expect("nation") as u64
 }

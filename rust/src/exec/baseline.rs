@@ -46,6 +46,8 @@ fn attr_bytes(rel: schema::RelId, name: &str) -> u64 {
     (bits as u64).div_ceil(8).max(1)
 }
 
+/// Execute `q` on the modelled host column store: functional result
+/// plus analytic timing/energy at the report scale factor.
 pub fn run_query(cfg: &SystemConfig, db: &Database, q: &Query) -> RunReport {
     let mut output = QueryOutput::default();
     let mut act = host::core::Activity::default();

@@ -25,10 +25,12 @@ use crate::util::bits::{WORDS, XBAR_ROWS};
 /// 1024 rows.
 #[derive(Clone)]
 pub struct XbarState {
+    /// One packed bit-plane per crossbar column.
     pub planes: Vec<[u32; WORDS]>,
 }
 
 impl XbarState {
+    /// An all-zero crossbar with `cols` columns.
     pub fn new(cols: usize) -> Self {
         XbarState {
             planes: vec![[0u32; WORDS]; cols],
@@ -57,6 +59,7 @@ impl XbarState {
         v
     }
 
+    /// Number of set bits in column `col` across all rows.
     pub fn popcount_col(&self, col: usize) -> u64 {
         self.planes[col].iter().map(|w| w.count_ones() as u64).sum()
     }
@@ -116,6 +119,7 @@ pub struct ExecOutputs {
 }
 
 impl ExecOutputs {
+    /// Selected records summed over all crossbars.
     pub fn total_selected(&self) -> u64 {
         self.mask_counts.iter().sum()
     }

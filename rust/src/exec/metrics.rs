@@ -7,18 +7,25 @@ use crate::pim::energy::EnergyLedger;
 /// Per-category stateful-logic cycles on a single crossbar (Table 5).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CycleCounts {
+    /// Predicate evaluation cycles.
     pub filter: u64,
+    /// In-array arithmetic cycles (aggregate value expressions).
     pub arith: u64,
+    /// Column-transform cycles (filter mask re-orientation for read-out).
     pub col_transform: u64,
+    /// Column-parallel phase of the aggregation reduce.
     pub agg_col: u64,
+    /// Row-sequential phase of the aggregation reduce.
     pub agg_row: u64,
 }
 
 impl CycleCounts {
+    /// All categories summed.
     pub fn total(&self) -> u64 {
         self.filter + self.arith + self.col_transform + self.agg_col + self.agg_row
     }
 
+    /// Add `cycles` to the bucket of `cat`.
     pub fn add(&mut self, cat: OpCategory, cycles: u64) {
         match cat {
             OpCategory::Filter => self.filter += cycles,
@@ -44,32 +51,42 @@ impl CycleCounts {
 /// Metrics of one query execution (PIMDB or baseline), at the report SF.
 #[derive(Clone, Debug, Default)]
 pub struct QueryMetrics {
+    /// End-to-end execution time (s) at the report scale factor.
     pub exec_time_s: f64,
-    /// PIMDB breakdown (Fig. 9); zero for the baseline.
+    /// PIM computation-phase time (Fig. 9); zero for the baseline.
     pub pim_time_s: f64,
+    /// Result read-out phase time (Fig. 9); zero for the baseline.
     pub read_time_s: f64,
+    /// Host-side work outside the memory phases (spawn/join, combine).
     pub other_time_s: f64,
     /// LLC misses (Fig. 8's second axis).
     pub llc_misses: u64,
-    /// Energy components (Figs. 11–12), pJ.
+    /// Host core + uncore energy (pJ, Figs. 11–12).
     pub host_energy_pj: f64,
+    /// Main-memory DRAM energy (pJ).
     pub dram_energy_pj: f64,
+    /// PIM-side energy breakdown (logic/read/write/controller/IO).
     pub pim_energy: EnergyLedger,
     /// Per-crossbar cycle counts by category (Table 5).
     pub cycles: CycleCounts,
     /// Peak intermediate cells (Table 5).
     pub inter_cells: usize,
-    /// Chip power (Fig. 14), W.
+    /// Peak memory-chip power over the run (W, Fig. 14).
     pub peak_chip_w: f64,
+    /// Highest windowed-average chip power (W, Fig. 14).
     pub avg_chip_w: f64,
+    /// Theoretical worst-case chip power for this query's placement (W).
     pub theoretical_chip_w: f64,
-    /// Endurance (Fig. 15, Table 6).
+    /// Hottest-cell writes per execution (Fig. 15, Table 6).
     pub ops_per_cell: f64,
+    /// Endurance required to sustain 10 years of back-to-back runs.
     pub required_endurance_10yr: f64,
+    /// Fraction of hottest-cell writes per op category (Table 6 order).
     pub endurance_breakdown: [f64; 5],
 }
 
 impl QueryMetrics {
+    /// Host + DRAM + PIM energy (pJ).
     pub fn total_energy_pj(&self) -> f64 {
         self.host_energy_pj + self.dram_energy_pj + self.pim_energy.total_pj()
     }
@@ -84,18 +101,25 @@ pub struct QueryOutput {
     pub groups: Vec<GroupOutput>,
 }
 
+/// One aggregate result row.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct GroupOutput {
+    /// Group-by key as (attribute, dictionary id); empty when ungrouped.
     pub key: Vec<(&'static str, u64)>,
+    /// Aggregate values as (label, value), in declaration order.
     pub values: Vec<(&'static str, f64)>,
+    /// Records contributing to this group.
     pub count: u64,
 }
 
 /// One engine's full report.
 #[derive(Clone, Debug)]
 pub struct RunReport {
+    /// Name of the executed query.
     pub query: &'static str,
+    /// Simulated timing/energy/power/endurance metrics.
     pub metrics: QueryMetrics,
+    /// Functional result (for cross-engine equivalence checks).
     pub output: QueryOutput,
 }
 

@@ -65,6 +65,7 @@ const ISSUE_GAP_PS: u64 = 10_000;
 /// modify the data columns; intermediate results live in the compute
 /// area, which the session clears between queries).
 pub struct PimSession<'a> {
+    /// The system configuration the session runs under.
     pub cfg: &'a SystemConfig,
     db: &'a Database,
     layout: DbLayout,
@@ -91,6 +92,7 @@ fn clear_compute(states: &mut [XbarState], compute_base: usize) {
 }
 
 impl<'a> PimSession<'a> {
+    /// Lay out `db` over the PIM modules (states load lazily per relation).
     pub fn new(cfg: &'a SystemConfig, db: &'a Database) -> Result<Self, String> {
         Ok(PimSession {
             cfg,
@@ -100,6 +102,7 @@ impl<'a> PimSession<'a> {
         })
     }
 
+    /// The database's PIM layout (page placement, column slots).
     pub fn layout(&self) -> &DbLayout {
         &self.layout
     }

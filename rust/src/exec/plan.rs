@@ -87,9 +87,13 @@ pub struct ShardTask<'a> {
     pub key: usize,
     /// Shard index within the program (merge order).
     pub shard: usize,
+    /// The shard's contiguous crossbar states.
     pub states: &'a mut [XbarState],
+    /// The program's compiled instruction steps (shared by all shards).
     pub steps: &'a [Step],
+    /// Column holding the final filter mask.
     pub mask_col: usize,
+    /// Functional backend interpreting the steps.
     pub engine: EngineKind,
 }
 

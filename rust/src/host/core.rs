@@ -19,9 +19,11 @@ use crate::config::SystemConfig;
 pub struct Activity {
     /// Dynamic instructions retired (approximate).
     pub instructions: u64,
-    /// L1 hits / L2 hits / LLC misses on the data path.
+    /// L1 hits on the data path.
     pub l1_hits: u64,
+    /// L2 hits on the data path.
     pub l2_hits: u64,
+    /// LLC misses on the data path.
     pub llc_misses: u64,
     /// Bytes fetched from DRAM (LLC miss traffic incl. prefetch benefit).
     pub dram_bytes: u64,

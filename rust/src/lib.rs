@@ -21,7 +21,8 @@
 //! * [`host`] — analytic out-of-order core and host power models.
 //! * [`db`] — TPC-H substrate: schema, generator, encodings, PIM layout.
 //! * [`query`] — filter/aggregate AST, the 19 evaluated TPC-H queries,
-//!   compiler to PIM request programs.
+//!   the PQL text frontend (`query::lang`, `pimdb run --sql`), compiler
+//!   to PIM request programs.
 //! * [`exec`] — the PIMDB engine, the sharded parallel execution plan,
 //!   and the in-memory column-store baseline.
 //! * [`runtime`] — PJRT CPU client running the AOT kernel artifacts
@@ -39,6 +40,8 @@
 //! [`exec::pimdb::PimSession::run_queries`] batches independent queries
 //! over the same shard pool: queries on disjoint relations execute
 //! concurrently in waves, queries sharing a relation serialize.
+
+#![warn(missing_docs)]
 
 pub mod cli;
 pub mod config;

@@ -2,8 +2,10 @@
 //!
 //! `pimdb run --query Q6` executes one TPC-H query on the PIMDB engine
 //! (native or PJRT functional backend) and prints the result plus the full
-//! metric set; `pimdb report --exp figN/tableN` regenerates the paper's
-//! evaluation artifacts. See `pimdb help`.
+//! metric set; `pimdb run --sql "from lineitem | ..."` does the same for
+//! an ad-hoc PQL text query (`--sql-file` reads the text from disk);
+//! `pimdb report --exp figN/tableN` regenerates the paper's evaluation
+//! artifacts. See `pimdb help`.
 
 use pimdb::cli::{Args, USAGE};
 use pimdb::config::SystemConfig;
@@ -16,7 +18,6 @@ use pimdb::mem::addr::AddressMap;
 use pimdb::pim::controller::cost;
 use pimdb::pim::isa::{ColRange, Opcode, PimInstruction};
 use pimdb::query::ast::Query;
-use pimdb::query::tpch;
 use pimdb::report;
 use pimdb::util::stats::eng;
 
@@ -52,14 +53,8 @@ fn dispatch(args: &Args) -> Result<(), String> {
 
 fn cmd_run(args: &Args) -> Result<(), String> {
     let cfg = args.build_config()?;
-    let spec = args.get("query").ok_or("run needs --query")?;
-    let queries: Vec<Query> = spec
-        .split(',')
-        .map(|n| {
-            let n = n.trim();
-            tpch::query(n).ok_or_else(|| format!("unknown query '{n}'"))
-        })
-        .collect::<Result<_, _>>()?;
+    // --query TPC-H names, or ad-hoc PQL text via --sql / --sql-file
+    let queries: Vec<Query> = args.queries()?;
     let seed = args.parse_u64("seed")?.unwrap_or(42);
     let db = Database::generate(cfg.sim_sf, seed);
     let engine_kind = args.engine()?;

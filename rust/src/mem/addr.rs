@@ -20,7 +20,9 @@
 /// Location of a byte inside a huge-page, in crossbar coordinates.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct CellAddr {
+    /// Crossbar index within the page.
     pub xbar: usize,
+    /// Row within the crossbar.
     pub row: usize,
     /// Bit column of the first bit of the addressed byte (0..512).
     pub col: usize,
@@ -29,6 +31,7 @@ pub struct CellAddr {
 /// Bit-field description: (name, shift, width).
 pub type Field = (&'static str, u32, u32);
 
+/// The Fig. 3 physical-address ↔ crossbar-cell mapping.
 #[derive(Clone, Debug)]
 pub struct AddressMap {
     page_bits: u32,
@@ -92,14 +95,17 @@ impl AddressMap {
         }
     }
 
+    /// Huge-page size in bytes.
     pub fn page_bytes(&self) -> u64 {
         1u64 << self.page_bits
     }
 
+    /// Crossbars addressed within one page.
     pub fn xbars_per_page(&self) -> usize {
         1usize << (self.xbar_lo_bits + self.xbar_hi_bits)
     }
 
+    /// Rows per crossbar.
     pub fn rows(&self) -> usize {
         1usize << self.row_bits
     }

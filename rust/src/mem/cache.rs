@@ -8,19 +8,29 @@
 
 use crate::config::SystemConfig;
 
+/// Where an access was satisfied.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Level {
+    /// Hit in the private L1.
     L1,
+    /// Hit in the shared L2 (LLC).
     L2,
+    /// LLC miss, served by memory.
     Memory,
 }
 
+/// Access counters of one simulated cache hierarchy.
 #[derive(Clone, Debug, Default)]
 pub struct CacheStats {
+    /// Total accesses.
     pub accesses: u64,
+    /// Accesses satisfied by L1.
     pub l1_hits: u64,
+    /// Accesses satisfied by L2.
     pub l2_hits: u64,
+    /// Accesses that missed the LLC.
     pub llc_misses: u64,
+    /// Dirty evictions written back.
     pub writebacks: u64,
 }
 
@@ -85,10 +95,12 @@ impl SetAssoc {
 pub struct CacheSim {
     l1: SetAssoc,
     l2: SetAssoc,
+    /// Access counters (read them after driving the accesses).
     pub stats: CacheStats,
 }
 
 impl CacheSim {
+    /// A hierarchy with the whole L2 owned by this thread.
     pub fn new(cfg: &SystemConfig) -> Self {
         Self::with_l2_share(cfg, 1)
     }

@@ -4,21 +4,27 @@
 
 use crate::config::SystemConfig;
 
+/// Traffic counters of the DRAM model.
 #[derive(Clone, Debug, Default)]
 pub struct DramStats {
+    /// Bytes read from DRAM.
     pub bytes_read: u64,
+    /// Bytes written to DRAM.
     pub bytes_written: u64,
 }
 
+/// Bandwidth/latency/energy model of the host's DDR4 main memory.
 pub struct DramModel {
     bw_bps: f64,
     latency_ns: u64,
     energy_pj_per_byte: f64,
     standby_w: f64,
+    /// Traffic counters (updated by `record_read`/`record_write`).
     pub stats: DramStats,
 }
 
 impl DramModel {
+    /// A model with Table 3's DDR4 parameters.
     pub fn new(cfg: &SystemConfig) -> Self {
         DramModel {
             bw_bps: cfg.dram_bw_bps,
@@ -29,10 +35,12 @@ impl DramModel {
         }
     }
 
+    /// Account `bytes` of read traffic.
     pub fn record_read(&mut self, bytes: u64) {
         self.stats.bytes_read += bytes;
     }
 
+    /// Account `bytes` of write traffic.
     pub fn record_write(&mut self, bytes: u64) {
         self.stats.bytes_written += bytes;
     }

@@ -12,6 +12,7 @@ use crate::pim::module::PageLoc;
 /// One allocated huge-page.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct HugePage {
+    /// Physical placement (module, bank, dense page id).
     pub loc: PageLoc,
     /// Virtual base address of the page.
     pub vbase: u64,
@@ -29,6 +30,7 @@ pub struct PageAllocator {
 }
 
 impl PageAllocator {
+    /// An empty allocator over the configured module geometry.
     pub fn new(cfg: &SystemConfig) -> Self {
         PageAllocator {
             modules: cfg.pim_modules,
@@ -72,6 +74,7 @@ impl PageAllocator {
         Ok(pages)
     }
 
+    /// Total pages handed out so far.
     pub fn pages_allocated(&self) -> usize {
         self.next_page
     }

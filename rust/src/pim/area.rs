@@ -16,14 +16,20 @@ const CELL_AREA_F2: f64 = 4.0;
 /// Chip area components in mm^2.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ChipArea {
+    /// RRAM crossbar arrays.
     pub crossbars_mm2: f64,
+    /// Row decoders, column muxes, sense amps, write drivers.
     pub xbar_peripherals_mm2: f64,
+    /// Bank/chip interconnect.
     pub bank_interconnect_mm2: f64,
+    /// IO circuitry and pads.
     pub io_and_pads_mm2: f64,
+    /// Synthesized PIM controllers (paper: ~0.17% of the chip).
     pub pim_controllers_mm2: f64,
 }
 
 impl ChipArea {
+    /// Sum of all components (mm^2).
     pub fn total_mm2(&self) -> f64 {
         self.crossbars_mm2
             + self.xbar_peripherals_mm2
@@ -32,6 +38,7 @@ impl ChipArea {
             + self.pim_controllers_mm2
     }
 
+    /// (component, mm^2) pairs in Fig. 10 order.
     pub fn breakdown(&self) -> Vec<(&'static str, f64)> {
         vec![
             ("crossbar arrays", self.crossbars_mm2),

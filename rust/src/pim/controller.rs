@@ -24,13 +24,16 @@ use super::isa::{Opcode, PimInstruction};
 /// controller-level latency).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct InstructionCost {
+    /// Column-wise (all-rows-parallel) stateful-logic cycles.
     pub col_cycles: u64,
+    /// Row-wise (sequential) stateful-logic cycles.
     pub row_cycles: u64,
     /// Cells needed for intermediate results, per crossbar row (Table 4).
     pub intermediate_cells: u64,
 }
 
 impl InstructionCost {
+    /// Column plus row cycles.
     pub fn total_cycles(&self) -> u64 {
         self.col_cycles + self.row_cycles
     }

@@ -18,11 +18,14 @@ use crate::util::bits::BitMatrix;
 /// Table 6): column-wise (all-row-parallel) vs row-wise (single column).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct OpCounts {
+    /// Column-wise (all-row-parallel) operations.
     pub col_ops: u64,
+    /// Row-wise (single-column) operations.
     pub row_ops: u64,
 }
 
 impl OpCounts {
+    /// Column plus row operations.
     pub fn total(&self) -> u64 {
         self.col_ops + self.row_ops
     }
@@ -37,6 +40,7 @@ pub struct Crossbar {
 }
 
 impl Crossbar {
+    /// An all-zero crossbar of the given geometry.
     pub fn new(rows: usize, cols: usize) -> Self {
         Crossbar {
             cells: BitMatrix::new(rows, cols),
@@ -45,32 +49,39 @@ impl Crossbar {
         }
     }
 
+    /// Number of rows.
     pub fn rows(&self) -> usize {
         self.cells.rows()
     }
 
+    /// Number of columns.
     pub fn cols(&self) -> usize {
         self.cells.cols()
     }
 
+    /// Operation counters accumulated so far.
     pub fn counts(&self) -> OpCounts {
         self.counts
     }
 
+    /// Per-row cell-write counts (endurance accounting).
     pub fn row_writes(&self) -> &[u64] {
         &self.row_writes
     }
 
     // --- plain memory access (read/write path, not stateful logic) -------
 
+    /// Read `n` bits at (row, col) as an integer (LSB first).
     pub fn read_bits(&self, row: usize, col: usize, n: usize) -> u64 {
         self.cells.read_bits(row, col, n)
     }
 
+    /// Write `n` bits of `v` at (row, col) (LSB first).
     pub fn write_bits(&mut self, row: usize, col: usize, n: usize, v: u64) {
         self.cells.write_bits(row, col, n, v);
     }
 
+    /// Single cell at (row, col).
     pub fn get(&self, row: usize, col: usize) -> bool {
         self.cells.get(row, col)
     }

@@ -11,13 +11,19 @@ use super::controller::RowWrites;
 /// Operation categories as reported in Tables 5 and 6.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum OpCategory {
+    /// Predicate evaluation.
     Filter,
+    /// In-array arithmetic for aggregate value expressions.
     Arith,
+    /// Filter-mask column transform for row-oriented read-out.
     ColTransform,
+    /// Column-parallel phase of an aggregation reduce.
     AggCol,
+    /// Row-sequential phase of an aggregation reduce.
     AggRow,
 }
 
+/// All categories, in Table 5/6 reporting order.
 pub const CATEGORIES: [OpCategory; 5] = [
     OpCategory::Filter,
     OpCategory::Arith,
@@ -27,6 +33,7 @@ pub const CATEGORIES: [OpCategory; 5] = [
 ];
 
 impl OpCategory {
+    /// Short label used in the report tables.
     pub fn name(&self) -> &'static str {
         match self {
             OpCategory::Filter => "filter",
@@ -37,6 +44,7 @@ impl OpCategory {
         }
     }
 
+    /// Dense index in [`CATEGORIES`] order.
     pub fn index(&self) -> usize {
         match self {
             OpCategory::Filter => 0,
@@ -60,6 +68,7 @@ pub struct EnduranceTracker {
 }
 
 impl EnduranceTracker {
+    /// A zeroed tracker for one crossbar geometry.
     pub fn new(rows: usize, cols: usize) -> Self {
         EnduranceTracker {
             rows,
@@ -158,6 +167,7 @@ impl EnduranceTracker {
         out
     }
 
+    /// Fold another relation's tracker into this one (see comment).
     pub fn merge_max(&mut self, other: &EnduranceTracker) {
         // relations wear independently; the module requirement is the max
         // profile. Keep whichever tracker has the hotter row per category

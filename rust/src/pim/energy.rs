@@ -10,14 +10,20 @@ use crate::config::SystemConfig;
 /// all values in picojoules.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct EnergyLedger {
+    /// Stateful (bulk-bitwise) logic energy.
     pub logic_pj: f64,
+    /// Crossbar array read energy.
     pub read_pj: f64,
+    /// Crossbar array write energy.
     pub write_pj: f64,
+    /// PIM controller energy.
     pub ctrl_pj: f64,
+    /// Chip IO energy.
     pub io_pj: f64,
 }
 
 impl EnergyLedger {
+    /// Sum of all components (pJ).
     pub fn total_pj(&self) -> f64 {
         self.logic_pj + self.read_pj + self.write_pj + self.ctrl_pj + self.io_pj
     }
@@ -61,6 +67,7 @@ impl EnergyLedger {
         self.io_pj += bytes as f64 * 8.0 * 4.0;
     }
 
+    /// Commutative component-wise sum (for shard merges).
     pub fn merge(&mut self, other: &EnergyLedger) {
         self.logic_pj += other.logic_pj;
         self.read_pj += other.read_pj;

@@ -13,11 +13,14 @@ use crate::mem::addr::AddressMap;
 /// cells — paper §4.1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ColRange {
+    /// First column.
     pub start: u16,
+    /// Number of columns.
     pub len: u16,
 }
 
 impl ColRange {
+    /// The range [start, start+len).
     pub fn new(start: usize, len: usize) -> Self {
         ColRange {
             start: start as u16,
@@ -25,6 +28,7 @@ impl ColRange {
         }
     }
 
+    /// One past the last column.
     pub fn end(&self) -> usize {
         (self.start + self.len) as usize
     }
@@ -35,27 +39,46 @@ impl ColRange {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 #[repr(u8)]
 pub enum Opcode {
+    /// Column range == immediate, into a mask column.
     EqImm = 0,
+    /// Column range != immediate.
     NeImm = 1,
+    /// Column range < immediate (unsigned).
     LtImm = 2,
+    /// Column range > immediate (unsigned).
     GtImm = 3,
+    /// Column range += immediate (mod 2^len).
     AddImm = 4,
+    /// Two column ranges compared for equality.
     Eq = 5,
+    /// Two column ranges compared unsigned-less-than.
     Lt = 6,
+    /// Set destination cells to 1.
     Set = 7,
+    /// Reset destination cells to 0.
     Reset = 8,
+    /// Bitwise NOT.
     Not = 9,
+    /// Bitwise AND (1-column second operand broadcasts).
     And = 10,
+    /// Bitwise OR (1-column second operand broadcasts).
     Or = 11,
+    /// Ripple-carry addition of two column ranges.
     Add = 12,
+    /// Shift-add multiplication of two column ranges.
     Mul = 13,
+    /// Tree reduction: sum over all rows.
     ReduceSum = 14,
+    /// Tree reduction: minimum over all rows.
     ReduceMin = 15,
+    /// Tree reduction: maximum over all rows.
     ReduceMax = 16,
+    /// Re-orient the filter mask column for row-wise read-out.
     ColumnTransform = 17,
 }
 
 impl Opcode {
+    /// Decode from the request payload byte.
     pub fn from_u8(v: u8) -> Option<Opcode> {
         use Opcode::*;
         Some(match v {
@@ -81,6 +104,7 @@ impl Opcode {
         })
     }
 
+    /// Whether the opcode carries an immediate operand.
     pub fn has_imm(&self) -> bool {
         matches!(
             self,
@@ -88,6 +112,7 @@ impl Opcode {
         )
     }
 
+    /// Whether the opcode takes a second column-range operand.
     pub fn has_src_b(&self) -> bool {
         matches!(
             self,
@@ -95,6 +120,7 @@ impl Opcode {
         )
     }
 
+    /// Mnemonic used by `pimdb inspect`.
     pub fn name(&self) -> &'static str {
         match self {
             Opcode::EqImm => "eq_imm",
@@ -123,6 +149,7 @@ impl Opcode {
 /// crossbars in lockstep).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct PimInstruction {
+    /// The operation.
     pub op: Opcode,
     /// First input operand columns.
     pub src_a: ColRange,
@@ -136,6 +163,7 @@ pub struct PimInstruction {
 }
 
 impl PimInstruction {
+    /// Single-operand instruction.
     pub fn unary(op: Opcode, src: ColRange, dst: ColRange) -> Self {
         PimInstruction {
             op,
@@ -146,6 +174,7 @@ impl PimInstruction {
         }
     }
 
+    /// Two-operand instruction.
     pub fn binary(op: Opcode, a: ColRange, b: ColRange, dst: ColRange) -> Self {
         PimInstruction {
             op,
@@ -156,6 +185,7 @@ impl PimInstruction {
         }
     }
 
+    /// Immediate-operand instruction.
     pub fn with_imm(op: Opcode, src: ColRange, dst: ColRange, imm: u64) -> Self {
         PimInstruction {
             op,

@@ -19,12 +19,15 @@ use super::timing::Timing;
 /// single module — paper §3.2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct PageLoc {
+    /// PIM module (rank) index.
     pub module: usize,
+    /// Bank within the module.
     pub bank: usize,
     /// Dense page index (unique across the system).
     pub page: usize,
 }
 
+/// What a media-controller request does.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum ReqKind {
     /// A PIM instruction: `cycles` stateful-logic cycles executed by all
@@ -36,17 +39,23 @@ pub enum ReqKind {
     WriteBurst { bytes: u64 },
 }
 
+/// One request to a PIM module's media controller.
 #[derive(Clone, Copy, Debug)]
 pub struct Request {
+    /// Destination page placement.
     pub loc: PageLoc,
+    /// Operation kind and size.
     pub kind: ReqKind,
     /// Earliest start (program order / fences).
     pub issue_ps: u64,
 }
 
+/// Scheduling result of one request.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct Completion {
+    /// When the request started occupying its resources (ps).
     pub start_ps: u64,
+    /// When the request finished (ps).
     pub end_ps: u64,
     /// Interval during which the page's PIM controllers were busy (for
     /// power deposits); zero-length for non-PIM requests.
@@ -65,6 +74,7 @@ pub struct MediaScheduler {
 }
 
 impl MediaScheduler {
+    /// A scheduler with all resources free at time zero.
     pub fn new(cfg: &SystemConfig) -> Self {
         MediaScheduler {
             timing: Timing::new(cfg),
@@ -75,6 +85,7 @@ impl MediaScheduler {
         }
     }
 
+    /// The derived interface timing parameters.
     pub fn timing(&self) -> &Timing {
         &self.timing
     }

@@ -7,7 +7,8 @@
 
 use crate::config::SystemConfig;
 
-pub const WINDOW_PS: u64 = 100_000; // 100 ns
+/// Power-averaging window (ps): 100 ns, as in the paper's Fig. 14.
+pub const WINDOW_PS: u64 = 100_000;
 
 /// Per-module power trace built from (start, end, energy) deposits.
 pub struct PowerTrace {
@@ -18,6 +19,7 @@ pub struct PowerTrace {
 }
 
 impl PowerTrace {
+    /// An empty trace for `modules` PIM modules.
     pub fn new(modules: usize) -> Self {
         PowerTrace {
             marks: vec![Vec::new(); modules],
@@ -78,6 +80,7 @@ impl PowerTrace {
             / cfg.chips_per_module as f64
     }
 
+    /// Latest deposit end seen so far (ps).
     pub fn end_ps(&self) -> u64 {
         self.end_ps
     }

@@ -6,6 +6,7 @@ use crate::config::SystemConfig;
 /// Picoseconds helper.
 pub const PS_PER_NS: u64 = 1000;
 
+/// Derived interface timing parameters (all picoseconds).
 #[derive(Clone, Debug)]
 pub struct Timing {
     /// Channel byte time (ps/byte) including protocol header amortization
@@ -25,6 +26,7 @@ pub struct Timing {
 }
 
 impl Timing {
+    /// Derive the interface timings from the system configuration.
     pub fn new(cfg: &SystemConfig) -> Self {
         let line = 64.0;
         let header = cfg.opencapi_header_bytes as f64;

@@ -4,19 +4,26 @@
 
 use crate::db::schema::RelId;
 
+/// Comparison operator of an immediate or column-column predicate.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CmpOp {
+    /// `==`
     Eq,
+    /// `!=`
     Ne,
+    /// `<`
     Lt,
+    /// `<=`
     Le,
+    /// `>`
     Gt,
+    /// `>=`
     Ge,
 }
 
 /// Filter predicate tree. Attribute references are by name; the compiler
 /// resolves them against the relation layout.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum Pred {
     /// attr <op> constant (already in the attribute's encoding domain).
     CmpImm {
@@ -41,14 +48,18 @@ pub enum Pred {
         op: CmpOp,
         b: &'static str,
     },
+    /// Conjunction of sub-predicates.
     And(Vec<Pred>),
+    /// Disjunction of sub-predicates.
     Or(Vec<Pred>),
+    /// Negation of a sub-predicate.
     Not(Box<Pred>),
     /// Always true (used for aggregate-only queries).
     True,
 }
 
 impl Pred {
+    /// Convenience constructor for [`Pred::And`].
     pub fn and(preds: Vec<Pred>) -> Pred {
         Pred::And(preds)
     }
@@ -146,6 +157,7 @@ pub enum ValExpr {
 }
 
 impl ValExpr {
+    /// Attributes referenced by this expression.
     pub fn attrs(&self) -> Vec<&'static str> {
         match self {
             ValExpr::Attr(a) => vec![a],
@@ -189,27 +201,38 @@ impl ValExpr {
     }
 }
 
+/// Aggregate function reduced in-array (plus host combine, paper §4.2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AggKind {
+    /// In-array SUM reduction, host addition across crossbars.
     Sum,
+    /// COUNT via SUM of the 1-bit filter mask column.
     Count,
+    /// In-array MIN reduction, host MIN across crossbars.
     Min,
+    /// In-array MAX reduction, host MAX across crossbars.
     Max,
     /// Average = in-PIM SUM + COUNT, divided at the host (paper §4.2).
     Avg,
 }
 
-#[derive(Clone, Debug)]
+/// One aggregate output of a [`RelQuery`].
+#[derive(Clone, Debug, PartialEq)]
 pub struct Aggregate {
+    /// The reduction applied to `expr`.
     pub kind: AggKind,
+    /// The per-record value being reduced.
     pub expr: ValExpr,
+    /// Output column label in the query result.
     pub label: &'static str,
 }
 
 /// Per-relation query spec: what PIMDB executes on one relation's pages.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RelQuery {
+    /// The relation this program runs on.
     pub rel: RelId,
+    /// Filter predicate (use [`Pred::True`] for aggregate-only queries).
     pub filter: Pred,
     /// Group-by attributes (dictionary-encoded, small domains); empty for
     /// plain filters/aggregates.
@@ -219,6 +242,7 @@ pub struct RelQuery {
     pub aggregates: Vec<Aggregate>,
 }
 
+/// How much of a query runs inside the PIM modules.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum QueryKind {
     /// Entire query runs in PIMDB (single-relation filter+aggregate).
@@ -229,10 +253,13 @@ pub enum QueryKind {
 }
 
 /// A TPC-H query as PIMDB sees it.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Query {
+    /// Query name (e.g. `"Q6"`, or `"adhoc"` for text-frontend queries).
     pub name: &'static str,
+    /// Whether the whole query or only its filters run in PIM.
     pub kind: QueryKind,
+    /// One program per participating relation.
     pub rels: Vec<RelQuery>,
 }
 

@@ -23,7 +23,9 @@ use super::ast::*;
 /// One compiled instruction with its reporting category.
 #[derive(Clone, Debug)]
 pub struct Step {
+    /// The PIM instruction to execute.
     pub instr: PimInstruction,
+    /// Reporting category (Tables 5–6 bucket).
     pub category: OpCategory,
 }
 
@@ -39,8 +41,11 @@ pub enum ReadKind {
 /// Where one aggregate output comes from.
 #[derive(Clone, Debug)]
 pub struct OutputSpec {
+    /// Index into [`CompiledRelQuery::groups`].
     pub group: usize,
+    /// Output column label.
     pub label: &'static str,
+    /// The aggregate function.
     pub kind: AggKind,
     /// Index of this output's reduce step among all reduce steps.
     pub reduce_index: usize,
@@ -54,11 +59,17 @@ pub type GroupKey = Vec<(&'static str, u64)>;
 /// Compiled program for one relation of one query.
 #[derive(Clone, Debug)]
 pub struct CompiledRelQuery {
+    /// The relation the program runs on.
     pub rel: RelId,
+    /// The instruction stream (identical on every crossbar/page).
     pub steps: Vec<Step>,
+    /// What the read phase fetches.
     pub read: ReadKind,
+    /// Group keys in output order (one empty key when ungrouped).
     pub groups: Vec<GroupKey>,
+    /// Where each aggregate output comes from.
     pub outputs: Vec<OutputSpec>,
+    /// Total reduce steps emitted (values read per crossbar).
     pub n_reduces: usize,
     /// Column holding the final filter mask (post valid-AND).
     pub mask_col: usize,
@@ -129,6 +140,7 @@ impl ColAlloc {
     }
 }
 
+/// AST → PIM program compiler for one relation (see module docs).
 pub struct Compiler<'a> {
     layout: &'a RelationLayout,
     alloc: ColAlloc,
@@ -137,6 +149,7 @@ pub struct Compiler<'a> {
 }
 
 impl<'a> Compiler<'a> {
+    /// Compile one relation's query against its crossbar layout.
     pub fn compile(
         rq: &RelQuery,
         layout: &'a RelationLayout,

@@ -1,0 +1,343 @@
+//! Hand-written lexer for the PQL pipeline language.
+//!
+//! Produces a flat token stream with byte-offset [`Span`]s. Newlines are
+//! plain whitespace (pipelines may span lines); `#` starts a line comment.
+//! Decimal literals are scaled to hundredths at lex time (`0.05` → 5,
+//! `912.34` → 91234) because every fractional domain in the schema —
+//! money in cents, discount/tax in percent — is stored ×100.
+
+use super::{Diag, Span};
+
+/// One lexical token kind.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tok {
+    /// Identifier or keyword (`from`, `filter`, `l_shipdate`, ...).
+    Ident(String),
+    /// Unsigned integer literal (underscores allowed: `100_000`).
+    Int(u64),
+    /// Decimal literal with at most two fractional digits, scaled ×100.
+    Decimal(u64),
+    /// Double-quoted string literal (no escapes).
+    Str(String),
+    /// `|`
+    Pipe,
+    /// `,`
+    Comma,
+    /// `;`
+    Semi,
+    /// `(`
+    LParen,
+    /// `)`
+    RParen,
+    /// `==`
+    EqEq,
+    /// `!=`
+    Ne,
+    /// `<`
+    Lt,
+    /// `<=`
+    Le,
+    /// `>`
+    Gt,
+    /// `>=`
+    Ge,
+    /// `..`
+    DotDot,
+    /// `+`
+    Plus,
+    /// `-`
+    Minus,
+    /// `*`
+    Star,
+}
+
+/// A token with its source span.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Token {
+    /// The token kind and payload.
+    pub tok: Tok,
+    /// Byte range in the source text.
+    pub span: Span,
+}
+
+/// Tokenize `src`; the first lexical error aborts with a spanned [`Diag`].
+pub fn lex(src: &str) -> Result<Vec<Token>, Diag> {
+    let bytes = src.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < bytes.len() {
+        let b = bytes[i];
+        match b {
+            b' ' | b'\t' | b'\r' | b'\n' => {
+                i += 1;
+            }
+            b'#' => {
+                while i < bytes.len() && bytes[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            b'|' => {
+                out.push(Token { tok: Tok::Pipe, span: Span::new(i, i + 1) });
+                i += 1;
+            }
+            b',' => {
+                out.push(Token { tok: Tok::Comma, span: Span::new(i, i + 1) });
+                i += 1;
+            }
+            b';' => {
+                out.push(Token { tok: Tok::Semi, span: Span::new(i, i + 1) });
+                i += 1;
+            }
+            b'(' => {
+                out.push(Token { tok: Tok::LParen, span: Span::new(i, i + 1) });
+                i += 1;
+            }
+            b')' => {
+                out.push(Token { tok: Tok::RParen, span: Span::new(i, i + 1) });
+                i += 1;
+            }
+            b'+' => {
+                out.push(Token { tok: Tok::Plus, span: Span::new(i, i + 1) });
+                i += 1;
+            }
+            b'-' => {
+                out.push(Token { tok: Tok::Minus, span: Span::new(i, i + 1) });
+                i += 1;
+            }
+            b'*' => {
+                out.push(Token { tok: Tok::Star, span: Span::new(i, i + 1) });
+                i += 1;
+            }
+            b'=' => {
+                if i + 1 < bytes.len() && bytes[i + 1] == b'=' {
+                    out.push(Token { tok: Tok::EqEq, span: Span::new(i, i + 2) });
+                    i += 2;
+                } else {
+                    return Err(Diag::new(
+                        "expected '==' (single '=' is not an operator)",
+                        Span::new(i, i + 1),
+                    ));
+                }
+            }
+            b'!' => {
+                if i + 1 < bytes.len() && bytes[i + 1] == b'=' {
+                    out.push(Token { tok: Tok::Ne, span: Span::new(i, i + 2) });
+                    i += 2;
+                } else {
+                    return Err(Diag::new(
+                        "expected '!=' (use 'not' for negation)",
+                        Span::new(i, i + 1),
+                    ));
+                }
+            }
+            b'<' => {
+                if i + 1 < bytes.len() && bytes[i + 1] == b'=' {
+                    out.push(Token { tok: Tok::Le, span: Span::new(i, i + 2) });
+                    i += 2;
+                } else {
+                    out.push(Token { tok: Tok::Lt, span: Span::new(i, i + 1) });
+                    i += 1;
+                }
+            }
+            b'>' => {
+                if i + 1 < bytes.len() && bytes[i + 1] == b'=' {
+                    out.push(Token { tok: Tok::Ge, span: Span::new(i, i + 2) });
+                    i += 2;
+                } else {
+                    out.push(Token { tok: Tok::Gt, span: Span::new(i, i + 1) });
+                    i += 1;
+                }
+            }
+            b'.' => {
+                if i + 1 < bytes.len() && bytes[i + 1] == b'.' {
+                    out.push(Token { tok: Tok::DotDot, span: Span::new(i, i + 2) });
+                    i += 2;
+                } else {
+                    return Err(Diag::new(
+                        "unexpected '.' (ranges are written 'lo..hi')",
+                        Span::new(i, i + 1),
+                    ));
+                }
+            }
+            b'"' => {
+                let start = i;
+                i += 1;
+                let mut s = String::new();
+                loop {
+                    if i >= bytes.len() || bytes[i] == b'\n' {
+                        return Err(Diag::new(
+                            "unterminated string literal",
+                            Span::new(start, i),
+                        ));
+                    }
+                    if bytes[i] == b'"' {
+                        i += 1;
+                        break;
+                    }
+                    if bytes[i] >= 0x80 {
+                        return Err(Diag::new(
+                            "string literals are ASCII-only",
+                            Span::new(i, i + 1),
+                        ));
+                    }
+                    s.push(bytes[i] as char);
+                    i += 1;
+                }
+                out.push(Token { tok: Tok::Str(s), span: Span::new(start, i) });
+            }
+            b'0'..=b'9' => {
+                let start = i;
+                let mut int_part: u64 = 0;
+                while i < bytes.len() && (bytes[i].is_ascii_digit() || bytes[i] == b'_') {
+                    if bytes[i] != b'_' {
+                        int_part = int_part
+                            .checked_mul(10)
+                            .and_then(|v| v.checked_add((bytes[i] - b'0') as u64))
+                            .ok_or_else(|| {
+                                Diag::new("integer literal overflows u64", Span::new(start, i + 1))
+                            })?;
+                    }
+                    i += 1;
+                }
+                // a '.' followed by a digit is a decimal literal; '..' is a
+                // range operator and belongs to the next token
+                if i + 1 < bytes.len() && bytes[i] == b'.' && bytes[i + 1].is_ascii_digit() {
+                    i += 1;
+                    let frac_start = i;
+                    while i < bytes.len() && bytes[i].is_ascii_digit() {
+                        i += 1;
+                    }
+                    let digits = i - frac_start;
+                    if digits > 2 {
+                        return Err(Diag::new(
+                            "decimal literals carry at most two fractional digits \
+                             (values are stored in hundredths)",
+                            Span::new(start, i),
+                        ));
+                    }
+                    let mut frac: u64 = 0;
+                    for &b in &bytes[frac_start..i] {
+                        frac = frac * 10 + (b - b'0') as u64;
+                    }
+                    if digits == 1 {
+                        frac *= 10;
+                    }
+                    let cents = int_part
+                        .checked_mul(100)
+                        .and_then(|v| v.checked_add(frac))
+                        .ok_or_else(|| {
+                            Diag::new("decimal literal overflows u64", Span::new(start, i))
+                        })?;
+                    out.push(Token { tok: Tok::Decimal(cents), span: Span::new(start, i) });
+                } else {
+                    out.push(Token { tok: Tok::Int(int_part), span: Span::new(start, i) });
+                }
+            }
+            b'a'..=b'z' | b'A'..=b'Z' | b'_' => {
+                let start = i;
+                while i < bytes.len()
+                    && (bytes[i].is_ascii_alphanumeric() || bytes[i] == b'_')
+                {
+                    i += 1;
+                }
+                let s = src[start..i].to_string();
+                out.push(Token { tok: Tok::Ident(s), span: Span::new(start, i) });
+            }
+            other => {
+                return Err(Diag::new(
+                    format!("unexpected character '{}'", other as char),
+                    Span::new(i, i + 1),
+                ));
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<Tok> {
+        lex(src).unwrap().into_iter().map(|t| t.tok).collect()
+    }
+
+    #[test]
+    fn lexes_pipeline_tokens() {
+        assert_eq!(
+            kinds("from lineitem | filter l_quantity < 24"),
+            vec![
+                Tok::Ident("from".into()),
+                Tok::Ident("lineitem".into()),
+                Tok::Pipe,
+                Tok::Ident("filter".into()),
+                Tok::Ident("l_quantity".into()),
+                Tok::Lt,
+                Tok::Int(24),
+            ]
+        );
+    }
+
+    #[test]
+    fn decimal_scales_to_hundredths() {
+        assert_eq!(kinds("0.05"), vec![Tok::Decimal(5)]);
+        assert_eq!(kinds("912.3"), vec![Tok::Decimal(91230)]);
+        assert_eq!(kinds("1000.00"), vec![Tok::Decimal(100_000)]);
+        assert!(lex("1.234").is_err());
+    }
+
+    #[test]
+    fn range_is_not_a_decimal() {
+        assert_eq!(
+            kinds("between 5..7"),
+            vec![Tok::Ident("between".into()), Tok::Int(5), Tok::DotDot, Tok::Int(7)]
+        );
+    }
+
+    #[test]
+    fn dates_lex_as_int_minus_int() {
+        assert_eq!(
+            kinds("date(1998-09-02)"),
+            vec![
+                Tok::Ident("date".into()),
+                Tok::LParen,
+                Tok::Int(1998),
+                Tok::Minus,
+                Tok::Int(9),
+                Tok::Minus,
+                Tok::Int(2),
+                Tok::RParen,
+            ]
+        );
+    }
+
+    #[test]
+    fn strings_comments_underscores() {
+        assert_eq!(
+            kinds("x == \"SAUDI ARABIA\" # trailing comment\n100_000"),
+            vec![
+                Tok::Ident("x".into()),
+                Tok::EqEq,
+                Tok::Str("SAUDI ARABIA".into()),
+                Tok::Int(100_000),
+            ]
+        );
+    }
+
+    #[test]
+    fn errors_carry_spans() {
+        let e = lex("a = 5").unwrap_err();
+        assert_eq!(e.span.start, 2);
+        assert!(lex("\"open").is_err());
+        assert!(lex("a $ b").is_err());
+        assert!(lex("99999999999999999999").is_err());
+    }
+
+    #[test]
+    fn comparison_operators() {
+        assert_eq!(
+            kinds("== != < <= > >="),
+            vec![Tok::EqEq, Tok::Ne, Tok::Lt, Tok::Le, Tok::Gt, Tok::Ge]
+        );
+    }
+}

@@ -1,0 +1,847 @@
+//! Lowering: surface AST → the executable [`crate::query::ast`] types,
+//! validated against the PIM schema.
+//!
+//! Every name is resolved to its `&'static str` in [`crate::db::schema`]
+//! (so lowered queries compare equal to the hardcoded TPC-H definitions),
+//! and every literal is encoded into the attribute's storage domain:
+//! dictionary words to ids, `date(Y-M-D)` to epoch-day offsets, decimals
+//! to hundredths (cents / percent) plus the money offset. All checks
+//! produce span-carrying [`Diag`]s pointing at the offending token.
+
+use crate::db::schema::{self, Attr, Encoding, RelId};
+use crate::query::ast::{Aggregate, AggKind, Pred, Query, QueryKind, RelQuery, ValExpr};
+
+use super::parser::{
+    SAgg, SCmpRhs, SIdent, SPipeline, SPred, SProgram, SQueryBlock, SScalar, SScalarKind,
+    SValFactor,
+};
+use super::{Diag, Span};
+
+/// Lower a parsed program to executable queries.
+pub fn lower_program(prog: &SProgram) -> Result<Vec<Query>, Diag> {
+    let single = prog.blocks.len() == 1;
+    prog.blocks
+        .iter()
+        .enumerate()
+        .map(|(i, b)| lower_block(b, i, single))
+        .collect()
+}
+
+/// Intern a string as `&'static str` (the AST keeps static names). The
+/// interner bounds leakage to *distinct* strings, so long-lived callers
+/// parsing in a loop don't grow without bound.
+fn leak(s: String) -> &'static str {
+    use std::collections::HashSet;
+    use std::sync::{Mutex, OnceLock};
+    static INTERN: OnceLock<Mutex<HashSet<&'static str>>> = OnceLock::new();
+    let mut set = INTERN
+        .get_or_init(|| Mutex::new(HashSet::new()))
+        .lock()
+        .expect("interner poisoned");
+    if let Some(&existing) = set.get(s.as_str()) {
+        return existing;
+    }
+    let leaked: &'static str = Box::leak(s.into_boxed_str());
+    set.insert(leaked);
+    leaked
+}
+
+fn lower_block(b: &SQueryBlock, index: usize, single: bool) -> Result<Query, Diag> {
+    let rels: Vec<RelQuery> = b
+        .pipelines
+        .iter()
+        .map(lower_pipeline)
+        .collect::<Result<_, _>>()?;
+    let with_aggs = rels.iter().filter(|r| !r.aggregates.is_empty()).count();
+    let kind = if with_aggs == 0 {
+        QueryKind::FilterOnly
+    } else if with_aggs == rels.len() {
+        QueryKind::Full
+    } else {
+        let bad = b
+            .pipelines
+            .iter()
+            .zip(&rels)
+            .find(|(_, r)| r.aggregates.is_empty())
+            .map(|(p, _)| p.table.span)
+            .unwrap_or(Span::new(0, 0));
+        return Err(Diag::new(
+            "all pipelines of one query must aggregate, or none: mixed \
+             filter-only and aggregate pipelines cannot run as one query",
+            bad,
+        ));
+    };
+    let name: &'static str = match &b.name {
+        Some(n) => leak(n.name.clone()),
+        None if single => "adhoc",
+        None => leak(format!("adhoc{}", index + 1)),
+    };
+    Ok(Query { name, kind, rels })
+}
+
+fn lower_pipeline(p: &SPipeline) -> Result<RelQuery, Diag> {
+    let rel = resolve_rel(&p.table)?;
+    let filter = match p.filters.len() {
+        0 => Pred::True,
+        1 => lower_pred(rel, &p.filters[0])?,
+        _ => Pred::And(
+            p.filters
+                .iter()
+                .map(|f| lower_pred(rel, f))
+                .collect::<Result<_, _>>()?,
+        ),
+    };
+    let mut group_by = Vec::new();
+    for g in &p.group_by {
+        let a = resolve_attr(rel, g)?;
+        let small = a.bits <= 6;
+        if !matches!(a.enc, Encoding::Dict) && !small {
+            return Err(Diag::new(
+                format!(
+                    "'{}' cannot be a group key: group by needs a \
+                     dictionary-encoded (or ≤6-bit) attribute",
+                    g.name
+                ),
+                g.span,
+            ));
+        }
+        group_by.push(a.name);
+    }
+    let aggregates: Vec<Aggregate> = p
+        .aggregates
+        .iter()
+        .map(|a| lower_agg(rel, a))
+        .collect::<Result<_, _>>()?;
+    if !group_by.is_empty() && aggregates.is_empty() {
+        return Err(Diag::new(
+            "'group by' needs an aggregate stage after it",
+            p.group_by[0].span,
+        ));
+    }
+    Ok(RelQuery { rel, filter, group_by, aggregates })
+}
+
+fn resolve_rel(table: &SIdent) -> Result<RelId, Diag> {
+    let rel = match table.name.to_ascii_uppercase().as_str() {
+        "PART" => RelId::Part,
+        "SUPPLIER" => RelId::Supplier,
+        "PARTSUPP" => RelId::Partsupp,
+        "CUSTOMER" => RelId::Customer,
+        "ORDERS" => RelId::Orders,
+        "LINEITEM" => RelId::Lineitem,
+        "NATION" | "REGION" => {
+            return Err(Diag::new(
+                format!(
+                    "{} is DRAM-resident, not a PIM relation; fold it into \
+                     a key predicate via region(\"..\") or nation(\"..\")",
+                    table.name.to_ascii_uppercase()
+                ),
+                table.span,
+            ))
+        }
+        _ => {
+            return Err(Diag::new(
+                format!(
+                    "unknown table '{}' (PIM relations: part, supplier, \
+                     partsupp, customer, orders, lineitem)",
+                    table.name
+                ),
+                table.span,
+            ))
+        }
+    };
+    Ok(rel)
+}
+
+fn resolve_attr(rel: RelId, ident: &SIdent) -> Result<&'static Attr, Diag> {
+    schema::attrs(rel)
+        .iter()
+        .find(|a| a.name == ident.name)
+        .ok_or_else(|| {
+            let names: Vec<&str> = schema::attrs(rel).iter().map(|a| a.name).collect();
+            Diag::new(
+                format!(
+                    "unknown column '{}' on {} (available: {})",
+                    ident.name,
+                    rel.name(),
+                    names.join(", ")
+                ),
+                ident.span,
+            )
+        })
+}
+
+fn lower_pred(rel: RelId, p: &SPred) -> Result<Pred, Diag> {
+    match p {
+        SPred::True => Ok(Pred::True),
+        SPred::Cmp { attr, op, rhs } => {
+            let a = resolve_attr(rel, attr)?;
+            match rhs {
+                SCmpRhs::Column(bid) => {
+                    let b = resolve_attr(rel, bid)?;
+                    if std::mem::discriminant(&a.enc) != std::mem::discriminant(&b.enc) {
+                        return Err(Diag::new(
+                            format!(
+                                "cannot compare '{}' ({:?}) with '{}' ({:?}): \
+                                 encodings differ",
+                                a.name, a.enc, b.name, b.enc
+                            ),
+                            bid.span,
+                        ));
+                    }
+                    if a.bits != b.bits {
+                        return Err(Diag::new(
+                            format!(
+                                "column compare needs equal widths: '{}' is \
+                                 {} bits, '{}' is {} bits",
+                                a.name, a.bits, b.name, b.bits
+                            ),
+                            bid.span,
+                        ));
+                    }
+                    Ok(Pred::CmpCols { a: a.name, op: *op, b: b.name })
+                }
+                SCmpRhs::Scalar(s) => {
+                    let value = encode_scalar(a, s)?;
+                    Ok(Pred::CmpImm { attr: a.name, op: *op, value })
+                }
+            }
+        }
+        SPred::Between { attr, lo, hi } => {
+            let a = resolve_attr(rel, attr)?;
+            let lo_v = encode_scalar(a, lo)?;
+            let hi_v = encode_scalar(a, hi)?;
+            if lo_v > hi_v {
+                return Err(Diag::new(
+                    format!("empty range: {lo_v} > {hi_v} after encoding"),
+                    lo.span.join(hi.span),
+                ));
+            }
+            Ok(Pred::Between { attr: a.name, lo: lo_v, hi: hi_v })
+        }
+        SPred::InList { attr, items } => {
+            let a = resolve_attr(rel, attr)?;
+            let values = items
+                .iter()
+                .map(|s| encode_scalar(a, s))
+                .collect::<Result<Vec<u64>, _>>()?;
+            Ok(Pred::InSet { attr: a.name, values })
+        }
+        SPred::InRegion { attr, region } => {
+            let a = resolve_attr(rel, attr)?;
+            if !matches!(a.enc, Encoding::Uint) {
+                return Err(Diag::new(
+                    format!(
+                        "region(..) produces nation keys; '{}' is not an \
+                         integer-encoded column",
+                        a.name
+                    ),
+                    attr.span,
+                ));
+            }
+            if !schema::REGIONS.contains(&region.name.as_str()) {
+                return Err(Diag::new(
+                    format!(
+                        "unknown region '{}' (expected one of {})",
+                        region.name,
+                        schema::REGIONS.join(", ")
+                    ),
+                    region.span,
+                ));
+            }
+            let values = schema::nations_in_region(&region.name);
+            for &v in &values {
+                check_range(a, v as i128, region.span)?;
+            }
+            Ok(Pred::InSet { attr: a.name, values })
+        }
+        SPred::Like { attr, pattern } => {
+            let a = resolve_attr(rel, attr)?;
+            let vocab = vocab(a.name).ok_or_else(|| {
+                Diag::new(
+                    format!(
+                        "'like' needs a dictionary-encoded column with a \
+                         string vocabulary; '{}' has none",
+                        a.name
+                    ),
+                    attr.span,
+                )
+            })?;
+            let values: Vec<u64> = vocab
+                .iter()
+                .filter(|(w, _)| glob_match(&pattern.name, w))
+                .map(|&(_, id)| id)
+                .collect();
+            if values.is_empty() {
+                return Err(Diag::new(
+                    format!(
+                        "pattern '{}' matches nothing in the '{}' dictionary",
+                        pattern.name, a.name
+                    ),
+                    pattern.span,
+                ));
+            }
+            Ok(Pred::InSet { attr: a.name, values })
+        }
+        SPred::And(ps) => Ok(Pred::And(
+            ps.iter()
+                .map(|q| lower_pred(rel, q))
+                .collect::<Result<_, _>>()?,
+        )),
+        SPred::Or(ps) => Ok(Pred::Or(
+            ps.iter()
+                .map(|q| lower_pred(rel, q))
+                .collect::<Result<_, _>>()?,
+        )),
+        SPred::Not(q) => Ok(Pred::Not(Box::new(lower_pred(rel, q)?))),
+    }
+}
+
+/// Encode one scalar literal into `attr`'s storage domain.
+fn encode_scalar(attr: &Attr, s: &SScalar) -> Result<u64, Diag> {
+    let base: i128 = match (&s.kind, attr.enc) {
+        // a bare integer is always the raw encoded value
+        (SScalarKind::Int(v), _) => {
+            if s.neg {
+                return Err(Diag::new(
+                    "raw integer values are unsigned encoded values and \
+                     cannot be negative; use a decimal for signed money",
+                    s.span,
+                ));
+            }
+            *v as i128
+        }
+        (SScalarKind::Decimal(c), Encoding::Money { offset }) => {
+            let signed = if s.neg { -(*c as i128) } else { *c as i128 };
+            signed + offset as i128
+        }
+        // percent-style fixed point (discount/tax are stored ×100)
+        (SScalarKind::Decimal(c), Encoding::Uint) => {
+            if s.neg {
+                return Err(Diag::new(
+                    format!("'{}' is unsigned; negative values cannot match", attr.name),
+                    s.span,
+                ));
+            }
+            *c as i128
+        }
+        (SScalarKind::Decimal(_), _) => {
+            return Err(Diag::new(
+                format!(
+                    "decimal literal on '{}', which is {:?}-encoded \
+                     (decimals fit money and percent columns)",
+                    attr.name, attr.enc
+                ),
+                s.span,
+            ))
+        }
+        (SScalarKind::Str(w), Encoding::Dict) => {
+            let vocab = vocab(attr.name).ok_or_else(|| {
+                Diag::new(
+                    format!(
+                        "'{}' has no string dictionary here; use the numeric id",
+                        attr.name
+                    ),
+                    s.span,
+                )
+            })?;
+            match vocab.iter().find(|(word, _)| word == w) {
+                Some(&(_, id)) => id as i128,
+                None => {
+                    let mut sample: Vec<&str> =
+                        vocab.iter().take(6).map(|(w, _)| w.as_str()).collect();
+                    if vocab.len() > 6 {
+                        sample.push("...");
+                    }
+                    return Err(Diag::new(
+                        format!(
+                            "'{}' is not in the '{}' dictionary (e.g. {})",
+                            w,
+                            attr.name,
+                            sample.join(", ")
+                        ),
+                        s.span,
+                    ));
+                }
+            }
+        }
+        (SScalarKind::Str(_), _) => {
+            return Err(Diag::new(
+                format!(
+                    "string literal on '{}', which is {:?}-encoded, not a \
+                     dictionary column",
+                    attr.name, attr.enc
+                ),
+                s.span,
+            ))
+        }
+        (SScalarKind::Date { y, m, d }, Encoding::Date) => {
+            // the year cap keeps days_from_civil far from i64 overflow
+            if !(1..=12).contains(m) || !(1..=31).contains(d) || *y > 9999 {
+                return Err(Diag::new(
+                    format!("invalid calendar date {y}-{m:02}-{d:02}"),
+                    s.span,
+                ));
+            }
+            if *y < schema::EPOCH.0 {
+                return Err(Diag::new(
+                    format!(
+                        "date {y}-{m:02}-{d:02} is before the TPC-H epoch \
+                         ({}-01-01)",
+                        schema::EPOCH.0
+                    ),
+                    s.span,
+                ));
+            }
+            schema::date(*y, *m, *d) as i128
+        }
+        (SScalarKind::Date { .. }, _) => {
+            return Err(Diag::new(
+                format!(
+                    "date(..) literal on '{}', which is {:?}-encoded, not a \
+                     date column",
+                    attr.name, attr.enc
+                ),
+                s.span,
+            ))
+        }
+        (SScalarKind::Nation(n), Encoding::Uint) => {
+            match schema::NATIONS.iter().position(|&(name, _)| name == n) {
+                Some(k) => k as i128,
+                None => {
+                    return Err(Diag::new(
+                        format!("unknown nation '{n}'"),
+                        s.span,
+                    ))
+                }
+            }
+        }
+        (SScalarKind::Nation(_), _) => {
+            return Err(Diag::new(
+                format!(
+                    "nation(..) produces a nation key; '{}' is not an \
+                     integer-encoded column",
+                    attr.name
+                ),
+                s.span,
+            ))
+        }
+    };
+    let v = base + s.adjust as i128;
+    check_range(attr, v, s.span)?;
+    Ok(v as u64)
+}
+
+fn check_range(attr: &Attr, v: i128, span: Span) -> Result<(), Diag> {
+    if v < 0 {
+        return Err(Diag::new(
+            format!(
+                "value encodes to {v}, below the unsigned storage domain \
+                 of '{}'",
+                attr.name
+            ),
+            span,
+        ));
+    }
+    if attr.bits < 64 && v >= (1i128 << attr.bits) {
+        return Err(Diag::new(
+            format!(
+                "value {v} does not fit '{}' ({} bits, max {})",
+                attr.name,
+                attr.bits,
+                (1u64 << attr.bits) - 1
+            ),
+            span,
+        ));
+    }
+    Ok(())
+}
+
+fn lower_agg(rel: RelId, a: &SAgg) -> Result<Aggregate, Diag> {
+    let expr = if a.kind == AggKind::Count {
+        ValExpr::One
+    } else {
+        lower_val_expr(rel, &a.factors, a.span)?
+    };
+    let label: &'static str = match &a.label {
+        Some(l) => leak(l.name.clone()),
+        None => default_label(a.kind, &expr),
+    };
+    Ok(Aggregate { kind: a.kind, expr, label })
+}
+
+fn default_label(kind: AggKind, expr: &ValExpr) -> &'static str {
+    let kind_name = match kind {
+        AggKind::Sum => "sum",
+        AggKind::Count => "count",
+        AggKind::Min => "min",
+        AggKind::Max => "max",
+        AggKind::Avg => "avg",
+    };
+    match expr {
+        ValExpr::Attr(a) => leak(format!("{kind_name}_{a}")),
+        _ => kind_name,
+    }
+}
+
+/// A resolved aggregate factor.
+enum Factor {
+    Attr(&'static str),
+    One,
+    Scale { scale: u64, plus: bool, attr: &'static str },
+}
+
+fn lower_val_expr(
+    rel: RelId,
+    factors: &[SValFactor],
+    span: Span,
+) -> Result<ValExpr, Diag> {
+    let mut resolved = Vec::new();
+    for f in factors {
+        match f {
+            SValFactor::Attr(id) => {
+                resolved.push(Factor::Attr(resolve_attr(rel, id)?.name));
+            }
+            SValFactor::Int(1, _) => resolved.push(Factor::One),
+            SValFactor::Int(v, sp) => {
+                return Err(Diag::new(
+                    format!(
+                        "bare integer factor must be 1 (counting); got {v}"
+                    ),
+                    *sp,
+                ))
+            }
+            SValFactor::ScaleOp { scale, plus, attr, .. } => {
+                resolved.push(Factor::Scale {
+                    scale: *scale,
+                    plus: *plus,
+                    attr: resolve_attr(rel, attr)?.name,
+                });
+            }
+        }
+    }
+    match resolved.as_slice() {
+        [Factor::One] => Ok(ValExpr::One),
+        [Factor::Attr(a)] => Ok(ValExpr::Attr(*a)),
+        [Factor::Attr(a), Factor::Attr(b)] => Ok(ValExpr::MulAttrs(*a, *b)),
+        [Factor::Attr(a), Factor::Scale { scale, plus: false, attr }] => {
+            Ok(ValExpr::MulComplement { attr: *a, scale: *scale, other: *attr })
+        }
+        [Factor::Attr(a), Factor::Scale { scale, plus: true, attr }] => {
+            Ok(ValExpr::MulSum { attr: *a, scale: *scale, other: *attr })
+        }
+        [Factor::Attr(a), Factor::Scale { scale: s1, plus: false, attr: o1 }, Factor::Scale { scale: s2, plus: true, attr: o2 }] => {
+            Ok(ValExpr::MulComplementSum {
+                attr: *a,
+                scale1: *s1,
+                other1: *o1,
+                scale2: *s2,
+                other2: *o2,
+            })
+        }
+        _ => Err(Diag::new(
+            "unsupported aggregate expression shape; the PIM arithmetic \
+             units compute: attr, attr * attr, attr * (k - attr), \
+             attr * (k + attr), attr * (k - a) * (k + b)",
+            span,
+        )),
+    }
+}
+
+/// String dictionaries keyed by attribute name, ascending by id.
+fn vocab(attr: &str) -> Option<Vec<(String, u64)>> {
+    fn flat(words: &[&str]) -> Vec<(String, u64)> {
+        words
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.to_string(), i as u64))
+            .collect()
+    }
+    match attr {
+        "p_mfgr" => Some(
+            (1..=5u64)
+                .map(|i| (format!("Manufacturer#{i}"), i - 1))
+                .collect(),
+        ),
+        "p_brand" => {
+            let mut v = Vec::new();
+            for m in 1..=5u64 {
+                for n in 1..=5u64 {
+                    v.push((format!("Brand#{m}{n}"), (m - 1) * 5 + (n - 1)));
+                }
+            }
+            Some(v)
+        }
+        "p_type" => {
+            let mut v = Vec::new();
+            for (i1, s1) in schema::TYPE_S1.iter().enumerate() {
+                for (i2, s2) in schema::TYPE_S2.iter().enumerate() {
+                    for (i3, s3) in schema::TYPE_S3.iter().enumerate() {
+                        v.push((
+                            format!("{s1} {s2} {s3}"),
+                            schema::type_id(i1, i2, i3),
+                        ));
+                    }
+                }
+            }
+            Some(v)
+        }
+        "p_container" => {
+            let mut v = Vec::new();
+            for (i1, s1) in schema::CONTAINER_S1.iter().enumerate() {
+                for (i2, s2) in schema::CONTAINER_S2.iter().enumerate() {
+                    v.push((format!("{s1} {s2}"), (i1 * 8 + i2) as u64));
+                }
+            }
+            Some(v)
+        }
+        "c_mktsegment" => Some(flat(&schema::SEGMENTS)),
+        "o_orderstatus" => Some(flat(&schema::ORDERSTATUS)),
+        "o_orderpriority" => Some(flat(&schema::PRIORITIES)),
+        "l_returnflag" => Some(flat(&schema::RETURNFLAGS)),
+        "l_linestatus" => Some(flat(&schema::LINESTATUS)),
+        "l_shipmode" => Some(flat(&schema::SHIPMODES)),
+        "l_shipinstruct" => Some(flat(&schema::INSTRUCTIONS)),
+        _ => None,
+    }
+}
+
+/// `%`-wildcard match ('%' spans any substring, no other metacharacters).
+fn glob_match(pattern: &str, s: &str) -> bool {
+    let parts: Vec<&str> = pattern.split('%').collect();
+    if parts.len() == 1 {
+        return pattern == s;
+    }
+    let first = parts[0];
+    let last = parts[parts.len() - 1];
+    if !s.starts_with(first) || !s.ends_with(last) {
+        return false;
+    }
+    if s.len() < first.len() + last.len() {
+        return false;
+    }
+    let mut pos = first.len();
+    let end = s.len() - last.len();
+    for part in &parts[1..parts.len() - 1] {
+        if part.is_empty() {
+            continue;
+        }
+        match s[pos..end].find(part) {
+            Some(k) => pos += k + part.len(),
+            None => return false,
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parse_program;
+    use super::*;
+    use crate::query::ast::CmpOp;
+
+    #[test]
+    fn glob_matching() {
+        assert!(glob_match("%BRASS", "STANDARD ANODIZED BRASS"));
+        assert!(!glob_match("%BRASS", "STANDARD ANODIZED TIN"));
+        assert!(glob_match("PROMO%", "PROMO ANODIZED TIN"));
+        assert!(glob_match("MEDIUM POLISHED%", "MEDIUM POLISHED COPPER"));
+        assert!(glob_match("A%C%E", "ABCDE"));
+        assert!(!glob_match("A%C%E", "ACE_X"));
+        assert!(glob_match("ACE", "ACE"));
+        assert!(!glob_match("ACE", "ACES"));
+        assert!(glob_match("%", "anything"));
+    }
+
+    #[test]
+    fn vocab_ids_match_schema_encoders() {
+        let brands = vocab("p_brand").unwrap();
+        assert_eq!(brands.len(), 25);
+        for (w, id) in &brands {
+            assert_eq!(schema::brand_id(w), *id);
+        }
+        let types = vocab("p_type").unwrap();
+        assert_eq!(types.len(), 150);
+        for (w, id) in &types {
+            assert_eq!(schema::type_id_of(w), *id);
+        }
+        let containers = vocab("p_container").unwrap();
+        assert_eq!(containers.len(), 40);
+        for (w, id) in &containers {
+            assert_eq!(schema::container_id(w), *id);
+        }
+        for (w, id) in &vocab("l_shipmode").unwrap() {
+            assert_eq!(schema::shipmode_id(w), *id);
+        }
+        assert!(vocab("c_phone_cc").is_none());
+    }
+
+    #[test]
+    fn like_expansion_equals_schema_helpers() {
+        let q = parse_program("from part | filter p_type like \"%BRASS\"").unwrap();
+        match &q[0].rels[0].filter {
+            Pred::InSet { attr, values } => {
+                assert_eq!(*attr, "p_type");
+                assert_eq!(*values, schema::type_ids_ending_with("BRASS"));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let q = parse_program("from part | filter p_type like \"PROMO%\"").unwrap();
+        match &q[0].rels[0].filter {
+            Pred::InSet { values, .. } => {
+                assert_eq!(*values, schema::type_ids_starting_with("PROMO"));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let q =
+            parse_program("from part | filter p_type like \"MEDIUM POLISHED%\"").unwrap();
+        match &q[0].rels[0].filter {
+            Pred::InSet { values, .. } => {
+                assert_eq!(*values, schema::type_ids_with_prefix2("MEDIUM", "POLISHED"));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn money_and_percent_decimals_encode() {
+        // c_acctbal carries a +100000 cent offset
+        let q = parse_program("from customer | filter c_acctbal > 0.00").unwrap();
+        assert_eq!(
+            q[0].rels[0].filter,
+            Pred::CmpImm { attr: "c_acctbal", op: CmpOp::Gt, value: 100_000 }
+        );
+        // negative money stays in-domain thanks to the offset
+        let q = parse_program("from customer | filter c_acctbal > -999.99").unwrap();
+        assert_eq!(
+            q[0].rels[0].filter,
+            Pred::CmpImm { attr: "c_acctbal", op: CmpOp::Gt, value: 1 }
+        );
+        // discount percent
+        let q =
+            parse_program("from lineitem | filter l_discount between 0.05..0.07").unwrap();
+        assert_eq!(
+            q[0].rels[0].filter,
+            Pred::Between { attr: "l_discount", lo: 5, hi: 7 }
+        );
+    }
+
+    #[test]
+    fn dates_region_and_nation_fold() {
+        let q = parse_program(
+            "from orders | filter o_orderdate < date(1995-03-15)",
+        )
+        .unwrap();
+        assert_eq!(
+            q[0].rels[0].filter,
+            Pred::CmpImm {
+                attr: "o_orderdate",
+                op: CmpOp::Lt,
+                value: schema::date(1995, 3, 15)
+            }
+        );
+        let q = parse_program(
+            "from supplier | filter s_nationkey in region(\"EUROPE\")",
+        )
+        .unwrap();
+        assert_eq!(
+            q[0].rels[0].filter,
+            Pred::InSet {
+                attr: "s_nationkey",
+                values: schema::nations_in_region("EUROPE")
+            }
+        );
+        let q = parse_program(
+            "from supplier | filter s_nationkey == nation(\"GERMANY\")",
+        )
+        .unwrap();
+        assert_eq!(
+            q[0].rels[0].filter,
+            Pred::CmpImm {
+                attr: "s_nationkey",
+                op: CmpOp::Eq,
+                value: schema::nation_id("GERMANY")
+            }
+        );
+    }
+
+    #[test]
+    fn kind_inference_and_names() {
+        let q = parse_program("from supplier | filter s_suppkey < 10").unwrap();
+        assert_eq!(q[0].kind, QueryKind::FilterOnly);
+        assert_eq!(q[0].name, "adhoc");
+        let q = parse_program(
+            "from supplier | filter s_suppkey < 10 | aggregate count() as n",
+        )
+        .unwrap();
+        assert_eq!(q[0].kind, QueryKind::Full);
+        assert_eq!(q[0].rels[0].aggregates[0].label, "n");
+        let q = parse_program(
+            "query mine from supplier | aggregate avg(s_acctbal)",
+        )
+        .unwrap();
+        assert_eq!(q[0].name, "mine");
+        assert_eq!(q[0].rels[0].filter, Pred::True);
+        assert_eq!(q[0].rels[0].aggregates[0].label, "avg_s_acctbal");
+    }
+
+    #[test]
+    fn error_unknown_column_is_spanned() {
+        let src = "from lineitem | filter l_shipdat <= date(1998-09-02)";
+        let e = parse_program(src).unwrap_err();
+        assert!(e.msg.contains("unknown column 'l_shipdat'"));
+        assert_eq!(&src[e.span.start..e.span.end], "l_shipdat");
+    }
+
+    #[test]
+    fn error_type_mismatches() {
+        let e = parse_program("from lineitem | filter l_shipdate == \"MAIL\"")
+            .unwrap_err();
+        assert!(e.msg.contains("string literal"), "{}", e.msg);
+        let e = parse_program("from lineitem | filter l_quantity == date(1994-01-01)")
+            .unwrap_err();
+        assert!(e.msg.contains("not a date column"), "{}", e.msg);
+        let e = parse_program("from lineitem | filter l_shipmode == \"WARP\"")
+            .unwrap_err();
+        assert!(e.msg.contains("not in the 'l_shipmode' dictionary"), "{}", e.msg);
+        let e = parse_program("from lineitem | filter l_quantity == 100")
+            .unwrap_err();
+        assert!(e.msg.contains("does not fit"), "{}", e.msg);
+        let e = parse_program("from lineitem | filter l_shipdate == date(1994-13-01)")
+            .unwrap_err();
+        assert!(e.msg.contains("invalid calendar date"), "{}", e.msg);
+        let e = parse_program(
+            "from lineitem | filter l_shipdate < l_quantity",
+        )
+        .unwrap_err();
+        assert!(e.msg.contains("encodings differ"), "{}", e.msg);
+        let e = parse_program("from nation | filter true").unwrap_err();
+        assert!(e.msg.contains("DRAM-resident"), "{}", e.msg);
+        let e = parse_program("from lineitem | group by l_orderkey | aggregate count()")
+            .unwrap_err();
+        assert!(e.msg.contains("group key"), "{}", e.msg);
+    }
+
+    #[test]
+    fn error_mixed_aggregate_pipelines() {
+        let e = parse_program(
+            "from part | filter p_size == 1 \
+             from lineitem | filter true | aggregate count()",
+        )
+        .unwrap_err();
+        assert!(e.msg.contains("mixed"), "{}", e.msg);
+    }
+
+    #[test]
+    fn unsupported_value_shapes_are_rejected() {
+        assert!(parse_program(
+            "from lineitem | filter true | aggregate sum(2) as x"
+        )
+        .is_err());
+        assert!(parse_program(
+            "from lineitem | filter true \
+             | aggregate sum((100 - l_discount) * l_extendedprice) as x"
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,243 @@
+//! PQL — the ad-hoc text query frontend (text → [`crate::query::ast`]).
+//!
+//! A small PRQL-inspired pipeline language that turns the engine from a
+//! benchmark harness into a queryable system: any filter/aggregate the PIM
+//! substrate supports can be written as a string and executed with
+//! `pimdb run --sql "..."`, no Rust required. The hand-written lexer
+//! ([`lexer`]), recursive-descent parser ([`parser`]) and schema-validating
+//! lowering ([`lower`]) produce exactly the same [`crate::query::ast`]
+//! values the hardcoded TPC-H definitions use — the `.pql` fixtures under
+//! `rust/tests/pql/` re-express all 19 evaluated queries and are asserted
+//! node-for-node equal to [`crate::query::tpch`].
+//!
+//! # Grammar
+//!
+//! ```text
+//! program     := block (';' block)*
+//! block       := ('query' NAME)? pipeline+
+//! pipeline    := 'from' TABLE stage*
+//! stage       := '|' ( 'filter' pred
+//!                    | 'group' 'by'? column (',' column)*
+//!                    | 'aggregate' agg (',' agg)* )      -- aggregate last
+//! agg         := ('sum'|'count'|'min'|'max'|'avg') '(' vexpr? ')'
+//!                ('as' LABEL)?
+//! vexpr       := factor ('*' factor)*   -- shapes the PIM ALU computes:
+//!                column | 1 | column '*' column
+//!                | column '*' '(' INT ('+'|'-') column ')' [× again]
+//! pred        := conj ('or' conj)*      -- 'or' binds loosest
+//! conj        := unit ('and' unit)*
+//! unit        := 'not' unit | '(' pred ')' | 'true' | comparison
+//! comparison  := column OP scalar       -- OP: == != < <= > >=
+//!              | column OP column       -- same width & encoding
+//!              | column 'between' scalar '..' scalar    -- inclusive
+//!              | column 'in' '(' scalar (',' scalar)* ')'
+//!              | column 'in' 'region' '(' STRING ')'    -- nation keys
+//!              | column 'like' STRING   -- '%'-pattern over a dictionary
+//! scalar      := ['-'] base (('+'|'-') INT)*            -- const folding
+//! base        := INT                    -- always the raw encoded value
+//!              | DECIMAL                -- ×100: money cents / percent
+//!              | STRING                 -- dictionary word -> id
+//!              | 'date' '(' Y '-' M '-' D ')'           -- epoch days
+//!              | 'nation' '(' STRING ')'                -- nation key
+//! ```
+//!
+//! `#` starts a line comment; newlines are whitespace. A block with any
+//! `aggregate` stage is a *full* query (filter and aggregation both run
+//! in PIM); a block with none is *filter-only*, as in the paper.
+//!
+//! # Examples
+//!
+//! TPC-H Q6 as a one-liner (decimals scale to the stored hundredths, so
+//! `0.05` means a 5% discount):
+//!
+//! ```
+//! use pimdb::query::ast::QueryKind;
+//! use pimdb::query::lang::parse_program;
+//!
+//! let queries = parse_program(
+//!     "from lineitem
+//!      | filter (l_shipdate >= date(1994-01-01) and l_shipdate < date(1995-01-01))
+//!          and l_discount between 0.05..0.07 and l_quantity < 24
+//!      | aggregate sum(l_extendedprice * l_discount) as revenue_x100",
+//! ).unwrap();
+//! assert_eq!(queries.len(), 1);
+//! assert_eq!(queries[0].kind, QueryKind::Full);
+//! assert_eq!(queries[0].rels[0].aggregates[0].label, "revenue_x100");
+//! ```
+//!
+//! Dictionary words, dates and DRAM-side dimension folds are encoded at
+//! parse time against [`crate::db::schema`]:
+//!
+//! ```
+//! use pimdb::query::ast::Pred;
+//! use pimdb::query::lang::parse_program;
+//!
+//! let queries = parse_program(
+//!     "query brass_eu
+//!      from part | filter p_size == 15 and p_type like \"%BRASS\"
+//!      from supplier | filter s_nationkey in region(\"EUROPE\")",
+//! ).unwrap();
+//! assert_eq!(queries[0].name, "brass_eu");
+//! assert_eq!(queries[0].rels.len(), 2);
+//! match &queries[0].rels[1].filter {
+//!     Pred::InSet { attr, values } => {
+//!         assert_eq!(*attr, "s_nationkey");
+//!         assert_eq!(values.len(), 5); // five European nations
+//!     }
+//!     other => panic!("unexpected filter {other:?}"),
+//! }
+//! ```
+//!
+//! Errors carry the source span and render with a caret:
+//!
+//! ```
+//! use pimdb::query::lang::parse_program;
+//!
+//! let src = "from lineitem | filter l_shipdat <= date(1998-09-02)";
+//! let err = parse_program(src).unwrap_err();
+//! assert!(err.msg.contains("unknown column 'l_shipdat'"));
+//! assert!(err.render(src).contains("^^^^^^^^^"));
+//! ```
+
+pub mod lexer;
+pub mod lower;
+pub mod parser;
+pub mod print;
+
+use crate::query::ast::{Query, RelQuery};
+
+/// A byte range in the source text.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Span {
+    /// First byte of the spanned region.
+    pub start: usize,
+    /// One past the last byte.
+    pub end: usize,
+}
+
+impl Span {
+    /// A span covering `start..end`.
+    pub fn new(start: usize, end: usize) -> Span {
+        Span { start, end }
+    }
+
+    /// The smallest span covering both `self` and `other`.
+    pub fn join(self, other: Span) -> Span {
+        Span {
+            start: self.start.min(other.start),
+            end: self.end.max(other.end),
+        }
+    }
+}
+
+/// A diagnostic: what went wrong and where in the source.
+#[derive(Clone, Debug)]
+pub struct Diag {
+    /// Human-readable description of the problem.
+    pub msg: String,
+    /// Source location the message refers to.
+    pub span: Span,
+}
+
+impl Diag {
+    /// Build a diagnostic from a message and its location.
+    pub fn new(msg: impl Into<String>, span: Span) -> Diag {
+        Diag { msg: msg.into(), span }
+    }
+
+    /// Render the diagnostic against its source text: the message, the
+    /// offending line, and a caret underline.
+    ///
+    /// ```text
+    /// error: unknown column 'l_shipdat' on LINEITEM (available: ...)
+    ///   1 | from lineitem | filter l_shipdat <= date(1998-09-02)
+    ///     |                        ^^^^^^^^^
+    /// ```
+    pub fn render(&self, src: &str) -> String {
+        let start = self.span.start.min(src.len());
+        let line_start = src[..start].rfind('\n').map(|i| i + 1).unwrap_or(0);
+        let line_end = src[start..]
+            .find('\n')
+            .map(|i| start + i)
+            .unwrap_or(src.len());
+        let line_no = src[..line_start].matches('\n').count() + 1;
+        let line = &src[line_start..line_end];
+        let col = start - line_start;
+        let width = self
+            .span
+            .end
+            .min(line_end)
+            .saturating_sub(start)
+            .max(1);
+        let gutter = format!("{line_no}");
+        let pad = " ".repeat(gutter.len());
+        format!(
+            "error: {}\n  {gutter} | {line}\n  {pad} | {}{}",
+            self.msg,
+            " ".repeat(col),
+            "^".repeat(width),
+        )
+    }
+}
+
+/// Parse a PQL source text into executable queries.
+///
+/// Each `query` block becomes one [`Query`]; a headerless single block is
+/// named `adhoc`. The first error aborts the parse — render it with
+/// [`Diag::render`] for a caret-annotated message.
+pub fn parse_program(src: &str) -> Result<Vec<Query>, Diag> {
+    lower::lower_program(&parser::parse(src)?)
+}
+
+/// Parse a source text that must contain exactly one single-relation
+/// query, returning its [`RelQuery`] (convenience for tests and library
+/// callers that drive [`crate::query::compiler`] directly).
+pub fn parse_rel_query(src: &str) -> Result<RelQuery, Diag> {
+    let mut queries = parse_program(src)?;
+    if queries.len() != 1 || queries[0].rels.len() != 1 {
+        return Err(Diag::new(
+            "expected exactly one pipeline",
+            Span::new(0, src.len()),
+        ));
+    }
+    let mut query = queries.pop().expect("length checked above");
+    Ok(query.rels.pop().expect("length checked above"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_points_at_the_column() {
+        let src = "from lineitem\n| filter l_shipdat <= 5";
+        let err = parse_program(src).unwrap_err();
+        let rendered = err.render(src);
+        assert!(rendered.contains("error: unknown column"), "{rendered}");
+        assert!(rendered.contains("2 | | filter l_shipdat <= 5"), "{rendered}");
+        assert!(rendered.contains("^^^^^^^^^"), "{rendered}");
+    }
+
+    #[test]
+    fn render_survives_eof_spans() {
+        let src = "from lineitem | filter l_quantity <";
+        let err = parse_program(src).unwrap_err();
+        let rendered = err.render(src);
+        assert!(rendered.contains("error:"), "{rendered}");
+    }
+
+    #[test]
+    fn parse_rel_query_accepts_only_single_pipelines() {
+        assert!(parse_rel_query("from supplier | filter s_suppkey < 10").is_ok());
+        assert!(parse_rel_query(
+            "from supplier | filter true from part | filter true"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn span_join() {
+        let j = Span::new(3, 5).join(Span::new(10, 12));
+        assert_eq!((j.start, j.end), (3, 12));
+    }
+}

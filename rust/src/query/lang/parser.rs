@@ -1,0 +1,790 @@
+//! Recursive-descent parser: token stream → surface AST.
+//!
+//! The surface AST keeps every name and literal *unresolved* and tagged
+//! with its source [`Span`]; all schema knowledge (does the column exist,
+//! what encoding does it use, is the value in range) lives in
+//! [`super::lower`]. Keywords are contextual: the parser matches plain
+//! identifier text, so column names can never collide with keywords that
+//! only appear in other positions.
+
+use crate::query::ast::{AggKind, CmpOp};
+
+use super::lexer::{lex, Tok, Token};
+use super::{Diag, Span};
+
+/// A parsed identifier with its span.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SIdent {
+    /// The identifier text as written.
+    pub name: String,
+    /// Source span of the identifier.
+    pub span: Span,
+}
+
+/// An unresolved scalar literal: a base value plus `+ n` / `- n`
+/// adjustments (`date(1998-12-01) - 90`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SScalar {
+    /// The literal itself.
+    pub kind: SScalarKind,
+    /// Leading `-` on an `Int`/`Decimal` literal.
+    pub neg: bool,
+    /// Net adjustment from trailing `+ n` / `- n` terms.
+    pub adjust: i64,
+    /// Source span of the whole scalar expression.
+    pub span: Span,
+}
+
+/// The base of a scalar literal before encoding.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SScalarKind {
+    /// Integer literal: always the raw encoded value.
+    Int(u64),
+    /// Decimal literal, scaled to hundredths by the lexer.
+    Decimal(u64),
+    /// String literal: a dictionary word, encoded per attribute.
+    Str(String),
+    /// `date(Y-M-D)`: days since the TPC-H epoch.
+    Date {
+        /// Calendar year.
+        y: i64,
+        /// Calendar month (1-12).
+        m: i64,
+        /// Calendar day (1-31).
+        d: i64,
+    },
+    /// `nation("NAME")`: the TPC-H nation key.
+    Nation(String),
+}
+
+/// Right-hand side of a comparison: literal or another column.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SCmpRhs {
+    /// Compare against a constant.
+    Scalar(SScalar),
+    /// Compare against another column of the same relation.
+    Column(SIdent),
+}
+
+/// An unresolved filter predicate.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SPred {
+    /// `attr <op> rhs`
+    Cmp {
+        /// Left-hand column.
+        attr: SIdent,
+        /// Comparison operator.
+        op: CmpOp,
+        /// Constant or column right-hand side.
+        rhs: SCmpRhs,
+    },
+    /// `attr between lo..hi` (inclusive on both ends).
+    Between {
+        /// The column.
+        attr: SIdent,
+        /// Lower bound.
+        lo: SScalar,
+        /// Upper bound.
+        hi: SScalar,
+    },
+    /// `attr in (v, v, ...)`
+    InList {
+        /// The column.
+        attr: SIdent,
+        /// Set members, in written order.
+        items: Vec<SScalar>,
+    },
+    /// `attr in region("NAME")`: nation keys of a TPC-H region.
+    InRegion {
+        /// The column (conventionally a `*_nationkey`).
+        attr: SIdent,
+        /// Region name literal.
+        region: SIdent,
+    },
+    /// `attr like "PATTERN"`: dictionary-expanded to an IN-set.
+    Like {
+        /// The dictionary-encoded column.
+        attr: SIdent,
+        /// `%`-wildcard pattern.
+        pattern: SIdent,
+    },
+    /// Conjunction (two or more operands).
+    And(Vec<SPred>),
+    /// Disjunction (two or more operands).
+    Or(Vec<SPred>),
+    /// Negation.
+    Not(Box<SPred>),
+    /// The `true` literal.
+    True,
+}
+
+/// One factor of an aggregate value expression.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SValFactor {
+    /// A column.
+    Attr(SIdent),
+    /// A bare integer (only `1` is accepted by lowering).
+    Int(u64, Span),
+    /// `(scale - attr)` or `(scale + attr)`.
+    ScaleOp {
+        /// The constant term.
+        scale: u64,
+        /// `true` for `+`, `false` for `-`.
+        plus: bool,
+        /// The column term.
+        attr: SIdent,
+        /// Span of the parenthesized group.
+        span: Span,
+    },
+}
+
+/// An aggregate call: `sum(expr) as label`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SAgg {
+    /// Which reduction.
+    pub kind: AggKind,
+    /// `*`-separated factors inside the call (empty for `count()`).
+    pub factors: Vec<SValFactor>,
+    /// Optional `as` label.
+    pub label: Option<SIdent>,
+    /// Span of the whole aggregate call.
+    pub span: Span,
+}
+
+/// One `from <table> | ...` pipeline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SPipeline {
+    /// Source relation name.
+    pub table: SIdent,
+    /// `filter` stages in order (multiple stages AND together).
+    pub filters: Vec<SPred>,
+    /// `group by` attributes (empty when absent).
+    pub group_by: Vec<SIdent>,
+    /// `aggregate` outputs (empty for filter-only pipelines).
+    pub aggregates: Vec<SAgg>,
+}
+
+/// One query block: optional `query NAME` header plus its pipelines.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SQueryBlock {
+    /// The `query NAME` header, when present.
+    pub name: Option<SIdent>,
+    /// The block's pipelines (one per relation).
+    pub pipelines: Vec<SPipeline>,
+}
+
+/// A whole source text: one or more query blocks.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SProgram {
+    /// The blocks in source order.
+    pub blocks: Vec<SQueryBlock>,
+}
+
+/// Parse a full source text into its surface AST.
+pub fn parse(src: &str) -> Result<SProgram, Diag> {
+    let tokens = lex(src)?;
+    let mut p = Parser { tokens, pos: 0, eof: src.len() };
+    p.program()
+}
+
+struct Parser {
+    tokens: Vec<Token>,
+    pos: usize,
+    eof: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<&Tok> {
+        self.tokens.get(self.pos).map(|t| &t.tok)
+    }
+
+    fn peek2(&self) -> Option<&Tok> {
+        self.tokens.get(self.pos + 1).map(|t| &t.tok)
+    }
+
+    fn span(&self) -> Span {
+        self.tokens
+            .get(self.pos)
+            .map(|t| t.span)
+            .unwrap_or(Span::new(self.eof, self.eof))
+    }
+
+    fn prev_span(&self) -> Span {
+        if self.pos == 0 {
+            Span::new(0, 0)
+        } else {
+            self.tokens[self.pos - 1].span
+        }
+    }
+
+    fn bump(&mut self) -> Option<Token> {
+        let t = self.tokens.get(self.pos).cloned();
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn err<T>(&self, msg: impl Into<String>) -> Result<T, Diag> {
+        Err(Diag::new(msg, self.span()))
+    }
+
+    /// True when the next token is the identifier `kw`.
+    fn at_kw(&self, kw: &str) -> bool {
+        matches!(self.peek(), Some(Tok::Ident(s)) if s == kw)
+    }
+
+    /// Consume the identifier `kw` if it is next.
+    fn eat_kw(&mut self, kw: &str) -> bool {
+        if self.at_kw(kw) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect_kw(&mut self, kw: &str) -> Result<(), Diag> {
+        if self.eat_kw(kw) {
+            Ok(())
+        } else {
+            self.err(format!("expected '{kw}'"))
+        }
+    }
+
+    fn eat_tok(&mut self, t: &Tok) -> bool {
+        if self.peek() == Some(t) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect_tok(&mut self, t: &Tok, what: &str) -> Result<(), Diag> {
+        if self.eat_tok(t) {
+            Ok(())
+        } else {
+            self.err(format!("expected {what}"))
+        }
+    }
+
+    fn ident(&mut self, what: &str) -> Result<SIdent, Diag> {
+        match self.peek() {
+            Some(Tok::Ident(_)) => {
+                let t = self.bump().unwrap();
+                let name = match t.tok {
+                    Tok::Ident(s) => s,
+                    _ => unreachable!(),
+                };
+                Ok(SIdent { name, span: t.span })
+            }
+            _ => self.err(format!("expected {what}")),
+        }
+    }
+
+    fn int(&mut self, what: &str) -> Result<(u64, Span), Diag> {
+        match self.peek() {
+            Some(Tok::Int(_)) => {
+                let t = self.bump().unwrap();
+                let v = match t.tok {
+                    Tok::Int(v) => v,
+                    _ => unreachable!(),
+                };
+                Ok((v, t.span))
+            }
+            _ => self.err(format!("expected {what}")),
+        }
+    }
+
+    // --- grammar ----------------------------------------------------------
+
+    fn program(&mut self) -> Result<SProgram, Diag> {
+        let mut blocks = Vec::new();
+        while self.eat_tok(&Tok::Semi) {}
+        while self.peek().is_some() {
+            blocks.push(self.query_block()?);
+            while self.eat_tok(&Tok::Semi) {}
+        }
+        if blocks.is_empty() {
+            return Err(Diag::new(
+                "empty input: expected 'from <table> | ...'",
+                Span::new(self.eof, self.eof),
+            ));
+        }
+        Ok(SProgram { blocks })
+    }
+
+    fn query_block(&mut self) -> Result<SQueryBlock, Diag> {
+        let name = if self.at_kw("query") {
+            self.pos += 1;
+            Some(self.ident("a query name after 'query'")?)
+        } else {
+            None
+        };
+        let mut pipelines = Vec::new();
+        if !self.at_kw("from") {
+            return self.err("expected 'from <table>'");
+        }
+        // consecutive `from` pipelines belong to this block; a ';' ends it
+        // (program() starts the next block after the separator)
+        while self.at_kw("from") {
+            pipelines.push(self.pipeline()?);
+        }
+        Ok(SQueryBlock { name, pipelines })
+    }
+
+    fn pipeline(&mut self) -> Result<SPipeline, Diag> {
+        self.expect_kw("from")?;
+        let table = self.ident("a table name after 'from'")?;
+        let mut filters = Vec::new();
+        let mut group_by: Vec<SIdent> = Vec::new();
+        let mut aggregates: Vec<SAgg> = Vec::new();
+        while self.eat_tok(&Tok::Pipe) {
+            if self.eat_kw("filter") {
+                if !aggregates.is_empty() {
+                    return Err(Diag::new(
+                        "the aggregate stage must be last in a pipeline",
+                        self.prev_span(),
+                    ));
+                }
+                filters.push(self.pred()?);
+            } else if self.at_kw("group") {
+                let kw_span = self.span();
+                self.pos += 1;
+                self.eat_kw("by"); // optional sugar: 'group by'
+                if !group_by.is_empty() {
+                    return Err(Diag::new("duplicate group stage", kw_span));
+                }
+                if !aggregates.is_empty() {
+                    return Err(Diag::new(
+                        "the aggregate stage must be last in a pipeline",
+                        kw_span,
+                    ));
+                }
+                loop {
+                    group_by.push(self.ident("a column name in 'group by'")?);
+                    if !self.eat_tok(&Tok::Comma) {
+                        break;
+                    }
+                }
+            } else if self.at_kw("aggregate") {
+                let kw_span = self.span();
+                self.pos += 1;
+                if !aggregates.is_empty() {
+                    return Err(Diag::new("duplicate aggregate stage", kw_span));
+                }
+                loop {
+                    aggregates.push(self.aggregate()?);
+                    if !self.eat_tok(&Tok::Comma) {
+                        break;
+                    }
+                }
+            } else {
+                return self.err(
+                    "expected a stage: 'filter', 'group by' or 'aggregate'",
+                );
+            }
+        }
+        Ok(SPipeline { table, filters, group_by, aggregates })
+    }
+
+    fn aggregate(&mut self) -> Result<SAgg, Diag> {
+        let start = self.span();
+        let func = self.ident("an aggregate function (sum/count/min/max/avg)")?;
+        let kind = match func.name.as_str() {
+            "sum" => AggKind::Sum,
+            "count" => AggKind::Count,
+            "min" => AggKind::Min,
+            "max" => AggKind::Max,
+            "avg" => AggKind::Avg,
+            other => {
+                return Err(Diag::new(
+                    format!("unknown aggregate function '{other}' \
+                             (expected sum/count/min/max/avg)"),
+                    func.span,
+                ))
+            }
+        };
+        self.expect_tok(&Tok::LParen, "'(' after the aggregate function")?;
+        let mut factors = Vec::new();
+        if kind == AggKind::Count {
+            // count() or count(*)
+            self.eat_tok(&Tok::Star);
+        } else {
+            loop {
+                factors.push(self.val_factor()?);
+                if !self.eat_tok(&Tok::Star) {
+                    break;
+                }
+            }
+        }
+        self.expect_tok(&Tok::RParen, "')' closing the aggregate call")?;
+        let label = if self.eat_kw("as") {
+            Some(self.ident("a label after 'as'")?)
+        } else {
+            None
+        };
+        let end = self.prev_span();
+        Ok(SAgg { kind, factors, label, span: start.join(end) })
+    }
+
+    fn val_factor(&mut self) -> Result<SValFactor, Diag> {
+        match self.peek() {
+            Some(Tok::Ident(_)) => Ok(SValFactor::Attr(self.ident("a column")?)),
+            Some(Tok::Int(_)) => {
+                let (v, span) = self.int("an integer")?;
+                Ok(SValFactor::Int(v, span))
+            }
+            Some(Tok::LParen) => {
+                let start = self.span();
+                self.pos += 1;
+                let (scale, _) = self.int("a constant scale, e.g. (100 - l_discount)")?;
+                let plus = match self.peek() {
+                    Some(Tok::Plus) => true,
+                    Some(Tok::Minus) => false,
+                    _ => return self.err("expected '+' or '-' in a scale term"),
+                };
+                self.pos += 1;
+                let attr = self.ident("a column in the scale term")?;
+                self.expect_tok(&Tok::RParen, "')' closing the scale term")?;
+                let span = start.join(self.prev_span());
+                Ok(SValFactor::ScaleOp { scale, plus, attr, span })
+            }
+            _ => self.err("expected a column, integer, or (scale ± column)"),
+        }
+    }
+
+    // predicates: or_pred > and_pred > not_pred > primary
+    fn pred(&mut self) -> Result<SPred, Diag> {
+        let first = self.and_pred()?;
+        if !self.at_kw("or") {
+            return Ok(first);
+        }
+        let mut parts = vec![first];
+        while self.eat_kw("or") {
+            parts.push(self.and_pred()?);
+        }
+        Ok(SPred::Or(parts))
+    }
+
+    fn and_pred(&mut self) -> Result<SPred, Diag> {
+        let first = self.not_pred()?;
+        if !self.at_kw("and") {
+            return Ok(first);
+        }
+        let mut parts = vec![first];
+        while self.eat_kw("and") {
+            parts.push(self.not_pred()?);
+        }
+        Ok(SPred::And(parts))
+    }
+
+    fn not_pred(&mut self) -> Result<SPred, Diag> {
+        if self.eat_kw("not") {
+            Ok(SPred::Not(Box::new(self.not_pred()?)))
+        } else {
+            self.primary_pred()
+        }
+    }
+
+    fn primary_pred(&mut self) -> Result<SPred, Diag> {
+        if self.eat_tok(&Tok::LParen) {
+            let inner = self.pred()?;
+            self.expect_tok(&Tok::RParen, "')' closing the group")?;
+            return Ok(inner);
+        }
+        if self.eat_kw("true") {
+            return Ok(SPred::True);
+        }
+        let attr = self.ident("a column name, '(' or 'true'")?;
+        if self.eat_kw("between") {
+            let lo = self.scalar()?;
+            self.expect_tok(&Tok::DotDot, "'..' between the range bounds")?;
+            let hi = self.scalar()?;
+            return Ok(SPred::Between { attr, lo, hi });
+        }
+        if self.eat_kw("in") {
+            if self.at_kw("region") {
+                let _ = self.bump();
+                self.expect_tok(&Tok::LParen, "'(' after 'region'")?;
+                let region = self.str_lit("a region name string")?;
+                self.expect_tok(&Tok::RParen, "')' closing 'region(..)'")?;
+                return Ok(SPred::InRegion { attr, region });
+            }
+            self.expect_tok(&Tok::LParen, "'(' opening the IN-list")?;
+            let mut items = vec![self.scalar()?];
+            while self.eat_tok(&Tok::Comma) {
+                items.push(self.scalar()?);
+            }
+            self.expect_tok(&Tok::RParen, "')' closing the IN-list")?;
+            return Ok(SPred::InList { attr, items });
+        }
+        if self.eat_kw("like") {
+            let pattern = self.str_lit("a '%'-pattern string after 'like'")?;
+            return Ok(SPred::Like { attr, pattern });
+        }
+        let op = match self.peek() {
+            Some(Tok::EqEq) => CmpOp::Eq,
+            Some(Tok::Ne) => CmpOp::Ne,
+            Some(Tok::Lt) => CmpOp::Lt,
+            Some(Tok::Le) => CmpOp::Le,
+            Some(Tok::Gt) => CmpOp::Gt,
+            Some(Tok::Ge) => CmpOp::Ge,
+            _ => {
+                return self.err(
+                    "expected a comparison ('==', '!=', '<', '<=', '>', '>='), \
+                     'between', 'in' or 'like'",
+                )
+            }
+        };
+        self.pos += 1;
+        // a bare identifier on the right that is not a scalar function is a
+        // column-column comparison
+        let is_column_rhs = {
+            let scalar_fn = matches!(
+                self.peek(),
+                Some(Tok::Ident(name)) if name == "date" || name == "nation"
+            ) && self.peek2() == Some(&Tok::LParen);
+            matches!(self.peek(), Some(Tok::Ident(_))) && !scalar_fn
+        };
+        let rhs = if is_column_rhs {
+            SCmpRhs::Column(self.ident("a column")?)
+        } else {
+            SCmpRhs::Scalar(self.scalar()?)
+        };
+        Ok(SPred::Cmp { attr, op, rhs })
+    }
+
+    fn str_lit(&mut self, what: &str) -> Result<SIdent, Diag> {
+        match self.peek() {
+            Some(Tok::Str(_)) => {
+                let t = self.bump().unwrap();
+                let name = match t.tok {
+                    Tok::Str(s) => s,
+                    _ => unreachable!(),
+                };
+                Ok(SIdent { name, span: t.span })
+            }
+            _ => self.err(format!("expected {what}")),
+        }
+    }
+
+    /// scalar := ['-'] base (('+'|'-') INT)*
+    fn scalar(&mut self) -> Result<SScalar, Diag> {
+        let start = self.span();
+        let neg = self.eat_tok(&Tok::Minus);
+        let kind = match self.peek().cloned() {
+            Some(Tok::Int(v)) => {
+                self.pos += 1;
+                SScalarKind::Int(v)
+            }
+            Some(Tok::Decimal(c)) => {
+                self.pos += 1;
+                SScalarKind::Decimal(c)
+            }
+            Some(Tok::Str(_)) => {
+                if neg {
+                    return self.err("'-' cannot prefix a string literal");
+                }
+                let s = self.str_lit("a string")?;
+                SScalarKind::Str(s.name)
+            }
+            Some(Tok::Ident(name)) if name == "date" => {
+                if neg {
+                    return self.err("'-' cannot prefix date(..)");
+                }
+                self.pos += 1;
+                self.expect_tok(&Tok::LParen, "'(' after 'date'")?;
+                let (y, _) = self.int("a year")?;
+                self.expect_tok(&Tok::Minus, "'-' in the date")?;
+                let (m, _) = self.int("a month")?;
+                self.expect_tok(&Tok::Minus, "'-' in the date")?;
+                let (d, _) = self.int("a day")?;
+                self.expect_tok(&Tok::RParen, "')' closing 'date(..)'")?;
+                SScalarKind::Date { y: y as i64, m: m as i64, d: d as i64 }
+            }
+            Some(Tok::Ident(name)) if name == "nation" => {
+                if neg {
+                    return self.err("'-' cannot prefix nation(..)");
+                }
+                self.pos += 1;
+                self.expect_tok(&Tok::LParen, "'(' after 'nation'")?;
+                let n = self.str_lit("a nation name string")?;
+                self.expect_tok(&Tok::RParen, "')' closing 'nation(..)'")?;
+                SScalarKind::Nation(n.name)
+            }
+            _ => {
+                return self.err(
+                    "expected a literal: integer, decimal, string, \
+                     date(Y-M-D) or nation(\"NAME\")",
+                )
+            }
+        };
+        // constant adjustments: date(1998-12-01) - 90
+        let mut adjust: i64 = 0;
+        loop {
+            let positive = match self.peek() {
+                Some(Tok::Plus) => true,
+                // '- INT' is an adjustment; '- ident' would be a new token
+                // sequence the caller handles (never valid after a scalar)
+                Some(Tok::Minus) => false,
+                _ => break,
+            };
+            // only consume when an integer follows: 'x - 90' adjusts, but a
+            // stray '-' without an int is a syntax error here
+            if !matches!(self.peek2(), Some(Tok::Int(_))) {
+                break;
+            }
+            self.pos += 1;
+            let (v, vspan) = self.int("an integer adjustment")?;
+            let v = i64::try_from(v)
+                .map_err(|_| Diag::new("adjustment overflows i64", vspan))?;
+            adjust = adjust
+                .checked_add(if positive { v } else { -v })
+                .ok_or_else(|| Diag::new("adjustment overflows i64", vspan))?;
+        }
+        let span = start.join(self.prev_span());
+        Ok(SScalar { kind, neg, adjust, span })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_single_pipeline() {
+        let p = parse("from lineitem | filter l_quantity < 24").unwrap();
+        assert_eq!(p.blocks.len(), 1);
+        let pl = &p.blocks[0].pipelines[0];
+        assert_eq!(pl.table.name, "lineitem");
+        assert_eq!(pl.filters.len(), 1);
+        match &pl.filters[0] {
+            SPred::Cmp { attr, op, rhs } => {
+                assert_eq!(attr.name, "l_quantity");
+                assert_eq!(*op, CmpOp::Lt);
+                assert!(matches!(
+                    rhs,
+                    SCmpRhs::Scalar(SScalar { kind: SScalarKind::Int(24), .. })
+                ));
+            }
+            other => panic!("unexpected predicate {other:?}"),
+        }
+    }
+
+    #[test]
+    fn and_or_nesting_follows_parens() {
+        let p = parse(
+            "from lineitem | filter (a >= 1 and a < 2) and b between 5..7 and c < 24",
+        )
+        .unwrap();
+        match &p.blocks[0].pipelines[0].filters[0] {
+            SPred::And(parts) => {
+                assert_eq!(parts.len(), 3);
+                assert!(matches!(&parts[0], SPred::And(inner) if inner.len() == 2));
+                assert!(matches!(&parts[1], SPred::Between { .. }));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn or_of_ands() {
+        let p = parse("from part | filter (a == 1 and b == 2) or (a == 3 and b == 4)")
+            .unwrap();
+        match &p.blocks[0].pipelines[0].filters[0] {
+            SPred::Or(parts) => {
+                assert_eq!(parts.len(), 2);
+                assert!(parts.iter().all(|q| matches!(q, SPred::And(_))));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn column_column_comparison() {
+        let p = parse("from lineitem | filter l_commitdate < l_receiptdate").unwrap();
+        match &p.blocks[0].pipelines[0].filters[0] {
+            SPred::Cmp { rhs: SCmpRhs::Column(c), .. } => {
+                assert_eq!(c.name, "l_receiptdate")
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn date_adjustment_and_in_region() {
+        let p = parse(
+            "from orders | filter o_orderdate <= date(1998-12-01) - 90 \
+             from supplier | filter s_nationkey in region(\"EUROPE\")",
+        )
+        .unwrap();
+        assert_eq!(p.blocks[0].pipelines.len(), 2);
+        match &p.blocks[0].pipelines[0].filters[0] {
+            SPred::Cmp { rhs: SCmpRhs::Scalar(s), .. } => {
+                assert_eq!(s.adjust, -90);
+                assert!(matches!(s.kind, SScalarKind::Date { y: 1998, m: 12, d: 1 }));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(matches!(
+            &p.blocks[0].pipelines[1].filters[0],
+            SPred::InRegion { .. }
+        ));
+    }
+
+    #[test]
+    fn aggregates_group_by_and_labels() {
+        let p = parse(
+            "query Q1 from lineitem | filter true | group by l_returnflag, l_linestatus \
+             | aggregate sum(l_extendedprice * (100 - l_discount)) as disc, count() as n",
+        )
+        .unwrap();
+        let b = &p.blocks[0];
+        assert_eq!(b.name.as_ref().unwrap().name, "Q1");
+        let pl = &b.pipelines[0];
+        assert_eq!(pl.group_by.len(), 2);
+        assert_eq!(pl.aggregates.len(), 2);
+        assert_eq!(pl.aggregates[0].kind, AggKind::Sum);
+        assert_eq!(pl.aggregates[0].factors.len(), 2);
+        assert!(matches!(
+            &pl.aggregates[0].factors[1],
+            SValFactor::ScaleOp { scale: 100, plus: false, .. }
+        ));
+        assert_eq!(pl.aggregates[1].kind, AggKind::Count);
+        assert!(pl.aggregates[1].factors.is_empty());
+        assert_eq!(pl.aggregates[1].label.as_ref().unwrap().name, "n");
+    }
+
+    #[test]
+    fn multiple_blocks_and_semicolons() {
+        let p = parse("query A from part | filter true; query B from orders | filter true")
+            .unwrap();
+        assert_eq!(p.blocks.len(), 2);
+        assert_eq!(p.blocks[1].name.as_ref().unwrap().name, "B");
+    }
+
+    #[test]
+    fn error_spans_point_at_the_problem() {
+        let e = parse("from lineitem | filter l_quantity <").unwrap_err();
+        assert!(e.msg.contains("literal"));
+        let e = parse("from lineitem | sort x").unwrap_err();
+        assert!(e.msg.contains("stage"));
+        assert!(parse("").is_err());
+        assert!(parse("from lineitem | aggregate total(x)").is_err());
+        assert!(parse("from lineitem | filter a == 1 | aggregate count() | filter b == 2").is_err());
+    }
+
+    #[test]
+    fn negative_scalars() {
+        let p = parse("from supplier | filter s_acctbal > -100.50").unwrap();
+        match &p.blocks[0].pipelines[0].filters[0] {
+            SPred::Cmp { rhs: SCmpRhs::Scalar(s), .. } => {
+                assert!(s.neg);
+                assert_eq!(s.kind, SScalarKind::Decimal(10050));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}

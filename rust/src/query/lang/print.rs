@@ -1,0 +1,180 @@
+//! Pretty-printer: executable AST → PQL text.
+//!
+//! Inverse of parsing for the supported AST shapes: values are printed as
+//! raw encoded integers (which the parser always accepts), compound
+//! predicates are parenthesized exactly where the grammar needs them, so
+//! `parse(print(q))` reproduces `q` node-for-node. This is what the
+//! round-trip property test in `tests/prop_lang.rs` exercises.
+//!
+//! Only empty IN-sets (unconstructible from text) have no exact printed
+//! form; they render as `not true`, which is equivalent but not
+//! node-identical.
+
+use crate::query::ast::{AggKind, Aggregate, CmpOp, Pred, Query, RelQuery, ValExpr};
+
+/// Render a full query block (`query NAME` header plus its pipelines).
+pub fn query_to_pql(q: &Query) -> String {
+    let mut out = format!("query {}\n", q.name);
+    for rq in &q.rels {
+        out.push_str(&rel_query_to_pql(rq));
+        out.push('\n');
+    }
+    out
+}
+
+/// Render one relation pipeline (`from rel | filter ... | ...`).
+pub fn rel_query_to_pql(rq: &RelQuery) -> String {
+    let mut out = format!("from {}", rq.rel.name().to_ascii_lowercase());
+    out.push_str(" | filter ");
+    out.push_str(&pred_to_pql(&rq.filter));
+    if !rq.group_by.is_empty() {
+        out.push_str(" | group by ");
+        out.push_str(&rq.group_by.join(", "));
+    }
+    if !rq.aggregates.is_empty() {
+        out.push_str(" | aggregate ");
+        let aggs: Vec<String> = rq.aggregates.iter().map(agg_to_pql).collect();
+        out.push_str(&aggs.join(", "));
+    }
+    out
+}
+
+/// Render a predicate tree with raw encoded values.
+pub fn pred_to_pql(p: &Pred) -> String {
+    match p {
+        Pred::True => "true".into(),
+        Pred::CmpImm { attr, op, value } => {
+            format!("{attr} {} {value}", op_str(*op))
+        }
+        Pred::CmpCols { a, op, b } => format!("{a} {} {b}", op_str(*op)),
+        Pred::Between { attr, lo, hi } => format!("{attr} between {lo}..{hi}"),
+        Pred::InSet { attr, values } => {
+            if values.is_empty() {
+                // unconstructible from text; equivalent but not identical
+                return "not true".into();
+            }
+            let items: Vec<String> = values.iter().map(|v| v.to_string()).collect();
+            format!("{attr} in ({})", items.join(", "))
+        }
+        Pred::And(ps) => {
+            let parts: Vec<String> = ps.iter().map(operand_to_pql).collect();
+            parts.join(" and ")
+        }
+        Pred::Or(ps) => {
+            let parts: Vec<String> = ps.iter().map(operand_to_pql).collect();
+            parts.join(" or ")
+        }
+        Pred::Not(inner) => format!("not {}", operand_to_pql(inner)),
+    }
+}
+
+/// An operand of and/or/not: compound children need parentheses to keep
+/// their own grouping when re-parsed.
+fn operand_to_pql(p: &Pred) -> String {
+    match p {
+        Pred::And(_) | Pred::Or(_) => format!("({})", pred_to_pql(p)),
+        _ => pred_to_pql(p),
+    }
+}
+
+fn op_str(op: CmpOp) -> &'static str {
+    match op {
+        CmpOp::Eq => "==",
+        CmpOp::Ne => "!=",
+        CmpOp::Lt => "<",
+        CmpOp::Le => "<=",
+        CmpOp::Gt => ">",
+        CmpOp::Ge => ">=",
+    }
+}
+
+fn agg_to_pql(a: &Aggregate) -> String {
+    let kind = match a.kind {
+        AggKind::Sum => "sum",
+        AggKind::Count => "count",
+        AggKind::Min => "min",
+        AggKind::Max => "max",
+        AggKind::Avg => "avg",
+    };
+    let body = if a.kind == AggKind::Count {
+        String::new()
+    } else {
+        val_expr_to_pql(&a.expr)
+    };
+    format!("{kind}({body}) as {}", a.label)
+}
+
+fn val_expr_to_pql(e: &ValExpr) -> String {
+    match e {
+        ValExpr::Attr(a) => (*a).to_string(),
+        ValExpr::One => "1".into(),
+        ValExpr::MulAttrs(a, b) => format!("{a} * {b}"),
+        ValExpr::MulComplement { attr, scale, other } => {
+            format!("{attr} * ({scale} - {other})")
+        }
+        ValExpr::MulSum { attr, scale, other } => {
+            format!("{attr} * ({scale} + {other})")
+        }
+        ValExpr::MulComplementSum { attr, scale1, other1, scale2, other2 } => {
+            format!("{attr} * ({scale1} - {other1}) * ({scale2} + {other2})")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parse_program;
+    use super::*;
+    use crate::db::schema::RelId;
+
+    fn roundtrip(rq: &RelQuery) {
+        let text = rel_query_to_pql(rq);
+        let qs = parse_program(&text)
+            .unwrap_or_else(|e| panic!("re-parse of '{text}' failed: {}", e.msg));
+        assert_eq!(qs.len(), 1);
+        assert_eq!(&qs[0].rels[0], rq, "text was: {text}");
+    }
+
+    #[test]
+    fn hardcoded_tpch_queries_roundtrip_through_text() {
+        for q in crate::query::tpch::all_queries() {
+            for rq in &q.rels {
+                roundtrip(rq);
+            }
+        }
+    }
+
+    #[test]
+    fn count_prints_without_argument() {
+        let rq = RelQuery {
+            rel: RelId::Supplier,
+            filter: Pred::True,
+            group_by: vec![],
+            aggregates: vec![Aggregate {
+                kind: AggKind::Count,
+                expr: ValExpr::One,
+                label: "n",
+            }],
+        };
+        let text = rel_query_to_pql(&rq);
+        assert!(text.contains("count() as n"), "{text}");
+        roundtrip(&rq);
+    }
+
+    #[test]
+    fn nested_boolean_grouping_is_preserved() {
+        let rq = RelQuery {
+            rel: RelId::Lineitem,
+            filter: Pred::Not(Box::new(Pred::Or(vec![
+                Pred::And(vec![
+                    Pred::CmpImm { attr: "l_quantity", op: CmpOp::Lt, value: 5 },
+                    Pred::True,
+                ]),
+                Pred::Between { attr: "l_discount", lo: 2, hi: 9 },
+            ]))),
+            group_by: vec![],
+            aggregates: vec![],
+        };
+        roundtrip(&rq);
+    }
+}

@@ -1,6 +1,11 @@
-//! Query layer: AST, the 19 evaluated TPC-H queries, and the compiler
-//! lowering them to PIM instruction programs.
+//! Query layer: AST, the 19 evaluated TPC-H queries, the PQL text
+//! frontend, and the compiler lowering them to PIM instruction programs.
+//!
+//! Queries enter through two doors — the hardcoded paper set in [`tpch`]
+//! and ad-hoc text parsed by [`lang`] — and meet in the same [`ast`]
+//! types, which [`compiler`] lowers to PIM instruction programs.
 
 pub mod ast;
 pub mod compiler;
+pub mod lang;
 pub mod tpch;

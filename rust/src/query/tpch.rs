@@ -111,12 +111,14 @@ pub fn all_queries() -> Vec<Query> {
     ]
 }
 
+/// Look up one evaluated query by name (case-insensitive).
 pub fn query(name: &str) -> Option<Query> {
     all_queries()
         .into_iter()
         .find(|q| q.name.eq_ignore_ascii_case(name))
 }
 
+/// The 16 queries whose joins/aggregation run at the host.
 pub fn filter_only_queries() -> Vec<Query> {
     all_queries()
         .into_iter()
@@ -124,6 +126,7 @@ pub fn filter_only_queries() -> Vec<Query> {
         .collect()
 }
 
+/// The 3 queries that run entirely in PIM (Q1, Q6, Q22_sub).
 pub fn full_queries() -> Vec<Query> {
     all_queries()
         .into_iter()

@@ -13,20 +13,26 @@ use crate::query::tpch;
 
 /// One query's PIMDB-vs-baseline pair.
 pub struct QueryPair {
+    /// The executed query.
     pub query: Query,
+    /// PIMDB engine report.
     pub pim: RunReport,
+    /// Column-store baseline report.
     pub base: RunReport,
 }
 
 impl QueryPair {
+    /// Baseline-over-PIMDB execution-time ratio (Fig. 8).
     pub fn speedup(&self) -> f64 {
         self.base.metrics.exec_time_s / self.pim.metrics.exec_time_s.max(1e-15)
     }
 
+    /// Baseline-over-PIMDB LLC-miss ratio (Fig. 8).
     pub fn llc_reduction(&self) -> f64 {
         self.base.metrics.llc_misses as f64 / self.pim.metrics.llc_misses.max(1) as f64
     }
 
+    /// Baseline-over-PIMDB total-energy ratio (Figs. 11-12).
     pub fn energy_reduction(&self) -> f64 {
         self.base.metrics.total_energy_pj() / self.pim.metrics.total_energy_pj().max(1e-12)
     }
@@ -35,11 +41,14 @@ impl QueryPair {
 /// All queries executed on both engines — the shared input of Figures
 /// 8–15 and Tables 5–6.
 pub struct Experiments {
+    /// The configuration the runs used.
     pub cfg: SystemConfig,
+    /// One pair per evaluated query, in paper order.
     pub pairs: Vec<QueryPair>,
 }
 
 impl Experiments {
+    /// Run all 19 queries on PIMDB and the baseline over one session.
     pub fn run(cfg: &SystemConfig, engine: pimdb::EngineKind) -> Result<Experiments, String> {
         let db = Database::generate(cfg.sim_sf, 42);
         // one session: the PIM database copy loads once, as in the paper
@@ -60,12 +69,14 @@ impl Experiments {
         })
     }
 
+    /// The filter-only query pairs.
     pub fn filter_only(&self) -> impl Iterator<Item = &QueryPair> {
         self.pairs
             .iter()
             .filter(|p| p.query.kind == QueryKind::FilterOnly)
     }
 
+    /// The full (in-PIM aggregation) query pairs.
     pub fn full(&self) -> impl Iterator<Item = &QueryPair> {
         self.pairs
             .iter()

@@ -40,6 +40,7 @@ impl Runtime {
             .unwrap_or_else(|_| PathBuf::from("artifacts"))
     }
 
+    /// Load every kernel artifact from `dir` and compile via PJRT.
     pub fn load(dir: &Path) -> Result<Runtime, String> {
         let client = xla::PjRtClient::cpu().map_err(|e| format!("pjrt cpu client: {e}"))?;
         let mut exes = HashMap::new();

@@ -4,8 +4,9 @@
 //! the same layout the L1 Pallas kernels use (DESIGN.md §Hardware-
 //! Adaptation), so literals cross the PJRT boundary without reshuffling.
 
-/// Crossbar geometry constants (paper Table 3).
+/// Crossbar rows (paper Table 3).
 pub const XBAR_ROWS: usize = 1024;
+/// Crossbar columns (paper Table 3).
 pub const XBAR_COLS: usize = 512;
 /// u32 words per bit-plane column.
 pub const WORDS: usize = XBAR_ROWS / 32;
@@ -27,6 +28,7 @@ pub struct BitMatrix {
 }
 
 impl BitMatrix {
+    /// An all-zero matrix of the given shape.
     pub fn new(rows: usize, cols: usize) -> Self {
         let words_per_row = cols.div_ceil(64);
         BitMatrix {
@@ -37,14 +39,17 @@ impl BitMatrix {
         }
     }
 
+    /// Number of rows.
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Number of columns.
     pub fn cols(&self) -> usize {
         self.cols
     }
 
+    /// Bit at (r, c).
     #[inline]
     pub fn get(&self, r: usize, c: usize) -> bool {
         debug_assert!(r < self.rows && c < self.cols);
@@ -52,6 +57,7 @@ impl BitMatrix {
         (w >> (c % 64)) & 1 == 1
     }
 
+    /// Set bit (r, c) to `v`.
     #[inline]
     pub fn set(&mut self, r: usize, c: usize, v: bool) {
         debug_assert!(r < self.rows && c < self.cols);
@@ -102,6 +108,7 @@ impl Default for RowMask {
 }
 
 impl RowMask {
+    /// Every row selected.
     pub fn all_ones() -> Self {
         RowMask([u32::MAX; WORDS])
     }
@@ -115,11 +122,13 @@ impl RowMask {
         m
     }
 
+    /// Whether `row` is selected.
     #[inline]
     pub fn get(&self, row: usize) -> bool {
         (self.0[row / 32] >> (row % 32)) & 1 == 1
     }
 
+    /// Select or clear `row`.
     #[inline]
     pub fn set(&mut self, row: usize, v: bool) {
         if v {
@@ -129,10 +138,12 @@ impl RowMask {
         }
     }
 
+    /// Number of selected rows.
     pub fn count_ones(&self) -> u32 {
         self.0.iter().map(|w| w.count_ones()).sum()
     }
 
+    /// Row-wise AND.
     pub fn and(&self, o: &RowMask) -> RowMask {
         let mut r = [0u32; WORDS];
         for (i, x) in r.iter_mut().enumerate() {
@@ -141,6 +152,7 @@ impl RowMask {
         RowMask(r)
     }
 
+    /// Row-wise OR.
     pub fn or(&self, o: &RowMask) -> RowMask {
         let mut r = [0u32; WORDS];
         for (i, x) in r.iter_mut().enumerate() {
@@ -149,6 +161,7 @@ impl RowMask {
         RowMask(r)
     }
 
+    /// Row-wise complement.
     pub fn not(&self) -> RowMask {
         let mut r = [0u32; WORDS];
         for (i, x) in r.iter_mut().enumerate() {
@@ -157,6 +170,7 @@ impl RowMask {
         RowMask(r)
     }
 
+    /// Indices of the selected rows, ascending.
     pub fn iter_rows(&self) -> impl Iterator<Item = usize> + '_ {
         (0..XBAR_ROWS).filter(move |&r| self.get(r))
     }
@@ -166,11 +180,14 @@ impl RowMask {
 /// bit `i` of rows `32w..32w+32`.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct PlaneSet {
+    /// Number of bit-planes (attribute width).
     pub nplanes: usize,
+    /// The packed planes, LSB first.
     pub planes: Vec<[u32; WORDS]>,
 }
 
 impl PlaneSet {
+    /// An all-zero plane set `nplanes` wide.
     pub fn zero(nplanes: usize) -> Self {
         PlaneSet {
             nplanes,
@@ -208,6 +225,7 @@ impl PlaneSet {
         vals
     }
 
+    /// The integer value stored in `row`.
     pub fn value_at(&self, row: usize) -> u64 {
         let mut v = 0u64;
         for i in 0..self.nplanes {

@@ -6,24 +6,31 @@
 
 use super::rng::Rng;
 
+/// Case-local random generator handed to properties.
 pub struct Gen {
+    /// The underlying deterministic PRNG.
     pub rng: Rng,
+    /// This case's seed (printed on failure for `replay`).
     pub seed: u64,
 }
 
 impl Gen {
+    /// Uniform u64 in [lo, hi] inclusive.
     pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
         self.rng.range_u64(lo, hi)
     }
 
+    /// Uniform usize in [lo, hi] inclusive.
     pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
         self.rng.range_u64(lo as u64, hi as u64) as usize
     }
 
+    /// Fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.rng.next_u64() & 1 == 1
     }
 
+    /// Uniform f64 in [0, 1).
     pub fn f64(&mut self) -> f64 {
         self.rng.f64()
     }
@@ -43,10 +50,12 @@ impl Gen {
         }
     }
 
+    /// `len` uniform values in [lo, hi].
     pub fn vec_u64(&mut self, len: usize, lo: u64, hi: u64) -> Vec<u64> {
         (0..len).map(|_| self.u64(lo, hi)).collect()
     }
 
+    /// One element of `xs`, uniformly.
     pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         self.rng.pick(xs)
     }

@@ -4,6 +4,7 @@
 //! runs and platforms, so we carry our own generator instead of depending
 //! on `rand` (not present in the offline vendor set).
 
+/// xoshiro256** PRNG state.
 #[derive(Clone, Debug)]
 pub struct Rng {
     s: [u64; 4],
@@ -18,6 +19,7 @@ fn splitmix64(state: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// Seed the state via splitmix64.
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         let s = [
@@ -36,6 +38,7 @@ impl Rng {
         r
     }
 
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
             .wrapping_mul(5)
@@ -51,6 +54,7 @@ impl Rng {
         result
     }
 
+    /// Next 32-bit output (upper half of the 64-bit stream).
     pub fn next_u32(&mut self) -> u32 {
         (self.next_u64() >> 32) as u32
     }
@@ -69,14 +73,17 @@ impl Rng {
         lo + (m >> 64) as u64
     }
 
+    /// Uniform i64 in [lo, hi] inclusive.
     pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
         lo.wrapping_add(self.range_u64(0, (hi - lo) as u64) as i64)
     }
 
+    /// Uniform f64 in [0, 1) with 53 random bits.
     pub fn f64(&mut self) -> f64 {
         (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
     }
 
+    /// True with probability `p`.
     pub fn chance(&mut self, p: f64) -> bool {
         self.f64() < p
     }

@@ -3,13 +3,18 @@
 /// Online mean/min/max/sum accumulator.
 #[derive(Clone, Debug, Default)]
 pub struct Summary {
+    /// Samples seen.
     pub n: u64,
+    /// Sum of samples.
     pub sum: f64,
+    /// Smallest sample (+inf when empty).
     pub min: f64,
+    /// Largest sample (-inf when empty).
     pub max: f64,
 }
 
 impl Summary {
+    /// An empty accumulator.
     pub fn new() -> Self {
         Summary {
             n: 0,
@@ -19,6 +24,7 @@ impl Summary {
         }
     }
 
+    /// Fold in one sample.
     pub fn add(&mut self, x: f64) {
         self.n += 1;
         self.sum += x;
@@ -26,6 +32,7 @@ impl Summary {
         self.max = self.max.max(x);
     }
 
+    /// Arithmetic mean (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -47,6 +54,7 @@ pub struct WindowedPower {
 }
 
 impl WindowedPower {
+    /// An empty sampler with `window_ps`-long windows.
     pub fn new(window_ps: u64) -> Self {
         WindowedPower {
             window_ps,
@@ -91,6 +99,7 @@ impl WindowedPower {
         }
     }
 
+    /// Total deposited energy (pJ).
     pub fn total_pj(&self) -> f64 {
         self.total_pj
     }

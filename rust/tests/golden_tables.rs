@@ -1,18 +1,23 @@
 //! Golden snapshot of the Table 5/6-style report output for a fixed
 //! seed/scale, so report regressions are caught by `cargo test`.
 //!
-//! The snapshot lives at `tests/golden/tables_sf0.002_seed42.txt`. On the
-//! first run (or with `PIMDB_BLESS=1`) the test writes the snapshot and
-//! passes; afterwards any drift in the rendered tables fails the test.
+//! The snapshot lives at `tests/golden/tables_sf0.002_seed42.txt`.
+//! Semantics (PR 2 removed the *silent* self-bless from PR 1):
 //!
-//! IMPORTANT: the drift check is only binding once the blessed file is
-//! **committed** — on a fresh checkout without it, the test self-blesses
-//! and the snapshot guards nothing. The authoring environment for this
-//! test had no Rust toolchain, so the file could not be generated here:
-//! the first contributor with a toolchain should run `cargo test -q` and
-//! commit the generated `tests/golden/` file. Independently of the
-//! snapshot, the test always asserts the rendering is byte-identical
-//! between two separate runs at serial and 8-way parallel execution —
+//! * snapshot present — rendered tables must match it byte-for-byte;
+//! * snapshot missing, local run — the test blesses the file with a loud
+//!   warning so the contributor commits it;
+//! * snapshot missing in GitHub CI (`GITHUB_ACTIONS` set) — the test
+//!   FAILS: CI may never bless its own reference. The workflow
+//!   additionally refuses untracked files under `tests/golden/`, so a
+//!   blessing run can never masquerade as a passing drift check there;
+//! * `PIMDB_BLESS=1` — re-bless after an intentional change, then commit.
+//!
+//! The authoring environments of PR 1 and PR 2 had no Rust toolchain, so
+//! the file could not be generated there; the first `cargo test` run on a
+//! real toolchain produces it and the warning says to commit it.
+//! Independently of the snapshot, the test always asserts the rendering
+//! is byte-identical between serial and 8-way parallel execution —
 //! determinism and parallelism-independence are checked on every run.
 
 use std::fs;
@@ -47,15 +52,29 @@ fn tables_5_6_golden_snapshot() {
 
     let path =
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/tables_sf0.002_seed42.txt");
-    if std::env::var("PIMDB_BLESS").is_ok() || !path.exists() {
-        fs::create_dir_all(path.parent().unwrap()).unwrap();
-        fs::write(&path, &serial).unwrap();
-        eprintln!("blessed golden snapshot at {}", path.display());
-    } else {
+    let blessing = std::env::var("PIMDB_BLESS").is_ok();
+    if !blessing && path.exists() {
         let want = fs::read_to_string(&path).unwrap();
         assert_eq!(
             serial, want,
-            "table 5/6 snapshot drifted; rerun with PIMDB_BLESS=1 to re-bless"
+            "table 5/6 snapshot drifted; if intentional, re-bless with \
+             PIMDB_BLESS=1 cargo test -q and commit the file"
+        );
+        return;
+    }
+    if !blessing && std::env::var("GITHUB_ACTIONS").is_ok() {
+        panic!(
+            "golden snapshot {} is missing in CI; CI never blesses its own \
+             reference — generate it locally (cargo test -q) and commit it",
+            path.display()
         );
     }
+    fs::create_dir_all(path.parent().unwrap()).unwrap();
+    fs::write(&path, &serial).unwrap();
+    eprintln!(
+        "WARNING: golden snapshot was missing; blessed {} from this run — \
+         commit it, or the drift check guards nothing (CI refuses to run \
+         with an uncommitted snapshot)",
+        path.display()
+    );
 }

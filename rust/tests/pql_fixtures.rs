@@ -1,0 +1,67 @@
+//! Round-trip fidelity of the PQL text frontend: every evaluated TPC-H
+//! query, re-expressed as a `tests/pql/*.pql` fixture, must lower to an
+//! AST node-for-node equal to the hardcoded definition in
+//! `pimdb::query::tpch`. Any drift — a predicate shape, a dictionary id,
+//! a date encoding, an aggregate label — fails here with the query name.
+
+use pimdb::query::ast::QueryKind;
+use pimdb::query::lang::parse_program;
+use pimdb::query::tpch;
+
+const FIXTURES: &[(&str, &str)] = &[
+    ("Q1", include_str!("pql/q1.pql")),
+    ("Q2", include_str!("pql/q2.pql")),
+    ("Q3", include_str!("pql/q3.pql")),
+    ("Q4", include_str!("pql/q4.pql")),
+    ("Q5", include_str!("pql/q5.pql")),
+    ("Q6", include_str!("pql/q6.pql")),
+    ("Q7", include_str!("pql/q7.pql")),
+    ("Q8", include_str!("pql/q8.pql")),
+    ("Q10", include_str!("pql/q10.pql")),
+    ("Q11", include_str!("pql/q11.pql")),
+    ("Q12", include_str!("pql/q12.pql")),
+    ("Q14", include_str!("pql/q14.pql")),
+    ("Q15", include_str!("pql/q15.pql")),
+    ("Q16", include_str!("pql/q16.pql")),
+    ("Q17", include_str!("pql/q17.pql")),
+    ("Q19", include_str!("pql/q19.pql")),
+    ("Q20", include_str!("pql/q20.pql")),
+    ("Q21", include_str!("pql/q21.pql")),
+    ("Q22_sub", include_str!("pql/q22_sub.pql")),
+];
+
+#[test]
+fn fixtures_cover_every_evaluated_query() {
+    let mut want: Vec<&str> = tpch::all_queries().iter().map(|q| q.name).collect();
+    let mut have: Vec<&str> = FIXTURES.iter().map(|&(n, _)| n).collect();
+    want.sort_unstable();
+    have.sort_unstable();
+    assert_eq!(want, have, "fixture set drifted from tpch::all_queries()");
+}
+
+#[test]
+fn pql_fixtures_lower_to_the_hardcoded_asts() {
+    for &(name, src) in FIXTURES {
+        let parsed = parse_program(src)
+            .unwrap_or_else(|e| panic!("{name}: {}", e.render(src)));
+        assert_eq!(parsed.len(), 1, "{name}: expected one query block");
+        let want = tpch::query(name).expect("fixture name is a tpch query");
+        assert_eq!(
+            parsed[0], want,
+            "{name}: parsed .pql fixture differs from the hardcoded AST"
+        );
+    }
+}
+
+#[test]
+fn fixture_kinds_match_table2() {
+    for &(name, src) in FIXTURES {
+        let q = &parse_program(src).unwrap()[0];
+        let want = if matches!(name, "Q1" | "Q6" | "Q22_sub") {
+            QueryKind::Full
+        } else {
+            QueryKind::FilterOnly
+        };
+        assert_eq!(q.kind, want, "{name}");
+    }
+}

@@ -1,0 +1,180 @@
+//! Property: pretty-printing a random `RelQuery` as PQL text and
+//! re-parsing it reproduces the AST node-for-node — the text frontend
+//! loses nothing the engine can express (empty IN-sets excepted, which no
+//! text can construct). Runs on the deterministic mini-proptest harness
+//! from `pimdb::util::proptest`.
+
+use pimdb::db::schema::{self, Encoding, RelId, PIM_RELATIONS};
+use pimdb::query::ast::{AggKind, Aggregate, CmpOp, Pred, RelQuery, ValExpr};
+use pimdb::query::lang::{parse_program, print};
+use pimdb::util::proptest::{check, Gen};
+
+const OPS: [CmpOp; 6] = [
+    CmpOp::Eq,
+    CmpOp::Ne,
+    CmpOp::Lt,
+    CmpOp::Le,
+    CmpOp::Gt,
+    CmpOp::Ge,
+];
+
+const KINDS: [AggKind; 5] = [
+    AggKind::Sum,
+    AggKind::Count,
+    AggKind::Min,
+    AggKind::Max,
+    AggKind::Avg,
+];
+
+const LABELS: [&str; 6] = ["v0", "v1", "v2", "v3", "v4", "total"];
+
+fn rand_value(g: &mut Gen, bits: usize) -> u64 {
+    let max = if bits >= 64 { u64::MAX } else { (1u64 << bits) - 1 };
+    g.u64(0, max)
+}
+
+fn rand_attr(g: &mut Gen, rel: RelId) -> &'static schema::Attr {
+    let attrs = schema::attrs(rel);
+    &attrs[g.usize(0, attrs.len() - 1)]
+}
+
+/// Column pairs comparable in the AST (same encoding kind, same width).
+fn cmp_col_pairs(rel: RelId) -> Vec<(&'static str, &'static str)> {
+    let attrs = schema::attrs(rel);
+    let mut pairs = Vec::new();
+    for a in attrs {
+        for b in attrs {
+            if a.name != b.name
+                && a.bits == b.bits
+                && std::mem::discriminant(&a.enc) == std::mem::discriminant(&b.enc)
+            {
+                pairs.push((a.name, b.name));
+            }
+        }
+    }
+    pairs
+}
+
+fn leaf(g: &mut Gen, rel: RelId) -> Pred {
+    let a = rand_attr(g, rel);
+    match g.usize(0, 9) {
+        0 => Pred::True,
+        1 | 2 => {
+            let x = rand_value(g, a.bits);
+            let y = rand_value(g, a.bits);
+            Pred::Between { attr: a.name, lo: x.min(y), hi: x.max(y) }
+        }
+        3 | 4 => {
+            let n = g.usize(1, 4);
+            Pred::InSet {
+                attr: a.name,
+                values: (0..n).map(|_| rand_value(g, a.bits)).collect(),
+            }
+        }
+        5 => {
+            let pairs = cmp_col_pairs(rel);
+            if pairs.is_empty() {
+                Pred::CmpImm {
+                    attr: a.name,
+                    op: *g.pick(&OPS),
+                    value: rand_value(g, a.bits),
+                }
+            } else {
+                let &(x, y) = g.pick(&pairs);
+                Pred::CmpCols { a: x, op: *g.pick(&OPS), b: y }
+            }
+        }
+        _ => Pred::CmpImm {
+            attr: a.name,
+            op: *g.pick(&OPS),
+            value: rand_value(g, a.bits),
+        },
+    }
+}
+
+fn rand_pred(g: &mut Gen, rel: RelId, depth: usize) -> Pred {
+    if depth == 0 || g.usize(0, 2) == 0 {
+        return leaf(g, rel);
+    }
+    match g.usize(0, 2) {
+        0 => Pred::And(
+            (0..g.usize(2, 3)).map(|_| rand_pred(g, rel, depth - 1)).collect(),
+        ),
+        1 => Pred::Or(
+            (0..g.usize(2, 3)).map(|_| rand_pred(g, rel, depth - 1)).collect(),
+        ),
+        _ => Pred::Not(Box::new(rand_pred(g, rel, depth - 1))),
+    }
+}
+
+fn rand_val_expr(g: &mut Gen, rel: RelId) -> ValExpr {
+    let a = rand_attr(g, rel).name;
+    match g.usize(0, 5) {
+        0 => ValExpr::One,
+        1 => ValExpr::MulAttrs(a, rand_attr(g, rel).name),
+        2 => ValExpr::MulComplement {
+            attr: a,
+            scale: g.u64(1, 200),
+            other: rand_attr(g, rel).name,
+        },
+        3 => ValExpr::MulSum {
+            attr: a,
+            scale: g.u64(1, 200),
+            other: rand_attr(g, rel).name,
+        },
+        4 => ValExpr::MulComplementSum {
+            attr: a,
+            scale1: g.u64(1, 200),
+            other1: rand_attr(g, rel).name,
+            scale2: g.u64(1, 200),
+            other2: rand_attr(g, rel).name,
+        },
+        _ => ValExpr::Attr(a),
+    }
+}
+
+fn rand_agg(g: &mut Gen, rel: RelId) -> Aggregate {
+    let kind = *g.pick(&KINDS);
+    // the printer renders Count as `count()`, whose expr is always One
+    let expr = if kind == AggKind::Count {
+        ValExpr::One
+    } else {
+        rand_val_expr(g, rel)
+    };
+    Aggregate { kind, expr, label: *g.pick(&LABELS) }
+}
+
+fn rand_group_by(g: &mut Gen, rel: RelId) -> Vec<&'static str> {
+    let cands: Vec<&'static str> = schema::attrs(rel)
+        .iter()
+        .filter(|a| matches!(a.enc, Encoding::Dict) || a.bits <= 6)
+        .map(|a| a.name)
+        .collect();
+    if cands.is_empty() {
+        return Vec::new();
+    }
+    (0..g.usize(0, 2)).map(|_| *g.pick(&cands)).collect()
+}
+
+#[test]
+fn printed_rel_queries_reparse_identically() {
+    check("pql-roundtrip", 256, |g| {
+        let rel = *g.pick(&PIM_RELATIONS);
+        let filter = rand_pred(g, rel, 2);
+        let aggregates: Vec<Aggregate> =
+            (0..g.usize(0, 3)).map(|_| rand_agg(g, rel)).collect();
+        let group_by = if aggregates.is_empty() {
+            Vec::new()
+        } else {
+            rand_group_by(g, rel)
+        };
+        let rq = RelQuery { rel, filter, group_by, aggregates };
+
+        let text = print::rel_query_to_pql(&rq);
+        let queries = parse_program(&text)
+            .unwrap_or_else(|e| panic!("re-parse failed:\n{}\nfor: {text}", e.render(&text)));
+        assert_eq!(queries.len(), 1, "{text}");
+        assert_eq!(queries[0].rels.len(), 1, "{text}");
+        assert_eq!(queries[0].rels[0], rq, "round-trip drift for: {text}");
+    });
+}
