@@ -1,0 +1,1163 @@
+"""Python mirror of the Rust PIM-program optimizer (rust/src/query/opt/).
+
+The Rust crate's authoring environment has no toolchain, so the optimizer
+passes are validated here against a line-by-line port of the compiler
+(rust/src/query/compiler.rs), the functional engine
+(rust/src/exec/engine.rs::exec_instr) and the Table 4 cost model, fuzzed
+over random queries and random data (python/tests/test_optmirror.py).
+Keep this file in sync with the Rust sources when the passes change; the
+port favours structural similarity over Pythonic style on purpose.
+
+Bit-planes are arbitrary-precision ints (bit r = crossbar row r), which
+matches the Rust u32-word planes exactly for any row count.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Callable, Optional
+
+# --- ISA (rust/src/pim/isa.rs) ----------------------------------------------
+
+EQ_IMM, NE_IMM, LT_IMM, GT_IMM, ADD_IMM = "eq_imm", "ne_imm", "lt_imm", "gt_imm", "add_imm"
+EQ, LT, SET, RESET, NOT, AND, OR, ADD, MUL = (
+    "eq", "lt", "set", "reset", "not", "and", "or", "add", "mul")
+RSUM, RMIN, RMAX, COLT = "reduce_sum", "reduce_min", "reduce_max", "column_transform"
+
+IMM_OPS = {EQ_IMM, NE_IMM, LT_IMM, GT_IMM, ADD_IMM}
+REDUCES = {RSUM, RMIN, RMAX}
+SIDE_EFFECT = REDUCES | {COLT}
+
+
+@dataclass(frozen=True)
+class ColRange:
+    start: int
+    len: int
+
+    @property
+    def end(self) -> int:
+        return self.start + self.len
+
+
+@dataclass(frozen=True)
+class Instr:
+    op: str
+    src_a: ColRange
+    src_b: Optional[ColRange]
+    dst: ColRange
+    imm: int = 0
+
+
+@dataclass(frozen=True)
+class Step:
+    instr: Instr
+    category: str = "filter"
+
+
+def unary(op, src, dst):
+    return Instr(op, src, None, dst)
+
+
+def binary(op, a, b, dst):
+    return Instr(op, a, b, dst)
+
+
+def with_imm(op, src, dst, imm):
+    return Instr(op, src, None, dst, imm)
+
+
+# --- functional engine (rust/src/exec/engine.rs) -----------------------------
+
+class Xbar:
+    """planes[c]: int bitmask over rows."""
+
+    def __init__(self, cols: int, rows: int):
+        self.rows = rows
+        self.full = (1 << rows) - 1
+        self.planes = [0] * cols
+
+    def value_at(self, row: int, r: ColRange) -> int:
+        v = 0
+        for i in range(r.len):
+            if (self.planes[r.start + i] >> row) & 1:
+                v |= 1 << i
+        return v
+
+    def popcount_col(self, col: int) -> int:
+        return bin(self.planes[col]).count("1")
+
+
+def _plane_or_zero(st: Xbar, r: Optional[ColRange], i: int) -> int:
+    if r is not None and i < r.len:
+        return st.planes[r.start + i]
+    return 0
+
+
+def _cmp_imm_planes(st: Xbar, a: ColRange, imm: int):
+    eq, lt = st.full, 0
+    for i in reversed(range(a.len)):
+        p = st.planes[a.start + i]
+        if (imm >> i) & 1:
+            lt |= eq & ~p & st.full
+            eq &= p
+        else:
+            eq &= ~p & st.full
+    return eq, lt
+
+
+def _cmp_cols_planes(st: Xbar, a: ColRange, b: ColRange):
+    eq, lt = st.full, 0
+    for i in reversed(range(a.len)):
+        pa = st.planes[a.start + i]
+        pb = _plane_or_zero(st, b, i)
+        lt |= eq & ~pa & pb & st.full
+        eq &= ~(pa ^ pb) & st.full
+    return eq, lt
+
+
+def exec_instr(st: Xbar, instr: Instr, reduce_out: list):
+    a, d, full = instr.src_a, instr.dst, st.full
+    op = instr.op
+    if op in (EQ_IMM, NE_IMM, LT_IMM, GT_IMM):
+        eq, lt = _cmp_imm_planes(st, a, instr.imm)
+        out = {EQ_IMM: eq, NE_IMM: ~eq & full, LT_IMM: lt,
+               GT_IMM: ~(lt | eq) & full}[op]
+        st.planes[d.start] = out
+    elif op in (EQ, LT):
+        eq, lt = _cmp_cols_planes(st, a, instr.src_b)
+        st.planes[d.start] = eq if op == EQ else lt
+    elif op == ADD_IMM:
+        carry = 0
+        for i in range(a.len):
+            pa = st.planes[a.start + i]
+            pb = full if (instr.imm >> i) & 1 else 0
+            s = pa ^ pb ^ carry
+            carry = (pa & pb) | (carry & (pa ^ pb))
+            st.planes[d.start + i] = s
+    elif op == ADD:
+        b, carry = instr.src_b, 0
+        for i in range(d.len):
+            pa = _plane_or_zero(st, a, i)
+            pb = _plane_or_zero(st, b, i)
+            s = pa ^ pb ^ carry
+            carry = (pa & pb) | (carry & (pa ^ pb))
+            st.planes[d.start + i] = s
+    elif op == MUL:
+        b, n = instr.src_b, d.len
+        acc = [0] * n
+        for i in range(b.len):
+            m = st.planes[b.start + i]
+            carry = 0
+            for j in range(min(a.len, n - i)):
+                ad = st.planes[a.start + j] & m
+                s = acc[i + j] ^ ad ^ carry
+                carry = (acc[i + j] & ad) | (carry & (acc[i + j] ^ ad))
+                acc[i + j] = s
+            k = i + a.len
+            while k < n and carry:
+                s = acc[k] ^ carry
+                carry = acc[k] & carry
+                acc[k] = s
+                k += 1
+        for j in range(n):
+            st.planes[d.start + j] = acc[j]
+    elif op == SET:
+        for i in range(d.len):
+            st.planes[d.start + i] = full
+    elif op == RESET:
+        for i in range(d.len):
+            st.planes[d.start + i] = 0
+    elif op == NOT:
+        for i in range(a.len):
+            st.planes[d.start + i] = ~st.planes[a.start + i] & full
+    elif op in (AND, OR):
+        b = instr.src_b
+        broadcast = b.len == 1 and a.len > 1
+        for i in range(a.len):
+            pb = st.planes[b.start] if broadcast else _plane_or_zero(st, b, i)
+            pa = st.planes[a.start + i]
+            st.planes[d.start + i] = (pa & pb) if op == AND else (pa | pb)
+    elif op == RSUM:
+        total = 0
+        for i in range(a.len):
+            total += bin(st.planes[a.start + i]).count("1") << i
+        reduce_out.append(total)
+    elif op in (RMIN, RMAX):
+        is_min = op == RMIN
+        cand, val = full, 0
+        for j in reversed(range(a.len)):
+            p = st.planes[a.start + j]
+            narrowed = (cand & ~p & full) if is_min else (cand & p)
+            if narrowed:
+                cand = narrowed
+                if not is_min:
+                    val |= 1 << j
+            elif is_min:
+                val |= 1 << j
+        reduce_out.append(val)
+    elif op == COLT:
+        pass
+    else:  # pragma: no cover
+        raise AssertionError(op)
+
+
+def exec_steps(st: Xbar, steps: list[Step], mask_col: int):
+    out: list = []
+    for s in steps:
+        exec_instr(st, s.instr, out)
+    return out, st.popcount_col(mask_col)
+
+
+# --- cost model (rust/src/pim/controller.rs, totals only) --------------------
+
+def _popcounts(imm: int, n: int):
+    masked = imm if n >= 64 else imm & ((1 << n) - 1)
+    ones = bin(masked).count("1")
+    return n - ones, ones
+
+
+def _levels(rows: int) -> int:
+    return rows.bit_length() - 1
+
+
+def _reduce_row_cycles(rows: int, width_at) -> int:
+    total = 0
+    for k in range(_levels(rows)):
+        total += 2 * (rows >> (k + 1)) * width_at(k)
+    return total
+
+
+def _scale_reduce_total(total_at_1024: int, rows: int) -> int:
+    return (total_at_1024 * _levels(rows)) // 10
+
+
+def cost_total(i: Instr, rows: int) -> int:
+    n = i.src_a.len
+    m = i.src_b.len if i.src_b else 0
+    op = i.op
+    if op == EQ_IMM:
+        i0, i1 = _popcounts(i.imm, n)
+        return i0 + 3 * i1 + 1
+    if op == NE_IMM:
+        i0, i1 = _popcounts(i.imm, n)
+        return i0 + 3 * i1 + 3
+    if op == LT_IMM:
+        i0, i1 = _popcounts(i.imm, n)
+        return 11 * i0 + 3 * i1 + 4
+    if op == GT_IMM:
+        i0, i1 = _popcounts(i.imm, n)
+        return 11 * i0 + 3 * i1 + 2
+    if op == ADD_IMM:
+        return 18 * n + 3
+    if op == EQ:
+        return 11 * n + 3
+    if op == LT:
+        return 16 * n + 2
+    if op in (SET, RESET):
+        return n
+    if op == NOT:
+        return 2 * n
+    if op == AND:
+        return 6 * n
+    if op == OR:
+        return 4 * n
+    if op == ADD:
+        return 18 * n + 1
+    if op == MUL:
+        return max(0, 24 * n * m + 2 * m - (19 * n + 1))
+    if op == RSUM:
+        return _scale_reduce_total(2254 * n + 3006, rows)
+    if op in (RMIN, RMAX):
+        return _scale_reduce_total(2306 * n + 200, rows)
+    if op == COLT:
+        return 2 + 2 * rows
+    raise AssertionError(op)  # pragma: no cover
+
+
+def program_cycles(steps: list[Step], rows: int) -> int:
+    return sum(cost_total(s.instr, rows) for s in steps)
+
+
+# --- compiler (rust/src/query/compiler.rs) -----------------------------------
+
+@dataclass
+class Attr:
+    name: str
+    bits: int
+    start: int  # column slot
+    domain: int = 0  # dict domain size for group-by attrs (0 = not dict)
+
+
+@dataclass
+class Layout:
+    """A fake relation layout: attrs, valid col, compute base."""
+    attrs: dict[str, Attr]
+    valid_col: int
+    compute_base: int
+
+
+@dataclass(frozen=True)
+class AllocSpan:
+    start: int
+    width: int
+    born_step: int
+
+
+class ColAlloc:
+    def __init__(self, base, limit):
+        self.base, self.limit = base, limit
+        self.persistent_top = self.scratch_top = base
+        self.peak = 0
+        self.spans: list[AllocSpan] = []
+
+    def persistent(self, n, at_step):
+        assert self.persistent_top == self.scratch_top
+        at = self.persistent_top
+        if at + n > self.limit:
+            raise MemoryError("compute area exhausted")
+        self.persistent_top += n
+        self.scratch_top = self.persistent_top
+        self._note(at, n, at_step)
+        return at
+
+    def scratch(self, n, at_step):
+        at = self.scratch_top
+        if at + n > self.limit:
+            raise MemoryError("compute area exhausted")
+        self.scratch_top += n
+        self._note(at, n, at_step)
+        return at
+
+    def release_to(self, mark):
+        self.scratch_top = mark
+
+    def mark(self):
+        return self.scratch_top
+
+    def _note(self, at, n, at_step):
+        self.spans.append(AllocSpan(at, n, at_step))
+        self.peak = max(self.peak, self.scratch_top - self.base)
+
+
+@dataclass
+class Compiled:
+    steps: list[Step]
+    mask_col: int
+    peak_inter_cells: int
+    spans: list[AllocSpan]
+    compute_base: int
+    valid_col: int
+    n_reduces: int
+
+
+class Compiler:
+    """Port of the Rust Compiler: predicates are nested tuples:
+    ("cmp", attr, op, value) with op in {"==","!=","<","<=",">",">="},
+    ("in", attr, [values]), ("between", attr, lo, hi),
+    ("cmpcols", a, op, b), ("and", [..]), ("or", [..]), ("not", p),
+    ("true",).  Aggregates: ("sum"/"min"/"max"/"count"/"avg", valexpr)
+    with valexpr ("attr", name) | ("one",) | ("mul", a, b) |
+    ("mulcomp", attr, scale, other) | ("mulsum", attr, scale, other) |
+    ("mulcompsum", attr, s1, o1, s2, o2).
+    """
+
+    def __init__(self, layout: Layout, xbar_cols: int):
+        self.layout = layout
+        self.alloc = ColAlloc(layout.compute_base, xbar_cols)
+        self.steps: list[Step] = []
+        self.n_reduces = 0
+
+    # -- helpers --
+    def emit(self, instr, cat="filter"):
+        self.steps.append(Step(instr, cat))
+
+    def attr_range(self, name):
+        a = self.layout.attrs[name]
+        return ColRange(a.start, a.bits)
+
+    def compile(self, filter_pred, group_by, aggregates) -> Compiled:
+        mask = self.alloc.persistent(1, 0)
+        mark = self.alloc.mark()
+        self.lower_pred(filter_pred, mask)
+        self.emit(binary(AND, ColRange(mask, 1), ColRange(self.layout.valid_col, 1),
+                         ColRange(mask, 1)))
+        self.alloc.release_to(mark)
+
+        if not aggregates:
+            self.emit(unary(COLT, ColRange(mask, 1), ColRange(mask, 1)), "coltrans")
+            return Compiled(self.steps, mask, self.alloc.peak, self.alloc.spans,
+                            self.layout.compute_base, self.layout.valid_col, 0)
+
+        groups = self.expand_groups(group_by)
+        for key in groups:
+            if not key:
+                gmask = mask
+            else:
+                gm = self.alloc.scratch(1, len(self.steps))
+                self.group_mask(mask, key, gm)
+                gmask = gm
+            group_mark = self.alloc.mark()
+            needs_count = any(a[0] in ("count", "avg") for a in aggregates)
+            if needs_count:
+                self.emit_reduce(RSUM, ColRange(gmask, 1))
+            for kind, expr in aggregates:
+                m2 = self.alloc.mark()
+                if kind == "count":
+                    pass
+                elif kind in ("sum", "avg"):
+                    cols = self.lower_masked_value(expr, gmask)
+                    self.emit_reduce(RSUM, cols)
+                else:  # min / max
+                    cols = self.lower_minmax(expr, gmask, kind)
+                    self.emit_reduce(RMIN if kind == "min" else RMAX, cols)
+                self.alloc.release_to(m2)
+            self.alloc.release_to(group_mark)
+        return Compiled(self.steps, mask, self.alloc.peak, self.alloc.spans,
+                        self.layout.compute_base, self.layout.valid_col,
+                        self.n_reduces)
+
+    def expand_groups(self, group_by):
+        if not group_by:
+            return [[]]
+        combos = [[]]
+        for attr in group_by:
+            domain = range(self.layout.attrs[attr].domain)
+            combos = [c + [(attr, v)] for c in combos for v in domain]
+        return combos
+
+    def lower_pred(self, p, dst, cat="filter"):
+        d = ColRange(dst, 1)
+        tag = p[0]
+        if tag == "true":
+            self.emit(unary(SET, d, d), cat)
+        elif tag == "cmp":
+            _, attr, op, value = p
+            self.lower_cmp_imm(self.attr_range(attr), op, value, dst, cat)
+        elif tag == "in":
+            _, attr, values = p
+            a = self.attr_range(attr)
+            self.emit(unary(RESET, d, d), cat)
+            mark = self.alloc.mark()
+            t = self.alloc.scratch(1, len(self.steps))
+            for v in values:
+                self.lower_cmp_imm(a, "==", v, t, cat)
+                self.emit(binary(OR, d, ColRange(t, 1), d), cat)
+            self.alloc.release_to(mark)
+        elif tag == "between":
+            _, attr, lo, hi = p
+            a = self.attr_range(attr)
+            mark = self.alloc.mark()
+            t = self.alloc.scratch(1, len(self.steps))
+            self.lower_cmp_imm(a, ">=", lo, dst, cat)
+            self.lower_cmp_imm(a, "<=", hi, t, cat)
+            self.emit(binary(AND, d, ColRange(t, 1), d), cat)
+            self.alloc.release_to(mark)
+        elif tag == "cmpcols":
+            _, an, op, bn = p
+            ra, rb = self.attr_range(an), self.attr_range(bn)
+            assert ra.len == rb.len
+            if op == "==":
+                self.emit(binary(EQ, ra, rb, d), cat)
+            elif op == "!=":
+                self.emit(binary(EQ, ra, rb, d), cat)
+                self.emit(unary(NOT, d, d), cat)
+            elif op == "<":
+                self.emit(binary(LT, ra, rb, d), cat)
+            elif op == ">":
+                self.emit(binary(LT, rb, ra, d), cat)
+            elif op == "<=":
+                self.emit(binary(LT, rb, ra, d), cat)
+                self.emit(unary(NOT, d, d), cat)
+            else:  # >=
+                self.emit(binary(LT, ra, rb, d), cat)
+                self.emit(unary(NOT, d, d), cat)
+        elif tag in ("and", "or"):
+            combine = AND if tag == "and" else OR
+            first = True
+            mark = self.alloc.mark()
+            t = self.alloc.scratch(1, len(self.steps))
+            for sub in p[1]:
+                if first:
+                    self.lower_pred(sub, dst, cat)
+                    first = False
+                else:
+                    self.lower_pred(sub, t, cat)
+                    self.emit(binary(combine, d, ColRange(t, 1), d), cat)
+            if first:
+                self.emit(unary(SET if combine == AND else RESET, d, d), cat)
+            self.alloc.release_to(mark)
+        elif tag == "not":
+            self.lower_pred(p[1], dst, cat)
+            self.emit(unary(NOT, d, d), cat)
+        else:  # pragma: no cover
+            raise AssertionError(tag)
+
+    def lower_cmp_imm(self, a, op, value, dst, cat):
+        d = ColRange(dst, 1)
+        maxv = (1 << a.len) - 1 if a.len < 64 else (1 << 64) - 1
+        mk = lambda o, v: with_imm(o, a, d, v)
+        if op == "==":
+            self.emit(mk(EQ_IMM, value), cat)
+        elif op == "!=":
+            self.emit(mk(NE_IMM, value), cat)
+        elif op == "<":
+            if value == 0:
+                self.emit(unary(RESET, d, d), cat)
+            else:
+                self.emit(mk(LT_IMM, value), cat)
+        elif op == ">":
+            if value >= maxv:
+                self.emit(unary(RESET, d, d), cat)
+            else:
+                self.emit(mk(GT_IMM, value), cat)
+        elif op == "<=":
+            if value >= maxv:
+                self.emit(unary(SET, d, d), cat)
+            else:
+                self.emit(mk(LT_IMM, value + 1), cat)
+        else:  # >=
+            if value == 0:
+                self.emit(unary(SET, d, d), cat)
+            else:
+                self.emit(mk(GT_IMM, value - 1), cat)
+
+    def group_mask(self, base, key, dst):
+        d = ColRange(dst, 1)
+        mark = self.alloc.mark()
+        t = self.alloc.scratch(1, len(self.steps))
+        first = True
+        for attr, v in key:
+            a = self.attr_range(attr)
+            target = dst if first else t
+            self.lower_cmp_imm(a, "==", v, target, "filter")
+            if not first:
+                self.emit(binary(AND, d, ColRange(t, 1), d))
+            first = False
+        self.emit(binary(AND, d, ColRange(base, 1), d))
+        self.alloc.release_to(mark)
+
+    def widen_copy(self, src, width):
+        at = self.alloc.scratch(width, len(self.steps))
+        dst = ColRange(at, width)
+        self.emit(unary(RESET, dst, dst), "arith")
+        zero = self.alloc.scratch(1, len(self.steps))
+        z = ColRange(zero, 1)
+        self.emit(unary(RESET, z, z), "arith")
+        self.emit(binary(OR, src, z, ColRange(at, src.len)), "arith")
+        return dst
+
+    def complement_field(self, other, scale):
+        o = self.attr_range(other)
+        width = max(scale.bit_length(), o.len)
+        f = self.widen_copy(o, width)
+        self.emit(unary(NOT, f, f), "arith")
+        modw = 1 << width
+        imm = (scale + modw - (modw - 1)) % modw
+        self.emit(with_imm(ADD_IMM, f, f, imm), "arith")
+        return f
+
+    def sum_field(self, other, scale):
+        o = self.attr_range(other)
+        width = max(scale.bit_length(), o.len) + 1
+        f = self.widen_copy(o, width)
+        self.emit(with_imm(ADD_IMM, f, f, scale), "arith")
+        return f
+
+    def masked_attr(self, attr, mask):
+        a = self.attr_range(attr)
+        at = self.alloc.scratch(a.len, len(self.steps))
+        dst = ColRange(at, a.len)
+        self.emit(binary(AND, a, ColRange(mask, 1), dst), "arith")
+        return dst
+
+    def lower_masked_value(self, e, mask):
+        tag = e[0]
+        if tag == "attr":
+            return self.masked_attr(e[1], mask)
+        if tag == "one":
+            return ColRange(mask, 1)
+        if tag == "mul":
+            ma = self.masked_attr(e[1], mask)
+            rb = self.attr_range(e[2])
+            w = ma.len + rb.len
+            at = self.alloc.scratch(w, len(self.steps))
+            dst = ColRange(at, w)
+            self.emit(binary(MUL, ma, rb, dst), "arith")
+            return dst
+        if tag in ("mulcomp", "mulsum"):
+            _, attr, scale, other = e
+            f = (self.complement_field if tag == "mulcomp" else self.sum_field)(other, scale)
+            ma = self.masked_attr(attr, mask)
+            w = ma.len + f.len
+            at = self.alloc.scratch(w, len(self.steps))
+            dst = ColRange(at, w)
+            self.emit(binary(MUL, ma, f, dst), "arith")
+            return dst
+        if tag == "mulcompsum":
+            _, attr, s1, o1, s2, o2 = e
+            f1 = self.complement_field(o1, s1)
+            f2 = self.sum_field(o2, s2)
+            ma = self.masked_attr(attr, mask)
+            w1 = ma.len + f1.len
+            t = ColRange(self.alloc.scratch(w1, len(self.steps)), w1)
+            self.emit(binary(MUL, ma, f1, t), "arith")
+            w2 = w1 + f2.len
+            dst = ColRange(self.alloc.scratch(w2, len(self.steps)), w2)
+            self.emit(binary(MUL, t, f2, dst), "arith")
+            return dst
+        raise AssertionError(tag)  # pragma: no cover
+
+    def lower_minmax(self, e, mask, kind):
+        cols = self.lower_masked_value(e, mask)
+        if kind == "max":
+            return cols
+        if cols.start == mask:
+            # ("one",) returns the mask column itself; mask | ~mask is
+            # all-ones, materialized in fresh scratch (Rust: same fix)
+            t = self.alloc.scratch(1, len(self.steps))
+            tr = ColRange(t, 1)
+            self.emit(unary(SET, tr, tr), "arith")
+            return tr
+        nm = self.alloc.scratch(1, len(self.steps))
+        n = ColRange(nm, 1)
+        self.emit(unary(NOT, ColRange(mask, 1), n), "arith")
+        self.emit(binary(OR, cols, n, cols), "arith")
+        return cols
+
+    def emit_reduce(self, op, cols):
+        self.emit(unary(op, cols, cols), "agg")
+        self.n_reduces += 1
+
+
+# --- passes (rust/src/query/opt/passes.rs) -----------------------------------
+
+def read_lens(i: Instr):
+    al = i.src_a.len
+    bl = i.src_b.len if i.src_b else 0
+    dl = i.dst.len
+    op = i.op
+    if op in (EQ_IMM, NE_IMM, LT_IMM, GT_IMM, ADD_IMM, NOT):
+        return al, 0
+    if op in (EQ, LT):
+        return al, bl
+    if op == ADD:
+        return min(al, dl), min(bl, dl)
+    if op == MUL:
+        return min(al, dl), bl
+    if op in (SET, RESET):
+        return 0, 0
+    if op in (AND, OR):
+        if bl == 1 and al > 1:
+            return al, 1
+        return al, min(bl, al)
+    return al, 0  # reduces / column-transform
+
+
+def write_span(i: Instr) -> Optional[ColRange]:
+    al, d, op = i.src_a.len, i.dst, i.op
+    if op in (EQ_IMM, NE_IMM, LT_IMM, GT_IMM, EQ, LT):
+        return ColRange(d.start, 1)
+    if op in (ADD_IMM, NOT, AND, OR):
+        return ColRange(d.start, al)
+    if op in (ADD, MUL, SET, RESET):
+        return d
+    return None
+
+
+def accesses(i: Instr):
+    la, lb = read_lens(i)
+    reads = []
+    if la > 0:
+        reads.append(ColRange(i.src_a.start, la))
+    if lb > 0:
+        reads.append(ColRange(i.src_b.start, lb))
+    return reads, write_span(i)
+
+
+def _overlaps(r: ColRange, start: int, width: int) -> bool:
+    return r.start < start + width and start < r.end
+
+
+def max_col(steps):
+    m = 0
+    for s in steps:
+        reads, write = accesses(s.instr)
+        for r in reads + ([write] if write else []):
+            m = max(m, r.end)
+    return m
+
+
+def peephole_in_set(steps, mask_col):
+    out, i = [], 0
+    while i < len(steps):
+        if i + 2 < len(steps) and _in_set_prefix_at(steps, i, mask_col):
+            eq = steps[i + 1]
+            out.append(Step(replace(eq.instr, dst=steps[i].instr.dst), eq.category))
+            i += 3
+        else:
+            out.append(steps[i])
+            i += 1
+    return out
+
+
+def _in_set_prefix_at(steps, i, mask_col):
+    r, e, o = steps[i].instr, steps[i + 1].instr, steps[i + 2].instr
+    shape = (r.op == RESET and r.dst.len == 1
+             and e.op == EQ_IMM and e.dst.len == 1 and e.dst.start != r.dst.start
+             and e.dst.start != mask_col
+             and not _overlaps(e.src_a, r.dst.start, 1)
+             and o.op == OR and o.src_a == r.dst and o.src_b == e.dst
+             and o.dst == r.dst)
+    if not shape:
+        return False
+    t = e.dst.start
+    for s in steps[i + 3:]:
+        reads, write = accesses(s.instr)
+        if any(_overlaps(rr, t, 1) for rr in reads):
+            return False
+        if write and _overlaps(write, t, 1):
+            return True
+    return True
+
+
+def _ones(length):
+    return (1 << length) - 1
+
+
+def _value_of(vals, r: ColRange):
+    v = 0
+    for i in range(r.len):
+        if vals[r.start + i]:
+            v |= 1 << i
+    return v
+
+
+def _store(vals, start, length, v):
+    for i in range(length):
+        vals[start + i] = bool((v >> i) & 1)
+
+
+def zero_row_exec(vals, i: Instr):
+    a, d = i.src_a, i.dst
+    al, dl, op = a.len, d.len, i.op
+    if op in (EQ_IMM, NE_IMM, LT_IMM, GT_IMM):
+        v = _value_of(vals, a)
+        imm = i.imm & _ones(al)
+        out = {EQ_IMM: v == imm, NE_IMM: v != imm,
+               LT_IMM: v < imm, GT_IMM: v > imm}[op]
+        vals[d.start] = out
+    elif op in (EQ, LT):
+        b = i.src_b
+        va = _value_of(vals, a)
+        vb = _value_of(vals, ColRange(b.start, min(b.len, al)))
+        vals[d.start] = (va == vb) if op == EQ else (va < vb)
+    elif op == ADD_IMM:
+        v = _value_of(vals, a)
+        _store(vals, d.start, al, (v + (i.imm & _ones(al))) & _ones(al))
+    elif op == ADD:
+        b = i.src_b
+        va = _value_of(vals, ColRange(a.start, min(al, dl)))
+        vb = _value_of(vals, ColRange(b.start, min(b.len, dl)))
+        _store(vals, d.start, dl, (va + vb) & _ones(dl))
+    elif op == MUL:
+        b = i.src_b
+        va = _value_of(vals, ColRange(a.start, min(al, dl)))
+        vb = _value_of(vals, b)
+        _store(vals, d.start, dl, (va * vb) & _ones(dl))
+    elif op == SET:
+        _store(vals, d.start, dl, _ones(dl))
+    elif op == RESET:
+        _store(vals, d.start, dl, 0)
+    elif op == NOT:
+        _store(vals, d.start, al, ~_value_of(vals, a) & _ones(al))
+    elif op in (AND, OR):
+        b = i.src_b
+        va = _value_of(vals, a)
+        if b.len == 1 and al > 1:
+            vb = _ones(al) if vals[b.start] else 0
+        else:
+            vb = _value_of(vals, ColRange(b.start, min(b.len, al)))
+        _store(vals, d.start, al, (va & vb) if op == AND else (va | vb))
+    # reduces / column-transform: nothing
+
+
+def valid_elide(steps, valid_col):
+    vals = [False] * (max_col(steps) + 1)
+    out = []
+    for step in steps:
+        i = step.instr
+        elidable = (i.op == AND and i.src_b == ColRange(valid_col, 1)
+                    and i.src_a.len == 1 and i.dst == i.src_a
+                    and not vals[i.src_a.start])
+        if elidable:
+            continue
+        zero_row_exec(vals, i)
+        out.append(step)
+    return out
+
+
+def cse(steps, mask_col, compute_base):
+    ncols = max(max_col(steps), mask_col) + 1
+    col_vn = list(range(ncols))
+    redirect: list[Optional[int]] = [None] * ncols
+    next_vn = 1 << 32
+    table: dict = {}
+
+    out = []
+    for idx, step in enumerate(steps):
+        instr = step.instr
+        la, lb = read_lens(instr)
+        for fieldno, l in ((0, la), (1, lb)):
+            if l == 0:
+                continue
+            r = instr.src_a if fieldno == 0 else instr.src_b
+            s = r.start
+            if s < compute_base:
+                continue
+            mapped0 = redirect[s] if redirect[s] is not None else s
+            for k in range(1, l):
+                mk = redirect[s + k] if redirect[s + k] is not None else s + k
+                if mk != mapped0 + k:
+                    raise AssertionError("non-contiguous CSE redirect")
+            if mapped0 != s:
+                nr = ColRange(mapped0, r.len)
+                instr = replace(instr, src_a=nr) if fieldno == 0 else replace(instr, src_b=nr)
+
+        w = write_span(instr)
+        if w is None:
+            # reduces / column-transform: pure observers; keep the cosmetic
+            # dst field mirroring the (possibly redirected) source
+            out.append(Step(replace(instr, dst=instr.src_a), step.category))
+            continue
+        w0, ww = w.start, w.len
+
+        reads, _ = accesses(instr)
+        srcs = tuple(col_vn[r.start + k] for r in reads for k in range(r.len))
+        key = (instr.op, instr.imm if instr.op in IMM_OPS else 0, ww, la, lb, srcs)
+        if key not in table:
+            vns = tuple(range(next_vn, next_vn + ww))
+            next_vn += ww
+            table[key] = [vns, None]
+        vns, home = table[key]
+
+        home_intact = home if (home is not None and
+                               all(col_vn[home + k] == vns[k] for k in range(ww))) else None
+        if home_intact is not None:
+            if home_intact == w0:
+                if all(redirect[w0 + k] is None for k in range(ww)):
+                    continue
+            elif _elision_safe(steps[idx + 1:], w0, ww, home_intact, mask_col):
+                for k in range(ww):
+                    redirect[w0 + k] = home_intact + k
+                    col_vn[w0 + k] = vns[k]
+                continue
+
+        for k in range(ww):
+            redirect[w0 + k] = None
+            col_vn[w0 + k] = vns[k]
+        table[key][1] = w0
+        out.append(Step(instr, step.category))
+
+    mask = redirect[mask_col] if redirect[mask_col] is not None else mask_col
+    return out, mask
+
+
+def _elision_safe(rest, d0, w, h0, mask_col):
+    live = [True] * w
+    n_live = w
+    h_written = False
+    for s in rest:
+        reads, write = accesses(s.instr)
+        if write and _overlaps(write, h0, w):
+            h_written = True
+        for r in reads:
+            if not _overlaps(r, d0, w):
+                continue
+            within = r.start >= d0 and r.end <= d0 + w
+            if not within or h_written:
+                return False
+            if any(not live[k] for k in range(r.start - d0, r.end - d0)):
+                return False
+        if write:
+            for c in range(write.start, write.end):
+                if d0 <= c < d0 + w and live[c - d0]:
+                    live[c - d0] = False
+                    n_live -= 1
+            if n_live == 0:
+                return True
+    if d0 <= mask_col < d0 + w and live[mask_col - d0] and h_written:
+        return False
+    return True
+
+
+def dce(steps, mask_col):
+    ncols = max(max_col(steps), mask_col) + 1
+    live = [False] * ncols
+    live[mask_col] = True
+    keep = [True] * len(steps)
+    for j in reversed(range(len(steps))):
+        reads, write = accesses(steps[j].instr)
+        if steps[j].instr.op in SIDE_EFFECT:
+            for r in reads:
+                for c in range(r.start, r.end):
+                    live[c] = True
+            continue
+        assert write is not None
+        if not any(live[c] for c in range(write.start, write.end)):
+            keep[j] = False
+            continue
+        for c in range(write.start, write.end):
+            live[c] = False
+        for r in reads:
+            for c in range(r.start, r.end):
+                live[c] = True
+    return [s for s, k in zip(steps, keep) if k]
+
+
+# --- virtualize + realloc (rust/src/query/opt/alloc.rs) ----------------------
+
+@dataclass
+class Virt:
+    steps: list[Step]
+    mask_col: int
+    blocks: list[tuple[int, int]]  # (vstart, width)
+
+
+def virtualize(c: Compiled) -> Optional[Virt]:
+    base = c.compute_base
+    if not c.spans:
+        return None
+    phys_cols = max(max(s.start + s.width for s in c.spans),
+                    max_col(c.steps), c.mask_col + 1)
+    history: list[list[tuple[int, int]]] = [[] for _ in range(phys_cols)]
+    blocks = []
+    vtop = base
+    for i, s in enumerate(c.spans):
+        if s.start < base:
+            return None
+        blocks.append((vtop, s.width))
+        vtop += s.width
+        for col in range(s.start, s.start + s.width):
+            if history[col] and history[col][-1][0] == s.born_step:
+                return None
+            history[col].append((s.born_step, i))
+
+    owner: list[Optional[int]] = [None] * phys_cols
+
+    def latest_span(col, step):
+        cand = None
+        for born, j in history[col]:
+            if born <= step:
+                cand = j
+            else:
+                break
+        return cand
+
+    def map_read(r: ColRange) -> Optional[int]:
+        s = r.start
+        if s < base:
+            return s if r.end <= base else None
+        j = owner[s]
+        if j is None:
+            return None
+        span = c.spans[j]
+        for col in range(s, s + r.len):
+            if col >= phys_cols or owner[col] != j:
+                return None
+        if s + r.len > span.start + span.width:
+            return None
+        return blocks[j][0] + (s - span.start)
+
+    steps = []
+    for idx, step in enumerate(c.steps):
+        instr = step.instr
+        la, lb = read_lens(instr)
+        if la > 0:
+            ns = map_read(ColRange(instr.src_a.start, la))
+            if ns is None:
+                return None
+            instr = replace(instr, src_a=ColRange(ns, instr.src_a.len))
+        if lb > 0:
+            b = instr.src_b
+            ns = map_read(ColRange(b.start, lb))
+            if ns is None:
+                return None
+            instr = replace(instr, src_b=ColRange(ns, b.len))
+        w = write_span(instr)
+        if w is not None:
+            w0 = step.instr.dst.start
+            if w0 < base:
+                return None
+            j = latest_span(w0, idx)
+            if j is None:
+                return None
+            span = c.spans[j]
+            if w0 + w.len > span.start + span.width:
+                return None
+            for col in range(w0, w0 + w.len):
+                if latest_span(col, idx) != j:
+                    return None
+                owner[col] = j
+            instr = replace(instr, dst=ColRange(blocks[j][0] + (w0 - span.start),
+                                                step.instr.dst.len))
+            if la == 0:
+                # Set/Reset read nothing: keep the cosmetic src_a field
+                # mirroring the (remapped) destination
+                instr = replace(instr, src_a=instr.dst)
+        else:
+            instr = replace(instr, dst=instr.src_a)
+        steps.append(Step(instr, step.category))
+
+    mo = owner[c.mask_col]
+    if mo is None:
+        return None
+    span = c.spans[mo]
+    return Virt(steps, blocks[mo][0] + (c.mask_col - span.start), blocks)
+
+
+@dataclass
+class PlacedP:
+    steps: list[Step]
+    mask_col: int
+    peak: int
+
+
+def realloc(steps, blocks, mask_col, compute_base, orig_peak) -> Optional[PlacedP]:
+    vtop = blocks[-1][0] + blocks[-1][1] if blocks else compute_base
+    block_of = [-1] * vtop
+    for i, (vs, w) in enumerate(blocks):
+        for col in range(vs, vs + w):
+            block_of[col] = i
+
+    def lookup(r: ColRange) -> Optional[int]:
+        s = r.start
+        if s < compute_base:
+            return -2 if r.end <= compute_base else None  # -2 == data
+        if s >= vtop or r.end - 1 >= vtop:
+            return None
+        i = block_of[s]
+        last = block_of[r.end - 1]
+        return i if (i != -1 and i == last) else None
+
+    nb = len(blocks)
+    first_write = [None] * nb
+    last_access = [0] * nb
+    written = [False] * vtop
+    for idx, step in enumerate(steps):
+        reads, write = accesses(step.instr)
+        for r in reads:
+            i = lookup(r)
+            if i is None:
+                return None
+            if i == -2:
+                continue
+            if any(not written[c] for c in range(r.start, r.end)):
+                return None
+            last_access[i] = idx
+        if write:
+            i = lookup(write)
+            if i is None or i == -2:
+                return None
+            if first_write[i] is None:
+                first_write[i] = idx
+            last_access[i] = idx
+            for c in range(write.start, write.end):
+                written[c] = True
+    mb = lookup(ColRange(mask_col, 1))
+    if mb is None or mb == -2 or first_write[mb] is None:
+        return None
+    last_access[mb] = 1 << 60
+
+    # decreasing-lifetime placement: long-lived blocks sink to the bottom,
+    # short-lived per-group scratch packs above them. Two blocks may share
+    # columns only when their [first_write, last_access] intervals are
+    # strictly disjoint (touching at one step counts as a conflict,
+    # mirroring the engine's per-plane read/write interleave).
+    order = sorted((i for i in range(nb) if first_write[i] is not None),
+                   key=lambda i: (-(last_access[i] - first_write[i]),
+                                  first_write[i], blocks[i][0]))
+    placed: list[tuple[int, int, int, int]] = []  # (at, w, fw, la)
+    peak = 0
+    placement = [None] * nb
+    for i in order:
+        w = blocks[i][1]
+        conflicts = sorted(
+            (at, aw) for (at, aw, f, l) in placed
+            if not (l < first_write[i] or last_access[i] < f))
+        at = compute_base
+        for cs, cw in conflicts:
+            if at + w <= cs:
+                break
+            at = max(at, cs + cw)
+        placement[i] = at
+        placed.append((at, w, first_write[i], last_access[i]))
+        peak = max(peak, at + w - compute_base)
+    if peak > orig_peak:
+        return None
+
+    def remap(r: ColRange) -> Optional[ColRange]:
+        s = r.start
+        if s < compute_base:
+            return r
+        i = block_of[s] if s < vtop else -1
+        if i == -1 or placement[i] is None:
+            return None
+        return ColRange(placement[i] + (s - blocks[i][0]), r.len)
+
+    out = []
+    for step in steps:
+        instr = step.instr
+        na = remap(instr.src_a)
+        if na is None:
+            return None
+        instr = replace(instr, src_a=na)
+        if instr.src_b is not None:
+            nbr = remap(instr.src_b)
+            if nbr is None:
+                return None
+            instr = replace(instr, src_b=nbr)
+        nd = remap(instr.dst)
+        if nd is None:
+            return None
+        instr = replace(instr, dst=nd)
+        out.append(Step(instr, step.category))
+    mask = placement[mb] + (mask_col - blocks[mb][0])
+    return PlacedP(out, mask, peak)
+
+
+# --- pipeline driver (rust/src/query/opt/mod.rs) -----------------------------
+
+def run_o1(c: Compiled) -> Compiled:
+    steps = peephole_in_set(list(c.steps), c.mask_col)
+    steps = valid_elide(steps, c.valid_col)
+    steps = dce(steps, c.mask_col)
+    out = replace_compiled(c, steps, c.mask_col, c.peak_inter_cells)
+    out.spans = []  # born_steps are stale after deletions (Rust: same)
+    return out
+
+
+def run_o2(c: Compiled) -> Compiled:
+    v = virtualize(c)
+    if v is None:
+        return run_o1(c)
+    steps = peephole_in_set(v.steps, v.mask_col)
+    steps, mask = cse(steps, v.mask_col, c.compute_base)
+    steps = valid_elide(steps, c.valid_col)
+    steps = dce(steps, mask)
+    placed = realloc(steps, v.blocks, mask, c.compute_base, c.peak_inter_cells)
+    if placed is None:
+        return run_o1(c)
+    return replace_compiled(c, placed.steps, placed.mask_col, placed.peak)
+
+
+def replace_compiled(c, steps, mask, peak):
+    return Compiled(steps, mask, peak, c.spans, c.compute_base, c.valid_col,
+                    c.n_reduces)
+
+
+def optimize(c: Compiled, level: int) -> Compiled:
+    if level == 0:
+        return c
+    if level == 1:
+        return run_o1(c)
+    return run_o2(c)

@@ -1,0 +1,327 @@
+"""Fuzz-validation of the optimizer pass pipeline via the Python mirror.
+
+Random queries (predicate trees, group-bys, aggregate expressions in the
+exact shapes the Rust compiler lowers) are compiled, executed at -O0,
+checked against a scalar oracle, then re-executed after -O1 and -O2
+optimization: reduce streams and mask popcounts must be identical, total
+cycles must never grow, and the intermediate-cell peak must never grow.
+This is the stand-in for `cargo test` in the toolchain-less authoring
+environment; the Rust test-suite re-proves everything on a real
+toolchain (tests/opt_equivalence.rs and the unit tests beside the
+passes).
+"""
+
+import random
+
+import pytest
+
+import optmirror as m
+
+ROWS = 32
+XBAR_COLS = 220
+
+
+def make_layout():
+    attrs = {}
+    start = 0
+    for name, bits, domain in [
+        ("k", 8, 0), ("v", 10, 0), ("w", 6, 0),
+        ("d1", 2, 3), ("d2", 1, 2),
+        ("x", 7, 0), ("y", 7, 0),
+    ]:
+        attrs[name] = m.Attr(name, bits, start, domain)
+        start += bits
+    valid = start
+    return m.Layout(attrs, valid, valid + 1)
+
+
+LAYOUT = make_layout()
+ATTRS = list(LAYOUT.attrs)
+
+
+def gen_records(rng, n):
+    recs = []
+    for _ in range(n):
+        rec = {}
+        for a in LAYOUT.attrs.values():
+            hi = a.domain - 1 if a.domain else (1 << a.bits) - 1
+            rec[a.name] = rng.randint(0, hi)
+        recs.append(rec)
+    return recs
+
+
+def load(records):
+    st = m.Xbar(XBAR_COLS, ROWS)
+    for row, rec in enumerate(records):
+        for a in LAYOUT.attrs.values():
+            v = rec[a.name]
+            for b in range(a.bits):
+                if (v >> b) & 1:
+                    st.planes[a.start + b] |= 1 << row
+        st.planes[LAYOUT.valid_col] |= 1 << row
+    return st
+
+
+# --- oracle ------------------------------------------------------------------
+
+def eval_pred(p, rec):
+    tag = p[0]
+    if tag == "true":
+        return True
+    if tag == "cmp":
+        _, attr, op, value = p
+        return _cmp(rec[attr], op, value)
+    if tag == "in":
+        return rec[p[1]] in p[2]
+    if tag == "between":
+        return p[2] <= rec[p[1]] <= p[3]
+    if tag == "cmpcols":
+        return _cmp(rec[p[1]], p[2], rec[p[3]])
+    if tag == "and":
+        return all(eval_pred(s, rec) for s in p[1])
+    if tag == "or":
+        return any(eval_pred(s, rec) for s in p[1])
+    if tag == "not":
+        return not eval_pred(p[1], rec)
+    raise AssertionError(tag)
+
+
+def _cmp(a, op, b):
+    return {"==": a == b, "!=": a != b, "<": a < b,
+            "<=": a <= b, ">": a > b, ">=": a >= b}[op]
+
+
+def eval_expr(e, rec):
+    tag = e[0]
+    if tag == "attr":
+        return rec[e[1]]
+    if tag == "one":
+        return 1
+    if tag == "mul":
+        return rec[e[1]] * rec[e[2]]
+    if tag == "mulcomp":
+        return rec[e[1]] * (e[2] - rec[e[3]])
+    if tag == "mulsum":
+        return rec[e[1]] * (e[2] + rec[e[3]])
+    if tag == "mulcompsum":
+        return rec[e[1]] * (e[2] - rec[e[3]]) * (e[4] + rec[e[5]])
+    raise AssertionError(tag)
+
+
+def oracle_reduces(records, pred, group_by, aggregates, compiler):
+    """Mirror the compiled program's reduce stream ordering."""
+    out = []
+    groups = compiler.expand_groups(group_by)
+    selected = [r for r in records if eval_pred(pred, r)]
+    for key in groups:
+        grp = [r for r in selected if all(r[a] == v for a, v in key)]
+        needs_count = any(a[0] in ("count", "avg") for a in aggregates)
+        if needs_count:
+            out.append(("count", len(grp)))
+        for kind, expr in aggregates:
+            if kind == "count":
+                continue
+            vals = [eval_expr(expr, r) for r in grp]
+            if kind in ("sum", "avg"):
+                out.append(("sum", sum(vals)))
+            elif kind == "max":
+                out.append(("max", max(vals) if vals else 0))
+            else:
+                out.append(("min", min(vals) if vals else None))  # sentinel
+    return out, len(selected)
+
+
+# --- random query generation -------------------------------------------------
+
+def rand_value(rng, attr):
+    a = LAYOUT.attrs[attr]
+    hi = a.domain - 1 if a.domain else (1 << a.bits) - 1
+    # occasionally out-of-domain values to hit boundary rewrites
+    if rng.random() < 0.15 and not a.domain:
+        return rng.randint(0, (1 << a.bits) - 1)
+    return rng.randint(0, hi)
+
+
+def rand_pred(rng, depth):
+    if depth == 0 or rng.random() < 0.35:
+        attr = rng.choice(ATTRS)
+        kind = rng.randrange(4)
+        if kind == 0:
+            op = rng.choice(["==", "!=", "<", "<=", ">", ">="])
+            return ("cmp", attr, op, rand_value(rng, attr))
+        if kind == 1:
+            k = rng.randint(1, 5)
+            return ("in", attr, [rand_value(rng, attr) for _ in range(k)])
+        if kind == 2:
+            a, b = rand_value(rng, attr), rand_value(rng, attr)
+            return ("between", attr, min(a, b), max(a, b))
+        return ("cmpcols", "x", rng.choice(["<", "<=", ">", ">=", "==", "!="]), "y")
+    n = rng.randint(1, 3)
+    subs = [rand_pred(rng, depth - 1) for _ in range(n)]
+    c = rng.randrange(3)
+    if c == 0:
+        return ("and", subs)
+    if c == 1:
+        return ("or", subs)
+    return ("not", rand_pred(rng, depth - 1))
+
+
+def rand_aggregates(rng):
+    if rng.random() < 0.3:
+        return []
+    aggs = []
+    for _ in range(rng.randint(1, 4)):
+        kind = rng.choice(["sum", "count", "min", "max", "avg"])
+        ek = rng.randrange(6)
+        if ek == 0:
+            expr = ("attr", rng.choice(["k", "v", "w"]))
+        elif ek == 1:
+            expr = ("one",)
+        elif ek == 2:
+            expr = ("mul", "k", "w")
+        elif ek == 3:
+            expr = ("mulcomp", "v", 100, "w")
+        elif ek == 4:
+            expr = ("mulsum", "v", 100, "w")
+        else:
+            expr = ("mulcompsum", "v", 100, "w", 100, "d1")
+        if kind in ("count",):
+            expr = ("one",)
+        aggs.append((kind, expr))
+    return aggs
+
+
+def run_compiled(c, records):
+    st = load(records)
+    return m.exec_steps(st, c.steps, c.mask_col)
+
+
+def check_query(rng, pred, group_by, aggregates, records):
+    comp = m.Compiler(LAYOUT, XBAR_COLS)
+    c0 = comp.compile(pred, group_by, aggregates)
+    red0, cnt0 = run_compiled(c0, records)
+
+    # oracle
+    oc = m.Compiler(LAYOUT, XBAR_COLS)  # fresh instance for expand_groups
+    want, selected = oracle_reduces(records, pred, group_by, aggregates, oc)
+    assert cnt0 == selected, f"mask count {cnt0} != oracle {selected}"
+    assert len(red0) == len(want), (len(red0), len(want))
+    for got, (kind, w) in zip(red0, want):
+        if kind == "min" and w is None:
+            continue  # empty group: engine returns the all-ones sentinel
+        assert got == w, f"{kind}: engine {got} != oracle {w}"
+
+    # optimized levels must be bit-identical and never cost more
+    rows_model = 1024
+    cyc0 = m.program_cycles(c0.steps, rows_model)
+    for level in (1, 2):
+        c = m.optimize(c0, level)
+        red, cnt = run_compiled(c, records)
+        assert red == red0, f"-O{level} reduce drift"
+        assert cnt == cnt0, f"-O{level} mask drift"
+        cyc = m.program_cycles(c.steps, rows_model)
+        assert cyc <= cyc0, f"-O{level} cycles {cyc} > {cyc0}"
+        assert c.peak_inter_cells <= c0.peak_inter_cells
+        assert len(c.steps) <= len(c0.steps)
+    return cyc0, m.program_cycles(m.optimize(c0, 2).steps, rows_model)
+
+
+def test_fuzz_random_queries():
+    rng = random.Random(0xC0FFEE)
+    improved = total = 0
+    for case in range(400):
+        pred = rand_pred(rng, rng.randint(0, 2))
+        aggs = rand_aggregates(rng)
+        group_by = []
+        if aggs and rng.random() < 0.4:
+            group_by = rng.sample(["d1", "d2"], rng.randint(1, 2))
+        records = gen_records(rng, rng.randint(0, ROWS))
+        try:
+            c0, c2 = check_query(rng, pred, group_by, aggs, records)
+        except MemoryError:
+            continue  # compute-area exhaustion: legitimate compile error
+        total += 1
+        improved += c2 < c0
+    # the pipeline must find waste in a solid majority of random programs
+    assert total > 300
+    assert improved > total // 2, (improved, total)
+
+
+def test_q1_shape_collapses():
+    """Grouped aggregates with repeated arithmetic field chains (the Q1
+    shape): CSE + DCE must collapse the per-group recomputation."""
+    pred = ("cmp", "k", "<=", 200)
+    aggs = [
+        ("sum", ("attr", "v")),
+        ("sum", ("mulcomp", "v", 100, "w")),
+        ("sum", ("mulcompsum", "v", 100, "w", 100, "d2")),
+        ("count", ("one",)),
+    ]
+    rng = random.Random(1)
+    records = gen_records(rng, ROWS)
+    comp = m.Compiler(LAYOUT, XBAR_COLS)
+    c0 = comp.compile(pred, ["d1", "d2"], aggs)
+    c2 = m.optimize(c0, 2)
+    red0, cnt0 = run_compiled(c0, records)
+    red2, cnt2 = run_compiled(c2, records)
+    assert (red0, cnt0) == (red2, cnt2)
+    # 6 groups recompute the complement/sum chains: most must disappear
+    assert len(c2.steps) < len(c0.steps) - 15, (len(c0.steps), len(c2.steps))
+    assert c2.peak_inter_cells < c0.peak_inter_cells
+
+
+def test_in_set_peephole_and_valid_elide():
+    pred = ("and", [("in", "k", [3, 5, 9]), ("cmp", "v", ">", 0)])
+    rng = random.Random(2)
+    records = gen_records(rng, ROWS - 5)
+    comp = m.Compiler(LAYOUT, XBAR_COLS)
+    c0 = comp.compile(pred, [], [])
+    c1 = m.optimize(c0, 1)
+    red0, cnt0 = run_compiled(c0, records)
+    red1, cnt1 = run_compiled(c1, records)
+    assert (red0, cnt0) == (red1, cnt1)
+    # peephole removes Reset + first Or; k == 3 rejects the zero row only
+    # if 0 not in the IN-set -> the valid-AND elides too
+    ops0 = [s.instr.op for s in c0.steps]
+    ops1 = [s.instr.op for s in c1.steps]
+    assert ops0.count(m.RESET) > ops1.count(m.RESET)
+    assert ops0.count(m.AND) > ops1.count(m.AND)
+
+
+def test_valid_and_kept_when_zero_row_passes():
+    # k <= 200 accepts the all-zero record: the valid-AND must survive,
+    # and invalid rows must stay unselected
+    pred = ("cmp", "k", "<=", 200)
+    rng = random.Random(3)
+    records = gen_records(rng, 10)  # 22 invalid rows
+    comp = m.Compiler(LAYOUT, XBAR_COLS)
+    c0 = comp.compile(pred, [], [])
+    for level in (1, 2):
+        c = m.optimize(c0, level)
+        _, cnt = run_compiled(c, records)
+        want = sum(eval_pred(pred, r) for r in records)
+        assert cnt == want
+        ands = [s for s in c.steps
+                if s.instr.op == m.AND
+                and s.instr.src_b == m.ColRange(LAYOUT.valid_col, 1)]
+        assert ands, "valid-AND wrongly elided"
+
+
+def test_empty_and_full_relations():
+    rng = random.Random(4)
+    for n in (0, ROWS):
+        records = gen_records(rng, n)
+        pred = ("or", [("cmp", "k", ">", 10), ("in", "d1", [1])])
+        aggs = [("sum", ("attr", "v")), ("avg", ("attr", "w"))]
+        check_query(rng, pred, [], aggs, records)
+
+
+def test_deep_nesting_and_demorgan_shapes():
+    rng = random.Random(5)
+    records = gen_records(rng, ROWS)
+    pred = ("not", ("or", [
+        ("and", [("cmp", "k", ">=", 1), ("not", ("between", "v", 10, 900))]),
+        ("in", "w", [0, 1, 2, 63]),
+        ("cmpcols", "x", "<=", "y"),
+    ]))
+    check_query(rng, pred, [], [], records)

@@ -11,12 +11,58 @@ use benchkit::bench;
 use pimdb::config::SystemConfig;
 use pimdb::db::dbgen::Database;
 use pimdb::exec::{baseline, pimdb as engine};
+use pimdb::query::opt::OptLevel;
 use pimdb::query::tpch;
 
 fn main() {
     let mut cfg = SystemConfig::default();
     cfg.sim_sf = 0.002;
     let db = Database::generate(cfg.sim_sf, 42);
+
+    // optimizer win tracking: -O0 vs -O2 simulated PIM cycles per query,
+    // so the perf trajectory records the pass pipeline's effect alongside
+    // wall-clock (these are model cycles — deterministic, not timed)
+    {
+        let mut cfg_o0 = cfg.clone();
+        cfg_o0.opt_level = OptLevel::O0;
+        let mut s0 = engine::PimSession::new(&cfg_o0, &db).unwrap();
+        let mut s2 = engine::PimSession::new(&cfg, &db).unwrap();
+        println!("# optimizer cycles/xbar: query O0 O2 saved%");
+        let (mut tot0, mut tot2) = (0u64, 0u64);
+        for q in tpch::all_queries() {
+            let a = s0.run_query(&q, engine::EngineKind::Native).unwrap();
+            let b = s2.run_query(&q, engine::EngineKind::Native).unwrap();
+            let (c0, c2) = (a.metrics.cycles.total(), b.metrics.cycles.total());
+            tot0 += c0;
+            tot2 += c2;
+            println!(
+                "# opt-cycles/{:<8} {:>10} {:>10} {:>6.1}%",
+                q.name,
+                c0,
+                c2,
+                100.0 * (c0 - c2) as f64 / c0.max(1) as f64
+            );
+        }
+        println!(
+            "# opt-cycles/total    {:>10} {:>10} {:>6.1}%",
+            tot0,
+            tot2,
+            100.0 * (tot0 - tot2) as f64 / tot0.max(1) as f64
+        );
+    }
+
+    // end-to-end simulation wall-clock at both opt levels (the optimizer
+    // itself runs inside the session's compile step)
+    for level in [OptLevel::O0, OptLevel::O2] {
+        let mut c = cfg.clone();
+        c.opt_level = level;
+        let mut session = engine::PimSession::new(&c, &db).unwrap();
+        let q = tpch::query("Q1").unwrap();
+        bench(&format!("pimdb/Q1 at -{level} (sim SF=0.002)"), 800, || {
+            let r = session.run_query(&q, engine::EngineKind::Native).unwrap();
+            std::hint::black_box(r.metrics.exec_time_s);
+        });
+    }
 
     // representative of each class: biggest full query, biggest
     // filter-only, smallest (overhead-bound), multi-relation

@@ -17,7 +17,7 @@ pub struct Args {
 }
 
 /// Flags that are boolean (present/absent, no value).
-const BOOL_FLAGS: [&str; 3] = ["baseline", "verbose", "help"];
+const BOOL_FLAGS: [&str; 4] = ["baseline", "verbose", "help", "explain"];
 
 impl Args {
     /// Parse `argv` (without the program name) into command + flags.
@@ -29,6 +29,14 @@ impl Args {
             ..Default::default()
         };
         while let Some(tok) = it.next() {
+            // compiler-style short form: -O0 / -O1 / -O2
+            if let Some(level) = tok.strip_prefix("-O").filter(|_| !tok.starts_with("--")) {
+                if level.parse::<crate::query::opt::OptLevel>().is_err() {
+                    return Err(format!("bad opt level '{tok}' (use -O0, -O1 or -O2)"));
+                }
+                args.flags.insert("opt-level".into(), level.to_string());
+                continue;
+            }
             let name = tok
                 .strip_prefix("--")
                 .ok_or_else(|| format!("expected --flag, got '{tok}'"))?
@@ -98,6 +106,9 @@ impl Args {
         if let Some(p) = self.parse_u64("parallelism")? {
             cfg.parallelism = p as usize;
         }
+        if let Some(l) = self.get("opt-level") {
+            cfg.opt_level = l.parse()?;
+        }
         for (k, v) in &self.sets {
             cfg.set(k, v)?;
         }
@@ -165,6 +176,8 @@ COMMANDS:
              run an ad-hoc PQL text query instead (--sql-file FILE reads
              the text, e.g. a .pql fixture, from disk); see README
              \"Query language\" for the grammar
+             --explain     dump each relation's compiled PIM program
+             (disassembly before and after the optimizer passes)
   report     --exp <table1..6|fig8..15|ablation-rowpar|calibration|all>
              regenerate a paper table/figure
   gen-data   [--sf F] [--seed N]    generate + summarize the TPC-H data
@@ -179,6 +192,9 @@ COMMON FLAGS:
   --parallelism N   host worker threads for functional execution
                     (0 = auto-detect cores; default 1; results identical)
   --engine E        functional backend: native | pjrt
+  -O0|-O1|-O2       PIM-program optimization level (default -O2; also
+                    --opt-level N / --set opt_level=N); results are
+                    bit-identical at every level
   --config FILE     key=value config file (see `report --exp table3`)
   --set key=value   override one config key (repeatable)
 ";
@@ -217,6 +233,23 @@ mod tests {
         let a = parse("run --parallelism 8 --set parallelism=2").unwrap();
         assert_eq!(a.build_config().unwrap().parallelism, 2);
         assert!(parse("run --parallelism x").unwrap().build_config().is_err());
+    }
+
+    #[test]
+    fn opt_level_short_and_long_forms() {
+        use crate::query::opt::OptLevel;
+        let a = parse("run --query Q6 -O0").unwrap();
+        assert_eq!(a.build_config().unwrap().opt_level, OptLevel::O0);
+        let a = parse("run --opt-level 1").unwrap();
+        assert_eq!(a.build_config().unwrap().opt_level, OptLevel::O1);
+        // --set has the highest precedence
+        let a = parse("run -O0 --set opt_level=2").unwrap();
+        assert_eq!(a.build_config().unwrap().opt_level, OptLevel::O2);
+        // default is -O2
+        let a = parse("run --query Q6").unwrap();
+        assert_eq!(a.build_config().unwrap().opt_level, OptLevel::O2);
+        assert!(parse("run -O9").is_err());
+        assert!(parse("run --explain").unwrap().has("explain"));
     }
 
     #[test]

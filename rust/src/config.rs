@@ -7,6 +7,8 @@
 
 use std::collections::BTreeMap;
 
+use crate::query::opt::OptLevel;
+
 /// Full system configuration. Defaults reproduce paper Table 3.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SystemConfig {
@@ -105,6 +107,12 @@ pub struct SystemConfig {
     pub sim_sf: f64,
     /// Scale factor the timing/energy models report (paper: 1000).
     pub report_sf: f64,
+    /// PIM-program optimization level (`-O0`..`-O2`). `-O0` executes the
+    /// compiler's naive stream (the golden reference); `-O2` (default)
+    /// runs the full pass pipeline of [`crate::query::opt`]. Outputs are
+    /// bit-identical at every level; only cycles/energy/endurance and
+    /// `peak_inter_cells` change.
+    pub opt_level: OptLevel,
 }
 
 impl Default for SystemConfig {
@@ -155,6 +163,7 @@ impl Default for SystemConfig {
 
             sim_sf: 0.01,
             report_sf: 1000.0,
+            opt_level: OptLevel::default(),
         }
     }
 }
@@ -232,6 +241,7 @@ impl SystemConfig {
             "host_idle_w" => parse!(host_idle_w),
             "sim_sf" => parse!(sim_sf),
             "report_sf" => parse!(report_sf),
+            "opt_level" => parse!(opt_level),
             _ => return Err(format!("unknown config key: {key}")),
         }
         Ok(())
@@ -292,6 +302,7 @@ impl SystemConfig {
         m.insert("dram_bw_bps", self.dram_bw_bps.to_string());
         m.insert("sim_sf", self.sim_sf.to_string());
         m.insert("report_sf", self.report_sf.to_string());
+        m.insert("opt_level", self.opt_level.to_string());
         m
     }
 }
@@ -330,6 +341,20 @@ mod tests {
         c.set("parallelism", "0").unwrap(); // 0 = auto
         assert_eq!(c.parallelism, 0);
         assert!(c.set("parallelism", "-1").is_err());
+    }
+
+    #[test]
+    fn opt_level_knob_parses() {
+        let mut c = SystemConfig::default();
+        assert_eq!(c.opt_level, OptLevel::O2); // -O2 is the default
+        c.set("opt_level", "0").unwrap();
+        assert_eq!(c.opt_level, OptLevel::O0);
+        c.set("opt_level", "O1").unwrap();
+        assert_eq!(c.opt_level, OptLevel::O1);
+        assert!(c.set("opt_level", "turbo").is_err());
+        // entries() renders a re-parseable value
+        let shown = c.entries()["opt_level"].clone();
+        assert_eq!(shown.parse::<OptLevel>().unwrap(), OptLevel::O1);
     }
 
     #[test]

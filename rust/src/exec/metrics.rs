@@ -48,6 +48,43 @@ impl CycleCounts {
     }
 }
 
+/// What the optimizer pass pipeline ([`crate::query::opt`]) did to a
+/// query's compiled programs, summed over its relations (instruction and
+/// cycle counts add; the cell peaks take the per-relation max, matching
+/// Table 5's "Inter. cells" semantics). `before` is the compiler's naive
+/// `-O0` stream, `after` the program the engine executed. At `-O0` the
+/// two sides are equal.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OptSummary {
+    /// Compiled instructions before passes.
+    pub steps_before: u64,
+    /// Instructions actually executed.
+    pub steps_after: u64,
+    /// Per-crossbar stateful-logic cycles before passes.
+    pub cycles_before: u64,
+    /// Per-crossbar cycles actually charged.
+    pub cycles_after: u64,
+    /// Peak intermediate cells before passes.
+    pub inter_before: u64,
+    /// Peak intermediate cells of the executed programs.
+    pub inter_after: u64,
+}
+
+impl From<crate::query::opt::OptStats> for OptSummary {
+    /// Fix a (possibly merged) per-program stats record into the report
+    /// type — the single place the two representations meet.
+    fn from(s: crate::query::opt::OptStats) -> OptSummary {
+        OptSummary {
+            steps_before: s.steps_before as u64,
+            steps_after: s.steps_after as u64,
+            cycles_before: s.cycles_before,
+            cycles_after: s.cycles_after,
+            inter_before: s.inter_before as u64,
+            inter_after: s.inter_after as u64,
+        }
+    }
+}
+
 /// Metrics of one query execution (PIMDB or baseline), at the report SF.
 #[derive(Clone, Debug, Default)]
 pub struct QueryMetrics {
@@ -71,6 +108,8 @@ pub struct QueryMetrics {
     pub cycles: CycleCounts,
     /// Peak intermediate cells (Table 5).
     pub inter_cells: usize,
+    /// Optimizer before/after instruction and cycle counts.
+    pub opt: OptSummary,
     /// Peak memory-chip power over the run (W, Fig. 14).
     pub peak_chip_w: f64,
     /// Highest windowed-average chip power (W, Fig. 14).

@@ -33,7 +33,9 @@ use crate::db::dbgen::Database;
 use crate::db::layout::{DbLayout, RelationLayout};
 use crate::db::schema::RelId;
 use crate::exec::engine::{self, ExecOutputs, XbarState};
-use crate::exec::metrics::{CycleCounts, GroupOutput, QueryMetrics, QueryOutput, RunReport};
+use crate::exec::metrics::{
+    CycleCounts, GroupOutput, OptSummary, QueryMetrics, QueryOutput, RunReport,
+};
 use crate::exec::plan::{self, ExecPlan, ShardTask};
 use crate::host;
 use crate::pim::controller::{cost, write_profile, InstructionCost};
@@ -42,7 +44,8 @@ use crate::pim::energy::EnergyLedger;
 use crate::pim::module::{MediaScheduler, ReqKind, Request};
 use crate::pim::power::{self, PowerTrace};
 use crate::query::ast::{AggKind, Query, QueryKind};
-use crate::query::compiler::{CompiledRelQuery, Compiler, ReadKind};
+use crate::query::compiler::{CompileError, CompiledRelQuery, Compiler, ReadKind};
+use crate::query::opt;
 use crate::util::bits::WORDS;
 
 /// Which functional backend computes instruction semantics.
@@ -141,9 +144,30 @@ impl<'a> PimSession<'a> {
                 q.rels
                     .iter()
                     .map(|rq| Compiler::compile(rq, self.layout.rel(rq.rel), self.cfg.xbar_cols))
-                    .collect::<Result<_, _>>()
+                    .collect::<Result<_, CompileError>>()
             })
-            .collect::<Result<_, _>>()?;
+            .collect::<Result<_, CompileError>>()
+            .map_err(|e| e.to_string())?;
+
+        // --- optimizer pass pipeline (waves execute optimized programs) ---
+        let mut opt_summaries: Vec<OptSummary> = Vec::with_capacity(compiled_all.len());
+        let compiled_all: Vec<Vec<CompiledRelQuery>> = compiled_all
+            .into_iter()
+            .map(|compiled| {
+                let mut sum = opt::OptStats::default();
+                let out = compiled
+                    .iter()
+                    .map(|c| {
+                        let (o, st) =
+                            opt::optimize(c, self.cfg.opt_level, self.cfg.xbar_rows);
+                        sum.merge(&st);
+                        o
+                    })
+                    .collect();
+                opt_summaries.push(OptSummary::from(sum));
+                out
+            })
+            .collect();
 
         // --- materialize every touched relation once ----------------------
         for compiled in &compiled_all {
@@ -271,6 +295,7 @@ impl<'a> PimSession<'a> {
                 .map(|c| c.peak_inter_cells)
                 .max()
                 .unwrap_or(0);
+            metrics.opt = opt_summaries[qi];
             reports.push(RunReport {
                 query: q.name,
                 metrics,
@@ -599,6 +624,7 @@ fn simulate(
         pim_energy: energy,
         cycles,
         inter_cells: 0, // filled by caller
+        opt: OptSummary::default(), // filled by caller
         peak_chip_w,
         avg_chip_w,
         theoretical_chip_w: power::theoretical_peak_query_chip_w(cfg, max_pages),
@@ -785,6 +811,34 @@ mod tests {
             let want = single.run_query(q, EngineKind::Native).unwrap();
             assert_eq!(want.output, r.output, "{}", q.name);
             assert_eq!(want.metrics.cycles, r.metrics.cycles, "{}", q.name);
+        }
+    }
+
+    #[test]
+    fn opt_levels_agree_functionally_and_o2_saves_cycles() {
+        use crate::query::opt::OptLevel;
+        let database = db();
+        let cfg_o0 = SystemConfig {
+            opt_level: OptLevel::O0,
+            ..SystemConfig::default()
+        };
+        let cfg_o2 = SystemConfig::default(); // -O2 default
+        let mut s0 = PimSession::new(&cfg_o0, &database).unwrap();
+        let mut s2 = PimSession::new(&cfg_o2, &database).unwrap();
+        for name in ["Q1", "Q6", "Q12", "Q22_sub"] {
+            let q = tpch::query(name).unwrap();
+            let a = s0.run_query(&q, EngineKind::Native).unwrap();
+            let b = s2.run_query(&q, EngineKind::Native).unwrap();
+            assert_eq!(a.output, b.output, "{name}");
+            assert!(
+                b.metrics.cycles.total() <= a.metrics.cycles.total(),
+                "{name}"
+            );
+            assert!(b.metrics.inter_cells <= a.metrics.inter_cells, "{name}");
+            // the summary records the delta
+            assert_eq!(b.metrics.opt.cycles_before, a.metrics.cycles.total());
+            assert_eq!(b.metrics.opt.cycles_after, b.metrics.cycles.total());
+            assert_eq!(a.metrics.opt.cycles_before, a.metrics.opt.cycles_after);
         }
     }
 

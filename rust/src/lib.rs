@@ -22,7 +22,9 @@
 //! * [`db`] — TPC-H substrate: schema, generator, encodings, PIM layout.
 //! * [`query`] — filter/aggregate AST, the 19 evaluated TPC-H queries,
 //!   the PQL text frontend (`query::lang`, `pimdb run --sql`), compiler
-//!   to PIM request programs.
+//!   to PIM request programs, and the optimizing pass pipeline
+//!   (`query::opt`, `-O0`..`-O2`: IN-set peephole, CSE, valid-AND
+//!   elision, dead-step elimination, lifetime column reallocation).
 //! * [`exec`] — the PIMDB engine, the sharded parallel execution plan,
 //!   and the in-memory column-store baseline.
 //! * [`runtime`] — PJRT CPU client running the AOT kernel artifacts

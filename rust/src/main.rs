@@ -61,6 +61,18 @@ fn cmd_run(args: &Args) -> Result<(), String> {
 
     let t0 = std::time::Instant::now();
     let mut session = engine::PimSession::new(&cfg, &db)?;
+    if args.has("explain") {
+        for q in &queries {
+            let text = pimdb::query::opt::explain_query(
+                q,
+                session.layout(),
+                cfg.xbar_cols,
+                cfg.xbar_rows,
+                cfg.opt_level,
+            )?;
+            print!("{text}");
+        }
+    }
     let reports = session.run_queries(&queries, engine_kind)?;
     let wall = t0.elapsed();
 
@@ -105,6 +117,11 @@ fn print_report(cfg: &SystemConfig, engine_kind: engine::EngineKind, r: &RunRepo
     println!("  cycles/xbar    filter {} arith {} coltrans {} agg {}/{}",
         m.cycles.filter, m.cycles.arith, m.cycles.col_transform,
         m.cycles.agg_col, m.cycles.agg_row);
+    println!("  optimizer      -{}: {} -> {} steps, {} -> {} cycles, {} -> {} inter cells",
+        cfg.opt_level,
+        m.opt.steps_before, m.opt.steps_after,
+        m.opt.cycles_before, m.opt.cycles_after,
+        m.opt.inter_before, m.opt.inter_after);
     println!("  chip power     peak {:.2} W, avg {:.3} W, theoretical {:.0} W",
         m.peak_chip_w, m.avg_chip_w, m.theoretical_chip_w);
     println!("  endurance      {:.4} ops/cell/exec, 10yr {}",

@@ -7,6 +7,8 @@
 //! software and the PIM module understand the payload (programming model,
 //! paper §3.1).
 
+use std::fmt;
+
 use crate::mem::addr::AddressMap;
 
 /// A range of consecutive crossbar columns (attributes live in consecutive
@@ -31,6 +33,17 @@ impl ColRange {
     /// One past the last column.
     pub fn end(&self) -> usize {
         (self.start + self.len) as usize
+    }
+}
+
+impl fmt::Display for ColRange {
+    /// `[c37]` for a single column, `[c37+8]` for an 8-column range.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.len == 1 {
+            write!(f, "[c{}]", self.start)
+        } else {
+            write!(f, "[c{}+{}]", self.start, self.len)
+        }
     }
 }
 
@@ -207,6 +220,21 @@ impl PimInstruction {
     }
 }
 
+impl fmt::Display for PimInstruction {
+    /// One disassembly line: mnemonic, operands, `->` destination, e.g.
+    /// `lt_imm [c12+24], #42 -> [c400]` or `and [c400], [c31] -> [c400]`.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:<16} {}", self.op.name(), self.src_a)?;
+        if let Some(b) = self.src_b {
+            write!(f, ", {b}")?;
+        }
+        if self.op.has_imm() {
+            write!(f, ", #{}", self.imm)?;
+        }
+        write!(f, " -> {}", self.dst)
+    }
+}
+
 /// Wire format of a PIM request (paper §3.1 "PIM requests"): a virtual
 /// address plus a 32-byte data payload.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -341,6 +369,38 @@ mod tests {
             let req = encode(&i, 0x1_0000_0000, &map());
             let back = decode(&req, &map()).unwrap();
             assert_eq!(back, i);
+        });
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_random_geometries() {
+        // the wire format must survive any address-map configuration the
+        // geometry constructor accepts, not just the paper's default
+        check("isa-roundtrip-geometry", 150, |g| {
+            let rows = 1usize << g.usize(6, 11); // 64..2048 rows
+            let read_bits = 8usize << g.usize(0, 2); // 8/16/32-bit reads
+            let cols = read_bits << g.usize(0, 5); // up to 32 units/row
+            let unit_bytes_bits = (read_bits / 8).trailing_zeros();
+            let min_page_bits = unit_bytes_bits
+                + (cols / read_bits).trailing_zeros()
+                + rows.trailing_zeros();
+            let page_bytes = 1u64 << g.usize(min_page_bits as usize, 30);
+            let m = AddressMap::for_geometry(page_bytes, rows, cols, read_bits);
+
+            let op = Opcode::from_u8(g.usize(0, 17) as u8).unwrap();
+            let i = PimInstruction {
+                op,
+                src_a: ColRange::new(g.usize(0, cols - 1), g.usize(1, 64)),
+                src_b: op
+                    .has_src_b()
+                    .then(|| ColRange::new(g.usize(0, cols - 1), g.usize(1, 64))),
+                dst: ColRange::new(g.usize(0, cols - 1), g.usize(1, 64)),
+                imm: if op.has_imm() { g.skewed_u64() } else { 0 },
+            };
+            // vbase aligned to any page size up to 2^30
+            let req = encode(&i, 1u64 << 40, &m);
+            let back = decode(&req, &m).unwrap();
+            assert_eq!(back, i, "geometry rows={rows} cols={cols} rb={read_bits}");
         });
     }
 

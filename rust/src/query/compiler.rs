@@ -13,6 +13,8 @@
 //! filter column (filter-only relations) or the per-crossbar aggregate
 //! values (full queries).
 
+use std::fmt;
+
 use crate::db::layout::RelationLayout;
 use crate::db::schema::{self, RelId};
 use crate::pim::endurance::OpCategory;
@@ -27,6 +29,121 @@ pub struct Step {
     pub instr: PimInstruction,
     /// Reporting category (Tables 5–6 bucket).
     pub category: OpCategory,
+}
+
+impl fmt::Display for Step {
+    /// Disassembly line: the instruction plus its reporting category
+    /// (`pimdb run --explain`).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let instr = self.instr.to_string();
+        write!(f, "{instr:<44} ; {}", self.category.name())
+    }
+}
+
+/// Which compute-area allocation failed (see [`CompileError`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllocKind {
+    /// Program-lifetime column (filter mask).
+    Persistent,
+    /// Expression-lifetime column, LIFO-freed at -O0.
+    Scratch,
+}
+
+impl AllocKind {
+    fn name(&self) -> &'static str {
+        match self {
+            AllocKind::Persistent => "persistent",
+            AllocKind::Scratch => "scratch",
+        }
+    }
+}
+
+/// Why compiling one relation's program failed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CompileError {
+    /// The crossbar compute area cannot hold the required columns.
+    ComputeAreaExhausted {
+        /// Which allocation class ran out.
+        kind: AllocKind,
+        /// Columns the failing allocation asked for.
+        needed: usize,
+        /// Column the allocation would have started at.
+        at: usize,
+        /// One past the last usable crossbar column.
+        limit: usize,
+    },
+    /// Internal allocator discipline violation: persistent columns must
+    /// all be allocated before the first scratch column.
+    PersistentAfterScratch,
+    /// The relation's PIM copy has no attribute with this name.
+    NoSuchAttribute {
+        /// The relation searched.
+        rel: RelId,
+        /// The missing attribute name.
+        attr: String,
+    },
+    /// Column-column compare between attributes of different widths.
+    CmpWidthMismatch {
+        /// Left attribute name.
+        a: String,
+        /// Left attribute width in bits.
+        a_bits: usize,
+        /// Right attribute name.
+        b: String,
+        /// Right attribute width in bits.
+        b_bits: usize,
+    },
+}
+
+impl fmt::Display for CompileError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CompileError::ComputeAreaExhausted {
+                kind,
+                needed,
+                at,
+                limit,
+            } => write!(
+                f,
+                "compute area exhausted ({needed} {} cols at {at}/{limit})",
+                kind.name()
+            ),
+            CompileError::PersistentAfterScratch => {
+                write!(f, "persistent alloc after scratch allocs")
+            }
+            CompileError::NoSuchAttribute { rel, attr } => {
+                write!(f, "{rel:?} has no attribute {attr}")
+            }
+            CompileError::CmpWidthMismatch {
+                a,
+                a_bits,
+                b,
+                b_bits,
+            } => write!(
+                f,
+                "column compare widths differ: {a}({a_bits}) vs {b}({b_bits})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CompileError {}
+
+/// One contiguous compute-area allocation — the def/use metadata the
+/// optimizer passes ([`crate::query::opt`]) use to reason about column
+/// lifetimes. `born_step` is the index into [`CompiledRelQuery::steps`]
+/// current when the columns were handed out; every write to the span's
+/// columns at or after that index belongs to this span (the -O0 LIFO
+/// discipline may later reuse the same columns for a younger span, which
+/// then has a larger `born_step`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AllocSpan {
+    /// First column of the span.
+    pub start: usize,
+    /// Columns allocated.
+    pub width: usize,
+    /// `steps.len()` at allocation time.
+    pub born_step: usize,
 }
 
 /// What the read phase fetches per page.
@@ -75,16 +192,26 @@ pub struct CompiledRelQuery {
     pub mask_col: usize,
     /// Peak compute-area columns used (Table 5 "Inter. cells").
     pub peak_inter_cells: usize,
+    /// Compute-area allocations in allocation order (pass metadata).
+    pub spans: Vec<AllocSpan>,
+    /// First compute-area column (columns below hold data + valid bits).
+    pub compute_base: usize,
+    /// The relation's VALID column (read-only input to the program).
+    pub valid_col: usize,
 }
 
 /// Crossbar compute-area allocator: persistent columns grow from the base,
-/// scratch columns stack above them and are freed in LIFO batches.
+/// scratch columns stack above them and are freed in LIFO batches. Every
+/// allocation is also recorded as an [`AllocSpan`] so the optimizer can
+/// reconstruct column lifetimes (`-O2` replaces this LIFO discipline with
+/// lifetime-based reallocation).
 struct ColAlloc {
     base: usize,
     limit: usize,
     persistent_top: usize,
     scratch_top: usize,
     peak: usize,
+    spans: Vec<AllocSpan>,
 }
 
 impl ColAlloc {
@@ -95,33 +222,41 @@ impl ColAlloc {
             persistent_top: base,
             scratch_top: base,
             peak: 0,
+            spans: Vec::new(),
         }
     }
 
-    fn persistent(&mut self, n: usize) -> Result<usize, String> {
+    fn persistent(&mut self, n: usize, at_step: usize) -> Result<usize, CompileError> {
         if self.persistent_top != self.scratch_top {
-            return Err("persistent alloc after scratch allocs".into());
+            return Err(CompileError::PersistentAfterScratch);
         }
         let at = self.persistent_top;
         if at + n > self.limit {
-            return Err(format!("compute area exhausted ({n} persistent cols)"));
+            return Err(CompileError::ComputeAreaExhausted {
+                kind: AllocKind::Persistent,
+                needed: n,
+                at,
+                limit: self.limit,
+            });
         }
         self.persistent_top += n;
         self.scratch_top = self.persistent_top;
-        self.note_peak();
+        self.note_alloc(at, n, at_step);
         Ok(at)
     }
 
-    fn scratch(&mut self, n: usize) -> Result<usize, String> {
+    fn scratch(&mut self, n: usize, at_step: usize) -> Result<usize, CompileError> {
         let at = self.scratch_top;
         if at + n > self.limit {
-            return Err(format!(
-                "compute area exhausted ({n} scratch cols at {at}/{})",
-                self.limit
-            ));
+            return Err(CompileError::ComputeAreaExhausted {
+                kind: AllocKind::Scratch,
+                needed: n,
+                at,
+                limit: self.limit,
+            });
         }
         self.scratch_top += n;
-        self.note_peak();
+        self.note_alloc(at, n, at_step);
         Ok(at)
     }
 
@@ -135,7 +270,12 @@ impl ColAlloc {
         self.scratch_top
     }
 
-    fn note_peak(&mut self) {
+    fn note_alloc(&mut self, at: usize, n: usize, at_step: usize) {
+        self.spans.push(AllocSpan {
+            start: at,
+            width: n,
+            born_step: at_step,
+        });
         self.peak = self.peak.max(self.scratch_top - self.base);
     }
 }
@@ -154,7 +294,7 @@ impl<'a> Compiler<'a> {
         rq: &RelQuery,
         layout: &'a RelationLayout,
         xbar_cols: usize,
-    ) -> Result<CompiledRelQuery, String> {
+    ) -> Result<CompiledRelQuery, CompileError> {
         let mut c = Compiler {
             layout,
             alloc: ColAlloc::new(layout.compute_base, xbar_cols),
@@ -163,7 +303,7 @@ impl<'a> Compiler<'a> {
         };
 
         // 1. base filter mask (persistent) = predicate AND valid
-        let mask = c.alloc.persistent(1)?;
+        let mask = c.alloc.persistent(1, 0)?;
         let mark = c.alloc.mark();
         c.lower_pred(&rq.filter, mask, OpCategory::Filter)?;
         c.emit(
@@ -196,6 +336,9 @@ impl<'a> Compiler<'a> {
                 n_reduces: 0,
                 mask_col: mask,
                 peak_inter_cells: c.alloc.peak,
+                spans: c.alloc.spans,
+                compute_base: layout.compute_base,
+                valid_col: layout.valid_col,
             });
         }
 
@@ -206,7 +349,7 @@ impl<'a> Compiler<'a> {
             let gmask = if key.is_empty() {
                 mask
             } else {
-                let gm = c.alloc.scratch(1)?;
+                let gm = c.alloc.scratch(1, c.steps.len())?;
                 c.group_mask(mask, key, gm)?;
                 gm
             };
@@ -282,6 +425,9 @@ impl<'a> Compiler<'a> {
             n_reduces,
             mask_col: mask,
             peak_inter_cells: c.alloc.peak,
+            spans: c.alloc.spans,
+            compute_base: layout.compute_base,
+            valid_col: layout.valid_col,
         })
     }
 
@@ -289,11 +435,14 @@ impl<'a> Compiler<'a> {
         self.steps.push(Step { instr, category });
     }
 
-    fn attr_range(&self, name: &str) -> Result<ColRange, String> {
+    fn attr_range(&self, name: &str) -> Result<ColRange, CompileError> {
         let slot = self
             .layout
             .slot(name)
-            .ok_or_else(|| format!("{:?} has no attribute {name}", self.layout.rel))?;
+            .ok_or_else(|| CompileError::NoSuchAttribute {
+                rel: self.layout.rel,
+                attr: name.to_string(),
+            })?;
         Ok(ColRange::new(slot.start, slot.attr.bits))
     }
 
@@ -303,7 +452,7 @@ impl<'a> Compiler<'a> {
         p: &Pred,
         dst: usize,
         cat: OpCategory,
-    ) -> Result<(), String> {
+    ) -> Result<(), CompileError> {
         let d = ColRange::new(dst, 1);
         match p {
             Pred::True => {
@@ -320,7 +469,7 @@ impl<'a> Compiler<'a> {
                 let a = self.attr_range(attr)?;
                 self.emit(PimInstruction::unary(Opcode::Reset, d, d), cat);
                 let mark = self.alloc.mark();
-                let t = self.alloc.scratch(1)?;
+                let t = self.alloc.scratch(1, self.steps.len())?;
                 for &v in values {
                     self.lower_cmp_imm(a, CmpOp::Eq, v, t, cat)?;
                     self.emit(
@@ -333,7 +482,7 @@ impl<'a> Compiler<'a> {
             Pred::Between { attr, lo, hi } => {
                 let a = self.attr_range(attr)?;
                 let mark = self.alloc.mark();
-                let t = self.alloc.scratch(1)?;
+                let t = self.alloc.scratch(1, self.steps.len())?;
                 self.lower_cmp_imm(a, CmpOp::Ge, *lo, dst, cat)?;
                 self.lower_cmp_imm(a, CmpOp::Le, *hi, t, cat)?;
                 self.emit(
@@ -346,10 +495,12 @@ impl<'a> Compiler<'a> {
                 let ra = self.attr_range(a)?;
                 let rb = self.attr_range(b)?;
                 if ra.len != rb.len {
-                    return Err(format!(
-                        "column compare widths differ: {a}({}) vs {b}({})",
-                        ra.len, rb.len
-                    ));
+                    return Err(CompileError::CmpWidthMismatch {
+                        a: a.to_string(),
+                        a_bits: ra.len as usize,
+                        b: b.to_string(),
+                        b_bits: rb.len as usize,
+                    });
                 }
                 match op {
                     CmpOp::Eq => {
@@ -383,7 +534,7 @@ impl<'a> Compiler<'a> {
                 };
                 let mut first = true;
                 let mark = self.alloc.mark();
-                let t = self.alloc.scratch(1)?;
+                let t = self.alloc.scratch(1, self.steps.len())?;
                 for sub in ps {
                     if first {
                         self.lower_pred(sub, dst, cat)?;
@@ -424,7 +575,7 @@ impl<'a> Compiler<'a> {
         value: u64,
         dst: usize,
         cat: OpCategory,
-    ) -> Result<(), String> {
+    ) -> Result<(), CompileError> {
         let d = ColRange::new(dst, 1);
         let max = if a.len as u32 >= 64 {
             u64::MAX
@@ -468,10 +619,10 @@ impl<'a> Compiler<'a> {
     }
 
     /// Group mask: base AND eq(attr, v) for each key part.
-    fn group_mask(&mut self, base: usize, key: &GroupKey, dst: usize) -> Result<(), String> {
+    fn group_mask(&mut self, base: usize, key: &GroupKey, dst: usize) -> Result<(), CompileError> {
         let d = ColRange::new(dst, 1);
         let mark = self.alloc.mark();
-        let t = self.alloc.scratch(1)?;
+        let t = self.alloc.scratch(1, self.steps.len())?;
         let mut first = true;
         for &(attr, v) in key {
             let a = self.attr_range(attr)?;
@@ -500,15 +651,15 @@ impl<'a> Compiler<'a> {
 
     /// Zero-extend copy of `src` into a fresh `width`-column field:
     /// Reset(width) then Or(src, zero-broadcast) into the low bits.
-    fn widen_copy(&mut self, src: ColRange, width: usize) -> Result<ColRange, String> {
+    fn widen_copy(&mut self, src: ColRange, width: usize) -> Result<ColRange, CompileError> {
         debug_assert!(width >= src.len as usize);
-        let at = self.alloc.scratch(width)?;
+        let at = self.alloc.scratch(width, self.steps.len())?;
         let dst = ColRange::new(at, width);
         self.emit(
             PimInstruction::unary(Opcode::Reset, dst, dst),
             OpCategory::Arith,
         );
-        let zero = self.alloc.scratch(1)?;
+        let zero = self.alloc.scratch(1, self.steps.len())?;
         let z = ColRange::new(zero, 1);
         self.emit(PimInstruction::unary(Opcode::Reset, z, z), OpCategory::Arith);
         self.emit(
@@ -519,7 +670,7 @@ impl<'a> Compiler<'a> {
     }
 
     /// (scale - other) as a fresh field wide enough for `scale`.
-    fn complement_field(&mut self, other: &str, scale: u64) -> Result<ColRange, String> {
+    fn complement_field(&mut self, other: &str, scale: u64) -> Result<ColRange, CompileError> {
         let o = self.attr_range(other)?;
         let width = (64 - scale.leading_zeros() as usize).max(o.len as usize);
         let f = self.widen_copy(o, width)?;
@@ -536,7 +687,7 @@ impl<'a> Compiler<'a> {
     }
 
     /// (scale + other) as a fresh field.
-    fn sum_field(&mut self, other: &str, scale: u64) -> Result<ColRange, String> {
+    fn sum_field(&mut self, other: &str, scale: u64) -> Result<ColRange, CompileError> {
         let o = self.attr_range(other)?;
         let width = (64 - scale.leading_zeros() as usize).max(o.len as usize) + 1;
         let f = self.widen_copy(o, width)?;
@@ -548,9 +699,9 @@ impl<'a> Compiler<'a> {
     }
 
     /// Masked copy of an attribute: And(attr, mask-broadcast) into scratch.
-    fn masked_attr(&mut self, attr: &str, mask: usize) -> Result<ColRange, String> {
+    fn masked_attr(&mut self, attr: &str, mask: usize) -> Result<ColRange, CompileError> {
         let a = self.attr_range(attr)?;
-        let at = self.alloc.scratch(a.len as usize)?;
+        let at = self.alloc.scratch(a.len as usize, self.steps.len())?;
         let dst = ColRange::new(at, a.len as usize);
         self.emit(
             PimInstruction::binary(Opcode::And, a, ColRange::new(mask, 1), dst),
@@ -565,7 +716,7 @@ impl<'a> Compiler<'a> {
         &mut self,
         e: &ValExpr,
         mask: usize,
-    ) -> Result<(ColRange, usize), String> {
+    ) -> Result<(ColRange, usize), CompileError> {
         match e {
             ValExpr::Attr(a) => {
                 let c = self.masked_attr(a, mask)?;
@@ -579,7 +730,7 @@ impl<'a> Compiler<'a> {
                 let ma = self.masked_attr(a, mask)?;
                 let rb = self.attr_range(b)?;
                 let w = ma.len as usize + rb.len as usize;
-                let at = self.alloc.scratch(w)?;
+                let at = self.alloc.scratch(w, self.steps.len())?;
                 let dst = ColRange::new(at, w);
                 self.emit(
                     PimInstruction::binary(Opcode::Mul, ma, rb, dst),
@@ -591,7 +742,7 @@ impl<'a> Compiler<'a> {
                 let f = self.complement_field(other, *scale)?;
                 let ma = self.masked_attr(attr, mask)?;
                 let w = ma.len as usize + f.len as usize;
-                let at = self.alloc.scratch(w)?;
+                let at = self.alloc.scratch(w, self.steps.len())?;
                 let dst = ColRange::new(at, w);
                 self.emit(
                     PimInstruction::binary(Opcode::Mul, ma, f, dst),
@@ -603,7 +754,7 @@ impl<'a> Compiler<'a> {
                 let f = self.sum_field(other, *scale)?;
                 let ma = self.masked_attr(attr, mask)?;
                 let w = ma.len as usize + f.len as usize;
-                let at = self.alloc.scratch(w)?;
+                let at = self.alloc.scratch(w, self.steps.len())?;
                 let dst = ColRange::new(at, w);
                 self.emit(
                     PimInstruction::binary(Opcode::Mul, ma, f, dst),
@@ -622,13 +773,13 @@ impl<'a> Compiler<'a> {
                 let f2 = self.sum_field(other2, *scale2)?;
                 let ma = self.masked_attr(attr, mask)?;
                 let w1 = ma.len as usize + f1.len as usize;
-                let t = ColRange::new(self.alloc.scratch(w1)?, w1);
+                let t = ColRange::new(self.alloc.scratch(w1, self.steps.len())?, w1);
                 self.emit(
                     PimInstruction::binary(Opcode::Mul, ma, f1, t),
                     OpCategory::Arith,
                 );
                 let w2 = w1 + f2.len as usize;
-                let dst = ColRange::new(self.alloc.scratch(w2)?, w2);
+                let dst = ColRange::new(self.alloc.scratch(w2, self.steps.len())?, w2);
                 self.emit(
                     PimInstruction::binary(Opcode::Mul, t, f2, dst),
                     OpCategory::Arith,
@@ -645,14 +796,24 @@ impl<'a> Compiler<'a> {
         e: &ValExpr,
         mask: usize,
         kind: AggKind,
-    ) -> Result<ColRange, String> {
+    ) -> Result<ColRange, CompileError> {
         if kind == AggKind::Max {
             let (cols, _) = self.lower_masked_value(e, mask)?;
             return Ok(cols);
         }
         // MIN: value OR broadcast(NOT mask)
         let (cols, _) = self.lower_masked_value(e, mask)?;
-        let nm = self.alloc.scratch(1)?;
+        if cols.start as usize == mask {
+            // ValExpr::One returns the mask column itself; adjusting it in
+            // place would corrupt the mask for every later aggregate. The
+            // adjusted constant-1 column is mask | !mask == all-ones, so
+            // materialize that directly in fresh scratch.
+            let t = self.alloc.scratch(1, self.steps.len())?;
+            let tr = ColRange::new(t, 1);
+            self.emit(PimInstruction::unary(Opcode::Set, tr, tr), OpCategory::Arith);
+            return Ok(tr);
+        }
+        let nm = self.alloc.scratch(1, self.steps.len())?;
         let n = ColRange::new(nm, 1);
         self.emit(
             PimInstruction::unary(Opcode::Not, ColRange::new(mask, 1), n),
@@ -825,6 +986,109 @@ mod tests {
         let li = &c[1];
         assert!(li.steps.iter().any(|s| s.instr.op == Opcode::Lt
             && s.instr.src_b.is_some()));
+    }
+
+    #[test]
+    fn compile_errors_are_typed_and_render_stable_messages() {
+        let (cfg, l) = layouts();
+        let rq = RelQuery {
+            rel: RelId::Part,
+            filter: Pred::CmpImm {
+                attr: "p_nonexistent",
+                op: CmpOp::Eq,
+                value: 1,
+            },
+            group_by: vec![],
+            aggregates: vec![],
+        };
+        let err = Compiler::compile(&rq, l.rel(RelId::Part), cfg.xbar_cols).unwrap_err();
+        assert!(matches!(err, CompileError::NoSuchAttribute { rel: RelId::Part, .. }));
+        assert!(err.to_string().contains("no attribute p_nonexistent"));
+
+        let rq = RelQuery {
+            rel: RelId::Lineitem,
+            filter: Pred::CmpCols {
+                a: "l_quantity",
+                op: CmpOp::Lt,
+                b: "l_extendedprice",
+            },
+            group_by: vec![],
+            aggregates: vec![],
+        };
+        let err = Compiler::compile(&rq, l.rel(RelId::Lineitem), cfg.xbar_cols).unwrap_err();
+        assert!(matches!(err, CompileError::CmpWidthMismatch { .. }));
+        assert!(err.to_string().contains("widths differ"));
+
+        // a tiny crossbar exhausts the compute area
+        let rq = RelQuery {
+            rel: RelId::Lineitem,
+            filter: Pred::True,
+            group_by: vec![],
+            aggregates: vec![Aggregate {
+                kind: AggKind::Sum,
+                expr: ValExpr::MulAttrs("l_extendedprice", "l_quantity"),
+                label: "x",
+            }],
+        };
+        let tiny = l.rel(RelId::Lineitem).compute_base + 2;
+        let err = Compiler::compile(&rq, l.rel(RelId::Lineitem), tiny).unwrap_err();
+        assert!(matches!(err, CompileError::ComputeAreaExhausted { .. }));
+        assert!(err.to_string().contains("exhausted"), "{err}");
+        // CompileError implements std::error::Error
+        let _: &dyn std::error::Error = &err;
+    }
+
+    #[test]
+    fn spans_metadata_covers_every_written_compute_column() {
+        let (cfg, l) = layouts();
+        for q in tpch::all_queries() {
+            for rq in &q.rels {
+                let c = Compiler::compile(rq, l.rel(rq.rel), cfg.xbar_cols).unwrap();
+                assert_eq!(c.compute_base, l.rel(rq.rel).compute_base);
+                assert_eq!(c.valid_col, l.rel(rq.rel).valid_col);
+                assert!(!c.spans.is_empty());
+                // births are nondecreasing and within the step stream
+                for w in c.spans.windows(2) {
+                    assert!(w[0].born_step <= w[1].born_step);
+                }
+                for s in &c.spans {
+                    assert!(s.born_step <= c.steps.len());
+                    assert!(s.start >= c.compute_base);
+                    assert!(s.width >= 1);
+                }
+                // every compute-area column a step writes lies in a span
+                let covered = |col: usize| {
+                    c.spans.iter().any(|s| col >= s.start && col < s.start + s.width)
+                };
+                for step in &c.steps {
+                    let d = step.instr.dst;
+                    for col in d.start as usize..d.end() {
+                        if col >= c.compute_base {
+                            assert!(covered(col), "{}: col {col} uncovered", q.name);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn step_display_renders_disassembly() {
+        let s = Step {
+            instr: PimInstruction::with_imm(
+                Opcode::LtImm,
+                ColRange::new(12, 24),
+                ColRange::new(400, 1),
+                42,
+            ),
+            category: OpCategory::Filter,
+        };
+        let line = s.to_string();
+        assert!(line.contains("lt_imm"), "{line}");
+        assert!(line.contains("[c12+24]"), "{line}");
+        assert!(line.contains("#42"), "{line}");
+        assert!(line.contains("-> [c400]"), "{line}");
+        assert!(line.contains("; filter"), "{line}");
     }
 
     #[test]

@@ -1,11 +1,14 @@
 //! Query layer: AST, the 19 evaluated TPC-H queries, the PQL text
-//! frontend, and the compiler lowering them to PIM instruction programs.
+//! frontend, the compiler lowering them to PIM instruction programs, and
+//! the optimizing pass pipeline over those programs.
 //!
 //! Queries enter through two doors — the hardcoded paper set in [`tpch`]
 //! and ad-hoc text parsed by [`lang`] — and meet in the same [`ast`]
-//! types, which [`compiler`] lowers to PIM instruction programs.
+//! types, which [`compiler`] lowers to PIM instruction programs; [`opt`]
+//! then optimizes the programs (`-O0`..`-O2`) before execution.
 
 pub mod ast;
 pub mod compiler;
 pub mod lang;
+pub mod opt;
 pub mod tpch;

@@ -1,0 +1,418 @@
+//! Column virtualization and lifetime-based reallocation.
+//!
+//! The compiler's LIFO allocator reuses scratch columns aggressively,
+//! which (a) destroys the value equalities CSE needs — a recomputed
+//! expression's previous result is usually buried under younger scratch —
+//! and (b) keeps long-dead columns allocated (per-group masks stack up
+//! for the whole program). [`virtualize`] rewrites a program into a
+//! *reuse-free* column space using the compiler's [`AllocSpan`] metadata:
+//! every allocation becomes its own virtual block, so each column holds
+//! exactly one value-producing chain. After the value passes have run,
+//! [`realloc`] assigns physical columns back by **live interval** with a
+//! first-fit free list — the replacement for the LIFO discipline — and
+//! reports the new `peak_inter_cells`. Both stages are total functions on
+//! compiler output but verify every assumption they rest on, returning
+//! `None` (caller falls back to `-O1`) on anything unexpected.
+
+use crate::pim::isa::ColRange;
+use crate::query::compiler::{AllocSpan, CompiledRelQuery, Step};
+
+use super::passes::{accesses, max_col, read_lens};
+
+/// One reuse-free column block (a compiler allocation, relocated).
+#[derive(Clone, Copy, Debug)]
+pub(super) struct Block {
+    /// First virtual column.
+    pub vstart: usize,
+    /// Columns in the block.
+    pub width: usize,
+}
+
+/// A program rewritten into reuse-free virtual column space.
+pub(super) struct VirtProgram {
+    /// Steps with every compute-area operand remapped to virtual columns.
+    pub steps: Vec<Step>,
+    /// The mask column's virtual home at program end.
+    pub mask_col: usize,
+    /// All virtual blocks, ascending and disjoint from `compute_base`.
+    pub blocks: Vec<Block>,
+}
+
+/// A program placed back into physical columns by [`realloc`].
+pub(super) struct Placed {
+    /// Steps with operands remapped to the new physical columns.
+    pub steps: Vec<Step>,
+    /// The mask column's physical location.
+    pub mask_col: usize,
+    /// Columns-above-base high water mark (Table 5 "Inter. cells").
+    pub peak: usize,
+    /// The surviving allocations (new program's span metadata).
+    pub spans: Vec<AllocSpan>,
+}
+
+/// Remap a program into reuse-free virtual columns, one block per
+/// compiler allocation. Ownership of a physical column at a given step is
+/// resolved write-side by allocation birth (`AllocSpan::born_step`) and
+/// read-side by last write, so values that outlive their LIFO release —
+/// and columns reused by younger allocations — separate cleanly.
+pub(super) fn virtualize(c: &CompiledRelQuery) -> Option<VirtProgram> {
+    let base = c.compute_base;
+    let phys_cols = c
+        .spans
+        .iter()
+        .map(|s| s.start + s.width)
+        .max()?
+        .max(max_col(&c.steps))
+        .max(c.mask_col + 1);
+
+    // per-column span history, in birth order
+    let mut history: Vec<Vec<(usize, usize)>> = vec![Vec::new(); phys_cols];
+    let mut blocks = Vec::with_capacity(c.spans.len());
+    let mut vtop = base;
+    for (i, s) in c.spans.iter().enumerate() {
+        if s.start < base {
+            return None;
+        }
+        blocks.push(Block {
+            vstart: vtop,
+            width: s.width,
+        });
+        vtop += s.width;
+        for col in s.start..s.start + s.width {
+            if let Some(&(born, _)) = history[col].last() {
+                if born == s.born_step {
+                    return None; // ambiguous ownership
+                }
+            }
+            history[col].push((s.born_step, i));
+        }
+    }
+
+    // owner[col]: the span that last wrote the column
+    let mut owner: Vec<Option<usize>> = vec![None; phys_cols];
+    let map_read = |owner: &[Option<usize>], r: ColRange| -> Option<usize> {
+        let s = r.start as usize;
+        if s < base {
+            return (r.end() <= base).then_some(s);
+        }
+        let j = owner[s]?;
+        let span = &c.spans[j];
+        for col in s..s + r.len as usize {
+            if owner.get(col).copied().flatten() != Some(j) {
+                return None;
+            }
+        }
+        (s + r.len as usize <= span.start + span.width).then(|| blocks[j].vstart + (s - span.start))
+    };
+
+    let mut steps = Vec::with_capacity(c.steps.len());
+    for (idx, step) in c.steps.iter().enumerate() {
+        let mut instr = step.instr;
+        // remap operand fields by their engine-read prefixes
+        let (la, lb) = read_lens(&instr);
+        if la > 0 {
+            let new_start = map_read(&owner, ColRange::new(instr.src_a.start as usize, la))?;
+            instr.src_a = ColRange::new(new_start, instr.src_a.len as usize);
+        }
+        if lb > 0 {
+            let b = instr.src_b.expect("lb > 0");
+            let new_start = map_read(&owner, ColRange::new(b.start as usize, lb))?;
+            instr.src_b = Some(ColRange::new(new_start, b.len as usize));
+        }
+        let (_, write) = accesses(&instr);
+        if let Some(w) = write {
+            let w0 = step.instr.dst.start as usize;
+            if w0 < base {
+                return None; // programs never write data columns
+            }
+            // ownership at a write: the youngest span born by now
+            let j = latest_span(&history, w0, idx)?;
+            let span = &c.spans[j];
+            if w0 + w.len as usize > span.start + span.width {
+                return None;
+            }
+            for col in w0..w0 + w.len as usize {
+                if latest_span(&history, col, idx) != Some(j) {
+                    return None;
+                }
+                owner[col] = Some(j);
+            }
+            let new_start = blocks[j].vstart + (w0 - span.start);
+            instr.dst = ColRange::new(new_start, instr.dst.len as usize);
+            if la == 0 {
+                // Set/Reset read nothing: keep the cosmetic src_a field
+                // mirroring the (remapped) destination
+                instr.src_a = instr.dst;
+            }
+        } else {
+            // reduces / column-transform: keep dst mirroring src_a
+            instr.dst = instr.src_a;
+        }
+        steps.push(Step {
+            instr,
+            category: step.category,
+        });
+    }
+
+    let mask_owner = owner[c.mask_col]?;
+    let span = &c.spans[mask_owner];
+    let mask_col = blocks[mask_owner].vstart + (c.mask_col - span.start);
+    Some(VirtProgram {
+        steps,
+        mask_col,
+        blocks,
+    })
+}
+
+/// The span covering `col` with the largest `born_step <= step`.
+fn latest_span(history: &[Vec<(usize, usize)>], col: usize, step: usize) -> Option<usize> {
+    history
+        .get(col)?
+        .iter()
+        .take_while(|&&(born, _)| born <= step)
+        .last()
+        .map(|&(_, j)| j)
+}
+
+/// Assign physical columns to virtual blocks by live interval.
+///
+/// Decreasing-lifetime placement: long-lived blocks (the mask, CSE'd
+/// arithmetic fields) are placed first and sink to the bottom of the
+/// compute area; short-lived per-group scratch packs above and reuses
+/// columns across disjoint lifetimes. Two blocks may share columns only
+/// when their `[first_write, last_access]` intervals are strictly
+/// disjoint — touching at one step counts as a conflict, mirroring the
+/// engine's per-plane read/write interleave. The mask block stays live
+/// to program end for the engine's final popcount. Returns `None` if any
+/// invariant fails or the new peak would exceed `orig_peak` —
+/// `peak_inter_cells` never increases, per the acceptance contract.
+pub(super) fn realloc(
+    steps: Vec<Step>,
+    blocks: &[Block],
+    mask_col: usize,
+    compute_base: usize,
+    orig_peak: usize,
+) -> Option<Placed> {
+    let vtop = blocks.last().map(|b| b.vstart + b.width).unwrap_or(compute_base);
+    // vcol -> block id
+    let mut block_of = vec![usize::MAX; vtop];
+    for (i, b) in blocks.iter().enumerate() {
+        block_of[b.vstart..b.vstart + b.width].fill(i);
+    }
+    let lookup = |r: ColRange| -> Option<usize> {
+        let s = r.start as usize;
+        if s < compute_base {
+            return (r.end() <= compute_base).then_some(usize::MAX);
+        }
+        let i = *block_of.get(s)?;
+        let last = *block_of.get(r.end().checked_sub(1)?)?;
+        (i != usize::MAX && i == last).then_some(i)
+    };
+
+    // live intervals + write-before-read validation
+    let mut first_write = vec![usize::MAX; blocks.len()];
+    let mut last_access = vec![0usize; blocks.len()];
+    let mut written = vec![false; vtop];
+    for (idx, step) in steps.iter().enumerate() {
+        let (reads, write) = accesses(&step.instr);
+        for r in &reads {
+            let i = lookup(*r)?;
+            if i == usize::MAX {
+                continue;
+            }
+            if (r.start as usize..r.end()).any(|c| !written[c]) {
+                return None; // value passes guarantee write-before-read
+            }
+            last_access[i] = idx;
+        }
+        if let Some(w) = write {
+            let i = lookup(w)?;
+            if i == usize::MAX {
+                return None;
+            }
+            first_write[i] = first_write[i].min(idx);
+            last_access[i] = idx;
+            written[w.start as usize..w.end()].fill(true);
+        }
+    }
+    let mask_block = lookup(ColRange::new(mask_col, 1))?;
+    if mask_block == usize::MAX || first_write[mask_block] == usize::MAX {
+        return None;
+    }
+    last_access[mask_block] = usize::MAX; // popcounted at program end
+
+    // decreasing-lifetime placement over live intervals
+    let mut order: Vec<usize> = (0..blocks.len())
+        .filter(|&i| first_write[i] != usize::MAX)
+        .collect();
+    order.sort_by_key(|&i| {
+        (
+            std::cmp::Reverse(last_access[i] - first_write[i]),
+            first_write[i],
+            blocks[i].vstart,
+        )
+    });
+    let mut placed: Vec<(usize, usize, usize, usize)> = Vec::new(); // (at, w, fw, la)
+    let mut peak = 0usize;
+    let mut placement = vec![usize::MAX; blocks.len()];
+    for &i in &order {
+        let w = blocks[i].width;
+        let mut conflicts: Vec<(usize, usize)> = placed
+            .iter()
+            .filter(|&&(_, _, f, l)| !(l < first_write[i] || last_access[i] < f))
+            .map(|&(at, aw, _, _)| (at, aw))
+            .collect();
+        conflicts.sort_unstable();
+        let mut at = compute_base;
+        for (cs, cw) in conflicts {
+            if at + w <= cs {
+                break;
+            }
+            at = at.max(cs + cw);
+        }
+        placement[i] = at;
+        placed.push((at, w, first_write[i], last_access[i]));
+        peak = peak.max(at + w - compute_base);
+    }
+    if peak > orig_peak {
+        return None;
+    }
+
+    // remap every operand field through its block's placement
+    let remap = |r: ColRange| -> Option<ColRange> {
+        let s = r.start as usize;
+        if s < compute_base {
+            return Some(r);
+        }
+        let i = *block_of.get(s)?;
+        if i == usize::MAX || placement[i] == usize::MAX {
+            return None;
+        }
+        Some(ColRange::new(
+            placement[i] + (s - blocks[i].vstart),
+            r.len as usize,
+        ))
+    };
+    let mut out = Vec::with_capacity(steps.len());
+    for step in &steps {
+        let mut instr = step.instr;
+        instr.src_a = remap(instr.src_a)?;
+        if let Some(b) = instr.src_b {
+            instr.src_b = Some(remap(b)?);
+        }
+        instr.dst = remap(instr.dst)?;
+        out.push(Step {
+            instr,
+            category: step.category,
+        });
+    }
+    let mask = placement[mask_block] + (mask_col - blocks[mask_block].vstart);
+    // CompiledRelQuery::spans is documented as allocation order: births
+    // must come out nondecreasing so a re-virtualization stays sound
+    let mut spans: Vec<AllocSpan> = order
+        .iter()
+        .map(|&i| AllocSpan {
+            start: placement[i],
+            width: blocks[i].width,
+            born_step: first_write[i],
+        })
+        .collect();
+    spans.sort_by_key(|s| (s.born_step, s.start));
+    Some(Placed {
+        steps: out,
+        mask_col: mask,
+        peak,
+        spans,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::db::layout::DbLayout;
+    use crate::exec::engine::{exec_steps_native, XbarState};
+    use crate::query::compiler::Compiler;
+    use crate::query::tpch;
+    use crate::util::bits::WORDS;
+    use crate::util::rng::Rng;
+
+    fn layouts() -> (SystemConfig, DbLayout) {
+        let cfg = SystemConfig::default();
+        let l = DbLayout::build(&cfg, &|r| r.records_at_sf(0.01)).unwrap();
+        (cfg, l)
+    }
+
+    /// virtualize + realloc (without value passes) must preserve the
+    /// functional outputs of every TPC-H program on random crossbars.
+    #[test]
+    fn virtualize_then_realloc_is_functionally_identity() {
+        let (cfg, l) = layouts();
+        for q in tpch::all_queries() {
+            for rq in &q.rels {
+                let c = Compiler::compile(rq, l.rel(rq.rel), cfg.xbar_cols).unwrap();
+                let v = virtualize(&c).expect("compiler output virtualizes");
+                let p = realloc(
+                    v.steps.clone(),
+                    &v.blocks,
+                    v.mask_col,
+                    c.compute_base,
+                    c.peak_inter_cells,
+                )
+                .expect("realloc within original peak");
+                assert!(p.peak <= c.peak_inter_cells, "{}", q.name);
+
+                // same random data columns, clean compute area, both ways
+                let mut rng = Rng::new(0xA11C ^ q.name.len() as u64);
+                let mut st = XbarState::new(cfg.xbar_cols);
+                for col in 0..l.rel(rq.rel).compute_base {
+                    for w in 0..WORDS {
+                        st.planes[col][w] = rng.next_u32();
+                    }
+                }
+                let mut s1 = vec![st];
+                let mut s2 = s1.clone();
+                let b = exec_steps_native(&mut s1, &c.steps, c.mask_col);
+                let r = exec_steps_native(&mut s2, &p.steps, p.mask_col);
+                assert_eq!(b.reduces, r.reduces, "{}/{}", q.name, rq.rel.name());
+                assert_eq!(b.mask_counts, r.mask_counts, "{}", q.name);
+            }
+        }
+    }
+
+    #[test]
+    fn realloc_reuses_dead_columns() {
+        // Q1's per-group masks stack under LIFO; interval placement must
+        // reuse them and shrink the peak
+        let (cfg, l) = layouts();
+        let q = tpch::query("Q1").unwrap();
+        let rq = &q.rels[0];
+        let c = Compiler::compile(rq, l.rel(rq.rel), cfg.xbar_cols).unwrap();
+        let v = virtualize(&c).unwrap();
+        let p = realloc(v.steps, &v.blocks, v.mask_col, c.compute_base, c.peak_inter_cells)
+            .unwrap();
+        assert!(
+            p.peak < c.peak_inter_cells,
+            "Q1 peak {} -> {}",
+            c.peak_inter_cells,
+            p.peak
+        );
+    }
+
+    #[test]
+    fn virtual_blocks_are_disjoint_and_cover_spans() {
+        let (cfg, l) = layouts();
+        let q = tpch::query("Q5").unwrap();
+        for rq in &q.rels {
+            let c = Compiler::compile(rq, l.rel(rq.rel), cfg.xbar_cols).unwrap();
+            let v = virtualize(&c).unwrap();
+            assert_eq!(v.blocks.len(), c.spans.len());
+            let mut edge = c.compute_base;
+            for (b, s) in v.blocks.iter().zip(&c.spans) {
+                assert_eq!(b.vstart, edge);
+                assert_eq!(b.width, s.width);
+                edge += b.width;
+            }
+        }
+    }
+}

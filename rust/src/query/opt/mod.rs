@@ -1,0 +1,365 @@
+//! Optimizing pass pipeline over compiled PIM programs.
+//!
+//! The compiler ([`crate::query::compiler`]) emits a naive linear
+//! instruction stream: IN-sets start from an explicitly Reset mask,
+//! repeated predicate sub-chains and the per-group arithmetic fields are
+//! recomputed from scratch, and intermediate columns follow a LIFO
+//! discipline that keeps dead columns allocated. Every wasted instruction
+//! is charged to cycles, energy and endurance in Tables 5–6, so this
+//! module interposes an optimizer between compilation and execution
+//! (mirroring the explicit translation/optimization layer of Seshadri &
+//! Mutlu's in-DRAM bulk-bitwise execution engine):
+//!
+//! * **IN-set prefix peephole** — `Reset m; Eq v0 -> t; Or(m,t)->m; ...`
+//!   becomes `Eq v0 -> m; ...`, dropping the Reset and the first Or.
+//! * **CSE** ([`passes::cse`]) — value-numbering elimination of repeated
+//!   predicate sub-chains and arithmetic field chains (the Q1 per-group
+//!   `(100-l_discount)`/`(100+l_tax)` fields, repeated dictionary Eqs).
+//! * **Valid-AND elision** ([`passes::valid_elide`]) — the final
+//!   `And(mask, VALID)` is dropped when a zero-row interpretation proves
+//!   the predicate already rejects unoccupied rows.
+//! * **Dead-step elimination** ([`passes::dce`]) — backward column-granular
+//!   liveness from the mask column and the reduce reads.
+//! * **Lifetime reallocation** ([`alloc::realloc`]) — replaces the LIFO
+//!   column discipline with first-fit allocation over actual live
+//!   intervals, shrinking `peak_inter_cells` (Table 5 "Inter. cells").
+//!
+//! Correctness contract (enforced by `tests/opt_equivalence.rs`): `-O2`
+//! outputs are bit-identical to `-O0` for every query, total cycles never
+//! increase, and the intermediate-cell peak never grows. Passes only ever
+//! delete or rename; every fallible transform falls back to the safe
+//! `-O1` (peephole + valid-elide + DCE, original columns) and `-O1` falls
+//! back to the untouched program at `-O0`.
+
+mod alloc;
+mod passes;
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::pim::controller::cost;
+
+use super::compiler::{CompiledRelQuery, Step};
+
+/// Optimization level for compiled PIM programs (`-O0`..`-O2`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum OptLevel {
+    /// No passes: execute the compiler's naive stream (golden reference).
+    O0,
+    /// Local cleanups only: IN-set prefix peephole, valid-AND elision,
+    /// dead-step elimination. Column placement is untouched.
+    O1,
+    /// `-O1` plus value-numbering CSE over a virtualized (reuse-free)
+    /// column space and lifetime-based column reallocation.
+    #[default]
+    O2,
+}
+
+impl OptLevel {
+    /// All levels, lowest first.
+    pub const ALL: [OptLevel; 3] = [OptLevel::O0, OptLevel::O1, OptLevel::O2];
+}
+
+impl fmt::Display for OptLevel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            OptLevel::O0 => write!(f, "O0"),
+            OptLevel::O1 => write!(f, "O1"),
+            OptLevel::O2 => write!(f, "O2"),
+        }
+    }
+}
+
+impl FromStr for OptLevel {
+    type Err = String;
+
+    /// Accepts `0|1|2`, `O0|O1|O2` and `-O0|-O1|-O2` (case-insensitive).
+    fn from_str(s: &str) -> Result<OptLevel, String> {
+        let t = s.trim().trim_start_matches('-');
+        let t = t.strip_prefix(['o', 'O']).unwrap_or(t);
+        match t {
+            "0" => Ok(OptLevel::O0),
+            "1" => Ok(OptLevel::O1),
+            "2" => Ok(OptLevel::O2),
+            _ => Err(format!("bad opt level '{s}' (expected -O0, -O1 or -O2)")),
+        }
+    }
+}
+
+/// What the pass pipeline did to one relation's program.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OptStats {
+    /// Instructions before any pass ran.
+    pub steps_before: usize,
+    /// Instructions in the executed program.
+    pub steps_after: usize,
+    /// Per-crossbar stateful-logic cycles before passes.
+    pub cycles_before: u64,
+    /// Per-crossbar cycles of the executed program.
+    pub cycles_after: u64,
+    /// Peak intermediate cells before passes (LIFO allocator).
+    pub inter_before: usize,
+    /// Peak intermediate cells of the executed program.
+    pub inter_after: usize,
+}
+
+impl OptStats {
+    /// Fold another relation's stats into a per-query summary: step and
+    /// cycle counts add, the cell peaks take the max (Table 5 semantics).
+    pub fn merge(&mut self, other: &OptStats) {
+        self.steps_before += other.steps_before;
+        self.steps_after += other.steps_after;
+        self.cycles_before += other.cycles_before;
+        self.cycles_after += other.cycles_after;
+        self.inter_before = self.inter_before.max(other.inter_before);
+        self.inter_after = self.inter_after.max(other.inter_after);
+    }
+}
+
+/// Total per-crossbar stateful-logic cycles of a program (cost model of
+/// [`crate::pim::controller`], same accounting as Table 5).
+pub fn program_cycles(steps: &[Step], xbar_rows: usize) -> u64 {
+    steps
+        .iter()
+        .map(|s| cost(&s.instr, xbar_rows).total_cycles())
+        .sum()
+}
+
+/// Run the pass pipeline over one compiled relation program.
+///
+/// The returned program is functionally bit-identical to the input for
+/// every crossbar content: passes only delete provably redundant steps or
+/// rename intermediate columns. Cycles and `peak_inter_cells` never
+/// increase; any transform that cannot prove itself safe falls back to
+/// the next-lower level.
+pub fn optimize(
+    c: &CompiledRelQuery,
+    level: OptLevel,
+    xbar_rows: usize,
+) -> (CompiledRelQuery, OptStats) {
+    let mut stats = OptStats {
+        steps_before: c.steps.len(),
+        cycles_before: program_cycles(&c.steps, xbar_rows),
+        inter_before: c.peak_inter_cells,
+        steps_after: c.steps.len(),
+        cycles_after: 0,
+        inter_after: c.peak_inter_cells,
+    };
+    if level == OptLevel::O0 {
+        stats.cycles_after = stats.cycles_before;
+        return (c.clone(), stats);
+    }
+
+    let out = if level == OptLevel::O2 {
+        run_o2(c).unwrap_or_else(|| run_o1(c))
+    } else {
+        run_o1(c)
+    };
+
+    stats.steps_after = out.steps.len();
+    stats.cycles_after = program_cycles(&out.steps, xbar_rows);
+    stats.inter_after = out.peak_inter_cells;
+    debug_assert!(stats.cycles_after <= stats.cycles_before);
+    debug_assert!(stats.inter_after <= stats.inter_before);
+    (out, stats)
+}
+
+/// `-O1`: local passes on the original (physical-column) program. Column
+/// placement — and therefore `peak_inter_cells` — is left untouched. The
+/// span metadata is dropped: its `born_step` indices point into the
+/// pre-pass stream, and rather than ship stale def/use data the program
+/// declares none (a re-`optimize` then degrades gracefully to the local
+/// passes, which are idempotent).
+fn run_o1(c: &CompiledRelQuery) -> CompiledRelQuery {
+    let steps = passes::peephole_in_set(c.steps.clone(), c.mask_col);
+    let steps = passes::valid_elide(steps, c.valid_col);
+    let steps = passes::dce(steps, c.mask_col);
+    CompiledRelQuery {
+        steps,
+        spans: Vec::new(),
+        ..c.clone()
+    }
+}
+
+/// `-O2`: virtualize columns (undo LIFO reuse via the compiler's span
+/// metadata), run peephole + CSE + valid-elide + DCE in the reuse-free
+/// space, then reallocate columns by live interval. `None` when any stage
+/// cannot prove itself safe or the reallocation would not keep the cell
+/// peak within the original (the caller then uses `-O1`).
+fn run_o2(c: &CompiledRelQuery) -> Option<CompiledRelQuery> {
+    let virt = alloc::virtualize(c)?;
+    let steps = passes::peephole_in_set(virt.steps, virt.mask_col);
+    let (steps, mask_col) = passes::cse(steps, virt.mask_col, c.compute_base)?;
+    let steps = passes::valid_elide(steps, c.valid_col);
+    let steps = passes::dce(steps, mask_col);
+    let placed = alloc::realloc(
+        steps,
+        &virt.blocks,
+        mask_col,
+        c.compute_base,
+        c.peak_inter_cells,
+    )?;
+    Some(CompiledRelQuery {
+        steps: placed.steps,
+        mask_col: placed.mask_col,
+        peak_inter_cells: placed.peak,
+        spans: placed.spans,
+        ..c.clone()
+    })
+}
+
+/// Render a program as a disassembly listing, one instruction per line.
+pub fn disasm(steps: &[Step]) -> String {
+    use std::fmt::Write;
+    let mut s = String::new();
+    for (i, step) in steps.iter().enumerate() {
+        writeln!(s, "  {i:>4}: {step}").unwrap();
+    }
+    s
+}
+
+/// `pimdb run --explain`: per-relation disassembly of one query's compiled
+/// programs before and after the pass pipeline, with the cycle/cell delta.
+pub fn explain_query(
+    q: &crate::query::ast::Query,
+    layout: &crate::db::layout::DbLayout,
+    xbar_cols: usize,
+    xbar_rows: usize,
+    level: OptLevel,
+) -> Result<String, String> {
+    use std::fmt::Write;
+    use super::compiler::Compiler;
+    let mut s = String::new();
+    writeln!(s, "== explain {} (-{level}) ==", q.name).unwrap();
+    for rq in &q.rels {
+        let c = Compiler::compile(rq, layout.rel(rq.rel), xbar_cols).map_err(|e| e.to_string())?;
+        let (opt, st) = optimize(&c, level, xbar_rows);
+        writeln!(
+            s,
+            "-- {}: before passes ({} steps, {} cycles, {} inter cells) --",
+            rq.rel.name(),
+            st.steps_before,
+            st.cycles_before,
+            st.inter_before
+        )
+        .unwrap();
+        s.push_str(&disasm(&c.steps));
+        writeln!(
+            s,
+            "-- {}: after passes ({} steps, {} cycles, {} inter cells, mask c{}) --",
+            rq.rel.name(),
+            st.steps_after,
+            st.cycles_after,
+            st.inter_after,
+            opt.mask_col
+        )
+        .unwrap();
+        s.push_str(&disasm(&opt.steps));
+    }
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::db::layout::DbLayout;
+    use crate::query::compiler::Compiler;
+    use crate::query::tpch;
+
+    fn compile_all(level: OptLevel) -> Vec<(String, CompiledRelQuery, OptStats)> {
+        let cfg = SystemConfig::default();
+        let layout = DbLayout::build(&cfg, &|r| r.records_at_sf(0.01)).unwrap();
+        let mut out = Vec::new();
+        for q in tpch::all_queries() {
+            for rq in &q.rels {
+                let c = Compiler::compile(rq, layout.rel(rq.rel), cfg.xbar_cols).unwrap();
+                let (o, st) = optimize(&c, level, cfg.xbar_rows);
+                out.push((format!("{}/{}", q.name, rq.rel.name()), o, st));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn opt_level_parses_all_spellings() {
+        for s in ["0", "O0", "o0", "-O0"] {
+            assert_eq!(s.parse::<OptLevel>().unwrap(), OptLevel::O0);
+        }
+        assert_eq!("2".parse::<OptLevel>().unwrap(), OptLevel::O2);
+        assert_eq!("-O1".parse::<OptLevel>().unwrap(), OptLevel::O1);
+        assert!("3".parse::<OptLevel>().is_err());
+        assert!("fast".parse::<OptLevel>().is_err());
+        assert_eq!(OptLevel::default(), OptLevel::O2);
+        assert_eq!(OptLevel::O2.to_string(), "O2");
+    }
+
+    #[test]
+    fn o0_is_identity() {
+        for (name, _o, st) in compile_all(OptLevel::O0) {
+            assert_eq!(st.steps_before, st.steps_after, "{name}");
+            assert_eq!(st.cycles_before, st.cycles_after, "{name}");
+            assert_eq!(st.inter_before, st.inter_after, "{name}");
+        }
+    }
+
+    #[test]
+    fn o2_never_regresses_cycles_or_cells() {
+        for (name, _o, st) in compile_all(OptLevel::O2) {
+            assert!(st.cycles_after <= st.cycles_before, "{name}");
+            assert!(st.inter_after <= st.inter_before, "{name}");
+            assert!(st.steps_after <= st.steps_before, "{name}");
+        }
+    }
+
+    #[test]
+    fn o2_strictly_improves_most_programs() {
+        let all = compile_all(OptLevel::O2);
+        let improved = all
+            .iter()
+            .filter(|(_, _, st)| st.cycles_after < st.cycles_before)
+            .count();
+        // the pipeline must find real waste in the naive streams
+        assert!(
+            improved * 2 > all.len(),
+            "only {improved}/{} programs improved",
+            all.len()
+        );
+    }
+
+    #[test]
+    fn q1_group_arithmetic_collapses_at_o2() {
+        // the per-group (100-discount)/(100+tax) chains are recomputed 6x
+        // by the naive compiler; CSE + DCE must collapse the repeats
+        let cfg = SystemConfig::default();
+        let layout = DbLayout::build(&cfg, &|r| r.records_at_sf(0.01)).unwrap();
+        let q = tpch::query("Q1").unwrap();
+        let rq = &q.rels[0];
+        let c = Compiler::compile(rq, layout.rel(rq.rel), cfg.xbar_cols).unwrap();
+        let (o, st) = optimize(&c, OptLevel::O2, cfg.xbar_rows);
+        assert!(
+            st.steps_after + 20 < st.steps_before,
+            "Q1 {} -> {} steps",
+            st.steps_before,
+            st.steps_after
+        );
+        assert!(st.cycles_after < st.cycles_before);
+        // reduces are never touched: output geometry intact
+        assert_eq!(o.n_reduces, c.n_reduces);
+        assert_eq!(o.groups, c.groups);
+    }
+
+    #[test]
+    fn disasm_lists_every_step() {
+        let cfg = SystemConfig::default();
+        let layout = DbLayout::build(&cfg, &|r| r.records_at_sf(0.01)).unwrap();
+        let q = tpch::query("Q6").unwrap();
+        let c = Compiler::compile(&q.rels[0], layout.rel(q.rels[0].rel), cfg.xbar_cols).unwrap();
+        let d = disasm(&c.steps);
+        assert_eq!(d.lines().count(), c.steps.len());
+        assert!(d.contains("reduce_sum"));
+        let e = explain_query(&q, &layout, cfg.xbar_cols, cfg.xbar_rows, OptLevel::O2).unwrap();
+        assert!(e.contains("before passes"));
+        assert!(e.contains("after passes"));
+    }
+}

@@ -1,0 +1,763 @@
+//! The individual optimizer passes: IN-set prefix peephole, value-
+//! numbering CSE, valid-AND elision (via a zero-row abstract
+//! interpretation) and dead-step elimination.
+//!
+//! All passes reason about instruction *functional* semantics, exactly
+//! mirroring [`crate::exec::engine::exec_instr`]: reduce instructions
+//! observe columns without writing any, `ColumnTransform` is a pure
+//! data-movement no-op, and `And`/`Or` broadcast a single-column second
+//! operand. Each pass only deletes steps or renames column operands, so
+//! instruction costs (which depend on opcode, widths and immediate alone)
+//! never increase.
+
+use std::collections::HashMap;
+
+use crate::pim::isa::{ColRange, Opcode, PimInstruction};
+use crate::query::compiler::Step;
+
+/// How many planes of `src_a` and `src_b` the engine actually reads,
+/// mirroring [`crate::exec::engine::exec_instr`]'s plane accesses (e.g. a
+/// broadcast And reads one plane of its second operand; Add/Mul clip
+/// their reads to the destination width).
+pub(super) fn read_lens(i: &PimInstruction) -> (usize, usize) {
+    let al = i.src_a.len as usize;
+    let bl = i.src_b.map(|b| b.len as usize).unwrap_or(0);
+    let dl = i.dst.len as usize;
+    match i.op {
+        Opcode::EqImm | Opcode::NeImm | Opcode::LtImm | Opcode::GtImm | Opcode::AddImm => (al, 0),
+        Opcode::Eq | Opcode::Lt => (al, bl),
+        Opcode::Add => (al.min(dl), bl.min(dl)),
+        Opcode::Mul => (al.min(dl), bl),
+        Opcode::Set | Opcode::Reset => (0, 0),
+        Opcode::Not => (al, 0),
+        Opcode::And | Opcode::Or => {
+            if bl == 1 && al > 1 {
+                (al, 1) // single-column second operand broadcasts
+            } else {
+                (al, bl.min(al))
+            }
+        }
+        Opcode::ReduceSum | Opcode::ReduceMin | Opcode::ReduceMax | Opcode::ColumnTransform => {
+            (al, 0)
+        }
+    }
+}
+
+/// The columns an instruction fully overwrites; `None` for reduces and
+/// column-transform (reduce results leave through the read phase; the
+/// transform re-orients bits without changing their value).
+fn write_span(i: &PimInstruction) -> Option<ColRange> {
+    let al = i.src_a.len as usize;
+    let d = i.dst;
+    match i.op {
+        Opcode::EqImm | Opcode::NeImm | Opcode::LtImm | Opcode::GtImm | Opcode::Eq | Opcode::Lt => {
+            Some(ColRange::new(d.start as usize, 1))
+        }
+        Opcode::AddImm | Opcode::Not | Opcode::And | Opcode::Or => {
+            Some(ColRange::new(d.start as usize, al))
+        }
+        Opcode::Add | Opcode::Mul | Opcode::Set | Opcode::Reset => Some(d),
+        Opcode::ReduceSum | Opcode::ReduceMin | Opcode::ReduceMax | Opcode::ColumnTransform => None,
+    }
+}
+
+/// The exact column ranges an instruction reads and (fully over-)writes.
+pub(super) fn accesses(i: &PimInstruction) -> (Vec<ColRange>, Option<ColRange>) {
+    let (la, lb) = read_lens(i);
+    let mut reads = Vec::with_capacity(2);
+    if la > 0 {
+        reads.push(ColRange::new(i.src_a.start as usize, la));
+    }
+    if lb > 0 {
+        reads.push(ColRange::new(i.src_b.expect("lb > 0").start as usize, lb));
+    }
+    (reads, write_span(i))
+}
+
+/// Whether a reduce or column-transform step — kept unconditionally: the
+/// former appends to the program's output stream, the latter is the read
+/// phase's re-orientation marker.
+fn side_effect(op: Opcode) -> bool {
+    matches!(
+        op,
+        Opcode::ReduceSum | Opcode::ReduceMin | Opcode::ReduceMax | Opcode::ColumnTransform
+    )
+}
+
+fn overlaps(r: ColRange, start: usize, width: usize) -> bool {
+    (r.start as usize) < start + width && start < r.end()
+}
+
+/// One past the highest column any step touches (sizing scratch tables).
+pub(super) fn max_col(steps: &[Step]) -> usize {
+    let mut m = 0usize;
+    for s in steps {
+        let (reads, write) = accesses(&s.instr);
+        for r in reads.iter().chain(write.iter()) {
+            m = m.max(r.end());
+        }
+    }
+    m
+}
+
+// --- IN-set prefix peephole -------------------------------------------------
+
+/// `Reset m; EqImm v0 -> t; Or(m, t) -> m` (the compiler's IN-set prefix —
+/// OR-accumulation into an explicitly zeroed mask) is `EqImm v0 -> m`:
+/// `0 | eq == eq`. Drops one Reset and one Or per IN-set (and per
+/// `Or`-chain whose first arm lowers to a Reset). `mask_col` is the
+/// program's final read-out column — a write to it is never "dead".
+pub(super) fn peephole_in_set(steps: Vec<Step>, mask_col: usize) -> Vec<Step> {
+    let mut out = Vec::with_capacity(steps.len());
+    let mut i = 0;
+    while i < steps.len() {
+        if i + 2 < steps.len() && in_set_prefix_at(&steps, i, mask_col) {
+            let eq = &steps[i + 1];
+            out.push(Step {
+                instr: PimInstruction {
+                    dst: steps[i].instr.dst,
+                    ..eq.instr
+                },
+                category: eq.category,
+            });
+            i += 3;
+        } else {
+            out.push(steps[i].clone());
+            i += 1;
+        }
+    }
+    out
+}
+
+fn in_set_prefix_at(steps: &[Step], i: usize, mask_col: usize) -> bool {
+    let (r, e, o) = (&steps[i].instr, &steps[i + 1].instr, &steps[i + 2].instr);
+    let matches_shape = r.op == Opcode::Reset
+        && r.dst.len == 1
+        && e.op == Opcode::EqImm
+        && e.dst.len == 1
+        && e.dst.start != r.dst.start
+        // the rewrite stops writing the temporary, so it must not be the
+        // mask column (popcounted at program end) ...
+        && e.dst.start as usize != mask_col
+        // ... and the comparison input must not cover the Reset mask: the
+        // rewrite drops the Reset, so the EqImm would read its pre-Reset
+        // content
+        && !overlaps(e.src_a, r.dst.start as usize, 1)
+        && o.op == Opcode::Or
+        && o.src_a == r.dst
+        && o.src_b == Some(e.dst)
+        && o.dst == r.dst;
+    if !matches_shape {
+        return false;
+    }
+    // after the rewrite the temporary `t` is no longer written here: prove
+    // every later access to it is a write-before-read (the IN-set loop
+    // overwrites t with the next EqImm before the next Or reads it)
+    let t = e.dst.start as usize;
+    for s in &steps[i + 3..] {
+        let (reads, write) = accesses(&s.instr);
+        if reads.iter().any(|r| overlaps(*r, t, 1)) {
+            return false;
+        }
+        if let Some(w) = write {
+            if overlaps(w, t, 1) {
+                return true;
+            }
+        }
+    }
+    true
+}
+
+// --- zero-row abstract interpretation + valid-AND elision -------------------
+
+fn ones(len: usize) -> u128 {
+    if len >= 128 {
+        u128::MAX
+    } else {
+        (1u128 << len) - 1
+    }
+}
+
+fn value_of(vals: &[bool], r: ColRange) -> u128 {
+    let mut v = 0u128;
+    for i in 0..(r.len as usize).min(128) {
+        if vals[r.start as usize + i] {
+            v |= 1 << i;
+        }
+    }
+    v
+}
+
+fn store(vals: &mut [bool], start: usize, len: usize, v: u128) {
+    for i in 0..len.min(128) {
+        vals[start + i] = (v >> i) & 1 == 1;
+    }
+}
+
+/// Execute one instruction on a single all-context row (the abstract
+/// "unoccupied row": every data attribute 0, VALID 0, compute area 0) —
+/// a one-row mirror of [`crate::exec::engine::exec_instr`].
+fn zero_row_exec(vals: &mut [bool], i: &PimInstruction) {
+    let a = i.src_a;
+    let d = i.dst;
+    let al = a.len as usize;
+    let dl = d.len as usize;
+    match i.op {
+        Opcode::EqImm | Opcode::NeImm | Opcode::LtImm | Opcode::GtImm => {
+            let v = value_of(vals, a);
+            let imm = (i.imm as u128) & ones(al);
+            let out = match i.op {
+                Opcode::EqImm => v == imm,
+                Opcode::NeImm => v != imm,
+                Opcode::LtImm => v < imm,
+                Opcode::GtImm => v > imm,
+                _ => unreachable!(),
+            };
+            vals[d.start as usize] = out;
+        }
+        Opcode::Eq | Opcode::Lt => {
+            let b = i.src_b.expect("binary cmp");
+            let va = value_of(vals, a);
+            // second operand zero-extends to the first operand's width
+            let vb = value_of(vals, ColRange::new(b.start as usize, (b.len as usize).min(al)));
+            vals[d.start as usize] = if i.op == Opcode::Eq { va == vb } else { va < vb };
+        }
+        Opcode::AddImm => {
+            let v = value_of(vals, a);
+            let imm = (i.imm as u128) & ones(al);
+            store(vals, d.start as usize, al, (v + imm) & ones(al));
+        }
+        Opcode::Add => {
+            let b = i.src_b.expect("add");
+            let va = value_of(vals, ColRange::new(a.start as usize, al.min(dl)));
+            let vb = value_of(vals, ColRange::new(b.start as usize, (b.len as usize).min(dl)));
+            store(vals, d.start as usize, dl, (va + vb) & ones(dl));
+        }
+        Opcode::Mul => {
+            let b = i.src_b.expect("mul");
+            let va = value_of(vals, ColRange::new(a.start as usize, al.min(dl)));
+            let vb = value_of(vals, b);
+            store(vals, d.start as usize, dl, va.wrapping_mul(vb) & ones(dl));
+        }
+        Opcode::Set => store(vals, d.start as usize, dl, u128::MAX),
+        Opcode::Reset => store(vals, d.start as usize, dl, 0),
+        Opcode::Not => {
+            let v = value_of(vals, a);
+            store(vals, d.start as usize, al, !v & ones(al));
+        }
+        Opcode::And | Opcode::Or => {
+            let b = i.src_b.expect("and/or");
+            let va = value_of(vals, a);
+            let vb = if b.len == 1 && a.len > 1 {
+                // broadcast: replicate the mask bit over the operand width
+                if vals[b.start as usize] {
+                    ones(al)
+                } else {
+                    0
+                }
+            } else {
+                value_of(vals, ColRange::new(b.start as usize, (b.len as usize).min(al)))
+            };
+            let out = if i.op == Opcode::And { va & vb } else { va | vb };
+            store(vals, d.start as usize, al, out);
+        }
+        Opcode::ReduceSum
+        | Opcode::ReduceMin
+        | Opcode::ReduceMax
+        | Opcode::ColumnTransform => {}
+    }
+}
+
+/// Drop the compiler's final `And(mask, VALID) -> mask` when the zero-row
+/// interpretation proves the predicate already evaluates to 0 on
+/// unoccupied rows. Occupied rows carry VALID = 1, so the And only ever
+/// clears unoccupied rows — whose mask bit the predicate already left at
+/// 0. Every TPC-H filter that rejects the all-zero record (any date
+/// range, key equality against a non-zero dictionary id, ...) qualifies.
+pub(super) fn valid_elide(steps: Vec<Step>, valid_col: usize) -> Vec<Step> {
+    let mut vals = vec![false; max_col(&steps) + 1];
+    let mut out = Vec::with_capacity(steps.len());
+    for step in steps {
+        let i = &step.instr;
+        let elidable = i.op == Opcode::And
+            && i.src_b == Some(ColRange::new(valid_col, 1))
+            && i.src_a.len == 1
+            && i.dst == i.src_a
+            && !vals[i.src_a.start as usize];
+        if elidable {
+            continue;
+        }
+        zero_row_exec(&mut vals, i);
+        out.push(step);
+    }
+    out
+}
+
+// --- value-numbering CSE -----------------------------------------------------
+
+/// CSE hash key: two instructions with equal keys compute identical
+/// column contents (opcode + immediate + write width + the per-operand
+/// read widths + the value numbers of every plane they read, in engine
+/// read order). The `(la, lb)` split keeps e.g. two Muls whose flattened
+/// source numbers coincide but whose operand widths differ apart.
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct Key {
+    op: u8,
+    imm: u64,
+    write_w: u16,
+    la: u16,
+    lb: u16,
+    srcs: Vec<u64>,
+}
+
+struct Entry {
+    /// Key-derived value numbers of the write range.
+    vns: Vec<u64>,
+    /// Columns currently holding the value (the last *kept* def).
+    home: Option<usize>,
+}
+
+/// Common-subexpression elimination by value numbering, for programs in
+/// *virtualized* (reuse-free) column space.
+///
+/// Every executed instruction assigns its write range value numbers
+/// derived from its key, so recomputations of the same expression are
+/// recognized even across in-place chains. A recomputation whose previous
+/// result columns are intact is elided; later reads of its destination
+/// are redirected to the surviving copy. Elision is only performed when a
+/// forward scan proves every future read of the destination is fully
+/// contained in it and the surviving copy is not overwritten before its
+/// last redirected use — otherwise the instruction is simply kept.
+///
+/// Returns the new steps and the (possibly redirected) mask column, or
+/// `None` if an internal invariant is violated (the caller falls back to
+/// the un-CSE'd program).
+pub(super) fn cse(
+    steps: Vec<Step>,
+    mask_col: usize,
+    compute_base: usize,
+) -> Option<(Vec<Step>, usize)> {
+    let ncols = max_col(&steps).max(mask_col) + 1;
+    // value number per column; unwritten columns are stable "inputs"
+    // (data/valid columns, plus the zero-initialized compute area).
+    // Input numbers are column ids < 2^32; derived numbers start above.
+    let mut col_vn: Vec<u64> = (0..ncols as u64).collect();
+    let mut redirect: Vec<Option<usize>> = vec![None; ncols];
+    let mut next_vn: u64 = 1 << 32;
+    let mut table: HashMap<Key, Entry> = HashMap::new();
+
+    let mut out: Vec<Step> = Vec::with_capacity(steps.len());
+    for (idx, step) in steps.iter().enumerate() {
+        // 1. rewrite source operands through the redirection map; the
+        //    engine-read prefix of each operand must map contiguously
+        let mut instr = step.instr;
+        let (la, lb) = read_lens(&instr);
+        for (field, l) in [(0usize, la), (1, lb)] {
+            if l == 0 {
+                continue;
+            }
+            let r = if field == 0 {
+                instr.src_a
+            } else {
+                instr.src_b.expect("lb > 0")
+            };
+            let s = r.start as usize;
+            if s < compute_base {
+                continue; // data/valid columns are never redirected
+            }
+            let mapped0 = redirect[s].unwrap_or(s);
+            for k in 1..l {
+                if redirect[s + k].unwrap_or(s + k) != mapped0 + k {
+                    // an elision's forward guarantee was violated
+                    debug_assert!(false, "non-contiguous CSE redirect");
+                    return None;
+                }
+            }
+            if mapped0 != s {
+                let nr = ColRange::new(mapped0, r.len as usize);
+                if field == 0 {
+                    instr.src_a = nr;
+                } else {
+                    instr.src_b = Some(nr);
+                }
+            }
+        }
+
+        let Some(w) = write_span(&instr) else {
+            // reduces / column-transform: pure observers; keep the
+            // cosmetic dst field mirroring the (redirected) source
+            instr.dst = instr.src_a;
+            out.push(Step {
+                instr,
+                category: step.category,
+            });
+            continue;
+        };
+        let (w0, ww) = (w.start as usize, w.len as usize);
+
+        // 2. key + key-derived value numbers for the write range
+        let (reads, _) = accesses(&instr);
+        let mut srcs = Vec::new();
+        for r in &reads {
+            for k in 0..r.len as usize {
+                srcs.push(col_vn[r.start as usize + k]);
+            }
+        }
+        let key = Key {
+            op: instr.op as u8,
+            imm: if instr.op.has_imm() { instr.imm } else { 0 },
+            write_w: ww as u16,
+            la: la as u16,
+            lb: lb as u16,
+            srcs,
+        };
+        let (vns, home) = {
+            let e = table.entry(key.clone()).or_insert_with(|| {
+                let vns: Vec<u64> = (0..ww as u64).map(|k| next_vn + k).collect();
+                next_vn += ww as u64;
+                Entry { vns, home: None }
+            });
+            (e.vns.clone(), e.home)
+        };
+
+        // 3. elide a recomputation whose previous result is intact
+        let home_intact = home.filter(|&h| (0..ww).all(|k| col_vn[h + k] == vns[k]));
+        if let Some(h) = home_intact {
+            if h == w0 {
+                // the destination already holds this exact value; dropping
+                // the write is only safe when no earlier elision still
+                // counts on this step to clear a redirect of these columns
+                if (0..ww).all(|k| redirect[w0 + k].is_none()) {
+                    continue;
+                }
+            } else if elision_safe(&steps[idx + 1..], w0, ww, h, mask_col) {
+                for k in 0..ww {
+                    redirect[w0 + k] = Some(h + k);
+                    col_vn[w0 + k] = vns[k];
+                }
+                continue;
+            }
+        }
+
+        // 4. keep: the write range becomes the value's newest home
+        for k in 0..ww {
+            redirect[w0 + k] = None;
+            col_vn[w0 + k] = vns[k];
+        }
+        table.get_mut(&key).expect("inserted above").home = Some(w0);
+        out.push(Step {
+            instr,
+            category: step.category,
+        });
+    }
+
+    let mask = redirect[mask_col].unwrap_or(mask_col);
+    Some((out, mask))
+}
+
+/// Forward-safety scan for eliding a def of `[d0, d0+w)` whose value
+/// survives at `[h0, h0+w)`: every later read touching the not-yet-
+/// rewritten part of the def must be fully contained in it (so it can be
+/// redirected contiguously), must not mix live and rewritten columns, and
+/// must happen before anything overwrites the home. The final mask
+/// read-out counts as a read at program end.
+fn elision_safe(rest: &[Step], d0: usize, w: usize, h0: usize, mask_col: usize) -> bool {
+    let mut live = vec![true; w];
+    let mut n_live = w;
+    let mut h_written = false;
+    for s in rest {
+        let (reads, write) = accesses(&s.instr);
+        // a write overlapping the home invalidates all later redirects —
+        // flagged before this step's reads: a step that both reads the
+        // dead def and overwrites its home would read interleaved planes
+        if write.is_some_and(|wr| overlaps(wr, h0, w)) {
+            h_written = true;
+        }
+        for r in &reads {
+            if !overlaps(*r, d0, w) {
+                continue;
+            }
+            let rs = r.start as usize;
+            let within = rs >= d0 && r.end() <= d0 + w;
+            if !within || h_written {
+                return false;
+            }
+            if (rs - d0..r.end() - d0).any(|k| !live[k]) {
+                return false; // mixes redirected and rewritten columns
+            }
+        }
+        if let Some(wr) = write {
+            for c in (wr.start as usize)..wr.end() {
+                if c >= d0 && c < d0 + w && live[c - d0] {
+                    live[c - d0] = false;
+                    n_live -= 1;
+                }
+            }
+            if n_live == 0 {
+                return true;
+            }
+        }
+    }
+    // still-live def columns are never read again — except the mask,
+    // which the engine pops at program end
+    if mask_col >= d0 && mask_col < d0 + w && live[mask_col - d0] && h_written {
+        return false;
+    }
+    true
+}
+
+// --- dead-step elimination ---------------------------------------------------
+
+/// Backward column-granular liveness: a step whose entire write range is
+/// dead is removed. Roots are the mask column (popcounted by the engine
+/// after the last step) and the operands of every side-effecting step
+/// (reduces, column-transform), which are kept unconditionally.
+pub(super) fn dce(steps: Vec<Step>, mask_col: usize) -> Vec<Step> {
+    let ncols = max_col(&steps).max(mask_col) + 1;
+    let mut live = vec![false; ncols];
+    live[mask_col] = true;
+    let mut keep = vec![true; steps.len()];
+    for (j, step) in steps.iter().enumerate().rev() {
+        let (reads, write) = accesses(&step.instr);
+        if side_effect(step.instr.op) {
+            for r in &reads {
+                live[r.start as usize..r.end()].fill(true);
+            }
+            continue;
+        }
+        let w = write.expect("non-side-effect ops write");
+        if !live[w.start as usize..w.end()].iter().any(|&l| l) {
+            keep[j] = false;
+            continue;
+        }
+        live[w.start as usize..w.end()].fill(false);
+        for r in &reads {
+            live[r.start as usize..r.end()].fill(true);
+        }
+    }
+    steps
+        .into_iter()
+        .zip(keep)
+        .filter_map(|(s, k)| k.then_some(s))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::engine::{exec_steps_native, XbarState};
+    use crate::pim::endurance::OpCategory;
+    use crate::util::bits::WORDS;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    fn step(instr: PimInstruction) -> Step {
+        Step {
+            instr,
+            category: OpCategory::Filter,
+        }
+    }
+
+    fn random_states(seed: u64, n: usize, data_cols: usize, total: usize) -> Vec<XbarState> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let mut st = XbarState::new(total);
+                for c in 0..data_cols {
+                    for w in 0..WORDS {
+                        st.planes[c][w] = rng.next_u32();
+                    }
+                }
+                st
+            })
+            .collect()
+    }
+
+    /// Original and transformed programs must agree on every observable:
+    /// reduce streams, mask counts, and the data columns (never written).
+    fn assert_equivalent(a: &[Step], b: &[Step], mask_a: usize, mask_b: usize, seed: u64) {
+        let total = max_col(a).max(max_col(b)).max(mask_a).max(mask_b) + 1;
+        let mut sa = random_states(seed, 3, 24, total);
+        let mut sb = sa.clone();
+        let ra = exec_steps_native(&mut sa, a, mask_a);
+        let rb = exec_steps_native(&mut sb, b, mask_b);
+        assert_eq!(ra.reduces, rb.reduces);
+        assert_eq!(ra.mask_counts, rb.mask_counts);
+    }
+
+    fn in_set_program() -> Vec<Step> {
+        let a = ColRange::new(0, 8);
+        let d = ColRange::new(30, 1);
+        let t = ColRange::new(31, 1);
+        vec![
+            step(PimInstruction::unary(Opcode::Reset, d, d)),
+            step(PimInstruction::with_imm(Opcode::EqImm, a, t, 5)),
+            step(PimInstruction::binary(Opcode::Or, d, t, d)),
+            step(PimInstruction::with_imm(Opcode::EqImm, a, t, 9)),
+            step(PimInstruction::binary(Opcode::Or, d, t, d)),
+            step(PimInstruction::unary(Opcode::ReduceSum, d, d)),
+        ]
+    }
+
+    #[test]
+    fn peephole_rewrites_in_set_prefix() {
+        let p = in_set_program();
+        let q = peephole_in_set(p.clone(), 30);
+        assert_eq!(q.len(), p.len() - 2);
+        assert_eq!(q[0].instr.op, Opcode::EqImm);
+        assert_eq!(q[0].instr.dst, ColRange::new(30, 1));
+        assert_equivalent(&p, &q, 30, 30, 11);
+        // the temp being the mask blocks the rewrite: its write is live
+        let kept = peephole_in_set(p.clone(), 31);
+        assert_eq!(kept.len(), p.len());
+        assert_equivalent(&p, &kept, 31, 31, 12);
+    }
+
+    #[test]
+    fn peephole_keeps_pattern_when_temp_is_read_later() {
+        let a = ColRange::new(0, 8);
+        let d = ColRange::new(30, 1);
+        let t = ColRange::new(31, 1);
+        let p = vec![
+            step(PimInstruction::unary(Opcode::Reset, d, d)),
+            step(PimInstruction::with_imm(Opcode::EqImm, a, t, 5)),
+            step(PimInstruction::binary(Opcode::Or, d, t, d)),
+            // t read again without a fresh write: rewrite must not fire
+            step(PimInstruction::binary(Opcode::And, d, t, d)),
+        ];
+        assert_eq!(peephole_in_set(p.clone(), 30).len(), p.len());
+    }
+
+    #[test]
+    fn valid_elide_drops_and_when_zero_row_rejects() {
+        let a = ColRange::new(0, 8);
+        let d = ColRange::new(30, 1);
+        let valid = ColRange::new(20, 1);
+        // eq against a non-zero imm: zero row fails the predicate
+        let p = vec![
+            step(PimInstruction::with_imm(Opcode::EqImm, a, d, 7)),
+            step(PimInstruction::binary(Opcode::And, d, valid, d)),
+        ];
+        let q = valid_elide(p.clone(), 20);
+        assert_eq!(q.len(), 1);
+
+        // le-style predicate passes the zero row: the And must stay
+        let p2 = vec![
+            step(PimInstruction::with_imm(Opcode::LtImm, a, d, 200)),
+            step(PimInstruction::binary(Opcode::And, d, valid, d)),
+        ];
+        assert_eq!(valid_elide(p2.clone(), 20).len(), 2);
+    }
+
+    #[test]
+    fn dce_removes_unobserved_writes() {
+        let a = ColRange::new(0, 8);
+        let d = ColRange::new(30, 1);
+        let dead = ColRange::new(40, 4);
+        let p = vec![
+            step(PimInstruction::with_imm(Opcode::EqImm, a, d, 7)),
+            step(PimInstruction::unary(Opcode::Set, dead, dead)),
+            step(PimInstruction::unary(Opcode::ReduceSum, d, d)),
+        ];
+        let q = dce(p.clone(), 30);
+        assert_eq!(q.len(), 2);
+        assert!(q.iter().all(|s| s.instr.op != Opcode::Set));
+        assert_equivalent(&p, &q, 30, 30, 3);
+    }
+
+    #[test]
+    fn cse_elides_recomputation_and_redirects_reads() {
+        let a = ColRange::new(0, 8);
+        let d1 = ColRange::new(30, 1);
+        let d2 = ColRange::new(31, 1);
+        let m = ColRange::new(32, 1);
+        let p = vec![
+            step(PimInstruction::with_imm(Opcode::EqImm, a, d1, 7)),
+            step(PimInstruction::with_imm(Opcode::EqImm, a, d2, 7)), // dup
+            step(PimInstruction::binary(Opcode::Or, d1, d2, m)),
+            step(PimInstruction::unary(Opcode::ReduceSum, m, m)),
+        ];
+        let (q, mask) = cse(p.clone(), 32, 24).unwrap();
+        assert_eq!(q.len(), 3);
+        assert_eq!(mask, 32);
+        // the Or now reads d1 twice
+        assert_eq!(q[1].instr.src_b, Some(d1));
+        assert_equivalent(&p, &q, 32, mask, 5);
+    }
+
+    #[test]
+    fn cse_keeps_recomputation_when_home_overwritten() {
+        let a = ColRange::new(0, 8);
+        let d1 = ColRange::new(30, 1);
+        let d2 = ColRange::new(31, 1);
+        let p = vec![
+            step(PimInstruction::with_imm(Opcode::EqImm, a, d1, 7)),
+            step(PimInstruction::unary(Opcode::Not, d1, d1)), // destroys home
+            step(PimInstruction::with_imm(Opcode::EqImm, a, d2, 7)),
+            step(PimInstruction::unary(Opcode::ReduceSum, d2, d2)),
+        ];
+        let (q, _) = cse(p.clone(), 31, 24).unwrap();
+        assert_eq!(q.len(), 4, "home destroyed: nothing to elide");
+    }
+
+    #[test]
+    fn cse_tracks_values_through_in_place_chains() {
+        // two identical Not/AddImm chains over the same input: the second
+        // chain's final step is elided (its value survives in the first),
+        // then DCE removes the rest of the second chain
+        let a = ColRange::new(0, 8);
+        let f1 = ColRange::new(30, 8);
+        let f2 = ColRange::new(40, 8);
+        let chain = |f: ColRange| {
+            vec![
+                step(PimInstruction::unary(Opcode::Reset, f, f)),
+                step(PimInstruction::binary(Opcode::Or, a, ColRange::new(20, 1), f)),
+                step(PimInstruction::unary(Opcode::Not, f, f)),
+                step(PimInstruction::with_imm(Opcode::AddImm, f, f, 101)),
+            ]
+        };
+        let mut p = chain(f1);
+        p.extend(chain(f2));
+        p.push(step(PimInstruction::unary(Opcode::ReduceSum, f2, f2)));
+        p.push(step(PimInstruction::unary(Opcode::ReduceSum, f1, f1)));
+        let (q, mask) = cse(p.clone(), 30, 24).unwrap();
+        assert!(q.len() < p.len(), "final AddImm of the repeat must elide");
+        let q = dce(q, mask);
+        // everything of the second chain is gone
+        assert_eq!(q.len(), 4 + 2, "{}", q.len());
+        assert_equivalent(&p, &q, 30, mask, 17);
+    }
+
+    #[test]
+    fn passes_preserve_semantics_on_random_programs() {
+        // random straight-line programs over data cols [0,24) + scratch
+        // [24,64): full pipeline output must match the original on random
+        // crossbar states
+        check("opt-passes-random", 60, |g| {
+            let mut steps = Vec::new();
+            let scratch = |g: &mut crate::util::proptest::Gen| {
+                ColRange::new(24 + g.usize(0, 36), 1)
+            };
+            for _ in 0..g.usize(3, 25) {
+                let a = ColRange::new(g.usize(0, 16), g.usize(1, 8));
+                let d = scratch(g);
+                let instr = match g.u64(0, 6) {
+                    0 => PimInstruction::with_imm(Opcode::EqImm, a, d, g.u64(0, 255)),
+                    1 => PimInstruction::with_imm(Opcode::LtImm, a, d, g.u64(0, 255)),
+                    2 => PimInstruction::unary(Opcode::Reset, d, d),
+                    3 => PimInstruction::binary(Opcode::Or, d, scratch(g), d),
+                    4 => PimInstruction::binary(Opcode::And, d, scratch(g), d),
+                    5 => PimInstruction::unary(Opcode::Not, d, d),
+                    _ => PimInstruction::unary(Opcode::ReduceSum, a, a),
+                };
+                steps.push(step(instr));
+            }
+            let mask = 24 + g.usize(0, 36);
+            let p = peephole_in_set(steps.clone(), mask);
+            let (p, m) = cse(p, mask, 24).unwrap();
+            let p = valid_elide(p, 20);
+            let p = dce(p, m);
+            assert_equivalent(&steps, &p, mask, m, g.u64(0, 1 << 40));
+        });
+    }
+}

@@ -85,13 +85,14 @@ impl Experiments {
 }
 
 /// Experiment ids accepted by `pimdb report --exp`.
-pub const EXPERIMENTS: [&str; 16] = [
+pub const EXPERIMENTS: [&str; 17] = [
     "table1",
     "table2",
     "table3",
     "table4",
     "table5",
     "table6",
+    "opt",
     "fig8",
     "fig9",
     "fig10",
@@ -122,6 +123,7 @@ pub fn print_experiment(
         "table4" => tables::table4(cfg),
         "table5" => tables::table5(exps.ok_or("needs runs")?),
         "table6" => tables::table6(exps.ok_or("needs runs")?),
+        "opt" => tables::table_opt(exps.ok_or("needs runs")?),
         "fig8" => figures::fig8(exps.ok_or("needs runs")?),
         "fig9" => figures::fig9(exps.ok_or("needs runs")?),
         "fig10" => figures::fig10(cfg),

@@ -201,6 +201,53 @@ pub fn table6(exps: &Experiments) {
     print!("{}", table6_string(exps));
 }
 
+/// Optimizer impact rendered to a string (golden-snapshot friendly):
+/// per query, compiled-vs-executed instruction and cycle counts and the
+/// intermediate-cell peaks, at the opt level the runs used.
+pub fn table_opt_string(exps: &Experiments) -> String {
+    use std::fmt::Write;
+    let mut s = String::new();
+    writeln!(
+        s,
+        "== Optimizer impact (-{}): compiled -> executed ==",
+        exps.cfg.opt_level
+    )
+    .unwrap();
+    writeln!(
+        s,
+        "{:<8} {:>7} {:>7} {:>10} {:>10} {:>8} {:>6} {:>6}",
+        "Query", "Steps", "Steps'", "Cycles", "Cycles'", "Saved%", "Inter", "Inter'"
+    )
+    .unwrap();
+    for p in &exps.pairs {
+        let o = &p.pim.metrics.opt;
+        let saved = if o.cycles_before > 0 {
+            100.0 * (o.cycles_before - o.cycles_after) as f64 / o.cycles_before as f64
+        } else {
+            0.0
+        };
+        writeln!(
+            s,
+            "{:<8} {:>7} {:>7} {:>10} {:>10} {:>7.1}% {:>6} {:>6}",
+            p.query.name,
+            o.steps_before,
+            o.steps_after,
+            o.cycles_before,
+            o.cycles_after,
+            saved,
+            o.inter_before,
+            o.inter_after
+        )
+        .unwrap();
+    }
+    s
+}
+
+/// Optimizer impact: what the `-O` pass pipeline saved per query.
+pub fn table_opt(exps: &Experiments) {
+    print!("{}", table_opt_string(exps));
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -222,6 +269,7 @@ mod tests {
         };
         assert!(table5_string(&exps).starts_with("== Table 5"));
         assert!(table6_string(&exps).starts_with("== Table 6"));
+        assert!(table_opt_string(&exps).starts_with("== Optimizer impact (-O2)"));
     }
 
     #[test]

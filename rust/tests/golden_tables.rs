@@ -1,7 +1,16 @@
-//! Golden snapshot of the Table 5/6-style report output for a fixed
+//! Golden snapshots of the Table 5/6-style report output for a fixed
 //! seed/scale, so report regressions are caught by `cargo test`.
 //!
-//! The snapshot lives at `tests/golden/tables_sf0.002_seed42.txt`.
+//! Two snapshots exist since the optimizer landed:
+//!
+//! * `tests/golden/tables_sf0.002_seed42.txt` — pinned at **-O0**: the
+//!   compiler's naive instruction streams. This is the original pre-
+//!   optimizer reference and must never move unless the compiler itself
+//!   changes.
+//! * `tests/golden/tables_sf0.002_seed42_O2.txt` — the **-O2** default
+//!   the engine actually runs: fewer cycles, never more intermediate
+//!   cells.
+//!
 //! Semantics (PR 2 removed the *silent* self-bless from PR 1):
 //!
 //! * snapshot present — rendered tables must match it byte-for-byte;
@@ -13,10 +22,10 @@
 //!   blessing run can never masquerade as a passing drift check there;
 //! * `PIMDB_BLESS=1` — re-bless after an intentional change, then commit.
 //!
-//! The authoring environments of PR 1 and PR 2 had no Rust toolchain, so
-//! the file could not be generated there; the first `cargo test` run on a
-//! real toolchain produces it and the warning says to commit it.
-//! Independently of the snapshot, the test always asserts the rendering
+//! The authoring environments of PRs 1–3 had no Rust toolchain, so the
+//! files could not be generated there; the first `cargo test` run on a
+//! real toolchain produces them and the warning says to commit them.
+//! Independently of the snapshots, the test always asserts the rendering
 //! is byte-identical between serial and 8-way parallel execution —
 //! determinism and parallelism-independence are checked on every run.
 
@@ -25,12 +34,14 @@ use std::path::PathBuf;
 
 use pimdb::config::SystemConfig;
 use pimdb::exec::pimdb::EngineKind;
+use pimdb::query::opt::OptLevel;
 use pimdb::report::{tables, Experiments};
 
-fn render(parallelism: usize) -> String {
+fn render(parallelism: usize, opt_level: OptLevel) -> String {
     let cfg = SystemConfig {
         sim_sf: 0.002,
         parallelism,
+        opt_level,
         ..SystemConfig::default()
     };
     let exps = Experiments::run(&cfg, EngineKind::Native).unwrap();
@@ -41,24 +52,15 @@ fn render(parallelism: usize) -> String {
     )
 }
 
-#[test]
-fn tables_5_6_golden_snapshot() {
-    let serial = render(1);
-    let parallel = render(8);
-    assert_eq!(
-        serial, parallel,
-        "report tables must not depend on host parallelism"
-    );
-
-    let path =
-        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/tables_sf0.002_seed42.txt");
+fn check_snapshot(rendered: &str, file: &str) {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(file);
     let blessing = std::env::var("PIMDB_BLESS").is_ok();
     if !blessing && path.exists() {
         let want = fs::read_to_string(&path).unwrap();
         assert_eq!(
-            serial, want,
-            "table 5/6 snapshot drifted; if intentional, re-bless with \
-             PIMDB_BLESS=1 cargo test -q and commit the file"
+            rendered, want,
+            "table 5/6 snapshot {file} drifted; if intentional, re-bless \
+             with PIMDB_BLESS=1 cargo test -q and commit the file"
         );
         return;
     }
@@ -70,11 +72,35 @@ fn tables_5_6_golden_snapshot() {
         );
     }
     fs::create_dir_all(path.parent().unwrap()).unwrap();
-    fs::write(&path, &serial).unwrap();
+    fs::write(&path, rendered).unwrap();
     eprintln!(
         "WARNING: golden snapshot was missing; blessed {} from this run — \
          commit it, or the drift check guards nothing (CI refuses to run \
          with an uncommitted snapshot)",
         path.display()
     );
+}
+
+/// The original reference, pinned at -O0 (the naive compiler streams).
+#[test]
+fn tables_5_6_golden_snapshot_o0() {
+    let serial = render(1, OptLevel::O0);
+    let parallel = render(8, OptLevel::O0);
+    assert_eq!(
+        serial, parallel,
+        "report tables must not depend on host parallelism"
+    );
+    check_snapshot(&serial, "tests/golden/tables_sf0.002_seed42.txt");
+}
+
+/// The -O2 default the engine executes.
+#[test]
+fn tables_5_6_golden_snapshot_o2() {
+    let serial = render(1, OptLevel::O2);
+    let parallel = render(8, OptLevel::O2);
+    assert_eq!(
+        serial, parallel,
+        "report tables must not depend on host parallelism"
+    );
+    check_snapshot(&serial, "tests/golden/tables_sf0.002_seed42_O2.txt");
 }

@@ -79,7 +79,13 @@ fn rand_pred(g: &mut Gen, rel: RelId, depth: usize) -> Pred {
 
 #[test]
 fn random_filters_match_oracle() {
+    // the default config runs the -O2 optimizer pipeline, so every case
+    // also differential-tests the passes against -O0 and the baseline
     let cfg = SystemConfig::default();
+    let cfg_o0 = SystemConfig {
+        opt_level: pimdb::query::opt::OptLevel::O0,
+        ..SystemConfig::default()
+    };
     let db = Database::generate(0.001, 77);
     let rels = [
         RelId::Lineitem,
@@ -105,12 +111,24 @@ fn random_filters_match_oracle() {
             .expect("compile+run");
         let base = baseline::run_query(&cfg, &db, &q);
         assert_eq!(pim.output, base.output, "filter {:?}", q.rels[0].filter);
+        let unopt = engine::run_query(&cfg_o0, &db, &q, engine::EngineKind::Native)
+            .expect("compile+run at -O0");
+        assert_eq!(pim.output, unopt.output, "-O2 drift on {:?}", q.rels[0].filter);
+        assert!(
+            pim.metrics.cycles.total() <= unopt.metrics.cycles.total(),
+            "-O2 cycles grew on {:?}",
+            q.rels[0].filter
+        );
     });
 }
 
 #[test]
 fn random_aggregates_match_oracle() {
     let cfg = SystemConfig::default();
+    let cfg_o0 = SystemConfig {
+        opt_level: pimdb::query::opt::OptLevel::O0,
+        ..SystemConfig::default()
+    };
     let db = Database::generate(0.001, 78);
     check("random-aggregates", 25, |g| {
         let rel = *g.pick(&[RelId::Lineitem, RelId::Partsupp, RelId::Customer]);
@@ -145,6 +163,13 @@ fn random_aggregates_match_oracle() {
         assert_eq!(
             pim.output, base.output,
             "filter {:?} aggs {:?}",
+            q.rels[0].filter, q.rels[0].aggregates
+        );
+        let unopt = engine::run_query(&cfg_o0, &db, &q, engine::EngineKind::Native)
+            .expect("compile+run at -O0");
+        assert_eq!(
+            pim.output, unopt.output,
+            "-O2 drift: filter {:?} aggs {:?}",
             q.rels[0].filter, q.rels[0].aggregates
         );
     });
