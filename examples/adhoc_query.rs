@@ -1,5 +1,6 @@
-//! Ad-hoc text queries: parse a PQL pipeline, run it on PIMDB and the
-//! column-store baseline, and read the diagnostics when the text is wrong.
+//! Ad-hoc text queries on the service API: prepare a PQL pipeline, read
+//! typed rows, watch the plan cache, and see spanned diagnostics when the
+//! text is wrong.
 //!
 //! Like the other files in `examples/`, this is a library-usage sketch —
 //! the directory sits outside the `rust/` package, so cargo does not
@@ -9,15 +10,16 @@
 //!       'from supplier | filter s_acctbal > 912.00 and s_nationkey in region("AFRICA") | aggregate count() as n, avg(s_acctbal) as avg_bal' \
 //!       --baseline
 
+use pimdb::api::Pimdb;
 use pimdb::config::SystemConfig;
 use pimdb::db::dbgen::Database;
-use pimdb::exec::pimdb::{EngineKind, PimSession};
+use pimdb::error::PimdbError;
 use pimdb::exec::baseline;
-use pimdb::query::lang::parse_program;
 
-fn main() -> Result<(), String> {
-    let cfg = SystemConfig::default();
-    let db = Database::generate(0.01, 42);
+fn main() -> Result<(), PimdbError> {
+    // one owned service handle: the PIM database copy is resident, the
+    // plan cache amortizes compilation across repeated templates
+    let db = Pimdb::open(SystemConfig::default(), Database::generate(0.01, 42))?;
 
     // 1. any filter/aggregate the PIM substrate supports is a string now —
     //    this SUPPLIER query is hardcoded nowhere in the crate
@@ -27,32 +29,46 @@ fn main() -> Result<(), String> {
         | filter s_acctbal > 912.00 and s_nationkey in region("AFRICA")
         | aggregate count() as n, avg(s_acctbal) as avg_bal
     "#;
-    let queries = parse_program(src).map_err(|d| d.render(src))?;
-
-    // 2. one resident PIM database copy serves the whole batch
-    let mut session = PimSession::new(&cfg, &db)?;
-    let reports = session.run_queries(&queries, EngineKind::Native)?;
-    for (q, r) in queries.iter().zip(&reports) {
-        println!("{}: {} suppliers selected", q.name, r.output.selected[0].1);
-        for (label, value) in &r.output.groups[0].values {
-            println!("  {label} = {value}");
+    let stmt = db.prepare(src)?;
+    let result = stmt.execute()?;
+    println!("{}:", result.query_name());
+    for row in result.rows() {
+        for (col, value) in row.cells() {
+            println!("  {col} = {value}");
         }
-        // 3. cross-engine equivalence: the baseline computes the same
-        //    operations on the host's column store
-        let base = baseline::run_query(&cfg, &db, q);
-        assert_eq!(r.output, base.output, "engines must agree");
-        println!(
-            "  PIMDB {:.3} ms vs baseline {:.3} ms (modelled at SF={})",
-            r.metrics.exec_time_s * 1e3,
-            base.metrics.exec_time_s * 1e3,
-            cfg.report_sf,
-        );
     }
 
-    // 4. mistakes come back as spanned diagnostics, not panics
+    // 2. cross-engine equivalence: the baseline computes the same
+    //    operations on the host's column store
+    let base = baseline::run_query(db.cfg(), db.database(), stmt.query());
+    assert_eq!(result.raw_report().output, base.output, "engines must agree");
+    println!(
+        "  PIMDB {:.3} ms vs baseline {:.3} ms (modelled at SF={})",
+        result.metrics().exec_time_s * 1e3,
+        base.metrics.exec_time_s * 1e3,
+        db.cfg().report_sf,
+    );
+
+    // 3. re-preparing the same template — reformatted, re-aliased — is a
+    //    plan-cache hit: compilation ran once
+    let again = db.prepare(
+        "from supplier | filter s_acctbal > 912.00 \
+           and s_nationkey in region(\"AFRICA\") \
+         | aggregate count() as how_many, avg(s_acctbal) as mean_bal",
+    )?;
+    let counters = db.plan_cache_counters();
+    println!(
+        "plan cache after re-prepare: {} hit(s), {} miss(es)",
+        counters.hits, counters.misses
+    );
+    assert_eq!(counters.hits, 1);
+    let _ = again.execute()?;
+
+    // 4. mistakes come back as spanned diagnostics, not panics — the
+    //    typed error carries the source and renders the caret listing
     let bad = "from supplier | filter s_acctbal > date(1994-01-01)";
-    if let Err(d) = parse_program(bad) {
-        println!("\nas expected, a type error renders as:\n{}", d.render(bad));
+    if let Err(e) = db.prepare(bad) {
+        println!("\nas expected, a type error renders as:\n{e}");
     }
     Ok(())
 }

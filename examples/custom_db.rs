@@ -1,19 +1,20 @@
 //! Ad-hoc analytics on the public API: build your own filter+aggregate
-//! over any PIM relation — the paper's programming model (§3.1) as a
+//! AST over any PIM relation — the paper's programming model (§3.1) as a
 //! library. Here: "total supply cost of well-stocked cheap part offers"
 //! over PARTSUPP, a query TPC-H does not ship.
 //!
 //!     cargo run --release --example custom_db
 
+use pimdb::api::Pimdb;
 use pimdb::config::SystemConfig;
 use pimdb::db::dbgen::Database;
 use pimdb::db::schema::RelId;
-use pimdb::exec::{baseline, pimdb as engine};
+use pimdb::error::PimdbError;
+use pimdb::exec::baseline;
 use pimdb::query::ast::*;
 
-fn main() -> Result<(), String> {
-    let cfg = SystemConfig::default();
-    let db = Database::generate(0.01, 7);
+fn main() -> Result<(), PimdbError> {
+    let db = Pimdb::open(SystemConfig::default(), Database::generate(0.01, 7))?;
 
     // SELECT SUM(ps_supplycost * ps_availqty), COUNT(*), MAX(ps_availqty)
     // FROM partsupp
@@ -56,18 +57,19 @@ fn main() -> Result<(), String> {
         }],
     };
 
-    let pim = engine::run_query(&cfg, &db, &query, engine::EngineKind::Native)?;
-    let base = baseline::run_query(&cfg, &db, &query);
-    assert_eq!(pim.output, base.output, "PIM must equal the host oracle");
+    let stmt = db.prepare(&query)?;
+    let pim = stmt.execute()?;
+    let base = baseline::run_query(db.cfg(), db.database(), &query);
+    assert_eq!(pim.raw_report().output, base.output, "PIM must equal the host oracle");
 
-    let g = &pim.output.groups[0];
     println!("custom PARTSUPP analytics (SF=0.01):");
-    for (label, v) in &g.values {
+    let row = pim.rows().row(0).expect("one ungrouped row");
+    for (label, v) in row.cells() {
         println!("  {label} = {v}");
     }
     println!(
         "modelled speedup over in-memory baseline at SF=1000: {:.1}x",
-        base.metrics.exec_time_s / pim.metrics.exec_time_s
+        base.metrics.exec_time_s / pim.metrics().exec_time_s
     );
     Ok(())
 }

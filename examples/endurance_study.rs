@@ -4,20 +4,23 @@
 //!
 //!     cargo run --release --example endurance_study [-- SF]
 
+use pimdb::api::{Pimdb, QuerySource};
 use pimdb::config::SystemConfig;
 use pimdb::db::dbgen::Database;
-use pimdb::exec::pimdb as engine;
+use pimdb::error::PimdbError;
 use pimdb::query::tpch;
 use pimdb::util::stats::eng;
 
-fn main() -> Result<(), String> {
+fn main() -> Result<(), PimdbError> {
     let sf: f64 = std::env::args()
         .nth(1)
         .map(|s| s.parse().unwrap_or(0.005))
         .unwrap_or(0.005);
-    let mut cfg = SystemConfig::default();
-    cfg.sim_sf = sf;
-    let db = Database::generate(sf, 42);
+    let cfg = SystemConfig {
+        sim_sf: sf,
+        ..SystemConfig::default()
+    };
+    let db = Pimdb::open(cfg, Database::generate(sf, 42))?;
 
     const RRAM_ENDURANCE: f64 = 1e12; // [44]
     println!(
@@ -25,8 +28,8 @@ fn main() -> Result<(), String> {
         "Query", "ops/cell/exec", "10yr required", "years @1e12", "status"
     );
     for q in tpch::all_queries() {
-        let r = engine::run_query(&cfg, &db, &q, engine::EngineKind::Native)?;
-        let m = &r.metrics;
+        let r = db.prepare(QuerySource::Ast(&q))?.execute()?;
+        let m = r.metrics();
         // executions until the budget is spent, at 100% duty cycle
         let execs = RRAM_ENDURANCE / m.ops_per_cell.max(1e-12);
         let years = execs * m.exec_time_s / (365.25 * 24.0 * 3600.0);

@@ -1,41 +1,48 @@
-//! Quickstart: generate a tiny TPC-H database, run one query on PIMDB,
-//! compare with the in-memory baseline.
+//! Quickstart: generate a tiny TPC-H database, open a PIMDB service
+//! handle, run one prepared query, compare with the in-memory baseline.
 //!
 //!     cargo run --release --example quickstart
 
+use pimdb::api::{Pimdb, QuerySource};
 use pimdb::config::SystemConfig;
 use pimdb::db::dbgen::Database;
-use pimdb::exec::{baseline, pimdb as engine};
-use pimdb::query::tpch;
+use pimdb::error::PimdbError;
+use pimdb::exec::baseline;
 
-fn main() -> Result<(), String> {
+fn main() -> Result<(), PimdbError> {
     // 1. system configuration (paper Table 3 defaults; everything is a
     //    `--set`-able knob, see SystemConfig)
     let cfg = SystemConfig::default();
 
-    // 2. deterministic TPC-H data at a laptop-friendly scale factor
-    let db = Database::generate(0.002, 42);
+    // 2. the service handle owns a deterministic TPC-H database at a
+    //    laptop-friendly scale factor (the PIM copy loads lazily, once)
+    let db = Pimdb::open(cfg, Database::generate(0.002, 42))?;
 
-    // 3. one of the paper's 19 queries (Q6: filter + in-PIM aggregation)
-    let q = tpch::query("Q6").ok_or("query not found")?;
+    // 3. one of the paper's 19 queries (Q6: filter + in-PIM aggregation),
+    //    prepared once: parse -> compile -> optimize, cached by AST hash
+    let q6 = db.prepare(QuerySource::Tpch("Q6"))?;
 
-    // 4. PIMDB: compiles the query to PIM requests, executes the
-    //    bulk-bitwise program, and models timing/energy at SF=1000
-    let pim = engine::run_query(&cfg, &db, &q, engine::EngineKind::Native)?;
+    // 4. execute from &db: runs the bulk-bitwise program over the shard
+    //    pool and models timing/energy at SF=1000
+    let pim = q6.execute()?;
 
     // 5. the same operations on the host's column store
-    let base = baseline::run_query(&cfg, &db, &q);
+    let base = baseline::run_query(db.cfg(), db.database(), q6.query());
 
-    println!("Q6 revenue (x100 scaling): {}", pim.output.groups[0].values[0].1);
-    println!("selected records (sim): {}", pim.output.selected[0].1);
-    assert_eq!(pim.output, base.output, "engines must agree");
+    // typed rows decode the schema encodings; raw_report() keeps the
+    // engine-level view for cross-engine equivalence checks
+    let row = pim.rows().row(0).expect("Q6 has one group");
+    println!("Q6 {} = {}", row.cells()[0].0, row.cells()[0].1);
+    println!("selected records (sim): {}", pim.raw_report().output.selected[0].1);
+    assert_eq!(pim.raw_report().output, base.output, "engines must agree");
 
+    let m = pim.metrics();
     println!(
         "PIMDB {:.3} ms vs baseline {:.1} ms -> speedup {:.1}x, energy saving {:.1}x",
-        pim.metrics.exec_time_s * 1e3,
+        m.exec_time_s * 1e3,
         base.metrics.exec_time_s * 1e3,
-        base.metrics.exec_time_s / pim.metrics.exec_time_s,
-        base.metrics.total_energy_pj() / pim.metrics.total_energy_pj()
+        base.metrics.exec_time_s / m.exec_time_s,
+        base.metrics.total_energy_pj() / m.total_energy_pj()
     );
     Ok(())
 }

@@ -1,21 +1,23 @@
 //! End-to-end driver: the full paper workload on a real (small) dataset.
 //!
-//! Generates TPC-H data, runs all 19 evaluated queries on PIMDB and on the
-//! in-memory baseline, verifies the functional outputs agree, and prints
-//! the headline table (speedup / LLC-miss reduction / energy saving) plus
-//! the paper-shape checks. This is the run recorded in EXPERIMENTS.md.
+//! Opens one PIMDB service handle, prepares and runs all 19 evaluated
+//! queries on PIMDB and on the in-memory baseline, verifies the
+//! functional outputs agree, and prints the headline table (speedup /
+//! LLC-miss reduction / energy saving) plus the paper-shape checks. This
+//! is the run recorded in EXPERIMENTS.md.
 //!
 //!     cargo run --release --example tpch_analytics [-- SF [native|pjrt]]
 
+use pimdb::api::{EngineKind, Pimdb, QuerySource};
 use pimdb::config::SystemConfig;
 use pimdb::db::dbgen::Database;
-use pimdb::exec::pimdb::EngineKind;
-use pimdb::exec::{baseline, pimdb as engine};
+use pimdb::error::PimdbError;
+use pimdb::exec::baseline;
 use pimdb::query::ast::QueryKind;
 use pimdb::query::tpch;
 use pimdb::util::stats::eng;
 
-fn main() -> Result<(), String> {
+fn main() -> Result<(), PimdbError> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let sf: f64 = args.first().map(|s| s.parse().unwrap_or(0.01)).unwrap_or(0.01);
     let engine_kind = match args.get(1).map(|s| s.as_str()) {
@@ -23,11 +25,13 @@ fn main() -> Result<(), String> {
         _ => EngineKind::Native,
     };
 
-    let mut cfg = SystemConfig::default();
-    cfg.sim_sf = sf;
+    let cfg = SystemConfig {
+        sim_sf: sf,
+        ..SystemConfig::default()
+    };
     println!("generating TPC-H data at SF={sf} ...");
     let t0 = std::time::Instant::now();
-    let db = Database::generate(sf, 42);
+    let db = Pimdb::open(cfg, Database::generate(sf, 42))?; // PIM copy loads once
     println!("generated in {:.2?}", t0.elapsed());
 
     println!(
@@ -38,15 +42,15 @@ fn main() -> Result<(), String> {
     let mut filter_speedups = Vec::new();
     let mut full_speedups = Vec::new();
     let wall = std::time::Instant::now();
-    let mut session = engine::PimSession::new(&cfg, &db)?; // load PIM copy once
     for q in tpch::all_queries() {
-        let pim = session.run_query(&q, engine_kind)?;
-        let base = baseline::run_query(&cfg, &db, &q);
-        let ok = pim.output == base.output;
+        let pim = db.prepare(QuerySource::Ast(&q))?.execute_on(engine_kind)?;
+        let base = baseline::run_query(db.cfg(), db.database(), &q);
+        let ok = pim.raw_report().output == base.output;
         if !ok {
             mismatches += 1;
         }
-        let speedup = base.metrics.exec_time_s / pim.metrics.exec_time_s;
+        let m = pim.metrics();
+        let speedup = base.metrics.exec_time_s / m.exec_time_s;
         match q.kind {
             QueryKind::Full => full_speedups.push(speedup),
             QueryKind::FilterOnly => filter_speedups.push(speedup),
@@ -54,11 +58,11 @@ fn main() -> Result<(), String> {
         println!(
             "{:<8} {:>10}s {:>10}s {:>8.1}x {:>8.1}x {:>8.2}x  {}",
             q.name,
-            eng(pim.metrics.exec_time_s),
+            eng(m.exec_time_s),
             eng(base.metrics.exec_time_s),
             speedup,
-            base.metrics.llc_misses as f64 / pim.metrics.llc_misses.max(1) as f64,
-            base.metrics.total_energy_pj() / pim.metrics.total_energy_pj(),
+            base.metrics.llc_misses as f64 / m.llc_misses.max(1) as f64,
+            base.metrics.total_energy_pj() / m.total_energy_pj(),
             if ok { "match" } else { "MISMATCH" }
         );
     }
@@ -72,7 +76,8 @@ fn main() -> Result<(), String> {
     println!("filter-only speedups: {fmin:.1}x - {fmax:.1}x   (paper: 1.6x - 18x, Q11 lowest)");
     println!("full-query  speedups: {gmin:.1}x - {gmax:.1}x   (paper: 62x - 787x)");
     if mismatches > 0 {
-        return Err(format!("{mismatches} functional mismatches"));
+        eprintln!("error: {mismatches} functional mismatches");
+        std::process::exit(1);
     }
     println!("all functional outputs match the baseline oracle");
     Ok(())

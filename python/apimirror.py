@@ -1,0 +1,291 @@
+"""Python mirror of the plan-cache key normalization in
+``rust/src/api/cache.rs`` (``plan_key`` / ``plan_fingerprint``).
+
+The authoring environment has no Rust toolchain, so — like
+``optmirror.py`` for the optimizer passes — the cache-key algorithm is
+ported line by line to Python and fuzz-validated here before the Rust
+side is trusted. Two artifacts keep the implementations from drifting:
+
+* the byte format is identical (version byte, length-prefixed UTF-8
+  strings, little-endian integers, one tag byte per enum variant, FNV-1a
+  64-bit), and
+* the *default-schema fingerprint* is pinned to the same literal constant
+  in both languages (``DEFAULT_FINGERPRINT`` here, asserted against
+  ``plan_fingerprint(&SystemConfig::default())`` in the Rust unit tests)
+  — any one-sided format change breaks one of the two suites.
+
+Queries are plain tuples/dicts here (Python has no ``ast::Query``):
+
+``query``:  ``{"kind": "full"|"filter_only", "name": str, "rels": [rel]}``
+``rel``:    ``{"rel": str, "filter": pred, "group_by": [str],
+              "aggregates": [{"kind": str, "expr": vexpr, "label": str}]}``
+``pred``:   ``("cmp_imm", attr, op, value) | ("in_set", attr, values)
+            | ("between", attr, lo, hi) | ("cmp_cols", a, op, b)
+            | ("and", [pred]) | ("or", [pred]) | ("not", pred) | ("true",)``
+``vexpr``:  ``("attr", a) | ("one",) | ("mul_attrs", a, b)
+            | ("mul_complement", attr, scale, other)
+            | ("mul_sum", attr, scale, other)
+            | ("mul_complement_sum", attr, s1, o1, s2, o2)``
+"""
+
+from __future__ import annotations
+
+FORMAT_VERSION = 1
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x00000100000001B3
+MASK64 = (1 << 64) - 1
+
+CMP_TAGS = {"eq": 0, "ne": 1, "lt": 2, "le": 3, "gt": 4, "ge": 5}
+AGG_TAGS = {"sum": 0, "count": 1, "min": 2, "max": 3, "avg": 4}
+ENC_TAGS = {"uint": 0, "dict": 1, "date": 2, "money": 3}
+OPT_TAGS = {"O0": 0, "O1": 1, "O2": 2}
+KIND_TAGS = {"full": 0, "filter_only": 1}
+
+
+class Fnv:
+    """Incremental FNV-1a 64-bit hasher (mirrors ``cache::Fnv``)."""
+
+    def __init__(self) -> None:
+        self.state = FNV_OFFSET
+
+    def bytes(self, bs: bytes) -> None:
+        s = self.state
+        for b in bs:
+            s = ((s ^ b) * FNV_PRIME) & MASK64
+        self.state = s
+
+    def u8(self, v: int) -> None:
+        self.bytes(bytes([v & 0xFF]))
+
+    def u32(self, v: int) -> None:
+        self.bytes((v & 0xFFFFFFFF).to_bytes(4, "little"))
+
+    def u64(self, v: int) -> None:
+        self.bytes((v & MASK64).to_bytes(8, "little"))
+
+    def i64(self, v: int) -> None:
+        self.bytes((v & MASK64).to_bytes(8, "little"))  # two's complement
+
+    def str(self, s: str) -> None:
+        raw = s.encode("utf-8")
+        self.u32(len(raw))
+        self.bytes(raw)
+
+
+def _hash_pred(h: Fnv, p: tuple) -> None:
+    tag = p[0]
+    if tag == "cmp_imm":
+        h.u8(0)
+        h.str(p[1])
+        h.u8(CMP_TAGS[p[2]])
+        h.u64(p[3])
+    elif tag == "in_set":
+        h.u8(1)
+        h.str(p[1])
+        h.u32(len(p[2]))
+        for v in p[2]:
+            h.u64(v)
+    elif tag == "between":
+        h.u8(2)
+        h.str(p[1])
+        h.u64(p[2])
+        h.u64(p[3])
+    elif tag == "cmp_cols":
+        h.u8(3)
+        h.str(p[1])
+        h.u8(CMP_TAGS[p[2]])
+        h.str(p[3])
+    elif tag == "and":
+        h.u8(4)
+        h.u32(len(p[1]))
+        for q in p[1]:
+            _hash_pred(h, q)
+    elif tag == "or":
+        h.u8(5)
+        h.u32(len(p[1]))
+        for q in p[1]:
+            _hash_pred(h, q)
+    elif tag == "not":
+        h.u8(6)
+        _hash_pred(h, p[1])
+    elif tag == "true":
+        h.u8(7)
+    else:  # pragma: no cover - malformed fixture
+        raise ValueError(f"unknown pred tag {tag!r}")
+
+
+def _hash_vexpr(h: Fnv, e: tuple) -> None:
+    tag = e[0]
+    if tag == "attr":
+        h.u8(0)
+        h.str(e[1])
+    elif tag == "one":
+        h.u8(1)
+    elif tag == "mul_attrs":
+        h.u8(2)
+        h.str(e[1])
+        h.str(e[2])
+    elif tag == "mul_complement":
+        h.u8(3)
+        h.str(e[1])
+        h.u64(e[2])
+        h.str(e[3])
+    elif tag == "mul_sum":
+        h.u8(4)
+        h.str(e[1])
+        h.u64(e[2])
+        h.str(e[3])
+    elif tag == "mul_complement_sum":
+        h.u8(5)
+        h.str(e[1])
+        h.u64(e[2])
+        h.str(e[3])
+        h.u64(e[4])
+        h.str(e[5])
+    else:  # pragma: no cover - malformed fixture
+        raise ValueError(f"unknown vexpr tag {tag!r}")
+
+
+def plan_fingerprint(schema: list, xbar_cols: int, xbar_rows: int) -> int:
+    """Mirror of ``cache::plan_fingerprint``: geometry + schema hash.
+
+    ``schema`` is ``[(rel_name, [(attr, bits, enc, money_offset)])]`` in
+    PIM layout order.
+    """
+    h = Fnv()
+    h.u8(FORMAT_VERSION)
+    h.u32(xbar_cols)
+    h.u32(xbar_rows)
+    for rel_name, attrs in schema:
+        h.str(rel_name)
+        h.u32(len(attrs))
+        for name, bits, enc, offset in attrs:
+            h.str(name)
+            h.u32(bits)
+            h.u8(ENC_TAGS[enc])
+            h.i64(offset)
+    return h.state
+
+
+def plan_key(query: dict, opt_level: str, fingerprint: int) -> int:
+    """Mirror of ``cache::plan_key``: the canonical AST hash.
+
+    Insensitive to ``query["name"]`` and aggregate labels (aliases);
+    sensitive to structure, literals, ``opt_level`` and ``fingerprint``.
+    """
+    h = Fnv()
+    h.u8(FORMAT_VERSION)
+    h.u8(KIND_TAGS[query["kind"]])
+    rels = query["rels"]
+    h.u32(len(rels))
+    for rq in rels:
+        h.str(rq["rel"])
+        _hash_pred(h, rq["filter"])
+        h.u32(len(rq["group_by"]))
+        for g in rq["group_by"]:
+            h.str(g)
+        h.u32(len(rq["aggregates"]))
+        for a in rq["aggregates"]:
+            # label omitted: aliases are rebound on the cached plan
+            h.u8(AGG_TAGS[a["kind"]])
+            _hash_vexpr(h, a["expr"])
+    h.u8(OPT_TAGS[opt_level])
+    h.u64(fingerprint)
+    return h.state
+
+
+# ---------------------------------------------------------------------------
+# The default PIM schema (rust/src/db/schema.rs) and its pinned fingerprint.
+# ---------------------------------------------------------------------------
+
+#: Mirror of the ``*_ATTRS`` tables in ``schema.rs``, in
+#: ``PIM_RELATIONS`` order. Money offsets mirror ``Attr::money``.
+DEFAULT_SCHEMA = [
+    ("PART", [
+        ("p_partkey", 28, "uint", 0),
+        ("p_mfgr", 3, "dict", 0),
+        ("p_brand", 5, "dict", 0),
+        ("p_type", 8, "dict", 0),
+        ("p_size", 6, "uint", 0),
+        ("p_container", 6, "dict", 0),
+        ("p_retailprice", 21, "money", 0),
+    ]),
+    ("SUPPLIER", [
+        ("s_suppkey", 24, "uint", 0),
+        ("s_nationkey", 5, "uint", 0),
+        ("s_phone_cc", 6, "dict", 0),
+        ("s_phone_rest", 36, "uint", 0),
+        ("s_acctbal", 21, "money", 100_000),
+    ]),
+    ("PARTSUPP", [
+        ("ps_partkey", 28, "uint", 0),
+        ("ps_suppkey", 24, "uint", 0),
+        ("ps_availqty", 14, "uint", 0),
+        ("ps_supplycost", 17, "money", 0),
+    ]),
+    ("CUSTOMER", [
+        ("c_custkey", 28, "uint", 0),
+        ("c_nationkey", 5, "uint", 0),
+        ("c_phone_cc", 6, "dict", 0),
+        ("c_phone_rest", 36, "uint", 0),
+        ("c_acctbal", 21, "money", 100_000),
+        ("c_mktsegment", 3, "dict", 0),
+    ]),
+    ("ORDERS", [
+        ("o_orderkey", 33, "uint", 0),
+        ("o_custkey", 28, "uint", 0),
+        ("o_orderstatus", 2, "dict", 0),
+        ("o_totalprice", 26, "money", 0),
+        ("o_orderdate", 12, "date", 0),
+        ("o_orderpriority", 3, "dict", 0),
+        ("o_shippriority", 1, "uint", 0),
+    ]),
+    ("LINEITEM", [
+        ("l_orderkey", 33, "uint", 0),
+        ("l_partkey", 28, "uint", 0),
+        ("l_suppkey", 24, "uint", 0),
+        ("l_linenumber", 3, "uint", 0),
+        ("l_quantity", 6, "uint", 0),
+        ("l_extendedprice", 24, "money", 0),
+        ("l_discount", 4, "uint", 0),
+        ("l_tax", 4, "uint", 0),
+        ("l_returnflag", 2, "dict", 0),
+        ("l_linestatus", 1, "dict", 0),
+        ("l_shipdate", 12, "date", 0),
+        ("l_commitdate", 12, "date", 0),
+        ("l_receiptdate", 12, "date", 0),
+        ("l_shipinstruct", 2, "dict", 0),
+        ("l_shipmode", 3, "dict", 0),
+    ]),
+]
+
+#: Default crossbar geometry (SystemConfig::default()).
+DEFAULT_XBAR_COLS = 512
+DEFAULT_XBAR_ROWS = 1024
+
+
+def default_fingerprint() -> int:
+    """The fingerprint of the default schema + geometry."""
+    return plan_fingerprint(DEFAULT_SCHEMA, DEFAULT_XBAR_COLS, DEFAULT_XBAR_ROWS)
+
+
+#: Pinned cross-language golden value: must equal
+#: ``cache::plan_fingerprint(&SystemConfig::default())`` (asserted on the
+#: Rust side in ``rust/src/api/cache.rs`` and here in the pytest suite).
+#: Regenerate with ``python -c "import apimirror; print(hex(apimirror.default_fingerprint()))"``
+#: whenever the schema or the byte format changes — and bump
+#: ``FORMAT_VERSION`` in both languages.
+DEFAULT_FINGERPRINT = 0xDD8BB4AF22C11FDB
+
+
+def canonical_structure(query: dict) -> str:
+    """A readable canonical form for duplicate detection in the fuzz
+    suite: everything the key hashes, nothing it omits (labels, names).
+    Two queries are duplicates (same plan) iff their structures match.
+    """
+    rels = []
+    for rq in query["rels"]:
+        aggs = [(a["kind"], a["expr"]) for a in rq["aggregates"]]
+        rels.append((rq["rel"], rq["filter"], tuple(rq["group_by"]), tuple(aggs)))
+    return repr((query["kind"], tuple(rels)))

@@ -1,0 +1,236 @@
+"""Fuzz + golden suite for the plan-cache key mirror (``apimirror.py``).
+
+Validates the normalization contract the Rust side promises:
+
+* insensitive to aliases (aggregate labels) and query names;
+* deterministic, and *injective in practice* over randomized query
+  populations (duplicate detection: equal keys iff equal canonical
+  structure);
+* sensitive to literals, operators, predicate structure, group-by sets,
+  aggregate kinds/expressions, opt level, and the schema fingerprint;
+* byte-format pinned cross-language via ``DEFAULT_FINGERPRINT`` and the
+  ``GOLDEN_KEY`` below (both also asserted in ``rust/src/api/cache.rs``).
+"""
+
+import copy
+import random
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import apimirror as m  # noqa: E402
+
+ATTRS = [a for _, attrs in m.DEFAULT_SCHEMA for a, _, _, _ in attrs]
+RELS = [name for name, _ in m.DEFAULT_SCHEMA]
+OPS = list(m.CMP_TAGS)
+AGGS = list(m.AGG_TAGS)
+
+
+def rand_pred(rng: random.Random, depth: int = 0) -> tuple:
+    roll = rng.random()
+    if depth >= 3 or roll < 0.45:
+        leaf = rng.randrange(5)
+        attr = rng.choice(ATTRS)
+        if leaf == 0:
+            return ("cmp_imm", attr, rng.choice(OPS), rng.randrange(1 << 20))
+        if leaf == 1:
+            vals = [rng.randrange(1 << 10) for _ in range(rng.randrange(1, 6))]
+            return ("in_set", attr, vals)
+        if leaf == 2:
+            lo = rng.randrange(1 << 10)
+            return ("between", attr, lo, lo + rng.randrange(1 << 10))
+        if leaf == 3:
+            return ("cmp_cols", attr, rng.choice(OPS), rng.choice(ATTRS))
+        return ("true",)
+    if roll < 0.65:
+        n = rng.randrange(2, 4)
+        return ("and", [rand_pred(rng, depth + 1) for _ in range(n)])
+    if roll < 0.85:
+        n = rng.randrange(2, 4)
+        return ("or", [rand_pred(rng, depth + 1) for _ in range(n)])
+    return ("not", rand_pred(rng, depth + 1))
+
+
+def rand_vexpr(rng: random.Random) -> tuple:
+    roll = rng.randrange(6)
+    a, b, c = (rng.choice(ATTRS) for _ in range(3))
+    if roll == 0:
+        return ("attr", a)
+    if roll == 1:
+        return ("one",)
+    if roll == 2:
+        return ("mul_attrs", a, b)
+    if roll == 3:
+        return ("mul_complement", a, rng.randrange(1, 200), b)
+    if roll == 4:
+        return ("mul_sum", a, rng.randrange(1, 200), b)
+    return ("mul_complement_sum", a, rng.randrange(1, 200), b, rng.randrange(1, 200), c)
+
+
+def rand_query(rng: random.Random) -> dict:
+    full = rng.random() < 0.5
+    rels = []
+    for _ in range(rng.randrange(1, 3)):
+        aggs = []
+        if full:
+            for i in range(rng.randrange(1, 4)):
+                aggs.append({
+                    "kind": rng.choice(AGGS),
+                    "expr": rand_vexpr(rng),
+                    "label": f"label_{rng.randrange(1000)}_{i}",
+                })
+        rels.append({
+            "rel": rng.choice(RELS),
+            "filter": rand_pred(rng),
+            "group_by": rng.sample(ATTRS, rng.randrange(0, 3)) if full else [],
+            "aggregates": aggs,
+        })
+    return {
+        "kind": "full" if full else "filter_only",
+        "name": f"q_{rng.randrange(10_000)}",
+        "rels": rels,
+    }
+
+
+def key(q: dict, opt: str = "O2", fp: int = m.DEFAULT_FINGERPRINT) -> int:
+    return m.plan_key(q, opt, fp)
+
+
+def test_pinned_default_fingerprint() -> None:
+    assert m.default_fingerprint() == m.DEFAULT_FINGERPRINT
+
+
+def test_alias_and_name_invariance_fuzz() -> None:
+    rng = random.Random(0xA11A5)
+    for _ in range(2000):
+        q = rand_query(rng)
+        renamed = copy.deepcopy(q)
+        renamed["name"] = "completely_different"
+        for rq in renamed["rels"]:
+            for i, a in enumerate(rq["aggregates"]):
+                a["label"] = f"alias_{rng.randrange(1 << 30)}_{i}"
+        assert key(q) == key(renamed), q
+
+
+def test_duplicate_detection_fuzz() -> None:
+    # equal keys <=> equal canonical structure, over a population with
+    # forced duplicates (same query re-labeled) and near-misses
+    rng = random.Random(0xD0B1E)
+    by_structure: dict[str, int] = {}
+    by_key: dict[int, str] = {}
+    pop = []
+    for _ in range(1500):
+        q = rand_query(rng)
+        pop.append(q)
+        if rng.random() < 0.3:  # forced alias-duplicate
+            d = copy.deepcopy(q)
+            d["name"] = "dup"
+            for rq in d["rels"]:
+                for a in rq["aggregates"]:
+                    a["label"] = "dup_label"
+            pop.append(d)
+    for q in pop:
+        s = m.canonical_structure(q)
+        k = key(q)
+        if s in by_structure:
+            assert by_structure[s] == k, f"same structure, different key: {s}"
+        else:
+            by_structure[s] = k
+        if k in by_key:
+            assert by_key[k] == s, f"key collision: {s} vs {by_key[k]}"
+        else:
+            by_key[k] = s
+
+
+def test_sensitivity_to_every_structural_dimension() -> None:
+    rng = random.Random(0x5E45)
+    q = {
+        "kind": "full",
+        "name": "base",
+        "rels": [{
+            "rel": "LINEITEM",
+            "filter": ("and", [
+                ("cmp_imm", "l_quantity", "lt", 24),
+                ("between", "l_discount", 5, 7),
+            ]),
+            "group_by": ["l_returnflag"],
+            "aggregates": [
+                {"kind": "sum",
+                 "expr": ("mul_complement", "l_extendedprice", 100, "l_discount"),
+                 "label": "rev"},
+            ],
+        }],
+    }
+    base = key(q)
+
+    def mutated(fn):
+        d = copy.deepcopy(q)
+        fn(d)
+        return key(d)
+
+    perturbations = [
+        lambda d: d["rels"][0]["filter"][1].__setitem__(
+            0, ("cmp_imm", "l_quantity", "lt", 25)),        # literal
+        lambda d: d["rels"][0]["filter"][1].__setitem__(
+            0, ("cmp_imm", "l_quantity", "le", 24)),        # operator
+        lambda d: d["rels"][0]["filter"][1].__setitem__(
+            0, ("cmp_imm", "l_tax", "lt", 24)),             # attribute
+        lambda d: d["rels"][0]["filter"][1].reverse(),      # conjunct order
+        lambda d: d["rels"][0].__setitem__("group_by", []), # group-by set
+        lambda d: d["rels"][0]["aggregates"][0].__setitem__("kind", "avg"),
+        lambda d: d["rels"][0].__setitem__("rel", "ORDERS"),
+        lambda d: d.__setitem__("kind", "filter_only"),
+        lambda d: d["rels"][0]["aggregates"].append(
+            {"kind": "count", "expr": ("one",), "label": "n"}),
+    ]
+    keys = [mutated(fn) for fn in perturbations]
+    keys += [key(q, opt="O0"), key(q, opt="O1"), key(q, fp=m.DEFAULT_FINGERPRINT ^ 1)]
+    assert base not in keys
+    assert len(set(keys)) == len(keys), "perturbed keys must be distinct"
+
+
+def golden_query() -> dict:
+    """Exercises every predicate, expression and aggregate tag — the
+    cross-language golden key fixture (same literal query is built in
+    ``rust/src/api/cache.rs``)."""
+    return {
+        "kind": "full",
+        "name": "golden",
+        "rels": [{
+            "rel": "LINEITEM",
+            "filter": ("and", [
+                ("cmp_imm", "l_quantity", "lt", 24),
+                ("between", "l_discount", 5, 7),
+                ("not", ("in_set", "l_shipmode", [1, 3])),
+                ("or", [
+                    ("cmp_cols", "l_commitdate", "lt", "l_receiptdate"),
+                    ("true",),
+                ]),
+            ]),
+            "group_by": ["l_returnflag", "l_linestatus"],
+            "aggregates": [
+                {"kind": "count", "expr": ("one",), "label": "n"},
+                {"kind": "sum",
+                 "expr": ("mul_complement", "l_extendedprice", 100, "l_discount"),
+                 "label": "rev"},
+                {"kind": "avg", "expr": ("attr", "l_quantity"), "label": "avg_q"},
+                {"kind": "min", "expr": ("mul_attrs", "l_quantity", "l_tax"), "label": "m1"},
+                {"kind": "max",
+                 "expr": ("mul_complement_sum", "l_extendedprice", 100, "l_discount",
+                          100, "l_tax"),
+                 "label": "m2"},
+                {"kind": "sum",
+                 "expr": ("mul_sum", "l_extendedprice", 100, "l_tax"),
+                 "label": "m3"},
+            ],
+        }],
+    }
+
+
+#: Pinned in Rust too (`golden_key_matches_the_python_mirror_pin`).
+GOLDEN_KEY = 0xF4681E9459AE97DE
+
+
+def test_golden_key_pin() -> None:
+    assert key(golden_query()) == GOLDEN_KEY

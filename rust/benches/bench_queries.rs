@@ -2,37 +2,44 @@
 //! every run-based table/figure (Tables 5–6, Figs 8–9, 11–15). Each
 //! iteration runs the complete PIMDB pipeline (compile -> functional
 //! execution -> timing/energy/power/endurance simulation) plus the
-//! baseline for the speedup pair, at a small SF.
+//! baseline for the speedup pair, at a small SF, through the `api::Pimdb`
+//! service handle. A dedicated section records the prepared-vs-unprepared
+//! serving-path ratio (plan cache on vs. cleared every iteration).
 
 #[path = "benchkit.rs"]
 mod benchkit;
 
 use benchkit::bench;
+use pimdb::api::{Pimdb, QuerySource};
 use pimdb::config::SystemConfig;
 use pimdb::db::dbgen::Database;
-use pimdb::exec::{baseline, pimdb as engine};
+use pimdb::exec::baseline;
 use pimdb::query::opt::OptLevel;
 use pimdb::query::tpch;
 
 fn main() {
-    let mut cfg = SystemConfig::default();
-    cfg.sim_sf = 0.002;
+    let cfg = SystemConfig {
+        sim_sf: 0.002,
+        ..SystemConfig::default()
+    };
     let db = Database::generate(cfg.sim_sf, 42);
 
     // optimizer win tracking: -O0 vs -O2 simulated PIM cycles per query,
     // so the perf trajectory records the pass pipeline's effect alongside
     // wall-clock (these are model cycles — deterministic, not timed)
     {
-        let mut cfg_o0 = cfg.clone();
-        cfg_o0.opt_level = OptLevel::O0;
-        let mut s0 = engine::PimSession::new(&cfg_o0, &db).unwrap();
-        let mut s2 = engine::PimSession::new(&cfg, &db).unwrap();
+        let cfg_o0 = SystemConfig {
+            opt_level: OptLevel::O0,
+            ..cfg.clone()
+        };
+        let h0 = Pimdb::open(cfg_o0, db.clone()).unwrap();
+        let h2 = Pimdb::open(cfg.clone(), db.clone()).unwrap();
         println!("# optimizer cycles/xbar: query O0 O2 saved%");
         let (mut tot0, mut tot2) = (0u64, 0u64);
         for q in tpch::all_queries() {
-            let a = s0.run_query(&q, engine::EngineKind::Native).unwrap();
-            let b = s2.run_query(&q, engine::EngineKind::Native).unwrap();
-            let (c0, c2) = (a.metrics.cycles.total(), b.metrics.cycles.total());
+            let a = h0.prepare(QuerySource::Ast(&q)).unwrap().execute().unwrap();
+            let b = h2.prepare(QuerySource::Ast(&q)).unwrap().execute().unwrap();
+            let (c0, c2) = (a.metrics().cycles.total(), b.metrics().cycles.total());
             tot0 += c0;
             tot2 += c2;
             println!(
@@ -52,26 +59,31 @@ fn main() {
     }
 
     // end-to-end simulation wall-clock at both opt levels (the optimizer
-    // itself runs inside the session's compile step)
+    // itself runs inside the prepare step; prepare is re-done per
+    // iteration with a cleared cache so the full pipeline is timed)
     for level in [OptLevel::O0, OptLevel::O2] {
-        let mut c = cfg.clone();
-        c.opt_level = level;
-        let mut session = engine::PimSession::new(&c, &db).unwrap();
-        let q = tpch::query("Q1").unwrap();
+        let c = SystemConfig {
+            opt_level: level,
+            ..cfg.clone()
+        };
+        let handle = Pimdb::open(c, db.clone()).unwrap();
         bench(&format!("pimdb/Q1 at -{level} (sim SF=0.002)"), 800, || {
-            let r = session.run_query(&q, engine::EngineKind::Native).unwrap();
-            std::hint::black_box(r.metrics.exec_time_s);
+            handle.clear_plan_cache();
+            let stmt = handle.prepare(QuerySource::Tpch("Q1")).unwrap();
+            let r = stmt.execute().unwrap();
+            std::hint::black_box(r.metrics().exec_time_s);
         });
     }
 
     // representative of each class: biggest full query, biggest
     // filter-only, smallest (overhead-bound), multi-relation
-    let mut session = engine::PimSession::new(&cfg, &db).unwrap();
+    let handle = Pimdb::open(cfg.clone(), db.clone()).unwrap();
     for name in ["Q1", "Q6", "Q14", "Q11", "Q3", "Q22_sub"] {
         let q = tpch::query(name).unwrap();
+        let stmt = handle.prepare(QuerySource::Ast(&q)).unwrap();
         bench(&format!("pimdb/{name} (sim SF=0.002)"), 800, || {
-            let r = session.run_query(&q, engine::EngineKind::Native).unwrap();
-            std::hint::black_box(r.metrics.exec_time_s);
+            let r = stmt.execute().unwrap();
+            std::hint::black_box(r.metrics().exec_time_s);
         });
         bench(&format!("baseline/{name} (sim SF=0.002)"), 800, || {
             let r = baseline::run_query(&cfg, &db, &q);
@@ -82,29 +94,65 @@ fn main() {
     // the full 19-query suite (what `pimdb report --exp all` runs)
     bench("suite/all-19-queries pimdb+baseline", 3000, || {
         for q in tpch::all_queries() {
-            let r = session.run_query(&q, engine::EngineKind::Native).unwrap();
-            std::hint::black_box(r.metrics.exec_time_s);
+            let r = handle
+                .prepare(QuerySource::Ast(&q))
+                .unwrap()
+                .execute()
+                .unwrap();
+            std::hint::black_box(r.metrics().exec_time_s);
             let b = baseline::run_query(&cfg, &db, &q);
             std::hint::black_box(b.metrics.exec_time_s);
         }
     });
 
-    // batched multi-query serving path: the 19-query suite pipelined
-    // through PimSession::run_queries over the shard pool (results are
-    // bit-identical to the serial loop above; this measures wall-clock)
+    // prepared-vs-unprepared serving path: the same PQL template either
+    // re-prepared cold (cache cleared -> parse+compile+optimize every
+    // time) or executed from one prepared statement. The ratio is the
+    // plan cache's amortization win (queries/sec both ways).
+    const TEMPLATE: &str = "from lineitem \
+        | filter (l_shipdate >= date(1994-01-01) and l_shipdate < date(1995-01-01)) \
+            and l_discount between 0.05..0.07 and l_quantity < 24 \
+        | aggregate sum(l_extendedprice * l_discount) as revenue_x100";
+    bench("serving/unprepared (parse+compile+execute)", 800, || {
+        handle.clear_plan_cache();
+        let r = handle.prepare(TEMPLATE).unwrap().execute().unwrap();
+        std::hint::black_box(r.metrics().exec_time_s);
+    });
+    let stmt = handle.prepare(TEMPLATE).unwrap();
+    bench("serving/prepared (execute only)", 800, || {
+        let r = stmt.execute().unwrap();
+        std::hint::black_box(r.metrics().exec_time_s);
+    });
+
+    // batched multi-query serving path: the 19-query suite as prepared
+    // statements executed *concurrently* from &Pimdb (disjoint relations
+    // overlap on the per-relation locks, each over the shard pool);
+    // results are bit-identical to the serial loop above — this measures
+    // wall-clock only
     let queries = tpch::all_queries();
     for p in [1usize, 4] {
-        let mut cfg_par = cfg.clone();
-        cfg_par.parallelism = p;
-        let mut batch_session = engine::PimSession::new(&cfg_par, &db).unwrap();
+        let cfg_par = SystemConfig {
+            parallelism: p,
+            ..cfg.clone()
+        };
+        let batch = Pimdb::open(cfg_par, db.clone()).unwrap();
+        let stmts: Vec<_> = queries
+            .iter()
+            .map(|q| batch.prepare(QuerySource::Ast(q)).unwrap())
+            .collect();
         bench(
-            &format!("suite/run_queries batched x19, parallelism={p}"),
+            &format!("suite/prepared concurrent x19, parallelism={p}"),
             3000,
             || {
-                let rs = batch_session
-                    .run_queries(&queries, engine::EngineKind::Native)
-                    .unwrap();
-                std::hint::black_box(rs.len());
+                std::thread::scope(|s| {
+                    let workers: Vec<_> = stmts
+                        .iter()
+                        .map(|st| s.spawn(move || st.execute().unwrap()))
+                        .collect();
+                    for w in workers {
+                        std::hint::black_box(w.join().unwrap().metrics().exec_time_s);
+                    }
+                });
             },
         );
     }

@@ -1,0 +1,600 @@
+//! Plan cache: canonical AST hashing and the compiled-plan store behind
+//! [`crate::api::Pimdb::prepare`].
+//!
+//! The cache key is a *canonical byte serialization* of the query AST
+//! combined with the optimization level and a schema/geometry
+//! fingerprint (`plan_bytes`, crate-internal — the map keys on the full
+//! bytes, so hash collisions cannot serve a wrong plan; [`plan_key`] is
+//! the compact 64-bit FNV-1a digest of the same stream, the identity
+//! tests and the Python mirror speak). Canonicalization makes the key
+//!
+//! * **insensitive** to anything that cannot change the compiled program:
+//!   source whitespace and comments (the AST never sees them), the query
+//!   block's name, and aggregate output aliases (`as revenue` vs
+//!   `as rev` — labels are rebound on the cached plan at prepare time);
+//! * **sensitive** to everything that can: predicate structure and
+//!   literals, aggregate kinds/expressions, group-by sets, the relation
+//!   set, [`OptLevel`], and the schema/crossbar geometry fingerprint.
+//!
+//! The byte format is versioned (leading tag byte) and deliberately
+//! simple — length-prefixed strings, little-endian integers, one tag byte
+//! per enum variant — because `python/apimirror.py` mirrors it line by
+//! line and fuzzes the invariance/sensitivity properties against a
+//! structural duplicate-detection oracle (the no-Rust-toolchain
+//! validation workflow, see that file's header).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::config::SystemConfig;
+use crate::db::schema::{self, Encoding};
+use crate::error::PimdbError;
+use crate::exec::metrics::{OptSummary, PlanCacheCounters};
+use crate::query::ast::{AggKind, CmpOp, Pred, Query, ValExpr};
+use crate::query::compiler::CompiledRelQuery;
+use crate::query::opt::OptLevel;
+
+/// Serialization format version (first byte of every canonical stream).
+const FORMAT_VERSION: u8 = 1;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a 64-bit digest of a canonical byte stream.
+fn fnv1a(bs: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bs {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Canonical byte-stream writer. The materialized bytes — not their
+/// 64-bit digest — are the cache-map key, so a (constructible, FNV is
+/// not collision-resistant) hash collision can never serve the wrong
+/// plan; the digest is only the compact identity [`plan_key`] exposes.
+struct Ser {
+    buf: Vec<u8>,
+}
+
+impl Ser {
+    fn new() -> Ser {
+        Ser { buf: Vec::new() }
+    }
+
+    fn bytes(&mut self, bs: &[u8]) {
+        self.buf.extend_from_slice(bs);
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    fn i64(&mut self, v: i64) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    /// Length-prefixed UTF-8 string.
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.bytes(s.as_bytes());
+    }
+}
+
+fn cmp_tag(op: CmpOp) -> u8 {
+    match op {
+        CmpOp::Eq => 0,
+        CmpOp::Ne => 1,
+        CmpOp::Lt => 2,
+        CmpOp::Le => 3,
+        CmpOp::Gt => 4,
+        CmpOp::Ge => 5,
+    }
+}
+
+fn agg_tag(kind: AggKind) -> u8 {
+    match kind {
+        AggKind::Sum => 0,
+        AggKind::Count => 1,
+        AggKind::Min => 2,
+        AggKind::Max => 3,
+        AggKind::Avg => 4,
+    }
+}
+
+fn hash_pred(h: &mut Ser, p: &Pred) {
+    match p {
+        Pred::CmpImm { attr, op, value } => {
+            h.u8(0);
+            h.str(attr);
+            h.u8(cmp_tag(*op));
+            h.u64(*value);
+        }
+        Pred::InSet { attr, values } => {
+            h.u8(1);
+            h.str(attr);
+            h.u32(values.len() as u32);
+            for v in values {
+                h.u64(*v);
+            }
+        }
+        Pred::Between { attr, lo, hi } => {
+            h.u8(2);
+            h.str(attr);
+            h.u64(*lo);
+            h.u64(*hi);
+        }
+        Pred::CmpCols { a, op, b } => {
+            h.u8(3);
+            h.str(a);
+            h.u8(cmp_tag(*op));
+            h.str(b);
+        }
+        Pred::And(ps) => {
+            h.u8(4);
+            h.u32(ps.len() as u32);
+            for q in ps {
+                hash_pred(h, q);
+            }
+        }
+        Pred::Or(ps) => {
+            h.u8(5);
+            h.u32(ps.len() as u32);
+            for q in ps {
+                hash_pred(h, q);
+            }
+        }
+        Pred::Not(q) => {
+            h.u8(6);
+            hash_pred(h, q);
+        }
+        Pred::True => h.u8(7),
+    }
+}
+
+fn hash_vexpr(h: &mut Ser, e: &ValExpr) {
+    match e {
+        ValExpr::Attr(a) => {
+            h.u8(0);
+            h.str(a);
+        }
+        ValExpr::One => h.u8(1),
+        ValExpr::MulAttrs(a, b) => {
+            h.u8(2);
+            h.str(a);
+            h.str(b);
+        }
+        ValExpr::MulComplement { attr, scale, other } => {
+            h.u8(3);
+            h.str(attr);
+            h.u64(*scale);
+            h.str(other);
+        }
+        ValExpr::MulSum { attr, scale, other } => {
+            h.u8(4);
+            h.str(attr);
+            h.u64(*scale);
+            h.str(other);
+        }
+        ValExpr::MulComplementSum {
+            attr,
+            scale1,
+            other1,
+            scale2,
+            other2,
+        } => {
+            h.u8(5);
+            h.str(attr);
+            h.u64(*scale1);
+            h.str(other1);
+            h.u64(*scale2);
+            h.str(other2);
+        }
+    }
+}
+
+/// Fingerprint of everything *outside* the query that the compiled plan
+/// depends on: the PIM schema (attribute names, widths, encodings per
+/// relation) and the crossbar geometry the compiler and optimizer see.
+/// Two [`crate::api::Pimdb`] handles share plan keys iff their
+/// fingerprints match.
+pub fn plan_fingerprint(cfg: &SystemConfig) -> u64 {
+    let mut h = Ser::new();
+    h.u8(FORMAT_VERSION);
+    h.u32(cfg.xbar_cols as u32);
+    h.u32(cfg.xbar_rows as u32);
+    for rel in schema::PIM_RELATIONS {
+        h.str(rel.name());
+        let attrs = schema::attrs(rel);
+        h.u32(attrs.len() as u32);
+        for a in attrs {
+            h.str(a.name);
+            h.u32(a.bits as u32);
+            match a.enc {
+                Encoding::Uint => {
+                    h.u8(0);
+                    h.i64(0);
+                }
+                Encoding::Dict => {
+                    h.u8(1);
+                    h.i64(0);
+                }
+                Encoding::Date => {
+                    h.u8(2);
+                    h.i64(0);
+                }
+                Encoding::Money { offset } => {
+                    h.u8(3);
+                    h.i64(offset);
+                }
+            }
+        }
+    }
+    fnv1a(&h.buf)
+}
+
+/// The full canonical serialization of `(q, level, fingerprint)` — the
+/// exact (collision-free) cache-map key. [`plan_key`] is its digest.
+pub(crate) fn plan_bytes(q: &Query, level: OptLevel, fingerprint: u64) -> Vec<u8> {
+    let mut h = Ser::new();
+    h.u8(FORMAT_VERSION);
+    // query name omitted: renaming a block must not defeat the cache
+    h.u8(match q.kind {
+        crate::query::ast::QueryKind::Full => 0,
+        crate::query::ast::QueryKind::FilterOnly => 1,
+    });
+    h.u32(q.rels.len() as u32);
+    for rq in &q.rels {
+        h.str(rq.rel.name());
+        hash_pred(&mut h, &rq.filter);
+        h.u32(rq.group_by.len() as u32);
+        for g in &rq.group_by {
+            h.str(g);
+        }
+        h.u32(rq.aggregates.len() as u32);
+        for a in &rq.aggregates {
+            // label omitted: aliases are rebound on the cached plan
+            h.u8(agg_tag(a.kind));
+            hash_vexpr(&mut h, &a.expr);
+        }
+    }
+    h.u8(match level {
+        OptLevel::O0 => 0,
+        OptLevel::O1 => 1,
+        OptLevel::O2 => 2,
+    });
+    h.u64(fingerprint);
+    h.buf
+}
+
+/// Canonical plan-cache key of `q` at `level` under `fingerprint` — the
+/// 64-bit FNV-1a digest of [`plan_bytes`] (see the module docs for the
+/// exact invariance/sensitivity contract, and `python/apimirror.py` for
+/// the mirrored implementation).
+pub fn plan_key(q: &Query, level: OptLevel, fingerprint: u64) -> u64 {
+    fnv1a(&plan_bytes(q, level, fingerprint))
+}
+
+/// One cached prepared plan: the optimized per-relation programs plus the
+/// optimizer summary the report path surfaces.
+pub(crate) struct CachedPlan {
+    /// Optimized programs, parallel to the source query's `rels`.
+    pub compiled: Vec<CompiledRelQuery>,
+    /// What the pass pipeline did, summed per Table 5 semantics.
+    pub opt: OptSummary,
+}
+
+/// Bound on resident plans: literal-sensitive keys mean a serving
+/// workload with per-request literals mints unbounded distinct
+/// templates; past the cap an arbitrary entry is evicted (pseudo-random
+/// — swap for LRU if a real workload ever shows thrash here).
+const MAX_CACHED_PLANS: usize = 1024;
+
+/// Thread-safe plan store keyed by the *full* canonical serialization
+/// ([`plan_bytes`] — collision-free by construction), with hit/miss
+/// counters. `misses` counts compilations: two threads racing the same
+/// new template may both compile (the first insert wins, both count).
+pub(crate) struct PlanCache {
+    plans: Mutex<HashMap<Vec<u8>, Arc<CachedPlan>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PlanCache {
+    pub(crate) fn new() -> PlanCache {
+        PlanCache {
+            plans: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Lock the map, recovering from poisoning (a panicked compile never
+    /// ran `insert`, so the map contents are always consistent).
+    fn lock_plans(&self) -> std::sync::MutexGuard<'_, HashMap<Vec<u8>, Arc<CachedPlan>>> {
+        match self.plans.lock() {
+            Ok(g) => g,
+            Err(poisoned) => {
+                self.plans.clear_poison();
+                poisoned.into_inner()
+            }
+        }
+    }
+
+    /// Look `key` up; on a miss run `compile` and cache its result.
+    /// Compilation runs *outside* the map lock so cache hits on other
+    /// templates never stall behind an in-flight compile.
+    pub(crate) fn get_or_compile(
+        &self,
+        key: Vec<u8>,
+        compile: impl FnOnce() -> Result<CachedPlan, PimdbError>,
+    ) -> Result<Arc<CachedPlan>, PimdbError> {
+        if let Some(plan) = self.lock_plans().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(plan));
+        }
+        let plan = Arc::new(compile()?);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut plans = self.lock_plans();
+        if plans.len() >= MAX_CACHED_PLANS && !plans.contains_key(&key) {
+            if let Some(evict) = plans.keys().next().cloned() {
+                plans.remove(&evict);
+            }
+        }
+        // first insert wins a racing duplicate compile; both count a miss
+        let entry = plans.entry(key).or_insert(plan);
+        Ok(Arc::clone(entry))
+    }
+
+    /// Snapshot of the hit/miss counters.
+    pub(crate) fn counters(&self) -> PlanCacheCounters {
+        PlanCacheCounters {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Drop every cached plan (counters keep accumulating). The next
+    /// prepare of any query recompiles — used by benchmarks to measure
+    /// the unprepared path honestly.
+    pub(crate) fn clear(&self) {
+        self.lock_plans().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::query::lang::parse_program;
+
+    fn key_of(src: &str, level: OptLevel) -> u64 {
+        let qs = parse_program(src).expect("fixture parses");
+        assert_eq!(qs.len(), 1);
+        plan_key(&qs[0], level, plan_fingerprint(&SystemConfig::default()))
+    }
+
+    const Q6ISH: &str = "from lineitem | filter l_quantity < 24 \
+                         | aggregate sum(l_extendedprice * l_discount) as revenue";
+
+    #[test]
+    fn whitespace_and_comments_do_not_change_the_key() {
+        let reformatted = "from lineitem\n  | filter l_quantity < 24\n  \
+                           # a comment\n  | aggregate sum(l_extendedprice * l_discount) as revenue";
+        assert_eq!(key_of(Q6ISH, OptLevel::O2), key_of(reformatted, OptLevel::O2));
+    }
+
+    #[test]
+    fn alias_and_query_name_renames_do_not_change_the_key() {
+        let renamed = "query totally_different_name from lineitem | filter l_quantity < 24 \
+                       | aggregate sum(l_extendedprice * l_discount) as rev2";
+        assert_eq!(key_of(Q6ISH, OptLevel::O2), key_of(renamed, OptLevel::O2));
+    }
+
+    #[test]
+    fn literals_ops_and_structure_change_the_key() {
+        let base = key_of(Q6ISH, OptLevel::O2);
+        for variant in [
+            // literal changed
+            "from lineitem | filter l_quantity < 25 \
+             | aggregate sum(l_extendedprice * l_discount) as revenue",
+            // operator changed
+            "from lineitem | filter l_quantity <= 24 \
+             | aggregate sum(l_extendedprice * l_discount) as revenue",
+            // aggregate kind changed
+            "from lineitem | filter l_quantity < 24 \
+             | aggregate min(l_extendedprice * l_discount) as revenue",
+            // attribute changed
+            "from lineitem | filter l_linenumber < 24 \
+             | aggregate sum(l_extendedprice * l_discount) as revenue",
+            // extra aggregate
+            "from lineitem | filter l_quantity < 24 \
+             | aggregate sum(l_extendedprice * l_discount) as revenue, count() as n",
+        ] {
+            assert_ne!(base, key_of(variant, OptLevel::O2), "{variant}");
+        }
+    }
+
+    #[test]
+    fn opt_level_and_schema_fingerprint_change_the_key() {
+        assert_ne!(key_of(Q6ISH, OptLevel::O0), key_of(Q6ISH, OptLevel::O2));
+
+        let q = &parse_program(Q6ISH).unwrap()[0];
+        let fp_default = plan_fingerprint(&SystemConfig::default());
+        let narrow = SystemConfig {
+            xbar_cols: 256,
+            ..SystemConfig::default()
+        };
+        let fp_narrow = plan_fingerprint(&narrow);
+        assert_ne!(fp_default, fp_narrow);
+        assert_ne!(
+            plan_key(q, OptLevel::O2, fp_default),
+            plan_key(q, OptLevel::O2, fp_narrow)
+        );
+    }
+
+    /// Cross-language golden pin: `python/apimirror.py` mirrors the
+    /// canonical byte format and pins the same literal
+    /// (`DEFAULT_FINGERPRINT`); a one-sided format change breaks exactly
+    /// one of the two suites. Regenerate with
+    /// `python -c "import apimirror; print(hex(apimirror.default_fingerprint()))"`
+    /// and bump `FORMAT_VERSION` in both languages together.
+    #[test]
+    fn default_fingerprint_matches_the_python_mirror_pin() {
+        assert_eq!(
+            plan_fingerprint(&SystemConfig::default()),
+            0xDD8B_B4AF_22C1_1FDB
+        );
+    }
+
+    /// Same fixture as `golden_query()` in
+    /// `python/tests/test_apimirror.py`: every predicate, expression and
+    /// aggregate tag, hashed to the same pinned key by both languages.
+    #[test]
+    fn golden_key_matches_the_python_mirror_pin() {
+        use crate::db::schema::RelId;
+        use crate::query::ast::{Aggregate, QueryKind, RelQuery};
+        let q = Query {
+            name: "golden",
+            kind: QueryKind::Full,
+            rels: vec![RelQuery {
+                rel: RelId::Lineitem,
+                filter: Pred::And(vec![
+                    Pred::CmpImm {
+                        attr: "l_quantity",
+                        op: CmpOp::Lt,
+                        value: 24,
+                    },
+                    Pred::Between {
+                        attr: "l_discount",
+                        lo: 5,
+                        hi: 7,
+                    },
+                    Pred::Not(Box::new(Pred::InSet {
+                        attr: "l_shipmode",
+                        values: vec![1, 3],
+                    })),
+                    Pred::Or(vec![
+                        Pred::CmpCols {
+                            a: "l_commitdate",
+                            op: CmpOp::Lt,
+                            b: "l_receiptdate",
+                        },
+                        Pred::True,
+                    ]),
+                ]),
+                group_by: vec!["l_returnflag", "l_linestatus"],
+                aggregates: vec![
+                    Aggregate {
+                        kind: AggKind::Count,
+                        expr: ValExpr::One,
+                        label: "n",
+                    },
+                    Aggregate {
+                        kind: AggKind::Sum,
+                        expr: ValExpr::MulComplement {
+                            attr: "l_extendedprice",
+                            scale: 100,
+                            other: "l_discount",
+                        },
+                        label: "rev",
+                    },
+                    Aggregate {
+                        kind: AggKind::Avg,
+                        expr: ValExpr::Attr("l_quantity"),
+                        label: "avg_q",
+                    },
+                    Aggregate {
+                        kind: AggKind::Min,
+                        expr: ValExpr::MulAttrs("l_quantity", "l_tax"),
+                        label: "m1",
+                    },
+                    Aggregate {
+                        kind: AggKind::Max,
+                        expr: ValExpr::MulComplementSum {
+                            attr: "l_extendedprice",
+                            scale1: 100,
+                            other1: "l_discount",
+                            scale2: 100,
+                            other2: "l_tax",
+                        },
+                        label: "m2",
+                    },
+                    Aggregate {
+                        kind: AggKind::Sum,
+                        expr: ValExpr::MulSum {
+                            attr: "l_extendedprice",
+                            scale: 100,
+                            other: "l_tax",
+                        },
+                        label: "m3",
+                    },
+                ],
+            }],
+        };
+        assert_eq!(
+            plan_key(&q, OptLevel::O2, 0xDD8B_B4AF_22C1_1FDB),
+            0xF468_1E94_59AE_97DE
+        );
+    }
+
+    fn mk() -> Result<CachedPlan, PimdbError> {
+        Ok(CachedPlan {
+            compiled: vec![],
+            opt: OptSummary::default(),
+        })
+    }
+
+    #[test]
+    fn cache_counts_hits_and_misses_and_clears() {
+        let cache = PlanCache::new();
+        cache.get_or_compile(vec![7], mk).unwrap();
+        cache.get_or_compile(vec![7], mk).unwrap();
+        cache.get_or_compile(vec![8], mk).unwrap();
+        assert_eq!(
+            cache.counters(),
+            PlanCacheCounters { hits: 1, misses: 2 }
+        );
+        cache.clear();
+        cache.get_or_compile(vec![7], mk).unwrap();
+        assert_eq!(
+            cache.counters(),
+            PlanCacheCounters { hits: 1, misses: 3 }
+        );
+    }
+
+    #[test]
+    fn failed_compiles_are_not_cached_or_counted_as_misses() {
+        let cache = PlanCache::new();
+        let boom = || Err(PimdbError::UnknownQuery("nope".into()));
+        assert!(cache.get_or_compile(vec![1], boom).is_err());
+        assert_eq!(cache.counters(), PlanCacheCounters::default());
+        // a later successful compile still lands
+        cache.get_or_compile(vec![1], mk).unwrap();
+        assert_eq!(
+            cache.counters(),
+            PlanCacheCounters { hits: 0, misses: 1 }
+        );
+    }
+
+    #[test]
+    fn cache_is_bounded_by_eviction() {
+        let cache = PlanCache::new();
+        for i in 0..(MAX_CACHED_PLANS + 50) {
+            let key = (i as u64).to_le_bytes().to_vec();
+            cache.get_or_compile(key, mk).unwrap();
+        }
+        assert!(cache.lock_plans().len() <= MAX_CACHED_PLANS);
+        // evicted-then-reprepared templates recompile rather than error
+        cache.get_or_compile(0u64.to_le_bytes().to_vec(), mk).unwrap();
+    }
+}

@@ -1,0 +1,587 @@
+//! The PIMDB embedding API: an owned, shareable database-service handle.
+//!
+//! The paper's host programming model treats PIM as a long-lived database
+//! service: the PIM copy is constructed once, then many independent
+//! queries execute against it (§4). This module is that model as a
+//! library surface:
+//!
+//! * [`Pimdb::open`] takes *ownership* of a [`SystemConfig`] and a
+//!   generated [`Database`], lays the relations out over the PIM modules,
+//!   and returns a handle that is `Send + Sync` — wrap it in an
+//!   [`std::sync::Arc`] and share it across threads.
+//! * [`Pimdb::prepare`] turns a [`QuerySource`] (PQL text, an AST
+//!   [`Query`], or a TPC-H query name) into a [`Prepared`] statement:
+//!   parse → compile → optimize runs **once**, and the compiled plan is
+//!   stored in a plan cache keyed by a canonical AST hash
+//!   ([`cache::plan_key`]) so re-preparing the same query template —
+//!   reformatted, renamed, or re-aliased — is a cache hit. Hit/miss
+//!   counters surface in [`QueryMetrics::plan_cache`].
+//! * [`Prepared::execute`] runs the plan over the shared shard pool from
+//!   `&self`: independent prepared queries submit concurrently without
+//!   external `&mut` serialization (per-relation locks serialize exactly
+//!   the queries that share a relation's crossbar compute area, the same
+//!   rule the wave scheduler applies). Results come back as a
+//!   [`QueryResult`] whose [`Rows`] cursor *decodes* the schema encodings
+//!   — dates, money cents, dictionary strings — instead of exposing raw
+//!   engine outputs.
+//!
+//! Every fallible path returns the crate-wide typed
+//! [`PimdbError`](crate::error::PimdbError).
+//!
+//! ```
+//! use pimdb::api::Pimdb;
+//! use pimdb::config::SystemConfig;
+//! use pimdb::db::dbgen::Database;
+//!
+//! let db = Pimdb::open(SystemConfig::default(), Database::generate(0.001, 42))?;
+//! let q6 = db.prepare(
+//!     "from lineitem
+//!      | filter (l_shipdate >= date(1994-01-01) and l_shipdate < date(1995-01-01))
+//!          and l_discount between 0.05..0.07 and l_quantity < 24
+//!      | aggregate sum(l_extendedprice * l_discount) as revenue_x100",
+//! )?;
+//! let result = q6.execute()?;
+//! for row in result.rows() {
+//!     println!("revenue = {}", row.get("revenue_x100").unwrap());
+//! }
+//! // preparing the same template again (any formatting) hits the cache
+//! let again = db.prepare("from lineitem | filter (l_shipdate >= date(1994-01-01)
+//!      and l_shipdate < date(1995-01-01)) and l_discount between 0.05..0.07
+//!      and l_quantity < 24 | aggregate sum(l_extendedprice*l_discount) as rev")?;
+//! assert_eq!(db.plan_cache_counters().hits, 1);
+//! # let _ = again;
+//! # Ok::<(), pimdb::error::PimdbError>(())
+//! ```
+
+pub mod cache;
+pub mod rows;
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::config::SystemConfig;
+use crate::db::dbgen::Database;
+use crate::db::layout::DbLayout;
+use crate::db::schema::{RelId, PIM_RELATIONS};
+use crate::error::PimdbError;
+use crate::exec::engine::{self, ExecOutputs, XbarState};
+use crate::exec::metrics::{PlanCacheCounters, QueryMetrics, RunReport};
+use crate::exec::pimdb as session;
+use crate::exec::plan::{self, ExecPlan};
+use crate::query::ast::Query;
+use crate::query::compiler::{CompileError, Compiler};
+use crate::query::lang;
+use crate::query::opt::{self, OptStats};
+use crate::query::tpch;
+
+use cache::{CachedPlan, PlanCache};
+
+pub use crate::exec::pimdb::EngineKind;
+pub use rows::{Row, Rows, Value};
+
+/// Where a query to [`Pimdb::prepare`] comes from.
+#[derive(Clone, Copy, Debug)]
+pub enum QuerySource<'a> {
+    /// PQL text (see the grammar in [`crate::query::lang`]).
+    Pql(&'a str),
+    /// An already-built AST query (cloned into the prepared statement).
+    Ast(&'a Query),
+    /// One of the 19 evaluated TPC-H queries by name (e.g. `"Q6"`).
+    Tpch(&'a str),
+}
+
+impl<'a> From<&'a str> for QuerySource<'a> {
+    /// Bare strings are PQL text.
+    fn from(s: &'a str) -> QuerySource<'a> {
+        QuerySource::Pql(s)
+    }
+}
+
+impl<'a> From<&'a Query> for QuerySource<'a> {
+    fn from(q: &'a Query) -> QuerySource<'a> {
+        QuerySource::Ast(q)
+    }
+}
+
+/// The owned PIMDB service handle: one resident database copy, a plan
+/// cache, and per-relation crossbar states behind locks so prepared
+/// queries execute concurrently from `&self` (see the module docs).
+pub struct Pimdb {
+    cfg: SystemConfig,
+    db: Database,
+    layout: DbLayout,
+    exec_plan: ExecPlan,
+    fingerprint: u64,
+    /// Functional crossbar states, lazily materialized per relation. The
+    /// mutex is the concurrency rule of the wave scheduler in lock form:
+    /// queries on disjoint relations proceed in parallel, queries sharing
+    /// a relation serialize (they share its compute area).
+    states: BTreeMap<RelId, Mutex<Option<Vec<XbarState>>>>,
+    cache: PlanCache,
+}
+
+// The service-handle contract: `Pimdb` (and everything borrowed from it)
+// must stay shareable across threads. Compile-time regression guard for
+// the old `PimSession<'a>`-style borrow/`&mut` coupling.
+const fn assert_send_sync<T: Send + Sync>() {}
+const _: () = {
+    assert_send_sync::<Pimdb>();
+    assert_send_sync::<Prepared<'static>>();
+    assert_send_sync::<QueryResult>();
+};
+
+impl Pimdb {
+    /// Take ownership of a configuration and database, lay the relations
+    /// out over the PIM modules, and return the service handle. Crossbar
+    /// states materialize lazily, per relation, on first execution.
+    pub fn open(cfg: SystemConfig, db: Database) -> Result<Pimdb, PimdbError> {
+        let layout = DbLayout::build(&cfg, &|r| db.rel(r).records as u64)?;
+        let states = PIM_RELATIONS
+            .iter()
+            .map(|&r| (r, Mutex::new(None)))
+            .collect();
+        Ok(Pimdb {
+            exec_plan: ExecPlan::for_config(&cfg),
+            fingerprint: cache::plan_fingerprint(&cfg),
+            layout,
+            states,
+            cache: PlanCache::new(),
+            cfg,
+            db,
+        })
+    }
+
+    /// The configuration the handle was opened with.
+    pub fn cfg(&self) -> &SystemConfig {
+        &self.cfg
+    }
+
+    /// The resident database (for baselines and oracles).
+    pub fn database(&self) -> &Database {
+        &self.db
+    }
+
+    /// The database's PIM layout (page placement, column slots).
+    pub fn layout(&self) -> &DbLayout {
+        &self.layout
+    }
+
+    /// Plan-cache hit/miss counters so far (also snapshotted into every
+    /// execution's [`QueryMetrics::plan_cache`]).
+    pub fn plan_cache_counters(&self) -> PlanCacheCounters {
+        self.cache.counters()
+    }
+
+    /// Drop all cached plans (counters keep accumulating); the next
+    /// prepare of any template recompiles. Benchmarks use this to measure
+    /// the unprepared path.
+    pub fn clear_plan_cache(&self) {
+        self.cache.clear()
+    }
+
+    /// Prepare one query: parse (if text), compile and optimize once —
+    /// or fetch the plan from the cache — and return the executable
+    /// statement. A PQL program with several `query` blocks is an
+    /// [`PimdbError::ExpectedSingleQuery`] error; use
+    /// [`Pimdb::prepare_all`] for programs.
+    pub fn prepare<'q>(
+        &self,
+        source: impl Into<QuerySource<'q>>,
+    ) -> Result<Prepared<'_>, PimdbError> {
+        let mut queries = self.resolve(source.into())?;
+        if queries.len() != 1 {
+            return Err(PimdbError::ExpectedSingleQuery {
+                found: queries.len(),
+            });
+        }
+        self.prepare_query(queries.pop().expect("length checked"))
+    }
+
+    /// Prepare every query of a source (a PQL program may hold several
+    /// `query` blocks), in source order.
+    pub fn prepare_all<'q>(
+        &self,
+        source: impl Into<QuerySource<'q>>,
+    ) -> Result<Vec<Prepared<'_>>, PimdbError> {
+        self.resolve(source.into())?
+            .into_iter()
+            .map(|q| self.prepare_query(q))
+            .collect()
+    }
+
+    fn resolve(&self, source: QuerySource<'_>) -> Result<Vec<Query>, PimdbError> {
+        match source {
+            QuerySource::Pql(text) => {
+                lang::parse_program(text).map_err(|diag| PimdbError::Parse {
+                    diag,
+                    src: text.to_string(),
+                })
+            }
+            QuerySource::Ast(q) => Ok(vec![q.clone()]),
+            QuerySource::Tpch(name) => tpch::query(name)
+                .map(|q| vec![q])
+                .ok_or_else(|| PimdbError::UnknownQuery(name.to_string())),
+        }
+    }
+
+    fn prepare_query(&self, query: Query) -> Result<Prepared<'_>, PimdbError> {
+        // the cache map keys on the full canonical bytes (collision-free);
+        // plan_key is the same stream's compact digest for observability
+        let key = cache::plan_bytes(&query, self.cfg.opt_level, self.fingerprint);
+        let plan = self.cache.get_or_compile(key, || {
+            let mut sum = OptStats::default();
+            let compiled = query
+                .rels
+                .iter()
+                .map(|rq| {
+                    let c = Compiler::compile(rq, self.layout.rel(rq.rel), self.cfg.xbar_cols)?;
+                    let (o, st) = opt::optimize(&c, self.cfg.opt_level, self.cfg.xbar_rows);
+                    sum.merge(&st);
+                    Ok(o)
+                })
+                .collect::<Result<Vec<_>, CompileError>>()?;
+            Ok(CachedPlan {
+                compiled,
+                opt: sum.into(),
+            })
+        })?;
+        let plan = rebind_labels(plan, &query);
+        Ok(Prepared {
+            handle: self,
+            query,
+            plan,
+        })
+    }
+
+    /// Execute a prepared statement (see [`Prepared::execute`]).
+    fn execute_prepared(
+        &self,
+        p: &Prepared<'_>,
+        engine_kind: EngineKind,
+    ) -> Result<QueryResult, PimdbError> {
+        let compiled = &p.plan.compiled;
+
+        // Lock every touched relation in canonical RelId order: concurrent
+        // queries acquiring overlapping sets cannot deadlock, and queries
+        // on disjoint sets never contend.
+        let rels: BTreeSet<RelId> = compiled.iter().map(|c| c.rel).collect();
+        let mut guards: Vec<(RelId, MutexGuard<'_, Option<Vec<XbarState>>>)> = rels
+            .iter()
+            .map(|r| {
+                let mutex = self.states.get(r).expect("PIM relation");
+                let guard = match mutex.lock() {
+                    Ok(g) => g,
+                    Err(poisoned) => {
+                        // a panicked execution may have left a dirty
+                        // compute area behind: drop the states so they
+                        // reload clean below, and clear the poison flag
+                        // so later executions pay the reload only once
+                        mutex.clear_poison();
+                        let mut g = poisoned.into_inner();
+                        *g = None;
+                        g
+                    }
+                };
+                (*r, guard)
+            })
+            .collect();
+
+        // materialize every touched relation once (lazy, like PimSession)
+        for (r, guard) in guards.iter_mut() {
+            if guard.is_none() {
+                let rel = self.db.rel(*r);
+                **guard = Some(engine::load_states(
+                    rel,
+                    self.layout.rel(*r),
+                    self.cfg.xbar_cols,
+                    0..rel.records,
+                ));
+            }
+        }
+
+        // One sharded run per program. Programs are sequential within the
+        // query (two programs of one query on the same relation share its
+        // compute area — the wave scheduler's duplicate rule); each run
+        // still fans out over the shard pool. States move out of the
+        // guard for the duration so a backend error drops them rather
+        // than leaving a half-mutated compute area resident.
+        let mut outs: Vec<ExecOutputs> = Vec::with_capacity(compiled.len());
+        for c in compiled {
+            let guard = &mut guards
+                .iter_mut()
+                .find(|(r, _)| *r == c.rel)
+                .expect("locked above")
+                .1;
+            let mut states = guard.take().expect("materialized above");
+            let out = plan::exec_steps_sharded(
+                &mut states,
+                &c.steps,
+                c.mask_col,
+                engine_kind,
+                &self.exec_plan,
+            )?;
+            session::clear_compute(&mut states, self.layout.rel(c.rel).compute_base);
+            **guard = Some(states);
+            outs.push(out);
+        }
+
+        let output = session::assemble_output(&p.query, compiled, &outs);
+        let mut metrics = session::simulate(&self.cfg, &p.query, compiled, &self.layout);
+        metrics.inter_cells = compiled
+            .iter()
+            .map(|c| c.peak_inter_cells)
+            .max()
+            .unwrap_or(0);
+        metrics.opt = p.plan.opt;
+        metrics.plan_cache = self.cache.counters();
+        Ok(QueryResult::new(
+            p.query.clone(),
+            RunReport {
+                query: p.query.name,
+                metrics,
+                output,
+            },
+        ))
+    }
+}
+
+/// Rebind aggregate output labels of a cached plan to the labels of the
+/// *prepared* query. The cache key is alias-insensitive, so a hit may
+/// carry the labels of whichever alias-variant compiled first; the
+/// compiler emits exactly one [`crate::query::compiler::OutputSpec`] per
+/// `(group, aggregate)` in aggregate order, which makes the rebinding a
+/// positional rewrite. Returns the input `Arc` untouched when the labels
+/// already match (the common case).
+fn rebind_labels(plan: Arc<CachedPlan>, query: &Query) -> Arc<CachedPlan> {
+    let matches = plan.compiled.iter().zip(&query.rels).all(|(c, rq)| {
+        let n = rq.aggregates.len();
+        n == 0
+            || c.outputs
+                .iter()
+                .enumerate()
+                .all(|(j, s)| s.label == rq.aggregates[j % n].label)
+    });
+    if matches {
+        return plan;
+    }
+    let compiled = plan
+        .compiled
+        .iter()
+        .zip(&query.rels)
+        .map(|(c, rq)| {
+            let mut c = c.clone();
+            let n = rq.aggregates.len();
+            if n > 0 {
+                for (j, spec) in c.outputs.iter_mut().enumerate() {
+                    debug_assert_eq!(spec.kind, rq.aggregates[j % n].kind);
+                    spec.label = rq.aggregates[j % n].label;
+                }
+            }
+            c
+        })
+        .collect();
+    Arc::new(CachedPlan {
+        compiled,
+        opt: plan.opt,
+    })
+}
+
+/// A prepared statement: the parsed query plus its compiled, optimized
+/// plan (shared with the handle's plan cache). Executing takes `&self` —
+/// the same statement can run concurrently from several threads, and
+/// distinct statements on disjoint relations run in parallel.
+pub struct Prepared<'db> {
+    handle: &'db Pimdb,
+    query: Query,
+    plan: Arc<CachedPlan>,
+}
+
+impl Prepared<'_> {
+    /// The query this statement executes.
+    pub fn query(&self) -> &Query {
+        &self.query
+    }
+
+    /// Execute on the native functional backend.
+    pub fn execute(&self) -> Result<QueryResult, PimdbError> {
+        self.execute_on(EngineKind::Native)
+    }
+
+    /// Execute on an explicit functional backend.
+    pub fn execute_on(&self, engine_kind: EngineKind) -> Result<QueryResult, PimdbError> {
+        self.handle.execute_prepared(self, engine_kind)
+    }
+}
+
+/// One execution's result: decoded, typed rows plus the full simulated
+/// metric set.
+pub struct QueryResult {
+    report: RunReport,
+    rows: Vec<Row>,
+}
+
+impl QueryResult {
+    fn new(query: Query, report: RunReport) -> QueryResult {
+        let rows = rows::decode_rows(&query, &report.output);
+        QueryResult { report, rows }
+    }
+
+    /// Name of the executed query.
+    pub fn query_name(&self) -> &'static str {
+        self.report.query
+    }
+
+    /// Cursor over the decoded result rows: one row per group for full
+    /// queries, one `(relation, selected)` row per relation for
+    /// filter-only queries.
+    pub fn rows(&self) -> Rows<'_> {
+        Rows::new(&self.rows)
+    }
+
+    /// The simulated timing/energy/power/endurance metrics, including the
+    /// plan-cache counters at execution time.
+    pub fn metrics(&self) -> &QueryMetrics {
+        &self.report.metrics
+    }
+
+    /// The raw engine report (encoded outputs, paper-report shape). The
+    /// escape hatch for the report generators and the differential suite;
+    /// prefer [`QueryResult::rows`] for consuming results.
+    pub fn raw_report(&self) -> &RunReport {
+        &self.report
+    }
+
+    /// Consume the result into the raw engine report.
+    pub fn into_report(self) -> RunReport {
+        self.report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::pimdb::PimSession;
+
+    fn db() -> Database {
+        Database::generate(0.001, 11)
+    }
+
+    #[test]
+    fn open_prepare_execute_matches_the_legacy_session() {
+        let cfg = SystemConfig::default();
+        let data = db();
+        let mut legacy = PimSession::new(&cfg, &data).unwrap();
+        let handle = Pimdb::open(cfg.clone(), db()).unwrap();
+        for name in ["Q6", "Q1", "Q12"] {
+            let q = tpch::query(name).unwrap();
+            let want = legacy.run_query(&q, EngineKind::Native).unwrap();
+            let got = handle.prepare(QuerySource::Tpch(name)).unwrap().execute().unwrap();
+            assert_eq!(want.output, got.raw_report().output, "{name}");
+            assert_eq!(
+                want.metrics.cycles,
+                got.metrics().cycles,
+                "{name}"
+            );
+            assert_eq!(
+                want.metrics.exec_time_s.to_bits(),
+                got.metrics().exec_time_s.to_bits(),
+                "{name}"
+            );
+        }
+    }
+
+    #[test]
+    fn preparing_twice_compiles_once() {
+        let handle = Pimdb::open(SystemConfig::default(), db()).unwrap();
+        let src = "from supplier | filter s_suppkey < 50 | aggregate count() as n";
+        let p1 = handle.prepare(src).unwrap();
+        assert_eq!(
+            handle.plan_cache_counters(),
+            PlanCacheCounters { hits: 0, misses: 1 }
+        );
+        // reformatted + re-aliased: same template, cache hit
+        let p2 = handle
+            .prepare("from supplier\n  | filter s_suppkey < 50\n  | aggregate count() as how_many")
+            .unwrap();
+        assert_eq!(
+            handle.plan_cache_counters(),
+            PlanCacheCounters { hits: 1, misses: 1 }
+        );
+        let r1 = p1.execute().unwrap();
+        let r2 = p2.execute().unwrap();
+        // the rebound alias shows up in the typed rows of the hit
+        assert!(r1.rows().row(0).unwrap().get("n").is_some());
+        assert!(r2.rows().row(0).unwrap().get("how_many").is_some());
+        assert_eq!(
+            r1.rows().row(0).unwrap().get("n"),
+            r2.rows().row(0).unwrap().get("how_many")
+        );
+        // counters surface in the metrics
+        assert_eq!(
+            r2.metrics().plan_cache,
+            PlanCacheCounters { hits: 1, misses: 1 }
+        );
+        // a literal change misses
+        handle
+            .prepare("from supplier | filter s_suppkey < 51 | aggregate count() as n")
+            .unwrap();
+        assert_eq!(
+            handle.plan_cache_counters(),
+            PlanCacheCounters { hits: 1, misses: 2 }
+        );
+    }
+
+    #[test]
+    fn prepare_rejects_multi_block_programs_and_unknown_names() {
+        let handle = Pimdb::open(SystemConfig::default(), db()).unwrap();
+        let program = "query a from part | filter true ; query b from supplier | filter true";
+        match handle.prepare(program) {
+            Err(PimdbError::ExpectedSingleQuery { found }) => assert_eq!(found, 2),
+            other => panic!("expected ExpectedSingleQuery, got {:?}", other.map(|_| ())),
+        }
+        assert_eq!(handle.prepare_all(program).unwrap().len(), 2);
+        assert!(matches!(
+            handle.prepare(QuerySource::Tpch("Q99")),
+            Err(PimdbError::UnknownQuery(_))
+        ));
+        assert!(matches!(
+            handle.prepare("from lineitem | filter nope < 3"),
+            Err(PimdbError::Parse { .. })
+        ));
+    }
+
+    #[test]
+    fn concurrent_execution_from_shared_reference() {
+        let cfg = SystemConfig {
+            parallelism: 2,
+            ..SystemConfig::default()
+        };
+        let data = db();
+        let mut legacy = PimSession::new(&cfg, &data).unwrap();
+        let want_q6 = legacy
+            .run_query(&tpch::query("Q6").unwrap(), EngineKind::Native)
+            .unwrap();
+        let want_q11 = legacy
+            .run_query(&tpch::query("Q11").unwrap(), EngineKind::Native)
+            .unwrap();
+
+        let handle = Arc::new(Pimdb::open(cfg.clone(), db()).unwrap());
+        let q6 = handle.prepare(QuerySource::Tpch("Q6")).unwrap();
+        let q11 = handle.prepare(QuerySource::Tpch("Q11")).unwrap();
+        std::thread::scope(|s| {
+            let t6 = s.spawn(|| q6.execute().unwrap());
+            let t11 = s.spawn(|| q11.execute().unwrap());
+            let r6 = t6.join().unwrap();
+            let r11 = t11.join().unwrap();
+            assert_eq!(r6.raw_report().output, want_q6.output);
+            assert_eq!(r11.raw_report().output, want_q11.output);
+            assert_eq!(
+                r6.metrics().exec_time_s.to_bits(),
+                want_q6.metrics.exec_time_s.to_bits()
+            );
+        });
+        // re-executing after the concurrent burst still matches
+        let again = q6.execute().unwrap();
+        assert_eq!(again.raw_report().output, want_q6.output);
+    }
+}

@@ -1,0 +1,438 @@
+//! Typed result rows: decoded values and the cursor API returned by
+//! [`crate::api::Prepared::execute`].
+//!
+//! The engine's raw [`QueryOutput`] speaks in encoded `u64`s — epoch-day
+//! dates, offset cents, dictionary ids — because that is what lives in
+//! the crossbars. This module is the decoding boundary: group keys come
+//! back as [`Value::Date`] / [`Value::Money`] / [`Value::Str`] per the
+//! schema encoding of their attribute, and aggregate cells are typed by
+//! the aggregate (COUNT is an integer, MIN/MAX/SUM of a raw attribute
+//! inherit its encoding, everything else is a float).
+
+use std::fmt;
+
+use crate::db::schema::{self, Encoding};
+use crate::exec::metrics::{GroupOutput, QueryOutput};
+use crate::query::ast::{AggKind, Aggregate, Query, QueryKind, ValExpr};
+
+/// One decoded result cell.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    /// Plain integer (raw unsigned attributes, counts).
+    Int(i64),
+    /// Floating-point aggregate (sums of derived expressions, averages).
+    Float(f64),
+    /// Currency in cents, offset already removed (`12345` = `$123.45`).
+    Money(i64),
+    /// Calendar date decoded from the epoch-day encoding.
+    Date {
+        /// Four-digit year.
+        year: i64,
+        /// Month, 1–12.
+        month: u8,
+        /// Day of month, 1–31.
+        day: u8,
+    },
+    /// Dictionary-decoded string (group keys on Dict attributes).
+    Str(String),
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Int(v) => write!(f, "{v}"),
+            Value::Float(v) => write!(f, "{v}"),
+            Value::Money(cents) => {
+                let sign = if *cents < 0 { "-" } else { "" };
+                let a = cents.unsigned_abs();
+                write!(f, "{sign}{}.{:02}", a / 100, a % 100)
+            }
+            Value::Date { year, month, day } => {
+                write!(f, "{year:04}-{month:02}-{day:02}")
+            }
+            Value::Str(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+impl Value {
+    /// The cell as `f64` (counts and money convert; dates/strings don't).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(v) => Some(*v as f64),
+            Value::Float(v) => Some(*v),
+            Value::Money(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    /// The cell as `i64` (floats don't silently truncate).
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(v) | Value::Money(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// The cell as a string slice, for [`Value::Str`] cells.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// One decoded result row: named, typed cells.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Row {
+    cells: Vec<(&'static str, Value)>,
+}
+
+impl Row {
+    /// All cells as `(column, value)` pairs, in column order.
+    pub fn cells(&self) -> &[(&'static str, Value)] {
+        &self.cells
+    }
+
+    /// The cell of column `name`, if present.
+    pub fn get(&self, name: &str) -> Option<&Value> {
+        self.cells
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, v)| v)
+    }
+
+    /// Column names in order.
+    pub fn columns(&self) -> impl Iterator<Item = &'static str> + '_ {
+        self.cells.iter().map(|(n, _)| *n)
+    }
+}
+
+/// Cursor over the decoded rows of one execution (an iterator of
+/// [`Row`]s; also indexable via [`Rows::len`] / [`Rows::row`]).
+#[derive(Clone, Debug)]
+pub struct Rows<'a> {
+    rows: &'a [Row],
+    next: usize,
+}
+
+impl<'a> Rows<'a> {
+    pub(crate) fn new(rows: &'a [Row]) -> Rows<'a> {
+        Rows { rows, next: 0 }
+    }
+
+    /// Total rows in the result (independent of cursor position).
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Whether the result has no rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Random access by row index.
+    pub fn row(&self, i: usize) -> Option<&'a Row> {
+        self.rows.get(i)
+    }
+}
+
+impl<'a> Iterator for Rows<'a> {
+    type Item = &'a Row;
+
+    fn next(&mut self) -> Option<&'a Row> {
+        let r = self.rows.get(self.next)?;
+        self.next += 1;
+        Some(r)
+    }
+}
+
+/// Decode an encoded attribute value per its schema encoding. Attributes
+/// are resolved against every relation of the query (TPC-H attribute
+/// names are globally unique via their `l_`/`o_`/... prefixes).
+fn decode_attr(q: &Query, name: &str, raw: u64) -> Value {
+    let attr = q.rels.iter().find_map(|rq| schema::attr(rq.rel, name));
+    match attr.map(|a| a.enc) {
+        Some(Encoding::Dict) => match schema::dict_word(name, raw) {
+            Some(word) => Value::Str(word),
+            None => Value::Int(raw as i64),
+        },
+        Some(Encoding::Date) => {
+            let (year, month, day) = schema::date_ymd(raw);
+            Value::Date {
+                year,
+                month: month as u8,
+                day: day as u8,
+            }
+        }
+        Some(Encoding::Money { offset }) => Value::Money(raw as i64 - offset),
+        _ => Value::Int(raw as i64),
+    }
+}
+
+/// Type one aggregate cell. `raw` is the engine's combined value (`f64`
+/// after the host-side combine), `count` the group's record count.
+fn decode_agg(q: &Query, agg: &Aggregate, raw: f64, count: u64) -> Value {
+    match (agg.kind, &agg.expr) {
+        (AggKind::Count, _) => Value::Int(raw as i64),
+        // MIN/MAX of a bare attribute is an actual attribute value:
+        // decode it like one (dates, money offsets, dictionary words)
+        (AggKind::Min | AggKind::Max, ValExpr::Attr(a)) => {
+            if count == 0 {
+                // empty selection reports 0, which is not a valid encoded
+                // value for offset/date attributes — keep it numeric
+                Value::Float(raw)
+            } else {
+                decode_attr(q, a, raw as u64)
+            }
+        }
+        // SUM of a bare money attribute stays currency: remove the
+        // per-record offset using the group count
+        (AggKind::Sum, ValExpr::Attr(a)) => {
+            let enc = q.rels.iter().find_map(|rq| schema::attr(rq.rel, a)).map(|x| x.enc);
+            if let Some(Encoding::Money { offset }) = enc {
+                Value::Money(raw as i64 - offset * count as i64)
+            } else {
+                Value::Float(raw)
+            }
+        }
+        // AVG of a bare money attribute: every record carries the offset
+        // once, so the mean carries it exactly once (fractional cents
+        // stay a float; an empty selection reports 0, not -offset)
+        (AggKind::Avg, ValExpr::Attr(a)) => {
+            let enc = q.rels.iter().find_map(|rq| schema::attr(rq.rel, a)).map(|x| x.enc);
+            if let (Some(Encoding::Money { offset }), true) = (enc, count > 0) {
+                Value::Float(raw - offset as f64)
+            } else {
+                Value::Float(raw)
+            }
+        }
+        _ => Value::Float(raw),
+    }
+}
+
+fn group_row(q: &Query, g: &GroupOutput) -> Row {
+    let mut cells = Vec::with_capacity(g.key.len() + g.values.len() + 1);
+    for (attr, raw) in &g.key {
+        cells.push((*attr, decode_attr(q, attr, *raw)));
+    }
+    for (label, raw) in &g.values {
+        // match the aggregate by label (labels are unique per query; the
+        // engine emits values in declaration order)
+        let agg = q
+            .rels
+            .iter()
+            .flat_map(|rq| rq.aggregates.iter())
+            .find(|a| a.label == *label);
+        let v = match agg {
+            Some(a) => decode_agg(q, a, *raw, g.count),
+            None => Value::Float(*raw),
+        };
+        cells.push((*label, v));
+    }
+    cells.push(("count", Value::Int(g.count as i64)));
+    Row { cells }
+}
+
+/// Decode an engine output into rows (see [`crate::api::QueryResult`]):
+/// one row per group for full queries, one `(relation, selected)` row per
+/// relation for filter-only queries.
+pub(crate) fn decode_rows(q: &Query, output: &QueryOutput) -> Vec<Row> {
+    match q.kind {
+        QueryKind::Full => output.groups.iter().map(|g| group_row(q, g)).collect(),
+        QueryKind::FilterOnly => output
+            .selected
+            .iter()
+            .map(|(rel, n)| Row {
+                cells: vec![
+                    ("relation", Value::Str(rel.to_string())),
+                    ("selected", Value::Int(*n as i64)),
+                ],
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::schema::RelId;
+    use crate::query::ast::{Pred, RelQuery};
+
+    fn full_query() -> Query {
+        Query {
+            name: "t",
+            kind: QueryKind::Full,
+            rels: vec![RelQuery {
+                rel: RelId::Lineitem,
+                filter: Pred::True,
+                group_by: vec!["l_returnflag", "l_shipdate"],
+                aggregates: vec![
+                    Aggregate {
+                        kind: AggKind::Count,
+                        expr: ValExpr::One,
+                        label: "n",
+                    },
+                    Aggregate {
+                        kind: AggKind::Max,
+                        expr: ValExpr::Attr("l_extendedprice"),
+                        label: "max_price",
+                    },
+                    Aggregate {
+                        kind: AggKind::Sum,
+                        expr: ValExpr::MulAttrs("l_quantity", "l_discount"),
+                        label: "weird",
+                    },
+                ],
+            }],
+        }
+    }
+
+    #[test]
+    fn group_rows_decode_schema_encodings() {
+        let q = full_query();
+        let out = QueryOutput {
+            selected: vec![("LINEITEM", 3)],
+            groups: vec![GroupOutput {
+                key: vec![
+                    ("l_returnflag", 1),
+                    ("l_shipdate", schema::date(1994, 2, 17)),
+                ],
+                values: vec![("n", 3.0), ("max_price", 123_45.0), ("weird", 7.5)],
+                count: 3,
+            }],
+        };
+        let rows = decode_rows(&q, &out);
+        assert_eq!(rows.len(), 1);
+        let row = &rows[0];
+        assert_eq!(row.get("l_returnflag"), Some(&Value::Str("A".into())));
+        assert_eq!(
+            row.get("l_shipdate"),
+            Some(&Value::Date {
+                year: 1994,
+                month: 2,
+                day: 17
+            })
+        );
+        assert_eq!(row.get("n"), Some(&Value::Int(3)));
+        // l_extendedprice is money with zero offset -> cents
+        assert_eq!(row.get("max_price"), Some(&Value::Money(12_345)));
+        assert_eq!(row.get("weird"), Some(&Value::Float(7.5)));
+        assert_eq!(row.get("count"), Some(&Value::Int(3)));
+        assert_eq!(row.get("absent"), None);
+        let cols: Vec<_> = row.columns().collect();
+        assert_eq!(
+            cols,
+            vec!["l_returnflag", "l_shipdate", "n", "max_price", "weird", "count"]
+        );
+    }
+
+    #[test]
+    fn filter_only_rows_report_selected_counts() {
+        let q = Query {
+            name: "f",
+            kind: QueryKind::FilterOnly,
+            rels: vec![],
+        };
+        let out = QueryOutput {
+            selected: vec![("PART", 10), ("SUPPLIER", 2)],
+            groups: vec![],
+        };
+        let rows = decode_rows(&q, &out);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("relation"), Some(&Value::Str("PART".into())));
+        assert_eq!(rows[1].get("selected"), Some(&Value::Int(2)));
+    }
+
+    #[test]
+    fn cursor_iterates_and_indexes() {
+        let rows = vec![
+            Row {
+                cells: vec![("a", Value::Int(1))],
+            },
+            Row {
+                cells: vec![("a", Value::Int(2))],
+            },
+        ];
+        let mut cur = Rows::new(&rows);
+        assert_eq!(cur.len(), 2);
+        assert!(!cur.is_empty());
+        assert_eq!(cur.next().unwrap().get("a"), Some(&Value::Int(1)));
+        assert_eq!(cur.next().unwrap().get("a"), Some(&Value::Int(2)));
+        assert!(cur.next().is_none());
+        assert_eq!(cur.row(1).unwrap().get("a"), Some(&Value::Int(2)));
+    }
+
+    #[test]
+    fn value_display_and_accessors() {
+        assert_eq!(Value::Money(12_345).to_string(), "123.45");
+        assert_eq!(Value::Money(-205).to_string(), "-2.05");
+        assert_eq!(
+            Value::Date {
+                year: 1998,
+                month: 9,
+                day: 2
+            }
+            .to_string(),
+            "1998-09-02"
+        );
+        assert_eq!(Value::Str("RAIL".into()).to_string(), "RAIL");
+        assert_eq!(Value::Int(7).as_f64(), Some(7.0));
+        assert_eq!(Value::Float(1.5).as_i64(), None);
+        assert_eq!(Value::Str("x".into()).as_str(), Some("x"));
+    }
+
+    #[test]
+    fn money_sum_and_avg_remove_the_encoding_offset() {
+        let q = Query {
+            name: "m",
+            kind: QueryKind::Full,
+            rels: vec![RelQuery {
+                rel: RelId::Supplier,
+                filter: Pred::True,
+                group_by: vec![],
+                aggregates: vec![
+                    Aggregate {
+                        kind: AggKind::Sum,
+                        expr: ValExpr::Attr("s_acctbal"),
+                        label: "total_bal",
+                    },
+                    Aggregate {
+                        kind: AggKind::Avg,
+                        expr: ValExpr::Attr("s_acctbal"),
+                        label: "avg_bal",
+                    },
+                ],
+            }],
+        };
+        // two records of $1.00 stored with the +100000 offset each:
+        // the sum carries the offset per record, the mean exactly once
+        let raw_sum = 2.0 * (100.0 + 100_000.0);
+        let raw_avg = 100.0 + 100_000.0;
+        let out = QueryOutput {
+            selected: vec![("SUPPLIER", 2)],
+            groups: vec![GroupOutput {
+                key: vec![],
+                values: vec![("total_bal", raw_sum), ("avg_bal", raw_avg)],
+                count: 2,
+            }],
+        };
+        let rows = decode_rows(&q, &out);
+        assert_eq!(rows[0].get("total_bal"), Some(&Value::Money(200)));
+        assert_eq!(rows[0].get("avg_bal"), Some(&Value::Float(100.0)));
+
+        // empty selection: the engine reports 0 — keep it 0, not -offset
+        let empty = QueryOutput {
+            selected: vec![("SUPPLIER", 0)],
+            groups: vec![GroupOutput {
+                key: vec![],
+                values: vec![("total_bal", 0.0), ("avg_bal", 0.0)],
+                count: 0,
+            }],
+        };
+        let rows = decode_rows(&q, &empty);
+        assert_eq!(rows[0].get("avg_bal"), Some(&Value::Float(0.0)));
+        assert_eq!(rows[0].get("total_bal"), Some(&Value::Money(0)));
+    }
+}

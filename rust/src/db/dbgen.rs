@@ -58,6 +58,7 @@ impl Relation {
 }
 
 /// The generated database.
+#[derive(Clone)]
 pub struct Database {
     /// Scale factor the data was generated at.
     pub sf: f64,

@@ -12,7 +12,54 @@
 
 use super::schema::{self, Attr, RelId};
 use crate::config::SystemConfig;
-use crate::mem::vm::{HugePage, PageAllocator};
+use crate::mem::vm::{CapacityError, HugePage, PageAllocator};
+
+/// Why laying the database out over the PIM modules failed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayoutError {
+    /// A relation's record (data bits + VALID) is wider than the crossbar.
+    RowTooWide {
+        /// The relation whose record does not fit.
+        rel: RelId,
+        /// Bits one record occupies (including the VALID column).
+        row_bits: usize,
+        /// Columns a crossbar row offers.
+        xbar_cols: usize,
+    },
+    /// The page allocator ran out of PIM capacity.
+    Capacity(CapacityError),
+}
+
+impl std::fmt::Display for LayoutError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LayoutError::RowTooWide {
+                rel,
+                row_bits,
+                xbar_cols,
+            } => write!(
+                f,
+                "{rel:?} row ({row_bits}b) exceeds crossbar ({xbar_cols} cols)"
+            ),
+            LayoutError::Capacity(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for LayoutError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            LayoutError::Capacity(e) => Some(e),
+            LayoutError::RowTooWide { .. } => None,
+        }
+    }
+}
+
+impl From<CapacityError> for LayoutError {
+    fn from(e: CapacityError) -> LayoutError {
+        LayoutError::Capacity(e)
+    }
+}
 
 /// Column placement of one attribute inside the crossbar row.
 #[derive(Clone, Copy, Debug)]
@@ -103,7 +150,10 @@ pub struct DbLayout {
 
 impl DbLayout {
     /// Lay out every PIM relation and allocate its pages.
-    pub fn build(cfg: &SystemConfig, sim_records: &dyn Fn(RelId) -> u64) -> Result<DbLayout, String> {
+    pub fn build(
+        cfg: &SystemConfig,
+        sim_records: &dyn Fn(RelId) -> u64,
+    ) -> Result<DbLayout, LayoutError> {
         let mut alloc = PageAllocator::new(cfg);
         let mut relations = Vec::new();
         for rel in schema::PIM_RELATIONS {
@@ -116,7 +166,11 @@ impl DbLayout {
             let valid_col = col;
             let row_bits = col + 1;
             if row_bits > cfg.xbar_cols {
-                return Err(format!("{:?} row ({row_bits}b) exceeds crossbar", rel));
+                return Err(LayoutError::RowTooWide {
+                    rel,
+                    row_bits,
+                    xbar_cols: cfg.xbar_cols,
+                });
             }
             let records_report = rel.records_at_sf(cfg.report_sf);
             let pages_report = records_report.div_ceil(cfg.records_per_page());

@@ -406,6 +406,59 @@ pub fn date(y: i64, m: i64, d: i64) -> u64 {
     (days_from_civil(y, m, d) - epoch) as u64
 }
 
+/// Civil-from-days (the inverse of [`days_from_civil`], same reference
+/// algorithm): `z` counts days since 1970-01-01.
+fn civil_from_days(z: i64) -> (i64, i64, i64) {
+    let z = z + 719_468;
+    let era = if z >= 0 { z } else { z - 146_096 } / 146_097;
+    let doe = z - era * 146_097;
+    let yoe = (doe - doe / 1460 + doe / 36524 - doe / 146_096) / 365;
+    let y = yoe + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 };
+    (if m <= 2 { y + 1 } else { y }, m, d)
+}
+
+/// Decode an encoded date (days since 1992-01-01) back to `(y, m, d)` —
+/// the typed-result inverse of [`date`].
+pub fn date_ymd(days: u64) -> (i64, i64, i64) {
+    civil_from_days(days_from_civil(EPOCH.0, EPOCH.1, EPOCH.2) + days as i64)
+}
+
+/// Decode a dictionary id back to its word, per attribute — the
+/// typed-result inverse of the `*_id` encoders above. `None` when the
+/// attribute has no known vocabulary or the id is out of range.
+pub fn dict_word(attr_name: &str, id: u64) -> Option<String> {
+    let i = id as usize;
+    let from = |words: &[&str]| words.get(i).map(|w| w.to_string());
+    match attr_name {
+        "p_mfgr" => (i < 5).then(|| format!("Manufacturer#{}", i + 1)),
+        "p_brand" => (i < 25).then(|| format!("Brand#{}{}", i / 5 + 1, i % 5 + 1)),
+        "p_type" => (i < 150).then(|| {
+            format!(
+                "{} {} {}",
+                TYPE_S1[i / 25],
+                TYPE_S2[(i / 5) % 5],
+                TYPE_S3[i % 5]
+            )
+        }),
+        "p_container" => (i < 40)
+            .then(|| format!("{} {}", CONTAINER_S1[i / 8], CONTAINER_S2[i % 8])),
+        "c_mktsegment" => from(&SEGMENTS),
+        "o_orderstatus" => from(&ORDERSTATUS),
+        "o_orderpriority" => from(&PRIORITIES),
+        "l_returnflag" => from(&RETURNFLAGS),
+        "l_linestatus" => from(&LINESTATUS),
+        "l_shipinstruct" => from(&INSTRUCTIONS),
+        "l_shipmode" => from(&SHIPMODES),
+        // phone country codes are stored as the literal code (10 + nation)
+        "s_phone_cc" | "c_phone_cc" => Some(id.to_string()),
+        _ => None,
+    }
+}
+
 /// Last order date in the spec data (1998-08-02) and related bounds.
 pub fn max_orderdate() -> u64 {
     date(1998, 8, 2)
@@ -458,6 +511,44 @@ mod tests {
         assert_eq!(date(1993, 1, 1), 366); // 1992 is a leap year
         assert_eq!(date(1998, 12, 1) - 90, date(1998, 9, 2)); // Q1 bound
         assert!(max_orderdate() < (1 << 12));
+    }
+
+    #[test]
+    fn date_ymd_inverts_date_over_the_whole_domain() {
+        // every encodable day (12-bit field) round-trips
+        for days in 0u64..(1 << 12) {
+            let (y, m, d) = date_ymd(days);
+            assert_eq!(date(y, m, d), days, "{y}-{m}-{d}");
+        }
+        assert_eq!(date_ymd(0), (1992, 1, 1));
+        assert_eq!(date_ymd(date(1998, 9, 2)), (1998, 9, 2));
+    }
+
+    #[test]
+    fn dict_word_inverts_the_id_encoders() {
+        assert_eq!(dict_word("p_brand", brand_id("Brand#32")).unwrap(), "Brand#32");
+        assert_eq!(
+            dict_word("p_type", type_id_of("ECONOMY ANODIZED STEEL")).unwrap(),
+            "ECONOMY ANODIZED STEEL"
+        );
+        assert_eq!(
+            dict_word("p_container", container_id("LG DRUM")).unwrap(),
+            "LG DRUM"
+        );
+        assert_eq!(dict_word("c_mktsegment", segment_id("BUILDING")).unwrap(), "BUILDING");
+        assert_eq!(dict_word("l_shipmode", shipmode_id("RAIL")).unwrap(), "RAIL");
+        assert_eq!(dict_word("l_returnflag", returnflag_id("A")).unwrap(), "A");
+        assert_eq!(dict_word("l_linestatus", 0).unwrap(), "O");
+        assert_eq!(dict_word("o_orderstatus", orderstatus_id("P")).unwrap(), "P");
+        assert_eq!(
+            dict_word("o_orderpriority", 0).unwrap(),
+            "1-URGENT"
+        );
+        assert_eq!(dict_word("p_mfgr", 4).unwrap(), "Manufacturer#5");
+        assert_eq!(dict_word("s_phone_cc", 27).unwrap(), "27");
+        // out-of-vocabulary ids and unknown attributes decode to None
+        assert_eq!(dict_word("p_brand", 25), None);
+        assert_eq!(dict_word("l_quantity", 3), None);
     }
 
     #[test]

@@ -1,0 +1,132 @@
+//! Crate-wide error type for the PIMDB service API.
+//!
+//! Every fallible path of the embedding API ([`crate::api`]) and the
+//! engine underneath it returns [`PimdbError`]: a typed union of the
+//! layer-specific errors (PQL diagnostics, compile errors, layout errors,
+//! execution errors) instead of pre-rendered strings. Callers can match
+//! on the variant programmatically; the CLI renders it exactly once at
+//! the process boundary via the `impl From<PimdbError> for String`.
+
+use crate::db::layout::LayoutError;
+use crate::exec::ExecError;
+use crate::query::compiler::CompileError;
+use crate::query::lang::Diag;
+
+/// Any error the PIMDB service API can return.
+#[derive(Clone, Debug)]
+pub enum PimdbError {
+    /// PQL text failed to parse or lower. Carries the diagnostic *and*
+    /// the source text so [`std::fmt::Display`] can render the caret
+    /// listing without the caller re-supplying the source.
+    Parse {
+        /// The parser/lowering diagnostic (message + source span).
+        diag: Diag,
+        /// The PQL source text the diagnostic refers to.
+        src: String,
+    },
+    /// The query compiler rejected a relation program.
+    Compile(CompileError),
+    /// The database copy does not fit the configured PIM geometry.
+    Layout(LayoutError),
+    /// A functional execution backend failed at runtime.
+    Exec(ExecError),
+    /// `prepare` was given a TPC-H query name outside the evaluated set.
+    UnknownQuery(String),
+    /// `prepare` was given a PQL program with several query blocks
+    /// (use [`crate::api::Pimdb::prepare_all`] for programs).
+    ExpectedSingleQuery {
+        /// Query blocks the program actually contained.
+        found: usize,
+    },
+}
+
+impl std::fmt::Display for PimdbError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PimdbError::Parse { diag, src } => write!(f, "{}", diag.render(src)),
+            PimdbError::Compile(e) => write!(f, "{e}"),
+            PimdbError::Layout(e) => write!(f, "{e}"),
+            PimdbError::Exec(e) => write!(f, "{e}"),
+            PimdbError::UnknownQuery(name) => {
+                write!(f, "unknown query '{name}' (not in the evaluated TPC-H set)")
+            }
+            PimdbError::ExpectedSingleQuery { found } => write!(
+                f,
+                "expected a single query block, got {found} (use prepare_all)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PimdbError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            PimdbError::Compile(e) => Some(e),
+            PimdbError::Layout(e) => Some(e),
+            PimdbError::Exec(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<CompileError> for PimdbError {
+    fn from(e: CompileError) -> PimdbError {
+        PimdbError::Compile(e)
+    }
+}
+
+impl From<LayoutError> for PimdbError {
+    fn from(e: LayoutError) -> PimdbError {
+        PimdbError::Layout(e)
+    }
+}
+
+impl From<ExecError> for PimdbError {
+    fn from(e: ExecError) -> PimdbError {
+        PimdbError::Exec(e)
+    }
+}
+
+/// Render at the process boundary (the CLI's `Result<(), String>` paths).
+impl From<PimdbError> for String {
+    fn from(e: PimdbError) -> String {
+        e.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::query::lang::Span;
+
+    #[test]
+    fn display_renders_each_variant() {
+        let parse = PimdbError::Parse {
+            diag: Diag::new("unknown column 'nope'", Span::new(5, 9)),
+            src: "from nope | filter true".into(),
+        };
+        let text = parse.to_string();
+        assert!(text.contains("unknown column"), "{text}");
+        assert!(text.contains('^'), "{text}");
+
+        let unk = PimdbError::UnknownQuery("Q99".into());
+        assert!(unk.to_string().contains("Q99"));
+
+        let multi = PimdbError::ExpectedSingleQuery { found: 3 };
+        assert!(multi.to_string().contains('3'));
+    }
+
+    #[test]
+    fn error_sources_chain() {
+        use std::error::Error;
+        let e = PimdbError::Layout(LayoutError::RowTooWide {
+            rel: crate::db::schema::RelId::Part,
+            row_bits: 600,
+            xbar_cols: 512,
+        });
+        assert!(e.source().is_some());
+        assert!(e.to_string().contains("exceeds crossbar"));
+        let s: String = e.into();
+        assert!(s.contains("600"));
+    }
+}

@@ -248,6 +248,7 @@ pub fn run_query(cfg: &SystemConfig, db: &Database, q: &Query) -> RunReport {
         cycles: Default::default(),
         inter_cells: 0,
         opt: Default::default(),
+        plan_cache: Default::default(),
         peak_chip_w: 0.0,
         avg_chip_w: 0.0,
         theoretical_chip_w: 0.0,

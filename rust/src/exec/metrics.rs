@@ -85,6 +85,19 @@ impl From<crate::query::opt::OptStats> for OptSummary {
     }
 }
 
+/// Plan-cache hit/miss counters of the [`crate::api::Pimdb`] handle that
+/// executed the query, snapshotted at execution time. Both stay zero on
+/// the legacy `PimSession` path and on the baseline (neither has a plan
+/// cache). `hits + misses` equals the number of `prepare` calls the
+/// handle had served so far; `misses` equals the number of compilations.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlanCacheCounters {
+    /// Prepares served from the cache (no compilation ran).
+    pub hits: u64,
+    /// Prepares that compiled and populated the cache.
+    pub misses: u64,
+}
+
 /// Metrics of one query execution (PIMDB or baseline), at the report SF.
 #[derive(Clone, Debug, Default)]
 pub struct QueryMetrics {
@@ -110,6 +123,9 @@ pub struct QueryMetrics {
     pub inter_cells: usize,
     /// Optimizer before/after instruction and cycle counts.
     pub opt: OptSummary,
+    /// Plan-cache counters of the serving [`crate::api::Pimdb`] handle at
+    /// execution time (zero on the legacy / baseline paths).
+    pub plan_cache: PlanCacheCounters,
     /// Peak memory-chip power over the run (W, Fig. 14).
     pub peak_chip_w: f64,
     /// Highest windowed-average chip power (W, Fig. 14).

@@ -9,3 +9,34 @@ pub mod engine;
 pub mod metrics;
 pub mod pimdb;
 pub mod plan;
+
+/// Why the functional execution of a compiled program failed.
+///
+/// The native interpreter is total — it cannot fail — so in practice every
+/// variant today wraps a backend-runtime condition (the PJRT client and its
+/// AOT kernel artifacts live outside the type system). The enum exists so
+/// those conditions travel as data to [`crate::error::PimdbError`] instead
+/// of being flattened into strings mid-pipeline.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ExecError {
+    /// A functional backend reported a runtime failure (e.g. the PJRT
+    /// runtime or its kernel artifacts are missing or rejected a program).
+    Backend {
+        /// Which backend failed (`"native"` or `"pjrt"`).
+        engine: &'static str,
+        /// The backend's own description of the failure.
+        msg: String,
+    },
+}
+
+impl std::fmt::Display for ExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecError::Backend { engine, msg } => {
+                write!(f, "{engine} backend failed: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ExecError {}

@@ -32,6 +32,7 @@ use crate::config::SystemConfig;
 use crate::db::dbgen::Database;
 use crate::db::layout::{DbLayout, RelationLayout};
 use crate::db::schema::RelId;
+use crate::error::PimdbError;
 use crate::exec::engine::{self, ExecOutputs, XbarState};
 use crate::exec::metrics::{
     CycleCounts, GroupOutput, OptSummary, QueryMetrics, QueryOutput, RunReport,
@@ -67,6 +68,15 @@ const ISSUE_GAP_PS: u64 = 10_000;
 /// once and then used for query execution" — query execution does not
 /// modify the data columns; intermediate results live in the compute
 /// area, which the session clears between queries).
+///
+/// **Internal implementation detail.** The supported embedding surface is
+/// the owned, shareable [`crate::api::Pimdb`] handle (`open` / `prepare` /
+/// `execute`), which adds a plan cache, typed result cursors and
+/// `&self`-concurrent execution on top of the same engine. `PimSession`
+/// remains exported only so the differential suite
+/// (`tests/api_equivalence.rs`) can pin the new facade bit-for-bit against
+/// this original path; it borrows both the config and the database and
+/// serializes all execution through `&mut self`.
 pub struct PimSession<'a> {
     /// The system configuration the session runs under.
     pub cfg: &'a SystemConfig,
@@ -86,7 +96,7 @@ struct WaveProg {
 
 /// Zero the crossbar compute area (the paper's read phase frees it; data
 /// columns are never modified by query execution).
-fn clear_compute(states: &mut [XbarState], compute_base: usize) {
+pub(crate) fn clear_compute(states: &mut [XbarState], compute_base: usize) {
     for st in states.iter_mut() {
         for p in &mut st.planes[compute_base..] {
             *p = [0u32; WORDS];
@@ -96,7 +106,7 @@ fn clear_compute(states: &mut [XbarState], compute_base: usize) {
 
 impl<'a> PimSession<'a> {
     /// Lay out `db` over the PIM modules (states load lazily per relation).
-    pub fn new(cfg: &'a SystemConfig, db: &'a Database) -> Result<Self, String> {
+    pub fn new(cfg: &'a SystemConfig, db: &'a Database) -> Result<Self, PimdbError> {
         Ok(PimSession {
             cfg,
             db,
@@ -120,7 +130,11 @@ impl<'a> PimSession<'a> {
     }
 
     /// Run one query against the loaded database copy.
-    pub fn run_query(&mut self, q: &Query, engine_kind: EngineKind) -> Result<RunReport, String> {
+    pub fn run_query(
+        &mut self,
+        q: &Query,
+        engine_kind: EngineKind,
+    ) -> Result<RunReport, PimdbError> {
         let mut reports = self.run_queries(std::slice::from_ref(q), engine_kind)?;
         Ok(reports.pop().expect("one report"))
     }
@@ -134,7 +148,7 @@ impl<'a> PimSession<'a> {
         &mut self,
         queries: &[Query],
         engine_kind: EngineKind,
-    ) -> Result<Vec<RunReport>, String> {
+    ) -> Result<Vec<RunReport>, PimdbError> {
         let exec_plan = ExecPlan::for_config(self.cfg);
 
         // --- compile everything up front (errors before any execution) ---
@@ -146,8 +160,7 @@ impl<'a> PimSession<'a> {
                     .map(|rq| Compiler::compile(rq, self.layout.rel(rq.rel), self.cfg.xbar_cols))
                     .collect::<Result<_, CompileError>>()
             })
-            .collect::<Result<_, CompileError>>()
-            .map_err(|e| e.to_string())?;
+            .collect::<Result<_, CompileError>>()?;
 
         // --- optimizer pass pipeline (waves execute optimized programs) ---
         let mut opt_summaries: Vec<OptSummary> = Vec::with_capacity(compiled_all.len());
@@ -289,7 +302,7 @@ impl<'a> PimSession<'a> {
                 .map(|ci| outputs.remove(&(qi, ci)).expect("executed above"))
                 .collect();
             let output = assemble_output(q, compiled, &outs);
-            let mut metrics = simulate(self.cfg, q, compiled, &self.layout)?;
+            let mut metrics = simulate(self.cfg, q, compiled, &self.layout);
             metrics.inter_cells = compiled
                 .iter()
                 .map(|c| c.peak_inter_cells)
@@ -314,13 +327,13 @@ pub fn run_query(
     db: &Database,
     q: &Query,
     engine_kind: EngineKind,
-) -> Result<RunReport, String> {
+) -> Result<RunReport, PimdbError> {
     PimSession::new(cfg, db)?.run_query(q, engine_kind)
 }
 
 /// Assemble the functional result (host-side combine of per-crossbar
 /// values, host division for AVG — paper §4.2).
-fn assemble_output(
+pub(crate) fn assemble_output(
     q: &Query,
     compiled: &[CompiledRelQuery],
     outs: &[ExecOutputs],
@@ -429,12 +442,12 @@ fn count_cycles(costs: &[(InstructionCost, OpCategory)]) -> CycleCounts {
     cycles
 }
 
-fn simulate(
+pub(crate) fn simulate(
     cfg: &SystemConfig,
     _q: &Query,
     compiled: &[CompiledRelQuery],
     layout: &DbLayout,
-) -> Result<QueryMetrics, String> {
+) -> QueryMetrics {
     let mut sched = MediaScheduler::new(cfg);
     let mut power = PowerTrace::new(cfg.pim_modules);
     let mut energy = EnergyLedger::default();
@@ -613,7 +626,7 @@ fn simulate(
     let peak_chip_w = fin.iter().fold(0.0f64, |a, &(p, _)| a.max(p)) / chips;
     let avg_chip_w = fin.iter().fold(0.0f64, |a, &(_, v)| a.max(v)) / chips;
 
-    Ok(QueryMetrics {
+    QueryMetrics {
         exec_time_s,
         pim_time_s: pim_ps as f64 * 1e-12,
         read_time_s: read_ps as f64 * 1e-12,
@@ -625,13 +638,14 @@ fn simulate(
         cycles,
         inter_cells: 0, // filled by caller
         opt: OptSummary::default(), // filled by caller
+        plan_cache: Default::default(), // filled by the api facade
         peak_chip_w,
         avg_chip_w,
         theoretical_chip_w: power::theoretical_peak_query_chip_w(cfg, max_pages),
         ops_per_cell: worst_ops_per_cell,
         required_endurance_10yr: worst_ops_per_cell * executions_per_10yr,
         endurance_breakdown: worst_breakdown,
-    })
+    }
 }
 
 #[cfg(test)]

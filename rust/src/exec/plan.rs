@@ -26,6 +26,7 @@ use std::sync::Mutex;
 use crate::config::SystemConfig;
 use crate::exec::engine::{self, ExecOutputs, XbarState};
 use crate::exec::pimdb::EngineKind;
+use crate::exec::ExecError;
 use crate::query::compiler::Step;
 
 /// Shards per worker beyond 1x: partial tail shards and relation-size
@@ -97,10 +98,14 @@ pub struct ShardTask<'a> {
     pub engine: EngineKind,
 }
 
-fn run_one(t: ShardTask<'_>) -> Result<ExecOutputs, String> {
+fn run_one(t: ShardTask<'_>) -> Result<ExecOutputs, ExecError> {
     match t.engine {
         EngineKind::Native => Ok(engine::exec_steps_native(t.states, t.steps, t.mask_col)),
-        EngineKind::Pjrt => crate::runtime::exec_steps_pjrt(t.states, t.steps, t.mask_col),
+        EngineKind::Pjrt => crate::runtime::exec_steps_pjrt(t.states, t.steps, t.mask_col)
+            .map_err(|msg| ExecError::Backend {
+                engine: "pjrt",
+                msg,
+            }),
     }
 }
 
@@ -114,7 +119,7 @@ pub fn run_tasks(
     tasks: Vec<ShardTask<'_>>,
     n_programs: usize,
     parallelism: usize,
-) -> Result<Vec<ExecOutputs>, String> {
+) -> Result<Vec<ExecOutputs>, ExecError> {
     let workers = parallelism.min(tasks.len()).max(1);
     let mut partials: Vec<(usize, usize, ExecOutputs)> = Vec::with_capacity(tasks.len());
     if workers == 1 {
@@ -193,7 +198,7 @@ pub fn exec_steps_sharded(
     mask_col: usize,
     engine: EngineKind,
     plan: &ExecPlan,
-) -> Result<ExecOutputs, String> {
+) -> Result<ExecOutputs, ExecError> {
     if states.is_empty() {
         // keep the output shape identical to the serial interpreter
         // (n_reduces empty per-crossbar vectors, not an empty `reduces`)
@@ -352,6 +357,8 @@ mod tests {
         let plan = ExecPlan::with_parallelism(2);
         let err =
             exec_steps_sharded(&mut sts, &steps, 100, EngineKind::Pjrt, &plan).unwrap_err();
-        assert!(!err.is_empty());
+        let ExecError::Backend { engine, msg } = err;
+        assert_eq!(engine, "pjrt");
+        assert!(!msg.is_empty());
     }
 }

@@ -14,6 +14,11 @@
 //! in [`pim`], [`mem`] and [`host`].
 //!
 //! Modules:
+//! * [`api`] — the embedding surface: an owned, `Arc`-shareable
+//!   [`api::Pimdb`] service handle with prepared statements
+//!   (`open` → `prepare` → `execute`), a canonical-AST-hash plan cache,
+//!   typed [`api::Rows`]/[`api::Value`] result cursors that decode the
+//!   schema encodings, and the crate-wide typed [`error::PimdbError`].
 //! * [`pim`] — PIM module hardware model: crossbars, controller FSM
 //!   (Table 4), media controller + FR-FCFS, energy/endurance/area/power.
 //! * [`mem`] — host memory substrate: address mapping (Fig. 3), huge
@@ -45,9 +50,11 @@
 
 #![warn(missing_docs)]
 
+pub mod api;
 pub mod cli;
 pub mod config;
 pub mod db;
+pub mod error;
 pub mod exec;
 pub mod host;
 pub mod mem;

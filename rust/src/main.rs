@@ -7,10 +7,12 @@
 //! `pimdb report --exp figN/tableN` regenerates the paper's evaluation
 //! artifacts. See `pimdb help`.
 
+use pimdb::api::Pimdb;
 use pimdb::cli::{Args, USAGE};
 use pimdb::config::SystemConfig;
 use pimdb::db::dbgen::Database;
 use pimdb::db::schema::PIM_RELATIONS;
+use pimdb::error::PimdbError;
 use pimdb::exec::metrics::RunReport;
 use pimdb::exec::plan::resolve_parallelism;
 use pimdb::exec::{baseline, pimdb as engine};
@@ -56,36 +58,54 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     // --query TPC-H names, or ad-hoc PQL text via --sql / --sql-file
     let queries: Vec<Query> = args.queries()?;
     let seed = args.parse_u64("seed")?.unwrap_or(42);
-    let db = Database::generate(cfg.sim_sf, seed);
     let engine_kind = args.engine()?;
 
     let t0 = std::time::Instant::now();
-    let mut session = engine::PimSession::new(&cfg, &db)?;
+    let db = Pimdb::open(cfg.clone(), Database::generate(cfg.sim_sf, seed))?;
     if args.has("explain") {
         for q in &queries {
             let text = pimdb::query::opt::explain_query(
                 q,
-                session.layout(),
+                db.layout(),
                 cfg.xbar_cols,
                 cfg.xbar_rows,
                 cfg.opt_level,
-            )?;
+            )
+            .map_err(PimdbError::from)?;
             print!("{text}");
         }
     }
-    let reports = session.run_queries(&queries, engine_kind)?;
+    // prepare everything up front (errors before any execution), then
+    // execute all statements concurrently from &db: queries on disjoint
+    // relations overlap (the wave-scheduler rule, now enforced by the
+    // per-relation locks), each fanning out over the shard pool. Results
+    // come back in input order, bit-identical to a serial loop.
+    let prepared = queries
+        .iter()
+        .map(|q| db.prepare(q))
+        .collect::<Result<Vec<_>, _>>()?;
+    let results = std::thread::scope(|s| {
+        let workers: Vec<_> = prepared
+            .iter()
+            .map(|p| s.spawn(move || p.execute_on(engine_kind)))
+            .collect();
+        workers
+            .into_iter()
+            .map(|w| w.join().expect("query worker panicked"))
+            .collect::<Result<Vec<_>, _>>()
+    })?;
     let wall = t0.elapsed();
 
-    for (q, r) in queries.iter().zip(&reports) {
-        print_report(&cfg, engine_kind, r);
+    for (q, r) in queries.iter().zip(&results) {
+        print_report(&cfg, engine_kind, r.raw_report());
         if args.has("baseline") {
-            print_baseline(&cfg, &db, q, r);
+            print_baseline(&cfg, db.database(), q, r.raw_report());
         }
     }
     println!(
         "(host wall-clock for {} simulated quer{}: {:.2?} at parallelism {})",
-        reports.len(),
-        if reports.len() == 1 { "y" } else { "ies" },
+        results.len(),
+        if results.len() == 1 { "y" } else { "ies" },
         wall,
         resolve_parallelism(cfg.parallelism)
     );

@@ -18,6 +18,27 @@ pub struct HugePage {
     pub vbase: u64,
 }
 
+/// Huge-page allocation failure: a PIM module ran out of pages.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CapacityError {
+    /// The module that could not supply another page.
+    pub module: usize,
+    /// Pages each module can hold (`module_capacity / page_bytes`).
+    pub pages_per_module: u64,
+}
+
+impl std::fmt::Display for CapacityError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "PIM module {} exhausted ({} pages)",
+            self.module, self.pages_per_module
+        )
+    }
+}
+
+impl std::error::Error for CapacityError {}
+
 /// System-wide huge-page allocator.
 pub struct PageAllocator {
     modules: usize,
@@ -45,16 +66,16 @@ impl PageAllocator {
 
     /// Allocate `n` huge-pages for one data structure (relation).
     /// Returns an error when PIM capacity is exhausted.
-    pub fn allocate(&mut self, n: usize) -> Result<Vec<HugePage>, String> {
+    pub fn allocate(&mut self, n: usize) -> Result<Vec<HugePage>, CapacityError> {
         let mut pages = Vec::with_capacity(n);
         for _ in 0..n {
             // round-robin module, then bank within module
             let module = self.next_page % self.modules;
             if self.allocated_per_module[module] >= self.pages_per_module {
-                return Err(format!(
-                    "PIM module {module} exhausted ({} pages)",
-                    self.pages_per_module
-                ));
+                return Err(CapacityError {
+                    module,
+                    pages_per_module: self.pages_per_module,
+                });
             }
             let within = self.allocated_per_module[module];
             let bank = (within as usize) % self.banks;

@@ -226,13 +226,13 @@ pub fn explain_query(
     xbar_cols: usize,
     xbar_rows: usize,
     level: OptLevel,
-) -> Result<String, String> {
+) -> Result<String, crate::query::compiler::CompileError> {
     use std::fmt::Write;
     use super::compiler::Compiler;
     let mut s = String::new();
     writeln!(s, "== explain {} (-{level}) ==", q.name).unwrap();
     for rq in &q.rels {
-        let c = Compiler::compile(rq, layout.rel(rq.rel), xbar_cols).map_err(|e| e.to_string())?;
+        let c = Compiler::compile(rq, layout.rel(rq.rel), xbar_cols)?;
         let (opt, st) = optimize(&c, level, xbar_rows);
         writeln!(
             s,

@@ -4,8 +4,10 @@
 pub mod figures;
 pub mod tables;
 
+use crate::api::{Pimdb, QuerySource};
 use crate::config::SystemConfig;
 use crate::db::dbgen::Database;
+use crate::error::PimdbError;
 use crate::exec::metrics::RunReport;
 use crate::exec::{baseline, pimdb};
 use crate::query::ast::{Query, QueryKind};
@@ -48,15 +50,18 @@ pub struct Experiments {
 }
 
 impl Experiments {
-    /// Run all 19 queries on PIMDB and the baseline over one session.
-    pub fn run(cfg: &SystemConfig, engine: pimdb::EngineKind) -> Result<Experiments, String> {
-        let db = Database::generate(cfg.sim_sf, 42);
-        // one session: the PIM database copy loads once, as in the paper
-        let mut session = pimdb::PimSession::new(cfg, &db)?;
+    /// Run all 19 queries on PIMDB and the baseline over one service
+    /// handle (the PIM database copy loads once, as in the paper; each
+    /// query is prepared through the plan cache and executed).
+    pub fn run(cfg: &SystemConfig, engine: pimdb::EngineKind) -> Result<Experiments, PimdbError> {
+        let handle = Pimdb::open(cfg.clone(), Database::generate(cfg.sim_sf, 42))?;
         let mut pairs = Vec::new();
         for q in tpch::all_queries() {
-            let pim = session.run_query(&q, engine)?;
-            let base = baseline::run_query(cfg, &db, &q);
+            let pim = handle
+                .prepare(QuerySource::Ast(&q))?
+                .execute_on(engine)?
+                .into_report();
+            let base = baseline::run_query(cfg, handle.database(), &q);
             pairs.push(QueryPair {
                 query: q,
                 pim,

@@ -1,0 +1,309 @@
+//! The new service API (`api::Pimdb`, prepared statements, plan cache,
+//! typed rows) pinned bit-for-bit against the original `PimSession` path.
+//!
+//! The facade is a re-plumbing of the same engine — same compiler, same
+//! optimizer, same sharded executor, same simulation — so every TPC-H
+//! query and every PQL fixture must produce *identical* outputs and
+//! Table 5/6 metrics through both doors, and concurrent `execute(&self)`
+//! from several threads must match the serial run exactly, at every
+//! `parallelism`. This suite is the migration safety net; it outlives the
+//! old path until `PimSession` is deleted.
+
+use std::sync::Arc;
+
+use pimdb::api::{Pimdb, QuerySource};
+use pimdb::config::SystemConfig;
+use pimdb::db::dbgen::Database;
+use pimdb::exec::metrics::{PlanCacheCounters, QueryMetrics, RunReport};
+use pimdb::exec::pimdb::{EngineKind, PimSession};
+use pimdb::query::lang::parse_program;
+use pimdb::query::tpch;
+
+const SIM_SF: f64 = 0.002;
+
+/// The 19 evaluated queries as PQL text (same fixture set as
+/// `pql_fixtures.rs`, which proves them node-for-node equal to the
+/// hardcoded ASTs).
+const PQL_FIXTURES: &[(&str, &str)] = &[
+    ("Q1", include_str!("pql/q1.pql")),
+    ("Q2", include_str!("pql/q2.pql")),
+    ("Q3", include_str!("pql/q3.pql")),
+    ("Q4", include_str!("pql/q4.pql")),
+    ("Q5", include_str!("pql/q5.pql")),
+    ("Q6", include_str!("pql/q6.pql")),
+    ("Q7", include_str!("pql/q7.pql")),
+    ("Q8", include_str!("pql/q8.pql")),
+    ("Q10", include_str!("pql/q10.pql")),
+    ("Q11", include_str!("pql/q11.pql")),
+    ("Q12", include_str!("pql/q12.pql")),
+    ("Q14", include_str!("pql/q14.pql")),
+    ("Q15", include_str!("pql/q15.pql")),
+    ("Q16", include_str!("pql/q16.pql")),
+    ("Q17", include_str!("pql/q17.pql")),
+    ("Q19", include_str!("pql/q19.pql")),
+    ("Q20", include_str!("pql/q20.pql")),
+    ("Q21", include_str!("pql/q21.pql")),
+    ("Q22_sub", include_str!("pql/q22_sub.pql")),
+];
+
+fn db() -> Database {
+    Database::generate(SIM_SF, 42)
+}
+
+/// Every simulated metric must be bit-identical between the two paths
+/// (floats compare by bit pattern, not tolerance). `plan_cache` is the
+/// one legitimate difference: the legacy path has no cache.
+fn assert_reports_identical(a: &RunReport, b: &RunReport, ctx: &str) {
+    assert_eq!(a.query, b.query, "{ctx}: query name");
+    assert_eq!(a.output, b.output, "{ctx}: functional output");
+    let (am, bm): (&QueryMetrics, &QueryMetrics) = (&a.metrics, &b.metrics);
+    assert_eq!(am.cycles, bm.cycles, "{ctx}: cycle counts");
+    assert_eq!(am.inter_cells, bm.inter_cells, "{ctx}: inter cells");
+    assert_eq!(am.opt, bm.opt, "{ctx}: optimizer summary");
+    assert_eq!(am.llc_misses, bm.llc_misses, "{ctx}: llc misses");
+    assert_eq!(am.pim_energy, bm.pim_energy, "{ctx}: pim energy ledger");
+    for (x, y, what) in [
+        (am.exec_time_s, bm.exec_time_s, "exec_time_s"),
+        (am.pim_time_s, bm.pim_time_s, "pim_time_s"),
+        (am.read_time_s, bm.read_time_s, "read_time_s"),
+        (am.other_time_s, bm.other_time_s, "other_time_s"),
+        (am.host_energy_pj, bm.host_energy_pj, "host_energy_pj"),
+        (am.dram_energy_pj, bm.dram_energy_pj, "dram_energy_pj"),
+        (am.peak_chip_w, bm.peak_chip_w, "peak_chip_w"),
+        (am.avg_chip_w, bm.avg_chip_w, "avg_chip_w"),
+        (
+            am.theoretical_chip_w,
+            bm.theoretical_chip_w,
+            "theoretical_chip_w",
+        ),
+        (am.ops_per_cell, bm.ops_per_cell, "ops_per_cell"),
+        (
+            am.required_endurance_10yr,
+            bm.required_endurance_10yr,
+            "required_endurance_10yr",
+        ),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: {what}");
+    }
+    for i in 0..5 {
+        assert_eq!(
+            am.endurance_breakdown[i].to_bits(),
+            bm.endurance_breakdown[i].to_bits(),
+            "{ctx}: endurance_breakdown[{i}]"
+        );
+    }
+}
+
+/// All 19 TPC-H queries: `Pimdb::prepare`/`execute` vs the legacy
+/// session, outputs and Table 5/6 metrics bit-identical.
+#[test]
+fn all_tpch_queries_match_the_legacy_session() {
+    let cfg = SystemConfig {
+        sim_sf: SIM_SF,
+        ..SystemConfig::default()
+    };
+    let data = db();
+    let mut legacy = PimSession::new(&cfg, &data).unwrap();
+    let handle = Pimdb::open(cfg.clone(), db()).unwrap();
+    for q in tpch::all_queries() {
+        let want = legacy.run_query(&q, EngineKind::Native).unwrap();
+        let got = handle
+            .prepare(QuerySource::Ast(&q))
+            .unwrap()
+            .execute()
+            .unwrap();
+        assert_reports_identical(got.raw_report(), &want, q.name);
+    }
+}
+
+/// Every PQL fixture, prepared as *text* (the parse->cache-key->compile
+/// path), matches the legacy session running the same program.
+#[test]
+fn pql_fixtures_match_the_legacy_session() {
+    let cfg = SystemConfig {
+        sim_sf: SIM_SF,
+        ..SystemConfig::default()
+    };
+    let data = db();
+    let mut legacy = PimSession::new(&cfg, &data).unwrap();
+    let handle = Pimdb::open(cfg.clone(), db()).unwrap();
+    for &(name, src) in PQL_FIXTURES {
+        let queries = parse_program(src).unwrap_or_else(|e| panic!("{name}: {}", e.render(src)));
+        let want = legacy
+            .run_queries(&queries, EngineKind::Native)
+            .unwrap()
+            .pop()
+            .unwrap();
+        let got = handle.prepare(src).unwrap().execute().unwrap();
+        assert_reports_identical(got.raw_report(), &want, name);
+    }
+    // one compilation per distinct fixture — nothing double-compiled
+    let c = handle.plan_cache_counters();
+    assert_eq!(c.misses, PQL_FIXTURES.len() as u64, "one compile each");
+    assert_eq!(c.hits, 0);
+}
+
+/// Concurrent `execute` from `&self` over shared statements matches the
+/// serial legacy run bit-for-bit at every shard-pool width.
+#[test]
+fn concurrent_prepared_execution_is_bit_identical_at_every_parallelism() {
+    let base_cfg = SystemConfig {
+        sim_sf: SIM_SF,
+        ..SystemConfig::default()
+    };
+    let data = db();
+    let mut legacy = PimSession::new(&base_cfg, &data).unwrap();
+    // mixed workload: disjoint relations (parallel) + a shared relation
+    // (serializes on its lock) + a full query
+    let names = ["Q6", "Q11", "Q1", "Q12", "Q22_sub"];
+    let want: Vec<RunReport> = names
+        .iter()
+        .map(|n| {
+            legacy
+                .run_query(&tpch::query(n).unwrap(), EngineKind::Native)
+                .unwrap()
+        })
+        .collect();
+
+    for workers in [1usize, 2, 8] {
+        let cfg = SystemConfig {
+            parallelism: workers,
+            ..base_cfg.clone()
+        };
+        let handle = Arc::new(Pimdb::open(cfg, db()).unwrap());
+        let stmts: Vec<_> = names
+            .iter()
+            .map(|n| handle.prepare(QuerySource::Tpch(n)).unwrap())
+            .collect();
+        // two full rounds in flight at once: every statement executes
+        // concurrently with itself and with the others
+        std::thread::scope(|s| {
+            let round = |tag: usize| {
+                let stmts = &stmts;
+                move || {
+                    stmts
+                        .iter()
+                        .map(|st| (tag, st.execute().unwrap()))
+                        .collect::<Vec<_>>()
+                }
+            };
+            let t1 = s.spawn(round(1));
+            let t2 = s.spawn(round(2));
+            for results in [t1.join().unwrap(), t2.join().unwrap()] {
+                for ((_, got), want) in results.iter().zip(&want) {
+                    assert_reports_identical(
+                        got.raw_report(),
+                        want,
+                        &format!("{} at parallelism {workers}", want.query),
+                    );
+                }
+            }
+        });
+    }
+}
+
+/// The satellite contract: preparing the same PQL text twice compiles
+/// once; whitespace and alias renames hit; literals miss.
+#[test]
+fn plan_cache_amortizes_repeated_templates() {
+    let cfg = SystemConfig {
+        sim_sf: SIM_SF,
+        ..SystemConfig::default()
+    };
+    let handle = Pimdb::open(cfg, db()).unwrap();
+    let q6 = include_str!("pql/q6.pql");
+    handle.prepare(q6).unwrap();
+    handle.prepare(q6).unwrap();
+    assert_eq!(
+        handle.plan_cache_counters(),
+        PlanCacheCounters { hits: 1, misses: 1 }
+    );
+    // reformatted + renamed + re-aliased: still the same template
+    let reformatted = "query Q6_again from lineitem | filter \
+        (l_shipdate >= date(1994-01-01) and l_shipdate < date(1995-01-01)) \
+        and l_discount between 0.05..0.07 and l_quantity < 24 \
+        | aggregate sum(l_extendedprice * l_discount) as rev";
+    let stmt = handle.prepare(reformatted).unwrap();
+    assert_eq!(
+        handle.plan_cache_counters(),
+        PlanCacheCounters { hits: 2, misses: 1 }
+    );
+    // the hit still executes under its own alias and name
+    let r = stmt.execute().unwrap();
+    assert_eq!(r.query_name(), "Q6_again");
+    assert!(r.rows().row(0).unwrap().get("rev").is_some());
+    // a changed literal is a different plan
+    let changed = "from lineitem | filter \
+        (l_shipdate >= date(1994-01-01) and l_shipdate < date(1995-01-01)) \
+        and l_discount between 0.05..0.07 and l_quantity < 25 \
+        | aggregate sum(l_extendedprice * l_discount) as rev";
+    handle.prepare(changed).unwrap();
+    assert_eq!(
+        handle.plan_cache_counters(),
+        PlanCacheCounters { hits: 2, misses: 2 }
+    );
+}
+
+/// Typed rows decode what the raw output encodes, on a real query: Q1's
+/// group keys are dictionary words, Q6's revenue is numeric, filter-only
+/// queries report per-relation selection counts.
+#[test]
+fn typed_rows_decode_real_query_results() {
+    let cfg = SystemConfig {
+        sim_sf: SIM_SF,
+        ..SystemConfig::default()
+    };
+    let handle = Pimdb::open(cfg, db()).unwrap();
+
+    let q1 = handle.prepare(QuerySource::Tpch("Q1")).unwrap().execute().unwrap();
+    let raw = &q1.raw_report().output;
+    assert_eq!(q1.rows().len(), raw.groups.len());
+    for (row, group) in q1.rows().zip(&raw.groups) {
+        // dictionary-decoded keys: returnflag in {R,A,N}, linestatus in {O,F}
+        let flag = row.get("l_returnflag").unwrap().as_str().unwrap();
+        assert!(["R", "A", "N"].contains(&flag), "{flag}");
+        let status = row.get("l_linestatus").unwrap().as_str().unwrap();
+        assert!(["O", "F"].contains(&status), "{status}");
+        assert_eq!(
+            row.get("count").unwrap().as_i64().unwrap() as u64,
+            group.count
+        );
+    }
+
+    let q12 = handle.prepare(QuerySource::Tpch("Q12")).unwrap().execute().unwrap();
+    let row0 = q12.rows().row(0).unwrap().clone();
+    assert_eq!(row0.get("relation").unwrap().as_str(), Some("LINEITEM"));
+    assert_eq!(
+        row0.get("selected").unwrap().as_i64().unwrap() as u64,
+        q12.raw_report().output.selected[0].1
+    );
+}
+
+/// `Pimdb` is an owned handle: it must stay `Send + Sync` (the old
+/// `PimSession<'a>` required external `&mut` serialization and borrowed
+/// its inputs — the compile-time assertion pins the new ownership model).
+#[test]
+fn handle_is_send_sync_and_arc_shareable() {
+    fn takes_send_sync<T: Send + Sync + 'static>(_: &T) {}
+    let handle = Pimdb::open(
+        SystemConfig {
+            sim_sf: SIM_SF,
+            ..SystemConfig::default()
+        },
+        db(),
+    )
+    .unwrap();
+    takes_send_sync(&handle);
+    let shared = Arc::new(handle);
+    let clone = Arc::clone(&shared);
+    let t = std::thread::spawn(move || {
+        clone
+            .prepare("from supplier | filter s_suppkey < 10")
+            .unwrap()
+            .execute()
+            .unwrap()
+            .rows()
+            .len()
+    });
+    assert_eq!(t.join().unwrap(), 1);
+}

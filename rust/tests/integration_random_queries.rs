@@ -196,7 +196,11 @@ fn unknown_attribute_is_a_compile_error_not_a_panic() {
         }],
     };
     let err = engine::run_query(&cfg, &db, &q, engine::EngineKind::Native).unwrap_err();
-    assert!(err.contains("no attribute"), "{err}");
+    assert!(
+        matches!(err, pimdb::error::PimdbError::Compile(_)),
+        "{err:?}"
+    );
+    assert!(err.to_string().contains("no attribute"), "{err}");
 }
 
 #[test]
@@ -218,7 +222,7 @@ fn mismatched_column_compare_widths_rejected() {
         }],
     };
     let err = engine::run_query(&cfg, &db, &q, engine::EngineKind::Native).unwrap_err();
-    assert!(err.contains("widths differ"), "{err}");
+    assert!(err.to_string().contains("widths differ"), "{err}");
 }
 
 #[test]
@@ -256,5 +260,9 @@ fn pim_capacity_exhaustion_is_an_error() {
     let db = Database::generate(0.001, 1);
     let q = pimdb::query::tpch::query("Q6").unwrap();
     let err = engine::run_query(&cfg, &db, &q, engine::EngineKind::Native).unwrap_err();
-    assert!(err.contains("exhausted"), "{err}");
+    assert!(
+        matches!(err, pimdb::error::PimdbError::Layout(_)),
+        "{err:?}"
+    );
+    assert!(err.to_string().contains("exhausted"), "{err}");
 }
