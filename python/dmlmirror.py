@@ -1,0 +1,224 @@
+"""Python mirror of the endurance-aware free-row allocator in
+``rust/src/db/freerows.rs`` (``FreeRowMap``).
+
+The authoring environment has no Rust toolchain, so — like
+``optmirror.py`` for the optimizer passes and ``apimirror.py`` for the
+plan-cache keys — the allocator is written here first, fuzz-validated
+against a naive from-scratch oracle, and then ported line by line to
+Rust. Two artifacts keep the implementations from drifting:
+
+* the *allocation policy* is fully deterministic: an INSERT takes the
+  free row minimizing ``(wear, row_index)`` — wear-leveling over the
+  per-row cell-write counters that queries and DML statements charge;
+* a scripted alloc/free/charge scenario is folded into an FNV-1a digest
+  (``golden_alloc_digest``) and pinned to the same literal constant in
+  both languages (``GOLDEN_ALLOC_DIGEST`` here, asserted in the Rust
+  unit tests of ``freerows.rs``) — any one-sided policy change breaks
+  exactly one of the two suites.
+
+The mirror replicates the Rust bookkeeping structure (an ordered set of
+``(wear, row)`` entries for the free rows, kept in sync with the wear
+counters) rather than recomputing the minimum from scratch; the fuzz
+suite in ``tests/test_dmlmirror.py`` compares it against the from-scratch
+oracle so stale-entry bugs in the incremental structure cannot hide.
+"""
+
+from __future__ import annotations
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x00000100000001B3
+MASK64 = (1 << 64) - 1
+
+#: Cross-language pin: ``golden_alloc_digest()`` in both languages.
+GOLDEN_ALLOC_DIGEST = 0x9468F2E2165F77A6
+
+
+class FreeRowMap:
+    """Per-relation row liveness + wear map (mirror of the Rust struct).
+
+    ``capacity`` rows, the first ``initial_live`` live (the loaded
+    records), the rest free.  ``rows_per_xbar`` is the crossbar row count:
+    column-wise instruction wear repeats per crossbar, so a per-crossbar
+    profile of that length charges every row of the relation.
+    """
+
+    def __init__(self, capacity: int, initial_live: int, rows_per_xbar: int):
+        assert 0 <= initial_live <= capacity
+        assert rows_per_xbar >= 1
+        self.rows_per_xbar = rows_per_xbar
+        self.live = [i < initial_live for i in range(capacity)]
+        self.wear = [0] * capacity
+        # mirror of the Rust BTreeSet<(wear, row)>: one entry per free row
+        self.free_entries = {(0, i) for i in range(initial_live, capacity)}
+
+    # -- queries -----------------------------------------------------------
+
+    def capacity(self) -> int:
+        return len(self.live)
+
+    def live_count(self) -> int:
+        return sum(self.live)
+
+    def is_live(self, row: int) -> bool:
+        return self.live[row]
+
+    def row_wear(self, row: int) -> int:
+        return self.wear[row]
+
+    # -- mutations ---------------------------------------------------------
+
+    def alloc(self):
+        """Take the least-worn free row (ties: lowest index); None if full."""
+        if not self.free_entries:
+            return None
+        entry = min(self.free_entries)
+        self.free_entries.remove(entry)
+        row = entry[1]
+        self.live[row] = True
+        return row
+
+    def release(self, row: int) -> None:
+        """Mark a live row free again (DELETE)."""
+        assert self.live[row], f"double free of row {row}"
+        self.live[row] = False
+        self.free_entries.add((self.wear[row], row))
+
+    def grow(self, rows: int) -> None:
+        """Append ``rows`` fresh free rows (a newly materialized crossbar)."""
+        base = len(self.live)
+        self.live.extend([False] * rows)
+        self.wear.extend([0] * rows)
+        for i in range(rows):
+            self.free_entries.add((0, base + i))
+
+    def charge_row(self, row: int, writes: int) -> None:
+        """Add ``writes`` cell writes to one row (an INSERT row write)."""
+        if not self.live[row]:
+            self.free_entries.remove((self.wear[row], row))
+            self.free_entries.add((self.wear[row] + writes, row))
+        self.wear[row] = (self.wear[row] + writes) & MASK64
+
+    def charge_profile(self, totals) -> None:
+        """Charge a per-crossbar write profile to every row.
+
+        ``totals[r]`` is the cell writes row ``r`` of *each* crossbar
+        received (all crossbars of a relation execute the same
+        instruction stream in lockstep).
+        """
+        changed = False
+        for i in range(len(self.wear)):
+            add = totals[i % self.rows_per_xbar]
+            if add:
+                self.wear[i] = (self.wear[i] + add) & MASK64
+                changed = True
+        if changed:
+            # wear of free rows moved: rebuild the ordered entries
+            self.free_entries = {
+                (self.wear[i], i) for i in range(len(self.live)) if not self.live[i]
+            }
+
+
+def update_runs(value: int, bits: int):
+    """Mirror of the UPDATE lowering in ``compile_dml`` (compiler.rs):
+    partition the attribute's bit range into maximal runs of equal value
+    bits; 1-runs become broadcast ``Or(attr, mask)``, 0-runs broadcast
+    ``And(attr, ~mask)``. Returns ``[(lo, length, bit)]``."""
+    runs = []
+    b = 0
+    while b < bits:
+        bit = (value >> b) & 1
+        e = b + 1
+        while e < bits and ((value >> e) & 1) == bit:
+            e += 1
+        runs.append((b, e - b, bit))
+        b = e
+    return runs
+
+
+def apply_update_runs(runs, row_value: int, selected: bool) -> int:
+    """Bit-plane semantics of the emitted Or/And stream on one row."""
+    out = row_value
+    for lo, length, bit in runs:
+        m = ((1 << length) - 1) << lo
+        if bit == 1:
+            if selected:
+                out |= m  # Or with the mask column (1 on selected rows)
+        else:
+            if selected:
+                out &= ~m  # And with NOT mask (0 on selected rows)
+    return out
+
+
+def oracle_alloc_choice(live, wear):
+    """From-scratch oracle for the allocation policy: the free row
+    minimizing ``(wear, row)``, or None."""
+    best = None
+    for row in range(len(live)):
+        if live[row]:
+            continue
+        key = (wear[row], row)
+        if best is None or key < best:
+            best = key
+    return None if best is None else best[1]
+
+
+# ---------------------------------------------------------------------------
+# golden pin
+# ---------------------------------------------------------------------------
+
+
+def _fnv1a_fold(state: int, value: int) -> int:
+    """Fold one little-endian u64 into an FNV-1a state."""
+    for byte in value.to_bytes(8, "little"):
+        state = ((state ^ byte) * FNV_PRIME) & MASK64
+    return state
+
+
+def golden_alloc_digest() -> int:
+    """Scripted alloc/free/charge scenario digested to 64 bits.
+
+    A deterministic LCG drives 200 operations over a 64-row map (4
+    crossbars of 16 rows, 40 initially live); every operation and every
+    allocator answer is folded into an FNV-1a digest, so the digest pins
+    the complete allocation *order* — the wear-leveling policy — not just
+    the final state.
+    """
+    fm = FreeRowMap(capacity=64, initial_live=40, rows_per_xbar=16)
+    state = FNV_OFFSET
+    x = 42
+    for _ in range(200):
+        x = (x * 6364136223846793005 + 1442695040888963407) & MASK64
+        op = x % 4
+        arg = (x >> 8) % 64
+        state = _fnv1a_fold(state, op)
+        if op == 0:  # alloc
+            row = fm.alloc()
+            state = _fnv1a_fold(state, 0xFFFF if row is None else row)
+        elif op == 1:  # free the first live row at/after arg (wrapping)
+            row = None
+            for k in range(fm.capacity()):
+                cand = (arg + k) % fm.capacity()
+                if fm.is_live(cand):
+                    row = cand
+                    break
+            if row is None:
+                state = _fnv1a_fold(state, 0xFFFE)
+            else:
+                fm.release(row)
+                state = _fnv1a_fold(state, row)
+        elif op == 2:  # point charge (an INSERT-style row write)
+            writes = (x >> 16) % 7 + 1
+            fm.charge_row(arg, writes)
+            state = _fnv1a_fold(state, arg * 1000 + writes)
+        else:  # per-crossbar profile charge (a query/DML instruction stream)
+            totals = [((x >> 16) + 7 * r + 3) % 5 for r in range(16)]
+            fm.charge_profile(totals)
+            state = _fnv1a_fold(state, sum(totals))
+    # final-state summary: live count and total wear
+    state = _fnv1a_fold(state, fm.live_count())
+    state = _fnv1a_fold(state, sum(fm.wear) & MASK64)
+    return state
+
+
+if __name__ == "__main__":
+    print(hex(golden_alloc_digest()))

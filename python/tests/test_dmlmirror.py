@@ -1,0 +1,146 @@
+"""Fuzz + golden suite for the free-row allocator mirror (``dmlmirror.py``).
+
+Validates the contract the Rust ``db::freerows::FreeRowMap`` promises:
+
+* allocation always returns the free row minimizing ``(wear, index)``
+  (checked against a from-scratch oracle on randomized op sequences, so
+  stale entries in the incremental ordered-set bookkeeping cannot hide);
+* per-row wear counters are monotonically nondecreasing;
+* liveness bookkeeping is exact under arbitrary alloc/free/grow/charge
+  interleavings;
+* the allocation-order digest is pinned cross-language via
+  ``GOLDEN_ALLOC_DIGEST`` (also asserted in ``rust/src/db/freerows.rs``).
+"""
+
+import random
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import dmlmirror as m  # noqa: E402
+
+
+def test_golden_alloc_digest_pin():
+    assert m.golden_alloc_digest() == m.GOLDEN_ALLOC_DIGEST
+
+
+def test_alloc_prefers_least_worn_then_lowest_index():
+    fm = m.FreeRowMap(capacity=8, initial_live=0, rows_per_xbar=8)
+    fm.charge_row(0, 5)
+    fm.charge_row(1, 2)
+    fm.charge_row(3, 2)
+    # rows 2,4..7 have wear 0 -> lowest index wins
+    assert fm.alloc() == 2
+    assert fm.alloc() == 4
+    assert fm.alloc() == 5
+    assert fm.alloc() == 6
+    assert fm.alloc() == 7
+    # ties at wear 2 -> row 1 before row 3; worn row 0 last
+    assert fm.alloc() == 1
+    assert fm.alloc() == 3
+    assert fm.alloc() == 0
+    assert fm.alloc() is None
+
+
+def test_release_makes_row_allocatable_again_with_its_wear():
+    fm = m.FreeRowMap(capacity=4, initial_live=4, rows_per_xbar=4)
+    assert fm.alloc() is None
+    fm.charge_row(1, 10)
+    fm.release(1)
+    fm.release(2)
+    # row 2 (wear 0) beats row 1 (wear 10)
+    assert fm.alloc() == 2
+    assert fm.alloc() == 1
+
+
+def test_charge_profile_repeats_per_crossbar():
+    fm = m.FreeRowMap(capacity=8, initial_live=8, rows_per_xbar=4)
+    fm.charge_profile([1, 2, 3, 4])
+    assert fm.wear == [1, 2, 3, 4, 1, 2, 3, 4]
+
+
+def test_fuzz_against_from_scratch_oracle():
+    rng = random.Random(0xD31)
+    for _case in range(300):
+        cap = rng.randrange(1, 40)
+        live0 = rng.randrange(0, cap + 1)
+        rpx = rng.choice([1, 2, 4, 8, 16])
+        fm = m.FreeRowMap(capacity=cap, initial_live=live0, rows_per_xbar=rpx)
+        # shadow state for the oracle
+        live = [i < live0 for i in range(cap)]
+        wear = [0] * cap
+        prev_wear = list(wear)
+        for _step in range(60):
+            op = rng.randrange(5)
+            if op == 0:
+                want = m.oracle_alloc_choice(live, wear)
+                got = fm.alloc()
+                assert got == want, (cap, live0, live, wear)
+                if got is not None:
+                    live[got] = True
+            elif op == 1:
+                live_rows = [i for i, v in enumerate(live) if v]
+                if live_rows:
+                    row = rng.choice(live_rows)
+                    fm.release(row)
+                    live[row] = False
+            elif op == 2:
+                row = rng.randrange(len(live))
+                w = rng.randrange(1, 9)
+                fm.charge_row(row, w)
+                wear[row] += w
+            elif op == 3:
+                totals = [rng.randrange(0, 4) for _ in range(rpx)]
+                fm.charge_profile(totals)
+                for i in range(len(wear)):
+                    wear[i] += totals[i % rpx]
+            else:
+                n = rng.choice([rpx, 2 * rpx])
+                fm.grow(n)
+                live.extend([False] * n)
+                wear.extend([0] * n)
+            # invariants: exact liveness/wear mirror + monotone wear
+            assert [fm.is_live(i) for i in range(fm.capacity())] == live
+            assert fm.wear == wear
+            assert all(a >= b for a, b in zip(fm.wear, prev_wear))
+            prev_wear = list(fm.wear)
+            assert fm.live_count() == sum(live)
+
+
+def test_update_run_rewrite_matches_direct_assignment():
+    rng = random.Random(0xB17)
+    for _ in range(2000):
+        bits = rng.randrange(1, 37)
+        value = rng.randrange(1 << bits)
+        old = rng.randrange(1 << bits)
+        runs = m.update_runs(value, bits)
+        # runs partition [0, bits) exactly
+        assert sum(length for _, length, _ in runs) == bits
+        assert runs[0][0] == 0
+        for (lo, ln, _), (lo2, _, _) in zip(runs, runs[1:]):
+            assert lo + ln == lo2
+        # selected rows end up holding exactly `value`
+        assert m.apply_update_runs(runs, old, selected=True) == value
+        # non-selected (and dead) rows are untouched
+        assert m.apply_update_runs(runs, old, selected=False) == old
+
+
+def test_digest_is_sensitive_to_the_policy():
+    # flipping the tie-break (highest index instead of lowest) must change
+    # the digest: monkey-patch alloc to take max instead of min
+    class Flipped(m.FreeRowMap):
+        def alloc(self):
+            if not self.free_entries:
+                return None
+            entry = max(self.free_entries, key=lambda e: (e[0], -e[1]))
+            self.free_entries.remove(entry)
+            self.live[entry[1]] = True
+            return entry[1]
+
+    orig = m.FreeRowMap
+    try:
+        m.FreeRowMap = Flipped
+        assert m.golden_alloc_digest() != m.GOLDEN_ALLOC_DIGEST
+    finally:
+        m.FreeRowMap = orig

@@ -4,7 +4,9 @@
 //! execution -> timing/energy/power/endurance simulation) plus the
 //! baseline for the speedup pair, at a small SF, through the `api::Pimdb`
 //! service handle. A dedicated section records the prepared-vs-unprepared
-//! serving-path ratio (plan cache on vs. cleared every iteration).
+//! serving-path ratio (plan cache on vs. cleared every iteration), and a
+//! mixed 90/10 query/DML round measures the HTAP serving rate (emitted
+//! as a `BENCH {...}` json line).
 
 #[path = "benchkit.rs"]
 mod benchkit;
@@ -123,6 +125,40 @@ fn main() {
         let r = stmt.execute().unwrap();
         std::hint::black_box(r.metrics().exec_time_s);
     });
+
+    // mixed ingest+analytics serving (the HTAP shape the DML subsystem
+    // opens): one resident handle served a 90/10 query/DML statement mix
+    // — 9 prepared Q6-template executions + 1 DML (alternating UPDATE and
+    // INSERT) per round. Emits a BENCH json line so the perf trajectory
+    // tracks the mixed serving rate explicitly.
+    {
+        let handle = Pimdb::open(cfg.clone(), db.clone()).unwrap();
+        let q = handle.prepare(TEMPLATE).unwrap();
+        let upd = handle
+            .prepare_dml("update lineitem set l_discount = 4 where l_quantity == 25")
+            .unwrap();
+        let ins = handle
+            .prepare_dml(
+                "insert into lineitem (l_orderkey, l_quantity, l_extendedprice, \
+                 l_shipdate) values (1, 10, 100.00, date(1994-06-01))",
+            )
+            .unwrap();
+        let mut round = 0u64;
+        let per = bench("serving/mixed 90% query + 10% dml (x10 stmts)", 1500, || {
+            round += 1;
+            for _ in 0..9 {
+                std::hint::black_box(q.execute().unwrap().metrics().exec_time_s);
+            }
+            let dml = if round % 2 == 0 { &ins } else { &upd };
+            std::hint::black_box(dml.execute().unwrap().rows_affected);
+        });
+        println!(
+            "BENCH {{\"name\":\"serving/mixed-90-10\",\"stmts_per_s\":{:.1},\
+             \"dml_share\":0.1,\"sim_sf\":{}}}",
+            10.0 / per,
+            cfg.sim_sf
+        );
+    }
 
     // batched multi-query serving path: the 19-query suite as prepared
     // statements executed *concurrently* from &Pimdb (disjoint relations

@@ -31,8 +31,8 @@ use crate::config::SystemConfig;
 use crate::db::schema::{self, Encoding};
 use crate::error::PimdbError;
 use crate::exec::metrics::{OptSummary, PlanCacheCounters};
-use crate::query::ast::{AggKind, CmpOp, Pred, Query, ValExpr};
-use crate::query::compiler::CompiledRelQuery;
+use crate::query::ast::{AggKind, CmpOp, Dml, Pred, Query, ValExpr};
+use crate::query::compiler::{CompiledDml, CompiledRelQuery};
 use crate::query::opt::OptLevel;
 
 /// Serialization format version (first byte of every canonical stream).
@@ -285,6 +285,51 @@ pub fn plan_key(q: &Query, level: OptLevel, fingerprint: u64) -> u64 {
     fnv1a(&plan_bytes(q, level, fingerprint))
 }
 
+/// Canonical serialization of a DML statement under `fingerprint` — the
+/// prepared-DML cache-map key. The kind byte (2/3/4 for insert/update/
+/// delete) is disjoint from the query kind bytes (0/1), so DML keys can
+/// never collide with query keys; the query byte format — and therefore
+/// the schema fingerprint and the cross-language golden pins — is
+/// unchanged. DML programs bypass the optimizer, so no [`OptLevel`] is
+/// folded in.
+pub(crate) fn dml_bytes(d: &Dml, fingerprint: u64) -> Vec<u8> {
+    let mut h = Ser::new();
+    h.u8(FORMAT_VERSION);
+    match d {
+        Dml::Insert { rel, values } => {
+            h.u8(2);
+            h.str(rel.name());
+            h.u32(values.len() as u32);
+            for (n, v) in values {
+                h.str(n);
+                h.u64(*v);
+            }
+        }
+        Dml::Update { rel, filter, sets } => {
+            h.u8(3);
+            h.str(rel.name());
+            hash_pred(&mut h, filter);
+            h.u32(sets.len() as u32);
+            for (n, v) in sets {
+                h.str(n);
+                h.u64(*v);
+            }
+        }
+        Dml::Delete { rel, filter } => {
+            h.u8(4);
+            h.str(rel.name());
+            hash_pred(&mut h, filter);
+        }
+    }
+    h.u64(fingerprint);
+    h.buf
+}
+
+/// Compact digest of [`dml_bytes`] (observability twin of [`plan_key`]).
+pub fn dml_key(d: &Dml, fingerprint: u64) -> u64 {
+    fnv1a(&dml_bytes(d, fingerprint))
+}
+
 /// One cached prepared plan: the optimized per-relation programs plus the
 /// optimizer summary the report path surfaces.
 pub(crate) struct CachedPlan {
@@ -300,12 +345,22 @@ pub(crate) struct CachedPlan {
 /// — swap for LRU if a real workload ever shows thrash here).
 const MAX_CACHED_PLANS: usize = 1024;
 
+/// One cached prepared DML plan (the compiled statement; DML bypasses
+/// the optimizer pass pipeline).
+pub(crate) struct CachedDmlPlan {
+    /// The compiled statement.
+    pub compiled: CompiledDml,
+}
+
 /// Thread-safe plan store keyed by the *full* canonical serialization
-/// ([`plan_bytes`] — collision-free by construction), with hit/miss
-/// counters. `misses` counts compilations: two threads racing the same
-/// new template may both compile (the first insert wins, both count).
+/// ([`plan_bytes`] / [`dml_bytes`] — collision-free by construction),
+/// with hit/miss counters shared by queries and DML (`hits + misses`
+/// equals the prepares served). `misses` counts compilations: two
+/// threads racing the same new template may both compile (the first
+/// insert wins, both count).
 pub(crate) struct PlanCache {
     plans: Mutex<HashMap<Vec<u8>, Arc<CachedPlan>>>,
+    dml_plans: Mutex<HashMap<Vec<u8>, Arc<CachedDmlPlan>>>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -314,46 +369,60 @@ impl PlanCache {
     pub(crate) fn new() -> PlanCache {
         PlanCache {
             plans: Mutex::new(HashMap::new()),
+            dml_plans: Mutex::new(HashMap::new()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
         }
     }
 
-    /// Lock the map, recovering from poisoning (a panicked compile never
-    /// ran `insert`, so the map contents are always consistent).
+    /// Lock the query-plan map (test/introspection accessor).
     fn lock_plans(&self) -> std::sync::MutexGuard<'_, HashMap<Vec<u8>, Arc<CachedPlan>>> {
-        match self.plans.lock() {
-            Ok(g) => g,
-            Err(poisoned) => {
-                self.plans.clear_poison();
-                poisoned.into_inner()
-            }
-        }
+        lock_map(&self.plans)
     }
 
-    /// Look `key` up; on a miss run `compile` and cache its result.
+    /// The lookup/compile/evict discipline shared by both plan maps.
     /// Compilation runs *outside* the map lock so cache hits on other
-    /// templates never stall behind an in-flight compile.
-    pub(crate) fn get_or_compile(
+    /// templates never stall behind an in-flight compile; the first
+    /// insert wins a racing duplicate compile (both count a miss).
+    fn get_or_compile_in<T>(
         &self,
+        map: &Mutex<HashMap<Vec<u8>, Arc<T>>>,
         key: Vec<u8>,
-        compile: impl FnOnce() -> Result<CachedPlan, PimdbError>,
-    ) -> Result<Arc<CachedPlan>, PimdbError> {
-        if let Some(plan) = self.lock_plans().get(&key) {
+        compile: impl FnOnce() -> Result<T, PimdbError>,
+    ) -> Result<Arc<T>, PimdbError> {
+        if let Some(plan) = lock_map(map).get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(Arc::clone(plan));
         }
         let plan = Arc::new(compile()?);
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let mut plans = self.lock_plans();
+        let mut plans = lock_map(map);
         if plans.len() >= MAX_CACHED_PLANS && !plans.contains_key(&key) {
             if let Some(evict) = plans.keys().next().cloned() {
                 plans.remove(&evict);
             }
         }
-        // first insert wins a racing duplicate compile; both count a miss
-        let entry = plans.entry(key).or_insert(plan);
-        Ok(Arc::clone(entry))
+        Ok(Arc::clone(plans.entry(key).or_insert(plan)))
+    }
+
+    /// Look `key` up; on a miss run `compile` and cache its result.
+    pub(crate) fn get_or_compile(
+        &self,
+        key: Vec<u8>,
+        compile: impl FnOnce() -> Result<CachedPlan, PimdbError>,
+    ) -> Result<Arc<CachedPlan>, PimdbError> {
+        self.get_or_compile_in(&self.plans, key, compile)
+    }
+
+    /// Look a DML key up; on a miss run `compile` and cache its result
+    /// (same discipline; the hit/miss counters are shared with the
+    /// query side).
+    pub(crate) fn get_or_compile_dml(
+        &self,
+        key: Vec<u8>,
+        compile: impl FnOnce() -> Result<CachedDmlPlan, PimdbError>,
+    ) -> Result<Arc<CachedDmlPlan>, PimdbError> {
+        self.get_or_compile_in(&self.dml_plans, key, compile)
     }
 
     /// Snapshot of the hit/miss counters.
@@ -364,11 +433,26 @@ impl PlanCache {
         }
     }
 
-    /// Drop every cached plan (counters keep accumulating). The next
-    /// prepare of any query recompiles — used by benchmarks to measure
-    /// the unprepared path honestly.
+    /// Drop every cached plan, query and DML (counters keep
+    /// accumulating). The next prepare of any statement recompiles —
+    /// used by benchmarks to measure the unprepared path honestly.
     pub(crate) fn clear(&self) {
-        self.lock_plans().clear();
+        lock_map(&self.plans).clear();
+        lock_map(&self.dml_plans).clear();
+    }
+}
+
+/// Lock a plan map, recovering from poisoning (a panicked compile never
+/// ran `insert`, so the map contents are always consistent).
+fn lock_map<T>(
+    m: &Mutex<HashMap<Vec<u8>, Arc<T>>>,
+) -> std::sync::MutexGuard<'_, HashMap<Vec<u8>, Arc<T>>> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => {
+            m.clear_poison();
+            poisoned.into_inner()
+        }
     }
 }
 
@@ -545,6 +629,63 @@ mod tests {
             plan_key(&q, OptLevel::O2, 0xDD8B_B4AF_22C1_1FDB),
             0xF468_1E94_59AE_97DE
         );
+    }
+
+    #[test]
+    fn dml_keys_are_sensitive_and_disjoint_from_query_keys() {
+        use crate::db::schema::RelId;
+        let fp = plan_fingerprint(&SystemConfig::default());
+        let del = Dml::Delete {
+            rel: RelId::Lineitem,
+            filter: Pred::CmpImm {
+                attr: "l_quantity",
+                op: CmpOp::Lt,
+                value: 24,
+            },
+        };
+        let base = dml_key(&del, fp);
+        // literal, relation, kind and fingerprint all change the key
+        let mut lit = del.clone();
+        if let Dml::Delete {
+            filter: Pred::CmpImm { value, .. },
+            ..
+        } = &mut lit
+        {
+            *value = 25;
+        }
+        assert_ne!(base, dml_key(&lit, fp));
+        let other_rel = Dml::Delete {
+            rel: RelId::Orders,
+            filter: del.filter().clone(),
+        };
+        assert_ne!(base, dml_key(&other_rel, fp));
+        let upd = Dml::Update {
+            rel: RelId::Lineitem,
+            filter: del.filter().clone(),
+            sets: vec![("l_tax", 0)],
+        };
+        assert_ne!(base, dml_key(&upd, fp));
+        assert_ne!(base, dml_key(&del, fp ^ 1));
+        // set order matters (writes apply in order), insert values too
+        let upd2 = Dml::Update {
+            rel: RelId::Lineitem,
+            filter: del.filter().clone(),
+            sets: vec![("l_tax", 0), ("l_discount", 1)],
+        };
+        let upd3 = Dml::Update {
+            rel: RelId::Lineitem,
+            filter: del.filter().clone(),
+            sets: vec![("l_discount", 1), ("l_tax", 0)],
+        };
+        assert_ne!(dml_key(&upd2, fp), dml_key(&upd3, fp));
+        // the leading kind byte spaces (2/3/4 vs 0/1) keep DML bytes
+        // disjoint from every query serialization
+        let d_bytes = dml_bytes(&del, fp);
+        let q = &parse_program(Q6ISH).unwrap()[0];
+        let q_bytes = plan_bytes(q, OptLevel::O2, fp);
+        assert_ne!(d_bytes, q_bytes);
+        assert!(matches!(d_bytes[1], 2..=4));
+        assert!(matches!(q_bytes[1], 0 | 1));
     }
 
     fn mk() -> Result<CachedPlan, PimdbError> {

@@ -61,6 +61,7 @@ use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::config::SystemConfig;
 use crate::db::dbgen::Database;
+use crate::db::freerows::FreeRowMap;
 use crate::db::layout::DbLayout;
 use crate::db::schema::{RelId, PIM_RELATIONS};
 use crate::error::PimdbError;
@@ -68,14 +69,16 @@ use crate::exec::engine::{self, ExecOutputs, XbarState};
 use crate::exec::metrics::{PlanCacheCounters, QueryMetrics, RunReport};
 use crate::exec::pimdb as session;
 use crate::exec::plan::{self, ExecPlan};
-use crate::query::ast::Query;
-use crate::query::compiler::{CompileError, Compiler};
+use crate::query::ast::{Dml, Query};
+use crate::query::compiler::{compile_dml, CompileError, Compiler};
 use crate::query::lang;
 use crate::query::opt::{self, OptStats};
 use crate::query::tpch;
+use crate::util::bits::XBAR_ROWS;
 
-use cache::{CachedPlan, PlanCache};
+use cache::{CachedDmlPlan, CachedPlan, PlanCache};
 
+pub use crate::exec::metrics::DmlResult;
 pub use crate::exec::pimdb::EngineKind;
 pub use rows::{Row, Rows, Value};
 
@@ -103,20 +106,65 @@ impl<'a> From<&'a Query> for QuerySource<'a> {
     }
 }
 
+/// Where a DML statement to [`Pimdb::execute_dml`] comes from.
+#[derive(Clone, Copy, Debug)]
+pub enum DmlSource<'a> {
+    /// PQL DML text (`insert into ...` / `update ... set ...` /
+    /// `delete from ...`).
+    Pql(&'a str),
+    /// An already-built AST statement (cloned into the prepared form).
+    Ast(&'a Dml),
+}
+
+impl<'a> From<&'a str> for DmlSource<'a> {
+    /// Bare strings are PQL DML text.
+    fn from(s: &'a str) -> DmlSource<'a> {
+        DmlSource::Pql(s)
+    }
+}
+
+impl<'a> From<&'a Dml> for DmlSource<'a> {
+    fn from(d: &'a Dml) -> DmlSource<'a> {
+        DmlSource::Ast(d)
+    }
+}
+
+/// Per-relation mutable state behind the relation lock: the functional
+/// crossbar states plus — once a DML statement touches the relation —
+/// the free-row map (liveness + monotone per-row wear counters).
+struct RelState {
+    /// Lazily materialized crossbar states.
+    states: Option<Vec<XbarState>>,
+    /// Liveness + wear, created on the first mutation.
+    freerows: Option<FreeRowMap>,
+    /// Set once DML has mutated the relation: poison recovery must scrub
+    /// the compute area in place instead of dropping the states back to
+    /// the pristine load image (which would silently revert the DML).
+    mutated: bool,
+}
+
 /// The owned PIMDB service handle: one resident database copy, a plan
 /// cache, and per-relation crossbar states behind locks so prepared
 /// queries execute concurrently from `&self` (see the module docs).
+///
+/// Since the DML refactor the handle is also the *mutable* surface:
+/// [`Pimdb::execute_dml`] applies `insert into` / `update ... set` /
+/// `delete from` statements to the resident PIM copy — valid-bit
+/// liveness, endurance-aware free-row allocation, wear accounting —
+/// while queries keep executing against the mutated data (every filter
+/// ANDs the VALID column, so deleted rows are invisible to every
+/// filter and aggregate).
 pub struct Pimdb {
     cfg: SystemConfig,
     db: Database,
     layout: DbLayout,
     exec_plan: ExecPlan,
     fingerprint: u64,
-    /// Functional crossbar states, lazily materialized per relation. The
-    /// mutex is the concurrency rule of the wave scheduler in lock form:
-    /// queries on disjoint relations proceed in parallel, queries sharing
-    /// a relation serialize (they share its compute area).
-    states: BTreeMap<RelId, Mutex<Option<Vec<XbarState>>>>,
+    /// Per-relation mutable state. The mutex is the concurrency rule of
+    /// the wave scheduler in lock form: statements on disjoint relations
+    /// proceed in parallel, statements sharing a relation serialize
+    /// (they share its compute area — and now also its liveness).
+    states: BTreeMap<RelId, Mutex<RelState>>,
     cache: PlanCache,
 }
 
@@ -127,6 +175,7 @@ const fn assert_send_sync<T: Send + Sync>() {}
 const _: () = {
     assert_send_sync::<Pimdb>();
     assert_send_sync::<Prepared<'static>>();
+    assert_send_sync::<PreparedDml<'static>>();
     assert_send_sync::<QueryResult>();
 };
 
@@ -138,7 +187,16 @@ impl Pimdb {
         let layout = DbLayout::build(&cfg, &|r| db.rel(r).records as u64)?;
         let states = PIM_RELATIONS
             .iter()
-            .map(|&r| (r, Mutex::new(None)))
+            .map(|&r| {
+                (
+                    r,
+                    Mutex::new(RelState {
+                        states: None,
+                        freerows: None,
+                        mutated: false,
+                    }),
+                )
+            })
             .collect();
         Ok(Pimdb {
             exec_plan: ExecPlan::for_config(&cfg),
@@ -156,9 +214,36 @@ impl Pimdb {
         &self.cfg
     }
 
-    /// The resident database (for baselines and oracles).
+    /// The resident database *load image* (for baselines and oracles).
+    /// DML mutates the PIM copy, not this image — hold your own
+    /// [`Database`] copy and mirror statements through
+    /// [`crate::exec::baseline::apply_dml`] when a host-side twin of the
+    /// mutated state is needed (the differential suites do exactly that).
     pub fn database(&self) -> &Database {
         &self.db
+    }
+
+    /// Live records currently in the PIM copy of `rel` (the load image's
+    /// live count until a DML statement touches the relation).
+    pub fn live_records(&self, rel: RelId) -> usize {
+        let guard = self.lock_rel(rel);
+        guard
+            .freerows
+            .as_ref()
+            .map(|f| f.live_count())
+            .unwrap_or_else(|| self.db.rel(rel).live_count())
+    }
+
+    /// Per-row cumulative cell-write counters of `rel` (monotonically
+    /// nondecreasing; empty until a DML statement touches the relation
+    /// — wear accounting starts with the first mutation).
+    pub fn wear_counters(&self, rel: RelId) -> Vec<u64> {
+        let guard = self.lock_rel(rel);
+        guard
+            .freerows
+            .as_ref()
+            .map(|f| (0..f.capacity()).map(|r| f.row_wear(r)).collect())
+            .unwrap_or_default()
     }
 
     /// The database's PIM layout (page placement, column slots).
@@ -253,6 +338,46 @@ impl Pimdb {
         })
     }
 
+    /// Lock one relation's state, recovering from poisoning. A panicked
+    /// execution may have left a dirty compute area behind; a pristine
+    /// relation reloads from the load image, while a DML-mutated one is
+    /// scrubbed in place (reloading would silently revert the DML). If
+    /// the panic struck while the states were checked out of the guard
+    /// (mid-execution), a mutated relation's liveness map can no longer
+    /// be trusted to match the arrays, so the relation reverts to the
+    /// pristine load image — consistent, at the cost of the mutations.
+    fn lock_rel(&self, rel: RelId) -> MutexGuard<'_, RelState> {
+        let mutex = self.states.get(&rel).expect("PIM relation");
+        match mutex.lock() {
+            Ok(g) => g,
+            Err(poisoned) => {
+                mutex.clear_poison();
+                let mut g = poisoned.into_inner();
+                if let (true, Some(states)) = (g.mutated, g.states.as_mut()) {
+                    session::clear_compute(states, self.layout.rel(rel).compute_base);
+                } else {
+                    g.states = None;
+                    g.freerows = None;
+                    g.mutated = false;
+                }
+                g
+            }
+        }
+    }
+
+    /// Materialize a relation's crossbar states from the load image.
+    fn materialize(&self, rel: RelId, g: &mut RelState) {
+        if g.states.is_none() {
+            let r = self.db.rel(rel);
+            g.states = Some(engine::load_states(
+                r,
+                self.layout.rel(rel),
+                self.cfg.xbar_cols,
+                0..r.records,
+            ));
+        }
+    }
+
     /// Execute a prepared statement (see [`Prepared::execute`]).
     fn execute_prepared(
         &self,
@@ -265,38 +390,14 @@ impl Pimdb {
         // queries acquiring overlapping sets cannot deadlock, and queries
         // on disjoint sets never contend.
         let rels: BTreeSet<RelId> = compiled.iter().map(|c| c.rel).collect();
-        let mut guards: Vec<(RelId, MutexGuard<'_, Option<Vec<XbarState>>>)> = rels
+        let mut guards: Vec<(RelId, MutexGuard<'_, RelState>)> = rels
             .iter()
-            .map(|r| {
-                let mutex = self.states.get(r).expect("PIM relation");
-                let guard = match mutex.lock() {
-                    Ok(g) => g,
-                    Err(poisoned) => {
-                        // a panicked execution may have left a dirty
-                        // compute area behind: drop the states so they
-                        // reload clean below, and clear the poison flag
-                        // so later executions pay the reload only once
-                        mutex.clear_poison();
-                        let mut g = poisoned.into_inner();
-                        *g = None;
-                        g
-                    }
-                };
-                (*r, guard)
-            })
+            .map(|r| (*r, self.lock_rel(*r)))
             .collect();
 
         // materialize every touched relation once (lazy, like PimSession)
         for (r, guard) in guards.iter_mut() {
-            if guard.is_none() {
-                let rel = self.db.rel(*r);
-                **guard = Some(engine::load_states(
-                    rel,
-                    self.layout.rel(*r),
-                    self.cfg.xbar_cols,
-                    0..rel.records,
-                ));
-            }
+            self.materialize(*r, guard);
         }
 
         // One sharded run per program. Programs are sequential within the
@@ -312,16 +413,38 @@ impl Pimdb {
                 .find(|(r, _)| *r == c.rel)
                 .expect("locked above")
                 .1;
-            let mut states = guard.take().expect("materialized above");
+            let mut states = guard.states.take().expect("materialized above");
             let out = plan::exec_steps_sharded(
                 &mut states,
                 &c.steps,
                 c.mask_col,
                 engine_kind,
                 &self.exec_plan,
-            )?;
+            );
+            let out = match out {
+                Ok(o) => o,
+                Err(e) => {
+                    // query steps only dirty the compute area, so a
+                    // mutated relation keeps its (scrubbed) states — a
+                    // pristine one simply reloads on next use
+                    if guard.mutated {
+                        session::clear_compute(
+                            &mut states,
+                            self.layout.rel(c.rel).compute_base,
+                        );
+                        guard.states = Some(states);
+                    }
+                    return Err(e.into());
+                }
+            };
             session::clear_compute(&mut states, self.layout.rel(c.rel).compute_base);
-            **guard = Some(states);
+            guard.states = Some(states);
+            // mutated relations accumulate this query's write profile
+            // into the persistent wear counters the endurance-aware
+            // row allocator consults
+            if let Some(free) = guard.freerows.as_mut() {
+                session::charge_wear(free, &c.steps, self.cfg.xbar_cols);
+            }
             outs.push(out);
         }
 
@@ -342,6 +465,121 @@ impl Pimdb {
                 output,
             },
         ))
+    }
+
+    /// Prepare one DML statement: parse (if text) and compile once — or
+    /// fetch the compiled form from the plan cache (canonical DML
+    /// serialization keys, see [`cache::dml_key`]; prepared DML is
+    /// cacheable exactly like prepared queries, and the schema
+    /// fingerprint is shared) — and return the executable statement.
+    pub fn prepare_dml<'q>(
+        &self,
+        source: impl Into<DmlSource<'q>>,
+    ) -> Result<PreparedDml<'_>, PimdbError> {
+        let dml = match source.into() {
+            DmlSource::Pql(text) => {
+                lang::parse_dml(text).map_err(|diag| PimdbError::Parse {
+                    diag,
+                    src: text.to_string(),
+                })?
+            }
+            DmlSource::Ast(d) => d.clone(),
+        };
+        let rel = dml.rel();
+        if !rel.in_pim() {
+            // the PQL lowering rejects this with a spanned diagnostic;
+            // AST-built statements get the typed error here instead of a
+            // layout panic
+            return Err(CompileError::NotPimResident { rel }.into());
+        }
+        let key = cache::dml_bytes(&dml, self.fingerprint);
+        let plan = self.cache.get_or_compile_dml(key, || {
+            Ok(CachedDmlPlan {
+                compiled: compile_dml(&dml, self.layout.rel(rel), self.cfg.xbar_cols)?,
+            })
+        })?;
+        Ok(PreparedDml {
+            handle: self,
+            dml,
+            plan,
+        })
+    }
+
+    /// Execute one DML statement against the resident PIM copy: INSERT
+    /// writes the encoded record into the least-worn free row and sets
+    /// its VALID bit; UPDATE filters (live rows only) and rewrites the
+    /// SET attributes in place; DELETE filters and clears VALID (and the
+    /// row data, keeping the all-zero-dead-row invariant the optimizer's
+    /// zero-row reasoning relies on). Returns rows affected, the wear
+    /// delta and the simulated application cost.
+    ///
+    /// ```
+    /// use pimdb::api::Pimdb;
+    /// use pimdb::config::SystemConfig;
+    /// use pimdb::db::dbgen::Database;
+    ///
+    /// let db = Pimdb::open(SystemConfig::default(), Database::generate(0.001, 42))?;
+    /// let del = db.execute_dml("delete from supplier where s_suppkey <= 3")?;
+    /// assert_eq!(del.rows_affected, 3);
+    /// let ins = db.execute_dml(
+    ///     "insert into supplier (s_suppkey, s_nationkey, s_acctbal) \
+    ///      values (10001, 7, 1000.00)",
+    /// )?;
+    /// assert_eq!(ins.rows_affected, 1);
+    /// // deleted rows are invisible to every filter and aggregate
+    /// let n = db.prepare("from supplier | filter s_suppkey <= 3 \
+    ///                     | aggregate count() as n")?.execute()?;
+    /// assert_eq!(n.rows().row(0).unwrap().get("n").unwrap().as_i64(), Some(0));
+    /// # Ok::<(), pimdb::error::PimdbError>(())
+    /// ```
+    pub fn execute_dml<'q>(
+        &self,
+        source: impl Into<DmlSource<'q>>,
+    ) -> Result<DmlResult, PimdbError> {
+        self.prepare_dml(source)?.execute()
+    }
+
+    /// Execute a prepared DML statement (see [`PreparedDml::execute`]).
+    fn execute_dml_prepared(
+        &self,
+        p: &PreparedDml<'_>,
+        engine_kind: EngineKind,
+    ) -> Result<DmlResult, PimdbError> {
+        let rel = p.dml.rel();
+        let mut guard = self.lock_rel(rel);
+        self.materialize(rel, &mut guard);
+        if guard.freerows.is_none() {
+            // shadow the load image's liveness exactly — a DML-mutated
+            // store reloads with dead slots between live ones
+            let capacity = guard.states.as_ref().expect("materialized").len() * XBAR_ROWS;
+            let r = self.db.rel(rel);
+            let flags: Vec<bool> = (0..r.records).map(|i| r.live(i)).collect();
+            guard.freerows = Some(FreeRowMap::from_flags(&flags, capacity, XBAR_ROWS));
+        }
+        guard.mutated = true;
+        let mut states = guard.states.take().expect("materialized above");
+        let out = session::exec_dml_on_states(
+            &self.cfg,
+            &self.layout,
+            rel,
+            &mut states,
+            guard.freerows.as_mut().expect("created above"),
+            &p.plan.compiled,
+            engine_kind,
+            &self.exec_plan,
+        );
+        if out.is_ok() {
+            guard.states = Some(states);
+        } else {
+            // a failed backend may have torn the statement across shards,
+            // leaving states and the liveness map out of sync: revert the
+            // relation to the pristine load image (only reachable through
+            // backend-runtime errors — the native engine is total)
+            guard.states = None;
+            guard.freerows = None;
+            guard.mutated = false;
+        }
+        out
     }
 }
 
@@ -410,6 +648,34 @@ impl Prepared<'_> {
     /// Execute on an explicit functional backend.
     pub fn execute_on(&self, engine_kind: EngineKind) -> Result<QueryResult, PimdbError> {
         self.handle.execute_prepared(self, engine_kind)
+    }
+}
+
+/// A prepared DML statement: the parsed statement plus its compiled form
+/// (shared with the handle's plan cache). Executing takes `&self` and
+/// serializes on the target relation's lock — concurrent queries on
+/// other relations keep running, and queries on the same relation
+/// observe either the pre- or post-statement state, never a torn one.
+pub struct PreparedDml<'db> {
+    handle: &'db Pimdb,
+    dml: Dml,
+    plan: Arc<CachedDmlPlan>,
+}
+
+impl PreparedDml<'_> {
+    /// The statement this prepared form executes.
+    pub fn dml(&self) -> &Dml {
+        &self.dml
+    }
+
+    /// Execute on the native functional backend.
+    pub fn execute(&self) -> Result<DmlResult, PimdbError> {
+        self.execute_on(EngineKind::Native)
+    }
+
+    /// Execute on an explicit functional backend.
+    pub fn execute_on(&self, engine_kind: EngineKind) -> Result<DmlResult, PimdbError> {
+        self.handle.execute_dml_prepared(self, engine_kind)
     }
 }
 
@@ -548,6 +814,120 @@ mod tests {
             handle.prepare("from lineitem | filter nope < 3"),
             Err(PimdbError::Parse { .. })
         ));
+    }
+
+    #[test]
+    fn dml_prepares_cache_and_execute_mutates_the_pim_copy() {
+        let handle = Pimdb::open(SystemConfig::default(), db()).unwrap();
+        let src = "update supplier set s_nationkey = 3 where s_suppkey <= 10";
+        let p1 = handle.prepare_dml(src).unwrap();
+        assert_eq!(
+            handle.plan_cache_counters(),
+            PlanCacheCounters { hits: 0, misses: 1 }
+        );
+        let p2 = handle.prepare_dml(src).unwrap();
+        assert_eq!(
+            handle.plan_cache_counters(),
+            PlanCacheCounters { hits: 1, misses: 1 }
+        );
+        assert_eq!(p2.dml().kind_name(), "update");
+        let r = p1.execute().unwrap();
+        assert_eq!(r.rows_affected, 10);
+        assert!(r.wear_delta > 0.0);
+        assert!(r.metrics.exec_time_s > 0.0);
+        // the rewrite is visible to queries through the same handle
+        let n = handle
+            .prepare(
+                "from supplier | filter s_nationkey == 3 and s_suppkey <= 10 \
+                 | aggregate count() as n",
+            )
+            .unwrap()
+            .execute()
+            .unwrap();
+        assert_eq!(n.raw_report().output.groups[0].count, 10);
+        // a literal change is a different DML plan (cache miss)
+        handle
+            .prepare_dml("update supplier set s_nationkey = 4 where s_suppkey <= 10")
+            .unwrap();
+        let c = handle.plan_cache_counters();
+        assert_eq!(c.misses, 3); // 2 dml templates + 1 query
+        // query text given to prepare_dml is a typed parse error
+        assert!(matches!(
+            handle.prepare_dml("from supplier | filter true"),
+            Err(PimdbError::Parse { .. })
+        ));
+        // AST-built DML on a DRAM-resident relation is a typed error,
+        // not a layout panic
+        let dram = Dml::Delete {
+            rel: crate::db::schema::RelId::Nation,
+            filter: crate::query::ast::Pred::True,
+        };
+        assert!(matches!(
+            handle.execute_dml(&dram),
+            Err(PimdbError::Compile(CompileError::NotPimResident { .. }))
+        ));
+        // clear_plan_cache drops DML plans too: re-preparing recompiles
+        handle.clear_plan_cache();
+        handle.prepare_dml(src).unwrap();
+        assert_eq!(handle.plan_cache_counters().misses, 4);
+    }
+
+    #[test]
+    fn queries_on_mutated_relations_accumulate_wear() {
+        use crate::db::schema::RelId;
+        let handle = Pimdb::open(SystemConfig::default(), db()).unwrap();
+        // pristine relation: no wear tracking yet
+        assert!(handle.wear_counters(RelId::Supplier).is_empty());
+        handle
+            .execute_dml("delete from supplier where s_suppkey == 1")
+            .unwrap();
+        let w1: u64 = handle.wear_counters(RelId::Supplier).iter().sum();
+        assert!(w1 > 0, "DML charges wear");
+        handle
+            .prepare("from supplier | filter s_acctbal > 0.00 | aggregate count() as n")
+            .unwrap()
+            .execute()
+            .unwrap();
+        let w2: u64 = handle.wear_counters(RelId::Supplier).iter().sum();
+        assert!(w2 > w1, "queries on mutated relations charge wear too");
+        // other relations stay untracked until mutated
+        assert!(handle.wear_counters(RelId::Part).is_empty());
+    }
+
+    #[test]
+    fn dml_matches_the_legacy_session_path() {
+        use crate::db::schema::RelId;
+        use crate::query::lang::parse_dml;
+        let cfg = SystemConfig::default();
+        let data = db();
+        let mut legacy = PimSession::new(&cfg, &data).unwrap();
+        let handle = Pimdb::open(cfg.clone(), db()).unwrap();
+        let statements = [
+            "delete from supplier where s_acctbal < 100.00",
+            "update supplier set s_phone_cc = 11 where s_nationkey == 1",
+            "insert into supplier (s_suppkey, s_acctbal) values (9000, 50.00)",
+        ];
+        for src in statements {
+            let dml = parse_dml(src).unwrap();
+            let a = legacy.run_dml(&dml, EngineKind::Native).unwrap();
+            let b = handle.execute_dml(&dml).unwrap();
+            assert_eq!(a.rows_affected, b.rows_affected, "{src}");
+            assert_eq!(a.wear_delta.to_bits(), b.wear_delta.to_bits(), "{src}");
+            assert_eq!(
+                a.metrics.exec_time_s.to_bits(),
+                b.metrics.exec_time_s.to_bits(),
+                "{src}"
+            );
+        }
+        assert_eq!(
+            legacy.live_records(RelId::Supplier),
+            handle.live_records(RelId::Supplier)
+        );
+        // queries agree on the mutated state
+        let q = tpch::query("Q11").unwrap();
+        let a = legacy.run_query(&q, EngineKind::Native).unwrap();
+        let b = handle.prepare(QuerySource::Ast(&q)).unwrap().execute().unwrap();
+        assert_eq!(a.output, b.raw_report().output);
     }
 
     #[test]

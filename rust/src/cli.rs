@@ -124,11 +124,13 @@ impl Args {
         }
     }
 
-    /// Resolve the `run` command's queries from exactly one of:
-    /// `--query` (comma-separated TPC-H names), `--sql` (inline PQL text),
-    /// or `--sql-file` (PQL text file, e.g. a `tests/pql/*.pql` fixture).
-    /// Parse errors come back rendered with their source line and caret.
-    pub fn queries(&self) -> Result<Vec<crate::query::ast::Query>, String> {
+    /// Resolve the `run` command's statements (queries *and* DML) from
+    /// exactly one of: `--query` (comma-separated TPC-H names, always
+    /// queries), `--sql` (inline PQL text), or `--sql-file` (PQL text
+    /// file, e.g. a `tests/pql/*.pql` fixture). Parse errors come back
+    /// rendered with their source line and caret.
+    pub fn statements(&self) -> Result<Vec<crate::query::ast::Statement>, String> {
+        use crate::query::ast::Statement;
         let sources =
             [self.has("query"), self.has("sql"), self.has("sql-file")]
                 .iter()
@@ -146,6 +148,7 @@ impl Args {
                 .map(|n| {
                     let n = n.trim();
                     crate::query::tpch::query(n)
+                        .map(Statement::Query)
                         .ok_or_else(|| format!("unknown query '{n}'"))
                 })
                 .collect();
@@ -158,7 +161,23 @@ impl Args {
                     .map_err(|e| format!("--sql-file {path}: {e}"))?
             }
         };
-        crate::query::lang::parse_program(&src).map_err(|d| d.render(&src))
+        crate::query::lang::parse_statements(&src).map_err(|d| d.render(&src))
+    }
+
+    /// Like [`Args::statements`] but query-only: DML statements are an
+    /// error (legacy entry point; `run` executes mixed programs).
+    pub fn queries(&self) -> Result<Vec<crate::query::ast::Query>, String> {
+        use crate::query::ast::Statement;
+        self.statements()?
+            .into_iter()
+            .map(|s| match s {
+                Statement::Query(q) => Ok(q),
+                Statement::Dml(d) => Err(format!(
+                    "'{}' is a DML statement; this entry point is query-only",
+                    d.kind_name()
+                )),
+            })
+            .collect()
     }
 }
 
@@ -176,8 +195,13 @@ COMMANDS:
              run an ad-hoc PQL text query instead (--sql-file FILE reads
              the text, e.g. a .pql fixture, from disk); see README
              \"Query language\" for the grammar
-             --explain     dump each relation's compiled PIM program
-             (disassembly before and after the optimizer passes)
+             --sql also accepts DML statements, executed in source order
+             against the resident PIM copy: \"insert into T (c,..) values
+             (v,..)\", \"update T set c = v where ...\", \"delete from T
+             where ...\"
+             --explain     dump each statement's compiled PIM program
+             (queries: disassembly before/after the optimizer passes;
+             DML: the row-write image or filter+mutation stream)
   report     --exp <table1..6|fig8..15|ablation-rowpar|calibration|all>
              regenerate a paper table/figure
   gen-data   [--sf F] [--seed N]    generate + summarize the TPC-H data

@@ -13,13 +13,20 @@ use super::schema::{self, RelId};
 use crate::util::rng::Rng;
 
 /// A generated relation: encoded column store.
+///
+/// Since the DML refactor the store is *mutable*: every row carries a
+/// liveness flag (the host-side shadow of the PIM VALID column), and the
+/// mutators below let [`crate::exec::baseline::apply_dml`] mirror the
+/// PIM-side mutation so differential tests stay meaningful. Scans and
+/// oracles must skip dead rows ([`Relation::live`]).
 #[derive(Clone, Debug)]
 pub struct Relation {
     /// Which relation this is.
     pub id: RelId,
-    /// Number of generated records.
+    /// Number of record slots (live + dead; grows on INSERT).
     pub records: usize,
     columns: Vec<(&'static str, Vec<u64>)>,
+    valid: Vec<bool>,
 }
 
 impl Relation {
@@ -28,6 +35,7 @@ impl Relation {
             id,
             records,
             columns: Vec::new(),
+            valid: vec![true; records],
         }
     }
 
@@ -55,6 +63,57 @@ impl Relation {
     pub fn column_names(&self) -> Vec<&'static str> {
         self.columns.iter().map(|(n, _)| *n).collect()
     }
+
+    /// Whether row `i` holds a live record (the host-side VALID shadow).
+    pub fn live(&self, i: usize) -> bool {
+        self.valid[i]
+    }
+
+    /// Live records (rows scans and oracles may observe).
+    pub fn live_count(&self) -> usize {
+        self.valid.iter().filter(|&&v| v).count()
+    }
+
+    /// Set row `i`'s liveness (DELETE clears it; re-inserting into a
+    /// freed slot sets it).
+    pub fn set_valid(&mut self, i: usize, live: bool) {
+        self.valid[i] = live;
+    }
+
+    /// Overwrite one cell (UPDATE; the value must already be encoded).
+    pub fn write(&mut self, name: &str, i: usize, v: u64) {
+        let col = self
+            .columns
+            .iter_mut()
+            .find(|(n, _)| *n == name)
+            .unwrap_or_else(|| panic!("no column {name}"));
+        col.1[i] = v;
+    }
+
+    /// Zero every cell of row `i` (DELETE keeps the all-zero-dead-row
+    /// invariant so a mutated store reloads into PIM correctly).
+    pub fn zero_row(&mut self, i: usize) {
+        for (_, col) in &mut self.columns {
+            col[i] = 0;
+        }
+    }
+
+    /// Append one live record; `values` supplies `(column, encoded
+    /// value)` pairs, unlisted columns store 0. Returns the new row.
+    pub fn append_row(&mut self, values: &[(&str, u64)]) -> usize {
+        let row = self.records;
+        for (name, col) in &mut self.columns {
+            let v = values
+                .iter()
+                .find(|(n, _)| n == name)
+                .map(|(_, v)| *v)
+                .unwrap_or(0);
+            col.push(v);
+        }
+        self.valid.push(true);
+        self.records += 1;
+        row
+    }
 }
 
 /// The generated database.
@@ -71,6 +130,12 @@ impl Database {
     /// One relation by id.
     pub fn rel(&self, id: RelId) -> &Relation {
         &self.relations[&id]
+    }
+
+    /// Mutable access to one relation (the baseline DML mirror path,
+    /// [`crate::exec::baseline::apply_dml`]).
+    pub fn rel_mut(&mut self, id: RelId) -> &mut Relation {
+        self.relations.get_mut(&id).expect("relation exists")
     }
 
     /// Generate all relations at scale factor `sf` (sim scale; the report
@@ -468,5 +533,31 @@ mod tests {
     #[should_panic(expected = "no column")]
     fn missing_column_panics() {
         tiny().rel(RelId::Part).col("bogus");
+    }
+
+    #[test]
+    fn mutators_track_liveness_and_values() {
+        let mut db = tiny();
+        let part = db.rel_mut(RelId::Part);
+        let n = part.records;
+        assert_eq!(part.live_count(), n);
+        assert!(part.live(0));
+
+        part.set_valid(0, false);
+        part.zero_row(0);
+        assert!(!part.live(0));
+        assert_eq!(part.live_count(), n - 1);
+        assert_eq!(part.col("p_partkey")[0], 0);
+
+        part.write("p_size", 1, 33);
+        assert_eq!(part.col("p_size")[1], 33);
+
+        let row = part.append_row(&[("p_partkey", 999_999), ("p_size", 7)]);
+        assert_eq!(row, n);
+        assert_eq!(part.records, n + 1);
+        assert!(part.live(row));
+        assert_eq!(part.col("p_partkey")[row], 999_999);
+        assert_eq!(part.col("p_brand")[row], 0); // unlisted columns zero
+        assert_eq!(part.live_count(), n);
     }
 }

@@ -1,0 +1,358 @@
+//! Endurance-aware free-row map: row liveness + per-row wear counters for
+//! one relation's PIM copy.
+//!
+//! The mutable-relation model (follow-up work to the paper: row-granular
+//! valid-bit mutation for bulk-bitwise PIM, arXiv:2302.01675 /
+//! arXiv:2307.00658) needs two pieces of bookkeeping the read-only engine
+//! never had:
+//!
+//! * **liveness** — which crossbar rows hold a live record (the VALID
+//!   column in the arrays; this map is its host-side shadow, so INSERT
+//!   can find a free row without scanning the arrays), and
+//! * **wear** — cumulative cell writes per row, fed by the same
+//!   per-instruction write profiles the endurance report uses
+//!   ([`crate::pim::endurance`], paper §6.4). INSERT allocates the free
+//!   row minimizing `(wear, row index)` — wear-leveling row placement so
+//!   ingest traffic spreads over the least-written rows instead of
+//!   hammering the lowest free index.
+//!
+//! The allocation policy is fully deterministic and mirrored line by line
+//! in `python/dmlmirror.py` (the no-Rust-toolchain validation workflow):
+//! the scripted scenario of [`golden_alloc_digest`] is pinned to the same
+//! constant in both languages, so a one-sided policy change breaks
+//! exactly one of the two suites.
+
+use std::collections::BTreeSet;
+
+/// Row liveness + wear map of one relation's materialized crossbars.
+///
+/// Rows are global sim-row indices (`crossbar * rows_per_xbar + row`).
+/// Column-wise instruction wear is identical on every crossbar of a
+/// relation (they execute the same stream in lockstep), so a
+/// `rows_per_xbar`-long profile charges the whole map.
+#[derive(Clone, Debug)]
+pub struct FreeRowMap {
+    rows_per_xbar: usize,
+    live: Vec<bool>,
+    /// Monotonically nondecreasing cell-write counters, one per row.
+    wear: Vec<u64>,
+    /// Free rows ordered by `(wear, row)` — the allocation policy.
+    free: BTreeSet<(u64, usize)>,
+}
+
+impl FreeRowMap {
+    /// A map of `capacity` rows with the first `initial_live` live (the
+    /// loaded records) and the rest free. `rows_per_xbar` is the crossbar
+    /// row count of the layout the map shadows.
+    pub fn new(capacity: usize, initial_live: usize, rows_per_xbar: usize) -> FreeRowMap {
+        assert!(initial_live <= capacity, "more live rows than capacity");
+        FreeRowMap::from_flags(
+            &(0..capacity).map(|i| i < initial_live).collect::<Vec<_>>(),
+            capacity,
+            rows_per_xbar,
+        )
+    }
+
+    /// A map whose liveness comes from per-slot flags — the shadow of a
+    /// *mutated* load image ([`crate::db::dbgen::Relation::live`]), where
+    /// dead slots sit between live ones. Slots beyond `flags.len()` (the
+    /// unoccupied tail of the last crossbar) are free. The allocation
+    /// policy is unchanged; this is bookkeeping-only, so the Python
+    /// mirror pins [`FreeRowMap::new`]'s prefix form.
+    pub fn from_flags(flags: &[bool], capacity: usize, rows_per_xbar: usize) -> FreeRowMap {
+        assert!(flags.len() <= capacity, "more flags than capacity");
+        assert!(rows_per_xbar >= 1);
+        let live: Vec<bool> = (0..capacity)
+            .map(|i| flags.get(i).copied().unwrap_or(false))
+            .collect();
+        FreeRowMap {
+            rows_per_xbar,
+            free: live
+                .iter()
+                .enumerate()
+                .filter(|(_, &l)| !l)
+                .map(|(i, _)| (0, i))
+                .collect(),
+            live,
+            wear: vec![0; capacity],
+        }
+    }
+
+    /// Total rows tracked (live + free).
+    pub fn capacity(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Live rows.
+    pub fn live_count(&self) -> usize {
+        self.live.len() - self.free.len()
+    }
+
+    /// Whether `row` holds a live record.
+    pub fn is_live(&self, row: usize) -> bool {
+        self.live[row]
+    }
+
+    /// Cumulative cell writes charged to `row`.
+    pub fn row_wear(&self, row: usize) -> u64 {
+        self.wear[row]
+    }
+
+    /// Sum of all per-row wear counters.
+    pub fn total_wear(&self) -> u64 {
+        self.wear.iter().fold(0u64, |a, &w| a.wrapping_add(w))
+    }
+
+    /// Take the least-worn free row (ties break to the lowest index) and
+    /// mark it live; `None` when every row is live.
+    pub fn alloc(&mut self) -> Option<usize> {
+        let entry = *self.free.iter().next()?;
+        self.free.remove(&entry);
+        let row = entry.1;
+        self.live[row] = true;
+        Some(row)
+    }
+
+    /// Mark a live row free again (DELETE), keeping its wear history.
+    pub fn release(&mut self, row: usize) {
+        debug_assert!(self.live[row], "double free of row {row}");
+        self.live[row] = false;
+        self.free.insert((self.wear[row], row));
+    }
+
+    /// Append `rows` fresh free rows (a newly materialized crossbar).
+    pub fn grow(&mut self, rows: usize) {
+        let base = self.live.len();
+        self.live.resize(base + rows, false);
+        self.wear.resize(base + rows, 0);
+        for i in 0..rows {
+            self.free.insert((0, base + i));
+        }
+    }
+
+    /// Add `writes` cell writes to one row (an INSERT row write).
+    pub fn charge_row(&mut self, row: usize, writes: u64) {
+        if !self.live[row] {
+            self.free.remove(&(self.wear[row], row));
+            self.free
+                .insert((self.wear[row].wrapping_add(writes), row));
+        }
+        self.wear[row] = self.wear[row].wrapping_add(writes);
+    }
+
+    /// Charge a per-crossbar write profile to every row: `totals[r]` is
+    /// the cell writes row `r` of *each* crossbar received (all crossbars
+    /// of a relation execute the same instruction stream in lockstep).
+    pub fn charge_profile(&mut self, totals: &[u64]) {
+        debug_assert_eq!(totals.len(), self.rows_per_xbar);
+        let mut changed = false;
+        for (i, w) in self.wear.iter_mut().enumerate() {
+            let add = totals[i % self.rows_per_xbar];
+            if add != 0 {
+                *w = w.wrapping_add(add);
+                changed = true;
+            }
+        }
+        if changed {
+            // wear of free rows moved: rebuild the ordered entries
+            self.free = self
+                .live
+                .iter()
+                .enumerate()
+                .filter(|(_, &l)| !l)
+                .map(|(i, _)| (self.wear[i], i))
+                .collect();
+        }
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a_fold(mut state: u64, value: u64) -> u64 {
+    for byte in value.to_le_bytes() {
+        state = (state ^ byte as u64).wrapping_mul(FNV_PRIME);
+    }
+    state
+}
+
+/// Cross-language golden pin: `python/dmlmirror.py` runs the identical
+/// scripted alloc/free/charge scenario and pins the same constant
+/// (`GOLDEN_ALLOC_DIGEST`). The digest folds every operation *and* every
+/// allocator answer, so it pins the complete allocation order — the
+/// wear-leveling policy — not just the final state.
+pub fn golden_alloc_digest() -> u64 {
+    let mut fm = FreeRowMap::new(64, 40, 16);
+    let mut state = FNV_OFFSET;
+    let mut x: u64 = 42;
+    for _ in 0..200 {
+        x = x
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        let op = x % 4;
+        let arg = ((x >> 8) % 64) as usize;
+        state = fnv1a_fold(state, op);
+        match op {
+            0 => {
+                let row = fm.alloc();
+                state = fnv1a_fold(state, row.map(|r| r as u64).unwrap_or(0xFFFF));
+            }
+            1 => {
+                // free the first live row at/after arg (wrapping)
+                let row = (0..fm.capacity())
+                    .map(|k| (arg + k) % fm.capacity())
+                    .find(|&cand| fm.is_live(cand));
+                match row {
+                    None => state = fnv1a_fold(state, 0xFFFE),
+                    Some(r) => {
+                        fm.release(r);
+                        state = fnv1a_fold(state, r as u64);
+                    }
+                }
+            }
+            2 => {
+                let writes = (x >> 16) % 7 + 1;
+                fm.charge_row(arg, writes);
+                state = fnv1a_fold(state, arg as u64 * 1000 + writes);
+            }
+            _ => {
+                let totals: Vec<u64> =
+                    (0..16).map(|r| ((x >> 16).wrapping_add(7 * r + 3)) % 5).collect();
+                fm.charge_profile(&totals);
+                state = fnv1a_fold(state, totals.iter().sum());
+            }
+        }
+    }
+    state = fnv1a_fold(state, fm.live_count() as u64);
+    state = fnv1a_fold(state, fm.total_wear());
+    state
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn golden_alloc_digest_matches_the_python_mirror_pin() {
+        // regenerate with `python3 python/dmlmirror.py`
+        assert_eq!(golden_alloc_digest(), 0x9468_F2E2_165F_77A6);
+    }
+
+    #[test]
+    fn alloc_prefers_least_worn_then_lowest_index() {
+        let mut fm = FreeRowMap::new(8, 0, 8);
+        fm.charge_row(0, 5);
+        fm.charge_row(1, 2);
+        fm.charge_row(3, 2);
+        let order: Vec<_> = std::iter::from_fn(|| fm.alloc()).collect();
+        assert_eq!(order, vec![2, 4, 5, 6, 7, 1, 3, 0]);
+        assert_eq!(fm.alloc(), None);
+        assert_eq!(fm.live_count(), 8);
+    }
+
+    #[test]
+    fn from_flags_respects_holes_in_a_mutated_image() {
+        // slots: live, dead, live, dead; tail (4..8) free
+        let mut fm = FreeRowMap::from_flags(&[true, false, true, false], 8, 4);
+        assert_eq!(fm.live_count(), 2);
+        assert!(fm.is_live(0) && !fm.is_live(1) && fm.is_live(2));
+        // the dead interior slots allocate before nothing else is worn
+        assert_eq!(fm.alloc(), Some(1));
+        assert_eq!(fm.alloc(), Some(3));
+        assert_eq!(fm.alloc(), Some(4));
+        // a live row is never handed out
+        let rest: Vec<_> = std::iter::from_fn(|| fm.alloc()).collect();
+        assert_eq!(rest, vec![5, 6, 7]);
+    }
+
+    #[test]
+    fn release_keeps_wear_history() {
+        let mut fm = FreeRowMap::new(4, 4, 4);
+        assert_eq!(fm.alloc(), None);
+        fm.charge_row(1, 10);
+        fm.release(1);
+        fm.release(2);
+        // row 2 (wear 0) beats row 1 (wear 10)
+        assert_eq!(fm.alloc(), Some(2));
+        assert_eq!(fm.alloc(), Some(1));
+        assert_eq!(fm.row_wear(1), 10);
+    }
+
+    #[test]
+    fn charge_profile_repeats_per_crossbar_and_grow_extends() {
+        let mut fm = FreeRowMap::new(8, 8, 4);
+        fm.charge_profile(&[1, 2, 3, 4]);
+        assert_eq!(
+            (0..8).map(|r| fm.row_wear(r)).collect::<Vec<_>>(),
+            vec![1, 2, 3, 4, 1, 2, 3, 4]
+        );
+        fm.grow(4);
+        assert_eq!(fm.capacity(), 12);
+        assert_eq!(fm.live_count(), 8);
+        // fresh rows are unworn and allocatable first
+        assert_eq!(fm.alloc(), Some(8));
+    }
+
+    #[test]
+    fn fuzz_against_from_scratch_oracle() {
+        // the Rust half of the python fuzz suite: the incremental ordered
+        // set must always agree with a from-scratch min scan
+        check("freerows-oracle", 150, |g| {
+            let cap = g.usize(1, 40);
+            let live0 = g.usize(0, cap);
+            let rpx = *g.pick(&[1usize, 2, 4, 8, 16]);
+            let mut fm = FreeRowMap::new(cap, live0, rpx);
+            let mut live: Vec<bool> = (0..cap).map(|i| i < live0).collect();
+            let mut wear: Vec<u64> = vec![0; cap];
+            for _ in 0..60 {
+                match g.usize(0, 4) {
+                    0 => {
+                        let want = (0..live.len())
+                            .filter(|&r| !live[r])
+                            .min_by_key(|&r| (wear[r], r));
+                        let got = fm.alloc();
+                        assert_eq!(got, want);
+                        if let Some(r) = got {
+                            live[r] = true;
+                        }
+                    }
+                    1 => {
+                        let live_rows: Vec<usize> =
+                            (0..live.len()).filter(|&r| live[r]).collect();
+                        if !live_rows.is_empty() {
+                            let row = *g.pick(&live_rows);
+                            fm.release(row);
+                            live[row] = false;
+                        }
+                    }
+                    2 => {
+                        let row = g.usize(0, live.len() - 1);
+                        let w = g.usize(1, 8) as u64;
+                        fm.charge_row(row, w);
+                        wear[row] += w;
+                    }
+                    3 => {
+                        let totals: Vec<u64> =
+                            (0..rpx).map(|_| g.usize(0, 3) as u64).collect();
+                        fm.charge_profile(&totals);
+                        for (i, w) in wear.iter_mut().enumerate() {
+                            *w += totals[i % rpx];
+                        }
+                    }
+                    _ => {
+                        let n = rpx * g.usize(1, 2);
+                        fm.grow(n);
+                        live.resize(live.len() + n, false);
+                        wear.resize(wear.len() + n, 0);
+                    }
+                }
+                for (i, &l) in live.iter().enumerate() {
+                    assert_eq!(fm.is_live(i), l);
+                    assert_eq!(fm.row_wear(i), wear[i]);
+                }
+                assert_eq!(fm.live_count(), live.iter().filter(|&&l| l).count());
+            }
+        });
+    }
+}

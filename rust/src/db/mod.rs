@@ -1,6 +1,8 @@
 //! TPC-H database substrate: schema + encodings, deterministic generator,
-//! and the relation → crossbar layout (paper §4, §5.1).
+//! the relation → crossbar layout (paper §4, §5.1), and the
+//! endurance-aware free-row map backing the DML mutation path.
 
 pub mod dbgen;
+pub mod freerows;
 pub mod layout;
 pub mod schema;

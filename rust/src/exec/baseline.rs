@@ -13,11 +13,11 @@
 use crate::config::SystemConfig;
 use crate::db::dbgen::{Database, Relation};
 use crate::db::schema;
-use crate::exec::metrics::{GroupOutput, QueryMetrics, QueryOutput, RunReport};
+use crate::exec::metrics::{DmlResult, GroupOutput, QueryMetrics, QueryOutput, RunReport};
 use crate::host;
 use crate::mem::cache::CacheSim;
 use crate::mem::dram::DramModel;
-use crate::query::ast::{AggKind, Pred, Query, QueryKind, RelQuery};
+use crate::query::ast::{AggKind, Dml, Pred, Query, QueryKind, RelQuery};
 
 /// Decompose a filter into its top-level conjuncts (early-exit units).
 fn conjuncts(p: &Pred) -> Vec<&Pred> {
@@ -27,11 +27,12 @@ fn conjuncts(p: &Pred) -> Vec<&Pred> {
     }
 }
 
-/// Measured selectivity of a conjunct on a sample prefix.
+/// Measured selectivity of a conjunct on a sample prefix (dead rows can
+/// never pass, so they count as misses).
 fn selectivity(rel: &Relation, p: &Pred, sample: usize) -> f64 {
     let n = rel.records.min(sample).max(1);
     let hits = (0..n)
-        .filter(|&i| p.eval(&|name| rel.col(name)[i]))
+        .filter(|&i| rel.live(i) && p.eval(&|name| rel.col(name)[i]))
         .count();
     hits as f64 / n as f64
 }
@@ -129,6 +130,13 @@ pub fn run_query(cfg: &SystemConfig, db: &Database, q: &Query) -> RunReport {
         };
 
         for rec in 0..rel.records {
+            // dead rows (DML deletes / unreclaimed slots) are invisible:
+            // the valid-bitmap test is the host-side twin of the PIM
+            // engine's mask AND VALID
+            if !rel.live(rec) {
+                instr += 1; // bitmap test + branch
+                continue;
+            }
             let get = |name: &str| lookup(name, rec);
             let mut pass = true;
             for (pi, (p, _)) in parts.iter().enumerate() {
@@ -264,12 +272,168 @@ pub fn run_query(cfg: &SystemConfig, db: &Database, q: &Query) -> RunReport {
     }
 }
 
-/// Scalar oracle for one relation's filter (differential tests).
+/// Scalar oracle for one relation's filter (differential tests). Dead
+/// rows are excluded, mirroring the engines' valid-bit masking.
 pub fn oracle_selected(db: &Database, rq: &RelQuery) -> u64 {
     let rel = db.rel(rq.rel);
     (0..rel.records)
-        .filter(|&i| rq.filter.eval(&|n| rel.col(n)[i]))
+        .filter(|&i| rel.live(i) && rq.filter.eval(&|n| rel.col(n)[i]))
         .count() as u64
+}
+
+/// Apply one DML statement to the host column store — the mutation twin
+/// of the PIM path, so differential tests can hold a baseline mirror
+/// bit-identical in its *live-record multiset* to the PIM copy.
+///
+/// Host cost accounting follows the §3.1 programming model: the scan
+/// reads stream through the cache model, and every mutated cache line is
+/// written *and flushed* (PIM data must not stay cached), so each dirty
+/// line reaches memory — counted as an LLC miss and a DRAM transfer.
+///
+/// Semantics match [`crate::exec::pimdb::PimSession::run_dml`]: filters
+/// see live rows only; DELETE clears liveness and zeroes the row (the
+/// all-zero-dead-row invariant, so the mutated store reloads into PIM
+/// correctly); INSERT appends one live record with unlisted attributes
+/// encoded as 0.
+///
+/// Panics on a statement naming an unknown or repeated attribute — the
+/// conditions `compile_dml` rejects with typed errors on the PIM side.
+/// Validate there (or through the PQL lowering) first; a silently
+/// half-applied statement would diverge the mirror from the PIM copy.
+pub fn apply_dml(cfg: &SystemConfig, db: &mut Database, dml: &Dml) -> DmlResult {
+    let rel_idx = schema::PIM_RELATIONS
+        .iter()
+        .position(|&r| r == dml.rel())
+        .expect("DML targets a PIM relation");
+    let written: &[(&'static str, u64)] = match dml {
+        Dml::Insert { values, .. } => values,
+        Dml::Update { sets, .. } => sets,
+        Dml::Delete { .. } => &[],
+    };
+    for (i, (name, _)) in written.iter().enumerate() {
+        assert!(
+            schema::attr(dml.rel(), name).is_some(),
+            "{:?} has no attribute {name}",
+            dml.rel()
+        );
+        assert!(
+            !written[..i].iter().any(|(n, _)| n == name),
+            "{:?} attribute {name} listed twice",
+            dml.rel()
+        );
+    }
+    let rel = db.rel_mut(dml.rel());
+    let mut cache = CacheSim::with_l2_share(cfg, cfg.exec_threads);
+    let mut instr = 0u64;
+    let mut flushed_lines = 0u64;
+    let mut rows_affected = 0u64;
+
+    let col_index: std::collections::BTreeMap<&str, usize> = rel
+        .column_names()
+        .iter()
+        .enumerate()
+        .map(|(i, n)| (*n, i))
+        .collect();
+    let touch = |cache: &mut CacheSim, flushed: &mut u64, name: &str, rec: usize, write: bool| {
+        let w = attr_bytes(dml.rel(), name);
+        let addr = col_base(rel_idx, col_index[name]) + rec as u64 * w;
+        cache.access_range(addr, w as usize, write);
+        if write {
+            // §3.1: clflush the written lines so the store reaches the
+            // media — the lines leave both cache levels and each counts
+            // a memory transfer
+            *flushed += cache.flush_range(addr, w as usize);
+        }
+    };
+
+    match dml {
+        Dml::Insert { values, .. } => {
+            let owned: Vec<(&str, u64)> = values.iter().map(|(n, v)| (*n, *v)).collect();
+            let row = rel.append_row(&owned);
+            rows_affected = 1;
+            for name in rel.column_names() {
+                touch(&mut cache, &mut flushed_lines, name, row, true);
+                instr += 2;
+            }
+        }
+        Dml::Update { filter, sets, .. } => {
+            let filter_attrs = filter.attrs();
+            for rec in 0..rel.records {
+                instr += 1;
+                if !rel.live(rec) {
+                    continue;
+                }
+                for a in &filter_attrs {
+                    touch(&mut cache, &mut flushed_lines, a, rec, false);
+                    instr += 2;
+                }
+                let hit = filter.eval(&|n| rel.col(n)[rec]);
+                instr += 2;
+                if !hit {
+                    continue;
+                }
+                rows_affected += 1;
+                for &(name, value) in sets.iter() {
+                    rel.write(name, rec, value);
+                    touch(&mut cache, &mut flushed_lines, name, rec, true);
+                    instr += 2;
+                }
+            }
+        }
+        Dml::Delete { filter, .. } => {
+            let filter_attrs = filter.attrs();
+            for rec in 0..rel.records {
+                instr += 1;
+                if !rel.live(rec) {
+                    continue;
+                }
+                for a in &filter_attrs {
+                    touch(&mut cache, &mut flushed_lines, a, rec, false);
+                    instr += 2;
+                }
+                let hit = filter.eval(&|n| rel.col(n)[rec]);
+                instr += 2;
+                if !hit {
+                    continue;
+                }
+                rows_affected += 1;
+                rel.set_valid(rec, false);
+                rel.zero_row(rec);
+                for name in rel.column_names() {
+                    touch(&mut cache, &mut flushed_lines, name, rec, true);
+                    instr += 2;
+                }
+            }
+        }
+    }
+
+    // flushes force every dirty line to memory regardless of cache state
+    let s = &cache.stats;
+    let llc_misses = s.llc_misses + flushed_lines;
+    let dram_bytes = llc_misses * cfg.cache_block as u64;
+    let act = host::core::Activity {
+        instructions: instr,
+        l1_hits: s.l1_hits,
+        l2_hits: s.l2_hits,
+        llc_misses,
+        dram_bytes,
+    };
+    let mut dram = DramModel::new(cfg);
+    dram.record_read(dram_bytes);
+    let exec_time_s =
+        host::core::spawn_join_overhead_s(cfg, 1) + host::core::thread_time_s(cfg, &act, 1.0);
+    let metrics = QueryMetrics {
+        exec_time_s,
+        llc_misses,
+        host_energy_pj: host::power::host_energy_pj(cfg, exec_time_s, exec_time_s, 1),
+        dram_energy_pj: dram.total_energy_pj(exec_time_s),
+        ..Default::default()
+    };
+    DmlResult {
+        rows_affected,
+        wear_delta: 0.0, // DRAM endures; wear is a PIM-side concern
+        metrics,
+    }
 }
 
 #[cfg(test)]
@@ -314,6 +478,72 @@ mod tests {
         let part_records = crate::db::schema::RelId::Part.records_at_sf(cfg.report_sf);
         // upper bound: 2 attrs x 1 byte each / 64B line, plus slack
         assert!(r.metrics.llc_misses < part_records / 8);
+    }
+
+    #[test]
+    fn apply_dml_mutates_and_scans_skip_dead_rows() {
+        use crate::db::schema::RelId;
+        use crate::query::ast::{CmpOp, Dml};
+        let cfg = SystemConfig::default();
+        let mut database = db();
+        let before = database.rel(RelId::Supplier).live_count();
+
+        let del = Dml::Delete {
+            rel: RelId::Supplier,
+            filter: Pred::CmpImm {
+                attr: "s_suppkey",
+                op: CmpOp::Le,
+                value: 5,
+            },
+        };
+        let r = apply_dml(&cfg, &mut database, &del);
+        assert_eq!(r.rows_affected, 5);
+        // flush accounting: mutations reach memory
+        assert!(r.metrics.llc_misses > 0);
+        assert!(r.metrics.exec_time_s > 0.0);
+        assert_eq!(database.rel(RelId::Supplier).live_count(), before - 5);
+        // deleted rows are zeroed (the all-zero-dead-row invariant)
+        assert_eq!(database.rel(RelId::Supplier).col("s_suppkey")[0], 0);
+
+        // deleting again affects nothing: dead rows are invisible
+        let r = apply_dml(&cfg, &mut database, &del);
+        assert_eq!(r.rows_affected, 0);
+
+        let upd = Dml::Update {
+            rel: RelId::Supplier,
+            filter: Pred::CmpImm {
+                attr: "s_suppkey",
+                op: CmpOp::Eq,
+                value: 6,
+            },
+            sets: vec![("s_nationkey", 24)],
+        };
+        assert_eq!(apply_dml(&cfg, &mut database, &upd).rows_affected, 1);
+        assert_eq!(database.rel(RelId::Supplier).col("s_nationkey")[5], 24);
+
+        let ins = Dml::Insert {
+            rel: RelId::Supplier,
+            values: vec![("s_suppkey", 12345)],
+        };
+        assert_eq!(apply_dml(&cfg, &mut database, &ins).rows_affected, 1);
+        assert_eq!(
+            database.rel(RelId::Supplier).live_count(),
+            before - 5 + 1
+        );
+
+        // the baseline scan and the oracle both skip dead rows
+        let rq = crate::query::lang::parse_rel_query(
+            "from supplier | filter s_suppkey <= 6",
+        )
+        .unwrap();
+        assert_eq!(oracle_selected(&database, &rq), 1); // only suppkey 6 lives
+        let q = Query {
+            name: "t",
+            kind: QueryKind::FilterOnly,
+            rels: vec![rq],
+        };
+        let rep = run_query(&cfg, &database, &q);
+        assert_eq!(rep.output.selected[0].1, 1);
     }
 
     #[test]

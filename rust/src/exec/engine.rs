@@ -48,6 +48,16 @@ impl XbarState {
         }
     }
 
+    /// Write `value` into columns [start, start+len) of `row` — the
+    /// functional effect of a host row write (INSERT, paper §3.1: PIM
+    /// data is written with ordinary stores). Both 0- and 1-bits are
+    /// written, so the call is correct for any prior row contents.
+    pub fn write_value(&mut self, row: usize, r: ColRange, value: u64) {
+        for i in 0..r.len as usize {
+            self.set_bit(r.start as usize + i, row, (value >> i) & 1 == 1);
+        }
+    }
+
     /// Value of columns [start, start+len) in `row`.
     pub fn value_at(&self, row: usize, r: ColRange) -> u64 {
         let mut v = 0u64;
@@ -95,15 +105,18 @@ pub fn load_states(
             }
         }
     }
-    // VALID column: whole words for full 32-record groups, tail bits last
+    // VALID column from the store's liveness flags (all-true for a
+    // pristine load; a DML-mutated store reloads with its dead rows
+    // masked out — their data is zero by the all-zero-dead-row invariant)
     for i in (0..n).step_by(32) {
         let (x, word) = (i / XBAR_ROWS, (i % XBAR_ROWS) / 32);
-        let remaining = n - i;
-        states[x].planes[layout.valid_col][word] = if remaining >= 32 {
-            u32::MAX
-        } else {
-            (1u32 << remaining) - 1
-        };
+        let mut bits = 0u32;
+        for b in 0..32.min(n - i) {
+            if rel.live(rec_range.start + i + b) {
+                bits |= 1 << b;
+            }
+        }
+        states[x].planes[layout.valid_col][word] = bits;
     }
     states
 }

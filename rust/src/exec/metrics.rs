@@ -167,6 +167,22 @@ pub struct GroupOutput {
     pub count: u64,
 }
 
+/// One DML statement's execution result: functional effect plus the
+/// simulated cost of applying it ([`crate::api::Pimdb::execute_dml`]).
+#[derive(Clone, Debug)]
+pub struct DmlResult {
+    /// Live rows the statement touched: rows inserted (1), updated, or
+    /// deleted. Dead rows never count — the filter is ANDed with VALID.
+    pub rows_affected: u64,
+    /// Cell writes this statement added to the hottest crossbar row,
+    /// per cell (same ops-per-cell unit as
+    /// [`QueryMetrics::ops_per_cell`]); the per-row counters themselves
+    /// accumulate monotonically in the relation's free-row map.
+    pub wear_delta: f64,
+    /// Simulated timing/energy/endurance of applying the statement.
+    pub metrics: QueryMetrics,
+}
+
 /// One engine's full report.
 #[derive(Clone, Debug)]
 pub struct RunReport {

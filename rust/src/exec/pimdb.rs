@@ -30,24 +30,30 @@ use std::collections::{BTreeMap, BTreeSet};
 
 use crate::config::SystemConfig;
 use crate::db::dbgen::Database;
+use crate::db::freerows::FreeRowMap;
 use crate::db::layout::{DbLayout, RelationLayout};
 use crate::db::schema::RelId;
 use crate::error::PimdbError;
 use crate::exec::engine::{self, ExecOutputs, XbarState};
 use crate::exec::metrics::{
-    CycleCounts, GroupOutput, OptSummary, QueryMetrics, QueryOutput, RunReport,
+    CycleCounts, DmlResult, GroupOutput, OptSummary, QueryMetrics, QueryOutput, RunReport,
 };
 use crate::exec::plan::{self, ExecPlan, ShardTask};
 use crate::host;
 use crate::pim::controller::{cost, write_profile, InstructionCost};
 use crate::pim::endurance::{EnduranceTracker, OpCategory};
 use crate::pim::energy::EnergyLedger;
+use crate::pim::isa::ColRange;
 use crate::pim::module::{MediaScheduler, ReqKind, Request};
 use crate::pim::power::{self, PowerTrace};
-use crate::query::ast::{AggKind, Query, QueryKind};
-use crate::query::compiler::{CompileError, CompiledRelQuery, Compiler, ReadKind};
+use crate::pim::timing::{self, Timing};
+use crate::query::ast::{AggKind, Dml, Query, QueryKind};
+use crate::query::compiler::{
+    compile_dml, CompileError, CompiledDml, CompiledDmlOp, CompiledRelQuery, Compiler, ReadKind,
+    Step,
+};
 use crate::query::opt;
-use crate::util::bits::WORDS;
+use crate::util::bits::{WORDS, XBAR_ROWS};
 
 /// Which functional backend computes instruction semantics.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -83,6 +89,11 @@ pub struct PimSession<'a> {
     db: &'a Database,
     layout: DbLayout,
     states: BTreeMap<RelId, Vec<XbarState>>,
+    /// Row liveness + wear maps, created on first DML per relation. The
+    /// session mutates only its PIM copy (`db` stays the pristine load
+    /// image); the supported mutable surface is
+    /// [`crate::api::Pimdb::execute_dml`].
+    freerows: BTreeMap<RelId, FreeRowMap>,
 }
 
 /// One program of one query inside a wave (all relations of a wave are
@@ -112,6 +123,7 @@ impl<'a> PimSession<'a> {
             db,
             layout: DbLayout::build(cfg, &|r| db.rel(r).records as u64)?,
             states: Default::default(),
+            freerows: Default::default(),
         })
     }
 
@@ -298,6 +310,14 @@ impl<'a> PimSession<'a> {
         let mut reports = Vec::with_capacity(queries.len());
         for (qi, q) in queries.iter().enumerate() {
             let compiled = &compiled_all[qi];
+            // relations with a free-row map (i.e. ever mutated) accumulate
+            // this query's per-row write profile into the persistent wear
+            // counters the endurance-aware allocator consults
+            for c in compiled.iter() {
+                if let Some(free) = self.freerows.get_mut(&c.rel) {
+                    charge_wear(free, &c.steps, self.cfg.xbar_cols);
+                }
+            }
             let outs: Vec<ExecOutputs> = (0..compiled.len())
                 .map(|ci| outputs.remove(&(qi, ci)).expect("executed above"))
                 .collect();
@@ -316,6 +336,253 @@ impl<'a> PimSession<'a> {
             });
         }
         Ok(reports)
+    }
+
+    /// Execute one DML statement against the session's PIM copy: compile
+    /// it, run the filter + in-place mutation (UPDATE/DELETE) or the
+    /// endurance-aware row write (INSERT), and report rows affected, the
+    /// wear delta and the simulated application cost.
+    ///
+    /// The mutation applies to the *PIM copy only* — the session borrows
+    /// its [`Database`] immutably and never rewrites the load image. Use
+    /// [`crate::exec::baseline::apply_dml`] on a database copy to keep a
+    /// host-side mirror for differential comparisons.
+    pub fn run_dml(
+        &mut self,
+        dml: &Dml,
+        engine_kind: EngineKind,
+    ) -> Result<DmlResult, PimdbError> {
+        let rel = dml.rel();
+        if !rel.in_pim() {
+            // AST-built statements bypass the PQL lowering's diagnostic:
+            // return the typed error instead of a layout panic
+            return Err(CompileError::NotPimResident { rel }.into());
+        }
+        let compiled = compile_dml(dml, self.layout.rel(rel), self.cfg.xbar_cols)?;
+        self.states_for(rel);
+        let exec_plan = ExecPlan::for_config(self.cfg);
+        let cfg = self.cfg;
+        let mut states = self.states.remove(&rel).expect("materialized above");
+        let r = self.db.rel(rel);
+        let free = self.freerows.entry(rel).or_insert_with(|| {
+            // shadow the load image's liveness exactly (a mutated store
+            // reloads with dead slots between live ones)
+            let flags: Vec<bool> = (0..r.records).map(|i| r.live(i)).collect();
+            FreeRowMap::from_flags(&flags, states.len() * XBAR_ROWS, XBAR_ROWS)
+        });
+        let out = exec_dml_on_states(
+            cfg,
+            &self.layout,
+            rel,
+            &mut states,
+            free,
+            &compiled,
+            engine_kind,
+            &exec_plan,
+        );
+        if out.is_ok() {
+            self.states.insert(rel, states);
+        } else {
+            // a failed backend may have torn the statement: drop the
+            // states (lazy pristine reload) and the now-stale liveness
+            // map (only reachable via backend errors; native is total)
+            self.freerows.remove(&rel);
+        }
+        out
+    }
+
+    /// Live records currently in the PIM copy of `rel` (the load image's
+    /// live count until a DML statement touches the relation).
+    pub fn live_records(&self, rel: RelId) -> usize {
+        self.freerows
+            .get(&rel)
+            .map(|f| f.live_count())
+            .unwrap_or_else(|| self.db.rel(rel).live_count())
+    }
+}
+
+/// Record one program's endurance write profile into a tracker (the
+/// per-category split Tables 5–6 use; shared by the report simulation and
+/// the persistent per-row wear accounting).
+pub(crate) fn record_endurance(tr: &mut EnduranceTracker, steps: &[Step], xbar_rows: usize) {
+    for s in steps {
+        let profile = write_profile(&s.instr, xbar_rows);
+        match s.category {
+            OpCategory::AggCol | OpCategory::AggRow => {
+                tr.record_split(OpCategory::AggCol, OpCategory::AggRow, &profile)
+            }
+            OpCategory::ColTransform => {
+                tr.record_split(OpCategory::ColTransform, OpCategory::ColTransform, &profile)
+            }
+            cat => tr.record(cat, &profile),
+        }
+    }
+}
+
+/// Charge one executed program's write profile into a relation's
+/// persistent wear counters — the single charging policy shared by the
+/// [`crate::api::Pimdb`] facade, [`PimSession`] and the DML executor,
+/// so the endurance-aware allocator sees identical heat on every path.
+pub(crate) fn charge_wear(free: &mut FreeRowMap, steps: &[Step], xbar_cols: usize) {
+    let mut tr = EnduranceTracker::new(XBAR_ROWS, xbar_cols);
+    record_endurance(&mut tr, steps, XBAR_ROWS);
+    free.charge_profile(&tr.row_totals());
+}
+
+/// Global sim-row indices whose bit is set in `mask_col`.
+fn mask_rows(states: &[XbarState], mask_col: usize) -> Vec<usize> {
+    let mut rows = Vec::new();
+    for (x, st) in states.iter().enumerate() {
+        for (w, &word) in st.planes[mask_col].iter().enumerate() {
+            let mut bits = word;
+            while bits != 0 {
+                let b = bits.trailing_zeros() as usize;
+                rows.push(x * XBAR_ROWS + w * 32 + b);
+                bits &= bits - 1;
+            }
+        }
+    }
+    rows
+}
+
+/// Simulated cost of one INSERT row write (paper §3.1 programming model:
+/// the host stores the encoded record into the PIM page and flushes the
+/// written cache lines so they reach the media — PIM data must not stay
+/// cached — then the array commits an RRAM row write).
+fn insert_metrics(cfg: &SystemConfig, row_bits: usize) -> QueryMetrics {
+    let t = Timing::new(cfg);
+    let bytes = (row_bits as u64).div_ceil(8);
+    let lines = bytes.div_ceil(cfg.cache_block as u64);
+    // channel latency + header-amortized occupancy (pim::timing), then
+    // the array commits the row: bank-write occupancy, floored by the
+    // RRAM write latency
+    let array_ps = t
+        .bank_write_ps(bytes)
+        .max(cfg.rram_write_ns * timing::PS_PER_NS);
+    let total_ps = t.channel_latency_ps + t.channel_occupancy_ps(bytes) + array_ps;
+    let exec_time_s = total_ps as f64 * 1e-12;
+    let mut pim_energy = EnergyLedger::default();
+    pim_energy.add_write_bits(cfg, row_bits as u64);
+    pim_energy.add_io_bytes(cfg, bytes);
+    let ops_per_cell = row_bits as f64 / cfg.xbar_cols as f64;
+    let executions_per_10yr = 10.0 * 365.25 * 24.0 * 3600.0 / exec_time_s.max(1e-12);
+    QueryMetrics {
+        exec_time_s,
+        pim_time_s: array_ps as f64 * 1e-12,
+        read_time_s: 0.0,
+        other_time_s: 0.0,
+        // uncacheable stores + flushes: every written line reaches memory
+        llc_misses: lines,
+        host_energy_pj: host::power::host_energy_pj(cfg, exec_time_s, exec_time_s, 1),
+        dram_energy_pj: 0.0,
+        pim_energy,
+        cycles: CycleCounts::default(),
+        inter_cells: 0,
+        opt: OptSummary::default(),
+        plan_cache: Default::default(),
+        peak_chip_w: 0.0,
+        avg_chip_w: 0.0,
+        theoretical_chip_w: 0.0,
+        ops_per_cell,
+        required_endurance_10yr: ops_per_cell * executions_per_10yr,
+        endurance_breakdown: [0.0; 5],
+    }
+}
+
+/// Apply one compiled DML statement to a relation's crossbar states,
+/// updating the free-row map (liveness + monotone wear) and returning the
+/// functional effect plus simulated cost. Shared by
+/// [`PimSession::run_dml`] and the [`crate::api::Pimdb`] service handle.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn exec_dml_on_states(
+    cfg: &SystemConfig,
+    layout: &DbLayout,
+    rel: RelId,
+    states: &mut Vec<XbarState>,
+    free: &mut FreeRowMap,
+    c: &CompiledDml,
+    engine_kind: EngineKind,
+    exec_plan: &ExecPlan,
+) -> Result<DmlResult, PimdbError> {
+    match &c.op {
+        CompiledDmlOp::Insert {
+            fields,
+            valid_col,
+            row_bits,
+        } => {
+            // endurance-aware placement: least-worn free row; a full
+            // relation materializes one more (all-zero) crossbar
+            let row = match free.alloc() {
+                Some(r) => r,
+                None => {
+                    states.push(XbarState::new(cfg.xbar_cols));
+                    free.grow(XBAR_ROWS);
+                    free.alloc().expect("grew by a crossbar")
+                }
+            };
+            let (x, r) = (row / XBAR_ROWS, row % XBAR_ROWS);
+            for &(start, bits, value) in fields {
+                states[x].write_value(r, ColRange::new(start, bits), value);
+            }
+            states[x].write_value(r, ColRange::new(*valid_col, 1), 1);
+            free.charge_row(row, *row_bits as u64);
+            let metrics = insert_metrics(cfg, *row_bits);
+            Ok(DmlResult {
+                rows_affected: 1,
+                wear_delta: metrics.ops_per_cell,
+                metrics,
+            })
+        }
+        CompiledDmlOp::Mask {
+            steps,
+            mask_col,
+            peak_inter_cells,
+            compute_base,
+            deletes,
+        } => {
+            let out =
+                plan::exec_steps_sharded(states, steps, *mask_col, engine_kind, exec_plan)?;
+            let rows_affected = out.total_selected();
+            if *deletes {
+                for row in mask_rows(states, *mask_col) {
+                    free.release(row);
+                }
+            }
+            clear_compute(states, *compute_base);
+
+            // persistent per-row wear: the statement's write profile,
+            // identical on every crossbar of the relation
+            charge_wear(free, steps, cfg.xbar_cols);
+
+            // simulated application cost: the statement is a filter-only
+            // program (compute phase = filter + mutation writes, read
+            // phase = affected-row mask read-out)
+            let faux = CompiledRelQuery {
+                rel,
+                steps: steps.clone(),
+                read: ReadKind::FilterMask,
+                groups: vec![vec![]],
+                outputs: vec![],
+                n_reduces: 0,
+                mask_col: *mask_col,
+                peak_inter_cells: *peak_inter_cells,
+                spans: Vec::new(),
+                compute_base: *compute_base,
+                valid_col: layout.rel(rel).valid_col,
+            };
+            let dummy = Query {
+                name: "dml",
+                kind: QueryKind::FilterOnly,
+                rels: vec![],
+            };
+            let mut metrics = simulate(cfg, &dummy, std::slice::from_ref(&faux), layout);
+            metrics.inter_cells = *peak_inter_cells;
+            Ok(DmlResult {
+                rows_affected,
+                wear_delta: metrics.ops_per_cell,
+                metrics,
+            })
+        }
     }
 }
 
@@ -589,18 +856,7 @@ pub(crate) fn simulate(
     let mut worst_breakdown = [0.0; 5];
     for c in compiled {
         let mut tr = EnduranceTracker::new(cfg.xbar_rows, cfg.xbar_cols);
-        for s in &c.steps {
-            let profile = write_profile(&s.instr, cfg.xbar_rows);
-            match s.category {
-                OpCategory::AggCol | OpCategory::AggRow => {
-                    tr.record_split(OpCategory::AggCol, OpCategory::AggRow, &profile)
-                }
-                OpCategory::ColTransform => {
-                    tr.record_split(OpCategory::ColTransform, OpCategory::ColTransform, &profile)
-                }
-                cat => tr.record(cat, &profile),
-            }
-        }
+        record_endurance(&mut tr, &c.steps, cfg.xbar_rows);
         let opc = tr.max_ops_per_cell();
         if opc > worst_ops_per_cell {
             worst_ops_per_cell = opc;
@@ -854,6 +1110,49 @@ mod tests {
             assert_eq!(b.metrics.opt.cycles_after, b.metrics.cycles.total());
             assert_eq!(a.metrics.opt.cycles_before, a.metrics.opt.cycles_after);
         }
+    }
+
+    #[test]
+    fn session_dml_mutates_the_pim_copy() {
+        use crate::db::schema::RelId;
+        use crate::query::lang::{parse_dml, parse_program};
+        let cfg = SystemConfig::default();
+        let database = db();
+        let before = database.rel(RelId::Supplier).records;
+        let mut s = PimSession::new(&cfg, &database).unwrap();
+
+        let del = parse_dml("delete from supplier where s_suppkey <= 4").unwrap();
+        let r = s.run_dml(&del, EngineKind::Native).unwrap();
+        assert_eq!(r.rows_affected, 4);
+        assert!(r.wear_delta > 0.0);
+        assert!(r.metrics.exec_time_s > 0.0);
+        assert!(r.metrics.cycles.filter > 0, "filter cycles charged");
+        assert_eq!(s.live_records(RelId::Supplier), before - 4);
+
+        let ins = parse_dml("insert into supplier (s_suppkey) values (777)").unwrap();
+        let r = s.run_dml(&ins, EngineKind::Native).unwrap();
+        assert_eq!(r.rows_affected, 1);
+        assert!(r.metrics.pim_time_s > 0.0, "array write time charged");
+        assert!(r.metrics.llc_misses > 0, "flush accounting present");
+        assert_eq!(s.live_records(RelId::Supplier), before - 3);
+
+        // the query path sees the mutated copy
+        let q = parse_program(
+            "from supplier | filter true | aggregate count() as n",
+        )
+        .unwrap();
+        let rep = s.run_query(&q[0], EngineKind::Native).unwrap();
+        assert_eq!(rep.output.groups[0].count as usize, before - 3);
+        // dml on an unknown attribute is a typed compile error
+        let bad = crate::query::ast::Dml::Update {
+            rel: RelId::Supplier,
+            filter: crate::query::ast::Pred::True,
+            sets: vec![("nope", 1)],
+        };
+        assert!(matches!(
+            s.run_dml(&bad, EngineKind::Native),
+            Err(PimdbError::Compile(CompileError::NoSuchAttribute { .. }))
+        ));
     }
 
     #[test]

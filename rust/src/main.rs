@@ -19,7 +19,7 @@ use pimdb::exec::{baseline, pimdb as engine};
 use pimdb::mem::addr::AddressMap;
 use pimdb::pim::controller::cost;
 use pimdb::pim::isa::{ColRange, Opcode, PimInstruction};
-use pimdb::query::ast::Query;
+use pimdb::query::ast::{Query, Statement};
 use pimdb::report;
 use pimdb::util::stats::eng;
 
@@ -55,61 +55,143 @@ fn dispatch(args: &Args) -> Result<(), String> {
 
 fn cmd_run(args: &Args) -> Result<(), String> {
     let cfg = args.build_config()?;
-    // --query TPC-H names, or ad-hoc PQL text via --sql / --sql-file
-    let queries: Vec<Query> = args.queries()?;
+    // --query TPC-H names, or ad-hoc PQL text (queries and/or DML
+    // statements) via --sql / --sql-file
+    let statements: Vec<Statement> = args.statements()?;
     let seed = args.parse_u64("seed")?.unwrap_or(42);
     let engine_kind = args.engine()?;
 
     let t0 = std::time::Instant::now();
     let db = Pimdb::open(cfg.clone(), Database::generate(cfg.sim_sf, seed))?;
     if args.has("explain") {
-        for q in &queries {
-            let text = pimdb::query::opt::explain_query(
-                q,
-                db.layout(),
-                cfg.xbar_cols,
-                cfg.xbar_rows,
-                cfg.opt_level,
-            )
+        for s in &statements {
+            let text = match s {
+                Statement::Query(q) => pimdb::query::opt::explain_query(
+                    q,
+                    db.layout(),
+                    cfg.xbar_cols,
+                    cfg.xbar_rows,
+                    cfg.opt_level,
+                ),
+                Statement::Dml(d) => pimdb::query::opt::explain_dml(
+                    d,
+                    db.layout(),
+                    cfg.xbar_cols,
+                    cfg.xbar_rows,
+                ),
+            }
             .map_err(PimdbError::from)?;
             print!("{text}");
         }
     }
-    // prepare everything up front (errors before any execution), then
-    // execute all statements concurrently from &db: queries on disjoint
-    // relations overlap (the wave-scheduler rule, now enforced by the
-    // per-relation locks), each fanning out over the shard pool. Results
-    // come back in input order, bit-identical to a serial loop.
-    let prepared = queries
-        .iter()
-        .map(|q| db.prepare(q))
-        .collect::<Result<Vec<_>, _>>()?;
-    let results = std::thread::scope(|s| {
-        let workers: Vec<_> = prepared
-            .iter()
-            .map(|p| s.spawn(move || p.execute_on(engine_kind)))
-            .collect();
-        workers
-            .into_iter()
-            .map(|w| w.join().expect("query worker panicked"))
-            .collect::<Result<Vec<_>, _>>()
-    })?;
-    let wall = t0.elapsed();
 
-    for (q, r) in queries.iter().zip(&results) {
-        print_report(&cfg, engine_kind, r.raw_report());
-        if args.has("baseline") {
-            print_baseline(&cfg, db.database(), q, r.raw_report());
+    let has_dml = statements
+        .iter()
+        .any(|s| matches!(s, Statement::Dml(_)));
+    let n_stmts = statements.len();
+    if has_dml {
+        // mixed ingest+analytics program: statements execute strictly in
+        // source order (a DML statement changes what later queries see).
+        // With --baseline a host column-store mirror receives the
+        // identical mutations, so the comparison tracks the mutated data.
+        let mut mirror = args.has("baseline").then(|| db.database().clone());
+        for s in &statements {
+            match s {
+                Statement::Query(q) => {
+                    let r = db.prepare(q)?.execute_on(engine_kind)?;
+                    print_report(&cfg, engine_kind, r.raw_report());
+                    if let Some(m) = &mirror {
+                        print_baseline(&cfg, m, q, r.raw_report());
+                    }
+                }
+                Statement::Dml(d) => {
+                    let r = db.prepare_dml(d)?.execute_on(engine_kind)?;
+                    print_dml_report(&db, d, &r);
+                    if let Some(m) = &mut mirror {
+                        let b = baseline::apply_dml(&cfg, m, d);
+                        println!(
+                            "-- baseline mirror: {} rows affected ({}) --",
+                            b.rows_affected,
+                            if b.rows_affected == r.rows_affected {
+                                "matches PIM"
+                            } else {
+                                "MISMATCH vs PIM!"
+                            }
+                        );
+                    }
+                }
+            }
+        }
+    } else {
+        // query-only program: prepare everything up front (errors before
+        // any execution), then execute all statements concurrently from
+        // &db: queries on disjoint relations overlap (the wave-scheduler
+        // rule, enforced by the per-relation locks), each fanning out
+        // over the shard pool. Results come back in input order,
+        // bit-identical to a serial loop.
+        let queries: Vec<&Query> = statements
+            .iter()
+            .map(|s| match s {
+                Statement::Query(q) => q,
+                Statement::Dml(_) => unreachable!("checked above"),
+            })
+            .collect();
+        let prepared = queries
+            .iter()
+            .map(|q| db.prepare(*q))
+            .collect::<Result<Vec<_>, _>>()?;
+        let results = std::thread::scope(|s| {
+            let workers: Vec<_> = prepared
+                .iter()
+                .map(|p| s.spawn(move || p.execute_on(engine_kind)))
+                .collect();
+            workers
+                .into_iter()
+                .map(|w| w.join().expect("query worker panicked"))
+                .collect::<Result<Vec<_>, _>>()
+        })?;
+        for (q, r) in queries.iter().zip(&results) {
+            print_report(&cfg, engine_kind, r.raw_report());
+            if args.has("baseline") {
+                print_baseline(&cfg, db.database(), q, r.raw_report());
+            }
         }
     }
+    let wall = t0.elapsed();
     println!(
-        "(host wall-clock for {} simulated quer{}: {:.2?} at parallelism {})",
-        results.len(),
-        if results.len() == 1 { "y" } else { "ies" },
+        "(host wall-clock for {} simulated statement{}: {:.2?} at parallelism {})",
+        n_stmts,
+        if n_stmts == 1 { "" } else { "s" },
         wall,
         resolve_parallelism(cfg.parallelism)
     );
     Ok(())
+}
+
+fn print_dml_report(db: &Pimdb, d: &pimdb::query::ast::Dml, r: &pimdb::api::DmlResult) {
+    println!(
+        "dml {} on {}: {} row{} affected",
+        d.kind_name(),
+        d.rel().name(),
+        r.rows_affected,
+        if r.rows_affected == 1 { "" } else { "s" }
+    );
+    let m = &r.metrics;
+    println!(
+        "  live records   {} (sim scale)",
+        db.live_records(d.rel())
+    );
+    println!(
+        "  exec time      {}s, llc misses {}, energy {}J",
+        eng(m.exec_time_s),
+        m.llc_misses,
+        eng(m.total_energy_pj() * 1e-12)
+    );
+    println!(
+        "  wear delta     {:.6} ops/cell on the hottest row (10yr {})",
+        r.wear_delta,
+        eng(m.required_endurance_10yr)
+    );
 }
 
 fn print_report(cfg: &SystemConfig, engine_kind: engine::EngineKind, r: &RunReport) {

@@ -63,6 +63,25 @@ impl SetAssoc {
         ((blk as usize) & (self.sets - 1), blk)
     }
 
+    /// Invalidate a block if present (clflush); returns whether it held
+    /// dirty data.
+    fn invalidate(&mut self, addr: u64) -> bool {
+        let (set, tag) = self.index_tag(addr);
+        let ways = &mut self.tags[set];
+        if let Some(pos) = ways.iter().position(|&t| t == tag) {
+            let dirty = self.dirty[set][pos];
+            // rotate the victim to LRU and invalidate it
+            ways[pos..].rotate_left(1);
+            self.dirty[set][pos..].rotate_left(1);
+            let last = self.ways - 1;
+            ways[last] = INVALID;
+            self.dirty[set][last] = false;
+            dirty
+        } else {
+            false
+        }
+    }
+
     /// Touch a block; returns true on hit. On miss, installs the block and
     /// returns the evicted dirty block tag if any.
     fn access(&mut self, addr: u64, write: bool) -> (bool, Option<u64>) {
@@ -137,6 +156,33 @@ impl CacheSim {
             self.stats.llc_misses += 1;
             Level::Memory
         }
+    }
+
+    /// `clflush` of a `len`-byte range: every covered line is invalidated
+    /// in both levels — the paper's §3.1 programming model for stores to
+    /// PIM memory (PIM data must not stay cached). A line that was dirty
+    /// in either level is written back to memory whether or not the
+    /// cache would have evicted it; clean or absent lines flush for
+    /// free. Returns the lines written back (each counts one writeback).
+    pub fn flush_range(&mut self, addr: u64, len: usize) -> u64 {
+        let block = 1u64 << self.l1.block_bits;
+        let first = addr & !(block - 1);
+        let last = (addr + len.max(1) as u64 - 1) & !(block - 1);
+        let mut written_back = 0u64;
+        let mut a = first;
+        loop {
+            // invalidate both levels; the line's data travels once
+            let dirty = self.l1.invalidate(a) | self.l2.invalidate(a);
+            if dirty {
+                self.stats.writebacks += 1;
+                written_back += 1;
+            }
+            if a == last {
+                break;
+            }
+            a += block;
+        }
+        written_back
     }
 
     /// Access a `len`-byte field starting at `addr` (touches each block).
@@ -230,6 +276,25 @@ mod tests {
             c.access(i * stride, false);
         }
         assert!(c.stats.writebacks >= 1);
+    }
+
+    #[test]
+    fn flush_evicts_from_both_levels_and_counts_dirty_writebacks() {
+        let mut c = CacheSim::new(&cfg());
+        c.access(0x2000, true); // resident + dirty
+        assert_eq!(c.access(0x2000, false), Level::L1);
+        let wb_before = c.stats.writebacks;
+        // 8 bytes straddling a line boundary: the dirty resident line is
+        // written back; the uncached neighbour flushes for free
+        assert_eq!(c.flush_range(0x2000 + 60, 8), 1);
+        assert_eq!(c.stats.writebacks, wb_before + 1);
+        // the flushed line is gone from both levels: the next read
+        // goes to memory (PIM data must not stay cached)
+        assert_eq!(c.access(0x2000, false), Level::Memory);
+        // flushing a clean (read-only) line writes nothing back
+        c.access(0x4000, false);
+        assert_eq!(c.flush_range(0x4000, 8), 0);
+        assert_eq!(c.access(0x4000, false), Level::Memory);
     }
 
     #[test]

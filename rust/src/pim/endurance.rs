@@ -125,6 +125,13 @@ impl EnduranceTracker {
         self.writes.iter().map(|w| w[r]).sum()
     }
 
+    /// Per-row write totals across categories — the per-crossbar profile
+    /// the persistent wear counters ([`crate::db::freerows::FreeRowMap`])
+    /// accumulate per execution.
+    pub fn row_totals(&self) -> Vec<u64> {
+        (0..self.rows).map(|r| self.row_total(r)).collect()
+    }
+
     /// The most-written row and its per-category breakdown.
     pub fn max_row(&self) -> (usize, [u64; 5]) {
         let r = (0..self.rows)

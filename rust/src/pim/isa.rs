@@ -30,9 +30,11 @@ impl ColRange {
         }
     }
 
-    /// One past the last column.
+    /// One past the last column. Widens *before* adding: `start + len`
+    /// can exceed `u16::MAX` for ranges near the top of the column
+    /// space, and the former `u16` addition panicked in debug builds.
     pub fn end(&self) -> usize {
-        (self.start + self.len) as usize
+        self.start as usize + self.len as usize
     }
 }
 
@@ -402,6 +404,25 @@ mod tests {
             let back = decode(&req, &m).unwrap();
             assert_eq!(back, i, "geometry rows={rows} cols={cols} rb={read_bits}");
         });
+    }
+
+    #[test]
+    fn col_range_end_survives_u16_overflow() {
+        // regression: `start + len` used to add in u16 and panic in debug
+        // builds (wrap silently in release) near the top of the column
+        // space; end() must widen before adding
+        let r = ColRange {
+            start: 0xFFF0,
+            len: 0x20,
+        };
+        assert_eq!(r.end(), 0x1_0010);
+        let max = ColRange {
+            start: u16::MAX,
+            len: u16::MAX,
+        };
+        assert_eq!(max.end(), 2 * u16::MAX as usize);
+        // in-range behaviour unchanged
+        assert_eq!(ColRange::new(10, 24).end(), 34);
     }
 
     #[test]

@@ -263,9 +263,110 @@ pub struct Query {
     pub rels: Vec<RelQuery>,
 }
 
+/// One `column = encoded value` assignment of an INSERT row image or an
+/// UPDATE SET list (values are already in the attribute's storage
+/// encoding, like [`Pred::CmpImm`] literals).
+pub type SetClause = (&'static str, u64);
+
+/// A DML statement: the mutable-relation counterpart of [`Query`].
+///
+/// INSERT writes one encoded record into a free row (row-wise host
+/// write, endurance-aware placement); UPDATE and DELETE filter with the
+/// same predicate machinery queries use and then mutate the selected
+/// rows in place — DELETE clears the VALID bit (and zeroes the row's
+/// data columns, preserving the engine's all-zero-dead-row invariant),
+/// UPDATE rewrites the SET attributes.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Dml {
+    /// `insert into <rel> (cols...) values (...)`: one new record.
+    /// Unlisted attributes encode as 0.
+    Insert {
+        /// Target relation.
+        rel: RelId,
+        /// `(attribute, encoded value)` pairs, in written order.
+        values: Vec<SetClause>,
+    },
+    /// `update <rel> set a = v, ... where <pred>`: in-place rewrite of
+    /// the SET attributes on every live row the filter selects.
+    Update {
+        /// Target relation.
+        rel: RelId,
+        /// Row filter ([`Pred::True`] for an unconditional update).
+        filter: Pred,
+        /// `(attribute, encoded value)` assignments, in written order.
+        sets: Vec<SetClause>,
+    },
+    /// `delete from <rel> where <pred>`: clear VALID (and the data
+    /// columns) of every live row the filter selects.
+    Delete {
+        /// Target relation.
+        rel: RelId,
+        /// Row filter ([`Pred::True`] deletes every live row).
+        filter: Pred,
+    },
+}
+
+impl Dml {
+    /// The relation this statement mutates.
+    pub fn rel(&self) -> RelId {
+        match self {
+            Dml::Insert { rel, .. } | Dml::Update { rel, .. } | Dml::Delete { rel, .. } => *rel,
+        }
+    }
+
+    /// Statement kind keyword (`insert` / `update` / `delete`).
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Dml::Insert { .. } => "insert",
+            Dml::Update { .. } => "update",
+            Dml::Delete { .. } => "delete",
+        }
+    }
+
+    /// The statement's row filter ([`Pred::True`] for INSERT).
+    pub fn filter(&self) -> &Pred {
+        const TRUE: &Pred = &Pred::True;
+        match self {
+            Dml::Insert { .. } => TRUE,
+            Dml::Update { filter, .. } | Dml::Delete { filter, .. } => filter,
+        }
+    }
+}
+
+/// One executable PQL statement: a read-only [`Query`] or a mutating
+/// [`Dml`] (what [`crate::query::lang::parse_statements`] returns).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Statement {
+    /// A query block.
+    Query(Query),
+    /// A DML statement.
+    Dml(Dml),
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn dml_accessors() {
+        let d = Dml::Delete {
+            rel: RelId::Part,
+            filter: Pred::CmpImm {
+                attr: "p_size",
+                op: CmpOp::Eq,
+                value: 3,
+            },
+        };
+        assert_eq!(d.rel(), RelId::Part);
+        assert_eq!(d.kind_name(), "delete");
+        assert!(matches!(d.filter(), Pred::CmpImm { .. }));
+        let i = Dml::Insert {
+            rel: RelId::Supplier,
+            values: vec![("s_suppkey", 1)],
+        };
+        assert_eq!(i.kind_name(), "insert");
+        assert_eq!(*i.filter(), Pred::True);
+    }
 
     #[test]
     fn pred_eval_oracle() {

@@ -93,6 +93,28 @@ pub enum CompileError {
         /// Right attribute width in bits.
         b_bits: usize,
     },
+    /// A DML value does not fit the attribute's encoded width.
+    ValueTooWide {
+        /// The attribute being written.
+        attr: String,
+        /// Its encoded width in bits.
+        bits: usize,
+        /// The out-of-range encoded value.
+        value: u64,
+    },
+    /// A DML statement lists the same attribute twice.
+    DuplicateAttr {
+        /// The relation being mutated.
+        rel: RelId,
+        /// The repeated attribute name.
+        attr: String,
+    },
+    /// A DML statement targets a DRAM-resident relation (NATION/REGION
+    /// have no PIM copy to mutate).
+    NotPimResident {
+        /// The relation the statement named.
+        rel: RelId,
+    },
 }
 
 impl fmt::Display for CompileError {
@@ -123,6 +145,16 @@ impl fmt::Display for CompileError {
                 f,
                 "column compare widths differ: {a}({a_bits}) vs {b}({b_bits})"
             ),
+            CompileError::ValueTooWide { attr, bits, value } => write!(
+                f,
+                "value {value} does not fit {attr} ({bits} bits)"
+            ),
+            CompileError::DuplicateAttr { rel, attr } => {
+                write!(f, "{rel:?} attribute {attr} listed twice")
+            }
+            CompileError::NotPimResident { rel } => {
+                write!(f, "{rel:?} is DRAM-resident; DML mutates PIM relations only")
+            }
         }
     }
 }
@@ -843,6 +875,245 @@ impl<'a> Compiler<'a> {
     }
 }
 
+/// One field of an INSERT row image: `(first column, bits, encoded
+/// value)` in crossbar-column space.
+pub type InsertField = (usize, usize, u64);
+
+/// How a compiled DML statement executes.
+#[derive(Clone, Debug)]
+pub enum CompiledDmlOp {
+    /// Row-wise host write of one encoded record into a free row
+    /// (paper §3.1: the host writes PIM data with ordinary stores,
+    /// flushing the written lines so they reach the media).
+    Insert {
+        /// Every attribute slot's `(start, bits, value)` — unlisted
+        /// attributes write their encoded 0.
+        fields: Vec<InsertField>,
+        /// The VALID column (set to 1 on the target row).
+        valid_col: usize,
+        /// Bits one record occupies, including VALID (write volume).
+        row_bits: usize,
+    },
+    /// Column-wise filter + in-place mutation over all crossbars
+    /// (UPDATE / DELETE): the same PIM-request machinery queries use.
+    Mask {
+        /// The instruction stream (filter, then the mutation writes,
+        /// then a column transform of the mask for affected-row
+        /// read-out).
+        steps: Vec<Step>,
+        /// Column holding the filter mask (post valid-AND).
+        mask_col: usize,
+        /// Peak compute-area columns used.
+        peak_inter_cells: usize,
+        /// First compute-area column (for the post-run area clear).
+        compute_base: usize,
+        /// Whether the statement clears liveness (DELETE): the executor
+        /// releases the selected rows in the relation's free-row map.
+        deletes: bool,
+    },
+}
+
+/// Compiled program of one DML statement.
+#[derive(Clone, Debug)]
+pub struct CompiledDml {
+    /// The relation the statement mutates.
+    pub rel: RelId,
+    /// The executable form.
+    pub op: CompiledDmlOp,
+}
+
+/// Compile one DML statement against its relation layout.
+///
+/// DELETE keeps the engine's **all-zero-dead-row invariant**: besides
+/// clearing VALID, it zeroes the deleted rows' data columns (And with
+/// the negated mask), so the optimizer's zero-row abstract
+/// interpretation — which proves the valid-AND elidable for predicates
+/// that reject all-zero rows — stays sound on mutated relations.
+pub fn compile_dml(
+    dml: &Dml,
+    layout: &RelationLayout,
+    xbar_cols: usize,
+) -> Result<CompiledDml, CompileError> {
+    match dml {
+        Dml::Insert { rel, values } => {
+            let mut fields: Vec<InsertField> = Vec::with_capacity(layout.slots.len());
+            for slot in &layout.slots {
+                fields.push((slot.start, slot.attr.bits, 0));
+            }
+            for (name, value) in values {
+                let idx = layout
+                    .slots
+                    .iter()
+                    .position(|s| s.attr.name == *name)
+                    .ok_or_else(|| CompileError::NoSuchAttribute {
+                        rel: *rel,
+                        attr: name.to_string(),
+                    })?;
+                let bits = layout.slots[idx].attr.bits;
+                check_dml_value(name, bits, *value)?;
+                if values.iter().filter(|(n, _)| n == name).count() > 1 {
+                    return Err(CompileError::DuplicateAttr {
+                        rel: *rel,
+                        attr: name.to_string(),
+                    });
+                }
+                fields[idx].2 = *value;
+            }
+            Ok(CompiledDml {
+                rel: *rel,
+                op: CompiledDmlOp::Insert {
+                    fields,
+                    valid_col: layout.valid_col,
+                    row_bits: layout.row_bits,
+                },
+            })
+        }
+        Dml::Update { rel, filter, sets } => {
+            let (mut c, mask, nm) = dml_mask_program(filter, layout, xbar_cols)?;
+            for (name, value) in sets {
+                if sets.iter().filter(|(n, _)| n == name).count() > 1 {
+                    return Err(CompileError::DuplicateAttr {
+                        rel: *rel,
+                        attr: name.to_string(),
+                    });
+                }
+                let slot = c
+                    .layout
+                    .slot(name)
+                    .ok_or_else(|| CompileError::NoSuchAttribute {
+                        rel: *rel,
+                        attr: name.to_string(),
+                    })?;
+                check_dml_value(name, slot.attr.bits, *value)?;
+                // rewrite the attribute on selected rows only: runs of
+                // 1-bits OR in the mask, runs of 0-bits AND in NOT mask
+                // (non-selected and dead rows keep their value)
+                let mut b = 0;
+                while b < slot.attr.bits {
+                    let bit = (*value >> b) & 1;
+                    let mut e = b + 1;
+                    while e < slot.attr.bits && ((*value >> e) & 1) == bit {
+                        e += 1;
+                    }
+                    let r = ColRange::new(slot.start + b, e - b);
+                    let (op, m) = if bit == 1 {
+                        (Opcode::Or, mask)
+                    } else {
+                        (Opcode::And, nm)
+                    };
+                    c.emit(
+                        PimInstruction::binary(op, r, ColRange::new(m, 1), r),
+                        OpCategory::Arith,
+                    );
+                    b = e;
+                }
+            }
+            c.emit_mask_transform(mask);
+            Ok(CompiledDml {
+                rel: *rel,
+                op: CompiledDmlOp::Mask {
+                    steps: c.steps,
+                    mask_col: mask,
+                    peak_inter_cells: c.alloc.peak,
+                    compute_base: layout.compute_base,
+                    deletes: false,
+                },
+            })
+        }
+        Dml::Delete { rel, filter } => {
+            let (mut c, mask, nm) = dml_mask_program(filter, layout, xbar_cols)?;
+            // zero the deleted rows' data columns (the all-zero-dead-row
+            // invariant the loader establishes and valid-elide relies on)
+            for slot in &layout.slots {
+                let r = ColRange::new(slot.start, slot.attr.bits);
+                c.emit(
+                    PimInstruction::binary(Opcode::And, r, ColRange::new(nm, 1), r),
+                    OpCategory::Arith,
+                );
+            }
+            // clear VALID on the selected rows
+            let v = ColRange::new(layout.valid_col, 1);
+            c.emit(
+                PimInstruction::binary(Opcode::And, v, ColRange::new(nm, 1), v),
+                OpCategory::Arith,
+            );
+            c.emit_mask_transform(mask);
+            Ok(CompiledDml {
+                rel: *rel,
+                op: CompiledDmlOp::Mask {
+                    steps: c.steps,
+                    mask_col: mask,
+                    peak_inter_cells: c.alloc.peak,
+                    compute_base: layout.compute_base,
+                    deletes: true,
+                },
+            })
+        }
+    }
+}
+
+fn check_dml_value(attr: &str, bits: usize, value: u64) -> Result<(), CompileError> {
+    if bits < 64 && value >= (1u64 << bits) {
+        return Err(CompileError::ValueTooWide {
+            attr: attr.to_string(),
+            bits,
+            value,
+        });
+    }
+    Ok(())
+}
+
+/// Shared UPDATE/DELETE prologue: lower the filter into a persistent mask
+/// column, AND it with VALID (only live rows mutate), and materialize the
+/// negated mask for the keep-side writes. Returns the compiler with the
+/// prologue emitted plus the `(mask, not_mask)` columns.
+fn dml_mask_program<'a>(
+    filter: &Pred,
+    layout: &'a RelationLayout,
+    xbar_cols: usize,
+) -> Result<(Compiler<'a>, usize, usize), CompileError> {
+    let mut c = Compiler {
+        layout,
+        alloc: ColAlloc::new(layout.compute_base, xbar_cols),
+        steps: Vec::new(),
+        n_reduces: 0,
+    };
+    let mask = c.alloc.persistent(1, 0)?;
+    let mark = c.alloc.mark();
+    c.lower_pred(filter, mask, OpCategory::Filter)?;
+    c.alloc.release_to(mark);
+    c.emit(
+        PimInstruction::binary(
+            Opcode::And,
+            ColRange::new(mask, 1),
+            ColRange::new(layout.valid_col, 1),
+            ColRange::new(mask, 1),
+        ),
+        OpCategory::Filter,
+    );
+    let nm = c.alloc.persistent(1, c.steps.len())?;
+    c.emit(
+        PimInstruction::unary(Opcode::Not, ColRange::new(mask, 1), ColRange::new(nm, 1)),
+        OpCategory::Filter,
+    );
+    Ok((c, mask, nm))
+}
+
+impl Compiler<'_> {
+    /// Transform the mask column for row-oriented affected-row read-out
+    /// (the same read path filter-only queries use).
+    fn emit_mask_transform(&mut self, mask: usize) {
+        self.emit(
+            PimInstruction::unary(
+                Opcode::ColumnTransform,
+                ColRange::new(mask, 1),
+                ColRange::new(mask, 1),
+            ),
+            OpCategory::ColTransform,
+        );
+    }
+}
+
 /// Expand group_by attributes over their dictionary domains.
 fn expand_groups(rq: &RelQuery) -> Vec<GroupKey> {
     if rq.group_by.is_empty() {
@@ -1070,6 +1341,155 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn dml_delete_clears_valid_and_zeroes_data() {
+        let (cfg, l) = layouts();
+        let rl = l.rel(RelId::Supplier);
+        let d = Dml::Delete {
+            rel: RelId::Supplier,
+            filter: Pred::CmpImm {
+                attr: "s_suppkey",
+                op: CmpOp::Le,
+                value: 10,
+            },
+        };
+        let c = compile_dml(&d, rl, cfg.xbar_cols).unwrap();
+        let CompiledDmlOp::Mask {
+            steps,
+            mask_col,
+            deletes,
+            ..
+        } = &c.op
+        else {
+            panic!("delete compiles to a mask program");
+        };
+        assert!(*deletes);
+        assert!(*mask_col >= rl.compute_base);
+        // one And per attribute slot (data zeroing) + one on VALID
+        let ands_on_data = steps
+            .iter()
+            .filter(|s| {
+                s.instr.op == Opcode::And
+                    && (s.instr.dst.start as usize) < rl.valid_col
+                    && s.category == OpCategory::Arith
+            })
+            .count();
+        assert_eq!(ands_on_data, rl.slots.len());
+        assert!(steps.iter().any(|s| s.instr.op == Opcode::And
+            && s.instr.dst.start as usize == rl.valid_col));
+        // the program ends with the affected-row mask transform
+        assert_eq!(steps.last().unwrap().instr.op, Opcode::ColumnTransform);
+        // and the filter mask is ANDed with VALID before any mutation
+        let valid_and = steps
+            .iter()
+            .position(|s| {
+                s.instr.op == Opcode::And
+                    && s.instr.src_b == Some(ColRange::new(rl.valid_col, 1))
+            })
+            .expect("mask AND valid present");
+        let first_mutation = steps
+            .iter()
+            .position(|s| (s.instr.dst.start as usize) < rl.row_bits)
+            .expect("mutation writes exist");
+        assert!(valid_and < first_mutation);
+    }
+
+    #[test]
+    fn dml_update_rewrites_only_set_bit_runs() {
+        let (cfg, l) = layouts();
+        let rl = l.rel(RelId::Part);
+        // p_size = 0b001101 (13): runs are 1(2 bits at 0? -> 13 = 0b001101)
+        let d = Dml::Update {
+            rel: RelId::Part,
+            filter: Pred::True,
+            sets: vec![("p_size", 13)],
+        };
+        let c = compile_dml(&d, rl, cfg.xbar_cols).unwrap();
+        let CompiledDmlOp::Mask { steps, deletes, .. } = &c.op else {
+            panic!("update compiles to a mask program");
+        };
+        assert!(!*deletes);
+        let slot = rl.slot("p_size").unwrap();
+        // 13 = 0b001101 over 6 bits: runs [1,0,11,00] -> Or, And, Or, And
+        let writes: Vec<(Opcode, u16, u16)> = steps
+            .iter()
+            .filter(|s| {
+                let d = s.instr.dst.start as usize;
+                d >= slot.start && d < slot.start + slot.attr.bits
+            })
+            .map(|s| (s.instr.op, s.instr.dst.start, s.instr.dst.len))
+            .collect();
+        assert_eq!(
+            writes,
+            vec![
+                (Opcode::Or, slot.start as u16, 1),
+                (Opcode::And, slot.start as u16 + 1, 1),
+                (Opcode::Or, slot.start as u16 + 2, 2),
+                (Opcode::And, slot.start as u16 + 4, 2),
+            ]
+        );
+    }
+
+    #[test]
+    fn dml_insert_compiles_full_row_image() {
+        let (cfg, l) = layouts();
+        let rl = l.rel(RelId::Supplier);
+        let d = Dml::Insert {
+            rel: RelId::Supplier,
+            values: vec![("s_suppkey", 42), ("s_acctbal", 100_500)],
+        };
+        let c = compile_dml(&d, rl, cfg.xbar_cols).unwrap();
+        let CompiledDmlOp::Insert {
+            fields,
+            valid_col,
+            row_bits,
+        } = &c.op
+        else {
+            panic!("insert compiles to a row image");
+        };
+        assert_eq!(*valid_col, rl.valid_col);
+        assert_eq!(*row_bits, rl.row_bits);
+        assert_eq!(fields.len(), rl.slots.len());
+        let by_start: std::collections::BTreeMap<usize, u64> =
+            fields.iter().map(|&(s, _, v)| (s, v)).collect();
+        let key_slot = rl.slot("s_suppkey").unwrap();
+        let bal_slot = rl.slot("s_acctbal").unwrap();
+        assert_eq!(by_start[&key_slot.start], 42);
+        assert_eq!(by_start[&bal_slot.start], 100_500);
+        // unlisted attributes are zero
+        let nk = rl.slot("s_nationkey").unwrap();
+        assert_eq!(by_start[&nk.start], 0);
+    }
+
+    #[test]
+    fn dml_compile_errors_are_typed() {
+        let (cfg, l) = layouts();
+        let rl = l.rel(RelId::Supplier);
+        let bad_attr = Dml::Update {
+            rel: RelId::Supplier,
+            filter: Pred::True,
+            sets: vec![("s_nope", 1)],
+        };
+        assert!(matches!(
+            compile_dml(&bad_attr, rl, cfg.xbar_cols).unwrap_err(),
+            CompileError::NoSuchAttribute { .. }
+        ));
+        let too_wide = Dml::Insert {
+            rel: RelId::Supplier,
+            values: vec![("s_nationkey", 32)], // 5 bits
+        };
+        let err = compile_dml(&too_wide, rl, cfg.xbar_cols).unwrap_err();
+        assert!(matches!(err, CompileError::ValueTooWide { .. }));
+        assert!(err.to_string().contains("does not fit"));
+        let dup = Dml::Insert {
+            rel: RelId::Supplier,
+            values: vec![("s_nationkey", 1), ("s_nationkey", 2)],
+        };
+        let err = compile_dml(&dup, rl, cfg.xbar_cols).unwrap_err();
+        assert!(matches!(err, CompileError::DuplicateAttr { .. }));
+        assert!(err.to_string().contains("listed twice"));
     }
 
     #[test]

@@ -31,6 +31,8 @@ pub enum Tok {
     RParen,
     /// `==`
     EqEq,
+    /// `=` (UPDATE `set col = value` assignments; not a comparison).
+    Assign,
     /// `!=`
     Ne,
     /// `<`
@@ -113,10 +115,11 @@ pub fn lex(src: &str) -> Result<Vec<Token>, Diag> {
                     out.push(Token { tok: Tok::EqEq, span: Span::new(i, i + 2) });
                     i += 2;
                 } else {
-                    return Err(Diag::new(
-                        "expected '==' (single '=' is not an operator)",
-                        Span::new(i, i + 1),
-                    ));
+                    // single '=' is the UPDATE `set col = value` assignment;
+                    // the parser rejects it in comparison position with a
+                    // pointed "use '=='" diagnostic
+                    out.push(Token { tok: Tok::Assign, span: Span::new(i, i + 1) });
+                    i += 1;
                 }
             }
             b'!' => {
@@ -326,11 +329,24 @@ mod tests {
 
     #[test]
     fn errors_carry_spans() {
-        let e = lex("a = 5").unwrap_err();
-        assert_eq!(e.span.start, 2);
         assert!(lex("\"open").is_err());
         assert!(lex("a $ b").is_err());
         assert!(lex("99999999999999999999").is_err());
+    }
+
+    #[test]
+    fn single_equals_lexes_as_assign() {
+        // '=' is the UPDATE assignment token (the parser rejects it in
+        // comparison position with a pointed diagnostic)
+        assert_eq!(
+            kinds("set l_tax = 5"),
+            vec![
+                Tok::Ident("set".into()),
+                Tok::Ident("l_tax".into()),
+                Tok::Assign,
+                Tok::Int(5),
+            ]
+        );
     }
 
     #[test]

@@ -9,22 +9,112 @@
 //! produce span-carrying [`Diag`]s pointing at the offending token.
 
 use crate::db::schema::{self, Attr, Encoding, RelId};
-use crate::query::ast::{Aggregate, AggKind, Pred, Query, QueryKind, RelQuery, ValExpr};
+use crate::query::ast::{
+    Aggregate, AggKind, Dml, Pred, Query, QueryKind, RelQuery, Statement, ValExpr,
+};
 
 use super::parser::{
-    SAgg, SCmpRhs, SIdent, SPipeline, SPred, SProgram, SQueryBlock, SScalar, SScalarKind,
-    SValFactor,
+    SAgg, SCmpRhs, SDml, SIdent, SPipeline, SPred, SProgram, SQueryBlock, SScalar,
+    SScalarKind, SStatement, SValFactor,
 };
 use super::{Diag, Span};
 
-/// Lower a parsed program to executable queries.
+/// Lower a parsed program to executable queries. DML statements are a
+/// spanned error here — query-only callers ([`super::parse_program`])
+/// cannot execute them; use [`lower_statements`] for the mixed form.
 pub fn lower_program(prog: &SProgram) -> Result<Vec<Query>, Diag> {
-    let single = prog.blocks.len() == 1;
-    prog.blocks
+    let single = prog.stmts.len() == 1;
+    prog.stmts
         .iter()
         .enumerate()
-        .map(|(i, b)| lower_block(b, i, single))
+        .map(|(i, s)| match s {
+            SStatement::Block(b) => lower_block(b, i, single),
+            SStatement::Dml(d) => Err(Diag::new(
+                "DML statement in a query-only context (INSERT/UPDATE/\
+                 DELETE execute via execute_dml / run --sql)",
+                dml_table(d).span,
+            )),
+        })
         .collect()
+}
+
+/// Lower a parsed program to executable statements (queries and DML,
+/// in source order).
+pub fn lower_statements(prog: &SProgram) -> Result<Vec<Statement>, Diag> {
+    let single = prog.stmts.len() == 1;
+    prog.stmts
+        .iter()
+        .enumerate()
+        .map(|(i, s)| match s {
+            SStatement::Block(b) => Ok(Statement::Query(lower_block(b, i, single)?)),
+            SStatement::Dml(d) => Ok(Statement::Dml(lower_dml(d)?)),
+        })
+        .collect()
+}
+
+fn dml_table(d: &SDml) -> &SIdent {
+    match d {
+        SDml::Insert { table, .. } | SDml::Update { table, .. } | SDml::Delete { table, .. } => {
+            table
+        }
+    }
+}
+
+fn lower_dml(d: &SDml) -> Result<Dml, Diag> {
+    match d {
+        SDml::Insert { table, columns, values } => {
+            let rel = resolve_rel(table)?;
+            if columns.len() != values.len() {
+                return Err(Diag::new(
+                    format!(
+                        "insert lists {} columns but {} values",
+                        columns.len(),
+                        values.len()
+                    ),
+                    table.span,
+                ));
+            }
+            let mut out = Vec::new();
+            for (c, v) in columns.iter().zip(values) {
+                let a = resolve_attr(rel, c)?;
+                if out.iter().any(|(n, _)| *n == a.name) {
+                    return Err(Diag::new(
+                        format!("duplicate insert column '{}'", a.name),
+                        c.span,
+                    ));
+                }
+                out.push((a.name, encode_scalar(a, v)?));
+            }
+            Ok(Dml::Insert { rel, values: out })
+        }
+        SDml::Update { table, sets, filter } => {
+            let rel = resolve_rel(table)?;
+            let mut lowered = Vec::new();
+            for (c, v) in sets {
+                let a = resolve_attr(rel, c)?;
+                if lowered.iter().any(|(n, _)| *n == a.name) {
+                    return Err(Diag::new(
+                        format!("duplicate set column '{}'", a.name),
+                        c.span,
+                    ));
+                }
+                lowered.push((a.name, encode_scalar(a, v)?));
+            }
+            let filter = match filter {
+                Some(p) => lower_pred(rel, p)?,
+                None => Pred::True,
+            };
+            Ok(Dml::Update { rel, filter, sets: lowered })
+        }
+        SDml::Delete { table, filter } => {
+            let rel = resolve_rel(table)?;
+            let filter = match filter {
+                Some(p) => lower_pred(rel, p)?,
+                None => Pred::True,
+            };
+            Ok(Dml::Delete { rel, filter })
+        }
+    }
 }
 
 /// Intern a string as `&'static str` (the AST keeps static names). The
@@ -783,6 +873,83 @@ mod tests {
         assert_eq!(q[0].name, "mine");
         assert_eq!(q[0].rels[0].filter, Pred::True);
         assert_eq!(q[0].rels[0].aggregates[0].label, "avg_s_acctbal");
+    }
+
+    #[test]
+    fn dml_lowering_encodes_and_validates() {
+        use crate::query::lang::{parse_dml, parse_statements};
+        use crate::query::ast::{Dml, Statement};
+        let d = parse_dml(
+            "update customer set c_acctbal = -1.00 where c_mktsegment == \"BUILDING\"",
+        )
+        .unwrap();
+        assert_eq!(
+            d,
+            Dml::Update {
+                rel: RelId::Customer,
+                filter: Pred::CmpImm {
+                    attr: "c_mktsegment",
+                    op: CmpOp::Eq,
+                    value: 1,
+                },
+                sets: vec![("c_acctbal", 99_900)],
+            }
+        );
+        let d = parse_dml("delete from lineitem where l_shipdate < date(1993-01-01)")
+            .unwrap();
+        assert_eq!(
+            d,
+            Dml::Delete {
+                rel: RelId::Lineitem,
+                filter: Pred::CmpImm {
+                    attr: "l_shipdate",
+                    op: CmpOp::Lt,
+                    value: schema::date(1993, 1, 1),
+                },
+            }
+        );
+        // dictionary words encode in INSERT values; missing where is True
+        let d = parse_dml("insert into part (p_partkey, p_brand) values (5, \"Brand#23\")")
+            .unwrap();
+        assert_eq!(
+            d,
+            Dml::Insert {
+                rel: RelId::Part,
+                values: vec![("p_partkey", 5), ("p_brand", schema::brand_id("Brand#23"))],
+            }
+        );
+        let d = parse_dml("delete from orders").unwrap();
+        assert_eq!(d, Dml::Delete { rel: RelId::Orders, filter: Pred::True });
+        // mixed programs preserve source order
+        let stmts = parse_statements(
+            "delete from part where p_size == 1; from part | filter true",
+        )
+        .unwrap();
+        assert!(matches!(&stmts[0], Statement::Dml(_)));
+        assert!(matches!(&stmts[1], Statement::Query(_)));
+    }
+
+    #[test]
+    fn dml_lowering_errors() {
+        use crate::query::lang::parse_dml;
+        let e = parse_dml("insert into part (p_partkey) values (1, 2)").unwrap_err();
+        assert!(e.msg.contains("columns but"), "{}", e.msg);
+        let e = parse_dml("insert into part (p_partkey, p_partkey) values (1, 2)")
+            .unwrap_err();
+        assert!(e.msg.contains("duplicate insert column"), "{}", e.msg);
+        let e = parse_dml("update part set p_size = 1, p_size = 2").unwrap_err();
+        assert!(e.msg.contains("duplicate set column"), "{}", e.msg);
+        let e = parse_dml("update nation set n_regionkey = 1").unwrap_err();
+        assert!(e.msg.contains("DRAM-resident"), "{}", e.msg);
+        let e = parse_dml("update part set p_size = 99").unwrap_err();
+        assert!(e.msg.contains("does not fit"), "{}", e.msg);
+        let e = parse_dml("delete from part; delete from part").unwrap_err();
+        assert!(e.msg.contains("exactly one"), "{}", e.msg);
+        let e = parse_dml("from part | filter true").unwrap_err();
+        assert!(e.msg.contains("got a query"), "{}", e.msg);
+        // query-only contexts reject DML with a spanned diagnostic
+        let e = parse_program("delete from part").unwrap_err();
+        assert!(e.msg.contains("query-only context"), "{}", e.msg);
     }
 
     #[test]

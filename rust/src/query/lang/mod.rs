@@ -13,7 +13,13 @@
 //! # Grammar
 //!
 //! ```text
-//! program     := block (';' block)*
+//! program     := statement (';' statement)*
+//! statement   := block | insert | update | delete
+//! insert      := 'insert' 'into' TABLE '(' column (',' column)* ')'
+//!                'values' '(' scalar (',' scalar)* ')'
+//! update      := 'update' TABLE 'set' column '=' scalar
+//!                (',' column '=' scalar)* ('where' pred)?
+//! delete      := 'delete' 'from' TABLE ('where' pred)?
 //! block       := ('query' NAME)? pipeline+
 //! pipeline    := 'from' TABLE stage*
 //! stage       := '|' ( 'filter' pred
@@ -104,7 +110,7 @@ pub mod lower;
 pub mod parser;
 pub mod print;
 
-use crate::query::ast::{Query, RelQuery};
+use crate::query::ast::{Dml, Query, RelQuery, Statement};
 
 /// A byte range in the source text.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -183,10 +189,50 @@ impl Diag {
 /// Parse a PQL source text into executable queries.
 ///
 /// Each `query` block becomes one [`Query`]; a headerless single block is
-/// named `adhoc`. The first error aborts the parse — render it with
-/// [`Diag::render`] for a caret-annotated message.
+/// named `adhoc`. DML statements are rejected with a spanned diagnostic
+/// (use [`parse_statements`] for the mixed form). The first error aborts
+/// the parse — render it with [`Diag::render`] for a caret-annotated
+/// message.
 pub fn parse_program(src: &str) -> Result<Vec<Query>, Diag> {
     lower::lower_program(&parser::parse(src)?)
+}
+
+/// Parse a PQL source text into executable statements: `query` blocks
+/// *and* DML statements (`insert into` / `update ... set` /
+/// `delete from`), in source order.
+///
+/// ```
+/// use pimdb::query::ast::{Dml, Statement};
+/// use pimdb::query::lang::parse_statements;
+///
+/// let stmts = parse_statements(
+///     "delete from lineitem where l_quantity < 2;
+///      from lineitem | filter true | aggregate count() as n",
+/// ).unwrap();
+/// assert!(matches!(&stmts[0], Statement::Dml(Dml::Delete { .. })));
+/// assert!(matches!(&stmts[1], Statement::Query(_)));
+/// ```
+pub fn parse_statements(src: &str) -> Result<Vec<Statement>, Diag> {
+    lower::lower_statements(&parser::parse(src)?)
+}
+
+/// Parse a source text that must contain exactly one DML statement,
+/// returning it (convenience for `execute_dml`-style callers).
+pub fn parse_dml(src: &str) -> Result<Dml, Diag> {
+    let mut stmts = parse_statements(src)?;
+    if stmts.len() != 1 {
+        return Err(Diag::new(
+            format!("expected exactly one DML statement, got {}", stmts.len()),
+            Span::new(0, src.len()),
+        ));
+    }
+    match stmts.pop().expect("length checked above") {
+        Statement::Dml(d) => Ok(d),
+        Statement::Query(_) => Err(Diag::new(
+            "expected a DML statement (insert/update/delete), got a query",
+            Span::new(0, src.len()),
+        )),
+    }
 }
 
 /// Parse a source text that must contain exactly one single-relation

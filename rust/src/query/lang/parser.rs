@@ -173,11 +173,61 @@ pub struct SQueryBlock {
     pub pipelines: Vec<SPipeline>,
 }
 
-/// A whole source text: one or more query blocks.
+/// An unresolved DML statement (INSERT / UPDATE / DELETE).
+#[derive(Clone, Debug, PartialEq)]
+pub enum SDml {
+    /// `insert into <table> (col, ...) values (scalar, ...)`
+    Insert {
+        /// Target table.
+        table: SIdent,
+        /// Column list, parallel to `values`.
+        columns: Vec<SIdent>,
+        /// Value list, parallel to `columns`.
+        values: Vec<SScalar>,
+    },
+    /// `update <table> set col = scalar, ... [where pred]`
+    Update {
+        /// Target table.
+        table: SIdent,
+        /// `col = scalar` assignments in written order.
+        sets: Vec<(SIdent, SScalar)>,
+        /// The `where` predicate, when present.
+        filter: Option<SPred>,
+    },
+    /// `delete from <table> [where pred]`
+    Delete {
+        /// Target table.
+        table: SIdent,
+        /// The `where` predicate, when present.
+        filter: Option<SPred>,
+    },
+}
+
+/// One parsed statement: a query block or a DML statement.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SStatement {
+    /// A `from ...` query block (optionally `query NAME`-headed).
+    Block(SQueryBlock),
+    /// An INSERT / UPDATE / DELETE statement.
+    Dml(SDml),
+}
+
+/// A whole source text: one or more statements.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SProgram {
-    /// The blocks in source order.
-    pub blocks: Vec<SQueryBlock>,
+    /// The statements in source order.
+    pub stmts: Vec<SStatement>,
+}
+
+impl SProgram {
+    /// The `i`-th statement as a query block (test/convenience accessor;
+    /// panics when it is a DML statement).
+    pub fn block(&self, i: usize) -> &SQueryBlock {
+        match &self.stmts[i] {
+            SStatement::Block(b) => b,
+            SStatement::Dml(d) => panic!("statement {i} is DML: {d:?}"),
+        }
+    }
 }
 
 /// Parse a full source text into its surface AST.
@@ -300,19 +350,74 @@ impl Parser {
     // --- grammar ----------------------------------------------------------
 
     fn program(&mut self) -> Result<SProgram, Diag> {
-        let mut blocks = Vec::new();
+        let mut stmts = Vec::new();
         while self.eat_tok(&Tok::Semi) {}
         while self.peek().is_some() {
-            blocks.push(self.query_block()?);
+            if self.at_kw("insert") || self.at_kw("update") || self.at_kw("delete") {
+                stmts.push(SStatement::Dml(self.dml()?));
+            } else {
+                stmts.push(SStatement::Block(self.query_block()?));
+            }
             while self.eat_tok(&Tok::Semi) {}
         }
-        if blocks.is_empty() {
+        if stmts.is_empty() {
             return Err(Diag::new(
-                "empty input: expected 'from <table> | ...'",
+                "empty input: expected 'from <table> | ...', 'insert', \
+                 'update' or 'delete'",
                 Span::new(self.eof, self.eof),
             ));
         }
-        Ok(SProgram { blocks })
+        Ok(SProgram { stmts })
+    }
+
+    /// One DML statement (the leading keyword is still unconsumed).
+    fn dml(&mut self) -> Result<SDml, Diag> {
+        if self.eat_kw("insert") {
+            self.expect_kw("into")?;
+            let table = self.ident("a table name after 'insert into'")?;
+            self.expect_tok(&Tok::LParen, "'(' opening the column list")?;
+            let mut columns = vec![self.ident("a column name")?];
+            while self.eat_tok(&Tok::Comma) {
+                columns.push(self.ident("a column name")?);
+            }
+            self.expect_tok(&Tok::RParen, "')' closing the column list")?;
+            self.expect_kw("values")?;
+            self.expect_tok(&Tok::LParen, "'(' opening the value list")?;
+            let mut values = vec![self.scalar()?];
+            while self.eat_tok(&Tok::Comma) {
+                values.push(self.scalar()?);
+            }
+            self.expect_tok(&Tok::RParen, "')' closing the value list")?;
+            return Ok(SDml::Insert { table, columns, values });
+        }
+        if self.eat_kw("update") {
+            let table = self.ident("a table name after 'update'")?;
+            self.expect_kw("set")?;
+            let mut sets = Vec::new();
+            loop {
+                let col = self.ident("a column name in 'set'")?;
+                self.expect_tok(&Tok::Assign, "'=' in the assignment")?;
+                sets.push((col, self.scalar()?));
+                if !self.eat_tok(&Tok::Comma) {
+                    break;
+                }
+            }
+            let filter = if self.eat_kw("where") {
+                Some(self.pred()?)
+            } else {
+                None
+            };
+            return Ok(SDml::Update { table, sets, filter });
+        }
+        self.expect_kw("delete")?;
+        self.expect_kw("from")?;
+        let table = self.ident("a table name after 'delete from'")?;
+        let filter = if self.eat_kw("where") {
+            Some(self.pred()?)
+        } else {
+            None
+        };
+        Ok(SDml::Delete { table, filter })
     }
 
     fn query_block(&mut self) -> Result<SQueryBlock, Diag> {
@@ -531,6 +636,12 @@ impl Parser {
             Some(Tok::Le) => CmpOp::Le,
             Some(Tok::Gt) => CmpOp::Gt,
             Some(Tok::Ge) => CmpOp::Ge,
+            Some(Tok::Assign) => {
+                return self.err(
+                    "'=' is the UPDATE assignment operator; comparisons \
+                     are written '=='",
+                )
+            }
             _ => {
                 return self.err(
                     "expected a comparison ('==', '!=', '<', '<=', '>', '>='), \
@@ -656,8 +767,8 @@ mod tests {
     #[test]
     fn parses_single_pipeline() {
         let p = parse("from lineitem | filter l_quantity < 24").unwrap();
-        assert_eq!(p.blocks.len(), 1);
-        let pl = &p.blocks[0].pipelines[0];
+        assert_eq!(p.stmts.len(), 1);
+        let pl = &p.block(0).pipelines[0];
         assert_eq!(pl.table.name, "lineitem");
         assert_eq!(pl.filters.len(), 1);
         match &pl.filters[0] {
@@ -679,7 +790,7 @@ mod tests {
             "from lineitem | filter (a >= 1 and a < 2) and b between 5..7 and c < 24",
         )
         .unwrap();
-        match &p.blocks[0].pipelines[0].filters[0] {
+        match &p.block(0).pipelines[0].filters[0] {
             SPred::And(parts) => {
                 assert_eq!(parts.len(), 3);
                 assert!(matches!(&parts[0], SPred::And(inner) if inner.len() == 2));
@@ -693,7 +804,7 @@ mod tests {
     fn or_of_ands() {
         let p = parse("from part | filter (a == 1 and b == 2) or (a == 3 and b == 4)")
             .unwrap();
-        match &p.blocks[0].pipelines[0].filters[0] {
+        match &p.block(0).pipelines[0].filters[0] {
             SPred::Or(parts) => {
                 assert_eq!(parts.len(), 2);
                 assert!(parts.iter().all(|q| matches!(q, SPred::And(_))));
@@ -705,7 +816,7 @@ mod tests {
     #[test]
     fn column_column_comparison() {
         let p = parse("from lineitem | filter l_commitdate < l_receiptdate").unwrap();
-        match &p.blocks[0].pipelines[0].filters[0] {
+        match &p.block(0).pipelines[0].filters[0] {
             SPred::Cmp { rhs: SCmpRhs::Column(c), .. } => {
                 assert_eq!(c.name, "l_receiptdate")
             }
@@ -720,8 +831,8 @@ mod tests {
              from supplier | filter s_nationkey in region(\"EUROPE\")",
         )
         .unwrap();
-        assert_eq!(p.blocks[0].pipelines.len(), 2);
-        match &p.blocks[0].pipelines[0].filters[0] {
+        assert_eq!(p.block(0).pipelines.len(), 2);
+        match &p.block(0).pipelines[0].filters[0] {
             SPred::Cmp { rhs: SCmpRhs::Scalar(s), .. } => {
                 assert_eq!(s.adjust, -90);
                 assert!(matches!(s.kind, SScalarKind::Date { y: 1998, m: 12, d: 1 }));
@@ -729,7 +840,7 @@ mod tests {
             other => panic!("unexpected {other:?}"),
         }
         assert!(matches!(
-            &p.blocks[0].pipelines[1].filters[0],
+            &p.block(0).pipelines[1].filters[0],
             SPred::InRegion { .. }
         ));
     }
@@ -741,7 +852,7 @@ mod tests {
              | aggregate sum(l_extendedprice * (100 - l_discount)) as disc, count() as n",
         )
         .unwrap();
-        let b = &p.blocks[0];
+        let b = &p.block(0);
         assert_eq!(b.name.as_ref().unwrap().name, "Q1");
         let pl = &b.pipelines[0];
         assert_eq!(pl.group_by.len(), 2);
@@ -761,8 +872,55 @@ mod tests {
     fn multiple_blocks_and_semicolons() {
         let p = parse("query A from part | filter true; query B from orders | filter true")
             .unwrap();
-        assert_eq!(p.blocks.len(), 2);
-        assert_eq!(p.blocks[1].name.as_ref().unwrap().name, "B");
+        assert_eq!(p.stmts.len(), 2);
+        assert_eq!(p.block(1).name.as_ref().unwrap().name, "B");
+    }
+
+    #[test]
+    fn parses_dml_statements() {
+        let p = parse("insert into supplier (s_suppkey, s_acctbal) values (7, -1.50)")
+            .unwrap();
+        match &p.stmts[0] {
+            SStatement::Dml(SDml::Insert { table, columns, values }) => {
+                assert_eq!(table.name, "supplier");
+                assert_eq!(columns.len(), 2);
+                assert_eq!(columns[1].name, "s_acctbal");
+                assert!(values[1].neg);
+                assert_eq!(values[1].kind, SScalarKind::Decimal(150));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let p = parse(
+            "update lineitem set l_tax = 0, l_discount = 5 where l_quantity < 10",
+        )
+        .unwrap();
+        match &p.stmts[0] {
+            SStatement::Dml(SDml::Update { sets, filter, .. }) => {
+                assert_eq!(sets.len(), 2);
+                assert_eq!(sets[0].0.name, "l_tax");
+                assert!(matches!(filter, Some(SPred::Cmp { .. })));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // DELETE without a where clause, and mixed DML + query programs
+        let p = parse("delete from orders; from part | filter true").unwrap();
+        assert!(matches!(
+            &p.stmts[0],
+            SStatement::Dml(SDml::Delete { filter: None, .. })
+        ));
+        assert!(matches!(&p.stmts[1], SStatement::Block(_)));
+    }
+
+    #[test]
+    fn dml_parse_errors_are_pointed() {
+        assert!(parse("insert into supplier s_suppkey values (1)").is_err());
+        assert!(parse("insert into supplier (s_suppkey) values ()").is_err());
+        assert!(parse("update supplier set = 5").is_err());
+        assert!(parse("update supplier where s_suppkey == 1").is_err());
+        assert!(parse("delete supplier").is_err());
+        // '=' in comparison position points at '=='
+        let e = parse("from supplier | filter s_suppkey = 5").unwrap_err();
+        assert!(e.msg.contains("'=='"), "{}", e.msg);
     }
 
     #[test]
@@ -779,7 +937,7 @@ mod tests {
     #[test]
     fn negative_scalars() {
         let p = parse("from supplier | filter s_acctbal > -100.50").unwrap();
-        match &p.blocks[0].pipelines[0].filters[0] {
+        match &p.block(0).pipelines[0].filters[0] {
             SPred::Cmp { rhs: SCmpRhs::Scalar(s), .. } => {
                 assert!(s.neg);
                 assert_eq!(s.kind, SScalarKind::Decimal(10050));

@@ -10,7 +10,7 @@
 //! form; they render as `not true`, which is equivalent but not
 //! node-identical.
 
-use crate::query::ast::{AggKind, Aggregate, CmpOp, Pred, Query, RelQuery, ValExpr};
+use crate::query::ast::{AggKind, Aggregate, CmpOp, Dml, Pred, Query, RelQuery, ValExpr};
 
 /// Render a full query block (`query NAME` header plus its pipelines).
 pub fn query_to_pql(q: &Query) -> String {
@@ -37,6 +37,45 @@ pub fn rel_query_to_pql(rq: &RelQuery) -> String {
         out.push_str(&aggs.join(", "));
     }
     out
+}
+
+/// Render a DML statement (`parse(print(d))` reproduces `d` node-for-node;
+/// values print as raw encoded integers, and a [`Pred::True`] filter
+/// prints as an explicit `where true`).
+///
+/// Like empty IN-sets on the query side, an INSERT with no values or an
+/// UPDATE with no assignments (constructible from the AST, where they
+/// mean an all-zero row / a pure row-count statement) has no textual
+/// form — the grammar requires at least one column and one assignment —
+/// so those two shapes do not round-trip.
+pub fn dml_to_pql(d: &Dml) -> String {
+    match d {
+        Dml::Insert { rel, values } => {
+            let cols: Vec<&str> = values.iter().map(|(n, _)| *n).collect();
+            let vals: Vec<String> = values.iter().map(|(_, v)| v.to_string()).collect();
+            format!(
+                "insert into {} ({}) values ({})",
+                rel.name().to_ascii_lowercase(),
+                cols.join(", "),
+                vals.join(", ")
+            )
+        }
+        Dml::Update { rel, filter, sets } => {
+            let assigns: Vec<String> =
+                sets.iter().map(|(n, v)| format!("{n} = {v}")).collect();
+            format!(
+                "update {} set {} where {}",
+                rel.name().to_ascii_lowercase(),
+                assigns.join(", "),
+                pred_to_pql(filter)
+            )
+        }
+        Dml::Delete { rel, filter } => format!(
+            "delete from {} where {}",
+            rel.name().to_ascii_lowercase(),
+            pred_to_pql(filter)
+        ),
+    }
 }
 
 /// Render a predicate tree with raw encoded values.
@@ -159,6 +198,45 @@ mod tests {
         let text = rel_query_to_pql(&rq);
         assert!(text.contains("count() as n"), "{text}");
         roundtrip(&rq);
+    }
+
+    #[test]
+    fn dml_statements_roundtrip_through_text() {
+        use crate::query::lang::parse_dml;
+        let cases = vec![
+            Dml::Insert {
+                rel: RelId::Supplier,
+                values: vec![("s_suppkey", 7777), ("s_nationkey", 3), ("s_acctbal", 100_500)],
+            },
+            Dml::Update {
+                rel: RelId::Lineitem,
+                filter: Pred::And(vec![
+                    Pred::CmpImm { attr: "l_quantity", op: CmpOp::Lt, value: 5 },
+                    Pred::Between { attr: "l_discount", lo: 2, hi: 9 },
+                ]),
+                sets: vec![("l_tax", 0), ("l_discount", 4)],
+            },
+            Dml::Update {
+                rel: RelId::Part,
+                filter: Pred::True,
+                sets: vec![("p_size", 9)],
+            },
+            Dml::Delete {
+                rel: RelId::Orders,
+                filter: Pred::CmpImm {
+                    attr: "o_orderstatus",
+                    op: CmpOp::Eq,
+                    value: 2,
+                },
+            },
+            Dml::Delete { rel: RelId::Customer, filter: Pred::True },
+        ];
+        for d in cases {
+            let text = dml_to_pql(&d);
+            let back = parse_dml(&text)
+                .unwrap_or_else(|e| panic!("re-parse of '{text}' failed: {}", e.msg));
+            assert_eq!(back, d, "text was: {text}");
+        }
     }
 
     #[test]

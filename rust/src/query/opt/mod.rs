@@ -259,6 +259,61 @@ pub fn explain_query(
     Ok(s)
 }
 
+/// `pimdb run --explain` for DML: render the compiled statement — the
+/// row-write image for INSERT, the filter + mutation instruction stream
+/// for UPDATE/DELETE. DML programs bypass the pass pipeline (they are
+/// straight-line filter + write streams with nothing to elide), so there
+/// is no before/after split.
+pub fn explain_dml(
+    d: &crate::query::ast::Dml,
+    layout: &crate::db::layout::DbLayout,
+    xbar_cols: usize,
+    xbar_rows: usize,
+) -> Result<String, crate::query::compiler::CompileError> {
+    use super::compiler::{compile_dml, CompiledDmlOp};
+    use std::fmt::Write;
+    let mut s = String::new();
+    let c = compile_dml(d, layout.rel(d.rel()), xbar_cols)?;
+    writeln!(s, "== explain {} on {} ==", d.kind_name(), d.rel().name()).unwrap();
+    match &c.op {
+        CompiledDmlOp::Insert {
+            fields,
+            valid_col,
+            row_bits,
+        } => {
+            writeln!(
+                s,
+                "-- row-wise host write: {row_bits} bits incl. VALID c{valid_col} \
+                 (endurance-aware free-row placement) --"
+            )
+            .unwrap();
+            for &(start, bits, value) in fields {
+                writeln!(s, "  write [c{start}+{bits}] <- {value}").unwrap();
+            }
+        }
+        CompiledDmlOp::Mask {
+            steps,
+            mask_col,
+            peak_inter_cells,
+            deletes,
+            ..
+        } => {
+            writeln!(
+                s,
+                "-- column-wise {} program ({} steps, {} cycles, {} inter cells, mask c{}) --",
+                if *deletes { "delete" } else { "update" },
+                steps.len(),
+                program_cycles(steps, xbar_rows),
+                peak_inter_cells,
+                mask_col
+            )
+            .unwrap();
+            s.push_str(&disasm(steps));
+        }
+    }
+    Ok(s)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -347,6 +402,43 @@ mod tests {
         // reduces are never touched: output geometry intact
         assert_eq!(o.n_reduces, c.n_reduces);
         assert_eq!(o.groups, c.groups);
+    }
+
+    #[test]
+    fn explain_dml_renders_every_statement_kind() {
+        use crate::db::schema::RelId;
+        use crate::query::ast::{CmpOp, Dml, Pred};
+        let cfg = SystemConfig::default();
+        let layout = DbLayout::build(&cfg, &|r| r.records_at_sf(0.01)).unwrap();
+        let del = Dml::Delete {
+            rel: RelId::Supplier,
+            filter: Pred::CmpImm {
+                attr: "s_suppkey",
+                op: CmpOp::Lt,
+                value: 5,
+            },
+        };
+        let text = explain_dml(&del, &layout, cfg.xbar_cols, cfg.xbar_rows).unwrap();
+        assert!(text.contains("explain delete on SUPPLIER"), "{text}");
+        assert!(text.contains("column-wise delete program"), "{text}");
+        assert!(text.contains("lt_imm"), "{text}");
+        assert!(text.contains("column_transform"), "{text}");
+
+        let upd = Dml::Update {
+            rel: RelId::Supplier,
+            filter: Pred::True,
+            sets: vec![("s_nationkey", 3)],
+        };
+        let text = explain_dml(&upd, &layout, cfg.xbar_cols, cfg.xbar_rows).unwrap();
+        assert!(text.contains("column-wise update program"), "{text}");
+
+        let ins = Dml::Insert {
+            rel: RelId::Supplier,
+            values: vec![("s_suppkey", 42)],
+        };
+        let text = explain_dml(&ins, &layout, cfg.xbar_cols, cfg.xbar_rows).unwrap();
+        assert!(text.contains("row-wise host write"), "{text}");
+        assert!(text.contains("<- 42"), "{text}");
     }
 
     #[test]

@@ -1,0 +1,407 @@
+//! Differential DML suite: random interleavings of INSERT/UPDATE/DELETE
+//! and queries execute on three independent implementations —
+//!
+//!  * the PIM engine (`api::Pimdb`: valid-bit masking in the arrays,
+//!    endurance-aware free-row allocation, wear accounting),
+//!  * the host column-store baseline (`baseline::apply_dml` +
+//!    `baseline::run_query` over the mutated store), and
+//!  * a `Vec`-backed scalar oracle held by the test —
+//!
+//! and every functional output must be bit-identical: rows affected,
+//! selected counts, aggregate values, group contents. Per-row wear
+//! counters must be monotonically nondecreasing across the interleaving.
+
+use std::collections::BTreeMap;
+
+use pimdb::api::{Pimdb, QuerySource};
+use pimdb::config::SystemConfig;
+use pimdb::db::dbgen::Database;
+use pimdb::db::schema::{self, RelId};
+use pimdb::exec::baseline;
+use pimdb::query::ast::{
+    AggKind, Aggregate, CmpOp, Dml, Pred, Query, QueryKind, RelQuery, ValExpr,
+};
+use pimdb::query::tpch;
+use pimdb::util::proptest::check;
+
+/// One oracle row: attribute name → encoded value.
+type Row = BTreeMap<&'static str, u64>;
+
+fn oracle_rows(db: &Database, rel: RelId) -> Vec<Row> {
+    let r = db.rel(rel);
+    (0..r.records)
+        .filter(|&i| r.live(i))
+        .map(|i| {
+            schema::attrs(rel)
+                .iter()
+                .map(|a| (a.name, r.col(a.name)[i]))
+                .collect()
+        })
+        .collect()
+}
+
+fn oracle_apply(rows: &mut Vec<Row>, rel: RelId, dml: &Dml) -> u64 {
+    match dml {
+        Dml::Insert { values, .. } => {
+            let mut row: Row = schema::attrs(rel).iter().map(|a| (a.name, 0)).collect();
+            for (n, v) in values {
+                row.insert(n, *v);
+            }
+            rows.push(row);
+            1
+        }
+        Dml::Update { filter, sets, .. } => {
+            let mut n = 0;
+            for row in rows.iter_mut() {
+                if filter.eval(&|a: &str| *row.get(a).unwrap_or(&0)) {
+                    for (name, v) in sets {
+                        row.insert(name, *v);
+                    }
+                    n += 1;
+                }
+            }
+            n
+        }
+        Dml::Delete { filter, .. } => {
+            let before = rows.len();
+            rows.retain(|row| !filter.eval(&|a: &str| *row.get(a).unwrap_or(&0)));
+            (before - rows.len()) as u64
+        }
+    }
+}
+
+/// SUPPLIER attribute pool for randomized statements.
+const SUPP_ATTRS: [(&str, usize); 5] = [
+    ("s_suppkey", 24),
+    ("s_nationkey", 5),
+    ("s_phone_cc", 6),
+    ("s_phone_rest", 36),
+    ("s_acctbal", 21),
+];
+
+fn rand_value(g: &mut pimdb::util::proptest::Gen, bits: usize) -> u64 {
+    // mix small values (likely to collide with data) and full-width ones
+    if g.bool() {
+        g.u64(0, 40.min((1u64 << bits) - 1))
+    } else {
+        g.u64(0, (1u64 << bits) - 1)
+    }
+}
+
+fn rand_pred(g: &mut pimdb::util::proptest::Gen) -> Pred {
+    let (attr, bits) = *g.pick(&SUPP_ATTRS);
+    let op = *g.pick(&[CmpOp::Eq, CmpOp::Ne, CmpOp::Lt, CmpOp::Le, CmpOp::Gt, CmpOp::Ge]);
+    let base = Pred::CmpImm {
+        attr,
+        op,
+        value: rand_value(g, bits),
+    };
+    match g.usize(0, 3) {
+        0 => base,
+        1 => {
+            let (a2, b2) = *g.pick(&SUPP_ATTRS);
+            Pred::And(vec![
+                base,
+                Pred::CmpImm {
+                    attr: a2,
+                    op: CmpOp::Ge,
+                    value: rand_value(g, b2),
+                },
+            ])
+        }
+        2 => Pred::Not(Box::new(base)),
+        _ => Pred::True,
+    }
+}
+
+fn rand_dml(g: &mut pimdb::util::proptest::Gen) -> Dml {
+    match g.usize(0, 2) {
+        0 => Dml::Insert {
+            rel: RelId::Supplier,
+            values: SUPP_ATTRS
+                .iter()
+                .map(|&(a, bits)| (a, rand_value(g, bits)))
+                .collect(),
+        },
+        1 => {
+            let (attr, bits) = *g.pick(&SUPP_ATTRS);
+            Dml::Update {
+                rel: RelId::Supplier,
+                filter: rand_pred(g),
+                sets: vec![(attr, rand_value(g, bits))],
+            }
+        }
+        _ => Dml::Delete {
+            rel: RelId::Supplier,
+            filter: rand_pred(g),
+        },
+    }
+}
+
+fn supplier_query(filter: Pred) -> Query {
+    Query {
+        name: "dmlq",
+        kind: QueryKind::Full,
+        rels: vec![RelQuery {
+            rel: RelId::Supplier,
+            filter,
+            group_by: vec![],
+            aggregates: vec![
+                Aggregate {
+                    kind: AggKind::Count,
+                    expr: ValExpr::One,
+                    label: "n",
+                },
+                Aggregate {
+                    kind: AggKind::Sum,
+                    expr: ValExpr::Attr("s_acctbal"),
+                    label: "sum_bal",
+                },
+                Aggregate {
+                    kind: AggKind::Min,
+                    expr: ValExpr::Attr("s_suppkey"),
+                    label: "min_key",
+                },
+                Aggregate {
+                    kind: AggKind::Max,
+                    expr: ValExpr::Attr("s_suppkey"),
+                    label: "max_key",
+                },
+            ],
+        }],
+    }
+}
+
+#[test]
+fn random_dml_query_interleavings_match_baseline_and_oracle() {
+    check("dml-interleave", 25, |g| {
+        let cfg = SystemConfig::default();
+        let seed = g.u64(0, 1 << 30);
+        let db = Database::generate(0.001, seed);
+        let handle = Pimdb::open(cfg.clone(), db.clone()).unwrap();
+        let mut mirror = db.clone();
+        let mut rows = oracle_rows(&db, RelId::Supplier);
+        let mut prev_wear: Vec<u64> = Vec::new();
+
+        for _step in 0..12 {
+            if g.bool() {
+                // --- a DML statement through all three implementations ---
+                let dml = rand_dml(g);
+                let pim = handle.execute_dml(&dml).unwrap();
+                let base = baseline::apply_dml(&cfg, &mut mirror, &dml);
+                let want = oracle_apply(&mut rows, RelId::Supplier, &dml);
+                assert_eq!(pim.rows_affected, want, "{dml:?}");
+                assert_eq!(base.rows_affected, want, "{dml:?}");
+                if !matches!(dml, Dml::Insert { .. }) {
+                    assert!(pim.metrics.exec_time_s > 0.0);
+                    assert!(pim.metrics.cycles.total() > 0);
+                }
+            } else {
+                // --- a query over the mutated state -----------------------
+                let q = supplier_query(rand_pred(g));
+                let pim = handle
+                    .prepare(QuerySource::Ast(&q))
+                    .unwrap()
+                    .execute()
+                    .unwrap();
+                let base = baseline::run_query(&cfg, &mirror, &q);
+                assert_eq!(
+                    pim.raw_report().output,
+                    base.output,
+                    "engines disagree after mutation"
+                );
+                // scalar oracle: count + sum over live rows
+                let rq = &q.rels[0];
+                let want: Vec<&Row> = rows
+                    .iter()
+                    .filter(|r| rq.filter.eval(&|a: &str| *r.get(a).unwrap_or(&0)))
+                    .collect();
+                assert_eq!(pim.raw_report().output.selected[0].1, want.len() as u64);
+                let sum: u128 = want.iter().map(|r| r["s_acctbal"] as u128).sum();
+                let grp = &pim.raw_report().output.groups[0];
+                assert_eq!(grp.values[1], ("sum_bal", sum as f64));
+            }
+
+            // liveness bookkeeping agrees everywhere
+            assert_eq!(handle.live_records(RelId::Supplier), rows.len());
+            assert_eq!(mirror.rel(RelId::Supplier).live_count(), rows.len());
+
+            // per-row wear counters are monotonically nondecreasing (the
+            // map may grow when INSERT materializes a fresh crossbar)
+            let wear = handle.wear_counters(RelId::Supplier);
+            if !wear.is_empty() {
+                assert!(wear.len() >= prev_wear.len());
+                for (i, w) in prev_wear.iter().enumerate() {
+                    assert!(wear[i] >= *w, "wear shrank at row {i}");
+                }
+                prev_wear = wear;
+            }
+        }
+    });
+}
+
+#[test]
+fn deleted_rows_are_invisible_to_every_filter_shape() {
+    // Two predicate classes against deleted rows:
+    //  * one that *accepts* all-zero rows (zeroed deleted data would
+    //    match — only the valid-bit masking excludes them);
+    //  * one that *rejects* all-zero rows (the optimizer may elide the
+    //    valid AND — soundness then rests on the all-zero-dead-row
+    //    invariant DELETE maintains).
+    // Both must report the deleted rows gone, at -O0 and -O2.
+    use pimdb::query::opt::OptLevel;
+    for level in [OptLevel::O0, OptLevel::O2] {
+        let cfg = SystemConfig {
+            opt_level: level,
+            ..SystemConfig::default()
+        };
+        let db = Database::generate(0.01, 3);
+        let total = db.rel(RelId::Supplier).records as u64;
+        let handle = Pimdb::open(cfg.clone(), db).unwrap();
+        let del = handle
+            .execute_dml("delete from supplier where s_suppkey <= 10")
+            .unwrap();
+        assert_eq!(del.rows_affected, 10, "-{level}");
+
+        // accepts-zero predicate: s_suppkey < 11 matches an all-zero row
+        let r = handle
+            .prepare("from supplier | filter s_suppkey < 11 | aggregate count() as n")
+            .unwrap()
+            .execute()
+            .unwrap();
+        assert_eq!(r.raw_report().output.groups[0].count, 0, "-{level}");
+
+        // rejects-zero predicate: s_suppkey >= 1 (zero rows fail it)
+        let r = handle
+            .prepare("from supplier | filter s_suppkey >= 1 | aggregate count() as n")
+            .unwrap()
+            .execute()
+            .unwrap();
+        assert_eq!(
+            r.raw_report().output.groups[0].count,
+            total - 10,
+            "-{level}"
+        );
+        assert_eq!(handle.live_records(RelId::Supplier), (total - 10) as usize);
+    }
+}
+
+#[test]
+fn tpch_suite_stays_bit_identical_after_mutations() {
+    // acceptance criterion: after a mixed batch of DML, PIM and the
+    // mutated baseline mirror agree on all 19 evaluated TPC-H queries
+    let cfg = SystemConfig::default();
+    let db = Database::generate(0.001, 11);
+    let handle = Pimdb::open(cfg.clone(), db.clone()).unwrap();
+    let mut mirror = db;
+
+    let statements = [
+        "delete from lineitem where l_quantity >= 45",
+        "update lineitem set l_discount = 6 where l_shipdate < date(1993-01-01)",
+        "delete from orders where o_orderstatus == \"P\"",
+        "insert into lineitem (l_orderkey, l_partkey, l_suppkey, l_quantity, \
+         l_extendedprice, l_discount, l_shipdate, l_commitdate, l_receiptdate) \
+         values (1, 1, 1, 20, 18000.00, 0.05, date(1994-06-01), date(1994-06-10), \
+         date(1994-06-20))",
+        "update part set p_size = 15 where p_size == 14",
+        "delete from customer where c_acctbal < 0.00",
+    ];
+    for src in statements {
+        let dml = pimdb::query::lang::parse_dml(src).unwrap();
+        let pim = handle.execute_dml(&dml).unwrap();
+        let base = baseline::apply_dml(&cfg, &mut mirror, &dml);
+        assert_eq!(pim.rows_affected, base.rows_affected, "{src}");
+    }
+
+    for q in tpch::all_queries() {
+        let pim = handle
+            .prepare(QuerySource::Ast(&q))
+            .unwrap()
+            .execute()
+            .unwrap();
+        let base = baseline::run_query(&cfg, &mirror, &q);
+        assert_eq!(
+            pim.raw_report().output,
+            base.output,
+            "{} diverged after DML",
+            q.name
+        );
+    }
+}
+
+#[test]
+fn insert_fills_least_worn_rows_and_grows_past_capacity() {
+    let cfg = SystemConfig::default();
+    let db = Database::generate(0.001, 5);
+    let records = db.rel(RelId::Supplier).records;
+    let handle = Pimdb::open(cfg, db).unwrap();
+
+    // fill the first crossbar (capacity 1024) and two rows beyond it
+    let to_insert = 1024 - records + 2;
+    for i in 0..to_insert {
+        let dml = Dml::Insert {
+            rel: RelId::Supplier,
+            values: vec![("s_suppkey", 100_000 + i as u64)],
+        };
+        let r = handle.execute_dml(&dml).unwrap();
+        assert_eq!(r.rows_affected, 1);
+        assert!(r.wear_delta > 0.0);
+    }
+    assert_eq!(handle.live_records(RelId::Supplier), records + to_insert);
+    // the map grew by one crossbar worth of rows
+    assert_eq!(handle.wear_counters(RelId::Supplier).len(), 2048);
+
+    // every inserted key is queryable exactly once
+    let r = handle
+        .prepare("from supplier | filter s_suppkey >= 100_000 | aggregate count() as n")
+        .unwrap()
+        .execute()
+        .unwrap();
+    assert_eq!(r.raw_report().output.groups[0].count, to_insert as u64);
+}
+
+#[test]
+fn reloading_a_mutated_host_store_matches_the_mutated_pim_copy() {
+    // apply_dml keeps the all-zero-dead-row invariant on the host store,
+    // so a *fresh* Pimdb opened from the mutated store must agree with
+    // the incrementally mutated handle on every output
+    let cfg = SystemConfig::default();
+    let db = Database::generate(0.001, 9);
+    let live = Pimdb::open(cfg.clone(), db.clone()).unwrap();
+    let mut mirror = db;
+    for src in [
+        "delete from supplier where s_acctbal < 500.00",
+        "update supplier set s_nationkey = 3 where s_suppkey > 50",
+        "insert into supplier (s_suppkey, s_acctbal) values (7777, 123.45)",
+    ] {
+        let dml = pimdb::query::lang::parse_dml(src).unwrap();
+        live.execute_dml(&dml).unwrap();
+        baseline::apply_dml(&cfg, &mut mirror, &dml);
+    }
+    let reloaded = Pimdb::open(cfg, mirror).unwrap();
+    // the reloaded handle's liveness matches the mutated one, both
+    // before any DML (live_count fallback) and after one (from_flags
+    // shadowing the holes in the mutated image)
+    assert_eq!(
+        reloaded.live_records(RelId::Supplier),
+        live.live_records(RelId::Supplier)
+    );
+    reloaded
+        .execute_dml("insert into supplier (s_suppkey) values (8888)")
+        .unwrap();
+    live.execute_dml("insert into supplier (s_suppkey) values (8888)")
+        .unwrap();
+    assert_eq!(
+        reloaded.live_records(RelId::Supplier),
+        live.live_records(RelId::Supplier)
+    );
+    for src in [
+        "from supplier | filter true | aggregate count() as n, sum(s_acctbal) as s",
+        "from supplier | filter s_nationkey == 3 | aggregate count() as n",
+        "from supplier | filter s_suppkey == 7777 | aggregate count() as n",
+    ] {
+        let a = live.prepare(src).unwrap().execute().unwrap();
+        let b = reloaded.prepare(src).unwrap().execute().unwrap();
+        assert_eq!(a.raw_report().output, b.raw_report().output, "{src}");
+    }
+}
