@@ -127,9 +127,11 @@ def exec_instr(st: Xbar, instr: Instr, reduce_out: list):
         eq, lt = _cmp_cols_planes(st, a, instr.src_b)
         st.planes[d.start] = eq if op == EQ else lt
     elif op == ADD_IMM:
+        # mirrors ADD: source zero-extends to the destination width so a
+        # widening add-immediate propagates its final carry
         carry = 0
-        for i in range(a.len):
-            pa = st.planes[a.start + i]
+        for i in range(d.len):
+            pa = _plane_or_zero(st, a, i)
             pb = full if (instr.imm >> i) & 1 else 0
             s = pa ^ pb ^ carry
             carry = (pa & pb) | (carry & (pa ^ pb))
@@ -496,13 +498,24 @@ class Compiler:
         d = ColRange(dst, 1)
         maxv = (1 << a.len) - 1 if a.len < 64 else (1 << 64) - 1
         mk = lambda o, v: with_imm(o, a, d, v)
+        # immediates wider than the attribute canonicalize to constant
+        # masks (the engine truncates CmpImm immediates to the operand
+        # width — rust/src/query/compiler.rs lower_cmp_imm)
         if op == "==":
-            self.emit(mk(EQ_IMM, value), cat)
+            if value > maxv:
+                self.emit(unary(RESET, d, d), cat)
+            else:
+                self.emit(mk(EQ_IMM, value), cat)
         elif op == "!=":
-            self.emit(mk(NE_IMM, value), cat)
+            if value > maxv:
+                self.emit(unary(SET, d, d), cat)
+            else:
+                self.emit(mk(NE_IMM, value), cat)
         elif op == "<":
             if value == 0:
                 self.emit(unary(RESET, d, d), cat)
+            elif value > maxv:
+                self.emit(unary(SET, d, d), cat)
             else:
                 self.emit(mk(LT_IMM, value), cat)
         elif op == ">":
@@ -518,6 +531,8 @@ class Compiler:
         else:  # >=
             if value == 0:
                 self.emit(unary(SET, d, d), cat)
+            elif value > maxv:
+                self.emit(unary(RESET, d, d), cat)
             else:
                 self.emit(mk(GT_IMM, value - 1), cat)
 
@@ -636,10 +651,12 @@ def read_lens(i: Instr):
     bl = i.src_b.len if i.src_b else 0
     dl = i.dst.len
     op = i.op
-    if op in (EQ_IMM, NE_IMM, LT_IMM, GT_IMM, ADD_IMM, NOT):
+    if op in (EQ_IMM, NE_IMM, LT_IMM, GT_IMM, NOT):
         return al, 0
     if op in (EQ, LT):
         return al, bl
+    if op == ADD_IMM:
+        return min(al, dl), 0
     if op == ADD:
         return min(al, dl), min(bl, dl)
     if op == MUL:
@@ -657,9 +674,9 @@ def write_span(i: Instr) -> Optional[ColRange]:
     al, d, op = i.src_a.len, i.dst, i.op
     if op in (EQ_IMM, NE_IMM, LT_IMM, GT_IMM, EQ, LT):
         return ColRange(d.start, 1)
-    if op in (ADD_IMM, NOT, AND, OR):
+    if op in (NOT, AND, OR):
         return ColRange(d.start, al)
-    if op in (ADD, MUL, SET, RESET):
+    if op in (ADD_IMM, ADD, MUL, SET, RESET):
         return d
     return None
 
@@ -752,8 +769,8 @@ def zero_row_exec(vals, i: Instr):
         vb = _value_of(vals, ColRange(b.start, min(b.len, al)))
         vals[d.start] = (va == vb) if op == EQ else (va < vb)
     elif op == ADD_IMM:
-        v = _value_of(vals, a)
-        _store(vals, d.start, al, (v + (i.imm & _ones(al))) & _ones(al))
+        v = _value_of(vals, ColRange(a.start, min(al, dl)))
+        _store(vals, d.start, dl, (v + (i.imm & _ones(dl))) & _ones(dl))
     elif op == ADD:
         b = i.src_b
         va = _value_of(vals, ColRange(a.start, min(al, dl)))

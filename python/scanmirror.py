@@ -1,0 +1,143 @@
+"""Python mirror of the shared-scan analysis (rust/src/query/opt/sharedscan.rs).
+
+Splits an optimized program into a filter prefix (through the last write
+of the mask column) and a suffix, and derives a renaming-normalized byte
+key such that byte equality implies the prefixes compute the identical
+mask function. The Rust crate's authoring environment has no toolchain,
+so the analysis is validated here against the compiler + engine mirrors
+in optmirror.py, fuzzed over random queries
+(python/tests/test_scanmirror.py). Keep in sync with the Rust source;
+the port favours structural similarity over Pythonic style on purpose.
+"""
+
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass
+from typing import Optional
+
+import optmirror as m
+
+# Canonical ids of compute-area columns start here — far above any
+# physical column id, so the two id spaces cannot collide in the key.
+CANON_BASE = 1 << 20
+
+# Opcode byte tags, mirroring the Rust enum's discriminant order
+# (rust/src/pim/isa.rs::Opcode).
+OP_TAG = {
+    m.EQ_IMM: 0, m.NE_IMM: 1, m.LT_IMM: 2, m.GT_IMM: 3, m.ADD_IMM: 4,
+    m.EQ: 5, m.LT: 6, m.SET: 7, m.RESET: 8, m.NOT: 9, m.AND: 10,
+    m.OR: 11, m.ADD: 12, m.MUL: 13, m.RSUM: 14, m.RMIN: 15, m.RMAX: 16,
+    m.COLT: 17,
+}
+
+
+@dataclass(frozen=True)
+class ScanInfo:
+    """Steps [0, prefix_len) are the shared filter prefix; `key` is its
+    canonical serialization (equal bytes => identical mask function)."""
+
+    prefix_len: int
+    key: bytes
+
+
+class Canon:
+    """Canonical-id assigner: data/VALID columns (below compute_base)
+    keep their absolute id; compute-area columns get sequential ids from
+    CANON_BASE in order of first appearance."""
+
+    def __init__(self, compute_base: int):
+        self.compute_base = compute_base
+        self.map: dict[int, int] = {}
+        self.next = CANON_BASE
+
+    def id(self, col: int) -> int:
+        if col < self.compute_base:
+            return col
+        got = self.map.get(col)
+        if got is None:
+            got = self.next
+            self.map[col] = got
+            self.next += 1
+        return got
+
+    def range(self, r: m.ColRange) -> Optional[tuple[int, int]]:
+        first = self.id(r.start)
+        for k in range(1, r.len):
+            if self.id(r.start + k) != first + k:
+                return None
+        return first, r.len
+
+
+def _split_point(c) -> Optional[int]:
+    last = None
+    for i, s in enumerate(c.steps):
+        _, write = m.accesses(s.instr)
+        if write is not None and write.start <= c.mask_col < write.end:
+            last = i
+    return None if last is None else last + 1
+
+
+def _scan_key(c, prefix_len: int) -> Optional[bytes]:
+    canon = Canon(c.compute_base)
+    buf = bytearray()
+    for s in c.steps[:prefix_len]:
+        i = s.instr
+        buf.append(OP_TAG[i.op])
+        if i.op in m.IMM_OPS:
+            buf += struct.pack("<Q", i.imm & ((1 << 64) - 1))
+
+        def put(r) -> bool:
+            cr = canon.range(r)
+            if cr is None:
+                return False
+            buf.extend(struct.pack("<IH", cr[0], cr[1]))
+            return True
+
+        if not put(i.src_a):
+            return None
+        if i.src_b is not None:
+            buf.append(1)
+            if not put(i.src_b):
+                return None
+        else:
+            buf.append(0)
+        if not put(i.dst):
+            return None
+    buf += struct.pack("<I", canon.id(c.mask_col))
+    return bytes(buf)
+
+
+def scan_info(c) -> Optional[ScanInfo]:
+    """Mirror of sharedscan::scan_info — None when the program has no
+    mask write or any safety condition fails (see the Rust docs):
+    no side-effect step in the prefix, prefix writes only compute-area
+    columns, suffix reads of prefix-written columns are the mask column
+    or written-before-read, and every range normalizes contiguously."""
+    prefix_len = _split_point(c)
+    if prefix_len is None:
+        return None
+    for s in c.steps[:prefix_len]:
+        if s.instr.op in m.SIDE_EFFECT:
+            return None
+    prefix_written: set[int] = set()
+    for s in c.steps[:prefix_len]:
+        _, write = m.accesses(s.instr)
+        if write is not None:
+            if write.start < c.compute_base:
+                return None
+            prefix_written.update(range(write.start, write.end))
+    suffix_written: set[int] = set()
+    for s in c.steps[prefix_len:]:
+        reads, write = m.accesses(s.instr)
+        for r in reads:
+            for col in range(r.start, r.end):
+                if col != c.mask_col and col in prefix_written \
+                        and col not in suffix_written:
+                    return None
+        if write is not None:
+            suffix_written.update(range(write.start, write.end))
+    key = _scan_key(c, prefix_len)
+    if key is None:
+        return None
+    return ScanInfo(prefix_len, key)

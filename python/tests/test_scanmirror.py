@@ -1,0 +1,129 @@
+"""Fuzz-validation of the shared-scan analysis via the Python mirror.
+
+Two properties back the Rust execution path (api::Pimdb's per-relation
+mask cache):
+
+* **Cross-query key sharing** — the same predicate compiled into plans
+  with *different* aggregate suffixes (then `-O2` optimized, so the
+  compute-column placement differs) keys identically for the vast
+  majority of programs, and **equal keys always mean equal masks**.
+  Sharing is opportunistic: CSE elision decisions inspect the suffix,
+  so a redundant predicate (e.g. an IN-list with duplicate values) can
+  legitimately optimize to different prefix streams under different
+  aggregates — a missed share, never a wrong one.
+* **Replay equivalence** — transplanting the captured mask planes into
+  a freshly loaded state and executing only the suffix must be
+  bit-identical (reduce stream + mask popcount) to the full run.
+"""
+
+import random
+
+import optmirror as m
+import scanmirror as sm
+
+from test_optmirror import LAYOUT, XBAR_COLS, gen_records, load, rand_pred, \
+    rand_aggregates
+
+
+def compile_opt(pred, group_by, aggregates, level=2):
+    comp = m.Compiler(LAYOUT, XBAR_COLS)
+    return m.optimize(comp.compile(pred, group_by, aggregates), level)
+
+
+def run(c, records):
+    st = load(records)
+    return m.exec_steps(st, c.steps, c.mask_col)
+
+
+def test_prefix_covers_filter_and_key_is_renaming_invariant():
+    pred = ("cmp", "k", "<", 50)
+    a = compile_opt(pred, [], [("count", ("one",))])
+    b = compile_opt(pred, [], [("sum", ("attr", "v"))])
+    ia, ib = sm.scan_info(a), sm.scan_info(b)
+    assert ia is not None and ib is not None
+    assert ia.prefix_len > 0
+    assert ia.key == ib.key, "same filter must normalize to one key"
+
+
+def test_key_is_sensitive_to_the_predicate():
+    base = sm.scan_info(compile_opt(("cmp", "k", "<", 50), [], []))
+    lit = sm.scan_info(compile_opt(("cmp", "k", "<", 51), [], []))
+    attr = sm.scan_info(compile_opt(("cmp", "v", "<", 50), [], []))
+    op = sm.scan_info(compile_opt(("cmp", "k", ">", 50), [], []))
+    assert base is not None
+    for other in (lit, attr, op):
+        assert other is None or other.key != base.key
+
+
+def test_side_effect_in_prefix_bails():
+    a = m.ColRange(0, 8)
+    mask = m.ColRange(30, 1)
+    steps = [
+        m.Step(m.with_imm(m.LT_IMM, a, mask, 50), "filter"),
+        m.Step(m.unary(m.RSUM, a, a), "aggcol"),
+        m.Step(m.with_imm(m.LT_IMM, a, mask, 50), "filter"),
+    ]
+    c = m.Compiled(steps, 30, 0, [], LAYOUT.compute_base, LAYOUT.valid_col, 1)
+    assert sm.scan_info(c) is None
+
+
+def test_fuzz_cross_query_key_sharing():
+    rng = random.Random(0x5CA17)
+    shared = total = 0
+    for _ in range(300):
+        pred = rand_pred(rng, rng.randint(0, 2))
+        aggs_a = rand_aggregates(rng)
+        aggs_b = rand_aggregates(rng)
+        try:
+            ca = compile_opt(pred, [], aggs_a)
+            cb = compile_opt(pred, [], aggs_b)
+        except MemoryError:
+            continue  # compute-area exhaustion: legitimate compile error
+        ia, ib = sm.scan_info(ca), sm.scan_info(cb)
+        total += 1
+        if ia is None or ib is None or ia.key != ib.key:
+            continue
+        shared += 1
+        # equal keys must mean equal mask planes on the same data (the
+        # suffix never writes the mask, so end-of-run masks compare the
+        # prefixes exactly) — this is what makes cache replay safe
+        records = gen_records(rng, rng.randint(0, 32))
+        sa, sb = load(records), load(records)
+        m.exec_steps(sa, ca.steps, ca.mask_col)
+        m.exec_steps(sb, cb.steps, cb.mask_col)
+        assert sa.planes[ca.mask_col] == sb.planes[cb.mask_col], (
+            f"equal keys, diverging masks: {pred} / {aggs_a} vs {aggs_b}")
+    # sharing must be the common case, not a lucky corner
+    assert total > 200
+    assert shared > total // 2, (shared, total)
+
+
+def test_fuzz_replay_is_bit_identical_to_full_execution():
+    rng = random.Random(0xD157)
+    replayed = 0
+    for _ in range(200):
+        pred = rand_pred(rng, rng.randint(0, 2))
+        aggs = rand_aggregates(rng)
+        group_by = []
+        if aggs and rng.random() < 0.4:
+            group_by = rng.sample(["d1", "d2"], rng.randint(1, 2))
+        records = gen_records(rng, rng.randint(0, 32))
+        try:
+            c = compile_opt(pred, group_by, aggs)
+        except MemoryError:
+            continue
+        info = sm.scan_info(c)
+        if info is None:
+            continue
+        # full run, capturing the mask planes at program end (no suffix
+        # step writes the mask column, so end-of-run == split point)
+        st_full = load(records)
+        want = m.exec_steps(st_full, c.steps, c.mask_col)
+        captured = st_full.planes[c.mask_col]
+        # replay: fresh state (compute area zeroed), transplant, suffix
+        st_replay = load(records)
+        st_replay.planes[c.mask_col] = captured
+        got = m.exec_steps(st_replay, c.steps[info.prefix_len:], c.mask_col)
+        assert got == want, f"replay drift on {pred} / {aggs}"
+        replayed += 1
+    assert replayed > 100, replayed

@@ -7,12 +7,13 @@
 mod benchkit;
 
 use benchkit::{bench, bench_throughput};
-use pimdb::exec::engine::{exec_instr, XbarState};
+use pimdb::exec::engine::{exec_instr, Scratch, XbarState};
 use pimdb::exec::pimdb::EngineKind;
 use pimdb::exec::plan::{exec_steps_sharded, ExecPlan};
 use pimdb::pim::endurance::OpCategory;
 use pimdb::pim::isa::{ColRange, Opcode, PimInstruction};
 use pimdb::query::compiler::Step;
+use pimdb::util::bits::WORDS;
 use pimdb::util::rng::Rng;
 
 const XBARS: usize = 64;
@@ -24,8 +25,8 @@ fn states() -> Vec<XbarState> {
     for _ in 0..XBARS {
         let mut st = XbarState::new(512);
         for c in 0..128 {
-            for w in 0..32 {
-                st.planes[c][w] = rng.next_u32();
+            for w in 0..WORDS {
+                st.planes[c][w] = rng.next_u64();
             }
         }
         sts.push(st);
@@ -35,8 +36,9 @@ fn states() -> Vec<XbarState> {
 
 fn run_all(sts: &mut [XbarState], instr: &PimInstruction) {
     let mut out = Vec::new();
+    let mut scratch = Scratch::new();
     for st in sts.iter_mut() {
-        exec_instr(st, instr, &mut out);
+        exec_instr(st, instr, &mut out, &mut scratch);
     }
 }
 

@@ -26,7 +26,7 @@ fn main() {
             let mut st = XbarState::new(256);
             for c in 0..64 {
                 for w in 0..32 {
-                    st.planes[c][w] = rng.next_u32();
+                    st.planes[c][w] = rng.next_u64();
                 }
             }
             sts.push(st);

@@ -77,6 +77,29 @@ fn main() {
         });
     }
 
+    // per-query trajectory: wall-clock plus deterministic model cycles
+    // for every query, as BENCH json lines (tools/bench_capture.sh
+    // persists them into the committed BENCH_<n>.json trajectory)
+    {
+        let handle = Pimdb::open(cfg.clone(), db.clone()).unwrap();
+        for q in tpch::all_queries() {
+            let stmt = handle.prepare(QuerySource::Ast(&q)).unwrap();
+            let cycles = stmt.execute().unwrap().metrics().cycles.total();
+            let per = bench(&format!("query/{} (sim SF=0.002)", q.name), 250, || {
+                let r = stmt.execute().unwrap();
+                std::hint::black_box(r.metrics().exec_time_s);
+            });
+            println!(
+                "BENCH {{\"name\":\"query/{}\",\"ms_per_iter\":{:.3},\
+                 \"cycles\":{},\"sim_sf\":{}}}",
+                q.name,
+                per * 1e3,
+                cycles,
+                cfg.sim_sf
+            );
+        }
+    }
+
     // representative of each class: biggest full query, biggest
     // filter-only, smallest (overhead-bound), multi-relation
     let handle = Pimdb::open(cfg.clone(), db.clone()).unwrap();
@@ -93,8 +116,18 @@ fn main() {
         });
     }
 
-    // the full 19-query suite (what `pimdb report --exp all` runs)
-    bench("suite/all-19-queries pimdb+baseline", 3000, || {
+    // the full 19-query suite (what `pimdb report --exp all` runs);
+    // repeated iterations serve from the plan cache *and* the per-
+    // relation shared-scan mask cache, so this measures the steady-state
+    // serving sweep
+    let sweep_cycles: u64 = tpch::all_queries()
+        .iter()
+        .map(|q| {
+            let r = handle.prepare(QuerySource::Ast(q)).unwrap().execute().unwrap();
+            r.metrics().cycles.total()
+        })
+        .sum();
+    let per = bench("suite/all-19-queries pimdb+baseline", 3000, || {
         for q in tpch::all_queries() {
             let r = handle
                 .prepare(QuerySource::Ast(&q))
@@ -106,6 +139,41 @@ fn main() {
             std::hint::black_box(b.metrics.exec_time_s);
         }
     });
+    println!(
+        "BENCH {{\"name\":\"suite/all-19-sweep\",\"ms_per_iter\":{:.3},\
+         \"cycles_total\":{},\"sim_sf\":{}}}",
+        per * 1e3,
+        sweep_cycles,
+        cfg.sim_sf
+    );
+
+    // shared-scan serving: prepared aggregates over one relation whose
+    // filters agree — the first execution per relation runs the full
+    // program and caches the mask planes, the rest replay them and run
+    // only their suffixes (see query::opt::sharedscan)
+    {
+        let handle = Pimdb::open(cfg.clone(), db.clone()).unwrap();
+        let sources = [
+            "from lineitem | filter l_quantity < 24 | aggregate count() as n",
+            "from lineitem | filter l_quantity < 24 | aggregate sum(l_extendedprice) as s",
+            "from lineitem | filter l_quantity < 24 | aggregate sum(l_quantity) as q",
+        ];
+        let stmts: Vec<_> = sources.iter().map(|s| handle.prepare(*s).unwrap()).collect();
+        let per = bench("serving/shared-scan x3 (one relation)", 800, || {
+            for st in &stmts {
+                std::hint::black_box(st.execute().unwrap().metrics().exec_time_s);
+            }
+        });
+        let c = handle.shared_scan_counters();
+        println!(
+            "BENCH {{\"name\":\"serving/shared-scan\",\"stmts_per_s\":{:.1},\
+             \"hits\":{},\"misses\":{},\"sim_sf\":{}}}",
+            sources.len() as f64 / per,
+            c.hits,
+            c.misses,
+            cfg.sim_sf
+        );
+    }
 
     // prepared-vs-unprepared serving path: the same PQL template either
     // re-prepared cold (cache cleared -> parse+compile+optimize every

@@ -335,6 +335,9 @@ pub fn dml_key(d: &Dml, fingerprint: u64) -> u64 {
 pub(crate) struct CachedPlan {
     /// Optimized programs, parallel to the source query's `rels`.
     pub compiled: Vec<CompiledRelQuery>,
+    /// Shared-scan split + canonical prefix key per program (parallel to
+    /// `compiled`); `None` where the analysis proved nothing shareable.
+    pub scans: Vec<Option<crate::query::opt::sharedscan::ScanInfo>>,
     /// What the pass pipeline did, summed per Table 5 semantics.
     pub opt: OptSummary,
 }
@@ -691,6 +694,7 @@ mod tests {
     fn mk() -> Result<CachedPlan, PimdbError> {
         Ok(CachedPlan {
             compiled: vec![],
+            scans: vec![],
             opt: OptSummary::default(),
         })
     }

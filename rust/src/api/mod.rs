@@ -57,6 +57,7 @@ pub mod cache;
 pub mod rows;
 
 use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::config::SystemConfig;
@@ -66,15 +67,16 @@ use crate::db::layout::DbLayout;
 use crate::db::schema::{RelId, PIM_RELATIONS};
 use crate::error::PimdbError;
 use crate::exec::engine::{self, ExecOutputs, XbarState};
-use crate::exec::metrics::{PlanCacheCounters, QueryMetrics, RunReport};
+use crate::exec::metrics::{PlanCacheCounters, QueryMetrics, RunReport, SharedScanCounters};
 use crate::exec::pimdb as session;
 use crate::exec::plan::{self, ExecPlan};
 use crate::query::ast::{Dml, Query};
 use crate::query::compiler::{compile_dml, CompileError, Compiler};
 use crate::query::lang;
+use crate::query::opt::sharedscan;
 use crate::query::opt::{self, OptStats};
 use crate::query::tpch;
-use crate::util::bits::XBAR_ROWS;
+use crate::util::bits::{WORDS, XBAR_ROWS};
 
 use cache::{CachedDmlPlan, CachedPlan, PlanCache};
 
@@ -141,6 +143,63 @@ struct RelState {
     /// the compute area in place instead of dropping the states back to
     /// the pristine load image (which would silently revert the DML).
     mutated: bool,
+    /// Shared-scan mask cache: canonical prefix key -> mask planes (one
+    /// per crossbar). Lives behind the relation lock with the states it
+    /// describes; dropped whenever DML mutates the relation.
+    scan_cache: ScanMaskCache,
+}
+
+/// Bound on cached scan masks per relation: a serving workload with
+/// per-request literals mints unbounded distinct prefixes; past the cap
+/// the oldest entry is evicted (FIFO — prefix reuse in a prepared
+/// workload is dominated by a handful of hot scans).
+const MAX_CACHED_SCANS: usize = 8;
+
+/// Per-relation store of executed filter-prefix results, keyed by the
+/// canonical prefix bytes of [`sharedscan::ScanInfo`]. Byte equality of
+/// keys implies the identical mask function, so replaying a cached mask
+/// is exact, not approximate.
+struct ScanMaskCache {
+    entries: Vec<(Vec<u8>, Vec<[u64; WORDS]>)>,
+}
+
+impl ScanMaskCache {
+    fn new() -> ScanMaskCache {
+        ScanMaskCache {
+            entries: Vec::new(),
+        }
+    }
+
+    fn get(&self, key: &[u8]) -> Option<&Vec<[u64; WORDS]>> {
+        self.entries.iter().find(|(k, _)| k == key).map(|(_, m)| m)
+    }
+
+    fn insert(&mut self, key: Vec<u8>, mask: Vec<[u64; WORDS]>) {
+        if let Some(e) = self.entries.iter_mut().find(|(k, _)| *k == key) {
+            e.1 = mask;
+            return;
+        }
+        if self.entries.len() >= MAX_CACHED_SCANS {
+            self.entries.remove(0);
+        }
+        self.entries.push((key, mask));
+    }
+
+    /// Drop every cached mask; `true` when anything was resident.
+    fn clear(&mut self) -> bool {
+        let had = !self.entries.is_empty();
+        self.entries.clear();
+        had
+    }
+}
+
+/// Handle-wide shared-scan counters (atomic: executions run from
+/// `&self` across threads).
+#[derive(Default)]
+struct ScanStats {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    invalidations: AtomicU64,
 }
 
 /// The owned PIMDB service handle: one resident database copy, a plan
@@ -166,6 +225,7 @@ pub struct Pimdb {
     /// (they share its compute area — and now also its liveness).
     states: BTreeMap<RelId, Mutex<RelState>>,
     cache: PlanCache,
+    scan_stats: ScanStats,
 }
 
 // The service-handle contract: `Pimdb` (and everything borrowed from it)
@@ -194,6 +254,7 @@ impl Pimdb {
                         states: None,
                         freerows: None,
                         mutated: false,
+                        scan_cache: ScanMaskCache::new(),
                     }),
                 )
             })
@@ -204,6 +265,7 @@ impl Pimdb {
             layout,
             states,
             cache: PlanCache::new(),
+            scan_stats: ScanStats::default(),
             cfg,
             db,
         })
@@ -255,6 +317,18 @@ impl Pimdb {
     /// execution's [`QueryMetrics::plan_cache`]).
     pub fn plan_cache_counters(&self) -> PlanCacheCounters {
         self.cache.counters()
+    }
+
+    /// Shared-scan cache counters so far: executions that replayed a
+    /// cached filter-prefix mask (`hits`), shareable executions that ran
+    /// in full and populated the cache (`misses`), and per-relation cache
+    /// drops (`invalidations` — DML mutation or poison recovery).
+    pub fn shared_scan_counters(&self) -> SharedScanCounters {
+        SharedScanCounters {
+            hits: self.scan_stats.hits.load(Ordering::Relaxed),
+            misses: self.scan_stats.misses.load(Ordering::Relaxed),
+            invalidations: self.scan_stats.invalidations.load(Ordering::Relaxed),
+        }
     }
 
     /// Drop all cached plans (counters keep accumulating); the next
@@ -325,8 +399,10 @@ impl Pimdb {
                     Ok(o)
                 })
                 .collect::<Result<Vec<_>, CompileError>>()?;
+            let scans = compiled.iter().map(sharedscan::scan_info).collect();
             Ok(CachedPlan {
                 compiled,
+                scans,
                 opt: sum.into(),
             })
         })?;
@@ -359,6 +435,10 @@ impl Pimdb {
                     g.states = None;
                     g.freerows = None;
                     g.mutated = false;
+                }
+                // cached scan masks describe the pre-panic state; drop them
+                if g.scan_cache.clear() {
+                    self.scan_stats.invalidations.fetch_add(1, Ordering::Relaxed);
                 }
                 g
             }
@@ -407,16 +487,38 @@ impl Pimdb {
         // guard for the duration so a backend error drops them rather
         // than leaving a half-mutated compute area resident.
         let mut outs: Vec<ExecOutputs> = Vec::with_capacity(compiled.len());
-        for c in compiled {
+        for (c, scan) in compiled.iter().zip(&p.plan.scans) {
             let guard = &mut guards
                 .iter_mut()
                 .find(|(r, _)| *r == c.rel)
                 .expect("locked above")
                 .1;
             let mut states = guard.states.take().expect("materialized above");
+            // Shared scan: when this program's filter prefix matches a
+            // cached mask (byte-equal canonical key — identical mask
+            // function), transplant the mask planes and run only the
+            // suffix. The prefix writes nothing but compute columns and
+            // the suffix never writes the mask column, so the replay is
+            // bit-identical to the full run.
+            let replayed = match scan {
+                Some(info) => match guard.scan_cache.get(&info.key) {
+                    Some(mask) if mask.len() == states.len() => {
+                        for (st, m) in states.iter_mut().zip(mask) {
+                            st.planes[c.mask_col] = *m;
+                        }
+                        true
+                    }
+                    _ => false,
+                },
+                None => false,
+            };
+            let steps = match scan {
+                Some(info) if replayed => &c.steps[info.prefix_len..],
+                _ => &c.steps[..],
+            };
             let out = plan::exec_steps_sharded(
                 &mut states,
-                &c.steps,
+                steps,
                 c.mask_col,
                 engine_kind,
                 &self.exec_plan,
@@ -437,11 +539,26 @@ impl Pimdb {
                     return Err(e.into());
                 }
             };
+            if let Some(info) = scan {
+                if replayed {
+                    self.scan_stats.hits.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    // capture the mask planes before clear_compute wipes
+                    // the compute area they live in
+                    guard.scan_cache.insert(
+                        info.key.clone(),
+                        states.iter().map(|st| st.planes[c.mask_col]).collect(),
+                    );
+                    self.scan_stats.misses.fetch_add(1, Ordering::Relaxed);
+                }
+            }
             session::clear_compute(&mut states, self.layout.rel(c.rel).compute_base);
             guard.states = Some(states);
             // mutated relations accumulate this query's write profile
             // into the persistent wear counters the endurance-aware
-            // row allocator consults
+            // row allocator consults; the wear model charges the full
+            // program either way — the shared-scan replay is a simulator
+            // shortcut, not a change to what the simulated device does
             if let Some(free) = guard.freerows.as_mut() {
                 session::charge_wear(free, &c.steps, self.cfg.xbar_cols);
             }
@@ -557,6 +674,10 @@ impl Pimdb {
             guard.freerows = Some(FreeRowMap::from_flags(&flags, capacity, XBAR_ROWS));
         }
         guard.mutated = true;
+        // any cached scan mask describes pre-mutation data
+        if guard.scan_cache.clear() {
+            self.scan_stats.invalidations.fetch_add(1, Ordering::Relaxed);
+        }
         let mut states = guard.states.take().expect("materialized above");
         let out = session::exec_dml_on_states(
             &self.cfg,
@@ -620,6 +741,7 @@ fn rebind_labels(plan: Arc<CachedPlan>, query: &Query) -> Arc<CachedPlan> {
         .collect();
     Arc::new(CachedPlan {
         compiled,
+        scans: plan.scans.clone(),
         opt: plan.opt,
     })
 }
@@ -963,5 +1085,102 @@ mod tests {
         // re-executing after the concurrent burst still matches
         let again = q6.execute().unwrap();
         assert_eq!(again.raw_report().output, want_q6.output);
+    }
+
+    #[test]
+    fn shared_scans_replay_cached_filter_prefixes() {
+        let handle = Pimdb::open(SystemConfig::default(), db()).unwrap();
+        let count_src = "from supplier | filter s_suppkey < 50 | aggregate count() as n";
+        let sum_src = "from supplier | filter s_suppkey < 50 | aggregate sum(s_acctbal) as s";
+        let p_count = handle.prepare(count_src).unwrap();
+        let p_sum = handle.prepare(sum_src).unwrap();
+        // distinct plans over one relation share a canonical prefix key:
+        // the suffix differs (count vs sum), the mask function does not
+        let s1 = p_count.plan.scans[0].as_ref().expect("count plan is shareable");
+        let s2 = p_sum.plan.scans[0].as_ref().expect("sum plan is shareable");
+        assert!(s1.prefix_len > 0);
+        assert_eq!(s1.key, s2.key, "same filter must normalize to one key");
+
+        // oracle outputs from fresh handles (nothing cached, full runs)
+        let fresh = |src: &str| {
+            Pimdb::open(SystemConfig::default(), db())
+                .unwrap()
+                .prepare(src)
+                .unwrap()
+                .execute()
+                .unwrap()
+                .raw_report()
+                .output
+                .clone()
+        };
+        let want_count = fresh(count_src);
+        let want_sum = fresh(sum_src);
+
+        let r1 = p_count.execute().unwrap();
+        assert_eq!(
+            handle.shared_scan_counters(),
+            SharedScanCounters {
+                hits: 0,
+                misses: 1,
+                invalidations: 0
+            }
+        );
+        // second statement replays the cached mask, runs only its suffix
+        let r2 = p_sum.execute().unwrap();
+        assert_eq!(
+            handle.shared_scan_counters(),
+            SharedScanCounters {
+                hits: 1,
+                misses: 1,
+                invalidations: 0
+            }
+        );
+        assert_eq!(r1.raw_report().output, want_count);
+        assert_eq!(r2.raw_report().output, want_sum);
+
+        // re-executing the first statement is a hit too, still exact
+        let r3 = p_count.execute().unwrap();
+        assert_eq!(r3.raw_report().output, want_count);
+        assert_eq!(handle.shared_scan_counters().hits, 2);
+
+        // a different literal is a different mask function: full run
+        handle
+            .prepare("from supplier | filter s_suppkey < 51 | aggregate count() as n")
+            .unwrap()
+            .execute()
+            .unwrap();
+        assert_eq!(
+            handle.shared_scan_counters(),
+            SharedScanCounters {
+                hits: 2,
+                misses: 2,
+                invalidations: 0
+            }
+        );
+    }
+
+    #[test]
+    fn dml_invalidates_cached_scan_masks() {
+        let handle = Pimdb::open(SystemConfig::default(), db()).unwrap();
+        let p = handle
+            .prepare("from supplier | filter s_suppkey <= 10 | aggregate count() as n")
+            .unwrap();
+        assert_eq!(p.execute().unwrap().raw_report().output.groups[0].count, 10);
+        assert_eq!(handle.shared_scan_counters().misses, 1);
+        // DML drops the relation's cached masks
+        handle
+            .execute_dml("delete from supplier where s_suppkey == 5")
+            .unwrap();
+        assert_eq!(handle.shared_scan_counters().invalidations, 1);
+        // the re-run cannot replay the stale mask: it sees the deletion
+        assert_eq!(p.execute().unwrap().raw_report().output.groups[0].count, 9);
+        assert_eq!(
+            handle.shared_scan_counters(),
+            SharedScanCounters {
+                hits: 0,
+                misses: 2,
+                invalidations: 1
+            }
+        );
     }
 }

@@ -1,11 +1,12 @@
 //! Functional execution engine: interprets PIM instructions over
 //! bit-plane crossbar states.
 //!
-//! A crossbar's functional state is one bit-plane per column (the same
-//! u32[WORDS] packing the L1 Pallas kernels use, DESIGN.md §Hardware-
-//! Adaptation), so the native path below and the PJRT path in
-//! [`crate::runtime`] operate on the identical representation and are
-//! differential-tested against each other.
+//! A crossbar's functional state is one bit-plane per column, packed as
+//! `u64[WORDS]` (16 words, one cache line per plane) so the fixed-width
+//! word loops below autovectorize. The L1 Pallas kernels keep their own
+//! `u32[KERNEL_WORDS]` packing (DESIGN.md §Hardware-Adaptation); the PJRT
+//! path in [`crate::runtime`] converts at the literal boundary, so both
+//! backends stay differential-testable on identical functional state.
 //!
 //! ISA semantics notes (paper §4.2, §5.2.2):
 //!  * And/Or with a single-column second operand broadcast the mask bit
@@ -19,28 +20,33 @@ use crate::db::dbgen::Relation;
 use crate::db::layout::RelationLayout;
 use crate::pim::isa::{ColRange, Opcode, PimInstruction};
 use crate::query::compiler::Step;
-use crate::util::bits::{WORDS, XBAR_ROWS};
+use crate::util::bits::{PLANES, WORDS, WORD_BITS, XBAR_ROWS};
 
 /// Functional state of one crossbar: `planes[c]` holds column `c` of all
 /// 1024 rows.
 #[derive(Clone)]
 pub struct XbarState {
     /// One packed bit-plane per crossbar column.
-    pub planes: Vec<[u32; WORDS]>,
+    pub planes: Vec<[u64; WORDS]>,
 }
 
 impl XbarState {
     /// An all-zero crossbar with `cols` columns.
     pub fn new(cols: usize) -> Self {
         XbarState {
-            planes: vec![[0u32; WORDS]; cols],
+            planes: vec![[0u64; WORDS]; cols],
         }
     }
 
     #[inline]
     fn set_bit(&mut self, col: usize, row: usize, v: bool) {
-        let w = &mut self.planes[col][row / 32];
-        let m = 1u32 << (row % 32);
+        debug_assert!(
+            col < self.planes.len() && row < XBAR_ROWS,
+            "set_bit out of range: col {col}/{}, row {row}/{XBAR_ROWS}",
+            self.planes.len()
+        );
+        let w = &mut self.planes[col][row / WORD_BITS];
+        let m = 1u64 << (row % WORD_BITS);
         if v {
             *w |= m;
         } else {
@@ -60,9 +66,16 @@ impl XbarState {
 
     /// Value of columns [start, start+len) in `row`.
     pub fn value_at(&self, row: usize, r: ColRange) -> u64 {
+        debug_assert!(
+            row < XBAR_ROWS && r.start as usize + r.len as usize <= self.planes.len(),
+            "value_at out of range: row {row}/{XBAR_ROWS}, cols {}..{} of {}",
+            r.start,
+            r.start as usize + r.len as usize,
+            self.planes.len()
+        );
         let mut v = 0u64;
         for i in 0..r.len as usize {
-            if (self.planes[r.start as usize + i][row / 32] >> (row % 32)) & 1 == 1 {
+            if (self.planes[r.start as usize + i][row / WORD_BITS] >> (row % WORD_BITS)) & 1 == 1 {
                 v |= 1 << i;
             }
         }
@@ -78,8 +91,8 @@ impl XbarState {
 /// Load a relation partition into crossbar states (records -> rows,
 /// attributes -> column slots, VALID bit set on occupied rows).
 ///
-/// Word-at-a-time transpose: for each attribute, 32 consecutive records
-/// are gathered into one u32 per bit-plane, writing each plane word
+/// Word-at-a-time transpose: for each attribute, 64 consecutive records
+/// are gathered into one u64 per bit-plane, writing each plane word
 /// exactly once (this routine was 40% of the end-to-end profile when it
 /// set bits one at a time — see EXPERIMENTS.md §Perf).
 pub fn load_states(
@@ -93,13 +106,13 @@ pub fn load_states(
     let mut states = vec![XbarState::new(cols); n_xbars];
     for slot in &layout.slots {
         let col = &rel.col(slot.attr.name)[rec_range.clone()];
-        for (w, chunk) in col.chunks(32).enumerate() {
+        for (w, chunk) in col.chunks(WORD_BITS).enumerate() {
             let (x, word) = (w / WORDS, w % WORDS);
             let planes = &mut states[x].planes;
             for b in 0..slot.attr.bits {
-                let mut bits = 0u32;
+                let mut bits = 0u64;
                 for (i, &v) in chunk.iter().enumerate() {
-                    bits |= (((v >> b) & 1) as u32) << i;
+                    bits |= ((v >> b) & 1) << i;
                 }
                 planes[slot.start + b][word] = bits;
             }
@@ -108,10 +121,10 @@ pub fn load_states(
     // VALID column from the store's liveness flags (all-true for a
     // pristine load; a DML-mutated store reloads with its dead rows
     // masked out — their data is zero by the all-zero-dead-row invariant)
-    for i in (0..n).step_by(32) {
-        let (x, word) = (i / XBAR_ROWS, (i % XBAR_ROWS) / 32);
-        let mut bits = 0u32;
-        for b in 0..32.min(n - i) {
+    for i in (0..n).step_by(WORD_BITS) {
+        let (x, word) = (i / XBAR_ROWS, (i % XBAR_ROWS) / WORD_BITS);
+        let mut bits = 0u64;
+        for b in 0..WORD_BITS.min(n - i) {
             if rel.live(rec_range.start + i + b) {
                 bits |= 1 << b;
             }
@@ -143,9 +156,38 @@ impl ExecOutputs {
     }
 }
 
+/// Reusable kernel scratch, allocated once per shard and threaded through
+/// [`exec_instr`] so the interpreter's only heap-sized temporary (the Mul
+/// shift-add accumulator) is not re-established per instruction.
+pub struct Scratch {
+    /// Mul accumulator planes (`PLANES` wide, zeroed per Mul).
+    mul_acc: Vec<[u64; WORDS]>,
+}
+
+impl Scratch {
+    /// A scratch arena sized for the widest destination the ISA allows.
+    pub fn new() -> Self {
+        Scratch {
+            mul_acc: vec![[0u64; WORDS]; PLANES],
+        }
+    }
+}
+
+impl Default for Scratch {
+    fn default() -> Self {
+        Scratch::new()
+    }
+}
+
 /// Interpret one instruction on one crossbar state. Reduce ops append to
-/// `reduce_out` instead of mutating columns.
-pub fn exec_instr(st: &mut XbarState, instr: &PimInstruction, reduce_out: &mut Vec<u128>) {
+/// `reduce_out` instead of mutating columns. `scratch` is reused across
+/// calls (see [`Scratch`]).
+pub fn exec_instr(
+    st: &mut XbarState,
+    instr: &PimInstruction,
+    reduce_out: &mut Vec<u128>,
+    scratch: &mut Scratch,
+) {
     let a = instr.src_a;
     let d = instr.dst;
     match instr.op {
@@ -166,11 +208,16 @@ pub fn exec_instr(st: &mut XbarState, instr: &PimInstruction, reduce_out: &mut V
             st.planes[d.start as usize] = if instr.op == Opcode::Eq { eq } else { lt };
         }
         Opcode::AddImm => {
-            let mut carry = [0u32; WORDS];
-            for i in 0..a.len as usize {
-                let pa = st.planes[a.start as usize + i];
+            // Same loop bound and zero-extension as Add: a widening
+            // AddImm (dst wider than src) must propagate the final carry
+            // into the top destination planes instead of leaving them
+            // stale (they may hold garbage from a released scratch span).
+            let n = d.len as usize;
+            let mut carry = [0u64; WORDS];
+            for i in 0..n {
+                let pa = plane_or_zero(st, a, i);
                 let bit = (instr.imm >> i) & 1;
-                let pb = if bit == 1 { [u32::MAX; WORDS] } else { [0u32; WORDS] };
+                let pb = if bit == 1 { [u64::MAX; WORDS] } else { [0u64; WORDS] };
                 let (s, c) = full_add(&pa, &pb, &carry);
                 st.planes[d.start as usize + i] = s;
                 carry = c;
@@ -179,7 +226,7 @@ pub fn exec_instr(st: &mut XbarState, instr: &PimInstruction, reduce_out: &mut V
         Opcode::Add => {
             let b = instr.src_b.expect("add");
             let n = d.len as usize;
-            let mut carry = [0u32; WORDS];
+            let mut carry = [0u64; WORDS];
             for i in 0..n {
                 let pa = plane_or_zero(st, a, i);
                 let pb = plane_or_zero(st, b, i);
@@ -191,14 +238,17 @@ pub fn exec_instr(st: &mut XbarState, instr: &PimInstruction, reduce_out: &mut V
         Opcode::Mul => {
             let b = instr.src_b.expect("mul");
             let n = d.len as usize;
-            // fixed stack accumulator (n <= 64 planes): keeps the shift-add
-            // inner loop allocation-free — Q1 runs thousands of Muls
-            debug_assert!(n <= 64);
-            let mut acc = [[0u32; WORDS]; 64];
-            let acc = &mut acc[..n];
+            // shard-arena accumulator (n <= PLANES planes): keeps the
+            // shift-add inner loop allocation-free — Q1 runs thousands
+            // of Muls
+            debug_assert!(n <= PLANES);
+            let acc = &mut scratch.mul_acc[..n];
+            for p in acc.iter_mut() {
+                *p = [0u64; WORDS];
+            }
             for i in 0..b.len as usize {
                 let m = st.planes[b.start as usize + i];
-                let mut carry = [0u32; WORDS];
+                let mut carry = [0u64; WORDS];
                 for j in 0..(a.len as usize).min(n - i) {
                     let ad = and_words(&st.planes[a.start as usize + j], &m);
                     let (s, c) = full_add(&acc[i + j], &ad, &carry);
@@ -206,8 +256,8 @@ pub fn exec_instr(st: &mut XbarState, instr: &PimInstruction, reduce_out: &mut V
                     carry = c;
                 }
                 let mut k = i + a.len as usize;
-                while k < n && carry != [0u32; WORDS] {
-                    let (s, c) = full_add(&acc[k], &[0u32; WORDS], &carry);
+                while k < n && carry != [0u64; WORDS] {
+                    let (s, c) = full_add(&acc[k], &[0u64; WORDS], &carry);
                     acc[k] = s;
                     carry = c;
                     k += 1;
@@ -219,12 +269,12 @@ pub fn exec_instr(st: &mut XbarState, instr: &PimInstruction, reduce_out: &mut V
         }
         Opcode::Set => {
             for i in 0..d.len as usize {
-                st.planes[d.start as usize + i] = [u32::MAX; WORDS];
+                st.planes[d.start as usize + i] = [u64::MAX; WORDS];
             }
         }
         Opcode::Reset => {
             for i in 0..d.len as usize {
-                st.planes[d.start as usize + i] = [0u32; WORDS];
+                st.planes[d.start as usize + i] = [0u64; WORDS];
             }
         }
         Opcode::Not => {
@@ -262,7 +312,7 @@ pub fn exec_instr(st: &mut XbarState, instr: &PimInstruction, reduce_out: &mut V
         }
         Opcode::ReduceMin | Opcode::ReduceMax => {
             let is_min = instr.op == Opcode::ReduceMin;
-            let mut cand = [u32::MAX; WORDS];
+            let mut cand = [u64::MAX; WORDS];
             let mut val: u128 = 0;
             for j in (0..a.len as usize).rev() {
                 let p = st.planes[a.start as usize + j];
@@ -289,7 +339,9 @@ pub fn exec_instr(st: &mut XbarState, instr: &PimInstruction, reduce_out: &mut V
     }
 }
 
-/// Run a program's steps over a crossbar batch (native engine).
+/// Run a program's steps over a crossbar batch (native engine). One
+/// [`Scratch`] arena serves the whole batch — callers running shards on
+/// worker threads get one arena per shard.
 pub fn exec_steps_native(states: &mut [XbarState], steps: &[Step], mask_col: usize) -> ExecOutputs {
     let n_reduces = steps
         .iter()
@@ -300,12 +352,17 @@ pub fn exec_steps_native(states: &mut [XbarState], steps: &[Step], mask_col: usi
             )
         })
         .count();
+    debug_assert!(
+        states.iter().all(|st| mask_col < st.planes.len()),
+        "mask_col {mask_col} out of range for crossbar states"
+    );
     let mut reduces = vec![Vec::with_capacity(states.len()); n_reduces];
     let mut mask_counts = Vec::with_capacity(states.len());
+    let mut scratch = Scratch::new();
     for st in states.iter_mut() {
         let mut out = Vec::with_capacity(n_reduces);
         for step in steps {
-            exec_instr(st, &step.instr, &mut out);
+            exec_instr(st, &step.instr, &mut out, &mut scratch);
         }
         for (i, v) in out.into_iter().enumerate() {
             reduces[i].push(v);
@@ -321,8 +378,8 @@ pub fn exec_steps_native(states: &mut [XbarState], steps: &[Step], mask_col: usi
 // --- word helpers -----------------------------------------------------------
 
 #[inline]
-fn not_words(a: &[u32; WORDS]) -> [u32; WORDS] {
-    let mut r = [0u32; WORDS];
+fn not_words(a: &[u64; WORDS]) -> [u64; WORDS] {
+    let mut r = [0u64; WORDS];
     for i in 0..WORDS {
         r[i] = !a[i];
     }
@@ -330,8 +387,8 @@ fn not_words(a: &[u32; WORDS]) -> [u32; WORDS] {
 }
 
 #[inline]
-fn and_words(a: &[u32; WORDS], b: &[u32; WORDS]) -> [u32; WORDS] {
-    let mut r = [0u32; WORDS];
+fn and_words(a: &[u64; WORDS], b: &[u64; WORDS]) -> [u64; WORDS] {
+    let mut r = [0u64; WORDS];
     for i in 0..WORDS {
         r[i] = a[i] & b[i];
     }
@@ -339,8 +396,8 @@ fn and_words(a: &[u32; WORDS], b: &[u32; WORDS]) -> [u32; WORDS] {
 }
 
 #[inline]
-fn or_words(a: &[u32; WORDS], b: &[u32; WORDS]) -> [u32; WORDS] {
-    let mut r = [0u32; WORDS];
+fn or_words(a: &[u64; WORDS], b: &[u64; WORDS]) -> [u64; WORDS] {
+    let mut r = [0u64; WORDS];
     for i in 0..WORDS {
         r[i] = a[i] | b[i];
     }
@@ -349,12 +406,12 @@ fn or_words(a: &[u32; WORDS], b: &[u32; WORDS]) -> [u32; WORDS] {
 
 #[inline]
 fn full_add(
-    a: &[u32; WORDS],
-    b: &[u32; WORDS],
-    c: &[u32; WORDS],
-) -> ([u32; WORDS], [u32; WORDS]) {
-    let mut s = [0u32; WORDS];
-    let mut co = [0u32; WORDS];
+    a: &[u64; WORDS],
+    b: &[u64; WORDS],
+    c: &[u64; WORDS],
+) -> ([u64; WORDS], [u64; WORDS]) {
+    let mut s = [0u64; WORDS];
+    let mut co = [0u64; WORDS];
     for i in 0..WORDS {
         let axb = a[i] ^ b[i];
         s[i] = axb ^ c[i];
@@ -364,18 +421,24 @@ fn full_add(
 }
 
 #[inline]
-fn plane_or_zero(st: &XbarState, r: ColRange, i: usize) -> [u32; WORDS] {
+fn plane_or_zero(st: &XbarState, r: ColRange, i: usize) -> [u64; WORDS] {
     if i < r.len as usize {
         st.planes[r.start as usize + i]
     } else {
-        [0u32; WORDS]
+        [0u64; WORDS]
     }
 }
 
 /// MSB-first compare of an attribute range against an immediate.
-fn cmp_imm_planes(st: &XbarState, a: ColRange, imm: u64) -> ([u32; WORDS], [u32; WORDS]) {
-    let mut eq = [u32::MAX; WORDS];
-    let mut lt = [0u32; WORDS];
+///
+/// Per the ISA contract ([`crate::pim::isa`]), the control path examines
+/// only the low `a.len` bits of `imm`: a wider immediate compares as
+/// `imm mod 2^a.len`. The query compiler canonicalizes out-of-range
+/// immediates to Set/Reset before they reach the engine
+/// (`lower_cmp_imm`), so compiled programs never rely on the truncation.
+fn cmp_imm_planes(st: &XbarState, a: ColRange, imm: u64) -> ([u64; WORDS], [u64; WORDS]) {
+    let mut eq = [u64::MAX; WORDS];
+    let mut lt = [0u64; WORDS];
     for i in (0..a.len as usize).rev() {
         let p = st.planes[a.start as usize + i];
         let bit = (imm >> i) & 1;
@@ -391,9 +454,9 @@ fn cmp_imm_planes(st: &XbarState, a: ColRange, imm: u64) -> ([u32; WORDS], [u32;
     (eq, lt)
 }
 
-fn cmp_cols_planes(st: &XbarState, a: ColRange, b: ColRange) -> ([u32; WORDS], [u32; WORDS]) {
-    let mut eq = [u32::MAX; WORDS];
-    let mut lt = [0u32; WORDS];
+fn cmp_cols_planes(st: &XbarState, a: ColRange, b: ColRange) -> ([u64; WORDS], [u64; WORDS]) {
+    let mut eq = [u64::MAX; WORDS];
+    let mut lt = [0u64; WORDS];
     for i in (0..a.len as usize).rev() {
         let pa = st.planes[a.start as usize + i];
         let pb = plane_or_zero(st, b, i);
@@ -416,6 +479,11 @@ mod tests {
             instr,
             category: OpCategory::Filter,
         }
+    }
+
+    /// One-shot `exec_instr` with a throwaway scratch arena.
+    fn run(st: &mut XbarState, instr: &PimInstruction, out: &mut Vec<u128>) {
+        exec_instr(st, instr, out, &mut Scratch::new());
     }
 
     fn load_values(vals: &[u64], start: usize, bits: usize, st: &mut XbarState) {
@@ -444,7 +512,7 @@ mod tests {
                 (Opcode::GtImm, Box::new(|v| v > imm)),
             ] {
                 let mut out = Vec::new();
-                exec_instr(
+                run(
                     &mut st,
                     &PimInstruction::with_imm(op, a, ColRange::new(40, 1), imm),
                     &mut out,
@@ -473,7 +541,7 @@ mod tests {
             // Add into 2n-wide dst
             let dst = ColRange::new(44, bits + 1);
             let mut out = Vec::new();
-            exec_instr(
+            run(
                 &mut st,
                 &PimInstruction::binary(
                     Opcode::Add,
@@ -488,7 +556,7 @@ mod tests {
             }
             // Mul into (n+m)-wide dst
             let dstm = ColRange::new(70, 2 * bits);
-            exec_instr(
+            run(
                 &mut st,
                 &PimInstruction::binary(
                     Opcode::Mul,
@@ -505,6 +573,62 @@ mod tests {
     }
 
     #[test]
+    fn widening_add_imm_propagates_carry_and_zero_extends() {
+        // Regression: AddImm used to iterate 0..a.len, so a widening add
+        // dropped the final carry and left stale planes above a.len.
+        check("engine-addimm-widen", 30, |g| {
+            let src_bits = g.usize(1, 12);
+            let dst_bits = src_bits + g.usize(1, 8);
+            let imm = g.u64(0, (1 << dst_bits) - 1);
+            let vals = g.vec_u64(200, 0, (1 << src_bits) - 1);
+            let mut st = XbarState::new(96);
+            load_values(&vals, 0, src_bits, &mut st);
+            // poison the destination with stale all-ones planes
+            let dst = ColRange::new(40, dst_bits);
+            let mut out = Vec::new();
+            run(&mut st, &PimInstruction::unary(Opcode::Set, dst, dst), &mut out);
+            run(
+                &mut st,
+                &PimInstruction::with_imm(
+                    Opcode::AddImm,
+                    ColRange::new(0, src_bits),
+                    dst,
+                    imm,
+                ),
+                &mut out,
+            );
+            let modw = 1u64 << dst_bits;
+            for (row, &v) in vals.iter().enumerate() {
+                assert_eq!(
+                    st.value_at(row, dst),
+                    (v + imm) % modw,
+                    "row {row}: {v} + {imm} (src {src_bits}b dst {dst_bits}b)"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn add_imm_carry_out_reaches_top_plane() {
+        // The sharpest form of the bug: all-ones source + imm 1 must carry
+        // into the (dst_bits-1) plane, which only the widened loop writes.
+        let bits = 8;
+        let vals = vec![(1u64 << bits) - 1; 64];
+        let mut st = XbarState::new(64);
+        load_values(&vals, 0, bits, &mut st);
+        let dst = ColRange::new(30, bits + 1);
+        let mut out = Vec::new();
+        run(
+            &mut st,
+            &PimInstruction::with_imm(Opcode::AddImm, ColRange::new(0, bits), dst, 1),
+            &mut out,
+        );
+        for row in 0..64 {
+            assert_eq!(st.value_at(row, dst), 1 << bits, "row {row}");
+        }
+    }
+
+    #[test]
     fn and_broadcast_masks_values() {
         let vals: Vec<u64> = (0..64).map(|i| i * 3 + 1).collect();
         let mut st = XbarState::new(64);
@@ -514,7 +638,7 @@ mod tests {
             st.set_bit(30, row, true);
         }
         let mut out = Vec::new();
-        exec_instr(
+        run(
             &mut st,
             &PimInstruction::binary(
                 Opcode::And,
@@ -536,7 +660,7 @@ mod tests {
         let mut st = XbarState::new(64);
         load_values(&vals, 0, 9, &mut st);
         let mut out = Vec::new();
-        exec_instr(
+        run(
             &mut st,
             &PimInstruction::unary(
                 Opcode::ReduceSum,
@@ -558,7 +682,7 @@ mod tests {
             // emulate the compiler's MIN adjustment by OR-ing all-ones into
             // empty rows: here just check MAX (zeros are identity)
             let mut out = Vec::new();
-            exec_instr(
+            run(
                 &mut st,
                 &PimInstruction::unary(
                     Opcode::ReduceMax,

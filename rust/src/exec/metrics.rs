@@ -98,6 +98,26 @@ pub struct PlanCacheCounters {
     pub misses: u64,
 }
 
+/// Shared-scan cache counters of a [`crate::api::Pimdb`] handle: when
+/// several prepared queries over one relation share an identical filter
+/// prefix (same mask function, up to compute-column renaming — see
+/// `query::opt::sharedscan`), the handle executes the prefix once and
+/// replays the cached mask for the rest. Kept separate from
+/// [`PlanCacheCounters`] — plan-cache accounting (`hits + misses` ==
+/// prepares served) is pinned by tests and must not absorb execution-time
+/// events.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SharedScanCounters {
+    /// Executions that reused a cached scan mask (prefix skipped).
+    pub hits: u64,
+    /// Shareable executions that ran the full program and populated the
+    /// per-relation mask cache.
+    pub misses: u64,
+    /// Times a relation's mask cache was dropped (DML mutation or poison
+    /// recovery).
+    pub invalidations: u64,
+}
+
 /// Metrics of one query execution (PIMDB or baseline), at the report SF.
 #[derive(Clone, Debug, Default)]
 pub struct QueryMetrics {

@@ -53,7 +53,7 @@ use crate::query::compiler::{
     Step,
 };
 use crate::query::opt;
-use crate::util::bits::{WORDS, XBAR_ROWS};
+use crate::util::bits::{WORDS, WORD_BITS, XBAR_ROWS};
 
 /// Which functional backend computes instruction semantics.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -110,7 +110,7 @@ struct WaveProg {
 pub(crate) fn clear_compute(states: &mut [XbarState], compute_base: usize) {
     for st in states.iter_mut() {
         for p in &mut st.planes[compute_base..] {
-            *p = [0u32; WORDS];
+            *p = [0u64; WORDS];
         }
     }
 }
@@ -437,7 +437,7 @@ fn mask_rows(states: &[XbarState], mask_col: usize) -> Vec<usize> {
             let mut bits = word;
             while bits != 0 {
                 let b = bits.trailing_zeros() as usize;
-                rows.push(x * XBAR_ROWS + w * 32 + b);
+                rows.push(x * XBAR_ROWS + w * WORD_BITS + b);
                 bits &= bits - 1;
             }
         }

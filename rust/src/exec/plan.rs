@@ -233,7 +233,7 @@ mod tests {
                 let mut st = XbarState::new(160);
                 for c in 0..32 {
                     for w in 0..WORDS {
-                        st.planes[c][w] = rng.next_u32();
+                        st.planes[c][w] = rng.next_u64();
                     }
                 }
                 st

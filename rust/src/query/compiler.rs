@@ -615,12 +615,31 @@ impl<'a> Compiler<'a> {
             (1u64 << a.len) - 1
         };
         let mk = |op, v| PimInstruction::with_imm(op, a, d, v);
+        // The engine's CmpImm ops truncate the immediate to the operand's
+        // low `a.len` bits (ISA contract), so any immediate wider than the
+        // attribute MUST be canonicalized here: an a.len-bit value can never
+        // equal (or exceed) an out-of-range constant, making each predicate
+        // a compile-time constant mask.
         match op {
-            CmpOp::Eq => self.emit(mk(Opcode::EqImm, value), cat),
-            CmpOp::Ne => self.emit(mk(Opcode::NeImm, value), cat),
+            CmpOp::Eq => {
+                if value > max {
+                    self.emit(PimInstruction::unary(Opcode::Reset, d, d), cat);
+                } else {
+                    self.emit(mk(Opcode::EqImm, value), cat);
+                }
+            }
+            CmpOp::Ne => {
+                if value > max {
+                    self.emit(PimInstruction::unary(Opcode::Set, d, d), cat);
+                } else {
+                    self.emit(mk(Opcode::NeImm, value), cat);
+                }
+            }
             CmpOp::Lt => {
                 if value == 0 {
                     self.emit(PimInstruction::unary(Opcode::Reset, d, d), cat);
+                } else if value > max {
+                    self.emit(PimInstruction::unary(Opcode::Set, d, d), cat);
                 } else {
                     self.emit(mk(Opcode::LtImm, value), cat);
                 }
@@ -642,6 +661,8 @@ impl<'a> Compiler<'a> {
             CmpOp::Ge => {
                 if value == 0 {
                     self.emit(PimInstruction::unary(Opcode::Set, d, d), cat);
+                } else if value > max {
+                    self.emit(PimInstruction::unary(Opcode::Reset, d, d), cat);
                 } else {
                     self.emit(mk(Opcode::GtImm, value - 1), cat);
                 }
@@ -1257,6 +1278,78 @@ mod tests {
         let li = &c[1];
         assert!(li.steps.iter().any(|s| s.instr.op == Opcode::Lt
             && s.instr.src_b.is_some()));
+    }
+
+    /// Differential check at the immediate-width boundary: `p_size` is 6
+    /// bits, so immediates above 63 can never match stored data. The engine
+    /// truncates CmpImm immediates to the operand width (ISA contract), so
+    /// the compiler must canonicalize wide immediates to constant Set/Reset
+    /// masks — otherwise e.g. `p_size = 64` would alias to `p_size = 0`.
+    #[test]
+    fn cmp_imm_width_boundary_matches_scalar_semantics() {
+        use crate::exec::engine::{exec_steps_native, XbarState};
+        use crate::util::bits::XBAR_ROWS;
+
+        let (cfg, l) = layouts();
+        let lay = l.rel(RelId::Part);
+        let slot = lay.slot("p_size").unwrap();
+        let bits = slot.attr.bits;
+        let max = (1u64 << bits) - 1;
+        let scalar = |op: CmpOp, v: u64, imm: u64| match op {
+            CmpOp::Eq => v == imm,
+            CmpOp::Ne => v != imm,
+            CmpOp::Lt => v < imm,
+            CmpOp::Gt => v > imm,
+            CmpOp::Le => v <= imm,
+            CmpOp::Ge => v >= imm,
+        };
+
+        let ops = [CmpOp::Eq, CmpOp::Ne, CmpOp::Lt, CmpOp::Gt, CmpOp::Le, CmpOp::Ge];
+        let imms = [max - 1, max, max + 1, max + 2, u64::MAX];
+        for op in ops {
+            for imm in imms {
+                let rq = RelQuery {
+                    rel: RelId::Part,
+                    filter: Pred::CmpImm {
+                        attr: "p_size",
+                        op,
+                        value: imm,
+                    },
+                    group_by: vec![],
+                    aggregates: vec![],
+                };
+                let c = Compiler::compile(&rq, lay, cfg.xbar_cols).unwrap();
+                // no surviving CmpImm may carry an immediate the engine
+                // would truncate (LtImm's exclusive bound may sit at max+1)
+                for s in &c.steps {
+                    let bound = if s.instr.op == Opcode::LtImm { max + 1 } else { max };
+                    if matches!(
+                        s.instr.op,
+                        Opcode::EqImm | Opcode::NeImm | Opcode::LtImm | Opcode::GtImm
+                    ) {
+                        assert!(
+                            s.instr.imm <= bound,
+                            "{op:?} {imm}: truncating imm {} survived",
+                            s.instr.imm
+                        );
+                    }
+                }
+                // execute and compare the mask against scalar semantics
+                let mut st = XbarState::new(cfg.xbar_cols);
+                for row in 0..XBAR_ROWS {
+                    let v = (row as u64) & max;
+                    st.write_value(row, ColRange::new(slot.start, bits), v);
+                    st.write_value(row, ColRange::new(lay.valid_col, 1), 1);
+                }
+                let mut states = [st];
+                exec_steps_native(&mut states, &c.steps, c.mask_col);
+                for row in 0..XBAR_ROWS {
+                    let v = (row as u64) & max;
+                    let got = states[0].value_at(row, ColRange::new(c.mask_col, 1)) == 1;
+                    assert_eq!(got, scalar(op, v, imm), "{op:?} {imm} row {row} (v={v})");
+                }
+            }
+        }
     }
 
     #[test]

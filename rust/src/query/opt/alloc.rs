@@ -367,7 +367,7 @@ mod tests {
                 let mut st = XbarState::new(cfg.xbar_cols);
                 for col in 0..l.rel(rq.rel).compute_base {
                     for w in 0..WORDS {
-                        st.planes[col][w] = rng.next_u32();
+                        st.planes[col][w] = rng.next_u64();
                     }
                 }
                 let mut s1 = vec![st];

@@ -23,6 +23,11 @@
 //! * **Lifetime reallocation** ([`alloc::realloc`]) — replaces the LIFO
 //!   column discipline with first-fit allocation over actual live
 //!   intervals, shrinking `peak_inter_cells` (Table 5 "Inter. cells").
+//! * **Shared-scan analysis** ([`sharedscan`]) — the cross-*query*
+//!   generalization of the value-numbering CSE: each optimized program
+//!   is split at its last mask write and the filter prefix is keyed by
+//!   a renaming-normalized serialization, so the service handle can run
+//!   one shared scan for many prepared queries over a relation.
 //!
 //! Correctness contract (enforced by `tests/opt_equivalence.rs`): `-O2`
 //! outputs are bit-identical to `-O0` for every query, total cycles never
@@ -33,6 +38,7 @@
 
 mod alloc;
 mod passes;
+pub mod sharedscan;
 
 use std::fmt;
 use std::str::FromStr;

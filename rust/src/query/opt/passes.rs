@@ -17,15 +17,16 @@ use crate::query::compiler::Step;
 
 /// How many planes of `src_a` and `src_b` the engine actually reads,
 /// mirroring [`crate::exec::engine::exec_instr`]'s plane accesses (e.g. a
-/// broadcast And reads one plane of its second operand; Add/Mul clip
-/// their reads to the destination width).
+/// broadcast And reads one plane of its second operand; Add/AddImm/Mul
+/// clip their reads to the destination width).
 pub(super) fn read_lens(i: &PimInstruction) -> (usize, usize) {
     let al = i.src_a.len as usize;
     let bl = i.src_b.map(|b| b.len as usize).unwrap_or(0);
     let dl = i.dst.len as usize;
     match i.op {
-        Opcode::EqImm | Opcode::NeImm | Opcode::LtImm | Opcode::GtImm | Opcode::AddImm => (al, 0),
+        Opcode::EqImm | Opcode::NeImm | Opcode::LtImm | Opcode::GtImm => (al, 0),
         Opcode::Eq | Opcode::Lt => (al, bl),
+        Opcode::AddImm => (al.min(dl), 0),
         Opcode::Add => (al.min(dl), bl.min(dl)),
         Opcode::Mul => (al.min(dl), bl),
         Opcode::Set | Opcode::Reset => (0, 0),
@@ -53,10 +54,10 @@ fn write_span(i: &PimInstruction) -> Option<ColRange> {
         Opcode::EqImm | Opcode::NeImm | Opcode::LtImm | Opcode::GtImm | Opcode::Eq | Opcode::Lt => {
             Some(ColRange::new(d.start as usize, 1))
         }
-        Opcode::AddImm | Opcode::Not | Opcode::And | Opcode::Or => {
+        Opcode::Not | Opcode::And | Opcode::Or => {
             Some(ColRange::new(d.start as usize, al))
         }
-        Opcode::Add | Opcode::Mul | Opcode::Set | Opcode::Reset => Some(d),
+        Opcode::AddImm | Opcode::Add | Opcode::Mul | Opcode::Set | Opcode::Reset => Some(d),
         Opcode::ReduceSum | Opcode::ReduceMin | Opcode::ReduceMax | Opcode::ColumnTransform => None,
     }
 }
@@ -223,9 +224,11 @@ fn zero_row_exec(vals: &mut [bool], i: &PimInstruction) {
             vals[d.start as usize] = if i.op == Opcode::Eq { va == vb } else { va < vb };
         }
         Opcode::AddImm => {
-            let v = value_of(vals, a);
-            let imm = (i.imm as u128) & ones(al);
-            store(vals, d.start as usize, al, (v + imm) & ones(al));
+            // mirrors Add: source zero-extends to the destination width,
+            // the immediate is truncated to it, carries fill every dst plane
+            let v = value_of(vals, ColRange::new(a.start as usize, al.min(dl)));
+            let imm = (i.imm as u128) & ones(dl);
+            store(vals, d.start as usize, dl, (v + imm) & ones(dl));
         }
         Opcode::Add => {
             let b = i.src_b.expect("add");
@@ -565,7 +568,7 @@ mod tests {
                 let mut st = XbarState::new(total);
                 for c in 0..data_cols {
                     for w in 0..WORDS {
-                        st.planes[c][w] = rng.next_u32();
+                        st.planes[c][w] = rng.next_u64();
                     }
                 }
                 st

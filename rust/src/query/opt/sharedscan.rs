@@ -1,0 +1,356 @@
+//! Shared-scan analysis: split an optimized program into a *filter
+//! prefix* (everything up to and including the last write of the mask
+//! column) and a *suffix* (group masks, arithmetic, reduces, read-out),
+//! and derive a canonical byte key for the prefix such that **byte
+//! equality of keys implies the prefixes compute the identical mask
+//! function** over the relation's data and VALID columns.
+//!
+//! When the [`crate::api::Pimdb`] plan cache holds several prepared
+//! queries over one relation whose filter prefixes agree — the same
+//! predicate compiled into different plans (different aggregates, or a
+//! filter-only twin), possibly with *different* compute-column placement
+//! after `-O2` lifetime reallocation — the handle executes the shared
+//! prefix once, caches the resulting mask planes per relation, and
+//! replays them into every later consumer, executing only its suffix
+//! (paper §4: the scan is the dominant phase of every bulk-bitwise
+//! query, so sharing it across a prepared workload amortizes the
+//! per-query bit-serial compare chains).
+//!
+//! The key is *renaming-normalized*: compute-area columns (at or above
+//! `compute_base`) are mapped to canonical ids in order of first
+//! appearance, while data and VALID columns keep their absolute ids.
+//! Two prefixes that differ only in scratch-column placement therefore
+//! key identically; anything that can change the mask function — opcode,
+//! widths, immediates, data columns read, the mask column's role — is in
+//! the byte stream. The analysis is conservative: any shape it cannot
+//! prove safe yields `None` and the program simply runs unshared.
+
+use crate::pim::isa::{ColRange, Opcode};
+use crate::query::compiler::CompiledRelQuery;
+
+use super::passes::accesses;
+
+/// Shared-scan metadata of one compiled relation program, computed once
+/// at prepare time and stored alongside the cached plan.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ScanInfo {
+    /// Steps `[0, prefix_len)` are the shared filter prefix; the suffix
+    /// starts at `prefix_len`.
+    pub prefix_len: usize,
+    /// Canonical renaming-normalized serialization of the prefix. Equal
+    /// bytes (for programs over the same relation) imply the identical
+    /// mask function into the mask column.
+    pub key: Vec<u8>,
+}
+
+/// Analyze one optimized program. `None` when the program has no mask
+/// write or any safety condition fails (the caller runs it unshared):
+///
+/// 1. the prefix contains no side-effecting step (a reduce's output
+///    would be lost when the prefix is skipped);
+/// 2. the prefix writes only compute-area columns (its mask is then a
+///    pure function of data/VALID columns and the zeroed compute area);
+/// 3. replaying only the mask planes reproduces what the suffix
+///    observes: every suffix read of a prefix-written compute column
+///    other than the mask column must be overwritten by the suffix
+///    first (compute columns the prefix dirtied are zero on the replay
+///    path — `clear_compute` re-zeroes them after every execution);
+/// 4. every operand range normalizes contiguously (see [`scan_key`]).
+pub fn scan_info(c: &CompiledRelQuery) -> Option<ScanInfo> {
+    let prefix_len = split_point(c)?;
+    // (1) no side effects inside the prefix
+    if c.steps[..prefix_len].iter().any(|s| {
+        matches!(
+            s.instr.op,
+            Opcode::ReduceSum | Opcode::ReduceMin | Opcode::ReduceMax | Opcode::ColumnTransform
+        )
+    }) {
+        return None;
+    }
+    let mut prefix_written = vec![false; cols_bound(c)];
+    for s in &c.steps[..prefix_len] {
+        let (_, write) = accesses(&s.instr);
+        if let Some(w) = write {
+            // (2) prefix writes stay inside the compute area
+            if (w.start as usize) < c.compute_base {
+                return None;
+            }
+            for col in w.start as usize..w.end() {
+                prefix_written[col] = true;
+            }
+        }
+    }
+    // (3) suffix reads of prefix-written columns: mask only, or
+    // written-before-read within the suffix itself
+    let mut suffix_written = vec![false; prefix_written.len()];
+    for s in &c.steps[prefix_len..] {
+        let (reads, write) = accesses(&s.instr);
+        for r in &reads {
+            for col in r.start as usize..r.end() {
+                if col != c.mask_col && prefix_written[col] && !suffix_written[col] {
+                    return None;
+                }
+            }
+        }
+        if let Some(w) = write {
+            for col in w.start as usize..w.end() {
+                suffix_written[col] = true;
+            }
+        }
+    }
+    let key = scan_key(c, prefix_len)?;
+    Some(ScanInfo { prefix_len, key })
+}
+
+/// One past the last write to the mask column; `None` when nothing
+/// writes it. By construction no suffix step writes the mask column, so
+/// the mask planes at program end equal the mask planes at the split —
+/// the miss path can capture them after a full run.
+fn split_point(c: &CompiledRelQuery) -> Option<usize> {
+    let mut last = None;
+    for (i, s) in c.steps.iter().enumerate() {
+        let (_, write) = accesses(&s.instr);
+        if write.is_some_and(|w| (w.start as usize) <= c.mask_col && c.mask_col < w.end()) {
+            last = Some(i);
+        }
+    }
+    last.map(|i| i + 1)
+}
+
+fn cols_bound(c: &CompiledRelQuery) -> usize {
+    let mut m = c.mask_col + 1;
+    for s in &c.steps {
+        let (reads, write) = accesses(&s.instr);
+        for r in reads.iter().chain(write.iter()) {
+            m = m.max(r.end());
+        }
+    }
+    m
+}
+
+/// Canonical-id assigner: data/VALID columns (below `compute_base`) keep
+/// their absolute id; compute-area columns get sequential ids starting
+/// at `CANON_BASE` in order of first appearance.
+struct Canon {
+    compute_base: usize,
+    map: Vec<Option<u32>>,
+    next: u32,
+}
+
+/// Canonical ids of compute-area columns start here — far above any
+/// physical column id, so the two id spaces cannot collide in the key.
+const CANON_BASE: u32 = 1 << 20;
+
+impl Canon {
+    fn new(compute_base: usize, ncols: usize) -> Canon {
+        Canon {
+            compute_base,
+            map: vec![None; ncols],
+            next: CANON_BASE,
+        }
+    }
+
+    fn id(&mut self, col: usize) -> u32 {
+        if col < self.compute_base {
+            return col as u32;
+        }
+        // serialized operand ranges are the instructions' raw ranges,
+        // which can reach past the clipped-access bound the map was
+        // sized from (e.g. a source wider than its read)
+        if col >= self.map.len() {
+            self.map.resize(col + 1, None);
+        }
+        *self.map[col].get_or_insert_with(|| {
+            let id = self.next;
+            self.next += 1;
+            id
+        })
+    }
+
+    /// Canonical (start, len) of a range, `None` when its columns do not
+    /// normalize to consecutive ids (a range straddling the data/compute
+    /// boundary, or interleaving two previously-seen scratch regions —
+    /// such a prefix is not safely renamable, so the program runs
+    /// unshared).
+    fn range(&mut self, r: ColRange) -> Option<(u32, u16)> {
+        let first = self.id(r.start as usize);
+        for k in 1..r.len as usize {
+            if self.id(r.start as usize + k) != first + k as u32 {
+                return None;
+            }
+        }
+        Some((first, r.len as u16))
+    }
+}
+
+/// Serialize the prefix under first-appearance renaming. The stream
+/// covers everything the mask function depends on: per step the opcode,
+/// immediate (for immediate-carrying ops), and each operand range as
+/// `(canonical start, len)`; the trailer is the canonical id of the
+/// mask column, so two prefixes only match when their result lands in
+/// the same (renamed) place.
+fn scan_key(c: &CompiledRelQuery, prefix_len: usize) -> Option<Vec<u8>> {
+    let mut canon = Canon::new(c.compute_base, cols_bound(c));
+    let mut buf: Vec<u8> = Vec::with_capacity(prefix_len * 16);
+    for s in &c.steps[..prefix_len] {
+        let i = &s.instr;
+        buf.push(i.op as u8);
+        if i.op.has_imm() {
+            buf.extend_from_slice(&i.imm.to_le_bytes());
+        }
+        let mut put = |r: ColRange, canon: &mut Canon| -> Option<()> {
+            let (start, len) = canon.range(r)?;
+            buf.extend_from_slice(&start.to_le_bytes());
+            buf.extend_from_slice(&len.to_le_bytes());
+            Some(())
+        };
+        put(i.src_a, &mut canon)?;
+        match i.src_b {
+            Some(b) => {
+                buf.push(1);
+                put(b, &mut canon)?;
+            }
+            None => buf.push(0),
+        }
+        put(i.dst, &mut canon)?;
+    }
+    let mask_id = canon.id(c.mask_col);
+    buf.extend_from_slice(&mask_id.to_le_bytes());
+    Some(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::endurance::OpCategory;
+    use crate::pim::isa::PimInstruction;
+    use crate::query::compiler::{CompiledRelQuery, ReadKind, Step};
+
+    fn step(instr: PimInstruction) -> Step {
+        Step {
+            instr,
+            category: OpCategory::Filter,
+        }
+    }
+
+    /// A minimal program shell: data cols [0, 24), VALID at 24, compute
+    /// area from 25.
+    fn program(steps: Vec<Step>, mask_col: usize) -> CompiledRelQuery {
+        CompiledRelQuery {
+            rel: crate::db::schema::RelId::Supplier,
+            steps,
+            read: ReadKind::FilterMask,
+            groups: vec![],
+            outputs: vec![],
+            n_reduces: 0,
+            mask_col,
+            peak_inter_cells: 0,
+            spans: vec![],
+            compute_base: 25,
+            valid_col: 24,
+        }
+    }
+
+    fn filter_steps(mask: usize, tmp: usize) -> Vec<Step> {
+        let a = ColRange::new(0, 8);
+        vec![
+            step(PimInstruction::with_imm(
+                Opcode::LtImm,
+                a,
+                ColRange::new(tmp, 1),
+                50,
+            )),
+            step(PimInstruction::binary(
+                Opcode::And,
+                ColRange::new(tmp, 1),
+                ColRange::new(24, 1),
+                ColRange::new(mask, 1),
+            )),
+        ]
+    }
+
+    #[test]
+    fn split_covers_last_mask_write_and_key_is_renaming_invariant() {
+        let mut p1 = filter_steps(30, 26);
+        p1.push(step(PimInstruction::unary(
+            Opcode::ReduceSum,
+            ColRange::new(30, 1),
+            ColRange::new(30, 1),
+        )));
+        let c1 = program(p1, 30);
+        let i1 = scan_info(&c1).expect("shareable");
+        assert_eq!(i1.prefix_len, 2);
+
+        // same mask function, every compute column somewhere else
+        let mut p2 = filter_steps(41, 33);
+        p2.push(step(PimInstruction::unary(
+            Opcode::ReduceSum,
+            ColRange::new(41, 1),
+            ColRange::new(41, 1),
+        )));
+        let c2 = program(p2, 41);
+        let i2 = scan_info(&c2).expect("shareable");
+        assert_eq!(i1.key, i2.key, "renaming must not change the key");
+    }
+
+    #[test]
+    fn key_is_sensitive_to_immediates_data_columns_and_opcodes() {
+        let base = scan_info(&program(filter_steps(30, 26), 30)).unwrap();
+        // different immediate
+        let mut other = filter_steps(30, 26);
+        other[0].instr.imm = 51;
+        assert_ne!(base.key, scan_info(&program(other, 30)).unwrap().key);
+        // different data column
+        let mut other = filter_steps(30, 26);
+        other[0].instr.src_a = ColRange::new(8, 8);
+        assert_ne!(base.key, scan_info(&program(other, 30)).unwrap().key);
+        // different opcode
+        let mut other = filter_steps(30, 26);
+        other[0].instr.op = Opcode::GtImm;
+        assert_ne!(base.key, scan_info(&program(other, 30)).unwrap().key);
+    }
+
+    #[test]
+    fn reduce_inside_prefix_bails() {
+        let a = ColRange::new(0, 8);
+        let m = ColRange::new(30, 1);
+        let p = vec![
+            step(PimInstruction::with_imm(Opcode::LtImm, a, m, 50)),
+            step(PimInstruction::unary(Opcode::ReduceSum, a, a)),
+            // a second mask write pulls the reduce into the prefix
+            step(PimInstruction::with_imm(Opcode::LtImm, a, m, 50)),
+        ];
+        assert!(scan_info(&program(p, 30)).is_none());
+    }
+
+    #[test]
+    fn suffix_read_of_prefix_temp_bails_unless_rewritten_first() {
+        let a = ColRange::new(0, 8);
+        let t = ColRange::new(26, 1);
+        let m = ColRange::new(30, 1);
+        // suffix reads the prefix temp t directly: not replayable
+        let p = vec![
+            step(PimInstruction::with_imm(Opcode::LtImm, a, t, 50)),
+            step(PimInstruction::binary(Opcode::And, t, ColRange::new(24, 1), m)),
+            step(PimInstruction::binary(Opcode::And, a, t, ColRange::new(40, 8))),
+        ];
+        assert!(scan_info(&program(p, 30)).is_none());
+
+        // suffix overwrites t before reading it: replayable
+        let p = vec![
+            step(PimInstruction::with_imm(Opcode::LtImm, a, t, 50)),
+            step(PimInstruction::binary(Opcode::And, t, ColRange::new(24, 1), m)),
+            step(PimInstruction::with_imm(Opcode::GtImm, a, t, 3)),
+            step(PimInstruction::binary(Opcode::And, a, t, ColRange::new(40, 8))),
+        ];
+        let info = scan_info(&program(p, 30)).expect("write-before-read is safe");
+        assert_eq!(info.prefix_len, 2);
+    }
+
+    #[test]
+    fn programs_without_mask_writes_are_not_shareable() {
+        let a = ColRange::new(0, 8);
+        let p = vec![step(PimInstruction::unary(Opcode::ReduceSum, a, a))];
+        assert!(scan_info(&program(p, 30)).is_none());
+    }
+}

@@ -8,7 +8,7 @@ use std::rc::Rc;
 use crate::exec::engine::{self, ExecOutputs, XbarState};
 use crate::pim::isa::{ColRange, Opcode, PimInstruction};
 use crate::query::compiler::Step;
-use crate::util::bits::{PLANES, WORDS, XB_TILE};
+use crate::util::bits::{KERNEL_WORDS, PLANES, WORDS, XB_TILE};
 
 /// Loaded PJRT executables, keyed by kernel name.
 pub struct Runtime {
@@ -94,19 +94,28 @@ pub fn runtime_available() -> bool {
 }
 
 // --- literal packing ---------------------------------------------------------
+//
+// The engine packs planes as `[u64; WORDS]`; the compiled kernels keep the
+// original `u32[.., KERNEL_WORDS]` ABI. Each u64 word splits into (lo, hi)
+// u32 halves on gather and recombines on scatter — rows stay in the same
+// order because word `w` covers rows `64w..64w+63` and the two halves land
+// at kernel words `2w` (rows `64w..`) and `2w+1` (rows `64w+32..`).
 
 fn gather_planes(states: &[XbarState], tile: &[usize], r: ColRange, nplanes: usize) -> xla::Literal {
-    let mut flat = vec![0u32; XB_TILE * nplanes * WORDS];
+    let mut flat = vec![0u32; XB_TILE * nplanes * KERNEL_WORDS];
     for (ti, &si) in tile.iter().enumerate() {
         let st = &states[si];
         for i in 0..(r.len as usize).min(nplanes) {
             let p = &st.planes[r.start as usize + i];
-            let base = (ti * nplanes + i) * WORDS;
-            flat[base..base + WORDS].copy_from_slice(p);
+            let base = (ti * nplanes + i) * KERNEL_WORDS;
+            for w in 0..WORDS {
+                flat[base + 2 * w] = p[w] as u32;
+                flat[base + 2 * w + 1] = (p[w] >> 32) as u32;
+            }
         }
     }
     xla::Literal::vec1(&flat)
-        .reshape(&[XB_TILE as i64, nplanes as i64, WORDS as i64])
+        .reshape(&[XB_TILE as i64, nplanes as i64, KERNEL_WORDS as i64])
         .expect("reshape planes")
 }
 
@@ -117,9 +126,9 @@ fn imm_literal(imm: u64, n: usize) -> xla::Literal {
 }
 
 fn ones_mask_literal() -> xla::Literal {
-    let flat = vec![u32::MAX; XB_TILE * WORDS];
+    let flat = vec![u32::MAX; XB_TILE * KERNEL_WORDS];
     xla::Literal::vec1(&flat)
-        .reshape(&[XB_TILE as i64, WORDS as i64])
+        .reshape(&[XB_TILE as i64, KERNEL_WORDS as i64])
         .expect("reshape mask")
 }
 
@@ -132,9 +141,11 @@ fn scatter_planes(
 ) {
     for (ti, &si) in tile.iter().enumerate() {
         for i in 0..dst.len as usize {
-            let base = (ti * nplanes + i) * WORDS;
-            states[si].planes[dst.start as usize + i]
-                .copy_from_slice(&out[base..base + WORDS]);
+            let base = (ti * nplanes + i) * KERNEL_WORDS;
+            let p = &mut states[si].planes[dst.start as usize + i];
+            for w in 0..WORDS {
+                p[w] = (out[base + 2 * w] as u64) | ((out[base + 2 * w + 1] as u64) << 32);
+            }
         }
     }
 }
@@ -142,7 +153,9 @@ fn scatter_planes(
 fn scatter_mask(out: &[u32], states: &mut [XbarState], tile: &[usize], col: usize, invert: bool) {
     for (ti, &si) in tile.iter().enumerate() {
         for w in 0..WORDS {
-            let v = out[ti * WORDS + w];
+            let lo = out[ti * KERNEL_WORDS + 2 * w];
+            let hi = out[ti * KERNEL_WORDS + 2 * w + 1];
+            let v = (lo as u64) | ((hi as u64) << 32);
             states[si].planes[col][w] = if invert { !v } else { v };
         }
     }
@@ -270,9 +283,10 @@ fn exec_tile(
         | Opcode::And
         | Opcode::Or
         | Opcode::ColumnTransform => {
+            let mut scratch = engine::Scratch::new();
             for &si in tile {
                 let mut dummy = Vec::new();
-                engine::exec_instr(&mut states[si], instr, &mut dummy);
+                engine::exec_instr(&mut states[si], instr, &mut dummy, &mut scratch);
             }
         }
     }
@@ -329,8 +343,8 @@ mod tests {
         for (row, &v) in vals.iter().enumerate() {
             for b in 0..bits {
                 if (v >> b) & 1 == 1 {
-                    let w = &mut st.planes[start + b][row / 32];
-                    *w |= 1 << (row % 32);
+                    let w = &mut st.planes[start + b][row / 64];
+                    *w |= 1u64 << (row % 64);
                 }
             }
         }

@@ -7,9 +7,11 @@
 //! parser reassigns ids (see python/compile/aot.py and
 //! /opt/xla-example/README.md).
 //!
-//! The functional state is the same bit-plane packing the kernels use, so
-//! literals cross the boundary without reshuffling: planes `u32[XB, 64,
-//! 32]`, masks `u32[XB, 32]`, immediates as `u32[64]` bit vectors.
+//! The functional state packs planes as `[u64; 16]` per column (see
+//! `util::bits`); the compiled kernels keep their original u32 ABI, so the
+//! boundary splits each u64 word into (lo, hi) u32 halves on gather and
+//! recombines on scatter: planes `u32[XB, 64, 32]`, masks `u32[XB, 32]`,
+//! immediates as `u32[64]` bit vectors.
 //!
 //! Ops not worth a PJRT round-trip (single-plane Set/Reset/Not/And/Or and
 //! result-mask post-processing) run on the host word-wise — they are not

@@ -1,15 +1,24 @@
 //! Packed bit containers used across the functional PIM engine.
 //!
-//! The crossbar row axis (1024 rows) packs into `WORDS = 32` u32 words —
-//! the same layout the L1 Pallas kernels use (DESIGN.md §Hardware-
-//! Adaptation), so literals cross the PJRT boundary without reshuffling.
+//! The crossbar row axis (1024 rows) packs into `WORDS = 16` u64 words —
+//! one cache line per bit-plane, sized so the fixed-width inner loops in
+//! `exec::engine` autovectorize. The L1 Pallas kernels keep their own
+//! `u32[KERNEL_WORDS]` plane layout (DESIGN.md §Hardware-Adaptation);
+//! the PJRT boundary in `runtime::exec` splits each u64 into lo/hi u32
+//! halves on gather and recombines on scatter, so the kernel ABI is
+//! unchanged by the host-side word width.
 
 /// Crossbar rows (paper Table 3).
 pub const XBAR_ROWS: usize = 1024;
 /// Crossbar columns (paper Table 3).
 pub const XBAR_COLS: usize = 512;
-/// u32 words per bit-plane column.
-pub const WORDS: usize = XBAR_ROWS / 32;
+/// Bits per packed plane word (host-side kernel word width).
+pub const WORD_BITS: usize = 64;
+/// u64 words per bit-plane column.
+pub const WORDS: usize = XBAR_ROWS / WORD_BITS;
+/// u32 words per bit-plane column in the L1 Pallas kernel ABI (the PJRT
+/// literals keep the original u32 packing; see `runtime::exec`).
+pub const KERNEL_WORDS: usize = XBAR_ROWS / 32;
 /// Bit-planes carried by the generic ALU executables.
 pub const PLANES: usize = 64;
 /// Crossbars per exported executable invocation (must match python XB_TILE).
@@ -97,9 +106,9 @@ impl std::fmt::Debug for BitMatrix {
 }
 
 /// One bit per crossbar row, packed: a crossbar *column* (e.g. a filter
-/// result mask). Layout-compatible with the kernels' `u32[WORDS]`.
+/// result mask). Same `u64[WORDS]` packing as the engine's bit-planes.
 #[derive(Clone, Debug, PartialEq, Eq)]
-pub struct RowMask(pub [u32; WORDS]);
+pub struct RowMask(pub [u64; WORDS]);
 
 impl Default for RowMask {
     fn default() -> Self {
@@ -110,7 +119,7 @@ impl Default for RowMask {
 impl RowMask {
     /// Every row selected.
     pub fn all_ones() -> Self {
-        RowMask([u32::MAX; WORDS])
+        RowMask([u64::MAX; WORDS])
     }
 
     /// Only the first `n` rows set.
@@ -125,16 +134,18 @@ impl RowMask {
     /// Whether `row` is selected.
     #[inline]
     pub fn get(&self, row: usize) -> bool {
-        (self.0[row / 32] >> (row % 32)) & 1 == 1
+        debug_assert!(row < XBAR_ROWS, "RowMask::get row {row} out of range");
+        (self.0[row / WORD_BITS] >> (row % WORD_BITS)) & 1 == 1
     }
 
     /// Select or clear `row`.
     #[inline]
     pub fn set(&mut self, row: usize, v: bool) {
+        debug_assert!(row < XBAR_ROWS, "RowMask::set row {row} out of range");
         if v {
-            self.0[row / 32] |= 1 << (row % 32);
+            self.0[row / WORD_BITS] |= 1 << (row % WORD_BITS);
         } else {
-            self.0[row / 32] &= !(1 << (row % 32));
+            self.0[row / WORD_BITS] &= !(1 << (row % WORD_BITS));
         }
     }
 
@@ -145,7 +156,7 @@ impl RowMask {
 
     /// Row-wise AND.
     pub fn and(&self, o: &RowMask) -> RowMask {
-        let mut r = [0u32; WORDS];
+        let mut r = [0u64; WORDS];
         for (i, x) in r.iter_mut().enumerate() {
             *x = self.0[i] & o.0[i];
         }
@@ -154,7 +165,7 @@ impl RowMask {
 
     /// Row-wise OR.
     pub fn or(&self, o: &RowMask) -> RowMask {
-        let mut r = [0u32; WORDS];
+        let mut r = [0u64; WORDS];
         for (i, x) in r.iter_mut().enumerate() {
             *x = self.0[i] | o.0[i];
         }
@@ -163,7 +174,7 @@ impl RowMask {
 
     /// Row-wise complement.
     pub fn not(&self) -> RowMask {
-        let mut r = [0u32; WORDS];
+        let mut r = [0u64; WORDS];
         for (i, x) in r.iter_mut().enumerate() {
             *x = !self.0[i];
         }
@@ -177,13 +188,13 @@ impl RowMask {
 }
 
 /// Bit-plane set of one attribute over one crossbar: `planes[i][w]` holds
-/// bit `i` of rows `32w..32w+32`.
+/// bit `i` of rows `64w..64w+64`.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct PlaneSet {
     /// Number of bit-planes (attribute width).
     pub nplanes: usize,
     /// The packed planes, LSB first.
-    pub planes: Vec<[u32; WORDS]>,
+    pub planes: Vec<[u64; WORDS]>,
 }
 
 impl PlaneSet {
@@ -202,7 +213,7 @@ impl PlaneSet {
         for (r, &v) in values.iter().enumerate() {
             for i in 0..nplanes {
                 if (v >> i) & 1 == 1 {
-                    ps.planes[i][r / 32] |= 1 << (r % 32);
+                    ps.planes[i][r / WORD_BITS] |= 1 << (r % WORD_BITS);
                 }
             }
         }
@@ -217,7 +228,7 @@ impl PlaneSet {
                 let mut bits = self.planes[i][w];
                 while bits != 0 {
                     let b = bits.trailing_zeros() as usize;
-                    vals[w * 32 + b] |= 1 << i;
+                    vals[w * WORD_BITS + b] |= 1 << i;
                     bits &= bits - 1;
                 }
             }
@@ -229,7 +240,7 @@ impl PlaneSet {
     pub fn value_at(&self, row: usize) -> u64 {
         let mut v = 0u64;
         for i in 0..self.nplanes {
-            if (self.planes[i][row / 32] >> (row % 32)) & 1 == 1 {
+            if (self.planes[i][row / WORD_BITS] >> (row % WORD_BITS)) & 1 == 1 {
                 v |= 1 << i;
             }
         }

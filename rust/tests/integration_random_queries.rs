@@ -175,6 +175,73 @@ fn random_aggregates_match_oracle() {
     });
 }
 
+#[test]
+fn random_queries_bit_identical_at_o0_o2_and_1_2_8_workers() {
+    // the u64 word kernels must be bit-identical across opt level and
+    // every worker count: same reduce streams, same mask counts, same
+    // structured output (the shard merge restores serial crossbar order)
+    let db = Database::generate(0.001, 79);
+    check("random-workers", 12, |g| {
+        let rel = *g.pick(&[RelId::Lineitem, RelId::Supplier, RelId::Orders]);
+        let (attr, _) = rand_attr(g, rel);
+        let aggregates = if g.u64(0, 1) == 0 {
+            vec![
+                Aggregate {
+                    kind: AggKind::Sum,
+                    expr: ValExpr::Attr(attr),
+                    label: "s",
+                },
+                Aggregate {
+                    kind: AggKind::Count,
+                    expr: ValExpr::One,
+                    label: "n",
+                },
+            ]
+        } else {
+            vec![]
+        };
+        let kind = if aggregates.is_empty() {
+            QueryKind::FilterOnly
+        } else {
+            QueryKind::Full
+        };
+        let q = Query {
+            name: "fuzz_workers",
+            kind,
+            rels: vec![RelQuery {
+                rel,
+                filter: rand_pred(g, rel, 2),
+                group_by: vec![],
+                aggregates,
+            }],
+        };
+        let mut want = None;
+        for level in [
+            pimdb::query::opt::OptLevel::O0,
+            pimdb::query::opt::OptLevel::O2,
+        ] {
+            for p in [1usize, 2, 8] {
+                let cfg = SystemConfig {
+                    opt_level: level,
+                    parallelism: p,
+                    ..SystemConfig::default()
+                };
+                let r = engine::run_query(&cfg, &db, &q, engine::EngineKind::Native)
+                    .expect("compile+run");
+                match &want {
+                    None => want = Some(r.output),
+                    Some(w) => assert_eq!(
+                        w,
+                        &r.output,
+                        "drift at -{level} p={p} on {:?}",
+                        q.rels[0].filter
+                    ),
+                }
+            }
+        }
+    });
+}
+
 // --- failure injection -------------------------------------------------------
 
 #[test]

@@ -4,7 +4,7 @@
 //! and column ranges, and the sharded parallel executor is checked
 //! bit-identical to the serial interpreter at every shard/thread count.
 
-use pimdb::exec::engine::{exec_instr, exec_steps_native, XbarState};
+use pimdb::exec::engine::{exec_instr, exec_steps_native, Scratch, XbarState};
 use pimdb::exec::pimdb::EngineKind;
 use pimdb::exec::plan::{exec_steps_sharded, ExecPlan};
 use pimdb::pim::endurance::OpCategory;
@@ -19,10 +19,15 @@ fn load(st: &mut XbarState, start: usize, bits: usize, vals: &[u64]) {
     for (row, &v) in vals.iter().enumerate() {
         for b in 0..bits {
             if (v >> b) & 1 == 1 {
-                st.planes[start + b][row / 32] |= 1 << (row % 32);
+                st.planes[start + b][row / 64] |= 1 << (row % 64);
             }
         }
     }
+}
+
+/// One-shot `exec_instr` with a throwaway scratch arena.
+fn run(st: &mut XbarState, instr: &PimInstruction, out: &mut Vec<u128>) {
+    exec_instr(st, instr, out, &mut Scratch::new());
 }
 
 fn read(st: &XbarState, start: usize, bits: usize, row: usize) -> u64 {
@@ -49,17 +54,17 @@ fn and_or_not_match_scalar_oracle() {
         let a = ColRange::new(a_start, bits);
         let b = ColRange::new(b_start, bits);
         let mut out = Vec::new();
-        exec_instr(
+        run(
             &mut st,
             &PimInstruction::binary(Opcode::And, a, b, ColRange::new(d_start, bits)),
             &mut out,
         );
-        exec_instr(
+        run(
             &mut st,
             &PimInstruction::binary(Opcode::Or, a, b, ColRange::new(d_start + bits, bits)),
             &mut out,
         );
-        exec_instr(
+        run(
             &mut st,
             &PimInstruction::unary(Opcode::Not, a, ColRange::new(d_start + 2 * bits, bits)),
             &mut out,
@@ -94,7 +99,7 @@ fn broadcast_and_masks_per_row() {
         let mask_vals: Vec<u64> = (0..XBAR_ROWS).map(|_| g.u64(0, 1)).collect();
         load(&mut st, 90, 1, &mask_vals);
         let mut out = Vec::new();
-        exec_instr(
+        run(
             &mut st,
             &PimInstruction::binary(
                 Opcode::And,
@@ -122,7 +127,7 @@ fn reduce_sum_min_max_match_scalar_oracle() {
         let a = ColRange::new(start, bits);
         let mut out = Vec::new();
         for op in [Opcode::ReduceSum, Opcode::ReduceMin, Opcode::ReduceMax] {
-            exec_instr(&mut st, &PimInstruction::unary(op, a, a), &mut out);
+            run(&mut st, &PimInstruction::unary(op, a, a), &mut out);
         }
         let want_sum: u128 = vals.iter().map(|&v| v as u128).sum();
         let want_min = *vals.iter().min().unwrap() as u128;
@@ -144,7 +149,7 @@ fn column_transform_is_a_functional_noop() {
         load(&mut st, 0, bits, &vals);
         let before = st.planes.clone();
         let mut out = Vec::new();
-        exec_instr(
+        run(
             &mut st,
             &PimInstruction::unary(
                 Opcode::ColumnTransform,
@@ -167,7 +172,7 @@ fn random_states(seed: u64, n: usize) -> Vec<XbarState> {
             let mut st = XbarState::new(192);
             for c in 0..40 {
                 for w in 0..WORDS {
-                    st.planes[c][w] = rng.next_u32();
+                    st.planes[c][w] = rng.next_u64();
                 }
             }
             st

@@ -1,0 +1,94 @@
+#!/usr/bin/env python3
+"""Microbenchmark of the bit-plane kernel word layouts.
+
+Measures the per-plane inner loop of the functional engine in both word
+layouts — the pre-change ``[u32; 32]`` and the current ``[u64; 16]``
+(rust/src/util/bits.rs) — on the same 1024-row planes, mirroring
+``exec_instr``'s AND/OR/XOR/compare word loops. The work per word is
+identical; the u64 layout halves the word count per plane, so the
+measured ratio is the layout's kernel-level speedup independent of the
+host language. Emits ``BENCH {...}`` json lines compatible with
+tools/bench_capture.sh.
+
+Usage: python3 tools/kernel_bench.py [--json]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+ROWS = 1024
+PLANES = 32  # one 32-bit column's worth of planes
+COLS = 64  # distinct columns per iteration, keeps data out of registers
+REPS = 40
+
+
+def make_planes(words: int, bits: int, seed: int) -> list[list[int]]:
+    """COLS*PLANES planes of `words` words of `bits` bits each (xorshift)."""
+    mask = (1 << bits) - 1
+    x = seed | 1
+    out = []
+    for _ in range(COLS * PLANES):
+        plane = []
+        for _ in range(words):
+            x ^= (x << 13) & ((1 << 64) - 1)
+            x ^= x >> 7
+            x ^= (x << 17) & ((1 << 64) - 1)
+            plane.append(x & mask)
+        out.append(plane)
+    return out
+
+
+def kernel_pass(a: list[list[int]], b: list[list[int]], words: int, mask: int) -> int:
+    """One AND + OR + XOR + carry-chain sweep over every plane pair —
+    the op mix of a compare-plus-accumulate program step."""
+    acc = 0
+    for pa, pb in zip(a, b):
+        carry = 0
+        for w in range(words):
+            x = pa[w]
+            y = pb[w]
+            n = x & y
+            o = x | y
+            e = x ^ y
+            s = (e ^ carry) & mask
+            carry = (n | (e & carry)) >> (mask.bit_length() - 1)
+            acc ^= n ^ o ^ s
+    return acc
+
+
+def time_layout(words: int, bits: int) -> float:
+    mask = (1 << bits) - 1
+    a = make_planes(words, bits, 0x9E3779B9)
+    b = make_planes(words, bits, 0x85EBCA6B)
+    kernel_pass(a, b, words, mask)  # warmup
+    t0 = time.perf_counter()
+    sink = 0
+    for _ in range(REPS):
+        sink ^= kernel_pass(a, b, words, mask)
+    dt = time.perf_counter() - t0
+    assert sink is not None
+    return dt / REPS
+
+
+def main() -> None:
+    as_json = "--json" in sys.argv[1:]
+    t32 = time_layout(words=32, bits=32)
+    t64 = time_layout(words=16, bits=64)
+    ratio = t32 / t64
+    rows = [
+        {"name": "kernel/u32x32-layout", "ms_per_iter": round(t32 * 1e3, 3)},
+        {"name": "kernel/u64x16-layout", "ms_per_iter": round(t64 * 1e3, 3)},
+        {"name": "kernel/u64-over-u32-speedup", "ratio": round(ratio, 2)},
+    ]
+    for r in rows:
+        if as_json:
+            print("BENCH " + json.dumps(r, separators=(",", ":")))
+        else:
+            print(r)
+
+
+if __name__ == "__main__":
+    main()
