@@ -1,0 +1,259 @@
+"""Python mirror of the epoch bit-plane MVCC scheme in
+``rust/src/util/bits.rs`` (``EpochMask``) and ``rust/src/db/freerows.rs``
+(``EpochRowMap``).
+
+Same discipline as ``scanmirror.py`` / ``dmlmirror.py``: the authoring
+environment has no Rust toolchain, so the visibility rule is written
+here first, fuzz-validated against a from-scratch two-version oracle
+(``tests/test_epochmirror.py``), and ported line by line to Rust. The
+scripted begin/mutate/commit/abort interleaving of
+``golden_epoch_digest`` is pinned to the same constant in both languages
+(``GOLDEN_EPOCH_DIGEST`` here, asserted in the Rust unit tests of
+``freerows.rs``), so a one-sided change to the visibility rule breaks
+exactly one of the two suites.
+
+The rule being pinned: a DML batch edits a *shadow* copy of the per-row
+liveness plane while the *active* plane — what every reader pinned to
+the current epoch sees — stays frozen; commit atomically flips which
+plane is active and bumps the epoch; abort discards the shadow and
+charges no wear.
+"""
+
+from __future__ import annotations
+
+from dmlmirror import FNV_OFFSET, MASK64, FreeRowMap, _fnv1a_fold
+
+WORD_BITS = 64
+
+#: Cross-language pin: ``golden_epoch_digest()`` in both languages.
+GOLDEN_EPOCH_DIGEST = 0x6A415BD44B7C485C
+
+
+class EpochMask:
+    """Two-plane per-row visibility mask (mirror of the Rust struct).
+
+    One plane is *active* (committed visibility), the other the *shadow*
+    a batch edits; commit flips which index is active. Bits pack
+    LSB-first into 64-bit words like every other engine mask.
+    """
+
+    def __init__(self, nbits: int):
+        words = -(-nbits // WORD_BITS)  # div_ceil
+        self.nbits = nbits
+        self.active = 0
+        self.in_batch_flag = False
+        self.planes = [[0] * words, [0] * words]
+
+    @classmethod
+    def from_flags(cls, flags, nbits: int) -> "EpochMask":
+        assert len(flags) <= nbits, "more flags than rows"
+        m = cls(nbits)
+        for i, f in enumerate(flags):
+            if f:
+                m.planes[0][i // WORD_BITS] |= 1 << (i % WORD_BITS)
+        return m
+
+    def capacity(self) -> int:
+        return self.nbits
+
+    def in_batch(self) -> bool:
+        return self.in_batch_flag
+
+    def get(self, row: int) -> bool:
+        assert row < self.nbits
+        return (self.planes[self.active][row // WORD_BITS] >> (row % WORD_BITS)) & 1 == 1
+
+    def count_ones(self) -> int:
+        full = self.nbits // WORD_BITS
+        n = sum(bin(w).count("1") for w in self.planes[self.active][:full])
+        if self.nbits % WORD_BITS != 0:
+            tail = self.planes[self.active][full] & ((1 << (self.nbits % WORD_BITS)) - 1)
+            n += bin(tail).count("1")
+        return n
+
+    def begin_batch(self) -> None:
+        assert not self.in_batch_flag, "nested EpochMask batch"
+        self.planes[1 - self.active] = list(self.planes[self.active])
+        self.in_batch_flag = True
+
+    def set_pending(self, row: int, v: bool) -> None:
+        assert self.in_batch_flag and row < self.nbits
+        w = row // WORD_BITS
+        if v:
+            self.planes[1 - self.active][w] |= 1 << (row % WORD_BITS)
+        else:
+            self.planes[1 - self.active][w] &= ~(1 << (row % WORD_BITS))
+
+    def pending(self, row: int) -> bool:
+        assert self.in_batch_flag and row < self.nbits
+        return (self.planes[1 - self.active][row // WORD_BITS] >> (row % WORD_BITS)) & 1 == 1
+
+    def commit_batch(self) -> None:
+        assert self.in_batch_flag, "commit_batch outside a batch"
+        self.active = 1 - self.active
+        self.in_batch_flag = False
+
+    def abort_batch(self) -> None:
+        assert self.in_batch_flag, "abort_batch outside a batch"
+        self.in_batch_flag = False
+
+    def grow(self, rows: int) -> None:
+        self.nbits += rows
+        words = -(-self.nbits // WORD_BITS)
+        for p in self.planes:
+            p.extend([0] * (words - len(p)))
+
+
+def clone_map(fm: FreeRowMap) -> FreeRowMap:
+    """Mirror of ``FreeRowMap::clone`` (``#[derive(Clone)]`` in Rust)."""
+    c = FreeRowMap(capacity=0, initial_live=0, rows_per_xbar=fm.rows_per_xbar)
+    c.live = list(fm.live)
+    c.wear = list(fm.wear)
+    c.free_entries = set(fm.free_entries)
+    return c
+
+
+class EpochRowMap:
+    """Epoch-versioned row map: committed ``FreeRowMap`` + ``EpochMask``.
+
+    Take-out / put-back batch discipline (mirror of the Rust struct):
+    ``begin_batch`` hands the writer an owned clone of the committed map
+    to mutate lock-free; ``commit_batch`` takes it back, syncs the
+    shadow plane, flips visibility atomically and bumps the epoch;
+    ``abort_batch`` discards the shadow and charges no wear.
+    """
+
+    def __init__(self, committed: FreeRowMap):
+        flags = [committed.is_live(i) for i in range(committed.capacity())]
+        self.mask = EpochMask.from_flags(flags, committed.capacity())
+        self.committed_map = committed
+        self.epoch_ctr = 0
+        self.in_batch_flag = False
+
+    def epoch(self) -> int:
+        return self.epoch_ctr
+
+    def in_batch(self) -> bool:
+        return self.in_batch_flag
+
+    def committed(self) -> FreeRowMap:
+        return self.committed_map
+
+    def is_live(self, row: int) -> bool:
+        return self.mask.get(row)
+
+    def live_count(self) -> int:
+        return self.committed_map.live_count()
+
+    def charge_profile(self, totals) -> None:
+        assert not self.in_batch_flag, "charge_profile during a batch"
+        self.committed_map.charge_profile(totals)
+
+    def begin_batch(self) -> FreeRowMap:
+        assert not self.in_batch_flag, "nested DML batch on one relation"
+        self.in_batch_flag = True
+        self.mask.begin_batch()
+        return clone_map(self.committed_map)
+
+    def commit_batch(self, pending: FreeRowMap) -> None:
+        assert self.in_batch_flag, "commit_batch outside a batch"
+        if pending.capacity() > self.mask.capacity():
+            self.mask.grow(pending.capacity() - self.mask.capacity())
+        for row in range(pending.capacity()):
+            self.mask.set_pending(row, pending.is_live(row))
+        self.mask.commit_batch()
+        self.committed_map = pending
+        self.epoch_ctr += 1
+        self.in_batch_flag = False
+
+    def abort_batch(self) -> None:
+        assert self.in_batch_flag, "abort_batch outside a batch"
+        self.mask.abort_batch()
+        self.in_batch_flag = False
+
+
+# ---------------------------------------------------------------------------
+# golden pin
+# ---------------------------------------------------------------------------
+
+
+def golden_epoch_digest() -> int:
+    """Scripted begin/mutate/commit/abort interleaving digested to 64 bits.
+
+    A deterministic LCG drives 300 operations over a 48-row map (3
+    crossbars of 16 rows, 24 initially live). Every operation, every
+    allocator answer *and* committed-view probes taken mid-batch are
+    folded into an FNV-1a digest, so the digest pins the visibility rule
+    itself — a committed reader view must never move while a batch is in
+    flight.
+    """
+    em = EpochRowMap(FreeRowMap(capacity=48, initial_live=24, rows_per_xbar=16))
+    state = FNV_OFFSET
+    x = 7
+    pending = None
+    for _ in range(300):
+        x = (x * 6364136223846793005 + 1442695040888963407) & MASK64
+        op = x % 5
+        arg = (x >> 8) % 64
+        state = _fnv1a_fold(state, op)
+        if op == 0:  # begin a batch (no-op fold when one is in flight)
+            if pending is not None:
+                state = _fnv1a_fold(state, 0)
+            else:
+                pending = em.begin_batch()
+                state = _fnv1a_fold(state, 1)
+        elif op == 1:  # mutate the pending clone: alloc+charge / release / grow
+            if pending is None:
+                state = _fnv1a_fold(state, 2)
+            else:
+                kind = (x >> 16) % 3
+                if kind == 0:
+                    row = pending.alloc()
+                    state = _fnv1a_fold(state, 0xFFFF if row is None else row)
+                    if row is not None:
+                        pending.charge_row(row, (x >> 24) % 5 + 1)
+                elif kind == 1:
+                    row = None
+                    for k in range(pending.capacity()):
+                        cand = (arg + k) % pending.capacity()
+                        if pending.is_live(cand):
+                            row = cand
+                            break
+                    if row is None:
+                        state = _fnv1a_fold(state, 0xFFFE)
+                    else:
+                        pending.release(row)
+                        state = _fnv1a_fold(state, row)
+                else:
+                    pending.grow(16)
+                    state = _fnv1a_fold(state, pending.capacity())
+        elif op == 2:  # commit: visibility flips, epoch bumps
+            if pending is None:
+                state = _fnv1a_fold(state, 3)
+            else:
+                em.commit_batch(pending)
+                pending = None
+                state = _fnv1a_fold(state, em.epoch())
+        elif op == 3:  # abort: committed view and wear untouched
+            if pending is None:
+                state = _fnv1a_fold(state, 5)
+            else:
+                em.abort_batch()
+                pending = None
+                state = _fnv1a_fold(state, 4)
+        else:
+            # committed-view probe (+ reader wear charge when idle) —
+            # mid-batch probes must see the pre-batch state
+            if pending is None and (x >> 16) & 1 == 1:
+                totals = [((x >> 24) + 3 * r + 1) % 4 for r in range(16)]
+                em.charge_profile(totals)
+                state = _fnv1a_fold(state, sum(totals))
+            r = arg % em.committed().capacity()
+            state = _fnv1a_fold(state, int(em.is_live(r)) | (em.live_count() << 1))
+    state = _fnv1a_fold(state, em.epoch())
+    state = _fnv1a_fold(state, sum(em.committed().wear) & MASK64)
+    return state
+
+
+if __name__ == "__main__":
+    print(hex(golden_epoch_digest()))

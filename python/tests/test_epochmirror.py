@@ -1,0 +1,154 @@
+"""Fuzz + golden suite for the epoch visibility mirror (``epochmirror.py``).
+
+Validates the contract the Rust ``util::bits::EpochMask`` +
+``db::freerows::EpochRowMap`` pair promises:
+
+* the committed view (``is_live``/``live_count``/wear) is *frozen* while
+  a batch mutates its pending clone — snapshot stability, checked on
+  randomized begin/mutate/commit/abort interleavings against a
+  from-scratch two-version oracle (committed liveness vector + optional
+  pending vector);
+* commit atomically replaces the whole view and bumps the epoch; abort
+  leaves committed state and wear untouched (an aborted batch charges
+  no wear);
+* after every commit/abort the active mask plane equals the committed
+  map's liveness (the invariant the valid-AND elision relies on);
+* the interleaving digest is pinned cross-language via
+  ``GOLDEN_EPOCH_DIGEST`` (also asserted in ``rust/src/db/freerows.rs``).
+"""
+
+import random
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import epochmirror as m  # noqa: E402
+from dmlmirror import FreeRowMap  # noqa: E402
+
+
+def test_golden_epoch_digest_pin():
+    assert m.golden_epoch_digest() == m.GOLDEN_EPOCH_DIGEST
+
+
+def test_commit_flips_visibility_atomically():
+    em = m.EpochRowMap(FreeRowMap(capacity=8, initial_live=4, rows_per_xbar=8))
+    pending = em.begin_batch()
+    pending.release(1)
+    row = pending.alloc()
+    assert row == 1  # ties at wear 0 break to lowest index
+    pending.charge_row(row, 3)
+    # committed view frozen mid-batch
+    assert em.is_live(1)
+    assert em.live_count() == 4
+    assert em.committed().row_wear(1) == 0
+    em.commit_batch(pending)
+    assert em.epoch() == 1
+    assert em.committed().row_wear(1) == 3
+
+
+def test_abort_charges_no_wear_and_keeps_visibility():
+    em = m.EpochRowMap(FreeRowMap(capacity=8, initial_live=4, rows_per_xbar=8))
+    pending = em.begin_batch()
+    pending.release(0)
+    pending.charge_row(2, 99)
+    em.abort_batch()
+    assert em.epoch() == 0
+    assert em.is_live(0)
+    assert em.committed().row_wear(2) == 0
+    # the next batch starts from the committed state, not the shadow
+    p2 = em.begin_batch()
+    assert p2.is_live(0)
+    assert p2.row_wear(2) == 0
+
+
+def test_commit_grows_mask_to_pending_capacity():
+    em = m.EpochRowMap(FreeRowMap(capacity=4, initial_live=4, rows_per_xbar=4))
+    pending = em.begin_batch()
+    assert pending.alloc() is None
+    pending.grow(4)
+    assert pending.alloc() == 4
+    em.commit_batch(pending)
+    assert em.committed().capacity() == 8
+    assert em.is_live(4) and not em.is_live(5)
+    assert em.live_count() == 5
+
+
+def test_fuzz_interleavings_against_two_version_oracle():
+    rng = random.Random(0xE70C)
+    for _case in range(300):
+        cap = rng.randrange(1, 33)
+        live0 = rng.randrange(0, cap + 1)
+        em = m.EpochRowMap(FreeRowMap(capacity=cap, initial_live=live0, rows_per_xbar=8))
+        committed = [i < live0 for i in range(cap)]
+        pending = None  # (FreeRowMap clone, oracle liveness vector)
+        epoch = 0
+        prev_wear = list(em.committed().wear)
+        for _step in range(50):
+            op = rng.randrange(5)
+            if op == 0 and pending is None:
+                pending = (em.begin_batch(), list(committed))
+            elif op == 1 and pending is not None:
+                p, flags = pending
+                kind = rng.randrange(3)
+                if kind == 0:
+                    r = p.alloc()
+                    if r is not None:
+                        flags[r] = True
+                elif kind == 1:
+                    live_rows = [i for i, v in enumerate(flags) if v]
+                    if live_rows:
+                        r = rng.choice(live_rows)
+                        p.release(r)
+                        flags[r] = False
+                else:
+                    p.grow(8)
+                    flags.extend([False] * 8)
+            elif op == 2 and pending is not None:
+                p, flags = pending
+                em.commit_batch(p)
+                committed = flags
+                epoch += 1
+                pending = None
+            elif op == 3 and pending is not None:
+                em.abort_batch()
+                pending = None
+            # committed view == oracle committed vector, always —
+            # including mid-batch (snapshot stability)
+            assert em.epoch() == epoch
+            assert em.in_batch() == (pending is not None)
+            assert [em.is_live(r) for r in range(len(committed))] == committed
+            assert [
+                em.committed().is_live(r) for r in range(len(committed))
+            ] == committed
+            assert em.live_count() == sum(committed)
+            # active mask plane == committed liveness (padding rows dead)
+            assert em.mask.count_ones() == sum(committed)
+            # committed wear is monotone: a batch charges wear only at
+            # commit (pending wear replaces, never decreases per row on
+            # the surviving prefix), an abort charges none
+            wear = em.committed().wear
+            assert all(a >= b for a, b in zip(wear, prev_wear))
+            prev_wear = list(wear)
+
+
+def test_digest_is_sensitive_to_the_visibility_rule():
+    # breaking the publish step — committing the map but never flipping
+    # the mask plane, so readers keep the stale view — must change the
+    # digest (the mid-batch/post-commit probes fold ``is_live`` answers)
+    class StaleMask(m.EpochRowMap):
+        def commit_batch(self, pending):
+            assert self.in_batch_flag
+            if pending.capacity() > self.mask.capacity():
+                self.mask.grow(pending.capacity() - self.mask.capacity())
+            self.mask.abort_batch()  # drop the shadow instead of publishing
+            self.committed_map = pending
+            self.epoch_ctr += 1
+            self.in_batch_flag = False
+
+    orig = m.EpochRowMap
+    try:
+        m.EpochRowMap = StaleMask
+        assert m.golden_epoch_digest() != m.GOLDEN_EPOCH_DIGEST
+    finally:
+        m.EpochRowMap = orig

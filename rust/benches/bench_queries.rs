@@ -4,9 +4,11 @@
 //! execution -> timing/energy/power/endurance simulation) plus the
 //! baseline for the speedup pair, at a small SF, through the `api::Pimdb`
 //! service handle. A dedicated section records the prepared-vs-unprepared
-//! serving-path ratio (plan cache on vs. cleared every iteration), and a
-//! mixed 90/10 query/DML round measures the HTAP serving rate (emitted
-//! as a `BENCH {...}` json line).
+//! serving-path ratio (plan cache on vs. cleared every iteration), a
+//! mixed 90/10 query/DML round measures the HTAP serving rate, and an
+//! open-loop 90/10 section measures p50/p99 serving tail latency under
+//! concurrent DML against a lock-per-relation baseline (emitted as
+//! `BENCH {...}` json lines).
 
 #[path = "benchkit.rs"]
 mod benchkit;
@@ -228,9 +230,133 @@ fn main() {
         );
     }
 
+    // open-loop 90/10 serving with tail latency: requests arrive on a
+    // fixed schedule — independent of completions, so queueing delay is
+    // part of the measured latency, not hidden by back-pressure. Four
+    // reader threads execute the Q6 template at ~0.7 utilization each;
+    // one writer issues DML (alternating UPDATE/INSERT on the same
+    // relation) at one-ninth the aggregate query rate, i.e. a 90/10
+    // statement mix. Reported latency is completion minus *scheduled*
+    // arrival. The identical workload then runs with every statement
+    // serialized behind one relation-wide mutex — the lock-per-relation
+    // serving model the snapshot facade replaced — as the baseline pair,
+    // so the trajectory records the readers-under-writes win explicitly.
+    {
+        use std::sync::{Barrier, Mutex};
+        use std::time::{Duration, Instant};
+
+        fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
+            if sorted_ms.is_empty() {
+                return 0.0;
+            }
+            let idx = ((sorted_ms.len() - 1) as f64 * p).round() as usize;
+            sorted_ms[idx]
+        }
+
+        let cfg_srv = SystemConfig {
+            parallelism: 4,
+            ..cfg.clone()
+        };
+        const N_READERS: usize = 4;
+        const PER_READER: usize = 120;
+
+        let run = |locked: bool| -> (f64, f64, f64) {
+            let handle = Pimdb::open(cfg_srv.clone(), db.clone()).unwrap();
+            let q = handle.prepare(TEMPLATE).unwrap();
+            let upd = handle
+                .prepare_dml("update lineitem set l_discount = 4 where l_quantity == 25")
+                .unwrap();
+            let ins = handle
+                .prepare_dml(
+                    "insert into lineitem (l_orderkey, l_quantity, l_extendedprice, \
+                     l_shipdate) values (1, 10, 100.00, date(1994-06-01))",
+                )
+                .unwrap();
+            // calibrate the mean closed-loop service time of one query
+            let t0 = Instant::now();
+            for _ in 0..32 {
+                std::hint::black_box(q.execute().unwrap().metrics().exec_time_s);
+            }
+            let mean = t0.elapsed().as_secs_f64() / 32.0;
+            let interval = Duration::from_secs_f64(mean / 0.7);
+            let writer_interval =
+                Duration::from_secs_f64(mean / 0.7 * 9.0 / N_READERS as f64);
+            let writer_rounds = N_READERS * PER_READER / 9;
+
+            let gate = Mutex::new(());
+            let start = Barrier::new(N_READERS + 1);
+            let bench_t0 = Instant::now();
+            let mut lat_ms: Vec<f64> = Vec::new();
+            std::thread::scope(|s| {
+                let mut handles = Vec::new();
+                for r in 0..N_READERS {
+                    let (q, gate, start) = (&q, &gate, &start);
+                    handles.push(s.spawn(move || {
+                        // stagger the threads across one interval so the
+                        // aggregate arrival process is evenly spaced
+                        let offset = interval * r as u32 / N_READERS as u32;
+                        let mut lats = Vec::with_capacity(PER_READER);
+                        start.wait();
+                        let t0 = Instant::now();
+                        for i in 0..PER_READER {
+                            let due = interval * i as u32 + offset;
+                            let now = t0.elapsed();
+                            if now < due {
+                                std::thread::sleep(due - now);
+                            }
+                            let g = locked.then(|| gate.lock().unwrap());
+                            std::hint::black_box(
+                                q.execute().unwrap().metrics().exec_time_s,
+                            );
+                            drop(g);
+                            lats.push((t0.elapsed() - due).as_secs_f64() * 1e3);
+                        }
+                        lats
+                    }));
+                }
+                start.wait();
+                let t0 = Instant::now();
+                for i in 0..writer_rounds {
+                    let due = writer_interval * i as u32;
+                    let now = t0.elapsed();
+                    if now < due {
+                        std::thread::sleep(due - now);
+                    }
+                    let g = locked.then(|| gate.lock().unwrap());
+                    let dml = if i % 2 == 0 { &upd } else { &ins };
+                    std::hint::black_box(dml.execute().unwrap().rows_affected);
+                    drop(g);
+                }
+                for h in handles {
+                    lat_ms.extend(h.join().unwrap());
+                }
+            });
+            let elapsed = bench_t0.elapsed().as_secs_f64();
+            lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            (
+                percentile(&lat_ms, 0.50),
+                percentile(&lat_ms, 0.99),
+                lat_ms.len() as f64 / elapsed,
+            )
+        };
+
+        let (p50, p99, qps) = run(false);
+        println!(
+            "BENCH {{\"name\":\"serving/open-loop-90-10\",\"p50_ms\":{p50:.3},\
+             \"p99_ms\":{p99:.3},\"qps\":{qps:.1},\"dml_share\":0.1,\"sim_sf\":{}}}",
+            cfg.sim_sf
+        );
+        let (p50, p99, qps) = run(true);
+        println!(
+            "BENCH {{\"name\":\"serving/open-loop-90-10-locked\",\"p50_ms\":{p50:.3},\
+             \"p99_ms\":{p99:.3},\"qps\":{qps:.1},\"dml_share\":0.1,\"sim_sf\":{}}}",
+            cfg.sim_sf
+        );
+    }
+
     // batched multi-query serving path: the 19-query suite as prepared
-    // statements executed *concurrently* from &Pimdb (disjoint relations
-    // overlap on the per-relation locks, each over the shard pool);
+    // statements executed *concurrently* from &Pimdb (each query pins
+    // its relation's epoch snapshot and runs over the shard pool);
     // results are bit-identical to the serial loop above — this measures
     // wall-clock only
     let queries = tpch::all_queries();

@@ -16,14 +16,42 @@
 //!   ([`cache::plan_key`]) so re-preparing the same query template —
 //!   reformatted, renamed, or re-aliased — is a cache hit. Hit/miss
 //!   counters surface in [`QueryMetrics::plan_cache`].
-//! * [`Prepared::execute`] runs the plan over the shared shard pool from
-//!   `&self`: independent prepared queries submit concurrently without
-//!   external `&mut` serialization (per-relation locks serialize exactly
-//!   the queries that share a relation's crossbar compute area, the same
-//!   rule the wave scheduler applies). Results come back as a
-//!   [`QueryResult`] whose [`Rows`] cursor *decodes* the schema encodings
-//!   — dates, money cents, dictionary strings — instead of exposing raw
-//!   engine outputs.
+//! * [`Prepared::execute`] runs the plan over the handle's always-on
+//!   shard executor from `&self`, against an immutable *snapshot* of
+//!   every touched relation. Results come back as a [`QueryResult`]
+//!   whose [`Rows`] cursor *decodes* the schema encodings — dates,
+//!   money cents, dictionary strings — instead of exposing raw engine
+//!   outputs.
+//!
+//! # Concurrency model: epoch snapshots, group-committed DML
+//!
+//! Each relation's resident crossbar arrays are published as an
+//! immutable, epoch-tagged version behind an `Arc`. The two paths:
+//!
+//! * **Readers never block on DML.** A query pins the current version of
+//!   each relation it touches (one `Arc` clone under a briefly-held
+//!   lock) and executes against it on the shared always-on shard pool
+//!   ([`crate::exec::pool`]) for as long as it likes. A DML batch
+//!   committing mid-query is invisible: the published pointer moves, the
+//!   pinned snapshot does not. Every filter ANDs the snapshot's VALID
+//!   column, and dead rows are all-zero in that snapshot, so the
+//!   optimizer's valid-AND elision stays sound per version.
+//! * **Writers group-commit.** DML statements on one relation enqueue
+//!   and race for the relation's commit gate; the winner drains the
+//!   queue and applies it as one batch against a *private clone* of the
+//!   pinned version — no facade lock held while the batch executes, so
+//!   concurrent readers keep snapshotting and scanning. On success the
+//!   batch commits the epoch-versioned row map
+//!   ([`EpochRowMap`] — the two-plane liveness scheme that flips all
+//!   per-row visibility bits atomically) and publishes the new version;
+//!   on any statement failure the whole batch aborts and the published
+//!   version is untouched. Statements on *different* relations never
+//!   contend.
+//!
+//! Shared-scan masks are epoch-tagged: a cached filter-prefix mask
+//! replays only for a reader pinned to the exact epoch it was computed
+//! against, so DML can never leak deleted rows into (or hide committed
+//! rows from) a concurrent reader through the cache.
 //!
 //! Every fallible path returns the crate-wide typed
 //! [`PimdbError`](crate::error::PimdbError).
@@ -62,14 +90,16 @@ use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::config::SystemConfig;
 use crate::db::dbgen::Database;
-use crate::db::freerows::FreeRowMap;
+use crate::db::freerows::{EpochRowMap, FreeRowMap};
 use crate::db::layout::DbLayout;
 use crate::db::schema::{RelId, PIM_RELATIONS};
 use crate::error::PimdbError;
-use crate::exec::engine::{self, ExecOutputs, XbarState};
+use crate::exec::engine::{self, XbarState};
 use crate::exec::metrics::{PlanCacheCounters, QueryMetrics, RunReport, SharedScanCounters};
 use crate::exec::pimdb as session;
-use crate::exec::plan::{self, ExecPlan};
+use crate::exec::plan::ExecPlan;
+use crate::exec::pool::ShardPool;
+use crate::exec::ExecError;
 use crate::query::ast::{Dml, Query};
 use crate::query::compiler::{compile_dml, CompileError, Compiler};
 use crate::query::lang;
@@ -131,22 +161,63 @@ impl<'a> From<&'a Dml> for DmlSource<'a> {
     }
 }
 
-/// Per-relation mutable state behind the relation lock: the functional
-/// crossbar states plus — once a DML statement touches the relation —
-/// the free-row map (liveness + monotone per-row wear counters).
-struct RelState {
-    /// Lazily materialized crossbar states.
-    states: Option<Vec<XbarState>>,
-    /// Liveness + wear, created on the first mutation.
-    freerows: Option<FreeRowMap>,
-    /// Set once DML has mutated the relation: poison recovery must scrub
-    /// the compute area in place instead of dropping the states back to
-    /// the pristine load image (which would silently revert the DML).
-    mutated: bool,
-    /// Shared-scan mask cache: canonical prefix key -> mask planes (one
-    /// per crossbar). Lives behind the relation lock with the states it
-    /// describes; dropped whenever DML mutates the relation.
-    scan_cache: ScanMaskCache,
+/// One immutable published version of a relation's crossbar arrays.
+/// Readers pin a version with an `Arc` clone and execute against it for
+/// as long as they like; nothing ever mutates a published version — a
+/// committing DML batch swaps in a *new* one. `epoch` counts committed
+/// batches (in lockstep with [`EpochRowMap::epoch`]) and tags cached
+/// shared-scan masks.
+struct RelVersion {
+    epoch: u64,
+    states: Arc<Vec<XbarState>>,
+}
+
+/// Liveness and wear bookkeeping of one relation. `rows` stays `None`
+/// until the first DML batch touches the relation — wear accounting
+/// starts with the first mutation, exactly like the pre-snapshot facade.
+struct RelBook {
+    /// Epoch-versioned liveness + monotone per-row wear.
+    rows: Option<EpochRowMap>,
+    /// Reader-side wear accumulator, one slot per crossbar row: snapshot
+    /// readers fold their programs' write profiles here (a brief lock,
+    /// never waiting on an executing batch), and the next DML batch
+    /// charges the ledger into the committed map *before* its allocator
+    /// looks at row heat — so allocation decisions match the legacy
+    /// charge-immediately facade for any serial interleaving.
+    ledger: Vec<u64>,
+}
+
+/// One submitted DML statement's result slot, filled by whichever
+/// thread leads the batch that executes (or aborts) it.
+struct DmlSlot {
+    done: Mutex<Option<Result<DmlResult, PimdbError>>>,
+}
+
+/// A DML request waiting for the next group-commit batch.
+struct DmlRequest {
+    plan: Arc<CachedDmlPlan>,
+    engine_kind: EngineKind,
+    slot: Arc<DmlSlot>,
+}
+
+/// Per-relation concurrency structure. Every lock is held briefly
+/// (pointer swaps and bit bookkeeping), except `gate`, which serializes
+/// *writers only* for the duration of a batch — readers never take it.
+struct RelSlot {
+    /// Latest published version (`None` until first materialization).
+    published: Mutex<Option<Arc<RelVersion>>>,
+    /// Lock-free mirror of the published epoch. Poison recovery reads it
+    /// to raise the scan-cache floor without nesting lock acquisitions.
+    epoch_hint: AtomicU64,
+    /// Liveness + wear bookkeeping.
+    book: Mutex<RelBook>,
+    /// Group-commit gate: writers enqueue on `queue`, then race for this
+    /// lock; the winner drains the queue and applies it as one batch.
+    gate: Mutex<()>,
+    /// Requests awaiting the next batch.
+    queue: Mutex<Vec<DmlRequest>>,
+    /// Epoch-tagged shared-scan masks.
+    scans: Mutex<ScanMaskCache>,
 }
 
 /// Bound on cached scan masks per relation: a serving workload with
@@ -155,38 +226,73 @@ struct RelState {
 /// workload is dominated by a handful of hot scans).
 const MAX_CACHED_SCANS: usize = 8;
 
-/// Per-relation store of executed filter-prefix results, keyed by the
-/// canonical prefix bytes of [`sharedscan::ScanInfo`]. Byte equality of
-/// keys implies the identical mask function, so replaying a cached mask
-/// is exact, not approximate.
+/// A cached filter-prefix mask: one plane per crossbar, shared by `Arc`
+/// so a reader can keep replaying it after the entry is evicted.
+type CachedMask = Arc<Vec<[u64; WORDS]>>;
+
+/// Per-relation store of executed filter-prefix masks, keyed by the
+/// canonical prefix bytes of [`sharedscan::ScanInfo`] *and* the epoch of
+/// the version they were computed against. Byte equality of keys implies
+/// the identical mask function; epoch equality implies identical input
+/// data — together, replaying a cached mask is exact, not approximate,
+/// even while DML batches republish the relation concurrently.
+///
+/// `epoch_floor` is the poison-recovery rule: after a panic under the
+/// cache lock, everything resident is dropped **and** the floor rises
+/// past the current epoch, so even a mask computed concurrently with the
+/// panic (still in flight, inserted later) can never be admitted. The
+/// cache stays cold until a DML commit moves the relation to an epoch at
+/// or above the floor.
 struct ScanMaskCache {
-    entries: Vec<(Vec<u8>, Vec<[u64; WORDS]>)>,
+    entries: Vec<(Vec<u8>, u64, CachedMask)>,
+    epoch_floor: u64,
 }
 
 impl ScanMaskCache {
     fn new() -> ScanMaskCache {
         ScanMaskCache {
             entries: Vec::new(),
+            epoch_floor: 0,
         }
     }
 
-    fn get(&self, key: &[u8]) -> Option<&Vec<[u64; WORDS]>> {
-        self.entries.iter().find(|(k, _)| k == key).map(|(_, m)| m)
+    /// The mask for `key` computed at exactly `epoch`, if admitted.
+    fn get(&self, key: &[u8], epoch: u64) -> Option<CachedMask> {
+        if epoch < self.epoch_floor {
+            return None;
+        }
+        self.entries
+            .iter()
+            .find(|(k, e, _)| *e == epoch && k == key)
+            .map(|(_, _, m)| Arc::clone(m))
     }
 
-    fn insert(&mut self, key: Vec<u8>, mask: Vec<[u64; WORDS]>) {
-        if let Some(e) = self.entries.iter_mut().find(|(k, _)| *k == key) {
-            e.1 = mask;
+    fn insert(&mut self, key: Vec<u8>, epoch: u64, mask: CachedMask) {
+        if epoch < self.epoch_floor {
+            return;
+        }
+        if let Some(e) = self.entries.iter_mut().find(|(k, _, _)| *k == key) {
+            *e = (key, epoch, mask);
             return;
         }
         if self.entries.len() >= MAX_CACHED_SCANS {
             self.entries.remove(0);
         }
-        self.entries.push((key, mask));
+        self.entries.push((key, epoch, mask));
     }
 
-    /// Drop every cached mask; `true` when anything was resident.
-    fn clear(&mut self) -> bool {
+    /// Drop masks older than `epoch` (a newly published version makes
+    /// them unreplayable); `true` when anything was dropped.
+    fn purge_below(&mut self, epoch: u64) -> bool {
+        let before = self.entries.len();
+        self.entries.retain(|(_, e, _)| *e >= epoch);
+        self.entries.len() != before
+    }
+
+    /// Poison recovery: drop everything and raise the floor past
+    /// `current_epoch`; `true` when anything was dropped.
+    fn poison_bump(&mut self, current_epoch: u64) -> bool {
+        self.epoch_floor = self.epoch_floor.max(current_epoch + 1);
         let had = !self.entries.is_empty();
         self.entries.clear();
         had
@@ -202,28 +308,45 @@ struct ScanStats {
     invalidations: AtomicU64,
 }
 
+/// Lock a facade mutex whose contents are consistent by construction
+/// (request queues, result slots, the group-commit gate): poisoning only
+/// means some *other* thread panicked while holding it.
+fn lock_plain<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => {
+            m.clear_poison();
+            poisoned.into_inner()
+        }
+    }
+}
+
 /// The owned PIMDB service handle: one resident database copy, a plan
-/// cache, and per-relation crossbar states behind locks so prepared
-/// queries execute concurrently from `&self` (see the module docs).
+/// cache, an always-on shard executor, and per-relation published
+/// snapshots so prepared queries execute concurrently from `&self` (see
+/// the module docs).
 ///
-/// Since the DML refactor the handle is also the *mutable* surface:
-/// [`Pimdb::execute_dml`] applies `insert into` / `update ... set` /
-/// `delete from` statements to the resident PIM copy — valid-bit
-/// liveness, endurance-aware free-row allocation, wear accounting —
-/// while queries keep executing against the mutated data (every filter
-/// ANDs the VALID column, so deleted rows are invisible to every
-/// filter and aggregate).
+/// Since the snapshot refactor the handle serves reads and writes
+/// concurrently: [`Pimdb::execute_dml`] applies `insert into` /
+/// `update ... set` / `delete from` statements through per-relation
+/// group-commit batches — valid-bit liveness, endurance-aware free-row
+/// allocation, wear accounting — while queries keep executing against
+/// their pinned pre-batch snapshots, never waiting on an in-flight
+/// batch. Every filter ANDs the VALID column of its snapshot, so a
+/// query observes exactly one committed state: pre- or post-batch,
+/// never a torn one.
 pub struct Pimdb {
     cfg: SystemConfig,
     db: Database,
     layout: DbLayout,
     exec_plan: ExecPlan,
     fingerprint: u64,
-    /// Per-relation mutable state. The mutex is the concurrency rule of
-    /// the wave scheduler in lock form: statements on disjoint relations
-    /// proceed in parallel, statements sharing a relation serialize
-    /// (they share its compute area — and now also its liveness).
-    states: BTreeMap<RelId, Mutex<RelState>>,
+    /// Per-relation snapshot/commit machinery. Statements on disjoint
+    /// relations proceed fully in parallel; writers sharing a relation
+    /// group-commit; readers never serialize with anything.
+    rels: BTreeMap<RelId, RelSlot>,
+    /// The always-on shard executor every reader submits to.
+    pool: ShardPool,
     cache: PlanCache,
     scan_stats: ScanStats,
 }
@@ -241,29 +364,38 @@ const _: () = {
 
 impl Pimdb {
     /// Take ownership of a configuration and database, lay the relations
-    /// out over the PIM modules, and return the service handle. Crossbar
-    /// states materialize lazily, per relation, on first execution.
+    /// out over the PIM modules, spin up the always-on shard executor
+    /// ([`SystemConfig::parallelism`] workers under the
+    /// [`SystemConfig::admission`] cap) and return the service handle.
+    /// Crossbar states materialize lazily, per relation, on first
+    /// execution.
     pub fn open(cfg: SystemConfig, db: Database) -> Result<Pimdb, PimdbError> {
         let layout = DbLayout::build(&cfg, &|r| db.rel(r).records as u64)?;
-        let states = PIM_RELATIONS
+        let rels = PIM_RELATIONS
             .iter()
             .map(|&r| {
                 (
                     r,
-                    Mutex::new(RelState {
-                        states: None,
-                        freerows: None,
-                        mutated: false,
-                        scan_cache: ScanMaskCache::new(),
-                    }),
+                    RelSlot {
+                        published: Mutex::new(None),
+                        epoch_hint: AtomicU64::new(0),
+                        book: Mutex::new(RelBook {
+                            rows: None,
+                            ledger: vec![0; XBAR_ROWS],
+                        }),
+                        gate: Mutex::new(()),
+                        queue: Mutex::new(Vec::new()),
+                        scans: Mutex::new(ScanMaskCache::new()),
+                    },
                 )
             })
             .collect();
         Ok(Pimdb {
             exec_plan: ExecPlan::for_config(&cfg),
             fingerprint: cache::plan_fingerprint(&cfg),
+            pool: ShardPool::new(cfg.parallelism, cfg.admission),
             layout,
-            states,
+            rels,
             cache: PlanCache::new(),
             scan_stats: ScanStats::default(),
             cfg,
@@ -285,27 +417,40 @@ impl Pimdb {
         &self.db
     }
 
-    /// Live records currently in the PIM copy of `rel` (the load image's
-    /// live count until a DML statement touches the relation).
+    /// Live records currently committed in the PIM copy of `rel` (the
+    /// load image's live count until a DML batch touches the relation).
     pub fn live_records(&self, rel: RelId) -> usize {
-        let guard = self.lock_rel(rel);
-        guard
-            .freerows
+        let slot = self.slot(rel);
+        let book = self.lock_book(slot);
+        book.rows
             .as_ref()
-            .map(|f| f.live_count())
+            .map(|r| r.live_count())
             .unwrap_or_else(|| self.db.rel(rel).live_count())
     }
 
+    /// Committed DML batches so far on `rel` — the epoch tag the next
+    /// reader snapshot pins (0 until the first batch commits).
+    pub fn relation_epoch(&self, rel: RelId) -> u64 {
+        self.slot(rel).epoch_hint.load(Ordering::Acquire)
+    }
+
     /// Per-row cumulative cell-write counters of `rel` (monotonically
-    /// nondecreasing; empty until a DML statement touches the relation
-    /// — wear accounting starts with the first mutation).
+    /// nondecreasing; empty until a DML statement touches the relation —
+    /// wear accounting starts with the first mutation). Reported wear is
+    /// committed wear plus the reader ledger, so an aborted batch never
+    /// moves an observed counter.
     pub fn wear_counters(&self, rel: RelId) -> Vec<u64> {
-        let guard = self.lock_rel(rel);
-        guard
-            .freerows
-            .as_ref()
-            .map(|f| (0..f.capacity()).map(|r| f.row_wear(r)).collect())
-            .unwrap_or_default()
+        let slot = self.slot(rel);
+        let book = self.lock_book(slot);
+        match book.rows.as_ref() {
+            Some(rows) => {
+                let committed = rows.committed();
+                (0..committed.capacity())
+                    .map(|r| committed.row_wear(r).wrapping_add(book.ledger[r % XBAR_ROWS]))
+                    .collect()
+            }
+            None => Vec::new(),
+        }
     }
 
     /// The database's PIM layout (page placement, column slots).
@@ -322,7 +467,8 @@ impl Pimdb {
     /// Shared-scan cache counters so far: executions that replayed a
     /// cached filter-prefix mask (`hits`), shareable executions that ran
     /// in full and populated the cache (`misses`), and per-relation cache
-    /// drops (`invalidations` — DML mutation or poison recovery).
+    /// drops (`invalidations` — a DML commit that obsoleted resident
+    /// masks, or poison recovery).
     pub fn shared_scan_counters(&self) -> SharedScanCounters {
         SharedScanCounters {
             hits: self.scan_stats.hits.load(Ordering::Relaxed),
@@ -414,30 +560,21 @@ impl Pimdb {
         })
     }
 
-    /// Lock one relation's state, recovering from poisoning. A panicked
-    /// execution may have left a dirty compute area behind; a pristine
-    /// relation reloads from the load image, while a DML-mutated one is
-    /// scrubbed in place (reloading would silently revert the DML). If
-    /// the panic struck while the states were checked out of the guard
-    /// (mid-execution), a mutated relation's liveness map can no longer
-    /// be trusted to match the arrays, so the relation reverts to the
-    /// pristine load image — consistent, at the cost of the mutations.
-    fn lock_rel(&self, rel: RelId) -> MutexGuard<'_, RelState> {
-        let mutex = self.states.get(&rel).expect("PIM relation");
-        match mutex.lock() {
+    fn slot(&self, rel: RelId) -> &RelSlot {
+        self.rels.get(&rel).expect("PIM relation")
+    }
+
+    /// Lock a relation's scan-mask cache, recovering from poisoning with
+    /// the epoch-floor bump: nothing resident survives, and nothing
+    /// computed against the pre-panic view can be admitted later (see
+    /// [`ScanMaskCache`]).
+    fn lock_scans<'a>(&self, slot: &'a RelSlot) -> MutexGuard<'a, ScanMaskCache> {
+        match slot.scans.lock() {
             Ok(g) => g,
             Err(poisoned) => {
-                mutex.clear_poison();
+                slot.scans.clear_poison();
                 let mut g = poisoned.into_inner();
-                if let (true, Some(states)) = (g.mutated, g.states.as_mut()) {
-                    session::clear_compute(states, self.layout.rel(rel).compute_base);
-                } else {
-                    g.states = None;
-                    g.freerows = None;
-                    g.mutated = false;
-                }
-                // cached scan masks describe the pre-panic state; drop them
-                if g.scan_cache.clear() {
+                if g.poison_bump(slot.epoch_hint.load(Ordering::Acquire)) {
                     self.scan_stats.invalidations.fetch_add(1, Ordering::Relaxed);
                 }
                 g
@@ -445,17 +582,75 @@ impl Pimdb {
         }
     }
 
-    /// Materialize a relation's crossbar states from the load image.
-    fn materialize(&self, rel: RelId, g: &mut RelState) {
-        if g.states.is_none() {
-            let r = self.db.rel(rel);
-            g.states = Some(engine::load_states(
+    /// Lock a relation's bookkeeping, recovering from poisoning. A panic
+    /// under the book lock can only have struck bit bookkeeping: an
+    /// in-flight batch is aborted (committed liveness and wear are
+    /// untouched by construction — the batch mutates a take-out clone),
+    /// the reader ledger is kept (a plain accumulator), and the
+    /// scan-cache floor rises so no mask from around the panic is ever
+    /// replayed.
+    fn lock_book<'a>(&self, slot: &'a RelSlot) -> MutexGuard<'a, RelBook> {
+        match slot.book.lock() {
+            Ok(g) => g,
+            Err(poisoned) => {
+                slot.book.clear_poison();
+                let mut g = poisoned.into_inner();
+                if g.rows.as_ref().is_some_and(|r| r.in_batch()) {
+                    g.rows.as_mut().expect("checked above").abort_batch();
+                }
+                let mut scans = self.lock_scans(slot);
+                if scans.poison_bump(slot.epoch_hint.load(Ordering::Acquire)) {
+                    self.scan_stats.invalidations.fetch_add(1, Ordering::Relaxed);
+                }
+                g
+            }
+        }
+    }
+
+    /// Lock a relation's published-version pointer, recovering from
+    /// poisoning. The pointer swap itself cannot tear (one `Arc`
+    /// assignment under the guard), but a panic between the book commit
+    /// and the publish can leave cached masks describing a version that
+    /// was about to be superseded — so recovery distrusts the scan cache.
+    fn lock_published<'a>(
+        &self,
+        slot: &'a RelSlot,
+    ) -> MutexGuard<'a, Option<Arc<RelVersion>>> {
+        match slot.published.lock() {
+            Ok(g) => g,
+            Err(poisoned) => {
+                slot.published.clear_poison();
+                let g = poisoned.into_inner();
+                let mut scans = self.lock_scans(slot);
+                if scans.poison_bump(slot.epoch_hint.load(Ordering::Acquire)) {
+                    self.scan_stats.invalidations.fetch_add(1, Ordering::Relaxed);
+                }
+                g
+            }
+        }
+    }
+
+    /// Pin the current published version of `rel`, materializing epoch 0
+    /// from the load image on first use. The lock is held only for the
+    /// pointer clone (or the one-time load), never for query execution.
+    fn snapshot(&self, rel: RelId) -> Arc<RelVersion> {
+        let slot = self.slot(rel);
+        let mut g = self.lock_published(slot);
+        if let Some(v) = g.as_ref() {
+            return Arc::clone(v);
+        }
+        let r = self.db.rel(rel);
+        let v = Arc::new(RelVersion {
+            epoch: 0,
+            states: Arc::new(engine::load_states(
                 r,
                 self.layout.rel(rel),
                 self.cfg.xbar_cols,
                 0..r.records,
-            ));
-        }
+            )),
+        });
+        *g = Some(Arc::clone(&v));
+        v
     }
 
     /// Execute a prepared statement (see [`Prepared::execute`]).
@@ -466,101 +661,66 @@ impl Pimdb {
     ) -> Result<QueryResult, PimdbError> {
         let compiled = &p.plan.compiled;
 
-        // Lock every touched relation in canonical RelId order: concurrent
-        // queries acquiring overlapping sets cannot deadlock, and queries
-        // on disjoint sets never contend.
+        // Pin one snapshot per touched relation for the whole query:
+        // every program sees the same committed version, and a DML batch
+        // committing mid-execution is invisible — the published pointer
+        // moves, the pinned Arc does not. No lock is held across
+        // execution from here on.
         let rels: BTreeSet<RelId> = compiled.iter().map(|c| c.rel).collect();
-        let mut guards: Vec<(RelId, MutexGuard<'_, RelState>)> = rels
-            .iter()
-            .map(|r| (*r, self.lock_rel(*r)))
-            .collect();
+        let versions: BTreeMap<RelId, Arc<RelVersion>> =
+            rels.into_iter().map(|r| (r, self.snapshot(r))).collect();
 
-        // materialize every touched relation once (lazy, like PimSession)
-        for (r, guard) in guards.iter_mut() {
-            self.materialize(*r, guard);
-        }
-
-        // One sharded run per program. Programs are sequential within the
-        // query (two programs of one query on the same relation share its
-        // compute area — the wave scheduler's duplicate rule); each run
-        // still fans out over the shard pool. States move out of the
-        // guard for the duration so a backend error drops them rather
-        // than leaving a half-mutated compute area resident.
-        let mut outs: Vec<ExecOutputs> = Vec::with_capacity(compiled.len());
+        let mut outs = Vec::with_capacity(compiled.len());
         for (c, scan) in compiled.iter().zip(&p.plan.scans) {
-            let guard = &mut guards
-                .iter_mut()
-                .find(|(r, _)| *r == c.rel)
-                .expect("locked above")
-                .1;
-            let mut states = guard.states.take().expect("materialized above");
-            // Shared scan: when this program's filter prefix matches a
-            // cached mask (byte-equal canonical key — identical mask
-            // function), transplant the mask planes and run only the
-            // suffix. The prefix writes nothing but compute columns and
-            // the suffix never writes the mask column, so the replay is
-            // bit-identical to the full run.
-            let replayed = match scan {
-                Some(info) => match guard.scan_cache.get(&info.key) {
-                    Some(mask) if mask.len() == states.len() => {
-                        for (st, m) in states.iter_mut().zip(mask) {
-                            st.planes[c.mask_col] = *m;
-                        }
-                        true
-                    }
-                    _ => false,
-                },
-                None => false,
-            };
-            let steps = match scan {
-                Some(info) if replayed => &c.steps[info.prefix_len..],
+            let version = &versions[&c.rel];
+            let slot = self.slot(c.rel);
+            // Shared scan: replay a cached mask only when it was computed
+            // against exactly this epoch (same mask function per the byte
+            // key, same input data per the epoch tag), transplanting the
+            // mask planes and running only the program's suffix. The
+            // prefix writes nothing but compute columns and the suffix
+            // never writes the mask column, so the replay is bit-identical
+            // to the full run.
+            let seed = scan
+                .as_ref()
+                .and_then(|info| self.lock_scans(slot).get(&info.key, version.epoch))
+                .filter(|m| m.len() == version.states.len());
+            let steps = match (scan, &seed) {
+                (Some(info), Some(_)) => &c.steps[info.prefix_len..],
                 _ => &c.steps[..],
             };
-            let out = plan::exec_steps_sharded(
-                &mut states,
+            let (out, masks) = self.pool.run_snapshot(
+                &version.states,
+                self.layout.rel(c.rel).compute_base,
                 steps,
                 c.mask_col,
+                seed.as_ref(),
                 engine_kind,
                 &self.exec_plan,
-            );
-            let out = match out {
-                Ok(o) => o,
-                Err(e) => {
-                    // query steps only dirty the compute area, so a
-                    // mutated relation keeps its (scrubbed) states — a
-                    // pristine one simply reloads on next use
-                    if guard.mutated {
-                        session::clear_compute(
-                            &mut states,
-                            self.layout.rel(c.rel).compute_base,
-                        );
-                        guard.states = Some(states);
-                    }
-                    return Err(e.into());
-                }
-            };
+            )?;
             if let Some(info) = scan {
-                if replayed {
+                if seed.is_some() {
                     self.scan_stats.hits.fetch_add(1, Ordering::Relaxed);
                 } else {
-                    // capture the mask planes before clear_compute wipes
-                    // the compute area they live in
-                    guard.scan_cache.insert(
-                        info.key.clone(),
-                        states.iter().map(|st| st.planes[c.mask_col]).collect(),
-                    );
+                    self.lock_scans(slot)
+                        .insert(info.key.clone(), version.epoch, Arc::new(masks));
                     self.scan_stats.misses.fetch_add(1, Ordering::Relaxed);
                 }
             }
-            session::clear_compute(&mut states, self.layout.rel(c.rel).compute_base);
-            guard.states = Some(states);
-            // mutated relations accumulate this query's write profile
-            // into the persistent wear counters the endurance-aware
-            // row allocator consults; the wear model charges the full
-            // program either way — the shared-scan replay is a simulator
-            // shortcut, not a change to what the simulated device does
-            if let Some(free) = guard.freerows.as_mut() {
-                session::charge_wear(free, &c.steps, self.cfg.xbar_cols);
+            // Wear-tracked relations accumulate this program's write
+            // profile into the reader ledger (folded into the committed
+            // counters when the next batch begins). The wear model
+            // charges the full program even on a replay — the shared
+            // scan is a simulator shortcut, not a change to what the
+            // simulated device does.
+            {
+                let mut book = self.lock_book(slot);
+                if book.rows.is_some() {
+                    let profile = session::wear_profile(&c.steps, self.cfg.xbar_cols);
+                    for (dst, add) in book.ledger.iter_mut().zip(&profile) {
+                        *dst = dst.wrapping_add(*add);
+                    }
+                }
             }
             outs.push(out);
         }
@@ -630,6 +790,11 @@ impl Pimdb {
     /// zero-row reasoning relies on). Returns rows affected, the wear
     /// delta and the simulated application cost.
     ///
+    /// The statement commits atomically through the relation's
+    /// group-commit batch: queries concurrently in flight keep their
+    /// pre-batch snapshots, and queries started after the commit see
+    /// every effect.
+    ///
     /// ```
     /// use pimdb::api::Pimdb;
     /// use pimdb::config::SystemConfig;
@@ -656,51 +821,192 @@ impl Pimdb {
         self.prepare_dml(source)?.execute()
     }
 
-    /// Execute a prepared DML statement (see [`PreparedDml::execute`]).
+    /// Execute a prepared DML statement (see [`PreparedDml::execute`]):
+    /// enqueue the request, then either an earlier writer's batch picks
+    /// it up while we wait at the gate, or we win the gate and lead the
+    /// batch ourselves.
     fn execute_dml_prepared(
         &self,
         p: &PreparedDml<'_>,
         engine_kind: EngineKind,
     ) -> Result<DmlResult, PimdbError> {
         let rel = p.dml.rel();
-        let mut guard = self.lock_rel(rel);
-        self.materialize(rel, &mut guard);
-        if guard.freerows.is_none() {
-            // shadow the load image's liveness exactly — a DML-mutated
-            // store reloads with dead slots between live ones
-            let capacity = guard.states.as_ref().expect("materialized").len() * XBAR_ROWS;
-            let r = self.db.rel(rel);
-            let flags: Vec<bool> = (0..r.records).map(|i| r.live(i)).collect();
-            guard.freerows = Some(FreeRowMap::from_flags(&flags, capacity, XBAR_ROWS));
-        }
-        guard.mutated = true;
-        // any cached scan mask describes pre-mutation data
-        if guard.scan_cache.clear() {
-            self.scan_stats.invalidations.fetch_add(1, Ordering::Relaxed);
-        }
-        let mut states = guard.states.take().expect("materialized above");
-        let out = session::exec_dml_on_states(
-            &self.cfg,
-            &self.layout,
-            rel,
-            &mut states,
-            guard.freerows.as_mut().expect("created above"),
-            &p.plan.compiled,
+        let slot = self.slot(rel);
+        let my = Arc::new(DmlSlot {
+            done: Mutex::new(None),
+        });
+        lock_plain(&slot.queue).push(DmlRequest {
+            plan: Arc::clone(&p.plan),
             engine_kind,
-            &self.exec_plan,
-        );
-        if out.is_ok() {
-            guard.states = Some(states);
-        } else {
-            // a failed backend may have torn the statement across shards,
-            // leaving states and the liveness map out of sync: revert the
-            // relation to the pristine load image (only reachable through
-            // backend-runtime errors — the native engine is total)
-            guard.states = None;
-            guard.freerows = None;
-            guard.mutated = false;
+            slot: Arc::clone(&my),
+        });
+        let _gate = lock_plain(&slot.gate);
+        if let Some(done) = lock_plain(&my.done).take() {
+            // a batch led by an earlier writer carried our request
+            return done;
         }
-        out
+        let batch: Vec<DmlRequest> = std::mem::take(&mut *lock_plain(&slot.queue));
+        debug_assert!(!batch.is_empty(), "own request was queued above");
+        self.apply_batch(rel, batch);
+        lock_plain(&my.done)
+            .take()
+            .expect("the leader fills every drained slot")
+    }
+
+    /// Apply one drained batch of DML requests as a single commit: clone
+    /// the pinned version, execute every statement against the private
+    /// clone with **no facade lock held**, then either commit-and-publish
+    /// (all statements succeeded) or abort (any failed — the published
+    /// version and the committed row map stay untouched). Fills every
+    /// request's result slot. The caller holds the relation's gate.
+    fn apply_batch(&self, rel: RelId, batch: Vec<DmlRequest>) {
+        let slot = self.slot(rel);
+
+        // Unwind safety: on a leader panic, abort the in-flight batch
+        // bookkeeping and fill every still-empty slot so follower
+        // threads never hang (the book's own poison recovery is the
+        // second line of defense when the panic holds that lock).
+        struct BatchGuard<'a> {
+            handle: &'a Pimdb,
+            rel: RelId,
+            batch: &'a [DmlRequest],
+            done: bool,
+        }
+        impl Drop for BatchGuard<'_> {
+            fn drop(&mut self) {
+                if self.done {
+                    return;
+                }
+                let slot = self.handle.slot(self.rel);
+                let mut book = self.handle.lock_book(slot);
+                if book.rows.as_ref().is_some_and(|r| r.in_batch()) {
+                    book.rows.as_mut().expect("checked above").abort_batch();
+                }
+                drop(book);
+                for req in self.batch {
+                    let mut d = lock_plain(&req.slot.done);
+                    if d.is_none() {
+                        *d = Some(Err(ExecError::Backend {
+                            engine: "native",
+                            msg: "DML batch leader panicked".into(),
+                        }
+                        .into()));
+                    }
+                }
+            }
+        }
+        let mut guard = BatchGuard {
+            handle: self,
+            rel,
+            batch: &batch,
+            done: false,
+        };
+
+        let version = self.snapshot(rel);
+        let mut pending = {
+            let mut book = self.lock_book(slot);
+            let RelBook { rows, ledger } = &mut *book;
+            let rows = rows.get_or_insert_with(|| {
+                // shadow the load image's liveness exactly — a mutated
+                // store republishes with dead slots between live ones
+                let r = self.db.rel(rel);
+                let capacity = version.states.len() * XBAR_ROWS;
+                let flags: Vec<bool> = (0..r.records).map(|i| r.live(i)).collect();
+                EpochRowMap::new(FreeRowMap::from_flags(&flags, capacity, XBAR_ROWS))
+            });
+            debug_assert_eq!(
+                rows.epoch(),
+                version.epoch,
+                "book and published version move in lockstep"
+            );
+            // reader wear observed since the last batch becomes committed
+            // wear *before* the allocator looks at row heat, so placement
+            // decisions match the legacy charge-immediately facade
+            if ledger.iter().any(|&w| w != 0) {
+                rows.charge_profile(ledger);
+                ledger.fill(0);
+            }
+            rows.begin_batch()
+        };
+
+        // The batch body: no facade lock held — concurrent readers keep
+        // pinning and scanning the published (pre-batch) version.
+        let mut states: Vec<XbarState> = (*version.states).clone();
+        let mut results: Vec<Result<DmlResult, PimdbError>> = Vec::with_capacity(batch.len());
+        let mut aborted = false;
+        for req in &batch {
+            let r = session::exec_dml_on_states(
+                &self.cfg,
+                &self.layout,
+                rel,
+                &mut states,
+                &mut pending,
+                &req.plan.compiled,
+                req.engine_kind,
+                &self.exec_plan,
+            );
+            aborted = r.is_err();
+            results.push(r);
+            if aborted {
+                break;
+            }
+        }
+
+        {
+            let mut book = self.lock_book(slot);
+            let rows = book.rows.as_mut().expect("created above");
+            if aborted {
+                // all-or-nothing: the private clone is dropped, the
+                // published version and committed map are untouched
+                rows.abort_batch();
+            } else {
+                rows.commit_batch(pending);
+                let epoch = rows.epoch();
+                drop(book);
+                *self.lock_published(slot) = Some(Arc::new(RelVersion {
+                    epoch,
+                    states: Arc::new(states),
+                }));
+                slot.epoch_hint.store(epoch, Ordering::Release);
+                // masks computed against older versions can never be
+                // replayed again: readers that pinned before this commit
+                // carry their own older epoch, readers after pin `epoch`
+                if self.lock_scans(slot).purge_below(epoch) {
+                    self.scan_stats.invalidations.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+
+        let mut results = results.into_iter();
+        for req in &batch {
+            let res = match results.next() {
+                Some(r) if !aborted => r,
+                Some(Err(e)) => Err(e),
+                _ => Err(ExecError::Backend {
+                    engine: "native",
+                    msg: "DML batch aborted by a failing statement".into(),
+                }
+                .into()),
+            };
+            *lock_plain(&req.slot.done) = Some(res);
+        }
+        guard.done = true;
+    }
+
+    /// Deliberately poison the scan-mask cache of `rel` (a helper thread
+    /// panics while holding the lock) — test-only, for exercising the
+    /// epoch-floor poison recovery.
+    #[cfg(test)]
+    fn poison_scan_cache(&self, rel: RelId) {
+        let slot = self.slot(rel);
+        std::thread::scope(|s| {
+            let t = s.spawn(|| {
+                let _g = slot.scans.lock().unwrap();
+                panic!("poison the scan cache");
+            });
+            assert!(t.join().is_err(), "the helper must panic");
+        });
+        assert!(slot.scans.is_poisoned());
     }
 }
 
@@ -748,8 +1054,9 @@ fn rebind_labels(plan: Arc<CachedPlan>, query: &Query) -> Arc<CachedPlan> {
 
 /// A prepared statement: the parsed query plus its compiled, optimized
 /// plan (shared with the handle's plan cache). Executing takes `&self` —
-/// the same statement can run concurrently from several threads, and
-/// distinct statements on disjoint relations run in parallel.
+/// the same statement can run concurrently from several threads, every
+/// execution pins its own relation snapshots, and no execution ever
+/// waits on concurrent DML.
 pub struct Prepared<'db> {
     handle: &'db Pimdb,
     query: Query,
@@ -775,9 +1082,10 @@ impl Prepared<'_> {
 
 /// A prepared DML statement: the parsed statement plus its compiled form
 /// (shared with the handle's plan cache). Executing takes `&self` and
-/// serializes on the target relation's lock — concurrent queries on
-/// other relations keep running, and queries on the same relation
-/// observe either the pre- or post-statement state, never a torn one.
+/// joins the target relation's group-commit batch — concurrent writers
+/// on the same relation batch together behind one leader, writers on
+/// other relations proceed in parallel, and concurrent queries observe
+/// either the pre- or post-batch state, never a torn one.
 pub struct PreparedDml<'db> {
     handle: &'db Pimdb,
     dml: Dml,
@@ -957,6 +1265,8 @@ mod tests {
         assert_eq!(r.rows_affected, 10);
         assert!(r.wear_delta > 0.0);
         assert!(r.metrics.exec_time_s > 0.0);
+        // every committed batch bumps the relation epoch
+        assert_eq!(handle.relation_epoch(crate::db::schema::RelId::Supplier), 1);
         // the rewrite is visible to queries through the same handle
         let n = handle
             .prepare(
@@ -1012,6 +1322,13 @@ mod tests {
             .unwrap();
         let w2: u64 = handle.wear_counters(RelId::Supplier).iter().sum();
         assert!(w2 > w1, "queries on mutated relations charge wear too");
+        // the reader's ledger wear becomes committed wear at the next
+        // batch without ever decreasing the observed totals
+        handle
+            .execute_dml("delete from supplier where s_suppkey == 2")
+            .unwrap();
+        let w3: u64 = handle.wear_counters(RelId::Supplier).iter().sum();
+        assert!(w3 > w2, "wear stays monotone across the ledger fold");
         // other relations stay untracked until mutated
         assert!(handle.wear_counters(RelId::Part).is_empty());
     }
@@ -1182,5 +1499,147 @@ mod tests {
                 invalidations: 1
             }
         );
+    }
+
+    /// Regression (snapshot MVCC): a cached mask is pinned to the epoch
+    /// it was computed against. After a DML commit the old mask must
+    /// neither be replayed (deleted rows would leak into results) nor
+    /// count as a hit; a mask recomputed at the new epoch replays again.
+    #[test]
+    fn shared_scan_masks_are_epoch_tagged_under_dml() {
+        use crate::db::schema::RelId;
+        let handle = Pimdb::open(SystemConfig::default(), db()).unwrap();
+        let p = handle
+            .prepare("from supplier | filter s_suppkey <= 10 | aggregate count() as n")
+            .unwrap();
+        assert_eq!(handle.relation_epoch(RelId::Supplier), 0);
+        assert_eq!(p.execute().unwrap().raw_report().output.groups[0].count, 10);
+        assert_eq!(
+            handle.shared_scan_counters(),
+            SharedScanCounters {
+                hits: 0,
+                misses: 1,
+                invalidations: 0
+            }
+        );
+        assert_eq!(p.execute().unwrap().raw_report().output.groups[0].count, 10);
+        assert_eq!(
+            handle.shared_scan_counters(),
+            SharedScanCounters {
+                hits: 1,
+                misses: 1,
+                invalidations: 0
+            }
+        );
+        handle
+            .execute_dml("delete from supplier where s_suppkey == 7")
+            .unwrap();
+        assert_eq!(handle.relation_epoch(RelId::Supplier), 1);
+        // epoch moved: the cached epoch-0 mask is purged, the re-run is
+        // a full miss and sees the deletion
+        assert_eq!(p.execute().unwrap().raw_report().output.groups[0].count, 9);
+        assert_eq!(
+            handle.shared_scan_counters(),
+            SharedScanCounters {
+                hits: 1,
+                misses: 2,
+                invalidations: 1
+            }
+        );
+        // the epoch-1 mask replays for epoch-1 readers
+        assert_eq!(p.execute().unwrap().raw_report().output.groups[0].count, 9);
+        assert_eq!(
+            handle.shared_scan_counters(),
+            SharedScanCounters {
+                hits: 2,
+                misses: 2,
+                invalidations: 1
+            }
+        );
+    }
+
+    /// Poison recovery bumps the epoch floor: after a panic under the
+    /// scan-cache lock, nothing resident (or in flight) is ever replayed
+    /// and the cache stays cold at the poisoned epoch; it resumes at the
+    /// next committed epoch.
+    #[test]
+    fn scan_cache_poison_recovery_disables_replay_until_the_next_epoch() {
+        use crate::db::schema::RelId;
+        let handle = Pimdb::open(SystemConfig::default(), db()).unwrap();
+        let p = handle
+            .prepare("from supplier | filter s_suppkey <= 10 | aggregate count() as n")
+            .unwrap();
+        assert_eq!(p.execute().unwrap().raw_report().output.groups[0].count, 10);
+        assert_eq!(handle.shared_scan_counters().misses, 1);
+
+        handle.poison_scan_cache(RelId::Supplier);
+
+        // recovery drops the resident mask (one invalidation) and the
+        // floor rejects re-inserts at epoch 0: both runs are full misses
+        assert_eq!(p.execute().unwrap().raw_report().output.groups[0].count, 10);
+        assert_eq!(p.execute().unwrap().raw_report().output.groups[0].count, 10);
+        assert_eq!(
+            handle.shared_scan_counters(),
+            SharedScanCounters {
+                hits: 0,
+                misses: 3,
+                invalidations: 1
+            }
+        );
+
+        // the next DML commit moves the relation to epoch 1 >= floor:
+        // caching resumes, exact as ever
+        handle
+            .execute_dml("delete from supplier where s_suppkey == 3")
+            .unwrap();
+        assert_eq!(p.execute().unwrap().raw_report().output.groups[0].count, 9);
+        assert_eq!(p.execute().unwrap().raw_report().output.groups[0].count, 9);
+        assert_eq!(
+            handle.shared_scan_counters(),
+            SharedScanCounters {
+                hits: 1,
+                misses: 4,
+                invalidations: 1
+            }
+        );
+    }
+
+    /// Concurrent single-row deletes on one relation group-commit: every
+    /// statement reports exactly its own row, the final state equals the
+    /// serial application, and liveness/epoch bookkeeping is race-free.
+    #[test]
+    fn concurrent_dml_group_commits_and_stays_serializable() {
+        use crate::db::schema::RelId;
+        let handle = Arc::new(Pimdb::open(SystemConfig::default(), db()).unwrap());
+        let initial = handle.live_records(RelId::Supplier);
+        let keys = [1u64, 2, 3, 4, 5, 6, 7, 8];
+        std::thread::scope(|s| {
+            for k in keys {
+                let handle = Arc::clone(&handle);
+                s.spawn(move || {
+                    let r = handle
+                        .execute_dml(
+                            format!("delete from supplier where s_suppkey == {k}").as_str(),
+                        )
+                        .unwrap();
+                    assert_eq!(r.rows_affected, 1, "key {k}");
+                });
+            }
+        });
+        assert_eq!(handle.live_records(RelId::Supplier), initial - keys.len());
+        // at least one batch committed, at most one per statement
+        let epoch = handle.relation_epoch(RelId::Supplier);
+        assert!(epoch >= 1 && epoch <= keys.len() as u64);
+        // a serial twin agrees on the final contents
+        let serial = Pimdb::open(SystemConfig::default(), db()).unwrap();
+        for k in keys {
+            serial
+                .execute_dml(format!("delete from supplier where s_suppkey == {k}").as_str())
+                .unwrap();
+        }
+        let probe = "from supplier | filter s_acctbal >= 0.00 | aggregate sum(s_acctbal) as s";
+        let a = handle.prepare(probe).unwrap().execute().unwrap();
+        let b = serial.prepare(probe).unwrap().execute().unwrap();
+        assert_eq!(a.raw_report().output, b.raw_report().output);
     }
 }

@@ -66,6 +66,13 @@ pub struct SystemConfig {
     /// wall-clock only: outputs and all simulated timing/energy/endurance
     /// metrics are bit-identical for every value. 0 = auto-detect cores.
     pub parallelism: usize,
+    /// Admission cap of the always-on shard executor serving concurrent
+    /// readers ([`crate::exec::pool`]): at most this many shard jobs may
+    /// be queued or running; further submissions block their reader
+    /// thread (back-pressure). 0 = auto (`4 * parallelism`). Wall-clock
+    /// only — outputs and simulated metrics are identical for every
+    /// value.
+    pub admission: usize,
     /// Host core frequency (Hz).
     pub core_freq_hz: f64,
     /// L1 data cache size (bytes).
@@ -143,6 +150,7 @@ impl Default for SystemConfig {
 
             exec_threads: 4,
             parallelism: 1,
+            admission: 0,
             core_freq_hz: 3.6e9,
             l1_bytes: 64 << 10,
             l1_ways: 4,
@@ -224,6 +232,7 @@ impl SystemConfig {
             "opencapi_latency_ns" => parse!(opencapi_latency_ns),
             "exec_threads" => parse!(exec_threads),
             "parallelism" => parse!(parallelism),
+            "admission" => parse!(admission),
             "core_freq_hz" => parse!(core_freq_hz),
             "l1_bytes" => parse!(l1_bytes),
             "l1_ways" => parse!(l1_ways),
@@ -296,6 +305,7 @@ impl SystemConfig {
         m.insert("opencapi_bw_bps", self.opencapi_bw_bps.to_string());
         m.insert("exec_threads", self.exec_threads.to_string());
         m.insert("parallelism", self.parallelism.to_string());
+        m.insert("admission", self.admission.to_string());
         m.insert("core_freq_hz", self.core_freq_hz.to_string());
         m.insert("l1_bytes", self.l1_bytes.to_string());
         m.insert("l2_bytes", self.l2_bytes.to_string());
@@ -341,6 +351,16 @@ mod tests {
         c.set("parallelism", "0").unwrap(); // 0 = auto
         assert_eq!(c.parallelism, 0);
         assert!(c.set("parallelism", "-1").is_err());
+    }
+
+    #[test]
+    fn admission_knob_parses() {
+        let mut c = SystemConfig::default();
+        assert_eq!(c.admission, 0); // 0 = auto (4 * parallelism)
+        c.set("admission", "32").unwrap();
+        assert_eq!(c.admission, 32);
+        assert!(c.set("admission", "-3").is_err());
+        assert_eq!(c.entries()["admission"], "32");
     }
 
     #[test]

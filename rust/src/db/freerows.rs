@@ -24,6 +24,8 @@
 
 use std::collections::BTreeSet;
 
+use crate::util::bits::EpochMask;
+
 /// Row liveness + wear map of one relation's materialized crossbars.
 ///
 /// Rows are global sim-row indices (`crossbar * rows_per_xbar + row`).
@@ -166,6 +168,116 @@ impl FreeRowMap {
     }
 }
 
+/// Epoch-versioned row map: the committed [`FreeRowMap`] plus the
+/// two-plane [`EpochMask`] that lets a DML batch flip row visibility
+/// atomically while in-flight readers keep scanning their snapshot.
+///
+/// The batch discipline is *take-out / put-back*:
+///
+/// 1. [`EpochRowMap::begin_batch`] hands the caller an owned clone of
+///    the committed map (the *pending* map). The writer mutates that
+///    clone — and its private copy of the crossbar arrays — with **no
+///    lock held** on this structure, so readers are never blocked by
+///    batch execution.
+/// 2. [`EpochRowMap::commit_batch`] takes the pending map back, syncs
+///    the shadow visibility plane to it, flips the active plane, bumps
+///    the epoch and installs the pending map as committed — the only
+///    step that needs exclusive access, and it is O(capacity) bit
+///    bookkeeping, not query work.
+/// 3. [`EpochRowMap::abort_batch`] discards the shadow; the committed
+///    state (including wear — an aborted batch charges no wear) is
+///    untouched.
+///
+/// Invariant (asserted by the fuzz tests): after every commit/abort the
+/// active [`EpochMask`] plane equals the committed map's liveness.
+#[derive(Clone, Debug)]
+pub struct EpochRowMap {
+    committed: FreeRowMap,
+    mask: EpochMask,
+    epoch: u64,
+    in_batch: bool,
+}
+
+impl EpochRowMap {
+    /// Wrap a committed map at epoch 0.
+    pub fn new(committed: FreeRowMap) -> EpochRowMap {
+        let flags: Vec<bool> = (0..committed.capacity()).map(|i| committed.is_live(i)).collect();
+        EpochRowMap {
+            mask: EpochMask::from_flags(&flags, committed.capacity()),
+            committed,
+            epoch: 0,
+            in_batch: false,
+        }
+    }
+
+    /// Number of committed batches so far — the snapshot version tag.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Whether a batch is in flight (begun, not yet committed/aborted).
+    pub fn in_batch(&self) -> bool {
+        self.in_batch
+    }
+
+    /// The committed map (liveness, wear).
+    pub fn committed(&self) -> &FreeRowMap {
+        &self.committed
+    }
+
+    /// Committed visibility of `row` (the active epoch plane).
+    pub fn is_live(&self, row: usize) -> bool {
+        self.mask.get(row)
+    }
+
+    /// Committed live-row count.
+    pub fn live_count(&self) -> usize {
+        self.committed.live_count()
+    }
+
+    /// Charge committed wear outside a batch (reader-side endurance
+    /// accounting; queries wear cells too). Not legal mid-batch — the
+    /// pending clone would miss the charge.
+    pub fn charge_profile(&mut self, totals: &[u64]) {
+        assert!(!self.in_batch, "charge_profile during a batch");
+        self.committed.charge_profile(totals);
+    }
+
+    /// Start a batch: returns an owned *pending* clone of the committed
+    /// map for the writer to mutate lock-free. Panics on a nested batch.
+    pub fn begin_batch(&mut self) -> FreeRowMap {
+        assert!(!self.in_batch, "nested DML batch on one relation");
+        self.in_batch = true;
+        self.mask.begin_batch();
+        self.committed.clone()
+    }
+
+    /// Publish the pending map: sync the shadow plane to its liveness,
+    /// flip the active plane, bump the epoch and install it as committed.
+    pub fn commit_batch(&mut self, pending: FreeRowMap) {
+        assert!(self.in_batch, "commit_batch outside a batch");
+        // fallible-ish bookkeeping first: grow the mask to the pending
+        // capacity (INSERT may have appended crossbars), then sync.
+        if pending.capacity() > self.mask.capacity() {
+            self.mask.grow(pending.capacity() - self.mask.capacity());
+        }
+        for row in 0..pending.capacity() {
+            self.mask.set_pending(row, pending.is_live(row));
+        }
+        self.mask.commit_batch();
+        self.committed = pending;
+        self.epoch += 1;
+        self.in_batch = false;
+    }
+
+    /// Discard the batch; committed state (and wear) is untouched.
+    pub fn abort_batch(&mut self) {
+        assert!(self.in_batch, "abort_batch outside a batch");
+        self.mask.abort_batch();
+        self.in_batch = false;
+    }
+}
+
 const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
 const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
 
@@ -225,6 +337,101 @@ pub fn golden_alloc_digest() -> u64 {
     }
     state = fnv1a_fold(state, fm.live_count() as u64);
     state = fnv1a_fold(state, fm.total_wear());
+    state
+}
+
+/// Cross-language golden pin for the epoch scheme: `python/epochmirror.py`
+/// runs the identical scripted begin/mutate/commit/abort interleaving and
+/// pins the same constant (`GOLDEN_EPOCH_DIGEST`). The digest folds every
+/// operation, every allocator answer *and* committed-view probes taken
+/// mid-batch, so it pins the visibility rule itself — a committed reader
+/// view must never move while a batch is in flight.
+pub fn golden_epoch_digest() -> u64 {
+    let mut em = EpochRowMap::new(FreeRowMap::new(48, 24, 16));
+    let mut state = FNV_OFFSET;
+    let mut x: u64 = 7;
+    let mut pending: Option<FreeRowMap> = None;
+    for _ in 0..300 {
+        x = x
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        let op = x % 5;
+        let arg = ((x >> 8) % 64) as usize;
+        state = fnv1a_fold(state, op);
+        match op {
+            0 => match pending {
+                // begin a batch (no-op fold when one is in flight)
+                Some(_) => state = fnv1a_fold(state, 0),
+                None => {
+                    pending = Some(em.begin_batch());
+                    state = fnv1a_fold(state, 1);
+                }
+            },
+            1 => match pending.as_mut() {
+                // mutate the pending clone: alloc+charge / release / grow
+                None => state = fnv1a_fold(state, 2),
+                Some(p) => match (x >> 16) % 3 {
+                    0 => {
+                        let row = p.alloc();
+                        state = fnv1a_fold(state, row.map(|r| r as u64).unwrap_or(0xFFFF));
+                        if let Some(r) = row {
+                            p.charge_row(r, (x >> 24) % 5 + 1);
+                        }
+                    }
+                    1 => {
+                        let row = (0..p.capacity())
+                            .map(|k| (arg + k) % p.capacity())
+                            .find(|&cand| p.is_live(cand));
+                        match row {
+                            None => state = fnv1a_fold(state, 0xFFFE),
+                            Some(r) => {
+                                p.release(r);
+                                state = fnv1a_fold(state, r as u64);
+                            }
+                        }
+                    }
+                    _ => {
+                        p.grow(16);
+                        state = fnv1a_fold(state, p.capacity() as u64);
+                    }
+                },
+            },
+            2 => match pending.take() {
+                // commit: visibility flips, epoch bumps
+                None => state = fnv1a_fold(state, 3),
+                Some(p) => {
+                    em.commit_batch(p);
+                    state = fnv1a_fold(state, em.epoch());
+                }
+            },
+            3 => match pending.take() {
+                // abort: committed view and wear untouched
+                None => state = fnv1a_fold(state, 5),
+                Some(_) => {
+                    em.abort_batch();
+                    state = fnv1a_fold(state, 4);
+                }
+            },
+            _ => {
+                // committed-view probe (+ reader wear charge when idle) —
+                // mid-batch probes must see the pre-batch state
+                if pending.is_none() && (x >> 16) & 1 == 1 {
+                    let totals: Vec<u64> = (0..16u64)
+                        .map(|r| ((x >> 24).wrapping_add(3 * r + 1)) % 4)
+                        .collect();
+                    em.charge_profile(&totals);
+                    state = fnv1a_fold(state, totals.iter().sum());
+                }
+                let r = arg % em.committed().capacity();
+                state = fnv1a_fold(
+                    state,
+                    (em.is_live(r) as u64) | ((em.live_count() as u64) << 1),
+                );
+            }
+        }
+    }
+    state = fnv1a_fold(state, em.epoch());
+    state = fnv1a_fold(state, em.committed().total_wear());
     state
 }
 
@@ -292,6 +499,145 @@ mod tests {
         assert_eq!(fm.live_count(), 8);
         // fresh rows are unworn and allocatable first
         assert_eq!(fm.alloc(), Some(8));
+    }
+
+    #[test]
+    fn golden_epoch_digest_matches_the_python_mirror_pin() {
+        // regenerate with `python3 python/epochmirror.py`
+        assert_eq!(golden_epoch_digest(), 0x6A41_5BD4_4B7C_485C);
+    }
+
+    #[test]
+    fn epoch_batch_take_out_put_back() {
+        let mut em = EpochRowMap::new(FreeRowMap::new(8, 4, 8));
+        assert_eq!(em.epoch(), 0);
+        assert_eq!(em.live_count(), 4);
+
+        let mut pending = em.begin_batch();
+        assert!(em.in_batch());
+        pending.release(1);
+        let row = pending.alloc().unwrap();
+        // rows 1,4..8 are all free at wear 0; ties break to lowest index
+        assert_eq!(row, 1);
+        pending.charge_row(row, 3);
+
+        // committed view is frozen while the batch mutates its clone
+        assert!(em.is_live(1));
+        assert_eq!(em.live_count(), 4);
+        assert_eq!(em.committed().row_wear(1), 0);
+
+        em.commit_batch(pending);
+        assert_eq!(em.epoch(), 1);
+        assert!(em.is_live(1));
+        assert_eq!(em.committed().row_wear(1), 3);
+        assert!(!em.in_batch());
+    }
+
+    #[test]
+    fn epoch_abort_leaves_committed_state_and_wear_untouched() {
+        let mut em = EpochRowMap::new(FreeRowMap::new(8, 4, 8));
+        let mut pending = em.begin_batch();
+        pending.release(0);
+        pending.release(1);
+        pending.charge_row(2, 99);
+        em.abort_batch();
+        assert_eq!(em.epoch(), 0);
+        assert!(em.is_live(0) && em.is_live(1));
+        assert_eq!(em.committed().row_wear(2), 0);
+        // a fresh batch starts from the committed state
+        let p2 = em.begin_batch();
+        assert!(p2.is_live(0) && p2.is_live(1));
+        assert_eq!(p2.row_wear(2), 0);
+    }
+
+    #[test]
+    fn epoch_commit_grows_mask_to_pending_capacity() {
+        let mut em = EpochRowMap::new(FreeRowMap::new(4, 4, 4));
+        let mut pending = em.begin_batch();
+        assert_eq!(pending.alloc(), None);
+        pending.grow(4);
+        let r = pending.alloc().unwrap();
+        assert_eq!(r, 4);
+        em.commit_batch(pending);
+        assert_eq!(em.committed().capacity(), 8);
+        assert!(em.is_live(4) && !em.is_live(5));
+        assert_eq!(em.live_count(), 5);
+    }
+
+    #[test]
+    fn fuzz_epoch_visibility_against_two_version_oracle() {
+        // the Rust half of the python fuzz suite: the two-plane mask must
+        // always agree with a from-scratch (committed, Option<pending>)
+        // pair of liveness vectors, with committed frozen mid-batch
+        check("epoch-two-version-oracle", 120, |g| {
+            let cap = g.usize(1, 32);
+            let live0 = g.usize(0, cap);
+            let mut em = EpochRowMap::new(FreeRowMap::new(cap, live0, 8));
+            let mut committed: Vec<bool> = (0..cap).map(|i| i < live0).collect();
+            let mut pending: Option<(FreeRowMap, Vec<bool>)> = None;
+            let mut epoch = 0u64;
+            for _ in 0..50 {
+                match g.usize(0, 4) {
+                    0 => {
+                        if pending.is_none() {
+                            let p = em.begin_batch();
+                            let flags = committed.clone();
+                            pending = Some((p, flags));
+                        }
+                    }
+                    1 => {
+                        if let Some((p, flags)) = pending.as_mut() {
+                            match g.usize(0, 2) {
+                                0 => {
+                                    if let Some(r) = p.alloc() {
+                                        flags[r] = true;
+                                    }
+                                }
+                                1 => {
+                                    let live: Vec<usize> = (0..flags.len())
+                                        .filter(|&r| flags[r])
+                                        .collect();
+                                    if !live.is_empty() {
+                                        let r = *g.pick(&live);
+                                        p.release(r);
+                                        flags[r] = false;
+                                    }
+                                }
+                                _ => {
+                                    p.grow(8);
+                                    flags.resize(flags.len() + 8, false);
+                                }
+                            }
+                        }
+                    }
+                    2 => {
+                        if let Some((p, flags)) = pending.take() {
+                            em.commit_batch(p);
+                            committed = flags;
+                            epoch += 1;
+                        }
+                    }
+                    3 => {
+                        if pending.take().is_some() {
+                            em.abort_batch();
+                        }
+                    }
+                    _ => {}
+                }
+                // committed view == oracle committed vector, always —
+                // including mid-batch (snapshot stability)
+                assert_eq!(em.epoch(), epoch);
+                assert_eq!(em.in_batch(), pending.is_some());
+                for (r, &l) in committed.iter().enumerate() {
+                    assert_eq!(em.is_live(r), l, "row {r} visibility");
+                    assert_eq!(em.committed().is_live(r), l);
+                }
+                assert_eq!(
+                    em.live_count(),
+                    committed.iter().filter(|&&l| l).count()
+                );
+            }
+        });
     }
 
     #[test]

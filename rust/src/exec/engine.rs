@@ -88,6 +88,80 @@ impl XbarState {
     }
 }
 
+/// Column-plane storage the instruction interpreter runs against.
+///
+/// Two implementations: [`XbarState`] (the in-place path — DML and the
+/// legacy wave executor mutate the crossbar arrays directly) and
+/// [`SnapshotView`] (the concurrent read path — data columns come from a
+/// shared immutable snapshot, compute columns from a private scratch, so
+/// any number of readers interpret the same crossbars without
+/// synchronization). Loads return the plane by value, matching the word
+/// copies the kernels always made.
+pub(crate) trait Planes {
+    /// Load the packed plane of column `col`.
+    fn ld(&self, col: usize) -> [u64; WORDS];
+    /// Store the packed plane of column `col`.
+    fn st(&mut self, col: usize, v: [u64; WORDS]);
+}
+
+impl Planes for XbarState {
+    #[inline]
+    fn ld(&self, col: usize) -> [u64; WORDS] {
+        self.planes[col]
+    }
+
+    #[inline]
+    fn st(&mut self, col: usize, v: [u64; WORDS]) {
+        self.planes[col] = v;
+    }
+}
+
+/// Read-only view of one crossbar for snapshot execution: data columns
+/// (below `compute_base`) read through to the shared [`XbarState`];
+/// compute columns live in a private zeroed scratch. Compiled programs
+/// write *only* at/above `compute_base` (the compiler's column
+/// discipline, re-checked here by a debug assert), which is exactly what
+/// makes lock-free shared-snapshot execution sound — and the zeroed
+/// scratch matches the `clear_compute` invariant the in-place path
+/// maintains between programs.
+pub(crate) struct SnapshotView<'a> {
+    data: &'a XbarState,
+    compute_base: usize,
+    scratch: Vec<[u64; WORDS]>,
+}
+
+impl<'a> SnapshotView<'a> {
+    /// A view over `data` whose compute area starts at `compute_base`.
+    pub(crate) fn new(data: &'a XbarState, compute_base: usize) -> Self {
+        SnapshotView {
+            data,
+            compute_base,
+            scratch: vec![[0u64; WORDS]; data.planes.len().saturating_sub(compute_base)],
+        }
+    }
+}
+
+impl Planes for SnapshotView<'_> {
+    #[inline]
+    fn ld(&self, col: usize) -> [u64; WORDS] {
+        if col < self.compute_base {
+            self.data.planes[col]
+        } else {
+            self.scratch[col - self.compute_base]
+        }
+    }
+
+    #[inline]
+    fn st(&mut self, col: usize, v: [u64; WORDS]) {
+        debug_assert!(
+            col >= self.compute_base,
+            "snapshot execution wrote data column {col} (compute base {})",
+            self.compute_base
+        );
+        self.scratch[col - self.compute_base] = v;
+    }
+}
+
 /// Load a relation partition into crossbar states (records -> rows,
 /// attributes -> column slots, VALID bit set on occupied rows).
 ///
@@ -188,6 +262,18 @@ pub fn exec_instr(
     reduce_out: &mut Vec<u128>,
     scratch: &mut Scratch,
 ) {
+    exec_instr_on(st, instr, reduce_out, scratch)
+}
+
+/// The interpreter itself, generic over the plane store so the in-place
+/// path ([`XbarState`]) and the lock-free snapshot path
+/// ([`SnapshotView`]) run the identical kernels.
+pub(crate) fn exec_instr_on<P: Planes>(
+    st: &mut P,
+    instr: &PimInstruction,
+    reduce_out: &mut Vec<u128>,
+    scratch: &mut Scratch,
+) {
     let a = instr.src_a;
     let d = instr.dst;
     match instr.op {
@@ -200,12 +286,12 @@ pub fn exec_instr(
                 Opcode::GtImm => not_words(&or_words(&lt, &eq)),
                 _ => unreachable!(),
             };
-            st.planes[d.start as usize] = out;
+            st.st(d.start as usize, out);
         }
         Opcode::Eq | Opcode::Lt => {
             let b = instr.src_b.expect("binary cmp");
             let (eq, lt) = cmp_cols_planes(st, a, b);
-            st.planes[d.start as usize] = if instr.op == Opcode::Eq { eq } else { lt };
+            st.st(d.start as usize, if instr.op == Opcode::Eq { eq } else { lt });
         }
         Opcode::AddImm => {
             // Same loop bound and zero-extension as Add: a widening
@@ -219,7 +305,7 @@ pub fn exec_instr(
                 let bit = (instr.imm >> i) & 1;
                 let pb = if bit == 1 { [u64::MAX; WORDS] } else { [0u64; WORDS] };
                 let (s, c) = full_add(&pa, &pb, &carry);
-                st.planes[d.start as usize + i] = s;
+                st.st(d.start as usize + i, s);
                 carry = c;
             }
         }
@@ -231,7 +317,7 @@ pub fn exec_instr(
                 let pa = plane_or_zero(st, a, i);
                 let pb = plane_or_zero(st, b, i);
                 let (s, c) = full_add(&pa, &pb, &carry);
-                st.planes[d.start as usize + i] = s;
+                st.st(d.start as usize + i, s);
                 carry = c;
             }
         }
@@ -247,10 +333,10 @@ pub fn exec_instr(
                 *p = [0u64; WORDS];
             }
             for i in 0..b.len as usize {
-                let m = st.planes[b.start as usize + i];
+                let m = st.ld(b.start as usize + i);
                 let mut carry = [0u64; WORDS];
                 for j in 0..(a.len as usize).min(n - i) {
-                    let ad = and_words(&st.planes[a.start as usize + j], &m);
+                    let ad = and_words(&st.ld(a.start as usize + j), &m);
                     let (s, c) = full_add(&acc[i + j], &ad, &carry);
                     acc[i + j] = s;
                     carry = c;
@@ -263,23 +349,24 @@ pub fn exec_instr(
                     k += 1;
                 }
             }
-            for (j, p) in acc.iter().enumerate() {
-                st.planes[d.start as usize + j] = *p;
+            for j in 0..n {
+                st.st(d.start as usize + j, scratch.mul_acc[j]);
             }
         }
         Opcode::Set => {
             for i in 0..d.len as usize {
-                st.planes[d.start as usize + i] = [u64::MAX; WORDS];
+                st.st(d.start as usize + i, [u64::MAX; WORDS]);
             }
         }
         Opcode::Reset => {
             for i in 0..d.len as usize {
-                st.planes[d.start as usize + i] = [0u64; WORDS];
+                st.st(d.start as usize + i, [0u64; WORDS]);
             }
         }
         Opcode::Not => {
             for i in 0..a.len as usize {
-                st.planes[d.start as usize + i] = not_words(&st.planes[a.start as usize + i]);
+                let v = not_words(&st.ld(a.start as usize + i));
+                st.st(d.start as usize + i, v);
             }
         }
         Opcode::And | Opcode::Or => {
@@ -287,22 +374,24 @@ pub fn exec_instr(
             let broadcast = b.len == 1 && a.len > 1;
             for i in 0..a.len as usize {
                 let pb = if broadcast {
-                    st.planes[b.start as usize]
+                    st.ld(b.start as usize)
                 } else {
                     plane_or_zero(st, b, i)
                 };
-                let pa = st.planes[a.start as usize + i];
-                st.planes[d.start as usize + i] = if instr.op == Opcode::And {
+                let pa = st.ld(a.start as usize + i);
+                let v = if instr.op == Opcode::And {
                     and_words(&pa, &pb)
                 } else {
                     or_words(&pa, &pb)
                 };
+                st.st(d.start as usize + i, v);
             }
         }
         Opcode::ReduceSum => {
             let mut sum: u128 = 0;
             for i in 0..a.len as usize {
-                let pc: u64 = st.planes[a.start as usize + i]
+                let pc: u64 = st
+                    .ld(a.start as usize + i)
                     .iter()
                     .map(|w| w.count_ones() as u64)
                     .sum();
@@ -315,7 +404,7 @@ pub fn exec_instr(
             let mut cand = [u64::MAX; WORDS];
             let mut val: u128 = 0;
             for j in (0..a.len as usize).rev() {
-                let p = st.planes[a.start as usize + j];
+                let p = st.ld(a.start as usize + j);
                 let narrowed = if is_min {
                     and_words(&cand, &not_words(&p))
                 } else {
@@ -375,6 +464,67 @@ pub fn exec_steps_native(states: &mut [XbarState], steps: &[Step], mask_col: usi
     }
 }
 
+/// Run a program over a shard of *shared* crossbar states without
+/// mutating them: each crossbar gets a [`SnapshotView`] (data columns
+/// read through, compute columns in private zeroed scratch). This is the
+/// concurrent read path — any number of threads may run programs over
+/// the same `&[XbarState]` simultaneously.
+///
+/// `seed_masks`, when present, holds one pre-computed filter-mask plane
+/// per crossbar of the shard (a shared-scan transplant); it is stored
+/// into `mask_col` before the steps run, so callers pass the program's
+/// suffix steps. Returns the outputs plus the final mask plane of every
+/// crossbar (for capture into the scan cache).
+pub(crate) fn exec_steps_snapshot(
+    states: &[XbarState],
+    compute_base: usize,
+    steps: &[Step],
+    mask_col: usize,
+    seed_masks: Option<&[[u64; WORDS]]>,
+) -> (ExecOutputs, Vec<[u64; WORDS]>) {
+    let n_reduces = steps
+        .iter()
+        .filter(|s| {
+            matches!(
+                s.instr.op,
+                Opcode::ReduceSum | Opcode::ReduceMin | Opcode::ReduceMax
+            )
+        })
+        .count();
+    debug_assert!(
+        states.iter().all(|st| mask_col < st.planes.len()),
+        "mask_col {mask_col} out of range for crossbar states"
+    );
+    debug_assert!(seed_masks.is_none_or(|s| s.len() == states.len()));
+    let mut reduces = vec![Vec::with_capacity(states.len()); n_reduces];
+    let mut mask_counts = Vec::with_capacity(states.len());
+    let mut mask_planes = Vec::with_capacity(states.len());
+    let mut scratch = Scratch::new();
+    for (x, data) in states.iter().enumerate() {
+        let mut view = SnapshotView::new(data, compute_base);
+        if let Some(seeds) = seed_masks {
+            view.st(mask_col, seeds[x]);
+        }
+        let mut out = Vec::with_capacity(n_reduces);
+        for step in steps {
+            exec_instr_on(&mut view, &step.instr, &mut out, &mut scratch);
+        }
+        for (i, v) in out.into_iter().enumerate() {
+            reduces[i].push(v);
+        }
+        let m = view.ld(mask_col);
+        mask_counts.push(m.iter().map(|w| w.count_ones() as u64).sum());
+        mask_planes.push(m);
+    }
+    (
+        ExecOutputs {
+            reduces,
+            mask_counts,
+        },
+        mask_planes,
+    )
+}
+
 // --- word helpers -----------------------------------------------------------
 
 #[inline]
@@ -421,9 +571,9 @@ fn full_add(
 }
 
 #[inline]
-fn plane_or_zero(st: &XbarState, r: ColRange, i: usize) -> [u64; WORDS] {
+fn plane_or_zero<P: Planes>(st: &P, r: ColRange, i: usize) -> [u64; WORDS] {
     if i < r.len as usize {
-        st.planes[r.start as usize + i]
+        st.ld(r.start as usize + i)
     } else {
         [0u64; WORDS]
     }
@@ -436,11 +586,11 @@ fn plane_or_zero(st: &XbarState, r: ColRange, i: usize) -> [u64; WORDS] {
 /// `imm mod 2^a.len`. The query compiler canonicalizes out-of-range
 /// immediates to Set/Reset before they reach the engine
 /// (`lower_cmp_imm`), so compiled programs never rely on the truncation.
-fn cmp_imm_planes(st: &XbarState, a: ColRange, imm: u64) -> ([u64; WORDS], [u64; WORDS]) {
+fn cmp_imm_planes<P: Planes>(st: &P, a: ColRange, imm: u64) -> ([u64; WORDS], [u64; WORDS]) {
     let mut eq = [u64::MAX; WORDS];
     let mut lt = [0u64; WORDS];
     for i in (0..a.len as usize).rev() {
-        let p = st.planes[a.start as usize + i];
+        let p = st.ld(a.start as usize + i);
         let bit = (imm >> i) & 1;
         for w in 0..WORDS {
             if bit == 1 {
@@ -454,11 +604,11 @@ fn cmp_imm_planes(st: &XbarState, a: ColRange, imm: u64) -> ([u64; WORDS], [u64;
     (eq, lt)
 }
 
-fn cmp_cols_planes(st: &XbarState, a: ColRange, b: ColRange) -> ([u64; WORDS], [u64; WORDS]) {
+fn cmp_cols_planes<P: Planes>(st: &P, a: ColRange, b: ColRange) -> ([u64; WORDS], [u64; WORDS]) {
     let mut eq = [u64::MAX; WORDS];
     let mut lt = [0u64; WORDS];
     for i in (0..a.len as usize).rev() {
-        let pa = st.planes[a.start as usize + i];
+        let pa = st.ld(a.start as usize + i);
         let pb = plane_or_zero(st, b, i);
         for w in 0..WORDS {
             lt[w] |= eq[w] & !pa[w] & pb[w];
@@ -692,6 +842,72 @@ mod tests {
                 &mut out,
             );
             assert_eq!(out[0], *vals.iter().max().unwrap() as u128);
+        });
+    }
+
+    #[test]
+    fn snapshot_exec_matches_native_and_leaves_data_untouched() {
+        check("engine-snapshot-vs-native", 25, |g| {
+            let bits = g.usize(1, 10);
+            let imm = g.u64(0, (1 << bits) - 1);
+            let n_states = g.usize(1, 3);
+            let compute_base = 16;
+            let mut native: Vec<XbarState> = Vec::new();
+            for _ in 0..n_states {
+                let vals = g.vec_u64(XBAR_ROWS, 0, (1 << bits) - 1);
+                let mut st = XbarState::new(48);
+                load_values(&vals, 0, bits, &mut st);
+                native.push(st);
+            }
+            let shared = native.clone();
+            let mask_col = 20;
+            let steps = vec![
+                step(PimInstruction::with_imm(
+                    Opcode::LtImm,
+                    ColRange::new(0, bits),
+                    ColRange::new(mask_col, 1),
+                    imm,
+                )),
+                step(PimInstruction::binary(
+                    Opcode::And,
+                    ColRange::new(0, bits),
+                    ColRange::new(mask_col, 1),
+                    ColRange::new(24, bits),
+                )),
+                step(PimInstruction::unary(
+                    Opcode::ReduceSum,
+                    ColRange::new(24, bits),
+                    ColRange::new(24, bits),
+                )),
+            ];
+            let want = exec_steps_native(&mut native, &steps, mask_col);
+            let (got, masks) = exec_steps_snapshot(&shared, compute_base, &steps, mask_col, None);
+            assert_eq!(got.reduces, want.reduces);
+            assert_eq!(got.mask_counts, want.mask_counts);
+            // the captured mask planes equal the in-place result planes
+            for (x, m) in masks.iter().enumerate() {
+                assert_eq!(*m, native[x].planes[mask_col]);
+            }
+            // the shared states were never written: data columns pristine,
+            // and the compute area still all-zero
+            for (x, st) in shared.iter().enumerate() {
+                for c in 0..st.planes.len() {
+                    if c < compute_base {
+                        // programs write compute columns only, so the
+                        // native run's data area is the pristine one
+                        assert_eq!(st.planes[c], native[x].planes[c], "data col {c}");
+                    } else {
+                        assert_eq!(st.planes[c], [0u64; WORDS], "compute col {c}");
+                    }
+                }
+            }
+            // replay: seeding the captured masks and running only the
+            // suffix reproduces the full-program outputs
+            let (replayed, masks2) =
+                exec_steps_snapshot(&shared, compute_base, &steps[1..], mask_col, Some(&masks));
+            assert_eq!(replayed.reduces, want.reduces);
+            assert_eq!(replayed.mask_counts, want.mask_counts);
+            assert_eq!(masks2, masks);
         });
     }
 

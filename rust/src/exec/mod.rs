@@ -1,7 +1,8 @@
 //! Execution engines: the PIMDB engine (functional crossbar interpreter +
 //! full-system timing/energy simulation), the sharded parallel execution
-//! plan that fans its crossbar work out over host threads, and the
-//! in-memory column-store baseline it is compared against (paper
+//! plan that fans its crossbar work out over host threads, the always-on
+//! shard pool serving concurrent snapshot readers, and the in-memory
+//! column-store baseline the engine is compared against (paper
 //! §5.4–§5.5).
 
 pub mod baseline;
@@ -9,6 +10,7 @@ pub mod engine;
 pub mod metrics;
 pub mod pimdb;
 pub mod plan;
+pub(crate) mod pool;
 
 /// Why the functional execution of a compiled program failed.
 ///

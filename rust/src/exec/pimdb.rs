@@ -419,14 +419,22 @@ pub(crate) fn record_endurance(tr: &mut EnduranceTracker, steps: &[Step], xbar_r
     }
 }
 
+/// One executed program's per-row write profile (`XBAR_ROWS` totals,
+/// identical on every crossbar of the relation). The snapshot read path
+/// computes this without holding any relation lock and folds it into a
+/// ledger; [`charge_wear`] is the charge-immediately form.
+pub(crate) fn wear_profile(steps: &[Step], xbar_cols: usize) -> Vec<u64> {
+    let mut tr = EnduranceTracker::new(XBAR_ROWS, xbar_cols);
+    record_endurance(&mut tr, steps, XBAR_ROWS);
+    tr.row_totals()
+}
+
 /// Charge one executed program's write profile into a relation's
 /// persistent wear counters — the single charging policy shared by the
 /// [`crate::api::Pimdb`] facade, [`PimSession`] and the DML executor,
 /// so the endurance-aware allocator sees identical heat on every path.
 pub(crate) fn charge_wear(free: &mut FreeRowMap, steps: &[Step], xbar_cols: usize) {
-    let mut tr = EnduranceTracker::new(XBAR_ROWS, xbar_cols);
-    record_endurance(&mut tr, steps, XBAR_ROWS);
-    free.charge_profile(&tr.row_totals());
+    free.charge_profile(&wear_profile(steps, xbar_cols));
 }
 
 /// Global sim-row indices whose bit is set in `mask_col`.

@@ -1,0 +1,483 @@
+//! Always-on shard executor for the concurrent serving path.
+//!
+//! The batched wave scheduler in [`crate::exec::plan`] spins up scoped
+//! worker threads per call — fine for one session running waves, wrong
+//! for a serving runtime where many reader threads submit programs
+//! continuously. [`ShardPool`] keeps a fixed set of workers alive for
+//! the lifetime of the [`crate::api::Pimdb`] handle:
+//!
+//! * **per-worker queues + stealing** — each worker owns a deque;
+//!   submissions round-robin across them and idle workers steal from
+//!   their peers, so one slow shard never serializes the pool;
+//! * **admission control** — at most `cap` shard jobs may be queued or
+//!   running; further submissions block the *submitting* reader thread
+//!   (back-pressure) instead of growing the queues without bound;
+//! * **panic isolation** — a panicking shard job is caught at the pool
+//!   boundary and surfaces as an [`ExecError`] on the submitting call,
+//!   never as a dead worker.
+//!
+//! Shard jobs run [`engine::exec_steps_snapshot`] over `Arc`-shared
+//! immutable crossbar snapshots, so any number of concurrent
+//! [`ShardPool::run_snapshot`] calls — from any number of reader
+//! threads — execute against the same relation version without
+//! synchronizing with each other or with DML batch execution.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, PoisonError};
+use std::thread::JoinHandle;
+
+use crate::exec::engine::{self, ExecOutputs, XbarState};
+use crate::exec::pimdb::EngineKind;
+use crate::exec::plan::ExecPlan;
+use crate::exec::ExecError;
+use crate::query::compiler::Step;
+use crate::util::bits::WORDS;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Lock a pool-internal mutex, recovering from poison: pool bookkeeping
+/// (queues, counters) stays consistent across a panicking job because
+/// jobs run outside these critical sections.
+fn lock_recover<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+struct PoolShared {
+    /// One job deque per worker (round-robin submit, peer stealing).
+    queues: Vec<Mutex<VecDeque<Job>>>,
+    /// Sleep lock + condvar for idle workers. Submitters notify while
+    /// holding the lock, and workers re-check the queues under it before
+    /// waiting, so a wakeup can never be lost.
+    sleep: Mutex<()>,
+    wake: Condvar,
+    /// Jobs queued or running; `submit` blocks at `cap`.
+    pending: Mutex<usize>,
+    space: Condvar,
+    cap: usize,
+    shutdown: AtomicBool,
+}
+
+impl PoolShared {
+    fn try_pop(&self, own: usize) -> Option<Job> {
+        // own queue first, then steal round-robin from the peers
+        let n = self.queues.len();
+        for k in 0..n {
+            let q = &self.queues[(own + k) % n];
+            if let Some(job) = lock_recover(q).pop_front() {
+                return Some(job);
+            }
+        }
+        None
+    }
+
+    fn has_work(&self) -> bool {
+        self.queues.iter().any(|q| !lock_recover(q).is_empty())
+    }
+}
+
+/// Decrements the pending-jobs counter when the job finishes — by any
+/// exit path, including a panic — and frees one admission slot.
+struct PendingGuard(Arc<PoolShared>);
+
+impl Drop for PendingGuard {
+    fn drop(&mut self) {
+        let mut p = lock_recover(&self.0.pending);
+        *p = p.saturating_sub(1);
+        drop(p);
+        self.0.space.notify_one();
+    }
+}
+
+/// The always-on executor. One per [`crate::api::Pimdb`]; dropped with
+/// the handle (workers are signalled and joined).
+pub(crate) struct ShardPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<JoinHandle<()>>,
+    /// Round-robin submission cursor.
+    next: AtomicUsize,
+}
+
+impl ShardPool {
+    /// A pool with `parallelism` workers. `parallelism <= 1` spawns no
+    /// threads: jobs run inline on the submitting thread (the serial
+    /// reference path, bit-identical by construction). `admission` caps
+    /// queued+running jobs; 0 picks `4 * parallelism`.
+    pub(crate) fn new(parallelism: usize, admission: usize) -> ShardPool {
+        let n_workers = if parallelism <= 1 { 0 } else { parallelism };
+        let cap = if admission == 0 {
+            4 * parallelism.max(1)
+        } else {
+            admission
+        }
+        .max(1);
+        let shared = Arc::new(PoolShared {
+            queues: (0..n_workers.max(1)).map(|_| Mutex::new(VecDeque::new())).collect(),
+            sleep: Mutex::new(()),
+            wake: Condvar::new(),
+            pending: Mutex::new(0),
+            space: Condvar::new(),
+            cap,
+            shutdown: AtomicBool::new(false),
+        });
+        let workers = (0..n_workers)
+            .map(|idx| {
+                let sh = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(sh, idx))
+            })
+            .collect();
+        ShardPool {
+            shared,
+            workers,
+            next: AtomicUsize::new(0),
+        }
+    }
+
+    /// Submit one job. Blocks while the pool is at its admission cap;
+    /// runs the job inline in serial mode.
+    fn submit(&self, job: Job) {
+        if self.workers.is_empty() {
+            job();
+            return;
+        }
+        let sh = &self.shared;
+        {
+            let mut p = lock_recover(&sh.pending);
+            while *p >= sh.cap {
+                p = sh
+                    .space
+                    .wait(p)
+                    .unwrap_or_else(PoisonError::into_inner);
+            }
+            *p += 1;
+        }
+        let guard_sh = Arc::clone(sh);
+        let wrapped: Job = Box::new(move || {
+            let _slot = PendingGuard(guard_sh);
+            // the job's own result channel reports panics; this catch
+            // keeps the worker thread alive
+            let _ = catch_unwind(AssertUnwindSafe(job));
+        });
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % sh.queues.len();
+        lock_recover(&sh.queues[i]).push_back(wrapped);
+        // notify under the sleep lock: pairs with the worker's re-check
+        let _g = lock_recover(&sh.sleep);
+        sh.wake.notify_one();
+    }
+
+    /// Execute a compiled program over an `Arc`-shared crossbar snapshot,
+    /// sharded per `plan`, without mutating the snapshot. `seed_masks`
+    /// (one plane per crossbar) replays a cached shared-scan mask, in
+    /// which case `steps` is the program's suffix. Returns the merged
+    /// outputs in crossbar order plus every crossbar's final mask plane.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn run_snapshot(
+        &self,
+        states: &Arc<Vec<XbarState>>,
+        compute_base: usize,
+        steps: &[Step],
+        mask_col: usize,
+        seed_masks: Option<&Arc<Vec<[u64; WORDS]>>>,
+        engine_kind: EngineKind,
+        plan: &ExecPlan,
+    ) -> Result<(ExecOutputs, Vec<[u64; WORDS]>), ExecError> {
+        if states.is_empty() {
+            // keep the output shape identical to the serial interpreter
+            return Ok(engine::exec_steps_snapshot(&[], compute_base, steps, mask_col, None));
+        }
+        debug_assert!(seed_masks.is_none_or(|s| s.len() == states.len()));
+        let shard_len = plan.shard_len(states.len());
+        let ranges: Vec<std::ops::Range<usize>> = (0..states.len())
+            .step_by(shard_len)
+            .map(|lo| lo..(lo + shard_len).min(states.len()))
+            .collect();
+        let (tx, rx) = mpsc::channel();
+        let steps_arc: Arc<Vec<Step>> = Arc::new(steps.to_vec());
+        for (i, r) in ranges.iter().enumerate() {
+            let states = Arc::clone(states);
+            let steps = Arc::clone(&steps_arc);
+            let seeds = seed_masks.map(Arc::clone);
+            let tx = tx.clone();
+            let r = r.clone();
+            self.submit(Box::new(move || {
+                let result = catch_unwind(AssertUnwindSafe(|| {
+                    run_shard(
+                        &states[r.clone()],
+                        compute_base,
+                        &steps,
+                        mask_col,
+                        seeds.as_ref().map(|s| &s[r.clone()]),
+                        engine_kind,
+                    )
+                }))
+                .unwrap_or_else(|_| {
+                    Err(ExecError::Backend {
+                        engine: "native",
+                        msg: "shard job panicked".into(),
+                    })
+                });
+                let _ = tx.send((i, result));
+            }));
+        }
+        drop(tx);
+        let mut partials: Vec<(usize, (ExecOutputs, Vec<[u64; WORDS]>))> =
+            Vec::with_capacity(ranges.len());
+        for _ in 0..ranges.len() {
+            let (i, result) = rx.recv().map_err(|_| ExecError::Backend {
+                engine: "native",
+                msg: "shard executor shut down mid-program".into(),
+            })?;
+            partials.push((i, result?));
+        }
+        partials.sort_by_key(|&(i, _)| i);
+        let mut merged: Option<(ExecOutputs, Vec<[u64; WORDS]>)> = None;
+        for (_, (out, masks)) in partials {
+            match merged.as_mut() {
+                None => merged = Some((out, masks)),
+                Some((m_out, m_masks)) => {
+                    debug_assert_eq!(m_out.reduces.len(), out.reduces.len());
+                    for (dst, src) in m_out.reduces.iter_mut().zip(out.reduces) {
+                        dst.extend(src);
+                    }
+                    m_out.mask_counts.extend(out.mask_counts);
+                    m_masks.extend(masks);
+                }
+            }
+        }
+        Ok(merged.expect("at least one shard"))
+    }
+}
+
+/// One shard's work: snapshot-interpret natively, or clone-and-run for
+/// the PJRT backend (its kernels mutate state in place, so the snapshot
+/// guarantee is met by handing it a private copy of the shard).
+fn run_shard(
+    shard: &[XbarState],
+    compute_base: usize,
+    steps: &[Step],
+    mask_col: usize,
+    seed_masks: Option<&[[u64; WORDS]]>,
+    engine_kind: EngineKind,
+) -> Result<(ExecOutputs, Vec<[u64; WORDS]>), ExecError> {
+    match engine_kind {
+        EngineKind::Native => Ok(engine::exec_steps_snapshot(
+            shard,
+            compute_base,
+            steps,
+            mask_col,
+            seed_masks,
+        )),
+        EngineKind::Pjrt => {
+            let mut owned: Vec<XbarState> = shard.to_vec();
+            if let Some(seeds) = seed_masks {
+                for (st, m) in owned.iter_mut().zip(seeds) {
+                    st.planes[mask_col] = *m;
+                }
+            }
+            let out = crate::runtime::exec_steps_pjrt(&mut owned, steps, mask_col).map_err(
+                |msg| ExecError::Backend {
+                    engine: "pjrt",
+                    msg,
+                },
+            )?;
+            let masks = owned.iter().map(|st| st.planes[mask_col]).collect();
+            Ok((out, masks))
+        }
+    }
+}
+
+fn worker_loop(sh: Arc<PoolShared>, idx: usize) {
+    loop {
+        if let Some(job) = sh.try_pop(idx) {
+            job();
+            continue;
+        }
+        let g = lock_recover(&sh.sleep);
+        if sh.shutdown.load(Ordering::Acquire) {
+            break;
+        }
+        // re-check under the sleep lock: a submitter that pushed after
+        // our try_pop must take this lock to notify, so either we see
+        // the job here or the notification reaches our wait below
+        if sh.has_work() {
+            continue;
+        }
+        let _g = sh.wake.wait(g).unwrap_or_else(PoisonError::into_inner);
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        {
+            let _g = lock_recover(&self.shared.sleep);
+            self.shared.wake.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::endurance::OpCategory;
+    use crate::pim::isa::{ColRange, Opcode, PimInstruction};
+    use crate::util::rng::Rng;
+
+    fn step(instr: PimInstruction) -> Step {
+        Step {
+            instr,
+            category: OpCategory::Filter,
+        }
+    }
+
+    fn random_states(seed: u64, n: usize) -> Vec<XbarState> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let mut st = XbarState::new(160);
+                for c in 0..32 {
+                    for w in 0..WORDS {
+                        st.planes[c][w] = rng.next_u64();
+                    }
+                }
+                st
+            })
+            .collect()
+    }
+
+    fn program() -> Vec<Step> {
+        vec![
+            step(PimInstruction::with_imm(
+                Opcode::LtImm,
+                ColRange::new(0, 16),
+                ColRange::new(100, 1),
+                0x1234,
+            )),
+            step(PimInstruction::binary(
+                Opcode::And,
+                ColRange::new(0, 16),
+                ColRange::new(100, 1),
+                ColRange::new(110, 16),
+            )),
+            step(PimInstruction::unary(
+                Opcode::ReduceSum,
+                ColRange::new(110, 16),
+                ColRange::new(110, 16),
+            )),
+        ]
+    }
+
+    #[test]
+    fn pool_matches_serial_wave_executor() {
+        let steps = program();
+        for &(workers, n_xbars) in &[(1usize, 5usize), (2, 7), (8, 11), (4, 1)] {
+            let pool = ShardPool::new(workers, 0);
+            let plan = ExecPlan::with_parallelism(workers);
+            let mut serial = random_states(90 + n_xbars as u64, n_xbars);
+            let want = engine::exec_steps_native(&mut serial, &steps, 100);
+            let shared = Arc::new(random_states(90 + n_xbars as u64, n_xbars));
+            let (got, masks) = pool
+                .run_snapshot(&shared, 64, &steps, 100, None, EngineKind::Native, &plan)
+                .unwrap();
+            assert_eq!(got.reduces, want.reduces, "{workers} workers");
+            assert_eq!(got.mask_counts, want.mask_counts);
+            for (x, m) in masks.iter().enumerate() {
+                assert_eq!(*m, serial[x].planes[100]);
+            }
+        }
+    }
+
+    #[test]
+    fn concurrent_submitters_share_the_pool() {
+        let steps = Arc::new(program());
+        let pool = Arc::new(ShardPool::new(4, 2)); // tight admission cap
+        let plan = ExecPlan::with_parallelism(4);
+        let shared = Arc::new(random_states(7, 9));
+        let mut serial = random_states(7, 9);
+        let want = engine::exec_steps_native(&mut serial, &steps, 100);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let pool = Arc::clone(&pool);
+                let shared = Arc::clone(&shared);
+                let steps = Arc::clone(&steps);
+                let want = want.clone();
+                s.spawn(move || {
+                    for _ in 0..10 {
+                        let (got, _) = pool
+                            .run_snapshot(
+                                &shared,
+                                64,
+                                &steps,
+                                100,
+                                None,
+                                EngineKind::Native,
+                                &plan,
+                            )
+                            .unwrap();
+                        assert_eq!(got.reduces, want.reduces);
+                        assert_eq!(got.mask_counts, want.mask_counts);
+                    }
+                });
+            }
+        });
+        // the snapshot was never mutated by 80 concurrent executions
+        let pristine = random_states(7, 9);
+        for (a, b) in shared.iter().zip(&pristine) {
+            assert_eq!(a.planes, b.planes);
+        }
+    }
+
+    #[test]
+    fn replay_seed_runs_suffix_only() {
+        let steps = program();
+        let pool = ShardPool::new(2, 0);
+        let plan = ExecPlan::with_parallelism(2);
+        let shared = Arc::new(random_states(21, 6));
+        let (want, masks) = pool
+            .run_snapshot(&shared, 64, &steps, 100, None, EngineKind::Native, &plan)
+            .unwrap();
+        let seeds = Arc::new(masks);
+        let (got, masks2) = pool
+            .run_snapshot(
+                &shared,
+                64,
+                &steps[1..],
+                100,
+                Some(&seeds),
+                EngineKind::Native,
+                &plan,
+            )
+            .unwrap();
+        assert_eq!(got.reduces, want.reduces);
+        assert_eq!(got.mask_counts, want.mask_counts);
+        assert_eq!(&masks2, seeds.as_ref());
+    }
+
+    #[test]
+    fn admission_cap_defaults_and_overrides() {
+        assert_eq!(ShardPool::new(4, 0).shared.cap, 16);
+        assert_eq!(ShardPool::new(4, 3).shared.cap, 3);
+        assert_eq!(ShardPool::new(1, 0).workers.len(), 0);
+        assert_eq!(ShardPool::new(8, 0).workers.len(), 8);
+    }
+
+    #[test]
+    fn pjrt_jobs_error_cleanly_when_runtime_missing() {
+        if crate::runtime::runtime_available() {
+            return; // real runtime present: covered by differential tests
+        }
+        let pool = ShardPool::new(2, 0);
+        let plan = ExecPlan::with_parallelism(2);
+        let shared = Arc::new(random_states(3, 2));
+        let err = pool
+            .run_snapshot(&shared, 64, &program(), 100, None, EngineKind::Pjrt, &plan)
+            .unwrap_err();
+        let ExecError::Backend { engine, msg } = err;
+        assert_eq!(engine, "pjrt");
+        assert!(!msg.is_empty());
+    }
+}

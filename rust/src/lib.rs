@@ -17,8 +17,10 @@
 //! * [`api`] — the embedding surface: an owned, `Arc`-shareable
 //!   [`api::Pimdb`] service handle with prepared statements
 //!   (`open` → `prepare` → `execute`), a canonical-AST-hash plan cache,
-//!   typed [`api::Rows`]/[`api::Value`] result cursors that decode the
-//!   schema encodings, and the crate-wide typed [`error::PimdbError`].
+//!   epoch-snapshot reads under group-committed DML (readers never
+//!   block on writers), typed [`api::Rows`]/[`api::Value`] result
+//!   cursors that decode the schema encodings, and the crate-wide typed
+//!   [`error::PimdbError`].
 //! * [`pim`] — PIM module hardware model: crossbars, controller FSM
 //!   (Table 4), media controller + FR-FCFS, energy/endurance/area/power.
 //! * [`mem`] — host memory substrate: address mapping (Fig. 3), huge
@@ -44,8 +46,12 @@
 //! `SystemConfig::parallelism` (`--parallelism`; 0 = auto-detect). Query
 //! outputs *and* all timing/energy/endurance accounting are bit-identical
 //! for every shard and thread count — the knob only changes wall-clock.
+//! [`api::Pimdb`] keeps an always-on worker pool with per-shard queues
+//! and an admission cap (`SystemConfig::admission`), executing queries
+//! against pinned immutable epoch snapshots so readers never block on
+//! concurrent DML (group-committed per relation).
 //! [`exec::pimdb::PimSession::run_queries`] batches independent queries
-//! over the same shard pool: queries on disjoint relations execute
+//! over the same shards: queries on disjoint relations execute
 //! concurrently in waves, queries sharing a relation serialize.
 
 #![warn(missing_docs)]

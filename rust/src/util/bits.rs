@@ -248,6 +248,140 @@ impl PlaneSet {
     }
 }
 
+/// Two-plane per-row visibility mask — the epoch scheme behind snapshot
+/// reads under concurrent DML.
+///
+/// One plane is *active* (what committed readers see); the other is the
+/// *shadow* a DML batch edits. [`EpochMask::begin_batch`] copies the
+/// active plane into the shadow, the batch mutates the shadow via
+/// [`EpochMask::set_pending`], and [`EpochMask::commit_batch`] flips
+/// which plane is active — a single index store, so visibility changes
+/// atomically for everyone who reads the mask *after* the flip while
+/// snapshots taken before it keep their own copy of the old plane.
+/// [`EpochMask::abort_batch`] simply discards the shadow.
+///
+/// Bits are flat row indices over the whole relation (not one crossbar),
+/// packed LSB-first into `u64` words like every other mask in the engine.
+/// The all-zero-dead-row invariant (DELETE zeroes a victim's data
+/// columns) is what makes this second liveness plane sufficient for
+/// MVCC: a row dead in a snapshot's plane contributes all-zero planes,
+/// so the optimizer's valid-AND elision stays sound per epoch.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EpochMask {
+    nbits: usize,
+    active: usize,
+    in_batch: bool,
+    planes: [Vec<u64>; 2],
+}
+
+impl EpochMask {
+    /// An all-dead mask over `nbits` rows.
+    pub fn new(nbits: usize) -> Self {
+        let words = nbits.div_ceil(WORD_BITS);
+        EpochMask {
+            nbits,
+            active: 0,
+            in_batch: false,
+            planes: [vec![0; words], vec![0; words]],
+        }
+    }
+
+    /// A mask whose active plane is `flags` (shadow starts all-zero).
+    /// Rows beyond `flags.len()` up to `nbits` are dead.
+    pub fn from_flags(flags: &[bool], nbits: usize) -> Self {
+        assert!(flags.len() <= nbits, "more flags than rows");
+        let mut m = EpochMask::new(nbits);
+        for (i, &f) in flags.iter().enumerate() {
+            if f {
+                m.planes[0][i / WORD_BITS] |= 1 << (i % WORD_BITS);
+            }
+        }
+        m
+    }
+
+    /// Rows tracked.
+    pub fn capacity(&self) -> usize {
+        self.nbits
+    }
+
+    /// Whether a shadow plane is currently being edited.
+    pub fn in_batch(&self) -> bool {
+        self.in_batch
+    }
+
+    /// Visibility of `row` in the *active* (committed) plane.
+    #[inline]
+    pub fn get(&self, row: usize) -> bool {
+        debug_assert!(row < self.nbits, "EpochMask::get row {row} out of range");
+        (self.planes[self.active][row / WORD_BITS] >> (row % WORD_BITS)) & 1 == 1
+    }
+
+    /// Live rows in the active plane.
+    pub fn count_ones(&self) -> usize {
+        let full = self.nbits / WORD_BITS;
+        let mut n: usize = self.planes[self.active][..full]
+            .iter()
+            .map(|w| w.count_ones() as usize)
+            .sum();
+        if self.nbits % WORD_BITS != 0 {
+            let tail = self.planes[self.active][full] & ((1u64 << (self.nbits % WORD_BITS)) - 1);
+            n += tail.count_ones() as usize;
+        }
+        n
+    }
+
+    /// Start a batch: copy the active plane into the shadow so the batch
+    /// edits a consistent starting point. Panics on a nested batch.
+    pub fn begin_batch(&mut self) {
+        assert!(!self.in_batch, "nested EpochMask batch");
+        self.planes[1 - self.active] = self.planes[self.active].clone();
+        self.in_batch = true;
+    }
+
+    /// Set `row`'s visibility in the shadow plane (batch only).
+    #[inline]
+    pub fn set_pending(&mut self, row: usize, v: bool) {
+        debug_assert!(self.in_batch, "set_pending outside a batch");
+        debug_assert!(row < self.nbits, "EpochMask::set_pending row {row} out of range");
+        let w = &mut self.planes[1 - self.active][row / WORD_BITS];
+        if v {
+            *w |= 1 << (row % WORD_BITS);
+        } else {
+            *w &= !(1 << (row % WORD_BITS));
+        }
+    }
+
+    /// Visibility of `row` in the shadow plane (batch only).
+    #[inline]
+    pub fn pending(&self, row: usize) -> bool {
+        debug_assert!(self.in_batch, "pending outside a batch");
+        debug_assert!(row < self.nbits, "EpochMask::pending row {row} out of range");
+        (self.planes[1 - self.active][row / WORD_BITS] >> (row % WORD_BITS)) & 1 == 1
+    }
+
+    /// Atomically publish the shadow plane: flip which plane is active.
+    pub fn commit_batch(&mut self) {
+        assert!(self.in_batch, "commit_batch outside a batch");
+        self.active = 1 - self.active;
+        self.in_batch = false;
+    }
+
+    /// Discard the shadow plane; the active plane is untouched.
+    pub fn abort_batch(&mut self) {
+        assert!(self.in_batch, "abort_batch outside a batch");
+        self.in_batch = false;
+    }
+
+    /// Append `rows` dead rows to both planes (a newly materialized
+    /// crossbar; legal mid-batch — the new rows are dead in both planes).
+    pub fn grow(&mut self, rows: usize) {
+        self.nbits += rows;
+        let words = self.nbits.div_ceil(WORD_BITS);
+        self.planes[0].resize(words, 0);
+        self.planes[1].resize(words, 0);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -287,6 +421,60 @@ mod tests {
         let m = RowMask::first_n(100);
         assert_eq!(m.count_ones(), 100);
         assert!(m.get(99) && !m.get(100));
+    }
+
+    #[test]
+    fn epochmask_commit_flips_visibility_atomically() {
+        let mut m = EpochMask::from_flags(&[true, true, false, true], 70);
+        assert_eq!(m.count_ones(), 3);
+        m.begin_batch();
+        // the shadow starts as a copy of the active plane
+        assert!(m.pending(0) && m.pending(1) && !m.pending(2) && m.pending(3));
+        m.set_pending(1, false);
+        m.set_pending(69, true);
+        // active plane unchanged while the batch edits the shadow
+        assert!(m.get(1) && !m.get(69));
+        assert_eq!(m.count_ones(), 3);
+        m.commit_batch();
+        assert!(!m.get(1) && m.get(69));
+        assert_eq!(m.count_ones(), 3);
+    }
+
+    #[test]
+    fn epochmask_abort_discards_the_shadow() {
+        let mut m = EpochMask::from_flags(&[true, false], 2);
+        m.begin_batch();
+        m.set_pending(0, false);
+        m.set_pending(1, true);
+        m.abort_batch();
+        assert!(m.get(0) && !m.get(1));
+        // the next batch starts from the committed plane, not the
+        // discarded shadow
+        m.begin_batch();
+        assert!(m.pending(0) && !m.pending(1));
+        m.commit_batch();
+        assert!(m.get(0) && !m.get(1));
+    }
+
+    #[test]
+    fn epochmask_grow_mid_batch_adds_dead_rows_to_both_planes() {
+        let mut m = EpochMask::from_flags(&[true], 1);
+        m.begin_batch();
+        m.grow(64);
+        assert_eq!(m.capacity(), 65);
+        assert!(!m.pending(64) && !m.get(64));
+        m.set_pending(64, true);
+        m.commit_batch();
+        assert!(m.get(0) && m.get(64));
+        assert_eq!(m.count_ones(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "nested EpochMask batch")]
+    fn epochmask_nested_batch_panics() {
+        let mut m = EpochMask::new(8);
+        m.begin_batch();
+        m.begin_batch();
     }
 
     #[test]

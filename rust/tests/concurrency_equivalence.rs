@@ -1,0 +1,406 @@
+//! Concurrency battery: snapshot reads under concurrent DML.
+//!
+//! The snapshot/group-commit facade promises exactly three things, and
+//! each test here attacks one of them:
+//!
+//! 1. **Snapshot isolation** — every query result equals one committed
+//!    state of the relation: the pre-batch oracle or a post-batch
+//!    oracle, never a torn mixture, and a single reader observes the
+//!    commit chain monotonically (epochs never run backwards).
+//! 2. **Non-blocking reads** — readers keep completing queries while
+//!    DML statements are executing wall-clock-concurrently (interval
+//!    overlap between reader executions and writer statements).
+//! 3. **Race-free bookkeeping** — shared-scan counters account for
+//!    every scan-eligible execution exactly once, per-row wear is
+//!    monotone under interleaving, and the final state is bit-identical
+//!    to a serial application of the same statements.
+//!
+//! The whole battery runs at shard-pool parallelism 1 (inline serial
+//! executor), 2 and 8 — the facade's concurrency rules must not depend
+//! on how the crossbar work itself is fanned out.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+use pimdb::api::Pimdb;
+use pimdb::config::SystemConfig;
+use pimdb::db::dbgen::Database;
+use pimdb::db::schema::RelId;
+use pimdb::exec::metrics::QueryOutput;
+
+/// Seed 7 generates 10 live supplier records with s_suppkey 1..=10
+/// (SF 0.001), small enough that oracle chains stay cheap and every
+/// single-key delete is a visible fraction of the relation.
+fn db() -> Database {
+    Database::generate(0.001, 7)
+}
+
+fn handle_with(parallelism: usize) -> Pimdb {
+    let cfg = SystemConfig {
+        parallelism,
+        ..SystemConfig::default()
+    };
+    Pimdb::open(cfg, db()).unwrap()
+}
+
+/// The probe query: scan-eligible (filter prefix + aggregate suffix)
+/// and state-distinguishing — count and sum together change on every
+/// single-row delete of the chains below.
+const PROBE: &str =
+    "from supplier | filter s_suppkey >= 1 | aggregate sum(s_acctbal) as s";
+
+fn probe_output(h: &Pimdb) -> QueryOutput {
+    h.prepare(PROBE)
+        .unwrap()
+        .execute()
+        .unwrap()
+        .raw_report()
+        .output
+        .clone()
+}
+
+fn delete_stmt(key: u64) -> String {
+    format!("delete from supplier where s_suppkey == {key}")
+}
+
+/// Flip the stop flag even when the owning thread panics mid-scenario,
+/// so reader loops always terminate and the scope can join (a reader
+/// spinning on a flag a dead writer never set would hang the suite).
+struct StopOnDrop<'a>(&'a AtomicBool);
+
+impl Drop for StopOnDrop<'_> {
+    fn drop(&mut self) {
+        self.0.store(true, Ordering::Release);
+    }
+}
+
+/// Single writer applying a known chain of single-row deletes while N
+/// readers hammer the probe. Every reader result must equal exactly one
+/// oracle chain state, observed in monotone chain order; reads and
+/// writer statements must overlap in wall-clock time; scan counters
+/// must account for every probe execution exactly once.
+fn chain_scenario(parallelism: usize, n_readers: usize) {
+    let keys: Vec<u64> = (1..=8).collect();
+
+    // Oracle chain: outputs[j] is the committed state after j deletes.
+    let oracle = handle_with(parallelism);
+    let mut chain = vec![probe_output(&oracle)];
+    for &k in &keys {
+        let r = oracle.execute_dml(delete_stmt(k).as_str()).unwrap();
+        assert_eq!(r.rows_affected, 1, "oracle delete of key {k}");
+        chain.push(probe_output(&oracle));
+    }
+    // every chain state is distinct, so "which state did I read" is
+    // well-defined for the monotonicity check below
+    for i in 0..chain.len() {
+        for j in (i + 1)..chain.len() {
+            assert_ne!(chain[i], chain[j], "chain states {i} and {j} collide");
+        }
+    }
+
+    let handle = Arc::new(handle_with(parallelism));
+    let initial = handle.live_records(RelId::Supplier);
+    // warm the plan so reader iterations measure execution, not compile
+    let prepared = handle.prepare(PROBE).unwrap();
+    drop(prepared);
+
+    let done = AtomicBool::new(false);
+    let probes_run = AtomicU64::new(0);
+    let start = Barrier::new(n_readers + 1);
+    let epoch0 = Instant::now();
+
+    // (start, end) offsets in nanos since epoch0
+    let mut reader_spans: Vec<Vec<(u128, u128)>> = Vec::new();
+    let mut writer_spans: Vec<(u128, u128)> = Vec::new();
+
+    std::thread::scope(|s| {
+        let mut readers = Vec::new();
+        for _ in 0..n_readers {
+            readers.push(s.spawn(|| {
+                let p = handle.prepare(PROBE).unwrap();
+                let mut spans = Vec::new();
+                let mut last_idx = 0usize;
+                let mut last_wear = 0u64;
+                start.wait();
+                loop {
+                    let stop = done.load(Ordering::Acquire);
+                    let t0 = epoch0.elapsed().as_nanos();
+                    let out = p.execute().unwrap().raw_report().output.clone();
+                    let t1 = epoch0.elapsed().as_nanos();
+                    probes_run.fetch_add(1, Ordering::Relaxed);
+                    spans.push((t0, t1));
+                    // snapshot isolation: the result IS a chain state
+                    let idx = chain
+                        .iter()
+                        .position(|c| *c == out)
+                        .expect("reader observed a state outside the commit chain");
+                    // epochs never run backwards for one reader
+                    assert!(
+                        idx >= last_idx,
+                        "chain ran backwards: {last_idx} -> {idx}"
+                    );
+                    last_idx = idx;
+                    // wear is monotone under concurrent folding
+                    let wear: u64 = handle.wear_counters(RelId::Supplier).iter().sum();
+                    assert!(wear >= last_wear, "wear decreased: {last_wear} -> {wear}");
+                    last_wear = wear;
+                    if stop {
+                        break;
+                    }
+                }
+                spans
+            }));
+        }
+
+        // writer: the same chain, one statement at a time
+        let _stop = StopOnDrop(&done);
+        start.wait();
+        for &k in &keys {
+            let t0 = epoch0.elapsed().as_nanos();
+            let r = handle.execute_dml(delete_stmt(k).as_str()).unwrap();
+            let t1 = epoch0.elapsed().as_nanos();
+            writer_spans.push((t0, t1));
+            assert_eq!(r.rows_affected, 1, "stress delete of key {k}");
+        }
+        done.store(true, Ordering::Release);
+
+        for r in readers {
+            reader_spans.push(r.join().unwrap());
+        }
+    });
+
+    // final state: end of the chain, same live count, same output
+    assert_eq!(
+        handle.live_records(RelId::Supplier),
+        initial - keys.len()
+    );
+    let final_probes = 1u64;
+    assert_eq!(probe_output(&handle), chain[keys.len()]);
+
+    // non-blocking reads: some reader execution overlapped some writer
+    // statement in wall-clock time (readers run back-to-back across the
+    // writer's whole window, so overlap is structural, not lucky timing)
+    let overlapped = reader_spans.iter().flatten().any(|&(rs, re)| {
+        writer_spans
+            .iter()
+            .any(|&(ws, we)| rs < we && ws < re)
+    });
+    assert!(
+        overlapped,
+        "no reader execution overlapped any writer statement"
+    );
+
+    // race-free counters: every probe execution (readers + the final
+    // check above) hit or missed the scan cache exactly once; DML
+    // statements never touch these counters
+    let sc = handle.shared_scan_counters();
+    assert_eq!(
+        sc.hits + sc.misses,
+        probes_run.load(Ordering::Relaxed) + final_probes,
+        "scan counters lost or double-counted an execution"
+    );
+}
+
+#[test]
+fn snapshot_reads_match_the_commit_chain_serial_pool() {
+    chain_scenario(1, 2);
+}
+
+#[test]
+fn snapshot_reads_match_the_commit_chain_two_workers() {
+    chain_scenario(2, 2);
+}
+
+#[test]
+fn snapshot_reads_match_the_commit_chain_eight_workers() {
+    chain_scenario(8, 4);
+}
+
+/// Two writers with disjoint key sets racing on one relation, plus
+/// readers. Intermediate counts stay inside [final, initial] and are
+/// monotone non-increasing per reader (deletes only remove rows); the
+/// final contents are bit-identical to a serial application.
+fn multi_writer_scenario(parallelism: usize) {
+    let handle = Arc::new(handle_with(parallelism));
+    let initial = handle.live_records(RelId::Supplier) as i64;
+    let sets: [&[u64]; 2] = [&[1, 2, 3, 4], &[5, 6, 7, 8]];
+    let total: usize = sets.iter().map(|s| s.len()).sum();
+
+    let count_probe = "from supplier | filter s_suppkey >= 1 | aggregate count() as n";
+    let done = AtomicBool::new(false);
+    // participants: every writer, every reader, and the watcher below
+    let start = Barrier::new(sets.len() + 2 + 1);
+
+    std::thread::scope(|s| {
+        for set in sets {
+            s.spawn(|| {
+                start.wait();
+                for &k in set {
+                    let r = handle.execute_dml(delete_stmt(k).as_str()).unwrap();
+                    assert_eq!(r.rows_affected, 1, "delete of key {k}");
+                }
+            });
+        }
+        for _ in 0..2 {
+            s.spawn(|| {
+                let p = handle.prepare(count_probe).unwrap();
+                let mut last = i64::MAX;
+                let mut last_wear = 0u64;
+                start.wait();
+                loop {
+                    let stop = done.load(Ordering::Acquire);
+                    let n = p
+                        .execute()
+                        .unwrap()
+                        .rows()
+                        .row(0)
+                        .unwrap()
+                        .get("n")
+                        .unwrap()
+                        .as_i64()
+                        .unwrap();
+                    assert!(
+                        n >= initial - total as i64 && n <= initial,
+                        "count {n} outside [{}, {initial}]",
+                        initial - total as i64
+                    );
+                    assert!(n <= last, "count increased under deletes: {last} -> {n}");
+                    last = n;
+                    let wear: u64 = handle.wear_counters(RelId::Supplier).iter().sum();
+                    assert!(wear >= last_wear, "wear decreased: {last_wear} -> {wear}");
+                    last_wear = wear;
+                    if stop {
+                        break;
+                    }
+                }
+            });
+        }
+        // watcher: readers stop once every delete has committed (or on
+        // a generous timeout so a failed writer can't hang the scope —
+        // the final asserts below then report the real divergence)
+        let _stop = StopOnDrop(&done);
+        start.wait();
+        let deadline = Instant::now() + std::time::Duration::from_secs(120);
+        loop {
+            if handle.live_records(RelId::Supplier) as i64 == initial - total as i64
+                || Instant::now() > deadline
+            {
+                break;
+            }
+            std::thread::yield_now();
+        }
+        done.store(true, Ordering::Release);
+    });
+
+    // serial twin: same statements, one at a time, fresh handle
+    let serial = handle_with(parallelism);
+    for set in sets {
+        for &k in set {
+            serial.execute_dml(delete_stmt(k).as_str()).unwrap();
+        }
+    }
+    assert_eq!(
+        handle.live_records(RelId::Supplier),
+        serial.live_records(RelId::Supplier)
+    );
+    assert_eq!(probe_output(&handle), probe_output(&serial));
+    // both handles committed the same total wear for the same deletes
+    // (per-row placement can differ with batching, totals cannot)
+    let wa: u64 = handle.wear_counters(RelId::Supplier).iter().sum();
+    let wb: u64 = serial.wear_counters(RelId::Supplier).iter().sum();
+    assert_eq!(wa, wb, "total committed wear diverged from the serial twin");
+}
+
+#[test]
+fn disjoint_writers_group_commit_serializably() {
+    multi_writer_scenario(2);
+}
+
+#[test]
+fn disjoint_writers_group_commit_serializably_eight_workers() {
+    multi_writer_scenario(8);
+}
+
+/// A reader that pinned its snapshot *before* a delete commits keeps
+/// seeing the deleted row through its whole execution, while a reader
+/// that pins after sees it gone — the pre/post rule at the finest
+/// possible grain, repeated enough times to give interleaving a chance.
+#[test]
+fn readers_pin_pre_or_post_batch_states_only() {
+    let handle = Arc::new(handle_with(2));
+    let keys: Vec<u64> = (1..=8).collect();
+    let chain_handle = handle_with(2);
+    let mut chain = vec![probe_output(&chain_handle)];
+    for &k in &keys {
+        chain_handle.execute_dml(delete_stmt(k).as_str()).unwrap();
+        chain.push(probe_output(&chain_handle));
+    }
+
+    let start = Barrier::new(2);
+    std::thread::scope(|s| {
+        let reader = s.spawn(|| {
+            let p = handle.prepare(PROBE).unwrap();
+            start.wait();
+            let mut seen = Vec::new();
+            for _ in 0..64 {
+                let out = p.execute().unwrap().raw_report().output.clone();
+                let idx = chain
+                    .iter()
+                    .position(|c| *c == out)
+                    .expect("result outside the commit chain");
+                seen.push(idx);
+            }
+            seen
+        });
+        start.wait();
+        for &k in &keys {
+            handle.execute_dml(delete_stmt(k).as_str()).unwrap();
+        }
+        let seen = reader.join().unwrap();
+        // monotone, starts at or after 0, ends at or before the full chain
+        assert!(seen.windows(2).all(|w| w[0] <= w[1]), "chain ran backwards");
+        assert!(*seen.last().unwrap() <= keys.len());
+    });
+    assert_eq!(probe_output(&handle), chain[keys.len()]);
+}
+
+/// The same prepared statement object is safe to share: many threads
+/// executing one `Prepared` against one relation under DML, all results
+/// on-chain, counters exact.
+#[test]
+fn one_prepared_statement_shared_across_threads_under_dml() {
+    let handle = Arc::new(handle_with(2));
+    let chain_handle = handle_with(2);
+    let keys: Vec<u64> = (1..=6).collect();
+    let mut chain = vec![probe_output(&chain_handle)];
+    for &k in &keys {
+        chain_handle.execute_dml(delete_stmt(k).as_str()).unwrap();
+        chain.push(probe_output(&chain_handle));
+    }
+
+    let prepared = handle.prepare(PROBE).unwrap();
+    let executions = AtomicU64::new(0);
+    let start = Barrier::new(5);
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            s.spawn(|| {
+                start.wait();
+                for _ in 0..16 {
+                    let out = prepared.execute().unwrap().raw_report().output.clone();
+                    executions.fetch_add(1, Ordering::Relaxed);
+                    assert!(
+                        chain.contains(&out),
+                        "shared-statement result outside the commit chain"
+                    );
+                }
+            });
+        }
+        start.wait();
+        for &k in &keys {
+            handle.execute_dml(delete_stmt(k).as_str()).unwrap();
+        }
+    });
+    let sc = handle.shared_scan_counters();
+    assert_eq!(sc.hits + sc.misses, executions.load(Ordering::Relaxed));
+}
