@@ -1,0 +1,246 @@
+"""Python mirror of the multi-query scan fusion pass
+(rust/src/query/opt/fusion.rs).
+
+Fuses a batch of shared-scan filter prefixes over one relation into one
+program computing every member's mask in a single pass, with a
+cross-query value-numbering CSE in SSA form: every emitted write
+allocates fresh fused compute columns (written exactly once, so the
+column id doubles as the value number) and each member carries a private
+rename map from its original compute columns to fused columns. The Rust
+crate's authoring environment has no toolchain, so the pass is validated
+here against the compiler + engine mirrors in optmirror.py, fuzzed over
+random query batches (python/tests/test_fusionmirror.py), with a golden
+FNV-1a digest pinned on both sides of the language boundary. Keep in
+sync with the Rust source; the port favours structural similarity over
+Pythonic style on purpose.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+import optmirror as m
+from scanmirror import OP_TAG
+
+
+@dataclass(frozen=True)
+class ScanProgram:
+    """One member query's shared-scan filter prefix, as split by
+    scanmirror.scan_info: `steps` are the program's first prefix_len
+    steps and `mask_col` the filter-mask column the prefix writes."""
+
+    steps: tuple
+    mask_col: int
+
+
+@dataclass
+class FusedScan:
+    """One fused scan program covering a subset of the input members."""
+
+    steps: list
+    mask_cols: list  # fused mask column per member, parallel to members
+    members: list  # indices into the fuse() input list
+    saved_steps: int  # steps elided by the cross-query CSE
+    peak_cols: int  # compute columns occupied above compute_base
+
+
+def _singleton(idx: int, p: ScanProgram) -> FusedScan:
+    """A one-member chunk running the member's original prefix verbatim
+    (the fallback when a member refuses fusion)."""
+    return FusedScan(list(p.steps), [p.mask_col], [idx], 0, 0)
+
+
+class FuseErr(Exception):
+    """Why a member could not join the current fused chunk."""
+
+
+class Unfusable(FuseErr):
+    """The member violates a fusion safety check; it can never fuse."""
+
+
+class ChunkFull(FuseErr):
+    """The chunk's column budget is exhausted; retry in a fresh chunk."""
+
+
+class Fuser:
+    """Incremental fusion state for one chunk (fusion.rs::Fuser)."""
+
+    def __init__(self, compute_base: int, col_limit: int):
+        self.compute_base = compute_base
+        self.col_limit = col_limit
+        self.next_col = compute_base
+        self.table: dict = {}  # StepKey tuple -> home column
+        self.steps: list = []
+        self.mask_cols: list = []
+        self.members: list = []
+        self.saved = 0
+
+    def clone(self) -> "Fuser":
+        c = Fuser(self.compute_base, self.col_limit)
+        c.next_col = self.next_col
+        c.table = dict(self.table)
+        c.steps = list(self.steps)
+        c.mask_cols = list(self.mask_cols)
+        c.members = list(self.members)
+        c.saved = self.saved
+        return c
+
+    def rename_read(self, remap: dict, r: m.ColRange, read_len: int) -> m.ColRange:
+        """Data ranges pass through; compute ranges must map contiguously
+        onto already-written fused columns (safety checks 3 and 4). Only
+        the first read_len columns are actually read by the engine;
+        trailing unread columns of a wider field keep the mapped base
+        without a contiguity obligation."""
+        s = r.start
+        if s < self.compute_base:
+            if s + read_len > self.compute_base:
+                raise Unfusable
+            return r
+        mapped0 = remap.get(s)
+        if mapped0 is None:
+            raise Unfusable
+        for k in range(1, read_len):
+            if remap.get(s + k) != mapped0 + k:
+                raise Unfusable
+        return m.ColRange(mapped0, r.len)
+
+    def add(self, idx: int, p: ScanProgram) -> None:
+        """Try to add member idx. On error the chunk state may be
+        partially mutated — the caller attempts on a clone (see fuse)."""
+        remap: dict = {}
+        for step in p.steps:
+            instr = step.instr
+            if instr.op in m.SIDE_EFFECT:
+                raise Unfusable  # safety check 1
+            la, lb = m.read_lens(instr)
+            if la > 0:
+                instr = replace(instr, src_a=self.rename_read(remap, instr.src_a, la))
+            if lb > 0:
+                assert instr.src_b is not None, "read_lens reported a second operand"
+                instr = replace(instr, src_b=self.rename_read(remap, instr.src_b, lb))
+            _, write = m.accesses(instr)
+            assert write is not None, "non-side-effect steps write"
+            if write.start < self.compute_base:
+                raise Unfusable  # safety check 2
+            srcs = tuple(
+                [instr.src_a.start + k for k in range(la)]
+                + [instr.src_b.start + k for k in range(lb)]
+            )
+            key = (
+                OP_TAG[instr.op],
+                instr.imm if instr.op in m.IMM_OPS else 0,
+                write.len,
+                la,
+                lb,
+                srcs,
+            )
+            ww, w0 = write.len, write.start
+            home = self.table.get(key)
+            if home is not None:
+                # cross-query CSE hit: rename instead of emitting
+                for k in range(ww):
+                    remap[w0 + k] = home + k
+                self.saved += 1
+            else:
+                at = self.next_col
+                if at + ww > self.col_limit:
+                    raise ChunkFull
+                self.next_col = at + ww
+                for k in range(ww):
+                    remap[w0 + k] = at + k
+                self.table[key] = at
+                instr = replace(instr, dst=m.ColRange(at, ww))
+                if la == 0:
+                    # Set/Reset read nothing: keep the cosmetic src_a
+                    # field mirroring the destination (cse does the same)
+                    instr = replace(instr, src_a=instr.dst)
+                self.steps.append(m.Step(instr, step.category))
+        mask = remap.get(p.mask_col)
+        if mask is None:
+            raise Unfusable
+        self.mask_cols.append(mask)
+        self.members.append(idx)
+
+    def finish(self) -> FusedScan:
+        return FusedScan(
+            self.steps,
+            self.mask_cols,
+            self.members,
+            self.saved,
+            self.next_col - self.compute_base,
+        )
+
+
+def fuse(programs: list, compute_base: int, col_limit: int) -> list:
+    """Mirror of fusion::fuse — greedy packing in input order; a member
+    that refuses fusion comes back as a singleton chunk, a member that
+    would overflow the column budget closes the chunk and retries fresh,
+    so every input index appears in exactly one returned chunk."""
+    out: list = []
+    cur = Fuser(compute_base, col_limit)
+    for idx, p in enumerate(programs):
+        trial = cur.clone()
+        try:
+            trial.add(idx, p)
+            cur = trial
+        except ChunkFull:
+            if cur.members:
+                out.append(cur.finish())
+                cur = Fuser(compute_base, col_limit)
+                retry = cur.clone()
+                try:
+                    retry.add(idx, p)
+                    cur = retry
+                except FuseErr:
+                    out.append(_singleton(idx, p))
+            else:
+                out.append(_singleton(idx, p))
+        except Unfusable:
+            out.append(_singleton(idx, p))
+    if cur.members:
+        out.append(cur.finish())
+    return out
+
+
+_FNV_OFFSET = 0xCBF29CE484222325
+_FNV_PRIME = 0x100000001B3
+_MASK64 = (1 << 64) - 1
+
+
+def digest(fused: list) -> int:
+    """Mirror of fusion::digest — FNV-1a 64 over the fusion result, each
+    value folded as 8 little-endian bytes, chunks delimited by a marker
+    byte. The cross-language golden pin shared with the Rust unit test
+    fusion::tests::golden_digest_matches_python_mirror."""
+    h = _FNV_OFFSET
+
+    def byte(h: int, b: int) -> int:
+        return ((h ^ b) * _FNV_PRIME) & _MASK64
+
+    def word(h: int, v: int) -> int:
+        for b in (v & _MASK64).to_bytes(8, "little"):
+            h = ((h ^ b) * _FNV_PRIME) & _MASK64
+        return h
+
+    for fs in fused:
+        h = byte(h, 0xF5)
+        for step in fs.steps:
+            i = step.instr
+            h = word(h, OP_TAG[i.op])
+            h = word(h, i.imm if i.op in m.IMM_OPS else 0)
+            h = word(h, i.src_a.start)
+            h = word(h, i.src_a.len)
+            if i.src_b is not None:
+                h = word(h, 1)
+                h = word(h, i.src_b.start)
+                h = word(h, i.src_b.len)
+            else:
+                h = word(h, 0)
+            h = word(h, i.dst.start)
+            h = word(h, i.dst.len)
+        for mc in fs.mask_cols:
+            h = word(h, mc)
+        for mm in fs.members:
+            h = word(h, mm)
+        h = word(h, fs.saved_steps)
+    return h

@@ -1,0 +1,152 @@
+"""Fuzz-validation of the multi-query scan fusion pass via the mirror.
+
+The property backing the Rust batch path (api::Pimdb::execute_batch):
+for any batch of shared-scan prefixes, the fused program must compute
+every member's mask bit-identically to running each member's prefix
+alone on the same data — the cross-query CSE may only elide work, never
+change it. The structural unit tests mirror fusion.rs's, and the golden
+FNV-1a digest is pinned on both sides of the language boundary (the
+Rust twin is fusion::tests::golden_digest_matches_python_mirror).
+"""
+
+import random
+
+import fusionmirror as fm
+import optmirror as m
+import scanmirror as sm
+
+from test_optmirror import LAYOUT, XBAR_COLS, gen_records, load, rand_pred
+from test_scanmirror import compile_opt
+
+BASE = 25
+VALID = 24
+
+# Pinned in fusion.rs::tests::golden_digest_matches_python_mirror.
+GOLDEN_DIGEST = 0x22A458559DAACA33
+
+
+def lt_prefix(imm, tmp, mask):
+    """LtImm(attr < imm) -> tmp; And(tmp, VALID) -> mask — the fixture
+    shape of the Rust unit tests."""
+    return [
+        m.Step(m.with_imm(m.LT_IMM, m.ColRange(0, 8), m.ColRange(tmp, 1), imm)),
+        m.Step(m.binary(m.AND, m.ColRange(tmp, 1), m.ColRange(VALID, 1),
+                        m.ColRange(mask, 1))),
+    ]
+
+
+def test_fuse_dedups_cross_query_subexpressions():
+    p0 = lt_prefix(50, 26, 25)
+    p1 = lt_prefix(50, 30, 28)
+    p1.append(m.Step(m.with_imm(m.EQ_IMM, m.ColRange(8, 8), m.ColRange(29, 1), 3)))
+    p1.append(m.Step(m.binary(m.AND, m.ColRange(28, 1), m.ColRange(29, 1),
+                              m.ColRange(31, 1))))
+    progs = [fm.ScanProgram(tuple(p0), 25), fm.ScanProgram(tuple(p1), 31)]
+    fused = fm.fuse(progs, BASE, 64)
+    assert len(fused) == 1
+    f = fused[0]
+    assert f.members == [0, 1]
+    assert len(f.steps) == 4
+    assert f.saved_steps == 2
+    assert f.peak_cols == 4
+    assert f.mask_cols == [BASE + 1, BASE + 3]
+    fused2 = fm.fuse([fm.ScanProgram(tuple(p0), 25)] * 2, BASE, 64)
+    assert len(fused2) == 1
+    assert len(fused2[0].steps) == 2
+    assert fused2[0].mask_cols == [BASE + 1, BASE + 1]
+
+
+def test_column_budget_overflow_starts_a_new_chunk():
+    progs = [fm.ScanProgram(tuple(lt_prefix(i, 26, 25)), 25) for i in (10, 20, 30)]
+    fused = fm.fuse(progs, BASE, BASE + 5)
+    assert len(fused) == 2
+    assert fused[0].members == [0, 1]
+    assert fused[1].members == [2]
+    assert fused[1].mask_cols == [BASE + 1]
+
+
+def test_unsafe_members_fall_back_to_singletons():
+    bad = [m.Step(m.binary(m.AND, m.ColRange(40, 1), m.ColRange(VALID, 1),
+                           m.ColRange(25, 1)))]
+    progs = [fm.ScanProgram(tuple(bad), 25),
+             fm.ScanProgram(tuple(lt_prefix(7, 26, 25)), 25)]
+    fused = fm.fuse(progs, BASE, 64)
+    assert len(fused) == 2
+    assert fused[0].members == [0]
+    assert fused[0].saved_steps == 0
+    assert fused[0].steps == bad
+    assert fused[0].mask_cols == [25]
+    assert fused[1].members == [1]
+
+
+def test_golden_digest():
+    """The exact input of the Rust twin test; equal digests mean the two
+    ports agree on the fused steps, mask columns, membership and CSE
+    savings byte for byte."""
+    p0 = lt_prefix(50, 26, 25)
+    p1 = lt_prefix(50, 30, 28)
+    p1.append(m.Step(m.with_imm(m.GT_IMM, m.ColRange(8, 8), m.ColRange(29, 1), 11)))
+    p1.append(m.Step(m.binary(m.AND, m.ColRange(28, 1), m.ColRange(29, 1),
+                              m.ColRange(31, 1))))
+    p2 = lt_prefix(9, 27, 26)
+    progs = [fm.ScanProgram(tuple(p0), 25),
+             fm.ScanProgram(tuple(p1), 31),
+             fm.ScanProgram(tuple(p2), 26)]
+    fused = fm.fuse(progs, BASE, 64)
+    assert fm.digest(fused) == GOLDEN_DIGEST
+
+
+def run_prefix(steps, records):
+    st = load(records)
+    out = []
+    for s in steps:
+        m.exec_instr(st, s.instr, out)
+    assert not out, "prefixes are side-effect free"
+    return st
+
+
+def test_fuzz_fused_masks_match_serial_execution():
+    """Random batches of compiled+optimized prefixes, fused under both a
+    roomy and a deliberately tight column budget: every chunk covers its
+    members exactly once, the step accounting balances, and each member's
+    fused mask plane equals its serial (prefix-alone) mask plane."""
+    rng = random.Random(0xF05ED)
+    batches = chunks_with_sharing = 0
+    for _ in range(120):
+        members = []
+        for _ in range(rng.randint(2, 6)):
+            pred = rand_pred(rng, rng.randint(0, 2))
+            try:
+                c = compile_opt(pred, [], [("count", ("one",))])
+            except MemoryError:
+                continue
+            info = sm.scan_info(c)
+            if info is None:
+                continue
+            members.append((c, info))
+        if len(members) < 2:
+            continue
+        # duplicates exercise the CSE hit path and shared mask columns
+        if rng.random() < 0.5:
+            members.append(members[rng.randrange(len(members))])
+        progs = [fm.ScanProgram(tuple(c.steps[:info.prefix_len]), c.mask_col)
+                 for c, info in members]
+        col_limit = (LAYOUT.compute_base + rng.randint(2, 12)
+                     if rng.random() < 0.4 else XBAR_COLS)
+        fused = fm.fuse(progs, LAYOUT.compute_base, col_limit)
+        covered = sorted(i for f in fused for i in f.members)
+        assert covered == list(range(len(progs))), "member lost or duplicated"
+        records = gen_records(rng, rng.randint(0, 32))
+        serial = [run_prefix(p.steps, records).planes[p.mask_col] for p in progs]
+        for f in fused:
+            st = run_prefix(f.steps, records)
+            assert sum(len(progs[i].steps) for i in f.members) == \
+                len(f.steps) + f.saved_steps, "step accounting out of balance"
+            for mc, midx in zip(f.mask_cols, f.members):
+                assert st.planes[mc] == serial[midx], (
+                    f"fused mask diverged for member {midx}")
+            if f.saved_steps > 0:
+                chunks_with_sharing += 1
+        batches += 1
+    assert batches > 60, batches
+    assert chunks_with_sharing > 20, chunks_with_sharing

@@ -386,4 +386,41 @@ fn main() {
             },
         );
     }
+
+    // fused batch serving: the same 19 prepared statements through one
+    // `execute_batch` call — the multi-query fusion pass
+    // (query::opt::fusion) merges the shareable filter prefixes per
+    // relation into one scan program computing every member's mask in a
+    // single pass, then the suffixes run concurrently. Outputs and
+    // metrics are bit-identical to the serial sweep (rust/tests/
+    // batch_equivalence.rs); the scan counters record how much prefix
+    // work one batch shares vs PR 6's replay-only path (a replay needs a
+    // prior byte-identical *execution*; fusion shares within the batch).
+    {
+        let batch = Pimdb::open(cfg.clone(), db.clone()).unwrap();
+        let stmts: Vec<_> = queries
+            .iter()
+            .map(|q| batch.prepare(QuerySource::Ast(q)).unwrap())
+            .collect();
+        let refs: Vec<_> = stmts.iter().collect();
+        let first = batch.execute_batch(&refs).unwrap();
+        let cycles_total: u64 = first.iter().map(|r| r.metrics().cycles.total()).sum();
+        let cold = batch.shared_scan_counters();
+        let per = bench("suite/all-19-batched-sweep (execute_batch)", 3000, || {
+            let rs = batch.execute_batch(&refs).unwrap();
+            for r in &rs {
+                std::hint::black_box(r.metrics().exec_time_s);
+            }
+        });
+        println!(
+            "BENCH {{\"name\":\"suite/all-19-batched-sweep\",\"ms_per_iter\":{:.3},\
+             \"cycles_total\":{},\"cold_scan_hits\":{},\"cold_scan_misses\":{},\
+             \"sim_sf\":{}}}",
+            per * 1e3,
+            cycles_total,
+            cold.hits,
+            cold.misses,
+            cfg.sim_sf
+        );
+    }
 }

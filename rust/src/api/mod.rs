@@ -103,8 +103,7 @@ use crate::exec::ExecError;
 use crate::query::ast::{Dml, Query};
 use crate::query::compiler::{compile_dml, CompileError, Compiler};
 use crate::query::lang;
-use crate::query::opt::sharedscan;
-use crate::query::opt::{self, OptStats};
+use crate::query::opt::{self, fusion, sharedscan, OptStats};
 use crate::query::tpch;
 use crate::util::bits::{WORDS, XBAR_ROWS};
 
@@ -370,6 +369,20 @@ impl Pimdb {
     /// Crossbar states materialize lazily, per relation, on first
     /// execution.
     pub fn open(cfg: SystemConfig, db: Database) -> Result<Pimdb, PimdbError> {
+        // An explicit admission cap below the worker count can never
+        // admit enough shard jobs to keep the executor busy: workers
+        // past the cap idle forever and one reader's shard fan-out
+        // trickles through the gate. Reject the misconfiguration with a
+        // typed error instead of silently serializing (0 stays the
+        // documented `4 * parallelism` auto cap).
+        if cfg.admission != 0 && cfg.admission < cfg.parallelism {
+            return Err(PimdbError::Config(format!(
+                "admission cap {} is below parallelism {}: shard workers past \
+                 the cap could never be kept busy (use admission = 0 for the \
+                 4 * parallelism auto cap)",
+                cfg.admission, cfg.parallelism
+            )));
+        }
         let layout = DbLayout::build(&cfg, &|r| db.rel(r).records as u64)?;
         let rels = PIM_RELATIONS
             .iter()
@@ -713,6 +726,237 @@ impl Pimdb {
             // charges the full program even on a replay — the shared
             // scan is a simulator shortcut, not a change to what the
             // simulated device does.
+            {
+                let mut book = self.lock_book(slot);
+                if book.rows.is_some() {
+                    let profile = session::wear_profile(&c.steps, self.cfg.xbar_cols);
+                    for (dst, add) in book.ledger.iter_mut().zip(&profile) {
+                        *dst = dst.wrapping_add(*add);
+                    }
+                }
+            }
+            outs.push(out);
+        }
+
+        let output = session::assemble_output(&p.query, compiled, &outs);
+        let mut metrics = session::simulate(&self.cfg, &p.query, compiled, &self.layout);
+        metrics.inter_cells = compiled
+            .iter()
+            .map(|c| c.peak_inter_cells)
+            .max()
+            .unwrap_or(0);
+        metrics.opt = p.plan.opt;
+        metrics.plan_cache = self.cache.counters();
+        Ok(QueryResult::new(
+            p.query.clone(),
+            RunReport {
+                query: p.query.name,
+                metrics,
+                output,
+            },
+        ))
+    }
+
+    /// Execute a batch of prepared statements as one fused unit on the
+    /// native backend (see [`Pimdb::execute_batch_on`]).
+    pub fn execute_batch(
+        &self,
+        stmts: &[&Prepared<'_>],
+    ) -> Result<Vec<QueryResult>, PimdbError> {
+        self.execute_batch_on(stmts, EngineKind::Native)
+    }
+
+    /// Execute a batch of prepared statements as one fused unit: pin one
+    /// snapshot per touched relation, fuse the distinct shareable filter
+    /// prefixes per relation into shared mask programs ([`fusion::fuse`]
+    /// — cross-query common subexpressions computed once), run each
+    /// fused program a single time over the shard executor, then execute
+    /// every statement's suffix against its replayed mask.
+    ///
+    /// Results come back in batch order and are bit-identical — outputs,
+    /// metrics, shared-scan counters, cache state and wear — to
+    /// executing the statements serially with [`Prepared::execute`]: the
+    /// fused scan is a simulator shortcut that shares work, not a change
+    /// to what the simulated device computes or what each query is
+    /// charged.
+    pub fn execute_batch_on(
+        &self,
+        stmts: &[&Prepared<'_>],
+        engine_kind: EngineKind,
+    ) -> Result<Vec<QueryResult>, PimdbError> {
+        if stmts.is_empty() {
+            return Ok(Vec::new());
+        }
+
+        // Phase 1 — pin one snapshot per touched relation for the whole
+        // batch: every member (and every fused scan) sees the same
+        // committed version of each relation, and a DML batch committing
+        // mid-execution is invisible.
+        let rels: BTreeSet<RelId> = stmts
+            .iter()
+            .flat_map(|p| p.plan.compiled.iter().map(|c| c.rel))
+            .collect();
+        let versions: BTreeMap<RelId, Arc<RelVersion>> =
+            rels.into_iter().map(|r| (r, self.snapshot(r))).collect();
+
+        // Phase 2 — per relation, fuse the distinct shareable prefixes
+        // that are not already cached at the pinned epoch and run each
+        // fused program once. Nothing is charged here: wear and scan
+        // counters are charged per member below, exactly as serial
+        // execution would.
+        let mut by_rel: BTreeMap<RelId, Vec<(&sharedscan::ScanInfo, fusion::ScanProgram<'_>)>> =
+            BTreeMap::new();
+        for p in stmts {
+            for (c, scan) in p.plan.compiled.iter().zip(&p.plan.scans) {
+                let Some(info) = scan else { continue };
+                if info.prefix_len == 0 {
+                    continue;
+                }
+                let version = &versions[&c.rel];
+                let cached = self
+                    .lock_scans(self.slot(c.rel))
+                    .get(&info.key, version.epoch)
+                    .is_some_and(|m| m.len() == version.states.len());
+                if cached {
+                    continue;
+                }
+                let progs = by_rel.entry(c.rel).or_default();
+                if progs.iter().any(|(i, _)| i.key == info.key) {
+                    continue;
+                }
+                progs.push((
+                    info,
+                    fusion::ScanProgram {
+                        steps: &c.steps[..info.prefix_len],
+                        mask_col: c.mask_col,
+                    },
+                ));
+            }
+        }
+        let mut produced: BTreeMap<(RelId, &[u8]), CachedMask> = BTreeMap::new();
+        for (rel, progs) in &by_rel {
+            let version = &versions[rel];
+            let compute_base = self.layout.rel(*rel).compute_base;
+            let members: Vec<fusion::ScanProgram<'_>> =
+                progs.iter().map(|&(_, p)| p).collect();
+            for chunk in fusion::fuse(&members, compute_base, self.cfg.xbar_cols) {
+                let planes = self.pool.run_fused(
+                    &version.states,
+                    compute_base,
+                    &chunk.steps,
+                    &chunk.mask_cols,
+                    engine_kind,
+                    &self.exec_plan,
+                )?;
+                for (&m, mask) in chunk.members.iter().zip(planes) {
+                    produced.insert((*rel, progs[m].0.key.as_slice()), Arc::new(mask));
+                }
+            }
+        }
+
+        // Phase 3 — shared-scan cache bookkeeping runs serially in batch
+        // order: hit/miss counters, insert order and FIFO eviction state
+        // end up bit-identical to executing the statements one at a
+        // time. A member whose prefix was fused charges the same miss
+        // (and populates the same cache entry) its full serial run
+        // would have — the suffix never writes the mask column, so the
+        // fused prefix's mask plane equals the full run's.
+        let mut seeds: Vec<Vec<Option<CachedMask>>> = Vec::with_capacity(stmts.len());
+        for p in stmts {
+            let mut per_stmt = Vec::with_capacity(p.plan.compiled.len());
+            for (c, scan) in p.plan.compiled.iter().zip(&p.plan.scans) {
+                let seed = scan.as_ref().and_then(|info| {
+                    let version = &versions[&c.rel];
+                    let slot = self.slot(c.rel);
+                    let cached = self
+                        .lock_scans(slot)
+                        .get(&info.key, version.epoch)
+                        .filter(|m| m.len() == version.states.len());
+                    match cached {
+                        Some(m) => {
+                            self.scan_stats.hits.fetch_add(1, Ordering::Relaxed);
+                            Some(m)
+                        }
+                        None => match produced.get(&(c.rel, info.key.as_slice())) {
+                            Some(m) => {
+                                self.lock_scans(slot).insert(
+                                    info.key.clone(),
+                                    version.epoch,
+                                    Arc::clone(m),
+                                );
+                                self.scan_stats.misses.fetch_add(1, Ordering::Relaxed);
+                                Some(Arc::clone(m))
+                            }
+                            // the mask was cached when Phase 2 peeked
+                            // but purged since (concurrent DML): fall
+                            // back to the serial miss path — the member
+                            // runs in full below and populates the
+                            // cache itself.
+                            None => None,
+                        },
+                    }
+                });
+                per_stmt.push(seed);
+            }
+            seeds.push(per_stmt);
+        }
+
+        // Phase 4 — every statement's remaining work (suffix runs,
+        // output assembly, metric simulation, wear) executes
+        // concurrently over the always-on pool.
+        let mut results: Vec<Option<Result<QueryResult, PimdbError>>> =
+            (0..stmts.len()).map(|_| None).collect();
+        std::thread::scope(|s| {
+            for ((p, sd), res) in stmts.iter().zip(&seeds).zip(&mut results) {
+                let versions = &versions;
+                s.spawn(move || {
+                    *res = Some(self.finish_batch_member(p, sd, versions, engine_kind));
+                });
+            }
+        });
+        results
+            .into_iter()
+            .map(|r| r.expect("every batch member thread fills its slot"))
+            .collect()
+    }
+
+    /// One batch member's tail: suffix (or full) runs per relation
+    /// program against the batch-pinned snapshots, wear accounting and
+    /// result assembly — the body of [`Pimdb::execute_prepared`] with
+    /// snapshot pinning and cache accounting hoisted into the batch
+    /// phases.
+    fn finish_batch_member(
+        &self,
+        p: &Prepared<'_>,
+        seeds: &[Option<CachedMask>],
+        versions: &BTreeMap<RelId, Arc<RelVersion>>,
+        engine_kind: EngineKind,
+    ) -> Result<QueryResult, PimdbError> {
+        let compiled = &p.plan.compiled;
+        let mut outs = Vec::with_capacity(compiled.len());
+        for ((c, scan), seed) in compiled.iter().zip(&p.plan.scans).zip(seeds) {
+            let version = &versions[&c.rel];
+            let slot = self.slot(c.rel);
+            let steps = match (scan, seed) {
+                (Some(info), Some(_)) => &c.steps[info.prefix_len..],
+                _ => &c.steps[..],
+            };
+            let (out, masks) = self.pool.run_snapshot(
+                &version.states,
+                self.layout.rel(c.rel).compute_base,
+                steps,
+                c.mask_col,
+                seed.as_ref(),
+                engine_kind,
+                &self.exec_plan,
+            )?;
+            if let (Some(info), None) = (scan, seed) {
+                // the Phase-2/3 fallback: this member ran in full, so it
+                // populates the cache exactly like a serial miss
+                self.lock_scans(slot)
+                    .insert(info.key.clone(), version.epoch, Arc::new(masks));
+                self.scan_stats.misses.fetch_add(1, Ordering::Relaxed);
+            }
             {
                 let mut book = self.lock_book(slot);
                 if book.rows.is_some() {
@@ -1302,6 +1546,158 @@ mod tests {
         handle.clear_plan_cache();
         handle.prepare_dml(src).unwrap();
         assert_eq!(handle.plan_cache_counters().misses, 4);
+    }
+
+    #[test]
+    fn open_rejects_admission_caps_below_the_worker_count() {
+        let cfg = SystemConfig {
+            parallelism: 4,
+            admission: 2,
+            ..SystemConfig::default()
+        };
+        match Pimdb::open(cfg, db()) {
+            Err(PimdbError::Config(msg)) => {
+                assert!(msg.contains("admission cap 2"), "{msg}");
+                assert!(msg.contains("parallelism 4"), "{msg}");
+            }
+            other => panic!("expected Config error, got {:?}", other.map(|_| ())),
+        }
+        // 0 stays the documented auto cap; explicit caps at or above the
+        // worker count are accepted
+        for admission in [0, 4, 64] {
+            let cfg = SystemConfig {
+                parallelism: 4,
+                admission,
+                ..SystemConfig::default()
+            };
+            assert!(Pimdb::open(cfg, db()).is_ok(), "admission {admission}");
+        }
+    }
+
+    /// ScanMaskCache FIFO eviction under epoch churn: filling past the
+    /// 8-entry cap evicts the oldest key, evicted keys re-run as misses,
+    /// resident keys replay as hits, and every group-commit purges the
+    /// cache so a stale-epoch mask is never replayed.
+    #[test]
+    fn scan_cache_fifo_eviction_under_epoch_churn() {
+        use crate::db::schema::RelId;
+        let handle = Pimdb::open(SystemConfig::default(), db()).unwrap();
+        let sources: Vec<String> = (0..=MAX_CACHED_SCANS)
+            .map(|i| {
+                format!(
+                    "from supplier | filter s_suppkey < {} | aggregate count() as n",
+                    11 + i
+                )
+            })
+            .collect();
+        let stmts: Vec<Prepared<'_>> = sources
+            .iter()
+            .map(|s| handle.prepare(s.as_str()).unwrap())
+            .collect();
+        // 9 distinct prefixes fill the 8-entry cache and evict the oldest
+        for (i, p) in stmts.iter().enumerate() {
+            assert_eq!(
+                p.execute().unwrap().raw_report().output.groups[0].count,
+                10 + i as u64
+            );
+        }
+        assert_eq!(
+            handle.shared_scan_counters(),
+            SharedScanCounters {
+                hits: 0,
+                misses: 9,
+                invalidations: 0
+            }
+        );
+        // the first key was evicted (FIFO): re-running it is a fresh
+        // miss...
+        stmts[0].execute().unwrap();
+        // ...the newest key is still resident: a hit...
+        stmts[8].execute().unwrap();
+        // ...and re-inserting key 0 evicted the then-oldest key 1
+        stmts[1].execute().unwrap();
+        assert_eq!(
+            handle.shared_scan_counters(),
+            SharedScanCounters {
+                hits: 1,
+                misses: 11,
+                invalidations: 0
+            }
+        );
+
+        // epoch churn: each group-commit purges the resident masks, and
+        // the post-commit re-run misses and sees every deletion so far —
+        // a stale-epoch mask never replays
+        for round in 0..3u64 {
+            handle
+                .execute_dml(
+                    format!("delete from supplier where s_suppkey == {}", round + 1).as_str(),
+                )
+                .unwrap();
+            assert_eq!(handle.relation_epoch(RelId::Supplier), round + 1);
+            assert_eq!(handle.shared_scan_counters().invalidations, round + 1);
+            let n = stmts[8].execute().unwrap().raw_report().output.groups[0].count;
+            assert_eq!(n, 18 - (round + 1));
+            // the refilled mask replays at the new epoch
+            let again = stmts[8].execute().unwrap().raw_report().output.groups[0].count;
+            assert_eq!(again, n);
+        }
+        assert_eq!(
+            handle.shared_scan_counters(),
+            SharedScanCounters {
+                hits: 4,
+                misses: 14,
+                invalidations: 3
+            }
+        );
+    }
+
+    /// `execute_batch` is bit-identical to serial execution — outputs,
+    /// metrics, shared-scan counters and cache state all match — while
+    /// the distinct filter prefixes run once through one fused program.
+    #[test]
+    fn execute_batch_matches_serial_execution_and_counters() {
+        let sources = [
+            "from supplier | filter s_suppkey < 50 | aggregate count() as n",
+            "from supplier | filter s_suppkey < 50 | aggregate sum(s_acctbal) as s",
+            "from supplier | filter s_suppkey < 25 | aggregate count() as n",
+            "from supplier | filter s_acctbal > 100.00 | aggregate count() as n",
+        ];
+        let serial = Pimdb::open(SystemConfig::default(), db()).unwrap();
+        let batched = Pimdb::open(SystemConfig::default(), db()).unwrap();
+        let sp: Vec<_> = sources.iter().map(|s| serial.prepare(*s).unwrap()).collect();
+        let bp: Vec<_> = sources.iter().map(|s| batched.prepare(*s).unwrap()).collect();
+        let want: Vec<_> = sp.iter().map(|p| p.execute().unwrap()).collect();
+        let refs: Vec<&Prepared<'_>> = bp.iter().collect();
+        let got = batched.execute_batch(&refs).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (w, g) in want.iter().zip(&got) {
+            assert_eq!(w.raw_report().output, g.raw_report().output);
+            assert_eq!(w.metrics().cycles, g.metrics().cycles);
+            assert_eq!(
+                w.metrics().exec_time_s.to_bits(),
+                g.metrics().exec_time_s.to_bits()
+            );
+            assert_eq!(w.metrics().inter_cells, g.metrics().inter_cells);
+        }
+        // counter-for-counter the batch tells the serial story: three
+        // distinct prefixes miss (one fused run produced all three
+        // masks), the repeated prefix hits
+        assert_eq!(serial.shared_scan_counters(), batched.shared_scan_counters());
+        assert_eq!(
+            batched.shared_scan_counters(),
+            SharedScanCounters {
+                hits: 1,
+                misses: 3,
+                invalidations: 0
+            }
+        );
+        // re-batching replays every mask from the cache
+        let again = batched.execute_batch(&refs).unwrap();
+        assert_eq!(again[0].raw_report().output, want[0].raw_report().output);
+        assert_eq!(batched.shared_scan_counters().hits, 5);
+        // the empty batch is a no-op
+        assert!(batched.execute_batch(&[]).unwrap().is_empty());
     }
 
     #[test]

@@ -71,7 +71,10 @@ pub struct SystemConfig {
     /// be queued or running; further submissions block their reader
     /// thread (back-pressure). 0 = auto (`4 * parallelism`). Wall-clock
     /// only — outputs and simulated metrics are identical for every
-    /// value.
+    /// value. Explicit caps below `parallelism` are rejected at
+    /// [`crate::api::Pimdb::open`] with a typed
+    /// [`Config`](crate::error::PimdbError::Config) error: they would
+    /// leave shard workers permanently idle behind the admission gate.
     pub admission: usize,
     /// Host core frequency (Hz).
     pub core_freq_hz: f64,

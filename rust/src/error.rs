@@ -38,6 +38,11 @@ pub enum PimdbError {
         /// Query blocks the program actually contained.
         found: usize,
     },
+    /// [`crate::api::Pimdb::open`] rejected an inconsistent
+    /// [`crate::config::SystemConfig`] (e.g. an explicit admission cap
+    /// below the shard-worker count, which would leave workers
+    /// permanently idle behind the admission gate).
+    Config(String),
 }
 
 impl std::fmt::Display for PimdbError {
@@ -54,6 +59,7 @@ impl std::fmt::Display for PimdbError {
                 f,
                 "expected a single query block, got {found} (use prepare_all)"
             ),
+            PimdbError::Config(msg) => write!(f, "invalid configuration: {msg}"),
         }
     }
 }
@@ -114,6 +120,11 @@ mod tests {
 
         let multi = PimdbError::ExpectedSingleQuery { found: 3 };
         assert!(multi.to_string().contains('3'));
+
+        let config = PimdbError::Config("admission cap 2 is below parallelism 4".into());
+        let text = config.to_string();
+        assert!(text.contains("invalid configuration"), "{text}");
+        assert!(text.contains("admission cap 2"), "{text}");
     }
 
     #[test]

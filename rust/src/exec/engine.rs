@@ -20,7 +20,10 @@ use crate::db::dbgen::Relation;
 use crate::db::layout::RelationLayout;
 use crate::pim::isa::{ColRange, Opcode, PimInstruction};
 use crate::query::compiler::Step;
-use crate::util::bits::{PLANES, WORDS, WORD_BITS, XBAR_ROWS};
+use crate::util::bits::{
+    load_lanes, popcount_words, store_lanes, vand, vnot, vor, vxor, PLANES, WORDS, WORD_BITS,
+    WORD_CHUNKS, XBAR_ROWS,
+};
 
 /// Functional state of one crossbar: `planes[c]` holds column `c` of all
 /// 1024 rows.
@@ -84,7 +87,7 @@ impl XbarState {
 
     /// Number of set bits in column `col` across all rows.
     pub fn popcount_col(&self, col: usize) -> u64 {
-        self.planes[col].iter().map(|w| w.count_ones() as u64).sum()
+        popcount_words(&self.planes[col])
     }
 }
 
@@ -390,11 +393,7 @@ pub(crate) fn exec_instr_on<P: Planes>(
         Opcode::ReduceSum => {
             let mut sum: u128 = 0;
             for i in 0..a.len as usize {
-                let pc: u64 = st
-                    .ld(a.start as usize + i)
-                    .iter()
-                    .map(|w| w.count_ones() as u64)
-                    .sum();
+                let pc = popcount_words(&st.ld(a.start as usize + i));
                 sum += (pc as u128) << i;
             }
             reduce_out.push(sum);
@@ -513,7 +512,7 @@ pub(crate) fn exec_steps_snapshot(
             reduces[i].push(v);
         }
         let m = view.ld(mask_col);
-        mask_counts.push(m.iter().map(|w| w.count_ones() as u64).sum());
+        mask_counts.push(popcount_words(&m));
         mask_planes.push(m);
     }
     (
@@ -525,13 +524,56 @@ pub(crate) fn exec_steps_snapshot(
     )
 }
 
+/// Run a *fused* multi-query scan prefix over a shard of shared crossbar
+/// states and capture one mask plane per member query.
+///
+/// `steps` is the single program emitted by
+/// [`crate::query::opt::fusion::fuse`]: the union of N queries' filter
+/// prefixes with common subexpressions computed once. Fused prefixes are
+/// side-effect free by construction (the fusion safety analysis rejects
+/// reduces and column-transforms), so the only outputs are the planes of
+/// `mask_cols` — element `[q][x]` is query `q`'s filter mask on crossbar
+/// `x`, byte-identical to what running query `q`'s own prefix through
+/// [`exec_steps_snapshot`] would have produced.
+pub(crate) fn exec_steps_fused(
+    states: &[XbarState],
+    compute_base: usize,
+    steps: &[Step],
+    mask_cols: &[usize],
+) -> Vec<Vec<[u64; WORDS]>> {
+    debug_assert!(
+        steps.iter().all(|s| !matches!(
+            s.instr.op,
+            Opcode::ReduceSum | Opcode::ReduceMin | Opcode::ReduceMax
+        )),
+        "fused scan prefixes are side-effect free"
+    );
+    let mut planes = vec![Vec::with_capacity(states.len()); mask_cols.len()];
+    let mut scratch = Scratch::new();
+    let mut sink = Vec::new();
+    for data in states {
+        let mut view = SnapshotView::new(data, compute_base);
+        for step in steps {
+            exec_instr_on(&mut view, &step.instr, &mut sink, &mut scratch);
+        }
+        for (q, &mc) in mask_cols.iter().enumerate() {
+            planes[q].push(view.ld(mc));
+        }
+    }
+    planes
+}
+
 // --- word helpers -----------------------------------------------------------
+//
+// All plane-wide boolean algebra goes through the explicit u64x4 lane
+// primitives in [`crate::util::bits`]: each 16-word plane is 4 chunks of 4
+// lanes, and every chunk expression is a fixed-width branch-free vector op.
 
 #[inline]
 fn not_words(a: &[u64; WORDS]) -> [u64; WORDS] {
     let mut r = [0u64; WORDS];
-    for i in 0..WORDS {
-        r[i] = !a[i];
+    for c in 0..WORD_CHUNKS {
+        store_lanes(&mut r, c, vnot(load_lanes(a, c)));
     }
     r
 }
@@ -539,8 +581,8 @@ fn not_words(a: &[u64; WORDS]) -> [u64; WORDS] {
 #[inline]
 fn and_words(a: &[u64; WORDS], b: &[u64; WORDS]) -> [u64; WORDS] {
     let mut r = [0u64; WORDS];
-    for i in 0..WORDS {
-        r[i] = a[i] & b[i];
+    for c in 0..WORD_CHUNKS {
+        store_lanes(&mut r, c, vand(load_lanes(a, c), load_lanes(b, c)));
     }
     r
 }
@@ -548,8 +590,8 @@ fn and_words(a: &[u64; WORDS], b: &[u64; WORDS]) -> [u64; WORDS] {
 #[inline]
 fn or_words(a: &[u64; WORDS], b: &[u64; WORDS]) -> [u64; WORDS] {
     let mut r = [0u64; WORDS];
-    for i in 0..WORDS {
-        r[i] = a[i] | b[i];
+    for c in 0..WORD_CHUNKS {
+        store_lanes(&mut r, c, vor(load_lanes(a, c), load_lanes(b, c)));
     }
     r
 }
@@ -562,10 +604,11 @@ fn full_add(
 ) -> ([u64; WORDS], [u64; WORDS]) {
     let mut s = [0u64; WORDS];
     let mut co = [0u64; WORDS];
-    for i in 0..WORDS {
-        let axb = a[i] ^ b[i];
-        s[i] = axb ^ c[i];
-        co[i] = (a[i] & b[i]) | (c[i] & axb);
+    for ch in 0..WORD_CHUNKS {
+        let (va, vb, vc) = (load_lanes(a, ch), load_lanes(b, ch), load_lanes(c, ch));
+        let axb = vxor(va, vb);
+        store_lanes(&mut s, ch, vxor(axb, vc));
+        store_lanes(&mut co, ch, vor(vand(va, vb), vand(vc, axb)));
     }
     (s, co)
 }
@@ -591,13 +634,17 @@ fn cmp_imm_planes<P: Planes>(st: &P, a: ColRange, imm: u64) -> ([u64; WORDS], [u
     let mut lt = [0u64; WORDS];
     for i in (0..a.len as usize).rev() {
         let p = st.ld(a.start as usize + i);
-        let bit = (imm >> i) & 1;
-        for w in 0..WORDS {
-            if bit == 1 {
-                lt[w] |= eq[w] & !p[w];
-                eq[w] &= p[w];
-            } else {
-                eq[w] &= !p[w];
+        // branch on the immediate bit once per plane, then run a
+        // branch-free chunked lane loop over the 1024 rows
+        if (imm >> i) & 1 == 1 {
+            for c in 0..WORD_CHUNKS {
+                let (vp, ve) = (load_lanes(&p, c), load_lanes(&eq, c));
+                store_lanes(&mut lt, c, vor(load_lanes(&lt, c), vand(ve, vnot(vp))));
+                store_lanes(&mut eq, c, vand(ve, vp));
+            }
+        } else {
+            for c in 0..WORD_CHUNKS {
+                store_lanes(&mut eq, c, vand(load_lanes(&eq, c), vnot(load_lanes(&p, c))));
             }
         }
     }
@@ -610,9 +657,11 @@ fn cmp_cols_planes<P: Planes>(st: &P, a: ColRange, b: ColRange) -> ([u64; WORDS]
     for i in (0..a.len as usize).rev() {
         let pa = st.ld(a.start as usize + i);
         let pb = plane_or_zero(st, b, i);
-        for w in 0..WORDS {
-            lt[w] |= eq[w] & !pa[w] & pb[w];
-            eq[w] &= !(pa[w] ^ pb[w]);
+        for c in 0..WORD_CHUNKS {
+            let (va, vb) = (load_lanes(&pa, c), load_lanes(&pb, c));
+            let ve = load_lanes(&eq, c);
+            store_lanes(&mut lt, c, vor(load_lanes(&lt, c), vand(vand(ve, vnot(va)), vb)));
+            store_lanes(&mut eq, c, vand(ve, vnot(vxor(va, vb))));
         }
     }
     (eq, lt)
@@ -908,6 +957,50 @@ mod tests {
             assert_eq!(replayed.reduces, want.reduces);
             assert_eq!(replayed.mask_counts, want.mask_counts);
             assert_eq!(masks2, masks);
+        });
+    }
+
+    #[test]
+    fn fused_exec_matches_per_query_snapshot_runs() {
+        check("engine-fused-vs-snapshot", 25, |g| {
+            let bits = g.usize(1, 10);
+            let lo = g.u64(0, (1 << bits) - 1);
+            let hi = g.u64(0, (1 << bits) - 1);
+            let n_states = g.usize(1, 3);
+            let compute_base = 16;
+            let mut states: Vec<XbarState> = Vec::new();
+            for _ in 0..n_states {
+                let vals = g.vec_u64(XBAR_ROWS, 0, (1 << bits) - 1);
+                let mut st = XbarState::new(48);
+                load_values(&vals, 0, bits, &mut st);
+                states.push(st);
+            }
+            let a = ColRange::new(0, bits);
+            // two queries sharing the LtImm subexpression: q0's mask is
+            // the raw compare, q1 ANDs it with an EqImm
+            let q0 = vec![step(PimInstruction::with_imm(
+                Opcode::LtImm,
+                a,
+                ColRange::new(20, 1),
+                lo,
+            ))];
+            let q1 = vec![
+                step(PimInstruction::with_imm(Opcode::LtImm, a, ColRange::new(20, 1), lo)),
+                step(PimInstruction::with_imm(Opcode::EqImm, a, ColRange::new(21, 1), hi)),
+                step(PimInstruction::binary(
+                    Opcode::And,
+                    ColRange::new(21, 1),
+                    ColRange::new(20, 1),
+                    ColRange::new(22, 1),
+                )),
+            ];
+            // the hand-fused union: shared LtImm once, then q1's extras
+            let fused = vec![q1[0].clone(), q1[1].clone(), q1[2].clone()];
+            let got = exec_steps_fused(&states, compute_base, &fused, &[20, 22]);
+            let (_, want0) = exec_steps_snapshot(&states, compute_base, &q0, 20, None);
+            let (_, want1) = exec_steps_snapshot(&states, compute_base, &q1, 22, None);
+            assert_eq!(got[0], want0);
+            assert_eq!(got[1], want1);
         });
     }
 

@@ -247,6 +247,71 @@ impl ShardPool {
         }
         Ok(merged.expect("at least one shard"))
     }
+
+    /// Execute a fused multi-query scan program (one
+    /// [`crate::query::opt::fusion::FusedScan`]) over an `Arc`-shared
+    /// crossbar snapshot, sharded per `plan`, and capture one mask plane
+    /// per member query per crossbar. Element `[q][x]` of the result is
+    /// member `q`'s filter mask on crossbar `x`, in crossbar order —
+    /// exactly what [`Self::run_snapshot`] would have captured running
+    /// member `q`'s own prefix.
+    pub(crate) fn run_fused(
+        &self,
+        states: &Arc<Vec<XbarState>>,
+        compute_base: usize,
+        steps: &[Step],
+        mask_cols: &[usize],
+        engine_kind: EngineKind,
+        plan: &ExecPlan,
+    ) -> Result<Vec<Vec<[u64; WORDS]>>, ExecError> {
+        if states.is_empty() {
+            return Ok(vec![Vec::new(); mask_cols.len()]);
+        }
+        let shard_len = plan.shard_len(states.len());
+        let ranges: Vec<std::ops::Range<usize>> = (0..states.len())
+            .step_by(shard_len)
+            .map(|lo| lo..(lo + shard_len).min(states.len()))
+            .collect();
+        let (tx, rx) = mpsc::channel();
+        let steps_arc: Arc<Vec<Step>> = Arc::new(steps.to_vec());
+        let cols_arc: Arc<Vec<usize>> = Arc::new(mask_cols.to_vec());
+        for (i, r) in ranges.iter().enumerate() {
+            let states = Arc::clone(states);
+            let steps = Arc::clone(&steps_arc);
+            let cols = Arc::clone(&cols_arc);
+            let tx = tx.clone();
+            let r = r.clone();
+            self.submit(Box::new(move || {
+                let result = catch_unwind(AssertUnwindSafe(|| {
+                    run_fused_shard(&states[r.clone()], compute_base, &steps, &cols, engine_kind)
+                }))
+                .unwrap_or_else(|_| {
+                    Err(ExecError::Backend {
+                        engine: "native",
+                        msg: "fused shard job panicked".into(),
+                    })
+                });
+                let _ = tx.send((i, result));
+            }));
+        }
+        drop(tx);
+        let mut partials: Vec<(usize, Vec<Vec<[u64; WORDS]>>)> = Vec::with_capacity(ranges.len());
+        for _ in 0..ranges.len() {
+            let (i, result) = rx.recv().map_err(|_| ExecError::Backend {
+                engine: "native",
+                msg: "shard executor shut down mid-program".into(),
+            })?;
+            partials.push((i, result?));
+        }
+        partials.sort_by_key(|&(i, _)| i);
+        let mut merged = vec![Vec::with_capacity(states.len()); mask_cols.len()];
+        for (_, shard_planes) in partials {
+            for (dst, src) in merged.iter_mut().zip(shard_planes) {
+                dst.extend(src);
+            }
+        }
+        Ok(merged)
+    }
 }
 
 /// One shard's work: snapshot-interpret natively, or clone-and-run for
@@ -283,6 +348,40 @@ fn run_shard(
             )?;
             let masks = owned.iter().map(|st| st.planes[mask_col]).collect();
             Ok((out, masks))
+        }
+    }
+}
+
+/// One fused-scan shard's work: multi-mask snapshot interpretation
+/// natively, or clone-and-run for the PJRT backend with every requested
+/// mask plane read back from the private copy.
+fn run_fused_shard(
+    shard: &[XbarState],
+    compute_base: usize,
+    steps: &[Step],
+    mask_cols: &[usize],
+    engine_kind: EngineKind,
+) -> Result<Vec<Vec<[u64; WORDS]>>, ExecError> {
+    match engine_kind {
+        EngineKind::Native => Ok(engine::exec_steps_fused(
+            shard,
+            compute_base,
+            steps,
+            mask_cols,
+        )),
+        EngineKind::Pjrt => {
+            let mut owned: Vec<XbarState> = shard.to_vec();
+            let probe = mask_cols.first().copied().unwrap_or(compute_base);
+            crate::runtime::exec_steps_pjrt(&mut owned, steps, probe).map_err(|msg| {
+                ExecError::Backend {
+                    engine: "pjrt",
+                    msg,
+                }
+            })?;
+            Ok(mask_cols
+                .iter()
+                .map(|&mc| owned.iter().map(|st| st.planes[mc]).collect())
+                .collect())
         }
     }
 }
@@ -455,6 +554,42 @@ mod tests {
         assert_eq!(got.reduces, want.reduces);
         assert_eq!(got.mask_counts, want.mask_counts);
         assert_eq!(&masks2, seeds.as_ref());
+    }
+
+    #[test]
+    fn fused_run_matches_per_query_snapshot_runs() {
+        // a hand-fused two-member program: each member's mask is one of
+        // the two compare steps' outputs
+        let fused = vec![
+            step(PimInstruction::with_imm(
+                Opcode::LtImm,
+                ColRange::new(0, 16),
+                ColRange::new(100, 1),
+                0x1234,
+            )),
+            step(PimInstruction::with_imm(
+                Opcode::GtImm,
+                ColRange::new(0, 16),
+                ColRange::new(101, 1),
+                0x4321,
+            )),
+        ];
+        for &(workers, n_xbars) in &[(1usize, 5usize), (2, 7), (8, 11)] {
+            let pool = ShardPool::new(workers, 0);
+            let plan = ExecPlan::with_parallelism(workers);
+            let shared = Arc::new(random_states(130 + n_xbars as u64, n_xbars));
+            let got = pool
+                .run_fused(&shared, 64, &fused, &[100, 101], EngineKind::Native, &plan)
+                .unwrap();
+            let (_, want0) = pool
+                .run_snapshot(&shared, 64, &fused[..1], 100, None, EngineKind::Native, &plan)
+                .unwrap();
+            let (_, want1) = pool
+                .run_snapshot(&shared, 64, &fused[1..], 101, None, EngineKind::Native, &plan)
+                .unwrap();
+            assert_eq!(got[0], want0, "{workers} workers");
+            assert_eq!(got[1], want1, "{workers} workers");
+        }
     }
 
     #[test]

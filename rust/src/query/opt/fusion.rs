@@ -1,0 +1,493 @@
+//! Multi-query scan fusion: cross-query common-subexpression DAG over a
+//! batch of shared-scan filter prefixes.
+//!
+//! PR 6's shared-scan layer ([`super::sharedscan`]) amortizes scans only
+//! between queries whose canonical filter-prefix keys are *byte-identical*
+//! — replay, not merging. This pass closes ROADMAP item 3's other half
+//! (the MQO batching of arXiv:1905.09822 / arXiv:2307.00658): it takes N
+//! filter prefixes over the same relation and emits one *fused* program
+//! that computes every query's mask in a single pass over the data,
+//! computing each distinct subexpression once.
+//!
+//! The construction generalizes the within-query value-numbering CSE in
+//! `passes::cse` to run *across* queries, in SSA form: every emitted write
+//! allocates fresh fused compute columns (so a column is written exactly
+//! once and its id doubles as its value number), and each member query
+//! carries a private rename map from its original compute columns to
+//! fused columns. A step whose `(opcode, immediate, width, operand value
+//! numbers)` key was already computed by an earlier member is elided and
+//! its destination renamed to the existing home — the cross-query CSE
+//! DAG. Data columns (below `compute_base`) are shared inputs and pass
+//! through unrenamed, exactly like the renaming normalization behind the
+//! canonical scan key.
+//!
+//! Safety mirrors sharedscan's four checks, re-proved per member here
+//! rather than trusted from the key: (1) no side-effect step (reduce /
+//! column-transform) in a fused prefix; (2) every write lands at or above
+//! `compute_base` (fresh fused columns, so members cannot alias each
+//! other's intermediates); (3) every read is either a data column or a
+//! compute column the member has already written (renames are dense, so
+//! a read of a never-written compute column — which would observe zeroed
+//! scratch — refuses fusion instead of aliasing another member); (4)
+//! every multi-column operand renames *contiguously*. A member failing
+//! any check falls back to a singleton [`FusedScan`] that runs its
+//! original prefix unchanged; a member that would overflow the crossbar's
+//! column budget closes the current chunk and starts a new one (greedy
+//! packing), so `fuse` never fails — it degrades to per-query scans.
+
+use std::collections::HashMap;
+
+use super::passes;
+use crate::pim::isa::{ColRange, Opcode};
+use crate::query::compiler::Step;
+
+/// One member query's shared-scan filter prefix, as split by
+/// [`super::sharedscan::scan_info`]: `steps` are the program's first
+/// `prefix_len` steps and `mask_col` is the filter-mask column the prefix
+/// materializes.
+#[derive(Clone, Copy, Debug)]
+pub struct ScanProgram<'a> {
+    /// The filter-prefix steps (side-effect free, compute-area writes).
+    pub steps: &'a [Step],
+    /// Column holding the member's filter mask after the prefix runs.
+    pub mask_col: usize,
+}
+
+/// One fused scan program covering a subset of the input members.
+#[derive(Clone, Debug)]
+pub struct FusedScan {
+    /// The fused steps: the union of the members' prefixes with
+    /// cross-query common subexpressions computed once.
+    pub steps: Vec<Step>,
+    /// Fused mask column of each member, parallel to `members` (members
+    /// with identical predicates share a column).
+    pub mask_cols: Vec<usize>,
+    /// Indices into the `fuse` input slice this chunk covers.
+    pub members: Vec<usize>,
+    /// Steps elided by the cross-query CSE (emitted = sum of member
+    /// prefix lengths - saved).
+    pub saved_steps: usize,
+    /// Compute columns the fused program occupies above `compute_base`.
+    pub peak_cols: usize,
+}
+
+impl FusedScan {
+    /// A one-member chunk running the member's original prefix verbatim
+    /// (the fallback when a member refuses fusion).
+    fn singleton(idx: usize, p: &ScanProgram) -> FusedScan {
+        FusedScan {
+            steps: p.steps.to_vec(),
+            mask_cols: vec![p.mask_col],
+            members: vec![idx],
+            saved_steps: 0,
+            peak_cols: 0,
+        }
+    }
+}
+
+/// Why a member could not join the current fused chunk.
+enum FuseErr {
+    /// The member violates a fusion safety check; it can never fuse.
+    Unfusable,
+    /// The chunk's column budget is exhausted; retry in a fresh chunk.
+    ChunkFull,
+}
+
+/// Value-number key of one step: two steps with equal keys compute the
+/// same planes (operands are SSA ids: data column ids below
+/// `compute_base`, write-once fused column ids above it).
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct StepKey {
+    op: u8,
+    imm: u64,
+    width: u16,
+    la: usize,
+    lb: usize,
+    srcs: Vec<u32>,
+}
+
+/// Incremental fusion state for one chunk.
+#[derive(Clone)]
+struct Fuser {
+    compute_base: usize,
+    col_limit: usize,
+    next_col: usize,
+    table: HashMap<StepKey, usize>,
+    steps: Vec<Step>,
+    mask_cols: Vec<usize>,
+    members: Vec<usize>,
+    saved: usize,
+}
+
+impl Fuser {
+    fn new(compute_base: usize, col_limit: usize) -> Fuser {
+        Fuser {
+            compute_base,
+            col_limit,
+            next_col: compute_base,
+            table: HashMap::new(),
+            steps: Vec::new(),
+            mask_cols: Vec::new(),
+            members: Vec::new(),
+            saved: 0,
+        }
+    }
+
+    /// Rename one member's source range: data ranges pass through,
+    /// compute ranges must map contiguously onto already-written fused
+    /// columns (safety checks 3 and 4). Only the first `read_len` columns
+    /// are actually read by the engine; trailing unread columns of a
+    /// wider field keep the mapped base without a contiguity obligation.
+    fn rename_read(
+        &self,
+        remap: &HashMap<usize, usize>,
+        r: ColRange,
+        read_len: usize,
+    ) -> Result<ColRange, FuseErr> {
+        let s = r.start as usize;
+        if s < self.compute_base {
+            if s + read_len > self.compute_base {
+                return Err(FuseErr::Unfusable);
+            }
+            return Ok(r);
+        }
+        let mapped0 = *remap.get(&s).ok_or(FuseErr::Unfusable)?;
+        for k in 1..read_len {
+            if remap.get(&(s + k)) != Some(&(mapped0 + k)) {
+                return Err(FuseErr::Unfusable);
+            }
+        }
+        Ok(ColRange::new(mapped0, r.len as usize))
+    }
+
+    /// Try to add member `idx`. On error the chunk state is unchanged
+    /// only if the caller attempted on a clone (see [`fuse`]).
+    fn add(&mut self, idx: usize, p: &ScanProgram) -> Result<(), FuseErr> {
+        let mut remap: HashMap<usize, usize> = HashMap::new();
+        for step in p.steps {
+            let mut instr = step.instr.clone();
+            if matches!(
+                instr.op,
+                Opcode::ReduceSum
+                    | Opcode::ReduceMin
+                    | Opcode::ReduceMax
+                    | Opcode::ColumnTransform
+            ) {
+                return Err(FuseErr::Unfusable); // safety check 1
+            }
+            let (la, lb) = passes::read_lens(&instr);
+            if la > 0 {
+                instr.src_a = self.rename_read(&remap, instr.src_a, la)?;
+            }
+            if lb > 0 {
+                let b = instr.src_b.expect("read_lens reported a second operand");
+                instr.src_b = Some(self.rename_read(&remap, b, lb)?);
+            }
+            let (_, write) = passes::accesses(&instr);
+            let w = write.expect("non-side-effect steps write");
+            if (w.start as usize) < self.compute_base {
+                return Err(FuseErr::Unfusable); // safety check 2
+            }
+            let srcs: Vec<u32> = {
+                let mut v = Vec::with_capacity(la + lb);
+                for k in 0..la {
+                    v.push(instr.src_a.start as u32 + k as u32);
+                }
+                for k in 0..lb {
+                    v.push(instr.src_b.expect("second operand").start as u32 + k as u32);
+                }
+                v
+            };
+            let key = StepKey {
+                op: instr.op as u8,
+                imm: if instr.op.has_imm() { instr.imm } else { 0 },
+                width: w.len,
+                la,
+                lb,
+                srcs,
+            };
+            let ww = w.len as usize;
+            let w0 = w.start as usize;
+            match self.table.get(&key) {
+                Some(&home) => {
+                    // cross-query CSE hit: rename instead of emitting
+                    for k in 0..ww {
+                        remap.insert(w0 + k, home + k);
+                    }
+                    self.saved += 1;
+                }
+                None => {
+                    let at = self.next_col;
+                    if at + ww > self.col_limit {
+                        return Err(FuseErr::ChunkFull);
+                    }
+                    self.next_col = at + ww;
+                    for k in 0..ww {
+                        remap.insert(w0 + k, at + k);
+                    }
+                    self.table.insert(key, at);
+                    instr.dst = ColRange::new(at, ww);
+                    if la == 0 {
+                        // Set/Reset read nothing: keep the cosmetic src_a
+                        // field mirroring the destination (cse does the same)
+                        instr.src_a = instr.dst;
+                    }
+                    self.steps.push(Step {
+                        instr,
+                        category: step.category,
+                    });
+                }
+            }
+        }
+        let mask = *remap.get(&p.mask_col).ok_or(FuseErr::Unfusable)?;
+        self.mask_cols.push(mask);
+        self.members.push(idx);
+        Ok(())
+    }
+
+    fn finish(self) -> FusedScan {
+        FusedScan {
+            peak_cols: self.next_col - self.compute_base,
+            steps: self.steps,
+            mask_cols: self.mask_cols,
+            members: self.members,
+            saved_steps: self.saved,
+        }
+    }
+}
+
+/// Fuse a batch of shared-scan prefixes over one relation into as few
+/// fused programs as the crossbar's column budget allows.
+///
+/// `compute_base` is the relation's compute-area base (fused columns are
+/// allocated upward from it) and `col_limit` the exclusive column bound
+/// (the crossbar states' plane count). Members are packed greedily in
+/// input order; a member that refuses fusion (see the module docs) comes
+/// back as a singleton chunk running its original prefix, so every input
+/// index appears in exactly one returned chunk.
+pub fn fuse(programs: &[ScanProgram], compute_base: usize, col_limit: usize) -> Vec<FusedScan> {
+    let mut out = Vec::new();
+    let mut cur = Fuser::new(compute_base, col_limit);
+    for (idx, p) in programs.iter().enumerate() {
+        let mut trial = cur.clone();
+        match trial.add(idx, p) {
+            Ok(()) => cur = trial,
+            Err(FuseErr::ChunkFull) if !cur.members.is_empty() => {
+                out.push(cur.finish());
+                cur = Fuser::new(compute_base, col_limit);
+                let mut retry = cur.clone();
+                match retry.add(idx, p) {
+                    Ok(()) => cur = retry,
+                    Err(_) => out.push(FusedScan::singleton(idx, p)),
+                }
+            }
+            Err(_) => out.push(FusedScan::singleton(idx, p)),
+        }
+    }
+    if !cur.members.is_empty() {
+        out.push(cur.finish());
+    }
+    out
+}
+
+/// FNV-1a digest of a fusion result — the cross-language golden pin
+/// shared with `python/fusionmirror.py` (each value folds in as 8
+/// little-endian bytes; chunks are delimited by a marker byte).
+pub fn digest(fused: &[FusedScan]) -> u64 {
+    const OFFSET: u64 = 0xcbf29ce484222325;
+    const PRIME: u64 = 0x100000001b3;
+    let mut h = OFFSET;
+    let mut byte = |h: &mut u64, b: u8| {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(PRIME);
+    };
+    let mut word = |h: &mut u64, v: u64| {
+        for b in v.to_le_bytes() {
+            *h ^= b as u64;
+            *h = h.wrapping_mul(PRIME);
+        }
+    };
+    for fs in fused {
+        byte(&mut h, 0xF5);
+        for step in &fs.steps {
+            let i = &step.instr;
+            word(&mut h, i.op as u64);
+            word(&mut h, if i.op.has_imm() { i.imm } else { 0 });
+            word(&mut h, i.src_a.start as u64);
+            word(&mut h, i.src_a.len as u64);
+            match i.src_b {
+                Some(b) => {
+                    word(&mut h, 1);
+                    word(&mut h, b.start as u64);
+                    word(&mut h, b.len as u64);
+                }
+                None => word(&mut h, 0),
+            }
+            word(&mut h, i.dst.start as u64);
+            word(&mut h, i.dst.len as u64);
+        }
+        for &m in &fs.mask_cols {
+            word(&mut h, m as u64);
+        }
+        for &m in &fs.members {
+            word(&mut h, m as u64);
+        }
+        word(&mut h, fs.saved_steps as u64);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::endurance::OpCategory;
+    use crate::pim::isa::PimInstruction;
+
+    const BASE: usize = 25;
+    const VALID: usize = 24;
+
+    fn step(instr: PimInstruction) -> Step {
+        Step {
+            instr,
+            category: OpCategory::Filter,
+        }
+    }
+
+    /// `LtImm(attr < imm) -> tmp; And(tmp, VALID) -> mask` — the same
+    /// shape sharedscan's tests use.
+    fn lt_prefix(imm: u64, tmp: usize, mask: usize) -> Vec<Step> {
+        vec![
+            step(PimInstruction::with_imm(
+                Opcode::LtImm,
+                ColRange::new(0, 8),
+                ColRange::new(tmp, 1),
+                imm,
+            )),
+            step(PimInstruction::binary(
+                Opcode::And,
+                ColRange::new(tmp, 1),
+                ColRange::new(VALID, 1),
+                ColRange::new(mask, 1),
+            )),
+        ]
+    }
+
+    #[test]
+    fn fuse_dedups_cross_query_subexpressions() {
+        // q1 shares q0's LtImm *and* its And-with-valid, then narrows
+        // with an extra EqImm conjunct
+        let p0 = lt_prefix(50, 26, 25);
+        let mut p1 = lt_prefix(50, 30, 28);
+        p1.push(step(PimInstruction::with_imm(
+            Opcode::EqImm,
+            ColRange::new(8, 8),
+            ColRange::new(29, 1),
+            3,
+        )));
+        p1.push(step(PimInstruction::binary(
+            Opcode::And,
+            ColRange::new(28, 1),
+            ColRange::new(29, 1),
+            ColRange::new(31, 1),
+        )));
+        let progs = [
+            ScanProgram { steps: &p0, mask_col: 25 },
+            ScanProgram { steps: &p1, mask_col: 31 },
+        ];
+        let fused = fuse(&progs, BASE, 64);
+        assert_eq!(fused.len(), 1);
+        let f = &fused[0];
+        assert_eq!(f.members, vec![0, 1]);
+        // 6 input steps, 2 elided (q1's LtImm and And-with-valid)
+        assert_eq!(f.steps.len(), 4);
+        assert_eq!(f.saved_steps, 2);
+        assert_eq!(f.peak_cols, 4);
+        // q0's mask is the shared And home; q1's is the final And
+        assert_eq!(f.mask_cols, vec![BASE + 1, BASE + 3]);
+        // byte-identical prefixes fuse to zero new steps and the same mask
+        let fused2 = fuse(
+            &[
+                ScanProgram { steps: &p0, mask_col: 25 },
+                ScanProgram { steps: &p0, mask_col: 25 },
+            ],
+            BASE,
+            64,
+        );
+        assert_eq!(fused2.len(), 1);
+        assert_eq!(fused2[0].steps.len(), 2);
+        assert_eq!(fused2[0].mask_cols, vec![BASE + 1, BASE + 1]);
+    }
+
+    #[test]
+    fn column_budget_overflow_starts_a_new_chunk() {
+        let p0 = lt_prefix(10, 26, 25);
+        let p1 = lt_prefix(20, 26, 25);
+        let p2 = lt_prefix(30, 26, 25);
+        let progs = [
+            ScanProgram { steps: &p0, mask_col: 25 },
+            ScanProgram { steps: &p1, mask_col: 25 },
+            ScanProgram { steps: &p2, mask_col: 25 },
+        ];
+        // room for two members (2 cols each), not three
+        let fused = fuse(&progs, BASE, BASE + 5);
+        assert_eq!(fused.len(), 2);
+        assert_eq!(fused[0].members, vec![0, 1]);
+        assert_eq!(fused[1].members, vec![2]);
+        // the second chunk re-bases its allocation at compute_base
+        assert_eq!(fused[1].mask_cols, vec![BASE + 1]);
+    }
+
+    #[test]
+    fn unsafe_members_fall_back_to_singletons() {
+        // reads compute column 40 without ever writing it (would observe
+        // zeroed scratch; fusing could alias another member's value)
+        let bad = vec![step(PimInstruction::binary(
+            Opcode::And,
+            ColRange::new(40, 1),
+            ColRange::new(VALID, 1),
+            ColRange::new(25, 1),
+        ))];
+        let good = lt_prefix(7, 26, 25);
+        let progs = [
+            ScanProgram { steps: &bad, mask_col: 25 },
+            ScanProgram { steps: &good, mask_col: 25 },
+        ];
+        let fused = fuse(&progs, BASE, 64);
+        assert_eq!(fused.len(), 2);
+        assert_eq!(fused[0].members, vec![0]);
+        assert_eq!(fused[0].saved_steps, 0);
+        // the singleton runs its original steps verbatim
+        assert_eq!(fused[0].steps, bad);
+        assert_eq!(fused[0].mask_cols, vec![25]);
+        assert_eq!(fused[1].members, vec![1]);
+    }
+
+    #[test]
+    fn golden_digest_matches_python_mirror() {
+        // Pinned from python/fusionmirror.py over the identical input
+        // (test_fusionmirror.py::test_golden_digest) — a change to either
+        // side's key/DAG construction breaks the twin assertion there.
+        let p0 = lt_prefix(50, 26, 25);
+        let mut p1 = lt_prefix(50, 30, 28);
+        p1.push(step(PimInstruction::with_imm(
+            Opcode::GtImm,
+            ColRange::new(8, 8),
+            ColRange::new(29, 1),
+            11,
+        )));
+        p1.push(step(PimInstruction::binary(
+            Opcode::And,
+            ColRange::new(28, 1),
+            ColRange::new(29, 1),
+            ColRange::new(31, 1),
+        )));
+        let p2 = lt_prefix(9, 27, 26);
+        let progs = [
+            ScanProgram { steps: &p0, mask_col: 25 },
+            ScanProgram { steps: &p1, mask_col: 31 },
+            ScanProgram { steps: &p2, mask_col: 26 },
+        ];
+        let fused = fuse(&progs, BASE, 64);
+        assert_eq!(digest(&fused), 0x22A4_5855_9DAA_CA33);
+    }
+}

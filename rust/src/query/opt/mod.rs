@@ -28,6 +28,11 @@
 //!   is split at its last mask write and the filter prefix is keyed by
 //!   a renaming-normalized serialization, so the service handle can run
 //!   one shared scan for many prepared queries over a relation.
+//! * **Multi-query scan fusion** ([`fusion`]) — the batching half of the
+//!   shared-scan story: N distinct filter prefixes over one relation are
+//!   value-numbered *across* queries into a single fused program with one
+//!   mask output per member, so a batch pays for each distinct
+//!   subexpression once instead of once per query.
 //!
 //! Correctness contract (enforced by `tests/opt_equivalence.rs`): `-O2`
 //! outputs are bit-identical to `-O0` for every query, total cycles never
@@ -37,6 +42,7 @@
 //! back to the untouched program at `-O0`.
 
 mod alloc;
+pub mod fusion;
 mod passes;
 pub mod sharedscan;
 

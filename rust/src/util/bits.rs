@@ -26,6 +26,79 @@ pub const XB_TILE: usize = 16;
 /// Bits retrieved by one crossbar read (paper Table 3).
 pub const XBAR_READ_BITS: usize = 16;
 
+// --- explicit SIMD lanes -----------------------------------------------------
+//
+// Portable 4-wide u64 vectors for the hot bit-plane kernels. A plane's 16
+// words are processed as 4 chunks of 4 lanes; each lane primitive is a
+// branch-free fixed-width array expression, which every release build
+// lowers to one 256-bit vector op (or two 128-bit ops) without nightly
+// `std::simd`. The engine's And/Or/Not/Xor, compare and popcount-reduce
+// loops are written against these primitives rather than scalar
+// word-at-a-time loops; `RowMask` uses the same primitives so host-side
+// mask algebra and the engine kernels share one code shape.
+
+/// Lanes per SIMD chunk (u64x4: one 256-bit vector register).
+pub const LANES: usize = 4;
+/// SIMD chunks per bit-plane (`WORDS / LANES`).
+pub const WORD_CHUNKS: usize = WORDS / LANES;
+const _: () = assert!(WORDS % LANES == 0, "plane words must chunk evenly into SIMD lanes");
+
+/// A portable 4-lane u64 vector.
+pub type U64x4 = [u64; LANES];
+
+/// Load chunk `c` (lanes `4c..4c+4`) of a packed plane.
+#[inline]
+pub fn load_lanes(p: &[u64; WORDS], c: usize) -> U64x4 {
+    let i = c * LANES;
+    [p[i], p[i + 1], p[i + 2], p[i + 3]]
+}
+
+/// Store chunk `c` of a packed plane.
+#[inline]
+pub fn store_lanes(p: &mut [u64; WORDS], c: usize, v: U64x4) {
+    p[c * LANES..(c + 1) * LANES].copy_from_slice(&v);
+}
+
+/// Lane-wise AND.
+#[inline]
+pub fn vand(a: U64x4, b: U64x4) -> U64x4 {
+    [a[0] & b[0], a[1] & b[1], a[2] & b[2], a[3] & b[3]]
+}
+
+/// Lane-wise OR.
+#[inline]
+pub fn vor(a: U64x4, b: U64x4) -> U64x4 {
+    [a[0] | b[0], a[1] | b[1], a[2] | b[2], a[3] | b[3]]
+}
+
+/// Lane-wise XOR.
+#[inline]
+pub fn vxor(a: U64x4, b: U64x4) -> U64x4 {
+    [a[0] ^ b[0], a[1] ^ b[1], a[2] ^ b[2], a[3] ^ b[3]]
+}
+
+/// Lane-wise complement.
+#[inline]
+pub fn vnot(a: U64x4) -> U64x4 {
+    [!a[0], !a[1], !a[2], !a[3]]
+}
+
+/// Horizontal popcount of all four lanes.
+#[inline]
+pub fn vpopcount(a: U64x4) -> u64 {
+    (a[0].count_ones() + a[1].count_ones() + a[2].count_ones() + a[3].count_ones()) as u64
+}
+
+/// Number of set bits in a packed plane, accumulated chunk-at-a-time.
+#[inline]
+pub fn popcount_words(p: &[u64; WORDS]) -> u64 {
+    let mut n = 0u64;
+    for c in 0..WORD_CHUNKS {
+        n += vpopcount(load_lanes(p, c));
+    }
+    n
+}
+
 /// A dense 2-D bit matrix, `rows x cols`, row-major, bit-addressable.
 /// Used by the cell-accurate crossbar reference model.
 #[derive(Clone, PartialEq, Eq)]
@@ -151,14 +224,14 @@ impl RowMask {
 
     /// Number of selected rows.
     pub fn count_ones(&self) -> u32 {
-        self.0.iter().map(|w| w.count_ones()).sum()
+        popcount_words(&self.0) as u32
     }
 
     /// Row-wise AND.
     pub fn and(&self, o: &RowMask) -> RowMask {
         let mut r = [0u64; WORDS];
-        for (i, x) in r.iter_mut().enumerate() {
-            *x = self.0[i] & o.0[i];
+        for c in 0..WORD_CHUNKS {
+            store_lanes(&mut r, c, vand(load_lanes(&self.0, c), load_lanes(&o.0, c)));
         }
         RowMask(r)
     }
@@ -166,8 +239,8 @@ impl RowMask {
     /// Row-wise OR.
     pub fn or(&self, o: &RowMask) -> RowMask {
         let mut r = [0u64; WORDS];
-        for (i, x) in r.iter_mut().enumerate() {
-            *x = self.0[i] | o.0[i];
+        for c in 0..WORD_CHUNKS {
+            store_lanes(&mut r, c, vor(load_lanes(&self.0, c), load_lanes(&o.0, c)));
         }
         RowMask(r)
     }
@@ -175,8 +248,8 @@ impl RowMask {
     /// Row-wise complement.
     pub fn not(&self) -> RowMask {
         let mut r = [0u64; WORDS];
-        for (i, x) in r.iter_mut().enumerate() {
-            *x = !self.0[i];
+        for c in 0..WORD_CHUNKS {
+            store_lanes(&mut r, c, vnot(load_lanes(&self.0, c)));
         }
         RowMask(r)
     }
@@ -414,6 +487,39 @@ mod tests {
         assert_eq!(a.and(&b).count_ones(), 0);
         assert_eq!(a.or(&b).count_ones(), 1024);
         assert_eq!(a.iter_rows().collect::<Vec<_>>(), vec![0, 1023]);
+    }
+
+    #[test]
+    fn simd_lanes_match_scalar_word_ops() {
+        // deterministic LCG-filled planes exercise every lane position
+        let mut a = [0u64; WORDS];
+        let mut b = [0u64; WORDS];
+        let mut x = 0x9E3779B97F4A7C15u64;
+        for i in 0..WORDS {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            a[i] = x;
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            b[i] = x;
+        }
+        let mut and = [0u64; WORDS];
+        let mut or = [0u64; WORDS];
+        let mut xor = [0u64; WORDS];
+        let mut not = [0u64; WORDS];
+        for c in 0..WORD_CHUNKS {
+            let (va, vb) = (load_lanes(&a, c), load_lanes(&b, c));
+            store_lanes(&mut and, c, vand(va, vb));
+            store_lanes(&mut or, c, vor(va, vb));
+            store_lanes(&mut xor, c, vxor(va, vb));
+            store_lanes(&mut not, c, vnot(va));
+        }
+        for i in 0..WORDS {
+            assert_eq!(and[i], a[i] & b[i], "and word {i}");
+            assert_eq!(or[i], a[i] | b[i], "or word {i}");
+            assert_eq!(xor[i], a[i] ^ b[i], "xor word {i}");
+            assert_eq!(not[i], !a[i], "not word {i}");
+        }
+        let scalar_pc: u64 = a.iter().map(|w| w.count_ones() as u64).sum();
+        assert_eq!(popcount_words(&a), scalar_pc);
     }
 
     #[test]

@@ -1,0 +1,250 @@
+//! Batch execution battery: `Pimdb::execute_batch` pinned bit-for-bit
+//! against serial `Prepared::execute`.
+//!
+//! The multi-query fusion pass is a simulator shortcut — the fused scan
+//! shares the work of identical filter subexpressions across the batch,
+//! it must not change what any member computes or is charged. So every
+//! output, every Table 5/6 metric and the shared-scan counter story must
+//! be identical to executing the members one at a time, at every
+//! shard-pool parallelism; and under concurrent DML every member of one
+//! batch must observe the same committed snapshot per relation.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier};
+
+use pimdb::api::{Pimdb, Prepared, QueryResult, QuerySource};
+use pimdb::config::SystemConfig;
+use pimdb::db::dbgen::Database;
+use pimdb::exec::metrics::QueryMetrics;
+use pimdb::query::tpch;
+
+fn db() -> Database {
+    Database::generate(0.001, 11)
+}
+
+fn handle_with(parallelism: usize) -> Pimdb {
+    let cfg = SystemConfig {
+        parallelism,
+        ..SystemConfig::default()
+    };
+    Pimdb::open(cfg, db()).unwrap()
+}
+
+/// Ad-hoc PQL members riding along with the 19 TPC-H queries: filter
+/// prefixes repeat within the set (cross-member sharing) and span two
+/// relations (per-relation fusion grouping).
+const PQL: &[&str] = &[
+    "from supplier | filter s_suppkey < 50 | aggregate count() as n",
+    "from supplier | filter s_suppkey < 50 | aggregate sum(s_acctbal) as s",
+    "from supplier | filter s_acctbal > 100.00 | aggregate count() as n",
+    "from part | filter p_size < 25 | aggregate count() as n",
+    "from part | filter p_size < 25 | aggregate sum(p_retailprice) as v",
+];
+
+/// Every simulated metric must be bit-identical (floats compare by bit
+/// pattern, not tolerance) — both sides run through `Pimdb`, so even
+/// `plan_cache` must agree.
+fn assert_metrics_identical(am: &QueryMetrics, bm: &QueryMetrics, ctx: &str) {
+    assert_eq!(am.cycles, bm.cycles, "{ctx}: cycle counts");
+    assert_eq!(am.inter_cells, bm.inter_cells, "{ctx}: inter cells");
+    assert_eq!(am.opt, bm.opt, "{ctx}: optimizer summary");
+    assert_eq!(am.llc_misses, bm.llc_misses, "{ctx}: llc misses");
+    assert_eq!(am.pim_energy, bm.pim_energy, "{ctx}: pim energy ledger");
+    assert_eq!(am.plan_cache, bm.plan_cache, "{ctx}: plan cache counters");
+    for (x, y, what) in [
+        (am.exec_time_s, bm.exec_time_s, "exec_time_s"),
+        (am.pim_time_s, bm.pim_time_s, "pim_time_s"),
+        (am.read_time_s, bm.read_time_s, "read_time_s"),
+        (am.other_time_s, bm.other_time_s, "other_time_s"),
+        (am.host_energy_pj, bm.host_energy_pj, "host_energy_pj"),
+        (am.dram_energy_pj, bm.dram_energy_pj, "dram_energy_pj"),
+        (am.peak_chip_w, bm.peak_chip_w, "peak_chip_w"),
+        (am.avg_chip_w, bm.avg_chip_w, "avg_chip_w"),
+        (
+            am.theoretical_chip_w,
+            bm.theoretical_chip_w,
+            "theoretical_chip_w",
+        ),
+        (am.ops_per_cell, bm.ops_per_cell, "ops_per_cell"),
+        (
+            am.required_endurance_10yr,
+            bm.required_endurance_10yr,
+            "required_endurance_10yr",
+        ),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: {what}");
+    }
+    for i in 0..5 {
+        assert_eq!(
+            am.endurance_breakdown[i].to_bits(),
+            bm.endurance_breakdown[i].to_bits(),
+            "{ctx}: endurance_breakdown[{i}]"
+        );
+    }
+}
+
+/// The full 19-query TPC-H sweep plus the PQL set, one `execute_batch`
+/// call vs the member-by-member serial run on a twin handle.
+fn batch_matches_serial(parallelism: usize) {
+    let serial = handle_with(parallelism);
+    let batched = handle_with(parallelism);
+
+    let queries = tpch::all_queries();
+    let mut sp: Vec<Prepared<'_>> = Vec::new();
+    let mut bp: Vec<Prepared<'_>> = Vec::new();
+    for q in &queries {
+        sp.push(serial.prepare(QuerySource::Ast(q)).unwrap());
+        bp.push(batched.prepare(QuerySource::Ast(q)).unwrap());
+    }
+    for src in PQL {
+        sp.push(serial.prepare(*src).unwrap());
+        bp.push(batched.prepare(*src).unwrap());
+    }
+
+    let want: Vec<QueryResult> = sp.iter().map(|p| p.execute().unwrap()).collect();
+    let refs: Vec<&Prepared<'_>> = bp.iter().collect();
+    let got = batched.execute_batch(&refs).unwrap();
+    assert_eq!(want.len(), got.len());
+    for (w, g) in want.iter().zip(&got) {
+        let ctx = w.query_name();
+        assert_eq!(w.query_name(), g.query_name(), "{ctx}: name");
+        assert_eq!(
+            w.raw_report().output,
+            g.raw_report().output,
+            "{ctx}: functional output"
+        );
+        assert_metrics_identical(w.metrics(), g.metrics(), ctx);
+    }
+    // the batch tells the identical shared-scan counter story, and the
+    // sweep actually exercised cross-member sharing
+    assert_eq!(
+        serial.shared_scan_counters(),
+        batched.shared_scan_counters(),
+        "shared-scan counters diverged from the serial twin"
+    );
+    assert!(
+        batched.shared_scan_counters().hits > 0,
+        "expected shared prefixes in the sweep"
+    );
+
+    // a second batch over a warm cache replays every shareable mask and
+    // still matches the serial twin's re-run
+    let want2: Vec<QueryResult> = sp.iter().map(|p| p.execute().unwrap()).collect();
+    let got2 = batched.execute_batch(&refs).unwrap();
+    for (w, g) in want2.iter().zip(&got2) {
+        assert_eq!(w.raw_report().output, g.raw_report().output, "warm re-run");
+    }
+    assert_eq!(
+        serial.shared_scan_counters(),
+        batched.shared_scan_counters(),
+        "warm-cache counters diverged"
+    );
+}
+
+#[test]
+fn batch_matches_serial_inline_pool() {
+    batch_matches_serial(1);
+}
+
+#[test]
+fn batch_matches_serial_two_workers() {
+    batch_matches_serial(2);
+}
+
+#[test]
+fn batch_matches_serial_eight_workers() {
+    batch_matches_serial(8);
+}
+
+/// Every member of one batch pins the same snapshot per relation: under
+/// a concurrent writer, a probe repeated within one batch always agrees
+/// with itself, and the batch's (sum, count) pair is exactly one
+/// committed oracle state — never a torn mixture — observed in monotone
+/// commit order.
+#[test]
+fn batch_members_share_one_snapshot_under_concurrent_dml() {
+    let sum_probe = "from supplier | filter s_suppkey >= 1 | aggregate sum(s_acctbal) as s";
+    let count_probe = "from supplier | filter s_suppkey >= 1 | aggregate count() as n";
+    let keys: Vec<u64> = (1..=8).collect();
+    let delete_stmt = |k: u64| format!("delete from supplier where s_suppkey == {k}");
+
+    // oracle chain of (sum, count) outputs after each committed delete
+    let oracle = handle_with(2);
+    let chain_at = |h: &Pimdb| {
+        (
+            h.prepare(sum_probe)
+                .unwrap()
+                .execute()
+                .unwrap()
+                .raw_report()
+                .output
+                .clone(),
+            h.prepare(count_probe)
+                .unwrap()
+                .execute()
+                .unwrap()
+                .raw_report()
+                .output
+                .clone(),
+        )
+    };
+    let mut chain = vec![chain_at(&oracle)];
+    for &k in &keys {
+        let r = oracle.execute_dml(delete_stmt(k).as_str()).unwrap();
+        assert_eq!(r.rows_affected, 1, "oracle delete of key {k}");
+        chain.push(chain_at(&oracle));
+    }
+
+    let handle = Arc::new(handle_with(2));
+    let p_sum = handle.prepare(sum_probe).unwrap();
+    let p_count = handle.prepare(count_probe).unwrap();
+    let done = AtomicBool::new(false);
+    let start = Barrier::new(2);
+    std::thread::scope(|s| {
+        let reader = s.spawn(|| {
+            start.wait();
+            let mut last = 0usize;
+            loop {
+                let stop = done.load(Ordering::Acquire);
+                let batch = [&p_sum, &p_count, &p_sum];
+                let r = handle.execute_batch(&batch).unwrap();
+                // one snapshot per relation per batch: the repeated
+                // member agrees with itself...
+                assert_eq!(
+                    r[0].raw_report().output,
+                    r[2].raw_report().output,
+                    "repeated member diverged within one batch"
+                );
+                // ...and the pair is exactly one committed chain state
+                let state = (
+                    r[0].raw_report().output.clone(),
+                    r[1].raw_report().output.clone(),
+                );
+                let idx = chain
+                    .iter()
+                    .position(|c| *c == state)
+                    .expect("batch observed a torn or off-chain state");
+                assert!(idx >= last, "chain ran backwards: {last} -> {idx}");
+                last = idx;
+                if stop {
+                    break;
+                }
+            }
+        });
+        start.wait();
+        for &k in &keys {
+            let r = handle.execute_dml(delete_stmt(k).as_str()).unwrap();
+            assert_eq!(r.rows_affected, 1, "stress delete of key {k}");
+        }
+        done.store(true, Ordering::Release);
+        reader.join().unwrap();
+    });
+
+    // the final batch lands on the end of the chain
+    let r = handle.execute_batch(&[&p_sum, &p_count]).unwrap();
+    let state = (
+        r[0].raw_report().output.clone(),
+        r[1].raw_report().output.clone(),
+    );
+    assert_eq!(state, chain[keys.len()]);
+}

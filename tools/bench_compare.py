@@ -1,0 +1,135 @@
+#!/usr/bin/env python3
+"""Perf-trajectory gate over the committed BENCH_*.json files.
+
+The repo commits one BENCH_<n>.json per perf-bearing PR
+(tools/bench_capture.sh). Until now CI only parse-checked them, so the
+19-query-sweep trajectory could silently regress. This tool compares the
+newest capture against the *best* prior value of every same-named entry
+and fails on a >10% regression.
+
+Gating policy: entries whose name contains "sweep" (the all-19 TPC-H
+sweep rows, the whole point of the trajectory) gate the build; all other
+entries — e.g. the kernel/* python-mirror microbenchmarks, whose
+wall-clock jitters with the capture host — are compared advisorily and
+only print. Projection entries (a "claim" without a numeric metric,
+committed when the capture host had no Rust toolchain) are skipped.
+
+Usage: python3 tools/bench_compare.py [--tolerance 0.10] [--strict]
+  --strict   gate every entry, not just sweep entries
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+# metric key -> direction ("lower" = smaller is better)
+METRICS = {
+    "ms_per_iter": "lower",
+    "ms": "lower",
+    "wall_ms": "lower",
+    "wall_s": "lower",
+    "p50_ms": "lower",
+    "p99_ms": "lower",
+    "ns_per_row": "lower",
+    "cycles": "lower",
+    "cycles_total": "lower",
+    "scan_steps": "lower",
+    "instructions": "lower",
+    "ratio": "higher",
+    "speedup": "higher",
+    "qps": "higher",
+    "rows_per_s": "higher",
+}
+
+
+def load_captures(root: str):
+    caps = []
+    for path in glob.glob(os.path.join(root, "BENCH_*.json")):
+        m = re.fullmatch(r"BENCH_(\d+)\.json", os.path.basename(path))
+        if not m:
+            continue
+        with open(path) as f:
+            doc = json.load(f)
+        caps.append((int(m.group(1)), os.path.basename(path), doc))
+    caps.sort()
+    return caps
+
+
+def numeric_metrics(entry: dict):
+    for key, direction in METRICS.items():
+        v = entry.get(key)
+        if isinstance(v, (int, float)) and not isinstance(v, bool):
+            yield key, direction, float(v)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="allowed relative regression (default 0.10)")
+    ap.add_argument("--strict", action="store_true",
+                    help="gate every entry, not just sweep entries")
+    ap.add_argument("--root", default=os.path.join(os.path.dirname(__file__), ".."))
+    args = ap.parse_args()
+
+    caps = load_captures(args.root)
+    if len(caps) < 2:
+        print(f"bench_compare: {len(caps)} capture(s) committed, nothing to compare")
+        return 0
+
+    newest_issue, newest_name, newest = caps[-1]
+    # best prior value per (entry name, metric key) across all older files
+    best: dict = {}
+    for issue, fname, doc in caps[:-1]:
+        for entry in doc.get("entries", []):
+            for key, direction, v in numeric_metrics(entry):
+                k = (entry["name"], key)
+                if k not in best:
+                    best[k] = (v, fname)
+                else:
+                    b, _ = best[k]
+                    if (direction == "lower") == (v < b):
+                        best[k] = (v, fname)
+
+    failures = []
+    compared = 0
+    for entry in newest.get("entries", []):
+        gate = args.strict or "sweep" in entry["name"]
+        for key, direction, v in numeric_metrics(entry):
+            prior = best.get((entry["name"], key))
+            if prior is None:
+                continue
+            b, bfname = prior
+            compared += 1
+            if direction == "lower":
+                regressed = b > 0 and v > b * (1 + args.tolerance)
+                delta = (v - b) / b if b else 0.0
+            else:
+                regressed = v < b * (1 - args.tolerance)
+                delta = (b - v) / b if b else 0.0
+            tag = "GATED" if gate else "advisory"
+            verdict = "REGRESSED" if regressed else "ok"
+            print(f"[{tag}] {entry['name']}.{key}: {v:g} vs best prior "
+                  f"{b:g} ({bfname}) -> {verdict} ({delta:+.1%} worse)"
+                  if regressed else
+                  f"[{tag}] {entry['name']}.{key}: {v:g} vs best prior "
+                  f"{b:g} ({bfname}) -> ok")
+            if regressed and gate:
+                failures.append(f"{entry['name']}.{key}: {v:g} is "
+                                f"{delta:+.1%} worse than {b:g} ({bfname})")
+
+    print(f"bench_compare: {newest_name} vs {len(caps) - 1} prior capture(s), "
+          f"{compared} metric(s) compared, {len(failures)} gated regression(s)")
+    if failures:
+        for f in failures:
+            print(f"::error::perf regression: {f}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

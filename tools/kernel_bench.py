@@ -73,15 +73,76 @@ def time_layout(words: int, bits: int) -> float:
     return dt / REPS
 
 
+def scan_prefix(cols: list[list[int]], valid: list[int], imm: int,
+                words: int, mask: int) -> list[int]:
+    """One filter prefix at word granularity: a bit-serial less-than
+    compare chain over the attribute's planes (exec_instr's cmp_imm), an
+    AND with the valid plane — the shape the fusion pass shares."""
+    eq = [mask] * words
+    lt = [0] * words
+    for i in reversed(range(len(cols))):
+        p = cols[i]
+        if (imm >> i) & 1:
+            for w in range(words):
+                lt[w] |= eq[w] & ~p[w] & mask
+                eq[w] &= p[w]
+        else:
+            for w in range(words):
+                eq[w] &= ~p[w] & mask
+    return [lt[w] & valid[w] for w in range(words)]
+
+
+BATCH = 8  # members per batch
+DISTINCT = 4  # distinct filter prefixes among them (2-way sharing)
+
+
+def time_batch_scan(fused: bool) -> float:
+    """An 8-member batch whose members repeat 4 distinct filter prefixes
+    over one attribute. Serial runs every member's prefix; fused runs
+    each distinct prefix once (the cross-query CSE of
+    rust/src/query/opt/fusion.rs dedups the whole prefix), so the ratio
+    is the kernel-level scan-work reduction at this sharing factor."""
+    words, bits = 16, 64
+    mask = (1 << bits) - 1
+    cols = make_planes(words, bits, 0xC0FFEE)[:PLANES]
+    valid = make_planes(words, bits, 0x5EED)[0]
+    imms = [(q % DISTINCT) * 977 + 13 for q in range(BATCH)]
+    todo = sorted(set(imms)) if fused else imms
+    # a pass is ~100x cheaper than the layout sweeps; more reps for a
+    # stable ratio
+    reps = REPS * 8
+
+    def one_pass() -> int:
+        acc = 0
+        for imm in todo:
+            out = scan_prefix(cols, valid, imm, words, mask)
+            acc ^= out[0]
+        return acc
+
+    one_pass()  # warmup
+    t0 = time.perf_counter()
+    sink = 0
+    for _ in range(reps):
+        sink ^= one_pass()
+    dt = time.perf_counter() - t0
+    assert sink is not None
+    return dt / reps
+
+
 def main() -> None:
     as_json = "--json" in sys.argv[1:]
     t32 = time_layout(words=32, bits=32)
     t64 = time_layout(words=16, bits=64)
     ratio = t32 / t64
+    ts = time_batch_scan(fused=False)
+    tf = time_batch_scan(fused=True)
     rows = [
         {"name": "kernel/u32x32-layout", "ms_per_iter": round(t32 * 1e3, 3)},
         {"name": "kernel/u64x16-layout", "ms_per_iter": round(t64 * 1e3, 3)},
         {"name": "kernel/u64-over-u32-speedup", "ratio": round(ratio, 2)},
+        {"name": "kernel/scan-serial-8q", "ms_per_iter": round(ts * 1e3, 3)},
+        {"name": "kernel/scan-fused-8q", "ms_per_iter": round(tf * 1e3, 3)},
+        {"name": "kernel/fused-over-serial-speedup", "ratio": round(ts / tf, 2)},
     ]
     for r in rows:
         if as_json:
