@@ -1,0 +1,271 @@
+"""Python mirror of the WAL record codec and torn-tail truncation
+decision in ``rust/src/storage/wal.rs``.
+
+Same discipline as ``dmlmirror.py`` / ``epochmirror.py``: the authoring
+environment has no Rust toolchain, so the recovery decision procedure is
+written here first, fuzz-validated (``tests/test_walmirror.py``), and
+ported line by line to Rust. ``golden_wal_digest()`` builds a scripted
+WAL image, scans it truncated at every record boundary plus off-boundary
+cuts plus two bit-flipped variants, and folds the identical observations
+into one constant pinned on both sides (``GOLDEN_WAL_DIGEST`` here,
+asserted in the Rust unit tests of ``wal.rs``) — so a one-sided change
+to the frame layout, the payload codec, *or* the torn-vs-corrupt rule
+breaks exactly one of the two suites.
+
+The rule being pinned: a frame cut short by a crash (fewer than 12 bytes
+left, or a declared length past EOF) is a **torn tail**, silently
+truncated at the last record boundary; a *complete* frame whose checksum
+does not verify is **corruption** and refuses the whole file. Pure
+truncation can only produce the former, so crash recovery always lands
+on a batch boundary; bit rot always produces the latter.
+
+Run directly to print the golden digest::
+
+    python3 python/walmirror.py
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from dmlmirror import FNV_OFFSET, FNV_PRIME, MASK64, _fnv1a_fold
+
+#: First 8 bytes of every WAL segment (mirror of ``WAL_MAGIC``).
+WAL_MAGIC = b"PIMWAL01"
+#: Header bytes: magic + schema/geometry fingerprint.
+WAL_HEADER = 16
+#: Frame prefix bytes: u32 payload length + u64 payload checksum.
+FRAME_PREFIX = 12
+
+#: Cross-language pin: ``golden_wal_digest()`` in both languages.
+GOLDEN_WAL_DIGEST = 0xD4826F2D77DEBD67
+
+
+class CorruptError(ValueError):
+    """Mirror of ``PimdbError::Corrupt`` — on-disk state failed
+    validation (checksum mismatch, mangled counts, trailing bytes)."""
+
+
+def fnv1a(data: bytes) -> int:
+    """FNV-1a 64 over a byte stream (mirror of ``api::cache::fnv1a``)."""
+    state = FNV_OFFSET
+    for byte in data:
+        state = ((state ^ byte) * FNV_PRIME) & MASK64
+    return state
+
+
+@dataclass
+class WalRecord:
+    """One committed DML batch, as logged (mirror of the Rust struct)."""
+
+    rel_tag: int
+    epoch: int
+    #: ``(crossbar row, cell writes)`` pairs — the reader-wear profile
+    #: folded into the committed map at batch begin.
+    fold: list = field(default_factory=list)
+    #: Canonical ``dml_bytes`` per statement, in batch order.
+    stmts: list = field(default_factory=list)
+
+    def encode_payload(self) -> bytes:
+        b = bytearray()
+        b.append(self.rel_tag)
+        b += self.epoch.to_bytes(8, "little")
+        b += len(self.fold).to_bytes(4, "little")
+        for idx, wear in self.fold:
+            b += idx.to_bytes(4, "little")
+            b += wear.to_bytes(8, "little")
+        b += len(self.stmts).to_bytes(4, "little")
+        for s in self.stmts:
+            b += len(s).to_bytes(4, "little")
+            b += s
+        return bytes(b)
+
+    def encode_frame(self) -> bytes:
+        payload = self.encode_payload()
+        return (
+            len(payload).to_bytes(4, "little")
+            + fnv1a(payload).to_bytes(8, "little")
+            + payload
+        )
+
+
+class _De:
+    """Bounded little-endian reader over untrusted bytes (mirror of
+    ``De``): every overrun raises :class:`CorruptError`, never an
+    ``IndexError``."""
+
+    def __init__(self, buf: bytes, what: str):
+        self.buf = buf
+        self.pos = 0
+        self.what = what
+
+    def _corrupt(self, why: str) -> CorruptError:
+        return CorruptError(f"{self.what}: {why} at byte {self.pos}")
+
+    def take(self, n: int) -> bytes:
+        if len(self.buf) - self.pos < n:
+            raise self._corrupt("truncated field")
+        s = self.buf[self.pos : self.pos + n]
+        self.pos += n
+        return s
+
+    def u8(self) -> int:
+        return self.take(1)[0]
+
+    def u32(self) -> int:
+        return int.from_bytes(self.take(4), "little")
+
+    def u64(self) -> int:
+        return int.from_bytes(self.take(8), "little")
+
+    def count(self, min_elem_bytes: int) -> int:
+        n = self.u32()
+        if n * min_elem_bytes > len(self.buf) - self.pos:
+            raise self._corrupt("element count exceeds remaining bytes")
+        return n
+
+    def bytes_(self) -> bytes:
+        return self.take(self.count(1))
+
+    def finish(self) -> None:
+        if self.pos != len(self.buf):
+            raise self._corrupt("trailing bytes after decode")
+
+
+def decode_payload(payload: bytes) -> WalRecord:
+    """Decode a checksum-verified payload (mirror of
+    ``WalRecord::decode_payload``)."""
+    d = _De(payload, "wal record")
+    rel_tag = d.u8()
+    epoch = d.u64()
+    fold = [(d.u32(), d.u64()) for _ in range(d.count(12))]
+    stmts = [d.bytes_() for _ in range(d.count(4))]
+    d.finish()
+    return WalRecord(rel_tag, epoch, fold, stmts)
+
+
+@dataclass
+class WalScan:
+    """Mirror of the Rust ``WalScan`` result."""
+
+    records: list
+    valid_len: int
+    torn: bool
+
+
+def scan_records(buf: bytes, fingerprint: int) -> WalScan:
+    """THE recovery decision procedure — mirrors
+    ``wal::scan_records`` line by line. Incomplete tail frames report
+    torn; complete frames failing checksum or payload decode raise
+    :class:`CorruptError`; a wrong magic or fingerprint refuses the
+    whole file. A file shorter than its header is torn at offset 0."""
+    if len(buf) < WAL_HEADER:
+        return WalScan([], 0, True)
+    if buf[:8] != WAL_MAGIC:
+        raise CorruptError("wal header: bad magic")
+    fp = int.from_bytes(buf[8:16], "little")
+    if fp != fingerprint:
+        raise CorruptError(
+            f"wal header: fingerprint {fp:#018x} does not match this "
+            f"schema/geometry ({fingerprint:#018x})"
+        )
+    records = []
+    off = WAL_HEADER
+    torn = False
+    while off < len(buf):
+        rem = len(buf) - off
+        if rem < FRAME_PREFIX:
+            torn = True
+            break
+        length = int.from_bytes(buf[off : off + 4], "little")
+        if rem - FRAME_PREFIX < length:
+            torn = True
+            break
+        crc = int.from_bytes(buf[off + 4 : off + 12], "little")
+        payload = buf[off + FRAME_PREFIX : off + FRAME_PREFIX + length]
+        if fnv1a(payload) != crc:
+            raise CorruptError(
+                f"wal record {len(records)}: checksum mismatch at byte {off}"
+            )
+        records.append(decode_payload(payload))
+        off += FRAME_PREFIX + length
+    return WalScan(records, off if torn else len(buf), torn)
+
+
+def golden_wal_digest() -> int:
+    """Mirror of ``wal::golden_wal_digest()``: the scripted WAL image,
+    the crash-point sweep, the two bit-flip probes, and the observation
+    fold — identical on both sides, one constant."""
+    fingerprint = 0x51AE77C0DE01F00D
+    state_x = [9]
+
+    def nxt() -> int:
+        state_x[0] = (
+            state_x[0] * 6364136223846793005 + 1442695040888963407
+        ) & MASK64
+        return state_x[0]
+
+    buf = bytearray()
+    buf += WAL_MAGIC
+    buf += fingerprint.to_bytes(8, "little")
+    boundaries = [0, WAL_HEADER]
+    for i in range(5):
+        rel_tag = (nxt() >> 4) % 6
+        fold_n = nxt() % 4
+        fold = [((nxt() >> 8) % 1024, nxt() % 100 + 1) for _ in range(fold_n)]
+        stmt_n = nxt() % 3 + 1
+        stmts = []
+        for _ in range(stmt_n):
+            length = nxt() % 40
+            stmts.append(bytes((nxt() >> 16) & 0xFF for _ in range(length)))
+        rec = WalRecord(rel_tag, i + 1, fold, stmts)
+        buf += rec.encode_frame()
+        boundaries.append(len(buf))
+    cuts = []
+    for b in boundaries:
+        cuts.append(b)
+        if b > 0:
+            cuts.append(b - 1)
+        if b + 5 <= len(buf):
+            cuts.append(b + 5)
+
+    state = FNV_OFFSET
+
+    def observe(state: int, data: bytes) -> int:
+        try:
+            scan = scan_records(bytes(data), fingerprint)
+        except CorruptError:
+            return _fnv1a_fold(state, 0xDEAD)
+        state = _fnv1a_fold(state, 1)
+        state = _fnv1a_fold(state, len(scan.records))
+        state = _fnv1a_fold(state, scan.valid_len)
+        state = _fnv1a_fold(state, int(scan.torn))
+        for rec in scan.records:
+            state = _fnv1a_fold(state, rec.rel_tag)
+            state = _fnv1a_fold(state, rec.epoch)
+            state = _fnv1a_fold(state, len(rec.fold))
+            for idx, wear in rec.fold:
+                state = _fnv1a_fold(state, idx)
+                state = _fnv1a_fold(state, wear)
+            state = _fnv1a_fold(state, len(rec.stmts))
+            for s in rec.stmts:
+                state = _fnv1a_fold(state, fnv1a(s))
+        return state
+
+    for t in cuts:
+        state = observe(state, buf[:t])
+    # a bit flip inside the first record's complete payload must be
+    # refused as corruption, not truncated as a torn tail
+    flipped = bytearray(buf)
+    flipped[WAL_HEADER + FRAME_PREFIX + 2] ^= 0x04
+    state = observe(state, flipped)
+    # ...and a flip in a frame length field must never surface a record
+    # that was not cleanly framed
+    flipped_len = bytearray(buf)
+    flipped_len[WAL_HEADER] ^= 0x80
+    state = observe(state, flipped_len)
+    return state
+
+
+if __name__ == "__main__":
+    print(hex(golden_wal_digest()))

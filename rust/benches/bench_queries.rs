@@ -7,15 +7,18 @@
 //! serving-path ratio (plan cache on vs. cleared every iteration), a
 //! mixed 90/10 query/DML round measures the HTAP serving rate, and an
 //! open-loop 90/10 section measures p50/p99 serving tail latency under
-//! concurrent DML against a lock-per-relation baseline (emitted as
-//! `BENCH {...}` json lines).
+//! concurrent DML against a lock-per-relation baseline and against a
+//! durable (write-ahead-logged, group-commit fsync) twin, with the
+//! recovery replay and checkpoint of the directory that run leaves
+//! behind priced as `durability/*` entries (emitted as `BENCH {...}`
+//! json lines).
 
 #[path = "benchkit.rs"]
 mod benchkit;
 
 use benchkit::bench;
 use pimdb::api::{Pimdb, QuerySource};
-use pimdb::config::SystemConfig;
+use pimdb::config::{DurabilityConfig, FsyncPolicy, SystemConfig};
 use pimdb::db::dbgen::Database;
 use pimdb::exec::baseline;
 use pimdb::query::opt::OptLevel;
@@ -260,8 +263,17 @@ fn main() {
         const N_READERS: usize = 4;
         const PER_READER: usize = 120;
 
-        let run = |locked: bool| -> (f64, f64, f64) {
-            let handle = Pimdb::open(cfg_srv.clone(), db.clone()).unwrap();
+        let run = |locked: bool, data_dir: Option<&std::path::Path>| -> (f64, f64, f64) {
+            let handle = match data_dir {
+                // durable twin: same workload, every committed batch
+                // write-ahead logged with one fdatasync (GroupCommit)
+                Some(dir) => {
+                    let mut dcfg = DurabilityConfig::new(dir);
+                    dcfg.fsync = FsyncPolicy::GroupCommit;
+                    Pimdb::open_durable(cfg_srv.clone(), dcfg).unwrap()
+                }
+                None => Pimdb::open(cfg_srv.clone(), db.clone()).unwrap(),
+            };
             let q = handle.prepare(TEMPLATE).unwrap();
             let upd = handle
                 .prepare_dml("update lineitem set l_discount = 4 where l_quantity == 25")
@@ -340,18 +352,57 @@ fn main() {
             )
         };
 
-        let (p50, p99, qps) = run(false);
+        let (p50, p99, qps) = run(false, None);
         println!(
             "BENCH {{\"name\":\"serving/open-loop-90-10\",\"p50_ms\":{p50:.3},\
              \"p99_ms\":{p99:.3},\"qps\":{qps:.1},\"dml_share\":0.1,\"sim_sf\":{}}}",
             cfg.sim_sf
         );
-        let (p50, p99, qps) = run(true);
+        let (p50, p99, qps) = run(true, None);
         println!(
             "BENCH {{\"name\":\"serving/open-loop-90-10-locked\",\"p50_ms\":{p50:.3},\
              \"p99_ms\":{p99:.3},\"qps\":{qps:.1},\"dml_share\":0.1,\"sim_sf\":{}}}",
             cfg.sim_sf
         );
+
+        // durable twin of the open-loop pair: identical schedule through
+        // `open_durable`, so the trajectory records what write-ahead
+        // logging costs the serving tail. The directory the run leaves
+        // behind then prices recovery itself: a reopen replays every
+        // logged batch through the normal DML path, and a checkpoint of
+        // the recovered state bounds future replay.
+        let dir = std::env::temp_dir()
+            .join(format!("pimdb-bench-durable-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let (p50, p99, qps) = run(false, Some(&dir));
+        println!(
+            "BENCH {{\"name\":\"serving/open-loop-90-10-durable\",\
+             \"p50_ms\":{p50:.3},\"p99_ms\":{p99:.3},\"qps\":{qps:.1},\
+             \"dml_share\":0.1,\"fsync\":\"group-commit\",\"sim_sf\":{}}}",
+            cfg.sim_sf
+        );
+        {
+            let mut dcfg = DurabilityConfig::new(&dir);
+            dcfg.fsync = FsyncPolicy::GroupCommit;
+            let t0 = Instant::now();
+            let handle = Pimdb::open_durable(cfg_srv.clone(), dcfg).unwrap();
+            let wall = t0.elapsed().as_secs_f64() * 1e3;
+            let stats = handle.durability_stats().unwrap();
+            println!(
+                "BENCH {{\"name\":\"durability/recovery\",\"wall_ms\":{wall:.1},\
+                 \"wal_records_replayed\":{},\"sim_sf\":{}}}",
+                stats.wal_records_replayed, cfg.sim_sf
+            );
+            let t0 = Instant::now();
+            let bytes = handle.checkpoint().unwrap();
+            let wall = t0.elapsed().as_secs_f64() * 1e3;
+            println!(
+                "BENCH {{\"name\":\"durability/checkpoint\",\"wall_ms\":{wall:.2},\
+                 \"checkpoint_bytes\":{bytes},\"sim_sf\":{}}}",
+                cfg.sim_sf
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     // batched multi-query serving path: the 19-query suite as prepared

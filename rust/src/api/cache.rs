@@ -36,13 +36,18 @@ use crate::query::compiler::{CompiledDml, CompiledRelQuery};
 use crate::query::opt::OptLevel;
 
 /// Serialization format version (first byte of every canonical stream).
-const FORMAT_VERSION: u8 = 1;
+/// The WAL record decoder ([`crate::storage::wal`]) checks the same byte
+/// when it inverts [`dml_bytes`] at recovery time.
+pub(crate) const FORMAT_VERSION: u8 = 1;
 
 const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
 const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
 
-/// FNV-1a 64-bit digest of a canonical byte stream.
-fn fnv1a(bs: &[u8]) -> u64 {
+/// FNV-1a 64-bit digest of a canonical byte stream. Shared with the
+/// durability layer ([`crate::storage`]): WAL record checksums and
+/// checkpoint whole-file digests speak the same function the plan-cache
+/// keys and the Python mirrors pin.
+pub(crate) fn fnv1a(bs: &[u8]) -> u64 {
     let mut h = FNV_OFFSET;
     for &b in bs {
         h ^= b as u64;

@@ -88,7 +88,7 @@ use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 
-use crate::config::SystemConfig;
+use crate::config::{DurabilityConfig, SystemConfig};
 use crate::db::dbgen::Database;
 use crate::db::freerows::{EpochRowMap, FreeRowMap};
 use crate::db::layout::DbLayout;
@@ -105,11 +105,16 @@ use crate::query::compiler::{compile_dml, CompileError, Compiler};
 use crate::query::lang;
 use crate::query::opt::{self, fusion, sharedscan, OptStats};
 use crate::query::tpch;
+use crate::storage::recover;
+use crate::storage::snapshot::{self, CkptRel, CkptRelSnapshot};
+use crate::storage::wal::{self, WalRecord, WalWriter};
+use crate::storage::Durability;
 use crate::util::bits::{WORDS, XBAR_ROWS};
 
 use cache::{CachedDmlPlan, CachedPlan, PlanCache};
 
 pub use crate::exec::metrics::DmlResult;
+pub use crate::storage::DurabilityStats;
 pub use crate::exec::pimdb::EngineKind;
 pub use rows::{Row, Rows, Value};
 
@@ -197,6 +202,9 @@ struct DmlRequest {
     plan: Arc<CachedDmlPlan>,
     engine_kind: EngineKind,
     slot: Arc<DmlSlot>,
+    /// Canonical AST bytes ([`cache::dml_bytes`]) for the batch's WAL
+    /// record; populated only on durable handles.
+    bytes: Option<Vec<u8>>,
 }
 
 /// Per-relation concurrency structure. Every lock is held briefly
@@ -348,6 +356,9 @@ pub struct Pimdb {
     pool: ShardPool,
     cache: PlanCache,
     scan_stats: ScanStats,
+    /// Write-ahead log + checkpoint machinery; `None` on in-memory
+    /// handles ([`Pimdb::open`]).
+    durability: Option<Durability>,
 }
 
 // The service-handle contract: `Pimdb` (and everything borrowed from it)
@@ -369,6 +380,60 @@ impl Pimdb {
     /// Crossbar states materialize lazily, per relation, on first
     /// execution.
     pub fn open(cfg: SystemConfig, db: Database) -> Result<Pimdb, PimdbError> {
+        Pimdb::open_with(cfg, db, None)
+    }
+
+    /// Open a *durable* handle rooted at `dcfg.data_dir`: initialize the
+    /// directory on first use (dbgen at `dcfg.seed`, a base image, an
+    /// empty generation-0 checkpoint and WAL segment), or recover it —
+    /// load the newest digest-valid checkpoint, truncate a torn WAL tail
+    /// at the last record boundary, and replay the logged epoch suffix
+    /// through the normal DML execution path. After recovery the handle
+    /// is bit-identical to one that never closed: same crossbar planes,
+    /// same liveness, same committed wear, same epochs.
+    ///
+    /// Every subsequent committed DML batch appends one WAL record
+    /// *before* publishing (honouring [`DurabilityConfig::fsync`]);
+    /// [`Pimdb::checkpoint`] bounds replay work and
+    /// [`Pimdb::durability_stats`] reports what the layer has done.
+    ///
+    /// Corrupt on-disk state (checksum or digest mismatch, mangled
+    /// records) is refused with [`PimdbError::Corrupt`]; operating-system
+    /// failures surface as [`PimdbError::Io`]; a `sim_sf` mismatch with
+    /// the directory's base image is [`PimdbError::Config`].
+    ///
+    /// ```no_run
+    /// use pimdb::api::Pimdb;
+    /// use pimdb::config::{DurabilityConfig, SystemConfig};
+    ///
+    /// let dcfg = DurabilityConfig::new("/var/lib/pimdb");
+    /// let db = Pimdb::open_durable(SystemConfig::default(), dcfg)?;
+    /// db.execute_dml("delete from supplier where s_suppkey <= 3")?;
+    /// db.checkpoint()?; // bound replay work; fsync already made it durable
+    /// # Ok::<(), pimdb::error::PimdbError>(())
+    /// ```
+    pub fn open_durable(cfg: SystemConfig, dcfg: DurabilityConfig) -> Result<Pimdb, PimdbError> {
+        let fingerprint = cache::plan_fingerprint(&cfg);
+        let prepared = recover::prepare(&cfg, &dcfg, fingerprint)?;
+        let durability = Durability::new(
+            dcfg,
+            fingerprint,
+            prepared.writer,
+            prepared.torn_tails,
+            prepared.checkpoints_skipped,
+            prepared.last_checkpoint_epoch,
+        );
+        let handle = Pimdb::open_with(cfg, prepared.db, Some(durability))?;
+        handle.install_recovered(prepared.ckpt)?;
+        handle.replay(prepared.wal_batches)?;
+        Ok(handle)
+    }
+
+    fn open_with(
+        cfg: SystemConfig,
+        db: Database,
+        durability: Option<Durability>,
+    ) -> Result<Pimdb, PimdbError> {
         // An explicit admission cap below the worker count can never
         // admit enough shard jobs to keep the executor busy: workers
         // past the cap idle forever and one reader's shard fan-out
@@ -411,9 +476,238 @@ impl Pimdb {
             rels,
             cache: PlanCache::new(),
             scan_stats: ScanStats::default(),
+            durability,
             cfg,
             db,
         })
+    }
+
+    /// Install the checkpointed relation states produced by recovery:
+    /// publish each relation's crossbar planes at its checkpointed epoch
+    /// and restore its liveness/wear book. Runs before the handle is
+    /// shared, but takes the normal locks anyway.
+    fn install_recovered(&self, ckpt: Vec<CkptRel>) -> Result<(), PimdbError> {
+        for r in ckpt {
+            let slot = self.slot(r.rel);
+            let epoch = r.epoch;
+            {
+                let mut book = self.lock_book(slot);
+                book.rows = Some(EpochRowMap::restore(
+                    FreeRowMap::restore(r.live, r.wear, XBAR_ROWS),
+                    epoch,
+                ));
+                book.ledger = r.ledger;
+            }
+            *self.lock_published(slot) = Some(Arc::new(RelVersion {
+                epoch,
+                states: Arc::new(r.states),
+            }));
+            slot.epoch_hint.store(epoch, Ordering::Release);
+        }
+        Ok(())
+    }
+
+    /// Replay the WAL suffix produced by recovery. Records at or below a
+    /// relation's checkpointed epoch are skipped (already captured); the
+    /// suffix must be contiguous — an epoch gap means a lost segment and
+    /// refuses the open rather than silently skipping committed batches.
+    fn replay(&self, records: Vec<WalRecord>) -> Result<(), PimdbError> {
+        let mut replayed = 0u64;
+        for record in &records {
+            let rel = record.rel()?;
+            let current = self.relation_epoch(rel);
+            if record.epoch <= current {
+                continue;
+            }
+            if record.epoch != current + 1 {
+                return Err(PimdbError::Corrupt(format!(
+                    "wal replay: {rel:?} at epoch {current} but the next \
+                     record is epoch {} — a log segment is missing",
+                    record.epoch
+                )));
+            }
+            self.replay_batch(rel, record)?;
+            replayed += 1;
+        }
+        if let Some(d) = &self.durability {
+            d.note_replayed(replayed);
+        }
+        Ok(())
+    }
+
+    /// Re-execute one logged batch: decode and compile its canonical DML
+    /// bytes, charge the recorded reader-wear fold profile, run the
+    /// statements through the same `exec_dml_on_states` path the live
+    /// leader used, and commit. Deterministic because group commit is
+    /// serial per relation and the allocator sees the same wear ranking.
+    fn replay_batch(&self, rel: RelId, record: &WalRecord) -> Result<(), PimdbError> {
+        let mut plans = Vec::with_capacity(record.stmts.len());
+        for bytes in &record.stmts {
+            let dml = wal::decode_dml(bytes, self.fingerprint)?;
+            if dml.rel() != rel {
+                return Err(PimdbError::Corrupt(format!(
+                    "wal replay: record tagged {rel:?} carries a statement \
+                     for {:?}",
+                    dml.rel()
+                )));
+            }
+            let plan = self.cache.get_or_compile_dml(bytes.clone(), || {
+                Ok(CachedDmlPlan {
+                    compiled: compile_dml(&dml, self.layout.rel(rel), self.cfg.xbar_cols)?,
+                })
+            })?;
+            plans.push(plan);
+        }
+
+        let slot = self.slot(rel);
+        let version = self.snapshot(rel);
+        let mut pending = {
+            let mut book = self.lock_book(slot);
+            let RelBook { rows, ledger } = &mut *book;
+            let rows = rows.get_or_insert_with(|| {
+                let r = self.db.rel(rel);
+                let capacity = version.states.len() * XBAR_ROWS;
+                let flags: Vec<bool> = (0..r.records).map(|i| r.live(i)).collect();
+                EpochRowMap::new(FreeRowMap::from_flags(&flags, capacity, XBAR_ROWS))
+            });
+            // The recorded fold profile *is* the ledger content the live
+            // batch charged at its begin — replay the charge verbatim and
+            // zero the recovered ledger so committed wear (and therefore
+            // the allocator's row ranking) matches the live handle
+            // bit-for-bit.
+            if !record.fold.is_empty() {
+                let mut dense = vec![0u64; XBAR_ROWS];
+                for &(idx, w) in &record.fold {
+                    let Some(d) = dense.get_mut(idx as usize) else {
+                        return Err(PimdbError::Corrupt(format!(
+                            "wal replay: fold row {idx} is outside the \
+                             crossbar ({XBAR_ROWS} rows)"
+                        )));
+                    };
+                    *d = w;
+                }
+                rows.charge_profile(&dense);
+            }
+            ledger.fill(0);
+            rows.begin_batch()
+        };
+
+        let mut states: Vec<XbarState> = (*version.states).clone();
+        for plan in &plans {
+            session::exec_dml_on_states(
+                &self.cfg,
+                &self.layout,
+                rel,
+                &mut states,
+                &mut pending,
+                &plan.compiled,
+                EngineKind::Native,
+                &self.exec_plan,
+            )
+            .map_err(|e| {
+                PimdbError::Corrupt(format!(
+                    "wal replay: logged batch (epoch {}) failed to \
+                     re-execute: {e}",
+                    record.epoch
+                ))
+            })?;
+        }
+
+        let mut book = self.lock_book(slot);
+        let rows = book.rows.as_mut().expect("created above");
+        rows.commit_batch(pending);
+        let epoch = rows.epoch();
+        drop(book);
+        *self.lock_published(slot) = Some(Arc::new(RelVersion {
+            epoch,
+            states: Arc::new(states),
+        }));
+        slot.epoch_hint.store(epoch, Ordering::Release);
+        debug_assert_eq!(epoch, record.epoch, "commit advances by exactly one");
+        Ok(())
+    }
+
+    /// Write a checkpoint: quiesce writers (every relation gate, taken in
+    /// `RelId` order — readers are unaffected), capture each touched
+    /// relation's published planes, liveness/wear and epoch into
+    /// generation *g+1*, rotate the WAL to a fresh segment, and prune
+    /// generations older than *g* (the previous generation stays on disk
+    /// as the corruption fallback). Returns the checkpoint's size in
+    /// bytes. [`PimdbError::Config`] on an in-memory handle.
+    pub fn checkpoint(&self) -> Result<u64, PimdbError> {
+        let d = self.durability.as_ref().ok_or_else(|| {
+            PimdbError::Config(
+                "checkpoint requires a durable handle (use Pimdb::open_durable)".into(),
+            )
+        })?;
+        // All gates in BTreeMap (RelId) order: writers quiesce, in-flight
+        // readers keep scanning their pinned snapshots.
+        let _gates: Vec<MutexGuard<'_, ()>> =
+            self.rels.values().map(|s| lock_plain(&s.gate)).collect();
+
+        struct Snap {
+            rel: RelId,
+            epoch: u64,
+            states: Arc<Vec<XbarState>>,
+            live: Vec<bool>,
+            wear: Vec<u64>,
+            ledger: Vec<u64>,
+        }
+        let mut snaps = Vec::new();
+        for (&rel, slot) in &self.rels {
+            let book = self.lock_book(slot);
+            let Some(rows) = book.rows.as_ref() else {
+                // untouched by DML: the base image is this relation's
+                // durable state, nothing to checkpoint
+                continue;
+            };
+            let committed = rows.committed();
+            let capacity = committed.capacity();
+            let snap = Snap {
+                rel,
+                epoch: rows.epoch(),
+                states: Arc::new(Vec::new()),
+                live: (0..capacity).map(|r| committed.is_live(r)).collect(),
+                wear: (0..capacity).map(|r| committed.row_wear(r)).collect(),
+                ledger: book.ledger.clone(),
+            };
+            drop(book);
+            let version = self.snapshot(rel);
+            debug_assert_eq!(version.epoch, snap.epoch, "writers are quiesced");
+            snaps.push(Snap {
+                states: Arc::clone(&version.states),
+                ..snap
+            });
+        }
+        let views: Vec<CkptRelSnapshot<'_>> = snaps
+            .iter()
+            .map(|s| CkptRelSnapshot {
+                rel: s.rel,
+                epoch: s.epoch,
+                states: &s.states,
+                live: s.live.clone(),
+                wear: s.wear.clone(),
+                ledger: s.ledger.clone(),
+            })
+            .collect();
+
+        let generation = d.generation() + 1;
+        let dir = d.cfg.data_dir.clone();
+        let bytes = snapshot::write_checkpoint(&dir, d.fingerprint, generation, &views)
+            .map_err(|e| PimdbError::Io(format!("checkpoint {generation}: {e}")))?;
+        let writer = WalWriter::create(&dir, generation, d.fingerprint)
+            .map_err(|e| PimdbError::Io(format!("wal segment {generation}: {e}")))?;
+        let epoch_hi = snaps.iter().map(|s| s.epoch).max().unwrap_or(0);
+        d.rotate(writer, epoch_hi);
+        recover::prune_generations(&dir, generation.saturating_sub(1));
+        Ok(bytes)
+    }
+
+    /// Durability counters of this handle (WAL records/bytes appended,
+    /// records replayed and torn tails truncated by the recovery that
+    /// produced it, checkpoints written); `None` on in-memory handles.
+    pub fn durability_stats(&self) -> Option<DurabilityStats> {
+        self.durability.as_ref().map(|d| d.stats())
     }
 
     /// The configuration the handle was opened with.
@@ -1079,10 +1373,18 @@ impl Pimdb {
         let my = Arc::new(DmlSlot {
             done: Mutex::new(None),
         });
+        // On a durable handle every request carries its canonical AST
+        // bytes so whichever thread leads the batch can frame the WAL
+        // record without re-borrowing the statement.
+        let bytes = self
+            .durability
+            .as_ref()
+            .map(|_| cache::dml_bytes(&p.dml, self.fingerprint));
         lock_plain(&slot.queue).push(DmlRequest {
             plan: Arc::clone(&p.plan),
             engine_kind,
             slot: Arc::clone(&my),
+            bytes,
         });
         let _gate = lock_plain(&slot.gate);
         if let Some(done) = lock_plain(&my.done).take() {
@@ -1147,6 +1449,7 @@ impl Pimdb {
         };
 
         let version = self.snapshot(rel);
+        let mut fold: Vec<(u32, u64)> = Vec::new();
         let mut pending = {
             let mut book = self.lock_book(slot);
             let RelBook { rows, ledger } = &mut *book;
@@ -1167,6 +1470,16 @@ impl Pimdb {
             // wear *before* the allocator looks at row heat, so placement
             // decisions match the legacy charge-immediately facade
             if ledger.iter().any(|&w| w != 0) {
+                if self.durability.is_some() {
+                    // the charged profile rides in this batch's WAL record
+                    // so replay ranks allocator rows identically
+                    fold = ledger
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, &w)| w != 0)
+                        .map(|(i, &w)| (i as u32, w))
+                        .collect();
+                }
                 rows.charge_profile(ledger);
                 ledger.fill(0);
             }
@@ -1193,6 +1506,33 @@ impl Pimdb {
             results.push(r);
             if aborted {
                 break;
+            }
+        }
+
+        // Write-ahead: the batch's record must be on the log before its
+        // epoch publishes. An append failure aborts the whole batch with
+        // the I/O error — clients never observe a commit that recovery
+        // could not reproduce. (Aborted batches log nothing.)
+        let mut wal_err: Option<PimdbError> = None;
+        if !aborted {
+            if let Some(d) = &self.durability {
+                let record = WalRecord {
+                    rel_tag: WalRecord::tag_of(rel),
+                    epoch: version.epoch + 1,
+                    fold: std::mem::take(&mut fold),
+                    stmts: batch
+                        .iter()
+                        .map(|req| {
+                            req.bytes
+                                .clone()
+                                .expect("durable handles serialize every request")
+                        })
+                        .collect(),
+                };
+                if let Err(e) = d.append(&record) {
+                    aborted = true;
+                    wal_err = Some(e);
+                }
             }
         }
 
@@ -1225,6 +1565,7 @@ impl Pimdb {
         for req in &batch {
             let res = match results.next() {
                 Some(r) if !aborted => r,
+                _ if wal_err.is_some() => Err(wal_err.clone().expect("checked above")),
                 Some(Err(e)) => Err(e),
                 _ => Err(ExecError::Backend {
                     engine: "native",

@@ -5,7 +5,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::config::SystemConfig;
+use crate::config::{DurabilityConfig, SystemConfig};
 
 /// Parsed command line: the command word plus `--flag value` pairs.
 #[derive(Clone, Debug, Default)]
@@ -17,7 +17,7 @@ pub struct Args {
 }
 
 /// Flags that are boolean (present/absent, no value).
-const BOOL_FLAGS: [&str; 4] = ["baseline", "verbose", "help", "explain"];
+const BOOL_FLAGS: [&str; 5] = ["baseline", "verbose", "help", "explain", "checkpoint"];
 
 impl Args {
     /// Parse `argv` (without the program name) into command + flags.
@@ -113,6 +113,26 @@ impl Args {
             cfg.set(k, v)?;
         }
         Ok(cfg)
+    }
+
+    /// The durability configuration selected by `--data-dir` (plus
+    /// `--fsync` and `--seed`), or `None` for an in-memory run.
+    /// `--fsync` without `--data-dir` is a contradiction and an error.
+    pub fn durability(&self) -> Result<Option<DurabilityConfig>, String> {
+        let Some(dir) = self.get("data-dir") else {
+            if self.has("fsync") {
+                return Err("--fsync needs --data-dir".into());
+            }
+            return Ok(None);
+        };
+        let mut dcfg = DurabilityConfig::new(dir);
+        if let Some(policy) = self.get("fsync") {
+            dcfg.fsync = policy.parse()?;
+        }
+        if let Some(seed) = self.parse_u64("seed")? {
+            dcfg.seed = seed;
+        }
+        Ok(Some(dcfg))
     }
 
     /// The functional backend selected by `--engine`.
@@ -221,6 +241,16 @@ COMMON FLAGS:
                     bit-identical at every level
   --config FILE     key=value config file (see `report --exp table3`)
   --set key=value   override one config key (repeatable)
+
+DURABILITY (run command):
+  --data-dir DIR    open a durable handle rooted at DIR: first use writes
+                    a base image + checkpoint, later runs recover (WAL
+                    replay) and DML statements append to the write-ahead
+                    log before committing
+  --fsync P         WAL fsync policy: always | group-commit | off
+                    (default group-commit; requires --data-dir)
+  --checkpoint      write a checkpoint after the statements run
+                    (bounds future recovery replay; requires --data-dir)
 ";
 
 #[cfg(test)]
@@ -330,6 +360,33 @@ mod tests {
             .unwrap()
             .queries()
             .is_err());
+    }
+
+    #[test]
+    fn durability_flags() {
+        use crate::config::FsyncPolicy;
+        // no --data-dir: in-memory run
+        assert_eq!(parse("run --query Q6").unwrap().durability().unwrap(), None);
+        // --data-dir alone: defaults (group-commit fsync, seed 42)
+        let d = parse("run --data-dir /tmp/d").unwrap().durability().unwrap().unwrap();
+        assert_eq!(d.data_dir, std::path::PathBuf::from("/tmp/d"));
+        assert_eq!(d.fsync, FsyncPolicy::GroupCommit);
+        assert_eq!(d.seed, 42);
+        // --fsync and --seed thread through
+        let d = parse("run --data-dir /tmp/d --fsync always --seed 7")
+            .unwrap()
+            .durability()
+            .unwrap()
+            .unwrap();
+        assert_eq!(d.fsync, FsyncPolicy::Always);
+        assert_eq!(d.seed, 7);
+        // contradictions and typos are errors
+        assert!(parse("run --fsync off").unwrap().durability().is_err());
+        assert!(parse("run --data-dir /tmp/d --fsync sometimes")
+            .unwrap()
+            .durability()
+            .is_err());
+        assert!(parse("run --data-dir /tmp/d --checkpoint").unwrap().has("checkpoint"));
     }
 
     #[test]

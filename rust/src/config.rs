@@ -320,6 +320,80 @@ impl SystemConfig {
     }
 }
 
+/// When the write-ahead log forces data to stable storage
+/// ([`crate::api::Pimdb::open_durable`]; see ARCHITECTURE.md §Durability
+/// for the tradeoff discussion).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum FsyncPolicy {
+    /// `fsync` (data + file metadata) after every appended record: a
+    /// committed batch survives power loss, at the cost of one full
+    /// sync per group commit.
+    Always,
+    /// `fdatasync` after every appended record — one data sync per
+    /// group-committed *batch* (the leader appends exactly one record
+    /// per batch, so this is the paper-shaped group-commit discipline).
+    /// File metadata may lag; a torn tail is truncated at recovery.
+    #[default]
+    GroupCommit,
+    /// No explicit sync: the OS page cache decides. Recently committed
+    /// batches may be lost on power failure, but the log remains
+    /// prefix-consistent — recovery still lands on a batch boundary.
+    Off,
+}
+
+impl std::str::FromStr for FsyncPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<FsyncPolicy, String> {
+        match s {
+            "always" => Ok(FsyncPolicy::Always),
+            "group-commit" | "group_commit" => Ok(FsyncPolicy::GroupCommit),
+            "off" => Ok(FsyncPolicy::Off),
+            other => Err(format!(
+                "bad fsync policy '{other}' (expected always | group-commit | off)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for FsyncPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            FsyncPolicy::Always => "always",
+            FsyncPolicy::GroupCommit => "group-commit",
+            FsyncPolicy::Off => "off",
+        })
+    }
+}
+
+/// Durability knobs for [`crate::api::Pimdb::open_durable`]: where the
+/// data directory lives and how eagerly the WAL syncs. Kept separate from
+/// [`SystemConfig`] (which fingerprints the *simulated machine*) so the
+/// plan-cache fingerprint is independent of host storage choices.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DurabilityConfig {
+    /// Data directory holding `base.img`, checkpoints and WAL segments.
+    /// Created on first open.
+    pub data_dir: std::path::PathBuf,
+    /// WAL sync discipline.
+    pub fsync: FsyncPolicy,
+    /// dbgen seed used when the directory is initialized (ignored on a
+    /// reopen: the persisted base image wins).
+    pub seed: u64,
+}
+
+impl DurabilityConfig {
+    /// Durability config with the default [`FsyncPolicy::GroupCommit`]
+    /// discipline and the CLI's default dbgen seed.
+    pub fn new(data_dir: impl Into<std::path::PathBuf>) -> DurabilityConfig {
+        DurabilityConfig {
+            data_dir: data_dir.into(),
+            fsync: FsyncPolicy::default(),
+            seed: 42,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -378,6 +452,25 @@ mod tests {
         // entries() renders a re-parseable value
         let shown = c.entries()["opt_level"].clone();
         assert_eq!(shown.parse::<OptLevel>().unwrap(), OptLevel::O1);
+    }
+
+    #[test]
+    fn fsync_policy_parses_and_round_trips() {
+        for (text, want) in [
+            ("always", FsyncPolicy::Always),
+            ("group-commit", FsyncPolicy::GroupCommit),
+            ("group_commit", FsyncPolicy::GroupCommit),
+            ("off", FsyncPolicy::Off),
+        ] {
+            let got: FsyncPolicy = text.parse().unwrap();
+            assert_eq!(got, want);
+            assert_eq!(got.to_string().parse::<FsyncPolicy>().unwrap(), got);
+        }
+        assert!("everysooften".parse::<FsyncPolicy>().is_err());
+        assert_eq!(FsyncPolicy::default(), FsyncPolicy::GroupCommit);
+        let d = DurabilityConfig::new("/tmp/pimdb-data");
+        assert_eq!(d.fsync, FsyncPolicy::GroupCommit);
+        assert_eq!(d.seed, 42);
     }
 
     #[test]

@@ -98,6 +98,33 @@ impl Relation {
         }
     }
 
+    /// Rebuild a relation from persisted parts (base-image recovery,
+    /// [`crate::storage`]). `valid.len()` fixes the record-slot count;
+    /// every column must carry exactly that many values. Column names
+    /// must already be interned via [`intern_column`].
+    pub fn from_parts(
+        id: RelId,
+        columns: Vec<(&'static str, Vec<u64>)>,
+        valid: Vec<bool>,
+    ) -> Relation {
+        let records = valid.len();
+        for (name, col) in &columns {
+            assert_eq!(col.len(), records, "column {name} length mismatch");
+        }
+        Relation {
+            id,
+            records,
+            columns,
+            valid,
+        }
+    }
+
+    /// All columns as `(name, values)` pairs in schema order (base-image
+    /// serialization, [`crate::storage`]).
+    pub fn columns(&self) -> impl Iterator<Item = (&'static str, &[u64])> + '_ {
+        self.columns.iter().map(|(n, c)| (*n, c.as_slice()))
+    }
+
     /// Append one live record; `values` supplies `(column, encoded
     /// value)` pairs, unlisted columns store 0. Returns the new row.
     pub fn append_row(&mut self, values: &[(&str, u64)]) -> usize {
@@ -130,6 +157,22 @@ impl Database {
     /// One relation by id.
     pub fn rel(&self, id: RelId) -> &Relation {
         &self.relations[&id]
+    }
+
+    /// All relations in [`RelId`] order (base-image serialization).
+    pub fn relations(&self) -> impl Iterator<Item = &Relation> {
+        self.relations.values()
+    }
+
+    /// Rebuild a database from persisted relations (base-image recovery,
+    /// [`crate::storage`]): the inverse of walking [`Database::relations`]
+    /// through [`Relation::columns`].
+    pub fn from_parts(sf: f64, seed: u64, relations: Vec<Relation>) -> Database {
+        Database {
+            sf,
+            seed,
+            relations: relations.into_iter().map(|r| (r.id, r)).collect(),
+        }
     }
 
     /// Mutable access to one relation (the baseline DML mirror path,
@@ -170,6 +213,17 @@ impl Database {
             relations,
         }
     }
+}
+
+/// Intern a parsed column name to the schema's `&'static str` (base-image
+/// recovery). PIM relations resolve through [`schema::attr`]; the non-PIM
+/// dimension tables (NATION/REGION) carry only the join keys dbgen emits.
+pub fn intern_column(id: RelId, name: &str) -> Option<&'static str> {
+    if let Some(a) = schema::attr(id, name) {
+        return Some(a.name);
+    }
+    const NON_PIM: &[&str] = &["n_nationkey", "n_regionkey", "r_regionkey"];
+    NON_PIM.iter().find(|&&n| n == name).copied()
 }
 
 /// Spec §4.2.3: p_retailprice from the part key alone (no lookup needed
@@ -419,6 +473,39 @@ mod tests {
 
     fn tiny() -> Database {
         Database::generate(0.001, 7)
+    }
+
+    #[test]
+    fn from_parts_round_trips_a_mutated_image() {
+        let mut db = tiny();
+        db.rel_mut(RelId::Part).set_valid(2, false);
+        db.rel_mut(RelId::Part).zero_row(2);
+        let rebuilt = Database::from_parts(
+            db.sf,
+            db.seed,
+            db.relations()
+                .map(|r| {
+                    Relation::from_parts(
+                        r.id,
+                        r.columns()
+                            .map(|(n, c)| {
+                                (intern_column(r.id, n).expect("interns"), c.to_vec())
+                            })
+                            .collect(),
+                        (0..r.records).map(|i| r.live(i)).collect(),
+                    )
+                })
+                .collect(),
+        );
+        for r in db.relations() {
+            let b = rebuilt.rel(r.id);
+            assert_eq!(b.records, r.records);
+            assert_eq!(b.live_count(), r.live_count());
+            for (n, c) in r.columns() {
+                assert_eq!(b.col(n), c);
+            }
+        }
+        assert!(!rebuilt.rel(RelId::Part).live(2));
     }
 
     #[test]

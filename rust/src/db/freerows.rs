@@ -80,6 +80,32 @@ impl FreeRowMap {
         }
     }
 
+    /// Rebuild a map from persisted liveness + wear vectors (checkpoint
+    /// recovery, [`crate::storage`]). The free set is reconstructed from
+    /// the dead rows ordered by `(wear, row)` — exactly the state
+    /// [`FreeRowMap::charge_profile`] maintains — so allocation order
+    /// after recovery is bit-identical to the never-closed map.
+    pub fn restore(live: Vec<bool>, wear: Vec<u64>, rows_per_xbar: usize) -> FreeRowMap {
+        assert_eq!(live.len(), wear.len(), "liveness/wear length mismatch");
+        assert!(rows_per_xbar >= 1);
+        FreeRowMap {
+            rows_per_xbar,
+            free: live
+                .iter()
+                .enumerate()
+                .filter(|(_, &l)| !l)
+                .map(|(i, _)| (wear[i], i))
+                .collect(),
+            live,
+            wear,
+        }
+    }
+
+    /// Crossbar row count of the layout this map shadows.
+    pub fn rows_per_xbar(&self) -> usize {
+        self.rows_per_xbar
+    }
+
     /// Total rows tracked (live + free).
     pub fn capacity(&self) -> usize {
         self.live.len()
@@ -208,6 +234,17 @@ impl EpochRowMap {
             epoch: 0,
             in_batch: false,
         }
+    }
+
+    /// Rebuild an epoch map from a persisted committed map and its epoch
+    /// (checkpoint recovery, [`crate::storage`]). Identical to
+    /// [`EpochRowMap::new`] except the batch counter resumes where the
+    /// checkpointed handle left off, so WAL replay commits land on the
+    /// same epoch numbers the original group-commit leader assigned.
+    pub fn restore(committed: FreeRowMap, epoch: u64) -> EpochRowMap {
+        let mut em = EpochRowMap::new(committed);
+        em.epoch = epoch;
+        em
     }
 
     /// Number of committed batches so far — the snapshot version tag.
@@ -471,6 +508,35 @@ mod tests {
         // a live row is never handed out
         let rest: Vec<_> = std::iter::from_fn(|| fm.alloc()).collect();
         assert_eq!(rest, vec![5, 6, 7]);
+    }
+
+    #[test]
+    fn restore_rebuilds_allocation_order_from_persisted_vectors() {
+        // a round-trip through (live, wear) vectors — the checkpoint
+        // payload — must reproduce the wear-leveling allocation order
+        let mut orig = FreeRowMap::new(6, 3, 6);
+        orig.charge_profile(&[4, 0, 2, 9, 1, 1]);
+        orig.release(1);
+        let live: Vec<bool> = (0..orig.capacity()).map(|r| orig.is_live(r)).collect();
+        let wear: Vec<u64> = (0..orig.capacity()).map(|r| orig.row_wear(r)).collect();
+        let mut rest = FreeRowMap::restore(live, wear, orig.rows_per_xbar());
+        assert_eq!(rest.rows_per_xbar(), 6);
+        assert_eq!(rest.live_count(), orig.live_count());
+        let order_orig: Vec<_> = std::iter::from_fn(|| orig.alloc()).collect();
+        let order_rest: Vec<_> = std::iter::from_fn(|| rest.alloc()).collect();
+        assert_eq!(order_orig, order_rest);
+    }
+
+    #[test]
+    fn epoch_restore_resumes_the_batch_counter() {
+        let em = EpochRowMap::restore(FreeRowMap::new(8, 4, 8), 17);
+        assert_eq!(em.epoch(), 17);
+        assert_eq!(em.live_count(), 4);
+        assert!(em.is_live(3) && !em.is_live(4));
+        let mut em = em;
+        let pending = em.begin_batch();
+        em.commit_batch(pending);
+        assert_eq!(em.epoch(), 18);
     }
 
     #[test]

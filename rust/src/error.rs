@@ -43,6 +43,16 @@ pub enum PimdbError {
     /// below the shard-worker count, which would leave workers
     /// permanently idle behind the admission gate).
     Config(String),
+    /// Durable state on disk failed validation: a checksum mismatch in a
+    /// complete WAL record, a checkpoint whose digest does not cover its
+    /// bytes, an epoch gap in the replay sequence, or a record that does
+    /// not decode back to a canonical DML statement. Recovery refuses the
+    /// data rather than guessing ([`crate::api::Pimdb::open_durable`]).
+    Corrupt(String),
+    /// An operating-system I/O failure while reading or writing the data
+    /// directory (WAL append, checkpoint write, recovery scan). Carries
+    /// the rendered `std::io::Error` text; the error type stays `Clone`.
+    Io(String),
 }
 
 impl std::fmt::Display for PimdbError {
@@ -60,6 +70,8 @@ impl std::fmt::Display for PimdbError {
                 "expected a single query block, got {found} (use prepare_all)"
             ),
             PimdbError::Config(msg) => write!(f, "invalid configuration: {msg}"),
+            PimdbError::Corrupt(msg) => write!(f, "corrupt durable state: {msg}"),
+            PimdbError::Io(msg) => write!(f, "i/o error: {msg}"),
         }
     }
 }
@@ -125,6 +137,16 @@ mod tests {
         let text = config.to_string();
         assert!(text.contains("invalid configuration"), "{text}");
         assert!(text.contains("admission cap 2"), "{text}");
+
+        let corrupt = PimdbError::Corrupt("wal record 3 checksum mismatch".into());
+        let text = corrupt.to_string();
+        assert!(text.contains("corrupt durable state"), "{text}");
+        assert!(text.contains("record 3"), "{text}");
+
+        let io = PimdbError::Io("permission denied (os error 13)".into());
+        let text = io.to_string();
+        assert!(text.contains("i/o error"), "{text}");
+        assert!(text.contains("denied"), "{text}");
     }
 
     #[test]

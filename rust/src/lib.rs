@@ -34,6 +34,11 @@
 //!   elision, dead-step elimination, lifetime column reallocation).
 //! * [`exec`] — the PIMDB engine, the sharded parallel execution plan,
 //!   and the in-memory column-store baseline.
+//! * [`storage`] — the durability subsystem: a checksum-framed
+//!   write-ahead log appended by the group-commit leader, versioned
+//!   epoch checkpoints of the crossbar bit-planes and wear state, and
+//!   crash recovery with torn-tail truncation
+//!   (`api::Pimdb::open_durable` / `checkpoint`).
 //! * [`runtime`] — PJRT CPU client running the AOT kernel artifacts
 //!   (behind the `pjrt` cargo feature; a stub otherwise).
 //! * [`report`] — regenerates every evaluation table and figure.
@@ -68,4 +73,5 @@ pub mod pim;
 pub mod query;
 pub mod report;
 pub mod runtime;
+pub mod storage;
 pub mod util;

@@ -62,7 +62,27 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     let engine_kind = args.engine()?;
 
     let t0 = std::time::Instant::now();
-    let db = Pimdb::open(cfg.clone(), Database::generate(cfg.sim_sf, seed))?;
+    // --data-dir opens a durable handle: first use initializes the
+    // directory, later runs recover (checkpoint load + WAL replay) so
+    // DML from earlier invocations is still visible
+    let db = match args.durability()? {
+        Some(dcfg) => {
+            let db = Pimdb::open_durable(cfg.clone(), dcfg)?;
+            if let Some(s) = db.durability_stats() {
+                if s.wal_records_replayed > 0 || s.torn_tails_truncated > 0 {
+                    println!(
+                        "-- recovered: {} wal record{} replayed, {} torn tail{} truncated --",
+                        s.wal_records_replayed,
+                        if s.wal_records_replayed == 1 { "" } else { "s" },
+                        s.torn_tails_truncated,
+                        if s.torn_tails_truncated == 1 { "" } else { "s" },
+                    );
+                }
+            }
+            db
+        }
+        None => Pimdb::open(cfg.clone(), Database::generate(cfg.sim_sf, seed))?,
+    };
     if args.has("explain") {
         for s in &statements {
             let text = match s {
@@ -156,6 +176,13 @@ fn cmd_run(args: &Args) -> Result<(), String> {
                 print_baseline(&cfg, db.database(), q, r.raw_report());
             }
         }
+    }
+    if args.has("checkpoint") {
+        if args.durability()?.is_none() {
+            return Err("--checkpoint needs --data-dir".into());
+        }
+        let bytes = db.checkpoint()?;
+        println!("-- checkpoint written ({bytes} bytes) --");
     }
     let wall = t0.elapsed();
     println!(

@@ -1,0 +1,167 @@
+//! Durability subsystem: write-ahead log, epoch checkpoints, recovery.
+//!
+//! PIMDB's in-memory state is rebuilt from three on-disk artifacts in a
+//! data directory (see `ARCHITECTURE.md`, *Durability and recovery*):
+//!
+//! * **`base.img`** — the immutable dbgen load image, written once when
+//!   the directory is initialized. DML mutates the PIM copy of a
+//!   relation, never the base image, so it is a pure function of
+//!   `(sim_sf, seed)` and doubles as a consistency check on reopen.
+//! * **`wal-NNNNNNNN.log`** — the write-ahead log ([`wal`]). The
+//!   group-commit leader appends exactly one checksum-framed record per
+//!   committed batch *before* publishing the batch's epoch, carrying the
+//!   relation tag, the new epoch, the reader-wear ledger fold profile,
+//!   and the batch's canonical DML AST bytes (the same byte format the
+//!   plan cache hashes).
+//! * **`ckpt-NNNNNNNN.pim`** — versioned checkpoints: each relation's
+//!   crossbar bit-planes, row liveness/wear state, and epoch, under a
+//!   whole-file digest. [`crate::api::Pimdb::checkpoint`] writes
+//!   generation *g+1* atomically, rotates the WAL to a fresh segment,
+//!   and prunes generations older than *g* (the previous generation is
+//!   kept as the corruption fallback).
+//!
+//! Recovery (`recover`, driven by [`crate::api::Pimdb::open_durable`])
+//! loads the newest digest-valid checkpoint, truncates a torn WAL tail
+//! at the last record boundary, and replays the epoch suffix of logged
+//! batches through the normal DML execution path — deterministic because
+//! group commit is serial per relation. Complete-but-mangled records are
+//! refused with [`crate::error::PimdbError::Corrupt`] rather than
+//! guessed at; only *incomplete* tail frames (the signature of a crash
+//! mid-append) are silently truncated.
+//!
+//! The WAL record codec and the torn-tail truncation decision are
+//! mirrored line-by-line in `python/walmirror.py`; both sides pin the
+//! same golden digest over a crash-point sweep ([`wal::golden_wal_digest`]).
+
+pub(crate) mod recover;
+pub(crate) mod snapshot;
+pub mod wal;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+use crate::config::DurabilityConfig;
+use crate::error::PimdbError;
+use wal::{WalRecord, WalWriter};
+
+/// Counters describing everything the durability layer has done for one
+/// [`crate::api::Pimdb`] handle, returned by
+/// [`crate::api::Pimdb::durability_stats`]. Monotonic over the handle's
+/// lifetime; replay counters are populated by `open_durable` itself.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct DurabilityStats {
+    /// WAL records appended (one per committed DML batch).
+    pub wal_records_appended: u64,
+    /// Bytes appended to the WAL, frames included.
+    pub wal_bytes_appended: u64,
+    /// WAL records replayed during the `open_durable` that produced this
+    /// handle.
+    pub wal_records_replayed: u64,
+    /// Torn WAL tails truncated at a record boundary during recovery.
+    pub torn_tails_truncated: u64,
+    /// Checkpoint generations skipped during recovery because their
+    /// digest failed (the fallback path).
+    pub checkpoints_skipped: u64,
+    /// Checkpoints written by this handle via
+    /// [`crate::api::Pimdb::checkpoint`].
+    pub checkpoints_written: u64,
+    /// Highest relation epoch captured by the most recent checkpoint
+    /// (recovered or written); 0 before any DML is checkpointed.
+    pub last_checkpoint_epoch: u64,
+}
+
+fn lock_plain<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Runtime durability state attached to a [`crate::api::Pimdb`] opened
+/// with `open_durable`: the config, the current WAL writer, and the
+/// stats counters. The writer mutex is a leaf lock — the group-commit
+/// leader takes it while already holding its relation gate, and
+/// `checkpoint` takes it while holding every gate, so the two can never
+/// deadlock against each other.
+pub(crate) struct Durability {
+    /// The opening configuration (data dir, fsync policy, dbgen seed).
+    pub cfg: DurabilityConfig,
+    /// Plan-cache fingerprint stamped into every on-disk artifact.
+    pub fingerprint: u64,
+    writer: Mutex<WalWriter>,
+    records_appended: AtomicU64,
+    bytes_appended: AtomicU64,
+    records_replayed: AtomicU64,
+    torn_tails: AtomicU64,
+    checkpoints_skipped: AtomicU64,
+    checkpoints_written: AtomicU64,
+    last_checkpoint_epoch: AtomicU64,
+}
+
+impl Durability {
+    /// Wrap the writer produced by recovery, seeding the recovery-side
+    /// counters.
+    pub fn new(
+        cfg: DurabilityConfig,
+        fingerprint: u64,
+        writer: WalWriter,
+        torn_tails: u64,
+        checkpoints_skipped: u64,
+        last_checkpoint_epoch: u64,
+    ) -> Durability {
+        Durability {
+            cfg,
+            fingerprint,
+            writer: Mutex::new(writer),
+            records_appended: AtomicU64::new(0),
+            bytes_appended: AtomicU64::new(0),
+            records_replayed: AtomicU64::new(0),
+            torn_tails: AtomicU64::new(torn_tails),
+            checkpoints_skipped: AtomicU64::new(checkpoints_skipped),
+            checkpoints_written: AtomicU64::new(0),
+            last_checkpoint_epoch: AtomicU64::new(last_checkpoint_epoch),
+        }
+    }
+
+    /// Append one committed-batch record, honouring the fsync policy.
+    /// Called by the group-commit leader after the batch executed but
+    /// before its epoch publishes; an error aborts the batch.
+    pub fn append(&self, record: &WalRecord) -> Result<(), PimdbError> {
+        let mut writer = lock_plain(&self.writer);
+        let bytes = writer
+            .append(record, self.cfg.fsync)
+            .map_err(|e| PimdbError::Io(format!("wal append: {e}")))?;
+        self.records_appended.fetch_add(1, Ordering::Relaxed);
+        self.bytes_appended.fetch_add(bytes, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Current WAL generation (the checkpoint being written is this +1).
+    pub fn generation(&self) -> u64 {
+        lock_plain(&self.writer).generation()
+    }
+
+    /// Swap in the fresh segment created by a checkpoint and record the
+    /// checkpoint's high epoch.
+    pub fn rotate(&self, writer: WalWriter, checkpoint_epoch: u64) {
+        *lock_plain(&self.writer) = writer;
+        self.checkpoints_written.fetch_add(1, Ordering::Relaxed);
+        self.last_checkpoint_epoch
+            .store(checkpoint_epoch, Ordering::Relaxed);
+    }
+
+    /// Count records replayed by recovery.
+    pub fn note_replayed(&self, n: u64) {
+        self.records_replayed.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Consistent point-in-time snapshot of the counters.
+    pub fn stats(&self) -> DurabilityStats {
+        DurabilityStats {
+            wal_records_appended: self.records_appended.load(Ordering::Relaxed),
+            wal_bytes_appended: self.bytes_appended.load(Ordering::Relaxed),
+            wal_records_replayed: self.records_replayed.load(Ordering::Relaxed),
+            torn_tails_truncated: self.torn_tails.load(Ordering::Relaxed),
+            checkpoints_skipped: self.checkpoints_skipped.load(Ordering::Relaxed),
+            checkpoints_written: self.checkpoints_written.load(Ordering::Relaxed),
+            last_checkpoint_epoch: self.last_checkpoint_epoch.load(Ordering::Relaxed),
+        }
+    }
+}

@@ -1,0 +1,335 @@
+//! Crash recovery: open a data directory, pick the newest valid
+//! checkpoint, truncate a torn WAL tail at the record boundary, and hand
+//! the epoch-suffix of logged batches to the API layer for replay.
+//!
+//! The decision procedure (mirrored by the fault-injection battery in
+//! `rust/tests/recovery_equivalence.rs`):
+//!
+//! 1. `base.img` must verify (magic, fingerprint, whole-file digest) and
+//!    its scale factor must match the configured `sim_sf` — a mismatch
+//!    is a configuration error, not corruption.
+//! 2. Checkpoints are tried newest-first; a generation that fails its
+//!    digest is skipped (the previous generation is kept on disk for
+//!    exactly this fallback) — only when *no* generation verifies is the
+//!    directory refused as corrupt.
+//! 3. Every WAL segment of a generation >= the chosen checkpoint is
+//!    scanned. Incomplete tail frames are torn tails: truncated at the
+//!    last record boundary and counted. Complete frames that fail their
+//!    checksum are corruption and refuse the open with
+//!    [`PimdbError::Corrupt`].
+//! 4. The surviving records replay in file order through the normal
+//!    `exec_dml_on_states` path (see [`crate::api::Pimdb::open_durable`]),
+//!    each batch's epoch checked contiguous against the recovering
+//!    relation — so a lost intermediate segment can never be papered
+//!    over silently.
+
+use std::fs;
+use std::path::Path;
+
+use crate::config::{DurabilityConfig, SystemConfig};
+use crate::db::dbgen::Database;
+use crate::error::PimdbError;
+use crate::storage::snapshot::{self, CkptRel};
+use crate::storage::wal::{self, WalRecord, WalWriter};
+
+/// Everything the API layer needs to finish a durable open: the load
+/// image, the checkpointed relation states, the logged batches still to
+/// replay, and the writer positioned for the next append.
+pub(crate) struct Prepared {
+    /// The base load image (read back, never regenerated).
+    pub db: Database,
+    /// Checkpointed relation states at the chosen generation.
+    pub ckpt: Vec<CkptRel>,
+    /// Logged batches from every segment >= the chosen generation, in
+    /// file order; the caller replays the epoch suffix.
+    pub wal_batches: Vec<WalRecord>,
+    /// The current segment, torn tail truncated, positioned at its end.
+    pub writer: WalWriter,
+    /// Torn tails truncated across the scanned segments.
+    pub torn_tails: u64,
+    /// Older checkpoint generations skipped because their digest failed.
+    pub checkpoints_skipped: u64,
+    /// Highest relation epoch in the chosen checkpoint (0 when none).
+    pub last_checkpoint_epoch: u64,
+    /// Chosen checkpoint generation.
+    pub generation: u64,
+    /// Whether the directory was freshly initialized by this open.
+    pub initialized: bool,
+}
+
+fn io_err(path: &Path, e: std::io::Error) -> PimdbError {
+    PimdbError::Io(format!("{}: {e}", path.display()))
+}
+
+/// Open-or-initialize `data_dir`. A directory without a base image is
+/// initialized from scratch (dbgen at `dcfg.seed`, an empty generation-0
+/// checkpoint, an empty WAL segment); anything else is recovered.
+pub(crate) fn prepare(
+    cfg: &SystemConfig,
+    dcfg: &DurabilityConfig,
+    fingerprint: u64,
+) -> Result<Prepared, PimdbError> {
+    let dir = &dcfg.data_dir;
+    fs::create_dir_all(dir).map_err(|e| io_err(dir, e))?;
+
+    if !snapshot::base_path(dir).exists() {
+        let db = Database::generate(cfg.sim_sf, dcfg.seed);
+        snapshot::write_base(dir, fingerprint, &db).map_err(|e| io_err(dir, e))?;
+        snapshot::write_checkpoint(dir, fingerprint, 0, &[]).map_err(|e| io_err(dir, e))?;
+        let writer = WalWriter::create(dir, 0, fingerprint).map_err(|e| io_err(dir, e))?;
+        return Ok(Prepared {
+            db,
+            ckpt: Vec::new(),
+            wal_batches: Vec::new(),
+            writer,
+            torn_tails: 0,
+            checkpoints_skipped: 0,
+            last_checkpoint_epoch: 0,
+            generation: 0,
+            initialized: true,
+        });
+    }
+
+    let db = snapshot::read_base(dir, fingerprint)?;
+    if db.sf != cfg.sim_sf {
+        return Err(PimdbError::Config(format!(
+            "data dir {} was initialized at sim_sf {}, configured sim_sf is {}",
+            dir.display(),
+            db.sf,
+            cfg.sim_sf
+        )));
+    }
+
+    // newest digest-valid checkpoint wins; invalid ones are skipped
+    let mut ckpt_gens = list_generations(dir, "ckpt-", ".pim")?;
+    ckpt_gens.sort_unstable_by(|a, b| b.cmp(a));
+    let mut chosen: Option<(u64, Vec<CkptRel>)> = None;
+    let mut checkpoints_skipped = 0u64;
+    for &g in &ckpt_gens {
+        match snapshot::read_checkpoint(dir, g, fingerprint) {
+            Ok(rels) => {
+                chosen = Some((g, rels));
+                break;
+            }
+            Err(PimdbError::Corrupt(_)) => checkpoints_skipped += 1,
+            Err(e) => return Err(e),
+        }
+    }
+    let (generation, ckpt) = chosen.ok_or_else(|| {
+        PimdbError::Corrupt(format!(
+            "data dir {}: no checkpoint generation verifies",
+            dir.display()
+        ))
+    })?;
+    let last_checkpoint_epoch = ckpt.iter().map(|r| r.epoch).max().unwrap_or(0);
+
+    // scan every segment at or past the chosen generation, oldest first
+    let mut wal_gens: Vec<u64> = list_generations(dir, "wal-", ".log")?
+        .into_iter()
+        .filter(|&g| g >= generation)
+        .collect();
+    wal_gens.sort_unstable();
+    let mut wal_batches = Vec::new();
+    let mut torn_tails = 0u64;
+    let mut newest: Option<(u64, usize)> = None;
+    for &g in &wal_gens {
+        let path = wal::wal_path(dir, g);
+        let buf = fs::read(&path).map_err(|e| io_err(&path, e))?;
+        let scan = wal::scan_records(&buf, fingerprint)?;
+        if scan.torn {
+            torn_tails += 1;
+        }
+        wal_batches.extend(scan.records);
+        newest = Some((g, scan.valid_len));
+    }
+
+    // reopen (or create) the current segment for appends. The current
+    // segment is the newest scanned one; a checkpoint that crashed
+    // between its rename and the segment rotation leaves the new
+    // generation without a WAL file — created empty here.
+    let writer = match newest {
+        Some((g, valid_len)) if g >= generation => {
+            WalWriter::open_truncated(dir, g, valid_len, fingerprint)
+                .map_err(|e| io_err(&wal::wal_path(dir, g), e))?
+        }
+        _ => WalWriter::create(dir, generation, fingerprint)
+            .map_err(|e| io_err(&wal::wal_path(dir, generation), e))?,
+    };
+
+    Ok(Prepared {
+        db,
+        ckpt,
+        wal_batches,
+        writer,
+        torn_tails,
+        checkpoints_skipped,
+        last_checkpoint_epoch,
+        generation,
+        initialized: false,
+    })
+}
+
+/// Generation numbers of every `<prefix>NNNNNNNN<suffix>` file in `dir`.
+fn list_generations(dir: &Path, prefix: &str, suffix: &str) -> Result<Vec<u64>, PimdbError> {
+    let mut gens = Vec::new();
+    let entries = fs::read_dir(dir).map_err(|e| io_err(dir, e))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| io_err(dir, e))?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(rest) = name.strip_prefix(prefix) else {
+            continue;
+        };
+        let Some(digits) = rest.strip_suffix(suffix) else {
+            continue;
+        };
+        if let Ok(g) = digits.parse::<u64>() {
+            gens.push(g);
+        }
+    }
+    Ok(gens)
+}
+
+/// Delete checkpoint + WAL generations strictly older than `keep_from`
+/// (best effort; the previous generation is the corruption fallback, so
+/// callers pass `current - 1`).
+pub(crate) fn prune_generations(dir: &Path, keep_from: u64) {
+    for (prefix, suffix) in [("ckpt-", ".pim"), ("wal-", ".log")] {
+        if let Ok(gens) = list_generations(dir, prefix, suffix) {
+            for g in gens.into_iter().filter(|&g| g < keep_from) {
+                let path = if prefix == "ckpt-" {
+                    snapshot::ckpt_path(dir, g)
+                } else {
+                    wal::wal_path(dir, g)
+                };
+                let _ = fs::remove_file(path);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "pimdb-recover-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn dcfg(dir: &Path) -> DurabilityConfig {
+        DurabilityConfig {
+            data_dir: dir.to_path_buf(),
+            ..DurabilityConfig::new(dir)
+        }
+    }
+
+    fn small_cfg() -> SystemConfig {
+        SystemConfig {
+            sim_sf: 0.001,
+            ..SystemConfig::default()
+        }
+    }
+
+    #[test]
+    fn fresh_dir_initializes_then_reopens_without_regenerating() {
+        let dir = tmpdir("init");
+        let cfg = small_cfg();
+        let fp = 0xF00D;
+        let p = prepare(&cfg, &dcfg(&dir), fp).unwrap();
+        assert!(p.initialized);
+        assert_eq!(p.generation, 0);
+        assert!(p.ckpt.is_empty() && p.wal_batches.is_empty());
+        assert!(snapshot::base_path(&dir).exists());
+        assert!(snapshot::ckpt_path(&dir, 0).exists());
+        assert!(wal::wal_path(&dir, 0).exists());
+
+        let p2 = prepare(&cfg, &dcfg(&dir), fp).unwrap();
+        assert!(!p2.initialized);
+        assert_eq!(p2.torn_tails, 0);
+        assert_eq!(
+            p2.db.rel(crate::db::schema::RelId::Lineitem).records,
+            p.db.rel(crate::db::schema::RelId::Lineitem).records
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sf_mismatch_is_a_config_error_not_corruption() {
+        let dir = tmpdir("sf");
+        let cfg = small_cfg();
+        let fp = 0xF00D;
+        prepare(&cfg, &dcfg(&dir), fp).unwrap();
+        let other = SystemConfig {
+            sim_sf: 0.002,
+            ..cfg
+        };
+        assert!(matches!(
+            prepare(&other, &dcfg(&dir), fp),
+            Err(PimdbError::Config(_))
+        ));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_newest_checkpoint_falls_back_to_the_previous_generation() {
+        let dir = tmpdir("fallback");
+        let cfg = small_cfg();
+        let fp = 0xF00D;
+        prepare(&cfg, &dcfg(&dir), fp).unwrap();
+        // a second, newer checkpoint generation...
+        snapshot::write_checkpoint(&dir, fp, 1, &[]).unwrap();
+        WalWriter::create(&dir, 1, fp).unwrap();
+        // ...that rots on disk
+        let path = snapshot::ckpt_path(&dir, 1);
+        let mut bytes = fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 1;
+        fs::write(&path, &bytes).unwrap();
+
+        let p = prepare(&cfg, &dcfg(&dir), fp).unwrap();
+        assert_eq!(p.generation, 0);
+        assert_eq!(p.checkpoints_skipped, 1);
+        // the fallback still appends to the newest segment
+        assert_eq!(p.writer.generation(), 1);
+
+        // with generation 0 also rotten, the directory is refused
+        let path0 = snapshot::ckpt_path(&dir, 0);
+        let mut bytes0 = fs::read(&path0).unwrap();
+        let last = bytes0.len() - 1;
+        bytes0[last] ^= 1;
+        fs::write(&path0, &bytes0).unwrap();
+        assert!(matches!(
+            prepare(&cfg, &dcfg(&dir), fp),
+            Err(PimdbError::Corrupt(_))
+        ));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn prune_keeps_the_fallback_generation() {
+        let dir = tmpdir("prune");
+        let cfg = small_cfg();
+        let fp = 0xF00D;
+        prepare(&cfg, &dcfg(&dir), fp).unwrap();
+        for g in 1..4 {
+            snapshot::write_checkpoint(&dir, fp, g, &[]).unwrap();
+            WalWriter::create(&dir, g, fp).unwrap();
+        }
+        prune_generations(&dir, 2);
+        for g in 0..2 {
+            assert!(!snapshot::ckpt_path(&dir, g).exists(), "ckpt {g}");
+            assert!(!wal::wal_path(&dir, g).exists(), "wal {g}");
+        }
+        for g in 2..4 {
+            assert!(snapshot::ckpt_path(&dir, g).exists(), "ckpt {g}");
+            assert!(wal::wal_path(&dir, g).exists(), "wal {g}");
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

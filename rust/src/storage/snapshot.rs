@@ -1,0 +1,526 @@
+//! Versioned binary checkpoints: the crossbar bit-planes, row liveness/
+//! wear state and epoch of every DML-tracked relation, plus the one-time
+//! base image of the generated database.
+//!
+//! Two file kinds live in a data directory:
+//!
+//! * `base.img` — the deterministic dbgen output, written once at
+//!   initialization so reopen never re-runs the generator (ROADMAP item
+//!   4). DML never mutates the load image (the PIM copy is the mutable
+//!   one), so one copy is enough forever.
+//! * `ckpt-NNNNNNNN.pim` — generation-numbered checkpoints. Each holds,
+//!   per tracked relation: the epoch, the full bit-plane state of its
+//!   crossbars, the committed [`crate::db::freerows::FreeRowMap`]
+//!   liveness + wear vectors, and the unfolded reader-wear ledger.
+//!   Untracked relations (never touched by DML) are omitted — recovery
+//!   rematerializes them lazily from the base image, exactly like a
+//!   fresh open.
+//!
+//! Every file is `[magic | fingerprint | body | fnv1a-digest]`, written
+//! to a temp name, synced, then atomically renamed — so a crash never
+//! leaves a half-written file under a valid name, and any bit rot is
+//! caught by the whole-file digest before a single field is trusted.
+
+use std::fs::{self, File};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::api::cache::fnv1a;
+use crate::db::dbgen::{intern_column, Database, Relation};
+use crate::db::schema::RelId;
+use crate::error::PimdbError;
+use crate::exec::engine::XbarState;
+use crate::storage::wal::De;
+use crate::util::bits::{WORDS, XBAR_ROWS};
+
+/// First 8 bytes of a checkpoint file.
+pub(crate) const CKPT_MAGIC: [u8; 8] = *b"PIMCKP01";
+/// First 8 bytes of the base image.
+pub(crate) const BASE_MAGIC: [u8; 8] = *b"PIMBAS01";
+
+/// Fixed-size checkpoint header following the magic bytes. Kept as its
+/// own tiny codec so the round-trip property tests can fuzz it directly.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub(crate) struct CkptHeader {
+    /// Schema/geometry fingerprint the checkpoint was taken under.
+    pub fingerprint: u64,
+    /// Generation number (matches the `ckpt-NNNNNNNN.pim` file name).
+    pub generation: u64,
+    /// Tracked relations serialized in the body.
+    pub n_rels: u32,
+}
+
+impl CkptHeader {
+    /// Serialize (magic included).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(28);
+        b.extend_from_slice(&CKPT_MAGIC);
+        b.extend_from_slice(&self.fingerprint.to_le_bytes());
+        b.extend_from_slice(&self.generation.to_le_bytes());
+        b.extend_from_slice(&self.n_rels.to_le_bytes());
+        b
+    }
+
+    /// Decode from the reader (positioned at the magic).
+    pub fn decode(d: &mut De<'_>) -> Result<CkptHeader, PimdbError> {
+        let mut magic = [0u8; 8];
+        for m in &mut magic {
+            *m = d.u8()?;
+        }
+        if magic != CKPT_MAGIC {
+            return Err(PimdbError::Corrupt("checkpoint header: bad magic".into()));
+        }
+        Ok(CkptHeader {
+            fingerprint: d.u64()?,
+            generation: d.u64()?,
+            n_rels: d.u32()?,
+        })
+    }
+}
+
+/// Borrowed view of one relation's durable state, as captured under the
+/// relation gate at checkpoint time.
+pub(crate) struct CkptRelSnapshot<'a> {
+    /// The relation.
+    pub rel: RelId,
+    /// Its committed epoch.
+    pub epoch: u64,
+    /// Published crossbar bit-plane states at that epoch.
+    pub states: &'a [XbarState],
+    /// Committed row liveness (capacity-long).
+    pub live: Vec<bool>,
+    /// Committed per-row wear (capacity-long).
+    pub wear: Vec<u64>,
+    /// Reader-wear ledger not yet folded into the committed map.
+    pub ledger: Vec<u64>,
+}
+
+/// One relation's durable state as read back from a checkpoint.
+pub(crate) struct CkptRel {
+    /// The relation.
+    pub rel: RelId,
+    /// Its committed epoch.
+    pub epoch: u64,
+    /// Crossbar bit-plane states at that epoch.
+    pub states: Vec<XbarState>,
+    /// Committed row liveness.
+    pub live: Vec<bool>,
+    /// Committed per-row wear.
+    pub wear: Vec<u64>,
+    /// Reader-wear ledger not yet folded into the committed map.
+    pub ledger: Vec<u64>,
+}
+
+/// Path of checkpoint `generation` under `dir`.
+pub(crate) fn ckpt_path(dir: &Path, generation: u64) -> PathBuf {
+    dir.join(format!("ckpt-{generation:08}.pim"))
+}
+
+/// Path of the base image under `dir`.
+pub(crate) fn base_path(dir: &Path) -> PathBuf {
+    dir.join("base.img")
+}
+
+fn pack_bools(flags: &[bool]) -> Vec<u64> {
+    let mut words = vec![0u64; flags.len().div_ceil(64)];
+    for (i, &f) in flags.iter().enumerate() {
+        if f {
+            words[i / 64] |= 1u64 << (i % 64);
+        }
+    }
+    words
+}
+
+fn unpack_bools(d: &mut De<'_>, n: usize) -> Result<Vec<bool>, PimdbError> {
+    let mut flags = Vec::with_capacity(n);
+    let mut word = 0u64;
+    for i in 0..n {
+        if i % 64 == 0 {
+            word = d.u64()?;
+        }
+        flags.push((word >> (i % 64)) & 1 == 1);
+    }
+    Ok(flags)
+}
+
+/// Serialize a checkpoint body and write it atomically as generation
+/// `generation`. Returns the file size in bytes.
+pub(crate) fn write_checkpoint(
+    dir: &Path,
+    fingerprint: u64,
+    generation: u64,
+    rels: &[CkptRelSnapshot<'_>],
+) -> std::io::Result<u64> {
+    let header = CkptHeader {
+        fingerprint,
+        generation,
+        n_rels: rels.len() as u32,
+    };
+    let mut b = header.encode();
+    for r in rels {
+        b.push(super::wal::WalRecord::tag_of(r.rel));
+        b.extend_from_slice(&r.epoch.to_le_bytes());
+        b.extend_from_slice(&(r.states.len() as u32).to_le_bytes());
+        let cols = r.states.first().map(|s| s.planes.len()).unwrap_or(0);
+        b.extend_from_slice(&(cols as u32).to_le_bytes());
+        for s in r.states {
+            debug_assert_eq!(s.planes.len(), cols, "ragged crossbar state");
+            for plane in &s.planes {
+                for w in plane {
+                    b.extend_from_slice(&w.to_le_bytes());
+                }
+            }
+        }
+        debug_assert_eq!(r.live.len(), r.wear.len());
+        b.extend_from_slice(&(r.live.len() as u64).to_le_bytes());
+        for w in pack_bools(&r.live) {
+            b.extend_from_slice(&w.to_le_bytes());
+        }
+        for w in &r.wear {
+            b.extend_from_slice(&w.to_le_bytes());
+        }
+        debug_assert_eq!(r.ledger.len(), XBAR_ROWS);
+        for w in &r.ledger {
+            b.extend_from_slice(&w.to_le_bytes());
+        }
+    }
+    let digest = fnv1a(&b);
+    b.extend_from_slice(&digest.to_le_bytes());
+    write_atomic(&ckpt_path(dir, generation), &b)?;
+    Ok(b.len() as u64)
+}
+
+/// Read and fully verify checkpoint `generation`: magic, fingerprint,
+/// whole-file digest, and per-relation shape invariants (state capacity
+/// must equal the row-map capacity).
+pub(crate) fn read_checkpoint(
+    dir: &Path,
+    generation: u64,
+    fingerprint: u64,
+) -> Result<Vec<CkptRel>, PimdbError> {
+    let path = ckpt_path(dir, generation);
+    let buf = fs::read(&path).map_err(|e| PimdbError::Io(format!("{}: {e}", path.display())))?;
+    let body = verify_digest(&buf, "checkpoint")?;
+    let mut d = De::new(body, "checkpoint");
+    let header = CkptHeader::decode(&mut d)?;
+    if header.fingerprint != fingerprint {
+        return Err(PimdbError::Corrupt(format!(
+            "checkpoint fingerprint {:#018x} does not match this schema/geometry ({fingerprint:#018x})",
+            header.fingerprint
+        )));
+    }
+    if header.generation != generation {
+        return Err(PimdbError::Corrupt(format!(
+            "checkpoint names generation {} but lives in slot {generation}",
+            header.generation
+        )));
+    }
+    let mut rels = Vec::with_capacity((header.n_rels as usize).min(64));
+    for _ in 0..header.n_rels {
+        let rel = super::wal::rel_from_tag(d.u8()?)?;
+        let epoch = d.u64()?;
+        let n_xbars = d.u32()? as usize;
+        let cols = d.u32()? as usize;
+        // a corrupt shape field must not drive allocation: the planes
+        // the shape declares have to actually be present in the body
+        if n_xbars.saturating_mul(cols).saturating_mul(WORDS * 8) > body.len() {
+            return Err(PimdbError::Corrupt(format!(
+                "checkpoint {rel:?}: {n_xbars} crossbars x {cols} planes exceed the file size"
+            )));
+        }
+        let mut states = Vec::with_capacity(n_xbars);
+        for _ in 0..n_xbars {
+            let mut s = XbarState::new(cols);
+            for plane in &mut s.planes {
+                for w in plane.iter_mut() {
+                    *w = d.u64()?;
+                }
+            }
+            states.push(s);
+        }
+        let capacity = d.u64()? as usize;
+        if capacity != states.len() * XBAR_ROWS {
+            return Err(PimdbError::Corrupt(format!(
+                "checkpoint {rel:?}: row-map capacity {capacity} does not cover {} crossbars",
+                states.len()
+            )));
+        }
+        let live = unpack_bools(&mut d, capacity)?;
+        let mut wear = Vec::with_capacity(capacity);
+        for _ in 0..capacity {
+            wear.push(d.u64()?);
+        }
+        let mut ledger = Vec::with_capacity(XBAR_ROWS);
+        for _ in 0..XBAR_ROWS {
+            ledger.push(d.u64()?);
+        }
+        rels.push(CkptRel {
+            rel,
+            epoch,
+            states,
+            live,
+            wear,
+            ledger,
+        });
+    }
+    d.finish()?;
+    Ok(rels)
+}
+
+/// Write the one-time base image of the generated database.
+pub(crate) fn write_base(dir: &Path, fingerprint: u64, db: &Database) -> std::io::Result<u64> {
+    let mut b = Vec::new();
+    b.extend_from_slice(&BASE_MAGIC);
+    b.extend_from_slice(&fingerprint.to_le_bytes());
+    b.extend_from_slice(&db.sf.to_bits().to_le_bytes());
+    b.extend_from_slice(&db.seed.to_le_bytes());
+    let rels: Vec<&Relation> = db.relations().collect();
+    b.extend_from_slice(&(rels.len() as u32).to_le_bytes());
+    for r in rels {
+        let name = r.id.name();
+        b.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        b.extend_from_slice(name.as_bytes());
+        b.extend_from_slice(&(r.records as u64).to_le_bytes());
+        let valid: Vec<bool> = (0..r.records).map(|i| r.live(i)).collect();
+        for w in pack_bools(&valid) {
+            b.extend_from_slice(&w.to_le_bytes());
+        }
+        let cols: Vec<(&'static str, &[u64])> = r.columns().collect();
+        b.extend_from_slice(&(cols.len() as u32).to_le_bytes());
+        for (cname, values) in cols {
+            b.extend_from_slice(&(cname.len() as u32).to_le_bytes());
+            b.extend_from_slice(cname.as_bytes());
+            for v in values {
+                b.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+    let digest = fnv1a(&b);
+    b.extend_from_slice(&digest.to_le_bytes());
+    write_atomic(&base_path(dir), &b)?;
+    Ok(b.len() as u64)
+}
+
+/// Read and fully verify the base image.
+pub(crate) fn read_base(dir: &Path, fingerprint: u64) -> Result<Database, PimdbError> {
+    let path = base_path(dir);
+    let buf = fs::read(&path).map_err(|e| PimdbError::Io(format!("{}: {e}", path.display())))?;
+    let body = verify_digest(&buf, "base image")?;
+    let mut d = De::new(body, "base image");
+    let mut magic = [0u8; 8];
+    for m in &mut magic {
+        *m = d.u8()?;
+    }
+    if magic != BASE_MAGIC {
+        return Err(PimdbError::Corrupt("base image: bad magic".into()));
+    }
+    let fp = d.u64()?;
+    if fp != fingerprint {
+        return Err(PimdbError::Corrupt(format!(
+            "base image fingerprint {fp:#018x} does not match this schema/geometry \
+             ({fingerprint:#018x})"
+        )));
+    }
+    let sf = f64::from_bits(d.u64()?);
+    let seed = d.u64()?;
+    let n_rels = d.count(13)?;
+    let mut relations = Vec::with_capacity(n_rels);
+    for _ in 0..n_rels {
+        let name = d.str()?.to_owned();
+        let id = rel_by_name(&name)?;
+        let records = d.u64()? as usize;
+        if records > body.len() {
+            return Err(PimdbError::Corrupt(format!(
+                "base image {name}: record count {records} exceeds file size"
+            )));
+        }
+        let valid = unpack_bools(&mut d, records)?;
+        let n_cols = d.count(4)?;
+        let mut columns = Vec::with_capacity(n_cols);
+        for _ in 0..n_cols {
+            let cname = d.str()?;
+            let interned = intern_column(id, cname).ok_or_else(|| {
+                PimdbError::Corrupt(format!("base image {name}: unknown column '{cname}'"))
+            })?;
+            let mut values = Vec::with_capacity(records);
+            for _ in 0..records {
+                values.push(d.u64()?);
+            }
+            columns.push((interned, values));
+        }
+        relations.push(Relation::from_parts(id, columns, valid));
+    }
+    d.finish()?;
+    Ok(Database::from_parts(sf, seed, relations))
+}
+
+fn rel_by_name(name: &str) -> Result<RelId, PimdbError> {
+    const ALL: [RelId; 8] = [
+        RelId::Part,
+        RelId::Supplier,
+        RelId::Partsupp,
+        RelId::Customer,
+        RelId::Orders,
+        RelId::Lineitem,
+        RelId::Nation,
+        RelId::Region,
+    ];
+    ALL.iter()
+        .copied()
+        .find(|r| r.name() == name)
+        .ok_or_else(|| PimdbError::Corrupt(format!("base image: unknown relation '{name}'")))
+}
+
+/// Split a `[body | digest]` file and verify the trailing FNV-1a digest
+/// covers the body exactly.
+fn verify_digest<'a>(buf: &'a [u8], what: &str) -> Result<&'a [u8], PimdbError> {
+    if buf.len() < 8 {
+        return Err(PimdbError::Corrupt(format!("{what}: shorter than its digest")));
+    }
+    let (body, tail) = buf.split_at(buf.len() - 8);
+    let stored = u64::from_le_bytes(tail.try_into().unwrap());
+    if fnv1a(body) != stored {
+        return Err(PimdbError::Corrupt(format!(
+            "{what}: whole-file digest mismatch (bit rot or a partial write)"
+        )));
+    }
+    Ok(body)
+}
+
+/// Write `bytes` to `path` crash-atomically: temp file, sync, rename,
+/// directory sync — a reader never observes a half-written file.
+pub(crate) fn write_atomic(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    fs::rename(&tmp, path)?;
+    if let Some(parent) = path.parent() {
+        // direct the rename itself to stable storage (best effort on
+        // platforms where directories cannot be opened)
+        if let Ok(d) = File::open(parent) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "pimdb-snap-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn prop_header_round_trips() {
+        check("ckpt-header-roundtrip", 200, |g| {
+            let h = CkptHeader {
+                fingerprint: g.u64(0, u64::MAX),
+                generation: g.u64(0, u64::MAX),
+                n_rels: g.u64(0, u32::MAX as u64) as u32,
+            };
+            let bytes = h.encode();
+            let mut d = De::new(&bytes, "ckpt header");
+            assert_eq!(CkptHeader::decode(&mut d).unwrap(), h);
+            d.finish().unwrap();
+            // every strict prefix is refused, never mis-decoded
+            for cut in 0..bytes.len() {
+                let mut d = De::new(&bytes[..cut], "ckpt header");
+                assert!(CkptHeader::decode(&mut d).is_err(), "prefix {cut}");
+            }
+        });
+    }
+
+    #[test]
+    fn checkpoint_round_trips_and_detects_bit_rot() {
+        let dir = tmpdir("ckpt");
+        let fp = 0xFEED;
+        let mut s0 = XbarState::new(8);
+        s0.planes[3][2] = 0xDEAD_BEEF;
+        let mut s1 = XbarState::new(8);
+        s1.planes[0][15] = 7;
+        let snap = CkptRelSnapshot {
+            rel: RelId::Lineitem,
+            epoch: 5,
+            states: &[s0.clone(), s1.clone()],
+            live: (0..2 * XBAR_ROWS).map(|i| i % 3 != 0).collect(),
+            wear: (0..2 * XBAR_ROWS as u64).map(|i| i * i % 97).collect(),
+            ledger: (0..XBAR_ROWS as u64).collect(),
+        };
+        write_checkpoint(&dir, fp, 3, &[snap]).unwrap();
+
+        let rels = read_checkpoint(&dir, 3, fp).unwrap();
+        assert_eq!(rels.len(), 1);
+        let r = &rels[0];
+        assert_eq!((r.rel, r.epoch), (RelId::Lineitem, 5));
+        assert_eq!(r.states.len(), 2);
+        assert_eq!(r.states[0].planes, s0.planes);
+        assert_eq!(r.states[1].planes, s1.planes);
+        assert_eq!(r.live.len(), 2 * XBAR_ROWS);
+        assert!(!r.live[0] && r.live[1]);
+        assert_eq!(r.wear[10], 100 % 97);
+        assert_eq!(r.ledger[1023], 1023);
+
+        // wrong fingerprint and wrong generation slot are refused
+        assert!(matches!(
+            read_checkpoint(&dir, 3, fp ^ 1),
+            Err(PimdbError::Corrupt(_))
+        ));
+        let renamed = ckpt_path(&dir, 9);
+        fs::copy(ckpt_path(&dir, 3), &renamed).unwrap();
+        assert!(matches!(
+            read_checkpoint(&dir, 9, fp),
+            Err(PimdbError::Corrupt(_))
+        ));
+
+        // a single flipped bit anywhere fails the whole-file digest
+        let path = ckpt_path(&dir, 3);
+        let mut bytes = fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        fs::write(&path, &bytes).unwrap();
+        assert!(matches!(
+            read_checkpoint(&dir, 3, fp),
+            Err(PimdbError::Corrupt(_))
+        ));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn base_image_round_trips_a_generated_database() {
+        let dir = tmpdir("base");
+        let fp = 0xBA5E;
+        let mut db = Database::generate(0.001, 7);
+        db.rel_mut(RelId::Part).set_valid(1, false);
+        db.rel_mut(RelId::Part).zero_row(1);
+        write_base(&dir, fp, &db).unwrap();
+        let back = read_base(&dir, fp).unwrap();
+        assert_eq!(back.sf, db.sf);
+        assert_eq!(back.seed, db.seed);
+        for r in db.relations() {
+            let b = back.rel(r.id);
+            assert_eq!(b.records, r.records);
+            assert_eq!(b.live_count(), r.live_count());
+            for (n, c) in r.columns() {
+                assert_eq!(b.col(n), c, "{:?}.{n}", r.id);
+            }
+        }
+        assert!(!back.rel(RelId::Part).live(1));
+        assert!(matches!(
+            read_base(&dir, fp ^ 1),
+            Err(PimdbError::Corrupt(_))
+        ));
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

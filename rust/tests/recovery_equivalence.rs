@@ -1,0 +1,388 @@
+//! Durability fault-injection battery: crash-point sweep, bit-rot
+//! refusal, and checkpoint+replay equivalence.
+//!
+//! The contract under test (see `ARCHITECTURE.md`, *Durability and
+//! recovery*): a durable handle reopened from its data directory is
+//! **bit-identical** to one that never closed — same live records, same
+//! committed wear counters, same epochs, same 19-query TPC-H outputs —
+//! no matter where a crash cut the write-ahead log, as long as the cut
+//! is pure truncation. Torn tails land on the previous batch boundary
+//! (all-or-nothing per batch); *damaged* bytes (bit rot) are refused
+//! with a typed [`PimdbError::Corrupt`], never silently dropped.
+//!
+//! The WAL frame layout is re-derived here from the documented format
+//! (magic + fingerprint header, then `len u32 | checksum u64 | payload`
+//! frames) rather than importing the crate's own scanner — the test is
+//! an independent oracle of the on-disk contract.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use pimdb::api::Pimdb;
+use pimdb::config::{DurabilityConfig, FsyncPolicy, SystemConfig};
+use pimdb::db::dbgen::Database;
+use pimdb::db::schema::{RelId, PIM_RELATIONS};
+use pimdb::error::PimdbError;
+use pimdb::query::tpch;
+
+const SEED: u64 = 42;
+
+/// One statement per group-commit batch (the calls are serial), so WAL
+/// record `k` is exactly statement `k`. Mixed kinds over four relations:
+/// deletes, in-place updates, and wear-ranked inserts.
+const BATCHES: &[&str] = &[
+    "delete from supplier where s_suppkey <= 3",
+    "update part set p_size = 15 where p_size == 14",
+    "insert into supplier (s_suppkey, s_nationkey, s_acctbal) values (10001, 7, 1000.00)",
+    "delete from lineitem where l_quantity >= 49",
+    "update orders set o_shippriority = 1 where o_orderstatus == \"F\"",
+    "insert into supplier (s_suppkey, s_nationkey, s_acctbal) values (10002, 3, 250.50)",
+];
+
+fn cfg() -> SystemConfig {
+    SystemConfig {
+        sim_sf: 0.001,
+        ..SystemConfig::default()
+    }
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "pimdb-recovery-{tag}-{}",
+        std::process::id()
+    ));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+fn dcfg(dir: &Path, fsync: FsyncPolicy) -> DurabilityConfig {
+    DurabilityConfig {
+        fsync,
+        ..DurabilityConfig::new(dir)
+    }
+}
+
+/// An in-memory oracle handle with the first `k` batches applied.
+fn oracle_after(k: usize) -> Pimdb {
+    let c = cfg();
+    let handle = Pimdb::open(c.clone(), Database::generate(c.sim_sf, SEED)).unwrap();
+    for src in &BATCHES[..k] {
+        handle.execute_dml(*src).unwrap();
+    }
+    handle
+}
+
+/// Everything cheap that must be bit-identical after recovery: live
+/// records, epoch, and the full per-row wear counters of every relation.
+fn state_digest(h: &Pimdb) -> Vec<(RelId, usize, u64, Vec<u64>)> {
+    PIM_RELATIONS
+        .iter()
+        .map(|&r| {
+            (
+                r,
+                h.live_records(r),
+                h.relation_epoch(r),
+                h.wear_counters(r),
+            )
+        })
+        .collect()
+}
+
+/// The expensive equivalence: all 19 evaluated TPC-H queries produce the
+/// same output on both handles.
+fn assert_query_sweep_eq(a: &Pimdb, b: &Pimdb, what: &str) {
+    for q in tpch::all_queries() {
+        let ra = a.prepare(&q).unwrap().execute().unwrap();
+        let rb = b.prepare(&q).unwrap().execute().unwrap();
+        assert_eq!(
+            ra.raw_report().output,
+            rb.raw_report().output,
+            "{}: {what}",
+            q.name
+        );
+    }
+}
+
+fn copy_dir(src: &Path, dst: &Path) {
+    fs::create_dir_all(dst).unwrap();
+    for entry in fs::read_dir(src).unwrap() {
+        let entry = entry.unwrap();
+        fs::copy(entry.path(), dst.join(entry.file_name())).unwrap();
+    }
+}
+
+fn wal0(dir: &Path) -> PathBuf {
+    dir.join("wal-00000000.log")
+}
+
+/// Re-derive the record boundaries of a WAL image from the documented
+/// frame layout (independent of the crate's scanner).
+fn record_boundaries(wal: &[u8]) -> Vec<usize> {
+    let mut bounds = vec![16];
+    let mut off = 16;
+    while wal.len() - off >= 12 {
+        let len = u32::from_le_bytes(wal[off..off + 4].try_into().unwrap()) as usize;
+        if wal.len() - off - 12 < len {
+            break;
+        }
+        off += 12 + len;
+        bounds.push(off);
+    }
+    bounds
+}
+
+/// Populate `dir` with all `BATCHES` and simulate a crash (drop the
+/// handle without a checkpoint). Returns the WAL image.
+fn populate_and_crash(dir: &Path, fsync: FsyncPolicy) -> Vec<u8> {
+    let handle = Pimdb::open_durable(cfg(), dcfg(dir, fsync)).unwrap();
+    for src in BATCHES {
+        handle.execute_dml(*src).unwrap();
+    }
+    let stats = handle.durability_stats().unwrap();
+    assert_eq!(stats.wal_records_appended, BATCHES.len() as u64);
+    assert!(stats.wal_bytes_appended > 0);
+    drop(handle);
+    fs::read(wal0(dir)).unwrap()
+}
+
+#[test]
+fn crash_point_sweep_recovers_exactly_the_batch_prefix() {
+    let dir = tmpdir("sweep");
+    let wal = populate_and_crash(&dir, FsyncPolicy::Off);
+    let bounds = record_boundaries(&wal);
+    assert_eq!(bounds.len(), BATCHES.len() + 1, "one record per batch");
+
+    // the oracle chain: state digests after 0..=n batches
+    let oracles: Vec<_> = (0..=BATCHES.len())
+        .map(|k| state_digest(&oracle_after(k)))
+        .collect();
+
+    // every record boundary, plus every byte offset inside the tail
+    // record, plus a cut inside the header
+    let mut cuts: Vec<usize> = vec![0, 7];
+    cuts.extend(bounds.iter().copied());
+    cuts.extend(bounds[BATCHES.len() - 1] + 1..bounds[BATCHES.len()]);
+
+    for cut in cuts {
+        let case = tmpdir("sweep-case");
+        copy_dir(&dir, &case);
+        let f = fs::OpenOptions::new()
+            .write(true)
+            .open(wal0(&case))
+            .unwrap();
+        f.set_len(cut as u64).unwrap();
+        drop(f);
+
+        let recovered = Pimdb::open_durable(cfg(), dcfg(&case, FsyncPolicy::Off)).unwrap();
+        // number of complete records surviving the cut
+        let k = if cut < 16 {
+            0
+        } else {
+            bounds.iter().filter(|&&b| b <= cut).count() - 1
+        };
+        assert_eq!(
+            state_digest(&recovered),
+            oracles[k],
+            "cut at byte {cut} must recover exactly {k} batches"
+        );
+        let stats = recovered.durability_stats().unwrap();
+        assert_eq!(stats.wal_records_replayed, k as u64, "cut {cut}");
+        let torn = cut < 16 || !bounds.contains(&cut);
+        assert_eq!(stats.torn_tails_truncated, u64::from(torn), "cut {cut}");
+        drop(recovered);
+
+        // truncation is idempotent: the torn tail was cut back to the
+        // boundary on disk, so a second recovery sees a clean log
+        let again = Pimdb::open_durable(cfg(), dcfg(&case, FsyncPolicy::Off)).unwrap();
+        assert_eq!(state_digest(&again), oracles[k], "re-open after cut {cut}");
+        let stats = again.durability_stats().unwrap();
+        assert_eq!(stats.torn_tails_truncated, 0, "cut {cut} second open");
+        let _ = fs::remove_dir_all(&case);
+    }
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn recovered_handle_matches_the_never_closed_oracle_on_the_query_sweep() {
+    let dir = tmpdir("sweep-queries");
+    populate_and_crash(&dir, FsyncPolicy::GroupCommit);
+    let recovered = Pimdb::open_durable(cfg(), dcfg(&dir, FsyncPolicy::GroupCommit)).unwrap();
+    let oracle = oracle_after(BATCHES.len());
+    assert_eq!(state_digest(&recovered), state_digest(&oracle));
+    assert_query_sweep_eq(&recovered, &oracle, "full replay vs never-closed");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn bit_rot_in_a_complete_record_is_refused_not_truncated() {
+    let dir = tmpdir("bitrot");
+    let wal = populate_and_crash(&dir, FsyncPolicy::Off);
+    let bounds = record_boundaries(&wal);
+
+    // flip one payload byte inside the *first* record: the frame is
+    // complete, so this must be Corrupt — recovery must not quietly
+    // truncate five committed batches away
+    let mut flipped = wal.clone();
+    flipped[bounds[0] + 12 + 3] ^= 0x10;
+    fs::write(wal0(&dir), &flipped).unwrap();
+    match Pimdb::open_durable(cfg(), dcfg(&dir, FsyncPolicy::Off)) {
+        Err(PimdbError::Corrupt(msg)) => {
+            assert!(msg.contains("checksum"), "unexpected message: {msg}")
+        }
+        other => panic!("expected Corrupt, got {other:?}"),
+    }
+
+    // a flipped header fingerprint refuses the whole segment
+    let mut bad_fp = wal.clone();
+    bad_fp[8] ^= 1;
+    fs::write(wal0(&dir), &bad_fp).unwrap();
+    assert!(matches!(
+        Pimdb::open_durable(cfg(), dcfg(&dir, FsyncPolicy::Off)),
+        Err(PimdbError::Corrupt(_))
+    ));
+
+    // bit rot in the base image is refused by its whole-file digest
+    fs::write(wal0(&dir), &wal).unwrap();
+    let base = dir.join("base.img");
+    let mut img = fs::read(&base).unwrap();
+    let mid = img.len() / 2;
+    img[mid] ^= 1;
+    fs::write(&base, &img).unwrap();
+    assert!(matches!(
+        Pimdb::open_durable(cfg(), dcfg(&dir, FsyncPolicy::Off)),
+        Err(PimdbError::Corrupt(_))
+    ));
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn checkpoint_plus_replay_equals_replay_only_and_the_live_oracle() {
+    // handle A: checkpoint midway, crash after the rest
+    let dir_a = tmpdir("ckpt-a");
+    {
+        let handle = Pimdb::open_durable(cfg(), dcfg(&dir_a, FsyncPolicy::GroupCommit)).unwrap();
+        for src in &BATCHES[..3] {
+            handle.execute_dml(*src).unwrap();
+        }
+        let bytes = handle.checkpoint().unwrap();
+        assert!(bytes > 0);
+        for src in &BATCHES[3..] {
+            handle.execute_dml(*src).unwrap();
+        }
+        let stats = handle.durability_stats().unwrap();
+        assert_eq!(stats.checkpoints_written, 1);
+        assert!(stats.last_checkpoint_epoch > 0);
+        // the checkpoint rotated the log: generation 1 exists now
+        assert!(dir_a.join("ckpt-00000001.pim").exists());
+        assert!(dir_a.join("wal-00000001.log").exists());
+    }
+    // handle B: same batches, no checkpoint — replay-only recovery
+    let dir_b = tmpdir("ckpt-b");
+    populate_and_crash(&dir_b, FsyncPolicy::GroupCommit);
+
+    let a = Pimdb::open_durable(cfg(), dcfg(&dir_a, FsyncPolicy::GroupCommit)).unwrap();
+    let b = Pimdb::open_durable(cfg(), dcfg(&dir_b, FsyncPolicy::GroupCommit)).unwrap();
+    let oracle = oracle_after(BATCHES.len());
+
+    // A replayed only the post-checkpoint suffix, B replayed everything
+    assert_eq!(a.durability_stats().unwrap().wal_records_replayed, 3);
+    assert_eq!(
+        b.durability_stats().unwrap().wal_records_replayed,
+        BATCHES.len() as u64
+    );
+    assert_eq!(state_digest(&a), state_digest(&oracle));
+    assert_eq!(state_digest(&b), state_digest(&oracle));
+    assert_query_sweep_eq(&a, &oracle, "checkpoint+replay vs never-closed");
+    assert_query_sweep_eq(&a, &b, "checkpoint+replay vs replay-only");
+    let _ = fs::remove_dir_all(&dir_a);
+    let _ = fs::remove_dir_all(&dir_b);
+}
+
+#[test]
+fn corrupt_newest_checkpoint_falls_back_and_still_recovers_everything() {
+    let dir = tmpdir("ckpt-fallback");
+    {
+        let handle = Pimdb::open_durable(cfg(), dcfg(&dir, FsyncPolicy::GroupCommit)).unwrap();
+        for src in &BATCHES[..4] {
+            handle.execute_dml(*src).unwrap();
+        }
+        handle.checkpoint().unwrap();
+        for src in &BATCHES[4..] {
+            handle.execute_dml(*src).unwrap();
+        }
+    }
+    // rot the generation-1 checkpoint: recovery must fall back to the
+    // generation-0 (empty) checkpoint and replay wal-0 *and* wal-1
+    let ckpt = dir.join("ckpt-00000001.pim");
+    let mut img = fs::read(&ckpt).unwrap();
+    let mid = img.len() / 2;
+    img[mid] ^= 1;
+    fs::write(&ckpt, &img).unwrap();
+
+    let recovered = Pimdb::open_durable(cfg(), dcfg(&dir, FsyncPolicy::GroupCommit)).unwrap();
+    let stats = recovered.durability_stats().unwrap();
+    assert_eq!(stats.checkpoints_skipped, 1);
+    assert_eq!(stats.wal_records_replayed, BATCHES.len() as u64);
+    let oracle = oracle_after(BATCHES.len());
+    assert_eq!(state_digest(&recovered), state_digest(&oracle));
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn second_checkpoint_prunes_old_generations_but_keeps_the_fallback() {
+    let dir = tmpdir("prune");
+    let handle = Pimdb::open_durable(cfg(), dcfg(&dir, FsyncPolicy::Off)).unwrap();
+    handle.execute_dml(BATCHES[0]).unwrap();
+    handle.checkpoint().unwrap(); // generation 1
+    handle.execute_dml(BATCHES[2]).unwrap();
+    handle.checkpoint().unwrap(); // generation 2: prunes generation 0
+    assert!(!dir.join("ckpt-00000000.pim").exists());
+    assert!(!wal0(&dir).exists());
+    assert!(dir.join("ckpt-00000001.pim").exists(), "fallback stays");
+    assert!(dir.join("ckpt-00000002.pim").exists());
+    drop(handle);
+
+    let recovered = Pimdb::open_durable(cfg(), dcfg(&dir, FsyncPolicy::Off)).unwrap();
+    let oracle = Pimdb::open(cfg(), Database::generate(0.001, SEED)).unwrap();
+    oracle.execute_dml(BATCHES[0]).unwrap();
+    oracle.execute_dml(BATCHES[2]).unwrap();
+    assert_eq!(state_digest(&recovered), state_digest(&oracle));
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fsync_policies_and_config_guards() {
+    // every fsync policy produces the same recoverable log
+    for (tag, fsync) in [
+        ("fs-always", FsyncPolicy::Always),
+        ("fs-group", FsyncPolicy::GroupCommit),
+        ("fs-off", FsyncPolicy::Off),
+    ] {
+        let dir = tmpdir(tag);
+        {
+            let handle = Pimdb::open_durable(cfg(), dcfg(&dir, fsync)).unwrap();
+            handle.execute_dml(BATCHES[0]).unwrap();
+        }
+        let recovered = Pimdb::open_durable(cfg(), dcfg(&dir, fsync)).unwrap();
+        assert_eq!(state_digest(&recovered), state_digest(&oracle_after(1)));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    // reopening at a different scale factor is a Config error
+    let dir = tmpdir("sf-guard");
+    drop(Pimdb::open_durable(cfg(), dcfg(&dir, FsyncPolicy::Off)).unwrap());
+    let other = SystemConfig {
+        sim_sf: 0.002,
+        ..cfg()
+    };
+    assert!(matches!(
+        Pimdb::open_durable(other, dcfg(&dir, FsyncPolicy::Off)),
+        Err(PimdbError::Config(_))
+    ));
+
+    // checkpoint and stats require a durable handle
+    let mem = Pimdb::open(cfg(), Database::generate(0.001, SEED)).unwrap();
+    assert!(matches!(mem.checkpoint(), Err(PimdbError::Config(_))));
+    assert!(mem.durability_stats().is_none());
+    let _ = fs::remove_dir_all(&dir);
+}

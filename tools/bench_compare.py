@@ -14,6 +14,11 @@ wall-clock jitters with the capture host — are compared advisorily and
 only print. Projection entries (a "claim" without a numeric metric,
 committed when the capture host had no Rust toolchain) are skipped.
 
+Besides the gate verdicts, the tool prints a markdown newest-vs-best
+summary table (one row per compared metric) so the CI log carries a
+skimmable perf trajectory; the table is informational and changes no
+gating behaviour.
+
 Usage: python3 tools/bench_compare.py [--tolerance 0.10] [--strict]
   --strict   gate every entry, not just sweep entries
 """
@@ -97,11 +102,13 @@ def main() -> int:
 
     failures = []
     compared = 0
+    rows = []  # (entry, metric, newest, best prior, source, delta, verdict)
     for entry in newest.get("entries", []):
         gate = args.strict or "sweep" in entry["name"]
         for key, direction, v in numeric_metrics(entry):
             prior = best.get((entry["name"], key))
             if prior is None:
+                rows.append((entry["name"], key, v, None, "-", None, "new"))
                 continue
             b, bfname = prior
             compared += 1
@@ -121,6 +128,18 @@ def main() -> int:
             if regressed and gate:
                 failures.append(f"{entry['name']}.{key}: {v:g} is "
                                 f"{delta:+.1%} worse than {b:g} ({bfname})")
+            rows.append((entry["name"], key, v, b, bfname, delta, verdict))
+
+    if rows:
+        print(f"\n### Bench summary: {newest_name} vs best prior\n")
+        print("| entry | metric | newest | best prior | from | delta | verdict |")
+        print("|---|---|---:|---:|---|---:|---|")
+        for name, key, v, b, src, delta, verdict in rows:
+            prior_cell = f"{b:g}" if b is not None else "-"
+            delta_cell = f"{delta:+.1%}" if delta is not None else "-"
+            print(f"| {name} | {key} | {v:g} | {prior_cell} | {src} "
+                  f"| {delta_cell} | {verdict} |")
+        print()
 
     print(f"bench_compare: {newest_name} vs {len(caps) - 1} prior capture(s), "
           f"{compared} metric(s) compared, {len(failures)} gated regression(s)")
