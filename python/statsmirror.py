@@ -1,0 +1,320 @@
+"""Mirror of the zone-map statistics + shard-pruning decision procedure.
+
+The container that grows this repo has no Rust toolchain, so the
+algorithmic core of ``rust/src/db/stats.rs`` and
+``rust/src/query/opt/prune.rs`` is re-implemented here, runnable, and
+pinned cross-language: both sides build identical statistics over the
+shared ``golden_states`` fixture and must produce the same FNV-1a
+digest (``GOLDEN_STATS_DIGEST``, asserted by
+``stats::tests::golden_digest_pinned_cross_language`` on the Rust side
+and ``test_statsmirror.py::test_golden_digest_pin`` here).
+
+Two deliberate representation differences from Rust, neither visible in
+the digest or the decisions:
+
+* Rust computes zones by walking bit-planes MSB-first (the engine's
+  ReduceMin/ReduceMax narrowing); this mirror scans the decoded live
+  values directly.  Agreement of the two *algorithms* is exactly what
+  the golden digest pins.
+* Crossbars are modelled as ``{row: {slot_index: value}}`` of live rows
+  only — dead rows hold no data, matching the store invariant that the
+  valid-AND relies on.
+
+The pruning decision table (``pred_disjoint``) is mirrored line-by-line
+and fuzzed against a scan-everything oracle: ``skip=True`` must *prove*
+the filter selects no live row on that crossbar (``False`` may be
+conservative, ``True`` may never lie).
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+from dmlmirror import FNV_OFFSET, MASK64, _fnv1a_fold  # noqa: E402
+
+#: Cross-language pin: ``RelStats::build(&golden_states(.., 3, 0xDB))``
+#: digested identically by both implementations.
+GOLDEN_STATS_DIGEST = 0x06BE552B21FA62A7
+
+#: Widest dict column (bits) that gets a distinct-id presence bitmap
+#: (``stats::DICT_BITMAP_MAX_BITS``).
+DICT_BITMAP_MAX_BITS = 6
+
+#: SUPPLIER attribute slots in layout order: (name, bits, has_dict_bitmap).
+#: Mirrors ``schema::SUPPLIER_ATTRS`` + ``wants_dict_bitmap`` — only the
+#: 6-bit dictionary column ``s_phone_cc`` qualifies for a bitmap.
+SUPPLIER_SLOTS = [
+    ("s_suppkey", 24, False),
+    ("s_nationkey", 5, False),
+    ("s_phone_cc", 6, True),
+    ("s_phone_rest", 36, False),
+    ("s_acctbal", 21, False),
+]
+
+U64_MAX = MASK64
+
+
+class Rng:
+    """xoshiro256** seeded via splitmix64 — mirrors ``util::rng::Rng``."""
+
+    def __init__(self, seed: int):
+        s = []
+        sm = seed & MASK64
+        for _ in range(4):
+            sm = (sm + 0x9E3779B97F4A7C15) & MASK64
+            z = sm
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+            s.append(z ^ (z >> 31))
+        self.s = s
+
+    def next_u64(self) -> int:
+        def rotl(x: int, k: int) -> int:
+            return ((x << k) | (x >> (64 - k))) & MASK64
+
+        s = self.s
+        result = (rotl((s[1] * 5) & MASK64, 7) * 9) & MASK64
+        t = (s[1] << 17) & MASK64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = rotl(s[3], 45)
+        return result
+
+
+class ColZone:
+    """Zone map of one slot on one crossbar (``stats::ColZone``)."""
+
+    def __init__(self, min_v: int, max_v: int, dict_bm):
+        self.min = min_v
+        self.max = max_v
+        self.dict = dict_bm  # int bitmap or None
+
+    @staticmethod
+    def empty(dict_bitmap: bool) -> "ColZone":
+        return ColZone(U64_MAX, 0, 0 if dict_bitmap else None)
+
+    def __eq__(self, other):
+        return (self.min, self.max, self.dict) == (other.min, other.max, other.dict)
+
+
+class XbarStats:
+    """Live-row count plus per-slot zones (``stats::XbarStats``)."""
+
+    def __init__(self, live_rows: int, zones):
+        self.live_rows = live_rows
+        self.zones = zones
+
+    def __eq__(self, other):
+        return (self.live_rows, self.zones) == (other.live_rows, other.zones)
+
+
+def xbar_stats(rows: dict, slots) -> XbarStats:
+    """Stats of one crossbar: ``rows`` maps live row -> per-slot values."""
+    zones = []
+    for i, (_, _, dict_bm) in enumerate(slots):
+        if not rows:
+            zones.append(ColZone.empty(dict_bm))
+            continue
+        vals = [r[i] for r in rows.values()]
+        bm = None
+        if dict_bm:
+            bm = 0
+            for v in vals:
+                bm |= 1 << v
+        zones.append(ColZone(min(vals), max(vals), bm))
+    return XbarStats(len(rows), zones)
+
+
+class RelStats:
+    """Per-crossbar stats of one relation version (``stats::RelStats``)."""
+
+    def __init__(self, xbars):
+        self.xbars = xbars
+
+    @staticmethod
+    def build(states, slots) -> "RelStats":
+        return RelStats([xbar_stats(rows, slots) for rows in states])
+
+    @staticmethod
+    def update(prev: "RelStats", old_states, new_states, slots) -> "RelStats":
+        """Incremental rebuild: unchanged crossbars keep prior stats."""
+        xbars = []
+        for x, rows in enumerate(new_states):
+            if x < len(old_states) and old_states[x] == rows:
+                xbars.append(prev.xbars[x])
+            else:
+                xbars.append(xbar_stats(rows, slots))
+        return RelStats(xbars)
+
+    def digest(self) -> int:
+        """LE-u64 serialization folded through FNV-1a — byte-identical
+        to ``RelStats::digest`` on the Rust side."""
+        state = FNV_OFFSET
+        state = _fnv1a_fold(state, len(self.xbars))
+        for x in self.xbars:
+            state = _fnv1a_fold(state, x.live_rows)
+            for z in x.zones:
+                state = _fnv1a_fold(state, z.min)
+                state = _fnv1a_fold(state, z.max)
+                state = _fnv1a_fold(state, 1 if z.dict is not None else 0)
+                state = _fnv1a_fold(state, z.dict if z.dict is not None else 0)
+        return state
+
+
+def golden_states(slots, n: int, seed: int):
+    """The shared golden fixture: mirrors ``stats::tests::golden_states``.
+
+    Per crossbar, rows 0..200: liveness draw, then one value draw per
+    slot *regardless of liveness* (the Rust fixture always consumes the
+    stream; it only writes the value when the row is live). Rows
+    200..1023 stay dead.
+    """
+    rng = Rng(seed)
+    states = []
+    for _ in range(n):
+        rows = {}
+        for row in range(200):
+            live = rng.next_u64() % 4 != 0
+            vals = [rng.next_u64() & ((1 << bits) - 1) for _, bits, _ in slots]
+            if live:
+                rows[row] = dict(enumerate(vals))
+        states.append(rows)
+    return states
+
+
+def golden_stats_digest() -> int:
+    """Digest of the pinned golden fixture (3 crossbars, seed 0xDB)."""
+    return RelStats.build(golden_states(SUPPLIER_SLOTS, 3, 0xDB), SUPPLIER_SLOTS).digest()
+
+
+# --- pruning decision procedure (mirror of query::opt::prune) ---------------
+#
+# Predicates are tuples:
+#   ("true",)
+#   ("cmp", attr, op, value)          op in {"eq","ne","lt","le","gt","ge"}
+#   ("inset", attr, [values...])
+#   ("between", attr, lo, hi)
+#   ("and", [preds...]) / ("or", [preds...])
+#   ("not", pred) / ("cmpcols", attr_a, op, attr_b)
+
+
+def eq_disjoint(z: ColZone, v: int) -> bool:
+    if v < z.min or v > z.max:
+        return True
+    return z.dict is not None and v < 64 and (z.dict >> v) & 1 == 0
+
+
+def cmp_disjoint(z: ColZone, op: str, v: int) -> bool:
+    if op == "eq":
+        return eq_disjoint(z, v)
+    if op == "ne":
+        return z.min == z.max and z.min == v
+    if op == "lt":
+        return z.min >= v
+    if op == "le":
+        return z.min > v
+    if op == "gt":
+        return z.max <= v
+    if op == "ge":
+        return z.max < v
+    raise ValueError(op)
+
+
+def _slot_index(slots, attr: str):
+    for i, (name, _, _) in enumerate(slots):
+        if name == attr:
+            return i
+    return None
+
+
+def pred_disjoint(p, slots, x: XbarStats) -> bool:
+    """Whether ``p`` provably selects no live row of crossbar ``x`` —
+    mirrors ``prune::pred_disjoint`` case for case."""
+    if x.live_rows == 0:
+        return True
+    kind = p[0]
+    if kind == "true":
+        return False
+    if kind == "cmp":
+        i = _slot_index(slots, p[1])
+        return i is not None and cmp_disjoint(x.zones[i], p[2], p[3])
+    if kind == "inset":
+        i = _slot_index(slots, p[1])
+        return i is not None and all(eq_disjoint(x.zones[i], v) for v in p[2])
+    if kind == "between":
+        _, attr, lo, hi = p
+        if lo > hi:
+            return True
+        i = _slot_index(slots, attr)
+        return i is not None and (hi < x.zones[i].min or lo > x.zones[i].max)
+    if kind == "and":
+        return any(pred_disjoint(q, slots, x) for q in p[1])
+    if kind == "or":
+        return all(pred_disjoint(q, slots, x) for q in p[1])
+    if kind in ("not", "cmpcols"):
+        return False
+    raise ValueError(kind)
+
+
+def skip_bitmap(p, slots, stats: RelStats):
+    """Per-crossbar skip bitmap — mirrors ``prune::skip_bitmap``."""
+    return [pred_disjoint(p, slots, x) for x in stats.xbars]
+
+
+def eval_pred(p, slots, vals) -> bool:
+    """Scan-everything oracle: evaluate ``p`` on one live row's values."""
+    kind = p[0]
+    if kind == "true":
+        return True
+    if kind == "cmp":
+        i = _slot_index(slots, p[1])
+        if i is None:
+            return False
+        v, imm = vals[i], p[3]
+        return {
+            "eq": v == imm,
+            "ne": v != imm,
+            "lt": v < imm,
+            "le": v <= imm,
+            "gt": v > imm,
+            "ge": v >= imm,
+        }[p[2]]
+    if kind == "inset":
+        i = _slot_index(slots, p[1])
+        return i is not None and vals[i] in p[2]
+    if kind == "between":
+        i = _slot_index(slots, p[1])
+        return i is not None and p[2] <= vals[i] <= p[3]
+    if kind == "and":
+        return all(eval_pred(q, slots, vals) for q in p[1])
+    if kind == "or":
+        return any(eval_pred(q, slots, vals) for q in p[1])
+    if kind == "not":
+        return not eval_pred(p[1], slots, vals)
+    if kind == "cmpcols":
+        a, b = _slot_index(slots, p[1]), _slot_index(slots, p[3])
+        if a is None or b is None:
+            return False
+        va, vb = vals[a], vals[b]
+        return {
+            "eq": va == vb,
+            "ne": va != vb,
+            "lt": va < vb,
+            "le": va <= vb,
+            "gt": va > vb,
+            "ge": va >= vb,
+        }[p[2]]
+    raise ValueError(kind)
+
+
+def oracle_selects_any(p, slots, rows: dict) -> bool:
+    """Whether the filter selects at least one live row of a crossbar."""
+    return any(eval_pred(p, slots, vals) for vals in rows.values())
+
+
+if __name__ == "__main__":
+    print(hex(golden_stats_digest()))

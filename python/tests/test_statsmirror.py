@@ -1,0 +1,211 @@
+"""Fuzz + golden suite for the zone-map statistics mirror (``statsmirror.py``).
+
+Validates the contract ``rust/src/db/stats.rs`` + ``query::opt::prune``
+promise:
+
+* the golden fixture digest is pinned cross-language
+  (``GOLDEN_STATS_DIGEST``, also asserted by
+  ``stats::tests::golden_digest_pinned_cross_language``);
+* the skip-bitmap decision procedure is *sound*: ``True`` proves the
+  filter selects no live row on that crossbar, checked on randomized
+  relations and predicates against a scan-everything oracle;
+* on the predicate shapes it reasons about exactly (single-attribute
+  range compares over a zone with no dictionary gaps), the decision is
+  also *complete* — no skip opportunity is missed;
+* incremental maintenance (``RelStats.update``) equals a full rebuild
+  and preserves object identity for untouched crossbars;
+* the digest is sensitive to every serialized field.
+"""
+
+import random
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import statsmirror as m  # noqa: E402
+
+SLOTS = m.SUPPLIER_SLOTS
+
+
+def test_golden_digest_pin():
+    assert m.golden_stats_digest() == m.GOLDEN_STATS_DIGEST
+
+
+def test_rng_reference_stream_is_deterministic():
+    a, b = m.Rng(42), m.Rng(42)
+    stream = [a.next_u64() for _ in range(100)]
+    assert stream == [b.next_u64() for _ in range(100)]
+    assert all(0 <= v <= m.U64_MAX for v in stream)
+    assert m.Rng(1).next_u64() != m.Rng(2).next_u64()
+
+
+def random_states(rng, n_xbars):
+    states = []
+    for _ in range(n_xbars):
+        rows = {}
+        # small value domains so zone overlaps, gaps, and empty
+        # crossbars all occur with useful frequency
+        for row in range(rng.randrange(0, 40)):
+            if rng.random() < 0.3:
+                continue  # dead row
+            rows[row] = {
+                i: rng.randrange(0, min(1 << bits, 50))
+                for i, (_, bits, _) in enumerate(SLOTS)
+            }
+        states.append(rows)
+    return states
+
+
+def random_pred(rng, depth=0):
+    attrs = [name for name, _, _ in SLOTS]
+    kind = rng.randrange(0, 8 if depth < 2 else 5)
+    attr = rng.choice(attrs)
+    v = rng.randrange(0, 55)
+    if kind == 0:
+        return ("true",)
+    if kind == 1:
+        op = rng.choice(["eq", "ne", "lt", "le", "gt", "ge"])
+        return ("cmp", attr, op, v)
+    if kind == 2:
+        return ("inset", attr, [rng.randrange(0, 55) for _ in range(rng.randrange(0, 4))])
+    if kind == 3:
+        lo, hi = v, rng.randrange(0, 55)
+        return ("between", attr, lo, hi)
+    if kind == 4:
+        op = rng.choice(["eq", "ne", "lt", "le", "gt", "ge"])
+        return ("cmpcols", attr, op, rng.choice(attrs))
+    if kind == 5:
+        return ("and", [random_pred(rng, depth + 1) for _ in range(rng.randrange(1, 4))])
+    if kind == 6:
+        return ("or", [random_pred(rng, depth + 1) for _ in range(rng.randrange(0, 4))])
+    return ("not", random_pred(rng, depth + 1))
+
+
+def test_skip_bitmap_sound_against_scan_everything_oracle():
+    rng = random.Random(0xDB10)
+    for _ in range(300):
+        states = random_states(rng, rng.randrange(1, 6))
+        stats = m.RelStats.build(states, SLOTS)
+        pred = random_pred(rng)
+        skip = m.skip_bitmap(pred, SLOTS, stats)
+        assert len(skip) == len(states)
+        for x, (s, rows) in enumerate(zip(skip, states)):
+            if s:
+                # a skip is a proof: the oracle must select nothing
+                assert not m.oracle_selects_any(pred, SLOTS, rows), (pred, x, rows)
+
+
+def test_skip_bitmap_complete_on_range_compares():
+    # On single-attribute *range* compares the decision table is exact
+    # (min/max are exact bounds): it skips iff the oracle selects
+    # nothing. `eq` is excluded — interior gaps of a non-dict zone are
+    # invisible to min/max, so `eq` is sound but not complete there.
+    rng = random.Random(0xDB11)
+    for _ in range(300):
+        states = random_states(rng, 3)
+        stats = m.RelStats.build(states, SLOTS)
+        attr = rng.choice(["s_suppkey", "s_nationkey", "s_acctbal"])
+        op = rng.choice(["lt", "le", "gt", "ge"])
+        pred = ("cmp", attr, op, rng.randrange(0, 55))
+        for s, rows in zip(m.skip_bitmap(pred, SLOTS, stats), states):
+            assert s == (not m.oracle_selects_any(pred, SLOTS, rows))
+
+
+def test_decision_table_cases():
+    # one crossbar, one live row domain: s_nationkey in {3, 7}
+    rows = {0: {i: 0 for i in range(len(SLOTS))}, 1: {i: 0 for i in range(len(SLOTS))}}
+    rows[0][1], rows[1][1] = 3, 7
+    stats = m.RelStats.build([rows], SLOTS)
+    z = stats.xbars[0].zones[1]
+    assert (z.min, z.max, z.dict) == (3, 7, None)
+    cases = [
+        (("cmp", "s_nationkey", "eq", 2), True),
+        (("cmp", "s_nationkey", "eq", 3), False),
+        (("cmp", "s_nationkey", "ne", 3), False),
+        (("cmp", "s_nationkey", "lt", 3), True),
+        (("cmp", "s_nationkey", "lt", 4), False),
+        (("cmp", "s_nationkey", "le", 2), True),
+        (("cmp", "s_nationkey", "le", 3), False),
+        (("cmp", "s_nationkey", "gt", 7), True),
+        (("cmp", "s_nationkey", "gt", 6), False),
+        (("cmp", "s_nationkey", "ge", 8), True),
+        (("cmp", "s_nationkey", "ge", 7), False),
+        (("between", "s_nationkey", 0, 2), True),
+        (("between", "s_nationkey", 8, 20), True),
+        (("between", "s_nationkey", 9, 8), True),  # inverted range
+        (("between", "s_nationkey", 7, 9), False),
+        (("inset", "s_nationkey", []), True),  # IN () is false
+        (("inset", "s_nationkey", [1, 2]), True),
+        (("inset", "s_nationkey", [1, 5]), False),
+        (("and", [("true",), ("cmp", "s_nationkey", "lt", 3)]), True),
+        (("or", []), True),
+        (("or", [("cmp", "s_nationkey", "lt", 3), ("true",)]), False),
+        (("not", ("cmp", "s_nationkey", "eq", 2)), False),  # no negation reasoning
+        (("cmpcols", "s_nationkey", "eq", "s_suppkey"), False),
+        (("true",), False),
+    ]
+    for pred, want in cases:
+        assert m.pred_disjoint(pred, SLOTS, stats.xbars[0]) == want, pred
+
+
+def test_ne_disjoint_only_on_constant_column():
+    rows = {r: {i: 5 if i == 1 else 0 for i in range(len(SLOTS))} for r in range(4)}
+    stats = m.RelStats.build([rows], SLOTS)
+    assert m.pred_disjoint(("cmp", "s_nationkey", "ne", 5), SLOTS, stats.xbars[0])
+    assert not m.pred_disjoint(("cmp", "s_nationkey", "ne", 4), SLOTS, stats.xbars[0])
+
+
+def test_dict_bitmap_catches_in_range_gaps():
+    # s_phone_cc (slot 2) is the dict column: values {10, 20} leave a
+    # gap at 15 that min/max alone cannot see
+    rows = {0: {i: 0 for i in range(len(SLOTS))}, 1: {i: 0 for i in range(len(SLOTS))}}
+    rows[0][2], rows[1][2] = 10, 20
+    stats = m.RelStats.build([rows], SLOTS)
+    z = stats.xbars[0].zones[2]
+    assert z.dict == (1 << 10) | (1 << 20)
+    assert m.pred_disjoint(("cmp", "s_phone_cc", "eq", 15), SLOTS, stats.xbars[0])
+    assert not m.pred_disjoint(("cmp", "s_phone_cc", "eq", 20), SLOTS, stats.xbars[0])
+    assert m.pred_disjoint(("inset", "s_phone_cc", [11, 15, 19]), SLOTS, stats.xbars[0])
+
+
+def test_empty_crossbar_skips_everything():
+    stats = m.RelStats.build([{}], SLOTS)
+    assert stats.xbars[0].live_rows == 0
+    for z in stats.xbars[0].zones:
+        assert z.min > z.max
+    assert m.pred_disjoint(("true",), SLOTS, stats.xbars[0])
+    assert m.pred_disjoint(("not", ("true",)), SLOTS, stats.xbars[0])
+
+
+def test_incremental_update_equals_full_rebuild():
+    rng = random.Random(0xDB12)
+    for _ in range(50):
+        old = random_states(rng, 4)
+        prev = m.RelStats.build(old, SLOTS)
+        new = [dict(rows) for rows in old]
+        # mutate one crossbar, sometimes append another
+        tgt = rng.randrange(0, 4)
+        new[tgt] = random_states(rng, 1)[0]
+        if rng.random() < 0.5:
+            new.append(random_states(rng, 1)[0])
+        inc = m.RelStats.update(prev, old, new, SLOTS)
+        full = m.RelStats.build(new, SLOTS)
+        assert inc.digest() == full.digest()
+        for x in range(len(old)):
+            if old[x] == new[x]:
+                assert inc.xbars[x] is prev.xbars[x]  # reused, not rebuilt
+
+
+def test_digest_sensitive_to_every_field():
+    states = m.golden_states(SLOTS, 2, 9)
+    base = m.RelStats.build(states, SLOTS)
+    d0 = base.digest()
+    tweaked = m.RelStats.build(states, SLOTS)
+    tweaked.xbars[1].live_rows += 1
+    assert tweaked.digest() != d0
+    for field in ("min", "max", "dict"):
+        t = m.RelStats.build(states, SLOTS)
+        z = t.xbars[0].zones[2]  # the dict slot: all three fields present
+        setattr(z, field, (getattr(z, field) or 0) ^ 1)
+        assert t.digest() != d0, field

@@ -234,19 +234,31 @@ fn main() {
     }
 
     // open-loop 90/10 serving with tail latency: requests arrive on a
-    // fixed schedule — independent of completions, so queueing delay is
-    // part of the measured latency, not hidden by back-pressure. Four
-    // reader threads execute the Q6 template at ~0.7 utilization each;
-    // one writer issues DML (alternating UPDATE/INSERT on the same
-    // relation) at one-ninth the aggregate query rate, i.e. a 90/10
-    // statement mix. Reported latency is completion minus *scheduled*
-    // arrival. The identical workload then runs with every statement
-    // serialized behind one relation-wide mutex — the lock-per-relation
-    // serving model the snapshot facade replaced — as the baseline pair,
-    // so the trajectory records the readers-under-writes win explicitly.
+    // seeded randomized schedule — independent of completions, so
+    // queueing delay is part of the measured latency, not hidden by
+    // back-pressure. Four reader threads execute the Q6 template at
+    // ~0.7 utilization each, every arrival jittered uniformly within
+    // its slot; one writer issues DML (a seeded UPDATE/INSERT mix on
+    // the same relation) at one-ninth the aggregate query rate, i.e. a
+    // 90/10 statement mix. The seed comes from PIMDB_BENCH_SEED
+    // (default 42) and is printed with the results, so a tail-latency
+    // report is reproducible: the same seed replays the exact arrival
+    // offsets and DML sequence. Reported latency is completion minus
+    // *scheduled* arrival. The identical workload (same seed) then runs
+    // with every statement serialized behind one relation-wide mutex —
+    // the lock-per-relation serving model the snapshot facade replaced —
+    // as the baseline pair, so the trajectory records the
+    // readers-under-writes win explicitly.
     {
+        use pimdb::util::rng::Rng;
         use std::sync::{Barrier, Mutex};
         use std::time::{Duration, Instant};
+
+        let seed: u64 = std::env::var("PIMDB_BENCH_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(42);
+        println!("# open-loop seed {seed} (override with PIMDB_BENCH_SEED=<u64>)");
 
         fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
             if sorted_ms.is_empty() {
@@ -305,13 +317,18 @@ fn main() {
                     let (q, gate, start) = (&q, &gate, &start);
                     handles.push(s.spawn(move || {
                         // stagger the threads across one interval so the
-                        // aggregate arrival process is evenly spaced
+                        // aggregate arrival process is evenly spaced,
+                        // then jitter each arrival inside its slot from
+                        // this reader's seeded stream
                         let offset = interval * r as u32 / N_READERS as u32;
+                        let mut rng = Rng::new(seed).stream(1 + r as u64);
                         let mut lats = Vec::with_capacity(PER_READER);
                         start.wait();
                         let t0 = Instant::now();
                         for i in 0..PER_READER {
-                            let due = interval * i as u32 + offset;
+                            let jitter =
+                                Duration::from_secs_f64(interval.as_secs_f64() * rng.f64());
+                            let due = interval * i as u32 + offset + jitter;
                             let now = t0.elapsed();
                             if now < due {
                                 std::thread::sleep(due - now);
@@ -327,15 +344,20 @@ fn main() {
                     }));
                 }
                 start.wait();
+                // stream 0: the writer's arrival jitter and statement mix
+                let mut rng = Rng::new(seed).stream(0);
                 let t0 = Instant::now();
                 for i in 0..writer_rounds {
-                    let due = writer_interval * i as u32;
+                    let jitter = Duration::from_secs_f64(
+                        writer_interval.as_secs_f64() * rng.f64(),
+                    );
+                    let due = writer_interval * i as u32 + jitter;
                     let now = t0.elapsed();
                     if now < due {
                         std::thread::sleep(due - now);
                     }
                     let g = locked.then(|| gate.lock().unwrap());
-                    let dml = if i % 2 == 0 { &upd } else { &ins };
+                    let dml = if rng.next_u64() % 2 == 0 { &upd } else { &ins };
                     std::hint::black_box(dml.execute().unwrap().rows_affected);
                     drop(g);
                 }
@@ -355,13 +377,15 @@ fn main() {
         let (p50, p99, qps) = run(false, None);
         println!(
             "BENCH {{\"name\":\"serving/open-loop-90-10\",\"p50_ms\":{p50:.3},\
-             \"p99_ms\":{p99:.3},\"qps\":{qps:.1},\"dml_share\":0.1,\"sim_sf\":{}}}",
+             \"p99_ms\":{p99:.3},\"qps\":{qps:.1},\"dml_share\":0.1,\
+             \"seed\":{seed},\"sim_sf\":{}}}",
             cfg.sim_sf
         );
         let (p50, p99, qps) = run(true, None);
         println!(
             "BENCH {{\"name\":\"serving/open-loop-90-10-locked\",\"p50_ms\":{p50:.3},\
-             \"p99_ms\":{p99:.3},\"qps\":{qps:.1},\"dml_share\":0.1,\"sim_sf\":{}}}",
+             \"p99_ms\":{p99:.3},\"qps\":{qps:.1},\"dml_share\":0.1,\
+             \"seed\":{seed},\"sim_sf\":{}}}",
             cfg.sim_sf
         );
 
@@ -378,7 +402,8 @@ fn main() {
         println!(
             "BENCH {{\"name\":\"serving/open-loop-90-10-durable\",\
              \"p50_ms\":{p50:.3},\"p99_ms\":{p99:.3},\"qps\":{qps:.1},\
-             \"dml_share\":0.1,\"fsync\":\"group-commit\",\"sim_sf\":{}}}",
+             \"dml_share\":0.1,\"fsync\":\"group-commit\",\"seed\":{seed},\
+             \"sim_sf\":{}}}",
             cfg.sim_sf
         );
         {

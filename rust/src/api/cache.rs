@@ -338,8 +338,17 @@ pub fn dml_key(d: &Dml, fingerprint: u64) -> u64 {
 /// One cached prepared plan: the optimized per-relation programs plus the
 /// optimizer summary the report path surfaces.
 pub(crate) struct CachedPlan {
-    /// Optimized programs, parallel to the source query's `rels`.
+    /// Optimized programs the *executor* runs, parallel to the source
+    /// query's `rels`. When zone-map statistics were available at
+    /// prepare time these carry the cost-based predicate reordering.
     pub compiled: Vec<CompiledRelQuery>,
+    /// The same programs through the plain (stats-free) pass pipeline —
+    /// what the legacy session compiles. The simulator and the wear
+    /// model charge these, keeping every simulated metric bit-identical
+    /// to the unreordered path: reordering and pruning are host-runtime
+    /// execution-schedule choices, not changes to what the simulated
+    /// device does.
+    pub sim: Vec<CompiledRelQuery>,
     /// Shared-scan split + canonical prefix key per program (parallel to
     /// `compiled`); `None` where the analysis proved nothing shareable.
     pub scans: Vec<Option<crate::query::opt::sharedscan::ScanInfo>>,
@@ -699,6 +708,7 @@ mod tests {
     fn mk() -> Result<CachedPlan, PimdbError> {
         Ok(CachedPlan {
             compiled: vec![],
+            sim: vec![],
             scans: vec![],
             opt: OptSummary::default(),
         })

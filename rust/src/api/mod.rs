@@ -93,6 +93,7 @@ use crate::db::dbgen::Database;
 use crate::db::freerows::{EpochRowMap, FreeRowMap};
 use crate::db::layout::DbLayout;
 use crate::db::schema::{RelId, PIM_RELATIONS};
+use crate::db::stats::RelStats;
 use crate::error::PimdbError;
 use crate::exec::engine::{self, XbarState};
 use crate::exec::metrics::{PlanCacheCounters, QueryMetrics, RunReport, SharedScanCounters};
@@ -101,9 +102,9 @@ use crate::exec::plan::ExecPlan;
 use crate::exec::pool::ShardPool;
 use crate::exec::ExecError;
 use crate::query::ast::{Dml, Query};
-use crate::query::compiler::{compile_dml, CompileError, Compiler};
+use crate::query::compiler::{compile_dml, CompileError, CompiledRelQuery, Compiler};
 use crate::query::lang;
-use crate::query::opt::{self, fusion, sharedscan, OptStats};
+use crate::query::opt::{self, fusion, prune, sharedscan, OptStats};
 use crate::query::tpch;
 use crate::storage::recover;
 use crate::storage::snapshot::{self, CkptRel, CkptRelSnapshot};
@@ -174,6 +175,11 @@ impl<'a> From<&'a Dml> for DmlSource<'a> {
 struct RelVersion {
     epoch: u64,
     states: Arc<Vec<XbarState>>,
+    /// Zone-map statistics of exactly these planes
+    /// ([`RelStats`]), published in lockstep with them so a pinned
+    /// snapshot reader always prunes against stats that describe the
+    /// crossbars it is scanning — never a newer or older version's.
+    stats: Arc<RelStats>,
 }
 
 /// Liveness and wear bookkeeping of one relation. `rows` stays `None`
@@ -250,8 +256,15 @@ type CachedMask = Arc<Vec<[u64; WORDS]>>;
 /// panic (still in flight, inserted later) can never be admitted. The
 /// cache stays cold until a DML commit moves the relation to an epoch at
 /// or above the floor.
+/// A cached skip bitmap: which crossbars the zone maps proved all-zero
+/// for the mask function, at the epoch the mask was computed. A
+/// transplanted shared mask always carries its skip bitmap — the pair
+/// describes the same version, so any member sharing the key at that
+/// epoch prunes identically to the run that populated the entry.
+type CachedSkip = Arc<Vec<bool>>;
+
 struct ScanMaskCache {
-    entries: Vec<(Vec<u8>, u64, CachedMask)>,
+    entries: Vec<(Vec<u8>, u64, CachedMask, CachedSkip)>,
     epoch_floor: u64,
 }
 
@@ -263,36 +276,37 @@ impl ScanMaskCache {
         }
     }
 
-    /// The mask for `key` computed at exactly `epoch`, if admitted.
-    fn get(&self, key: &[u8], epoch: u64) -> Option<CachedMask> {
+    /// The mask (and its skip bitmap) for `key` computed at exactly
+    /// `epoch`, if admitted.
+    fn get(&self, key: &[u8], epoch: u64) -> Option<(CachedMask, CachedSkip)> {
         if epoch < self.epoch_floor {
             return None;
         }
         self.entries
             .iter()
-            .find(|(k, e, _)| *e == epoch && k == key)
-            .map(|(_, _, m)| Arc::clone(m))
+            .find(|(k, e, _, _)| *e == epoch && k == key)
+            .map(|(_, _, m, s)| (Arc::clone(m), Arc::clone(s)))
     }
 
-    fn insert(&mut self, key: Vec<u8>, epoch: u64, mask: CachedMask) {
+    fn insert(&mut self, key: Vec<u8>, epoch: u64, mask: CachedMask, skip: CachedSkip) {
         if epoch < self.epoch_floor {
             return;
         }
-        if let Some(e) = self.entries.iter_mut().find(|(k, _, _)| *k == key) {
-            *e = (key, epoch, mask);
+        if let Some(e) = self.entries.iter_mut().find(|(k, _, _, _)| *k == key) {
+            *e = (key, epoch, mask, skip);
             return;
         }
         if self.entries.len() >= MAX_CACHED_SCANS {
             self.entries.remove(0);
         }
-        self.entries.push((key, epoch, mask));
+        self.entries.push((key, epoch, mask, skip));
     }
 
     /// Drop masks older than `epoch` (a newly published version makes
     /// them unreplayable); `true` when anything was dropped.
     fn purge_below(&mut self, epoch: u64) -> bool {
         let before = self.entries.len();
-        self.entries.retain(|(_, e, _)| *e >= epoch);
+        self.entries.retain(|(_, e, _, _)| *e >= epoch);
         self.entries.len() != before
     }
 
@@ -490,6 +504,7 @@ impl Pimdb {
         for r in ckpt {
             let slot = self.slot(r.rel);
             let epoch = r.epoch;
+            let rlayout = self.layout.rel(r.rel);
             {
                 let mut book = self.lock_book(slot);
                 book.rows = Some(EpochRowMap::restore(
@@ -498,9 +513,14 @@ impl Pimdb {
                 ));
                 book.ledger = r.ledger;
             }
+            // stats are derived state: never checkpointed, always rebuilt
+            // from the recovered planes through the normal build path
+            let states = Arc::new(r.states);
+            let stats = Arc::new(RelStats::build(&states, rlayout));
             *self.lock_published(slot) = Some(Arc::new(RelVersion {
                 epoch,
-                states: Arc::new(r.states),
+                states,
+                stats,
             }));
             slot.epoch_hint.store(epoch, Ordering::Release);
         }
@@ -618,9 +638,17 @@ impl Pimdb {
         rows.commit_batch(pending);
         let epoch = rows.epoch();
         drop(book);
+        let states = Arc::new(states);
+        let stats = Arc::new(RelStats::update(
+            &version.stats,
+            &version.states,
+            &states,
+            self.layout.rel(rel),
+        ));
         *self.lock_published(slot) = Some(Arc::new(RelVersion {
             epoch,
-            states: Arc::new(states),
+            states,
+            stats,
         }));
         slot.epoch_hint.store(epoch, Ordering::Release);
         debug_assert_eq!(epoch, record.epoch, "commit advances by exactly one");
@@ -791,6 +819,42 @@ impl Pimdb {
         self.cache.clear()
     }
 
+    /// Render the statistics-driven pruning decisions the handle would
+    /// apply to `source` right now: per relation program, the per-shard
+    /// skip bitmap derived from the current published version's zone
+    /// maps, the zone ranges the decision consulted, the cost-ordered
+    /// predicate sequence, and the runtime all-zero short-circuit
+    /// schedule. `pimdb run --explain` prints this next to the optimizer
+    /// disassembly ([`crate::query::opt::explain_query`]).
+    pub fn explain_pruning<'q>(
+        &self,
+        source: impl Into<QuerySource<'q>>,
+    ) -> Result<String, PimdbError> {
+        use std::fmt::Write;
+        let p = self.prepare(source)?;
+        let mut s = String::new();
+        for (rq, c) in p.query.rels.iter().zip(&p.plan.compiled) {
+            let version = self.snapshot(c.rel);
+            writeln!(
+                s,
+                "-- {}: pruning (epoch {}, {} crossbars) --",
+                c.rel.name(),
+                version.epoch,
+                version.states.len()
+            )
+            .expect("write to String");
+            s.push_str(&prune::explain_pruning(
+                &rq.filter,
+                self.layout.rel(c.rel),
+                &version.stats,
+                &c.steps,
+                c.mask_col,
+                self.cfg.xbar_rows,
+            ));
+        }
+        Ok(s)
+    }
+
     /// Prepare one query: parse (if text), compile and optimize once —
     /// or fetch the plan from the cache — and return the executable
     /// statement. A PQL program with several `query` blocks is an
@@ -840,21 +904,49 @@ impl Pimdb {
         // the cache map keys on the full canonical bytes (collision-free);
         // plan_key is the same stream's compact digest for observability
         let key = cache::plan_bytes(&query, self.cfg.opt_level, self.fingerprint);
+        // Zone-map snapshot per touched relation, pinned *before* the
+        // compile closure (snapshot takes the published lock; the cache
+        // holds its own — never nested). It feeds the cost-based
+        // predicate-ordering pass; plan-cache stability then keeps the
+        // chosen order fixed for the template's lifetime on this handle,
+        // so later DML never silently re-orders a cached plan.
+        let stats: BTreeMap<RelId, Arc<RelStats>> = query
+            .rels
+            .iter()
+            .map(|rq| rq.rel)
+            .collect::<BTreeSet<RelId>>()
+            .into_iter()
+            .map(|r| (r, Arc::clone(&self.snapshot(r).stats)))
+            .collect();
         let plan = self.cache.get_or_compile(key, || {
             let mut sum = OptStats::default();
-            let compiled = query
-                .rels
-                .iter()
-                .map(|rq| {
-                    let c = Compiler::compile(rq, self.layout.rel(rq.rel), self.cfg.xbar_cols)?;
-                    let (o, st) = opt::optimize(&c, self.cfg.opt_level, self.cfg.xbar_rows);
-                    sum.merge(&st);
-                    Ok(o)
-                })
-                .collect::<Result<Vec<_>, CompileError>>()?;
+            let mut compiled = Vec::with_capacity(query.rels.len());
+            let mut sim = Vec::with_capacity(query.rels.len());
+            for rq in &query.rels {
+                let c = Compiler::compile(rq, self.layout.rel(rq.rel), self.cfg.xbar_cols)?;
+                // two pass pipelines over the one compiled stream: the
+                // plain one is what the simulator charges (bit-identical
+                // to the legacy session), the stats-fed one is what the
+                // executor runs (cost-ordered so the runtime all-zero
+                // short-circuit fires as early as possible)
+                let (plain, st) =
+                    opt::optimize(&c, self.cfg.opt_level, self.cfg.xbar_rows);
+                let model =
+                    prune::SelectivityModel::new(self.layout.rel(rq.rel), &stats[&rq.rel]);
+                let (exec, _) = opt::optimize_with_stats(
+                    &c,
+                    self.cfg.opt_level,
+                    self.cfg.xbar_rows,
+                    Some(&model),
+                );
+                sum.merge(&st);
+                sim.push(plain);
+                compiled.push(exec);
+            }
             let scans = compiled.iter().map(sharedscan::scan_info).collect();
             Ok(CachedPlan {
                 compiled,
+                sim,
                 scans,
                 opt: sum.into(),
             })
@@ -947,14 +1039,18 @@ impl Pimdb {
             return Arc::clone(v);
         }
         let r = self.db.rel(rel);
+        let rlayout = self.layout.rel(rel);
+        let states = Arc::new(engine::load_states(
+            r,
+            rlayout,
+            self.cfg.xbar_cols,
+            0..r.records,
+        ));
+        let stats = Arc::new(RelStats::build(&states, rlayout));
         let v = Arc::new(RelVersion {
             epoch: 0,
-            states: Arc::new(engine::load_states(
-                r,
-                self.layout.rel(rel),
-                self.cfg.xbar_cols,
-                0..r.records,
-            )),
+            states,
+            stats,
         });
         *g = Some(Arc::clone(&v));
         v
@@ -978,9 +1074,10 @@ impl Pimdb {
             rels.into_iter().map(|r| (r, self.snapshot(r))).collect();
 
         let mut outs = Vec::with_capacity(compiled.len());
-        for (c, scan) in compiled.iter().zip(&p.plan.scans) {
+        for (i, (c, scan)) in compiled.iter().zip(&p.plan.scans).enumerate() {
             let version = &versions[&c.rel];
             let slot = self.slot(c.rel);
+            let rlayout = self.layout.rel(c.rel);
             // Shared scan: replay a cached mask only when it was computed
             // against exactly this epoch (same mask function per the byte
             // key, same input data per the epoch tag), transplanting the
@@ -988,20 +1085,41 @@ impl Pimdb {
             // prefix writes nothing but compute columns and the suffix
             // never writes the mask column, so the replay is bit-identical
             // to the full run.
-            let seed = scan
+            let cached = scan
                 .as_ref()
                 .and_then(|info| self.lock_scans(slot).get(&info.key, version.epoch))
-                .filter(|m| m.len() == version.states.len());
+                .filter(|(m, _)| m.len() == version.states.len());
+            // Zone-map pruning: a transplanted mask carries the skip
+            // bitmap it was computed with (same epoch, same decision); a
+            // fresh run derives it from the pinned snapshot's stats.
+            let skip: CachedSkip = match &cached {
+                Some((_, sk)) => Arc::clone(sk),
+                None => Arc::new(prune::skip_bitmap(
+                    &p.query.rels[i].filter,
+                    rlayout,
+                    &version.stats,
+                )),
+            };
+            let seed = cached.map(|(m, _)| m);
             let steps = match (scan, &seed) {
                 (Some(info), Some(_)) => &c.steps[info.prefix_len..],
                 _ => &c.steps[..],
             };
+            // the runtime all-zero short-circuit only applies to a full
+            // run (a seeded suffix has no mask-writing steps to abandon)
+            let sc = match (scan, &seed) {
+                (Some(info), None) => prune::short_circuit(&c.steps, c.mask_col, info.prefix_len),
+                _ => None,
+            };
+            let any_skip = skip.iter().any(|&b| b);
             let (out, masks) = self.pool.run_snapshot(
                 &version.states,
-                self.layout.rel(c.rel).compute_base,
+                rlayout.compute_base,
                 steps,
                 c.mask_col,
                 seed.as_ref(),
+                any_skip.then_some(&skip),
+                sc.as_ref(),
                 engine_kind,
                 &self.exec_plan,
             )?;
@@ -1009,21 +1127,27 @@ impl Pimdb {
                 if seed.is_some() {
                     self.scan_stats.hits.fetch_add(1, Ordering::Relaxed);
                 } else {
-                    self.lock_scans(slot)
-                        .insert(info.key.clone(), version.epoch, Arc::new(masks));
+                    self.lock_scans(slot).insert(
+                        info.key.clone(),
+                        version.epoch,
+                        Arc::new(masks),
+                        Arc::clone(&skip),
+                    );
                     self.scan_stats.misses.fetch_add(1, Ordering::Relaxed);
                 }
             }
             // Wear-tracked relations accumulate this program's write
             // profile into the reader ledger (folded into the committed
             // counters when the next batch begins). The wear model
-            // charges the full program even on a replay — the shared
-            // scan is a simulator shortcut, not a change to what the
-            // simulated device does.
+            // charges the full *simulated* program even on a replay, a
+            // skip, or a reordered execution — those are simulator
+            // shortcuts and host scheduling choices, not changes to what
+            // the simulated device does.
             {
                 let mut book = self.lock_book(slot);
                 if book.rows.is_some() {
-                    let profile = session::wear_profile(&c.steps, self.cfg.xbar_cols);
+                    let profile =
+                        session::wear_profile(&p.plan.sim[i].steps, self.cfg.xbar_cols);
                     for (dst, add) in book.ledger.iter_mut().zip(&profile) {
                         *dst = dst.wrapping_add(*add);
                     }
@@ -1033,14 +1157,20 @@ impl Pimdb {
         }
 
         let output = session::assemble_output(&p.query, compiled, &outs);
-        let mut metrics = session::simulate(&self.cfg, &p.query, compiled, &self.layout);
-        metrics.inter_cells = compiled
+        // metrics come from the plain-optimized twin: simulated cost is
+        // independent of the host-side pruning/reordering schedule
+        let mut metrics = session::simulate(&self.cfg, &p.query, &p.plan.sim, &self.layout);
+        metrics.inter_cells = p
+            .plan
+            .sim
             .iter()
             .map(|c| c.peak_inter_cells)
             .max()
             .unwrap_or(0);
         metrics.opt = p.plan.opt;
         metrics.plan_cache = self.cache.counters();
+        metrics.shards_skipped = outs.iter().map(|o| o.shards_skipped).sum();
+        metrics.steps_short_circuited = outs.iter().map(|o| o.steps_short_circuited).sum();
         Ok(QueryResult::new(
             p.query.clone(),
             RunReport {
@@ -1072,7 +1202,13 @@ impl Pimdb {
     /// executing the statements serially with [`Prepared::execute`]: the
     /// fused scan is a simulator shortcut that shares work, not a change
     /// to what the simulated device computes or what each query is
-    /// charged.
+    /// charged. The one exception is
+    /// [`QueryMetrics::steps_short_circuited`], a host-runtime
+    /// opportunity counter: a member whose prefix ran fused executes
+    /// only its suffix (which has no mask-writing steps to abandon), so
+    /// it reports 0 where its full serial run may report more.
+    /// [`QueryMetrics::shards_skipped`] is identical on both paths — the
+    /// skip bitmap travels with the cached mask.
     pub fn execute_batch_on(
         &self,
         stmts: &[&Prepared<'_>],
@@ -1110,7 +1246,7 @@ impl Pimdb {
                 let cached = self
                     .lock_scans(self.slot(c.rel))
                     .get(&info.key, version.epoch)
-                    .is_some_and(|m| m.len() == version.states.len());
+                    .is_some_and(|(m, _)| m.len() == version.states.len());
                 if cached {
                     continue;
                 }
@@ -1155,31 +1291,41 @@ impl Pimdb {
         // (and populates the same cache entry) its full serial run
         // would have — the suffix never writes the mask column, so the
         // fused prefix's mask plane equals the full run's.
-        let mut seeds: Vec<Vec<Option<CachedMask>>> = Vec::with_capacity(stmts.len());
+        let mut seeds: Vec<Vec<Option<(CachedMask, CachedSkip)>>> =
+            Vec::with_capacity(stmts.len());
         for p in stmts {
             let mut per_stmt = Vec::with_capacity(p.plan.compiled.len());
-            for (c, scan) in p.plan.compiled.iter().zip(&p.plan.scans) {
+            for (i, (c, scan)) in p.plan.compiled.iter().zip(&p.plan.scans).enumerate() {
                 let seed = scan.as_ref().and_then(|info| {
                     let version = &versions[&c.rel];
                     let slot = self.slot(c.rel);
                     let cached = self
                         .lock_scans(slot)
                         .get(&info.key, version.epoch)
-                        .filter(|m| m.len() == version.states.len());
+                        .filter(|(m, _)| m.len() == version.states.len());
                     match cached {
-                        Some(m) => {
+                        Some(pair) => {
                             self.scan_stats.hits.fetch_add(1, Ordering::Relaxed);
-                            Some(m)
+                            Some(pair)
                         }
                         None => match produced.get(&(c.rel, info.key.as_slice())) {
                             Some(m) => {
+                                // a freshly fused mask enters the cache
+                                // with the skip bitmap of the pinned
+                                // version, exactly like a serial miss
+                                let skip = Arc::new(prune::skip_bitmap(
+                                    &p.query.rels[i].filter,
+                                    self.layout.rel(c.rel),
+                                    &version.stats,
+                                ));
                                 self.lock_scans(slot).insert(
                                     info.key.clone(),
                                     version.epoch,
                                     Arc::clone(m),
+                                    Arc::clone(&skip),
                                 );
                                 self.scan_stats.misses.fetch_add(1, Ordering::Relaxed);
-                                Some(Arc::clone(m))
+                                Some((Arc::clone(m), skip))
                             }
                             // the mask was cached when Phase 2 peeked
                             // but purged since (concurrent DML): fall
@@ -1222,39 +1368,62 @@ impl Pimdb {
     fn finish_batch_member(
         &self,
         p: &Prepared<'_>,
-        seeds: &[Option<CachedMask>],
+        seeds: &[Option<(CachedMask, CachedSkip)>],
         versions: &BTreeMap<RelId, Arc<RelVersion>>,
         engine_kind: EngineKind,
     ) -> Result<QueryResult, PimdbError> {
         let compiled = &p.plan.compiled;
         let mut outs = Vec::with_capacity(compiled.len());
-        for ((c, scan), seed) in compiled.iter().zip(&p.plan.scans).zip(seeds) {
+        for (i, ((c, scan), seed)) in compiled.iter().zip(&p.plan.scans).zip(seeds).enumerate() {
             let version = &versions[&c.rel];
             let slot = self.slot(c.rel);
+            let rlayout = self.layout.rel(c.rel);
+            // a transplanted (or fused) mask carries its skip bitmap; a
+            // full run derives one from the pinned snapshot's stats
+            let skip: CachedSkip = match seed {
+                Some((_, sk)) => Arc::clone(sk),
+                None => Arc::new(prune::skip_bitmap(
+                    &p.query.rels[i].filter,
+                    rlayout,
+                    &version.stats,
+                )),
+            };
             let steps = match (scan, seed) {
                 (Some(info), Some(_)) => &c.steps[info.prefix_len..],
                 _ => &c.steps[..],
             };
+            let sc = match (scan, seed) {
+                (Some(info), None) => prune::short_circuit(&c.steps, c.mask_col, info.prefix_len),
+                _ => None,
+            };
+            let any_skip = skip.iter().any(|&b| b);
             let (out, masks) = self.pool.run_snapshot(
                 &version.states,
-                self.layout.rel(c.rel).compute_base,
+                rlayout.compute_base,
                 steps,
                 c.mask_col,
-                seed.as_ref(),
+                seed.as_ref().map(|(m, _)| m),
+                any_skip.then_some(&skip),
+                sc.as_ref(),
                 engine_kind,
                 &self.exec_plan,
             )?;
             if let (Some(info), None) = (scan, seed) {
                 // the Phase-2/3 fallback: this member ran in full, so it
                 // populates the cache exactly like a serial miss
-                self.lock_scans(slot)
-                    .insert(info.key.clone(), version.epoch, Arc::new(masks));
+                self.lock_scans(slot).insert(
+                    info.key.clone(),
+                    version.epoch,
+                    Arc::new(masks),
+                    Arc::clone(&skip),
+                );
                 self.scan_stats.misses.fetch_add(1, Ordering::Relaxed);
             }
             {
                 let mut book = self.lock_book(slot);
                 if book.rows.is_some() {
-                    let profile = session::wear_profile(&c.steps, self.cfg.xbar_cols);
+                    let profile =
+                        session::wear_profile(&p.plan.sim[i].steps, self.cfg.xbar_cols);
                     for (dst, add) in book.ledger.iter_mut().zip(&profile) {
                         *dst = dst.wrapping_add(*add);
                     }
@@ -1264,14 +1433,19 @@ impl Pimdb {
         }
 
         let output = session::assemble_output(&p.query, compiled, &outs);
-        let mut metrics = session::simulate(&self.cfg, &p.query, compiled, &self.layout);
-        metrics.inter_cells = compiled
+        // metrics from the plain-optimized twin, as in execute_prepared
+        let mut metrics = session::simulate(&self.cfg, &p.query, &p.plan.sim, &self.layout);
+        metrics.inter_cells = p
+            .plan
+            .sim
             .iter()
             .map(|c| c.peak_inter_cells)
             .max()
             .unwrap_or(0);
         metrics.opt = p.plan.opt;
         metrics.plan_cache = self.cache.counters();
+        metrics.shards_skipped = outs.iter().map(|o| o.shards_skipped).sum();
+        metrics.steps_short_circuited = outs.iter().map(|o| o.steps_short_circuited).sum();
         Ok(QueryResult::new(
             p.query.clone(),
             RunReport {
@@ -1547,9 +1721,19 @@ impl Pimdb {
                 rows.commit_batch(pending);
                 let epoch = rows.epoch();
                 drop(book);
+                // incremental zone-map maintenance: only crossbars whose
+                // planes this batch actually touched are recomputed
+                let states = Arc::new(states);
+                let stats = Arc::new(RelStats::update(
+                    &version.stats,
+                    &version.states,
+                    &states,
+                    self.layout.rel(rel),
+                ));
                 *self.lock_published(slot) = Some(Arc::new(RelVersion {
                     epoch,
-                    states: Arc::new(states),
+                    states,
+                    stats,
                 }));
                 slot.epoch_hint.store(epoch, Ordering::Release);
                 // masks computed against older versions can never be
@@ -1614,24 +1798,26 @@ fn rebind_labels(plan: Arc<CachedPlan>, query: &Query) -> Arc<CachedPlan> {
     if matches {
         return plan;
     }
-    let compiled = plan
-        .compiled
-        .iter()
-        .zip(&query.rels)
-        .map(|(c, rq)| {
-            let mut c = c.clone();
-            let n = rq.aggregates.len();
-            if n > 0 {
-                for (j, spec) in c.outputs.iter_mut().enumerate() {
-                    debug_assert_eq!(spec.kind, rq.aggregates[j % n].kind);
-                    spec.label = rq.aggregates[j % n].label;
+    let rebind = |programs: &[CompiledRelQuery]| {
+        programs
+            .iter()
+            .zip(&query.rels)
+            .map(|(c, rq)| {
+                let mut c = c.clone();
+                let n = rq.aggregates.len();
+                if n > 0 {
+                    for (j, spec) in c.outputs.iter_mut().enumerate() {
+                        debug_assert_eq!(spec.kind, rq.aggregates[j % n].kind);
+                        spec.label = rq.aggregates[j % n].label;
+                    }
                 }
-            }
-            c
-        })
-        .collect();
+                c
+            })
+            .collect()
+    };
     Arc::new(CachedPlan {
-        compiled,
+        compiled: rebind(&plan.compiled),
+        sim: rebind(&plan.sim),
         scans: plan.scans.clone(),
         opt: plan.opt,
     })
@@ -2378,5 +2564,94 @@ mod tests {
         let a = handle.prepare(probe).unwrap().execute().unwrap();
         let b = serial.prepare(probe).unwrap().execute().unwrap();
         assert_eq!(a.raw_report().output, b.raw_report().output);
+    }
+
+    /// Zone-map pruning skips crossbars a selective key-range filter
+    /// provably misses (lineitem loads in orderkey order, so only the
+    /// leading crossbars contain small keys), the result stays exact
+    /// against the host baseline, a shared-scan replay carries the same
+    /// skip bitmap, and a DML batch that empties the selected range
+    /// widens the skip set through incremental stats maintenance.
+    #[test]
+    fn zone_map_pruning_skips_shards_and_stays_exact() {
+        use crate::db::schema::RelId;
+        use crate::exec::baseline;
+        let handle = Pimdb::open(SystemConfig::default(), db()).unwrap();
+        let mut mirror = handle.database().clone();
+        let p = handle
+            .prepare("from lineitem | filter l_orderkey <= 64 | aggregate count() as n")
+            .unwrap();
+
+        let first = p.execute().unwrap();
+        let oracle = baseline::run_query(handle.cfg(), &mirror, &p.query);
+        assert_eq!(oracle.output, first.raw_report().output);
+        assert!(
+            first.metrics().shards_skipped > 0,
+            "a selective key-range filter must skip trailing crossbars"
+        );
+
+        // replay path: the transplanted mask carries its skip bitmap, so
+        // the seeded suffix run charges the identical skip count
+        let replay = p.execute().unwrap();
+        assert_eq!(handle.shared_scan_counters().hits, 1);
+        assert_eq!(oracle.output, replay.raw_report().output);
+        assert_eq!(
+            replay.metrics().shards_skipped,
+            first.metrics().shards_skipped
+        );
+
+        // deleting the whole selected range recomputes the mutated
+        // crossbars' zones; every crossbar is now provably disjoint
+        let d = lang::parse_dml("delete from lineitem where l_orderkey <= 64").unwrap();
+        handle.prepare_dml(&d).unwrap().execute().unwrap();
+        baseline::apply_dml(handle.cfg(), &mut mirror, &d);
+        assert_eq!(handle.relation_epoch(RelId::Lineitem), 1);
+        let after = p.execute().unwrap();
+        let oracle = baseline::run_query(handle.cfg(), &mirror, &p.query);
+        assert_eq!(oracle.output, after.raw_report().output);
+        assert!(
+            after.metrics().shards_skipped > first.metrics().shards_skipped,
+            "emptying the range must widen the skip set ({} vs {})",
+            after.metrics().shards_skipped,
+            first.metrics().shards_skipped
+        );
+    }
+
+    /// The runtime all-zero short-circuit abandons the rest of a filter
+    /// prefix once contradictory conjuncts empty the mask — on a filter
+    /// the zone maps cannot prune (every conjunct is individually
+    /// satisfiable on every crossbar).
+    #[test]
+    fn runtime_short_circuit_abandons_contradictory_filters() {
+        use crate::exec::baseline;
+        let handle = Pimdb::open(SystemConfig::default(), db()).unwrap();
+        let p = handle
+            .prepare(
+                "from lineitem | filter l_shipdate >= date(1994-06-01) \
+                 and l_shipdate < date(1994-06-01) and l_quantity < 10 \
+                 and l_quantity >= 10 | aggregate count() as n",
+            )
+            .unwrap();
+        let r = p.execute().unwrap();
+        let oracle = baseline::run_query(handle.cfg(), handle.database(), &p.query);
+        assert_eq!(oracle.output, r.raw_report().output);
+        assert_eq!(r.metrics().shards_skipped, 0, "zones cannot prune this");
+        assert!(
+            r.metrics().steps_short_circuited > 0,
+            "the emptied mask must abandon the remaining filter steps"
+        );
+    }
+
+    /// `--explain` surface: the pruning rendition names the relation,
+    /// shows the per-shard skip bitmap and the zone ranges consulted.
+    #[test]
+    fn explain_pruning_renders_skip_bitmap_and_zones() {
+        let handle = Pimdb::open(SystemConfig::default(), db()).unwrap();
+        let text = handle
+            .explain_pruning("from lineitem | filter l_orderkey <= 64 | aggregate count() as n")
+            .unwrap();
+        assert!(text.contains("lineitem: pruning (epoch 0"), "{text}");
+        assert!(text.contains("skip bitmap"), "{text}");
+        assert!(text.contains("crossbars skipped"), "{text}");
     }
 }

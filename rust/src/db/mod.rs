@@ -6,3 +6,4 @@ pub mod dbgen;
 pub mod freerows;
 pub mod layout;
 pub mod schema;
+pub mod stats;

@@ -1,0 +1,336 @@
+//! Per-crossbar zone-map statistics for statistics-driven shard pruning.
+//!
+//! Every query used to execute its full mask program over every crossbar
+//! of a relation, even when a selective filter provably selects nothing
+//! on most of them. This module computes, per crossbar and per attribute
+//! slot, a **zone map** over the *encoded* bit-plane value — min/max,
+//! the live-row count, and (for narrow dictionary columns) a distinct-id
+//! presence bitmap. The pruning pass in [`crate::query::opt::prune`]
+//! consults these zones to prove a predicate's mask is all-zero on a
+//! crossbar, letting the executor skip it entirely.
+//!
+//! Lifecycle: stats are built from the crossbar states at load
+//! ([`RelStats::build`]) and maintained incrementally by the
+//! group-commit leader ([`RelStats::update`] recomputes only crossbars
+//! whose planes actually changed). They are published epoch-tagged
+//! alongside the relation's `RelVersion`, so a pinned snapshot reader
+//! always sees stats consistent with its planes; recovery rebuilds them
+//! from the recovered states through the same `build` path (stats are
+//! derived state and are never checkpointed).
+//!
+//! The zone computation itself reuses the engine's plane-narrowing
+//! ReduceMin/ReduceMax idiom: walk the bit-planes MSB-first, keeping the
+//! candidate row set that can still attain the extremum. The whole
+//! decision procedure is mirrored line-by-line in `python/statsmirror.py`
+//! and pinned cross-language by [`RelStats::digest`].
+
+use crate::db::layout::RelationLayout;
+use crate::db::schema::Encoding;
+use crate::exec::engine::XbarState;
+use crate::pim::isa::ColRange;
+use crate::util::bits::{is_zero_words, popcount_words, WORDS, WORD_BITS};
+
+/// Widest dictionary column (in bits) that gets a distinct-id presence
+/// bitmap: the 64 bits of one `u64` cover every id of a `<= 6`-bit
+/// vocabulary.
+pub const DICT_BITMAP_MAX_BITS: usize = 6;
+
+/// Zone map of one attribute slot on one crossbar, over live rows only.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ColZone {
+    /// Smallest encoded value among live rows (`u64::MAX` when the
+    /// crossbar has no live rows — the empty-zone sentinel).
+    pub min: u64,
+    /// Largest encoded value among live rows (`0` when empty).
+    pub max: u64,
+    /// Distinct-id presence bitmap for dictionary columns of at most
+    /// [`DICT_BITMAP_MAX_BITS`] bits: bit `v` is set iff some live row
+    /// holds id `v`. `None` for non-dict or wide columns.
+    pub dict: Option<u64>,
+}
+
+impl ColZone {
+    /// The sentinel zone of a crossbar with no live rows: an empty range
+    /// (`min > max`) that every range predicate is disjoint from.
+    pub fn empty(dict_bitmap: bool) -> ColZone {
+        ColZone {
+            min: u64::MAX,
+            max: 0,
+            dict: if dict_bitmap { Some(0) } else { None },
+        }
+    }
+}
+
+/// Zone maps of one crossbar: live-row count plus one [`ColZone`] per
+/// attribute slot, in `layout.slots` order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct XbarStats {
+    /// Rows with the VALID bit set.
+    pub live_rows: u64,
+    /// Per-slot zones, parallel to `RelationLayout::slots`.
+    pub zones: Vec<ColZone>,
+}
+
+/// Zone-map statistics of one relation version: one [`XbarStats`] per
+/// materialized crossbar, in crossbar order.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RelStats {
+    /// Per-crossbar stats, parallel to the version's `Vec<XbarState>`.
+    pub xbars: Vec<XbarStats>,
+}
+
+/// Whether an attribute slot gets a distinct-id presence bitmap.
+fn wants_dict_bitmap(enc: Encoding, bits: usize) -> bool {
+    enc == Encoding::Dict && bits <= DICT_BITMAP_MAX_BITS
+}
+
+fn and_words(a: &[u64; WORDS], b: &[u64; WORDS]) -> [u64; WORDS] {
+    let mut r = [0u64; WORDS];
+    for i in 0..WORDS {
+        r[i] = a[i] & b[i];
+    }
+    r
+}
+
+fn andnot_words(a: &[u64; WORDS], b: &[u64; WORDS]) -> [u64; WORDS] {
+    let mut r = [0u64; WORDS];
+    for i in 0..WORDS {
+        r[i] = a[i] & !b[i];
+    }
+    r
+}
+
+/// Zone of one slot on one crossbar, given the live-row plane.
+///
+/// Min/max walk the slot's bit-planes MSB-first keeping the candidate
+/// set of rows that can still attain the extremum — the same narrowing
+/// the engine's ReduceMin/ReduceMax kernels perform, so the zone is
+/// exact over live rows (not an approximation).
+fn col_zone(st: &XbarState, start: usize, bits: usize, dict_bitmap: bool, live: &[u64; WORDS]) -> ColZone {
+    if is_zero_words(live) {
+        return ColZone::empty(dict_bitmap);
+    }
+    let mut cand = *live;
+    let mut max = 0u64;
+    for j in (0..bits).rev() {
+        let narrowed = and_words(&cand, &st.planes[start + j]);
+        if !is_zero_words(&narrowed) {
+            cand = narrowed;
+            max |= 1 << j;
+        }
+    }
+    let mut cand = *live;
+    let mut min = 0u64;
+    for j in (0..bits).rev() {
+        let narrowed = andnot_words(&cand, &st.planes[start + j]);
+        if !is_zero_words(&narrowed) {
+            cand = narrowed;
+        } else {
+            min |= 1 << j;
+        }
+    }
+    let dict = if dict_bitmap {
+        let mut bm = 0u64;
+        for (w, &word) in live.iter().enumerate() {
+            let mut rest = word;
+            while rest != 0 {
+                let row = w * WORD_BITS + rest.trailing_zeros() as usize;
+                bm |= 1 << st.value_at(row, ColRange::new(start, bits));
+                rest &= rest - 1;
+            }
+        }
+        Some(bm)
+    } else {
+        None
+    };
+    ColZone { min, max, dict }
+}
+
+/// Stats of one crossbar under `layout`.
+fn xbar_stats(st: &XbarState, layout: &RelationLayout) -> XbarStats {
+    let live = st.planes[layout.valid_col];
+    XbarStats {
+        live_rows: popcount_words(&live),
+        zones: layout
+            .slots
+            .iter()
+            .map(|s| {
+                col_zone(
+                    st,
+                    s.start,
+                    s.attr.bits,
+                    wants_dict_bitmap(s.attr.enc, s.attr.bits),
+                    &live,
+                )
+            })
+            .collect(),
+    }
+}
+
+impl RelStats {
+    /// Build zone maps for every crossbar of a relation version — the
+    /// load-time (and recovery-time) path.
+    pub fn build(states: &[XbarState], layout: &RelationLayout) -> RelStats {
+        RelStats {
+            xbars: states.iter().map(|st| xbar_stats(st, layout)).collect(),
+        }
+    }
+
+    /// Incremental rebuild after a group-committed DML batch: crossbars
+    /// whose planes are unchanged keep their previous stats; mutated or
+    /// newly appended crossbars are recomputed. `old_states` are the
+    /// pre-batch planes of the version `prev` was built from.
+    pub fn update(
+        prev: &RelStats,
+        old_states: &[XbarState],
+        new_states: &[XbarState],
+        layout: &RelationLayout,
+    ) -> RelStats {
+        debug_assert_eq!(prev.xbars.len(), old_states.len());
+        RelStats {
+            xbars: new_states
+                .iter()
+                .enumerate()
+                .map(|(x, st)| {
+                    if x < old_states.len() && old_states[x].planes == st.planes {
+                        prev.xbars[x].clone()
+                    } else {
+                        xbar_stats(st, layout)
+                    }
+                })
+                .collect(),
+        }
+    }
+
+    /// Canonical FNV-1a digest of the stats, for the cross-language
+    /// golden pin against `python/statsmirror.py`. Serialization:
+    /// little-endian u64s — crossbar count, then per crossbar the
+    /// live-row count followed by each zone's `min`, `max`, and a
+    /// `(has_dict, bitmap)` pair.
+    pub fn digest(&self) -> u64 {
+        let mut buf: Vec<u8> = Vec::new();
+        let mut put = |v: u64| buf.extend_from_slice(&v.to_le_bytes());
+        put(self.xbars.len() as u64);
+        for x in &self.xbars {
+            put(x.live_rows);
+            for z in &x.zones {
+                put(z.min);
+                put(z.max);
+                put(z.dict.is_some() as u64);
+                put(z.dict.unwrap_or(0));
+            }
+        }
+        crate::api::cache::fnv1a(&buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::db::layout::DbLayout;
+    use crate::db::schema::RelId;
+    use crate::util::rng::Rng;
+
+    fn layout() -> RelationLayout {
+        let cfg = SystemConfig::default();
+        DbLayout::build(&cfg, &|rel| rel.records_at_sf(0.002))
+            .unwrap()
+            .rel(RelId::Supplier)
+            .clone()
+    }
+
+    /// Deterministic states: `n` crossbars of the SUPPLIER layout with
+    /// Rng-driven values and liveness. Shared with the golden-digest pin
+    /// (mirrored by python/statsmirror.py's `golden_states`).
+    fn golden_states(layout: &RelationLayout, n: usize, seed: u64) -> Vec<XbarState> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let mut st = XbarState::new(layout.compute_base + 8);
+                for row in 0..200 {
+                    let live = rng.next_u64() % 4 != 0;
+                    for s in &layout.slots {
+                        let v = rng.next_u64() & ((1u64 << s.attr.bits) - 1);
+                        if live {
+                            st.write_value(row, ColRange::new(s.start, s.attr.bits), v);
+                        }
+                    }
+                    st.write_value(row, ColRange::new(layout.valid_col, 1), live as u64);
+                }
+                st
+            })
+            .collect()
+    }
+
+    #[test]
+    fn zones_match_scalar_scan() {
+        let layout = layout();
+        let states = golden_states(&layout, 3, 7);
+        let stats = RelStats::build(&states, &layout);
+        for (x, st) in states.iter().enumerate() {
+            let live: Vec<usize> = (0..crate::util::bits::XBAR_ROWS)
+                .filter(|&r| st.value_at(r, ColRange::new(layout.valid_col, 1)) == 1)
+                .collect();
+            assert_eq!(stats.xbars[x].live_rows, live.len() as u64);
+            for (i, s) in layout.slots.iter().enumerate() {
+                let r = ColRange::new(s.start, s.attr.bits);
+                let vals: Vec<u64> = live.iter().map(|&row| st.value_at(row, r)).collect();
+                let z = &stats.xbars[x].zones[i];
+                if vals.is_empty() {
+                    assert_eq!((z.min, z.max), (u64::MAX, 0));
+                } else {
+                    assert_eq!(z.min, *vals.iter().min().unwrap(), "{} min", s.attr.name);
+                    assert_eq!(z.max, *vals.iter().max().unwrap(), "{} max", s.attr.name);
+                }
+                match z.dict {
+                    Some(bm) => {
+                        assert!(wants_dict_bitmap(s.attr.enc, s.attr.bits));
+                        let want = vals.iter().fold(0u64, |a, &v| a | (1 << v));
+                        assert_eq!(bm, want, "{} bitmap", s.attr.name);
+                    }
+                    None => assert!(!wants_dict_bitmap(s.attr.enc, s.attr.bits)),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_crossbar_gets_sentinel_zones() {
+        let layout = layout();
+        let st = XbarState::new(layout.compute_base + 8);
+        let stats = RelStats::build(&[st], &layout);
+        assert_eq!(stats.xbars[0].live_rows, 0);
+        for z in &stats.xbars[0].zones {
+            assert!(z.min > z.max);
+            assert_eq!(z.dict.unwrap_or(0), 0);
+        }
+    }
+
+    #[test]
+    fn incremental_update_equals_full_rebuild() {
+        let layout = layout();
+        let old = golden_states(&layout, 4, 21);
+        let prev = RelStats::build(&old, &layout);
+        // mutate crossbar 2, append crossbar 4
+        let mut new = old.clone();
+        new[2].write_value(5, ColRange::new(layout.slots[0].start, layout.slots[0].attr.bits), 3);
+        new[2].write_value(5, ColRange::new(layout.valid_col, 1), 1);
+        new.extend(golden_states(&layout, 1, 99));
+        let inc = RelStats::update(&prev, &old, &new, &layout);
+        let full = RelStats::build(&new, &layout);
+        assert_eq!(inc, full);
+        // unchanged crossbars kept their exact prior stats
+        assert_eq!(inc.xbars[0], prev.xbars[0]);
+        assert_eq!(inc.xbars[3], prev.xbars[3]);
+    }
+
+    #[test]
+    fn golden_digest_pinned_cross_language() {
+        // Mirrored by python/statsmirror.py::test_golden_digest — the two
+        // implementations must serialize and hash identically.
+        let layout = layout();
+        let stats = RelStats::build(&golden_states(&layout, 3, 0xDB), &layout);
+        assert_eq!(stats.digest(), 0x06BE_552B_21FA_62A7, "stats golden digest drifted");
+    }
+}

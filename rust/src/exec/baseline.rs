@@ -257,6 +257,8 @@ pub fn run_query(cfg: &SystemConfig, db: &Database, q: &Query) -> RunReport {
         inter_cells: 0,
         opt: Default::default(),
         plan_cache: Default::default(),
+        shards_skipped: 0,
+        steps_short_circuited: 0,
         peak_chip_w: 0.0,
         avg_chip_w: 0.0,
         theoretical_chip_w: 0.0,

@@ -20,9 +20,10 @@ use crate::db::dbgen::Relation;
 use crate::db::layout::RelationLayout;
 use crate::pim::isa::{ColRange, Opcode, PimInstruction};
 use crate::query::compiler::Step;
+use crate::query::opt::prune::ShortCircuit;
 use crate::util::bits::{
-    load_lanes, popcount_words, store_lanes, vand, vnot, vor, vxor, PLANES, WORDS, WORD_BITS,
-    WORD_CHUNKS, XBAR_ROWS,
+    is_zero_words, load_lanes, popcount_words, store_lanes, vand, vnot, vor, vxor, PLANES, WORDS,
+    WORD_BITS, WORD_CHUNKS, XBAR_ROWS,
 };
 
 /// Functional state of one crossbar: `planes[c]` holds column `c` of all
@@ -219,6 +220,12 @@ pub struct ExecOutputs {
     pub reduces: Vec<Vec<u128>>,
     /// Selected records per crossbar (popcount of the filter mask).
     pub mask_counts: Vec<u64>,
+    /// Crossbars the executor never ran because a zone-map skip bitmap
+    /// proved their mask all-zero (statistics-driven pruning).
+    pub shards_skipped: u64,
+    /// Filter-prefix steps abandoned by the runtime all-zero mask
+    /// short-circuit, summed over crossbars.
+    pub steps_short_circuited: u64,
 }
 
 impl ExecOutputs {
@@ -460,6 +467,7 @@ pub fn exec_steps_native(states: &mut [XbarState], steps: &[Step], mask_col: usi
     ExecOutputs {
         reduces,
         mask_counts,
+        ..ExecOutputs::default()
     }
 }
 
@@ -474,12 +482,26 @@ pub fn exec_steps_native(states: &mut [XbarState], steps: &[Step], mask_col: usi
 /// into `mask_col` before the steps run, so callers pass the program's
 /// suffix steps. Returns the outputs plus the final mask plane of every
 /// crossbar (for capture into the scan cache).
+///
+/// `skip`, when present, is the shard's slice of a zone-map skip bitmap
+/// ([`crate::query::opt::prune::skip_bitmap`]): flagged crossbars are
+/// never interpreted — their mask is provably all-zero, and because the
+/// compiler masks (or adjusts) every value expression, their outputs are
+/// those of an all-zero crossbar, computed once lazily and replicated.
+/// `sc`, when present, is the program's short-circuit schedule
+/// ([`crate::query::opt::prune::short_circuit`]): after each scheduled
+/// check step, an all-zero mask plane abandons the rest of the filter
+/// prefix and resumes at the suffix. Both are pure execution shortcuts —
+/// outputs stay bit-identical, only the skip counters observe them.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn exec_steps_snapshot(
     states: &[XbarState],
     compute_base: usize,
     steps: &[Step],
     mask_col: usize,
     seed_masks: Option<&[[u64; WORDS]]>,
+    skip: Option<&[bool]>,
+    sc: Option<&ShortCircuit>,
 ) -> (ExecOutputs, Vec<[u64; WORDS]>) {
     let n_reduces = steps
         .iter()
@@ -495,18 +517,70 @@ pub(crate) fn exec_steps_snapshot(
         "mask_col {mask_col} out of range for crossbar states"
     );
     debug_assert!(seed_masks.is_none_or(|s| s.len() == states.len()));
+    debug_assert!(skip.is_none_or(|s| s.len() == states.len()));
+    let check_at: Vec<bool> = match sc {
+        Some(sc) => {
+            debug_assert!(sc.resume <= steps.len());
+            let mut t = vec![false; steps.len()];
+            for &k in &sc.checks {
+                t[k] = true;
+            }
+            t
+        }
+        None => Vec::new(),
+    };
     let mut reduces = vec![Vec::with_capacity(states.len()); n_reduces];
     let mut mask_counts = Vec::with_capacity(states.len());
     let mut mask_planes = Vec::with_capacity(states.len());
     let mut scratch = Scratch::new();
+    let mut shards_skipped = 0u64;
+    let mut steps_short_circuited = 0u64;
+    // canonical outputs of a zone-pruned crossbar, computed lazily on
+    // the first skip by running the program once over an all-zero
+    // crossbar: the zone proof says the real mask is all-zero, and every
+    // reduce value is mask-determined (the compiler masks or adjusts
+    // non-selected rows), so the all-zero run is bit-identical to
+    // executing in place.
+    let mut skipped_outs: Option<Vec<u128>> = None;
     for (x, data) in states.iter().enumerate() {
+        if skip.is_some_and(|s| s[x]) {
+            let outs = skipped_outs.get_or_insert_with(|| {
+                let zero = XbarState::new(data.planes.len());
+                let mut view = SnapshotView::new(&zero, compute_base);
+                let mut out = Vec::with_capacity(n_reduces);
+                for step in steps {
+                    exec_instr_on(&mut view, &step.instr, &mut out, &mut scratch);
+                }
+                debug_assert!(
+                    is_zero_words(&view.ld(mask_col)),
+                    "skip bitmap flagged a program whose mask is not zero on an all-zero crossbar"
+                );
+                out
+            });
+            for (i, &v) in outs.iter().enumerate() {
+                reduces[i].push(v);
+            }
+            mask_counts.push(0);
+            mask_planes.push([0u64; WORDS]);
+            shards_skipped += 1;
+            continue;
+        }
         let mut view = SnapshotView::new(data, compute_base);
         if let Some(seeds) = seed_masks {
             view.st(mask_col, seeds[x]);
         }
         let mut out = Vec::with_capacity(n_reduces);
-        for step in steps {
-            exec_instr_on(&mut view, &step.instr, &mut out, &mut scratch);
+        let mut k = 0;
+        while k < steps.len() {
+            exec_instr_on(&mut view, &steps[k].instr, &mut out, &mut scratch);
+            if let Some(sc) = sc {
+                if check_at[k] && is_zero_words(&view.ld(mask_col)) {
+                    steps_short_circuited += (sc.resume - k - 1) as u64;
+                    k = sc.resume;
+                    continue;
+                }
+            }
+            k += 1;
         }
         for (i, v) in out.into_iter().enumerate() {
             reduces[i].push(v);
@@ -519,6 +593,8 @@ pub(crate) fn exec_steps_snapshot(
         ExecOutputs {
             reduces,
             mask_counts,
+            shards_skipped,
+            steps_short_circuited,
         },
         mask_planes,
     )
@@ -930,7 +1006,8 @@ mod tests {
                 )),
             ];
             let want = exec_steps_native(&mut native, &steps, mask_col);
-            let (got, masks) = exec_steps_snapshot(&shared, compute_base, &steps, mask_col, None);
+            let (got, masks) =
+                exec_steps_snapshot(&shared, compute_base, &steps, mask_col, None, None, None);
             assert_eq!(got.reduces, want.reduces);
             assert_eq!(got.mask_counts, want.mask_counts);
             // the captured mask planes equal the in-place result planes
@@ -952,8 +1029,15 @@ mod tests {
             }
             // replay: seeding the captured masks and running only the
             // suffix reproduces the full-program outputs
-            let (replayed, masks2) =
-                exec_steps_snapshot(&shared, compute_base, &steps[1..], mask_col, Some(&masks));
+            let (replayed, masks2) = exec_steps_snapshot(
+                &shared,
+                compute_base,
+                &steps[1..],
+                mask_col,
+                Some(&masks),
+                None,
+                None,
+            );
             assert_eq!(replayed.reduces, want.reduces);
             assert_eq!(replayed.mask_counts, want.mask_counts);
             assert_eq!(masks2, masks);
@@ -997,8 +1081,8 @@ mod tests {
             // the hand-fused union: shared LtImm once, then q1's extras
             let fused = vec![q1[0].clone(), q1[1].clone(), q1[2].clone()];
             let got = exec_steps_fused(&states, compute_base, &fused, &[20, 22]);
-            let (_, want0) = exec_steps_snapshot(&states, compute_base, &q0, 20, None);
-            let (_, want1) = exec_steps_snapshot(&states, compute_base, &q1, 22, None);
+            let (_, want0) = exec_steps_snapshot(&states, compute_base, &q0, 20, None, None, None);
+            let (_, want1) = exec_steps_snapshot(&states, compute_base, &q1, 22, None, None, None);
             assert_eq!(got[0], want0);
             assert_eq!(got[1], want1);
         });

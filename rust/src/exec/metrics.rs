@@ -146,6 +146,14 @@ pub struct QueryMetrics {
     /// Plan-cache counters of the serving [`crate::api::Pimdb`] handle at
     /// execution time (zero on the legacy / baseline paths).
     pub plan_cache: PlanCacheCounters,
+    /// Crossbars the executor never ran because the relation's zone maps
+    /// proved the query's filter selects no live row there (statistics-
+    /// driven shard pruning; zero on the legacy / baseline paths).
+    pub shards_skipped: u64,
+    /// Filter-prefix steps abandoned mid-program by the runtime all-zero
+    /// mask short-circuit, summed over crossbars (zero on the legacy /
+    /// baseline paths).
+    pub steps_short_circuited: u64,
     /// Peak memory-chip power over the run (W, Fig. 14).
     pub peak_chip_w: f64,
     /// Highest windowed-average chip power (W, Fig. 14).

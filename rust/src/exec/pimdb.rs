@@ -488,6 +488,8 @@ fn insert_metrics(cfg: &SystemConfig, row_bits: usize) -> QueryMetrics {
         inter_cells: 0,
         opt: OptSummary::default(),
         plan_cache: Default::default(),
+        shards_skipped: 0,
+        steps_short_circuited: 0,
         peak_chip_w: 0.0,
         avg_chip_w: 0.0,
         theoretical_chip_w: 0.0,
@@ -903,6 +905,8 @@ pub(crate) fn simulate(
         inter_cells: 0, // filled by caller
         opt: OptSummary::default(), // filled by caller
         plan_cache: Default::default(), // filled by the api facade
+        shards_skipped: 0,      // filled by the api facade
+        steps_short_circuited: 0, // filled by the api facade
         peak_chip_w,
         avg_chip_w,
         theoretical_chip_w: power::theoretical_peak_query_chip_w(cfg, max_pages),

@@ -160,6 +160,8 @@ pub fn run_tasks(
                 dst.extend(src);
             }
             out.mask_counts.extend(part.mask_counts);
+            out.shards_skipped += part.shards_skipped;
+            out.steps_short_circuited += part.steps_short_circuited;
         }
     }
     Ok(merged)

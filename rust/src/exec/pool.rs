@@ -33,6 +33,7 @@ use crate::exec::pimdb::EngineKind;
 use crate::exec::plan::ExecPlan;
 use crate::exec::ExecError;
 use crate::query::compiler::Step;
+use crate::query::opt::prune::ShortCircuit;
 use crate::util::bits::WORDS;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -169,8 +170,13 @@ impl ShardPool {
     /// Execute a compiled program over an `Arc`-shared crossbar snapshot,
     /// sharded per `plan`, without mutating the snapshot. `seed_masks`
     /// (one plane per crossbar) replays a cached shared-scan mask, in
-    /// which case `steps` is the program's suffix. Returns the merged
-    /// outputs in crossbar order plus every crossbar's final mask plane.
+    /// which case `steps` is the program's suffix. `skip` (one flag per
+    /// crossbar) is a zone-map skip bitmap and `sc` the program's
+    /// short-circuit schedule — both are sliced per shard and forwarded
+    /// to the engine (native path only; the PJRT backend runs the full
+    /// program, with identical outputs and zero skip counters). Returns
+    /// the merged outputs in crossbar order plus every crossbar's final
+    /// mask plane.
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn run_snapshot(
         &self,
@@ -179,14 +185,25 @@ impl ShardPool {
         steps: &[Step],
         mask_col: usize,
         seed_masks: Option<&Arc<Vec<[u64; WORDS]>>>,
+        skip: Option<&Arc<Vec<bool>>>,
+        sc: Option<&ShortCircuit>,
         engine_kind: EngineKind,
         plan: &ExecPlan,
     ) -> Result<(ExecOutputs, Vec<[u64; WORDS]>), ExecError> {
         if states.is_empty() {
             // keep the output shape identical to the serial interpreter
-            return Ok(engine::exec_steps_snapshot(&[], compute_base, steps, mask_col, None));
+            return Ok(engine::exec_steps_snapshot(
+                &[],
+                compute_base,
+                steps,
+                mask_col,
+                None,
+                None,
+                None,
+            ));
         }
         debug_assert!(seed_masks.is_none_or(|s| s.len() == states.len()));
+        debug_assert!(skip.is_none_or(|s| s.len() == states.len()));
         let shard_len = plan.shard_len(states.len());
         let ranges: Vec<std::ops::Range<usize>> = (0..states.len())
             .step_by(shard_len)
@@ -194,10 +211,13 @@ impl ShardPool {
             .collect();
         let (tx, rx) = mpsc::channel();
         let steps_arc: Arc<Vec<Step>> = Arc::new(steps.to_vec());
+        let sc_arc: Option<Arc<ShortCircuit>> = sc.map(|s| Arc::new(s.clone()));
         for (i, r) in ranges.iter().enumerate() {
             let states = Arc::clone(states);
             let steps = Arc::clone(&steps_arc);
             let seeds = seed_masks.map(Arc::clone);
+            let skip = skip.map(Arc::clone);
+            let sc = sc_arc.clone();
             let tx = tx.clone();
             let r = r.clone();
             self.submit(Box::new(move || {
@@ -208,6 +228,8 @@ impl ShardPool {
                         &steps,
                         mask_col,
                         seeds.as_ref().map(|s| &s[r.clone()]),
+                        skip.as_ref().map(|s| &s[r.clone()]),
+                        sc.as_deref(),
                         engine_kind,
                     )
                 }))
@@ -241,6 +263,8 @@ impl ShardPool {
                         dst.extend(src);
                     }
                     m_out.mask_counts.extend(out.mask_counts);
+                    m_out.shards_skipped += out.shards_skipped;
+                    m_out.steps_short_circuited += out.steps_short_circuited;
                     m_masks.extend(masks);
                 }
             }
@@ -316,13 +340,20 @@ impl ShardPool {
 
 /// One shard's work: snapshot-interpret natively, or clone-and-run for
 /// the PJRT backend (its kernels mutate state in place, so the snapshot
-/// guarantee is met by handing it a private copy of the shard).
+/// guarantee is met by handing it a private copy of the shard). The skip
+/// bitmap and short-circuit schedule apply to the native interpreter
+/// only: the PJRT kernels run the full program — bit-identical outputs
+/// by the zone/short-circuit proofs, just without the shortcut — so its
+/// skip counters stay zero.
+#[allow(clippy::too_many_arguments)]
 fn run_shard(
     shard: &[XbarState],
     compute_base: usize,
     steps: &[Step],
     mask_col: usize,
     seed_masks: Option<&[[u64; WORDS]]>,
+    skip: Option<&[bool]>,
+    sc: Option<&ShortCircuit>,
     engine_kind: EngineKind,
 ) -> Result<(ExecOutputs, Vec<[u64; WORDS]>), ExecError> {
     match engine_kind {
@@ -332,6 +363,8 @@ fn run_shard(
             steps,
             mask_col,
             seed_masks,
+            skip,
+            sc,
         )),
         EngineKind::Pjrt => {
             let mut owned: Vec<XbarState> = shard.to_vec();
@@ -480,7 +513,17 @@ mod tests {
             let want = engine::exec_steps_native(&mut serial, &steps, 100);
             let shared = Arc::new(random_states(90 + n_xbars as u64, n_xbars));
             let (got, masks) = pool
-                .run_snapshot(&shared, 64, &steps, 100, None, EngineKind::Native, &plan)
+                .run_snapshot(
+                    &shared,
+                    64,
+                    &steps,
+                    100,
+                    None,
+                    None,
+                    None,
+                    EngineKind::Native,
+                    &plan,
+                )
                 .unwrap();
             assert_eq!(got.reduces, want.reduces, "{workers} workers");
             assert_eq!(got.mask_counts, want.mask_counts);
@@ -513,6 +556,8 @@ mod tests {
                                 &steps,
                                 100,
                                 None,
+                                None,
+                                None,
                                 EngineKind::Native,
                                 &plan,
                             )
@@ -537,7 +582,17 @@ mod tests {
         let plan = ExecPlan::with_parallelism(2);
         let shared = Arc::new(random_states(21, 6));
         let (want, masks) = pool
-            .run_snapshot(&shared, 64, &steps, 100, None, EngineKind::Native, &plan)
+            .run_snapshot(
+                &shared,
+                64,
+                &steps,
+                100,
+                None,
+                None,
+                None,
+                EngineKind::Native,
+                &plan,
+            )
             .unwrap();
         let seeds = Arc::new(masks);
         let (got, masks2) = pool
@@ -547,6 +602,8 @@ mod tests {
                 &steps[1..],
                 100,
                 Some(&seeds),
+                None,
+                None,
                 EngineKind::Native,
                 &plan,
             )
@@ -554,6 +611,75 @@ mod tests {
         assert_eq!(got.reduces, want.reduces);
         assert_eq!(got.mask_counts, want.mask_counts);
         assert_eq!(&masks2, seeds.as_ref());
+    }
+
+    #[test]
+    fn skip_bitmap_and_short_circuit_are_pure_shortcuts() {
+        // mask program whose mask is provably zero on an all-zero
+        // crossbar: GtImm(c0 > 5) -> c100; And(c100, c1) -> c100
+        // (combine); masked And + reduce as the suffix
+        let steps = vec![
+            step(PimInstruction::with_imm(
+                Opcode::GtImm,
+                ColRange::new(0, 16),
+                ColRange::new(100, 1),
+                5,
+            )),
+            step(PimInstruction::binary(
+                Opcode::And,
+                ColRange::new(100, 1),
+                ColRange::new(1, 1),
+                ColRange::new(100, 1),
+            )),
+            step(PimInstruction::binary(
+                Opcode::And,
+                ColRange::new(0, 16),
+                ColRange::new(100, 1),
+                ColRange::new(110, 16),
+            )),
+            step(PimInstruction::unary(
+                Opcode::ReduceSum,
+                ColRange::new(110, 16),
+                ColRange::new(110, 16),
+            )),
+        ];
+        // crossbars 1 and 3 are all-zero and zone-skipped; crossbar 4 is
+        // all-zero but *not* skipped, so the runtime short-circuit fires
+        let mut states = random_states(55, 5);
+        states[1] = XbarState::new(160);
+        states[3] = XbarState::new(160);
+        states[4] = XbarState::new(160);
+        let mut serial = states.clone();
+        let want = engine::exec_steps_native(&mut serial, &steps, 100);
+        let shared = Arc::new(states);
+        let skip = Arc::new(vec![false, true, false, true, false]);
+        let sc = crate::query::opt::prune::short_circuit(&steps, 100, 2).unwrap();
+        assert_eq!(sc.checks, vec![0]);
+        assert_eq!(sc.resume, 2);
+        for workers in [1usize, 2, 8] {
+            let pool = ShardPool::new(workers, 0);
+            let plan = ExecPlan::with_parallelism(workers);
+            let (got, masks) = pool
+                .run_snapshot(
+                    &shared,
+                    64,
+                    &steps,
+                    100,
+                    None,
+                    Some(&skip),
+                    Some(&sc),
+                    EngineKind::Native,
+                    &plan,
+                )
+                .unwrap();
+            assert_eq!(got.reduces, want.reduces, "{workers} workers");
+            assert_eq!(got.mask_counts, want.mask_counts, "{workers} workers");
+            assert_eq!(got.shards_skipped, 2, "{workers} workers");
+            assert_eq!(got.steps_short_circuited, 1, "{workers} workers");
+            for (x, m) in masks.iter().enumerate() {
+                assert_eq!(*m, serial[x].planes[100], "crossbar {x}");
+            }
+        }
     }
 
     #[test]
@@ -582,10 +708,30 @@ mod tests {
                 .run_fused(&shared, 64, &fused, &[100, 101], EngineKind::Native, &plan)
                 .unwrap();
             let (_, want0) = pool
-                .run_snapshot(&shared, 64, &fused[..1], 100, None, EngineKind::Native, &plan)
+                .run_snapshot(
+                    &shared,
+                    64,
+                    &fused[..1],
+                    100,
+                    None,
+                    None,
+                    None,
+                    EngineKind::Native,
+                    &plan,
+                )
                 .unwrap();
             let (_, want1) = pool
-                .run_snapshot(&shared, 64, &fused[1..], 101, None, EngineKind::Native, &plan)
+                .run_snapshot(
+                    &shared,
+                    64,
+                    &fused[1..],
+                    101,
+                    None,
+                    None,
+                    None,
+                    EngineKind::Native,
+                    &plan,
+                )
                 .unwrap();
             assert_eq!(got[0], want0, "{workers} workers");
             assert_eq!(got[1], want1, "{workers} workers");
@@ -609,7 +755,17 @@ mod tests {
         let plan = ExecPlan::with_parallelism(2);
         let shared = Arc::new(random_states(3, 2));
         let err = pool
-            .run_snapshot(&shared, 64, &program(), 100, None, EngineKind::Pjrt, &plan)
+            .run_snapshot(
+                &shared,
+                64,
+                &program(),
+                100,
+                None,
+                None,
+                None,
+                EngineKind::Pjrt,
+                &plan,
+            )
             .unwrap_err();
         let ExecError::Backend { engine, msg } = err;
         assert_eq!(engine, "pjrt");

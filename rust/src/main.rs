@@ -85,23 +85,33 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     };
     if args.has("explain") {
         for s in &statements {
-            let text = match s {
-                Statement::Query(q) => pimdb::query::opt::explain_query(
-                    q,
-                    db.layout(),
-                    cfg.xbar_cols,
-                    cfg.xbar_rows,
-                    cfg.opt_level,
-                ),
-                Statement::Dml(d) => pimdb::query::opt::explain_dml(
-                    d,
-                    db.layout(),
-                    cfg.xbar_cols,
-                    cfg.xbar_rows,
-                ),
+            match s {
+                Statement::Query(q) => {
+                    let text = pimdb::query::opt::explain_query(
+                        q,
+                        db.layout(),
+                        cfg.xbar_cols,
+                        cfg.xbar_rows,
+                        cfg.opt_level,
+                    )
+                    .map_err(PimdbError::from)?;
+                    print!("{text}");
+                    // zone-map pruning decisions next to the disassembly:
+                    // per-shard skip bitmap, zone ranges consulted, and
+                    // the cost-ordered predicate sequence
+                    print!("{}", db.explain_pruning(q)?);
+                }
+                Statement::Dml(d) => {
+                    let text = pimdb::query::opt::explain_dml(
+                        d,
+                        db.layout(),
+                        cfg.xbar_cols,
+                        cfg.xbar_rows,
+                    )
+                    .map_err(PimdbError::from)?;
+                    print!("{text}");
+                }
             }
-            .map_err(PimdbError::from)?;
-            print!("{text}");
         }
     }
 
@@ -251,6 +261,8 @@ fn print_report(cfg: &SystemConfig, engine_kind: engine::EngineKind, r: &RunRepo
         m.opt.steps_before, m.opt.steps_after,
         m.opt.cycles_before, m.opt.cycles_after,
         m.opt.inter_before, m.opt.inter_after);
+    println!("  pruning        {} shards skipped, {} steps short-circuited",
+        m.shards_skipped, m.steps_short_circuited);
     println!("  chip power     peak {:.2} W, avg {:.3} W, theoretical {:.0} W",
         m.peak_chip_w, m.avg_chip_w, m.theoretical_chip_w);
     println!("  endurance      {:.4} ops/cell/exec, 10yr {}",

@@ -44,6 +44,7 @@
 mod alloc;
 pub mod fusion;
 mod passes;
+pub mod prune;
 pub mod sharedscan;
 
 use std::fmt;
@@ -149,6 +150,23 @@ pub fn optimize(
     level: OptLevel,
     xbar_rows: usize,
 ) -> (CompiledRelQuery, OptStats) {
+    optimize_with_stats(c, level, xbar_rows, None)
+}
+
+/// [`optimize`] with an optional zone-map selectivity model: when
+/// present, `-O2` additionally runs the cost-based predicate-ordering
+/// pass ([`prune`]), permuting commutative AND-chain segments
+/// most-selective-then-cheapest-first so the runtime all-zero
+/// short-circuit fires as early as possible. The permutation preserves
+/// the instruction multiset, so cycles, wear and the cell peak are
+/// untouched; without a model the pipeline is byte-identical to
+/// [`optimize`].
+pub fn optimize_with_stats(
+    c: &CompiledRelQuery,
+    level: OptLevel,
+    xbar_rows: usize,
+    sel: Option<&prune::SelectivityModel<'_>>,
+) -> (CompiledRelQuery, OptStats) {
     let mut stats = OptStats {
         steps_before: c.steps.len(),
         cycles_before: program_cycles(&c.steps, xbar_rows),
@@ -163,7 +181,7 @@ pub fn optimize(
     }
 
     let out = if level == OptLevel::O2 {
-        run_o2(c).unwrap_or_else(|| run_o1(c))
+        run_o2(c, xbar_rows, sel).unwrap_or_else(|| run_o1(c))
     } else {
         run_o1(c)
     };
@@ -195,15 +213,27 @@ fn run_o1(c: &CompiledRelQuery) -> CompiledRelQuery {
 
 /// `-O2`: virtualize columns (undo LIFO reuse via the compiler's span
 /// metadata), run peephole + CSE + valid-elide + DCE in the reuse-free
-/// space, then reallocate columns by live interval. `None` when any stage
+/// space — then, when a selectivity model is supplied, reorder the
+/// commutative AND-chain segments ([`prune::SelectivityModel`]; the
+/// virtual space is where segments are naturally column-disjoint) — and
+/// finally reallocate columns by live interval. `None` when any stage
 /// cannot prove itself safe or the reallocation would not keep the cell
 /// peak within the original (the caller then uses `-O1`).
-fn run_o2(c: &CompiledRelQuery) -> Option<CompiledRelQuery> {
+fn run_o2(
+    c: &CompiledRelQuery,
+    xbar_rows: usize,
+    sel: Option<&prune::SelectivityModel<'_>>,
+) -> Option<CompiledRelQuery> {
     let virt = alloc::virtualize(c)?;
     let steps = passes::peephole_in_set(virt.steps, virt.mask_col);
     let (steps, mask_col) = passes::cse(steps, virt.mask_col, c.compute_base)?;
     let steps = passes::valid_elide(steps, c.valid_col);
     let steps = passes::dce(steps, mask_col);
+    let steps = if sel.is_some() {
+        prune::reorder_mask_prefix(&steps, mask_col, xbar_rows, sel).unwrap_or(steps)
+    } else {
+        steps
+    };
     let placed = alloc::realloc(
         steps,
         &virt.blocks,

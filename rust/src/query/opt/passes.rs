@@ -47,7 +47,7 @@ pub(super) fn read_lens(i: &PimInstruction) -> (usize, usize) {
 /// The columns an instruction fully overwrites; `None` for reduces and
 /// column-transform (reduce results leave through the read phase; the
 /// transform re-orients bits without changing their value).
-fn write_span(i: &PimInstruction) -> Option<ColRange> {
+pub(super) fn write_span(i: &PimInstruction) -> Option<ColRange> {
     let al = i.src_a.len as usize;
     let d = i.dst;
     match i.op {
@@ -78,14 +78,14 @@ pub(super) fn accesses(i: &PimInstruction) -> (Vec<ColRange>, Option<ColRange>) 
 /// Whether a reduce or column-transform step — kept unconditionally: the
 /// former appends to the program's output stream, the latter is the read
 /// phase's re-orientation marker.
-fn side_effect(op: Opcode) -> bool {
+pub(super) fn side_effect(op: Opcode) -> bool {
     matches!(
         op,
         Opcode::ReduceSum | Opcode::ReduceMin | Opcode::ReduceMax | Opcode::ColumnTransform
     )
 }
 
-fn overlaps(r: ColRange, start: usize, width: usize) -> bool {
+pub(super) fn overlaps(r: ColRange, start: usize, width: usize) -> bool {
     (r.start as usize) < start + width && start < r.end()
 }
 

@@ -1,0 +1,879 @@
+//! Statistics-driven pruning: per-crossbar skip bitmaps, the runtime
+//! all-zero-mask short-circuit schedule, and the cost-based predicate
+//! ordering pass.
+//!
+//! Three cooperating mechanisms, all fed by the zone maps of
+//! [`crate::db::stats`]:
+//!
+//! * **Plan-time skip bitmaps** ([`skip_bitmap`]) — a conservative
+//!   decision procedure proves a filter predicate disjoint from a
+//!   crossbar's zones, so the crossbar's mask is all-zero and the
+//!   executor can skip it entirely: it contributes zero selected rows,
+//!   the identity element of every masked aggregate, and an all-zero
+//!   cached mask plane.
+//! * **Runtime short-circuit schedule** ([`short_circuit`]) — step
+//!   indices after which the engine tests the freshly written mask plane
+//!   for all-zero ([`crate::util::bits::is_zero_words`], a lane-folded
+//!   `U64x4` check) and, on zero, abandons the remaining filter steps by
+//!   jumping straight to the post-mask suffix.
+//! * **Predicate reordering** ([`SelectivityModel`], run inside `-O2`
+//!   when stats are supplied to
+//!   [`super::optimize_with_stats`]) — commutative AND-chain segments
+//!   are permuted most-selective-then-cheapest-first so the runtime
+//!   short-circuit fires as early as possible.
+//!
+//! Soundness. The executed mask is `filter AND VALID` (the compiler
+//! appends the valid-AND, or elides it only after a zero-row abstract
+//! interpretation proves the filter already rejects unoccupied rows —
+//! and dead rows hold all-zero data by the store invariant), and zones
+//! cover exactly the live rows; a predicate disjoint from a crossbar's
+//! live zone therefore proves the *final* mask zero. Reordering permutes
+//! only whole sub-predicate segments between mask-combine steps — AND is
+//! commutative and associative on bit-planes — and bails to the identity
+//! unless the segments are pairwise independent, touch the mask only
+//! through their final combine, and contain no side-effecting steps.
+//! Every decision is mirrored line-by-line in `python/statsmirror.py`
+//! and fuzzed against a scan-everything oracle.
+
+use std::collections::BTreeSet;
+
+use crate::db::layout::RelationLayout;
+use crate::db::stats::{ColZone, RelStats, XbarStats};
+use crate::pim::isa::{ColRange, Opcode, PimInstruction};
+use crate::query::ast::{CmpOp, Pred};
+use crate::query::compiler::Step;
+
+use super::passes;
+use super::program_cycles;
+
+// --- plan-time skip bitmaps -------------------------------------------------
+
+/// Per-crossbar skip bitmap of `filter` under `stats`: `true` at index
+/// `x` proves the compiled mask is all-zero on crossbar `x`, so the
+/// executor may skip it. Conservative: `false` never lies, `true` is a
+/// proof.
+pub fn skip_bitmap(filter: &Pred, layout: &RelationLayout, stats: &RelStats) -> Vec<bool> {
+    stats
+        .xbars
+        .iter()
+        .map(|x| pred_disjoint(filter, layout, x))
+        .collect()
+}
+
+/// Whether `p` provably selects no live row of a crossbar with stats
+/// `x` — the single-crossbar kernel of [`skip_bitmap`].
+pub fn pred_disjoint(p: &Pred, layout: &RelationLayout, x: &XbarStats) -> bool {
+    if x.live_rows == 0 {
+        return true;
+    }
+    match p {
+        Pred::True => false,
+        Pred::CmpImm { attr, op, value } => match zone_of(layout, x, attr) {
+            Some(z) => cmp_disjoint(z, *op, *value),
+            None => false,
+        },
+        Pred::InSet { attr, values } => match zone_of(layout, x, attr) {
+            // vacuously disjoint when the set is empty (IN () is false)
+            Some(z) => values.iter().all(|&v| eq_disjoint(z, v)),
+            None => false,
+        },
+        Pred::Between { attr, lo, hi } => {
+            if lo > hi {
+                return true;
+            }
+            match zone_of(layout, x, attr) {
+                Some(z) => *hi < z.min || *lo > z.max,
+                None => false,
+            }
+        }
+        Pred::And(ps) => ps.iter().any(|p| pred_disjoint(p, layout, x)),
+        // vacuously disjoint when empty (the compiler lowers OR () to a
+        // Reset mask)
+        Pred::Or(ps) => ps.iter().all(|p| pred_disjoint(p, layout, x)),
+        // no zone reasoning for negations or column-column compares
+        Pred::Not(_) | Pred::CmpCols { .. } => false,
+    }
+}
+
+/// The zone of `attr` on one crossbar, if the relation has that slot.
+fn zone_of<'a>(layout: &RelationLayout, x: &'a XbarStats, attr: &str) -> Option<&'a ColZone> {
+    layout
+        .slots
+        .iter()
+        .position(|s| s.attr.name == attr)
+        .and_then(|i| x.zones.get(i))
+}
+
+/// `attr == v` selects nothing: outside [min, max], or absent from the
+/// dictionary presence bitmap.
+fn eq_disjoint(z: &ColZone, v: u64) -> bool {
+    v < z.min || v > z.max || z.dict.is_some_and(|bm| v < 64 && (bm >> v) & 1 == 0)
+}
+
+/// `attr <op> v` selects nothing on a zone of live rows (`min <= max`
+/// holds whenever this is consulted: empty crossbars short-circuit in
+/// [`pred_disjoint`]).
+fn cmp_disjoint(z: &ColZone, op: CmpOp, v: u64) -> bool {
+    match op {
+        CmpOp::Eq => eq_disjoint(z, v),
+        // != v is empty only when every live row holds exactly v
+        CmpOp::Ne => z.min == z.max && z.min == v,
+        CmpOp::Lt => z.min >= v,
+        CmpOp::Le => z.min > v,
+        CmpOp::Gt => z.max <= v,
+        CmpOp::Ge => z.max < v,
+    }
+}
+
+// --- runtime all-zero short-circuit schedule --------------------------------
+
+/// Where the engine may test the mask plane for all-zero and what it may
+/// skip: computed per execution from a program whose filter prefix was
+/// proven side-effect-free by the shared-scan analysis
+/// ([`super::sharedscan::scan_info`]), whose `prefix_len` is `resume`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShortCircuit {
+    /// Step indices (ascending) after which an all-zero mask plane
+    /// proves the remaining prefix cannot set any mask bit.
+    pub checks: Vec<usize>,
+    /// First step of the post-mask suffix: the jump target when a check
+    /// observes an all-zero mask.
+    pub resume: usize,
+}
+
+/// Compute the short-circuit schedule of a program's filter prefix.
+///
+/// A check after step `k` is sound iff every later mask write in the
+/// prefix is *zero-preserving* — given an all-zero mask it writes an
+/// all-zero mask (an AND with the mask as one operand, or a Reset).
+/// Then a zero mask at `k` proves the final mask zero, and because the
+/// prefix is side-effect-free (the `prefix_len` contract: callers pass
+/// [`super::sharedscan::ScanInfo::prefix_len`]), jumping to `resume` is
+/// observationally identical. `None` when no useful check exists.
+pub fn short_circuit(steps: &[Step], mask_col: usize, prefix_len: usize) -> Option<ShortCircuit> {
+    let prefix_len = prefix_len.min(steps.len());
+    let mut checks = Vec::new();
+    let mut preserved = true; // all mask writes after the cursor preserve zero
+    for k in (0..prefix_len).rev() {
+        let i = &steps[k].instr;
+        let writes_mask = passes::write_span(i).is_some_and(|w| passes::overlaps(w, mask_col, 1));
+        if !writes_mask {
+            continue;
+        }
+        // a check directly before `resume` would skip nothing
+        if preserved && k + 1 < prefix_len {
+            checks.push(k);
+        }
+        preserved = preserved && zero_preserving(i, mask_col);
+    }
+    checks.reverse();
+    (!checks.is_empty()).then_some(ShortCircuit {
+        checks,
+        resume: prefix_len,
+    })
+}
+
+/// Whether an instruction writing the mask column maps an all-zero mask
+/// to an all-zero mask.
+fn zero_preserving(i: &PimInstruction, mask_col: usize) -> bool {
+    match i.op {
+        Opcode::Reset => true,
+        Opcode::And => is_combine(i, mask_col),
+        _ => false,
+    }
+}
+
+// --- cost-based predicate ordering ------------------------------------------
+
+/// Zone-map selectivity estimates for single compare-immediate filter
+/// steps, used to order commutative AND-chain segments.
+pub struct SelectivityModel<'a> {
+    layout: &'a RelationLayout,
+    stats: &'a RelStats,
+}
+
+impl<'a> SelectivityModel<'a> {
+    /// A model over one relation's layout and its pinned-snapshot stats.
+    pub fn new(layout: &'a RelationLayout, stats: &'a RelStats) -> SelectivityModel<'a> {
+        SelectivityModel { layout, stats }
+    }
+
+    /// Estimated selected fraction of a compare-immediate instruction
+    /// whose operand is exactly one attribute slot, assuming values
+    /// uniform within each crossbar's zone. `None` when the instruction
+    /// is not a recognizable single-slot compare.
+    pub fn estimate(&self, i: &PimInstruction) -> Option<f64> {
+        if !matches!(
+            i.op,
+            Opcode::EqImm | Opcode::NeImm | Opcode::LtImm | Opcode::GtImm
+        ) {
+            return None;
+        }
+        let slot = self.layout.slots.iter().position(|s| {
+            s.start == i.src_a.start as usize && s.attr.bits == i.src_a.len as usize
+        })?;
+        let bits = i.src_a.len as usize;
+        let v = if bits >= 64 {
+            i.imm
+        } else {
+            i.imm & ((1u64 << bits) - 1)
+        };
+        let mut live = 0.0;
+        let mut selected = 0.0;
+        for x in &self.stats.xbars {
+            if x.live_rows == 0 {
+                continue;
+            }
+            let n = x.live_rows as f64;
+            live += n;
+            selected += zone_rows(&x.zones[slot], n, i.op, v);
+        }
+        Some(if live == 0.0 { 0.0 } else { selected / live })
+    }
+}
+
+/// Estimated rows of one crossbar (live count `n`, zone `z`, so
+/// `min <= max`) selected by `<op> v`, zone-uniform interpolation.
+fn zone_rows(z: &ColZone, n: f64, op: Opcode, v: u64) -> f64 {
+    let span = (z.max - z.min + 1) as f64;
+    let eq = if eq_disjoint(z, v) { 0.0 } else { n / span };
+    match op {
+        Opcode::EqImm => eq,
+        Opcode::NeImm => n - eq,
+        Opcode::LtImm => {
+            if v <= z.min {
+                0.0
+            } else if v > z.max {
+                n
+            } else {
+                n * ((v - z.min) as f64) / span
+            }
+        }
+        Opcode::GtImm => {
+            if v >= z.max {
+                0.0
+            } else if v < z.min {
+                n
+            } else {
+                n * ((z.max - v) as f64) / span
+            }
+        }
+        _ => 0.0,
+    }
+}
+
+/// One past the last step that writes the mask column — the filter
+/// prefix this module reasons over (same split as the shared-scan
+/// analysis).
+fn mask_prefix_len(steps: &[Step], mask_col: usize) -> usize {
+    let mut n = 0;
+    for (i, s) in steps.iter().enumerate() {
+        if passes::write_span(&s.instr).is_some_and(|w| passes::overlaps(w, mask_col, 1)) {
+            n = i + 1;
+        }
+    }
+    n
+}
+
+/// A mask-combine: `And` with a one-column write to exactly the mask
+/// column and the mask itself as one operand — the compiler's AND-chain
+/// accumulation step.
+fn is_combine(i: &PimInstruction, mask_col: usize) -> bool {
+    i.op == Opcode::And
+        && passes::write_span(i) == Some(ColRange::new(mask_col, 1))
+        && (one_col(i.src_a, mask_col) || i.src_b.is_some_and(|b| one_col(b, mask_col)))
+}
+
+fn one_col(r: ColRange, c: usize) -> bool {
+    r.start as usize == c && r.len == 1
+}
+
+/// One permutable AND-chain segment: `steps[lo..=hi]`, ending with its
+/// mask-combine at `hi`.
+struct SegInfo {
+    lo: usize,
+    hi: usize,
+    /// Non-mask columns the segment writes.
+    writes: BTreeSet<usize>,
+    /// Non-mask columns the segment reads before writing them itself.
+    reads: BTreeSet<usize>,
+}
+
+/// Dependence summary of `steps[lo..=hi]`; `None` when the segment is
+/// not safely movable (side effects, or a non-final step touching the
+/// mask).
+fn segment_info(steps: &[Step], lo: usize, hi: usize, mask_col: usize) -> Option<SegInfo> {
+    let mut written: BTreeSet<usize> = BTreeSet::new();
+    let mut writes = BTreeSet::new();
+    let mut reads = BTreeSet::new();
+    for k in lo..=hi {
+        let i = &steps[k].instr;
+        if passes::side_effect(i.op) {
+            return None;
+        }
+        let last = k == hi;
+        let (rs, w) = passes::accesses(i);
+        for r in rs {
+            for c in (r.start as usize)..r.end() {
+                if c == mask_col {
+                    if !last {
+                        return None;
+                    }
+                } else if !written.contains(&c) {
+                    reads.insert(c);
+                }
+            }
+        }
+        if let Some(wr) = w {
+            for c in (wr.start as usize)..wr.end() {
+                if c == mask_col {
+                    if !last {
+                        return None;
+                    }
+                } else {
+                    written.insert(c);
+                    writes.insert(c);
+                }
+            }
+        }
+    }
+    Some(SegInfo {
+        lo,
+        hi,
+        writes,
+        reads,
+    })
+}
+
+/// The program's permutable AND-chain structure: the head block end
+/// (index of the first combine) and each following segment. `None` when
+/// there are fewer than two movable segments or any segment is unsafe.
+fn and_chain(steps: &[Step], mask_col: usize) -> Option<(usize, Vec<SegInfo>)> {
+    let prefix_len = mask_prefix_len(steps, mask_col);
+    let combines: Vec<usize> = (0..prefix_len)
+        .filter(|&i| is_combine(&steps[i].instr, mask_col))
+        .collect();
+    if combines.len() < 3 {
+        return None;
+    }
+    let mut segs = Vec::with_capacity(combines.len() - 1);
+    for j in 1..combines.len() {
+        segs.push(segment_info(steps, combines[j - 1] + 1, combines[j], mask_col)?);
+    }
+    // pairwise independence: no segment writes a column another reads or
+    // writes (CSE-shared temporaries land in `reads` and block the pair)
+    for a in 0..segs.len() {
+        for b in 0..segs.len() {
+            if a != b
+                && segs[a]
+                    .writes
+                    .iter()
+                    .any(|c| segs[b].reads.contains(c) || segs[b].writes.contains(c))
+            {
+                return None;
+            }
+        }
+    }
+    Some((combines[0], segs))
+}
+
+/// Segment sort key: estimated selectivity (ascending — most selective
+/// first maximizes early short-circuits), then per-crossbar cycles,
+/// then original position (stability).
+fn segment_key(
+    steps: &[Step],
+    s: &SegInfo,
+    xbar_rows: usize,
+    sel: Option<&SelectivityModel<'_>>,
+) -> (f64, u64) {
+    let est = match (sel, s.hi - s.lo) {
+        (Some(m), 1) => m.estimate(&steps[s.lo].instr),
+        _ => None,
+    };
+    (
+        est.unwrap_or(0.5),
+        program_cycles(&steps[s.lo..=s.hi], xbar_rows),
+    )
+}
+
+/// Reorder the commutative AND-chain segments of a filter prefix
+/// most-selective-then-cheapest-first. Returns `None` for the identity
+/// permutation or whenever safety cannot be proven — the caller keeps
+/// the input stream. The output is a permutation of the input steps
+/// (bit-identical final mask: AND is commutative and associative on
+/// bit-planes, and segments are pairwise independent), so cycles, wear
+/// and the intermediate-cell peak are unchanged.
+pub(super) fn reorder_mask_prefix(
+    steps: &[Step],
+    mask_col: usize,
+    xbar_rows: usize,
+    sel: Option<&SelectivityModel<'_>>,
+) -> Option<Vec<Step>> {
+    let (head_end, segs) = and_chain(steps, mask_col)?;
+    let keys: Vec<(f64, u64)> = segs
+        .iter()
+        .map(|s| segment_key(steps, s, xbar_rows, sel))
+        .collect();
+    let mut order: Vec<usize> = (0..segs.len()).collect();
+    order.sort_by(|&a, &b| {
+        keys[a]
+            .0
+            .total_cmp(&keys[b].0)
+            .then(keys[a].1.cmp(&keys[b].1))
+            .then(a.cmp(&b))
+    });
+    if order.iter().enumerate().all(|(i, &o)| i == o) {
+        return None;
+    }
+    let mut out: Vec<Step> = steps[..=head_end].to_vec();
+    for &o in &order {
+        out.extend_from_slice(&steps[segs[o].lo..=segs[o].hi]);
+    }
+    out.extend_from_slice(&steps[segs.last().expect("segs nonempty").hi + 1..]);
+    debug_assert_eq!(out.len(), steps.len());
+    Some(out)
+}
+
+// --- explain rendering ------------------------------------------------------
+
+/// Render one relation's pruning decisions for `pimdb run --explain`:
+/// the per-crossbar skip bitmap (`x` skipped, `.` scanned), the zone
+/// ranges the decision consulted, the executed predicate-segment order
+/// with selectivity estimates, and the runtime short-circuit schedule.
+pub fn explain_pruning(
+    filter: &Pred,
+    layout: &RelationLayout,
+    stats: &RelStats,
+    steps: &[Step],
+    mask_col: usize,
+    xbar_rows: usize,
+) -> String {
+    use std::fmt::Write;
+    let mut s = String::new();
+    let skip = skip_bitmap(filter, layout, stats);
+    let skipped = skip.iter().filter(|&&b| b).count();
+    let bitmap: String = skip.iter().map(|&b| if b { 'x' } else { '.' }).collect();
+    writeln!(
+        s,
+        "  skip bitmap    : {bitmap} ({skipped}/{} crossbars skipped)",
+        skip.len()
+    )
+    .unwrap();
+    for attr in filter.attrs() {
+        let Some(i) = layout.slots.iter().position(|sl| sl.attr.name == attr) else {
+            continue;
+        };
+        write!(s, "  zone {attr:<14}:").unwrap();
+        for x in &stats.xbars {
+            let z = &x.zones[i];
+            if x.live_rows == 0 || z.min > z.max {
+                write!(s, " [-]").unwrap();
+            } else {
+                write!(s, " [{}..{}]", z.min, z.max).unwrap();
+            }
+        }
+        writeln!(s).unwrap();
+    }
+    let model = SelectivityModel::new(layout, stats);
+    match and_chain(steps, mask_col) {
+        Some((head_end, segs)) => {
+            writeln!(s, "  predicate order: head steps 0..={head_end}").unwrap();
+            for seg in &segs {
+                let (est, cycles) = segment_key(steps, seg, xbar_rows, Some(&model));
+                writeln!(
+                    s,
+                    "    seg {}..={}: sel~{est:.3} cycles {cycles}: {}",
+                    seg.lo, seg.hi, steps[seg.lo]
+                )
+                .unwrap();
+            }
+        }
+        None => {
+            writeln!(
+                s,
+                "  predicate order: single segment (prefix len {}), not reorderable",
+                mask_prefix_len(steps, mask_col)
+            )
+            .unwrap();
+        }
+    }
+    match short_circuit(steps, mask_col, mask_prefix_len(steps, mask_col)) {
+        Some(sc) => writeln!(
+            s,
+            "  short-circuit  : zero-checks after steps {:?}, resume at {}",
+            sc.checks, sc.resume
+        )
+        .unwrap(),
+        None => writeln!(s, "  short-circuit  : no eligible check points").unwrap(),
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::db::layout::DbLayout;
+    use crate::db::schema::RelId;
+    use crate::exec::engine::{exec_steps_snapshot, XbarState};
+    use crate::query::ast::RelQuery;
+    use crate::query::compiler::Compiler;
+    use crate::query::opt::{optimize, optimize_with_stats, OptLevel};
+    use crate::query::tpch;
+    use crate::util::rng::Rng;
+
+    fn layouts() -> (SystemConfig, DbLayout) {
+        let cfg = SystemConfig::default();
+        let layout = DbLayout::build(&cfg, &|rel| rel.records_at_sf(0.002)).unwrap();
+        (cfg, layout)
+    }
+
+    /// Random full-width crossbar states for `layout`: ~3/4 of the first
+    /// 200 rows live with random slot values.
+    fn rand_states(layout: &RelationLayout, cols: usize, n: usize, rng: &mut Rng) -> Vec<XbarState> {
+        (0..n)
+            .map(|_| {
+                let mut st = XbarState::new(cols);
+                for row in 0..200 {
+                    let live = rng.next_u64() % 4 != 0;
+                    for s in &layout.slots {
+                        let v = rng.next_u64() & mask_of(s.attr.bits);
+                        if live {
+                            st.write_value(row, ColRange::new(s.start, s.attr.bits), v);
+                        }
+                    }
+                    st.write_value(row, ColRange::new(layout.valid_col, 1), live as u64);
+                }
+                st
+            })
+            .collect()
+    }
+
+    fn mask_of(bits: usize) -> u64 {
+        if bits >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << bits) - 1
+        }
+    }
+
+    fn rand_pred(layout: &RelationLayout, rng: &mut Rng, depth: usize) -> Pred {
+        let slot = &layout.slots[(rng.next_u64() as usize) % layout.slots.len()];
+        let attr = slot.attr.name;
+        let max = mask_of(slot.attr.bits);
+        let v = |rng: &mut Rng| rng.next_u64() % (max.saturating_add(2));
+        let ops = [CmpOp::Eq, CmpOp::Ne, CmpOp::Lt, CmpOp::Le, CmpOp::Gt, CmpOp::Ge];
+        match rng.next_u64() % (if depth == 0 { 4 } else { 7 }) {
+            0 => Pred::CmpImm {
+                attr,
+                op: ops[(rng.next_u64() as usize) % ops.len()],
+                value: v(rng),
+            },
+            1 => Pred::InSet {
+                attr,
+                values: (0..1 + rng.next_u64() % 3).map(|_| v(rng)).collect(),
+            },
+            2 => {
+                let (a, b) = (v(rng), v(rng));
+                Pred::Between {
+                    attr,
+                    lo: a.min(b),
+                    hi: a.max(b),
+                }
+            }
+            3 => Pred::True,
+            4 => Pred::And(vec![
+                rand_pred(layout, rng, depth - 1),
+                rand_pred(layout, rng, depth - 1),
+            ]),
+            5 => Pred::Or(vec![
+                rand_pred(layout, rng, depth - 1),
+                rand_pred(layout, rng, depth - 1),
+            ]),
+            _ => Pred::Not(Box::new(rand_pred(layout, rng, depth - 1))),
+        }
+    }
+
+    #[test]
+    fn skip_bitmap_decision_table() {
+        let (_, db) = layouts();
+        let layout = db.rel(RelId::Supplier).clone();
+        let s0 = &layout.slots[0];
+        let attr = s0.attr.name;
+        let r = ColRange::new(s0.start, s0.attr.bits);
+        let valid = ColRange::new(layout.valid_col, 1);
+        let mk = |vals: std::ops::RangeInclusive<u64>| {
+            let mut st = XbarState::new(layout.compute_base + 1);
+            for (row, v) in vals.enumerate() {
+                st.write_value(row, r, v);
+                st.write_value(row, valid, 1);
+            }
+            st
+        };
+        let states = vec![mk(10..=20), XbarState::new(layout.compute_base + 1), mk(30..=40)];
+        let stats = crate::db::stats::RelStats::build(&states, &layout);
+        let case = |p: Pred| skip_bitmap(&p, &layout, &stats);
+        let cmp = |op, value| Pred::CmpImm { attr, op, value };
+        // the empty crossbar (index 1) is always skipped
+        assert_eq!(case(Pred::True), vec![false, true, false]);
+        assert_eq!(case(cmp(CmpOp::Eq, 25)), vec![true, true, true]);
+        assert_eq!(case(cmp(CmpOp::Eq, 15)), vec![false, true, true]);
+        assert_eq!(case(cmp(CmpOp::Ne, 15)), vec![false, true, false]);
+        assert_eq!(case(cmp(CmpOp::Lt, 10)), vec![true, true, true]);
+        assert_eq!(case(cmp(CmpOp::Lt, 11)), vec![false, true, true]);
+        assert_eq!(case(cmp(CmpOp::Le, 9)), vec![true, true, true]);
+        assert_eq!(case(cmp(CmpOp::Gt, 20)), vec![true, true, false]);
+        assert_eq!(case(cmp(CmpOp::Ge, 41)), vec![true, true, true]);
+        assert_eq!(
+            case(Pred::InSet {
+                attr,
+                values: vec![5, 25, 50]
+            }),
+            vec![true, true, true]
+        );
+        assert_eq!(
+            case(Pred::InSet {
+                attr,
+                values: vec![5, 35]
+            }),
+            vec![true, true, false]
+        );
+        // IN () is vacuously false everywhere
+        assert_eq!(
+            case(Pred::InSet {
+                attr,
+                values: vec![]
+            }),
+            vec![true, true, true]
+        );
+        assert_eq!(
+            case(Pred::Between {
+                attr,
+                lo: 21,
+                hi: 29
+            }),
+            vec![true, true, true]
+        );
+        assert_eq!(
+            case(Pred::Between {
+                attr,
+                lo: 15,
+                hi: 35
+            }),
+            vec![false, true, false]
+        );
+        // And prunes if any arm does; Or only if all arms do
+        assert_eq!(
+            case(Pred::And(vec![cmp(CmpOp::Ge, 0), cmp(CmpOp::Eq, 25)])),
+            vec![true, true, true]
+        );
+        assert_eq!(
+            case(Pred::Or(vec![cmp(CmpOp::Eq, 25), cmp(CmpOp::Eq, 35)])),
+            vec![true, true, false]
+        );
+        assert_eq!(case(Pred::Or(vec![])), vec![true, true, true]);
+        // negation is opaque
+        assert_eq!(
+            case(Pred::Not(Box::new(cmp(CmpOp::Eq, 25)))),
+            vec![false, true, false]
+        );
+    }
+
+    #[test]
+    fn skip_bitmap_is_sound_against_scan_everything_oracle() {
+        let (cfg, db) = layouts();
+        let mut rng = Rng::new(0x5EED_F00D);
+        for rel in [RelId::Supplier, RelId::Lineitem] {
+            let layout = db.rel(rel).clone();
+            for _ in 0..40 {
+                let states = rand_states(&layout, cfg.xbar_cols, 3, &mut rng);
+                let stats = crate::db::stats::RelStats::build(&states, &layout);
+                let p = rand_pred(&layout, &mut rng, 2);
+                let skip = skip_bitmap(&p, &layout, &stats);
+                for (x, st) in states.iter().enumerate() {
+                    if !skip[x] {
+                        continue;
+                    }
+                    for row in 0..crate::util::bits::XBAR_ROWS {
+                        if st.value_at(row, ColRange::new(layout.valid_col, 1)) == 0 {
+                            continue;
+                        }
+                        let get = |name: &str| {
+                            let s = layout.slot(name).expect("slot");
+                            st.value_at(row, ColRange::new(s.start, s.attr.bits))
+                        };
+                        assert!(
+                            !p.eval(&get),
+                            "skip bitmap pruned a crossbar with a matching live row: {p:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn short_circuit_schedule_covers_q6_prefix() {
+        let (cfg, db) = layouts();
+        let q = tpch::query("Q6").unwrap();
+        let c = Compiler::compile(&q.rels[0], db.rel(q.rels[0].rel), cfg.xbar_cols).unwrap();
+        let (o, _) = optimize(&c, OptLevel::O2, cfg.xbar_rows);
+        let prefix = mask_prefix_len(&o.steps, o.mask_col);
+        assert!(prefix > 0);
+        let sc = short_circuit(&o.steps, o.mask_col, prefix).expect("Q6 has an AND chain");
+        assert_eq!(sc.resume, prefix);
+        assert!(sc.checks.windows(2).all(|w| w[0] < w[1]));
+        for &k in &sc.checks {
+            assert!(k + 1 < prefix);
+            let w = passes::write_span(&o.steps[k].instr).expect("check step writes");
+            assert!(passes::overlaps(w, o.mask_col, 1));
+        }
+        assert_eq!(short_circuit(&o.steps, o.mask_col, 0), None);
+    }
+
+    #[test]
+    fn reorder_moves_selective_segment_first_and_stays_bit_identical() {
+        let (cfg, db) = layouts();
+        let layout = db.rel(RelId::Lineitem).clone();
+        let mut rng = Rng::new(0xBEEF);
+        let states = rand_states(&layout, cfg.xbar_cols, 2, &mut rng);
+        let stats = crate::db::stats::RelStats::build(&states, &layout);
+        // four conjuncts: an unselective cheap head, then two mid ones,
+        // then a never-true (maximally selective) compare last
+        let a = |i: usize| layout.slots[i].attr.name;
+        let rq = RelQuery {
+            rel: RelId::Lineitem,
+            filter: Pred::And(vec![
+                Pred::CmpImm {
+                    attr: a(0),
+                    op: CmpOp::Ge,
+                    value: 0,
+                },
+                Pred::CmpImm {
+                    attr: a(1),
+                    op: CmpOp::Le,
+                    value: mask_of(layout.slots[1].attr.bits) / 2,
+                },
+                Pred::CmpImm {
+                    attr: a(2),
+                    op: CmpOp::Gt,
+                    value: mask_of(layout.slots[2].attr.bits) / 2,
+                },
+                Pred::CmpImm {
+                    attr: a(3),
+                    op: CmpOp::Eq,
+                    value: mask_of(layout.slots[3].attr.bits),
+                },
+            ]),
+            group_by: vec![],
+            aggregates: vec![],
+        };
+        let c = Compiler::compile(&rq, &layout, cfg.xbar_cols).unwrap();
+        let (o0, _) = optimize(&c, OptLevel::O0, cfg.xbar_rows);
+        let (o2, _) = optimize(&c, OptLevel::O2, cfg.xbar_rows);
+        let model = SelectivityModel::new(&layout, &stats);
+        let (o2s, st) = optimize_with_stats(&c, OptLevel::O2, cfg.xbar_rows, Some(&model));
+        assert!(st.cycles_after <= st.cycles_before);
+        // the ordering pass must actually permute this program...
+        let ops = |s: &[Step]| s.iter().map(|x| x.instr.op).collect::<Vec<_>>();
+        assert_ne!(ops(&o2s.steps), ops(&o2.steps), "no permutation happened");
+        let mut sorted_a = ops(&o2s.steps);
+        let mut sorted_b = ops(&o2.steps);
+        sorted_a.sort_by_key(|o| *o as u8);
+        sorted_b.sort_by_key(|o| *o as u8);
+        assert_eq!(sorted_a, sorted_b, "reorder must be a permutation");
+        // ...and stay bit-identical to the unoptimized program
+        let (outs0, masks0) =
+            exec_steps_snapshot(&states, layout.compute_base, &o0.steps, o0.mask_col, None, None, None);
+        let (outs2, masks2) = exec_steps_snapshot(
+            &states,
+            layout.compute_base,
+            &o2s.steps,
+            o2s.mask_col,
+            None,
+            None,
+            None,
+        );
+        assert_eq!(masks0, masks2);
+        assert_eq!(outs0.mask_counts, outs2.mask_counts);
+        assert_eq!(outs0.reduces, outs2.reduces);
+    }
+
+    #[test]
+    fn stats_ordered_programs_stay_bit_identical_under_fuzz() {
+        let (cfg, db) = layouts();
+        let layout = db.rel(RelId::Lineitem).clone();
+        let mut rng = Rng::new(0xC0FFEE);
+        for round in 0..15 {
+            let states = rand_states(&layout, cfg.xbar_cols, 2, &mut rng);
+            let stats = crate::db::stats::RelStats::build(&states, &layout);
+            let n = 1 + (rng.next_u64() as usize) % 5;
+            let filter = Pred::And((0..n).map(|_| rand_pred(&layout, &mut rng, 1)).collect());
+            let rq = RelQuery {
+                rel: RelId::Lineitem,
+                filter,
+                group_by: vec![],
+                aggregates: vec![],
+            };
+            let c = Compiler::compile(&rq, &layout, cfg.xbar_cols).unwrap();
+            let (o0, _) = optimize(&c, OptLevel::O0, cfg.xbar_rows);
+            let model = SelectivityModel::new(&layout, &stats);
+            let (o2s, _) = optimize_with_stats(&c, OptLevel::O2, cfg.xbar_rows, Some(&model));
+            let (outs0, masks0) = exec_steps_snapshot(
+                &states,
+                layout.compute_base,
+                &o0.steps,
+                o0.mask_col,
+                None,
+                None,
+                None,
+            );
+            let (outs2, masks2) = exec_steps_snapshot(
+                &states,
+                layout.compute_base,
+                &o2s.steps,
+                o2s.mask_col,
+                None,
+                None,
+                None,
+            );
+            assert_eq!(masks0, masks2, "round {round}");
+            assert_eq!(outs0.mask_counts, outs2.mask_counts, "round {round}");
+            assert_eq!(outs0.reduces, outs2.reduces, "round {round}");
+        }
+    }
+
+    #[test]
+    fn explain_pruning_renders_every_section() {
+        let (cfg, db) = layouts();
+        let layout = db.rel(RelId::Supplier).clone();
+        let s0 = &layout.slots[0];
+        let mut st = XbarState::new(layout.compute_base + 1);
+        for row in 0..8 {
+            st.write_value(row, ColRange::new(s0.start, s0.attr.bits), 10 + row as u64);
+            st.write_value(row, ColRange::new(layout.valid_col, 1), 1);
+        }
+        let states = vec![st, XbarState::new(layout.compute_base + 1)];
+        let stats = crate::db::stats::RelStats::build(&states, &layout);
+        let filter = Pred::CmpImm {
+            attr: s0.attr.name,
+            op: CmpOp::Eq,
+            value: 99,
+        };
+        let rq = RelQuery {
+            rel: RelId::Supplier,
+            filter: filter.clone(),
+            group_by: vec![],
+            aggregates: vec![],
+        };
+        let c = Compiler::compile(&rq, &layout, cfg.xbar_cols).unwrap();
+        let (o, _) = optimize(&c, OptLevel::O2, cfg.xbar_rows);
+        let text = explain_pruning(&filter, &layout, &stats, &o.steps, o.mask_col, cfg.xbar_rows);
+        assert!(text.contains("skip bitmap"), "{text}");
+        assert!(text.contains("xx (2/2 crossbars skipped)"), "{text}");
+        assert!(text.contains(&format!("zone {:<14}", s0.attr.name)), "{text}");
+        assert!(text.contains("[10..17]"), "{text}");
+        assert!(text.contains("predicate order"), "{text}");
+        assert!(text.contains("short-circuit"), "{text}");
+    }
+}

@@ -323,6 +323,7 @@ pub fn exec_steps_pjrt(
         Ok(ExecOutputs {
             reduces,
             mask_counts,
+            ..ExecOutputs::default()
         })
     })
 }

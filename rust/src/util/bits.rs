@@ -99,6 +99,18 @@ pub fn popcount_words(p: &[u64; WORDS]) -> u64 {
     n
 }
 
+/// Whether a packed plane is all-zero, folded lane-wise: one running
+/// [`U64x4`] OR accumulator over the chunks, then a horizontal check —
+/// cheaper than a full popcount on the runtime short-circuit path.
+#[inline]
+pub fn is_zero_words(p: &[u64; WORDS]) -> bool {
+    let mut acc = load_lanes(p, 0);
+    for c in 1..WORD_CHUNKS {
+        acc = vor(acc, load_lanes(p, c));
+    }
+    (acc[0] | acc[1] | acc[2] | acc[3]) == 0
+}
+
 /// A dense 2-D bit matrix, `rows x cols`, row-major, bit-addressable.
 /// Used by the cell-accurate crossbar reference model.
 #[derive(Clone, PartialEq, Eq)]
@@ -520,6 +532,18 @@ mod tests {
         }
         let scalar_pc: u64 = a.iter().map(|w| w.count_ones() as u64).sum();
         assert_eq!(popcount_words(&a), scalar_pc);
+    }
+
+    #[test]
+    fn is_zero_words_matches_scalar_any() {
+        assert!(is_zero_words(&[0u64; WORDS]));
+        for w in 0..WORDS {
+            for bit in [0usize, 17, 63] {
+                let mut p = [0u64; WORDS];
+                p[w] = 1u64 << bit;
+                assert!(!is_zero_words(&p), "word {w} bit {bit}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,402 @@
+//! Pruning battery: statistics-driven shard pruning, the runtime
+//! all-zero short-circuit, and cost-ordered predicates must be pure
+//! execution shortcuts — bit-identical outputs to the scan-everything
+//! baseline and to the unreordered `-O0` path, at shard-pool widths 1,
+//! 2 and 8, under DML interleavings, and across the stale-stats window
+//! that follows a group commit (a plan whose predicate order was chosen
+//! against older statistics keeps executing; only its *order* may be
+//! stale — skip bitmaps are always derived from the pinned snapshot's
+//! stats, never cached across epochs).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier};
+
+use pimdb::api::{Pimdb, QuerySource};
+use pimdb::config::SystemConfig;
+use pimdb::db::dbgen::Database;
+use pimdb::db::schema::{self, RelId};
+use pimdb::exec::baseline;
+use pimdb::exec::metrics::QueryOutput;
+use pimdb::query::ast::*;
+use pimdb::query::lang::{parse_dml, parse_program};
+use pimdb::query::opt::OptLevel;
+use pimdb::util::proptest::{check, Gen};
+
+const SEED: u64 = 1061;
+
+fn db() -> Database {
+    Database::generate(0.001, SEED)
+}
+
+fn cfg_with(parallelism: usize) -> SystemConfig {
+    SystemConfig {
+        parallelism,
+        ..SystemConfig::default()
+    }
+}
+
+fn rand_attr(g: &mut Gen, rel: RelId) -> (&'static str, usize) {
+    let attrs = schema::attrs(rel);
+    let a = attrs[g.usize(0, attrs.len() - 1)];
+    (a.name, a.bits)
+}
+
+fn rand_value(g: &mut Gen, bits: usize) -> u64 {
+    let max = if bits >= 64 { u64::MAX } else { (1 << bits) - 1 };
+    g.u64(0, max.min(1 << bits.min(40)))
+}
+
+/// Random predicates biased toward zone-prunable shapes: plenty of
+/// single-attribute range compares (what the decision table reasons
+/// about exactly), mixed with IN-sets, BETWEENs and And/Or/Not nests
+/// (where it must stay conservative).
+fn rand_pred(g: &mut Gen, rel: RelId, depth: usize) -> Pred {
+    if depth == 0 || g.u64(0, 2) == 0 {
+        let (attr, bits) = rand_attr(g, rel);
+        match g.u64(0, 3) {
+            0 | 1 => {
+                let ops = [CmpOp::Eq, CmpOp::Ne, CmpOp::Lt, CmpOp::Le, CmpOp::Gt, CmpOp::Ge];
+                Pred::CmpImm {
+                    attr,
+                    op: *g.pick(&ops),
+                    value: rand_value(g, bits),
+                }
+            }
+            2 => Pred::InSet {
+                attr,
+                values: (0..g.usize(1, 4)).map(|_| rand_value(g, bits)).collect(),
+            },
+            _ => {
+                let a = rand_value(g, bits);
+                let b = rand_value(g, bits);
+                Pred::Between {
+                    attr,
+                    lo: a.min(b),
+                    hi: a.max(b),
+                }
+            }
+        }
+    } else {
+        let n = g.usize(1, 3);
+        let subs: Vec<Pred> = (0..n).map(|_| rand_pred(g, rel, depth - 1)).collect();
+        match g.u64(0, 2) {
+            0 => Pred::And(subs),
+            1 => Pred::Or(subs),
+            _ => Pred::Not(Box::new(rand_pred(g, rel, depth - 1))),
+        }
+    }
+}
+
+fn rand_query(g: &mut Gen, rel: RelId) -> Query {
+    let (attr, _) = rand_attr(g, rel);
+    let aggregates = if g.u64(0, 1) == 0 {
+        vec![
+            Aggregate {
+                kind: AggKind::Sum,
+                expr: ValExpr::Attr(attr),
+                label: "s",
+            },
+            Aggregate {
+                kind: AggKind::Count,
+                expr: ValExpr::One,
+                label: "n",
+            },
+        ]
+    } else {
+        vec![]
+    };
+    let kind = if aggregates.is_empty() {
+        QueryKind::FilterOnly
+    } else {
+        QueryKind::Full
+    };
+    Query {
+        name: "prune_fuzz",
+        kind,
+        rels: vec![RelQuery {
+            rel,
+            filter: rand_pred(g, rel, 2),
+            group_by: vec![],
+            aggregates,
+        }],
+    }
+}
+
+/// Random queries through the pruning path (api handle: skip bitmaps,
+/// short-circuit, cost-ordered predicates) against the scan-everything
+/// baseline, at every shard-pool width — outputs bit-identical.
+#[test]
+fn random_pruned_queries_match_scan_everything_oracle() {
+    let cfg = cfg_with(1);
+    let data = db();
+    // AssertUnwindSafe: `check` catches panics to report the failing
+    // case; the handles are dropped right after, never reused across a
+    // caught panic
+    let handles = std::panic::AssertUnwindSafe(
+        [1usize, 2, 8]
+            .iter()
+            .map(|&w| Pimdb::open(cfg_with(w), db()).unwrap())
+            .collect::<Vec<Pimdb>>(),
+    );
+    check("pruned-vs-baseline", 40, |g| {
+        let handles = &handles.0;
+        let rel = *g.pick(&[
+            RelId::Lineitem,
+            RelId::Orders,
+            RelId::Supplier,
+            RelId::Part,
+            RelId::Customer,
+        ]);
+        let q = rand_query(g, rel);
+        let want = baseline::run_query(&cfg, &data, &q).output;
+        for handle in handles {
+            let got = handle
+                .prepare(QuerySource::Ast(&q))
+                .unwrap()
+                .execute()
+                .unwrap()
+                .raw_report()
+                .output
+                .clone();
+            assert_eq!(got, want, "pruned drift on {:?}", q.rels[0].filter);
+        }
+    });
+}
+
+/// The reordering pass is proven inert on outputs by an O0-vs-O2
+/// differential: the same random queries through handles at both opt
+/// levels (O0 never reorders; O2 reorders whenever stats make a
+/// segment order profitable) — identical outputs everywhere.
+#[test]
+fn o0_vs_o2_differential_with_pruning() {
+    let pair = std::panic::AssertUnwindSafe((
+        Pimdb::open(cfg_with(2), db()).unwrap(),
+        Pimdb::open(
+            SystemConfig {
+                opt_level: OptLevel::O0,
+                parallelism: 2,
+                ..SystemConfig::default()
+            },
+            db(),
+        )
+        .unwrap(),
+    ));
+    check("prune-o0-vs-o2", 25, |g| {
+        let (o2, o0) = (&pair.0 .0, &pair.0 .1);
+        let rel = *g.pick(&[RelId::Lineitem, RelId::Orders, RelId::Supplier]);
+        let q = rand_query(g, rel);
+        let a = o2
+            .prepare(QuerySource::Ast(&q))
+            .unwrap()
+            .execute()
+            .unwrap()
+            .raw_report()
+            .output
+            .clone();
+        let b = o0
+            .prepare(QuerySource::Ast(&q))
+            .unwrap()
+            .execute()
+            .unwrap()
+            .raw_report()
+            .output
+            .clone();
+        assert_eq!(a, b, "-O0/-O2 drift on {:?}", q.rels[0].filter);
+    });
+}
+
+/// Random DML interleaved with random queries at each pool width: after
+/// every statement the api handle (incrementally maintained zone maps)
+/// must keep matching a baseline twin that re-scans everything.
+#[test]
+fn pruned_execution_matches_oracle_across_dml_interleavings() {
+    for workers in [1usize, 2, 8] {
+        let cfg = cfg_with(workers);
+        check(&format!("prune-dml-w{workers}"), 6, |g| {
+            let handle = Pimdb::open(cfg.clone(), db()).unwrap();
+            let mut oracle = db();
+            let mut next_key = 9000 + g.u64(0, 100);
+            for _ in 0..6 {
+                let stmt = match g.u64(0, 4) {
+                    0 => format!(
+                        "delete from supplier where s_suppkey == {}",
+                        g.u64(1, 10)
+                    ),
+                    1 => format!(
+                        "delete from lineitem where l_orderkey <= {}",
+                        g.u64(1, 300)
+                    ),
+                    2 => format!(
+                        "update supplier set s_nationkey = {} where s_suppkey >= {}",
+                        g.u64(0, 24),
+                        g.u64(1, 10)
+                    ),
+                    3 => format!(
+                        "update lineitem set l_discount = {} where l_orderkey <= {}",
+                        g.u64(0, 10),
+                        g.u64(1, 200)
+                    ),
+                    _ => {
+                        next_key += 1;
+                        format!(
+                            "insert into supplier (s_suppkey, s_acctbal) values ({next_key}, 123.45)"
+                        )
+                    }
+                };
+                let got = handle.execute_dml(stmt.as_str()).unwrap();
+                let dml = parse_dml(&stmt).unwrap();
+                let want = baseline::apply_dml(&cfg, &mut oracle, &dml);
+                assert_eq!(got.rows_affected, want.rows_affected, "{stmt}");
+                for rel in [RelId::Lineitem, RelId::Supplier] {
+                    let q = rand_query(g, rel);
+                    let got = handle
+                        .prepare(QuerySource::Ast(&q))
+                        .unwrap()
+                        .execute()
+                        .unwrap()
+                        .raw_report()
+                        .output
+                        .clone();
+                    let want = baseline::run_query(&cfg, &oracle, &q).output;
+                    assert_eq!(
+                        got, want,
+                        "post-DML drift after `{stmt}` on {:?}",
+                        q.rels[0].filter
+                    );
+                }
+            }
+        });
+    }
+}
+
+/// Selective key-range filter over LINEITEM (loaded in ascending
+/// l_orderkey order, so trailing crossbars are provably disjoint):
+/// shards are actually skipped at every pool width, and a doubly
+/// contradictory filter short-circuits at runtime — all while matching
+/// the baseline.
+#[test]
+fn pruning_counters_fire_on_selective_filters_at_every_width() {
+    let cfg = cfg_with(1);
+    let data = db();
+    let selective = "from lineitem | filter l_orderkey <= 64 \
+                     | aggregate count() as n, sum(l_extendedprice) as s";
+    let contradictory = "from lineitem | filter \
+        l_shipdate >= date(1994-06-01) and l_shipdate < date(1994-06-01) \
+        and l_quantity < 10 and l_quantity >= 10 \
+        | aggregate count() as n";
+    for workers in [1usize, 2, 8] {
+        let handle = Pimdb::open(cfg_with(workers), db()).unwrap();
+        for (text, wants_skip, wants_sc) in
+            [(selective, true, false), (contradictory, false, true)]
+        {
+            let q = &parse_program(text).unwrap()[0];
+            let r = handle.prepare(text).unwrap().execute().unwrap();
+            assert_eq!(
+                r.raw_report().output,
+                baseline::run_query(&cfg, &data, q).output,
+                "{text} at {workers} workers"
+            );
+            let m = &r.raw_report().metrics;
+            if wants_skip {
+                assert!(
+                    m.shards_skipped > 0,
+                    "no shards skipped for `{text}` at {workers} workers"
+                );
+            }
+            if wants_sc {
+                assert!(
+                    m.steps_short_circuited > 0,
+                    "no short-circuit for `{text}` at {workers} workers"
+                );
+            }
+        }
+    }
+}
+
+/// The stale-stats window: a statement prepared at epoch 0 (its
+/// predicate order frozen by the plan cache) keeps executing while a
+/// writer group-commits deletes that move the zone boundaries under it.
+/// Every concurrent result must equal some committed oracle state,
+/// observed monotonically; after the dust settles the stale-ordered
+/// plan still prunes correctly against the *new* stats.
+fn stale_stats_scenario(workers: usize, n_readers: usize) {
+    let cfg = cfg_with(workers);
+    let probe = "from lineitem | filter l_orderkey <= 256 \
+                 | aggregate count() as n, sum(l_extendedprice) as s";
+    let q = &parse_program(probe).unwrap()[0];
+    let cuts: Vec<u64> = vec![64, 128, 192, 256];
+
+    // oracle chain: baseline twin after each committed delete
+    let mut oracle = db();
+    let mut chain: Vec<QueryOutput> = vec![baseline::run_query(&cfg, &oracle, q).output];
+    for &k in &cuts {
+        let dml = parse_dml(&format!("delete from lineitem where l_orderkey <= {k}")).unwrap();
+        baseline::apply_dml(&cfg, &mut oracle, &dml);
+        chain.push(baseline::run_query(&cfg, &oracle, q).output);
+    }
+
+    let handle = Arc::new(Pimdb::open(cfg, db()).unwrap());
+    // prepared before any DML: its cost-based order came from epoch-0
+    // zone maps and is never re-derived for the plan's lifetime
+    let prepared = handle.prepare(probe).unwrap();
+    let done = AtomicBool::new(false);
+    let start = Barrier::new(n_readers + 1);
+
+    std::thread::scope(|s| {
+        let mut readers = Vec::new();
+        for _ in 0..n_readers {
+            readers.push(s.spawn(|| {
+                let mut last = 0usize;
+                start.wait();
+                loop {
+                    let stop = done.load(Ordering::Acquire);
+                    let out = prepared.execute().unwrap().raw_report().output.clone();
+                    let idx = chain
+                        .iter()
+                        .position(|c| *c == out)
+                        .expect("stale-window result outside the commit chain");
+                    assert!(idx >= last, "chain ran backwards: {last} -> {idx}");
+                    last = idx;
+                    if stop {
+                        break;
+                    }
+                }
+            }));
+        }
+        start.wait();
+        for &k in &cuts {
+            handle
+                .execute_dml(format!("delete from lineitem where l_orderkey <= {k}").as_str())
+                .unwrap();
+        }
+        done.store(true, Ordering::Release);
+        for r in readers {
+            r.join().unwrap();
+        }
+    });
+
+    // post-commit: every crossbar's l_orderkey zone now starts above the
+    // probe's cut, so the stale-ordered plan skips the whole relation —
+    // and still reports exactly the final oracle state
+    let r = prepared.execute().unwrap();
+    assert_eq!(r.raw_report().output, chain[cuts.len()]);
+    assert!(
+        r.raw_report().metrics.shards_skipped > 0,
+        "rebuilt zone maps should prune the emptied key range"
+    );
+}
+
+#[test]
+fn stale_stats_window_serial_pool() {
+    stale_stats_scenario(1, 2);
+}
+
+#[test]
+fn stale_stats_window_two_workers() {
+    stale_stats_scenario(2, 2);
+}
+
+#[test]
+fn stale_stats_window_eight_workers() {
+    stale_stats_scenario(8, 4);
+}

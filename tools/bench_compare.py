@@ -12,7 +12,10 @@ sweep rows, the whole point of the trajectory) gate the build; all other
 entries — e.g. the kernel/* python-mirror microbenchmarks, whose
 wall-clock jitters with the capture host — are compared advisorily and
 only print. Projection entries (a "claim" without a numeric metric,
-committed when the capture host had no Rust toolchain) are skipped.
+committed when the capture host had no Rust toolchain) never gate, but
+they do appear in the summary table as "-" rows so the serving
+(p50/p99/qps) and durability trajectory stays visible in the CI log
+until a toolchain host replaces them with measured values.
 
 Besides the gate verdicts, the tool prints a markdown newest-vs-best
 summary table (one row per compared metric) so the CI log carries a
@@ -105,7 +108,15 @@ def main() -> int:
     rows = []  # (entry, metric, newest, best prior, source, delta, verdict)
     for entry in newest.get("entries", []):
         gate = args.strict or "sweep" in entry["name"]
-        for key, direction, v in numeric_metrics(entry):
+        metrics = list(numeric_metrics(entry))
+        if not metrics and "claim" in entry:
+            # projection-only entry: surface it in the table (never
+            # compared, never gated) so the serving/durability
+            # trajectory is visible before a measured capture lands
+            rows.append((entry["name"], "claim", None, None, "-", None,
+                         "projection"))
+            continue
+        for key, direction, v in metrics:
             prior = best.get((entry["name"], key))
             if prior is None:
                 rows.append((entry["name"], key, v, None, "-", None, "new"))
@@ -135,9 +146,10 @@ def main() -> int:
         print("| entry | metric | newest | best prior | from | delta | verdict |")
         print("|---|---|---:|---:|---|---:|---|")
         for name, key, v, b, src, delta, verdict in rows:
+            newest_cell = f"{v:g}" if v is not None else "-"
             prior_cell = f"{b:g}" if b is not None else "-"
             delta_cell = f"{delta:+.1%}" if delta is not None else "-"
-            print(f"| {name} | {key} | {v:g} | {prior_cell} | {src} "
+            print(f"| {name} | {key} | {newest_cell} | {prior_cell} | {src} "
                   f"| {delta_cell} | {verdict} |")
         print()
 

@@ -129,6 +129,63 @@ def time_batch_scan(fused: bool) -> float:
     return dt / reps
 
 
+XBARS = 16  # shards in the pruning microbench
+DISJOINT = 12  # shards whose zone maps prove the filter selects nothing
+
+
+def time_pruned_scan(mode: str) -> float:
+    """A selective two-predicate AND filter over ``XBARS`` shards of
+    which ``DISJOINT`` provably match nothing. Three execution modes
+    mirror the three consumption levels of the statistics subsystem
+    (rust/src/query/opt/prune.rs):
+
+    - ``full``       — scan every shard, both predicates (no stats);
+    - ``shortcut``   — scan every shard but abandon the second
+      predicate when the first mask comes back all-zero (the runtime
+      popcount-is-zero short-circuit);
+    - ``pruned``     — consult a precomputed skip bitmap and never
+      dispatch the disjoint shards at all (plan-time zone-map pruning).
+
+    Disjoint shards run the same compare shape with an immediate of 0
+    (a less-than no row satisfies), so per-prefix work is identical
+    across shards and the measured ratios isolate the scheduling
+    effect.
+    """
+    words, bits = 16, 64
+    mask = (1 << bits) - 1
+    shards = []
+    for x in range(XBARS):
+        cols_a = make_planes(words, bits, 0xBEEF01 + x)[:PLANES]
+        cols_b = make_planes(words, bits, 0xFACE01 + x)[:PLANES]
+        valid = make_planes(words, bits, 0x5EED01 + x)[0]
+        disjoint = x < DISJOINT
+        imm = 0 if disjoint else 977 * 2 + 13  # lt 0 matches nothing
+        shards.append((cols_a, cols_b, valid, imm, disjoint))
+    skip = [d for (_, _, _, _, d) in shards]  # the plan-time bitmap
+    reps = REPS * 2
+
+    def one_pass() -> int:
+        acc = 0
+        for x, (ca, cb, valid, imm, _) in enumerate(shards):
+            if mode == "pruned" and skip[x]:
+                continue
+            m1 = scan_prefix(ca, valid, imm, words, mask)
+            if mode == "shortcut" and not any(m1):
+                continue
+            m2 = scan_prefix(cb, valid, 977 + 13, words, mask)
+            acc ^= m1[0] ^ m2[0]
+        return acc
+
+    one_pass()  # warmup
+    t0 = time.perf_counter()
+    sink = 0
+    for _ in range(reps):
+        sink ^= one_pass()
+    dt = time.perf_counter() - t0
+    assert sink is not None
+    return dt / reps
+
+
 def main() -> None:
     as_json = "--json" in sys.argv[1:]
     t32 = time_layout(words=32, bits=32)
@@ -136,6 +193,9 @@ def main() -> None:
     ratio = t32 / t64
     ts = time_batch_scan(fused=False)
     tf = time_batch_scan(fused=True)
+    tu = time_pruned_scan("full")
+    tc = time_pruned_scan("shortcut")
+    tp = time_pruned_scan("pruned")
     rows = [
         {"name": "kernel/u32x32-layout", "ms_per_iter": round(t32 * 1e3, 3)},
         {"name": "kernel/u64x16-layout", "ms_per_iter": round(t64 * 1e3, 3)},
@@ -143,6 +203,11 @@ def main() -> None:
         {"name": "kernel/scan-serial-8q", "ms_per_iter": round(ts * 1e3, 3)},
         {"name": "kernel/scan-fused-8q", "ms_per_iter": round(tf * 1e3, 3)},
         {"name": "kernel/fused-over-serial-speedup", "ratio": round(ts / tf, 2)},
+        {"name": "kernel/scan-unpruned-16shard", "ms_per_iter": round(tu * 1e3, 3)},
+        {"name": "kernel/scan-shortcircuit-16shard", "ms_per_iter": round(tc * 1e3, 3)},
+        {"name": "kernel/scan-pruned-16shard", "ms_per_iter": round(tp * 1e3, 3)},
+        {"name": "kernel/shortcircuit-over-unpruned-speedup", "ratio": round(tu / tc, 2)},
+        {"name": "kernel/pruned-over-unpruned-speedup", "ratio": round(tu / tp, 2)},
     ]
     for r in rows:
         if as_json:
